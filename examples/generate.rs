@@ -1,0 +1,100 @@
+//! Inference through the RTP stack: train briefly on the Markov corpus,
+//! checkpoint, reload, then greedy-decode continuations and measure how
+//! often the model predicts the chain's dominant successor — a
+//! train→save→load→serve round trip over the same engines.
+//!
+//!     cargo run --release --example generate
+
+use rtp::config::{presets, OptimizerKind, Strategy, TrainCfg};
+use rtp::model::oracle;
+use rtp::parallel::{build_engine, EngineOpts, ExecKind};
+use rtp::tensor::IntTensor;
+use rtp::train::{load_params, save_params, train, MarkovCorpus, Optimizer};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = presets::get("tiny").unwrap();
+
+    // 1. train with RTP
+    let mut engine = build_engine(
+        &EngineOpts::new("tiny", Strategy::RtpInplace, 2, 8).exec(ExecKind::Oracle),
+    )?;
+    let mut corpus = MarkovCorpus::new(&cfg, 42);
+    let mut opt = Optimizer::new(OptimizerKind::Adam, 5e-3);
+    let tcfg = TrainCfg { steps: 60, log_every: 20, ..TrainCfg::default() };
+    let report = train(&mut *engine, &mut opt, &mut corpus, &tcfg, 8, false)?;
+    let (head, tail) = report.head_tail_means(5);
+    println!("trained: loss {head:.3} -> {tail:.3}");
+
+    // 2. checkpoint round trip
+    let path = std::env::temp_dir().join("rtp-generate.ckpt");
+    save_params(&engine.gather_params(), &path)?;
+    let params = load_params(&cfg, &path)?;
+    println!("checkpoint round trip via {} ✓", path.display());
+
+    // 3. greedy decoding with the oracle forward (full-sequence forward,
+    //    take the argmax at the last filled position)
+    let prompt_len = 4;
+    let gen_len = cfg.seq - prompt_len;
+    let seed_batch = corpus.next_batch(1);
+    let mut ids = vec![0i32; cfg.seq];
+    ids[..prompt_len].copy_from_slice(&seed_batch.ids.data[..prompt_len]);
+
+    let mut hits = 0;
+    for pos in prompt_len..prompt_len + gen_len {
+        let x = forward_logits(&params, &cfg, &ids);
+        // logits at position pos-1 predict token pos
+        let v = cfg.vocab;
+        let row = &x[(pos - 1) * v..pos * v];
+        let next = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        // compare against the chain's dominant successor
+        if next == corpus.dominant_successor(ids[pos - 1] as usize) {
+            hits += 1;
+        }
+        ids[pos] = next as i32;
+    }
+    let acc = hits as f64 / gen_len as f64;
+    println!(
+        "greedy decode: {hits}/{gen_len} steps predicted the chain's dominant \
+         successor ({:.0}%)",
+        acc * 100.0
+    );
+    anyhow::ensure!(
+        acc > 0.5,
+        "a trained model should usually follow the dominant transition"
+    );
+    std::fs::remove_file(path).ok();
+    Ok(())
+}
+
+/// Full forward to logits using the oracle ops (inference path).
+fn forward_logits(
+    params: &rtp::model::ModelParams,
+    cfg: &rtp::config::ModelCfg,
+    ids: &[i32],
+) -> Vec<f32> {
+    use rtp::model::MlpParams;
+    let idt = IntTensor::from_vec(&[1, cfg.seq], ids.to_vec());
+    let mut x = oracle::emb_fwd(&idt, &params.wte, &params.wpe);
+    for lp in &params.layers {
+        let a = oracle::ln_fwd(&x, &lp.ln1_g, &lp.ln1_b);
+        let mut part = oracle::attn_fwd(&a, &lp.wqkv, &lp.bqkv, &lp.wo, cfg.heads);
+        part.add_row_broadcast(&lp.bo);
+        part.add_assign(&x);
+        let m = oracle::ln_fwd(&part, &lp.ln2_g, &lp.ln2_b);
+        let (w1, b1, w2, b2) = match &lp.mlp {
+            MlpParams::Dense { w1, b1, w2, b2 } => (w1, b1, w2, b2),
+            _ => panic!("generate uses the dense preset"),
+        };
+        let mut mo = oracle::mlp_fwd(&m, w1, b1, w2);
+        mo.add_row_broadcast(b2);
+        mo.add_assign(&part);
+        x = mo;
+    }
+    let xf = oracle::ln_fwd(&x, &params.lnf_g, &params.lnf_b);
+    oracle::lmhead_fwd(&xf, &params.wlm).data
+}

@@ -1,0 +1,56 @@
+//! Paper-scale memory report: pick any Table-2 model and print the full
+//! per-category ledger per strategy at 8 workers — the raw material of
+//! Figs 8/9/12.
+//!
+//!     cargo run --release --example memory_report -- gpt2-xl-1.5b
+
+use rtp::bench_util::Table;
+use rtp::config::Strategy;
+use rtp::memory::tracker::MemCategory;
+use rtp::perfmodel::{a100_nvlink, simulate, SimSpec};
+use rtp::util::bytes::human;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "gpt2-xl-1.5b".to_string());
+    let mut t = Table::new(
+        &format!("{model} — per-worker peak by category (N=8, global batch 8)"),
+        &["strategy", "weights", "grads", "activations", "comm-buf", "TOTAL", "status"],
+    );
+    for strategy in Strategy::ALL {
+        if strategy == Strategy::MegatronTp
+            && rtp::config::presets::get(&model).map(|m| m.is_moe()).unwrap_or(false)
+        {
+            continue;
+        }
+        let workers = if strategy == Strategy::Single { 1 } else { 8 };
+        let mut spec = SimSpec::new(&model, strategy, workers, 8, a100_nvlink());
+        spec.enforce_capacity = false;
+        let r = simulate(&spec)?;
+        let of = |cat: MemCategory| {
+            r.peak_by_cat
+                .iter()
+                .find(|(c, _)| *c == cat)
+                .map(|(_, v)| human(*v))
+                .unwrap_or_default()
+        };
+        let status = {
+            let mut cap = SimSpec::new(&model, strategy, workers, 8, a100_nvlink());
+            cap.enforce_capacity = true;
+            match simulate(&cap)?.oom {
+                Some(_) => "OOM @80GB",
+                None => "fits",
+            }
+        };
+        t.row(vec![
+            strategy.to_string(),
+            of(MemCategory::Weights),
+            of(MemCategory::Grads),
+            of(MemCategory::Activations),
+            of(MemCategory::CommBuf),
+            human(r.peak_per_worker),
+            status.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

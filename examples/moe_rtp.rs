@@ -1,0 +1,61 @@
+//! Expert-Partition showcase (paper §3.2, Fig 7): a Mixture-of-Experts
+//! transformer where RTP ROTATES the experts instead of all-to-all'ing
+//! the tokens. Verifies the MoE gradient path against the single-device
+//! oracle, trains for a few steps, and prints the expert-rotation trace.
+//!
+//!     cargo run --release --example moe_rtp
+
+use rtp::config::{presets, OptimizerKind, Strategy, TrainCfg};
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use rtp::train::{train, MarkovCorpus, Optimizer};
+use rtp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = presets::get("tiny-moe").unwrap();
+    println!(
+        "tiny-moe: {} experts × ffn {}, {} params total",
+        cfg.experts,
+        cfg.expert_ffn,
+        cfg.params_total()
+    );
+
+    // 1. gradient equivalence vs the idealized computer
+    let batch = Batch::synth(&cfg, 4, &mut Rng::new(5));
+    let mut single = build_engine(
+        &EngineOpts::new("tiny-moe", Strategy::Single, 1, 4).exec(ExecKind::Oracle),
+    )?;
+    let mut rtp = build_engine(
+        &EngineOpts::new("tiny-moe", Strategy::RtpInplace, 2, 4).exec(ExecKind::Oracle),
+    )?;
+    let ls = single.step(&batch)?;
+    let lr = rtp.step(&batch)?;
+    println!("loss single {ls:.5} vs rtp {lr:.5}");
+    rtp.gather_grads()
+        .allclose(&single.gather_grads(), 2e-3)
+        .map_err(|e| anyhow::anyhow!("gradient mismatch: {e}"))?;
+    println!("expert-rotation gradients == single-device gradients ✓");
+
+    // 2. the rotation trace of one MoE layer (Fig 7's dataflow)
+    let opts = EngineOpts::new("tiny-moe", Strategy::RtpInplace, 2, 2)
+        .exec(ExecKind::Oracle)
+        .trace(true);
+    let mut traced = build_engine(&opts)?;
+    traced.step(&Batch::synth(&cfg, 2, &mut Rng::new(6)))?;
+    println!("\nexpert rotation schedule (layer 0 forward):");
+    for (w, s) in traced.ctx().cluster.trace.compute_pairs("mlp.l0") {
+        println!("  worker {w} ran expert group {s}");
+    }
+
+    // 3. it learns
+    let mut engine = build_engine(
+        &EngineOpts::new("tiny-moe", Strategy::RtpOutOfPlace, 2, 4).exec(ExecKind::Oracle),
+    )?;
+    let mut corpus = MarkovCorpus::new(&cfg, 42);
+    let mut opt = Optimizer::new(OptimizerKind::Adam, 5e-3);
+    let tcfg = TrainCfg { steps: 30, log_every: 10, ..TrainCfg::default() };
+    let r = train(&mut *engine, &mut opt, &mut corpus, &tcfg, 4, false)?;
+    let (head, tail) = r.head_tail_means(5);
+    println!("\nMoE training: loss {head:.4} -> {tail:.4}");
+    anyhow::ensure!(tail < head, "MoE should learn");
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Quickstart: build an RTP engine, take a few training steps on the
+//! synthetic corpus, check the loss moves, and print the memory ledger.
+//!
+//!     cargo run --release --example quickstart
+
+use rtp::config::{presets, OptimizerKind, Strategy, TrainCfg};
+use rtp::memory::tracker::MemCategory;
+use rtp::parallel::{build_engine, EngineOpts, ExecKind};
+use rtp::train::{train, MarkovCorpus, Optimizer};
+use rtp::util::bytes::human;
+
+fn main() -> anyhow::Result<()> {
+    // 2-way Rotated Tensor Parallelism on the CI-sized model. Swap
+    // ExecKind::Pjrt to run the AOT HLO artifacts (after `make artifacts`).
+    let opts = EngineOpts::new("tiny", Strategy::RtpInplace, 2, 4).exec(ExecKind::Oracle);
+    let cfg = presets::get("tiny").unwrap();
+    let mut engine = build_engine(&opts)?;
+    println!("engine: {} on {} workers", engine.name(), engine.ctx().cluster.n());
+
+    let mut corpus = MarkovCorpus::new(&cfg, 42);
+    let mut opt = Optimizer::new(OptimizerKind::Adam, 5e-3);
+    let tcfg = TrainCfg { steps: 40, log_every: 10, ..TrainCfg::default() };
+    let report = train(&mut *engine, &mut opt, &mut corpus, &tcfg, 4, false)?;
+
+    let (head, tail) = report.head_tail_means(5);
+    println!("\nloss {head:.4} -> {tail:.4} over {} steps", report.steps);
+    assert!(tail < head, "loss should decrease");
+
+    println!("\nper-worker memory at peak:");
+    let t = &engine.ctx().cluster.workers[0].tracker;
+    for cat in MemCategory::ALL {
+        println!("  {cat:<12} {}", human(t.peak_of(cat)));
+    }
+    println!("  {:<12} {}", "TOTAL", human(t.peak()));
+    Ok(())
+}

@@ -1,0 +1,280 @@
+"""AOT compile path: lower every shard op to HLO *text* + manifest.json.
+
+Run once by `make artifacts`; python never appears on the training path.
+
+Interchange format is HLO text, NOT `lowered.compile()` / serialized protos:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts --preset tiny
+  python -m compile.aot --out-dir ../artifacts --preset tiny --pallas
+  python -m compile.aot --preset e2e-small --report-kernels
+  python -m compile.aot --preset tiny --report-hlo
+"""
+
+import argparse
+import functools
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, presets
+from .kernels import attention as kattn
+from .kernels import matmul as kmm
+from .kernels import layernorm as kln
+from .kernels import softmax_xent as kxent
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for uniform
+    unwrapping on the rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# shape plan
+# ---------------------------------------------------------------------------
+
+def op_instances(cfg: presets.ModelConfig, use_pallas: bool):
+    """Yield (key, fn, arg_specs) for every op instance the preset needs.
+
+    Keys are `op__b{b}__p{p}` (+ `__pallas`), matching
+    rust/src/runtime/artifacts.rs::ArtifactKey.
+    """
+    v, h, s, f = cfg.vocab, cfg.hidden, cfg.seq, cfg.ffn
+    nh = cfg.heads
+    up = {"use_pallas": use_pallas}
+    seen = set()
+
+    for (b, p) in cfg.combos:
+        hp, fp, vp, nh_p = h // p, f // p, v // p, nh // p
+        ops = {
+            "emb_fwd": (
+                functools.partial(model.emb_fwd, **up),
+                [spec((b, s), I32), spec((v, hp)), spec((s, hp))],
+            ),
+            "emb_bwd": (
+                functools.partial(model.emb_bwd, vocab=v, **up),
+                [spec((b, s), I32), spec((b, s, hp))],
+            ),
+            "ln_fwd": (
+                functools.partial(model.ln_fwd, **up),
+                [spec((b, s, h)), spec((h,)), spec((h,))],
+            ),
+            "ln_bwd": (
+                functools.partial(model.ln_bwd, **up),
+                [spec((b, s, h)), spec((h,)), spec((b, s, h))],
+            ),
+            "attn_fwd": (
+                functools.partial(model.attn_fwd, nh_p=nh_p, **up),
+                [spec((b, s, h)), spec((h, 3 * hp)), spec((3 * hp,)),
+                 spec((hp, h))],
+            ),
+            "attn_bwd": (
+                functools.partial(model.attn_bwd, nh_p=nh_p, **up),
+                [spec((b, s, h)), spec((h, 3 * hp)), spec((3 * hp,)),
+                 spec((hp, h)), spec((b, s, h))],
+            ),
+            "mlp_fwd": (
+                functools.partial(model.mlp_fwd, **up),
+                [spec((b, s, h)), spec((h, fp)), spec((fp,)), spec((fp, h))],
+            ),
+            "mlp_bwd": (
+                functools.partial(model.mlp_bwd, **up),
+                [spec((b, s, h)), spec((h, fp)), spec((fp,)), spec((fp, h)),
+                 spec((b, s, h))],
+            ),
+            "lmhead_fwd": (
+                functools.partial(model.lmhead_fwd, **up),
+                [spec((b, s, h)), spec((h, vp))],
+            ),
+            "lmhead_bwd": (
+                functools.partial(model.lmhead_bwd, **up),
+                [spec((b, s, h)), spec((h, vp)), spec((b, s, vp))],
+            ),
+        }
+        # loss + MoE ops depend on the local batch only; emit once per b
+        # under p=1 keys.
+        if (b, 1) not in seen:
+            ops_b1 = {
+                "xent": (
+                    functools.partial(model.xent, **up),
+                    [spec((b, s, v)), spec((b, s), I32)],
+                ),
+            }
+            if cfg.experts:
+                e, fe = cfg.experts, cfg.expert_ffn
+                ops_b1.update({
+                    "router_fwd": (
+                        functools.partial(model.router_fwd, **up),
+                        [spec((b, s, h)), spec((h, e))],
+                    ),
+                    "router_bwd": (
+                        functools.partial(model.router_bwd, **up),
+                        [spec((b, s, h)), spec((h, e)), spec((b, s, e))],
+                    ),
+                    "moe_fwd": (
+                        functools.partial(model.moe_fwd, **up),
+                        [spec((b, s, h)), spec((b, s)), spec((h, fe)),
+                         spec((fe,)), spec((fe, h))],
+                    ),
+                    "moe_bwd": (
+                        functools.partial(model.moe_bwd, **up),
+                        [spec((b, s, h)), spec((b, s)), spec((h, fe)),
+                         spec((fe,)), spec((fe, h)), spec((b, s, h))],
+                    ),
+                })
+            for name, (fn, args) in ops_b1.items():
+                yield f"{name}__b{b}__p1", fn, args
+
+        for name, (fn, args) in ops.items():
+            key = f"{name}__b{b}__p{p}"
+            if key not in seen:
+                yield key, fn, args
+        seen.add((b, p))
+        seen.update(f"{name}__b{b}__p{p}" for name in ops)
+
+
+def shaped(args):
+    return [
+        ["i32" if a.dtype == jnp.int32 else "f32", list(a.shape)]
+        for a in args
+    ]
+
+
+def lower_entry(key, fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    outs = jax.eval_shape(fn, *args)
+    return text, shaped(args), shaped(list(outs))
+
+
+# ---------------------------------------------------------------------------
+# main build
+# ---------------------------------------------------------------------------
+
+def build(cfg: presets.ModelConfig, out_dir: str, use_pallas: bool):
+    if not cfg.artifacts:
+        raise SystemExit(f"preset {cfg.name} is virtual-only (no artifacts)")
+    pdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(pdir, exist_ok=True)
+    entries = []
+    # The pallas build only covers the shard combos actually exercised by
+    # the pallas integration test (smallest shard combo) — interpret-mode
+    # lowering is slow and the pallas path is a correctness demonstration.
+    instances = list(op_instances(cfg, use_pallas))
+    if use_pallas:
+        p_max = max(p for _, p in cfg.combos)
+        keep = (f"__p{p_max}", "xent__")
+        instances = [
+            (k, f, a) for (k, f, a) in instances
+            if any(t in k for t in keep)
+        ]
+    for key, fn, args in instances:
+        fkey = key + ("__pallas" if use_pallas else "")
+        fname = f"{fkey}.hlo.txt"
+        text, ins, outs = lower_entry(key, fn, args)
+        with open(os.path.join(pdir, fname), "w") as fh:
+            fh.write(text)
+        op, bs, ps = key.split("__")
+        entries.append({
+            "key": fkey,
+            "op": op,
+            "b": int(bs[1:]),
+            "p": int(ps[1:]),
+            "pallas": use_pallas,
+            "file": f"{cfg.name}/{fname}",
+            "inputs": ins,
+            "outputs": outs,
+        })
+        print(f"  lowered {fkey}  ({len(text)} chars)")
+    mname = "manifest_pallas.json" if use_pallas else "manifest.json"
+    manifest = {
+        "preset": cfg.name,
+        "config": presets.as_dict(cfg),
+        "entries": entries,
+    }
+    with open(os.path.join(pdir, mname), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"wrote {pdir}/{mname}: {len(entries)} artifacts")
+
+
+# ---------------------------------------------------------------------------
+# perf reports (L1 / L2 profiling for the §Perf pass)
+# ---------------------------------------------------------------------------
+
+def report_kernels(cfg: presets.ModelConfig):
+    """L1 profile: VMEM footprint + MXU utilization per kernel/BlockSpec."""
+    b = max(b for b, _ in cfg.combos) if cfg.combos else 1
+    p = max(p for _, p in cfg.combos) if cfg.combos else 1
+    t = b * cfg.seq
+    reps = [
+        kmm.report(t, cfg.hidden, 3 * cfg.hidden // p),
+        kmm.report(t, cfg.hidden, cfg.ffn // p),
+        kmm.report(t, cfg.ffn // p, cfg.hidden),
+        kmm.report(t, cfg.hidden, cfg.vocab // p),
+        kattn.report(cfg.seq, cfg.hidden // cfg.heads),
+        kln.report(t, cfg.hidden),
+        kxent.report(t, cfg.vocab),
+    ]
+    print(json.dumps({"preset": cfg.name, "kernels": reps}, indent=1))
+
+
+_HLO_OP = re.compile(r"=\s+[a-z0-9\[\],\{\} ]+\s+([a-z][a-z0-9\-]*)\(")
+
+
+def report_hlo(cfg: presets.ModelConfig, out_dir: str):
+    """L2 profile: HLO op histogram per artifact (fusion sanity check)."""
+    pdir = os.path.join(out_dir, cfg.name)
+    man = json.load(open(os.path.join(pdir, "manifest.json")))
+    for e in man["entries"]:
+        text = open(os.path.join(out_dir, e["file"])).read()
+        hist = {}
+        for line in text.splitlines():
+            m = _HLO_OP.search(line)
+            if m:
+                hist[m.group(1)] = hist.get(m.group(1), 0) + 1
+        top = sorted(hist.items(), key=lambda kv: -kv[1])[:6]
+        print(f"{e['key']:40s} " + " ".join(f"{k}:{n}" for k, n in top))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="tiny")
+    ap.add_argument("--pallas", action="store_true",
+                    help="lower ops through the Pallas kernels (interpret)")
+    ap.add_argument("--report-kernels", action="store_true")
+    ap.add_argument("--report-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cfg = presets.get(args.preset)
+    if args.report_kernels:
+        report_kernels(cfg)
+        return
+    if args.report_hlo:
+        report_hlo(cfg, args.out_dir)
+        return
+    build(cfg, args.out_dir, args.pallas)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer 1: Pallas kernels for RTP's compute hot-spots.
+
+Every kernel has a pure-jnp oracle in `ref.py`; pytest + hypothesis sweep
+shapes and assert allclose. Kernels run with interpret=True (CPU PJRT can't
+execute Mosaic custom-calls); the TPU efficiency story is estimated from the
+BlockSpec geometry (see common.py and DESIGN.md §3).
+"""
+
+from . import attention, common, layernorm, matmul, ref, softmax_xent
+
+__all__ = [
+    "attention",
+    "common",
+    "layernorm",
+    "matmul",
+    "ref",
+    "softmax_xent",
+]

@@ -1,0 +1,112 @@
+"""Flash-style causal attention Pallas kernel.
+
+Tiled online-softmax attention (the appendix of the paper points at
+FlashAttention as the fix for the memory-transfer wall on fast
+interconnects). One grid program owns one (batch*head, q-block); the kv
+sequence is walked with `fori_loop` keeping running max / normalizer in
+registers, so the full [S, S] score matrix never materializes — the HBM<->
+VMEM traffic is exactly q-block + streamed kv blocks, which is the TPU
+translation of FlashAttention's SRAM tiling.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, s: int,
+                 scale: float):
+    """q block: [bq, HD]; k/v: [S, HD] streamed in bk chunks."""
+    iq = pl.program_id(1)
+    q = q_ref[0, :, :] * scale  # [bq, hd]
+    hd = q.shape[-1]
+
+    q_pos = iq * bq + jax.lax.iota(jnp.int32, bq)  # absolute q rows
+
+    nkv = s // bk
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None)))
+        v_blk = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None)))
+        sc = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+        k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        sc = jnp.where(mask, sc, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, nkv, body, (acc0, m0, l0))
+    # Fully-masked (padded) rows have l == 0; keep them at 0 output.
+    l_safe = jnp.where(l_i == 0.0, 1.0, l_i)
+    o_ref[0, :, :] = acc / l_safe[:, None]
+
+
+def blocks_for(s: int, hd: int):
+    bq = common.pick_block(s, 128)
+    bk = common.pick_block(s, 128)
+    return bq, bk
+
+
+def attention(q, k, v, scale=None):
+    """Causal MHA. q/k/v: [B, NH, S, HD] -> [B, NH, S, HD]."""
+    b, nh, s, hd = q.shape
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    bq, bk = blocks_for(s, hd)
+
+    qf = q.reshape(b * nh, s, hd)
+    kf = k.reshape(b * nh, s, hd)
+    vf = v.reshape(b * nh, s, hd)
+    # Pad S so both the q grid and the kv fori_loop walk whole blocks.
+    # Padded kv rows come *after* every real q row, so the causal mask
+    # already excludes them; padded q rows are sliced off below.
+    qf, s0 = common.pad_to(qf, 1, bq)
+    kf, _ = common.pad_to(kf, 1, bk)
+    vf, _ = common.pad_to(vf, 1, bk)
+    sq = qf.shape[1]
+    sk = kf.shape[1]
+
+    kernel = functools.partial(
+        _attn_kernel, bq=bq, bk=bk, s=sk, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * nh, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, sk, hd), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, sk, hd), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * nh, sq, hd), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+
+    return out[:, :s0, :].reshape(b, nh, s, hd)
+
+
+def report(s: int, hd: int) -> dict:
+    bq, bk = blocks_for(s, hd)
+    rep = common.kernel_report(
+        "flash_attention",
+        {"q": (bq, hd), "k": (bk, hd), "v": (bk, hd), "acc": (bq, hd)},
+    )
+    rep["mxu_utilization"] = round(common.mxu_utilization(bq, bk, hd), 4)
+    rep["problem"] = [s, hd]
+    return rep

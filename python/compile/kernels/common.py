@@ -1,0 +1,69 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package are written TPU-shaped (blocks sized for the
+128x128 MXU and a ~16MB VMEM budget) but are executed with interpret=True:
+the CPU PJRT plugin cannot run Mosaic custom-calls, so interpret mode is the
+correctness path and real-TPU efficiency is *estimated* from the BlockSpec
+geometry (see `vmem_bytes` / `mxu_utilization`, surfaced by
+`python -m compile.aot --report-kernels`).
+"""
+
+import math
+
+# TPU geometry used for the efficiency estimates.
+MXU_EDGE = 128          # systolic array edge
+VMEM_BYTES = 16 * 2**20  # per-core VMEM budget
+LANE = 128               # vector lane width
+SUBLANE = 8              # f32 sublane packing
+
+
+def next_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Block size for `dim`: `target` when the dim is big enough, otherwise
+    the dim rounded up to a sublane multiple (tiny test shapes)."""
+    if dim >= target:
+        return target
+    return max(1, min(dim, target))
+
+
+def pad_to(x, axis: int, multiple: int, value=0.0):
+    """Pad `x` along `axis` up to a multiple; returns (padded, orig_len)."""
+    import jax.numpy as jnp
+
+    n = x.shape[axis]
+    m = next_multiple(n, multiple)
+    if m == n:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, m - n)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def vmem_bytes(*block_shapes, dtype_bytes: int = 4) -> int:
+    """Total VMEM working set of one grid step (all live blocks)."""
+    return sum(dtype_bytes * math.prod(s) for s in block_shapes)
+
+
+def mxu_utilization(bm: int, bn: int, bk: int) -> float:
+    """Fraction of the MXU's 128x128 tiles that carry real data for a
+    (bm x bk) @ (bk x bn) block matmul — the TPU analogue of the paper's
+    small-CUDA-kernel occupancy concern (paper §3.4.1)."""
+
+    def eff(d):
+        return d / next_multiple(d, MXU_EDGE)
+
+    return eff(bm) * eff(bn) * min(1.0, bk / MXU_EDGE)
+
+
+def kernel_report(name: str, blocks: dict, dtype_bytes: int = 4) -> dict:
+    """Standard per-kernel report entry for --report-kernels."""
+    vm = vmem_bytes(*blocks.values(), dtype_bytes=dtype_bytes)
+    return {
+        "kernel": name,
+        "blocks": {k: list(v) for k, v in blocks.items()},
+        "vmem_bytes": vm,
+        "vmem_frac": round(vm / VMEM_BYTES, 4),
+    }

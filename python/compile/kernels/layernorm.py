@@ -1,0 +1,57 @@
+"""Row-tiled LayerNorm Pallas kernel.
+
+Each grid program normalizes a block of rows entirely in VMEM; H stays
+un-tiled because LayerNorm needs whole-row moments (for the model sizes in
+the paper H <= 2560 -> a (256, 2560) f32 block is 2.6 MB, well inside VMEM).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+def blocks_for(rows: int, h: int):
+    return common.pick_block(rows, 256)
+
+
+def layernorm(x, g, b, eps: float = 1e-5):
+    """LayerNorm over the last axis. x: [..., H]."""
+    *lead, h = x.shape
+    x2 = x.reshape(-1, h)
+    br = blocks_for(x2.shape[0], h)
+    x2, r0 = common.pad_to(x2, 0, br)
+    rows = x2.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, h), jnp.float32),
+        interpret=True,
+    )(x2, g, b)
+    return out[:r0].reshape(*lead, h)
+
+
+def report(rows: int, h: int) -> dict:
+    br = blocks_for(rows, h)
+    rep = common.kernel_report(
+        "layernorm", {"x": (br, h), "g": (h,), "b": (h,), "out": (br, h)}
+    )
+    rep["problem"] = [rows, h]
+    return rep

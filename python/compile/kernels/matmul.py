@@ -1,0 +1,124 @@
+"""Blocked matmul Pallas kernel with fused bias + activation.
+
+This is the partition hot-spot of RTP: every rotation step runs one
+(1/N-sized) GEMM per unit, so the whole paper lives or dies on this kernel.
+
+TPU mapping of the paper's GPU concerns (DESIGN.md §3):
+  * threadblock tiling      -> BlockSpec grid over (M/bm, N/bn) with the K
+                               loop innermost, accumulating in the output
+                               block resident in VMEM;
+  * shared-memory staging   -> HBM->VMEM block copies expressed by the
+                               index_maps;
+  * tensor-core WMMA        -> MXU-shaped (multiple-of-128) bm/bn/bk when
+                               the operands are big enough;
+  * small-kernel occupancy  -> when dout/N < 128 the MXU runs partially
+                               empty; `report()` quantifies that penalty.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk: int, activation: str, bias):
+    """One (bm, bn) output block; grid dim 2 walks the K blocks."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if bias is not None:
+            acc = acc + bias[...]
+        if activation == "gelu":
+            acc = jax.nn.gelu(acc, approximate=True)
+        o_ref[...] = acc
+
+
+def _mm_bias_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    _mm_kernel(x_ref, w_ref, o_ref, nk=nk, activation=activation, bias=b_ref)
+
+
+def _mm_nobias_kernel(x_ref, w_ref, o_ref, *, nk: int, activation: str):
+    _mm_kernel(x_ref, w_ref, o_ref, nk=nk, activation=activation, bias=None)
+
+
+def blocks_for(m: int, k: int, n: int):
+    """Block geometry: MXU-shaped when the problem is big enough."""
+    bm = common.pick_block(m, 128)
+    bn = common.pick_block(n, 128)
+    bk = common.pick_block(k, 512)
+    return bm, bk, bn
+
+
+def matmul_bias_act(x, w, b=None, activation: str = "none"):
+    """act(x @ w + b) as a Pallas kernel. x: [..., K], w: [K, N], b: [N]|None.
+
+    Arbitrary shapes are handled by padding up to block multiples and
+    slicing the result back (hypothesis sweeps hit ragged shapes).
+    """
+    *lead, kdim = x.shape
+    n = w.shape[1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+
+    bm, bk, bn = blocks_for(m, kdim, n)
+    x2, m0 = common.pad_to(x2, 0, bm)
+    x2, _ = common.pad_to(x2, 1, bk)
+    wp, _ = common.pad_to(w, 0, bk)
+    wp, n0 = common.pad_to(wp, 1, bn)
+    mp, kp = x2.shape
+    np_ = wp.shape[1]
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    args = [x2, wp]
+    if b is not None:
+        bp, _ = common.pad_to(b, 0, bn)
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j, k: (j,)))
+        args.append(bp)
+        kernel = functools.partial(
+            _mm_bias_kernel, nk=nk, activation=activation
+        )
+    else:
+        kernel = functools.partial(
+            _mm_nobias_kernel, nk=nk, activation=activation
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(*args)
+
+    return out[:m0, :n0].reshape(*lead, n)
+
+
+def report(m: int, k: int, n: int) -> dict:
+    """VMEM/MXU estimate for the --report-kernels perf pass."""
+    bm, bk, bn = blocks_for(m, k, n)
+    rep = common.kernel_report(
+        "matmul_bias_act",
+        {"x": (bm, bk), "w": (bk, bn), "acc": (bm, bn)},
+    )
+    rep["mxu_utilization"] = round(common.mxu_utilization(bm, bn, bk), 4)
+    rep["problem"] = [m, k, n]
+    return rep

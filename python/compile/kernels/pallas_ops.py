@@ -1,0 +1,130 @@
+"""Differentiable wrappers around the Pallas kernels.
+
+`pallas_call` (interpret or not) has no built-in reverse-mode rule, so the
+L2 `*_bwd` ops cannot `jax.vjp` through a raw kernel. Each wrapper here is a
+`jax.custom_vjp` whose forward runs the Pallas kernel and whose backward
+expresses its own heavy GEMMs *through the same Pallas matmul kernel* —
+i.e. the hot math stays in Layer 1 in both directions. Elementwise glue
+(GeLU derivative, softmax algebra) stays in jnp: it is bandwidth-trivial
+and XLA fuses it anyway.
+
+attention/layernorm backward use an analytic jnp recompute (a flash-backward
+Pallas kernel is listed as an extension in DESIGN.md).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as kattn
+from . import layernorm as kln
+from . import matmul as kmm
+from . import ref
+
+
+def _dgelu(pre):
+    """d/dx gelu_tanh(x) (GPT-2 tanh approximation)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(pre.dtype)
+    inner = c * (pre + 0.044715 * pre**3)
+    t = jnp.tanh(inner)
+    dinner = c * (1.0 + 3 * 0.044715 * pre**2)
+    return 0.5 * (1.0 + t) + 0.5 * pre * (1.0 - t**2) * dinner
+
+
+def _mm_bwd_core(activation, x, w, b, dy):
+    """Shared backward: both GEMMs dispatched to the Pallas kernel."""
+    if activation == "gelu":
+        # recompute the PRE-activation (including bias!) with the kernel
+        pre = kmm.matmul_bias_act(x, w, b, "none")
+        dpre = dy * _dgelu(pre)
+    else:
+        dpre = dy
+    kdim = x.shape[-1]
+    n = w.shape[1]
+    dp2 = dpre.reshape(-1, n)
+    x2 = x.reshape(-1, kdim)
+    dx = kmm.matmul_bias_act(dp2, w.T, None, "none").reshape(x.shape)
+    dw = kmm.matmul_bias_act(x2.T, dp2, None, "none")
+    db = jnp.sum(dp2, axis=0)
+    return dx, dw, db
+
+
+def _make_matmul(activation: str, with_bias: bool):
+    if with_bias:
+
+        @jax.custom_vjp
+        def mm(x, w, b):
+            return kmm.matmul_bias_act(x, w, b, activation)
+
+        def fwd(x, w, b):
+            return kmm.matmul_bias_act(x, w, b, activation), (x, w, b)
+
+        def bwd(res, dy):
+            return _mm_bwd_core(activation, *res, dy)
+
+        mm.defvjp(fwd, bwd)
+        return mm
+
+    @jax.custom_vjp
+    def mm_nb(x, w):
+        return kmm.matmul_bias_act(x, w, None, activation)
+
+    def fwd_nb(x, w):
+        return kmm.matmul_bias_act(x, w, None, activation), (x, w)
+
+    def bwd_nb(res, dy):
+        x, w = res
+        dx, dw, _ = _mm_bwd_core(activation, x, w, None, dy)
+        return dx, dw
+
+    mm_nb.defvjp(fwd_nb, bwd_nb)
+    return mm_nb
+
+
+_MM = {
+    ("none", True): _make_matmul("none", True),
+    ("none", False): _make_matmul("none", False),
+    ("gelu", True): _make_matmul("gelu", True),
+    ("gelu", False): _make_matmul("gelu", False),
+}
+
+
+def matmul(x, w, b=None, activation="none"):
+    """Differentiable Pallas matmul with fused bias + activation."""
+    fn = _MM[(activation, b is not None)]
+    return fn(x, w, b) if b is not None else fn(x, w)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Differentiable Pallas flash attention (causal)."""
+    return kattn.attention(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return kattn.attention(q, k, v), (q, k, v)
+
+
+def _attn_bwd(res, do):
+    _, vjp = jax.vjp(ref.attention, *res)
+    return vjp(do)
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+@jax.custom_vjp
+def layernorm(x, g, b):
+    """Differentiable Pallas LayerNorm."""
+    return kln.layernorm(x, g, b)
+
+
+def _ln_fwd(x, g, b):
+    return kln.layernorm(x, g, b), (x, g, b)
+
+
+def _ln_bwd(res, dy):
+    _, vjp = jax.vjp(ref.layernorm, *res)
+    return vjp(dy)
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)

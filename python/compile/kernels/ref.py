@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal for Layer 1: every kernel in this
+package must agree with its oracle to float32 tolerance across the
+hypothesis shape/dtype sweeps in python/tests/.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approximate GeLU (GPT-2 convention, matches jax.nn.gelu default)."""
+    return jax.nn.gelu(x, approximate=True)
+
+
+def matmul_bias_act(x, w, b=None, activation="none"):
+    """y = act(x @ w + b). x: [..., K], w: [K, N], b: [N] or None."""
+    y = x @ w
+    if b is not None:
+        y = y + b
+    if activation == "gelu":
+        y = gelu(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def attention(q, k, v, scale=None):
+    """Multi-head causal attention.
+
+    q, k, v: [B, NH, S, HD] -> out [B, NH, S, HD].
+    """
+    s = q.shape[-2]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def layernorm(x, g, b, eps=1e-5):
+    """LayerNorm over the last axis. x: [..., H], g/b: [H]."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def softmax_xent(logits, targets):
+    """Mean cross-entropy + dlogits (already scaled by 1/T).
+
+    logits: [T, V] float, targets: [T] int32 -> (scalar loss, dlogits [T, V]).
+    """
+    t = logits.shape[0]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    nll = lse - jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    dlogits = (probs - onehot) / t
+    return loss, dlogits

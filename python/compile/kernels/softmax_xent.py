@@ -1,0 +1,85 @@
+"""Fused softmax cross-entropy (+ gradient) Pallas kernel.
+
+The LM-head loss is the last memory hot-spot: logits are [T, V] with V up to
+50k. The kernel fuses log-softmax, NLL gather and dlogits into one pass over
+a row block, so logits are read once from HBM and probs are never
+materialized separately from dlogits.
+
+Outputs per row block: the summed NLL (one scalar per block, reduced by the
+wrapper) and dlogits (already scaled by 1/T, the mean-loss convention shared
+with ref.softmax_xent and the rust engines).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _xent_kernel(lg_ref, tg_ref, loss_ref, dl_ref, *, v: int, inv_t: float):
+    lg = lg_ref[...]  # [br, V]
+    tg = tg_ref[...]  # [br]
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    ex = jnp.exp(lg - m)
+    se = jnp.sum(ex, axis=-1, keepdims=True)
+    lse = jnp.log(se) + m  # [br, 1]
+    cols = jax.lax.iota(jnp.int32, v)[None, :]
+    onehot = (cols == tg[:, None]).astype(lg.dtype)
+    picked = jnp.sum(lg * onehot, axis=-1)
+    # Padded rows carry target -1 -> onehot all-zero; mask them out of the
+    # loss and gradient entirely.
+    valid = (tg >= 0).astype(lg.dtype)
+    nll = (lse[:, 0] - picked) * valid
+    loss_ref[0] = jnp.sum(nll)
+    probs = ex / se
+    dl_ref[...] = (probs - onehot) * valid[:, None] * inv_t
+
+
+def blocks_for(t: int, v: int):
+    # §Perf L1 iteration 2: budget ~4 MB for the logits block so that
+    # logits + dlogits together stay at ~50% of the 16 MB VMEM — leaving
+    # room for double-buffering the next row block (the first cut used
+    # 8 MB and reported 100% VMEM occupancy, no prefetch headroom).
+    budget_rows = max(1, (4 * 2**20) // (4 * max(v, 1)))
+    return common.pick_block(t, min(128, budget_rows))
+
+
+def softmax_xent(logits, targets):
+    """Mean cross-entropy. logits [T, V] f32, targets [T] i32."""
+    t, v = logits.shape
+    br = blocks_for(t, v)
+    lg, t0 = common.pad_to(logits, 0, br)
+    tg = jnp.pad(targets, (0, lg.shape[0] - t), constant_values=-1)
+    rows = lg.shape[0]
+    nb = rows // br
+
+    loss_b, dl = pl.pallas_call(
+        functools.partial(_xent_kernel, v=v, inv_t=1.0 / t),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((br, v), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((br, v), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((rows, v), jnp.float32),
+        ],
+        interpret=True,
+    )(lg, tg)
+    return jnp.sum(loss_b) / t, dl[:t0]
+
+
+def report(t: int, v: int) -> dict:
+    br = blocks_for(t, v)
+    rep = common.kernel_report(
+        "softmax_xent", {"logits": (br, v), "dlogits": (br, v)}
+    )
+    rep["problem"] = [t, v]
+    return rep

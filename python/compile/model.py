@@ -1,0 +1,255 @@
+"""Layer 2: the RTP shard ops — JAX fwd/bwd for every partition unit.
+
+The rust coordinator (Layer 3) decomposes a GPT-style transformer into RTP
+units (paper §3.2/§4) and drives these ops once per (worker, rotation step):
+
+  Output-Partition  -> emb_fwd/bwd, lmhead_fwd/bwd       (merge = concat)
+  Head-Partition    -> attn_fwd/bwd                      (merge = add)
+  Input+Output pair -> mlp_fwd/bwd                       (merge = add)
+  Expert-Partition  -> router_fwd/bwd, moe_fwd/bwd       (merge = add)
+  replicated        -> ln_fwd/bwd, xent
+
+Conventions shared with rust (rust/src/model/partition.rs):
+  * every op returns a TUPLE (uniform unwrapping on the rust side);
+  * weight shards use the canonical layouts documented per-op below, so the
+    rust partitioner can slice a full weight into shards with plain strided
+    copies;
+  * biases that would be double-counted by sum-merges (attention bo, mlp
+    b2) are NOT applied here; the engine adds them once after merging;
+  * backward ops recompute internals from the saved layer *inputs* (flash
+    style), so engines only stash per-layer inputs — this is the activation
+    memory model Table 1 assumes.
+
+Every op has a `use_pallas` switch: False lowers through plain jnp, True
+routes the hot math through the Layer-1 Pallas kernels (interpret=True) so
+the kernels end up inside the same HLO artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_ops
+from .kernels import ref
+from .kernels import softmax_xent as kxent
+
+
+# ---------------------------------------------------------------------------
+# primitive dispatch (jnp vs pallas). The pallas path goes through the
+# custom_vjp wrappers in kernels/pallas_ops.py so jax.vjp works in the
+# *_bwd ops below.
+# ---------------------------------------------------------------------------
+
+def _matmul(x, w, b=None, activation="none", *, use_pallas=False):
+    if use_pallas:
+        return pallas_ops.matmul(x, w, b, activation)
+    return ref.matmul_bias_act(x, w, b, activation)
+
+
+def _attention(q, k, v, *, use_pallas=False):
+    if use_pallas:
+        return pallas_ops.attention(q, k, v)
+    return ref.attention(q, k, v)
+
+
+def _layernorm(x, g, b, *, use_pallas=False):
+    if use_pallas:
+        return pallas_ops.layernorm(x, g, b)
+    return ref.layernorm(x, g, b)
+
+
+def _softmax_xent(logits, targets, *, use_pallas=False):
+    if use_pallas:
+        return kxent.softmax_xent(logits, targets)
+    return ref.softmax_xent(logits, targets)
+
+
+# ---------------------------------------------------------------------------
+# Output-Partition: embedding (token + positional), sharded on hidden dim.
+# wte: [V, Hp], wpe: [S, Hp] — column shard `s` of the full [V, H] / [S, H].
+# ---------------------------------------------------------------------------
+
+def emb_fwd(ids, wte, wpe, *, use_pallas=False):
+    """ids [b,S] i32 -> (x [b,S,Hp],)."""
+    del use_pallas  # pure gather; nothing to tile
+    return (wte[ids] + wpe[None, :, :],)
+
+
+def emb_bwd(ids, dx, *, vocab, use_pallas=False):
+    """-> (dwte [V,Hp], dwpe [S,Hp]). Scatter-add of the output grad."""
+    del use_pallas
+    dwte = jnp.zeros((vocab, dx.shape[-1]), dx.dtype).at[ids].add(dx)
+    dwpe = jnp.sum(dx, axis=0)
+    return (dwte, dwpe)
+
+
+# ---------------------------------------------------------------------------
+# replicated LayerNorm
+# ---------------------------------------------------------------------------
+
+def ln_fwd(x, g, b, *, use_pallas=False):
+    return (_layernorm(x, g, b, use_pallas=use_pallas),)
+
+
+def ln_bwd(x, g, dy, *, use_pallas=False):
+    """-> (dx, dg, db). The bias VALUE does not enter any gradient, so it
+    is not an input (jax would dead-code-eliminate the parameter from the
+    lowered HLO, desyncing the manifest — see runtime/manifest.rs)."""
+    zero_b = jnp.zeros_like(g)
+    _, vjp = jax.vjp(lambda x_, g_, b_: _layernorm(x_, g_, b_,
+                                                   use_pallas=use_pallas),
+                     x, g, zero_b)
+    return tuple(vjp(dy))
+
+
+# ---------------------------------------------------------------------------
+# Head-Partition: attention. Canonical full layout wqkv [H, 3, NH, HD]
+# (flattened [H, 3H]); a shard takes a contiguous range of heads ->
+# wqkv [H, 3*Hp], bqkv [3*Hp], wo [Hp, H] (row shard). Output is a PARTIAL
+# sum over head shards; bo is added by the engine exactly once.
+# ---------------------------------------------------------------------------
+
+def attn_fwd(x, wqkv, bqkv, wo, *, nh_p, use_pallas=False):
+    """x [b,S,H] -> (partial [b,S,H],)."""
+    b, s, _ = x.shape
+    hp3 = wqkv.shape[1]
+    hp = hp3 // 3
+    hd = hp // nh_p
+    qkv = _matmul(x, wqkv, bqkv, use_pallas=use_pallas)  # [b,S,3Hp]
+    qkv = qkv.reshape(b, s, 3, nh_p, hd).transpose(2, 0, 3, 1, 4)
+    q, k, v = qkv[0], qkv[1], qkv[2]  # [b,nh_p,S,hd]
+    o = _attention(q, k, v, use_pallas=use_pallas)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hp)
+    return (_matmul(o, wo, use_pallas=use_pallas),)
+
+
+def attn_bwd(x, wqkv, bqkv, wo, dpartial, *, nh_p, use_pallas=False):
+    """Recomputes attention from the saved input.
+
+    -> (dx, dwqkv, dbqkv, dwo)."""
+    f = lambda x_, wq_, bq_, wo_: attn_fwd(
+        x_, wq_, bq_, wo_, nh_p=nh_p, use_pallas=use_pallas
+    )[0]
+    _, vjp = jax.vjp(f, x, wqkv, bqkv, wo)
+    return tuple(vjp(dpartial))
+
+
+# ---------------------------------------------------------------------------
+# Megatron-pair MLP: w1 [H, Fp] column shard (+GeLU), w2 [Fp, H] row shard.
+# Output is a PARTIAL sum; b2 added once by the engine.
+# ---------------------------------------------------------------------------
+
+def mlp_fwd(x, w1, b1, w2, *, use_pallas=False):
+    """x [b,S,H] -> (partial [b,S,H],)."""
+    h = _matmul(x, w1, b1, activation="gelu", use_pallas=use_pallas)
+    return (_matmul(h, w2, use_pallas=use_pallas),)
+
+
+def mlp_bwd(x, w1, b1, w2, dpartial, *, use_pallas=False):
+    """-> (dx, dw1, db1, dw2). Recomputes the GeLU hidden."""
+    f = lambda x_, w1_, b1_, w2_: mlp_fwd(
+        x_, w1_, b1_, w2_, use_pallas=use_pallas
+    )[0]
+    _, vjp = jax.vjp(f, x, w1, b1, w2)
+    return tuple(vjp(dpartial))
+
+
+# ---------------------------------------------------------------------------
+# Output-Partition: LM head, vocab-sharded, no bias.
+# wlm [H, Vp] column shard of [H, V].
+# ---------------------------------------------------------------------------
+
+def lmhead_fwd(x, wlm, *, use_pallas=False):
+    """x [b,S,H] -> (logits slice [b,S,Vp],)."""
+    return (_matmul(x, wlm, use_pallas=use_pallas),)
+
+
+def lmhead_bwd(x, wlm, dlogits, *, use_pallas=False):
+    """-> (dx partial [b,S,H], dwlm)."""
+    f = lambda x_, w_: lmhead_fwd(x_, w_, use_pallas=use_pallas)[0]
+    _, vjp = jax.vjp(f, x, wlm)
+    return tuple(vjp(dlogits))
+
+
+# ---------------------------------------------------------------------------
+# loss (replicated over the worker's batch shard)
+# ---------------------------------------------------------------------------
+
+def xent(logits, targets, *, use_pallas=False):
+    """logits [b,S,V], targets [b,S] i32 -> (loss scalar, dlogits)."""
+    b, s, v = logits.shape
+    loss, dl = _softmax_xent(
+        logits.reshape(b * s, v), targets.reshape(b * s),
+        use_pallas=use_pallas,
+    )
+    return (loss, dl.reshape(b, s, v))
+
+
+# ---------------------------------------------------------------------------
+# Expert-Partition: MoE router + per-expert FFN.
+# The router is replicated (tiny); experts rotate. The engine computes the
+# top-1 assignment from `probs`, builds per-expert gate vectors
+# (prob if routed-to-this-expert else 0) and calls moe_fwd once per
+# (expert visit). Sum over experts of the partials == full MoE output.
+# ---------------------------------------------------------------------------
+
+def router_fwd(x, wr, *, use_pallas=False):
+    """x [b,S,H], wr [H,E] -> (probs [b,S,E],)."""
+    logits = _matmul(x, wr, use_pallas=use_pallas)
+    return (jax.nn.softmax(logits, axis=-1),)
+
+
+def router_bwd(x, wr, dprobs, *, use_pallas=False):
+    f = lambda x_, w_: router_fwd(x_, w_, use_pallas=use_pallas)[0]
+    _, vjp = jax.vjp(f, x, wr)
+    return tuple(vjp(dprobs))
+
+
+def moe_fwd(x, gates, w1, b1, w2, *, use_pallas=False):
+    """One expert on a gated token set.
+
+    x [b,S,H], gates [b,S] (top-1 prob, 0 for tokens routed elsewhere),
+    w1 [H,Fe], b1 [Fe], w2 [Fe,H] -> (partial [b,S,H],).
+
+    Dense-masked formulation: every token runs through the expert and the
+    gate zeroes non-routed tokens. This keeps shapes static for AOT (the
+    paper's all-to-all shuffles tokens instead; the FLOP difference is
+    charged in the perf model, see perfmodel/compute.rs).
+    """
+    h = _matmul(x, w1, b1, activation="gelu", use_pallas=use_pallas)
+    y = _matmul(h, w2, use_pallas=use_pallas)
+    return (y * gates[:, :, None],)
+
+
+def moe_bwd(x, gates, w1, b1, w2, dpartial, *, use_pallas=False):
+    """-> (dx, dgates, dw1, db1, dw2)."""
+    f = lambda x_, g_, w1_, b1_, w2_: moe_fwd(
+        x_, g_, w1_, b1_, w2_, use_pallas=use_pallas
+    )[0]
+    _, vjp = jax.vjp(f, x, gates, w1, b1, w2)
+    return tuple(vjp(dpartial))
+
+
+# ---------------------------------------------------------------------------
+# Monolithic reference model (tests only, never AOT'd): a full GPT forward +
+# loss through jax.grad, used to validate that the decomposed op chain and
+# the rust engine composition produce the true gradient.
+# ---------------------------------------------------------------------------
+
+def full_model_loss(params, ids, targets, *, heads):
+    """Dense GPT-2 forward + mean xent, params as a pytree dict."""
+    x = params["wte"][ids] + params["wpe"][None, :, :]
+    for lyr in params["layers"]:
+        a = ref.layernorm(x, lyr["ln1_g"], lyr["ln1_b"])
+        part = attn_fwd(a, lyr["wqkv"], lyr["bqkv"], lyr["wo"], nh_p=heads)[0]
+        x = x + part + lyr["bo"]
+        m = ref.layernorm(x, lyr["ln2_g"], lyr["ln2_b"])
+        part = mlp_fwd(m, lyr["w1"], lyr["b1"], lyr["w2"])[0]
+        x = x + part + lyr["b2"]
+    xf = ref.layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = xf @ params["wlm"]
+    loss, _ = ref.softmax_xent(
+        logits.reshape(-1, logits.shape[-1]), targets.reshape(-1)
+    )
+    return loss

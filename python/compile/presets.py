@@ -1,0 +1,140 @@
+"""Model presets shared between the compile path and the rust coordinator.
+
+Table-2 presets mirror the paper's evaluation configs (GPT2 .. GPT2-neo);
+they are used by the rust side in *virtual* (accounting-only) mode and never
+need artifacts. Runtime presets (`tiny`, `tiny-moe`, `e2e-small`,
+`e2e-100m`) are small enough to execute for real on the CPU PJRT client and
+get HLO artifacts emitted by `aot.py`.
+
+The rust side has a mirrored copy in `rust/src/config/presets.rs`; the
+`test_presets_match_rust` test keeps the two in sync.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """GPT-style transformer hyperparameters (paper Table 2 schema)."""
+
+    name: str
+    vocab: int
+    hidden: int
+    heads: int
+    layers: int
+    seq: int
+    ffn: int  # MLP inner dim (paper's "Embedding Size" column = 4*hidden)
+    # Mixture-of-experts: 0 = dense MLP; otherwise number of experts and the
+    # per-expert ffn dim (paper Fig 7 rotates one expert per worker).
+    experts: int = 0
+    expert_ffn: int = 0
+    # Whether aot.py emits runtime artifacts for this preset.
+    artifacts: bool = False
+    # (batch, partition) combos the artifact set must cover. `batch` is the
+    # *local* batch (per-worker activation shard), `p` the weight-partition
+    # factor N. p=1 entries are the full-weight ops used by DDP/FSDP/single.
+    combos: tuple = ()
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def params_dense(self) -> int:
+        """Parameter count (dense variant), untied LM head."""
+        emb = self.vocab * self.hidden + self.seq * self.hidden
+        per_layer = (
+            # attn: wqkv [H,3H] + bqkv [3H] + wo [H,H] + bo [H]
+            3 * self.hidden * self.hidden
+            + 3 * self.hidden
+            + self.hidden * self.hidden
+            + self.hidden
+            # mlp: w1 [H,F] + b1 [F] + w2 [F,H] + b2 [H]
+            + 2 * self.hidden * self.ffn
+            + self.ffn
+            + self.hidden
+            # ln1, ln2
+            + 4 * self.hidden
+        )
+        lm = self.hidden * self.vocab
+        lnf = 2 * self.hidden
+        return emb + self.layers * per_layer + lm + lnf
+
+
+def _t2(name, vocab, hidden, heads, layers, seq, ffn) -> ModelConfig:
+    return ModelConfig(
+        name=name, vocab=vocab, hidden=hidden, heads=heads, layers=layers,
+        seq=seq, ffn=ffn,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 2 (virtual-mode only: memory/capacity/throughput figures).
+# ---------------------------------------------------------------------------
+TABLE2: List[ModelConfig] = [
+    _t2("gpt2-117m", 50257, 768, 16, 12, 512, 3072),
+    _t2("bert-large-340m", 30522, 1024, 16, 24, 512, 4096),
+    _t2("gpt2-500m", 50257, 1280, 16, 20, 1024, 5120),
+    _t2("gpt2-large-774m", 50257, 1280, 16, 32, 1024, 5120),
+    _t2("gpt2-xl-1.5b", 50257, 1600, 16, 48, 1024, 6400),
+    _t2("gpt2-neo-2.7b", 50257, 2560, 16, 32, 1024, 10240),
+]
+
+# ---------------------------------------------------------------------------
+# Runtime presets: executed for real on the CPU PJRT client.
+#
+# combos: (local_batch, partition) pairs. For a tested global batch B and
+# worker count N we need:
+#   RTP / FSDP / DDP: (B/N, p) with p in {1, N}  (p=N shard ops for RTP,
+#   p=1 full ops for DDP/FSDP compute after allgather)
+#   Megatron-TP: (B, N) — full batch on sharded weights.
+#   single oracle: (B, 1).
+# ---------------------------------------------------------------------------
+RUNTIME: Dict[str, ModelConfig] = {
+    # CI workhorse: global batch 4, N in {1, 2, 4}.
+    "tiny": ModelConfig(
+        name="tiny", vocab=128, hidden=32, heads=4, layers=2, seq=16,
+        ffn=128, artifacts=True,
+        combos=(
+            (4, 1), (2, 1), (1, 1),          # single/DDP/FSDP at N=1,2,4
+            (2, 2), (1, 4),                  # RTP shard ops at N=2,4
+            (4, 2), (4, 4),                  # Megatron-TP (full batch, sharded)
+        ),
+    ),
+    # MoE variant of tiny: 4 experts, expert-parallel over N=2,4.
+    "tiny-moe": ModelConfig(
+        name="tiny-moe", vocab=128, hidden=32, heads=4, layers=2, seq=16,
+        ffn=128, experts=4, expert_ffn=128, artifacts=True,
+        combos=((4, 1), (2, 1), (1, 1), (2, 2), (1, 4)),
+    ),
+    # End-to-end training demo (~34M params): global batch 4, N=2.
+    "e2e-small": ModelConfig(
+        name="e2e-small", vocab=8192, hidden=512, heads=8, layers=8, seq=64,
+        ffn=2048, artifacts=True,
+        combos=((4, 1), (2, 1), (2, 2)),
+    ),
+    # The required ~100M-param end-to-end run (~110M): global batch 2, N=2.
+    "e2e-100m": ModelConfig(
+        name="e2e-100m", vocab=16384, hidden=768, heads=12, layers=12,
+        seq=64, ffn=3072, artifacts=True,
+        combos=((2, 1), (1, 1), (1, 2)),
+    ),
+}
+
+PRESETS: Dict[str, ModelConfig] = {**{m.name: m for m in TABLE2}, **RUNTIME}
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise SystemExit(
+            f"unknown preset {name!r}; available: {', '.join(sorted(PRESETS))}"
+        )
+
+
+def as_dict(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["combos"] = [list(c) for c in cfg.combos]
+    d["params_dense"] = cfg.params_dense()
+    return d

@@ -1,0 +1,74 @@
+"""AOT manifest sanity: the artifact contract the rust runtime loads."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, presets
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest(preset, pallas=False):
+    name = "manifest_pallas.json" if pallas else "manifest.json"
+    path = os.path.join(ART, preset, name)
+    if not os.path.exists(path):
+        pytest.skip(f"{path} not built (run `make artifacts`)")
+    with open(path) as fh:
+        return json.load(fh)
+
+
+@pytest.mark.parametrize("preset", ["tiny", "tiny-moe", "e2e-small"])
+def test_manifest_files_exist_and_keys_unique(preset):
+    man = _manifest(preset)
+    keys = [e["key"] for e in man["entries"]]
+    assert len(keys) == len(set(keys))
+    for e in man["entries"]:
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), e["file"]
+        text = open(path).read()
+        assert text.startswith("HloModule"), e["file"]
+
+
+def test_manifest_covers_all_combos():
+    man = _manifest("tiny")
+    cfg = presets.get("tiny")
+    have = {(e["op"], e["b"], e["p"]) for e in man["entries"]}
+    for (b, p) in cfg.combos:
+        for op in ["emb_fwd", "emb_bwd", "attn_fwd", "attn_bwd",
+                   "mlp_fwd", "mlp_bwd", "lmhead_fwd", "lmhead_bwd",
+                   "ln_fwd", "ln_bwd"]:
+            assert (op, b, p) in have, (op, b, p)
+        assert ("xent", b, 1) in have
+
+
+def test_manifest_shapes_match_shape_plan():
+    man = _manifest("tiny")
+    cfg = presets.get("tiny")
+    planned = {
+        key: [list(a.shape) for a in args]
+        for key, _, args in aot.op_instances(cfg, use_pallas=False)
+    }
+    for e in man["entries"]:
+        assert e["key"] in planned, e["key"]
+        assert [sh for _, sh in e["inputs"]] == planned[e["key"]], e["key"]
+
+
+def test_moe_manifest_has_expert_ops():
+    man = _manifest("tiny-moe")
+    ops = {e["op"] for e in man["entries"]}
+    assert {"router_fwd", "router_bwd", "moe_fwd", "moe_bwd"} <= ops
+
+
+def test_pallas_manifest_marked():
+    man = _manifest("tiny", pallas=True)
+    assert all(e["pallas"] for e in man["entries"])
+    assert all(e["key"].endswith("__pallas") for e in man["entries"])
+
+
+def test_config_embedded_in_manifest():
+    man = _manifest("tiny")
+    cfg = man["config"]
+    assert cfg["hidden"] % cfg["heads"] == 0
+    assert cfg["params_dense"] == presets.get("tiny").params_dense()

@@ -1,0 +1,85 @@
+"""Hypothesis sweeps: Pallas kernels vs ref over random shapes/values.
+
+The brief for Layer 1: hypothesis sweeps the kernels' shape space and
+asserts allclose against ref.py. Examples counts are tuned for the 1-core
+CI box (interpret-mode pallas is slow); the shape strategies still cover
+the ragged/non-multiple cases that break naive BlockSpec code.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, layernorm, matmul, ref, softmax_xent
+
+COMMON = dict(deadline=None, max_examples=20, derandomize=True)
+
+
+def _arr(r, *shape):
+    return jnp.array(r.randn(*shape).astype(np.float32))
+
+
+@settings(**COMMON)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    n=st.integers(1, 80),
+    bias=st.booleans(),
+    act=st.sampled_from(["none", "gelu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_sweep(m, k, n, bias, act, seed):
+    r = np.random.RandomState(seed)
+    x, w = _arr(r, m, k), _arr(r, k, n)
+    b = _arr(r, n) if bias else None
+    got = matmul.matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(**COMMON)
+@given(
+    b=st.integers(1, 3),
+    nh=st.integers(1, 4),
+    s=st.integers(1, 48),
+    hd=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_sweep(b, nh, s, hd, seed):
+    r = np.random.RandomState(seed)
+    q, k, v = _arr(r, b, nh, s, hd), _arr(r, b, nh, s, hd), _arr(r, b, nh, s, hd)
+    got = attention.attention(q, k, v)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(**COMMON)
+@given(
+    rows=st.integers(1, 300),
+    h=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_layernorm_sweep(rows, h, seed):
+    r = np.random.RandomState(seed)
+    x, g, b = _arr(r, rows, h), _arr(r, h), _arr(r, h)
+    np.testing.assert_allclose(
+        layernorm.layernorm(x, g, b), ref.layernorm(x, g, b),
+        rtol=3e-4, atol=3e-4,
+    )
+
+
+@settings(**COMMON)
+@given(
+    t=st.integers(1, 120),
+    v=st.integers(2, 300),
+    scale=st.floats(0.1, 8.0),
+    seed=st.integers(0, 2**16),
+)
+def test_xent_sweep(t, v, scale, seed):
+    r = np.random.RandomState(seed)
+    lg = jnp.array((r.randn(t, v) * scale).astype(np.float32))
+    tg = jnp.array(r.randint(0, v, size=t).astype(np.int32))
+    l1, d1 = softmax_xent.softmax_xent(lg, tg)
+    l2, d2 = ref.softmax_xent(lg, tg)
+    np.testing.assert_allclose(l1, l2, rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(d1, d2, rtol=2e-4, atol=1e-5)

@@ -1,0 +1,108 @@
+"""Kernel vs ref allclose — the CORE Layer-1 correctness signal."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import attention, layernorm, matmul, ref, softmax_xent
+
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def _rng(seed=0):
+    return np.random.RandomState(seed)
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(1, 1, 1), (4, 8, 16), (130, 70, 200), (256, 512, 384), (33, 5, 7)]
+)
+@pytest.mark.parametrize("bias", [True, False])
+@pytest.mark.parametrize("act", ["none", "gelu"])
+def test_matmul(m, k, n, bias, act):
+    r = _rng(m * 1000 + k * 10 + n)
+    x = jnp.array(r.randn(m, k).astype(np.float32))
+    w = jnp.array(r.randn(k, n).astype(np.float32))
+    b = jnp.array(r.randn(n).astype(np.float32)) if bias else None
+    got = matmul.matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_batched_input():
+    r = _rng(7)
+    x = jnp.array(r.randn(2, 5, 16).astype(np.float32))
+    w = jnp.array(r.randn(16, 24).astype(np.float32))
+    got = matmul.matmul_bias_act(x, w)
+    np.testing.assert_allclose(got, ref.matmul_bias_act(x, w), rtol=RTOL, atol=ATOL)
+    assert got.shape == (2, 5, 24)
+
+
+@pytest.mark.parametrize(
+    "b,nh,s,hd", [(1, 1, 4, 8), (2, 4, 16, 8), (1, 2, 130, 16), (2, 2, 33, 4)]
+)
+def test_attention(b, nh, s, hd):
+    r = _rng(b + nh + s + hd)
+    q, k, v = (
+        jnp.array(r.randn(b, nh, s, hd).astype(np.float32)) for _ in range(3)
+    )
+    got = attention.attention(q, k, v)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_attention_is_causal():
+    """Future kv positions must not influence the output."""
+    r = _rng(3)
+    b, nh, s, hd = 1, 2, 12, 8
+    q, k, v = (
+        jnp.array(r.randn(b, nh, s, hd).astype(np.float32)) for _ in range(3)
+    )
+    base = attention.attention(q, k, v)
+    k2 = k.at[:, :, -1, :].set(99.0)
+    v2 = v.at[:, :, -1, :].set(-99.0)
+    pert = attention.attention(q, k2, v2)
+    # all rows except the last are unchanged
+    np.testing.assert_allclose(base[:, :, :-1], pert[:, :, :-1], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(3, 16, 32), (7, 5), (300, 64), (1, 1)])
+def test_layernorm(shape):
+    r = _rng(sum(shape))
+    x = jnp.array(r.randn(*shape).astype(np.float32))
+    g = jnp.array(r.randn(shape[-1]).astype(np.float32))
+    b = jnp.array(r.randn(shape[-1]).astype(np.float32))
+    np.testing.assert_allclose(
+        layernorm.layernorm(x, g, b), ref.layernorm(x, g, b), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize("t,v", [(1, 2), (8, 16), (33, 128), (260, 512)])
+def test_softmax_xent(t, v):
+    r = _rng(t + v)
+    lg = jnp.array(r.randn(t, v).astype(np.float32) * 3)
+    tg = jnp.array(r.randint(0, v, size=t).astype(np.int32))
+    l1, d1 = softmax_xent.softmax_xent(lg, tg)
+    l2, d2 = ref.softmax_xent(lg, tg)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(d1, d2, rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_xent_grad_is_probs_minus_onehot():
+    """dlogits rows must sum to ~0 (softmax minus onehot property)."""
+    r = _rng(11)
+    lg = jnp.array(r.randn(9, 33).astype(np.float32))
+    tg = jnp.array(r.randint(0, 33, size=9).astype(np.int32))
+    _, d = softmax_xent.softmax_xent(lg, tg)
+    np.testing.assert_allclose(np.asarray(d).sum(axis=1), 0.0, atol=1e-6)
+
+
+def test_reports_have_vmem_budget():
+    """Every kernel's block working set must fit VMEM (perf deliverable)."""
+    reps = [
+        matmul.report(2048, 2560, 640),
+        attention.report(1024, 160),
+        layernorm.report(2048, 2560),
+        softmax_xent.report(2048, 50257),
+    ]
+    for rep in reps:
+        assert rep["vmem_frac"] < 1.0, rep

@@ -1,0 +1,271 @@
+"""Layer-2 op-contract tests.
+
+Two families:
+  1. Shard composition: concat/sum of the partition-op outputs equals the
+     full (P=1) op — the algebraic fact the RTP rotation relies on.
+  2. Backward-chain: composing the *_bwd ops the way the rust engine does
+     reproduces jax.grad of the monolithic model — the op contract the
+     coordinator is written against.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+RT = dict(rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# param helpers: canonical full layouts + the shard slicing rule shared with
+# rust/src/model/partition.rs
+# ---------------------------------------------------------------------------
+
+def make_params(r, v, h, nh, s, f, layers):
+    def a(*shape):
+        return jnp.array((r.randn(*shape) * 0.05).astype(np.float32))
+
+    return {
+        "wte": a(v, h),
+        "wpe": a(s, h),
+        "layers": [
+            {
+                "ln1_g": jnp.ones(h), "ln1_b": jnp.zeros(h),
+                "wqkv": a(h, 3 * h), "bqkv": a(3 * h),
+                "wo": a(h, h), "bo": a(h),
+                "ln2_g": jnp.ones(h), "ln2_b": jnp.zeros(h),
+                "w1": a(h, f), "b1": a(f), "w2": a(f, h), "b2": a(h),
+            }
+            for _ in range(layers)
+        ],
+        "lnf_g": jnp.ones(h), "lnf_b": jnp.zeros(h),
+        "wlm": a(h, v),
+    }
+
+
+def shard_attn(lyr, h, nh, n, s):
+    """Head-shard s of n: wqkv [H,3Hp], bqkv [3Hp], wo [Hp,H]."""
+    hd = h // nh
+    nh_p = nh // n
+    wq = lyr["wqkv"].reshape(h, 3, nh, hd)[:, :, s * nh_p:(s + 1) * nh_p, :]
+    bq = lyr["bqkv"].reshape(3, nh, hd)[:, s * nh_p:(s + 1) * nh_p, :]
+    wo = lyr["wo"].reshape(nh, hd, h)[s * nh_p:(s + 1) * nh_p]
+    hp = h // n
+    return (
+        wq.reshape(h, 3 * hp), bq.reshape(3 * hp), wo.reshape(hp, h), nh_p
+    )
+
+
+def shard_mlp(lyr, f, n, s):
+    fp = f // n
+    return (
+        lyr["w1"][:, s * fp:(s + 1) * fp],
+        lyr["b1"][s * fp:(s + 1) * fp],
+        lyr["w2"][s * fp:(s + 1) * fp, :],
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1. shard composition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_attn_head_partition_sums_to_full(n):
+    r = np.random.RandomState(0)
+    v, h, nh, s, f = 32, 16, 4, 8, 64
+    p = make_params(r, v, h, nh, s, f, 1)
+    lyr = p["layers"][0]
+    x = jnp.array(r.randn(2, s, h).astype(np.float32))
+    full = model.attn_fwd(x, lyr["wqkv"], lyr["bqkv"], lyr["wo"], nh_p=nh)[0]
+    acc = jnp.zeros_like(full)
+    for sh in range(n):
+        wq, bq, wo, nh_p = shard_attn(lyr, h, nh, n, sh)
+        acc = acc + model.attn_fwd(x, wq, bq, wo, nh_p=nh_p)[0]
+    np.testing.assert_allclose(acc, full, **RT)
+
+
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_mlp_partition_sums_to_full(n):
+    r = np.random.RandomState(1)
+    v, h, nh, s, f = 32, 16, 4, 8, 64
+    p = make_params(r, v, h, nh, s, f, 1)
+    lyr = p["layers"][0]
+    x = jnp.array(r.randn(2, s, h).astype(np.float32))
+    full = model.mlp_fwd(x, lyr["w1"], lyr["b1"], lyr["w2"])[0]
+    acc = jnp.zeros_like(full)
+    for sh in range(n):
+        w1, b1, w2 = shard_mlp(lyr, f, n, sh)
+        acc = acc + model.mlp_fwd(x, w1, b1, w2)[0]
+    np.testing.assert_allclose(acc, full, **RT)
+
+
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_lmhead_partition_concats_to_full(n):
+    r = np.random.RandomState(2)
+    v, h = 32, 16
+    wlm = jnp.array(r.randn(h, v).astype(np.float32))
+    x = jnp.array(r.randn(2, 8, h).astype(np.float32))
+    full = model.lmhead_fwd(x, wlm)[0]
+    vp = v // n
+    slices = [
+        model.lmhead_fwd(x, wlm[:, s * vp:(s + 1) * vp])[0] for s in range(n)
+    ]
+    np.testing.assert_allclose(jnp.concatenate(slices, axis=-1), full, **RT)
+
+
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_emb_partition_concats_to_full(n):
+    r = np.random.RandomState(3)
+    v, h, s = 32, 16, 8
+    wte = jnp.array(r.randn(v, h).astype(np.float32))
+    wpe = jnp.array(r.randn(s, h).astype(np.float32))
+    ids = jnp.array(r.randint(0, v, size=(2, s)).astype(np.int32))
+    full = model.emb_fwd(ids, wte, wpe)[0]
+    hp = h // n
+    slices = [
+        model.emb_fwd(ids, wte[:, s_ * hp:(s_ + 1) * hp],
+                      wpe[:, s_ * hp:(s_ + 1) * hp])[0]
+        for s_ in range(n)
+    ]
+    np.testing.assert_allclose(jnp.concatenate(slices, axis=-1), full, **RT)
+
+
+def test_moe_expert_partition_sums_to_routed():
+    """Sum over experts of gated partials == route-then-compute reference."""
+    r = np.random.RandomState(4)
+    b, s, h, e, fe = 2, 8, 16, 4, 32
+    x = jnp.array(r.randn(b, s, h).astype(np.float32))
+    wr = jnp.array(r.randn(h, e).astype(np.float32))
+    experts = [
+        (
+            jnp.array(r.randn(h, fe).astype(np.float32)),
+            jnp.array(r.randn(fe).astype(np.float32)),
+            jnp.array(r.randn(fe, h).astype(np.float32)),
+        )
+        for _ in range(e)
+    ]
+    probs = model.router_fwd(x, wr)[0]
+    top = jnp.argmax(probs, axis=-1)  # [b,s]
+    gate = jnp.take_along_axis(probs, top[..., None], axis=-1)[..., 0]
+
+    acc = jnp.zeros_like(x)
+    for ei, (w1, b1, w2) in enumerate(experts):
+        gates_e = jnp.where(top == ei, gate, 0.0)
+        acc = acc + model.moe_fwd(x, gates_e, w1, b1, w2)[0]
+
+    # reference: per-token dispatch
+    want = np.zeros((b, s, h), np.float32)
+    xn = np.asarray(x)
+    for bi in range(b):
+        for si in range(s):
+            ei = int(top[bi, si])
+            w1, b1, w2 = experts[ei]
+            hdn = ref.gelu(jnp.array(xn[bi, si]) @ w1 + b1)
+            want[bi, si] = np.asarray(hdn @ w2) * float(gate[bi, si])
+    np.testing.assert_allclose(acc, want, **RT)
+
+
+# ---------------------------------------------------------------------------
+# 2. backward chain == jax.grad of the monolithic model
+# ---------------------------------------------------------------------------
+
+def mini_engine_grads(p, ids, targets, nh):
+    """Compose the AOT ops exactly the way the rust single-engine does."""
+    grads = {"layers": [dict() for _ in p["layers"]]}
+    x = model.emb_fwd(ids, p["wte"], p["wpe"])[0]
+    saves = []
+    for lyr in p["layers"]:
+        a = model.ln_fwd(x, lyr["ln1_g"], lyr["ln1_b"])[0]
+        part = model.attn_fwd(a, lyr["wqkv"], lyr["bqkv"], lyr["wo"],
+                              nh_p=nh)[0]
+        x1 = x + part + lyr["bo"]
+        m = model.ln_fwd(x1, lyr["ln2_g"], lyr["ln2_b"])[0]
+        part2 = model.mlp_fwd(m, lyr["w1"], lyr["b1"], lyr["w2"])[0]
+        x2 = x1 + part2 + lyr["b2"]
+        saves.append((x, a, x1, m))
+        x = x2
+    xf = model.ln_fwd(x, p["lnf_g"], p["lnf_b"])[0]
+    logits = model.lmhead_fwd(xf, p["wlm"])[0]
+    loss, dlogits = model.xent(logits, targets)
+
+    dxf, grads["wlm"] = model.lmhead_bwd(xf, p["wlm"], dlogits)
+    dx, grads["lnf_g"], grads["lnf_b"] = model.ln_bwd(x, p["lnf_g"], dxf
+    )
+    for li in reversed(range(len(p["layers"]))):
+        lyr = p["layers"][li]
+        g = grads["layers"][li]
+        x0, a, x1, m = saves[li]
+        g["b2"] = jnp.sum(dx, axis=(0, 1))
+        dm, g["w1"], g["b1"], g["w2"] = model.mlp_bwd(
+            m, lyr["w1"], lyr["b1"], lyr["w2"], dx
+        )
+        dx1_ln, g["ln2_g"], g["ln2_b"] = model.ln_bwd(x1, lyr["ln2_g"], dm
+        )
+        dx1 = dx + dx1_ln
+        g["bo"] = jnp.sum(dx1, axis=(0, 1))
+        da, g["wqkv"], g["bqkv"], g["wo"] = model.attn_bwd(
+            a, lyr["wqkv"], lyr["bqkv"], lyr["wo"], dx1, nh_p=nh
+        )
+        dx_ln, g["ln1_g"], g["ln1_b"] = model.ln_bwd(x0, lyr["ln1_g"], da
+        )
+        dx = dx1 + dx_ln
+    grads["wte"], grads["wpe"] = model.emb_bwd(ids, dx, vocab=p["wte"].shape[0])
+    return loss, grads
+
+
+def test_bwd_chain_matches_jax_grad():
+    r = np.random.RandomState(5)
+    v, h, nh, s, f, L, b = 32, 16, 2, 8, 32, 2, 2
+    p = make_params(r, v, h, nh, s, f, L)
+    ids = jnp.array(r.randint(0, v, size=(b, s)).astype(np.int32))
+    tg = jnp.array(r.randint(0, v, size=(b, s)).astype(np.int32))
+
+    loss, got = mini_engine_grads(p, ids, tg, nh)
+    want_loss = model.full_model_loss(p, ids, tg, heads=nh)
+    want = jax.grad(model.full_model_loss)(p, ids, tg, heads=nh)
+
+    np.testing.assert_allclose(loss, want_loss, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got["wlm"], want["wlm"], **RT)
+    np.testing.assert_allclose(got["wte"], want["wte"], **RT)
+    np.testing.assert_allclose(got["wpe"], want["wpe"], **RT)
+    for li in range(L):
+        for key in ["wqkv", "bqkv", "wo", "bo", "w1", "b1", "w2", "b2",
+                    "ln1_g", "ln1_b", "ln2_g", "ln2_b"]:
+            np.testing.assert_allclose(
+                got["layers"][li][key], want["layers"][li][key],
+                err_msg=f"layer {li} {key}", **RT
+            )
+
+
+def test_pallas_ops_match_jnp_ops():
+    """Forward AND backward parity of the pallas-dispatch path."""
+    r = np.random.RandomState(6)
+    h, nh, s, f, b = 16, 2, 8, 32, 2
+    x = jnp.array(r.randn(b, s, h).astype(np.float32))
+    dy = jnp.array(r.randn(b, s, h).astype(np.float32))
+    p = make_params(r, 32, h, nh, s, f, 1)
+    lyr = p["layers"][0]
+
+    f_j = model.mlp_fwd(x, lyr["w1"], lyr["b1"], lyr["w2"])[0]
+    f_p = model.mlp_fwd(x, lyr["w1"], lyr["b1"], lyr["w2"], use_pallas=True)[0]
+    np.testing.assert_allclose(f_p, f_j, **RT)
+
+    b_j = model.mlp_bwd(x, lyr["w1"], lyr["b1"], lyr["w2"], dy)
+    b_p = model.mlp_bwd(x, lyr["w1"], lyr["b1"], lyr["w2"], dy,
+                        use_pallas=True)
+    for gj, gp in zip(b_j, b_p):
+        np.testing.assert_allclose(gp, gj, **RT)
+
+    a_j = model.attn_fwd(x, lyr["wqkv"], lyr["bqkv"], lyr["wo"], nh_p=nh)[0]
+    a_p = model.attn_fwd(x, lyr["wqkv"], lyr["bqkv"], lyr["wo"], nh_p=nh,
+                         use_pallas=True)[0]
+    np.testing.assert_allclose(a_p, a_j, **RT)
+
+    ab_j = model.attn_bwd(x, lyr["wqkv"], lyr["bqkv"], lyr["wo"], dy, nh_p=nh)
+    ab_p = model.attn_bwd(x, lyr["wqkv"], lyr["bqkv"], lyr["wo"], dy,
+                          nh_p=nh, use_pallas=True)
+    for gj, gp in zip(ab_j, ab_p):
+        np.testing.assert_allclose(gp, gj, **RT)

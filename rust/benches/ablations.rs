@@ -1,0 +1,115 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   1. RTP out-of-place §3.4.4 buffer recycling (on/off) — peak memory;
+//!   2. FSDP unit granularity (per-layer vs whole-model) — peak memory;
+//!   3. worker-count scaling N ∈ {2,4,8,16} — RTP per-worker peak and
+//!      throughput (the paper's "near-linear scalability" claim);
+//!   4. in-place vs out-of-place across interconnects (overlap value).
+
+use rtp::bench_util::Table;
+use rtp::config::Strategy;
+use rtp::parallel::fsdp::Granularity;
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use rtp::perfmodel::{a100_nvlink, simulate, v100_pcie, SimSpec};
+use rtp::tensor::IntTensor;
+use rtp::util::bytes::human;
+
+const PRESET: &str = "gpt2-500m";
+
+fn peak_with(opts: EngineOpts, batch: usize) -> u64 {
+    let cfg = opts.cfg().unwrap();
+    let mut e = build_engine(&opts).unwrap();
+    let b = Batch {
+        ids: IntTensor::zeros(&[batch, cfg.seq]),
+        targets: IntTensor::zeros(&[batch, cfg.seq]),
+    };
+    e.step(&b).unwrap();
+    e.ctx().cluster.max_peak()
+}
+
+fn main() {
+    // 1. recycling
+    let mut t = Table::new(
+        "ablation 1 — RTP-oop §3.4.4 buffer recycling (peak/worker, N=8, batch 8)",
+        &["recycle", "peak/worker", "delta"],
+    );
+    let on = peak_with(
+        EngineOpts::new(PRESET, Strategy::RtpOutOfPlace, 8, 8)
+            .exec(ExecKind::Virtual)
+            .rtp_recycle(true),
+        8,
+    );
+    let off = peak_with(
+        EngineOpts::new(PRESET, Strategy::RtpOutOfPlace, 8, 8)
+            .exec(ExecKind::Virtual)
+            .rtp_recycle(false),
+        8,
+    );
+    t.row(vec!["on".into(), human(on), "—".into()]);
+    t.row(vec!["off".into(), human(off), format!("+{}", human(off - on))]);
+    t.print();
+    t.write_csv("ablation_recycle").unwrap();
+
+    // 2. fsdp granularity
+    let mut t = Table::new(
+        "ablation 2 — FSDP unit granularity (peak/worker, N=8, batch 8)",
+        &["granularity", "peak/worker"],
+    );
+    for (name, g) in [("per-layer", Granularity::Layer), ("whole-model", Granularity::Model)] {
+        let p = peak_with(
+            EngineOpts::new(PRESET, Strategy::Fsdp, 8, 8)
+                .exec(ExecKind::Virtual)
+                .fsdp_granularity(g),
+            8,
+        );
+        t.row(vec![name.into(), human(p)]);
+    }
+    t.print();
+    t.write_csv("ablation_fsdp_granularity").unwrap();
+
+    // 3. N-scaling (memory near-linear, throughput overhead)
+    let mut t = Table::new(
+        "ablation 3 — RTP scaling with N (batch/gpu = 1)",
+        &["N", "peak/worker", "ideal/N", "wps", "wps vs ddp"],
+    );
+    for n in [2usize, 4, 8, 16] {
+        let mut spec = SimSpec::new(PRESET, Strategy::RtpInplace, n, n, a100_nvlink());
+        spec.enforce_capacity = false;
+        let r = simulate(&spec).unwrap();
+        let mut dspec = spec.clone();
+        dspec.strategy = Strategy::Ddp;
+        let d = simulate(&dspec).unwrap();
+        let cfg = rtp::config::presets::get(PRESET).unwrap();
+        let ideal = (n as u64 * cfg.activation_bytes_per_sample()
+            + 2 * cfg.weight_bytes())
+            / n as u64;
+        t.row(vec![
+            n.to_string(),
+            human(r.peak_per_worker),
+            human(ideal),
+            format!("{:.0}", r.wps),
+            format!("{:+.1}%", 100.0 * (r.wps / d.wps - 1.0)),
+        ]);
+    }
+    t.print();
+    t.write_csv("ablation_n_scaling").unwrap();
+
+    // 4. overlap value by interconnect
+    let mut t = Table::new(
+        "ablation 4 — in-place vs out-of-place step time (N=8, batch 8)",
+        &["hardware", "rtp-in", "rtp-out", "overlap speedup"],
+    );
+    for hw in [a100_nvlink(), v100_pcie()] {
+        let i = simulate(&SimSpec::new(PRESET, Strategy::RtpInplace, 8, 8, hw.clone()))
+            .unwrap();
+        let o = simulate(&SimSpec::new(PRESET, Strategy::RtpOutOfPlace, 8, 8, hw.clone()))
+            .unwrap();
+        t.row(vec![
+            hw.name.clone(),
+            format!("{:.2} ms", i.step_time * 1e3),
+            format!("{:.2} ms", o.step_time * 1e3),
+            format!("{:.2}x", i.step_time / o.step_time),
+        ]);
+    }
+    t.print();
+    t.write_csv("ablation_overlap").unwrap();
+}

@@ -1,0 +1,78 @@
+//! Paper §3.4.2 — communication efficiency: the clockwise /
+//! counter-clockwise rotation executed (N-1) times must track one
+//! allgather of the same total bytes near-linearly once the message size
+//! leaves the latency regime (> 1 MB). Two measurements:
+//!
+//! 1. the α-β cost model (the NCCL substitute, both hardware presets);
+//! 2. REAL data movement through `comm::` on the host (our ring
+//!    implementation itself), timed with the mini-harness.
+
+use rtp::bench_util::{bench, Table};
+use rtp::comm::{self, LinkModel};
+use rtp::perfmodel::{a100_nvlink, v100_pcie};
+use rtp::util::rng::Rng;
+
+const N: usize = 8;
+
+fn model_table(link: &LinkModel) {
+    let mut t = Table::new(
+        &format!("§3.4.2 — (N-1)×rotation vs allgather, α-β model, {} (N={N})", link.name),
+        &["message", "rotation×(N-1)", "allgather", "ratio"],
+    );
+    let mut m: u64 = 1 << 10;
+    while m <= 64 << 20 {
+        let rot = (N - 1) as f64 * link.rotation_step(m / N as u64);
+        let ag = link.allgather(m, N);
+        t.row(vec![
+            rtp::util::bytes::human(m),
+            format!("{:.1} µs", rot * 1e6),
+            format!("{:.1} µs", ag * 1e6),
+            format!("{:.3}", rot / ag),
+        ]);
+        m *= 4;
+    }
+    t.print();
+    t.write_csv(&format!("comm_microbench_{}", link.name)).unwrap();
+}
+
+fn main() {
+    model_table(&a100_nvlink().link);
+    model_table(&v100_pcie().link);
+
+    // real host-side data movement: our ring primitives
+    let mut t = Table::new(
+        "real comm:: data movement (host, per call)",
+        &["elems/worker", "rotate_cw", "allgather", "allreduce", "reduce_scatter"],
+    );
+    let mut rng = Rng::new(9);
+    for elems in [1 << 10, 1 << 14, 1 << 18, 1 << 21] {
+        let bufs: Vec<Vec<f32>> = (0..N)
+            .map(|_| (0..elems).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let rot = bench(2, 10, || {
+            let mut b = bufs.clone();
+            comm::rotate_cw(&mut b);
+            std::hint::black_box(&b);
+        });
+        let ag = bench(2, 10, || {
+            std::hint::black_box(comm::allgather(&bufs));
+        });
+        let ar = bench(2, 10, || {
+            let mut b = bufs.clone();
+            comm::allreduce_sum(&mut b);
+            std::hint::black_box(&b);
+        });
+        let rs = bench(2, 10, || {
+            std::hint::black_box(comm::reduce_scatter(&bufs));
+        });
+        t.row(vec![
+            elems.to_string(),
+            format!("{:.1} µs", rot.median * 1e6),
+            format!("{:.1} µs", ag.median * 1e6),
+            format!("{:.1} µs", ar.median * 1e6),
+            format!("{:.1} µs", rs.median * 1e6),
+        ]);
+    }
+    t.print();
+    t.write_csv("comm_microbench_host").unwrap();
+}

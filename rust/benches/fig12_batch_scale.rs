@@ -1,0 +1,58 @@
+//! Paper Fig 12 (appendix A) — peak memory per GPU vs batch size:
+//! RTP scales linearly from the smallest base; DDP/FSDP start higher
+//! (replica / reconstruction overheads) and converge toward similar
+//! maximum batch sizes as activations dominate.
+
+use rtp::bench_util::Table;
+use rtp::config::Strategy;
+use rtp::perfmodel::{a100_nvlink, simulate, SimSpec};
+use rtp::util::bytes::human;
+
+const PRESET: &str = "gpt2-500m";
+const N: usize = 8;
+
+fn main() {
+    let strategies = [
+        Strategy::Ddp,
+        Strategy::Fsdp,
+        Strategy::RtpInplace,
+        Strategy::RtpOutOfPlace,
+    ];
+    let mut t = Table::new(
+        "Fig 12 — peak memory per GPU vs per-GPU batch (gpt2-500m, 8×A100)",
+        &["batch/gpu", "ddp", "fsdp", "rtp-in", "rtp-out"],
+    );
+    let mut batch = N;
+    while batch <= 1024 {
+        let mut cells = vec![(batch / N).to_string()];
+        for s in strategies {
+            let mut spec = SimSpec::new(PRESET, s, N, batch, a100_nvlink());
+            spec.enforce_capacity = true;
+            let r = simulate(&spec).unwrap();
+            cells.push(match r.oom {
+                Some(_) => "OOM".into(),
+                None => human(r.peak_per_worker),
+            });
+        }
+        t.row(cells);
+        batch *= 2;
+    }
+    t.print();
+    t.write_csv("fig12_batch_scale").unwrap();
+
+    // linearity check: RTP-inplace peak growth must be affine in batch
+    let peak = |b: usize| {
+        let mut spec = SimSpec::new(PRESET, Strategy::RtpInplace, N, b, a100_nvlink());
+        spec.enforce_capacity = false;
+        simulate(&spec).unwrap().peak_per_worker as f64
+    };
+    let (p1, p2, p4) = (peak(N), peak(2 * N), peak(4 * N));
+    let slope1 = p2 - p1;
+    let slope2 = (p4 - p2) / 2.0;
+    println!(
+        "RTP-inplace linearity: slope {:.1} MiB/sample vs {:.1} MiB/sample (ratio {:.3})",
+        slope1 / (1 << 20) as f64,
+        slope2 / (1 << 20) as f64,
+        slope2 / slope1
+    );
+}

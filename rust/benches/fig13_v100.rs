@@ -1,0 +1,10 @@
+//! Paper Fig 13 (appendix B) — GPT throughput on 8×V100-32GB over PCIe.
+//! The slow interconnect stresses overlap: in-place RTP's blocking
+//! rotations hurt most at small batch, out-of-place hides them; RTP
+//! overtakes FSDP at large batch ("perfect overlapping", appendix B).
+
+use rtp::perfmodel::{simulate::throughput_figure, v100_pcie};
+
+fn main() {
+    throughput_figure("gpt2-500m", v100_pcie(), "Fig 13", 8);
+}

@@ -1,0 +1,9 @@
+//! Paper Fig 14 (appendix B) — MoE GPT throughput on 8×V100/PCIe: the
+//! all-to-all-free rotation wins biggest where the interconnect is
+//! weakest.
+
+use rtp::perfmodel::{simulate::throughput_figure, v100_pcie};
+
+fn main() {
+    throughput_figure("gpt2-500m-moe", v100_pcie(), "Fig 14", 8);
+}

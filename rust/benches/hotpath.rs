@@ -1,0 +1,93 @@
+//! L3 hot-path profile (§Perf): real-mode step wall-clock per engine ×
+//! executor, with the PJRT runtime's internal breakdown (execute vs
+//! host<->literal conversion vs compile) — the numbers the EXPERIMENTS.md
+//! §Perf iteration log tracks.
+
+use rtp::bench_util::{bench, Table};
+use rtp::config::Strategy;
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use rtp::runtime::Exec;
+use rtp::util::rng::Rng;
+
+fn main() {
+    let preset = "tiny";
+    let cfg = rtp::config::presets::get(preset).unwrap();
+    let batch = Batch::synth(&cfg, 4, &mut Rng::new(1));
+
+    let mut t = Table::new(
+        "hot path — real-mode step wall-clock (tiny, global batch 4)",
+        &["engine", "exec", "median step", "p95", "steps/s"],
+    );
+    for (strategy, n) in [
+        (Strategy::Single, 1),
+        (Strategy::Ddp, 2),
+        (Strategy::Fsdp, 2),
+        (Strategy::RtpInplace, 2),
+        (Strategy::RtpInplace, 4),
+        (Strategy::RtpOutOfPlace, 4),
+    ] {
+        for exec in [ExecKind::Oracle, ExecKind::Pjrt] {
+            if exec == ExecKind::Pjrt
+                && !rtp::runtime::artifacts_root().join("tiny/manifest.json").exists()
+            {
+                continue;
+            }
+            let mut e =
+                build_engine(&EngineOpts::new(preset, strategy, n, 4).exec(exec))
+                    .unwrap();
+            // warm the executable cache before timing
+            e.step(&batch).unwrap();
+            let s = bench(1, 8, || {
+                e.zero_grads();
+                e.step(&batch).unwrap();
+            });
+            t.row(vec![
+                format!("{strategy}/N={n}"),
+                format!("{exec:?}"),
+                format!("{:.2} ms", s.median * 1e3),
+                format!("{:.2} ms", s.p95 * 1e3),
+                format!("{:.1}", 1.0 / s.median),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv("hotpath").unwrap();
+
+    // PJRT runtime breakdown on an RTP step
+    if rtp::runtime::artifacts_root().join("tiny/manifest.json").exists() {
+        let mut e = build_engine(
+            &EngineOpts::new(preset, Strategy::RtpInplace, 4, 4).exec(ExecKind::Pjrt),
+        )
+        .unwrap();
+        for _ in 0..5 {
+            e.zero_grads();
+            e.step(&batch).unwrap();
+        }
+        if let Exec::Pjrt(rt) = &e.ctx().exec {
+            let st = &rt.stats;
+            let mut b = Table::new(
+                "PJRT runtime breakdown (rtp-inplace N=4, 5 steps + warm)",
+                &["metric", "value"],
+            );
+            b.row(vec!["executions".into(), st.executions.to_string()]);
+            b.row(vec!["compilations".into(), st.compilations.to_string()]);
+            b.row(vec![
+                "execute time".into(),
+                format!("{:.1} ms", st.exec_seconds * 1e3),
+            ]);
+            b.row(vec![
+                "convert time".into(),
+                format!("{:.1} ms", st.convert_seconds * 1e3),
+            ]);
+            b.row(vec![
+                "convert share".into(),
+                format!(
+                    "{:.0}%",
+                    100.0 * st.convert_seconds / (st.exec_seconds + st.convert_seconds)
+                ),
+            ]);
+            b.print();
+            b.write_csv("hotpath_pjrt_breakdown").unwrap();
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Mini benchmark harness + table/figure renderers (criterion substitute —
+//! offline crate cache; DESIGN.md §2). Every `cargo bench` target prints
+//! the paper's rows/series as ASCII and writes a CSV next to it under
+//! `figures/`.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Time `f` with warmup; returns per-iteration stats in seconds.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    Summary::of(&samples)
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (w, c) in widths.iter_mut().zip(r) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Write the table as CSV under `figures/<name>.csv`.
+    pub fn write_csv(&self, name: &str) -> std::io::Result<PathBuf> {
+        let dir = figures_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+pub fn figures_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("RTP_FIGURES") {
+        return PathBuf::from(d);
+    }
+    let local = PathBuf::from("figures");
+    if local.exists() || std::fs::create_dir_all(&local).is_ok() {
+        return local;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("figures")
+}
+
+/// ASCII horizontal bar chart — the figure renderer (one bar per row).
+pub fn bar_chart(title: &str, rows: &[(String, f64)], unit: &str, width: usize) -> String {
+    let max = rows.iter().map(|(_, v)| *v).fold(0.0, f64::max).max(1e-12);
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("== {title} ==\n");
+    for (label, v) in rows {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{label:<label_w$} |{} {v:.3} {unit}\n",
+            "#".repeat(n)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_times() {
+        let s = bench(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean > 0.0);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn table_renders_and_aligns() {
+        let mut t = Table::new("test", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("== test =="));
+        assert!(r.contains("long-name"));
+    }
+
+    #[test]
+    #[should_panic(expected = "table arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let c = bar_chart(
+            "capacity",
+            &[("rtp".to_string(), 1.0), ("ddp".to_string(), 4.0)],
+            "GiB",
+            20,
+        );
+        assert!(c.contains("####################")); // full-width ddp bar
+        assert!(c.contains("#####")); // quarter rtp bar
+    }
+
+    #[test]
+    fn csv_written_to_figures() {
+        let dir = std::env::temp_dir().join("rtp-fig-test");
+        std::env::set_var("RTP_FIGURES", &dir);
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["1".into()]);
+        let p = t.write_csv("unit_test_table").unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a\n1\n");
+        std::env::remove_var("RTP_FIGURES");
+    }
+}

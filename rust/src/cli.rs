@@ -1,0 +1,128 @@
+//! Hand-rolled CLI argument parsing (the offline crate cache has no clap —
+//! DESIGN.md §2).
+//!
+//! Grammar: `rtp <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: BTreeSet<String>,
+}
+
+/// Switch names (no value) recognized by the parser.
+const SWITCHES: &[&str] = &[
+    "help", "quiet", "trace", "presets", "no-recycle", "no-capacity", "pallas",
+];
+
+impl Args {
+    pub fn parse<I: Iterator<Item = String>>(mut it: I) -> Result<Args> {
+        let mut a = Args::default();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if SWITCHES.contains(&name) {
+                    a.switches.insert(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    a.flags.insert(name.to_string(), v);
+                }
+            } else if a.subcommand.is_none() {
+                a.subcommand = Some(tok);
+            } else {
+                bail!("unexpected positional argument {tok:?}");
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a float, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Result<Args> {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse(&["train", "--preset", "tiny", "--steps", "50", "--quiet"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("preset"), Some("tiny"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 50);
+        assert!(a.switch("quiet"));
+        assert!(!a.switch("trace"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["train"]).unwrap();
+        assert_eq!(a.get_or("preset", "tiny"), "tiny");
+        assert_eq!(a.f32_or("lr", 1e-3).unwrap(), 1e-3);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&["train", "--steps"]).is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse(&["x", "--steps", "many"]).unwrap();
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn extra_positional_is_error() {
+        assert!(parse(&["a", "b"]).is_err());
+    }
+}

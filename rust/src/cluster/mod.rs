@@ -1,0 +1,123 @@
+//! The simulated worker ring — the substitute for the paper's 8-GPU node
+//! (DESIGN.md §2).
+//!
+//! A `Cluster` is N `Worker`s joined in a ring. Each worker owns a
+//! `MemTracker` (its device memory) so every engine allocation is
+//! accounted per-device exactly as `torch.cuda.max_memory_allocated` would
+//! have recorded it. The cluster also keeps an event trace that the
+//! rotation-trace example and the overlap figures render.
+
+pub mod trace;
+
+use crate::memory::tracker::MemTracker;
+
+pub use trace::{TraceEvent, TraceLog};
+
+/// One simulated device.
+#[derive(Debug)]
+pub struct Worker {
+    pub rank: usize,
+    pub tracker: MemTracker,
+}
+
+/// N workers on a ring.
+#[derive(Debug)]
+pub struct Cluster {
+    pub workers: Vec<Worker>,
+    pub trace: TraceLog,
+}
+
+impl Cluster {
+    /// `capacity` = per-device memory cap in bytes (None = unlimited,
+    /// analysis mode).
+    pub fn new(n: usize, capacity: Option<u64>) -> Self {
+        assert!(n >= 1, "cluster needs at least one worker");
+        Cluster {
+            workers: (0..n)
+                .map(|rank| Worker { rank, tracker: MemTracker::new(rank, capacity) })
+                .collect(),
+            trace: TraceLog::default(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Next rank clockwise (the rank `w` sends to in a cw rotation).
+    pub fn next_cw(&self, w: usize) -> usize {
+        (w + 1) % self.n()
+    }
+
+    /// Previous rank (the rank `w` receives from in a cw rotation).
+    pub fn prev_cw(&self, w: usize) -> usize {
+        (w + self.n() - 1) % self.n()
+    }
+
+    pub fn tracker(&mut self, w: usize) -> &mut MemTracker {
+        &mut self.workers[w].tracker
+    }
+
+    /// Max peak across workers (the "peak memory allocated" the paper
+    /// reports is per-GPU; with symmetric engines all workers peak alike).
+    pub fn max_peak(&self) -> u64 {
+        self.workers.iter().map(|w| w.tracker.peak()).max().unwrap_or(0)
+    }
+
+    /// Sum of peaks — the whole-system memory of paper Table 1 /  Fig 9.
+    pub fn total_peak(&self) -> u64 {
+        self.workers.iter().map(|w| w.tracker.peak()).sum()
+    }
+
+    pub fn reset_peaks(&mut self) {
+        for w in &mut self.workers {
+            w.tracker.reset_peak();
+        }
+    }
+
+    /// Total outstanding allocations (must be 0 after a clean engine drop —
+    /// asserted by the integration tests).
+    pub fn outstanding(&self) -> usize {
+        self.workers.iter().map(|w| w.tracker.outstanding()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::tracker::MemCategory;
+
+    #[test]
+    fn ring_neighbors_wrap() {
+        let c = Cluster::new(4, None);
+        assert_eq!(c.next_cw(3), 0);
+        assert_eq!(c.prev_cw(0), 3);
+        assert_eq!(c.next_cw(1), 2);
+    }
+
+    #[test]
+    fn peaks_aggregate() {
+        let mut c = Cluster::new(2, None);
+        let a = c.tracker(0).alloc(MemCategory::Weights, 100).unwrap();
+        let _b = c.tracker(1).alloc(MemCategory::Weights, 40).unwrap();
+        assert_eq!(c.max_peak(), 100);
+        assert_eq!(c.total_peak(), 140);
+        c.tracker(0).free(a);
+        assert_eq!(c.outstanding(), 1);
+        // peaks survive frees
+        assert_eq!(c.max_peak(), 100);
+    }
+
+    #[test]
+    fn capacity_propagates() {
+        let mut c = Cluster::new(2, Some(64));
+        assert!(c.tracker(0).alloc(MemCategory::Weights, 65).is_err());
+        assert!(c.tracker(1).alloc(MemCategory::Weights, 64).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one worker")]
+    fn zero_workers_rejected() {
+        Cluster::new(0, None);
+    }
+}

@@ -1,0 +1,131 @@
+//! Structured event trace of an engine step.
+//!
+//! Engines append semantic events (compute on shard s, rotate cw, ...);
+//! `examples/rotation_trace.rs` renders the trace as the paper's Fig 1 /
+//! Fig 2 diagrams, and the tests assert schedule invariants on it (every
+//! worker touches every shard exactly once per pass, weights end up home).
+
+use std::fmt;
+
+use crate::comm::CommPrim;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// Worker computed one partition step.
+    Compute { worker: usize, unit: String, shard: usize, step: usize },
+    /// A collective involving all workers.
+    Collective { prim: CommPrim, bytes: u64, note: String },
+    /// One rotation step (all workers exchange simultaneously).
+    Rotate { dir: &'static str, bytes_per_worker: u64, step: usize },
+    /// Phase marker (forward / backward / optimizer).
+    Phase { name: String },
+}
+
+impl fmt::Display for TraceEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceEvent::Compute { worker, unit, shard, step } => {
+                write!(f, "  w{worker} compute {unit}[shard {shard}] (step {step})")
+            }
+            TraceEvent::Collective { prim, bytes, note } => {
+                write!(f, "  {prim} {bytes}B {note}")
+            }
+            TraceEvent::Rotate { dir, bytes_per_worker, step } => {
+                write!(f, "  rotate-{dir} {bytes_per_worker}B/worker (step {step})")
+            }
+            TraceEvent::Phase { name } => write!(f, "== {name} =="),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct TraceLog {
+    pub events: Vec<TraceEvent>,
+    /// Recording is off by default: per-step tracing in a thousand-step
+    /// training run would swamp memory for no benefit.
+    pub enabled: bool,
+}
+
+impl TraceLog {
+    pub fn enabled() -> Self {
+        TraceLog { events: Vec::new(), enabled: true }
+    }
+
+    pub fn push(&mut self, e: TraceEvent) {
+        if self.enabled {
+            self.events.push(e);
+        }
+    }
+
+    pub fn phase(&mut self, name: &str) {
+        self.push(TraceEvent::Phase { name: name.to_string() });
+    }
+
+    /// All (worker, shard) compute pairs for a given unit substring —
+    /// schedule-invariant checks key off this.
+    pub fn compute_pairs(&self, unit_contains: &str) -> Vec<(usize, usize)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Compute { worker, unit, shard, .. }
+                    if unit.contains(unit_contains) =>
+                {
+                    Some((*worker, *shard))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn rotations(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Rotate { .. }))
+            .count()
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for e in &self.events {
+            s.push_str(&e.to_string());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_log_records_nothing() {
+        let mut log = TraceLog::default();
+        log.push(TraceEvent::Phase { name: "fwd".into() });
+        assert!(log.events.is_empty());
+    }
+
+    #[test]
+    fn enabled_log_records_and_filters() {
+        let mut log = TraceLog::enabled();
+        log.phase("forward");
+        log.push(TraceEvent::Compute {
+            worker: 0,
+            unit: "attn.l0".into(),
+            shard: 1,
+            step: 0,
+        });
+        log.push(TraceEvent::Compute {
+            worker: 1,
+            unit: "mlp.l0".into(),
+            shard: 0,
+            step: 0,
+        });
+        log.push(TraceEvent::Rotate { dir: "cw", bytes_per_worker: 64, step: 0 });
+        assert_eq!(log.compute_pairs("attn"), vec![(0, 1)]);
+        assert_eq!(log.rotations(), 1);
+        let text = log.render();
+        assert!(text.contains("== forward =="));
+        assert!(text.contains("rotate-cw"));
+    }
+}

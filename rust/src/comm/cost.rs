@@ -1,0 +1,185 @@
+//! α-β interconnect cost model.
+//!
+//! Prices every communication primitive the engines issue, replacing the
+//! NCCL timings of the paper's testbed (DESIGN.md §2). `alpha` is the
+//! per-message latency in seconds (dominant for small transfers — the
+//! paper's §3.3 concern), `beta` is seconds per byte (1 / bandwidth).
+//!
+//! Ring-algorithm costs (You et al. 2018, the paper's reference):
+//!   sendrecv(M)        = α + M·β                      (one ring hop)
+//!   rotation(M)        = α + M·β                      (all workers in parallel)
+//!   allgather(M)       = (N-1)·(α + (M/N)·β)
+//!   reduce_scatter(M)  = (N-1)·(α + (M/N)·β)
+//!   allreduce(M)       = 2·(N-1)·(α + (M/N)·β)
+//!   broadcast(M)       = α·(N-1) + M·β                (pipelined ring)
+//!   all_to_all(M)      = (N-1)·(α + (M/N)·β)          (pairwise exchange)
+//!
+//! `M` is the *full* message size in bytes (for allgather/reduce_scatter:
+//! the reconstructed full buffer; for rotation/sendrecv: the shard moved).
+//! The §3.4.2 claim — rotation executed (N-1) times costs the same as one
+//! allgather of the full buffer — falls straight out of these formulas and
+//! is checked by `comm_microbench`.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommPrim {
+    SendRecv,
+    Rotation,
+    AllGather,
+    ReduceScatter,
+    AllReduce,
+    Broadcast,
+    AllToAll,
+}
+
+impl std::fmt::Display for CommPrim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            CommPrim::SendRecv => "sendrecv",
+            CommPrim::Rotation => "rotation",
+            CommPrim::AllGather => "allgather",
+            CommPrim::ReduceScatter => "reduce-scatter",
+            CommPrim::AllReduce => "allreduce",
+            CommPrim::Broadcast => "broadcast",
+            CommPrim::AllToAll => "all-to-all",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One interconnect: α-β parameters. See `perfmodel::hardware` for the
+/// calibrated NVLink / PCIe instances.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    pub name: String,
+    /// Per-message latency, seconds.
+    pub alpha: f64,
+    /// Seconds per byte (1 / effective bandwidth).
+    pub beta: f64,
+}
+
+impl LinkModel {
+    pub fn new(name: &str, alpha: f64, bandwidth_bytes_per_s: f64) -> Self {
+        LinkModel { name: name.to_string(), alpha, beta: 1.0 / bandwidth_bytes_per_s }
+    }
+
+    /// One neighbor exchange of `bytes` (both directions concurrently —
+    /// full-duplex links, as NVLink/PCIe are).
+    pub fn sendrecv(&self, bytes: u64) -> f64 {
+        self.alpha + bytes as f64 * self.beta
+    }
+
+    /// One rotation step moves one shard per worker simultaneously; on a
+    /// full-duplex ring this costs a single sendrecv of the shard.
+    pub fn rotation_step(&self, shard_bytes: u64) -> f64 {
+        self.sendrecv(shard_bytes)
+    }
+
+    /// Ring allgather reconstructing `full_bytes` across `n` workers.
+    pub fn allgather(&self, full_bytes: u64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n - 1) as f64 * (self.alpha + full_bytes as f64 / n as f64 * self.beta)
+    }
+
+    /// Ring reduce-scatter of a `full_bytes` buffer.
+    pub fn reduce_scatter(&self, full_bytes: u64, n: usize) -> f64 {
+        self.allgather(full_bytes, n)
+    }
+
+    /// Ring allreduce (reduce-scatter + allgather).
+    pub fn allreduce(&self, full_bytes: u64, n: usize) -> f64 {
+        2.0 * self.allgather(full_bytes, n)
+    }
+
+    /// Pipelined ring broadcast.
+    pub fn broadcast(&self, bytes: u64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        self.alpha * (n - 1) as f64 + bytes as f64 * self.beta
+    }
+
+    /// Pairwise-exchange all-to-all of `bytes` per worker.
+    pub fn all_to_all(&self, bytes: u64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n - 1) as f64 * (self.alpha + bytes as f64 / n as f64 * self.beta)
+    }
+
+    /// Dispatch by primitive. `bytes` is the full-message convention above.
+    pub fn time(&self, prim: CommPrim, bytes: u64, n: usize) -> f64 {
+        match prim {
+            CommPrim::SendRecv => self.sendrecv(bytes),
+            CommPrim::Rotation => self.rotation_step(bytes),
+            CommPrim::AllGather => self.allgather(bytes, n),
+            CommPrim::ReduceScatter => self.reduce_scatter(bytes, n),
+            CommPrim::AllReduce => self.allreduce(bytes, n),
+            CommPrim::Broadcast => self.broadcast(bytes, n),
+            CommPrim::AllToAll => self.all_to_all(bytes, n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> LinkModel {
+        // 5 µs latency, 100 GB/s
+        LinkModel::new("test", 5e-6, 100e9)
+    }
+
+    #[test]
+    fn sendrecv_latency_dominates_small() {
+        let l = link();
+        // 1 KiB at 100 GB/s ~ 10 ns << 5 µs latency
+        let t = l.sendrecv(1024);
+        assert!(t > 0.99 * l.alpha && t < 1.1 * l.alpha);
+    }
+
+    #[test]
+    fn rotation_n_minus_1_approx_allgather() {
+        // Paper §3.4.2: (N-1) rotations of M/N ≈ one allgather of M for
+        // message sizes past the latency regime (> 1 MB).
+        let l = link();
+        let n = 8;
+        let m: u64 = 64 << 20;
+        let rot = (n - 1) as f64 * l.rotation_step(m / n as u64);
+        let ag = l.allgather(m, n as usize);
+        let ratio = rot / ag;
+        assert!((ratio - 1.0).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn allreduce_is_twice_allgather() {
+        let l = link();
+        assert!((l.allreduce(1 << 20, 8) - 2.0 * l.allgather(1 << 20, 8)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_worker_collectives_free() {
+        let l = link();
+        assert_eq!(l.allgather(1 << 20, 1), 0.0);
+        assert_eq!(l.allreduce(1 << 20, 1), 0.0);
+        assert_eq!(l.all_to_all(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_term_scales_linearly() {
+        let l = link();
+        let t1 = l.sendrecv(10 << 20) - l.alpha;
+        let t2 = l.sendrecv(20 << 20) - l.alpha;
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dispatch_matches_direct() {
+        let l = link();
+        let m = 3 << 20;
+        assert_eq!(l.time(CommPrim::AllGather, m, 4), l.allgather(m, 4));
+        assert_eq!(l.time(CommPrim::Rotation, m, 4), l.rotation_step(m));
+        assert_eq!(l.time(CommPrim::Broadcast, m, 4), l.broadcast(m, 4));
+    }
+}

@@ -1,0 +1,188 @@
+//! Communication layer: ring rotation primitives (the paper's §3.3
+//! contribution) plus the standard collectives the baselines use, and the
+//! α-β cost model that prices all of them for the perf figures.
+//!
+//! Real-mode collectives operate on per-worker buffers (`&mut [Vec<f32>]`,
+//! index = rank) and move actual data, replacing NCCL on the simulated
+//! ring. Virtual-mode engines skip the data movement and only charge the
+//! cost model — the *schedule* (who communicates what, when) is identical
+//! because both modes run the same engine code.
+
+pub mod cost;
+pub mod rotation;
+
+pub use cost::{CommPrim, LinkModel};
+pub use rotation::{rotate_ccw, rotate_cw, RotationDir};
+
+/// Ring all-reduce (sum): every worker ends with the elementwise sum of all
+/// inputs. DDP's gradient reduction; also used for the replicated-parameter
+/// grads in every multi-worker engine.
+pub fn allreduce_sum(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(
+        bufs.iter().all(|b| b.len() == len),
+        "allreduce buffers must be same-length"
+    );
+    let mut acc = vec![0.0f32; len];
+    for b in bufs.iter() {
+        for (a, v) in acc.iter_mut().zip(b) {
+            *a += v;
+        }
+    }
+    for b in bufs.iter_mut() {
+        b.copy_from_slice(&acc);
+    }
+}
+
+/// Ring all-gather: each worker contributes its shard; every worker ends
+/// with the concatenation `[shard_0 | shard_1 | ... | shard_{N-1}]`.
+/// FSDP's parameter reconstruction.
+pub fn allgather(shards: &[Vec<f32>]) -> Vec<f32> {
+    let mut full = Vec::with_capacity(shards.iter().map(|s| s.len()).sum());
+    for s in shards {
+        full.extend_from_slice(s);
+    }
+    full
+}
+
+/// Ring reduce-scatter (sum): input is one full-length buffer per worker;
+/// worker `w` ends with the sum of everyone's shard `w`. FSDP's gradient
+/// reduction. Returns one shard per worker; all inputs must be equal length
+/// and divisible by N.
+pub fn reduce_scatter(fulls: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = fulls.len();
+    let len = fulls[0].len();
+    assert!(
+        fulls.iter().all(|f| f.len() == len),
+        "reduce_scatter buffers must be same-length"
+    );
+    assert_eq!(len % n, 0, "reduce_scatter length {len} not divisible by {n}");
+    let shard = len / n;
+    (0..n)
+        .map(|w| {
+            let mut out = vec![0.0f32; shard];
+            for f in fulls {
+                for (o, v) in out.iter_mut().zip(&f[w * shard..(w + 1) * shard]) {
+                    *o += v;
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+/// Broadcast from `root` to every worker.
+pub fn broadcast(bufs: &mut [Vec<f32>], root: usize) {
+    let src = bufs[root].clone();
+    for (w, b) in bufs.iter_mut().enumerate() {
+        if w != root {
+            assert_eq!(b.len(), src.len(), "broadcast length mismatch");
+            b.copy_from_slice(&src);
+        }
+    }
+}
+
+/// All-to-all: `bufs[w]` is worker w's send buffer split into N equal
+/// chunks; chunk `d` goes to worker `d`. Worker w ends with
+/// `[chunk_w_of_0 | chunk_w_of_1 | ...]`. The MoE baselines' token shuffle.
+pub fn all_to_all(bufs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = bufs.len();
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len));
+    assert_eq!(len % n, 0, "all_to_all length {len} not divisible by {n}");
+    let chunk = len / n;
+    (0..n)
+        .map(|dst| {
+            let mut out = Vec::with_capacity(len);
+            for src in bufs {
+                out.extend_from_slice(&src[dst * chunk..(dst + 1) * chunk]);
+            }
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_bufs(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn allreduce_is_sum() {
+        let mut bufs = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        allreduce_sum(&mut bufs);
+        for b in &bufs {
+            assert_eq!(b, &vec![111.0, 222.0]);
+        }
+    }
+
+    #[test]
+    fn allgather_concatenates_in_rank_order() {
+        let shards = vec![vec![1.0], vec![2.0], vec![3.0]];
+        assert_eq!(allgather(&shards), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn reduce_scatter_then_allgather_is_allreduce() {
+        prop::check("rs+ag == ar", 50, |rng| {
+            let n = 1 + rng.below(6);
+            let len = n * (1 + rng.below(8));
+            let bufs = rand_bufs(rng, n, len);
+            let mut ar = bufs.clone();
+            allreduce_sum(&mut ar);
+            let shards = reduce_scatter(&bufs);
+            let full = allgather(&shards);
+            prop::close(&full, &ar[0], 1e-5)
+        });
+    }
+
+    #[test]
+    fn broadcast_copies_root() {
+        let mut bufs = vec![vec![0.0; 2], vec![7.0, 8.0], vec![0.0; 2]];
+        broadcast(&mut bufs, 1);
+        for b in &bufs {
+            assert_eq!(b, &vec![7.0, 8.0]);
+        }
+    }
+
+    #[test]
+    fn all_to_all_is_transpose() {
+        // 2 workers, 2 chunks of 1: out[d] = [bufs[0][d], bufs[1][d]]
+        let bufs = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let out = all_to_all(&bufs);
+        assert_eq!(out[0], vec![1.0, 3.0]);
+        assert_eq!(out[1], vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn all_to_all_twice_is_identity() {
+        prop::check("a2a involution", 30, |rng| {
+            let n = 1 + rng.below(5);
+            let len = n * (1 + rng.below(4));
+            let bufs = rand_bufs(rng, n, len);
+            let twice = all_to_all(&all_to_all(&bufs));
+            for (a, b) in twice.iter().zip(&bufs) {
+                prop::close(a, b, 0.0)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allreduce_single_worker_noop() {
+        let mut bufs = vec![vec![5.0, 6.0]];
+        allreduce_sum(&mut bufs);
+        assert_eq!(bufs[0], vec![5.0, 6.0]);
+    }
+}

@@ -1,0 +1,185 @@
+//! The paper's rotation primitive (§3.3, Fig 2).
+//!
+//! Clockwise rotation: every worker sends its buffer to the *next* worker
+//! on the ring and receives from the *previous* one — after the exchange,
+//! worker `w` holds what worker `w-1` held. Used for the forward pass.
+//! Counter-clockwise is the mirror (worker `w` receives from `w+1`), used
+//! for the backward pass so that after N-1 steps every shard is back home.
+//!
+//! These are generic over the buffer type: the engines rotate
+//! `Vec<HostTensor>` shard structs in real mode and `Vec<VirtBuf>` shape
+//! stubs in virtual mode — identical schedule either way.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RotationDir {
+    /// Forward-pass direction: `w` receives from `w-1`.
+    Clockwise,
+    /// Backward-pass direction: `w` receives from `w+1`.
+    CounterClockwise,
+}
+
+impl RotationDir {
+    /// The rank `w` receives from under this direction.
+    pub fn recv_peer(&self, w: usize, n: usize) -> usize {
+        match self {
+            RotationDir::Clockwise => (w + n - 1) % n,
+            RotationDir::CounterClockwise => (w + 1) % n,
+        }
+    }
+
+    /// The rank `w` sends to under this direction.
+    pub fn send_peer(&self, w: usize, n: usize) -> usize {
+        match self {
+            RotationDir::Clockwise => (w + 1) % n,
+            RotationDir::CounterClockwise => (w + n - 1) % n,
+        }
+    }
+}
+
+/// One clockwise rotation step: `new[w] = old[w-1]`.
+pub fn rotate_cw<T>(bufs: &mut [T]) {
+    bufs.rotate_right(1);
+}
+
+/// One counter-clockwise rotation step: `new[w] = old[w+1]`.
+pub fn rotate_ccw<T>(bufs: &mut [T]) {
+    bufs.rotate_left(1);
+}
+
+/// Which original shard worker `w` holds after `t` rotations in direction
+/// `dir`, given that worker `w` started with shard `w`. This is the shard
+/// schedule the RTP engines compute against at each step.
+pub fn shard_at(dir: RotationDir, w: usize, t: usize, n: usize) -> usize {
+    match dir {
+        RotationDir::Clockwise => (w + n - (t % n)) % n,
+        RotationDir::CounterClockwise => (w + t) % n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn cw_moves_to_next() {
+        let mut v = vec![0, 1, 2, 3];
+        rotate_cw(&mut v);
+        // worker 1 now holds what worker 0 had
+        assert_eq!(v, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn ccw_moves_to_prev() {
+        let mut v = vec![0, 1, 2, 3];
+        rotate_ccw(&mut v);
+        assert_eq!(v, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn n_rotations_is_identity() {
+        prop::check("rotate^N == id", 100, |rng| {
+            let n = 1 + rng.below(9);
+            let orig: Vec<usize> = (0..n).collect();
+            let mut v = orig.clone();
+            for _ in 0..n {
+                rotate_cw(&mut v);
+            }
+            if v != orig {
+                return Err(format!("cw^{n} != id: {v:?}"));
+            }
+            for _ in 0..n {
+                rotate_ccw(&mut v);
+            }
+            if v != orig {
+                return Err(format!("ccw^{n} != id: {v:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cw_then_ccw_cancels() {
+        let mut v = vec![10, 20, 30];
+        rotate_cw(&mut v);
+        rotate_ccw(&mut v);
+        assert_eq!(v, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn shard_at_matches_actual_rotation() {
+        prop::check("shard_at tracks rotate", 100, |rng| {
+            let n = 1 + rng.below(8);
+            let t = rng.below(3 * n + 1);
+            for dir in [RotationDir::Clockwise, RotationDir::CounterClockwise] {
+                let mut v: Vec<usize> = (0..n).collect();
+                for _ in 0..t {
+                    match dir {
+                        RotationDir::Clockwise => rotate_cw(&mut v),
+                        RotationDir::CounterClockwise => rotate_ccw(&mut v),
+                    }
+                }
+                for w in 0..n {
+                    let want = shard_at(dir, w, t, n);
+                    if v[w] != want {
+                        return Err(format!(
+                            "{dir:?} n={n} t={t} w={w}: got {} want {want}",
+                            v[w]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_worker_sees_every_shard_exactly_once() {
+        // The paper's balanced-workload claim: over the N steps of a
+        // forward pass, each worker computes against each shard once.
+        prop::check("coverage", 50, |rng| {
+            let n = 1 + rng.below(8);
+            for w in 0..n {
+                let mut seen = vec![false; n];
+                for t in 0..n {
+                    let s = shard_at(RotationDir::Clockwise, w, t, n);
+                    if seen[s] {
+                        return Err(format!("worker {w} saw shard {s} twice"));
+                    }
+                    seen[s] = true;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn backward_returns_weights_home() {
+        // After fwd (N-1 cw steps) worker w holds shard (w+1)%N; after
+        // bwd (N-1 ccw steps) it holds shard w again (paper Fig 1).
+        for n in 1..=8 {
+            for w in 0..n {
+                let after_fwd = shard_at(RotationDir::Clockwise, w, n - 1, n);
+                assert_eq!(after_fwd, (w + 1) % n);
+                // bwd starts from the post-forward assignment
+                let mut v: Vec<usize> = (0..n)
+                    .map(|x| shard_at(RotationDir::Clockwise, x, n - 1, n))
+                    .collect();
+                for _ in 0..n - 1 {
+                    rotate_ccw(&mut v);
+                }
+                assert_eq!(v[w], w, "n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn peers_are_ring_neighbors() {
+        let d = RotationDir::Clockwise;
+        assert_eq!(d.send_peer(3, 4), 0);
+        assert_eq!(d.recv_peer(0, 4), 3);
+        let d = RotationDir::CounterClockwise;
+        assert_eq!(d.send_peer(0, 4), 3);
+        assert_eq!(d.recv_peer(3, 4), 0);
+    }
+}

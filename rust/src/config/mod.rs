@@ -1,0 +1,257 @@
+//! Configuration: model presets (paper Table 2 + runtime presets), the
+//! parallelism strategy selection and training hyperparameters.
+
+pub mod presets;
+
+use std::fmt;
+
+/// GPT-style transformer hyperparameters — mirrors
+/// `python/compile/presets.py::ModelConfig` (kept in sync by
+/// `presets::tests::matches_python_manifest`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub seq: usize,
+    pub ffn: usize,
+    /// 0 = dense MLP; otherwise MoE with this many experts.
+    pub experts: usize,
+    pub expert_ffn: usize,
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.experts > 0
+    }
+
+    /// Parameter count of the dense variant (untied LM head); mirrors
+    /// python `params_dense`.
+    pub fn params_dense(&self) -> usize {
+        let h = self.hidden;
+        let f = self.ffn;
+        let emb = self.vocab * h + self.seq * h;
+        let per_layer =
+            3 * h * h + 3 * h + h * h + h + 2 * h * f + f + h + 4 * h;
+        emb + self.layers * per_layer + h * self.vocab + 2 * h
+    }
+
+    /// Parameter count including MoE experts (router + E expert FFNs +
+    /// one shared output bias replacing the dense MLP in every layer) —
+    /// mirrors `model::params::ModelParams` exactly.
+    pub fn params_total(&self) -> usize {
+        if !self.is_moe() {
+            return self.params_dense();
+        }
+        let h = self.hidden;
+        let fe = self.expert_ffn;
+        // dense mlp w1+b1+w2 (b2 stays in both variants)
+        let dense_mlp = 2 * h * self.ffn + self.ffn;
+        // router wr [H,E] + per-expert {w1 [H,Fe], b1 [Fe], w2 [Fe,H]}
+        let moe = h * self.experts + self.experts * (2 * h * fe + fe);
+        self.params_dense() - self.layers * dense_mlp + self.layers * moe
+    }
+
+    /// Weight bytes (f32).
+    pub fn weight_bytes(&self) -> u64 {
+        (self.params_total() * 4) as u64
+    }
+
+    /// Activation bytes for one sample's forward residency under the
+    /// recompute policy the engines implement: per layer the saved inputs
+    /// (x, a, x1, m) = 4 x [S, H], plus embedding output and final logits.
+    pub fn activation_bytes_per_sample(&self) -> u64 {
+        let sh = self.seq * self.hidden;
+        let per_layer = 4 * sh;
+        let logits = self.seq * self.vocab;
+        (4 * (sh + self.layers * per_layer + sh + logits)) as u64
+    }
+}
+
+/// Which parallel engine to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// The idealized computer: one device, whole model, whole batch.
+    Single,
+    /// Distributed data parallel (full replica + gradient allreduce).
+    Ddp,
+    /// Fully-sharded data parallel (unit allgather / reduce-scatter).
+    Fsdp,
+    /// Megatron-style static tensor parallelism.
+    MegatronTp,
+    /// The paper: rotated tensor parallelism, blocking in-place rotation.
+    RtpInplace,
+    /// The paper: rotated tensor parallelism, double-buffered overlap.
+    RtpOutOfPlace,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 6] = [
+        Strategy::Single,
+        Strategy::Ddp,
+        Strategy::Fsdp,
+        Strategy::MegatronTp,
+        Strategy::RtpInplace,
+        Strategy::RtpOutOfPlace,
+    ];
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        Some(match s {
+            "single" => Strategy::Single,
+            "ddp" | "dp" => Strategy::Ddp,
+            "fsdp" => Strategy::Fsdp,
+            "tp" | "megatron" | "megatron-tp" => Strategy::MegatronTp,
+            "rtp" | "rtp-inplace" => Strategy::RtpInplace,
+            "rtp-outofplace" | "rtp-oop" | "rtp-out" => Strategy::RtpOutOfPlace,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Strategy::Single => "single",
+            Strategy::Ddp => "ddp",
+            Strategy::Fsdp => "fsdp",
+            Strategy::MegatronTp => "megatron-tp",
+            Strategy::RtpInplace => "rtp-inplace",
+            Strategy::RtpOutOfPlace => "rtp-outofplace",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Parallel-execution parameters.
+#[derive(Debug, Clone)]
+pub struct ParallelCfg {
+    pub strategy: Strategy,
+    /// Worker (device) count N — the paper's partition factor.
+    pub workers: usize,
+    /// Global batch; each DP-style worker gets `global_batch / workers`.
+    pub global_batch: usize,
+}
+
+impl ParallelCfg {
+    pub fn local_batch(&self) -> usize {
+        match self.strategy {
+            // Megatron TP replicates activations: full batch everywhere.
+            Strategy::MegatronTp => self.global_batch,
+            Strategy::Single => self.global_batch,
+            _ => {
+                assert!(
+                    self.global_batch % self.workers == 0,
+                    "global batch {} not divisible by {} workers",
+                    self.global_batch,
+                    self.workers
+                );
+                self.global_batch / self.workers
+            }
+        }
+    }
+
+    /// Weight-partition factor P for the shard artifacts this strategy
+    /// executes (1 = full weights).
+    pub fn weight_partition(&self) -> usize {
+        match self.strategy {
+            Strategy::Single | Strategy::Ddp | Strategy::Fsdp => 1,
+            Strategy::MegatronTp
+            | Strategy::RtpInplace
+            | Strategy::RtpOutOfPlace => self.workers,
+        }
+    }
+}
+
+/// Training hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub optimizer: OptimizerKind,
+    pub seed: u64,
+    /// Log every k steps.
+    pub log_every: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    /// SGD with momentum 0.9.
+    Momentum,
+    Adam,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "sgd" => OptimizerKind::Sgd,
+            "momentum" => OptimizerKind::Momentum,
+            "adam" => OptimizerKind::Adam,
+            _ => return None,
+        })
+    }
+
+    /// Optimizer state multiplier over W (Table-1 style accounting).
+    pub fn state_factor(&self) -> usize {
+        match self {
+            OptimizerKind::Sgd => 0,
+            OptimizerKind::Momentum => 1,
+            OptimizerKind::Adam => 2,
+        }
+    }
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 50,
+            lr: 1e-3,
+            optimizer: OptimizerKind::Adam,
+            seed: 42,
+            log_every: 10,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(&s.to_string()), Some(s));
+        }
+        assert_eq!(Strategy::parse("nope"), None);
+    }
+
+    #[test]
+    fn local_batch_by_strategy() {
+        let mut p = ParallelCfg {
+            strategy: Strategy::Ddp,
+            workers: 4,
+            global_batch: 8,
+        };
+        assert_eq!(p.local_batch(), 2);
+        p.strategy = Strategy::MegatronTp;
+        assert_eq!(p.local_batch(), 8);
+        assert_eq!(p.weight_partition(), 4);
+        p.strategy = Strategy::Fsdp;
+        assert_eq!(p.weight_partition(), 1);
+    }
+
+    #[test]
+    fn params_moe_exceeds_dense() {
+        let mut m = presets::get("tiny").unwrap();
+        let dense = m.params_total();
+        m.experts = 4;
+        m.expert_ffn = m.ffn;
+        assert!(m.params_total() > dense);
+    }
+}

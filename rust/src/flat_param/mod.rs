@@ -1,0 +1,191 @@
+//! FlatParameter (paper §3.2, last ¶): all parameters of a layer unit are
+//! flattened, concatenated, padded, and communicated as ONE message.
+//!
+//! This is the structure both FSDP (allgather/reduce-scatter granularity)
+//! and RTP (rotation message granularity) move around. `FlatLayout`
+//! describes where each named tensor lives inside the flat buffer;
+//! `pack`/`unpack` convert between a unit's tensors and the flat form, and
+//! `shard` views carve the flat buffer into N equal rank-shards.
+
+use crate::tensor::{numel, HostTensor};
+
+/// One tensor's slot inside a flat buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        numel(&self.shape)
+    }
+}
+
+/// Layout of a unit's FlatParameter, padded to a multiple of `n` so the N
+/// rank-shards are equal ("adding padding to the clockwise" in the paper's
+/// words — the pad rides at the tail of the last shard).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatLayout {
+    pub specs: Vec<ParamSpec>,
+    /// Unpadded total element count.
+    pub len: usize,
+    /// Padded length (multiple of n).
+    pub padded: usize,
+    pub n: usize,
+}
+
+impl FlatLayout {
+    pub fn new(params: &[(&str, Vec<usize>)], n: usize) -> Self {
+        assert!(n >= 1);
+        let mut specs = Vec::with_capacity(params.len());
+        let mut offset = 0;
+        for (name, shape) in params {
+            let spec = ParamSpec { name: name.to_string(), shape: shape.clone(), offset };
+            offset += spec.len();
+            specs.push(spec);
+        }
+        let padded = offset.div_ceil(n) * n;
+        FlatLayout { specs, len: offset, padded, n }
+    }
+
+    /// Elements per rank-shard.
+    pub fn shard_len(&self) -> usize {
+        self.padded / self.n
+    }
+
+    /// Bytes per rank-shard (f32).
+    pub fn shard_bytes(&self) -> u64 {
+        (self.shard_len() * 4) as u64
+    }
+
+    /// Bytes of the full (padded) flat buffer.
+    pub fn full_bytes(&self) -> u64 {
+        (self.padded * 4) as u64
+    }
+
+    /// Flatten `tensors` (in spec order) into one padded buffer.
+    pub fn pack(&self, tensors: &[&HostTensor]) -> Vec<f32> {
+        assert_eq!(tensors.len(), self.specs.len(), "pack arity mismatch");
+        let mut flat = vec![0.0f32; self.padded];
+        for (spec, t) in self.specs.iter().zip(tensors) {
+            assert_eq!(t.shape, spec.shape, "pack shape mismatch for {}", spec.name);
+            flat[spec.offset..spec.offset + spec.len()].copy_from_slice(&t.data);
+        }
+        flat
+    }
+
+    /// Rebuild the tensors from a full flat buffer.
+    pub fn unpack(&self, flat: &[f32]) -> Vec<HostTensor> {
+        assert!(flat.len() >= self.len, "unpack buffer too short");
+        self.specs
+            .iter()
+            .map(|spec| {
+                HostTensor::from_vec(
+                    &spec.shape,
+                    flat[spec.offset..spec.offset + spec.len()].to_vec(),
+                )
+            })
+            .collect()
+    }
+
+    /// Rank-shard `w` of a full flat buffer.
+    pub fn shard(&self, flat: &[f32], w: usize) -> Vec<f32> {
+        assert!(w < self.n);
+        let s = self.shard_len();
+        flat[w * s..(w + 1) * s].to_vec()
+    }
+
+    /// Scatter a full flat buffer into its N rank-shards.
+    pub fn shards(&self, flat: &[f32]) -> Vec<Vec<f32>> {
+        (0..self.n).map(|w| self.shard(flat, w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn layout3(n: usize) -> FlatLayout {
+        FlatLayout::new(
+            &[("w", vec![3, 4]), ("b", vec![4]), ("g", vec![5])],
+            n,
+        )
+    }
+
+    #[test]
+    fn offsets_are_cumulative() {
+        let l = layout3(2);
+        assert_eq!(l.specs[0].offset, 0);
+        assert_eq!(l.specs[1].offset, 12);
+        assert_eq!(l.specs[2].offset, 16);
+        assert_eq!(l.len, 21);
+        assert_eq!(l.padded, 22); // next multiple of 2
+        assert_eq!(l.shard_len(), 11);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        prop::check("flat pack/unpack roundtrip", 50, |rng| {
+            let n = 1 + rng.below(8);
+            let l = layout3(n);
+            let mut rngf = Rng::new(rng.next_u64());
+            let tensors: Vec<HostTensor> = l
+                .specs
+                .iter()
+                .map(|s| HostTensor::randn(&s.shape, 1.0, &mut rngf))
+                .collect();
+            let refs: Vec<&HostTensor> = tensors.iter().collect();
+            let flat = l.pack(&refs);
+            if flat.len() != l.padded {
+                return Err("padded length wrong".into());
+            }
+            let back = l.unpack(&flat);
+            for (a, b) in back.iter().zip(&tensors) {
+                if a != b {
+                    return Err(format!("{:?} != {:?}", a.shape, b.shape));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shards_reassemble() {
+        prop::check("shards concat to flat", 50, |rng| {
+            let n = 1 + rng.below(8);
+            let l = layout3(n);
+            let flat: Vec<f32> = (0..l.padded).map(|i| i as f32).collect();
+            let shards = l.shards(&flat);
+            let back = crate::comm::allgather(&shards);
+            prop::close(&back, &flat, 0.0)
+        });
+    }
+
+    #[test]
+    fn padding_is_zero_initialized() {
+        let l = FlatLayout::new(&[("w", vec![3])], 2);
+        assert_eq!(l.padded, 4);
+        let t = HostTensor::from_vec(&[3], vec![1., 2., 3.]);
+        let flat = l.pack(&[&t]);
+        assert_eq!(flat, vec![1., 2., 3., 0.]);
+    }
+
+    #[test]
+    fn n1_has_no_padding_unless_needed() {
+        let l = FlatLayout::new(&[("w", vec![7])], 1);
+        assert_eq!(l.padded, 7);
+        assert_eq!(l.shard_len(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "pack shape mismatch")]
+    fn pack_rejects_wrong_shape() {
+        let l = FlatLayout::new(&[("w", vec![2, 2])], 1);
+        let t = HostTensor::zeros(&[3]);
+        l.pack(&[&t]);
+    }
+}

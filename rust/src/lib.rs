@@ -1,0 +1,33 @@
+//! RTP: Rethinking Tensor Parallelism with Memory Deduplication — full
+//! reproduction (Luo, Zhong & Fox, 2023).
+//!
+//! Layer-3 coordinator of the three-layer stack: Python/JAX/Pallas author
+//! and AOT-compile the compute (Layers 1-2, `python/compile/`), this crate
+//! loads the HLO artifacts via PJRT and runs the paper's Rotated Tensor
+//! Parallelism plus every baseline it compares against (single-device
+//! "idealized computer", DDP, FSDP, Megatron-style TP) on a simulated
+//! worker ring with exact memory accounting.
+//!
+//! Module map (see DESIGN.md §4):
+//! - [`config`] — model presets (paper Table 2), strategy/training config
+//! - [`tensor`] — host tensors + CPU glue ops
+//! - [`memory`] — per-worker allocation tracker + analytic Table-1 model
+//! - [`cluster`] — the simulated worker ring + event trace
+//! - [`comm`] — rotation primitives, collectives, α-β cost model
+//! - [`flat_param`] — the paper's FlatParameter pack/shard structure
+//! - [`util`] — json / rng / stats / prop substrates (offline substitutes)
+
+pub mod bench_util;
+pub mod cli;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod flat_param;
+pub mod memory;
+pub mod model;
+pub mod parallel;
+pub mod perfmodel;
+pub mod runtime;
+pub mod train;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,239 @@
+//! `rtp` — the leader binary: train, simulate, trace and inspect
+//! subcommands over the RTP engines.
+//!
+//! Examples:
+//!   rtp train --preset tiny --engine rtp-inplace --workers 2 --steps 50
+//!   rtp train --preset e2e-small --engine rtp-outofplace --workers 2 \
+//!       --exec pjrt --steps 200
+//!   rtp simulate --preset gpt2-500m --engine fsdp --workers 8 --batch 64
+//!   rtp trace --workers 4
+//!   rtp inspect --presets
+
+use anyhow::{anyhow, bail, Result};
+
+use rtp::bench_util::Table;
+use rtp::cli::Args;
+use rtp::config::{presets, OptimizerKind, Strategy, TrainCfg};
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use rtp::perfmodel::{by_name, simulate, SimSpec};
+use rtp::train::{train, MarkovCorpus, Optimizer};
+use rtp::util::bytes::human;
+use rtp::util::rng::Rng;
+
+const USAGE: &str = "\
+rtp — Rotated Tensor Parallelism (paper reproduction)
+
+USAGE: rtp <subcommand> [flags]
+
+SUBCOMMANDS
+  train     run the training loop on the synthetic Markov corpus
+            --preset tiny|tiny-moe|e2e-small|e2e-100m   (default tiny)
+            --engine single|ddp|fsdp|tp|rtp-inplace|rtp-outofplace
+            --workers N  --global-batch B  --steps K  --lr F
+            --optimizer sgd|momentum|adam  --exec pjrt|pallas|oracle
+            --seed S  --quiet
+  simulate  model one step at paper scale (virtual mode)
+            --preset gpt2-500m|...  --engine ...  --workers N
+            --batch B  --hw a100|v100  --no-capacity  --no-recycle
+  trace     print the rotation schedule (paper Figs 1-2)
+            --workers N  --preset tiny
+  inspect   --presets (Table 2) | --preset <name> (config + memory model)
+  help      this text
+
+Figures/benches: `cargo bench` regenerates every paper table and figure
+into figures/ (see DESIGN.md §5 for the index).
+";
+
+fn exec_kind(args: &Args) -> Result<ExecKind> {
+    Ok(match args.get_or("exec", "oracle") {
+        "pjrt" => ExecKind::Pjrt,
+        "pallas" => ExecKind::PjrtPallas,
+        "oracle" => ExecKind::Oracle,
+        "virtual" => ExecKind::Virtual,
+        other => bail!("unknown --exec {other:?}"),
+    })
+}
+
+fn strategy(args: &Args) -> Result<Strategy> {
+    let name = args.get_or("engine", "rtp-inplace");
+    Strategy::parse(name).ok_or_else(|| anyhow!("unknown --engine {name:?}"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "tiny");
+    let strategy = strategy(args)?;
+    let workers = args.usize_or("workers", 2)?;
+    let global_batch = args.usize_or("global-batch", 4)?;
+    let tcfg = TrainCfg {
+        steps: args.usize_or("steps", 50)?,
+        lr: args.f32_or("lr", 1e-3)?,
+        optimizer: OptimizerKind::parse(args.get_or("optimizer", "adam"))
+            .ok_or_else(|| anyhow!("unknown --optimizer"))?,
+        seed: args.u64_or("seed", 42)?,
+        log_every: args.usize_or("log-every", 10)?,
+    };
+    let opts = EngineOpts::new(preset, strategy, workers, global_batch)
+        .exec(exec_kind(args)?)
+        .seed(tcfg.seed);
+    let cfg = opts.cfg()?;
+    let mut engine = build_engine(&opts)?;
+    println!(
+        "training {preset} ({} params) with {} on {} workers, global batch {global_batch}, exec {}",
+        cfg.params_total(),
+        engine.name(),
+        engine.ctx().cluster.n(),
+        args.get_or("exec", "oracle"),
+    );
+    let mut corpus = MarkovCorpus::new(&cfg, tcfg.seed);
+    let mut opt = Optimizer::new(tcfg.optimizer, tcfg.lr);
+    let report = train(
+        &mut *engine,
+        &mut opt,
+        &mut corpus,
+        &tcfg,
+        global_batch,
+        args.switch("quiet"),
+    )?;
+    let (head, tail) = report.head_tail_means(5);
+    println!(
+        "done: {} steps in {:.1}s ({:.0} tok/s), loss {head:.4} -> {tail:.4}, peak/worker {}",
+        report.steps,
+        report.wall_s,
+        report.tokens_per_s,
+        human(report.peak_bytes_per_worker)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let hw = by_name(args.get_or("hw", "a100"))
+        .ok_or_else(|| anyhow!("unknown --hw (a100|v100|cpu)"))?;
+    let mut spec = SimSpec::new(
+        args.get_or("preset", "gpt2-500m"),
+        strategy(args)?,
+        args.usize_or("workers", 8)?,
+        args.usize_or("batch", 8)?,
+        hw,
+    );
+    spec.enforce_capacity = !args.switch("no-capacity");
+    spec.rtp_recycle = !args.switch("no-recycle");
+    if let Some(o) = args.get("optimizer") {
+        spec.optimizer =
+            OptimizerKind::parse(o).ok_or_else(|| anyhow!("unknown --optimizer"))?;
+    }
+    let r = simulate(&spec)?;
+    let mut t = Table::new(
+        &format!(
+            "simulate {} / {} / N={} / batch {} on {}",
+            spec.preset, spec.strategy, spec.workers, spec.global_batch, spec.hw.name
+        ),
+        &["metric", "value"],
+    );
+    if let Some(oom) = &r.oom {
+        t.row(vec!["OOM".into(), oom.clone()]);
+    } else {
+        t.row(vec!["step time".into(), format!("{:.3} ms", r.step_time * 1e3)]);
+        t.row(vec!["throughput".into(), format!("{:.0} wps", r.wps)]);
+        t.row(vec!["compute util".into(), format!("{:.0}%", r.compute_util * 100.0)]);
+        t.row(vec!["comm util".into(), format!("{:.0}%", r.comm_util * 100.0)]);
+        t.row(vec!["alloc stalls".into(), r.stalls.to_string()]);
+    }
+    t.row(vec!["peak/worker".into(), human(r.peak_per_worker)]);
+    t.row(vec!["peak total".into(), human(r.peak_total)]);
+    for (cat, v) in &r.peak_by_cat {
+        t.row(vec![format!("  at-peak {cat}"), human(*v)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 4)?;
+    let preset = args.get_or("preset", "tiny");
+    let opts = EngineOpts::new(preset, Strategy::RtpInplace, workers, workers)
+        .exec(ExecKind::Virtual)
+        .trace(true);
+    let cfg = opts.cfg()?;
+    let mut engine = build_engine(&opts)?;
+    let batch = Batch::synth(&cfg, workers, &mut Rng::new(1));
+    engine.step(&batch)?;
+    println!("{}", engine.ctx().cluster.trace.render());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    if args.switch("presets") {
+        let mut t = Table::new(
+            "model presets (paper Table 2 + runtime)",
+            &["name", "vocab", "hidden", "heads", "layers", "seq", "ffn", "params", "weights"],
+        );
+        for name in presets::all_names() {
+            let m = presets::get(&name).unwrap();
+            t.row(vec![
+                m.name.clone(),
+                m.vocab.to_string(),
+                m.hidden.to_string(),
+                m.heads.to_string(),
+                m.layers.to_string(),
+                m.seq.to_string(),
+                m.ffn.to_string(),
+                m.params_total().to_string(),
+                human(m.weight_bytes()),
+            ]);
+        }
+        t.print();
+        return Ok(());
+    }
+    let name = args
+        .get("preset")
+        .ok_or_else(|| anyhow!("inspect needs --presets or --preset <name>"))?;
+    let m = presets::get(name).ok_or_else(|| anyhow!("unknown preset {name:?}"))?;
+    println!("{m:#?}");
+    let (a, w) = (m.activation_bytes_per_sample(), m.weight_bytes());
+    println!("weights: {}", human(w));
+    println!("activations/sample: {}", human(a));
+    let mut t = Table::new(
+        "Table 1 (analytic, N=8, batch 8, G=W)",
+        &["technique", "activations", "parameters", "duplication"],
+    );
+    for s in Strategy::ALL {
+        let r = rtp::memory::analytic::table1_row(s, 8 * a, w, w, 8);
+        t.row(vec![
+            r.technique,
+            human(r.activations),
+            human(r.parameters),
+            human(r.duplication),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    let result = match sub.as_str() {
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "trace" => cmd_trace(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

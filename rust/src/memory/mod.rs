@@ -1,0 +1,11 @@
+//! Memory accounting — the instrument behind the paper's headline claims.
+//!
+//! `tracker` records every allocation the engines make (per worker, per
+//! category) and reports live/peak bytes; `analytic` is the closed-form
+//! Table-1 model the measurements are cross-checked against.
+
+pub mod analytic;
+pub mod tracker;
+
+pub use analytic::{table1_row, Table1Row};
+pub use tracker::{AllocId, MemCategory, MemTracker, OomError};

@@ -1,0 +1,248 @@
+//! Per-worker allocation tracker.
+//!
+//! The substitute for `torch.cuda.max_memory_allocated` + the 80 GB device
+//! cap (DESIGN.md §2): engines route every buffer they create through this
+//! tracker, in real mode *and* in virtual mode, so peak-memory figures are
+//! properties of the allocation schedule, not of host RAM.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// What a buffer is for — the categories of paper Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MemCategory {
+    /// Model weights (paper: W).
+    Weights,
+    /// Gradients (paper: G).
+    Grads,
+    /// Optimizer state (momentum/Adam moments).
+    OptState,
+    /// Activations incl. logits (paper: A).
+    Activations,
+    /// Rotation / allgather communication buffers — the duplication the
+    /// paper is about.
+    CommBuf,
+}
+
+impl MemCategory {
+    pub const ALL: [MemCategory; 5] = [
+        MemCategory::Weights,
+        MemCategory::Grads,
+        MemCategory::OptState,
+        MemCategory::Activations,
+        MemCategory::CommBuf,
+    ];
+}
+
+impl fmt::Display for MemCategory {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            MemCategory::Weights => "weights",
+            MemCategory::Grads => "grads",
+            MemCategory::OptState => "opt-state",
+            MemCategory::Activations => "activations",
+            MemCategory::CommBuf => "comm-buf",
+        };
+        f.write_str(s)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AllocId(pub u64);
+
+#[derive(Debug, thiserror::Error)]
+#[error(
+    "OOM on worker {worker}: requested {requested} B ({category}) with \
+     {live} B live, capacity {capacity} B"
+)]
+pub struct OomError {
+    pub worker: usize,
+    pub requested: u64,
+    pub live: u64,
+    pub capacity: u64,
+    pub category: MemCategory,
+}
+
+/// Tracks live and peak allocated bytes for one (simulated) device.
+#[derive(Debug, Clone)]
+pub struct MemTracker {
+    pub worker: usize,
+    /// None = unlimited (analysis mode); Some = device capacity, alloc
+    /// failures surface as OomError like a CUDA OOM would.
+    pub capacity: Option<u64>,
+    next_id: u64,
+    allocs: HashMap<u64, (MemCategory, u64)>,
+    live: u64,
+    live_by_cat: HashMap<MemCategory, u64>,
+    peak: u64,
+    /// Per-category live at the moment of the global peak.
+    peak_snapshot: HashMap<MemCategory, u64>,
+    /// Total bytes ever allocated (allocator churn metric for §Perf).
+    pub total_allocated: u64,
+    pub alloc_count: u64,
+}
+
+impl MemTracker {
+    pub fn new(worker: usize, capacity: Option<u64>) -> Self {
+        MemTracker {
+            worker,
+            capacity,
+            next_id: 0,
+            allocs: HashMap::new(),
+            live: 0,
+            live_by_cat: HashMap::new(),
+            peak: 0,
+            peak_snapshot: HashMap::new(),
+            total_allocated: 0,
+            alloc_count: 0,
+        }
+    }
+
+    pub fn alloc(
+        &mut self,
+        cat: MemCategory,
+        bytes: u64,
+    ) -> Result<AllocId, OomError> {
+        if let Some(cap) = self.capacity {
+            if self.live + bytes > cap {
+                return Err(OomError {
+                    worker: self.worker,
+                    requested: bytes,
+                    live: self.live,
+                    capacity: cap,
+                    category: cat,
+                });
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.allocs.insert(id, (cat, bytes));
+        self.live += bytes;
+        *self.live_by_cat.entry(cat).or_insert(0) += bytes;
+        self.total_allocated += bytes;
+        self.alloc_count += 1;
+        if self.live > self.peak {
+            self.peak = self.live;
+            self.peak_snapshot = self.live_by_cat.clone();
+        }
+        Ok(AllocId(id))
+    }
+
+    pub fn free(&mut self, id: AllocId) {
+        let (cat, bytes) = self
+            .allocs
+            .remove(&id.0)
+            .expect("double free or unknown AllocId");
+        self.live -= bytes;
+        *self.live_by_cat.get_mut(&cat).unwrap() -= bytes;
+    }
+
+    /// Recategorize an allocation in place — the paper §3.4.4 buffer-TTL
+    /// recycling: a dead comm buffer's bytes are repurposed for output
+    /// activations without a free+alloc cycle (and without touching peak).
+    pub fn recycle(&mut self, id: AllocId, to: MemCategory) {
+        let entry = self.allocs.get_mut(&id.0).expect("unknown AllocId");
+        let (from, bytes) = *entry;
+        entry.0 = to;
+        *self.live_by_cat.get_mut(&from).unwrap() -= bytes;
+        *self.live_by_cat.entry(to).or_insert(0) += bytes;
+    }
+
+    pub fn live(&self) -> u64 {
+        self.live
+    }
+    pub fn live_of(&self, cat: MemCategory) -> u64 {
+        self.live_by_cat.get(&cat).copied().unwrap_or(0)
+    }
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+    pub fn peak_of(&self, cat: MemCategory) -> u64 {
+        self.peak_snapshot.get(&cat).copied().unwrap_or(0)
+    }
+    pub fn outstanding(&self) -> usize {
+        self.allocs.len()
+    }
+
+    /// Reset the peak statistic (e.g. after warmup step), keeping live.
+    pub fn reset_peak(&mut self) {
+        self.peak = self.live;
+        self.peak_snapshot = self.live_by_cat.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_and_peak() {
+        let mut t = MemTracker::new(0, None);
+        let a = t.alloc(MemCategory::Weights, 100).unwrap();
+        let b = t.alloc(MemCategory::Activations, 50).unwrap();
+        assert_eq!(t.live(), 150);
+        assert_eq!(t.peak(), 150);
+        t.free(b);
+        assert_eq!(t.live(), 100);
+        assert_eq!(t.peak(), 150);
+        let _c = t.alloc(MemCategory::Grads, 20).unwrap();
+        assert_eq!(t.peak(), 150); // 120 < 150
+        t.free(a);
+        assert_eq!(t.live_of(MemCategory::Weights), 0);
+    }
+
+    #[test]
+    fn peak_snapshot_by_category() {
+        let mut t = MemTracker::new(0, None);
+        let _w = t.alloc(MemCategory::Weights, 100).unwrap();
+        let a = t.alloc(MemCategory::CommBuf, 70).unwrap();
+        t.free(a);
+        let _b = t.alloc(MemCategory::Activations, 30).unwrap();
+        // peak was at weights=100, comm=70
+        assert_eq!(t.peak(), 170);
+        assert_eq!(t.peak_of(MemCategory::CommBuf), 70);
+        assert_eq!(t.peak_of(MemCategory::Activations), 0);
+    }
+
+    #[test]
+    fn capacity_oom() {
+        let mut t = MemTracker::new(3, Some(100));
+        let _a = t.alloc(MemCategory::Weights, 80).unwrap();
+        let err = t.alloc(MemCategory::Activations, 30).unwrap_err();
+        assert_eq!(err.worker, 3);
+        assert_eq!(err.live, 80);
+        // freeing makes room
+    }
+
+    #[test]
+    fn recycle_keeps_live_constant() {
+        let mut t = MemTracker::new(0, None);
+        let c = t.alloc(MemCategory::CommBuf, 64).unwrap();
+        let live = t.live();
+        t.recycle(c, MemCategory::Activations);
+        assert_eq!(t.live(), live);
+        assert_eq!(t.live_of(MemCategory::CommBuf), 0);
+        assert_eq!(t.live_of(MemCategory::Activations), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut t = MemTracker::new(0, None);
+        let a = t.alloc(MemCategory::Weights, 8).unwrap();
+        t.free(a);
+        t.free(a);
+    }
+
+    #[test]
+    fn churn_counters() {
+        let mut t = MemTracker::new(0, None);
+        for _ in 0..5 {
+            let a = t.alloc(MemCategory::Activations, 10).unwrap();
+            t.free(a);
+        }
+        assert_eq!(t.total_allocated, 50);
+        assert_eq!(t.alloc_count, 5);
+        assert_eq!(t.live(), 0);
+    }
+}

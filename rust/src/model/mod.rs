@@ -1,0 +1,16 @@
+//! The model layer: GPT-2/MoE parameter structures, the op catalog shared
+//! with the AOT artifacts, the partition strategies of paper §3.2, and a
+//! pure-rust oracle implementation of every op.
+//!
+//! The engines never hard-code shapes: everything flows from
+//! [`ops::input_shapes`] / [`ops::output_shapes`], which mirror
+//! `python/compile/aot.py::op_instances` exactly (cross-checked against the
+//! manifest by `tests/integration_runtime.rs`).
+
+pub mod oracle;
+pub mod ops;
+pub mod params;
+pub mod partition;
+
+pub use ops::{Op, OpCost};
+pub use params::{ExpertParams, LayerParams, MlpParams, ModelParams};

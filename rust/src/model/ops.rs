@@ -1,0 +1,439 @@
+//! The op catalog — the single source of truth for what compute exists.
+//!
+//! Every entry mirrors one AOT'd HLO artifact emitted by
+//! `python/compile/aot.py` (keys `{op}__b{b}__p{p}[__pallas]`). The shape
+//! functions reproduce the python arg specs exactly; the cost functions
+//! price each op for the perf model (gemm list for occupancy modeling +
+//! elementwise byte traffic).
+
+use crate::config::ModelCfg;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    EmbFwd,
+    EmbBwd,
+    LnFwd,
+    LnBwd,
+    AttnFwd,
+    AttnBwd,
+    MlpFwd,
+    MlpBwd,
+    LmheadFwd,
+    LmheadBwd,
+    Xent,
+    RouterFwd,
+    RouterBwd,
+    MoeFwd,
+    MoeBwd,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl Op {
+    pub const ALL: [Op; 15] = [
+        Op::EmbFwd,
+        Op::EmbBwd,
+        Op::LnFwd,
+        Op::LnBwd,
+        Op::AttnFwd,
+        Op::AttnBwd,
+        Op::MlpFwd,
+        Op::MlpBwd,
+        Op::LmheadFwd,
+        Op::LmheadBwd,
+        Op::Xent,
+        Op::RouterFwd,
+        Op::RouterBwd,
+        Op::MoeFwd,
+        Op::MoeBwd,
+    ];
+
+    pub fn key_name(&self) -> &'static str {
+        match self {
+            Op::EmbFwd => "emb_fwd",
+            Op::EmbBwd => "emb_bwd",
+            Op::LnFwd => "ln_fwd",
+            Op::LnBwd => "ln_bwd",
+            Op::AttnFwd => "attn_fwd",
+            Op::AttnBwd => "attn_bwd",
+            Op::MlpFwd => "mlp_fwd",
+            Op::MlpBwd => "mlp_bwd",
+            Op::LmheadFwd => "lmhead_fwd",
+            Op::LmheadBwd => "lmhead_bwd",
+            Op::Xent => "xent",
+            Op::RouterFwd => "router_fwd",
+            Op::RouterBwd => "router_bwd",
+            Op::MoeFwd => "moe_fwd",
+            Op::MoeBwd => "moe_bwd",
+        }
+    }
+
+    /// Manifest key for a (local batch, partition) instance.
+    pub fn artifact_key(&self, b: usize, p: usize, pallas: bool) -> String {
+        // loss + MoE ops are emitted once per batch under p=1 (aot.py)
+        let p = if self.batch_only() { 1 } else { p };
+        let suffix = if pallas { "__pallas" } else { "" };
+        format!("{}__b{}__p{}{}", self.key_name(), b, p, suffix)
+    }
+
+    /// Ops whose artifact shape depends only on the local batch, not on
+    /// the partition factor (xent; MoE per-expert ops).
+    pub fn batch_only(&self) -> bool {
+        matches!(
+            self,
+            Op::Xent | Op::RouterFwd | Op::RouterBwd | Op::MoeFwd | Op::MoeBwd
+        )
+    }
+}
+
+impl std::fmt::Display for Op {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key_name())
+    }
+}
+
+/// Input dtypes+shapes for `op` at local batch `b`, partition factor `p` —
+/// mirrors `aot.py::op_instances` arg specs.
+pub fn input_shapes(op: Op, cfg: &ModelCfg, b: usize, p: usize) -> Vec<(DType, Vec<usize>)> {
+    let (v, h, s, f) = (cfg.vocab, cfg.hidden, cfg.seq, cfg.ffn);
+    let (hp, fp, vp) = (h / p, f / p, v / p);
+    let (e, fe) = (cfg.experts, cfg.expert_ffn);
+    use DType::*;
+    match op {
+        Op::EmbFwd => vec![(I32, vec![b, s]), (F32, vec![v, hp]), (F32, vec![s, hp])],
+        Op::EmbBwd => vec![(I32, vec![b, s]), (F32, vec![b, s, hp])],
+        Op::LnFwd => vec![(F32, vec![b, s, h]), (F32, vec![h]), (F32, vec![h])],
+        // NOTE: ln_bwd takes (x, g, dy) — the bias value does not enter
+        // any gradient (python/compile/model.py)
+        Op::LnBwd => vec![
+            (F32, vec![b, s, h]),
+            (F32, vec![h]),
+            (F32, vec![b, s, h]),
+        ],
+        Op::AttnFwd => vec![
+            (F32, vec![b, s, h]),
+            (F32, vec![h, 3 * hp]),
+            (F32, vec![3 * hp]),
+            (F32, vec![hp, h]),
+        ],
+        Op::AttnBwd => vec![
+            (F32, vec![b, s, h]),
+            (F32, vec![h, 3 * hp]),
+            (F32, vec![3 * hp]),
+            (F32, vec![hp, h]),
+            (F32, vec![b, s, h]),
+        ],
+        Op::MlpFwd => vec![
+            (F32, vec![b, s, h]),
+            (F32, vec![h, fp]),
+            (F32, vec![fp]),
+            (F32, vec![fp, h]),
+        ],
+        Op::MlpBwd => vec![
+            (F32, vec![b, s, h]),
+            (F32, vec![h, fp]),
+            (F32, vec![fp]),
+            (F32, vec![fp, h]),
+            (F32, vec![b, s, h]),
+        ],
+        Op::LmheadFwd => vec![(F32, vec![b, s, h]), (F32, vec![h, vp])],
+        Op::LmheadBwd => {
+            vec![(F32, vec![b, s, h]), (F32, vec![h, vp]), (F32, vec![b, s, vp])]
+        }
+        Op::Xent => vec![(F32, vec![b, s, v]), (I32, vec![b, s])],
+        Op::RouterFwd => vec![(F32, vec![b, s, h]), (F32, vec![h, e])],
+        Op::RouterBwd => {
+            vec![(F32, vec![b, s, h]), (F32, vec![h, e]), (F32, vec![b, s, e])]
+        }
+        Op::MoeFwd => vec![
+            (F32, vec![b, s, h]),
+            (F32, vec![b, s]),
+            (F32, vec![h, fe]),
+            (F32, vec![fe]),
+            (F32, vec![fe, h]),
+        ],
+        Op::MoeBwd => vec![
+            (F32, vec![b, s, h]),
+            (F32, vec![b, s]),
+            (F32, vec![h, fe]),
+            (F32, vec![fe]),
+            (F32, vec![fe, h]),
+            (F32, vec![b, s, h]),
+        ],
+    }
+}
+
+/// Output shapes (all f32) — mirrors the python op return tuples.
+pub fn output_shapes(op: Op, cfg: &ModelCfg, b: usize, p: usize) -> Vec<Vec<usize>> {
+    let (v, h, s, f) = (cfg.vocab, cfg.hidden, cfg.seq, cfg.ffn);
+    let (hp, fp, vp) = (h / p, f / p, v / p);
+    let (e, fe) = (cfg.experts, cfg.expert_ffn);
+    match op {
+        Op::EmbFwd => vec![vec![b, s, hp]],
+        Op::EmbBwd => vec![vec![v, hp], vec![s, hp]],
+        Op::LnFwd => vec![vec![b, s, h]],
+        Op::LnBwd => vec![vec![b, s, h], vec![h], vec![h]],
+        Op::AttnFwd => vec![vec![b, s, h]],
+        Op::AttnBwd => {
+            vec![vec![b, s, h], vec![h, 3 * hp], vec![3 * hp], vec![hp, h]]
+        }
+        Op::MlpFwd => vec![vec![b, s, h]],
+        Op::MlpBwd => vec![vec![b, s, h], vec![h, fp], vec![fp], vec![fp, h]],
+        Op::LmheadFwd => vec![vec![b, s, vp]],
+        Op::LmheadBwd => vec![vec![b, s, h], vec![h, vp]],
+        Op::Xent => vec![vec![], vec![b, s, v]],
+        Op::RouterFwd => vec![vec![b, s, e]],
+        Op::RouterBwd => vec![vec![b, s, h], vec![h, e]],
+        Op::MoeFwd => vec![vec![b, s, h]],
+        Op::MoeBwd => {
+            vec![vec![b, s, h], vec![b, s], vec![h, fe], vec![fe], vec![fe, h]]
+        }
+    }
+}
+
+/// Cost profile of one op instance, for the roofline model (§3.4.1).
+#[derive(Debug, Clone, Default)]
+pub struct OpCost {
+    /// GEMMs as (m, k, n) — the occupancy-relevant kernels.
+    pub gemms: Vec<[usize; 3]>,
+    /// Elementwise/reduction flops outside the GEMMs.
+    pub ew_flops: f64,
+    /// Total bytes touched (inputs + outputs, f32).
+    pub bytes: f64,
+}
+
+impl OpCost {
+    pub fn gemm_flops(&self) -> f64 {
+        self.gemms.iter().map(|[m, k, n]| 2.0 * (*m as f64) * (*k as f64) * (*n as f64)).sum()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.gemm_flops() + self.ew_flops
+    }
+
+    /// Number of kernel launches charged (one per GEMM + one fused
+    /// elementwise kernel when any elementwise work exists).
+    pub fn kernels(&self) -> usize {
+        self.gemms.len() + usize::from(self.ew_flops > 0.0)
+    }
+}
+
+fn io_bytes(op: Op, cfg: &ModelCfg, b: usize, p: usize) -> f64 {
+    let ins: usize = input_shapes(op, cfg, b, p)
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum();
+    let outs: usize = output_shapes(op, cfg, b, p)
+        .iter()
+        .map(|s| s.iter().product::<usize>().max(1))
+        .sum();
+    ((ins + outs) * 4) as f64
+}
+
+/// Cost of one op instance. Backward GEMMs are enumerated explicitly
+/// (dx = dy·Wᵀ and dW = xᵀ·dy per forward GEMM — the standard 2× rule,
+/// plus recomputation of the forward internals, matching the
+/// recompute-from-inputs backward the artifacts implement).
+pub fn op_cost(op: Op, cfg: &ModelCfg, b: usize, p: usize) -> OpCost {
+    let (v, h, s, f) = (cfg.vocab, cfg.hidden, cfg.seq, cfg.ffn);
+    let (hp, fp, vp) = (h / p, f / p, v / p);
+    let (e, fe) = (cfg.experts, cfg.expert_ffn);
+    let t = b * s; // token rows
+    let hd = cfg.head_dim();
+    let nh_p = cfg.heads / p;
+    let bytes = io_bytes(op, cfg, b, p);
+    let mut c = OpCost { bytes, ..Default::default() };
+    match op {
+        Op::EmbFwd => {
+            // gather + add: elementwise only
+            c.ew_flops = (t * hp) as f64;
+        }
+        Op::EmbBwd => {
+            // scatter-add + reduction
+            c.ew_flops = 2.0 * (t * hp) as f64;
+        }
+        Op::LnFwd => c.ew_flops = 8.0 * (t * h) as f64,
+        Op::LnBwd => c.ew_flops = 16.0 * (t * h) as f64,
+        Op::AttnFwd => {
+            c.gemms.push([t, h, 3 * hp]); // qkv projection
+            for _ in 0..b * nh_p {
+                c.gemms.push([s, hd, s]); // q·kᵀ
+                c.gemms.push([s, s, hd]); // p·v
+            }
+            c.gemms.push([t, hp, h]); // output projection
+            c.ew_flops = 5.0 * (b * nh_p * s * s) as f64; // softmax+mask
+        }
+        Op::AttnBwd => {
+            // recompute fwd + grads for each fwd GEMM
+            let fwd = op_cost(Op::AttnFwd, cfg, b, p);
+            c.gemms.extend_from_slice(&fwd.gemms);
+            c.gemms.push([t, 3 * hp, h]); // dx  = dqkv·Wᵀ
+            c.gemms.push([h, t, 3 * hp]); // dW  = xᵀ·dqkv
+            for _ in 0..b * nh_p {
+                c.gemms.push([s, hd, s]); // dlogits via do·vᵀ
+                c.gemms.push([s, s, hd]); // dv
+                c.gemms.push([s, s, hd]); // dq
+                c.gemms.push([s, s, hd]); // dk
+            }
+            c.gemms.push([t, h, hp]); // do = dy·woᵀ
+            c.gemms.push([hp, t, h]); // dwo
+            c.ew_flops = 2.0 * fwd.ew_flops;
+        }
+        Op::MlpFwd => {
+            c.gemms.push([t, h, fp]);
+            c.gemms.push([t, fp, h]);
+            c.ew_flops = 8.0 * (t * fp) as f64; // gelu
+        }
+        Op::MlpBwd => {
+            c.gemms.push([t, h, fp]); // recompute hidden
+            c.gemms.push([t, h, fp]); // dpre = dh*gelu' then dx path below
+            c.gemms.push([t, fp, h]); // dh = dy·w2ᵀ
+            c.gemms.push([fp, t, h]); // dw2
+            c.gemms.push([t, fp, h]); // dx = dpre·w1ᵀ
+            c.gemms.push([h, t, fp]); // dw1
+            c.ew_flops = 16.0 * (t * fp) as f64;
+        }
+        Op::LmheadFwd => c.gemms.push([t, h, vp]),
+        Op::LmheadBwd => {
+            c.gemms.push([t, vp, h]); // dx
+            c.gemms.push([h, t, vp]); // dW
+        }
+        Op::Xent => c.ew_flops = 6.0 * (t * v) as f64,
+        Op::RouterFwd => {
+            c.gemms.push([t, h, e]);
+            c.ew_flops = 5.0 * (t * e) as f64;
+        }
+        Op::RouterBwd => {
+            c.gemms.push([t, h, e]);
+            c.gemms.push([t, e, h]);
+            c.gemms.push([h, t, e]);
+            c.ew_flops = 10.0 * (t * e) as f64;
+        }
+        Op::MoeFwd => {
+            // top-1 routing sends ~t/E tokens to each expert; the engines'
+            // dense-masked REAL compute runs all t rows (zero-gated), but
+            // the perf model charges the routed-token cost every real MoE
+            // system (incl. the paper's) pays. DESIGN.md §2 records this.
+            let tr = (t / e.max(1)).max(1);
+            c.gemms.push([tr, h, fe]);
+            c.gemms.push([tr, fe, h]);
+            c.ew_flops = 9.0 * (tr * fe) as f64;
+        }
+        Op::MoeBwd => {
+            let tr = (t / e.max(1)).max(1);
+            c.gemms.push([tr, h, fe]);
+            c.gemms.push([tr, h, fe]);
+            c.gemms.push([tr, fe, h]);
+            c.gemms.push([fe, tr, h]);
+            c.gemms.push([tr, fe, h]);
+            c.gemms.push([h, tr, fe]);
+            c.ew_flops = 18.0 * (tr * fe) as f64;
+        }
+    }
+    c
+}
+
+/// Elements of every output of `op` — what the engines allocate.
+pub fn output_elems(op: Op, cfg: &ModelCfg, b: usize, p: usize) -> usize {
+    output_shapes(op, cfg, b, p)
+        .iter()
+        .map(|s| s.iter().product::<usize>().max(1))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn tiny() -> ModelCfg {
+        presets::get("tiny").unwrap()
+    }
+
+    #[test]
+    fn artifact_keys_match_python_convention() {
+        assert_eq!(Op::AttnFwd.artifact_key(2, 4, false), "attn_fwd__b2__p4");
+        assert_eq!(Op::MlpBwd.artifact_key(1, 2, true), "mlp_bwd__b1__p2__pallas");
+        // batch-only ops pin p=1 regardless of the engine's partition
+        assert_eq!(Op::Xent.artifact_key(2, 4, false), "xent__b2__p1");
+        assert_eq!(Op::MoeFwd.artifact_key(2, 4, false), "moe_fwd__b2__p1");
+    }
+
+    #[test]
+    fn shard_shapes_divide_full_shapes() {
+        let cfg = tiny();
+        for op in Op::ALL {
+            if op.batch_only() && cfg.experts == 0 && op != Op::Xent {
+                continue;
+            }
+            let full = input_shapes(op, &cfg, 2, 1);
+            let shard = input_shapes(op, &cfg, 2, 4);
+            assert_eq!(full.len(), shard.len(), "{op}");
+            for ((_, f), (_, s)) in full.iter().zip(&shard) {
+                let fn_: usize = f.iter().product();
+                let sn: usize = s.iter().product();
+                assert!(fn_ % sn == 0, "{op}: {f:?} vs {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_costs_exceed_forward() {
+        let cfg = tiny();
+        for (fwd, bwd) in [
+            (Op::AttnFwd, Op::AttnBwd),
+            (Op::MlpFwd, Op::MlpBwd),
+            (Op::LmheadFwd, Op::LmheadBwd),
+            (Op::LnFwd, Op::LnBwd),
+        ] {
+            let f = op_cost(fwd, &cfg, 2, 2).total_flops();
+            let b = op_cost(bwd, &cfg, 2, 2).total_flops();
+            assert!(b > 1.5 * f, "{bwd} flops {b} vs {fwd} {f}");
+        }
+    }
+
+    #[test]
+    fn shard_cost_is_about_one_over_p() {
+        // The paper's E_compute = N × Kernel(B/N, I, O/N) claim: one shard
+        // op does ~1/p of the full op's GEMM flops.
+        let cfg = tiny();
+        for op in [Op::AttnFwd, Op::MlpFwd, Op::LmheadFwd] {
+            let full = op_cost(op, &cfg, 2, 1).gemm_flops();
+            let shard = op_cost(op, &cfg, 2, 4).gemm_flops();
+            let ratio = full / shard;
+            assert!(
+                (3.0..5.0).contains(&ratio),
+                "{op}: full/shard = {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn output_elems_match_shapes() {
+        let cfg = tiny();
+        // xent outputs: scalar (counted as 1) + dlogits
+        let n = output_elems(Op::Xent, &cfg, 2, 1);
+        assert_eq!(n, 1 + 2 * cfg.seq * cfg.vocab);
+    }
+
+    #[test]
+    fn gemm_flops_hand_value() {
+        let c = OpCost { gemms: vec![[2, 3, 4]], ew_flops: 10.0, bytes: 0.0 };
+        assert_eq!(c.gemm_flops(), 48.0);
+        assert_eq!(c.total_flops(), 58.0);
+        assert_eq!(c.kernels(), 2);
+    }
+
+    #[test]
+    fn moe_shapes_use_expert_ffn() {
+        let cfg = presets::get("tiny-moe").unwrap();
+        let ins = input_shapes(Op::MoeFwd, &cfg, 2, 1);
+        assert_eq!(ins[2].1, vec![cfg.hidden, cfg.expert_ffn]);
+        let outs = output_shapes(Op::RouterFwd, &cfg, 2, 1);
+        assert_eq!(outs[0], vec![2, cfg.seq, cfg.experts]);
+    }
+}

@@ -1,0 +1,964 @@
+//! Pure-rust oracle for every catalog op.
+//!
+//! Numerically mirrors `python/compile/kernels/ref.py` + `model.py`
+//! (tanh-GeLU, causal attention with recompute-from-inputs backward,
+//! mean-reduced cross-entropy with dlogits pre-scaled by 1/T).
+//!
+//! Three jobs:
+//! 1. unit/property tests of the engines run without AOT artifacts;
+//! 2. an independent cross-check of the PJRT path (oracle == HLO within
+//!    f32 tolerance, asserted in tests/integration_runtime.rs);
+//! 3. finite-difference ground truth for every backward op (tests below).
+//!
+//! Not a performance path — the hot path dispatches to AOT'd HLO.
+
+use crate::config::ModelCfg;
+use crate::tensor::ops::gelu;
+use crate::tensor::{HostTensor, IntTensor};
+
+use super::ops::Op;
+
+// ---------------------------------------------------------------------------
+// flat 2-D matmul helpers (row-major)
+// ---------------------------------------------------------------------------
+
+/// c[m,n] = a[m,k] @ b[k,n]
+fn mm(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// c[m,n] = a[m,k] @ b[n,k]ᵀ
+fn mm_nt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// c[m,n] = a[k,m]ᵀ @ b[k,n]
+fn mm_tn(a: &[f32], k: usize, m: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+fn col_sum(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; cols];
+    for r in 0..rows {
+        for (o, v) in out.iter_mut().zip(&a[r * cols..(r + 1) * cols]) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// d/dx of tanh-approximate GeLU.
+fn dgelu(x: f32) -> f32 {
+    let c = (2.0 / std::f32::consts::PI).sqrt();
+    let u = c * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * c * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+// ---------------------------------------------------------------------------
+// embedding (Output-Partition)
+// ---------------------------------------------------------------------------
+
+/// ids [b,S] i32, wte [V,Hp], wpe [S,Hp] -> x [b,S,Hp]
+pub fn emb_fwd(ids: &IntTensor, wte: &HostTensor, wpe: &HostTensor) -> HostTensor {
+    let (b, s) = (ids.shape[0], ids.shape[1]);
+    let hp = wte.last_dim();
+    let mut x = HostTensor::zeros(&[b, s, hp]);
+    for bi in 0..b {
+        for si in 0..s {
+            let id = ids.data[bi * s + si] as usize;
+            let dst = &mut x.data[(bi * s + si) * hp..(bi * s + si + 1) * hp];
+            let wte_row = &wte.data[id * hp..(id + 1) * hp];
+            let wpe_row = &wpe.data[si * hp..(si + 1) * hp];
+            for ((d, a), p) in dst.iter_mut().zip(wte_row).zip(wpe_row) {
+                *d = a + p;
+            }
+        }
+    }
+    x
+}
+
+/// ids, dx [b,S,Hp] -> (dwte [V,Hp], dwpe [S,Hp])
+pub fn emb_bwd(ids: &IntTensor, dx: &HostTensor, vocab: usize) -> (HostTensor, HostTensor) {
+    let (b, s) = (ids.shape[0], ids.shape[1]);
+    let hp = dx.last_dim();
+    let mut dwte = HostTensor::zeros(&[vocab, hp]);
+    let mut dwpe = HostTensor::zeros(&[s, hp]);
+    for bi in 0..b {
+        for si in 0..s {
+            let id = ids.data[bi * s + si] as usize;
+            let src = &dx.data[(bi * s + si) * hp..(bi * s + si + 1) * hp];
+            for (o, v) in dwte.data[id * hp..(id + 1) * hp].iter_mut().zip(src) {
+                *o += v;
+            }
+            for (o, v) in dwpe.data[si * hp..(si + 1) * hp].iter_mut().zip(src) {
+                *o += v;
+            }
+        }
+    }
+    (dwte, dwpe)
+}
+
+// ---------------------------------------------------------------------------
+// layernorm (replicated)
+// ---------------------------------------------------------------------------
+
+const LN_EPS: f32 = 1e-5;
+
+/// x [...,H], g [H], b [H] -> y
+pub fn ln_fwd(x: &HostTensor, g: &HostTensor, b: &HostTensor) -> HostTensor {
+    let h = x.last_dim();
+    let mut y = x.clone();
+    for row in y.data.chunks_mut(h) {
+        let mu = row.iter().sum::<f32>() / h as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / h as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mu) * inv * g.data[j] + b.data[j];
+        }
+    }
+    y
+}
+
+/// -> (dx, dg, db)
+pub fn ln_bwd(
+    x: &HostTensor,
+    g: &HostTensor,
+    dy: &HostTensor,
+) -> (HostTensor, HostTensor, HostTensor) {
+    let h = x.last_dim();
+    let rows = x.rows();
+    let mut dx = HostTensor::zeros(&x.shape);
+    let mut dg = HostTensor::zeros(&[h]);
+    let mut db = HostTensor::zeros(&[h]);
+    for r in 0..rows {
+        let xr = &x.data[r * h..(r + 1) * h];
+        let dyr = &dy.data[r * h..(r + 1) * h];
+        let mu = xr.iter().sum::<f32>() / h as f32;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / h as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let xhat: Vec<f32> = xr.iter().map(|v| (v - mu) * inv).collect();
+        let dxhat: Vec<f32> = dyr.iter().zip(&g.data).map(|(d, gg)| d * gg).collect();
+        let m1 = dxhat.iter().sum::<f32>() / h as f32;
+        let m2 = dxhat.iter().zip(&xhat).map(|(a, b)| a * b).sum::<f32>() / h as f32;
+        let dxr = &mut dx.data[r * h..(r + 1) * h];
+        for j in 0..h {
+            dxr[j] = (dxhat[j] - m1 - xhat[j] * m2) * inv;
+            dg.data[j] += dyr[j] * xhat[j];
+            db.data[j] += dyr[j];
+        }
+    }
+    (dx, dg, db)
+}
+
+// ---------------------------------------------------------------------------
+// attention (Number-of-head-Partition)
+// ---------------------------------------------------------------------------
+
+/// Causal softmax(q·kᵀ·scale)·v for one head: q, k, v [s, hd] ->
+/// (probs [s,s], o [s,hd]).
+fn head_attention(q: &[f32], k: &[f32], v: &[f32], s: usize, hd: usize)
+    -> (Vec<f32>, Vec<f32>)
+{
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut probs = vec![0.0f32; s * s];
+    for i in 0..s {
+        let qi = &q[i * hd..(i + 1) * hd];
+        let mut max = f32::MIN;
+        for j in 0..=i {
+            let kj = &k[j * hd..(j + 1) * hd];
+            let l: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+            probs[i * s + j] = l;
+            max = max.max(l);
+        }
+        let mut sum = 0.0;
+        for j in 0..=i {
+            let e = (probs[i * s + j] - max).exp();
+            probs[i * s + j] = e;
+            sum += e;
+        }
+        for j in 0..=i {
+            probs[i * s + j] /= sum;
+        }
+        // j > i stays exactly 0 (causal mask)
+    }
+    let o = mm(&probs, s, s, v, hd);
+    (probs, o)
+}
+
+struct QkvView<'a> {
+    qkv: &'a [f32],
+    b: usize,
+    s: usize,
+    nh_p: usize,
+    hd: usize,
+}
+
+impl<'a> QkvView<'a> {
+    /// Extract q|k|v (`which` 0..3) for (batch bi, head) as a dense [s,hd].
+    fn head(&self, which: usize, bi: usize, head: usize) -> Vec<f32> {
+        let cols = 3 * self.nh_p * self.hd;
+        let mut out = vec![0.0f32; self.s * self.hd];
+        for si in 0..self.s {
+            let row = (bi * self.s + si) * cols + which * self.nh_p * self.hd + head * self.hd;
+            out[si * self.hd..(si + 1) * self.hd]
+                .copy_from_slice(&self.qkv[row..row + self.hd]);
+        }
+        out
+    }
+}
+
+/// Scatter a [s,hd] head block back into a [t, 3·nh_p·hd] qkv grad buffer.
+fn scatter_head(
+    dqkv: &mut [f32],
+    block: &[f32],
+    which: usize,
+    bi: usize,
+    head: usize,
+    s: usize,
+    nh_p: usize,
+    hd: usize,
+) {
+    let cols = 3 * nh_p * hd;
+    for si in 0..s {
+        let row = (bi * s + si) * cols + which * nh_p * hd + head * hd;
+        for d in 0..hd {
+            dqkv[row + d] += block[si * hd + d];
+        }
+    }
+}
+
+/// x [b,S,H], wqkv [H,3Hp], bqkv [3Hp], wo [Hp,H] -> partial [b,S,H]
+pub fn attn_fwd(
+    x: &HostTensor,
+    wqkv: &HostTensor,
+    bqkv: &HostTensor,
+    wo: &HostTensor,
+    nh_p: usize,
+) -> HostTensor {
+    let (b, s, h) = (x.shape[0], x.shape[1], x.shape[2]);
+    let hp3 = wqkv.last_dim();
+    let hp = hp3 / 3;
+    let hd = hp / nh_p;
+    let t = b * s;
+    let mut qkv = mm(&x.data, t, h, &wqkv.data, hp3);
+    for row in qkv.chunks_mut(hp3) {
+        for (v, bb) in row.iter_mut().zip(&bqkv.data) {
+            *v += bb;
+        }
+    }
+    let view = QkvView { qkv: &qkv, b, s, nh_p, hd };
+    let mut o = vec![0.0f32; t * hp];
+    for bi in 0..b {
+        for head in 0..nh_p {
+            let q = view.head(0, bi, head);
+            let k = view.head(1, bi, head);
+            let v = view.head(2, bi, head);
+            let (_, oh) = head_attention(&q, &k, &v, s, hd);
+            for si in 0..s {
+                let dst = (bi * s + si) * hp + head * hd;
+                o[dst..dst + hd].copy_from_slice(&oh[si * hd..(si + 1) * hd]);
+            }
+        }
+    }
+    let out = mm(&o, t, hp, &wo.data, h);
+    HostTensor::from_vec(&[b, s, h], out)
+}
+
+/// Recompute-from-input backward. -> (dx, dwqkv, dbqkv, dwo)
+pub fn attn_bwd(
+    x: &HostTensor,
+    wqkv: &HostTensor,
+    bqkv: &HostTensor,
+    wo: &HostTensor,
+    dpartial: &HostTensor,
+    nh_p: usize,
+) -> (HostTensor, HostTensor, HostTensor, HostTensor) {
+    let (b, s, h) = (x.shape[0], x.shape[1], x.shape[2]);
+    let hp3 = wqkv.last_dim();
+    let hp = hp3 / 3;
+    let hd = hp / nh_p;
+    let t = b * s;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    // recompute qkv and per-head attention
+    let mut qkv = mm(&x.data, t, h, &wqkv.data, hp3);
+    for row in qkv.chunks_mut(hp3) {
+        for (v, bb) in row.iter_mut().zip(&bqkv.data) {
+            *v += bb;
+        }
+    }
+    let view = QkvView { qkv: &qkv, b, s, nh_p, hd };
+    let mut o = vec![0.0f32; t * hp];
+    let mut probs_all: Vec<Vec<f32>> = Vec::with_capacity(b * nh_p);
+    for bi in 0..b {
+        for head in 0..nh_p {
+            let q = view.head(0, bi, head);
+            let k = view.head(1, bi, head);
+            let v = view.head(2, bi, head);
+            let (probs, oh) = head_attention(&q, &k, &v, s, hd);
+            for si in 0..s {
+                let dst = (bi * s + si) * hp + head * hd;
+                o[dst..dst + hd].copy_from_slice(&oh[si * hd..(si + 1) * hd]);
+            }
+            probs_all.push(probs);
+        }
+    }
+
+    // output projection grads
+    let dwo = mm_tn(&o, t, hp, &dpartial.data, h);
+    let do_ = mm_nt(&dpartial.data, t, h, &wo.data, hp);
+
+    // per-head attention backward -> dqkv
+    let mut dqkv = vec![0.0f32; t * hp3];
+    for bi in 0..b {
+        for head in 0..nh_p {
+            let probs = &probs_all[bi * nh_p + head];
+            let q = view.head(0, bi, head);
+            let k = view.head(1, bi, head);
+            let v = view.head(2, bi, head);
+            // slice this head's do [s,hd]
+            let mut doh = vec![0.0f32; s * hd];
+            for si in 0..s {
+                let src = (bi * s + si) * hp + head * hd;
+                doh[si * hd..(si + 1) * hd].copy_from_slice(&do_[src..src + hd]);
+            }
+            let dprobs = mm_nt(&doh, s, hd, &v, s); // [s,s]
+            let dv = mm_tn(probs, s, s, &doh, hd); // [s,hd]
+            // softmax backward (masked entries have probs == 0)
+            let mut dl = vec![0.0f32; s * s];
+            for i in 0..s {
+                let pi = &probs[i * s..(i + 1) * s];
+                let dpi = &dprobs[i * s..(i + 1) * s];
+                let dot: f32 = pi.iter().zip(dpi).map(|(a, b)| a * b).sum();
+                for j in 0..s {
+                    dl[i * s + j] = pi[j] * (dpi[j] - dot);
+                }
+            }
+            let mut dq = mm(&dl, s, s, &k, hd);
+            dq.iter_mut().for_each(|v| *v *= scale);
+            let mut dk = mm_tn(&dl, s, s, &q, hd);
+            dk.iter_mut().for_each(|v| *v *= scale);
+            scatter_head(&mut dqkv, &dq, 0, bi, head, s, nh_p, hd);
+            scatter_head(&mut dqkv, &dk, 1, bi, head, s, nh_p, hd);
+            scatter_head(&mut dqkv, &dv, 2, bi, head, s, nh_p, hd);
+        }
+    }
+
+    let dbqkv = col_sum(&dqkv, t, hp3);
+    let dwqkv = mm_tn(&x.data, t, h, &dqkv, hp3);
+    let dx = mm_nt(&dqkv, t, hp3, &wqkv.data, h);
+    (
+        HostTensor::from_vec(&x.shape, dx),
+        HostTensor::from_vec(&[h, hp3], dwqkv),
+        HostTensor::from_vec(&[hp3], dbqkv),
+        HostTensor::from_vec(&[hp, h], dwo),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// MLP (Megatron pair)
+// ---------------------------------------------------------------------------
+
+/// x [b,S,H], w1 [H,Fp], b1 [Fp], w2 [Fp,H] -> partial [b,S,H]
+pub fn mlp_fwd(x: &HostTensor, w1: &HostTensor, b1: &HostTensor, w2: &HostTensor)
+    -> HostTensor
+{
+    let h = x.last_dim();
+    let fp = w1.last_dim();
+    let t = x.rows();
+    let mut pre = mm(&x.data, t, h, &w1.data, fp);
+    for row in pre.chunks_mut(fp) {
+        for (v, bb) in row.iter_mut().zip(&b1.data) {
+            *v = gelu(*v + bb);
+        }
+    }
+    let y = mm(&pre, t, fp, &w2.data, h);
+    HostTensor::from_vec(&x.shape, y)
+}
+
+/// -> (dx, dw1, db1, dw2)
+pub fn mlp_bwd(
+    x: &HostTensor,
+    w1: &HostTensor,
+    b1: &HostTensor,
+    w2: &HostTensor,
+    dy: &HostTensor,
+) -> (HostTensor, HostTensor, HostTensor, HostTensor) {
+    let h = x.last_dim();
+    let fp = w1.last_dim();
+    let t = x.rows();
+    // recompute pre-activation and hidden
+    let mut pre = mm(&x.data, t, h, &w1.data, fp);
+    for row in pre.chunks_mut(fp) {
+        for (v, bb) in row.iter_mut().zip(&b1.data) {
+            *v += bb;
+        }
+    }
+    let hid: Vec<f32> = pre.iter().map(|&v| gelu(v)).collect();
+    let dh = mm_nt(&dy.data, t, h, &w2.data, fp);
+    let dw2 = mm_tn(&hid, t, fp, &dy.data, h);
+    let dpre: Vec<f32> = dh.iter().zip(&pre).map(|(d, &p)| d * dgelu(p)).collect();
+    let db1 = col_sum(&dpre, t, fp);
+    let dw1 = mm_tn(&x.data, t, h, &dpre, fp);
+    let dx = mm_nt(&dpre, t, fp, &w1.data, h);
+    (
+        HostTensor::from_vec(&x.shape, dx),
+        HostTensor::from_vec(&[h, fp], dw1),
+        HostTensor::from_vec(&[fp], db1),
+        HostTensor::from_vec(&[fp, h], dw2),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// LM head (Output-Partition, no bias)
+// ---------------------------------------------------------------------------
+
+pub fn lmhead_fwd(x: &HostTensor, wlm: &HostTensor) -> HostTensor {
+    let h = x.last_dim();
+    let vp = wlm.last_dim();
+    let t = x.rows();
+    let y = mm(&x.data, t, h, &wlm.data, vp);
+    let mut shape = x.shape.clone();
+    *shape.last_mut().unwrap() = vp;
+    HostTensor::from_vec(&shape, y)
+}
+
+/// -> (dx, dwlm)
+pub fn lmhead_bwd(x: &HostTensor, wlm: &HostTensor, dl: &HostTensor)
+    -> (HostTensor, HostTensor)
+{
+    let h = x.last_dim();
+    let vp = wlm.last_dim();
+    let t = x.rows();
+    let dx = mm_nt(&dl.data, t, vp, &wlm.data, h);
+    let dw = mm_tn(&x.data, t, h, &dl.data, vp);
+    (
+        HostTensor::from_vec(&x.shape, dx),
+        HostTensor::from_vec(&[h, vp], dw),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// loss
+// ---------------------------------------------------------------------------
+
+/// logits [b,S,V], targets [b,S] -> (mean loss, dlogits scaled by 1/T)
+pub fn xent(logits: &HostTensor, targets: &IntTensor) -> (f32, HostTensor) {
+    let v = logits.last_dim();
+    let t = logits.rows();
+    let mut dl = HostTensor::zeros(&logits.shape);
+    let mut loss = 0.0f64;
+    for r in 0..t {
+        let row = &logits.data[r * v..(r + 1) * v];
+        let max = row.iter().cloned().fold(f32::MIN, f32::max);
+        let sum: f32 = row.iter().map(|x| (x - max).exp()).sum();
+        let lse = max + sum.ln();
+        let tgt = targets.data[r] as usize;
+        loss += (lse - row[tgt]) as f64;
+        let drow = &mut dl.data[r * v..(r + 1) * v];
+        for j in 0..v {
+            let p = (row[j] - lse).exp();
+            drow[j] = p / t as f32;
+        }
+        drow[tgt] -= 1.0 / t as f32;
+    }
+    ((loss / t as f64) as f32, dl)
+}
+
+// ---------------------------------------------------------------------------
+// MoE (Expert-Partition)
+// ---------------------------------------------------------------------------
+
+/// x [b,S,H], wr [H,E] -> probs [b,S,E]
+pub fn router_fwd(x: &HostTensor, wr: &HostTensor) -> HostTensor {
+    let h = x.last_dim();
+    let e = wr.last_dim();
+    let t = x.rows();
+    let mut logits = mm(&x.data, t, h, &wr.data, e);
+    for row in logits.chunks_mut(e) {
+        let max = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    let mut shape = x.shape.clone();
+    *shape.last_mut().unwrap() = e;
+    HostTensor::from_vec(&shape, logits)
+}
+
+/// -> (dx, dwr)
+pub fn router_bwd(x: &HostTensor, wr: &HostTensor, dprobs: &HostTensor)
+    -> (HostTensor, HostTensor)
+{
+    let h = x.last_dim();
+    let e = wr.last_dim();
+    let t = x.rows();
+    let probs = router_fwd(x, wr);
+    let mut dlogits = vec![0.0f32; t * e];
+    for r in 0..t {
+        let pr = &probs.data[r * e..(r + 1) * e];
+        let dpr = &dprobs.data[r * e..(r + 1) * e];
+        let dot: f32 = pr.iter().zip(dpr).map(|(a, b)| a * b).sum();
+        for j in 0..e {
+            dlogits[r * e + j] = pr[j] * (dpr[j] - dot);
+        }
+    }
+    let dx = mm_nt(&dlogits, t, e, &wr.data, h);
+    let dwr = mm_tn(&x.data, t, h, &dlogits, e);
+    (
+        HostTensor::from_vec(&x.shape, dx),
+        HostTensor::from_vec(&[h, e], dwr),
+    )
+}
+
+/// Dense-masked single-expert FFN: y = (gelu(x·w1+b1)·w2) ⊙ gates.
+pub fn moe_fwd(
+    x: &HostTensor,
+    gates: &HostTensor,
+    w1: &HostTensor,
+    b1: &HostTensor,
+    w2: &HostTensor,
+) -> HostTensor {
+    let mut y = mlp_fwd(x, w1, b1, w2);
+    let h = y.last_dim();
+    for (r, g) in gates.data.iter().enumerate() {
+        for v in &mut y.data[r * h..(r + 1) * h] {
+            *v *= g;
+        }
+    }
+    y
+}
+
+/// -> (dx, dgates, dw1, db1, dw2)
+pub fn moe_bwd(
+    x: &HostTensor,
+    gates: &HostTensor,
+    w1: &HostTensor,
+    b1: &HostTensor,
+    w2: &HostTensor,
+    dpartial: &HostTensor,
+) -> (HostTensor, HostTensor, HostTensor, HostTensor, HostTensor) {
+    let h = x.last_dim();
+    let yraw = mlp_fwd(x, w1, b1, w2);
+    // dgates[r] = <dpartial[r], yraw[r]>
+    let mut dgates = HostTensor::zeros(&gates.shape);
+    for r in 0..x.rows() {
+        dgates.data[r] = dpartial.data[r * h..(r + 1) * h]
+            .iter()
+            .zip(&yraw.data[r * h..(r + 1) * h])
+            .map(|(a, b)| a * b)
+            .sum();
+    }
+    // dyraw = dpartial ⊙ gates
+    let mut dyraw = dpartial.clone();
+    for (r, g) in gates.data.iter().enumerate() {
+        for v in &mut dyraw.data[r * h..(r + 1) * h] {
+            *v *= g;
+        }
+    }
+    let (dx, dw1, db1, dw2) = mlp_bwd(x, w1, b1, w2, &dyraw);
+    (dx, dgates, dw1, db1, dw2)
+}
+
+// ---------------------------------------------------------------------------
+// dispatch (mirrors the artifact call convention)
+// ---------------------------------------------------------------------------
+
+/// A borrowed op argument — f32 tensor or i32 tensor.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    F(&'a HostTensor),
+    I(&'a IntTensor),
+}
+
+impl<'a> Arg<'a> {
+    pub fn f(&self) -> &'a HostTensor {
+        match self {
+            Arg::F(t) => t,
+            Arg::I(_) => panic!("expected f32 arg"),
+        }
+    }
+    pub fn i(&self) -> &'a IntTensor {
+        match self {
+            Arg::I(t) => t,
+            Arg::F(_) => panic!("expected i32 arg"),
+        }
+    }
+}
+
+/// Run `op` with args in artifact order; returns outputs in artifact order.
+/// The scalar loss of `xent` comes back as a shape-[] tensor.
+pub fn run(op: Op, cfg: &ModelCfg, p: usize, args: &[Arg]) -> Vec<HostTensor> {
+    let nh_p = cfg.heads / p;
+    match op {
+        Op::EmbFwd => vec![emb_fwd(args[0].i(), args[1].f(), args[2].f())],
+        Op::EmbBwd => {
+            let (dwte, dwpe) = emb_bwd(args[0].i(), args[1].f(), cfg.vocab);
+            vec![dwte, dwpe]
+        }
+        Op::LnFwd => vec![ln_fwd(args[0].f(), args[1].f(), args[2].f())],
+        Op::LnBwd => {
+            let (dx, dg, db) = ln_bwd(args[0].f(), args[1].f(), args[2].f());
+            vec![dx, dg, db]
+        }
+        Op::AttnFwd => {
+            vec![attn_fwd(args[0].f(), args[1].f(), args[2].f(), args[3].f(), nh_p)]
+        }
+        Op::AttnBwd => {
+            let (dx, dwqkv, dbqkv, dwo) = attn_bwd(
+                args[0].f(),
+                args[1].f(),
+                args[2].f(),
+                args[3].f(),
+                args[4].f(),
+                nh_p,
+            );
+            vec![dx, dwqkv, dbqkv, dwo]
+        }
+        Op::MlpFwd => vec![mlp_fwd(args[0].f(), args[1].f(), args[2].f(), args[3].f())],
+        Op::MlpBwd => {
+            let (dx, dw1, db1, dw2) =
+                mlp_bwd(args[0].f(), args[1].f(), args[2].f(), args[3].f(), args[4].f());
+            vec![dx, dw1, db1, dw2]
+        }
+        Op::LmheadFwd => vec![lmhead_fwd(args[0].f(), args[1].f())],
+        Op::LmheadBwd => {
+            let (dx, dw) = lmhead_bwd(args[0].f(), args[1].f(), args[2].f());
+            vec![dx, dw]
+        }
+        Op::Xent => {
+            let (loss, dl) = xent(args[0].f(), args[1].i());
+            vec![HostTensor::scalar(loss), dl]
+        }
+        Op::RouterFwd => vec![router_fwd(args[0].f(), args[1].f())],
+        Op::RouterBwd => {
+            let (dx, dwr) = router_bwd(args[0].f(), args[1].f(), args[2].f());
+            vec![dx, dwr]
+        }
+        Op::MoeFwd => vec![moe_fwd(
+            args[0].f(),
+            args[1].f(),
+            args[2].f(),
+            args[3].f(),
+            args[4].f(),
+        )],
+        Op::MoeBwd => {
+            let (dx, dg, dw1, db1, dw2) = moe_bwd(
+                args[0].f(),
+                args[1].f(),
+                args[2].f(),
+                args[3].f(),
+                args[4].f(),
+                args[5].f(),
+            );
+            vec![dx, dg, dw1, db1, dw2]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const FD_EPS: f32 = 1e-3;
+    const FD_TOL: f32 = 2e-2;
+
+    /// Central finite difference of `f` w.r.t. `x[idx]`.
+    fn fd(f: &dyn Fn(&HostTensor) -> f32, x: &HostTensor, idx: usize) -> f32 {
+        let mut xp = x.clone();
+        xp.data[idx] += FD_EPS;
+        let mut xm = x.clone();
+        xm.data[idx] -= FD_EPS;
+        (f(&xp) - f(&xm)) / (2.0 * FD_EPS)
+    }
+
+    /// Compare an analytic grad tensor against finite differences on a
+    /// handful of indices (scalar objective = <out, probe>).
+    fn check_grad(
+        name: &str,
+        f: &dyn Fn(&HostTensor) -> f32,
+        x: &HostTensor,
+        analytic: &HostTensor,
+    ) {
+        let idxs: Vec<usize> = (0..x.numel()).step_by((x.numel() / 7).max(1)).collect();
+        for idx in idxs {
+            let num = fd(f, x, idx);
+            let ana = analytic.data[idx];
+            // floor the denominator at 0.05: central differences in f32
+            // carry ~1e-4 absolute noise, which would dominate near-zero
+            // gradient entries.
+            let denom = num.abs().max(ana.abs()).max(0.05);
+            assert!(
+                (num - ana).abs() / denom < FD_TOL,
+                "{name}[{idx}]: fd {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    fn probe(shape: &[usize], rng: &mut Rng) -> HostTensor {
+        HostTensor::randn(shape, 1.0, rng)
+    }
+
+    fn dot(a: &HostTensor, b: &HostTensor) -> f32 {
+        a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn ln_bwd_matches_fd() {
+        let mut rng = Rng::new(11);
+        let x = HostTensor::randn(&[2, 3, 8], 1.0, &mut rng);
+        let g = HostTensor::randn(&[8], 0.5, &mut rng);
+        let b = HostTensor::randn(&[8], 0.5, &mut rng);
+        let pr = probe(&[2, 3, 8], &mut rng);
+        let (dx, dg, db) = ln_bwd(&x, &g, &pr);
+        check_grad("ln dx", &|xx| dot(&ln_fwd(xx, &g, &b), &pr), &x, &dx);
+        check_grad("ln dg", &|gg| dot(&ln_fwd(&x, gg, &b), &pr), &g, &dg);
+        check_grad("ln db", &|bb| dot(&ln_fwd(&x, &g, bb), &pr), &b, &db);
+    }
+
+    #[test]
+    fn mlp_bwd_matches_fd() {
+        let mut rng = Rng::new(12);
+        let x = HostTensor::randn(&[1, 4, 6], 0.8, &mut rng);
+        let w1 = HostTensor::randn(&[6, 10], 0.4, &mut rng);
+        let b1 = HostTensor::randn(&[10], 0.2, &mut rng);
+        let w2 = HostTensor::randn(&[10, 6], 0.4, &mut rng);
+        let pr = probe(&[1, 4, 6], &mut rng);
+        let (dx, dw1, db1, dw2) = mlp_bwd(&x, &w1, &b1, &w2, &pr);
+        check_grad("mlp dx", &|t| dot(&mlp_fwd(t, &w1, &b1, &w2), &pr), &x, &dx);
+        check_grad("mlp dw1", &|t| dot(&mlp_fwd(&x, t, &b1, &w2), &pr), &w1, &dw1);
+        check_grad("mlp db1", &|t| dot(&mlp_fwd(&x, &w1, t, &w2), &pr), &b1, &db1);
+        check_grad("mlp dw2", &|t| dot(&mlp_fwd(&x, &w1, &b1, t), &pr), &w2, &dw2);
+    }
+
+    #[test]
+    fn attn_bwd_matches_fd() {
+        let mut rng = Rng::new(13);
+        let (b, s, h, nh) = (1, 4, 6, 2);
+        let x = HostTensor::randn(&[b, s, h], 0.8, &mut rng);
+        let wqkv = HostTensor::randn(&[h, 3 * h], 0.4, &mut rng);
+        let bqkv = HostTensor::randn(&[3 * h], 0.2, &mut rng);
+        let wo = HostTensor::randn(&[h, h], 0.4, &mut rng);
+        let pr = probe(&[b, s, h], &mut rng);
+        let (dx, dwqkv, dbqkv, dwo) = attn_bwd(&x, &wqkv, &bqkv, &wo, &pr, nh);
+        check_grad("attn dx", &|t| dot(&attn_fwd(t, &wqkv, &bqkv, &wo, nh), &pr), &x, &dx);
+        check_grad(
+            "attn dwqkv",
+            &|t| dot(&attn_fwd(&x, t, &bqkv, &wo, nh), &pr),
+            &wqkv,
+            &dwqkv,
+        );
+        check_grad(
+            "attn dbqkv",
+            &|t| dot(&attn_fwd(&x, &wqkv, t, &wo, nh), &pr),
+            &bqkv,
+            &dbqkv,
+        );
+        check_grad("attn dwo", &|t| dot(&attn_fwd(&x, &wqkv, &bqkv, t, nh), &pr), &wo, &dwo);
+    }
+
+    #[test]
+    fn lmhead_bwd_matches_fd() {
+        let mut rng = Rng::new(14);
+        let x = HostTensor::randn(&[1, 3, 5], 0.8, &mut rng);
+        let w = HostTensor::randn(&[5, 7], 0.4, &mut rng);
+        let pr = probe(&[1, 3, 7], &mut rng);
+        let (dx, dw) = lmhead_bwd(&x, &w, &pr);
+        check_grad("lm dx", &|t| dot(&lmhead_fwd(t, &w), &pr), &x, &dx);
+        check_grad("lm dw", &|t| dot(&lmhead_fwd(&x, t), &pr), &w, &dw);
+    }
+
+    #[test]
+    fn xent_grad_matches_fd() {
+        let mut rng = Rng::new(15);
+        let logits = HostTensor::randn(&[2, 3, 6], 1.0, &mut rng);
+        let targets = IntTensor::rand_below(&[2, 3], 6, &mut rng);
+        let (_, dl) = xent(&logits, &targets);
+        check_grad("xent dlogits", &|t| xent(t, &targets).0, &logits, &dl);
+    }
+
+    #[test]
+    fn xent_perfect_prediction_low_loss() {
+        // logits hugely favoring the target -> loss ~ 0
+        let mut logits = HostTensor::zeros(&[1, 2, 4]);
+        let targets = IntTensor::from_vec(&[1, 2], vec![2, 0]);
+        logits.data[2] = 50.0;
+        logits.data[4] = 50.0;
+        let (loss, _) = xent(&logits, &targets);
+        assert!(loss < 1e-4, "loss {loss}");
+    }
+
+    #[test]
+    fn router_bwd_matches_fd() {
+        let mut rng = Rng::new(16);
+        let x = HostTensor::randn(&[1, 3, 5], 0.8, &mut rng);
+        let wr = HostTensor::randn(&[5, 4], 0.4, &mut rng);
+        let pr = probe(&[1, 3, 4], &mut rng);
+        let (dx, dwr) = router_bwd(&x, &wr, &pr);
+        check_grad("router dx", &|t| dot(&router_fwd(t, &wr), &pr), &x, &dx);
+        check_grad("router dwr", &|t| dot(&router_fwd(&x, t), &pr), &wr, &dwr);
+    }
+
+    #[test]
+    fn moe_bwd_matches_fd() {
+        let mut rng = Rng::new(17);
+        let x = HostTensor::randn(&[1, 3, 5], 0.8, &mut rng);
+        let gates = HostTensor::randn(&[1, 3], 0.5, &mut rng);
+        let w1 = HostTensor::randn(&[5, 8], 0.4, &mut rng);
+        let b1 = HostTensor::randn(&[8], 0.2, &mut rng);
+        let w2 = HostTensor::randn(&[8, 5], 0.4, &mut rng);
+        let pr = probe(&[1, 3, 5], &mut rng);
+        let (dx, dg, dw1, db1, dw2) = moe_bwd(&x, &gates, &w1, &b1, &w2, &pr);
+        check_grad("moe dx", &|t| dot(&moe_fwd(t, &gates, &w1, &b1, &w2), &pr), &x, &dx);
+        check_grad("moe dg", &|t| dot(&moe_fwd(&x, t, &w1, &b1, &w2), &pr), &gates, &dg);
+        check_grad("moe dw1", &|t| dot(&moe_fwd(&x, &gates, t, &b1, &w2), &pr), &w1, &dw1);
+        check_grad("moe db1", &|t| dot(&moe_fwd(&x, &gates, &w1, t, &w2), &pr), &b1, &db1);
+        check_grad("moe dw2", &|t| dot(&moe_fwd(&x, &gates, &w1, &b1, t), &pr), &w2, &dw2);
+    }
+
+    #[test]
+    fn emb_bwd_is_scatter_add() {
+        let ids = IntTensor::from_vec(&[1, 3], vec![2, 0, 2]);
+        let dx = HostTensor::from_vec(
+            &[1, 3, 2],
+            vec![1., 2., 10., 20., 100., 200.],
+        );
+        let (dwte, dwpe) = emb_bwd(&ids, &dx, 4);
+        // token 2 appears twice: rows 0 and 2 of dx
+        assert_eq!(&dwte.data[4..6], &[101., 202.]);
+        assert_eq!(&dwte.data[0..2], &[10., 20.]);
+        assert_eq!(&dwte.data[2..4], &[0., 0.]);
+        // dwpe sums over batch (batch = 1 here: identity)
+        assert_eq!(dwpe.data, dx.data);
+    }
+
+    #[test]
+    fn emb_fwd_gathers_and_adds_positions() {
+        let ids = IntTensor::from_vec(&[1, 2], vec![1, 0]);
+        let wte = HostTensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let wpe = HostTensor::from_vec(&[2, 2], vec![10., 20., 30., 40.]);
+        let x = emb_fwd(&ids, &wte, &wpe);
+        assert_eq!(x.data, vec![13., 24., 31., 42.]);
+    }
+
+    #[test]
+    fn causal_mask_blocks_future() {
+        // Attention output at position 0 must not depend on position 1.
+        let mut rng = Rng::new(18);
+        let (b, s, h, nh) = (1, 3, 4, 2);
+        let x = HostTensor::randn(&[b, s, h], 0.8, &mut rng);
+        let wqkv = HostTensor::randn(&[h, 3 * h], 0.4, &mut rng);
+        let bqkv = HostTensor::zeros(&[3 * h]);
+        let wo = HostTensor::randn(&[h, h], 0.4, &mut rng);
+        let y0 = attn_fwd(&x, &wqkv, &bqkv, &wo, nh);
+        let mut x2 = x.clone();
+        for d in 0..h {
+            x2.data[2 * h + d] += 5.0; // perturb last position
+        }
+        let y1 = attn_fwd(&x2, &wqkv, &bqkv, &wo, nh);
+        for d in 0..2 * h {
+            assert!((y0.data[d] - y1.data[d]).abs() < 1e-6, "leak at {d}");
+        }
+    }
+
+    #[test]
+    fn head_shard_sum_equals_full_attention() {
+        // Paper Eq. 4: sum over head shards of partials == full attention.
+        use crate::model::partition;
+        let mut rng = Rng::new(19);
+        let (b, s, h, nh, n) = (2, 4, 8, 4, 2);
+        let hd = h / nh;
+        let x = HostTensor::randn(&[b, s, h], 0.8, &mut rng);
+        let wqkv = HostTensor::randn(&[h, 3 * h], 0.3, &mut rng);
+        let bqkv = HostTensor::randn(&[3 * h], 0.1, &mut rng);
+        let wo = HostTensor::randn(&[h, h], 0.3, &mut rng);
+        let full = attn_fwd(&x, &wqkv, &bqkv, &wo, nh);
+        let mut acc = HostTensor::zeros(&[b, s, h]);
+        for sh in 0..n {
+            let shard = partition::attn_shard(&wqkv, &bqkv, &wo, sh, n, nh, hd);
+            acc.add_assign(&attn_fwd(&x, &shard.wqkv, &shard.bqkv, &shard.wo, nh / n));
+        }
+        assert!(acc.allclose(&full, 1e-4), "diff {}", acc.max_abs_diff(&full));
+    }
+
+    #[test]
+    fn mlp_shard_sum_equals_full() {
+        use crate::model::partition;
+        let mut rng = Rng::new(20);
+        let (b, s, h, f, n) = (1, 3, 6, 12, 3);
+        let x = HostTensor::randn(&[b, s, h], 0.8, &mut rng);
+        let w1 = HostTensor::randn(&[h, f], 0.3, &mut rng);
+        let b1 = HostTensor::randn(&[f], 0.1, &mut rng);
+        let w2 = HostTensor::randn(&[f, h], 0.3, &mut rng);
+        let full = mlp_fwd(&x, &w1, &b1, &w2);
+        let mut acc = HostTensor::zeros(&[b, s, h]);
+        for sh in 0..n {
+            let shard = partition::mlp_shard(&w1, &b1, &w2, sh, n);
+            acc.add_assign(&mlp_fwd(&x, &shard.w1, &shard.b1, &shard.w2));
+        }
+        assert!(acc.allclose(&full, 1e-4), "diff {}", acc.max_abs_diff(&full));
+    }
+
+    #[test]
+    fn lmhead_shard_concat_equals_full() {
+        use crate::model::partition;
+        let mut rng = Rng::new(21);
+        let (b, s, h, v, n) = (1, 3, 6, 8, 4);
+        let x = HostTensor::randn(&[b, s, h], 0.8, &mut rng);
+        let w = HostTensor::randn(&[h, v], 0.3, &mut rng);
+        let full = lmhead_fwd(&x, &w);
+        let parts: Vec<HostTensor> = (0..n)
+            .map(|sh| lmhead_fwd(&x, &partition::shard_cols(&w, sh, n)))
+            .collect();
+        let cat = partition::unshard_cols(&parts);
+        assert!(cat.allclose(&full, 1e-5));
+    }
+}

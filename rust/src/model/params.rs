@@ -1,0 +1,353 @@
+//! Full-model parameter (and gradient — same structure) containers.
+//!
+//! Canonical layouts match `python/compile/model.py`:
+//!   wte [V, H], wpe [S, H]
+//!   per layer: ln1_g/ln1_b [H], wqkv [H, 3H] (cols ordered [3][NH][HD]),
+//!              bqkv [3H], wo [H, H] (rows = [NH][HD]), bo [H],
+//!              ln2_g/ln2_b [H], then Dense {w1 [H,F], b1 [F], w2 [F,H],
+//!              b2 [H]} or Moe {wr [H,E], experts: E × {w1 [H,Fe], b1 [Fe],
+//!              w2 [Fe,H]}, b2 [H]}
+//!   lnf_g/lnf_b [H], wlm [H, V] (untied LM head)
+//!
+//! The same struct doubles as the gradient container (`zeros_like`), and
+//! `visit` / `zip_mut` provide the named traversal the optimizer and the
+//! engine-equivalence tests are built on.
+
+use crate::config::ModelCfg;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertParams {
+    pub w1: HostTensor,
+    pub b1: HostTensor,
+    pub w2: HostTensor,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum MlpParams {
+    Dense { w1: HostTensor, b1: HostTensor, w2: HostTensor, b2: HostTensor },
+    Moe { wr: HostTensor, experts: Vec<ExpertParams>, b2: HostTensor },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerParams {
+    pub ln1_g: HostTensor,
+    pub ln1_b: HostTensor,
+    pub wqkv: HostTensor,
+    pub bqkv: HostTensor,
+    pub wo: HostTensor,
+    pub bo: HostTensor,
+    pub ln2_g: HostTensor,
+    pub ln2_b: HostTensor,
+    pub mlp: MlpParams,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelParams {
+    pub wte: HostTensor,
+    pub wpe: HostTensor,
+    pub layers: Vec<LayerParams>,
+    pub lnf_g: HostTensor,
+    pub lnf_b: HostTensor,
+    pub wlm: HostTensor,
+}
+
+/// GPT-2 style init: N(0, 0.02) weights, ones for LN gains, zero biases.
+const INIT_STD: f32 = 0.02;
+
+fn ones(shape: &[usize]) -> HostTensor {
+    let mut t = HostTensor::zeros(shape);
+    t.data.fill(1.0);
+    t
+}
+
+impl ModelParams {
+    pub fn init(cfg: &ModelCfg, rng: &mut Rng) -> Self {
+        let (v, h, s, f) = (cfg.vocab, cfg.hidden, cfg.seq, cfg.ffn);
+        let mk = |shape: &[usize], rng: &mut Rng| HostTensor::randn(shape, INIT_STD, rng);
+        let layers = (0..cfg.layers)
+            .map(|_| LayerParams {
+                ln1_g: ones(&[h]),
+                ln1_b: HostTensor::zeros(&[h]),
+                wqkv: mk(&[h, 3 * h], rng),
+                bqkv: HostTensor::zeros(&[3 * h]),
+                wo: mk(&[h, h], rng),
+                bo: HostTensor::zeros(&[h]),
+                ln2_g: ones(&[h]),
+                ln2_b: HostTensor::zeros(&[h]),
+                mlp: if cfg.is_moe() {
+                    MlpParams::Moe {
+                        wr: mk(&[h, cfg.experts], rng),
+                        experts: (0..cfg.experts)
+                            .map(|_| ExpertParams {
+                                w1: mk(&[h, cfg.expert_ffn], rng),
+                                b1: HostTensor::zeros(&[cfg.expert_ffn]),
+                                w2: mk(&[cfg.expert_ffn, h], rng),
+                            })
+                            .collect(),
+                        b2: HostTensor::zeros(&[h]),
+                    }
+                } else {
+                    MlpParams::Dense {
+                        w1: mk(&[h, f], rng),
+                        b1: HostTensor::zeros(&[f]),
+                        w2: mk(&[f, h], rng),
+                        b2: HostTensor::zeros(&[h]),
+                    }
+                },
+            })
+            .collect();
+        ModelParams {
+            wte: mk(&[v, h], rng),
+            wpe: mk(&[s, h], rng),
+            layers,
+            lnf_g: ones(&[h]),
+            lnf_b: HostTensor::zeros(&[h]),
+            wlm: mk(&[h, v], rng),
+        }
+    }
+
+    /// Same structure, all zeros — the gradient container.
+    pub fn zeros_like(cfg: &ModelCfg) -> Self {
+        let mut rng = Rng::new(0);
+        let mut p = Self::init(cfg, &mut rng);
+        p.visit_mut(&mut |_, t| t.data.fill(0.0));
+        p
+    }
+
+    /// Visit every parameter with its canonical dotted name
+    /// (`layers.3.wqkv`, `layers.0.mlp.experts.2.w1`, ...).
+    pub fn visit(&self, f: &mut dyn FnMut(&str, &HostTensor)) {
+        f("wte", &self.wte);
+        f("wpe", &self.wpe);
+        for (l, lp) in self.layers.iter().enumerate() {
+            let pre = format!("layers.{l}");
+            f(&format!("{pre}.ln1_g"), &lp.ln1_g);
+            f(&format!("{pre}.ln1_b"), &lp.ln1_b);
+            f(&format!("{pre}.wqkv"), &lp.wqkv);
+            f(&format!("{pre}.bqkv"), &lp.bqkv);
+            f(&format!("{pre}.wo"), &lp.wo);
+            f(&format!("{pre}.bo"), &lp.bo);
+            f(&format!("{pre}.ln2_g"), &lp.ln2_g);
+            f(&format!("{pre}.ln2_b"), &lp.ln2_b);
+            match &lp.mlp {
+                MlpParams::Dense { w1, b1, w2, b2 } => {
+                    f(&format!("{pre}.mlp.w1"), w1);
+                    f(&format!("{pre}.mlp.b1"), b1);
+                    f(&format!("{pre}.mlp.w2"), w2);
+                    f(&format!("{pre}.mlp.b2"), b2);
+                }
+                MlpParams::Moe { wr, experts, b2 } => {
+                    f(&format!("{pre}.mlp.wr"), wr);
+                    for (e, ex) in experts.iter().enumerate() {
+                        f(&format!("{pre}.mlp.experts.{e}.w1"), &ex.w1);
+                        f(&format!("{pre}.mlp.experts.{e}.b1"), &ex.b1);
+                        f(&format!("{pre}.mlp.experts.{e}.w2"), &ex.w2);
+                    }
+                    f(&format!("{pre}.mlp.b2"), b2);
+                }
+            }
+        }
+        f("lnf_g", &self.lnf_g);
+        f("lnf_b", &self.lnf_b);
+        f("wlm", &self.wlm);
+    }
+
+    pub fn visit_mut(&mut self, f: &mut dyn FnMut(&str, &mut HostTensor)) {
+        f("wte", &mut self.wte);
+        f("wpe", &mut self.wpe);
+        for (l, lp) in self.layers.iter_mut().enumerate() {
+            let pre = format!("layers.{l}");
+            f(&format!("{pre}.ln1_g"), &mut lp.ln1_g);
+            f(&format!("{pre}.ln1_b"), &mut lp.ln1_b);
+            f(&format!("{pre}.wqkv"), &mut lp.wqkv);
+            f(&format!("{pre}.bqkv"), &mut lp.bqkv);
+            f(&format!("{pre}.wo"), &mut lp.wo);
+            f(&format!("{pre}.bo"), &mut lp.bo);
+            f(&format!("{pre}.ln2_g"), &mut lp.ln2_g);
+            f(&format!("{pre}.ln2_b"), &mut lp.ln2_b);
+            match &mut lp.mlp {
+                MlpParams::Dense { w1, b1, w2, b2 } => {
+                    f(&format!("{pre}.mlp.w1"), w1);
+                    f(&format!("{pre}.mlp.b1"), b1);
+                    f(&format!("{pre}.mlp.w2"), w2);
+                    f(&format!("{pre}.mlp.b2"), b2);
+                }
+                MlpParams::Moe { wr, experts, b2 } => {
+                    f(&format!("{pre}.mlp.wr"), wr);
+                    for (e, ex) in experts.iter_mut().enumerate() {
+                        f(&format!("{pre}.mlp.experts.{e}.w1"), &mut ex.w1);
+                        f(&format!("{pre}.mlp.experts.{e}.b1"), &mut ex.b1);
+                        f(&format!("{pre}.mlp.experts.{e}.w2"), &mut ex.w2);
+                    }
+                    f(&format!("{pre}.mlp.b2"), b2);
+                }
+            }
+        }
+        f("lnf_g", &mut self.lnf_g);
+        f("lnf_b", &mut self.lnf_b);
+        f("wlm", &mut self.wlm);
+    }
+
+    /// Pairwise traversal of two structurally-identical param sets
+    /// (`self[k] op other[k]` for every parameter) — the optimizer update
+    /// and the gradient-accumulation path.
+    pub fn zip_mut(
+        &mut self,
+        other: &ModelParams,
+        f: &mut dyn FnMut(&str, &mut HostTensor, &HostTensor),
+    ) {
+        let mut names = Vec::new();
+        let mut tensors: Vec<*const HostTensor> = Vec::new();
+        other.visit(&mut |n, t| {
+            names.push(n.to_string());
+            tensors.push(t as *const _);
+        });
+        let mut i = 0;
+        self.visit_mut(&mut |n, t| {
+            assert_eq!(n, names[i], "zip_mut structure mismatch");
+            // SAFETY: `other` is borrowed immutably for the whole call and
+            // visit order is deterministic; the raw pointer only bridges
+            // the two closure passes.
+            let o = unsafe { &*tensors[i] };
+            f(n, t, o);
+            i += 1;
+        });
+        assert_eq!(i, names.len(), "zip_mut arity mismatch");
+    }
+
+    /// `self += alpha * other` over every parameter.
+    pub fn axpy(&mut self, alpha: f32, other: &ModelParams) {
+        self.zip_mut(other, &mut |_, t, o| t.axpy(alpha, o));
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        self.visit_mut(&mut |_, t| t.scale(alpha));
+    }
+
+    pub fn num_params(&self) -> usize {
+        let mut n = 0;
+        self.visit(&mut |_, t| n += t.numel());
+        n
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.num_params() * 4) as u64
+    }
+
+    /// Largest |self[k] - other[k]| over all parameters — the engine
+    /// gradient-equivalence metric.
+    pub fn max_abs_diff(&self, other: &ModelParams) -> f32 {
+        let mut worst = 0.0f32;
+        let mut tensors: Vec<*const HostTensor> = Vec::new();
+        other.visit(&mut |_, t| tensors.push(t as *const _));
+        let mut i = 0;
+        self.visit(&mut |_, t| {
+            let o = unsafe { &*tensors[i] };
+            worst = worst.max(t.max_abs_diff(o));
+            i += 1;
+        });
+        worst
+    }
+
+    /// Relative allclose over all parameters, reporting the first offender.
+    pub fn allclose(&self, other: &ModelParams, tol: f32) -> Result<(), String> {
+        let mut tensors: Vec<*const HostTensor> = Vec::new();
+        other.visit(&mut |_, t| tensors.push(t as *const _));
+        let mut i = 0;
+        let mut bad: Option<String> = None;
+        self.visit(&mut |n, t| {
+            let o = unsafe { &*tensors[i] };
+            if bad.is_none() && !t.allclose(o, tol) {
+                bad = Some(format!("{n}: max diff {}", t.max_abs_diff(o)));
+            }
+            i += 1;
+        });
+        match bad {
+            None => Ok(()),
+            Some(msg) => Err(msg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn tiny() -> ModelCfg {
+        presets::get("tiny").unwrap()
+    }
+
+    #[test]
+    fn param_count_matches_cfg_formula() {
+        let cfg = tiny();
+        let mut rng = Rng::new(1);
+        let p = ModelParams::init(&cfg, &mut rng);
+        assert_eq!(p.num_params(), cfg.params_total());
+    }
+
+    #[test]
+    fn moe_param_count_matches() {
+        let cfg = presets::get("tiny-moe").unwrap();
+        let mut rng = Rng::new(1);
+        let p = ModelParams::init(&cfg, &mut rng);
+        assert_eq!(p.num_params(), cfg.params_total());
+    }
+
+    #[test]
+    fn visit_and_visit_mut_agree() {
+        let cfg = tiny();
+        let mut rng = Rng::new(2);
+        let mut p = ModelParams::init(&cfg, &mut rng);
+        let mut names_a = Vec::new();
+        p.visit(&mut |n, _| names_a.push(n.to_string()));
+        let mut names_b = Vec::new();
+        p.visit_mut(&mut |n, _| names_b.push(n.to_string()));
+        assert_eq!(names_a, names_b);
+        assert!(names_a.contains(&"layers.1.wqkv".to_string()));
+    }
+
+    #[test]
+    fn zeros_like_is_zero_and_same_shape() {
+        let cfg = tiny();
+        let z = ModelParams::zeros_like(&cfg);
+        z.visit(&mut |n, t| {
+            assert!(t.data.iter().all(|&v| v == 0.0), "{n} not zero");
+        });
+        assert_eq!(z.num_params(), cfg.params_total());
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let cfg = tiny();
+        let mut rng = Rng::new(3);
+        let a = ModelParams::init(&cfg, &mut rng);
+        let mut acc = ModelParams::zeros_like(&cfg);
+        acc.axpy(2.0, &a);
+        acc.axpy(-2.0, &a);
+        assert_eq!(acc.max_abs_diff(&ModelParams::zeros_like(&cfg)), 0.0);
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let cfg = tiny();
+        let a = ModelParams::init(&cfg, &mut Rng::new(7));
+        let b = ModelParams::init(&cfg, &mut Rng::new(7));
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        let c = ModelParams::init(&cfg, &mut Rng::new(8));
+        assert!(a.max_abs_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn allclose_reports_offender() {
+        let cfg = tiny();
+        let a = ModelParams::init(&cfg, &mut Rng::new(7));
+        let mut b = a.clone();
+        assert!(a.allclose(&b, 0.0).is_ok());
+        b.layers[0].wo.data[0] += 1.0;
+        let err = a.allclose(&b, 1e-3).unwrap_err();
+        assert!(err.contains("layers.0.wo"), "{err}");
+    }
+}

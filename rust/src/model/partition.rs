@@ -1,0 +1,257 @@
+//! Partition strategies (paper §3.2): slicing full weights into the N
+//! rank-shards each engine distributes, plus the exact inverses (unshard)
+//! used to reassemble rotated gradients and to verify round-trips.
+//!
+//! - **Output-Partition** (Embedding, LM head): column shard of the output
+//!   feature dimension; merge = concat.
+//! - **Number-of-head-Partition** (Attention): Wqkv column-sharded by
+//!   contiguous head groups (canonical column order `[3][NH][HD]`), Wo
+//!   row-sharded; merge = add.
+//! - **Input+Output pair** (MLP): w1 column shard + w2 row shard;
+//!   merge = add.
+//! - **Expert-Partition** (MoE): contiguous expert groups per shard.
+
+use crate::tensor::HostTensor;
+
+/// Columns `[start, start+len)` of the output dim — Output-Partition.
+pub fn shard_cols(t: &HostTensor, s: usize, n: usize) -> HostTensor {
+    let c = t.last_dim();
+    assert_eq!(c % n, 0, "output dim {c} not divisible by {n}");
+    t.slice_last(s * (c / n), c / n)
+}
+
+/// Inverse of [`shard_cols`]: concat shards back along the output dim.
+pub fn unshard_cols(shards: &[HostTensor]) -> HostTensor {
+    let refs: Vec<&HostTensor> = shards.iter().collect();
+    HostTensor::concat_last(&refs)
+}
+
+/// Rows `[start, start+len)` of the input dim — the row-parallel half of a
+/// Megatron pair (wo, w2).
+pub fn shard_rows(t: &HostTensor, s: usize, n: usize) -> HostTensor {
+    let r = t.shape[0];
+    assert_eq!(r % n, 0, "input dim {r} not divisible by {n}");
+    t.slice_first(s * (r / n), r / n)
+}
+
+pub fn unshard_rows(shards: &[HostTensor]) -> HostTensor {
+    let mut shape = shards[0].shape.clone();
+    shape[0] = shards.iter().map(|t| t.shape[0]).sum();
+    let mut full = HostTensor::zeros(&shape);
+    let mut off = 0;
+    for sh in shards {
+        full.write_slice_first(off, sh);
+        off += sh.shape[0];
+    }
+    full
+}
+
+/// Head-partition shard of wqkv [H, 3H] (columns ordered `[3][NH][HD]`):
+/// shard `s` takes heads `[s·NH/n, (s+1)·NH/n)` of each of q, k, v →
+/// [H, 3·H/n]. The same column map shards bqkv [3H] → [3·H/n].
+pub fn shard_qkv_cols(t: &HostTensor, s: usize, n: usize, heads: usize, head_dim: usize)
+    -> HostTensor
+{
+    let h3 = t.last_dim();
+    assert_eq!(h3, 3 * heads * head_dim, "wqkv/bqkv column count mismatch");
+    assert_eq!(heads % n, 0, "heads {heads} not divisible by {n}");
+    let nh_p = heads / n;
+    let cols = qkv_shard_cols(s, n, heads, head_dim);
+    let rows = t.rows();
+    let mut shape = t.shape.clone();
+    *shape.last_mut().unwrap() = 3 * nh_p * head_dim;
+    let mut out = HostTensor::zeros(&shape);
+    let oc = out.last_dim();
+    for r in 0..rows {
+        for (j, &c) in cols.iter().enumerate() {
+            out.data[r * oc + j] = t.data[r * h3 + c];
+        }
+    }
+    out
+}
+
+/// The column indices of head-shard `s` inside the canonical [3][NH][HD]
+/// column order.
+fn qkv_shard_cols(s: usize, n: usize, heads: usize, head_dim: usize) -> Vec<usize> {
+    let nh_p = heads / n;
+    let mut cols = Vec::with_capacity(3 * nh_p * head_dim);
+    for q3 in 0..3 {
+        for head in s * nh_p..(s + 1) * nh_p {
+            for d in 0..head_dim {
+                cols.push(q3 * heads * head_dim + head * head_dim + d);
+            }
+        }
+    }
+    cols
+}
+
+/// Inverse of [`shard_qkv_cols`].
+pub fn unshard_qkv_cols(shards: &[HostTensor], heads: usize, head_dim: usize) -> HostTensor {
+    let n = shards.len();
+    let rows = shards[0].rows();
+    let h3 = 3 * heads * head_dim;
+    let mut shape = shards[0].shape.clone();
+    *shape.last_mut().unwrap() = h3;
+    let mut full = HostTensor::zeros(&shape);
+    for (s, sh) in shards.iter().enumerate() {
+        let cols = qkv_shard_cols(s, n, heads, head_dim);
+        let sc = sh.last_dim();
+        for r in 0..rows {
+            for (j, &c) in cols.iter().enumerate() {
+                full.data[r * h3 + c] = sh.data[r * sc + j];
+            }
+        }
+    }
+    full
+}
+
+/// The expert indices owned by shard `s` (contiguous groups).
+pub fn expert_range(s: usize, n: usize, experts: usize) -> std::ops::Range<usize> {
+    assert_eq!(experts % n, 0, "experts {experts} not divisible by {n}");
+    let per = experts / n;
+    s * per..(s + 1) * per
+}
+
+/// One unit's shard set, as the RTP/TP engines hold it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttnShard {
+    pub wqkv: HostTensor,
+    pub bqkv: HostTensor,
+    pub wo: HostTensor,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpShard {
+    pub w1: HostTensor,
+    pub b1: HostTensor,
+    pub w2: HostTensor,
+}
+
+pub fn attn_shard(
+    wqkv: &HostTensor,
+    bqkv: &HostTensor,
+    wo: &HostTensor,
+    s: usize,
+    n: usize,
+    heads: usize,
+    head_dim: usize,
+) -> AttnShard {
+    AttnShard {
+        wqkv: shard_qkv_cols(wqkv, s, n, heads, head_dim),
+        bqkv: shard_qkv_cols(bqkv, s, n, heads, head_dim),
+        wo: shard_rows(wo, s, n),
+    }
+}
+
+pub fn mlp_shard(w1: &HostTensor, b1: &HostTensor, w2: &HostTensor, s: usize, n: usize)
+    -> MlpShard
+{
+    MlpShard {
+        w1: shard_cols(w1, s, n),
+        b1: shard_cols(b1, s, n),
+        w2: shard_rows(w2, s, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn col_shard_roundtrip() {
+        prop::check("cols roundtrip", 40, |rng| {
+            let n = 1 + rng.below(4);
+            let rows = 1 + rng.below(5);
+            let cols = n * (1 + rng.below(4));
+            let mut r = Rng::new(rng.next_u64());
+            let t = HostTensor::randn(&[rows, cols], 1.0, &mut r);
+            let shards: Vec<HostTensor> = (0..n).map(|s| shard_cols(&t, s, n)).collect();
+            let back = unshard_cols(&shards);
+            if back != t {
+                return Err("cols roundtrip failed".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_shard_roundtrip() {
+        prop::check("rows roundtrip", 40, |rng| {
+            let n = 1 + rng.below(4);
+            let rows = n * (1 + rng.below(4));
+            let cols = 1 + rng.below(5);
+            let mut r = Rng::new(rng.next_u64());
+            let t = HostTensor::randn(&[rows, cols], 1.0, &mut r);
+            let shards: Vec<HostTensor> = (0..n).map(|s| shard_rows(&t, s, n)).collect();
+            let back = unshard_rows(&shards);
+            if back != t {
+                return Err("rows roundtrip failed".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qkv_shard_roundtrip() {
+        prop::check("qkv roundtrip", 30, |rng| {
+            let heads = [2usize, 4, 8][rng.below(3)];
+            let n = [1usize, 2][rng.below(2)].min(heads);
+            let hd = 1 + rng.below(4);
+            let h = heads * hd;
+            let mut r = Rng::new(rng.next_u64());
+            let t = HostTensor::randn(&[h, 3 * h], 1.0, &mut r);
+            let shards: Vec<HostTensor> =
+                (0..n).map(|s| shard_qkv_cols(&t, s, n, heads, hd)).collect();
+            let back = unshard_qkv_cols(&shards, heads, hd);
+            if back != t {
+                return Err(format!("qkv roundtrip failed heads={heads} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qkv_shard_interleaves_q_k_v() {
+        // heads=2, hd=1, h=2: full columns are [q0 q1 k0 k1 v0 v1];
+        // shard 0 of n=2 must take [q0 k0 v0].
+        let t = HostTensor::from_vec(&[1, 6], vec![10., 11., 20., 21., 30., 31.]);
+        let s0 = shard_qkv_cols(&t, 0, 2, 2, 1);
+        assert_eq!(s0.data, vec![10., 20., 30.]);
+        let s1 = shard_qkv_cols(&t, 1, 2, 2, 1);
+        assert_eq!(s1.data, vec![11., 21., 31.]);
+    }
+
+    #[test]
+    fn bias_shards_like_weights() {
+        // bqkv is 1-D [3H]; shard via the same column map (shape [3H] has
+        // rows()==1).
+        let b = HostTensor::from_vec(&[6], vec![10., 11., 20., 21., 30., 31.]);
+        let s0 = shard_qkv_cols(&b, 0, 2, 2, 1);
+        assert_eq!(s0.shape, vec![3]);
+        assert_eq!(s0.data, vec![10., 20., 30.]);
+    }
+
+    #[test]
+    fn expert_ranges_partition_evenly() {
+        assert_eq!(expert_range(0, 2, 4), 0..2);
+        assert_eq!(expert_range(1, 2, 4), 2..4);
+        assert_eq!(expert_range(3, 4, 4), 3..4);
+        // cover all experts exactly once
+        let mut seen = vec![0; 8];
+        for s in 0..4 {
+            for e in expert_range(s, 4, 8) {
+                seen[e] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn uneven_shard_rejected() {
+        let t = HostTensor::zeros(&[2, 5]);
+        shard_cols(&t, 0, 2);
+    }
+}

@@ -1,0 +1,181 @@
+//! Engine construction: one entry point that wires config + executor +
+//! cluster + timeline into any of the five engines.
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::Cluster;
+use crate::config::{presets, ModelCfg, ParallelCfg, Strategy};
+use crate::perfmodel::{Hardware, Timeline};
+use crate::runtime::{artifacts_root, Exec, PjrtRuntime};
+
+use super::common::Ctx;
+use super::ddp::DdpEngine;
+use super::fsdp::{FsdpEngine, Granularity};
+use super::rtp::{RtpEngine, RtpVariant};
+use super::single::SingleEngine;
+use super::tp::TpEngine;
+use super::Engine;
+
+/// Which compute backend to construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecKind {
+    /// AOT HLO artifacts on the PJRT CPU client (the production path).
+    Pjrt,
+    /// PJRT routed through the Pallas-kernel artifact set where available.
+    PjrtPallas,
+    /// Pure-rust oracle (artifact-free tests).
+    Oracle,
+    /// Shape stubs only (paper-scale accounting).
+    Virtual,
+}
+
+#[derive(Debug, Clone)]
+pub struct EngineOpts {
+    pub preset: String,
+    pub strategy: Strategy,
+    pub workers: usize,
+    pub global_batch: usize,
+    pub exec: ExecKind,
+    /// Per-device memory cap (OOM detection); None = unlimited.
+    pub capacity: Option<u64>,
+    /// Attach a step timeline for this hardware (virtual-mode sweeps).
+    pub hardware: Option<Hardware>,
+    /// Record the rotation/collective trace.
+    pub trace: bool,
+    pub seed: u64,
+    /// FSDP unit granularity.
+    pub fsdp_granularity: Granularity,
+    /// RTP out-of-place §3.4.4 buffer recycling.
+    pub rtp_recycle: bool,
+}
+
+impl EngineOpts {
+    pub fn new(preset: &str, strategy: Strategy, workers: usize, global_batch: usize) -> Self {
+        EngineOpts {
+            preset: preset.to_string(),
+            strategy,
+            workers,
+            global_batch,
+            exec: ExecKind::Oracle,
+            capacity: None,
+            hardware: None,
+            trace: false,
+            seed: 42,
+            fsdp_granularity: Granularity::Layer,
+            rtp_recycle: true,
+        }
+    }
+
+    pub fn exec(mut self, e: ExecKind) -> Self {
+        self.exec = e;
+        self
+    }
+    pub fn capacity(mut self, c: Option<u64>) -> Self {
+        self.capacity = c;
+        self
+    }
+    pub fn hardware(mut self, hw: Hardware) -> Self {
+        self.hardware = Some(hw);
+        self
+    }
+    pub fn trace(mut self, t: bool) -> Self {
+        self.trace = t;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+    pub fn fsdp_granularity(mut self, g: Granularity) -> Self {
+        self.fsdp_granularity = g;
+        self
+    }
+    pub fn rtp_recycle(mut self, r: bool) -> Self {
+        self.rtp_recycle = r;
+        self
+    }
+
+    pub fn cfg(&self) -> Result<ModelCfg> {
+        presets::get(&self.preset)
+            .ok_or_else(|| anyhow!("unknown preset {:?}", self.preset))
+    }
+}
+
+pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
+    let cfg = opts.cfg()?;
+    let workers = if opts.strategy == Strategy::Single { 1 } else { opts.workers };
+    let par = ParallelCfg {
+        strategy: opts.strategy,
+        workers,
+        global_batch: opts.global_batch,
+    };
+    let exec = match opts.exec {
+        ExecKind::Oracle => Exec::Oracle,
+        ExecKind::Virtual => Exec::Virtual,
+        ExecKind::Pjrt => Exec::Pjrt(Box::new(PjrtRuntime::new(
+            &artifacts_root(),
+            &opts.preset,
+        )?)),
+        ExecKind::PjrtPallas => Exec::PjrtPallas(Box::new(PjrtRuntime::new(
+            &artifacts_root(),
+            &opts.preset,
+        )?)),
+    };
+    let mut cluster = Cluster::new(workers, opts.capacity);
+    if opts.trace {
+        cluster.trace = crate::cluster::TraceLog::enabled();
+    }
+    let timeline = opts.hardware.clone().map(|hw| Timeline::new(hw, workers));
+    let ctx = Ctx { cfg, par, exec, cluster, timeline };
+
+    Ok(match opts.strategy {
+        Strategy::Single => Box::new(SingleEngine::new(ctx, opts.seed)?),
+        Strategy::Ddp => Box::new(DdpEngine::new(ctx, opts.seed)?),
+        Strategy::Fsdp => {
+            Box::new(FsdpEngine::new(ctx, opts.seed, opts.fsdp_granularity)?)
+        }
+        Strategy::MegatronTp => Box::new(TpEngine::new(ctx, opts.seed)?),
+        Strategy::RtpInplace => {
+            Box::new(RtpEngine::new(ctx, opts.seed, RtpVariant::InPlace)?)
+        }
+        Strategy::RtpOutOfPlace => Box::new(RtpEngine::new(
+            ctx,
+            opts.seed,
+            RtpVariant::OutOfPlace { recycle: opts.rtp_recycle },
+        )?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_every_strategy_virtual() {
+        for strategy in Strategy::ALL {
+            let opts = EngineOpts::new("tiny", strategy, 4, 4).exec(ExecKind::Virtual);
+            let e = build_engine(&opts).unwrap();
+            assert!(!e.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn single_forces_one_worker() {
+        let opts = EngineOpts::new("tiny", Strategy::Single, 8, 4).exec(ExecKind::Virtual);
+        let e = build_engine(&opts).unwrap();
+        assert_eq!(e.ctx().cluster.n(), 1);
+    }
+
+    #[test]
+    fn unknown_preset_is_error() {
+        let opts = EngineOpts::new("nope", Strategy::Ddp, 2, 4).exec(ExecKind::Virtual);
+        assert!(build_engine(&opts).is_err());
+    }
+
+    #[test]
+    fn tp_rejects_moe() {
+        let opts =
+            EngineOpts::new("tiny-moe", Strategy::MegatronTp, 2, 4).exec(ExecKind::Virtual);
+        assert!(build_engine(&opts).is_err());
+    }
+}

@@ -1,0 +1,470 @@
+//! Shared engine infrastructure: the execution context (executor + cluster
+//! + timeline + trace), tracked buffers, the generic op-call helper every
+//! engine computes through, and batch handling.
+//!
+//! Design invariant (DESIGN.md §4): real and virtual mode run the SAME
+//! engine code. `call_op` charges the memory tracker and the timeline
+//! identically in both; only the presence of data differs.
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, TraceEvent};
+use crate::config::{ModelCfg, ParallelCfg};
+use crate::memory::tracker::{AllocId, MemCategory};
+use crate::model::ops::{self, Op};
+use crate::perfmodel::Timeline;
+use crate::runtime::{ArgRef, Buf, Exec};
+use crate::tensor::{HostTensor, IntTensor};
+use crate::util::rng::Rng;
+
+/// A tracker-registered buffer: every transient engine buffer flows
+/// through this so peak-memory figures see it.
+#[derive(Debug)]
+pub struct TBuf {
+    pub buf: Buf,
+    pub id: AllocId,
+    pub worker: usize,
+}
+
+impl TBuf {
+    pub fn f(&self) -> &HostTensor {
+        self.buf.f()
+    }
+    pub fn f_mut(&mut self) -> &mut HostTensor {
+        self.buf.f_mut()
+    }
+    pub fn is_virtual(&self) -> bool {
+        self.buf.is_virtual()
+    }
+}
+
+/// One training batch (global): token ids + next-token targets, [B, S].
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub ids: IntTensor,
+    pub targets: IntTensor,
+}
+
+impl Batch {
+    /// Uniform-random synthetic batch (capacity/throughput figures).
+    pub fn synth(cfg: &ModelCfg, global_batch: usize, rng: &mut Rng) -> Batch {
+        Batch {
+            ids: IntTensor::rand_below(&[global_batch, cfg.seq], cfg.vocab as i32, rng),
+            targets: IntTensor::rand_below(&[global_batch, cfg.seq], cfg.vocab as i32, rng),
+        }
+    }
+
+    /// Batch-dimension shard `w` of `n` (rows, contiguous).
+    pub fn shard(&self, w: usize, n: usize) -> Batch {
+        let b = self.ids.shape[0];
+        assert_eq!(b % n, 0, "global batch {b} not divisible by {n}");
+        let per = b / n;
+        let slice = |t: &IntTensor| {
+            let s = t.shape[1];
+            IntTensor::from_vec(
+                &[per, s],
+                t.data[w * per * s..(w + 1) * per * s].to_vec(),
+            )
+        };
+        Batch { ids: slice(&self.ids), targets: slice(&self.targets) }
+    }
+}
+
+/// Everything an engine computes against.
+pub struct Ctx {
+    pub cfg: ModelCfg,
+    pub par: ParallelCfg,
+    pub exec: Exec,
+    pub cluster: Cluster,
+    /// Present when modeling step time (virtual-mode sweeps). Charged for
+    /// worker 0 only — the schedule is symmetric SPMD.
+    pub timeline: Option<Timeline>,
+}
+
+impl Ctx {
+    pub fn n(&self) -> usize {
+        self.par.workers
+    }
+
+    pub fn virtual_mode(&self) -> bool {
+        self.exec.is_virtual()
+    }
+
+    /// Allocate a tracked buffer on worker `w`.
+    pub fn alloc(&mut self, w: usize, cat: MemCategory, buf: Buf) -> Result<TBuf> {
+        let bytes = buf.bytes();
+        if cat == MemCategory::CommBuf {
+            // comm-buffer churn against a near-capacity working set is
+            // what thrashes the caching allocator (the paper's FSDP
+            // full-batch cliff). The step's WORKING SET (peak so far), not
+            // the instantaneous live, is what the allocator cache holds —
+            // see Timeline::alloc_event.
+            if let (0, Some(tl)) = (w, self.timeline.as_mut()) {
+                let t = &self.cluster.workers[w].tracker;
+                tl.alloc_event(t.peak().max(t.live()), bytes);
+            }
+        }
+        let id = self.cluster.tracker(w).alloc(cat, bytes)?;
+        Ok(TBuf { buf, id, worker: w })
+    }
+
+    pub fn free(&mut self, t: TBuf) {
+        self.cluster.tracker(t.worker).free(t.id);
+    }
+
+    /// §3.4.4 buffer recycling: retag a dead comm buffer as activations.
+    pub fn recycle(&mut self, t: &TBuf, to: MemCategory) {
+        self.cluster.workers[t.worker].tracker.recycle(t.id, to);
+    }
+
+    /// The universal op call: charges the timeline (worker 0), runs the
+    /// executor, and registers every output with worker `w`'s tracker
+    /// under the caller's categories.
+    pub fn call_op(
+        &mut self,
+        w: usize,
+        op: Op,
+        b: usize,
+        p: usize,
+        args: &[ArgRef],
+        out_cats: &[MemCategory],
+    ) -> Result<Vec<TBuf>> {
+        if w == 0 {
+            if let Some(tl) = self.timeline.as_mut() {
+                tl.compute(op.key_name(), &ops::op_cost(op, &self.cfg, b, p));
+            }
+        }
+        let outs = self.exec.call(op, &self.cfg, b, p, args)?;
+        debug_assert_eq!(outs.len(), out_cats.len(), "{op}: out_cats arity");
+        outs.into_iter()
+            .zip(out_cats)
+            .map(|(buf, &cat)| self.alloc(w, cat, buf))
+            .collect()
+    }
+
+    /// Trace helper (no-op unless tracing is on).
+    pub fn trace(&mut self, e: TraceEvent) {
+        self.cluster.trace.push(e);
+    }
+
+    // -- real-mode host glue (no-ops in virtual mode) --------------------
+
+    /// Merged-output bias add (the "+bo / +b2 applied once" convention).
+    pub fn add_bias(&mut self, x: &mut TBuf, bias: Option<&HostTensor>) {
+        if let (Buf::Real(t), Some(b)) = (&mut x.buf, bias) {
+            t.add_row_broadcast(b);
+        }
+    }
+
+    /// Accumulate `part` into `acc` (sum-merge).
+    pub fn accumulate(&mut self, acc: &mut TBuf, part: &TBuf) {
+        if let (Buf::Real(a), Buf::Real(p)) = (&mut acc.buf, &part.buf) {
+            a.add_assign(p);
+        }
+    }
+
+    /// Residual add: x = x + part, reusing x's buffer.
+    pub fn residual(&mut self, x: &mut TBuf, part: &TBuf) {
+        self.accumulate(x, part);
+    }
+
+    /// Write a column slice (concat-merge assembly).
+    pub fn write_col_slice(&mut self, full: &mut TBuf, start: usize, part: &TBuf) {
+        if let (Buf::Real(f), Buf::Real(p)) = (&mut full.buf, &part.buf) {
+            f.write_slice_last(start, p);
+        }
+    }
+
+    /// Read a column slice as a new tracked buffer (concat-merge backward).
+    pub fn col_slice(
+        &mut self,
+        w: usize,
+        src: &TBuf,
+        start: usize,
+        len: usize,
+        cat: MemCategory,
+    ) -> Result<TBuf> {
+        let buf = match &src.buf {
+            Buf::Real(t) => Buf::Real(t.slice_last(start, len)),
+            _ => {
+                let mut shape = src.buf.shape().to_vec();
+                *shape.last_mut().unwrap() = len;
+                Buf::Virt(shape)
+            }
+        };
+        self.alloc(w, cat, buf)
+    }
+
+    /// Mean loss from a scalar xent output (0.0 in virtual mode).
+    pub fn loss_of(&self, t: &TBuf) -> f32 {
+        match &t.buf {
+            Buf::Real(h) => h.data[0],
+            _ => 0.0,
+        }
+    }
+}
+
+/// The replicated (non-sharded) parameters TP/RTP keep per worker: LN
+/// gains/biases, merged-output biases, the MoE router. Tiny vs W, so the
+/// paper's tables ignore them; we still track their bytes exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RepLayer {
+    pub ln1_g: HostTensor,
+    pub ln1_b: HostTensor,
+    pub bo: HostTensor,
+    pub ln2_g: HostTensor,
+    pub ln2_b: HostTensor,
+    pub b2: HostTensor,
+    pub wr: Option<HostTensor>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RepParams {
+    pub layers: Vec<RepLayer>,
+    pub lnf_g: HostTensor,
+    pub lnf_b: HostTensor,
+}
+
+impl RepParams {
+    pub fn from_full(full: &crate::model::ModelParams) -> RepParams {
+        RepParams {
+            layers: full
+                .layers
+                .iter()
+                .map(|l| RepLayer {
+                    ln1_g: l.ln1_g.clone(),
+                    ln1_b: l.ln1_b.clone(),
+                    bo: l.bo.clone(),
+                    ln2_g: l.ln2_g.clone(),
+                    ln2_b: l.ln2_b.clone(),
+                    b2: match &l.mlp {
+                        crate::model::MlpParams::Dense { b2, .. } => b2.clone(),
+                        crate::model::MlpParams::Moe { b2, .. } => b2.clone(),
+                    },
+                    wr: match &l.mlp {
+                        crate::model::MlpParams::Moe { wr, .. } => Some(wr.clone()),
+                        _ => None,
+                    },
+                })
+                .collect(),
+            lnf_g: full.lnf_g.clone(),
+            lnf_b: full.lnf_b.clone(),
+        }
+    }
+
+    pub fn zeros_like(&self) -> RepParams {
+        let mut z = self.clone();
+        z.visit_mut(&mut |t| t.data.fill(0.0));
+        z
+    }
+
+    pub fn visit_mut(&mut self, f: &mut dyn FnMut(&mut HostTensor)) {
+        for l in &mut self.layers {
+            f(&mut l.ln1_g);
+            f(&mut l.ln1_b);
+            f(&mut l.bo);
+            f(&mut l.ln2_g);
+            f(&mut l.ln2_b);
+            f(&mut l.b2);
+            if let Some(wr) = &mut l.wr {
+                f(wr);
+            }
+        }
+        f(&mut self.lnf_g);
+        f(&mut self.lnf_b);
+    }
+
+    pub fn visit(&self, f: &mut dyn FnMut(&HostTensor)) {
+        for l in &self.layers {
+            f(&l.ln1_g);
+            f(&l.ln1_b);
+            f(&l.bo);
+            f(&l.ln2_g);
+            f(&l.ln2_b);
+            f(&l.b2);
+            if let Some(wr) = &l.wr {
+                f(wr);
+            }
+        }
+        f(&self.lnf_g);
+        f(&self.lnf_b);
+    }
+
+    pub fn numel(&self) -> usize {
+        let mut n = 0;
+        self.visit(&mut |t| n += t.numel());
+        n
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.numel() * 4) as u64
+    }
+
+    /// Flatten to one message (for the replicated-grad allreduce).
+    pub fn pack(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.numel());
+        self.visit(&mut |t| out.extend_from_slice(&t.data));
+        out
+    }
+
+    pub fn unpack(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        self.visit_mut(&mut |t| {
+            let len = t.data.len();
+            t.data.copy_from_slice(&flat[off..off + len]);
+            off += len;
+        });
+        assert_eq!(off, flat.len(), "RepParams unpack length mismatch");
+    }
+}
+
+/// Replicated-parameter element count straight from the config (virtual
+/// mode has no tensors to count).
+pub fn replicated_elems(cfg: &ModelCfg) -> usize {
+    // per layer: ln1 g+b, bo, ln2 g+b, b2 = 6H (+ router H*E for MoE)
+    let per_layer = 6 * cfg.hidden
+        + if cfg.is_moe() { cfg.hidden * cfg.experts } else { 0 };
+    cfg.layers * per_layer + 2 * cfg.hidden
+}
+
+/// Top-1 gates from router probs: gates[e][b,s] = prob_e if argmax == e
+/// else 0. Host-side (routing is control flow, not a kernel).
+pub fn top1_gates(probs: &HostTensor, experts: usize) -> Vec<HostTensor> {
+    let e = probs.last_dim();
+    assert_eq!(e, experts);
+    let rows = probs.rows();
+    let lead = &probs.shape[..probs.shape.len() - 1];
+    let mut gates: Vec<HostTensor> =
+        (0..experts).map(|_| HostTensor::zeros(lead)).collect();
+    for r in 0..rows {
+        let row = &probs.data[r * e..(r + 1) * e];
+        let (best, &p) = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        gates[best].data[r] = p;
+    }
+    gates
+}
+
+/// Scatter per-expert dgates back into a dprobs tensor (inverse of
+/// `top1_gates` for the backward pass): dprobs[..., e] = dgates_e where
+/// expert e was selected, 0 elsewhere.
+pub fn scatter_dgates(
+    dgates: &[(usize, HostTensor)],
+    probs: &HostTensor,
+) -> HostTensor {
+    let e = probs.last_dim();
+    let rows = probs.rows();
+    let mut dprobs = HostTensor::zeros(&probs.shape);
+    // recompute the argmax routing
+    for r in 0..rows {
+        let row = &probs.data[r * e..(r + 1) * e];
+        let best = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        for (ei, dg) in dgates {
+            if *ei == best {
+                dprobs.data[r * e + best] = dg.data[r];
+            }
+        }
+    }
+    dprobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Strategy};
+
+    fn ctx(n: usize) -> Ctx {
+        Ctx {
+            cfg: presets::get("tiny").unwrap(),
+            par: ParallelCfg {
+                strategy: Strategy::RtpInplace,
+                workers: n,
+                global_batch: 4,
+            },
+            exec: Exec::Virtual,
+            cluster: Cluster::new(n, None),
+            timeline: None,
+        }
+    }
+
+    #[test]
+    fn batch_shard_partitions_rows() {
+        let cfg = presets::get("tiny").unwrap();
+        let mut rng = Rng::new(1);
+        let b = Batch::synth(&cfg, 4, &mut rng);
+        let s0 = b.shard(0, 2);
+        let s1 = b.shard(1, 2);
+        assert_eq!(s0.ids.shape, vec![2, cfg.seq]);
+        assert_eq!(
+            [s0.ids.data.clone(), s1.ids.data.clone()].concat(),
+            b.ids.data
+        );
+    }
+
+    #[test]
+    fn call_op_tracks_outputs() {
+        let mut c = ctx(2);
+        let outs = c
+            .call_op(
+                1,
+                Op::LnFwd,
+                2,
+                1,
+                &[],
+                &[MemCategory::Activations],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(
+            c.cluster.workers[1].tracker.live(),
+            outs[0].buf.bytes()
+        );
+        for o in outs {
+            c.free(o);
+        }
+        assert_eq!(c.cluster.workers[1].tracker.live(), 0);
+    }
+
+    #[test]
+    fn replicated_elems_matches_packed() {
+        let cfg = presets::get("tiny-moe").unwrap();
+        let full = crate::model::ModelParams::init(&cfg, &mut Rng::new(2));
+        let rep = RepParams::from_full(&full);
+        assert_eq!(rep.numel(), replicated_elems(&cfg));
+        let flat = rep.pack();
+        assert_eq!(flat.len(), rep.numel());
+        let mut rep2 = rep.zeros_like();
+        rep2.unpack(&flat);
+        assert_eq!(rep, rep2);
+    }
+
+    #[test]
+    fn top1_gates_select_max_prob() {
+        // 2 tokens, 3 experts
+        let probs = HostTensor::from_vec(&[1, 2, 3], vec![0.2, 0.5, 0.3, 0.7, 0.1, 0.2]);
+        let gates = top1_gates(&probs, 3);
+        assert_eq!(gates[1].data, vec![0.5, 0.0]);
+        assert_eq!(gates[0].data, vec![0.0, 0.7]);
+        assert_eq!(gates[2].data, vec![0.0, 0.0]);
+        // each token routed exactly once
+        let total: f32 = gates.iter().map(|g| g.data.iter().filter(|&&v| v > 0.0).count() as f32).sum();
+        assert_eq!(total, 2.0);
+    }
+
+    #[test]
+    fn scatter_dgates_inverts_routing() {
+        let probs = HostTensor::from_vec(&[1, 2, 2], vec![0.9, 0.1, 0.2, 0.8]);
+        let dg0 = HostTensor::from_vec(&[1, 2], vec![5.0, 0.0]);
+        let dg1 = HostTensor::from_vec(&[1, 2], vec![0.0, 7.0]);
+        let dprobs = scatter_dgates(&[(0, dg0), (1, dg1)], &probs);
+        assert_eq!(dprobs.data, vec![5.0, 0.0, 0.0, 7.0]);
+    }
+}

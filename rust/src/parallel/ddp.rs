@@ -1,0 +1,232 @@
+//! Distributed Data Parallel: full replica per worker, batch-sharded
+//! activations, bucketed gradient allreduce (paper Table 1 row 3 —
+//! (W+G)·(N-1) duplication).
+//!
+//! The allreduce is issued per layer-bucket DURING the backward walk
+//! (PyTorch-DDP style overlap): each `unit_end(Bwd)` fires an async
+//! allreduce of that unit's grads on the timeline; `step` waits for all of
+//! them at the end. Real-mode reduction averages the replicas so every
+//! replica holds the same mean gradient (allreduce-mean).
+
+use anyhow::Result;
+
+use crate::comm::{self, CommPrim};
+use crate::memory::tracker::MemCategory;
+use crate::model::ModelParams;
+use crate::perfmodel::Token;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+use super::common::{Batch, Ctx, TBuf};
+use super::dense::{dense_step, DenseHooks, Phase, Slot, Unit};
+use super::single::grad_into;
+use super::Engine;
+
+pub struct DdpEngine {
+    pub ctx: Ctx,
+    hooks: DdpHooks,
+    pending: Vec<Token>,
+    last_loss: f32,
+}
+
+struct DdpHooks {
+    /// One full replica per worker (empty in virtual mode).
+    replicas: Vec<ModelParams>,
+    grads: Vec<ModelParams>,
+    /// Which worker the walk is currently running for.
+    active: usize,
+    /// Unit grad bytes (for the per-bucket allreduce charge).
+    unit_bytes: Vec<(Unit, u64)>,
+    pending: Vec<Token>,
+}
+
+impl DenseHooks for DdpHooks {
+    fn unit_begin(&mut self, _: &mut Ctx, _: usize, _: Unit, _: Phase) -> Result<()> {
+        Ok(())
+    }
+
+    fn unit_end(&mut self, ctx: &mut Ctx, w: usize, unit: Unit, phase: Phase) -> Result<()> {
+        // bucketed allreduce overlap: fire this unit's grad reduction as
+        // soon as its backward completes (worker 0 = the modeled worker)
+        if phase == Phase::Bwd && w == 0 && ctx.n() > 1 {
+            let bytes = self
+                .unit_bytes
+                .iter()
+                .find(|(u, _)| *u == unit)
+                .map(|(_, b)| *b)
+                .unwrap_or(0);
+            if let Some(tl) = ctx.timeline.as_mut() {
+                let tok = tl.comm_async("allreduce", CommPrim::AllReduce, bytes);
+                self.pending.push(tok);
+            }
+        }
+        Ok(())
+    }
+
+    fn params(&self, w: usize) -> Option<&ModelParams> {
+        self.replicas.get(w)
+    }
+
+    fn grad(&mut self, ctx: &mut Ctx, w: usize, slot: Slot, src: TBuf) -> Result<()> {
+        debug_assert_eq!(w, self.active);
+        if let (Some(g), false) = (self.grads.get_mut(w), src.is_virtual()) {
+            grad_into(g, slot, &src);
+        }
+        ctx.free(src);
+        Ok(())
+    }
+
+    fn moe_exchange(&mut self, ctx: &mut Ctx, w: usize, bytes: u64) -> Result<()> {
+        // expert-parallel DP shuffles tokens to/from the expert owners
+        if w == 0 && ctx.n() > 1 {
+            if let Some(tl) = ctx.timeline.as_mut() {
+                tl.comm_blocking("all-to-all", CommPrim::AllToAll, bytes);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl DdpEngine {
+    pub fn new(mut ctx: Ctx, seed: u64) -> Result<Self> {
+        let n = ctx.n();
+        let virt = ctx.virtual_mode();
+        let (replicas, grads) = if virt {
+            (Vec::new(), Vec::new())
+        } else {
+            // every replica starts from the SAME seed (DDP broadcast-at-init)
+            let reps: Vec<ModelParams> = (0..n)
+                .map(|_| ModelParams::init(&ctx.cfg, &mut Rng::new(seed)))
+                .collect();
+            let grads = (0..n).map(|_| ModelParams::zeros_like(&ctx.cfg)).collect();
+            (reps, grads)
+        };
+        let wbytes = ctx.cfg.weight_bytes();
+        for w in 0..n {
+            ctx.cluster.tracker(w).alloc(MemCategory::Weights, wbytes)?;
+            ctx.cluster.tracker(w).alloc(MemCategory::Grads, wbytes)?;
+        }
+        let unit_bytes = unit_grad_bytes(&ctx.cfg);
+        Ok(DdpEngine {
+            ctx,
+            hooks: DdpHooks {
+                replicas,
+                grads,
+                active: 0,
+                unit_bytes,
+                pending: Vec::new(),
+            },
+            pending: Vec::new(),
+            last_loss: 0.0,
+        })
+    }
+}
+
+/// Per-unit parameter bytes (the DDP bucket sizes).
+pub fn unit_grad_bytes(cfg: &crate::config::ModelCfg) -> Vec<(Unit, u64)> {
+    let h = cfg.hidden;
+    let per_layer: usize = 3 * h * h
+        + 3 * h
+        + h * h
+        + h
+        + 4 * h
+        + if cfg.is_moe() {
+            h * cfg.experts + cfg.experts * (2 * h * cfg.expert_ffn + cfg.expert_ffn) + h
+        } else {
+            2 * h * cfg.ffn + cfg.ffn + h
+        };
+    let mut v = vec![(Unit::Emb, ((cfg.vocab + cfg.seq) * h * 4) as u64)];
+    for l in 0..cfg.layers {
+        v.push((Unit::Layer(l), (per_layer * 4) as u64));
+    }
+    v.push((Unit::Final, ((2 * h + h * cfg.vocab) * 4) as u64));
+    v
+}
+
+impl Engine for DdpEngine {
+    fn name(&self) -> String {
+        "ddp".to_string()
+    }
+
+    fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let n = self.ctx.n();
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            tl.reset();
+        }
+        let mut loss_sum = 0.0;
+        for w in 0..n {
+            self.hooks.active = w;
+            let shard = batch.shard(w, n);
+            loss_sum += dense_step(&mut self.ctx, &mut self.hooks, w, &shard)?;
+        }
+        self.pending.append(&mut self.hooks.pending);
+
+        // real-mode allreduce-mean of every grad tensor across replicas
+        if !self.ctx.virtual_mode() && n > 1 {
+            allreduce_mean_params(&mut self.hooks.grads);
+        }
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            for tok in self.pending.drain(..) {
+                tl.wait(tok);
+            }
+            tl.barrier();
+        }
+        self.last_loss = loss_sum / n as f32;
+        Ok(self.last_loss)
+    }
+
+    fn gather_params(&self) -> ModelParams {
+        self.hooks.replicas.first().cloned().expect("virtual mode")
+    }
+
+    fn gather_grads(&self) -> ModelParams {
+        self.hooks.grads.first().cloned().expect("virtual mode")
+    }
+
+    fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
+        for (p, g) in self.hooks.replicas.iter_mut().zip(&self.hooks.grads) {
+            p.zip_mut(g, &mut |_, t, gt| f(t, gt));
+        }
+    }
+
+    fn zero_grads(&mut self) {
+        for g in &mut self.hooks.grads {
+            g.visit_mut(&mut |_, t| t.data.fill(0.0));
+        }
+    }
+
+    fn ctx(&self) -> &Ctx {
+        &self.ctx
+    }
+    fn ctx_mut(&mut self) -> &mut Ctx {
+        &mut self.ctx
+    }
+}
+
+/// Allreduce-mean every parameter across the per-worker grad sets
+/// (flat-pack, ring allreduce, unpack + 1/N).
+pub fn allreduce_mean_params(grads: &mut [ModelParams]) {
+    let n = grads.len();
+    if n <= 1 {
+        return;
+    }
+    let mut bufs: Vec<Vec<f32>> = grads
+        .iter()
+        .map(|g| {
+            let mut v = Vec::new();
+            g.visit(&mut |_, t| v.extend_from_slice(&t.data));
+            v
+        })
+        .collect();
+    comm::allreduce_sum(&mut bufs);
+    let scale = 1.0 / n as f32;
+    for (g, b) in grads.iter_mut().zip(&bufs) {
+        let mut off = 0;
+        g.visit_mut(&mut |_, t| {
+            let l = t.data.len();
+            t.data.copy_from_slice(&b[off..off + l]);
+            t.scale(scale);
+            off += l;
+        });
+    }
+}

@@ -1,0 +1,641 @@
+//! The dense (p = 1, full-weight) forward+backward walk shared by the
+//! `single`, `ddp` and `fsdp` engines.
+//!
+//! The walk is written once against the `DenseHooks` trait: `single`/`ddp`
+//! hand out their resident replica and accumulate grads locally; `fsdp`
+//! allgathers each unit's FlatParameter on `unit_begin`, frees it on
+//! `unit_end`, and reduce-scatters unit grads. The compute sequence —
+//! and therefore every tracker allocation and timeline charge — is
+//! identical across the three, which is exactly the comparison the
+//! paper's memory figures make.
+
+use anyhow::Result;
+
+use crate::memory::tracker::MemCategory;
+use crate::model::ops::Op;
+use crate::model::{MlpParams, ModelParams};
+use crate::runtime::{arg_of, Buf};
+use crate::tensor::HostTensor;
+
+use super::common::{scatter_dgates, top1_gates, Batch, Ctx, TBuf};
+
+/// FSDP-style unit granularity over the dense model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    /// wte + wpe
+    Emb,
+    /// One transformer layer (ln1 + attn + ln2 + mlp/moe).
+    Layer(usize),
+    /// lnf + LM head.
+    Final,
+}
+
+impl Unit {
+    pub fn all(layers: usize) -> Vec<Unit> {
+        let mut v = vec![Unit::Emb];
+        v.extend((0..layers).map(Unit::Layer));
+        v.push(Unit::Final);
+        v
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Fwd,
+    Bwd,
+}
+
+/// A weight-grad destination slot (parameter identity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slot {
+    pub layer: Option<usize>,
+    pub expert: Option<usize>,
+    pub name: &'static str,
+}
+
+impl Slot {
+    pub fn global(name: &'static str) -> Slot {
+        Slot { layer: None, expert: None, name }
+    }
+    pub fn layer(l: usize, name: &'static str) -> Slot {
+        Slot { layer: Some(l), expert: None, name }
+    }
+    pub fn expert(l: usize, e: usize, name: &'static str) -> Slot {
+        Slot { layer: Some(l), expert: Some(e), name }
+    }
+
+    /// The unit a slot belongs to (FSDP reduce-scatter granularity).
+    pub fn unit(&self) -> Unit {
+        match self.layer {
+            Some(l) => Unit::Layer(l),
+            None => match self.name {
+                "wte" | "wpe" => Unit::Emb,
+                _ => Unit::Final,
+            },
+        }
+    }
+}
+
+/// What the dense walk needs from an engine.
+pub trait DenseHooks {
+    /// Make `unit`'s full weights resident on worker `w` (FSDP: allgather).
+    fn unit_begin(&mut self, ctx: &mut Ctx, w: usize, unit: Unit, phase: Phase) -> Result<()>;
+    /// Done with `unit` on worker `w` in this phase (FSDP: free + in Bwd
+    /// reduce-scatter the unit's grads).
+    fn unit_end(&mut self, ctx: &mut Ctx, w: usize, unit: Unit, phase: Phase) -> Result<()>;
+    /// The currently-resident full params for worker `w` (None in virtual
+    /// mode — the walk then passes virtual args).
+    fn params(&self, w: usize) -> Option<&ModelParams>;
+    /// Consume one weight-grad buffer for `slot` (accumulate + free).
+    fn grad(&mut self, ctx: &mut Ctx, w: usize, slot: Slot, src: TBuf) -> Result<()>;
+
+    /// Charged before AND after each MoE expert block: the token
+    /// all-to-all an expert-parallel DP/FSDP system pays (paper §4 "MOE
+    /// Block"). Default: nothing (single device has no exchange).
+    fn moe_exchange(&mut self, _ctx: &mut Ctx, _w: usize, _bytes: u64) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Per-layer saved activations (recompute-from-inputs policy: only unit
+/// INPUTS are stashed, matching the Table-1 activation model).
+struct SavedLayer {
+    x_in: TBuf,
+    a: TBuf,
+    x_mid: TBuf,
+    m: TBuf,
+    /// MoE: router probs + per-expert gates (needed to rebuild routing).
+    probs: Option<TBuf>,
+    gates: Vec<TBuf>,
+}
+
+/// Sum-over-leading-axes bias gradient as a tracked buffer.
+fn bias_grad(ctx: &mut Ctx, w: usize, dy: &TBuf, dim: usize) -> Result<TBuf> {
+    let buf = match &dy.buf {
+        Buf::Real(t) => Buf::Real(t.sum_leading()),
+        _ => Buf::Virt(vec![dim]),
+    };
+    ctx.alloc(w, MemCategory::Grads, buf)
+}
+
+/// One full forward+backward on worker `w` over its batch shard.
+/// Returns the worker's mean loss.
+pub fn dense_step(
+    ctx: &mut Ctx,
+    hooks: &mut dyn DenseHooks,
+    w: usize,
+    batch: &Batch,
+) -> Result<f32> {
+    let cfg = ctx.cfg.clone();
+    let b = batch.ids.shape[0];
+    let h = cfg.hidden;
+    let virt = ctx.virtual_mode();
+    let acts = MemCategory::Activations;
+
+    let ids = ctx.alloc(
+        w,
+        acts,
+        if virt { Buf::Virt(vec![b, cfg.seq]) } else { Buf::Ids(batch.ids.clone()) },
+    )?;
+    let targets = ctx.alloc(
+        w,
+        acts,
+        if virt { Buf::Virt(vec![b, cfg.seq]) } else { Buf::Ids(batch.targets.clone()) },
+    )?;
+
+    // ---------------- forward ----------------
+    hooks.unit_begin(ctx, w, Unit::Emb, Phase::Fwd)?;
+    let mut x = {
+        let p = hooks.params(w);
+        let (wte, wpe) = (p.map(|p| &p.wte), p.map(|p| &p.wpe));
+        let mut outs = ctx.call_op(
+            w,
+            Op::EmbFwd,
+            b,
+            1,
+            &[ids.buf.arg(), arg_of(wte), arg_of(wpe)],
+            &[acts],
+        )?;
+        outs.pop().unwrap()
+    };
+    hooks.unit_end(ctx, w, Unit::Emb, Phase::Fwd)?;
+
+    let mut saved: Vec<SavedLayer> = Vec::with_capacity(cfg.layers);
+    for l in 0..cfg.layers {
+        hooks.unit_begin(ctx, w, Unit::Layer(l), Phase::Fwd)?;
+        // ln1 -> attention (+bo) -> residual
+        let a = {
+            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let mut outs = ctx.call_op(
+                w,
+                Op::LnFwd,
+                b,
+                1,
+                &[x.buf.arg(), arg_of(lp.map(|l| &l.ln1_g)), arg_of(lp.map(|l| &l.ln1_b))],
+                &[acts],
+            )?;
+            outs.pop().unwrap()
+        };
+        let mut part = {
+            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let mut outs = ctx.call_op(
+                w,
+                Op::AttnFwd,
+                b,
+                1,
+                &[
+                    a.buf.arg(),
+                    arg_of(lp.map(|l| &l.wqkv)),
+                    arg_of(lp.map(|l| &l.bqkv)),
+                    arg_of(lp.map(|l| &l.wo)),
+                ],
+                &[acts],
+            )?;
+            outs.pop().unwrap()
+        };
+        let bo = hooks.params(w).map(|p| p.layers[l].bo.clone());
+        ctx.add_bias(&mut part, bo.as_ref());
+        ctx.residual(&mut part, &x);
+        let x_mid = part; // new residual stream
+        // ln2 -> mlp/moe (+b2) -> residual
+        let m = {
+            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let mut outs = ctx.call_op(
+                w,
+                Op::LnFwd,
+                b,
+                1,
+                &[
+                    x_mid.buf.arg(),
+                    arg_of(lp.map(|l| &l.ln2_g)),
+                    arg_of(lp.map(|l| &l.ln2_b)),
+                ],
+                &[acts],
+            )?;
+            outs.pop().unwrap()
+        };
+
+        let is_moe = cfg.is_moe();
+        let (mut part2, probs, gates) = if !is_moe {
+            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let dense = lp.map(|l| match &l.mlp {
+                MlpParams::Dense { w1, b1, w2, .. } => (w1, b1, w2),
+                _ => unreachable!("dense cfg with moe params"),
+            });
+            let mut outs = ctx.call_op(
+                w,
+                Op::MlpFwd,
+                b,
+                1,
+                &[
+                    m.buf.arg(),
+                    arg_of(dense.map(|d| d.0)),
+                    arg_of(dense.map(|d| d.1)),
+                    arg_of(dense.map(|d| d.2)),
+                ],
+                &[acts],
+            )?;
+            (outs.pop().unwrap(), None, Vec::new())
+        } else {
+            // router -> top-1 gates -> every expert (dense-masked)
+            let probs = {
+                let lp = hooks.params(w).map(|p| &p.layers[l]);
+                let wr = lp.map(|l| match &l.mlp {
+                    MlpParams::Moe { wr, .. } => wr,
+                    _ => unreachable!(),
+                });
+                let mut outs = ctx.call_op(
+                    w,
+                    Op::RouterFwd,
+                    b,
+                    1,
+                    &[m.buf.arg(), arg_of(wr)],
+                    &[acts],
+                )?;
+                outs.pop().unwrap()
+            };
+            let a2a = (b * cfg.seq * h * 4) as u64;
+            hooks.moe_exchange(ctx, w, a2a)?;
+            let gate_tensors: Vec<Buf> = if virt {
+                (0..cfg.experts).map(|_| Buf::Virt(vec![b, cfg.seq])).collect()
+            } else {
+                top1_gates(probs.f(), cfg.experts).into_iter().map(Buf::Real).collect()
+            };
+            let mut gates = Vec::with_capacity(cfg.experts);
+            for g in gate_tensors {
+                gates.push(ctx.alloc(w, acts, g)?);
+            }
+            let mut acc: Option<TBuf> = None;
+            for e in 0..cfg.experts {
+                let part = {
+                    let lp = hooks.params(w).map(|p| &p.layers[l]);
+                    let ex = lp.map(|l| match &l.mlp {
+                        MlpParams::Moe { experts, .. } => &experts[e],
+                        _ => unreachable!(),
+                    });
+                    let mut outs = ctx.call_op(
+                        w,
+                        Op::MoeFwd,
+                        b,
+                        1,
+                        &[
+                            m.buf.arg(),
+                            gates[e].buf.arg(),
+                            arg_of(ex.map(|x| &x.w1)),
+                            arg_of(ex.map(|x| &x.b1)),
+                            arg_of(ex.map(|x| &x.w2)),
+                        ],
+                        &[acts],
+                    )?;
+                    outs.pop().unwrap()
+                };
+                match &mut acc {
+                    None => acc = Some(part),
+                    Some(a) => {
+                        ctx.accumulate(a, &part);
+                        ctx.free(part);
+                    }
+                }
+            }
+            hooks.moe_exchange(ctx, w, (b * cfg.seq * h * 4) as u64)?;
+            (acc.unwrap(), Some(probs), gates)
+        };
+        let b2 = hooks.params(w).map(|p| match &p.layers[l].mlp {
+            MlpParams::Dense { b2, .. } => b2.clone(),
+            MlpParams::Moe { b2, .. } => b2.clone(),
+        });
+        ctx.add_bias(&mut part2, b2.as_ref());
+        ctx.residual(&mut part2, &x_mid);
+        hooks.unit_end(ctx, w, Unit::Layer(l), Phase::Fwd)?;
+
+        saved.push(SavedLayer { x_in: x, a, x_mid, m, probs, gates });
+        x = part2;
+    }
+
+    // final LN + LM head + loss
+    hooks.unit_begin(ctx, w, Unit::Final, Phase::Fwd)?;
+    let xf = {
+        let p = hooks.params(w);
+        let mut outs = ctx.call_op(
+            w,
+            Op::LnFwd,
+            b,
+            1,
+            &[x.buf.arg(), arg_of(p.map(|p| &p.lnf_g)), arg_of(p.map(|p| &p.lnf_b))],
+            &[acts],
+        )?;
+        outs.pop().unwrap()
+    };
+    let logits = {
+        let p = hooks.params(w);
+        let mut outs = ctx.call_op(
+            w,
+            Op::LmheadFwd,
+            b,
+            1,
+            &[xf.buf.arg(), arg_of(p.map(|p| &p.wlm))],
+            &[acts],
+        )?;
+        outs.pop().unwrap()
+    };
+    let mut xent = ctx.call_op(
+        w,
+        Op::Xent,
+        b,
+        1,
+        &[logits.buf.arg(), targets.buf.arg()],
+        &[acts, acts],
+    )?;
+    let dlogits = xent.pop().unwrap();
+    let loss_buf = xent.pop().unwrap();
+    let loss = ctx.loss_of(&loss_buf);
+    ctx.free(loss_buf);
+    ctx.free(logits);
+    ctx.free(targets);
+
+    // ---------------- backward ----------------
+    // The Final unit stayed resident through the loss (its forward
+    // unit_end is deliberately absent); unit_begin(Bwd) is what arms the
+    // gradient staging (FSDP) and the backward prefetch chain.
+    hooks.unit_begin(ctx, w, Unit::Final, Phase::Bwd)?;
+    let (mut dx, dwlm) = {
+        let p = hooks.params(w);
+        let mut outs = ctx.call_op(
+            w,
+            Op::LmheadBwd,
+            b,
+            1,
+            &[xf.buf.arg(), arg_of(p.map(|p| &p.wlm)), dlogits.buf.arg()],
+            &[acts, MemCategory::Grads],
+        )?;
+        let dwlm = outs.pop().unwrap();
+        (outs.pop().unwrap(), dwlm)
+    };
+    hooks.grad(ctx, w, Slot::global("wlm"), dwlm)?;
+    ctx.free(dlogits);
+
+    {
+        // grad through lnf: consume xf, x (the lnf input)
+        let p = hooks.params(w);
+        let mut outs = ctx.call_op(
+            w,
+            Op::LnBwd,
+            b,
+            1,
+            &[
+                x.buf.arg(),
+                arg_of(p.map(|p| &p.lnf_g)),
+                dx.buf.arg(),
+            ],
+            &[acts, MemCategory::Grads, MemCategory::Grads],
+        )?;
+        let db = outs.pop().unwrap();
+        let dg = outs.pop().unwrap();
+        let new_dx = outs.pop().unwrap();
+        hooks.grad(ctx, w, Slot::global("lnf_b"), db)?;
+        hooks.grad(ctx, w, Slot::global("lnf_g"), dg)?;
+        ctx.free(dx);
+        dx = new_dx;
+    }
+    ctx.free(xf);
+    ctx.free(x);
+    hooks.unit_end(ctx, w, Unit::Final, Phase::Bwd)?;
+
+    // layers in reverse
+    for l in (0..cfg.layers).rev() {
+        hooks.unit_begin(ctx, w, Unit::Layer(l), Phase::Bwd)?;
+        let SavedLayer { x_in, a, x_mid, m, probs, gates } = saved.pop().unwrap();
+
+        // dx = grad wrt layer output (x_mid + mlp_part + b2)
+        let db2 = bias_grad(ctx, w, &dx, h)?;
+        hooks.grad(ctx, w, Slot::layer(l, "b2"), db2)?;
+
+        let is_moe = cfg.is_moe();
+        let dm_total = if !is_moe {
+            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let dense = lp.map(|lr| match &lr.mlp {
+                MlpParams::Dense { w1, b1, w2, .. } => (w1, b1, w2),
+                _ => unreachable!(),
+            });
+            let mut outs = ctx.call_op(
+                w,
+                Op::MlpBwd,
+                b,
+                1,
+                &[
+                    m.buf.arg(),
+                    arg_of(dense.map(|d| d.0)),
+                    arg_of(dense.map(|d| d.1)),
+                    arg_of(dense.map(|d| d.2)),
+                    dx.buf.arg(),
+                ],
+                &[acts, MemCategory::Grads, MemCategory::Grads, MemCategory::Grads],
+            )?;
+            let dw2 = outs.pop().unwrap();
+            let db1 = outs.pop().unwrap();
+            let dw1 = outs.pop().unwrap();
+            let dm = outs.pop().unwrap();
+            hooks.grad(ctx, w, Slot::layer(l, "mlp.w2"), dw2)?;
+            hooks.grad(ctx, w, Slot::layer(l, "mlp.b1"), db1)?;
+            hooks.grad(ctx, w, Slot::layer(l, "mlp.w1"), dw1)?;
+            dm
+        } else {
+            // MoE backward: every expert, then router
+            hooks.moe_exchange(ctx, w, (b * cfg.seq * h * 4) as u64)?;
+            let probs = probs.expect("moe saved probs");
+            let mut dm_acc: Option<TBuf> = None;
+            let mut dgates: Vec<(usize, HostTensor)> = Vec::new();
+            for e in 0..cfg.experts {
+                let mut outs = {
+                    let lp = hooks.params(w).map(|p| &p.layers[l]);
+                    let ex = lp.map(|lr| match &lr.mlp {
+                        MlpParams::Moe { experts, .. } => &experts[e],
+                        _ => unreachable!(),
+                    });
+                    ctx.call_op(
+                        w,
+                        Op::MoeBwd,
+                        b,
+                        1,
+                        &[
+                            m.buf.arg(),
+                            gates[e].buf.arg(),
+                            arg_of(ex.map(|x| &x.w1)),
+                            arg_of(ex.map(|x| &x.b1)),
+                            arg_of(ex.map(|x| &x.w2)),
+                            dx.buf.arg(),
+                        ],
+                        &[
+                            acts,
+                            acts,
+                            MemCategory::Grads,
+                            MemCategory::Grads,
+                            MemCategory::Grads,
+                        ],
+                    )?
+                };
+                let dw2 = outs.pop().unwrap();
+                let db1 = outs.pop().unwrap();
+                let dw1 = outs.pop().unwrap();
+                let dgate = outs.pop().unwrap();
+                let dm_e = outs.pop().unwrap();
+                hooks.grad(ctx, w, Slot::expert(l, e, "w2"), dw2)?;
+                hooks.grad(ctx, w, Slot::expert(l, e, "b1"), db1)?;
+                hooks.grad(ctx, w, Slot::expert(l, e, "w1"), dw1)?;
+                if !virt {
+                    dgates.push((e, dgate.f().clone()));
+                }
+                ctx.free(dgate);
+                match &mut dm_acc {
+                    None => dm_acc = Some(dm_e),
+                    Some(acc) => {
+                        ctx.accumulate(acc, &dm_e);
+                        ctx.free(dm_e);
+                    }
+                }
+            }
+            // scatter per-expert dgates back into dprobs, then router bwd
+            let dprobs_buf = if virt {
+                Buf::Virt(vec![b, cfg.seq, cfg.experts])
+            } else {
+                Buf::Real(scatter_dgates(&dgates, probs.f()))
+            };
+            let dprobs = ctx.alloc(w, acts, dprobs_buf)?;
+            let mut outs = {
+                let lp = hooks.params(w).map(|p| &p.layers[l]);
+                let wr = lp.map(|lr| match &lr.mlp {
+                    MlpParams::Moe { wr, .. } => wr,
+                    _ => unreachable!(),
+                });
+                ctx.call_op(
+                    w,
+                    Op::RouterBwd,
+                    b,
+                    1,
+                    &[m.buf.arg(), arg_of(wr), dprobs.buf.arg()],
+                    &[acts, MemCategory::Grads],
+                )?
+            };
+            let dwr = outs.pop().unwrap();
+            let dm_r = outs.pop().unwrap();
+            hooks.grad(ctx, w, Slot::layer(l, "mlp.wr"), dwr)?;
+            ctx.free(dprobs);
+            ctx.free(probs);
+            let mut dm = dm_acc.unwrap();
+            ctx.accumulate(&mut dm, &dm_r);
+            ctx.free(dm_r);
+            hooks.moe_exchange(ctx, w, (b * cfg.seq * h * 4) as u64)?;
+            dm
+        };
+        for g in gates {
+            ctx.free(g);
+        }
+        ctx.free(m);
+
+        // ln2 backward; dx gains the ln2-input grad (residual stream)
+        {
+            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let mut outs = ctx.call_op(
+                w,
+                Op::LnBwd,
+                b,
+                1,
+                &[
+                    x_mid.buf.arg(),
+                    arg_of(lp.map(|lr| &lr.ln2_g)),
+                    dm_total.buf.arg(),
+                ],
+                &[acts, MemCategory::Grads, MemCategory::Grads],
+            )?;
+            let db = outs.pop().unwrap();
+            let dg = outs.pop().unwrap();
+            let dx_ln = outs.pop().unwrap();
+            hooks.grad(ctx, w, Slot::layer(l, "ln2_b"), db)?;
+            hooks.grad(ctx, w, Slot::layer(l, "ln2_g"), dg)?;
+            ctx.accumulate(&mut dx, &dx_ln);
+            ctx.free(dx_ln);
+        }
+        ctx.free(dm_total);
+        ctx.free(x_mid);
+
+        // dx is now grad wrt x_mid = x_in + attn_part + bo
+        let dbo = bias_grad(ctx, w, &dx, h)?;
+        hooks.grad(ctx, w, Slot::layer(l, "bo"), dbo)?;
+
+        let da = {
+            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let mut outs = ctx.call_op(
+                w,
+                Op::AttnBwd,
+                b,
+                1,
+                &[
+                    a.buf.arg(),
+                    arg_of(lp.map(|lr| &lr.wqkv)),
+                    arg_of(lp.map(|lr| &lr.bqkv)),
+                    arg_of(lp.map(|lr| &lr.wo)),
+                    dx.buf.arg(),
+                ],
+                &[acts, MemCategory::Grads, MemCategory::Grads, MemCategory::Grads],
+            )?;
+            let dwo = outs.pop().unwrap();
+            let dbqkv = outs.pop().unwrap();
+            let dwqkv = outs.pop().unwrap();
+            let da = outs.pop().unwrap();
+            hooks.grad(ctx, w, Slot::layer(l, "wo"), dwo)?;
+            hooks.grad(ctx, w, Slot::layer(l, "bqkv"), dbqkv)?;
+            hooks.grad(ctx, w, Slot::layer(l, "wqkv"), dwqkv)?;
+            da
+        };
+        ctx.free(a);
+
+        // ln1 backward
+        {
+            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let mut outs = ctx.call_op(
+                w,
+                Op::LnBwd,
+                b,
+                1,
+                &[
+                    x_in.buf.arg(),
+                    arg_of(lp.map(|lr| &lr.ln1_g)),
+                    da.buf.arg(),
+                ],
+                &[acts, MemCategory::Grads, MemCategory::Grads],
+            )?;
+            let db = outs.pop().unwrap();
+            let dg = outs.pop().unwrap();
+            let dx_ln = outs.pop().unwrap();
+            hooks.grad(ctx, w, Slot::layer(l, "ln1_b"), db)?;
+            hooks.grad(ctx, w, Slot::layer(l, "ln1_g"), dg)?;
+            ctx.accumulate(&mut dx, &dx_ln);
+            ctx.free(dx_ln);
+        }
+        ctx.free(da);
+        ctx.free(x_in);
+        hooks.unit_end(ctx, w, Unit::Layer(l), Phase::Bwd)?;
+    }
+
+    // embedding backward
+    hooks.unit_begin(ctx, w, Unit::Emb, Phase::Bwd)?;
+    {
+        let mut outs = ctx.call_op(
+            w,
+            Op::EmbBwd,
+            b,
+            1,
+            &[ids.buf.arg(), dx.buf.arg()],
+            &[MemCategory::Grads, MemCategory::Grads],
+        )?;
+        let dwpe = outs.pop().unwrap();
+        let dwte = outs.pop().unwrap();
+        hooks.grad(ctx, w, Slot::global("wpe"), dwpe)?;
+        hooks.grad(ctx, w, Slot::global("wte"), dwte)?;
+    }
+    hooks.unit_end(ctx, w, Unit::Emb, Phase::Bwd)?;
+    ctx.free(dx);
+    ctx.free(ids);
+
+    Ok(loss)
+}

@@ -1,0 +1,532 @@
+//! Fully-Sharded Data Parallel (Zhao et al. 2023) — the paper's primary
+//! memory baseline (Table 1 row 5: `max(W,G)·(N-1)` duplication).
+//!
+//! Every unit's parameters live as a FlatParameter sharded across workers.
+//! `unit_begin` allgathers the full unit (blocking for the first unit —
+//! the startup penalty the paper contrasts RTP against in §3.4.3 — then
+//! eagerly prefetched one unit ahead); `unit_end` reshards. In backward,
+//! a full-unit gradient staging buffer is reduce-scattered so each worker
+//! retains only its grad shard.
+//!
+//! `Granularity::Model` treats the whole model as ONE unit — the paper's
+//! Table-1 worst case, used by the `table1_memory` bench; `Layer` is the
+//! realistic per-layer wrapping used everywhere else (the delta between
+//! the two is an ablation in EXPERIMENTS.md).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::comm::{self, CommPrim};
+use crate::config::ModelCfg;
+use crate::flat_param::FlatLayout;
+use crate::memory::tracker::MemCategory;
+use crate::model::ModelParams;
+use crate::perfmodel::Token;
+use crate::runtime::Buf;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+use super::common::{Batch, Ctx, TBuf};
+use super::dense::{dense_step, DenseHooks, Phase, Slot, Unit};
+use super::single::resolve_mut;
+use super::Engine;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// One FlatParameter per layer (+ emb + final) — realistic FSDP.
+    Layer,
+    /// The whole model as a single unit — paper Table 1's formula.
+    Model,
+}
+
+/// The parameter list of one unit, in canonical flat order.
+pub fn unit_param_list(cfg: &ModelCfg, unit: Unit) -> Vec<(Slot, Vec<usize>)> {
+    let (v, h, s, f) = (cfg.vocab, cfg.hidden, cfg.seq, cfg.ffn);
+    match unit {
+        Unit::Emb => vec![
+            (Slot::global("wte"), vec![v, h]),
+            (Slot::global("wpe"), vec![s, h]),
+        ],
+        Unit::Final => vec![
+            (Slot::global("lnf_g"), vec![h]),
+            (Slot::global("lnf_b"), vec![h]),
+            (Slot::global("wlm"), vec![h, v]),
+        ],
+        Unit::Layer(l) => {
+            let mut p = vec![
+                (Slot::layer(l, "ln1_g"), vec![h]),
+                (Slot::layer(l, "ln1_b"), vec![h]),
+                (Slot::layer(l, "wqkv"), vec![h, 3 * h]),
+                (Slot::layer(l, "bqkv"), vec![3 * h]),
+                (Slot::layer(l, "wo"), vec![h, h]),
+                (Slot::layer(l, "bo"), vec![h]),
+                (Slot::layer(l, "ln2_g"), vec![h]),
+                (Slot::layer(l, "ln2_b"), vec![h]),
+            ];
+            if cfg.is_moe() {
+                p.push((Slot::layer(l, "mlp.wr"), vec![h, cfg.experts]));
+                for e in 0..cfg.experts {
+                    p.push((Slot::expert(l, e, "w1"), vec![h, cfg.expert_ffn]));
+                    p.push((Slot::expert(l, e, "b1"), vec![cfg.expert_ffn]));
+                    p.push((Slot::expert(l, e, "w2"), vec![cfg.expert_ffn, h]));
+                }
+            } else {
+                p.push((Slot::layer(l, "mlp.w1"), vec![h, f]));
+                p.push((Slot::layer(l, "mlp.b1"), vec![f]));
+                p.push((Slot::layer(l, "mlp.w2"), vec![f, h]));
+            }
+            p.push((Slot::layer(l, "b2"), vec![h]));
+            p
+        }
+    }
+}
+
+fn layout_of(cfg: &ModelCfg, unit: Unit, n: usize) -> (FlatLayout, Vec<Slot>) {
+    let list = unit_param_list(cfg, unit);
+    let named: Vec<(&str, Vec<usize>)> =
+        list.iter().map(|(s, shape)| (s.name, shape.clone())).collect();
+    (
+        FlatLayout::new(&named, n),
+        list.into_iter().map(|(s, _)| s).collect(),
+    )
+}
+
+fn unit_index(unit: Unit) -> usize {
+    match unit {
+        Unit::Emb => 0,
+        Unit::Layer(l) => l + 1,
+        Unit::Final => usize::MAX, // remapped by UnitTable
+    }
+}
+
+/// Successor unit for prefetch, per phase order.
+fn successor(unit: Unit, phase: Phase, layers: usize) -> Option<Unit> {
+    match (phase, unit) {
+        (Phase::Fwd, Unit::Emb) => Some(if layers > 0 { Unit::Layer(0) } else { Unit::Final }),
+        (Phase::Fwd, Unit::Layer(l)) if l + 1 < layers => Some(Unit::Layer(l + 1)),
+        (Phase::Fwd, Unit::Layer(_)) => Some(Unit::Final),
+        (Phase::Fwd, Unit::Final) => None,
+        (Phase::Bwd, Unit::Final) if layers > 0 => Some(Unit::Layer(layers - 1)),
+        (Phase::Bwd, Unit::Final) => Some(Unit::Emb),
+        (Phase::Bwd, Unit::Layer(l)) if l > 0 => Some(Unit::Layer(l - 1)),
+        (Phase::Bwd, Unit::Layer(_)) => Some(Unit::Emb),
+        (Phase::Bwd, Unit::Emb) => None,
+    }
+}
+
+struct UnitState {
+    layout: FlatLayout,
+    slots: Vec<Slot>,
+    /// Per-worker parameter shards (1-D) — None in virtual mode.
+    param_shards: Option<Vec<HostTensor>>,
+    /// Per-worker gradient shards (1-D) — None in virtual mode.
+    grad_shards: Option<Vec<HostTensor>>,
+    /// Residency: (worker -> full-weights comm buffer).
+    resident: HashMap<usize, TBuf>,
+    /// Backward grad staging buffers: worker -> (tracker buf).
+    staging: HashMap<usize, TBuf>,
+    /// Host-side staged full grads per worker (kept past the tracked
+    /// buffer's life because workers run sequentially in this process;
+    /// the DEVICE buffer is freed at unit_end like real FSDP).
+    staged_grads: HashMap<usize, Vec<f32>>,
+}
+
+struct FsdpHooks {
+    units: Vec<Unit>,
+    states: Vec<UnitState>,
+    /// Full-weight scratch the walk reads (real mode): one per worker.
+    scratch: Vec<ModelParams>,
+    granularity: Granularity,
+    layers: usize,
+    /// In-flight prefetch: (unit, token).
+    prefetch: Option<(Unit, Token)>,
+    /// In-flight reduce-scatters (waited at the step barrier — they
+    /// overlap the next unit's backward compute, as real FSDP does).
+    pending_rs: Vec<Token>,
+}
+
+impl FsdpHooks {
+    fn state_idx(&self, unit: Unit) -> usize {
+        match self.granularity {
+            Granularity::Model => 0,
+            Granularity::Layer => match unit {
+                Unit::Final => self.states.len() - 1,
+                u => unit_index(u),
+            },
+        }
+    }
+
+    /// Allgather + materialize one unit's full weights on worker `w`.
+    fn gather_unit(&mut self, ctx: &mut Ctx, w: usize, sidx: usize) -> Result<()> {
+        let full_bytes = self.states[sidx].layout.full_bytes();
+        let tb = ctx.alloc(w, MemCategory::CommBuf, Buf::Virt(vec![full_bytes as usize / 4]))?;
+        // real mode: reconstruct + unpack into the walk's scratch view
+        if let Some(shards) = &self.states[sidx].param_shards {
+            let flats: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
+            let full = comm::allgather(&flats);
+            let st = &self.states[sidx];
+            let tensors = st.layout.unpack(&full);
+            for (slot, t) in st.slots.clone().into_iter().zip(tensors) {
+                *resolve_mut(&mut self.scratch[w], slot) = t;
+            }
+        }
+        self.states[sidx].resident.insert(w, tb);
+        Ok(())
+    }
+}
+
+impl DenseHooks for FsdpHooks {
+    fn unit_begin(&mut self, ctx: &mut Ctx, w: usize, unit: Unit, phase: Phase) -> Result<()> {
+        let sidx = self.state_idx(unit);
+        if !self.states[sidx].resident.contains_key(&w) {
+            // timeline: consume a matching prefetch or block on allgather
+            if w == 0 {
+                let full_bytes = self.states[sidx].layout.full_bytes();
+                let hit = matches!(self.prefetch, Some((u, _)) if u == unit);
+                if hit {
+                    let (_, tok) = self.prefetch.take().unwrap();
+                    if let Some(tl) = ctx.timeline.as_mut() {
+                        tl.wait(tok);
+                    }
+                } else if let Some(tl) = ctx.timeline.as_mut() {
+                    tl.comm_blocking("allgather", CommPrim::AllGather, full_bytes);
+                }
+            }
+            self.gather_unit(ctx, w, sidx)?;
+        }
+        // issue the next unit's prefetch (layer granularity only)
+        if w == 0 && self.granularity == Granularity::Layer {
+            if let Some(next) = successor(unit, phase, self.layers) {
+                let nidx = self.state_idx(next);
+                let already = self.states[nidx].resident.contains_key(&0)
+                    || matches!(self.prefetch, Some((u, _)) if u == next);
+                if !already {
+                    if let Some(tl) = ctx.timeline.as_mut() {
+                        let tok = tl.comm_async_eager(
+                            "prefetch-allgather",
+                            CommPrim::AllGather,
+                            self.states[nidx].layout.full_bytes(),
+                        );
+                        self.prefetch = Some((next, tok));
+                    }
+                }
+            }
+        }
+        // backward: allocate the full-unit gradient staging buffer
+        if phase == Phase::Bwd && !self.states[sidx].staging.contains_key(&w) {
+            let elems = self.states[sidx].layout.padded;
+            let tb = ctx.alloc(w, MemCategory::CommBuf, Buf::Virt(vec![elems]))?;
+            self.states[sidx].staging.insert(w, tb);
+            if self.states[sidx].param_shards.is_some() {
+                self.states[sidx].staged_grads.insert(w, vec![0.0; elems]);
+            }
+        }
+        Ok(())
+    }
+
+    fn unit_end(&mut self, ctx: &mut Ctx, w: usize, unit: Unit, phase: Phase) -> Result<()> {
+        if self.granularity == Granularity::Model {
+            // whole-model unit stays resident for the entire step
+            return Ok(());
+        }
+        let sidx = self.state_idx(unit);
+        // reshard: free the full weights
+        if let Some(tb) = self.states[sidx].resident.remove(&w) {
+            ctx.free(tb);
+        }
+        if phase == Phase::Bwd {
+            // reduce-scatter the staged grads asynchronously — it overlaps
+            // the next unit's backward compute (real FSDP's behavior); the
+            // step barrier waits on all of them.
+            if w == 0 {
+                if let Some(tl) = ctx.timeline.as_mut() {
+                    let tok = tl.comm_async(
+                        "reduce-scatter",
+                        CommPrim::ReduceScatter,
+                        self.states[sidx].layout.full_bytes(),
+                    );
+                    self.pending_rs.push(tok);
+                }
+            }
+            if let Some(tb) = self.states[sidx].staging.remove(&w) {
+                ctx.free(tb);
+            }
+        }
+        Ok(())
+    }
+
+    fn params(&self, w: usize) -> Option<&ModelParams> {
+        self.scratch.get(w)
+    }
+
+    fn moe_exchange(&mut self, ctx: &mut Ctx, w: usize, bytes: u64) -> Result<()> {
+        if w == 0 && ctx.n() > 1 {
+            if let Some(tl) = ctx.timeline.as_mut() {
+                tl.comm_blocking("all-to-all", CommPrim::AllToAll, bytes);
+            }
+        }
+        Ok(())
+    }
+
+    fn grad(&mut self, ctx: &mut Ctx, w: usize, slot: Slot, src: TBuf) -> Result<()> {
+        let sidx = self.state_idx(slot.unit());
+        if !src.is_virtual() {
+            let st = &mut self.states[sidx];
+            let k = st.slots.iter().position(|s| *s == slot).expect("slot in unit");
+            let spec = &st.layout.specs[k];
+            if let Some(stage) = st.staged_grads.get_mut(&w) {
+                for (d, v) in stage[spec.offset..spec.offset + spec.len()]
+                    .iter_mut()
+                    .zip(&src.f().data)
+                {
+                    *d += v;
+                }
+            }
+        }
+        ctx.free(src);
+        Ok(())
+    }
+}
+
+pub struct FsdpEngine {
+    pub ctx: Ctx,
+    hooks: FsdpHooks,
+    last_loss: f32,
+}
+
+impl FsdpEngine {
+    pub fn new(mut ctx: Ctx, seed: u64, granularity: Granularity) -> Result<Self> {
+        let n = ctx.n();
+        let cfg = ctx.cfg.clone();
+        let virt = ctx.virtual_mode();
+        let units = match granularity {
+            Granularity::Layer => Unit::all(cfg.layers),
+            Granularity::Model => Unit::all(cfg.layers), // one merged layout below
+        };
+
+        // build unit states
+        let mut states = Vec::new();
+        match granularity {
+            Granularity::Layer => {
+                for &u in &units {
+                    let (layout, slots) = layout_of(&cfg, u, n);
+                    states.push(UnitState {
+                        layout,
+                        slots,
+                        param_shards: None,
+                        grad_shards: None,
+                        resident: HashMap::new(),
+                        staging: HashMap::new(),
+                        staged_grads: HashMap::new(),
+                    });
+                }
+            }
+            Granularity::Model => {
+                // single layout concatenating every unit's params
+                let mut all: Vec<(Slot, Vec<usize>)> = Vec::new();
+                for &u in &units {
+                    all.extend(unit_param_list(&cfg, u));
+                }
+                let named: Vec<(&str, Vec<usize>)> =
+                    all.iter().map(|(s, sh)| (s.name, sh.clone())).collect();
+                states.push(UnitState {
+                    layout: FlatLayout::new(&named, n),
+                    slots: all.into_iter().map(|(s, _)| s).collect(),
+                    param_shards: None,
+                    grad_shards: None,
+                    resident: HashMap::new(),
+                    staging: HashMap::new(),
+                    staged_grads: HashMap::new(),
+                });
+            }
+        }
+
+        // initialize shards from a full seed model (real mode)
+        if !virt {
+            let full = ModelParams::init(&cfg, &mut Rng::new(seed));
+            let mut fullp = full;
+            for st in &mut states {
+                let tensors: Vec<&HostTensor> = st
+                    .slots
+                    .iter()
+                    .map(|&s| &*resolve_mut(&mut fullp, s) as *const HostTensor)
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    // SAFETY: resolve_mut only borrows disjoint fields; we
+                    // immediately downgrade to shared refs.
+                    .map(|p| unsafe { &*p })
+                    .collect();
+                let flat = st.layout.pack(&tensors);
+                st.param_shards = Some(
+                    st.layout
+                        .shards(&flat)
+                        .into_iter()
+                        .map(|v| HostTensor::from_vec(&[v.len()], v))
+                        .collect(),
+                );
+                st.grad_shards = Some(
+                    (0..n)
+                        .map(|_| HostTensor::zeros(&[st.layout.shard_len()]))
+                        .collect(),
+                );
+            }
+        }
+
+        // persistent residency: shard weights + shard grads per worker
+        let shard_bytes: u64 = states.iter().map(|s| s.layout.shard_bytes()).sum();
+        for w in 0..n {
+            ctx.cluster.tracker(w).alloc(MemCategory::Weights, shard_bytes)?;
+            ctx.cluster.tracker(w).alloc(MemCategory::Grads, shard_bytes)?;
+        }
+
+        let scratch = if virt {
+            Vec::new()
+        } else {
+            (0..n).map(|_| ModelParams::zeros_like(&cfg)).collect()
+        };
+        Ok(FsdpEngine {
+            ctx,
+            hooks: FsdpHooks {
+                units,
+                states,
+                scratch,
+                granularity,
+                layers: cfg.layers,
+                prefetch: None,
+                pending_rs: Vec::new(),
+            },
+            last_loss: 0.0,
+        })
+    }
+
+    /// Post-step: mean-reduce staged full grads into the shard grads and
+    /// release whole-model residency (Model granularity).
+    fn finish_step(&mut self) -> Result<()> {
+        let n = self.ctx.n();
+        for st in &mut self.hooks.states {
+            if st.param_shards.is_some() && !st.staged_grads.is_empty() {
+                let fulls: Vec<Vec<f32>> = (0..n)
+                    .map(|w| st.staged_grads.remove(&w).expect("staged grads"))
+                    .collect();
+                let shards = comm::reduce_scatter(&fulls);
+                let gs = st.grad_shards.as_mut().unwrap();
+                for (g, s) in gs.iter_mut().zip(shards) {
+                    for (a, b) in g.data.iter_mut().zip(s) {
+                        *a += b / n as f32;
+                    }
+                }
+            }
+            st.staged_grads.clear();
+            // Model granularity: release residency + staging now
+            let workers: Vec<usize> = st.resident.keys().copied().collect();
+            for w in workers {
+                let tb = st.resident.remove(&w).unwrap();
+                self.ctx.free(tb);
+            }
+            let workers: Vec<usize> = st.staging.keys().copied().collect();
+            for w in workers {
+                let tb = st.staging.remove(&w).unwrap();
+                if w == 0 {
+                    if let Some(tl) = self.ctx.timeline.as_mut() {
+                        tl.comm_blocking(
+                            "reduce-scatter",
+                            CommPrim::ReduceScatter,
+                            st.layout.full_bytes(),
+                        );
+                    }
+                }
+                self.ctx.free(tb);
+            }
+        }
+        self.hooks.prefetch = None;
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            for tok in self.hooks.pending_rs.drain(..) {
+                tl.wait(tok);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Engine for FsdpEngine {
+    fn name(&self) -> String {
+        match self.hooks.granularity {
+            Granularity::Layer => "fsdp".to_string(),
+            Granularity::Model => "fsdp-model-unit".to_string(),
+        }
+    }
+
+    fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let n = self.ctx.n();
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            tl.reset();
+        }
+        let mut loss_sum = 0.0;
+        for w in 0..n {
+            let shard = batch.shard(w, n);
+            loss_sum += dense_step(&mut self.ctx, &mut self.hooks, w, &shard)?;
+        }
+        self.finish_step()?;
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            tl.barrier();
+        }
+        self.last_loss = loss_sum / n as f32;
+        Ok(self.last_loss)
+    }
+
+    fn gather_params(&self) -> ModelParams {
+        let mut out = ModelParams::zeros_like(&self.ctx.cfg);
+        for st in &self.hooks.states {
+            let shards = st.param_shards.as_ref().expect("virtual mode");
+            let flats: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
+            let full = comm::allgather(&flats);
+            for (slot, t) in st.slots.iter().zip(st.layout.unpack(&full)) {
+                *resolve_mut(&mut out, *slot) = t;
+            }
+        }
+        out
+    }
+
+    fn gather_grads(&self) -> ModelParams {
+        let mut out = ModelParams::zeros_like(&self.ctx.cfg);
+        for st in &self.hooks.states {
+            let shards = st.grad_shards.as_ref().expect("virtual mode");
+            let flats: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
+            let full = comm::allgather(&flats);
+            for (slot, t) in st.slots.iter().zip(st.layout.unpack(&full)) {
+                *resolve_mut(&mut out, *slot) = t;
+            }
+        }
+        out
+    }
+
+    fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
+        for st in &mut self.hooks.states {
+            let (Some(ps), Some(gs)) = (st.param_shards.as_mut(), st.grad_shards.as_ref())
+            else {
+                return;
+            };
+            for (p, g) in ps.iter_mut().zip(gs) {
+                f(p, g);
+            }
+        }
+    }
+
+    fn zero_grads(&mut self) {
+        for st in &mut self.hooks.states {
+            if let Some(gs) = st.grad_shards.as_mut() {
+                for g in gs {
+                    g.data.fill(0.0);
+                }
+            }
+        }
+    }
+
+    fn ctx(&self) -> &Ctx {
+        &self.ctx
+    }
+    fn ctx_mut(&mut self) -> &mut Ctx {
+        &mut self.ctx
+    }
+}

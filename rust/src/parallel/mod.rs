@@ -1,0 +1,57 @@
+//! The parallel engines: the paper's RTP (in-place / out-of-place) and
+//! every baseline it is evaluated against.
+//!
+//! | engine        | weights            | activations | reduction            |
+//! |---------------|--------------------|-------------|----------------------|
+//! | `single`      | full, 1 device     | full        | none (the "idealized computer") |
+//! | `ddp`         | full replica × N   | batch shard | grad allreduce       |
+//! | `fsdp`        | flat shards        | batch shard | unit allgather + grad reduce-scatter |
+//! | `megatron_tp` | static weight shard| FULL batch  | activation allreduce/allgather |
+//! | `rtp`         | rotating shard     | batch shard | grads rotate home (no allreduce) |
+//!
+//! All engines run in real mode (PJRT artifacts or the rust oracle — exact
+//! numerics, gradient-equivalence tested) and virtual mode (shape stubs —
+//! paper-scale memory/throughput accounting), through the same code.
+
+pub mod builder;
+pub mod common;
+pub mod ddp;
+pub mod dense;
+pub mod fsdp;
+pub mod rtp;
+pub mod single;
+pub mod tp;
+
+use anyhow::Result;
+
+pub use builder::{build_engine, EngineOpts, ExecKind};
+pub use common::{Batch, Ctx};
+
+use crate::model::ModelParams;
+use crate::tensor::HostTensor;
+
+/// One parallel training engine.
+pub trait Engine {
+    fn name(&self) -> String;
+
+    /// One forward+backward pass over a GLOBAL batch, including the
+    /// engine's gradient reduction. Returns the mean loss (0.0 in virtual
+    /// mode). Grads ACCUMULATE until `zero_grads`.
+    fn step(&mut self, batch: &Batch) -> Result<f32>;
+
+    /// Assemble the full model parameters from the engine's layout
+    /// (real mode only — test/checkpoint path).
+    fn gather_params(&self) -> ModelParams;
+
+    /// Assemble full, fully-reduced gradients (real mode only).
+    fn gather_grads(&self) -> ModelParams;
+
+    /// Visit every (param, grad) pair the engine OWNS (its shard layout) —
+    /// the optimizer update path. Deterministic order. Real mode only.
+    fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor));
+
+    fn zero_grads(&mut self);
+
+    fn ctx(&self) -> &Ctx;
+    fn ctx_mut(&mut self) -> &mut Ctx;
+}

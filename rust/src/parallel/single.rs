@@ -1,0 +1,185 @@
+//! The "unlimited-memory idealized computer" baseline (paper §1, §5.3):
+//! one device, whole model, whole batch. This is both the memory ideal
+//! every Table-1 row is measured against and the numeric oracle the
+//! distributed engines' gradients are checked against.
+
+use anyhow::Result;
+
+use crate::memory::tracker::MemCategory;
+use crate::model::ModelParams;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+use super::common::{Batch, Ctx, TBuf};
+use super::dense::{dense_step, DenseHooks, Phase, Slot, Unit};
+use super::Engine;
+
+pub struct SingleEngine {
+    pub ctx: Ctx,
+    hooks: SingleHooks,
+    last_loss: f32,
+}
+
+struct SingleHooks {
+    /// None in virtual mode.
+    params: Option<ModelParams>,
+    grads: Option<ModelParams>,
+}
+
+/// Add a grad buffer into a named tensor of a ModelParams (shared by the
+/// single / ddp / fsdp hooks).
+pub(crate) fn grad_into(grads: &mut ModelParams, slot: Slot, src: &TBuf) {
+    resolve_mut(grads, slot).add_assign(src.f());
+}
+
+/// Resolve a slot to its tensor within a ModelParams.
+pub(crate) fn resolve_mut(p: &mut ModelParams, slot: Slot) -> &mut HostTensor {
+    use crate::model::MlpParams;
+    match (slot.layer, slot.expert, slot.name) {
+        (None, None, "wte") => &mut p.wte,
+        (None, None, "wpe") => &mut p.wpe,
+        (None, None, "lnf_g") => &mut p.lnf_g,
+        (None, None, "lnf_b") => &mut p.lnf_b,
+        (None, None, "wlm") => &mut p.wlm,
+        (Some(l), None, name) => {
+            let lp = &mut p.layers[l];
+            match name {
+                "ln1_g" => &mut lp.ln1_g,
+                "ln1_b" => &mut lp.ln1_b,
+                "wqkv" => &mut lp.wqkv,
+                "bqkv" => &mut lp.bqkv,
+                "wo" => &mut lp.wo,
+                "bo" => &mut lp.bo,
+                "ln2_g" => &mut lp.ln2_g,
+                "ln2_b" => &mut lp.ln2_b,
+                "mlp.w1" => match &mut lp.mlp {
+                    MlpParams::Dense { w1, .. } => w1,
+                    _ => panic!("mlp.w1 on moe layer"),
+                },
+                "mlp.b1" => match &mut lp.mlp {
+                    MlpParams::Dense { b1, .. } => b1,
+                    _ => panic!("mlp.b1 on moe layer"),
+                },
+                "mlp.w2" => match &mut lp.mlp {
+                    MlpParams::Dense { w2, .. } => w2,
+                    _ => panic!("mlp.w2 on moe layer"),
+                },
+                "b2" => match &mut lp.mlp {
+                    MlpParams::Dense { b2, .. } => b2,
+                    MlpParams::Moe { b2, .. } => b2,
+                },
+                "mlp.wr" => match &mut lp.mlp {
+                    MlpParams::Moe { wr, .. } => wr,
+                    _ => panic!("mlp.wr on dense layer"),
+                },
+                other => panic!("unknown layer slot {other}"),
+            }
+        }
+        (Some(l), Some(e), name) => {
+            let lp = &mut p.layers[l];
+            let ex = match &mut lp.mlp {
+                crate::model::MlpParams::Moe { experts, .. } => &mut experts[e],
+                _ => panic!("expert slot on dense layer"),
+            };
+            match name {
+                "w1" => &mut ex.w1,
+                "b1" => &mut ex.b1,
+                "w2" => &mut ex.w2,
+                other => panic!("unknown expert slot {other}"),
+            }
+        }
+        (None, Some(_), _) => panic!("expert slot without layer"),
+        (None, None, other) => panic!("unknown global slot {other}"),
+    }
+}
+
+impl DenseHooks for SingleHooks {
+    fn unit_begin(&mut self, _: &mut Ctx, _: usize, _: Unit, _: Phase) -> Result<()> {
+        Ok(())
+    }
+    fn unit_end(&mut self, _: &mut Ctx, _: usize, _: Unit, _: Phase) -> Result<()> {
+        Ok(())
+    }
+    fn params(&self, _w: usize) -> Option<&ModelParams> {
+        self.params.as_ref()
+    }
+    fn grad(&mut self, ctx: &mut Ctx, _w: usize, slot: Slot, src: TBuf) -> Result<()> {
+        if let (Some(g), false) = (self.grads.as_mut(), src.is_virtual()) {
+            grad_into(g, slot, &src);
+        }
+        ctx.free(src);
+        Ok(())
+    }
+}
+
+impl SingleEngine {
+    pub fn new(mut ctx: Ctx, seed: u64) -> Result<Self> {
+        assert_eq!(ctx.par.workers, 1, "single engine is one worker");
+        let virt = ctx.virtual_mode();
+        let (params, grads) = if virt {
+            (None, None)
+        } else {
+            let mut rng = Rng::new(seed);
+            (
+                Some(ModelParams::init(&ctx.cfg, &mut rng)),
+                Some(ModelParams::zeros_like(&ctx.cfg)),
+            )
+        };
+        // persistent weight + grad residency
+        let wbytes = ctx.cfg.weight_bytes();
+        ctx.cluster.tracker(0).alloc(MemCategory::Weights, wbytes)?;
+        ctx.cluster.tracker(0).alloc(MemCategory::Grads, wbytes)?;
+        Ok(SingleEngine {
+            ctx,
+            hooks: SingleHooks { params, grads },
+            last_loss: 0.0,
+        })
+    }
+}
+
+impl Engine for SingleEngine {
+    fn name(&self) -> String {
+        "single".to_string()
+    }
+
+    fn step(&mut self, batch: &Batch) -> Result<f32> {
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            tl.reset();
+        }
+        let loss = dense_step(&mut self.ctx, &mut self.hooks, 0, batch)?;
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            tl.barrier();
+        }
+        self.last_loss = loss;
+        Ok(loss)
+    }
+
+    fn gather_params(&self) -> ModelParams {
+        self.hooks.params.clone().expect("no params in virtual mode")
+    }
+
+    fn gather_grads(&self) -> ModelParams {
+        self.hooks.grads.clone().expect("no grads in virtual mode")
+    }
+
+    fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
+        let (Some(p), Some(g)) = (self.hooks.params.as_mut(), self.hooks.grads.as_ref())
+        else {
+            return;
+        };
+        p.zip_mut(g, &mut |_, t, gt| f(t, gt));
+    }
+
+    fn zero_grads(&mut self) {
+        if let Some(g) = self.hooks.grads.as_mut() {
+            g.visit_mut(&mut |_, t| t.data.fill(0.0));
+        }
+    }
+
+    fn ctx(&self) -> &Ctx {
+        &self.ctx
+    }
+    fn ctx_mut(&mut self) -> &mut Ctx {
+        &mut self.ctx
+    }
+}

@@ -1,0 +1,805 @@
+//! Megatron-style static tensor parallelism (Shoeybi et al. 2019) — the
+//! paper's Table-1 row 2: weights shard once and stay put, but the FULL
+//! batch's activations are replicated on every worker (`A·(N-1)`
+//! duplication), with synchronous activation collectives at the layer
+//! boundaries (allreduce for the row-parallel merges, allgather for the
+//! output-partition concats).
+//!
+//! The walk is lockstep: every worker computes each op on the full batch
+//! before the merge collective runs — unlike the batch-sharded engines,
+//! workers here are not independent between collectives.
+
+use anyhow::{bail, Result};
+
+use crate::comm::{self, CommPrim};
+use crate::memory::tracker::MemCategory;
+use crate::model::ops::Op;
+use crate::model::partition::{self, AttnShard, MlpShard};
+use crate::model::{MlpParams, ModelParams};
+use crate::runtime::{arg_of, Buf};
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+use super::common::{replicated_elems, Batch, Ctx, RepParams, TBuf};
+use super::Engine;
+
+/// Static per-worker shards of one layer.
+struct LayerShards {
+    attn: Vec<AttnShard>,
+    mlp: Vec<MlpShard>,
+}
+
+struct TpState {
+    emb: Vec<(HostTensor, HostTensor)>, // (wte_s, wpe_s) per worker
+    layers: Vec<LayerShards>,
+    lm: Vec<HostTensor>, // wlm column shard per worker
+    rep: Vec<RepParams>,
+    // gradients, same layout
+    g_emb: Vec<(HostTensor, HostTensor)>,
+    g_layers: Vec<LayerShards>,
+    g_lm: Vec<HostTensor>,
+    g_rep: Vec<RepParams>,
+}
+
+pub struct TpEngine {
+    pub ctx: Ctx,
+    state: Option<TpState>, // None in virtual mode
+    last_loss: f32,
+}
+
+/// Sum per-worker partial activation buffers in place (real mode) and
+/// charge one allreduce (the Megatron g-operator).
+fn allreduce_partials(ctx: &mut Ctx, bufs: &mut [TBuf]) {
+    if let Some(tl) = ctx.timeline.as_mut() {
+        tl.comm_blocking("ar-act", CommPrim::AllReduce, bufs[0].buf.bytes());
+    }
+    if bufs[0].is_virtual() || bufs.len() <= 1 {
+        return;
+    }
+    let mut flats: Vec<Vec<f32>> = bufs.iter().map(|b| b.f().data.clone()).collect();
+    comm::allreduce_sum(&mut flats);
+    for (b, f) in bufs.iter_mut().zip(flats) {
+        b.f_mut().data = f;
+    }
+}
+
+impl TpEngine {
+    pub fn new(mut ctx: Ctx, seed: u64) -> Result<Self> {
+        if ctx.cfg.is_moe() {
+            bail!("megatron-tp engine does not support MoE models (the paper evaluates MoE on DP/FSDP/RTP only)");
+        }
+        let n = ctx.n();
+        let cfg = ctx.cfg.clone();
+        let virt = ctx.virtual_mode();
+
+        let state = if virt {
+            None
+        } else {
+            let full = ModelParams::init(&cfg, &mut Rng::new(seed));
+            let heads = cfg.heads;
+            let hd = cfg.head_dim();
+            let emb: Vec<(HostTensor, HostTensor)> = (0..n)
+                .map(|s| {
+                    (
+                        partition::shard_cols(&full.wte, s, n),
+                        partition::shard_cols(&full.wpe, s, n),
+                    )
+                })
+                .collect();
+            let layers: Vec<LayerShards> = full
+                .layers
+                .iter()
+                .map(|lp| {
+                    let (w1, b1, w2) = match &lp.mlp {
+                        MlpParams::Dense { w1, b1, w2, .. } => (w1, b1, w2),
+                        _ => unreachable!(),
+                    };
+                    LayerShards {
+                        attn: (0..n)
+                            .map(|s| {
+                                partition::attn_shard(&lp.wqkv, &lp.bqkv, &lp.wo, s, n, heads, hd)
+                            })
+                            .collect(),
+                        mlp: (0..n).map(|s| partition::mlp_shard(w1, b1, w2, s, n)).collect(),
+                    }
+                })
+                .collect();
+            let lm: Vec<HostTensor> =
+                (0..n).map(|s| partition::shard_cols(&full.wlm, s, n)).collect();
+            let rep = vec![RepParams::from_full(&full); n];
+            let zero = |t: &HostTensor| HostTensor::zeros(&t.shape);
+            Some(TpState {
+                g_emb: emb.iter().map(|(a, b)| (zero(a), zero(b))).collect(),
+                g_layers: layers
+                    .iter()
+                    .map(|l| LayerShards {
+                        attn: l
+                            .attn
+                            .iter()
+                            .map(|a| AttnShard {
+                                wqkv: zero(&a.wqkv),
+                                bqkv: zero(&a.bqkv),
+                                wo: zero(&a.wo),
+                            })
+                            .collect(),
+                        mlp: l
+                            .mlp
+                            .iter()
+                            .map(|m| MlpShard {
+                                w1: zero(&m.w1),
+                                b1: zero(&m.b1),
+                                w2: zero(&m.w2),
+                            })
+                            .collect(),
+                    })
+                    .collect(),
+                g_lm: lm.iter().map(zero).collect(),
+                g_rep: rep.iter().map(|r| r.zeros_like()).collect(),
+                emb,
+                layers,
+                lm,
+                rep,
+            })
+        };
+
+        // persistent residency: weight shard + grad shard + replicated×2
+        let sharded = (cfg.params_total() - replicated_elems(&cfg)) / n;
+        let per_worker = ((sharded + replicated_elems(&cfg)) * 4) as u64;
+        for w in 0..n {
+            ctx.cluster.tracker(w).alloc(MemCategory::Weights, per_worker)?;
+            ctx.cluster.tracker(w).alloc(MemCategory::Grads, per_worker)?;
+        }
+        Ok(TpEngine { ctx, state, last_loss: 0.0 })
+    }
+
+    /// Clone a replicated tensor out of the state so the borrow on
+    /// `self` ends before `self.ctx` is mutably borrowed by `call_op`.
+    /// These are tiny ([H]-sized) tensors; the clone is negligible.
+    fn rep_tensor(&self, w: usize, get: impl Fn(&RepParams) -> &HostTensor)
+        -> Option<HostTensor>
+    {
+        self.state.as_ref().map(|s| get(&s.rep[w]).clone())
+    }
+}
+
+impl Engine for TpEngine {
+    fn name(&self) -> String {
+        "megatron-tp".to_string()
+    }
+
+    fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let n = self.ctx.n();
+        let cfg = self.ctx.cfg.clone();
+        let b = batch.ids.shape[0]; // FULL batch on every worker
+        let (h, v) = (cfg.hidden, cfg.vocab);
+        let (hp, vp) = (h / n, v / n);
+        let virt = self.ctx.virtual_mode();
+        let acts = MemCategory::Activations;
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            tl.reset();
+        }
+
+        // per-worker replicated inputs
+        let mut ids = Vec::with_capacity(n);
+        let mut tgts = Vec::with_capacity(n);
+        for w in 0..n {
+            let mk = |t: &crate::tensor::IntTensor| {
+                if virt { Buf::Virt(vec![b, cfg.seq]) } else { Buf::Ids(t.clone()) }
+            };
+            ids.push(self.ctx.alloc(w, acts, mk(&batch.ids))?);
+            tgts.push(self.ctx.alloc(w, acts, mk(&batch.targets))?);
+        }
+
+        // ---------------- forward ----------------
+        // embedding: each worker computes its hidden slice, allgather
+        let mut x: Vec<TBuf> = Vec::with_capacity(n);
+        for w in 0..n {
+            x.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?);
+        }
+        {
+            let mut parts = Vec::with_capacity(n);
+            for w in 0..n {
+                let (wte, wpe) = match &self.state {
+                    Some(s) => (Some(&s.emb[w].0), Some(&s.emb[w].1)),
+                    None => (None, None),
+                };
+                let mut outs = self.ctx.call_op(
+                    w,
+                    Op::EmbFwd,
+                    b,
+                    n,
+                    &[ids[w].buf.arg(), arg_of(wte), arg_of(wpe)],
+                    &[acts],
+                )?;
+                parts.push(outs.pop().unwrap());
+            }
+            if let Some(tl) = self.ctx.timeline.as_mut() {
+                tl.comm_blocking("ag-emb", CommPrim::AllGather, x[0].buf.bytes());
+            }
+            // every worker assembles the full hidden from ALL slices
+            if !virt {
+                for xw in x.iter_mut() {
+                    for (s, part) in parts.iter().enumerate() {
+                        if let Buf::Real(full) = &mut xw.buf {
+                            full.write_slice_last(s * hp, part.f());
+                        }
+                    }
+                }
+            }
+            for p in parts {
+                self.ctx.free(p);
+            }
+        }
+
+        struct SavedTp {
+            x_in: Vec<TBuf>,
+            a: Vec<TBuf>,
+            x_mid: Vec<TBuf>,
+            m: Vec<TBuf>,
+        }
+        let mut saved: Vec<SavedTp> = Vec::new();
+
+        for l in 0..cfg.layers {
+            // ln1 (replicated)
+            let mut a = Vec::with_capacity(n);
+            for w in 0..n {
+                let g = self.rep_tensor(w, |r| &r.layers[l].ln1_g);
+                let bb = self.rep_tensor(w, |r| &r.layers[l].ln1_b);
+                let mut outs = self.ctx.call_op(
+                    w,
+                    Op::LnFwd,
+                    b,
+                    n,
+                    &[x[w].buf.arg(), arg_of(g.as_ref()), arg_of(bb.as_ref())],
+                    &[acts],
+                )?;
+                a.push(outs.pop().unwrap());
+            }
+            // attention partials + allreduce
+            let mut parts = Vec::with_capacity(n);
+            for w in 0..n {
+                let sh = self.state.as_ref().map(|s| &s.layers[l].attn[w]);
+                let mut outs = self.ctx.call_op(
+                    w,
+                    Op::AttnFwd,
+                    b,
+                    n,
+                    &[
+                        a[w].buf.arg(),
+                        arg_of(sh.map(|s| &s.wqkv)),
+                        arg_of(sh.map(|s| &s.bqkv)),
+                        arg_of(sh.map(|s| &s.wo)),
+                    ],
+                    &[acts],
+                )?;
+                parts.push(outs.pop().unwrap());
+            }
+            allreduce_partials(&mut self.ctx, &mut parts);
+            let mut x_mid = Vec::with_capacity(n);
+            for (w, mut part) in parts.into_iter().enumerate() {
+                let bo = self.rep_tensor(w, |r| &r.layers[l].bo);
+                self.ctx.add_bias(&mut part, bo.as_ref());
+                self.ctx.residual(&mut part, &x[w]);
+                x_mid.push(part);
+            }
+            // ln2 + mlp partials + allreduce
+            let mut m = Vec::with_capacity(n);
+            for w in 0..n {
+                let g = self.rep_tensor(w, |r| &r.layers[l].ln2_g);
+                let bb = self.rep_tensor(w, |r| &r.layers[l].ln2_b);
+                let mut outs = self.ctx.call_op(
+                    w,
+                    Op::LnFwd,
+                    b,
+                    n,
+                    &[x_mid[w].buf.arg(), arg_of(g.as_ref()), arg_of(bb.as_ref())],
+                    &[acts],
+                )?;
+                m.push(outs.pop().unwrap());
+            }
+            let mut parts = Vec::with_capacity(n);
+            for w in 0..n {
+                let sh = self.state.as_ref().map(|s| &s.layers[l].mlp[w]);
+                let mut outs = self.ctx.call_op(
+                    w,
+                    Op::MlpFwd,
+                    b,
+                    n,
+                    &[
+                        m[w].buf.arg(),
+                        arg_of(sh.map(|s| &s.w1)),
+                        arg_of(sh.map(|s| &s.b1)),
+                        arg_of(sh.map(|s| &s.w2)),
+                    ],
+                    &[acts],
+                )?;
+                parts.push(outs.pop().unwrap());
+            }
+            allreduce_partials(&mut self.ctx, &mut parts);
+            let mut x_new = Vec::with_capacity(n);
+            for (w, mut part) in parts.into_iter().enumerate() {
+                let b2 = self.rep_tensor(w, |r| &r.layers[l].b2);
+                self.ctx.add_bias(&mut part, b2.as_ref());
+                self.ctx.residual(&mut part, &x_mid[w]);
+                x_new.push(part);
+            }
+            saved.push(SavedTp { x_in: x, a, x_mid, m });
+            x = x_new;
+        }
+
+        // final LN + LM head (allgather logits) + loss
+        let mut xf = Vec::with_capacity(n);
+        for w in 0..n {
+            let g = self.rep_tensor(w, |r| &r.lnf_g);
+            let bb = self.rep_tensor(w, |r| &r.lnf_b);
+            let mut outs = self.ctx.call_op(
+                w,
+                Op::LnFwd,
+                b,
+                n,
+                &[x[w].buf.arg(), arg_of(g.as_ref()), arg_of(bb.as_ref())],
+                &[acts],
+            )?;
+            xf.push(outs.pop().unwrap());
+        }
+        let mut logit_parts = Vec::with_capacity(n);
+        for w in 0..n {
+            let wlm = self.state.as_ref().map(|s| &s.lm[w]);
+            let mut outs = self.ctx.call_op(
+                w,
+                Op::LmheadFwd,
+                b,
+                n,
+                &[xf[w].buf.arg(), arg_of(wlm)],
+                &[acts],
+            )?;
+            logit_parts.push(outs.pop().unwrap());
+        }
+        let mut logits = Vec::with_capacity(n);
+        for w in 0..n {
+            logits.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, v]))?);
+        }
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            tl.comm_blocking("ag-logits", CommPrim::AllGather, logits[0].buf.bytes());
+        }
+        if !virt {
+            for lw in logits.iter_mut() {
+                for (s, part) in logit_parts.iter().enumerate() {
+                    if let Buf::Real(full) = &mut lw.buf {
+                        full.write_slice_last(s * vp, part.f());
+                    }
+                }
+            }
+        }
+        for p in logit_parts {
+            self.ctx.free(p);
+        }
+
+        let mut loss = 0.0;
+        let mut dlogits = Vec::with_capacity(n);
+        for w in 0..n {
+            let mut outs = self.ctx.call_op(
+                w,
+                Op::Xent,
+                b,
+                n,
+                &[logits[w].buf.arg(), tgts[w].buf.arg()],
+                &[acts, acts],
+            )?;
+            let dl = outs.pop().unwrap();
+            let lbuf = outs.pop().unwrap();
+            if w == 0 {
+                loss = self.ctx.loss_of(&lbuf);
+            }
+            self.ctx.free(lbuf);
+            dlogits.push(dl);
+        }
+        for l in logits {
+            self.ctx.free(l);
+        }
+        for t in tgts {
+            self.ctx.free(t);
+        }
+
+        // ---------------- backward ----------------
+        // LM head: per-worker vocab slice of dlogits -> dx partials
+        let mut dxf = Vec::with_capacity(n);
+        for w in 0..n {
+            let dl_w = self.ctx.col_slice(w, &dlogits[w], w * vp, vp, acts)?;
+            let wlm = self.state.as_ref().map(|s| &s.lm[w]);
+            let mut outs = self.ctx.call_op(
+                w,
+                Op::LmheadBwd,
+                b,
+                n,
+                &[xf[w].buf.arg(), arg_of(wlm), dl_w.buf.arg()],
+                &[acts, MemCategory::Grads],
+            )?;
+            let dwlm = outs.pop().unwrap();
+            let dx = outs.pop().unwrap();
+            if let Some(st) = self.state.as_mut() {
+                st.g_lm[w].add_assign(dwlm.f());
+            }
+            self.ctx.free(dwlm);
+            self.ctx.free(dl_w);
+            dxf.push(dx);
+        }
+        for d in dlogits {
+            self.ctx.free(d);
+        }
+        allreduce_partials(&mut self.ctx, &mut dxf);
+
+        // final LN backward (replicated grads, no comm)
+        let mut dx = Vec::with_capacity(n);
+        for w in 0..n {
+            let g = self.rep_tensor(w, |r| &r.lnf_g);
+            let mut outs = self.ctx.call_op(
+                w,
+                Op::LnBwd,
+                b,
+                n,
+                &[
+                    x[w].buf.arg(),
+                    arg_of(g.as_ref()),
+                    dxf[w].buf.arg(),
+                ],
+                &[acts, MemCategory::Grads, MemCategory::Grads],
+            )?;
+            let db = outs.pop().unwrap();
+            let dg = outs.pop().unwrap();
+            let d = outs.pop().unwrap();
+            if let Some(st) = self.state.as_mut() {
+                st.g_rep[w].lnf_g.add_assign(dg.f());
+                st.g_rep[w].lnf_b.add_assign(db.f());
+            }
+            self.ctx.free(db);
+            self.ctx.free(dg);
+            dx.push(d);
+        }
+        for d in dxf {
+            self.ctx.free(d);
+        }
+        for t in xf {
+            self.ctx.free(t);
+        }
+        for t in x {
+            self.ctx.free(t);
+        }
+
+        for l in (0..cfg.layers).rev() {
+            let SavedTp { x_in, a, x_mid, m } = saved.pop().unwrap();
+            // b2 grads (replicated)
+            for w in 0..n {
+                if let Some(st) = self.state.as_mut() {
+                    st.g_rep[w].layers[l].b2.add_assign(&dx[w].f().sum_leading());
+                }
+            }
+            // mlp backward -> dm partials (allreduce)
+            let mut dm = Vec::with_capacity(n);
+            for w in 0..n {
+                let sh = self.state.as_ref().map(|s| &s.layers[l].mlp[w]);
+                let mut outs = self.ctx.call_op(
+                    w,
+                    Op::MlpBwd,
+                    b,
+                    n,
+                    &[
+                        m[w].buf.arg(),
+                        arg_of(sh.map(|s| &s.w1)),
+                        arg_of(sh.map(|s| &s.b1)),
+                        arg_of(sh.map(|s| &s.w2)),
+                        dx[w].buf.arg(),
+                    ],
+                    &[acts, MemCategory::Grads, MemCategory::Grads, MemCategory::Grads],
+                )?;
+                let dw2 = outs.pop().unwrap();
+                let db1 = outs.pop().unwrap();
+                let dw1 = outs.pop().unwrap();
+                let d = outs.pop().unwrap();
+                if let Some(st) = self.state.as_mut() {
+                    let g = &mut st.g_layers[l].mlp[w];
+                    g.w2.add_assign(dw2.f());
+                    g.b1.add_assign(db1.f());
+                    g.w1.add_assign(dw1.f());
+                }
+                self.ctx.free(dw2);
+                self.ctx.free(db1);
+                self.ctx.free(dw1);
+                dm.push(d);
+            }
+            allreduce_partials(&mut self.ctx, &mut dm);
+            // ln2 backward + residual accumulate
+            for w in 0..n {
+                let g = self.rep_tensor(w, |r| &r.layers[l].ln2_g);
+                let mut outs = self.ctx.call_op(
+                    w,
+                    Op::LnBwd,
+                    b,
+                    n,
+                    &[
+                        x_mid[w].buf.arg(),
+                        arg_of(g.as_ref()),
+                        dm[w].buf.arg(),
+                    ],
+                    &[acts, MemCategory::Grads, MemCategory::Grads],
+                )?;
+                let db = outs.pop().unwrap();
+                let dg = outs.pop().unwrap();
+                let dxl = outs.pop().unwrap();
+                if let Some(st) = self.state.as_mut() {
+                    st.g_rep[w].layers[l].ln2_g.add_assign(dg.f());
+                    st.g_rep[w].layers[l].ln2_b.add_assign(db.f());
+                }
+                self.ctx.free(db);
+                self.ctx.free(dg);
+                self.ctx.accumulate(&mut dx[w], &dxl);
+                self.ctx.free(dxl);
+            }
+            for t in dm {
+                self.ctx.free(t);
+            }
+            for t in m {
+                self.ctx.free(t);
+            }
+            for t in x_mid {
+                self.ctx.free(t);
+            }
+            // bo grads + attention backward
+            for w in 0..n {
+                if let Some(st) = self.state.as_mut() {
+                    st.g_rep[w].layers[l].bo.add_assign(&dx[w].f().sum_leading());
+                }
+            }
+            let mut da = Vec::with_capacity(n);
+            for w in 0..n {
+                let sh = self.state.as_ref().map(|s| &s.layers[l].attn[w]);
+                let mut outs = self.ctx.call_op(
+                    w,
+                    Op::AttnBwd,
+                    b,
+                    n,
+                    &[
+                        a[w].buf.arg(),
+                        arg_of(sh.map(|s| &s.wqkv)),
+                        arg_of(sh.map(|s| &s.bqkv)),
+                        arg_of(sh.map(|s| &s.wo)),
+                        dx[w].buf.arg(),
+                    ],
+                    &[acts, MemCategory::Grads, MemCategory::Grads, MemCategory::Grads],
+                )?;
+                let dwo = outs.pop().unwrap();
+                let dbq = outs.pop().unwrap();
+                let dwq = outs.pop().unwrap();
+                let d = outs.pop().unwrap();
+                if let Some(st) = self.state.as_mut() {
+                    let g = &mut st.g_layers[l].attn[w];
+                    g.wo.add_assign(dwo.f());
+                    g.bqkv.add_assign(dbq.f());
+                    g.wqkv.add_assign(dwq.f());
+                }
+                self.ctx.free(dwo);
+                self.ctx.free(dbq);
+                self.ctx.free(dwq);
+                da.push(d);
+            }
+            allreduce_partials(&mut self.ctx, &mut da);
+            for w in 0..n {
+                let g = self.rep_tensor(w, |r| &r.layers[l].ln1_g);
+                let mut outs = self.ctx.call_op(
+                    w,
+                    Op::LnBwd,
+                    b,
+                    n,
+                    &[
+                        x_in[w].buf.arg(),
+                        arg_of(g.as_ref()),
+                        da[w].buf.arg(),
+                    ],
+                    &[acts, MemCategory::Grads, MemCategory::Grads],
+                )?;
+                let db = outs.pop().unwrap();
+                let dg = outs.pop().unwrap();
+                let dxl = outs.pop().unwrap();
+                if let Some(st) = self.state.as_mut() {
+                    st.g_rep[w].layers[l].ln1_g.add_assign(dg.f());
+                    st.g_rep[w].layers[l].ln1_b.add_assign(db.f());
+                }
+                self.ctx.free(db);
+                self.ctx.free(dg);
+                self.ctx.accumulate(&mut dx[w], &dxl);
+                self.ctx.free(dxl);
+            }
+            for t in da {
+                self.ctx.free(t);
+            }
+            for t in a {
+                self.ctx.free(t);
+            }
+            for t in x_in {
+                self.ctx.free(t);
+            }
+        }
+
+        // embedding backward: each worker takes its hidden slice
+        for w in 0..n {
+            let dx_w = self.ctx.col_slice(w, &dx[w], w * hp, hp, acts)?;
+            let mut outs = self.ctx.call_op(
+                w,
+                Op::EmbBwd,
+                b,
+                n,
+                &[ids[w].buf.arg(), dx_w.buf.arg()],
+                &[MemCategory::Grads, MemCategory::Grads],
+            )?;
+            let dwpe = outs.pop().unwrap();
+            let dwte = outs.pop().unwrap();
+            if let Some(st) = self.state.as_mut() {
+                st.g_emb[w].0.add_assign(dwte.f());
+                st.g_emb[w].1.add_assign(dwpe.f());
+            }
+            self.ctx.free(dwte);
+            self.ctx.free(dwpe);
+            self.ctx.free(dx_w);
+        }
+        for t in dx {
+            self.ctx.free(t);
+        }
+        for t in ids {
+            self.ctx.free(t);
+        }
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            tl.barrier();
+        }
+        self.last_loss = loss;
+        Ok(loss)
+    }
+
+    fn gather_params(&self) -> ModelParams {
+        let st = self.state.as_ref().expect("virtual mode");
+        let cfg = &self.ctx.cfg;
+        let mut out = ModelParams::zeros_like(cfg);
+        out.wte = partition::unshard_cols(
+            &st.emb.iter().map(|(a, _)| a.clone()).collect::<Vec<_>>(),
+        );
+        out.wpe = partition::unshard_cols(
+            &st.emb.iter().map(|(_, b)| b.clone()).collect::<Vec<_>>(),
+        );
+        for (l, lp) in out.layers.iter_mut().enumerate() {
+            let heads = cfg.heads;
+            let hd = cfg.head_dim();
+            lp.wqkv = partition::unshard_qkv_cols(
+                &st.layers[l].attn.iter().map(|a| a.wqkv.clone()).collect::<Vec<_>>(),
+                heads,
+                hd,
+            );
+            lp.bqkv = partition::unshard_qkv_cols(
+                &st.layers[l].attn.iter().map(|a| a.bqkv.clone()).collect::<Vec<_>>(),
+                heads,
+                hd,
+            );
+            lp.wo = partition::unshard_rows(
+                &st.layers[l].attn.iter().map(|a| a.wo.clone()).collect::<Vec<_>>(),
+            );
+            let rep = &st.rep[0].layers[l];
+            lp.ln1_g = rep.ln1_g.clone();
+            lp.ln1_b = rep.ln1_b.clone();
+            lp.bo = rep.bo.clone();
+            lp.ln2_g = rep.ln2_g.clone();
+            lp.ln2_b = rep.ln2_b.clone();
+            lp.mlp = MlpParams::Dense {
+                w1: partition::unshard_cols(
+                    &st.layers[l].mlp.iter().map(|m| m.w1.clone()).collect::<Vec<_>>(),
+                ),
+                b1: partition::unshard_cols(
+                    &st.layers[l].mlp.iter().map(|m| m.b1.clone()).collect::<Vec<_>>(),
+                ),
+                w2: partition::unshard_rows(
+                    &st.layers[l].mlp.iter().map(|m| m.w2.clone()).collect::<Vec<_>>(),
+                ),
+                b2: rep.b2.clone(),
+            };
+        }
+        out.lnf_g = st.rep[0].lnf_g.clone();
+        out.lnf_b = st.rep[0].lnf_b.clone();
+        out.wlm = partition::unshard_cols(&st.lm);
+        out
+    }
+
+    fn gather_grads(&self) -> ModelParams {
+        // identical reconstruction over the gradient shards
+        let st = self.state.as_ref().expect("virtual mode");
+        let mut tmp = TpEngine {
+            ctx: Ctx {
+                cfg: self.ctx.cfg.clone(),
+                par: self.ctx.par.clone(),
+                exec: crate::runtime::Exec::Oracle,
+                cluster: crate::cluster::Cluster::new(self.ctx.n(), None),
+                timeline: None,
+            },
+            state: Some(TpState {
+                emb: st.g_emb.clone(),
+                layers: st
+                    .g_layers
+                    .iter()
+                    .map(|l| LayerShards { attn: l.attn.clone(), mlp: l.mlp.clone() })
+                    .collect(),
+                lm: st.g_lm.clone(),
+                rep: st.g_rep.clone(),
+                g_emb: st.g_emb.clone(),
+                g_layers: Vec::new(),
+                g_lm: Vec::new(),
+                g_rep: st.g_rep.clone(),
+            }),
+            last_loss: 0.0,
+        };
+        // keep the grad-rep values in the "param" slots for reconstruction
+        tmp.state.as_mut().unwrap().g_layers = Vec::new();
+        tmp.gather_params()
+    }
+
+    fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
+        let Some(st) = self.state.as_mut() else { return };
+        for (p, g) in st.emb.iter_mut().zip(&st.g_emb) {
+            f(&mut p.0, &g.0);
+            f(&mut p.1, &g.1);
+        }
+        for (pl, gl) in st.layers.iter_mut().zip(&st.g_layers) {
+            for (p, g) in pl.attn.iter_mut().zip(&gl.attn) {
+                f(&mut p.wqkv, &g.wqkv);
+                f(&mut p.bqkv, &g.bqkv);
+                f(&mut p.wo, &g.wo);
+            }
+            for (p, g) in pl.mlp.iter_mut().zip(&gl.mlp) {
+                f(&mut p.w1, &g.w1);
+                f(&mut p.b1, &g.b1);
+                f(&mut p.w2, &g.w2);
+            }
+        }
+        for (p, g) in st.lm.iter_mut().zip(&st.g_lm) {
+            f(p, g);
+        }
+        for (p, g) in st.rep.iter_mut().zip(&st.g_rep) {
+            let mut gs: Vec<*const HostTensor> = Vec::new();
+            g.visit(&mut |t| gs.push(t));
+            let mut i = 0;
+            p.visit_mut(&mut |t| {
+                // SAFETY: parallel traversal of structurally-equal trees
+                f(t, unsafe { &*gs[i] });
+                i += 1;
+            });
+        }
+    }
+
+    fn zero_grads(&mut self) {
+        let Some(st) = self.state.as_mut() else { return };
+        for g in &mut st.g_emb {
+            g.0.data.fill(0.0);
+            g.1.data.fill(0.0);
+        }
+        for gl in &mut st.g_layers {
+            for g in &mut gl.attn {
+                g.wqkv.data.fill(0.0);
+                g.bqkv.data.fill(0.0);
+                g.wo.data.fill(0.0);
+            }
+            for g in &mut gl.mlp {
+                g.w1.data.fill(0.0);
+                g.b1.data.fill(0.0);
+                g.w2.data.fill(0.0);
+            }
+        }
+        for g in &mut st.g_lm {
+            g.data.fill(0.0);
+        }
+        for g in &mut st.g_rep {
+            g.visit_mut(&mut |t| t.data.fill(0.0));
+        }
+    }
+
+    fn ctx(&self) -> &Ctx {
+        &self.ctx
+    }
+    fn ctx_mut(&mut self) -> &mut Ctx {
+        &mut self.ctx
+    }
+}

@@ -1,0 +1,239 @@
+//! Analytic hardware models — the substitute for the paper's A100/NVLink
+//! and V100/PCIe testbeds (DESIGN.md §2).
+//!
+//! Compute follows a roofline with the §3.4.1 small-kernel effects the
+//! paper analyzes: per-kernel launch overhead plus an occupancy factor
+//! (tiles vs SMs — small GEMMs leave most of the device dark). These two
+//! terms are exactly why RTP's N× smaller kernels run below N× speed at
+//! small batch and converge as the batch (and thus kernel) grows — the
+//! mechanism behind Figs 10/11/13/14.
+
+use crate::comm::LinkModel;
+use crate::model::ops::OpCost;
+use crate::util::bytes::GIB;
+
+#[derive(Debug, Clone)]
+pub struct Hardware {
+    pub name: String,
+    /// Peak tensor-core-style matmul throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Peak vector (elementwise) throughput, FLOP/s.
+    pub peak_vector_flops: f64,
+    /// Device memory bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Streaming multiprocessors (occupancy denominator).
+    pub num_sms: usize,
+    /// Kernel launch overhead, seconds per kernel.
+    pub launch_s: f64,
+    /// Interconnect.
+    pub link: LinkModel,
+    /// Device memory capacity, bytes.
+    pub capacity: u64,
+    /// Synchronous allocator stall when allocating under memory pressure
+    /// (the CUDA caching-allocator flush the paper's FSDP cliff comes
+    /// from), seconds per stall (floor; the flush itself scales with the
+    /// live bytes being defragmented at `flush_bw`).
+    pub alloc_stall_s: f64,
+    /// Cache-flush re-map bandwidth, bytes/s.
+    pub flush_bw: f64,
+    /// Live/capacity ratio beyond which comm-buffer allocation stalls.
+    pub pressure_threshold: f64,
+}
+
+/// 8×A100-80GB with NVLink3 (the paper's §5 primary testbed).
+pub fn a100_nvlink() -> Hardware {
+    Hardware {
+        name: "a100-nvlink".to_string(),
+        peak_flops: 312e12,        // fp16 tensor core
+        peak_vector_flops: 19.5e12,
+        hbm_bw: 2.0e12,
+        num_sms: 108,
+        launch_s: 6e-6,
+        link: LinkModel::new("nvlink3", 4e-6, 250e9),
+        capacity: 80 * GIB,
+        alloc_stall_s: 2e-3,
+        flush_bw: 250e9,
+        pressure_threshold: 0.85,
+    }
+}
+
+/// 8×V100-32GB over PCIe (the paper's appendix-B testbed).
+pub fn v100_pcie() -> Hardware {
+    Hardware {
+        name: "v100-pcie".to_string(),
+        peak_flops: 112e12,        // fp16 tensor core
+        peak_vector_flops: 14e12,
+        hbm_bw: 0.9e12,
+        num_sms: 80,
+        launch_s: 10e-6,
+        link: LinkModel::new("pcie3", 10e-6, 11e9),
+        capacity: 32 * GIB,
+        alloc_stall_s: 2e-3,
+        flush_bw: 120e9,
+        pressure_threshold: 0.85,
+    }
+}
+
+/// The CPU testbed itself (for sanity timelines of real runs).
+pub fn cpu_sim() -> Hardware {
+    Hardware {
+        name: "cpu-sim".to_string(),
+        peak_flops: 100e9,
+        peak_vector_flops: 50e9,
+        hbm_bw: 20e9,
+        num_sms: 1,
+        launch_s: 1e-6,
+        link: LinkModel::new("shm", 1e-6, 10e9),
+        capacity: 16 * GIB,
+        alloc_stall_s: 1e-4,
+        flush_bw: 20e9,
+        pressure_threshold: 0.9,
+    }
+}
+
+pub fn by_name(name: &str) -> Option<Hardware> {
+    match name {
+        "a100" | "a100-nvlink" => Some(a100_nvlink()),
+        "v100" | "v100-pcie" => Some(v100_pcie()),
+        "cpu" | "cpu-sim" => Some(cpu_sim()),
+        _ => None,
+    }
+}
+
+/// GEMM tile edge for the occupancy model (cuBLAS-style 64×64 blocks).
+const TILE: usize = 64;
+/// Fraction of nameplate peak a well-shaped GEMM actually achieves.
+const ACHIEVABLE: f64 = 0.55;
+/// Per-kernel dispatch floor within one op (stream-queued launches hide
+/// under execution unless kernels are shorter than this).
+const KERNEL_DISPATCH_S: f64 = 2e-6;
+
+impl Hardware {
+    /// Occupancy of one GEMM: how many output tiles it offers vs how many
+    /// SMs want work, and a depth factor for skinny-K kernels. This is the
+    /// §3.4.1 "GPU occupancy concern": a 1/N-width shard GEMM may not fill
+    /// the device.
+    fn gemm_efficiency(&self, m: usize, k: usize, n: usize) -> f64 {
+        let tiles = m.div_ceil(TILE) * n.div_ceil(TILE);
+        let occupancy = (tiles as f64 / self.num_sms as f64).min(1.0);
+        let depth = (k as f64 / 64.0).min(1.0);
+        (occupancy * depth).max(1e-3)
+    }
+
+    /// Roofline time of one GEMM kernel (no dispatch overhead — that is
+    /// charged at op granularity).
+    pub fn gemm_time(&self, m: usize, k: usize, n: usize) -> f64 {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let bytes = ((m * k + k * n + m * n) * 4) as f64;
+        let eff = self.gemm_efficiency(m, k, n);
+        (flops / (self.peak_flops * ACHIEVABLE * eff)).max(bytes / self.hbm_bw)
+    }
+
+    /// Time for one catalog op: one dispatch overhead (`launch_s` — the
+    /// §3.4.1 "kernel launch overheads" term, multiplied across RTP's N×
+    /// more, N×-smaller op calls), plus the roofline sum of its kernels,
+    /// floored by the per-kernel dispatch rate when the kernels are tiny.
+    pub fn op_time(&self, cost: &OpCost) -> f64 {
+        let mut work: f64 =
+            cost.gemms.iter().map(|&[m, k, n]| self.gemm_time(m, k, n)).sum();
+        if cost.ew_flops > 0.0 {
+            // elementwise kernels run at ~0.5 flop/byte (each value is
+            // loaded+stored around little arithmetic); the GEMM terms
+            // already carry their own operand traffic, so the op's total
+            // io is NOT double-charged here.
+            let ew_bytes = 2.0 * cost.ew_flops;
+            work +=
+                (cost.ew_flops / self.peak_vector_flops).max(ew_bytes / self.hbm_bw);
+        }
+        let dispatch_floor = cost.kernels() as f64 * KERNEL_DISPATCH_S;
+        self.launch_s + work.max(dispatch_floor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_by_name() {
+        assert_eq!(by_name("a100").unwrap().name, "a100-nvlink");
+        assert_eq!(by_name("v100-pcie").unwrap().name, "v100-pcie");
+        assert!(by_name("h100").is_none());
+    }
+
+    #[test]
+    fn small_op_pays_launch_overhead() {
+        let hw = a100_nvlink();
+        let cost = OpCost { gemms: vec![[16, 16, 16]], ew_flops: 0.0, bytes: 0.0 };
+        let t = hw.op_time(&cost);
+        // a 16³ GEMM op is pure dispatch overhead
+        assert!(t < 2.0 * hw.launch_s, "t={t}");
+        assert!(t >= hw.launch_s);
+    }
+
+    #[test]
+    fn big_gemm_approaches_roofline() {
+        let hw = a100_nvlink();
+        let (m, k, n) = (8192, 8192, 8192);
+        let t = hw.gemm_time(m, k, n);
+        let ideal = 2.0 * (m * k * n) as f64 / (hw.peak_flops * ACHIEVABLE);
+        assert!(t / ideal < 1.05, "t/ideal = {}", t / ideal);
+    }
+
+    #[test]
+    fn sharded_op_is_less_than_p_times_faster() {
+        // The paper's §3.4.1 inefficiency: N shard op calls run slower
+        // than full/N because of dispatch overhead + occupancy.
+        let hw = a100_nvlink();
+        let full = hw.op_time(&OpCost {
+            gemms: vec![[64, 1280, 5120]],
+            ew_flops: 0.0,
+            bytes: 0.0,
+        });
+        let shard = hw.op_time(&OpCost {
+            gemms: vec![[64, 1280, 5120 / 8]],
+            ew_flops: 0.0,
+            bytes: 0.0,
+        });
+        assert!(shard * 8.0 > full * 1.2, "shard {shard} full {full}");
+    }
+
+    #[test]
+    fn occupancy_penalty_fades_with_batch() {
+        // Bigger batch -> more tiles + amortized dispatch -> the 8-shard
+        // penalty shrinks (the Fig-10 convergence).
+        let hw = a100_nvlink();
+        let penalty = |rows: usize| {
+            let full = hw.op_time(&OpCost {
+                gemms: vec![[rows, 1280, 5120]],
+                ew_flops: 0.0,
+                bytes: 0.0,
+            });
+            let shard = hw.op_time(&OpCost {
+                gemms: vec![[rows, 1280, 5120 / 8]],
+                ew_flops: 0.0,
+                bytes: 0.0,
+            });
+            shard * 8.0 / full
+        };
+        assert!(penalty(16384) < penalty(512));
+    }
+
+    #[test]
+    fn v100_slower_than_a100() {
+        let cost = OpCost { gemms: vec![[1024, 1280, 5120]], ew_flops: 0.0, bytes: 0.0 };
+        assert!(v100_pcie().op_time(&cost) > a100_nvlink().op_time(&cost));
+    }
+
+    #[test]
+    fn elementwise_is_memory_bound() {
+        // elementwise kernels run at ~0.5 flop/byte, so their time is the
+        // 2·flops byte traffic over HBM, not the vector-ALU roofline
+        let hw = a100_nvlink();
+        let cost = OpCost { gemms: vec![], ew_flops: 1e12, bytes: 0.0 };
+        let t = hw.op_time(&cost);
+        let want = hw.launch_s + 2e12 / hw.hbm_bw;
+        assert!((t - want).abs() / t < 1e-9, "t {t} want {want}");
+        assert!(2e12 / hw.hbm_bw > 1e12 / hw.peak_vector_flops);
+    }
+}

@@ -1,0 +1,11 @@
+//! Performance model: analytic hardware (A100/NVLink, V100/PCIe), the
+//! two-stream overlap timeline, and the throughput simulation driving the
+//! paper's Figs 10-14 (see `simulate`, added with the figure benches).
+
+pub mod hardware;
+pub mod simulate;
+pub mod timeline;
+
+pub use hardware::{a100_nvlink, by_name, cpu_sim, v100_pcie, Hardware};
+pub use simulate::{max_batch, simulate, SimResult, SimSpec};
+pub use timeline::{Span, Stream, Timeline, Token};

@@ -1,0 +1,365 @@
+//! Virtual-mode simulation driver: run one engine step at paper scale
+//! with a timeline + trackers attached, and report the modeled step time,
+//! throughput and peak memory — the generator behind Figs 8-14.
+
+use anyhow::Result;
+
+use crate::config::{OptimizerKind, Strategy};
+use crate::memory::tracker::MemCategory;
+use crate::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use crate::tensor::IntTensor;
+use crate::train::Optimizer;
+
+use super::hardware::Hardware;
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub strategy: Strategy,
+    pub workers: usize,
+    pub global_batch: usize,
+    /// Modeled step latency, seconds (fwd+bwd incl. comm).
+    pub step_time: f64,
+    /// Words (tokens) per second per the paper's wps metric.
+    pub wps: f64,
+    /// Peak bytes on the busiest worker.
+    pub peak_per_worker: u64,
+    /// Sum of peaks across workers (the Fig-9 system total).
+    pub peak_total: u64,
+    pub peak_by_cat: Vec<(MemCategory, u64)>,
+    /// Allocator-pressure stalls charged (the FSDP cliff mechanism).
+    pub stalls: u64,
+    /// Compute/comm busy fractions of the step.
+    pub compute_util: f64,
+    pub comm_util: f64,
+    /// Set when the run OOMed against the device capacity.
+    pub oom: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    pub preset: String,
+    pub strategy: Strategy,
+    pub workers: usize,
+    pub global_batch: usize,
+    pub hw: Hardware,
+    /// Enforce the device capacity (OOM detection) vs analysis-only.
+    pub enforce_capacity: bool,
+    pub optimizer: OptimizerKind,
+    /// RTP §3.4.4 recycling ablation knob.
+    pub rtp_recycle: bool,
+}
+
+impl SimSpec {
+    pub fn new(preset: &str, strategy: Strategy, workers: usize, batch: usize, hw: Hardware) -> Self {
+        SimSpec {
+            preset: preset.to_string(),
+            strategy,
+            workers,
+            global_batch: batch,
+            hw,
+            enforce_capacity: true,
+            optimizer: OptimizerKind::Sgd,
+            rtp_recycle: true,
+        }
+    }
+}
+
+/// Run one virtual step and collect the modeled metrics.
+pub fn simulate(spec: &SimSpec) -> Result<SimResult> {
+    let capacity = if spec.enforce_capacity { Some(spec.hw.capacity) } else { None };
+    let opts = EngineOpts::new(&spec.preset, spec.strategy, spec.workers, spec.global_batch)
+        .exec(ExecKind::Virtual)
+        .capacity(capacity)
+        .hardware(spec.hw.clone())
+        .rtp_recycle(spec.rtp_recycle);
+    let cfg = opts.cfg()?;
+    let seq = cfg.seq;
+
+    let mut base = SimResult {
+        strategy: spec.strategy,
+        workers: spec.workers,
+        global_batch: spec.global_batch,
+        step_time: f64::NAN,
+        wps: 0.0,
+        peak_per_worker: 0,
+        peak_total: 0,
+        peak_by_cat: Vec::new(),
+        stalls: 0,
+        compute_util: 0.0,
+        comm_util: 0.0,
+        oom: None,
+    };
+
+    let mut engine = match build_engine(&opts) {
+        Ok(e) => e,
+        Err(e) => {
+            // init-time OOM (weights alone exceed the device)
+            base.oom = Some(format!("{e:#}"));
+            return Ok(base);
+        }
+    };
+    let opt = Optimizer::new(spec.optimizer, 1e-3);
+    if let Err(e) = opt.attach(&mut *engine) {
+        base.oom = Some(format!("{e:#}"));
+        return Ok(base);
+    }
+
+    // virtual batch: shapes only
+    let batch = Batch {
+        ids: IntTensor::zeros(&[spec.global_batch, seq]),
+        targets: IntTensor::zeros(&[spec.global_batch, seq]),
+    };
+    match engine.step(&batch) {
+        Ok(_) => {}
+        Err(e) => {
+            base.oom = Some(format!("{e:#}"));
+            // peaks up to the OOM point are still informative
+            base.peak_per_worker = engine.ctx().cluster.max_peak();
+            base.peak_total = engine.ctx().cluster.total_peak();
+            return Ok(base);
+        }
+    }
+
+    let ctx = engine.ctx();
+    let tl = ctx.timeline.as_ref().expect("simulate always attaches a timeline");
+    let step_time = tl.time();
+    let tracker0 = &ctx.cluster.workers[0].tracker;
+    Ok(SimResult {
+        step_time,
+        wps: (spec.global_batch * seq) as f64 / step_time,
+        peak_per_worker: ctx.cluster.max_peak(),
+        peak_total: ctx.cluster.total_peak(),
+        peak_by_cat: MemCategory::ALL
+            .iter()
+            .map(|&c| (c, tracker0.peak_of(c)))
+            .collect(),
+        stalls: tl.stall_count,
+        compute_util: tl.compute_busy / step_time.max(1e-12),
+        comm_util: tl.comm_busy / step_time.max(1e-12),
+        oom: None,
+        ..base
+    })
+}
+
+/// The largest global batch that fits, per strategy — the "maximum batch
+/// size available" the paper's §5.1 sweeps to. Power-of-two sweep, then
+/// binary refinement (the pressure zone near the true maximum is where
+/// the paper's FSDP cliff lives).
+pub fn max_batch(spec: &SimSpec, limit: usize) -> usize {
+    let fits = |b: usize| {
+        let mut s = spec.clone();
+        s.global_batch = b;
+        matches!(simulate(&s), Ok(r) if r.oom.is_none())
+    };
+    let n = spec.workers;
+    let mut best = 0;
+    let mut b = n;
+    while b <= limit && fits(b) {
+        best = b;
+        b *= 2;
+    }
+    if best == 0 {
+        return 0;
+    }
+    // binary refine in (best, min(2*best, limit))
+    let mut lo = best;
+    let mut hi = (2 * best).min(limit.max(best));
+    while hi - lo > n {
+        let mid = (lo + hi) / 2 / n * n;
+        if mid == lo {
+            break;
+        }
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// The Figs 10/11/13/14 generator: throughput-vs-batch sweep for
+/// DDP / FSDP / RTP-in / RTP-out on one model + hardware, printed as the
+/// paper's series with the §5.4 deltas, CSV'd under `figures/`.
+pub fn throughput_figure(preset: &str, hw: Hardware, tag: &str, workers: usize) {
+    use crate::bench_util::Table;
+    let strategies = [
+        Strategy::Ddp,
+        Strategy::Fsdp,
+        Strategy::RtpInplace,
+        Strategy::RtpOutOfPlace,
+    ];
+    let caps: Vec<usize> = strategies
+        .iter()
+        .map(|&s| max_batch(&SimSpec::new(preset, s, workers, workers, hw.clone()), 4096))
+        .collect();
+    let sweep_max = *caps.iter().max().unwrap();
+
+    let mut t = Table::new(
+        &format!("{tag} — throughput (wps) vs per-GPU batch, {preset} on {}×{}", workers, hw.name),
+        &["batch/gpu", "ddp", "fsdp", "rtp-in", "rtp-out", "rtp-out vs ddp", "rtp-out vs fsdp"],
+    );
+    let mut batch = workers;
+    while batch <= sweep_max {
+        let mut wps = Vec::new();
+        for (s, cap) in strategies.iter().zip(&caps) {
+            if batch > *cap {
+                wps.push(None);
+                continue;
+            }
+            let r = simulate(&SimSpec::new(preset, *s, workers, batch, hw.clone())).unwrap();
+            wps.push(if r.oom.is_some() { None } else { Some(r.wps) });
+        }
+        let fmt = |v: &Option<f64>| match v {
+            Some(w) => format!("{w:.0}"),
+            None => "OOM".to_string(),
+        };
+        let delta = |a: &Option<f64>, b: &Option<f64>| match (a, b) {
+            (Some(x), Some(y)) => format!("{:+.1}%", 100.0 * (x / y - 1.0)),
+            _ => "—".to_string(),
+        };
+        t.row(vec![
+            (batch / workers).to_string(),
+            fmt(&wps[0]),
+            fmt(&wps[1]),
+            fmt(&wps[2]),
+            fmt(&wps[3]),
+            delta(&wps[3], &wps[0]),
+            delta(&wps[3], &wps[1]),
+        ]);
+        batch *= 2;
+    }
+    // final row: each strategy at its own refined maximum batch — the
+    // pressure zone where the paper's FSDP cliff lives
+    {
+        let mut cells = vec!["max".to_string()];
+        let mut at_max = Vec::new();
+        for (s, cap) in strategies.iter().zip(&caps) {
+            if *cap == 0 {
+                cells.push("OOM".into());
+                at_max.push(None);
+                continue;
+            }
+            let r = simulate(&SimSpec::new(preset, *s, workers, *cap, hw.clone())).unwrap();
+            cells.push(format!("{:.0} (b{})", r.wps, cap / workers));
+            at_max.push(Some(r.wps));
+        }
+        let delta = |a: &Option<f64>, b: &Option<f64>| match (a, b) {
+            (Some(x), Some(y)) => format!("{:+.1}%", 100.0 * (x / y - 1.0)),
+            _ => "—".to_string(),
+        };
+        cells.push(delta(&at_max[3], &at_max[0]));
+        cells.push(delta(&at_max[3], &at_max[1]));
+        t.row(cells);
+    }
+    t.print();
+    t.write_csv(&format!(
+        "{}_throughput",
+        tag.to_lowercase().replace(' ', "_")
+    ))
+    .unwrap();
+
+    // the paper's cliff observation: FSDP at ITS max batch vs RTP there
+    let fsdp_max = caps[1];
+    if fsdp_max > 0 {
+        let f = simulate(&SimSpec::new(preset, Strategy::Fsdp, workers, fsdp_max, hw.clone()))
+            .unwrap();
+        let r = simulate(&SimSpec::new(
+            preset,
+            Strategy::RtpOutOfPlace,
+            workers,
+            fsdp_max,
+            hw.clone(),
+        ))
+        .unwrap();
+        println!(
+            "at FSDP's max batch ({}/gpu): FSDP {:.0} wps ({} alloc stalls) vs \
+             RTP-out {:.0} wps => RTP {:+.0}%\n",
+            fsdp_max / workers,
+            f.wps,
+            f.stalls,
+            r.wps,
+            100.0 * (r.wps / f.wps - 1.0)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::hardware::a100_nvlink;
+
+    fn spec(strategy: Strategy, batch: usize) -> SimSpec {
+        SimSpec::new("gpt2-500m", strategy, 8, batch, a100_nvlink())
+    }
+
+    #[test]
+    fn rtp_peak_below_fsdp_below_ddp() {
+        let rtp = simulate(&spec(Strategy::RtpInplace, 8)).unwrap();
+        let fsdp = simulate(&spec(Strategy::Fsdp, 8)).unwrap();
+        let ddp = simulate(&spec(Strategy::Ddp, 8)).unwrap();
+        assert!(rtp.oom.is_none() && fsdp.oom.is_none() && ddp.oom.is_none());
+        assert!(
+            rtp.peak_per_worker < fsdp.peak_per_worker,
+            "rtp {} !< fsdp {}",
+            rtp.peak_per_worker,
+            fsdp.peak_per_worker
+        );
+        assert!(fsdp.peak_per_worker < ddp.peak_per_worker);
+    }
+
+    #[test]
+    fn rtp_oop_faster_than_inplace() {
+        // overlap must buy wall-clock time
+        let oop = simulate(&spec(Strategy::RtpOutOfPlace, 8)).unwrap();
+        let inp = simulate(&spec(Strategy::RtpInplace, 8)).unwrap();
+        assert!(oop.step_time < inp.step_time, "oop {} inp {}", oop.step_time, inp.step_time);
+    }
+
+    #[test]
+    fn rtp_throughput_within_paper_band_of_ddp() {
+        // paper §5.4: −13% … −1.7% vs DP for GPT2-500M on 8×A100
+        for batch in [8, 32, 128] {
+            let rtp = simulate(&spec(Strategy::RtpOutOfPlace, batch)).unwrap();
+            let ddp = simulate(&spec(Strategy::Ddp, batch)).unwrap();
+            let delta = rtp.wps / ddp.wps - 1.0;
+            assert!(
+                (-0.25..=0.05).contains(&delta),
+                "batch {batch}: RTP vs DDP delta {delta:.3} outside band"
+            );
+        }
+    }
+
+    #[test]
+    fn single_worker_has_no_comm() {
+        let mut s = spec(Strategy::RtpInplace, 8);
+        s.workers = 1;
+        s.preset = "gpt2-117m".into();
+        let r = simulate(&s).unwrap();
+        assert_eq!(r.comm_util, 0.0);
+    }
+
+    #[test]
+    fn oom_reported_not_panicked() {
+        // gpt2-neo DDP+Adam in f32 needs 16 B/param ≈ 45 GB of state —
+        // more than a 32 GB V100 before any activations.
+        let mut s = spec(Strategy::Ddp, 8);
+        s.preset = "gpt2-neo-2.7b".into();
+        s.optimizer = OptimizerKind::Adam;
+        s.hw = crate::perfmodel::hardware::v100_pcie();
+        let r = simulate(&s).unwrap();
+        assert!(r.oom.is_some());
+        // RTP-inplace shards it: 45/8 + 2 GB acts fits on the same V100
+        s.strategy = Strategy::RtpInplace;
+        let r = simulate(&s).unwrap();
+        assert!(r.oom.is_none(), "{:?}", r.oom);
+    }
+
+    #[test]
+    fn max_batch_orders_by_memory_headroom() {
+        let rtp = max_batch(&spec(Strategy::RtpInplace, 8), 512);
+        let ddp = max_batch(&spec(Strategy::Ddp, 8), 512);
+        assert!(rtp >= ddp, "rtp max {rtp} < ddp max {ddp}");
+        assert!(rtp > 0);
+    }
+}

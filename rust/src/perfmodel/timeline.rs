@@ -1,0 +1,308 @@
+//! Two-stream timeline: the paper's CUDA-streams overlap model
+//! (§3.4.3, Figs 3-5).
+//!
+//! Each (symmetric SPMD) worker has a COMPUTE stream and a COMM stream.
+//! Engines running in virtual mode narrate their schedule into the
+//! timeline; the stream clocks advance per the hardware model, and the
+//! final `time()` is the step latency. Out-of-place RTP / FSDP-prefetch
+//! overlap shows up as `comm_async` + `wait`; in-place RTP and naive DDP
+//! reductions as `comm_blocking`.
+//!
+//! The spans record a Gantt chart (rendered by `bench overlap_timeline`,
+//! reproducing the paper's Figs 3-5 as ASCII).
+
+use crate::comm::CommPrim;
+use crate::model::ops::OpCost;
+
+use super::hardware::Hardware;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stream {
+    Compute,
+    Comm,
+}
+
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub stream: Stream,
+    pub start: f64,
+    pub end: f64,
+    pub label: String,
+}
+
+/// Handle to an in-flight async communication.
+#[derive(Debug, Clone, Copy)]
+#[must_use = "un-awaited comm leaves the timeline inconsistent"]
+pub struct Token(usize);
+
+#[derive(Debug)]
+pub struct Timeline {
+    pub hw: Hardware,
+    /// Worker count for collective pricing.
+    pub n: usize,
+    compute_t: f64,
+    comm_t: f64,
+    pending: Vec<f64>,
+    /// Busy-time accumulators (utilization metrics).
+    pub compute_busy: f64,
+    pub comm_busy: f64,
+    /// Total allocator-pressure stall charged.
+    pub stall_s: f64,
+    pub stall_count: u64,
+    /// Span recording for Gantt output (off in sweeps: memory).
+    pub record: bool,
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn new(hw: Hardware, n: usize) -> Self {
+        Timeline {
+            hw,
+            n,
+            compute_t: 0.0,
+            comm_t: 0.0,
+            pending: Vec::new(),
+            compute_busy: 0.0,
+            comm_busy: 0.0,
+            stall_s: 0.0,
+            stall_count: 0,
+            record: false,
+            spans: Vec::new(),
+        }
+    }
+
+    pub fn recording(hw: Hardware, n: usize) -> Self {
+        let mut t = Self::new(hw, n);
+        t.record = true;
+        t
+    }
+
+    fn span(&mut self, stream: Stream, start: f64, end: f64, label: &str) {
+        if self.record {
+            self.spans.push(Span { stream, start, end, label: label.to_string() });
+        }
+    }
+
+    /// One compute op on the compute stream.
+    pub fn compute(&mut self, label: &str, cost: &OpCost) {
+        let dur = self.hw.op_time(cost);
+        let start = self.compute_t;
+        self.compute_t += dur;
+        self.compute_busy += dur;
+        self.span(Stream::Compute, start, self.compute_t, label);
+    }
+
+    /// Blocking collective: both streams synchronize, then the comm runs.
+    pub fn comm_blocking(&mut self, label: &str, prim: CommPrim, bytes: u64) {
+        let dur = self.hw.link.time(prim, bytes, self.n);
+        let start = self.compute_t.max(self.comm_t);
+        let end = start + dur;
+        self.comm_busy += dur;
+        self.compute_t = end;
+        self.comm_t = end;
+        self.span(Stream::Comm, start, end, label);
+    }
+
+    /// Async collective issued now (after the compute enqueued so far);
+    /// runs on the comm stream; completion must be `wait`ed.
+    pub fn comm_async(&mut self, label: &str, prim: CommPrim, bytes: u64) -> Token {
+        let dur = self.hw.link.time(prim, bytes, self.n);
+        let start = self.comm_t.max(self.compute_t);
+        let end = start + dur;
+        self.comm_busy += dur;
+        self.comm_t = end;
+        self.span(Stream::Comm, start, end, label);
+        self.pending.push(end);
+        Token(self.pending.len() - 1)
+    }
+
+    /// Async collective whose data is already available (weights in hand):
+    /// starts as soon as the comm stream is free, independent of compute —
+    /// the RTP property that "computation and communication start
+    /// simultaneously" (§3.4.3).
+    pub fn comm_async_eager(&mut self, label: &str, prim: CommPrim, bytes: u64) -> Token {
+        let dur = self.hw.link.time(prim, bytes, self.n);
+        let start = self.comm_t;
+        let end = start + dur;
+        self.comm_busy += dur;
+        self.comm_t = end;
+        self.span(Stream::Comm, start, end, label);
+        self.pending.push(end);
+        Token(self.pending.len() - 1)
+    }
+
+    /// Block the compute stream until the async comm completes.
+    pub fn wait(&mut self, tok: Token) {
+        let end = self.pending[tok.0];
+        if end > self.compute_t {
+            self.compute_t = end;
+        }
+    }
+
+    /// Synchronize both streams (step boundary).
+    pub fn barrier(&mut self) {
+        let t = self.compute_t.max(self.comm_t);
+        self.compute_t = t;
+        self.comm_t = t;
+    }
+
+    /// Allocation under memory pressure stalls the compute stream — the
+    /// caching-allocator flush behind the paper's FSDP full-batch cliff
+    /// (§5.4 "FSDP throughput drops sharply").
+    pub fn alloc_event(&mut self, live: u64, requested: u64) {
+        let cap = self.hw.capacity;
+        if cap > 0
+            && (live + requested) as f64 > self.hw.pressure_threshold * cap as f64
+        {
+            // the caching allocator flushes + re-maps its live arena to
+            // make room — cost scales with the resident bytes
+            let stall = self.hw.alloc_stall_s.max(live as f64 / self.hw.flush_bw);
+            let start = self.compute_t;
+            self.compute_t += stall;
+            self.stall_s += stall;
+            self.stall_count += 1;
+            self.span(Stream::Compute, start, self.compute_t, "alloc-stall");
+        }
+    }
+
+    /// Current step latency.
+    pub fn time(&self) -> f64 {
+        self.compute_t.max(self.comm_t)
+    }
+
+    /// Reset clocks (keep hardware + recording config) for the next step.
+    pub fn reset(&mut self) {
+        self.compute_t = 0.0;
+        self.comm_t = 0.0;
+        self.pending.clear();
+        self.compute_busy = 0.0;
+        self.comm_busy = 0.0;
+        self.stall_s = 0.0;
+        self.stall_count = 0;
+        self.spans.clear();
+    }
+
+    /// ASCII Gantt of the recorded spans (Figs 3-5 renderer).
+    pub fn render_gantt(&self, width: usize) -> String {
+        let total = self.time().max(1e-12);
+        let mut out = String::new();
+        for (stream, tag) in [(Stream::Compute, "compute"), (Stream::Comm, "comm   ")] {
+            let mut line = vec![' '; width];
+            for s in self.spans.iter().filter(|s| s.stream == stream) {
+                let a = ((s.start / total) * width as f64) as usize;
+                let b = (((s.end / total) * width as f64) as usize).min(width);
+                let c = s.label.chars().next().unwrap_or('#');
+                for cell in line.iter_mut().take(b).skip(a) {
+                    *cell = c;
+                }
+            }
+            out.push_str(tag);
+            out.push('|');
+            out.extend(line);
+            out.push_str("|\n");
+        }
+        out.push_str(&format!(
+            "total {:.3} ms  compute busy {:.0}%  comm busy {:.0}%\n",
+            total * 1e3,
+            100.0 * self.compute_busy / total,
+            100.0 * self.comm_busy / total
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::hardware::a100_nvlink;
+
+    fn cost(flops_gemm: [usize; 3]) -> OpCost {
+        OpCost { gemms: vec![flops_gemm], ew_flops: 0.0, bytes: 0.0 }
+    }
+
+    #[test]
+    fn blocking_comm_serializes() {
+        let mut t = Timeline::new(a100_nvlink(), 8);
+        t.compute("a", &cost([1024, 1024, 1024]));
+        let after_compute = t.time();
+        t.comm_blocking("r", CommPrim::Rotation, 64 << 20);
+        assert!(t.time() > after_compute);
+        // compute resumes only after the comm
+        let comm_end = t.time();
+        t.compute("b", &cost([128, 128, 128]));
+        assert!(t.time() > comm_end);
+    }
+
+    #[test]
+    fn async_comm_overlaps_compute() {
+        let hw = a100_nvlink();
+        let big = cost([4096, 4096, 4096]);
+        let msg = 1 << 20;
+
+        // overlap: comm hides under compute
+        let mut a = Timeline::new(hw.clone(), 8);
+        let tok = a.comm_async_eager("r", CommPrim::Rotation, msg);
+        a.compute("c", &big);
+        a.wait(tok);
+        // serial: comm then compute
+        let mut b = Timeline::new(hw, 8);
+        b.comm_blocking("r", CommPrim::Rotation, msg);
+        b.compute("c", &big);
+
+        assert!(a.time() < b.time(), "overlap {} serial {}", a.time(), b.time());
+        // fully hidden: overlap time == compute time alone
+        let compute_only = a.hw.op_time(&big);
+        assert!((a.time() - compute_only).abs() / compute_only < 1e-9);
+    }
+
+    #[test]
+    fn wait_blocks_when_comm_longer_than_compute() {
+        let hw = a100_nvlink();
+        let tiny = cost([64, 64, 64]);
+        let mut t = Timeline::new(hw, 8);
+        let tok = t.comm_async_eager("r", CommPrim::Rotation, 1 << 30);
+        t.compute("c", &tiny);
+        let comm_end = t.time(); // dominated by the 1 GiB rotation
+        t.wait(tok);
+        // compute stream is now pinned to the comm end: the next compute
+        // starts after it.
+        t.compute("c2", &tiny);
+        assert!(t.time() > comm_end);
+    }
+
+    #[test]
+    fn alloc_stall_only_under_pressure() {
+        let mut t = Timeline::new(a100_nvlink(), 8);
+        let cap = t.hw.capacity;
+        t.alloc_event(0, 1 << 20);
+        assert_eq!(t.stall_count, 0);
+        t.alloc_event((0.9 * cap as f64) as u64, 1 << 20);
+        assert_eq!(t.stall_count, 1);
+        assert!(t.stall_s > 0.0);
+    }
+
+    #[test]
+    fn reset_clears_clocks_but_keeps_config() {
+        let mut t = Timeline::recording(a100_nvlink(), 4);
+        t.compute("a", &cost([256, 256, 256]));
+        t.barrier();
+        assert!(t.time() > 0.0);
+        t.reset();
+        assert_eq!(t.time(), 0.0);
+        assert!(t.record);
+        assert!(t.spans.is_empty());
+    }
+
+    #[test]
+    fn gantt_renders_two_streams() {
+        let mut t = Timeline::recording(a100_nvlink(), 4);
+        let tok = t.comm_async_eager("rot", CommPrim::Rotation, 8 << 20);
+        t.compute("gemm", &cost([2048, 2048, 2048]));
+        t.wait(tok);
+        let g = t.render_gantt(40);
+        assert!(g.contains("compute|"));
+        assert!(g.contains("comm   |"));
+        assert!(g.contains('g')); // gemm span
+        assert!(g.contains('r')); // rot span
+    }
+}

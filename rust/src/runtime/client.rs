@@ -1,0 +1,256 @@
+//! PJRT runtime: load AOT'd HLO text, compile once, execute many.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT plugin). HLO text
+//! is the interchange format — see DESIGN.md §4 and
+//! /opt/xla-example/README.md for why serialized protos are rejected.
+//! Executables are compiled lazily on first use and cached for the life of
+//! the runtime, so the training hot loop never recompiles.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{HostTensor, IntTensor};
+
+use super::manifest::{Entry, Manifest};
+
+/// Counters for the §Perf pass.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compilations: u64,
+    /// Wall time spent inside PJRT execute (s).
+    pub exec_seconds: f64,
+    /// Wall time spent in host<->literal conversion (s).
+    pub convert_seconds: f64,
+}
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: RuntimeStats,
+}
+
+/// A borrowed runtime argument.
+#[derive(Debug, Clone, Copy)]
+pub enum RtArg<'a> {
+    F(&'a HostTensor),
+    I(&'a IntTensor),
+}
+
+impl<'a> RtArg<'a> {
+    fn shape(&self) -> &[usize] {
+        match self {
+            RtArg::F(t) => &t.shape,
+            RtArg::I(t) => &t.shape,
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            RtArg::F(_) => "f32",
+            RtArg::I(_) => "i32",
+        }
+    }
+
+    /// Upload straight to a device buffer (§Perf L3 opt #1): skips the
+    /// Literal intermediate entirely — one copy instead of two — and,
+    /// critically, avoids `PjRtLoadedExecutable::execute(Literal...)`,
+    /// whose C-side literal transfer LEAKS ~6 KB + output-size per call
+    /// in xla_extension 0.5.1 (measured in EXPERIMENTS.md §Perf; the
+    /// `execute_b` device-buffer path is leak-free).
+    fn to_device(self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            RtArg::F(t) => client
+                .buffer_from_host_buffer(&t.data, &t.shape, None)
+                .map_err(|e| anyhow!("host->device upload failed: {e}")),
+            RtArg::I(t) => client
+                .buffer_from_host_buffer(&t.data, &t.shape, None)
+                .map_err(|e| anyhow!("host->device upload failed: {e}")),
+        }
+    }
+}
+
+impl PjrtRuntime {
+    pub fn new(root: &Path, preset: &str) -> Result<Self> {
+        let manifest = Manifest::load(root, preset)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client init failed: {e}"))?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    /// Compile (or fetch the cached executable for) one artifact key.
+    pub fn ensure_compiled(&mut self, key: &str) -> Result<()> {
+        if self.compiled.contains_key(key) {
+            return Ok(());
+        }
+        let entry = self.manifest.entry(key)?;
+        let path = self.manifest.hlo_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {key}: {e}"))?;
+        self.compiled.insert(key.to_string(), exe);
+        self.stats.compilations += 1;
+        Ok(())
+    }
+
+    fn validate(entry: &Entry, args: &[RtArg]) -> Result<()> {
+        if entry.inputs.len() != args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                entry.key,
+                entry.inputs.len(),
+                args.len()
+            );
+        }
+        for (i, (sig, arg)) in entry.inputs.iter().zip(args).enumerate() {
+            if sig.dtype != arg.dtype() || sig.shape != arg.shape() {
+                bail!(
+                    "{} arg {i}: expected {} {:?}, got {} {:?}",
+                    entry.key,
+                    sig.dtype,
+                    sig.shape,
+                    arg.dtype(),
+                    arg.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one artifact. Outputs come back as f32 host tensors shaped
+    /// per the manifest (the AOT path lowers with `return_tuple=True`, so
+    /// the single PJRT output is a tuple we decompose).
+    pub fn run(&mut self, key: &str, args: &[RtArg]) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(key)?;
+        // borrow (not clone) the entry; stats deltas are applied at the
+        // end so no &mut self is needed mid-flight (§Perf L3 opt #2)
+        let entry = self.manifest.entry(key)?;
+        Self::validate(entry, args)?;
+
+        let t0 = std::time::Instant::now();
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|a| a.to_device(&self.client))
+            .collect::<Result<_>>()
+            .with_context(|| format!("uploading args for {key}"))?;
+        let mut convert_s = t0.elapsed().as_secs_f64();
+
+        let exe = self.compiled.get(key).expect("just compiled");
+        let t1 = std::time::Instant::now();
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("executing {key}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {key} result: {e}"))?;
+        let exec_s = t1.elapsed().as_secs_f64();
+
+        let t2 = std::time::Instant::now();
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing {key} tuple: {e}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "{key}: manifest promises {} outputs, executable returned {}",
+                entry.outputs.len(),
+                parts.len()
+            );
+        }
+        let outs = parts
+            .into_iter()
+            .zip(&entry.outputs)
+            .map(|(lit, sig)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading {key} output: {e}"))?;
+                if data.len() != sig.numel() {
+                    bail!("{key}: output has {} elems, expected {}", data.len(), sig.numel());
+                }
+                Ok(HostTensor::from_vec(&sig.shape, data))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        convert_s += t2.elapsed().as_secs_f64();
+        self.stats.convert_seconds += convert_s;
+        self.stats.exec_seconds += exec_s;
+        self.stats.executions += 1;
+        Ok(outs)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::artifacts_root;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let root = artifacts_root();
+        if !root.join("tiny/manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        Some(PjrtRuntime::new(&root, "tiny").unwrap())
+    }
+
+    #[test]
+    fn ln_fwd_runs_and_matches_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let cfg = rt.manifest.cfg.clone();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x = HostTensor::randn(&[2, cfg.seq, cfg.hidden], 1.0, &mut rng);
+        let g = HostTensor::randn(&[cfg.hidden], 0.5, &mut rng);
+        let b = HostTensor::randn(&[cfg.hidden], 0.5, &mut rng);
+        let outs = rt
+            .run("ln_fwd__b2__p1", &[RtArg::F(&x), RtArg::F(&g), RtArg::F(&b)])
+            .unwrap();
+        let want = crate::model::oracle::ln_fwd(&x, &g, &b);
+        assert!(outs[0].allclose(&want, 1e-4), "diff {}", outs[0].max_abs_diff(&want));
+        assert_eq!(rt.stats.executions, 1);
+        assert_eq!(rt.stats.compilations, 1);
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let Some(mut rt) = runtime() else { return };
+        let cfg = rt.manifest.cfg.clone();
+        let mut rng = crate::util::rng::Rng::new(4);
+        let x = HostTensor::randn(&[2, cfg.seq, cfg.hidden], 1.0, &mut rng);
+        let g = HostTensor::randn(&[cfg.hidden], 0.5, &mut rng);
+        let b = HostTensor::randn(&[cfg.hidden], 0.5, &mut rng);
+        for _ in 0..3 {
+            rt.run("ln_fwd__b2__p1", &[RtArg::F(&x), RtArg::F(&g), RtArg::F(&b)])
+                .unwrap();
+        }
+        assert_eq!(rt.stats.compilations, 1);
+        assert_eq!(rt.stats.executions, 3);
+        assert_eq!(rt.compiled_count(), 1);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let Some(mut rt) = runtime() else { return };
+        let x = HostTensor::zeros(&[1, 2, 3]);
+        let err = rt
+            .run("ln_fwd__b2__p1", &[RtArg::F(&x), RtArg::F(&x), RtArg::F(&x)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected"), "{err}");
+    }
+}

@@ -1,0 +1,258 @@
+//! Executor dispatch + the `Buf` storage abstraction.
+//!
+//! `Buf` is the engines' universal buffer: `Real` (f32 host tensor) /
+//! `Ids` (i32) carry data in real mode; `Virt` carries only a shape in
+//! virtual mode (paper-scale accounting runs, DESIGN.md §4 "Execution
+//! model"). The SAME engine code path allocates, communicates and frees
+//! either kind — which is the argument that the measured figures are
+//! properties of the schedule.
+//!
+//! `Exec` dispatches an op call to one of three backends:
+//! - `Pjrt`     — the production path: AOT'd HLO on the PJRT CPU client;
+//! - `Oracle`   — pure-rust reference (tests without artifacts, and the
+//!                independent numeric cross-check of the HLO path);
+//! - `Virtual`  — no compute at all; outputs are shape stubs.
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelCfg;
+use crate::model::oracle;
+use crate::model::ops::{self, Op};
+use crate::tensor::{numel, HostTensor, IntTensor};
+
+use super::client::{PjrtRuntime, RtArg};
+
+/// Engine-visible storage.
+#[derive(Debug, Clone)]
+pub enum Buf {
+    /// Real f32 data.
+    Real(HostTensor),
+    /// Real i32 data (token ids / targets).
+    Ids(IntTensor),
+    /// Shape-only stub (virtual mode).
+    Virt(Vec<usize>),
+}
+
+impl Buf {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Buf::Real(t) => &t.shape,
+            Buf::Ids(t) => &t.shape,
+            Buf::Virt(s) => s,
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (numel(self.shape()).max(1) * 4) as u64
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Buf::Virt(_))
+    }
+
+    /// Unwrap real f32 data (panics on type confusion — engine bug).
+    pub fn f(&self) -> &HostTensor {
+        match self {
+            Buf::Real(t) => t,
+            other => panic!("expected Real buf, got {:?}", other.shape_kind()),
+        }
+    }
+
+    pub fn f_mut(&mut self) -> &mut HostTensor {
+        match self {
+            Buf::Real(t) => t,
+            other => panic!("expected Real buf, got {:?}", other.shape_kind()),
+        }
+    }
+
+    pub fn ids(&self) -> &IntTensor {
+        match self {
+            Buf::Ids(t) => t,
+            other => panic!("expected Ids buf, got {:?}", other.shape_kind()),
+        }
+    }
+
+    fn shape_kind(&self) -> (&'static str, &[usize]) {
+        match self {
+            Buf::Real(_) => ("real", self.shape()),
+            Buf::Ids(_) => ("ids", self.shape()),
+            Buf::Virt(_) => ("virt", self.shape()),
+        }
+    }
+
+    /// Real zeros of the same shape class as self would require; used by
+    /// accumulators. In virtual mode returns a stub.
+    pub fn zeros_like_mode(virtual_mode: bool, shape: &[usize]) -> Buf {
+        if virtual_mode {
+            Buf::Virt(shape.to_vec())
+        } else {
+            Buf::Real(HostTensor::zeros(shape))
+        }
+    }
+}
+
+/// A borrowed op argument: real f32 / real i32 / virtual placeholder.
+/// Engines pass weight tensors and activation bufs without cloning; in
+/// virtual mode every arg is `V` and the executor ignores them.
+#[derive(Debug, Clone, Copy)]
+pub enum ArgRef<'a> {
+    F(&'a HostTensor),
+    I(&'a IntTensor),
+    V,
+}
+
+impl Buf {
+    pub fn arg(&self) -> ArgRef<'_> {
+        match self {
+            Buf::Real(t) => ArgRef::F(t),
+            Buf::Ids(t) => ArgRef::I(t),
+            Buf::Virt(_) => ArgRef::V,
+        }
+    }
+}
+
+/// Wrap an optional real tensor (None in virtual mode).
+pub fn arg_of(t: Option<&HostTensor>) -> ArgRef<'_> {
+    t.map(ArgRef::F).unwrap_or(ArgRef::V)
+}
+
+/// Which compute backend the engines drive.
+pub enum Exec {
+    Pjrt(Box<PjrtRuntime>),
+    /// Like `Pjrt` but routes through the Pallas-kernel artifact set
+    /// (keys with the `__pallas` suffix) where available.
+    PjrtPallas(Box<PjrtRuntime>),
+    Oracle,
+    Virtual,
+}
+
+impl Exec {
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Exec::Virtual)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Exec::Pjrt(_) => "pjrt",
+            Exec::PjrtPallas(_) => "pjrt-pallas",
+            Exec::Oracle => "oracle",
+            Exec::Virtual => "virtual",
+        }
+    }
+
+    /// Run `op` at local batch `b`, partition `p`. Args in artifact order;
+    /// outputs in artifact order (virtual mode: shape stubs).
+    pub fn call(
+        &mut self,
+        op: Op,
+        cfg: &ModelCfg,
+        b: usize,
+        p: usize,
+        args: &[ArgRef],
+    ) -> Result<Vec<Buf>> {
+        // batch-only ops are compiled at p=1 (aot.py convention)
+        let eff_p = if op.batch_only() { 1 } else { p };
+        match self {
+            Exec::Virtual => Ok(ops::output_shapes(op, cfg, b, eff_p)
+                .into_iter()
+                .map(Buf::Virt)
+                .collect()),
+            Exec::Oracle => {
+                let oargs: Vec<oracle::Arg> = args
+                    .iter()
+                    .map(|a| match a {
+                        ArgRef::F(t) => Ok(oracle::Arg::F(t)),
+                        ArgRef::I(t) => Ok(oracle::Arg::I(t)),
+                        ArgRef::V => bail!("oracle executor got a virtual arg"),
+                    })
+                    .collect::<Result<_>>()?;
+                Ok(oracle::run(op, cfg, eff_p, &oargs)
+                    .into_iter()
+                    .map(Buf::Real)
+                    .collect())
+            }
+            Exec::Pjrt(rt) => Self::call_pjrt(rt, false, op, b, eff_p, args),
+            Exec::PjrtPallas(rt) => Self::call_pjrt(rt, true, op, b, eff_p, args),
+        }
+    }
+
+    fn call_pjrt(
+        rt: &mut PjrtRuntime,
+        pallas: bool,
+        op: Op,
+        b: usize,
+        eff_p: usize,
+        args: &[ArgRef],
+    ) -> Result<Vec<Buf>> {
+        {
+            {
+                let mut key = op.artifact_key(b, eff_p, pallas);
+                if pallas && !rt.manifest.entries.contains_key(&key) {
+                    // the pallas artifact set only covers the hot shard
+                    // combos (aot.py); fall back to the plain lowering
+                    key = op.artifact_key(b, eff_p, false);
+                }
+                let rargs: Vec<RtArg> = args
+                    .iter()
+                    .map(|a| match a {
+                        ArgRef::F(t) => Ok(RtArg::F(t)),
+                        ArgRef::I(t) => Ok(RtArg::I(t)),
+                        ArgRef::V => bail!("pjrt executor got a virtual arg"),
+                    })
+                    .collect::<Result<_>>()?;
+                Ok(rt.run(&key, &rargs)?.into_iter().map(Buf::Real).collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn virtual_exec_returns_shapes_only() {
+        let cfg = presets::get("tiny").unwrap();
+        let mut ex = Exec::Virtual;
+        let outs = ex
+            .call(Op::MlpFwd, &cfg, 2, 2, &[ArgRef::V, ArgRef::V, ArgRef::V, ArgRef::V])
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        assert!(outs[0].is_virtual());
+        assert_eq!(outs[0].shape(), &[2, cfg.seq, cfg.hidden]);
+    }
+
+    #[test]
+    fn oracle_exec_matches_direct_oracle() {
+        let cfg = presets::get("tiny").unwrap();
+        let mut rng = Rng::new(5);
+        let x = HostTensor::randn(&[1, cfg.seq, cfg.hidden], 1.0, &mut rng);
+        let g = HostTensor::randn(&[cfg.hidden], 0.5, &mut rng);
+        let b = HostTensor::randn(&[cfg.hidden], 0.5, &mut rng);
+        let mut ex = Exec::Oracle;
+        let outs = ex
+            .call(Op::LnFwd, &cfg, 1, 1, &[ArgRef::F(&x), ArgRef::F(&g), ArgRef::F(&b)])
+            .unwrap();
+        let want = oracle::ln_fwd(&x, &g, &b);
+        assert_eq!(outs[0].f(), &want);
+    }
+
+    #[test]
+    fn oracle_rejects_virtual_bufs() {
+        let cfg = presets::get("tiny").unwrap();
+        let mut ex = Exec::Oracle;
+        assert!(ex
+            .call(Op::LnFwd, &cfg, 1, 1, &[ArgRef::V, ArgRef::V, ArgRef::V])
+            .is_err());
+    }
+
+    #[test]
+    fn buf_bytes_counts_f32() {
+        assert_eq!(Buf::Virt(vec![2, 3]).bytes(), 24);
+        assert_eq!(Buf::Virt(vec![]).bytes(), 4); // scalar
+        let t = HostTensor::zeros(&[4]);
+        assert_eq!(Buf::Real(t).bytes(), 16);
+    }
+}

@@ -1,0 +1,257 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+//!
+//! `artifacts/<preset>/manifest.json` lists one entry per AOT'd op
+//! instance: key (`{op}__b{b}__p{p}[__pallas]`), the HLO text file, and
+//! the input/output dtype+shape signatures. Loading validates the embedded
+//! model config against the rust preset mirror, so a drifted compile is a
+//! hard error, not a shape crash mid-run.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ModelCfg;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeSig {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl ShapeSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub key: String,
+    pub op: String,
+    pub b: usize,
+    pub p: usize,
+    pub pallas: bool,
+    /// Path relative to the artifacts root.
+    pub file: String,
+    pub inputs: Vec<ShapeSig>,
+    pub outputs: Vec<ShapeSig>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub cfg: ModelCfg,
+    pub root: PathBuf,
+    pub entries: HashMap<String, Entry>,
+}
+
+fn sigs(j: &Json, what: &str) -> Result<Vec<ShapeSig>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("{what} not an array"))?
+        .iter()
+        .map(|e| {
+            let dtype = e
+                .idx(0)
+                .as_str()
+                .ok_or_else(|| anyhow!("{what} missing dtype"))?
+                .to_string();
+            let shape = e
+                .idx(1)
+                .as_arr()
+                .ok_or_else(|| anyhow!("{what} missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(ShapeSig { dtype, shape })
+        })
+        .collect()
+}
+
+fn cfg_from_json(j: &Json) -> Result<ModelCfg> {
+    let get = |k: &str| {
+        j.get(k)
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest config missing {k}"))
+    };
+    Ok(ModelCfg {
+        name: j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest config missing name"))?
+            .to_string(),
+        vocab: get("vocab")?,
+        hidden: get("hidden")?,
+        heads: get("heads")?,
+        layers: get("layers")?,
+        seq: get("seq")?,
+        ffn: get("ffn")?,
+        experts: get("experts")?,
+        expert_ffn: get("expert_ffn")?,
+    })
+}
+
+impl Manifest {
+    /// Load `root/<preset>/manifest.json` (plus `manifest_pallas.json` if
+    /// present — its entries carry the `__pallas` key suffix and never
+    /// collide).
+    pub fn load(root: &Path, preset: &str) -> Result<Manifest> {
+        let dir = root.join(preset);
+        let mut m = Self::load_one(root, &dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest for preset {preset}"))?;
+        let pallas = dir.join("manifest_pallas.json");
+        if pallas.exists() {
+            let extra = Self::load_one(root, &pallas)?;
+            m.entries.extend(extra.entries);
+        }
+        Ok(m)
+    }
+
+    fn load_one(root: &Path, path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let preset = j
+            .get("preset")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest missing preset"))?
+            .to_string();
+        let cfg = cfg_from_json(j.get("config"))?;
+        let mut entries = HashMap::new();
+        for e in j.get("entries").as_arr().unwrap_or(&[]) {
+            let entry = Entry {
+                key: e
+                    .get("key")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("entry missing key"))?
+                    .to_string(),
+                op: e.get("op").as_str().unwrap_or("").to_string(),
+                b: e.get("b").as_usize().unwrap_or(0),
+                p: e.get("p").as_usize().unwrap_or(1),
+                pallas: e.get("pallas").as_bool().unwrap_or(false),
+                file: e
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string(),
+                inputs: sigs(e.get("inputs"), "inputs")?,
+                outputs: sigs(e.get("outputs"), "outputs")?,
+            };
+            entries.insert(entry.key.clone(), entry);
+        }
+        if entries.is_empty() {
+            bail!("manifest {} has no entries", path.display());
+        }
+        Ok(Manifest { preset, cfg, root: root.to_path_buf(), entries })
+    }
+
+    pub fn entry(&self, key: &str) -> Result<&Entry> {
+        self.entries.get(key).ok_or_else(|| {
+            anyhow!(
+                "artifact {key} not in manifest for {} ({} entries); \
+                 rerun `make artifacts` with the right preset/combos",
+                self.preset,
+                self.entries.len()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
+        self.root.join(&entry.file)
+    }
+
+    /// Cross-check the embedded config against a rust preset — catches
+    /// python/rust preset drift at startup.
+    pub fn check_cfg(&self, expect: &ModelCfg) -> Result<()> {
+        if &self.cfg != expect {
+            bail!(
+                "manifest config for {} does not match rust preset:\n  manifest: {:?}\n  rust:     {:?}",
+                self.preset,
+                self.cfg,
+                expect
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts root: `$RTP_ARTIFACTS` or `./artifacts` (falling back
+/// over the crate root for tests run from other directories).
+pub fn artifacts_root() -> PathBuf {
+    if let Ok(p) = std::env::var("RTP_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn have_artifacts() -> bool {
+        artifacts_root().join("tiny/manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(&artifacts_root(), "tiny").unwrap();
+        assert_eq!(m.preset, "tiny");
+        // the python preset must mirror the rust preset exactly
+        m.check_cfg(&presets::get("tiny").unwrap()).unwrap();
+        // a known entry with the documented signature
+        let e = m.entry("attn_fwd__b2__p2").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[0].dtype, "f32");
+        assert_eq!(e.inputs[0].shape, vec![2, 16, 32]); // [b, S, H]
+        assert_eq!(e.inputs[1].shape, vec![32, 48]); // [H, 3*H/2]
+        assert!(m.hlo_path(e).exists());
+    }
+
+    #[test]
+    fn manifest_shapes_match_rust_op_catalog() {
+        if !have_artifacts() {
+            return;
+        }
+        use crate::model::ops::{self, Op};
+        let m = Manifest::load(&artifacts_root(), "tiny").unwrap();
+        let cfg = presets::get("tiny").unwrap();
+        for e in m.entries.values().filter(|e| !e.pallas) {
+            let op = Op::ALL
+                .iter()
+                .copied()
+                .find(|o| o.key_name() == e.op)
+                .unwrap_or_else(|| panic!("unknown op {}", e.op));
+            let want_in = ops::input_shapes(op, &cfg, e.b, e.p);
+            assert_eq!(want_in.len(), e.inputs.len(), "{}", e.key);
+            for ((_, ws), have) in want_in.iter().zip(&e.inputs) {
+                assert_eq!(ws, &have.shape, "{} inputs", e.key);
+            }
+            let want_out = ops::output_shapes(op, &cfg, e.b, e.p);
+            assert_eq!(want_out.len(), e.outputs.len(), "{}", e.key);
+            for (ws, have) in want_out.iter().zip(&e.outputs) {
+                assert_eq!(ws, &have.shape, "{} outputs", e.key);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_entry_is_helpful_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_root(), "tiny").unwrap();
+        let err = m.entry("attn_fwd__b999__p1").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

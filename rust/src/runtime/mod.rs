@@ -1,0 +1,13 @@
+//! Runtime: AOT artifact loading + PJRT execution + executor dispatch.
+//!
+//! `manifest` parses the compile-path contract, `client` wraps the PJRT
+//! CPU client with an executable cache, `exec` is the three-way dispatch
+//! (pjrt / oracle / virtual) every engine computes through.
+
+pub mod client;
+pub mod exec;
+pub mod manifest;
+
+pub use client::{PjrtRuntime, RtArg, RuntimeStats};
+pub use exec::{arg_of, ArgRef, Buf, Exec};
+pub use manifest::{artifacts_root, Manifest};

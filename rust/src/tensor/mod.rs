@@ -1,0 +1,294 @@
+//! Host tensors: shaped f32 / i32 buffers.
+//!
+//! This is deliberately *not* an ndarray clone: engines only need shaped
+//! storage plus the handful of cheap glue ops that live between AOT'd HLO
+//! calls (concat/slice on the last axis for Output-Partition merges,
+//! accumulation for sum-merges, bias reductions). All heavy math runs in
+//! the PJRT executables.
+
+pub mod ops;
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        HostTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    /// N(0, std) init (weight initialization).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Size of the last axis (1 for scalars).
+    pub fn last_dim(&self) -> usize {
+        self.shape.last().copied().unwrap_or(1)
+    }
+
+    /// Rows = product of all leading axes.
+    pub fn rows(&self) -> usize {
+        self.numel() / self.last_dim().max(1)
+    }
+
+    /// Elementwise accumulate: `self += other`.
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Broadcast-add a [C] vector over the last axis of [..., C].
+    pub fn add_row_broadcast(&mut self, bias: &HostTensor) {
+        let c = self.last_dim();
+        assert_eq!(bias.shape, vec![c], "bias must be [last_dim]");
+        for row in self.data.chunks_mut(c) {
+            for (a, b) in row.iter_mut().zip(&bias.data) {
+                *a += b;
+            }
+        }
+    }
+
+    /// Sum over all leading axes -> [C] (bias gradients).
+    pub fn sum_leading(&self) -> HostTensor {
+        let c = self.last_dim();
+        let mut out = HostTensor::zeros(&[c]);
+        for row in self.data.chunks(c) {
+            for (o, v) in out.data.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Concatenate tensors along the LAST axis (Output-Partition merge).
+    pub fn concat_last(parts: &[&HostTensor]) -> HostTensor {
+        assert!(!parts.is_empty());
+        let lead = &parts[0].shape[..parts[0].shape.len() - 1];
+        let rows = parts[0].rows();
+        let mut total_c = 0;
+        for p in parts {
+            assert_eq!(&p.shape[..p.shape.len() - 1], lead, "lead dims differ");
+            total_c += p.last_dim();
+        }
+        let mut shape = lead.to_vec();
+        shape.push(total_c);
+        let mut out = HostTensor::zeros(&shape);
+        for r in 0..rows {
+            let mut off = 0;
+            for p in parts {
+                let c = p.last_dim();
+                out.data[r * total_c + off..r * total_c + off + c]
+                    .copy_from_slice(&p.data[r * c..(r + 1) * c]);
+                off += c;
+            }
+        }
+        out
+    }
+
+    /// Slice `[start, start+len)` of the LAST axis (Output-Partition split).
+    pub fn slice_last(&self, start: usize, len: usize) -> HostTensor {
+        let c = self.last_dim();
+        assert!(start + len <= c, "slice_last out of range");
+        let rows = self.rows();
+        let mut shape = self.shape.clone();
+        *shape.last_mut().unwrap() = len;
+        let mut out = HostTensor::zeros(&shape);
+        for r in 0..rows {
+            out.data[r * len..(r + 1) * len]
+                .copy_from_slice(&self.data[r * c + start..r * c + start + len]);
+        }
+        out
+    }
+
+    /// Write `part` into `[start, start+part.last_dim())` of the last axis.
+    pub fn write_slice_last(&mut self, start: usize, part: &HostTensor) {
+        let c = self.last_dim();
+        let len = part.last_dim();
+        assert!(start + len <= c, "write_slice_last out of range");
+        assert_eq!(self.rows(), part.rows(), "row mismatch");
+        for r in 0..self.rows() {
+            self.data[r * c + start..r * c + start + len]
+                .copy_from_slice(&part.data[r * len..(r + 1) * len]);
+        }
+    }
+
+    /// Slice `[start, start+count)` of the FIRST axis (row shards).
+    pub fn slice_first(&self, start: usize, count: usize) -> HostTensor {
+        assert!(!self.shape.is_empty());
+        let stride: usize = self.shape[1..].iter().product();
+        assert!(start + count <= self.shape[0], "slice_first out of range");
+        let mut shape = self.shape.clone();
+        shape[0] = count;
+        HostTensor::from_vec(
+            &shape,
+            self.data[start * stride..(start + count) * stride].to_vec(),
+        )
+    }
+
+    pub fn write_slice_first(&mut self, start: usize, part: &HostTensor) {
+        let stride: usize = self.shape[1..].iter().product();
+        let count = part.shape[0];
+        assert!(start + count <= self.shape[0]);
+        self.data[start * stride..(start + count) * stride]
+            .copy_from_slice(&part.data);
+    }
+
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative allclose (tolerance scaled by magnitude, floor 1.0).
+    pub fn allclose(&self, other: &HostTensor, tol: f32) -> bool {
+        self.shape == other.shape
+            && self.data.iter().zip(&other.data).all(|(a, b)| {
+                (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+            })
+    }
+}
+
+impl IntTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        IntTensor { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        IntTensor { shape: shape.to_vec(), data }
+    }
+
+    /// Uniform ids in [0, n) (synthetic token streams).
+    pub fn rand_below(shape: &[usize], n: i32, rng: &mut Rng) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_uniform_i32(&mut t.data, n);
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_slice_roundtrip() {
+        let a = HostTensor::from_vec(&[2, 2], vec![1., 2., 5., 6.]);
+        let b = HostTensor::from_vec(&[2, 3], vec![3., 4., 40., 7., 8., 80.]);
+        let c = HostTensor::concat_last(&[&a, &b]);
+        assert_eq!(c.shape, vec![2, 5]);
+        assert_eq!(c.data, vec![1., 2., 3., 4., 40., 5., 6., 7., 8., 80.]);
+        assert_eq!(c.slice_last(0, 2), a);
+        assert_eq!(c.slice_last(2, 3), b);
+    }
+
+    #[test]
+    fn write_slice_last_roundtrip() {
+        let mut full = HostTensor::zeros(&[2, 4]);
+        let part = HostTensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        full.write_slice_last(2, &part);
+        assert_eq!(full.slice_last(2, 2), part);
+        assert_eq!(full.data[0], 0.0);
+    }
+
+    #[test]
+    fn first_axis_shards() {
+        let t = HostTensor::from_vec(&[4, 2], (0..8).map(|x| x as f32).collect());
+        let s = t.slice_first(1, 2);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![2., 3., 4., 5.]);
+        let mut t2 = HostTensor::zeros(&[4, 2]);
+        t2.write_slice_first(1, &s);
+        assert_eq!(t2.slice_first(1, 2), s);
+    }
+
+    #[test]
+    fn sum_leading_is_bias_grad() {
+        let t = HostTensor::from_vec(&[2, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        assert_eq!(t.sum_leading().data, vec![16., 20.]);
+    }
+
+    #[test]
+    fn broadcast_add() {
+        let mut t = HostTensor::zeros(&[2, 3]);
+        t.add_row_broadcast(&HostTensor::from_vec(&[3], vec![1., 2., 3.]));
+        assert_eq!(t.data, vec![1., 2., 3., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = HostTensor::randn(&[8], 0.02, &mut r1);
+        let b = HostTensor::randn(&[8], 0.02, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn allclose_tolerates_scale() {
+        let a = HostTensor::from_vec(&[2], vec![100.0, 1.0]);
+        let b = HostTensor::from_vec(&[2], vec![100.001, 1.0]);
+        assert!(a.allclose(&b, 1e-4));
+        assert!(!a.allclose(&b, 1e-7));
+    }
+}

@@ -1,0 +1,106 @@
+//! Tiny CPU reference ops.
+//!
+//! NOT the compute path (that's the AOT HLO executables) — these exist so
+//! unit/property tests of the comm + engine glue can run without artifacts,
+//! and as an independent oracle for finite-difference checks.
+
+use super::HostTensor;
+
+/// C = A @ B for 2-D tensors. Naive triple loop — test-only.
+pub fn matmul(a: &HostTensor, b: &HostTensor) -> HostTensor {
+    assert_eq!(a.shape.len(), 2);
+    assert_eq!(b.shape.len(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dim mismatch");
+    let mut out = HostTensor::zeros(&[m, n]);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a.data[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// tanh-approximate GeLU, matching kernels/ref.py.
+pub fn gelu(x: f32) -> f32 {
+    let c = (2.0 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Row softmax of a [R, C] tensor.
+pub fn softmax_rows(x: &HostTensor) -> HostTensor {
+    let c = x.last_dim();
+    let mut out = x.clone();
+    for row in out.data.chunks_mut(c) {
+        let m = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut s = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            s += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+    out
+}
+
+/// argmax along the last axis -> indices [R].
+pub fn argmax_rows(x: &HostTensor) -> Vec<usize> {
+    let c = x.last_dim();
+    x.data
+        .chunks(c)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_hand_value() {
+        let a = HostTensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = HostTensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]);
+        assert_eq!(matmul(&a, &b).data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn gelu_known_points() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let x = HostTensor::from_vec(&[2, 3], vec![1., 2., 3., 0., 0., 0.]);
+        let s = softmax_rows(&x);
+        for row in s.data.chunks(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        assert!((s.data[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        let x = HostTensor::from_vec(&[2, 3], vec![1., 5., 3., 9., 0., 2.]);
+        assert_eq!(argmax_rows(&x), vec![1, 0]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Checkpointing: a simple self-describing binary format for model
+//! parameters (`RTPC` magic + named f32 tensors). Any engine can
+//! checkpoint via `gather_params()`; loading reconstructs a full
+//! `ModelParams` that seeds a fresh engine or the `generate` example.
+//!
+//! Format (little-endian):
+//!   magic "RTPC1\0"  | u32 tensor count
+//!   per tensor: u32 name_len | name bytes | u32 ndim | u64 dims... |
+//!               f32 data...
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelCfg;
+use crate::model::ModelParams;
+use crate::tensor::HostTensor;
+
+const MAGIC: &[u8; 6] = b"RTPC1\0";
+
+pub fn save_params(params: &ModelParams, path: &Path) -> Result<()> {
+    let mut entries: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::new();
+    params.visit(&mut |name, t| {
+        entries.push((name.to_string(), t.shape.clone(), t.data.clone()));
+    });
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (name, shape, data) in entries {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(shape.len() as u32).to_le_bytes())?;
+        for d in &shape {
+            f.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        // SAFETY: f32 slice reinterpreted as bytes for the write
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load_params(cfg: &ModelCfg, path: &Path) -> Result<ModelParams> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an RTP checkpoint", path.display());
+    }
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf) as usize;
+    let mut tensors: std::collections::BTreeMap<String, HostTensor> = Default::default();
+    for _ in 0..count {
+        f.read_exact(&mut u32buf)?;
+        let mut name = vec![0u8; u32::from_le_bytes(u32buf) as usize];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf8")?;
+        f.read_exact(&mut u32buf)?;
+        let ndim = u32::from_le_bytes(u32buf) as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            f.read_exact(&mut u64buf)?;
+            shape.push(u64::from_le_bytes(u64buf) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        // SAFETY: fill the f32 buffer through its byte view
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+        };
+        f.read_exact(bytes)?;
+        tensors.insert(name, HostTensor::from_vec(&shape, data));
+    }
+    // pour into a cfg-shaped ModelParams, validating coverage and shapes
+    let mut out = ModelParams::zeros_like(cfg);
+    let mut missing = Vec::new();
+    out.visit_mut(&mut |name, t| match tensors.remove(name) {
+        Some(loaded) if loaded.shape == t.shape => *t = loaded,
+        Some(loaded) => missing.push(format!(
+            "{name}: shape {:?} != expected {:?}",
+            loaded.shape, t.shape
+        )),
+        None => missing.push(format!("{name}: absent")),
+    });
+    if !missing.is_empty() {
+        bail!("checkpoint does not match config: {}", missing.join("; "));
+    }
+    if !tensors.is_empty() {
+        bail!(
+            "checkpoint has {} extra tensors (e.g. {:?})",
+            tensors.len(),
+            tensors.keys().next()
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rtp-ckpt-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let cfg = presets::get("tiny").unwrap();
+        let p = ModelParams::init(&cfg, &mut Rng::new(3));
+        let path = tmp("roundtrip");
+        save_params(&p, &path).unwrap();
+        let q = load_params(&cfg, &path).unwrap();
+        assert_eq!(p.max_abs_diff(&q), 0.0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn moe_roundtrip() {
+        let cfg = presets::get("tiny-moe").unwrap();
+        let p = ModelParams::init(&cfg, &mut Rng::new(4));
+        let path = tmp("moe");
+        save_params(&p, &path).unwrap();
+        let q = load_params(&cfg, &path).unwrap();
+        assert_eq!(p.max_abs_diff(&q), 0.0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn wrong_config_rejected() {
+        let cfg = presets::get("tiny").unwrap();
+        let p = ModelParams::init(&cfg, &mut Rng::new(5));
+        let path = tmp("wrongcfg");
+        save_params(&p, &path).unwrap();
+        let other = presets::get("tiny-moe").unwrap();
+        assert!(load_params(&other, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        let cfg = presets::get("tiny").unwrap();
+        assert!(load_params(&cfg, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,14 @@
+//! Training: optimizers (SGD / momentum / Adam over engine-owned shards),
+//! a learnable synthetic Markov corpus, and the end-to-end loop.
+
+pub mod checkpoint;
+pub mod corpus;
+pub mod optimizer;
+pub mod schedule;
+pub mod trainer;
+
+pub use checkpoint::{load_params, save_params};
+pub use corpus::MarkovCorpus;
+pub use optimizer::Optimizer;
+pub use schedule::{grad_norm, LrSchedule};
+pub use trainer::{train, TrainReport};

@@ -1,0 +1,42 @@
+//! Byte-size formatting + constants (memory figures are the paper's core).
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+
+/// `1234567` -> `"1.18 MiB"` — used by every memory report.
+pub fn human(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes >= GIB {
+        format!("{:.2} GiB", b / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", b / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// f32 element count -> bytes.
+pub fn f32_bytes(elems: usize) -> u64 {
+    (elems * 4) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(human(512), "512 B");
+        assert_eq!(human(2048), "2.00 KiB");
+        assert_eq!(human(3 * MIB + MIB / 2), "3.50 MiB");
+        assert_eq!(human(80 * GIB), "80.00 GiB");
+    }
+
+    #[test]
+    fn f32_sizes() {
+        assert_eq!(f32_bytes(1024), 4096);
+    }
+}

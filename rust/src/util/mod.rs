@@ -1,0 +1,11 @@
+//! Support substrates: JSON, PRNG, stats, property testing, byte formatting.
+//!
+//! All hand-rolled because the build environment's crate cache is offline
+//! (no serde/rand/proptest/criterion) — see DESIGN.md §2 for the
+//! substitution table.
+
+pub mod bytes;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,85 @@
+//! Mini property-testing harness (proptest substitute — the offline crate
+//! cache has no proptest; DESIGN.md §2 records the substitution).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check("rotation is identity", 200, |rng| {
+//!     let n = 1 + rng.below(8);
+//!     // ... build a case from rng ...
+//!     if bad { return Err(format!("n={n} broke")); }
+//!     Ok(())
+//! });
+//! ```
+//! On failure it panics with the seed + case index so the exact case can be
+//! replayed with `PROP_SEED`.
+
+use super::rng::Rng;
+
+/// Base seed: override with env PROP_SEED to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `cases` random cases of `prop`. Each case gets an Rng derived from
+/// (base_seed, case index) so failures are independently replayable.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let seed = base_seed();
+    for i in 0..cases {
+        let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {i}/{cases} \
+                 (PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Helper: assert approximate equality of slices inside a property.
+pub fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = x.abs().max(y.abs()).max(1.0);
+        if (x - y).abs() / denom > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial() {
+        check("trivial", 50, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn reports_failure() {
+        check("fails", 10, |rng| {
+            if rng.below(3) == 0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Engine equivalence — the strongest correctness statement in the repo:
+//! every distributed engine (DDP, FSDP, Megatron-TP, RTP in-place and
+//! out-of-place, at N ∈ {1, 2, 4}) must produce the SAME loss and the
+//! SAME fully-reduced gradients as the single-device idealized computer,
+//! to f32 tolerance, for both the dense and the MoE model — first against
+//! the pure-rust oracle executor, then (in integration_runtime.rs)
+//! against the AOT PJRT artifacts.
+
+use rtp::config::Strategy;
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use rtp::util::rng::Rng;
+
+const TOL: f32 = 2e-3;
+
+fn batch(preset: &str, global: usize, seed: u64) -> Batch {
+    let cfg = rtp::config::presets::get(preset).unwrap();
+    Batch::synth(&cfg, global, &mut Rng::new(seed))
+}
+
+fn check_equivalence(preset: &str, strategy: Strategy, workers: usize, exec: ExecKind) {
+    let global = 4;
+    let b = batch(preset, global, 7);
+
+    let mut oracle = build_engine(
+        &EngineOpts::new(preset, Strategy::Single, 1, global).exec(exec),
+    )
+    .unwrap();
+    let loss_ref = oracle.step(&b).unwrap();
+    let grads_ref = oracle.gather_grads();
+
+    let mut eng =
+        build_engine(&EngineOpts::new(preset, strategy, workers, global).exec(exec)).unwrap();
+    let loss = eng.step(&b).unwrap();
+    assert!(
+        (loss - loss_ref).abs() <= TOL * loss_ref.abs().max(1.0),
+        "{strategy} N={workers}: loss {loss} vs single {loss_ref}"
+    );
+    let grads = eng.gather_grads();
+    grads.allclose(&grads_ref, TOL).unwrap_or_else(|e| {
+        panic!("{strategy} N={workers}: gradient mismatch: {e}")
+    });
+
+    // params must also reassemble exactly (same init partitioned back)
+    let params = eng.gather_params();
+    params
+        .allclose(&oracle.gather_params(), 1e-6)
+        .unwrap_or_else(|e| panic!("{strategy} N={workers}: param mismatch: {e}"));
+
+    // no leaked transient buffers
+    assert_eq!(
+        eng.ctx().cluster.outstanding(),
+        eng.ctx().cluster.n() * expected_persistent(strategy),
+        "{strategy} N={workers}: leaked allocations"
+    );
+}
+
+/// Persistent allocations per worker: weights + grads (+ RTP-oop comm buf).
+fn expected_persistent(strategy: Strategy) -> usize {
+    match strategy {
+        Strategy::RtpOutOfPlace => 3,
+        _ => 2,
+    }
+}
+
+#[test]
+fn ddp_matches_single_oracle() {
+    for n in [1, 2, 4] {
+        check_equivalence("tiny", Strategy::Ddp, n, ExecKind::Oracle);
+    }
+}
+
+#[test]
+fn fsdp_matches_single_oracle() {
+    for n in [1, 2, 4] {
+        check_equivalence("tiny", Strategy::Fsdp, n, ExecKind::Oracle);
+    }
+}
+
+#[test]
+fn megatron_tp_matches_single_oracle() {
+    for n in [1, 2, 4] {
+        check_equivalence("tiny", Strategy::MegatronTp, n, ExecKind::Oracle);
+    }
+}
+
+#[test]
+fn rtp_inplace_matches_single_oracle() {
+    for n in [1, 2, 4] {
+        check_equivalence("tiny", Strategy::RtpInplace, n, ExecKind::Oracle);
+    }
+}
+
+#[test]
+fn rtp_outofplace_matches_single_oracle() {
+    for n in [1, 2, 4] {
+        check_equivalence("tiny", Strategy::RtpOutOfPlace, n, ExecKind::Oracle);
+    }
+}
+
+#[test]
+fn moe_engines_match_single_oracle() {
+    for strategy in [
+        Strategy::Ddp,
+        Strategy::Fsdp,
+        Strategy::RtpInplace,
+        Strategy::RtpOutOfPlace,
+    ] {
+        for n in [2, 4] {
+            check_equivalence("tiny-moe", strategy, n, ExecKind::Oracle);
+        }
+    }
+}
+
+#[test]
+fn rtp_inplace_equals_outofplace_bitwise() {
+    // The two variants run the same arithmetic in the same order — they
+    // must agree exactly, not just within tolerance.
+    let b = batch("tiny", 4, 9);
+    let mut a = build_engine(
+        &EngineOpts::new("tiny", Strategy::RtpInplace, 4, 4).exec(ExecKind::Oracle),
+    )
+    .unwrap();
+    let mut o = build_engine(
+        &EngineOpts::new("tiny", Strategy::RtpOutOfPlace, 4, 4).exec(ExecKind::Oracle),
+    )
+    .unwrap();
+    let la = a.step(&b).unwrap();
+    let lo = o.step(&b).unwrap();
+    assert_eq!(la, lo);
+    assert_eq!(a.gather_grads().max_abs_diff(&o.gather_grads()), 0.0);
+}
+
+#[test]
+fn grads_accumulate_across_steps() {
+    // two steps without zero_grads == sum of the two single-step grads
+    let b1 = batch("tiny", 4, 11);
+    let b2 = batch("tiny", 4, 12);
+    for strategy in [Strategy::Ddp, Strategy::RtpInplace, Strategy::Fsdp] {
+        let opts = EngineOpts::new("tiny", strategy, 2, 4).exec(ExecKind::Oracle);
+        let mut e1 = build_engine(&opts).unwrap();
+        e1.step(&b1).unwrap();
+        let g1 = e1.gather_grads();
+        e1.step(&b2).unwrap();
+        let g12 = e1.gather_grads();
+
+        let mut e2 = build_engine(&opts).unwrap();
+        e2.step(&b2).unwrap();
+        let g2 = e2.gather_grads();
+
+        let mut sum = g1.clone();
+        sum.axpy(1.0, &g2);
+        sum.allclose(&g12, 1e-4)
+            .unwrap_or_else(|e| panic!("{strategy}: accumulation broken: {e}"));
+    }
+}
+
+#[test]
+fn zero_grads_resets() {
+    let b = batch("tiny", 4, 13);
+    let mut e = build_engine(
+        &EngineOpts::new("tiny", Strategy::RtpInplace, 2, 4).exec(ExecKind::Oracle),
+    )
+    .unwrap();
+    e.step(&b).unwrap();
+    e.zero_grads();
+    let z = e.gather_grads();
+    let mut max = 0.0f32;
+    z.visit(&mut |_, t| {
+        for v in &t.data {
+            max = max.max(v.abs());
+        }
+    });
+    assert_eq!(max, 0.0);
+}

@@ -1,0 +1,193 @@
+//! The AOT path end-to-end: engines running real HLO artifacts on the
+//! PJRT CPU client must match the pure-rust oracle — per-op AND through a
+//! whole fwd+bwd step — including the Pallas-kernel artifact set.
+//!
+//! These tests require `make artifacts` (skipped gracefully otherwise so
+//! `cargo test` works on a fresh checkout).
+
+use rtp::config::{presets, Strategy};
+use rtp::model::ops::{self, Op};
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use rtp::runtime::{artifacts_root, ArgRef, Buf, Exec, PjrtRuntime};
+use rtp::tensor::{HostTensor, IntTensor};
+use rtp::util::rng::Rng;
+
+fn have_artifacts(preset: &str) -> bool {
+    let ok = artifacts_root().join(preset).join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: no artifacts for {preset} (run `make artifacts`)");
+    }
+    ok
+}
+
+/// Random real args for an op instance per the catalog shapes.
+fn synth_args(
+    op: Op,
+    cfg: &rtp::config::ModelCfg,
+    b: usize,
+    p: usize,
+    rng: &mut Rng,
+) -> Vec<Buf> {
+    ops::input_shapes(op, cfg, b, p)
+        .into_iter()
+        .map(|(dt, shape)| match dt {
+            ops::DType::F32 => Buf::Real(HostTensor::randn(&shape, 0.5, rng)),
+            ops::DType::I32 => {
+                Buf::Ids(IntTensor::rand_below(&shape, cfg.vocab as i32, rng))
+            }
+        })
+        .collect()
+}
+
+/// Every artifact in the tiny manifest must agree with the oracle.
+#[test]
+fn every_tiny_artifact_matches_oracle() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let cfg = presets::get("tiny").unwrap();
+    let mut pjrt = Exec::Pjrt(Box::new(
+        PjrtRuntime::new(&artifacts_root(), "tiny").unwrap(),
+    ));
+    let mut oracle = Exec::Oracle;
+    let mut rng = Rng::new(31);
+    let mut checked = 0;
+    // iterate the catalog over the combos the preset promises
+    for (b, p) in [(4, 1), (2, 1), (1, 1), (2, 2), (1, 4), (4, 2), (4, 4)] {
+        for op in Op::ALL {
+            if matches!(op, Op::RouterFwd | Op::RouterBwd | Op::MoeFwd | Op::MoeBwd) {
+                continue; // tiny is dense
+            }
+            let args = synth_args(op, &cfg, b, p, &mut rng);
+            let argrefs: Vec<ArgRef> = args.iter().map(|a| a.arg()).collect();
+            let want = oracle.call(op, &cfg, b, p, &argrefs).unwrap();
+            let got = pjrt.call(op, &cfg, b, p, &argrefs).unwrap();
+            assert_eq!(want.len(), got.len(), "{op} b{b} p{p}");
+            for (wb, gb) in want.iter().zip(&got) {
+                let (w, g) = (wb.f(), gb.f());
+                assert!(
+                    g.allclose(w, 5e-4),
+                    "{op} b{b} p{p}: max diff {}",
+                    g.max_abs_diff(w)
+                );
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 70, "only {checked} instances checked");
+}
+
+/// MoE artifacts vs oracle.
+#[test]
+fn moe_artifacts_match_oracle() {
+    if !have_artifacts("tiny-moe") {
+        return;
+    }
+    let cfg = presets::get("tiny-moe").unwrap();
+    let mut pjrt = Exec::Pjrt(Box::new(
+        PjrtRuntime::new(&artifacts_root(), "tiny-moe").unwrap(),
+    ));
+    let mut oracle = Exec::Oracle;
+    let mut rng = Rng::new(33);
+    for op in [Op::RouterFwd, Op::RouterBwd, Op::MoeFwd, Op::MoeBwd] {
+        for b in [1, 2, 4] {
+            let args = synth_args(op, &cfg, b, 1, &mut rng);
+            let argrefs: Vec<ArgRef> = args.iter().map(|a| a.arg()).collect();
+            let want = oracle.call(op, &cfg, b, 1, &argrefs).unwrap();
+            let got = pjrt.call(op, &cfg, b, 1, &argrefs).unwrap();
+            for (wb, gb) in want.iter().zip(&got) {
+                assert!(
+                    gb.f().allclose(wb.f(), 5e-4),
+                    "{op} b{b}: max diff {}",
+                    gb.f().max_abs_diff(wb.f())
+                );
+            }
+        }
+    }
+}
+
+/// Full engine step on PJRT == oracle step, for every strategy.
+#[test]
+fn engine_step_pjrt_matches_oracle() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let cfg = presets::get("tiny").unwrap();
+    let batch = Batch::synth(&cfg, 4, &mut Rng::new(41));
+    for (strategy, n) in [
+        (Strategy::Single, 1),
+        (Strategy::Ddp, 2),
+        (Strategy::Fsdp, 2),
+        (Strategy::MegatronTp, 2),
+        (Strategy::RtpInplace, 2),
+        (Strategy::RtpInplace, 4),
+        (Strategy::RtpOutOfPlace, 4),
+    ] {
+        let mut a = build_engine(
+            &EngineOpts::new("tiny", strategy, n, 4).exec(ExecKind::Oracle),
+        )
+        .unwrap();
+        let mut b = build_engine(
+            &EngineOpts::new("tiny", strategy, n, 4).exec(ExecKind::Pjrt),
+        )
+        .unwrap();
+        let la = a.step(&batch).unwrap();
+        let lb = b.step(&batch).unwrap();
+        assert!(
+            (la - lb).abs() < 1e-3 * la.abs().max(1.0),
+            "{strategy} N={n}: loss {la} (oracle) vs {lb} (pjrt)"
+        );
+        b.gather_grads()
+            .allclose(&a.gather_grads(), 2e-3)
+            .unwrap_or_else(|e| panic!("{strategy} N={n} pjrt vs oracle grads: {e}"));
+    }
+}
+
+/// The Pallas-kernel artifact set (interpret-mode lowering of the L1
+/// kernels) must agree with the oracle through a full RTP step.
+#[test]
+fn rtp_step_through_pallas_kernels_matches_oracle() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let cfg = presets::get("tiny").unwrap();
+    let batch = Batch::synth(&cfg, 4, &mut Rng::new(43));
+    let mut a = build_engine(
+        &EngineOpts::new("tiny", Strategy::RtpInplace, 4, 4).exec(ExecKind::Oracle),
+    )
+    .unwrap();
+    let mut b = build_engine(
+        &EngineOpts::new("tiny", Strategy::RtpInplace, 4, 4).exec(ExecKind::PjrtPallas),
+    )
+    .unwrap();
+    let la = a.step(&batch).unwrap();
+    let lb = b.step(&batch).unwrap();
+    assert!(
+        (la - lb).abs() < 1e-3 * la.abs().max(1.0),
+        "pallas loss {lb} vs oracle {la}"
+    );
+    b.gather_grads()
+        .allclose(&a.gather_grads(), 2e-3)
+        .unwrap_or_else(|e| panic!("pallas vs oracle grads: {e}"));
+}
+
+/// The e2e-small artifact set loads and one RTP step runs.
+#[test]
+fn e2e_small_pjrt_step_runs() {
+    if !have_artifacts("e2e-small") {
+        return;
+    }
+    let cfg = presets::get("e2e-small").unwrap();
+    let batch = Batch::synth(&cfg, 4, &mut Rng::new(44));
+    let mut e = build_engine(
+        &EngineOpts::new("e2e-small", Strategy::RtpInplace, 2, 4).exec(ExecKind::Pjrt),
+    )
+    .unwrap();
+    let loss = e.step(&batch).unwrap();
+    // untrained model: loss ≈ ln(vocab)
+    let expect = (cfg.vocab as f32).ln();
+    assert!(
+        (loss - expect).abs() < 1.0,
+        "initial loss {loss}, expected ≈ ln(V) = {expect}"
+    );
+}

@@ -1,0 +1,249 @@
+//! Property suites over the whole stack: rotation-schedule invariants on
+//! the real engine trace, collective algebra, flat-param round-trips,
+//! tracker accounting, and timeline consistency — randomized via the
+//! seeded prop harness (replay with PROP_SEED).
+
+use rtp::cluster::TraceEvent;
+use rtp::comm;
+use rtp::config::Strategy;
+use rtp::flat_param::FlatLayout;
+use rtp::memory::tracker::{MemCategory, MemTracker};
+use rtp::model::ops::{op_cost, Op};
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use rtp::perfmodel::{a100_nvlink, Timeline};
+use rtp::tensor::IntTensor;
+use rtp::util::prop;
+use rtp::util::rng::Rng;
+
+/// Run one traced virtual RTP step and return the trace events.
+fn traced_step(preset: &str, n: usize) -> Vec<TraceEvent> {
+    let opts = EngineOpts::new(preset, Strategy::RtpInplace, n, n)
+        .exec(ExecKind::Virtual)
+        .trace(true);
+    let cfg = opts.cfg().unwrap();
+    let mut e = build_engine(&opts).unwrap();
+    let b = Batch {
+        ids: IntTensor::zeros(&[n, cfg.seq]),
+        targets: IntTensor::zeros(&[n, cfg.seq]),
+    };
+    e.step(&b).unwrap();
+    std::mem::take(&mut e.ctx_mut().cluster.trace.events)
+}
+
+#[test]
+fn prop_every_worker_computes_every_shard_exactly_once_per_unit() {
+    prop::check("rtp coverage", 6, |rng| {
+        let n = [1, 2, 4][rng.below(3)];
+        let events = traced_step("tiny", n);
+        // group compute events by unit name
+        let mut units: std::collections::BTreeMap<String, Vec<(usize, usize)>> =
+            Default::default();
+        for ev in &events {
+            if let TraceEvent::Compute { worker, unit, shard, .. } = ev {
+                units.entry(unit.clone()).or_default().push((*worker, *shard));
+            }
+        }
+        if units.is_empty() {
+            return Err("no compute events traced".into());
+        }
+        for (unit, pairs) in units {
+            let mut seen = vec![vec![0usize; n]; n];
+            for (w, s) in pairs {
+                seen[w][s] += 1;
+            }
+            for w in 0..n {
+                for s in 0..n {
+                    if seen[w][s] != 1 {
+                        return Err(format!(
+                            "unit {unit} n={n}: worker {w} saw shard {s} {}×",
+                            seen[w][s]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rotation_count_is_per_unit_n_minus_1() {
+    prop::check("rtp rotation count", 6, |rng| {
+        let n = [1, 2, 4][rng.below(3)];
+        let events = traced_step("tiny", n);
+        let rotations = events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Rotate { .. }))
+            .count();
+        // units that rotate: emb, L× (attn + mlp), lmhead — each fwd+bwd
+        let cfg = rtp::config::presets::get("tiny").unwrap();
+        let units = 2 * (1 + 2 * cfg.layers + 1);
+        let expect = units * (n - 1);
+        if rotations != expect {
+            return Err(format!("n={n}: {rotations} rotations, expected {expect}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_collectives_algebra() {
+    prop::check("collective algebra", 80, |rng| {
+        let n = 1 + rng.below(6);
+        let len = n * (1 + rng.below(6));
+        let mut r = Rng::new(rng.next_u64());
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| r.normal() as f32).collect())
+            .collect();
+        // allreduce == allgather(reduce_scatter)
+        let mut ar = bufs.clone();
+        comm::allreduce_sum(&mut ar);
+        let rs = comm::reduce_scatter(&bufs);
+        let ag = comm::allgather(&rs);
+        prop::close(&ag, &ar[0], 1e-4)?;
+        // broadcast copies root everywhere
+        let mut bc = bufs.clone();
+        let root = rng.below(n);
+        comm::broadcast(&mut bc, root);
+        for b in &bc {
+            prop::close(b, &bufs[root], 0.0)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flat_param_roundtrip_any_layout() {
+    prop::check("flat roundtrip", 60, |rng| {
+        let n = 1 + rng.below(8);
+        let parts = 1 + rng.below(5);
+        let shapes: Vec<(String, Vec<usize>)> = (0..parts)
+            .map(|i| {
+                let dims = 1 + rng.below(3);
+                (
+                    format!("p{i}"),
+                    (0..dims).map(|_| 1 + rng.below(6)).collect(),
+                )
+            })
+            .collect();
+        let named: Vec<(&str, Vec<usize>)> =
+            shapes.iter().map(|(s, v)| (s.as_str(), v.clone())).collect();
+        let layout = FlatLayout::new(&named, n);
+        let mut r = Rng::new(rng.next_u64());
+        let tensors: Vec<rtp::tensor::HostTensor> = layout
+            .specs
+            .iter()
+            .map(|s| rtp::tensor::HostTensor::randn(&s.shape, 1.0, &mut r))
+            .collect();
+        let refs: Vec<&rtp::tensor::HostTensor> = tensors.iter().collect();
+        let flat = layout.pack(&refs);
+        if flat.len() % n != 0 {
+            return Err("padding not multiple of n".into());
+        }
+        // shard + gather + unpack is the identity
+        let back = layout.unpack(&comm::allgather(&layout.shards(&flat)));
+        for (a, b) in back.iter().zip(&tensors) {
+            if a != b {
+                return Err("roundtrip mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tracker_live_never_exceeds_peak_and_frees_balance() {
+    prop::check("tracker invariants", 100, |rng| {
+        let mut t = MemTracker::new(0, None);
+        let mut live_ids = Vec::new();
+        let mut expected_live = 0u64;
+        for _ in 0..rng.below(60) {
+            if live_ids.is_empty() || rng.below(3) < 2 {
+                let bytes = 1 + rng.below(1000) as u64;
+                let cat = MemCategory::ALL[rng.below(5)];
+                live_ids.push((t.alloc(cat, bytes).unwrap(), bytes));
+                expected_live += bytes;
+            } else {
+                let (id, bytes) = live_ids.swap_remove(rng.below(live_ids.len()));
+                t.free(id);
+                expected_live -= bytes;
+            }
+            if t.live() != expected_live {
+                return Err(format!("live {} != expected {expected_live}", t.live()));
+            }
+            if t.peak() < t.live() {
+                return Err("peak < live".into());
+            }
+            let cat_sum: u64 = MemCategory::ALL.iter().map(|&c| t.live_of(c)).sum();
+            if cat_sum != t.live() {
+                return Err("category sum != live".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_timeline_time_bounds() {
+    // total time >= max(compute_busy, comm_busy); overlap never yields
+    // time < either stream's busy total
+    prop::check("timeline bounds", 60, |rng| {
+        let mut tl = Timeline::new(a100_nvlink(), 8);
+        let cfg = rtp::config::presets::get("gpt2-117m").unwrap();
+        for _ in 0..1 + rng.below(20) {
+            match rng.below(3) {
+                0 => tl.compute("c", &op_cost(Op::MlpFwd, &cfg, 1 + rng.below(4), 1)),
+                1 => tl.comm_blocking(
+                    "b",
+                    comm::CommPrim::AllReduce,
+                    1 + rng.below(1 << 22) as u64,
+                ),
+                _ => {
+                    let tok = tl.comm_async(
+                        "a",
+                        comm::CommPrim::Rotation,
+                        1 + rng.below(1 << 22) as u64,
+                    );
+                    tl.compute("c2", &op_cost(Op::LnFwd, &cfg, 1, 1));
+                    tl.wait(tok);
+                }
+            }
+        }
+        tl.barrier();
+        let t = tl.time();
+        if t + 1e-12 < tl.compute_busy {
+            return Err(format!("time {t} < compute busy {}", tl.compute_busy));
+        }
+        if t + 1e-12 < tl.comm_busy {
+            return Err(format!("time {t} < comm busy {}", tl.comm_busy));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_peaks_scale_down_with_workers() {
+    // For batch-and-weight-sharding strategies, per-worker peak must be
+    // non-increasing in N (the paper's near-linear memory scalability).
+    prop::check("peak monotone in N", 4, |rng| {
+        let strategy =
+            [Strategy::RtpInplace, Strategy::RtpOutOfPlace, Strategy::Fsdp][rng.below(3)];
+        let peak = |n: usize| {
+            let opts = EngineOpts::new("gpt2-117m", strategy, n, 8)
+                .exec(ExecKind::Virtual);
+            let cfg = opts.cfg().unwrap();
+            let mut e = build_engine(&opts).unwrap();
+            let b = Batch {
+                ids: IntTensor::zeros(&[8, cfg.seq]),
+                targets: IntTensor::zeros(&[8, cfg.seq]),
+            };
+            e.step(&b).unwrap();
+            e.ctx().cluster.max_peak()
+        };
+        let (p2, p4, p8) = (peak(2), peak(4), peak(8));
+        if !(p8 < p4 && p4 < p2) {
+            return Err(format!("{strategy}: peaks not decreasing {p2} {p4} {p8}"));
+        }
+        Ok(())
+    });
+}
