@@ -39,10 +39,19 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+    // the ring fabric traces the hop schedule of every collective too:
+    // the replicated-grad allreduce at the end of the step appears as its
+    // full 2(N-1)-hop chunked ring schedule
+    let fabric_hops = trace.fabric_hops();
+    if n > 1 {
+        assert_eq!(fabric_hops, 2 * (n - 1), "collective hop schedule incomplete");
+    }
     println!(
-        "invariants hold: {} rotations, every worker met every shard exactly once, \
-         all shards home.",
-        trace.rotations()
+        "invariants hold: {} rotation hops + {} collective ring hops, every worker \
+         met every shard exactly once, all shards home, fabric drained ({} in flight).",
+        trace.rotations(),
+        fabric_hops,
+        engine.ctx().cluster.fabric().in_flight()
     );
     Ok(())
 }

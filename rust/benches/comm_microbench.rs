@@ -1,14 +1,17 @@
-//! Paper §3.4.2 — communication efficiency: the clockwise /
-//! counter-clockwise rotation executed (N-1) times must track one
-//! allgather of the same total bytes near-linearly once the message size
-//! leaves the latency regime (> 1 MB). Two measurements:
+//! Paper §3.4.2 — communication efficiency, now measured per hop on the
+//! rank-local ring fabric. Three measurements:
 //!
-//! 1. the α-β cost model (the NCCL substitute, both hardware presets);
-//! 2. REAL data movement through `comm::` on the host (our ring
-//!    implementation itself), timed with the mini-harness.
+//! 1. the α-β cost model (the NCCL substitute, both hardware presets):
+//!    (N-1)×rotation vs one allgather of the same total bytes;
+//! 2. one-shot closed-form collective cost vs the sum of its chunked
+//!    ring-hop schedule, across N ∈ {2,4,8,16} and message sizes — the
+//!    per-hop decomposition must reproduce the closed form exactly;
+//! 3. REAL data movement on the host: the god-view reference collectives
+//!    vs the chunked ring implementations stepping messages through the
+//!    fabric, timed with the mini-harness.
 
 use rtp::bench_util::{bench, Table};
-use rtp::comm::{self, LinkModel};
+use rtp::comm::{self, reference, CommPrim, LinkModel, RingFabric, RotationDir};
 use rtp::perfmodel::{a100_nvlink, v100_pcie};
 use rtp::util::rng::Rng;
 
@@ -35,44 +38,129 @@ fn model_table(link: &LinkModel) {
     t.write_csv(&format!("comm_microbench_{}", link.name)).unwrap();
 }
 
-fn main() {
-    model_table(&a100_nvlink().link);
-    model_table(&v100_pcie().link);
-
-    // real host-side data movement: our ring primitives
+/// One-shot closed-form cost vs the per-hop sum of the chunked ring
+/// schedule, per primitive, across worker counts and message sizes.
+fn hop_decomposition_table(link: &LinkModel) {
     let mut t = Table::new(
-        "real comm:: data movement (host, per call)",
-        &["elems/worker", "rotate_cw", "allgather", "allreduce", "reduce_scatter"],
+        &format!("one-shot vs chunked-ring per-hop cost, α-β model, {}", link.name),
+        &["prim", "N", "message", "one-shot", "per-hop sum", "hops", "ratio"],
+    );
+    for prim in [CommPrim::AllReduce, CommPrim::AllGather, CommPrim::ReduceScatter] {
+        for n in [2usize, 4, 8, 16] {
+            for m in [1u64 << 16, 1 << 20, 16 << 20] {
+                let closed = link.time(prim, m, n);
+                let hops = prim.hop_schedule(m, n);
+                let per_hop: f64 = hops.iter().map(|&b| link.hop_time_f(b)).sum();
+                t.row(vec![
+                    prim.to_string(),
+                    n.to_string(),
+                    rtp::util::bytes::human(m),
+                    format!("{:.1} µs", closed * 1e6),
+                    format!("{:.1} µs", per_hop * 1e6),
+                    hops.len().to_string(),
+                    format!("{:.6}", per_hop / closed),
+                ]);
+                assert!(
+                    (per_hop - closed).abs() / closed < 1e-9,
+                    "{prim} N={n} m={m}: per-hop {per_hop} != closed {closed}"
+                );
+            }
+        }
+    }
+    t.print();
+    t.write_csv(&format!("comm_microbench_hops_{}", link.name)).unwrap();
+}
+
+/// Host-side data movement: god-view reference vs ring fabric, per call.
+fn host_table() {
+    let mut t = Table::new(
+        "real data movement: god-view reference vs ring fabric (host, per call)",
+        &["N", "elems/worker", "op", "reference", "ring fabric"],
     );
     let mut rng = Rng::new(9);
-    for elems in [1 << 10, 1 << 14, 1 << 18, 1 << 21] {
-        let bufs: Vec<Vec<f32>> = (0..N)
-            .map(|_| (0..elems).map(|_| rng.normal() as f32).collect())
-            .collect();
-        let rot = bench(2, 10, || {
-            let mut b = bufs.clone();
-            comm::rotate_cw(&mut b);
-            std::hint::black_box(&b);
-        });
-        let ag = bench(2, 10, || {
-            std::hint::black_box(comm::allgather(&bufs));
-        });
-        let ar = bench(2, 10, || {
-            let mut b = bufs.clone();
-            comm::allreduce_sum(&mut b);
-            std::hint::black_box(&b);
-        });
-        let rs = bench(2, 10, || {
-            std::hint::black_box(comm::reduce_scatter(&bufs));
-        });
-        t.row(vec![
-            elems.to_string(),
-            format!("{:.1} µs", rot.median * 1e6),
-            format!("{:.1} µs", ag.median * 1e6),
-            format!("{:.1} µs", ar.median * 1e6),
-            format!("{:.1} µs", rs.median * 1e6),
-        ]);
+    for n in [2usize, 4, 8, 16] {
+        let fab = RingFabric::new(n);
+        let ports = fab.ports();
+        for elems in [1usize << 12, 1 << 16, 1 << 19] {
+            let len = (elems / n) * n; // divisible for reduce_scatter
+            let bufs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+                .collect();
+
+            let ref_ar = bench(2, 8, || {
+                let mut b = bufs.clone();
+                reference::allreduce_sum(&mut b);
+                std::hint::black_box(&b);
+            });
+            let ring_ar = bench(2, 8, || {
+                let mut b = bufs.clone();
+                comm::allreduce_sum(&ports, &mut b);
+                std::hint::black_box(&b);
+            });
+            t.row(vec![
+                n.to_string(),
+                len.to_string(),
+                "allreduce".into(),
+                format!("{:.1} µs", ref_ar.median * 1e6),
+                format!("{:.1} µs", ring_ar.median * 1e6),
+            ]);
+
+            let ref_ag = bench(2, 8, || {
+                std::hint::black_box(reference::allgather(&bufs));
+            });
+            let ring_ag = bench(2, 8, || {
+                std::hint::black_box(comm::allgather(&ports, &bufs));
+            });
+            t.row(vec![
+                n.to_string(),
+                len.to_string(),
+                "allgather".into(),
+                format!("{:.1} µs", ref_ag.median * 1e6),
+                format!("{:.1} µs", ring_ag.median * 1e6),
+            ]);
+
+            let ref_rs = bench(2, 8, || {
+                std::hint::black_box(reference::reduce_scatter(&bufs));
+            });
+            let ring_rs = bench(2, 8, || {
+                std::hint::black_box(comm::reduce_scatter(&ports, &bufs));
+            });
+            t.row(vec![
+                n.to_string(),
+                len.to_string(),
+                "reduce-scatter".into(),
+                format!("{:.1} µs", ref_rs.median * 1e6),
+                format!("{:.1} µs", ring_rs.median * 1e6),
+            ]);
+
+            let ref_rot = bench(2, 8, || {
+                let mut b = bufs.clone();
+                reference::rotate_cw(&mut b);
+                std::hint::black_box(&b);
+            });
+            let ring_rot = bench(2, 8, || {
+                let mut b = bufs.clone();
+                comm::rotate_ring(&ports, &mut b, RotationDir::Clockwise);
+                std::hint::black_box(&b);
+            });
+            t.row(vec![
+                n.to_string(),
+                len.to_string(),
+                "rotate".into(),
+                format!("{:.1} µs", ref_rot.median * 1e6),
+                format!("{:.1} µs", ring_rot.median * 1e6),
+            ]);
+        }
+        assert_eq!(fab.in_flight(), 0, "bench left fabric messages in flight");
     }
     t.print();
     t.write_csv("comm_microbench_host").unwrap();
+}
+
+fn main() {
+    model_table(&a100_nvlink().link);
+    model_table(&v100_pcie().link);
+    hop_decomposition_table(&a100_nvlink().link);
+    hop_decomposition_table(&v100_pcie().link);
+    host_table();
 }

@@ -3,6 +3,11 @@
 //! GPT2 (117M) layer stack at N=4. Shows FSDP's blocking first allgather,
 //! in-place RTP's serialized rotations, and out-of-place RTP's
 //! comm-hidden-under-compute (the "expedited startup time", §3.4.3).
+//!
+//! Since the ring-fabric refactor every comm span is ONE RING HOP: an
+//! FSDP allgather renders as its N-1 chunk hops and the footer reports
+//! the step's total hop count, so the charts show the real hop schedule
+//! rather than opaque per-collective blocks.
 
 use rtp::config::Strategy;
 use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
@@ -12,7 +17,7 @@ use rtp::tensor::IntTensor;
 const N: usize = 4;
 const PRESET: &str = "gpt2-117m";
 
-fn gantt(strategy: Strategy) -> (String, f64) {
+fn gantt(strategy: Strategy) -> (String, f64, u64) {
     let opts = EngineOpts::new(PRESET, strategy, N, N)
         .exec(ExecKind::Virtual)
         .hardware(a100_nvlink());
@@ -28,7 +33,7 @@ fn gantt(strategy: Strategy) -> (String, f64) {
     };
     e.step(&b).unwrap();
     let tl = e.ctx().timeline.as_ref().unwrap();
-    (tl.render_gantt(100), tl.time())
+    (tl.render_gantt(100), tl.time(), tl.hop_count)
 }
 
 fn main() {
@@ -38,9 +43,11 @@ fn main() {
         ("Fig 4 — RTP in-place", Strategy::RtpInplace),
         ("Fig 5 — RTP out-of-place", Strategy::RtpOutOfPlace),
     ] {
-        let (g, t) = gantt(strategy);
+        let (g, t, hops) = gantt(strategy);
         println!("== {fig} ({PRESET}, N={N}, local batch 1) ==");
         println!("{g}");
+        println!("ring hops this step: {hops}");
+        println!();
         times.push((fig, t));
     }
     println!("step latencies: ");

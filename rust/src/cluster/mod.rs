@@ -2,13 +2,17 @@
 //! (DESIGN.md §2).
 //!
 //! A `Cluster` is N `Worker`s joined in a ring. Each worker owns a
-//! `MemTracker` (its device memory) so every engine allocation is
-//! accounted per-device exactly as `torch.cuda.max_memory_allocated` would
-//! have recorded it. The cluster also keeps an event trace that the
-//! rotation-trace example and the overlap figures render.
+//! `MemTracker` (its device memory) and a `RingPort` — its rank-local
+//! endpoint on the shared [`RingFabric`] interconnect — so every engine
+//! allocation is accounted per-device exactly as
+//! `torch.cuda.max_memory_allocated` would have recorded it, and every
+//! inter-worker transfer is a neighbor hop through the worker's own port.
+//! The cluster also keeps an event trace that the rotation-trace example
+//! and the overlap figures render.
 
 pub mod trace;
 
+use crate::comm::{RingFabric, RingPort};
 use crate::memory::tracker::MemTracker;
 
 pub use trace::{TraceEvent, TraceLog};
@@ -18,6 +22,8 @@ pub use trace::{TraceEvent, TraceLog};
 pub struct Worker {
     pub rank: usize,
     pub tracker: MemTracker,
+    /// This worker's mailbox endpoint on the ring fabric.
+    pub port: RingPort,
 }
 
 /// N workers on a ring.
@@ -25,6 +31,10 @@ pub struct Worker {
 pub struct Cluster {
     pub workers: Vec<Worker>,
     pub trace: TraceLog,
+    fabric: RingFabric,
+    /// Rank-ordered port set, built once (the rotation loops ask for it
+    /// every hop).
+    ports: Vec<RingPort>,
 }
 
 impl Cluster {
@@ -32,16 +42,34 @@ impl Cluster {
     /// analysis mode).
     pub fn new(n: usize, capacity: Option<u64>) -> Self {
         assert!(n >= 1, "cluster needs at least one worker");
+        let fabric = RingFabric::new(n);
         Cluster {
             workers: (0..n)
-                .map(|rank| Worker { rank, tracker: MemTracker::new(rank, capacity) })
+                .map(|rank| Worker {
+                    rank,
+                    tracker: MemTracker::new(rank, capacity),
+                    port: fabric.port(rank),
+                })
                 .collect(),
             trace: TraceLog::default(),
+            ports: fabric.ports(),
+            fabric,
         }
     }
 
     pub fn n(&self) -> usize {
         self.workers.len()
+    }
+
+    /// The shared ring interconnect (hop/message accounting lives here).
+    pub fn fabric(&self) -> &RingFabric {
+        &self.fabric
+    }
+
+    /// Every worker's fabric port, in rank order — what the SPMD
+    /// collective drivers in [`crate::comm`] consume.
+    pub fn ports(&self) -> &[RingPort] {
+        &self.ports
     }
 
     /// Next rank clockwise (the rank `w` sends to in a cw rotation).
@@ -119,5 +147,16 @@ mod tests {
     #[should_panic(expected = "at least one worker")]
     fn zero_workers_rejected() {
         Cluster::new(0, None);
+    }
+
+    #[test]
+    fn workers_share_one_fabric() {
+        let c = Cluster::new(3, None);
+        // worker 0 sends through ITS port; worker 1 receives through its own
+        c.workers[0].port.send(1, 42usize);
+        assert_eq!(c.fabric().in_flight(), 1);
+        assert_eq!(c.workers[1].port.recv::<usize>(0), 42);
+        assert_eq!(c.fabric().in_flight(), 0);
+        assert_eq!(c.ports().len(), 3);
     }
 }

@@ -17,6 +17,10 @@ pub enum TraceEvent {
     Collective { prim: CommPrim, bytes: u64, note: String },
     /// One rotation step (all workers exchange simultaneously).
     Rotate { dir: &'static str, bytes_per_worker: u64, step: usize },
+    /// One ring-fabric hop of a collective: hop `hop` of `of`, every rank
+    /// moving `bytes_per_rank` to its clockwise neighbor. A chunked ring
+    /// allreduce shows up as its full 2(N-1)-hop schedule.
+    Hop { prim: CommPrim, hop: usize, of: usize, bytes_per_rank: u64 },
     /// Phase marker (forward / backward / optimizer).
     Phase { name: String },
 }
@@ -32,6 +36,9 @@ impl fmt::Display for TraceEvent {
             }
             TraceEvent::Rotate { dir, bytes_per_worker, step } => {
                 write!(f, "  rotate-{dir} {bytes_per_worker}B/worker (step {step})")
+            }
+            TraceEvent::Hop { prim, hop, of, bytes_per_rank } => {
+                write!(f, "  {prim} hop {}/{of} {bytes_per_rank}B/rank", hop + 1)
             }
             TraceEvent::Phase { name } => write!(f, "== {name} =="),
         }
@@ -84,6 +91,15 @@ impl TraceLog {
             .count()
     }
 
+    /// Ring-fabric hops traced for the chunked collectives (rotation hops
+    /// are counted separately by [`TraceLog::rotations`]).
+    pub fn fabric_hops(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Hop { .. }))
+            .count()
+    }
+
     pub fn render(&self) -> String {
         let mut s = String::new();
         for e in &self.events {
@@ -127,5 +143,23 @@ mod tests {
         let text = log.render();
         assert!(text.contains("== forward =="));
         assert!(text.contains("rotate-cw"));
+    }
+
+    #[test]
+    fn hop_events_render_and_count() {
+        let mut log = TraceLog::enabled();
+        for h in 0..3 {
+            log.push(TraceEvent::Hop {
+                prim: CommPrim::AllReduce,
+                hop: h,
+                of: 3,
+                bytes_per_rank: 128,
+            });
+        }
+        assert_eq!(log.fabric_hops(), 3);
+        assert_eq!(log.rotations(), 0);
+        let text = log.render();
+        assert!(text.contains("allreduce hop 1/3 128B/rank"));
+        assert!(text.contains("allreduce hop 3/3"));
     }
 }

@@ -19,6 +19,13 @@
 //! The §3.4.2 claim — rotation executed (N-1) times costs the same as one
 //! allgather of the full buffer — falls straight out of these formulas and
 //! is checked by `comm_microbench`.
+//!
+//! Since the ring-fabric refactor the model is charged PER HOP, not per
+//! collective: [`CommPrim::hop_schedule`] decomposes each primitive into
+//! its ring-hop message sizes (matching the chunked implementations in
+//! [`crate::comm`]), each hop costs `α + hop_bytes·β`
+//! ([`LinkModel::hop_time_f`]), and the closed forms above are exactly the
+//! per-hop sums — asserted by `hop_schedule_sums_to_closed_form` below.
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CommPrim {
@@ -29,6 +36,53 @@ pub enum CommPrim {
     AllReduce,
     Broadcast,
     AllToAll,
+}
+
+impl CommPrim {
+    /// The ring-hop decomposition of this primitive for a full message of
+    /// `bytes` across `n` ranks: one entry per hop, holding the bytes each
+    /// rank moves to its neighbor on that hop (fractional so the per-hop
+    /// sum reproduces the closed-form α-β cost exactly).
+    ///
+    /// - `SendRecv` / `Rotation`: 1 hop of the whole shard
+    /// - `AllGather` / `ReduceScatter` / `AllToAll`: N-1 hops of M/N
+    /// - `AllReduce`: 2(N-1) hops of M/N (reduce-scatter + all-gather)
+    /// - `Broadcast`: N-1 stages of M/(N-1) — the bottleneck LINK's
+    ///   schedule; the pipeline keeps several links busy per stage, so
+    ///   wall-clock is one link's serialized traffic (`comm::broadcast`
+    ///   implements exactly this chunk stream)
+    pub fn hop_schedule(&self, bytes: u64, n: usize) -> Vec<f64> {
+        let m = bytes as f64;
+        match self {
+            CommPrim::SendRecv | CommPrim::Rotation => vec![m],
+            CommPrim::AllGather | CommPrim::ReduceScatter | CommPrim::AllToAll => {
+                if n <= 1 {
+                    Vec::new()
+                } else {
+                    vec![m / n as f64; n - 1]
+                }
+            }
+            CommPrim::AllReduce => {
+                if n <= 1 {
+                    Vec::new()
+                } else {
+                    vec![m / n as f64; 2 * (n - 1)]
+                }
+            }
+            CommPrim::Broadcast => {
+                if n <= 1 {
+                    Vec::new()
+                } else {
+                    vec![m / (n - 1) as f64; n - 1]
+                }
+            }
+        }
+    }
+
+    /// Number of ring hops this primitive takes across `n` ranks.
+    pub fn hop_count(&self, n: usize) -> usize {
+        self.hop_schedule(0, n).len()
+    }
 }
 
 impl std::fmt::Display for CommPrim {
@@ -66,6 +120,12 @@ impl LinkModel {
     /// full-duplex links, as NVLink/PCIe are).
     pub fn sendrecv(&self, bytes: u64) -> f64 {
         self.alpha + bytes as f64 * self.beta
+    }
+
+    /// One ring hop moving a (possibly fractional) `bytes` payload — the
+    /// unit the per-hop timeline charges.
+    pub fn hop_time_f(&self, bytes: f64) -> f64 {
+        self.alpha + bytes * self.beta
     }
 
     /// One rotation step moves one shard per worker simultaneously; on a
@@ -181,5 +241,43 @@ mod tests {
         assert_eq!(l.time(CommPrim::AllGather, m, 4), l.allgather(m, 4));
         assert_eq!(l.time(CommPrim::Rotation, m, 4), l.rotation_step(m));
         assert_eq!(l.time(CommPrim::Broadcast, m, 4), l.broadcast(m, 4));
+    }
+
+    #[test]
+    fn hop_schedule_sums_to_closed_form() {
+        // the per-hop decomposition must reproduce the closed-form α-β
+        // costs: allreduce = 2(N-1) hops of M/N, etc.
+        let l = link();
+        let prims = [
+            CommPrim::SendRecv,
+            CommPrim::Rotation,
+            CommPrim::AllGather,
+            CommPrim::ReduceScatter,
+            CommPrim::AllReduce,
+            CommPrim::Broadcast,
+            CommPrim::AllToAll,
+        ];
+        for n in [1usize, 2, 3, 4, 8, 16] {
+            for m in [0u64, 1 << 10, 3 << 20, 64 << 20] {
+                for prim in prims {
+                    let hops = prim.hop_schedule(m, n);
+                    let sum: f64 = hops.iter().map(|&b| l.hop_time_f(b)).sum();
+                    let closed = l.time(prim, m, n);
+                    let err = (sum - closed).abs() / closed.max(1e-30);
+                    assert!(
+                        err < 1e-9,
+                        "{prim} n={n} m={m}: per-hop {sum} vs closed {closed}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_hop_count_is_2n_minus_2() {
+        assert_eq!(CommPrim::AllReduce.hop_count(8), 14);
+        assert_eq!(CommPrim::AllGather.hop_count(8), 7);
+        assert_eq!(CommPrim::Rotation.hop_count(8), 1);
+        assert_eq!(CommPrim::AllReduce.hop_count(1), 0);
     }
 }

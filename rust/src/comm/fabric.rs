@@ -1,0 +1,289 @@
+//! The rank-local ring fabric: per-rank `RingPort` endpoints over
+//! per-worker mailboxes.
+//!
+//! This is the substrate the paper's §3.3 rotation primitive and §3.4.3
+//! overlap analysis actually live on: communication happens one ring hop
+//! at a time, and every transfer is something a single rank does —
+//! `port.send(peer, msg)` / `port.recv(peer)` — never a god-view mutation
+//! of all ranks' buffers at once. The chunked ring collectives in
+//! [`crate::comm`] and the engines' rotation loops are built exclusively
+//! from these two calls, so the hop structure (who moves what, when) is
+//! explicit in every schedule the engines produce.
+//!
+//! Topology rules:
+//! - The fabric is a ring: a rank may only address its clockwise neighbor
+//!   (`next`) or its counter-clockwise neighbor (`prev`). Any other peer
+//!   panics — multi-hop transfers must be written as relays, which is
+//!   exactly what keeps the per-hop cost model honest.
+//! - Each directed link is a FIFO mailbox owned by the *receiving* worker.
+//!   A hop is "everyone sends, then everyone receives"; the mailbox slot is
+//!   the in-flight double buffer of the out-of-place rotation.
+//! - `recv` on an empty mailbox panics: in the single-process SPMD
+//!   simulation that is a protocol bug (the distributed equivalent would
+//!   deadlock), so it should fail loudly.
+//!
+//! Payloads are type-erased (`Box<dyn Any>`): the same fabric carries
+//! `Vec<f32>` collective chunks, whole shard structs during RTP rotation,
+//! and bare shard ids in virtual mode — the schedule is identical whether
+//! or not real data rides along (the repo's real/virtual design invariant).
+//!
+//! Handles are `Rc<RefCell<..>>` clones: the simulation is single-threaded
+//! by design (ranks are stepped in program order), and the interior
+//! mutability is what lets a rank send from `&self` contexts such as
+//! `Engine::gather_params`. Putting ranks on real threads means swapping
+//! this inner cell for channels — the port API is already shaped for it.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::fmt;
+use std::rc::Rc;
+
+/// One directed-link mailbox: FIFO of in-flight messages.
+type Mailbox = VecDeque<Box<dyn Any>>;
+
+struct FabricInner {
+    n: usize,
+    /// `mailboxes[dst][src]`: messages sent by `src`, awaiting `dst`.
+    /// Only the two neighbor columns of each row are ever used.
+    mailboxes: Vec<Vec<Mailbox>>,
+    /// Messages handed to the fabric since construction.
+    sent: u64,
+    /// Messages delivered to their destination rank.
+    delivered: u64,
+}
+
+/// The shared ring interconnect of one worker set. Create one per
+/// [`crate::cluster::Cluster`]; hand each rank its [`RingPort`].
+#[derive(Clone)]
+pub struct RingFabric {
+    inner: Rc<RefCell<FabricInner>>,
+}
+
+impl RingFabric {
+    pub fn new(n: usize) -> RingFabric {
+        assert!(n >= 1, "ring fabric needs at least one rank");
+        RingFabric {
+            inner: Rc::new(RefCell::new(FabricInner {
+                n,
+                mailboxes: (0..n)
+                    .map(|_| (0..n).map(|_| VecDeque::new()).collect())
+                    .collect(),
+                sent: 0,
+                delivered: 0,
+            })),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.inner.borrow().n
+    }
+
+    /// Rank `rank`'s endpoint. Ports are cheap handle clones; a rank may
+    /// hold any number of clones of its own port.
+    pub fn port(&self, rank: usize) -> RingPort {
+        let n = self.n();
+        assert!(rank < n, "rank {rank} out of range for {n}-rank fabric");
+        RingPort { rank, n, inner: Rc::clone(&self.inner) }
+    }
+
+    /// One port per rank, in rank order — the SPMD driver's view.
+    pub fn ports(&self) -> Vec<RingPort> {
+        (0..self.n()).map(|r| self.port(r)).collect()
+    }
+
+    /// Total messages handed to the fabric so far.
+    pub fn messages_sent(&self) -> u64 {
+        self.inner.borrow().sent
+    }
+
+    /// Total messages delivered to their destination rank so far.
+    pub fn messages_delivered(&self) -> u64 {
+        self.inner.borrow().delivered
+    }
+
+    /// Messages currently sitting in mailboxes. A completed collective or
+    /// rotation schedule must leave this at 0 — the engines assert it at
+    /// every step boundary.
+    pub fn in_flight(&self) -> usize {
+        (self.messages_sent() - self.messages_delivered()) as usize
+    }
+}
+
+impl fmt::Debug for RingFabric {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "RingFabric {{ n: {}, in_flight: {} }}",
+            self.n(),
+            self.in_flight()
+        )
+    }
+}
+
+/// Rank `rank`'s endpoint on the ring fabric. All engine communication
+/// goes through `send`/`recv` on these.
+#[derive(Clone)]
+pub struct RingPort {
+    rank: usize,
+    n: usize,
+    inner: Rc<RefCell<FabricInner>>,
+}
+
+impl RingPort {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Clockwise neighbor (the rank this port sends to in a cw rotation).
+    pub fn next(&self) -> usize {
+        (self.rank + 1) % self.n
+    }
+
+    /// Counter-clockwise neighbor (the rank a cw rotation receives from).
+    pub fn prev(&self) -> usize {
+        (self.rank + self.n - 1) % self.n
+    }
+
+    fn assert_neighbor(&self, peer: usize) {
+        assert!(
+            peer == self.next() || peer == self.prev(),
+            "rank {} cannot address rank {peer}: the ring fabric only links \
+             neighbors ({} and {})",
+            self.rank,
+            self.prev(),
+            self.next()
+        );
+    }
+
+    /// Enqueue `msg` on the directed link to neighbor `peer`. One ring hop
+    /// is "every rank sends, then every rank receives".
+    pub fn send<T: Any>(&self, peer: usize, msg: T) {
+        self.assert_neighbor(peer);
+        let mut inner = self.inner.borrow_mut();
+        inner.mailboxes[peer][self.rank].push_back(Box::new(msg));
+        inner.sent += 1;
+    }
+
+    /// Dequeue the oldest message neighbor `peer` sent to this rank.
+    /// Panics if the mailbox is empty (protocol bug — the distributed
+    /// equivalent would deadlock) or if the payload type does not match.
+    pub fn recv<T: Any>(&self, peer: usize) -> T {
+        self.assert_neighbor(peer);
+        let mut inner = self.inner.borrow_mut();
+        let msg = inner.mailboxes[self.rank][peer].pop_front().unwrap_or_else(|| {
+            panic!(
+                "rank {} recv from {peer}: mailbox empty (ring protocol bug)",
+                self.rank
+            )
+        });
+        inner.delivered += 1;
+        drop(inner);
+        *msg.downcast::<T>().unwrap_or_else(|_| {
+            panic!(
+                "rank {} recv from {peer}: payload type mismatch (expected {})",
+                self.rank,
+                std::any::type_name::<T>()
+            )
+        })
+    }
+
+    /// Messages waiting in this rank's mailbox from neighbor `peer`.
+    pub fn pending_from(&self, peer: usize) -> usize {
+        self.assert_neighbor(peer);
+        self.inner.borrow().mailboxes[self.rank][peer].len()
+    }
+}
+
+impl fmt::Debug for RingPort {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "RingPort(rank {}/{})", self.rank, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_then_recv_roundtrips() {
+        let fab = RingFabric::new(4);
+        let ports = fab.ports();
+        ports[0].send(1, vec![1.0f32, 2.0]);
+        assert_eq!(fab.in_flight(), 1);
+        assert_eq!(ports[1].pending_from(0), 1);
+        let got: Vec<f32> = ports[1].recv(0);
+        assert_eq!(got, vec![1.0, 2.0]);
+        assert_eq!(fab.in_flight(), 0);
+        assert_eq!(fab.messages_sent(), 1);
+        assert_eq!(fab.messages_delivered(), 1);
+    }
+
+    #[test]
+    fn links_are_fifo() {
+        let fab = RingFabric::new(2);
+        let ports = fab.ports();
+        ports[0].send(1, 10usize);
+        ports[0].send(1, 20usize);
+        assert_eq!(ports[1].recv::<usize>(0), 10);
+        assert_eq!(ports[1].recv::<usize>(0), 20);
+    }
+
+    #[test]
+    fn both_directions_are_independent_links() {
+        let fab = RingFabric::new(3);
+        let ports = fab.ports();
+        // rank 1 receives from both neighbors without crosstalk
+        ports[0].send(1, 100usize);
+        ports[2].send(1, 200usize);
+        assert_eq!(ports[1].recv::<usize>(2), 200);
+        assert_eq!(ports[1].recv::<usize>(0), 100);
+    }
+
+    #[test]
+    fn neighbors_wrap_around_the_ring() {
+        let fab = RingFabric::new(4);
+        let p3 = fab.port(3);
+        assert_eq!(p3.next(), 0);
+        assert_eq!(p3.prev(), 2);
+        p3.send(0, 7usize);
+        assert_eq!(fab.port(0).recv::<usize>(3), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "only links neighbors")]
+    fn non_neighbor_send_rejected() {
+        let fab = RingFabric::new(4);
+        fab.port(0).send(2, 1usize);
+    }
+
+    #[test]
+    #[should_panic(expected = "mailbox empty")]
+    fn recv_on_empty_mailbox_panics() {
+        let fab = RingFabric::new(2);
+        fab.port(0).recv::<usize>(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "payload type mismatch")]
+    fn recv_wrong_type_panics() {
+        let fab = RingFabric::new(2);
+        let ports = fab.ports();
+        ports[0].send(1, 1.0f32);
+        let _: usize = ports[1].recv(0);
+    }
+
+    #[test]
+    fn single_rank_ring_links_to_itself() {
+        let fab = RingFabric::new(1);
+        let p = fab.port(0);
+        assert_eq!(p.next(), 0);
+        assert_eq!(p.prev(), 0);
+        p.send(0, 5usize);
+        assert_eq!(p.recv::<usize>(0), 5);
+    }
+}

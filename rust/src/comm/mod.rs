@@ -1,109 +1,309 @@
-//! Communication layer: ring rotation primitives (the paper's §3.3
-//! contribution) plus the standard collectives the baselines use, and the
-//! α-β cost model that prices all of them for the perf figures.
+//! Communication layer: the rank-local ring fabric, the chunked ring
+//! collectives built on it, the paper's rotation schedule (§3.3), and the
+//! α-β cost model that prices everything per hop.
 //!
-//! Real-mode collectives operate on per-worker buffers (`&mut [Vec<f32>]`,
-//! index = rank) and move actual data, replacing NCCL on the simulated
-//! ring. Virtual-mode engines skip the data movement and only charge the
-//! cost model — the *schedule* (who communicates what, when) is identical
-//! because both modes run the same engine code.
+//! Architecture (this is the substrate of the paper's two contributions):
+//!
+//! - [`fabric`] — `RingFabric` / `RingPort`: per-rank endpoints over
+//!   per-worker mailboxes. A rank can only talk to its ring neighbors, one
+//!   hop at a time; every engine transfer goes through `port.send` /
+//!   `port.recv`.
+//! - this module — the collectives, decomposed into their ring-hop
+//!   schedules: all-reduce is reduce-scatter + all-gather in `2(N-1)`
+//!   hops of `M/N` bytes; all-gather / reduce-scatter are `N-1` hops;
+//!   rotation ([`rotate_ring`]) is ONE hop of the full shard — the §3.4.2
+//!   identity "(N-1) rotations ≡ one allgather" is now structural, not a
+//!   formula.
+//! - [`rotation`] — the schedule math (`RotationDir`, `shard_at`): which
+//!   shard sits on which rank after `t` hops.
+//! - [`cost`] — the α-β model. `CommPrim::hop_schedule` exposes each
+//!   collective's per-hop message sizes; `perfmodel::Timeline` charges hop
+//!   by hop, so overlap renders show the real hop schedule.
+//! - [`reference`] — the seed's god-view one-shot collectives, kept ONLY
+//!   as test oracles for the ring implementations. Engines must not touch
+//!   them.
+//!
+//! Real-mode collectives move actual data through the fabric (replacing
+//! NCCL on the simulated ring); virtual-mode engines skip the data and
+//! only charge the cost model — the *schedule* is identical because both
+//! modes run the same engine code.
+//!
+//! All collectives here take the full rank set's ports (symmetric SPMD:
+//! the single-process simulation steps every rank through the same
+//! schedule in program order). Each function documents its hop count; a
+//! completed collective always leaves the fabric drained.
 
 pub mod cost;
+pub mod fabric;
+pub mod reference;
 pub mod rotation;
 
-pub use cost::{CommPrim, LinkModel};
-pub use rotation::{rotate_ccw, rotate_cw, RotationDir};
+use std::any::Any;
 
-/// Ring all-reduce (sum): every worker ends with the elementwise sum of all
-/// inputs. DDP's gradient reduction; also used for the replicated-parameter
-/// grads in every multi-worker engine.
-pub fn allreduce_sum(bufs: &mut [Vec<f32>]) {
+pub use cost::{CommPrim, LinkModel};
+pub use fabric::{RingFabric, RingPort};
+pub use rotation::{shard_at, RotationDir};
+
+/// Split `len` elements into `n` contiguous chunks whose sizes differ by
+/// at most one (the first `len % n` chunks are one longer). Returns
+/// `(start, end)` bounds; chunks may be empty when `len < n`.
+fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = len / n;
+    let rem = len % n;
+    let mut bounds = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let size = base + usize::from(i < rem);
+        bounds.push((start, start + size));
+        start += size;
+    }
+    bounds
+}
+
+/// Ring all-reduce (sum) in `2(N-1)` hops: a reduce-scatter pass (each
+/// rank ends owning the fully-reduced chunk matching its rank) followed by
+/// an all-gather pass. Every hop moves ~`len/N` elements per rank to its
+/// clockwise neighbor. DDP's gradient reduction; also the replicated-grad
+/// reduction in every multi-worker engine.
+///
+/// Works for any buffer length (chunks may be uneven or empty).
+pub fn allreduce_sum(ports: &[RingPort], bufs: &mut [Vec<f32>]) {
     let n = bufs.len();
     if n <= 1 {
         return;
     }
+    assert_eq!(ports.len(), n, "allreduce port/buffer arity");
     let len = bufs[0].len();
     assert!(
         bufs.iter().all(|b| b.len() == len),
         "allreduce buffers must be same-length"
     );
-    let mut acc = vec![0.0f32; len];
-    for b in bufs.iter() {
-        for (a, v) in acc.iter_mut().zip(b) {
-            *a += v;
+    let ch = chunk_bounds(len, n);
+
+    // reduce-scatter pass: after hop s, chunk (w - s - 1) mod n on rank w
+    // has accumulated s + 2 contributions; after n-1 hops rank w owns the
+    // complete chunk w.
+    for s in 0..n - 1 {
+        for (w, port) in ports.iter().enumerate() {
+            let (a, b) = ch[(w + n - s - 1) % n];
+            port.send(port.next(), bufs[w][a..b].to_vec());
+        }
+        for (w, port) in ports.iter().enumerate() {
+            let (a, b) = ch[(w + 2 * n - s - 2) % n];
+            let msg: Vec<f32> = port.recv(port.prev());
+            for (dst, v) in bufs[w][a..b].iter_mut().zip(&msg) {
+                *dst += v;
+            }
         }
     }
-    for b in bufs.iter_mut() {
-        b.copy_from_slice(&acc);
+    // all-gather pass: complete chunks circulate until every rank has all.
+    for s in 0..n - 1 {
+        for (w, port) in ports.iter().enumerate() {
+            let (a, b) = ch[(w + n - s) % n];
+            port.send(port.next(), bufs[w][a..b].to_vec());
+        }
+        for (w, port) in ports.iter().enumerate() {
+            let (a, b) = ch[(w + 2 * n - s - 1) % n];
+            let msg: Vec<f32> = port.recv(port.prev());
+            bufs[w][a..b].copy_from_slice(&msg);
+        }
     }
 }
 
-/// Ring all-gather: each worker contributes its shard; every worker ends
-/// with the concatenation `[shard_0 | shard_1 | ... | shard_{N-1}]`.
-/// FSDP's parameter reconstruction.
-pub fn allgather(shards: &[Vec<f32>]) -> Vec<f32> {
-    let mut full = Vec::with_capacity(shards.iter().map(|s| s.len()).sum());
-    for s in shards {
-        full.extend_from_slice(s);
+/// Ring all-gather in `N-1` hops, returning each rank's view of all N
+/// shard payloads (unconcatenated, in rank order). Shards may have
+/// different lengths. This is the primitive; [`allgather`] concatenates.
+pub fn allgather_parts(ports: &[RingPort], shards: &[Vec<f32>]) -> Vec<Vec<Vec<f32>>> {
+    let n = shards.len();
+    if n == 0 {
+        return Vec::new();
     }
-    full
+    assert_eq!(ports.len(), n, "allgather port/shard arity");
+    if n == 1 {
+        return vec![vec![shards[0].clone()]];
+    }
+    // hold[w][c] = shard c's payload once it has reached rank w
+    let mut hold: Vec<Vec<Option<Vec<f32>>>> = (0..n)
+        .map(|w| {
+            (0..n)
+                .map(|c| if c == w { Some(shards[w].clone()) } else { None })
+                .collect()
+        })
+        .collect();
+    for s in 0..n - 1 {
+        for (w, port) in ports.iter().enumerate() {
+            let c = (w + n - s) % n;
+            let payload = hold[w][c].clone().expect("allgather schedule hole");
+            port.send(port.next(), payload);
+        }
+        for (w, port) in ports.iter().enumerate() {
+            let c = (w + 2 * n - s - 1) % n;
+            hold[w][c] = Some(port.recv(port.prev()));
+        }
+    }
+    hold.into_iter()
+        .map(|row| row.into_iter().map(|o| o.expect("allgather incomplete")).collect())
+        .collect()
 }
 
-/// Ring reduce-scatter (sum): input is one full-length buffer per worker;
-/// worker `w` ends with the sum of everyone's shard `w`. FSDP's gradient
-/// reduction. Returns one shard per worker; all inputs must be equal length
-/// and divisible by N.
-pub fn reduce_scatter(fulls: &[Vec<f32>]) -> Vec<Vec<f32>> {
+/// Ring all-gather in `N-1` hops: every rank ends with the concatenation
+/// `[shard_0 | shard_1 | ... | shard_{N-1}]`. FSDP's parameter
+/// reconstruction. Returns one full buffer per rank (all equal).
+pub fn allgather(ports: &[RingPort], shards: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    allgather_parts(ports, shards)
+        .into_iter()
+        .map(|parts| {
+            let mut full = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+            for p in parts {
+                full.extend_from_slice(&p);
+            }
+            full
+        })
+        .collect()
+}
+
+/// Ring reduce-scatter (sum) in `N-1` hops: input is one full-length
+/// buffer per rank; rank `w` ends with the sum of everyone's shard `w`.
+/// FSDP's gradient reduction. All inputs must be equal length and
+/// divisible by N. Empty input returns empty (the seed panicked here).
+pub fn reduce_scatter(ports: &[RingPort], fulls: &[Vec<f32>]) -> Vec<Vec<f32>> {
     let n = fulls.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    assert_eq!(ports.len(), n, "reduce_scatter port/buffer arity");
     let len = fulls[0].len();
     assert!(
         fulls.iter().all(|f| f.len() == len),
         "reduce_scatter buffers must be same-length"
     );
     assert_eq!(len % n, 0, "reduce_scatter length {len} not divisible by {n}");
+    if n == 1 {
+        return vec![fulls[0].clone()];
+    }
     let shard = len / n;
-    (0..n)
-        .map(|w| {
-            let mut out = vec![0.0f32; shard];
-            for f in fulls {
-                for (o, v) in out.iter_mut().zip(&f[w * shard..(w + 1) * shard]) {
-                    *o += v;
-                }
+    let mut acc: Vec<Vec<f32>> = fulls.to_vec();
+    for s in 0..n - 1 {
+        for (w, port) in ports.iter().enumerate() {
+            let c = (w + n - s - 1) % n;
+            port.send(port.next(), acc[w][c * shard..(c + 1) * shard].to_vec());
+        }
+        for (w, port) in ports.iter().enumerate() {
+            let c = (w + 2 * n - s - 2) % n;
+            let msg: Vec<f32> = port.recv(port.prev());
+            for (dst, v) in acc[w][c * shard..(c + 1) * shard].iter_mut().zip(&msg) {
+                *dst += v;
             }
-            out
-        })
+        }
+    }
+    acc.iter()
+        .enumerate()
+        .map(|(w, a)| a[w * shard..(w + 1) * shard].to_vec())
         .collect()
 }
 
-/// Broadcast from `root` to every worker.
-pub fn broadcast(bufs: &mut [Vec<f32>], root: usize) {
-    let src = bufs[root].clone();
-    for (w, b) in bufs.iter_mut().enumerate() {
-        if w != root {
-            assert_eq!(b.len(), src.len(), "broadcast length mismatch");
-            b.copy_from_slice(&src);
+/// Pipelined ring broadcast from `root`: the payload is split into N-1
+/// chunks that stream clockwise down the ring, so each LINK forwards
+/// exactly `M` bytes over N-1 chunk-sized stages — matching the
+/// `α(N-1) + Mβ` closed form and the `hop_schedule` of N-1 hops of
+/// `M/(N-1)` (the bottleneck link's stages; the pipeline keeps up to
+/// N-1 links busy in the same stage). `(N-1)²` chunk messages total.
+pub fn broadcast(ports: &[RingPort], bufs: &mut [Vec<f32>], root: usize) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    assert_eq!(ports.len(), n, "broadcast port/buffer arity");
+    let len = bufs[root].len();
+    assert!(
+        bufs.iter().all(|b| b.len() == len),
+        "broadcast length mismatch"
+    );
+    let ch = chunk_bounds(len, n - 1);
+    // pipeline stage t: the link (root+j) -> (root+j+1) carries chunk
+    // t-j when 0 <= t-j < n-1; link j forwards a chunk the stage after
+    // receiving it, so every send payload is already resident.
+    for t in 0..2 * n - 3 {
+        let active: Vec<usize> =
+            (0..n - 1).filter(|&j| t >= j && t - j < n - 1).collect();
+        for &j in &active {
+            let src = (root + j) % n;
+            let (a, b) = ch[t - j];
+            ports[src].send((src + 1) % n, bufs[src][a..b].to_vec());
+        }
+        for &j in &active {
+            let src = (root + j) % n;
+            let dst = (src + 1) % n;
+            let (a, b) = ch[t - j];
+            let msg: Vec<f32> = ports[dst].recv(src);
+            bufs[dst][a..b].copy_from_slice(&msg);
         }
     }
 }
 
-/// All-to-all: `bufs[w]` is worker w's send buffer split into N equal
-/// chunks; chunk `d` goes to worker `d`. Worker w ends with
-/// `[chunk_w_of_0 | chunk_w_of_1 | ...]`. The MoE baselines' token shuffle.
-pub fn all_to_all(bufs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+/// Ring all-to-all in `N-1` hops: `bufs[w]` is rank w's send buffer split
+/// into N equal chunks; chunk `d` goes to rank `d`. Rank w ends with
+/// `[chunk_w_of_0 | chunk_w_of_1 | ...]` — the MoE baselines' token
+/// shuffle. Implemented as a relay: each source buffer travels the ring
+/// and every rank extracts its chunk as the buffer passes through (the
+/// same schedule RTP's Expert-Partition rotation uses).
+pub fn all_to_all(ports: &[RingPort], bufs: &[Vec<f32>]) -> Vec<Vec<f32>> {
     let n = bufs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    assert_eq!(ports.len(), n, "all_to_all port/buffer arity");
     let len = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == len));
     assert_eq!(len % n, 0, "all_to_all length {len} not divisible by {n}");
+    if n == 1 {
+        return vec![bufs[0].clone()];
+    }
     let chunk = len / n;
-    (0..n)
-        .map(|dst| {
-            let mut out = Vec::with_capacity(len);
-            for src in bufs {
-                out.extend_from_slice(&src[dst * chunk..(dst + 1) * chunk]);
-            }
-            out
-        })
-        .collect()
+    let mut out: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; len]).collect();
+    // own chunk needs no hop
+    for w in 0..n {
+        out[w][w * chunk..(w + 1) * chunk]
+            .copy_from_slice(&bufs[w][w * chunk..(w + 1) * chunk]);
+    }
+    // each source buffer relays clockwise; rank w peels its chunk off as
+    // the buffer visits
+    let mut traveling: Vec<(usize, Vec<f32>)> =
+        (0..n).map(|w| (w, bufs[w].clone())).collect();
+    for _hop in 0..n - 1 {
+        for (w, port) in ports.iter().enumerate() {
+            let t = std::mem::replace(&mut traveling[w], (usize::MAX, Vec::new()));
+            port.send(port.next(), t);
+        }
+        for (w, port) in ports.iter().enumerate() {
+            let (src, data): (usize, Vec<f32>) = port.recv(port.prev());
+            out[w][src * chunk..(src + 1) * chunk]
+                .copy_from_slice(&data[w * chunk..(w + 1) * chunk]);
+            traveling[w] = (src, data);
+        }
+    }
+    out
+}
+
+/// One ring rotation hop (the paper's §3.3 primitive): every rank sends
+/// its element to `dir.send_peer` and receives from `dir.recv_peer`
+/// through the fabric, so after the exchange rank `w` holds what its
+/// upstream neighbor held. Generic over the payload: the engines rotate
+/// shard structs in real mode and bare shard ids in virtual mode —
+/// identical schedule either way.
+pub fn rotate_ring<T: Any>(ports: &[RingPort], bufs: &mut Vec<T>, dir: RotationDir) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    assert_eq!(ports.len(), n, "rotate port/buffer arity");
+    let old = std::mem::take(bufs);
+    for (w, item) in old.into_iter().enumerate() {
+        ports[w].send(dir.send_peer(w, n), item);
+    }
+    *bufs = (0..n)
+        .map(|w| ports[w].recv::<T>(dir.recv_peer(w, n)))
+        .collect();
 }
 
 #[cfg(test)]
@@ -118,19 +318,134 @@ mod tests {
             .collect()
     }
 
+    fn ports_of(n: usize) -> (RingFabric, Vec<RingPort>) {
+        let fab = RingFabric::new(n.max(1));
+        let ports = fab.ports();
+        (fab, ports)
+    }
+
     #[test]
-    fn allreduce_is_sum() {
+    fn chunk_bounds_cover_and_balance() {
+        prop::check("chunk bounds", 100, |rng| {
+            let n = 1 + rng.below(9);
+            let len = rng.below(40);
+            let ch = chunk_bounds(len, n);
+            if ch.len() != n {
+                return Err("wrong chunk count".into());
+            }
+            if ch[0].0 != 0 || ch[n - 1].1 != len {
+                return Err("chunks do not cover".into());
+            }
+            for i in 1..n {
+                if ch[i].0 != ch[i - 1].1 {
+                    return Err("chunks not contiguous".into());
+                }
+            }
+            let sizes: Vec<usize> = ch.iter().map(|(a, b)| b - a).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            if mx - mn > 1 {
+                return Err(format!("unbalanced chunks {sizes:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ring_allreduce_is_sum() {
+        let (fab, ports) = ports_of(3);
         let mut bufs = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
-        allreduce_sum(&mut bufs);
+        allreduce_sum(&ports, &mut bufs);
         for b in &bufs {
             assert_eq!(b, &vec![111.0, 222.0]);
+        }
+        assert_eq!(fab.in_flight(), 0);
+    }
+
+    #[test]
+    fn ring_allreduce_matches_reference() {
+        prop::check("ring ar == ref ar", 60, |rng| {
+            let n = 1 + rng.below(8);
+            let len = rng.below(30); // any length, incl. 0 and < n
+            let mut r = Rng::new(rng.next_u64());
+            let bufs = rand_bufs(&mut r, n, len);
+            let mut want = bufs.clone();
+            reference::allreduce_sum(&mut want);
+            let (fab, ports) = ports_of(n);
+            let mut got = bufs;
+            allreduce_sum(&ports, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                prop::close(g, w, 1e-4)?;
+            }
+            if fab.in_flight() != 0 {
+                return Err("fabric not drained".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ring_allreduce_performs_2n_minus_2_hops() {
+        // 2(N-1) hops × N rank-messages per hop
+        for n in [2usize, 4, 8] {
+            let (fab, ports) = ports_of(n);
+            let mut bufs = vec![vec![1.0f32; 4 * n]; n];
+            allreduce_sum(&ports, &mut bufs);
+            assert_eq!(fab.messages_sent(), (2 * (n - 1) * n) as u64, "n={n}");
+            assert_eq!(fab.in_flight(), 0);
         }
     }
 
     #[test]
-    fn allgather_concatenates_in_rank_order() {
+    fn ring_allgather_concatenates_in_rank_order() {
+        let (_fab, ports) = ports_of(3);
         let shards = vec![vec![1.0], vec![2.0], vec![3.0]];
-        assert_eq!(allgather(&shards), vec![1.0, 2.0, 3.0]);
+        for full in allgather(&ports, &shards) {
+            assert_eq!(full, vec![1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn ring_allgather_matches_reference() {
+        prop::check("ring ag == ref ag", 60, |rng| {
+            let n = 1 + rng.below(8);
+            let mut r = Rng::new(rng.next_u64());
+            // deliberately unequal shard lengths
+            let shards: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let l = rng.below(7);
+                    (0..l).map(|_| r.normal() as f32).collect()
+                })
+                .collect();
+            let want = reference::allgather(&shards);
+            let (fab, ports) = ports_of(n);
+            for full in allgather(&ports, &shards) {
+                prop::close(&full, &want, 0.0)?;
+            }
+            if fab.in_flight() != 0 {
+                return Err("fabric not drained".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ring_reduce_scatter_matches_reference() {
+        prop::check("ring rs == ref rs", 60, |rng| {
+            let n = 1 + rng.below(8);
+            let len = n * rng.below(7); // divisible, possibly 0
+            let mut r = Rng::new(rng.next_u64());
+            let fulls = rand_bufs(&mut r, n, len);
+            let want = reference::reduce_scatter(&fulls);
+            let (fab, ports) = ports_of(n);
+            let got = reduce_scatter(&ports, &fulls);
+            for (g, w) in got.iter().zip(&want) {
+                prop::close(g, w, 1e-4)?;
+            }
+            if fab.in_flight() != 0 {
+                return Err("fabric not drained".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -138,40 +453,69 @@ mod tests {
         prop::check("rs+ag == ar", 50, |rng| {
             let n = 1 + rng.below(6);
             let len = n * (1 + rng.below(8));
-            let bufs = rand_bufs(rng, n, len);
+            let mut r = Rng::new(rng.next_u64());
+            let bufs = rand_bufs(&mut r, n, len);
+            let (_fab, ports) = ports_of(n);
             let mut ar = bufs.clone();
-            allreduce_sum(&mut ar);
-            let shards = reduce_scatter(&bufs);
-            let full = allgather(&shards);
-            prop::close(&full, &ar[0], 1e-5)
+            allreduce_sum(&ports, &mut ar);
+            let shards = reduce_scatter(&ports, &bufs);
+            let fulls = allgather(&ports, &shards);
+            prop::close(&fulls[0], &ar[0], 1e-5)
         });
     }
 
     #[test]
-    fn broadcast_copies_root() {
-        let mut bufs = vec![vec![0.0; 2], vec![7.0, 8.0], vec![0.0; 2]];
-        broadcast(&mut bufs, 1);
-        for b in &bufs {
-            assert_eq!(b, &vec![7.0, 8.0]);
-        }
+    fn ring_broadcast_matches_reference() {
+        prop::check("ring bc == ref bc", 50, |rng| {
+            let n = 1 + rng.below(8);
+            let len = rng.below(10);
+            let mut r = Rng::new(rng.next_u64());
+            let bufs = rand_bufs(&mut r, n, len);
+            let root = rng.below(n);
+            let mut want = bufs.clone();
+            reference::broadcast(&mut want, root);
+            let (fab, ports) = ports_of(n);
+            let mut got = bufs;
+            broadcast(&ports, &mut got, root);
+            for (g, w) in got.iter().zip(&want) {
+                prop::close(g, w, 0.0)?;
+            }
+            if fab.in_flight() != 0 {
+                return Err("fabric not drained".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]
-    fn all_to_all_is_transpose() {
-        // 2 workers, 2 chunks of 1: out[d] = [bufs[0][d], bufs[1][d]]
-        let bufs = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
-        let out = all_to_all(&bufs);
-        assert_eq!(out[0], vec![1.0, 3.0]);
-        assert_eq!(out[1], vec![2.0, 4.0]);
+    fn ring_all_to_all_matches_reference() {
+        prop::check("ring a2a == ref a2a", 50, |rng| {
+            let n = 1 + rng.below(6);
+            let len = n * rng.below(5);
+            let mut r = Rng::new(rng.next_u64());
+            let bufs = rand_bufs(&mut r, n, len);
+            let want = reference::all_to_all(&bufs);
+            let (fab, ports) = ports_of(n);
+            let got = all_to_all(&ports, &bufs);
+            for (g, w) in got.iter().zip(&want) {
+                prop::close(g, w, 0.0)?;
+            }
+            if fab.in_flight() != 0 {
+                return Err("fabric not drained".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]
-    fn all_to_all_twice_is_identity() {
+    fn ring_all_to_all_twice_is_identity() {
         prop::check("a2a involution", 30, |rng| {
             let n = 1 + rng.below(5);
             let len = n * (1 + rng.below(4));
-            let bufs = rand_bufs(rng, n, len);
-            let twice = all_to_all(&all_to_all(&bufs));
+            let mut r = Rng::new(rng.next_u64());
+            let bufs = rand_bufs(&mut r, n, len);
+            let (_fab, ports) = ports_of(n);
+            let twice = all_to_all(&ports, &all_to_all(&ports, &bufs));
             for (a, b) in twice.iter().zip(&bufs) {
                 prop::close(a, b, 0.0)?;
             }
@@ -180,9 +524,41 @@ mod tests {
     }
 
     #[test]
+    fn rotate_ring_matches_reference_rotation() {
+        prop::check("ring rotate == ref rotate", 60, |rng| {
+            let n = 1 + rng.below(8);
+            let (_fab, ports) = ports_of(n);
+            for dir in [RotationDir::Clockwise, RotationDir::CounterClockwise] {
+                let mut got: Vec<usize> = (0..n).collect();
+                let mut want: Vec<usize> = (0..n).collect();
+                rotate_ring(&ports, &mut got, dir);
+                match dir {
+                    RotationDir::Clockwise => reference::rotate_cw(&mut want),
+                    RotationDir::CounterClockwise => reference::rotate_ccw(&mut want),
+                }
+                if got != want {
+                    return Err(format!("{dir:?}: {got:?} != {want:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn allreduce_single_worker_noop() {
+        let (_fab, ports) = ports_of(1);
         let mut bufs = vec![vec![5.0, 6.0]];
-        allreduce_sum(&mut bufs);
+        allreduce_sum(&ports, &mut bufs);
         assert_eq!(bufs[0], vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn empty_rank_sets_do_not_panic() {
+        let (_fab, ports) = ports_of(1);
+        assert!(reduce_scatter(&ports[..0], &[]).is_empty());
+        assert!(allgather(&ports[..0], &[]).is_empty());
+        assert!(all_to_all(&ports[..0], &[]).is_empty());
+        broadcast(&ports[..0], &mut [], 0);
+        allreduce_sum(&ports[..0], &mut []);
     }
 }

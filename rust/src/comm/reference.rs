@@ -1,0 +1,181 @@
+//! God-view reference collectives — TEST ORACLES ONLY.
+//!
+//! These are the seed's original one-shot implementations: each computes a
+//! whole collective by directly reading/writing every rank's buffer in one
+//! function body. They erase the hop structure the paper's cost analysis
+//! and overlap scheduling depend on, so no engine is allowed to call them;
+//! they survive solely so the property tests and microbenches can check
+//! the chunked ring-fabric implementations in [`crate::comm`] against a
+//! trivially-correct baseline.
+
+/// Reference all-reduce (sum): one-shot accumulate + copy-back.
+pub fn allreduce_sum(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(
+        bufs.iter().all(|b| b.len() == len),
+        "allreduce buffers must be same-length"
+    );
+    let mut acc = vec![0.0f32; len];
+    for b in bufs.iter() {
+        for (a, v) in acc.iter_mut().zip(b) {
+            *a += v;
+        }
+    }
+    for b in bufs.iter_mut() {
+        b.copy_from_slice(&acc);
+    }
+}
+
+/// Reference all-gather: plain concatenation in rank order.
+pub fn allgather(shards: &[Vec<f32>]) -> Vec<f32> {
+    let mut full = Vec::with_capacity(shards.iter().map(|s| s.len()).sum());
+    for s in shards {
+        full.extend_from_slice(s);
+    }
+    full
+}
+
+/// Reference reduce-scatter (sum): worker `w` ends with the sum of
+/// everyone's shard `w`. Inputs must be equal length, divisible by N.
+pub fn reduce_scatter(fulls: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = fulls.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let len = fulls[0].len();
+    assert!(
+        fulls.iter().all(|f| f.len() == len),
+        "reduce_scatter buffers must be same-length"
+    );
+    assert_eq!(len % n, 0, "reduce_scatter length {len} not divisible by {n}");
+    if n == 1 {
+        return vec![fulls[0].clone()];
+    }
+    let shard = len / n;
+    (0..n)
+        .map(|w| {
+            let mut out = vec![0.0f32; shard];
+            for f in fulls {
+                for (o, v) in out.iter_mut().zip(&f[w * shard..(w + 1) * shard]) {
+                    *o += v;
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+/// Reference broadcast from `root`.
+pub fn broadcast(bufs: &mut [Vec<f32>], root: usize) {
+    if bufs.len() <= 1 {
+        return;
+    }
+    let src = bufs[root].clone();
+    for (w, b) in bufs.iter_mut().enumerate() {
+        if w != root {
+            assert_eq!(b.len(), src.len(), "broadcast length mismatch");
+            b.copy_from_slice(&src);
+        }
+    }
+}
+
+/// Reference all-to-all: chunk transpose in one shot.
+pub fn all_to_all(bufs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = bufs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len));
+    assert_eq!(len % n, 0, "all_to_all length {len} not divisible by {n}");
+    let chunk = len / n;
+    (0..n)
+        .map(|dst| {
+            let mut out = Vec::with_capacity(len);
+            for src in bufs {
+                out.extend_from_slice(&src[dst * chunk..(dst + 1) * chunk]);
+            }
+            out
+        })
+        .collect()
+}
+
+/// Reference clockwise rotation: `new[w] = old[w-1]`, via slice rotate.
+pub fn rotate_cw<T>(bufs: &mut [T]) {
+    bufs.rotate_right(1);
+}
+
+/// Reference counter-clockwise rotation: `new[w] = old[w+1]`.
+pub fn rotate_ccw<T>(bufs: &mut [T]) {
+    bufs.rotate_left(1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_is_sum() {
+        let mut bufs = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        allreduce_sum(&mut bufs);
+        for b in &bufs {
+            assert_eq!(b, &vec![111.0, 222.0]);
+        }
+    }
+
+    #[test]
+    fn allgather_concatenates_in_rank_order() {
+        let shards = vec![vec![1.0], vec![2.0], vec![3.0]];
+        assert_eq!(allgather(&shards), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn broadcast_copies_root() {
+        let mut bufs = vec![vec![0.0; 2], vec![7.0, 8.0], vec![0.0; 2]];
+        broadcast(&mut bufs, 1);
+        for b in &bufs {
+            assert_eq!(b, &vec![7.0, 8.0]);
+        }
+    }
+
+    #[test]
+    fn all_to_all_is_transpose() {
+        let bufs = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let out = all_to_all(&bufs);
+        assert_eq!(out[0], vec![1.0, 3.0]);
+        assert_eq!(out[1], vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_inputs_do_not_panic() {
+        // the seed indexed fulls[0] unconditionally and panicked here
+        assert!(reduce_scatter(&[]).is_empty());
+        assert!(all_to_all(&[]).is_empty());
+        broadcast(&mut [], 0);
+        allreduce_sum(&mut []);
+        assert!(allgather(&[]).is_empty());
+    }
+
+    #[test]
+    fn single_worker_collectives_are_identity() {
+        let one = vec![vec![5.0, 6.0]];
+        let mut ar = one.clone();
+        allreduce_sum(&mut ar);
+        assert_eq!(ar, one);
+        assert_eq!(reduce_scatter(&one), one);
+        assert_eq!(all_to_all(&one), one);
+    }
+
+    #[test]
+    fn rotations_shift_by_one() {
+        let mut v = vec![0, 1, 2, 3];
+        rotate_cw(&mut v);
+        assert_eq!(v, vec![3, 0, 1, 2]);
+        rotate_ccw(&mut v);
+        assert_eq!(v, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,4 +1,4 @@
-//! The paper's rotation primitive (§3.3, Fig 2).
+//! The paper's rotation schedule (§3.3, Fig 2).
 //!
 //! Clockwise rotation: every worker sends its buffer to the *next* worker
 //! on the ring and receives from the *previous* one — after the exchange,
@@ -6,9 +6,12 @@
 //! Counter-clockwise is the mirror (worker `w` receives from `w+1`), used
 //! for the backward pass so that after N-1 steps every shard is back home.
 //!
-//! These are generic over the buffer type: the engines rotate
-//! `Vec<HostTensor>` shard structs in real mode and `Vec<VirtBuf>` shape
-//! stubs in virtual mode — identical schedule either way.
+//! This module is the schedule MATH only: which neighbor a rank talks to
+//! ([`RotationDir::send_peer`] / [`RotationDir::recv_peer`]) and which
+//! shard sits where after `t` hops ([`shard_at`]). The data movement
+//! itself is [`crate::comm::rotate_ring`] — one true neighbor
+//! send/recv per rank through the ring fabric; the old whole-array
+//! `rotate_right(1)` shortcut survives only in [`crate::comm::reference`].
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RotationDir {
@@ -36,16 +39,6 @@ impl RotationDir {
     }
 }
 
-/// One clockwise rotation step: `new[w] = old[w-1]`.
-pub fn rotate_cw<T>(bufs: &mut [T]) {
-    bufs.rotate_right(1);
-}
-
-/// One counter-clockwise rotation step: `new[w] = old[w+1]`.
-pub fn rotate_ccw<T>(bufs: &mut [T]) {
-    bufs.rotate_left(1);
-}
-
 /// Which original shard worker `w` holds after `t` rotations in direction
 /// `dir`, given that worker `w` started with shard `w`. This is the shard
 /// schedule the RTP engines compute against at each step.
@@ -59,21 +52,31 @@ pub fn shard_at(dir: RotationDir, w: usize, t: usize, n: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::fabric::RingFabric;
+    use crate::comm::{reference, rotate_ring};
     use crate::util::prop;
+
+    /// `t` fabric rotation hops over a fresh (0..n) payload vector.
+    fn rotated(n: usize, t: usize, dir: RotationDir) -> Vec<usize> {
+        let fab = RingFabric::new(n.max(1));
+        let ports = fab.ports();
+        let mut v: Vec<usize> = (0..n).collect();
+        for _ in 0..t {
+            rotate_ring(&ports, &mut v, dir);
+        }
+        assert_eq!(fab.in_flight(), 0, "rotation left messages in flight");
+        v
+    }
 
     #[test]
     fn cw_moves_to_next() {
-        let mut v = vec![0, 1, 2, 3];
-        rotate_cw(&mut v);
         // worker 1 now holds what worker 0 had
-        assert_eq!(v, vec![3, 0, 1, 2]);
+        assert_eq!(rotated(4, 1, RotationDir::Clockwise), vec![3, 0, 1, 2]);
     }
 
     #[test]
     fn ccw_moves_to_prev() {
-        let mut v = vec![0, 1, 2, 3];
-        rotate_ccw(&mut v);
-        assert_eq!(v, vec![1, 2, 3, 0]);
+        assert_eq!(rotated(4, 1, RotationDir::CounterClockwise), vec![1, 2, 3, 0]);
     }
 
     #[test]
@@ -81,18 +84,11 @@ mod tests {
         prop::check("rotate^N == id", 100, |rng| {
             let n = 1 + rng.below(9);
             let orig: Vec<usize> = (0..n).collect();
-            let mut v = orig.clone();
-            for _ in 0..n {
-                rotate_cw(&mut v);
-            }
-            if v != orig {
-                return Err(format!("cw^{n} != id: {v:?}"));
-            }
-            for _ in 0..n {
-                rotate_ccw(&mut v);
-            }
-            if v != orig {
-                return Err(format!("ccw^{n} != id: {v:?}"));
+            for dir in [RotationDir::Clockwise, RotationDir::CounterClockwise] {
+                let v = rotated(n, n, dir);
+                if v != orig {
+                    return Err(format!("{dir:?}^{n} != id: {v:?}"));
+                }
             }
             Ok(())
         });
@@ -100,25 +96,21 @@ mod tests {
 
     #[test]
     fn cw_then_ccw_cancels() {
+        let fab = RingFabric::new(3);
+        let ports = fab.ports();
         let mut v = vec![10, 20, 30];
-        rotate_cw(&mut v);
-        rotate_ccw(&mut v);
+        rotate_ring(&ports, &mut v, RotationDir::Clockwise);
+        rotate_ring(&ports, &mut v, RotationDir::CounterClockwise);
         assert_eq!(v, vec![10, 20, 30]);
     }
 
     #[test]
-    fn shard_at_matches_actual_rotation() {
+    fn shard_at_matches_fabric_rotation() {
         prop::check("shard_at tracks rotate", 100, |rng| {
             let n = 1 + rng.below(8);
             let t = rng.below(3 * n + 1);
             for dir in [RotationDir::Clockwise, RotationDir::CounterClockwise] {
-                let mut v: Vec<usize> = (0..n).collect();
-                for _ in 0..t {
-                    match dir {
-                        RotationDir::Clockwise => rotate_cw(&mut v),
-                        RotationDir::CounterClockwise => rotate_ccw(&mut v),
-                    }
-                }
+                let v = rotated(n, t, dir);
                 for w in 0..n {
                     let want = shard_at(dir, w, t, n);
                     if v[w] != want {
@@ -127,6 +119,28 @@ mod tests {
                             v[w]
                         ));
                     }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fabric_rotation_agrees_with_reference() {
+        prop::check("fabric == reference rotation", 60, |rng| {
+            let n = 1 + rng.below(8);
+            let t = rng.below(2 * n + 1);
+            for dir in [RotationDir::Clockwise, RotationDir::CounterClockwise] {
+                let got = rotated(n, t, dir);
+                let mut want: Vec<usize> = (0..n).collect();
+                for _ in 0..t {
+                    match dir {
+                        RotationDir::Clockwise => reference::rotate_cw(&mut want),
+                        RotationDir::CounterClockwise => reference::rotate_ccw(&mut want),
+                    }
+                }
+                if got != want {
+                    return Err(format!("{dir:?} n={n} t={t}: {got:?} != {want:?}"));
                 }
             }
             Ok(())
@@ -155,19 +169,23 @@ mod tests {
 
     #[test]
     fn backward_returns_weights_home() {
-        // After fwd (N-1 cw steps) worker w holds shard (w+1)%N; after
-        // bwd (N-1 ccw steps) it holds shard w again (paper Fig 1).
+        // After fwd (N-1 cw hops) worker w holds shard (w+1)%N; after
+        // bwd (N-1 ccw hops) it holds shard w again (paper Fig 1).
         for n in 1..=8 {
+            let fab = RingFabric::new(n);
+            let ports = fab.ports();
             for w in 0..n {
                 let after_fwd = shard_at(RotationDir::Clockwise, w, n - 1, n);
                 assert_eq!(after_fwd, (w + 1) % n);
-                // bwd starts from the post-forward assignment
-                let mut v: Vec<usize> = (0..n)
-                    .map(|x| shard_at(RotationDir::Clockwise, x, n - 1, n))
-                    .collect();
-                for _ in 0..n - 1 {
-                    rotate_ccw(&mut v);
-                }
+            }
+            // bwd starts from the post-forward assignment
+            let mut v: Vec<usize> = (0..n)
+                .map(|x| shard_at(RotationDir::Clockwise, x, n - 1, n))
+                .collect();
+            for _ in 0..n - 1 {
+                rotate_ring(&ports, &mut v, RotationDir::CounterClockwise);
+            }
+            for w in 0..n {
                 assert_eq!(v[w], w, "n={n} w={w}");
             }
         }

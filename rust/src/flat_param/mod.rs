@@ -6,7 +6,15 @@
 //! describes where each named tensor lives inside the flat buffer;
 //! `pack`/`unpack` convert between a unit's tensors and the flat form, and
 //! `shard` views carve the flat buffer into N equal rank-shards.
+//!
+//! The FlatParameter MOVES through the rank-local ring fabric:
+//! [`FlatLayout::allgather_via`] reconstructs every rank's full buffer
+//! from the N shards in N-1 neighbor hops, and
+//! [`FlatLayout::reduce_scatter_via`] reduces per-rank full gradients back
+//! into rank shards in N-1 hops — the two halves of FSDP's unit lifecycle
+//! (and, composed, exactly the 2(N-1)-hop ring allreduce).
 
+use crate::comm::{self, RingPort};
 use crate::tensor::{numel, HostTensor};
 
 /// One tensor's slot inside a flat buffer.
@@ -101,6 +109,32 @@ impl FlatLayout {
     pub fn shards(&self, flat: &[f32]) -> Vec<Vec<f32>> {
         (0..self.n).map(|w| self.shard(flat, w)).collect()
     }
+
+    /// Ring-allgather the N rank-shards through the fabric: every rank
+    /// ends with its own reconstructed full (padded) flat buffer, after
+    /// N-1 neighbor hops. `shards[w]` must be rank w's shard.
+    pub fn allgather_via(&self, ports: &[RingPort], shards: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        assert_eq!(shards.len(), self.n, "allgather_via shard arity");
+        for s in shards {
+            assert_eq!(s.len(), self.shard_len(), "allgather_via shard length");
+        }
+        comm::allgather(ports, shards)
+    }
+
+    /// Ring reduce-scatter of per-rank full (padded) buffers back into
+    /// rank shards (sum), after N-1 neighbor hops. `fulls[w]` is rank w's
+    /// staged full gradient.
+    pub fn reduce_scatter_via(
+        &self,
+        ports: &[RingPort],
+        fulls: &[Vec<f32>],
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(fulls.len(), self.n, "reduce_scatter_via buffer arity");
+        for f in fulls {
+            assert_eq!(f.len(), self.padded, "reduce_scatter_via buffer length");
+        }
+        comm::reduce_scatter(ports, fulls)
+    }
 }
 
 #[cfg(test)]
@@ -154,14 +188,38 @@ mod tests {
     }
 
     #[test]
-    fn shards_reassemble() {
+    fn shards_reassemble_through_fabric() {
         prop::check("shards concat to flat", 50, |rng| {
             let n = 1 + rng.below(8);
             let l = layout3(n);
             let flat: Vec<f32> = (0..l.padded).map(|i| i as f32).collect();
             let shards = l.shards(&flat);
-            let back = crate::comm::allgather(&shards);
-            prop::close(&back, &flat, 0.0)
+            let fab = crate::comm::RingFabric::new(n);
+            for back in l.allgather_via(&fab.ports(), &shards) {
+                prop::close(&back, &flat, 0.0)?;
+            }
+            if fab.in_flight() != 0 {
+                return Err("fabric not drained".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fabric_reduce_scatter_sums_rank_fulls() {
+        prop::check("rs via fabric", 40, |rng| {
+            let n = 1 + rng.below(6);
+            let l = layout3(n);
+            let fulls: Vec<Vec<f32>> = (0..n)
+                .map(|w| (0..l.padded).map(|i| (w * 100 + i) as f32).collect())
+                .collect();
+            let fab = crate::comm::RingFabric::new(n);
+            let got = l.reduce_scatter_via(&fab.ports(), &fulls);
+            let want = crate::comm::reference::reduce_scatter(&fulls);
+            for (g, w) in got.iter().zip(&want) {
+                prop::close(g, w, 1e-5)?;
+            }
+            Ok(())
         });
     }
 

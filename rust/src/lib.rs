@@ -12,9 +12,18 @@
 //! - [`config`] — model presets (paper Table 2), strategy/training config
 //! - [`tensor`] — host tensors + CPU glue ops
 //! - [`memory`] — per-worker allocation tracker + analytic Table-1 model
-//! - [`cluster`] — the simulated worker ring + event trace
-//! - [`comm`] — rotation primitives, collectives, α-β cost model
-//! - [`flat_param`] — the paper's FlatParameter pack/shard structure
+//! - [`cluster`] — the simulated worker ring: per-worker memory tracker +
+//!   `RingPort` fabric endpoint + event trace
+//! - [`comm`] — the rank-local ring fabric (`RingFabric`/`RingPort`),
+//!   chunked ring collectives and the rotation schedule built on it, the
+//!   per-hop α-β cost model, and god-view reference collectives kept only
+//!   as test oracles
+//! - [`flat_param`] — the paper's FlatParameter pack/shard structure (it
+//!   moves through the fabric: `allgather_via` / `reduce_scatter_via`)
+//! - [`parallel`] — the five engines (single/ddp/fsdp/tp/rtp), all
+//!   communicating exclusively through rank-local fabric ports
+//! - [`perfmodel`] — hardware model + two-stream timeline charging
+//!   communication hop by hop
 //! - [`util`] — json / rng / stats / prop substrates (offline substitutes)
 
 pub mod bench_util;

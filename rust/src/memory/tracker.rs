@@ -50,11 +50,7 @@ impl fmt::Display for MemCategory {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct AllocId(pub u64);
 
-#[derive(Debug, thiserror::Error)]
-#[error(
-    "OOM on worker {worker}: requested {requested} B ({category}) with \
-     {live} B live, capacity {capacity} B"
-)]
+#[derive(Debug)]
 pub struct OomError {
     pub worker: usize,
     pub requested: u64,
@@ -62,6 +58,18 @@ pub struct OomError {
     pub capacity: u64,
     pub category: MemCategory,
 }
+
+impl fmt::Display for OomError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "OOM on worker {}: requested {} B ({}) with {} B live, capacity {} B",
+            self.worker, self.requested, self.category, self.live, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
 
 /// Tracks live and peak allocated bytes for one (simulated) device.
 #[derive(Debug, Clone)]

@@ -9,10 +9,11 @@
 use anyhow::Result;
 
 use crate::cluster::{Cluster, TraceEvent};
+use crate::comm::{CommPrim, RingPort};
 use crate::config::{ModelCfg, ParallelCfg};
 use crate::memory::tracker::{AllocId, MemCategory};
 use crate::model::ops::{self, Op};
-use crate::perfmodel::Timeline;
+use crate::perfmodel::{Timeline, Token};
 use crate::runtime::{ArgRef, Buf, Exec};
 use crate::tensor::{HostTensor, IntTensor};
 use crate::util::rng::Rng;
@@ -145,6 +146,81 @@ impl Ctx {
     /// Trace helper (no-op unless tracing is on).
     pub fn trace(&mut self, e: TraceEvent) {
         self.cluster.trace.push(e);
+    }
+
+    // -- rank-local ring fabric ------------------------------------------
+
+    /// Every rank's fabric port, in rank order (built once at cluster
+    /// construction) — what the SPMD collective drivers in
+    /// [`crate::comm`] consume.
+    pub fn ports(&self) -> &[RingPort] {
+        self.cluster.ports()
+    }
+
+    /// Worker `w`'s own fabric endpoint.
+    pub fn port(&self, w: usize) -> RingPort {
+        self.cluster.workers[w].port.clone()
+    }
+
+    /// Trace the per-hop schedule of one collective (no-op unless tracing
+    /// is on). Symmetric SPMD: one event per hop, not per worker.
+    fn trace_hops(&mut self, prim: CommPrim, bytes: u64) {
+        if !self.cluster.trace.enabled {
+            return;
+        }
+        let hops = prim.hop_schedule(bytes, self.n());
+        let of = hops.len();
+        for (hop, hop_bytes) in hops.into_iter().enumerate() {
+            self.cluster.trace.push(TraceEvent::Hop {
+                prim,
+                hop,
+                of,
+                bytes_per_rank: hop_bytes as u64,
+            });
+        }
+    }
+
+    /// Charge one BLOCKING ring collective: per-hop spans on the modeled
+    /// worker's timeline plus per-hop trace events. Call once per
+    /// collective (the schedule is symmetric SPMD), not once per worker.
+    pub fn charge_comm(&mut self, label: &str, prim: CommPrim, bytes: u64) {
+        self.trace_hops(prim, bytes);
+        if let Some(tl) = self.timeline.as_mut() {
+            tl.comm_blocking(label, prim, bytes);
+        }
+    }
+
+    /// Charge an ASYNC ring collective issued after the compute enqueued
+    /// so far; returns the completion token when a timeline is attached.
+    pub fn charge_comm_async(
+        &mut self,
+        label: &str,
+        prim: CommPrim,
+        bytes: u64,
+    ) -> Option<Token> {
+        self.trace_hops(prim, bytes);
+        self.timeline.as_mut().map(|tl| tl.comm_async(label, prim, bytes))
+    }
+
+    /// Charge an ASYNC ring collective whose payload is already in hand
+    /// (starts as soon as the comm stream frees — §3.4.3 eager overlap).
+    pub fn charge_comm_async_eager(
+        &mut self,
+        label: &str,
+        prim: CommPrim,
+        bytes: u64,
+    ) -> Option<Token> {
+        self.trace_hops(prim, bytes);
+        self.timeline
+            .as_mut()
+            .map(|tl| tl.comm_async_eager(label, prim, bytes))
+    }
+
+    /// Block the modeled compute stream on an async collective's token.
+    pub fn charge_wait(&mut self, tok: Option<Token>) {
+        if let (Some(tl), Some(t)) = (self.timeline.as_mut(), tok) {
+            tl.wait(t);
+        }
     }
 
     // -- real-mode host glue (no-ops in virtual mode) --------------------
@@ -431,6 +507,35 @@ mod tests {
             c.free(o);
         }
         assert_eq!(c.cluster.workers[1].tracker.live(), 0);
+    }
+
+    #[test]
+    fn charge_comm_traces_and_times_per_hop() {
+        let mut c = ctx(4);
+        c.cluster.trace = crate::cluster::TraceLog::enabled();
+        c.timeline = Some(crate::perfmodel::Timeline::new(
+            crate::perfmodel::a100_nvlink(),
+            4,
+        ));
+        c.charge_comm("ar", crate::comm::CommPrim::AllReduce, 4 << 20);
+        // 2(N-1) = 6 hop events traced and 6 hops on the timeline
+        assert_eq!(c.cluster.trace.fabric_hops(), 6);
+        assert_eq!(c.timeline.as_ref().unwrap().hop_count, 6);
+        let tok = c.charge_comm_async("rs", crate::comm::CommPrim::ReduceScatter, 4 << 20);
+        assert!(tok.is_some());
+        c.charge_wait(tok);
+        assert_eq!(c.cluster.trace.fabric_hops(), 9);
+    }
+
+    #[test]
+    fn ports_are_rank_ordered_endpoints() {
+        let c = ctx(3);
+        let ports = c.ports();
+        assert_eq!(ports.len(), 3);
+        for (w, p) in ports.iter().enumerate() {
+            assert_eq!(p.rank(), w);
+        }
+        assert_eq!(c.port(2).rank(), 2);
     }
 
     #[test]

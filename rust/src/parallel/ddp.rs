@@ -5,12 +5,14 @@
 //! The allreduce is issued per layer-bucket DURING the backward walk
 //! (PyTorch-DDP style overlap): each `unit_end(Bwd)` fires an async
 //! allreduce of that unit's grads on the timeline; `step` waits for all of
-//! them at the end. Real-mode reduction averages the replicas so every
-//! replica holds the same mean gradient (allreduce-mean).
+//! them at the end. Real-mode reduction averages the replicas through the
+//! chunked ring allreduce on the rank-local fabric — 2(N-1) neighbor hops
+//! per bucket, every rank touching only its own port — so every replica
+//! holds the same mean gradient (allreduce-mean).
 
 use anyhow::Result;
 
-use crate::comm::{self, CommPrim};
+use crate::comm::{self, CommPrim, RingPort};
 use crate::memory::tracker::MemCategory;
 use crate::model::ModelParams;
 use crate::perfmodel::Token;
@@ -55,8 +57,8 @@ impl DenseHooks for DdpHooks {
                 .find(|(u, _)| *u == unit)
                 .map(|(_, b)| *b)
                 .unwrap_or(0);
-            if let Some(tl) = ctx.timeline.as_mut() {
-                let tok = tl.comm_async("allreduce", CommPrim::AllReduce, bytes);
+            if let Some(tok) = ctx.charge_comm_async("allreduce", CommPrim::AllReduce, bytes)
+            {
                 self.pending.push(tok);
             }
         }
@@ -79,9 +81,7 @@ impl DenseHooks for DdpHooks {
     fn moe_exchange(&mut self, ctx: &mut Ctx, w: usize, bytes: u64) -> Result<()> {
         // expert-parallel DP shuffles tokens to/from the expert owners
         if w == 0 && ctx.n() > 1 {
-            if let Some(tl) = ctx.timeline.as_mut() {
-                tl.comm_blocking("all-to-all", CommPrim::AllToAll, bytes);
-            }
+            ctx.charge_comm("all-to-all", CommPrim::AllToAll, bytes);
         }
         Ok(())
     }
@@ -161,9 +161,10 @@ impl Engine for DdpEngine {
         }
         self.pending.append(&mut self.hooks.pending);
 
-        // real-mode allreduce-mean of every grad tensor across replicas
+        // real-mode allreduce-mean of every grad tensor across replicas,
+        // through each rank's own fabric port
         if !self.ctx.virtual_mode() && n > 1 {
-            allreduce_mean_params(&mut self.hooks.grads);
+            allreduce_mean_params(self.ctx.ports(), &mut self.hooks.grads);
         }
         if let Some(tl) = self.ctx.timeline.as_mut() {
             for tok in self.pending.drain(..) {
@@ -171,6 +172,11 @@ impl Engine for DdpEngine {
             }
             tl.barrier();
         }
+        debug_assert_eq!(
+            self.ctx.cluster.fabric().in_flight(),
+            0,
+            "ddp step left ring-fabric messages in flight"
+        );
         self.last_loss = loss_sum / n as f32;
         Ok(self.last_loss)
     }
@@ -204,8 +210,9 @@ impl Engine for DdpEngine {
 }
 
 /// Allreduce-mean every parameter across the per-worker grad sets
-/// (flat-pack, ring allreduce, unpack + 1/N).
-pub fn allreduce_mean_params(grads: &mut [ModelParams]) {
+/// (flat-pack, chunked ring allreduce over the rank-local ports,
+/// unpack + 1/N).
+pub fn allreduce_mean_params(ports: &[RingPort], grads: &mut [ModelParams]) {
     let n = grads.len();
     if n <= 1 {
         return;
@@ -218,7 +225,7 @@ pub fn allreduce_mean_params(grads: &mut [ModelParams]) {
             v
         })
         .collect();
-    comm::allreduce_sum(&mut bufs);
+    comm::allreduce_sum(ports, &mut bufs);
     let scale = 1.0 / n as f32;
     for (g, b) in grads.iter_mut().zip(&bufs) {
         let mut off = 0;

@@ -17,7 +17,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::comm::{self, CommPrim};
+use crate::comm::CommPrim;
 use crate::config::ModelCfg;
 use crate::flat_param::FlatLayout;
 use crate::memory::tracker::MemCategory;
@@ -158,15 +158,20 @@ impl FsdpHooks {
     }
 
     /// Allgather + materialize one unit's full weights on worker `w`.
+    /// Real mode runs the chunked ring allgather through every rank's own
+    /// fabric port (symmetric SPMD — all ranks step the same N-1 hop
+    /// schedule) and keeps rank `w`'s reconstruction.
     fn gather_unit(&mut self, ctx: &mut Ctx, w: usize, sidx: usize) -> Result<()> {
         let full_bytes = self.states[sidx].layout.full_bytes();
         let tb = ctx.alloc(w, MemCategory::CommBuf, Buf::Virt(vec![full_bytes as usize / 4]))?;
         // real mode: reconstruct + unpack into the walk's scratch view
-        if let Some(shards) = &self.states[sidx].param_shards {
-            let flats: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
-            let full = comm::allgather(&flats);
+        if self.states[sidx].param_shards.is_some() {
+            let ports = ctx.ports();
             let st = &self.states[sidx];
-            let tensors = st.layout.unpack(&full);
+            let shards = st.param_shards.as_ref().unwrap();
+            let flats: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
+            let fulls = st.layout.allgather_via(ports, &flats);
+            let tensors = st.layout.unpack(&fulls[w]);
             for (slot, t) in st.slots.clone().into_iter().zip(tensors) {
                 *resolve_mut(&mut self.scratch[w], slot) = t;
             }
@@ -186,11 +191,9 @@ impl DenseHooks for FsdpHooks {
                 let hit = matches!(self.prefetch, Some((u, _)) if u == unit);
                 if hit {
                     let (_, tok) = self.prefetch.take().unwrap();
-                    if let Some(tl) = ctx.timeline.as_mut() {
-                        tl.wait(tok);
-                    }
-                } else if let Some(tl) = ctx.timeline.as_mut() {
-                    tl.comm_blocking("allgather", CommPrim::AllGather, full_bytes);
+                    ctx.charge_wait(Some(tok));
+                } else {
+                    ctx.charge_comm("allgather", CommPrim::AllGather, full_bytes);
                 }
             }
             self.gather_unit(ctx, w, sidx)?;
@@ -202,12 +205,11 @@ impl DenseHooks for FsdpHooks {
                 let already = self.states[nidx].resident.contains_key(&0)
                     || matches!(self.prefetch, Some((u, _)) if u == next);
                 if !already {
-                    if let Some(tl) = ctx.timeline.as_mut() {
-                        let tok = tl.comm_async_eager(
-                            "prefetch-allgather",
-                            CommPrim::AllGather,
-                            self.states[nidx].layout.full_bytes(),
-                        );
+                    if let Some(tok) = ctx.charge_comm_async_eager(
+                        "prefetch-allgather",
+                        CommPrim::AllGather,
+                        self.states[nidx].layout.full_bytes(),
+                    ) {
                         self.prefetch = Some((next, tok));
                     }
                 }
@@ -240,12 +242,11 @@ impl DenseHooks for FsdpHooks {
             // the next unit's backward compute (real FSDP's behavior); the
             // step barrier waits on all of them.
             if w == 0 {
-                if let Some(tl) = ctx.timeline.as_mut() {
-                    let tok = tl.comm_async(
-                        "reduce-scatter",
-                        CommPrim::ReduceScatter,
-                        self.states[sidx].layout.full_bytes(),
-                    );
+                if let Some(tok) = ctx.charge_comm_async(
+                    "reduce-scatter",
+                    CommPrim::ReduceScatter,
+                    self.states[sidx].layout.full_bytes(),
+                ) {
                     self.pending_rs.push(tok);
                 }
             }
@@ -262,9 +263,7 @@ impl DenseHooks for FsdpHooks {
 
     fn moe_exchange(&mut self, ctx: &mut Ctx, w: usize, bytes: u64) -> Result<()> {
         if w == 0 && ctx.n() > 1 {
-            if let Some(tl) = ctx.timeline.as_mut() {
-                tl.comm_blocking("all-to-all", CommPrim::AllToAll, bytes);
-            }
+            ctx.charge_comm("all-to-all", CommPrim::AllToAll, bytes);
         }
         Ok(())
     }
@@ -400,16 +399,19 @@ impl FsdpEngine {
         })
     }
 
-    /// Post-step: mean-reduce staged full grads into the shard grads and
-    /// release whole-model residency (Model granularity).
+    /// Post-step: mean-reduce staged full grads into the shard grads
+    /// (chunked ring reduce-scatter over the rank-local ports) and release
+    /// whole-model residency (Model granularity).
     fn finish_step(&mut self) -> Result<()> {
         let n = self.ctx.n();
+        // owned copy: the loop below also needs `self.ctx` mutably
+        let ports: Vec<crate::comm::RingPort> = self.ctx.ports().to_vec();
         for st in &mut self.hooks.states {
             if st.param_shards.is_some() && !st.staged_grads.is_empty() {
                 let fulls: Vec<Vec<f32>> = (0..n)
                     .map(|w| st.staged_grads.remove(&w).expect("staged grads"))
                     .collect();
-                let shards = comm::reduce_scatter(&fulls);
+                let shards = st.layout.reduce_scatter_via(&ports, &fulls);
                 let gs = st.grad_shards.as_mut().unwrap();
                 for (g, s) in gs.iter_mut().zip(shards) {
                     for (a, b) in g.data.iter_mut().zip(s) {
@@ -428,13 +430,11 @@ impl FsdpEngine {
             for w in workers {
                 let tb = st.staging.remove(&w).unwrap();
                 if w == 0 {
-                    if let Some(tl) = self.ctx.timeline.as_mut() {
-                        tl.comm_blocking(
-                            "reduce-scatter",
-                            CommPrim::ReduceScatter,
-                            st.layout.full_bytes(),
-                        );
-                    }
+                    self.ctx.charge_comm(
+                        "reduce-scatter",
+                        CommPrim::ReduceScatter,
+                        st.layout.full_bytes(),
+                    );
                 }
                 self.ctx.free(tb);
             }
@@ -471,16 +471,22 @@ impl Engine for FsdpEngine {
         if let Some(tl) = self.ctx.timeline.as_mut() {
             tl.barrier();
         }
+        debug_assert_eq!(
+            self.ctx.cluster.fabric().in_flight(),
+            0,
+            "fsdp step left ring-fabric messages in flight"
+        );
         self.last_loss = loss_sum / n as f32;
         Ok(self.last_loss)
     }
 
     fn gather_params(&self) -> ModelParams {
+        let ports = self.ctx.ports();
         let mut out = ModelParams::zeros_like(&self.ctx.cfg);
         for st in &self.hooks.states {
             let shards = st.param_shards.as_ref().expect("virtual mode");
             let flats: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
-            let full = comm::allgather(&flats);
+            let full = st.layout.allgather_via(ports, &flats).swap_remove(0);
             for (slot, t) in st.slots.iter().zip(st.layout.unpack(&full)) {
                 *resolve_mut(&mut out, *slot) = t;
             }
@@ -489,11 +495,12 @@ impl Engine for FsdpEngine {
     }
 
     fn gather_grads(&self) -> ModelParams {
+        let ports = self.ctx.ports();
         let mut out = ModelParams::zeros_like(&self.ctx.cfg);
         for st in &self.hooks.states {
             let shards = st.grad_shards.as_ref().expect("virtual mode");
             let flats: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
-            let full = comm::allgather(&flats);
+            let full = st.layout.allgather_via(ports, &flats).swap_remove(0);
             for (slot, t) in st.slots.iter().zip(st.layout.unpack(&full)) {
                 *resolve_mut(&mut out, *slot) = t;
             }

@@ -12,6 +12,15 @@
 //! All engines run in real mode (PJRT artifacts or the rust oracle — exact
 //! numerics, gradient-equivalence tested) and virtual mode (shape stubs —
 //! paper-scale memory/throughput accounting), through the same code.
+//!
+//! Communication discipline: every inter-worker transfer goes through the
+//! rank-local ring fabric (`comm::RingPort`) — engines never mutate
+//! another rank's buffers directly. Collectives are the chunked ring
+//! algorithms of [`crate::comm`] (allreduce = 2(N-1) hops, allgather /
+//! reduce-scatter = N-1 hops, rotation = 1 hop), charged per hop on the
+//! timeline via `Ctx::charge_comm*` and traced per hop, so every engine's
+//! schedule exposes the real hop structure the paper's §3.4 analysis is
+//! about. A finished `step` always leaves the fabric drained (asserted).
 
 pub mod builder;
 pub mod common;

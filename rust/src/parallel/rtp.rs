@@ -8,6 +8,12 @@
 //! shard is back home and its gradient has accumulated every worker's
 //! batch contribution — replacing DDP's allreduce entirely.
 //!
+//! Every rotation hop is a true neighbor exchange on the rank-local ring
+//! fabric: worker `w` pushes its shard out of its own `RingPort` and pulls
+//! its upstream neighbor's in — no worker ever reaches into another
+//! worker's buffers. Shard ids ride the fabric in virtual mode, so the
+//! per-hop schedule (and its trace) is mode-independent.
+//!
 //! Variants (paper §3):
 //! - **In-place**: rotation is blocking and reuses the live shard buffer —
 //!   zero extra memory (Table 1 row `RTP Inplace`), serialized comm.
@@ -25,7 +31,7 @@
 use anyhow::Result;
 
 use crate::cluster::TraceEvent;
-use crate::comm::{rotation::shard_at, CommPrim, RotationDir};
+use crate::comm::{rotation::shard_at, CommPrim, RingPort, RotationDir};
 use crate::config::ModelCfg;
 use crate::memory::tracker::MemCategory;
 use crate::model::partition::{self, AttnShard, MlpShard};
@@ -56,14 +62,17 @@ impl RtpVariant {
 
 /// A ring of rotating shard payloads: `ids[w]` names the shard currently
 /// held by worker `w`; `data` carries the real tensors (None in virtual
-/// mode). Rotating moves ids and data together.
+/// mode). Rotation is a true neighbor exchange through the rank-local
+/// fabric: every worker sends its payload out of its own port and receives
+/// its upstream neighbor's — ids and data ride the same hop, so the
+/// schedule is identical in virtual mode (ids only) and real mode.
 #[derive(Debug)]
 struct Ring<T> {
     ids: Vec<usize>,
     data: Option<Vec<T>>,
 }
 
-impl<T> Ring<T> {
+impl<T: 'static> Ring<T> {
     fn home(n: usize, data: Option<Vec<T>>) -> Self {
         if let Some(d) = &data {
             assert_eq!(d.len(), n);
@@ -71,17 +80,28 @@ impl<T> Ring<T> {
         Ring { ids: (0..n).collect(), data }
     }
 
-    fn rotate_cw(&mut self) {
-        self.ids.rotate_right(1);
-        if let Some(d) = &mut self.data {
-            d.rotate_right(1);
+    /// One rotation hop through the fabric in direction `dir`. Real mode
+    /// sends ONE `(id, payload)` message per rank so the fabric's hop and
+    /// message accounting is identical to virtual mode (ids only).
+    fn rotate(&mut self, ports: &[RingPort], dir: RotationDir) {
+        let n = self.ids.len();
+        if n <= 1 {
+            return;
         }
-    }
-
-    fn rotate_ccw(&mut self) {
-        self.ids.rotate_left(1);
-        if let Some(d) = &mut self.data {
-            d.rotate_left(1);
+        match self.data.as_mut() {
+            None => crate::comm::rotate_ring(ports, &mut self.ids, dir),
+            Some(d) => {
+                let ids = std::mem::take(&mut self.ids);
+                let data = std::mem::take(d);
+                for (w, msg) in ids.into_iter().zip(data).enumerate() {
+                    ports[w].send(dir.send_peer(w, n), msg);
+                }
+                for (w, port) in ports.iter().enumerate() {
+                    let (id, payload): (usize, T) = port.recv(dir.recv_peer(w, n));
+                    self.ids.push(id);
+                    d.push(payload);
+                }
+            }
         }
     }
 
@@ -359,10 +379,11 @@ impl RtpEngine {
         })
     }
 
-    /// Charge one rotation boundary on the timeline and rotate the ring.
-    /// `fwd` chooses direction; `bytes` is the per-worker message size
-    /// (backward doubles it: weights + traveling grads).
-    fn rotate<T>(
+    /// Charge one rotation boundary on the timeline and step the ring one
+    /// hop through the fabric. `fwd` chooses direction; `bytes` is the
+    /// per-worker message size (backward doubles it: weights + traveling
+    /// grads).
+    fn rotate<T: 'static>(
         ctx: &mut Ctx,
         variant: RtpVariant,
         ring: &mut Ring<T>,
@@ -383,16 +404,11 @@ impl RtpEngine {
                 // (see step()); nothing blocking here.
             }
         }
-        if fwd {
-            ring.rotate_cw();
-            if let Some(g) = gring {
-                g.rotate_cw();
-            }
-        } else {
-            ring.rotate_ccw();
-            if let Some(g) = gring {
-                g.rotate_ccw();
-            }
+        let dir = if fwd { RotationDir::Clockwise } else { RotationDir::CounterClockwise };
+        let ports = ctx.ports();
+        ring.rotate(ports, dir);
+        if let Some(g) = gring {
+            g.rotate(ports, dir);
         }
         ctx.trace(TraceEvent::Rotate {
             dir: if fwd { "cw" } else { "ccw" },
@@ -1390,18 +1406,19 @@ impl Engine for RtpEngine {
         }
 
         // replicated grads: one small allreduce replaces nothing the paper
-        // counts (LNs + biases + router), but we charge it honestly
+        // counts (LNs + biases + router), but we charge it honestly —
+        // 2(N-1) ring hops through the rank-local ports
         if n > 1 {
             let rep_bytes = (replicated_elems(&cfg) * 4) as u64;
-            if let Some(tl) = self.ctx.timeline.as_mut() {
-                tl.comm_blocking("ar-replicated", CommPrim::AllReduce, rep_bytes);
-            }
+            self.ctx
+                .charge_comm("ar-replicated", CommPrim::AllReduce, rep_bytes);
             if let Some(gr) = self.g_rep.as_mut() {
                 // allreduce-MEAN: idempotent on values that earlier steps
                 // already reduced, so grads accumulate correctly across
                 // steps without zeroing.
+                let ports = self.ctx.cluster.ports();
                 let mut flats: Vec<Vec<f32>> = gr.iter().map(|r| r.pack()).collect();
-                crate::comm::allreduce_sum(&mut flats);
+                crate::comm::allreduce_sum(ports, &mut flats);
                 for (r, f) in gr.iter_mut().zip(&flats) {
                     r.unpack(f);
                     r.visit_mut(&mut |t| t.scale(scale));
@@ -1411,6 +1428,11 @@ impl Engine for RtpEngine {
         if let Some(tl) = self.ctx.timeline.as_mut() {
             tl.barrier();
         }
+        debug_assert_eq!(
+            self.ctx.cluster.fabric().in_flight(),
+            0,
+            "rtp step left ring-fabric messages in flight"
+        );
 
         // every ring must be home again — the paper's Fig-1 invariant
         for (l, r) in self.rings.attn.iter().enumerate() {

@@ -150,6 +150,13 @@ impl Engine for SingleEngine {
         if let Some(tl) = self.ctx.timeline.as_mut() {
             tl.barrier();
         }
+        // one worker, zero hops — but the invariant is the same as every
+        // other engine's: a finished step leaves the fabric drained
+        debug_assert_eq!(
+            self.ctx.cluster.fabric().in_flight(),
+            0,
+            "single step left ring-fabric messages in flight"
+        );
         self.last_loss = loss;
         Ok(loss)
     }

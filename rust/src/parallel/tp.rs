@@ -47,17 +47,17 @@ pub struct TpEngine {
     last_loss: f32,
 }
 
-/// Sum per-worker partial activation buffers in place (real mode) and
-/// charge one allreduce (the Megatron g-operator).
+/// Sum per-worker partial activation buffers (the Megatron g-operator):
+/// charge the 2(N-1)-hop ring allreduce and, in real mode, move the data
+/// through each rank's own fabric port.
 fn allreduce_partials(ctx: &mut Ctx, bufs: &mut [TBuf]) {
-    if let Some(tl) = ctx.timeline.as_mut() {
-        tl.comm_blocking("ar-act", CommPrim::AllReduce, bufs[0].buf.bytes());
-    }
+    ctx.charge_comm("ar-act", CommPrim::AllReduce, bufs[0].buf.bytes());
     if bufs[0].is_virtual() || bufs.len() <= 1 {
         return;
     }
+    let ports = ctx.ports();
     let mut flats: Vec<Vec<f32>> = bufs.iter().map(|b| b.f().data.clone()).collect();
-    comm::allreduce_sum(&mut flats);
+    comm::allreduce_sum(ports, &mut flats);
     for (b, f) in bufs.iter_mut().zip(flats) {
         b.f_mut().data = f;
     }
@@ -213,15 +213,21 @@ impl Engine for TpEngine {
                 )?;
                 parts.push(outs.pop().unwrap());
             }
-            if let Some(tl) = self.ctx.timeline.as_mut() {
-                tl.comm_blocking("ag-emb", CommPrim::AllGather, x[0].buf.bytes());
-            }
-            // every worker assembles the full hidden from ALL slices
+            self.ctx
+                .charge_comm("ag-emb", CommPrim::AllGather, x[0].buf.bytes());
+            // ring-allgather the hidden slices: every worker receives the
+            // other shards hop by hop through its own port, then assembles
+            // the full hidden locally
             if !virt {
-                for xw in x.iter_mut() {
-                    for (s, part) in parts.iter().enumerate() {
-                        if let Buf::Real(full) = &mut xw.buf {
-                            full.write_slice_last(s * hp, part.f());
+                let ports = self.ctx.ports();
+                let slices: Vec<Vec<f32>> =
+                    parts.iter().map(|p| p.f().data.clone()).collect();
+                let gathered = comm::allgather_parts(ports, &slices);
+                for (w, pieces) in gathered.into_iter().enumerate() {
+                    if let Buf::Real(full) = &mut x[w].buf {
+                        for (s, piece) in pieces.into_iter().enumerate() {
+                            let t = HostTensor::from_vec(&[b, cfg.seq, hp], piece);
+                            full.write_slice_last(s * hp, &t);
                         }
                     }
                 }
@@ -359,14 +365,18 @@ impl Engine for TpEngine {
         for w in 0..n {
             logits.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, v]))?);
         }
-        if let Some(tl) = self.ctx.timeline.as_mut() {
-            tl.comm_blocking("ag-logits", CommPrim::AllGather, logits[0].buf.bytes());
-        }
+        self.ctx
+            .charge_comm("ag-logits", CommPrim::AllGather, logits[0].buf.bytes());
         if !virt {
-            for lw in logits.iter_mut() {
-                for (s, part) in logit_parts.iter().enumerate() {
-                    if let Buf::Real(full) = &mut lw.buf {
-                        full.write_slice_last(s * vp, part.f());
+            let ports = self.ctx.ports();
+            let slices: Vec<Vec<f32>> =
+                logit_parts.iter().map(|p| p.f().data.clone()).collect();
+            let gathered = comm::allgather_parts(ports, &slices);
+            for (w, pieces) in gathered.into_iter().enumerate() {
+                if let Buf::Real(full) = &mut logits[w].buf {
+                    for (s, piece) in pieces.into_iter().enumerate() {
+                        let t = HostTensor::from_vec(&[b, cfg.seq, vp], piece);
+                        full.write_slice_last(s * vp, &t);
                     }
                 }
             }
@@ -650,6 +660,11 @@ impl Engine for TpEngine {
         if let Some(tl) = self.ctx.timeline.as_mut() {
             tl.barrier();
         }
+        debug_assert_eq!(
+            self.ctx.cluster.fabric().in_flight(),
+            0,
+            "tp step left ring-fabric messages in flight"
+        );
         self.last_loss = loss;
         Ok(loss)
     }

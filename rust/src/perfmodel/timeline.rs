@@ -8,6 +8,12 @@
 //! overlap shows up as `comm_async` + `wait`; in-place RTP and naive DDP
 //! reductions as `comm_blocking`.
 //!
+//! Communication is charged PER RING HOP: every collective is expanded
+//! through `CommPrim::hop_schedule` into its `2(N-1)` / `N-1` / 1 hops,
+//! each hop costing `α + hop_bytes·β` and laying its own span — so the
+//! Gantt chart shows the real hop schedule of the ring fabric, and the
+//! totals still equal the closed-form α-β costs.
+//!
 //! The spans record a Gantt chart (rendered by `bench overlap_timeline`,
 //! reproducing the paper's Figs 3-5 as ASCII).
 
@@ -46,6 +52,8 @@ pub struct Timeline {
     /// Busy-time accumulators (utilization metrics).
     pub compute_busy: f64,
     pub comm_busy: f64,
+    /// Ring hops charged this step (each comm span is one hop).
+    pub hop_count: u64,
     /// Total allocator-pressure stall charged.
     pub stall_s: f64,
     pub stall_count: u64,
@@ -64,6 +72,7 @@ impl Timeline {
             pending: Vec::new(),
             compute_busy: 0.0,
             comm_busy: 0.0,
+            hop_count: 0,
             stall_s: 0.0,
             stall_count: 0,
             record: false,
@@ -92,26 +101,36 @@ impl Timeline {
         self.span(Stream::Compute, start, self.compute_t, label);
     }
 
-    /// Blocking collective: both streams synchronize, then the comm runs.
+    /// Lay one span per ring hop of `prim` starting at `start`; advances
+    /// and returns the comm-stream cursor. Each hop costs α + hop_bytes·β,
+    /// so the total equals the closed-form collective cost.
+    fn charge_hops(&mut self, label: &str, prim: CommPrim, bytes: u64, start: f64) -> f64 {
+        let mut t = start;
+        for hop_bytes in prim.hop_schedule(bytes, self.n) {
+            let dur = self.hw.link.hop_time_f(hop_bytes);
+            self.comm_busy += dur;
+            self.hop_count += 1;
+            self.span(Stream::Comm, t, t + dur, label);
+            t += dur;
+        }
+        t
+    }
+
+    /// Blocking collective: both streams synchronize, then the hops run
+    /// back to back on the comm stream.
     pub fn comm_blocking(&mut self, label: &str, prim: CommPrim, bytes: u64) {
-        let dur = self.hw.link.time(prim, bytes, self.n);
         let start = self.compute_t.max(self.comm_t);
-        let end = start + dur;
-        self.comm_busy += dur;
+        let end = self.charge_hops(label, prim, bytes, start);
         self.compute_t = end;
         self.comm_t = end;
-        self.span(Stream::Comm, start, end, label);
     }
 
     /// Async collective issued now (after the compute enqueued so far);
-    /// runs on the comm stream; completion must be `wait`ed.
+    /// its hops run on the comm stream; completion must be `wait`ed.
     pub fn comm_async(&mut self, label: &str, prim: CommPrim, bytes: u64) -> Token {
-        let dur = self.hw.link.time(prim, bytes, self.n);
         let start = self.comm_t.max(self.compute_t);
-        let end = start + dur;
-        self.comm_busy += dur;
+        let end = self.charge_hops(label, prim, bytes, start);
         self.comm_t = end;
-        self.span(Stream::Comm, start, end, label);
         self.pending.push(end);
         Token(self.pending.len() - 1)
     }
@@ -121,12 +140,9 @@ impl Timeline {
     /// the RTP property that "computation and communication start
     /// simultaneously" (§3.4.3).
     pub fn comm_async_eager(&mut self, label: &str, prim: CommPrim, bytes: u64) -> Token {
-        let dur = self.hw.link.time(prim, bytes, self.n);
         let start = self.comm_t;
-        let end = start + dur;
-        self.comm_busy += dur;
+        let end = self.charge_hops(label, prim, bytes, start);
         self.comm_t = end;
-        self.span(Stream::Comm, start, end, label);
         self.pending.push(end);
         Token(self.pending.len() - 1)
     }
@@ -177,6 +193,7 @@ impl Timeline {
         self.pending.clear();
         self.compute_busy = 0.0;
         self.comm_busy = 0.0;
+        self.hop_count = 0;
         self.stall_s = 0.0;
         self.stall_count = 0;
         self.spans.clear();
@@ -202,10 +219,11 @@ impl Timeline {
             out.push_str("|\n");
         }
         out.push_str(&format!(
-            "total {:.3} ms  compute busy {:.0}%  comm busy {:.0}%\n",
+            "total {:.3} ms  compute busy {:.0}%  comm busy {:.0}%  {} ring hops\n",
             total * 1e3,
             100.0 * self.compute_busy / total,
-            100.0 * self.comm_busy / total
+            100.0 * self.comm_busy / total,
+            self.hop_count
         ));
         out
     }
@@ -291,6 +309,31 @@ mod tests {
         assert_eq!(t.time(), 0.0);
         assert!(t.record);
         assert!(t.spans.is_empty());
+    }
+
+    #[test]
+    fn blocking_allreduce_charges_per_hop() {
+        let n = 8;
+        let mut t = Timeline::recording(a100_nvlink(), n);
+        let bytes = 64 << 20;
+        t.comm_blocking("ar", CommPrim::AllReduce, bytes);
+        // 2(N-1) hop spans, contiguous, summing to the closed-form cost
+        let spans: Vec<_> = t.spans.iter().filter(|s| s.stream == Stream::Comm).collect();
+        assert_eq!(spans.len(), 2 * (n - 1));
+        assert_eq!(t.hop_count, 2 * (n as u64 - 1));
+        for pair in spans.windows(2) {
+            assert!((pair[0].end - pair[1].start).abs() < 1e-15);
+        }
+        let closed = t.hw.link.allreduce(bytes, n);
+        assert!((t.time() - closed).abs() / closed < 1e-9);
+    }
+
+    #[test]
+    fn single_worker_collective_is_free_and_hopless() {
+        let mut t = Timeline::new(a100_nvlink(), 1);
+        t.comm_blocking("ar", CommPrim::AllReduce, 1 << 20);
+        assert_eq!(t.time(), 0.0);
+        assert_eq!(t.hop_count, 0);
     }
 
     #[test]

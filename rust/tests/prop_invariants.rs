@@ -4,7 +4,7 @@
 //! seeded prop harness (replay with PROP_SEED).
 
 use rtp::cluster::TraceEvent;
-use rtp::comm;
+use rtp::comm::{self, reference, RingFabric, RotationDir};
 use rtp::config::Strategy;
 use rtp::flat_param::FlatLayout;
 use rtp::memory::tracker::{MemCategory, MemTracker};
@@ -87,6 +87,33 @@ fn prop_rotation_count_is_per_unit_n_minus_1() {
 }
 
 #[test]
+fn prop_traced_step_exposes_collective_hops() {
+    // the replicated-grad allreduce at the end of an RTP step must appear
+    // in the trace as its full 2(N-1)-hop schedule
+    prop::check("per-hop trace", 4, |rng| {
+        let n = [2, 4][rng.below(2)];
+        let events = traced_step("tiny", n);
+        let hops = events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Hop { .. }))
+            .count();
+        let want = 2 * (n - 1);
+        if hops != want {
+            return Err(format!("n={n}: {hops} hop events, expected {want}"));
+        }
+        // hop indices must form the complete schedule 0..2(N-1)
+        for e in &events {
+            if let TraceEvent::Hop { hop, of, .. } = e {
+                if *of != want || *hop >= *of {
+                    return Err(format!("bad hop event {hop}/{of}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_collectives_algebra() {
     prop::check("collective algebra", 80, |rng| {
         let n = 1 + rng.below(6);
@@ -95,18 +122,154 @@ fn prop_collectives_algebra() {
         let bufs: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..len).map(|_| r.normal() as f32).collect())
             .collect();
-        // allreduce == allgather(reduce_scatter)
+        let fab = RingFabric::new(n);
+        let ports = fab.ports();
+        // allreduce == allgather(reduce_scatter), all through the fabric
         let mut ar = bufs.clone();
-        comm::allreduce_sum(&mut ar);
-        let rs = comm::reduce_scatter(&bufs);
-        let ag = comm::allgather(&rs);
-        prop::close(&ag, &ar[0], 1e-4)?;
+        comm::allreduce_sum(&ports, &mut ar);
+        let rs = comm::reduce_scatter(&ports, &bufs);
+        let ag = comm::allgather(&ports, &rs);
+        for full in &ag {
+            prop::close(full, &ar[0], 1e-4)?;
+        }
         // broadcast copies root everywhere
         let mut bc = bufs.clone();
         let root = rng.below(n);
-        comm::broadcast(&mut bc, root);
+        comm::broadcast(&ports, &mut bc, root);
         for b in &bc {
             prop::close(b, &bufs[root], 0.0)?;
+        }
+        if fab.in_flight() != 0 {
+            return Err("fabric not drained after collectives".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ring_collectives_match_god_view_references() {
+    // The tentpole equivalence: every chunked ring collective must agree
+    // with the one-shot god-view reference (kept only as a test oracle)
+    // for random N and lengths.
+    prop::check("ring == reference", 80, |rng| {
+        let n = 1 + rng.below(8);
+        let mut r = Rng::new(rng.next_u64());
+        let fab = RingFabric::new(n);
+        let ports = fab.ports();
+
+        // allreduce: any length, including 0 and < n
+        let len = rng.below(40);
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| r.normal() as f32).collect())
+            .collect();
+        let mut want = bufs.clone();
+        reference::allreduce_sum(&mut want);
+        let mut got = bufs.clone();
+        comm::allreduce_sum(&ports, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            prop::close(g, w, 1e-4)?;
+        }
+
+        // reduce-scatter + all-to-all need divisible lengths
+        let dlen = n * rng.below(6);
+        let dbufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dlen).map(|_| r.normal() as f32).collect())
+            .collect();
+        let want_rs = reference::reduce_scatter(&dbufs);
+        let got_rs = comm::reduce_scatter(&ports, &dbufs);
+        for (g, w) in got_rs.iter().zip(&want_rs) {
+            prop::close(g, w, 1e-4)?;
+        }
+        let want_a2a = reference::all_to_all(&dbufs);
+        let got_a2a = comm::all_to_all(&ports, &dbufs);
+        for (g, w) in got_a2a.iter().zip(&want_a2a) {
+            prop::close(g, w, 0.0)?;
+        }
+
+        // allgather tolerates ragged shards
+        let shards: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let l = rng.below(6);
+                (0..l).map(|_| r.normal() as f32).collect()
+            })
+            .collect();
+        let want_ag = reference::allgather(&shards);
+        for full in comm::allgather(&ports, &shards) {
+            prop::close(&full, &want_ag, 0.0)?;
+        }
+
+        if fab.in_flight() != 0 {
+            return Err("fabric not drained".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fabric_rotation_round_trips_and_tracks_shard_at() {
+    // N-1 rotations in each direction form the forward/backward halves of
+    // a round trip: after N-1 cw hops followed by N-1 ccw hops every
+    // payload is home, and at every intermediate t the placement matches
+    // comm::shard_at.
+    prop::check("rotation round trip", 80, |rng| {
+        let n = 1 + rng.below(8);
+        let fab = RingFabric::new(n);
+        let ports = fab.ports();
+        for dir in [RotationDir::Clockwise, RotationDir::CounterClockwise] {
+            let mut v: Vec<usize> = (0..n).collect();
+            for t in 1..n {
+                comm::rotate_ring(&ports, &mut v, dir);
+                for w in 0..n {
+                    let want = comm::shard_at(dir, w, t, n);
+                    if v[w] != want {
+                        return Err(format!(
+                            "{dir:?} n={n} t={t} w={w}: got {} want {want}",
+                            v[w]
+                        ));
+                    }
+                }
+            }
+            // N-1 hops back in the mirror direction must return home
+            let back = match dir {
+                RotationDir::Clockwise => RotationDir::CounterClockwise,
+                RotationDir::CounterClockwise => RotationDir::Clockwise,
+            };
+            for _ in 1..n {
+                comm::rotate_ring(&ports, &mut v, back);
+            }
+            if v != (0..n).collect::<Vec<_>>() {
+                return Err(format!("{dir:?} n={n}: round trip broken: {v:?}"));
+            }
+        }
+        if fab.in_flight() != 0 {
+            return Err("fabric not drained".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fabric_message_conservation() {
+    // hop accounting: a ring allreduce is exactly 2(N-1) hops of N
+    // rank-messages each; every message sent is delivered.
+    prop::check("fabric conservation", 30, |rng| {
+        let n = 2 + rng.below(7);
+        let len = n * (1 + rng.below(4));
+        let mut r = Rng::new(rng.next_u64());
+        let mut bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| r.normal() as f32).collect())
+            .collect();
+        let fab = RingFabric::new(n);
+        comm::allreduce_sum(&fab.ports(), &mut bufs);
+        let want = (2 * (n - 1) * n) as u64;
+        if fab.messages_sent() != want {
+            return Err(format!(
+                "n={n}: {} messages, expected {want}",
+                fab.messages_sent()
+            ));
+        }
+        if fab.messages_delivered() != fab.messages_sent() {
+            return Err("messages lost in flight".into());
         }
         Ok(())
     });
@@ -140,11 +303,14 @@ fn prop_flat_param_roundtrip_any_layout() {
         if flat.len() % n != 0 {
             return Err("padding not multiple of n".into());
         }
-        // shard + gather + unpack is the identity
-        let back = layout.unpack(&comm::allgather(&layout.shards(&flat)));
-        for (a, b) in back.iter().zip(&tensors) {
-            if a != b {
-                return Err("roundtrip mismatch".into());
+        // shard + fabric-gather + unpack is the identity, on every rank
+        let fab = RingFabric::new(n);
+        for full in layout.allgather_via(&fab.ports(), &layout.shards(&flat)) {
+            let back = layout.unpack(&full);
+            for (a, b) in back.iter().zip(&tensors) {
+                if a != b {
+                    return Err("roundtrip mismatch".into());
+                }
             }
         }
         Ok(())
