@@ -72,6 +72,9 @@ fn hop_decomposition_table(link: &LinkModel) {
 }
 
 /// Host-side data movement: god-view reference vs ring fabric, per call.
+/// The ring side runs each rank's single-port collective on the
+/// deterministic lockstep scheduler (so the measured cost includes the
+/// rank-scheduling machinery the engines actually pay).
 fn host_table() {
     let mut t = Table::new(
         "real data movement: god-view reference vs ring fabric (host, per call)",
@@ -80,7 +83,6 @@ fn host_table() {
     let mut rng = Rng::new(9);
     for n in [2usize, 4, 8, 16] {
         let fab = RingFabric::new(n);
-        let ports = fab.ports();
         for elems in [1usize << 12, 1 << 16, 1 << 19] {
             let len = (elems / n) * n; // divisible for reduce_scatter
             let bufs: Vec<Vec<f32>> = (0..n)
@@ -93,9 +95,12 @@ fn host_table() {
                 std::hint::black_box(&b);
             });
             let ring_ar = bench(2, 8, || {
-                let mut b = bufs.clone();
-                comm::allreduce_sum(&ports, &mut b);
-                std::hint::black_box(&b);
+                let out = comm::spmd(&fab, |port| {
+                    let mut b = bufs[port.rank()].clone();
+                    comm::allreduce_sum(&port, &mut b);
+                    b
+                });
+                std::hint::black_box(&out);
             });
             t.row(vec![
                 n.to_string(),
@@ -109,7 +114,9 @@ fn host_table() {
                 std::hint::black_box(reference::allgather(&bufs));
             });
             let ring_ag = bench(2, 8, || {
-                std::hint::black_box(comm::allgather(&ports, &bufs));
+                let out =
+                    comm::spmd(&fab, |port| comm::allgather(&port, &bufs[port.rank()]));
+                std::hint::black_box(&out);
             });
             t.row(vec![
                 n.to_string(),
@@ -123,7 +130,10 @@ fn host_table() {
                 std::hint::black_box(reference::reduce_scatter(&bufs));
             });
             let ring_rs = bench(2, 8, || {
-                std::hint::black_box(comm::reduce_scatter(&ports, &bufs));
+                let out = comm::spmd(&fab, |port| {
+                    comm::reduce_scatter(&port, &bufs[port.rank()])
+                });
+                std::hint::black_box(&out);
             });
             t.row(vec![
                 n.to_string(),
@@ -139,9 +149,14 @@ fn host_table() {
                 std::hint::black_box(&b);
             });
             let ring_rot = bench(2, 8, || {
-                let mut b = bufs.clone();
-                comm::rotate_ring(&ports, &mut b, RotationDir::Clockwise);
-                std::hint::black_box(&b);
+                let out = comm::spmd(&fab, |port| {
+                    comm::rotate_ring(
+                        &port,
+                        bufs[port.rank()].clone(),
+                        RotationDir::Clockwise,
+                    )
+                });
+                std::hint::black_box(&out);
             });
             t.row(vec![
                 n.to_string(),

@@ -12,7 +12,7 @@
 //!   reduce_scatter(M)  = (N-1)·(α + (M/N)·β)
 //!   allreduce(M)       = 2·(N-1)·(α + (M/N)·β)
 //!   broadcast(M)       = α·(N-1) + M·β                (pipelined ring)
-//!   all_to_all(M)      = (N-1)·(α + (M/N)·β)          (pairwise exchange)
+//!   all_to_all(M)      = (N-1)·α + M·β·(N-1)/2        (chunk-peeling relay)
 //!
 //! `M` is the *full* message size in bytes (for allgather/reduce_scatter:
 //! the reconstructed full buffer; for rotation/sendrecv: the shard moved).
@@ -45,8 +45,12 @@ impl CommPrim {
     /// sum reproduces the closed-form α-β cost exactly).
     ///
     /// - `SendRecv` / `Rotation`: 1 hop of the whole shard
-    /// - `AllGather` / `ReduceScatter` / `AllToAll`: N-1 hops of M/N
+    /// - `AllGather` / `ReduceScatter`: N-1 hops of M/N
     /// - `AllReduce`: 2(N-1) hops of M/N (reduce-scatter + all-gather)
+    /// - `AllToAll`: N-1 hops of SHRINKING size — hop `h` (1-based)
+    ///   carries `(N-h)·M/N` per rank, matching `comm::all_to_all`'s
+    ///   chunk-peeling relay byte-for-byte (each rank peels its chunk off
+    ///   the passing packet, so the packet sheds M/N per hop)
     /// - `Broadcast`: N-1 stages of M/(N-1) — the bottleneck LINK's
     ///   schedule; the pipeline keeps several links busy per stage, so
     ///   wall-clock is one link's serialized traffic (`comm::broadcast`
@@ -55,11 +59,18 @@ impl CommPrim {
         let m = bytes as f64;
         match self {
             CommPrim::SendRecv | CommPrim::Rotation => vec![m],
-            CommPrim::AllGather | CommPrim::ReduceScatter | CommPrim::AllToAll => {
+            CommPrim::AllGather | CommPrim::ReduceScatter => {
                 if n <= 1 {
                     Vec::new()
                 } else {
                     vec![m / n as f64; n - 1]
+                }
+            }
+            CommPrim::AllToAll => {
+                if n <= 1 {
+                    Vec::new()
+                } else {
+                    (1..n).map(|h| (n - h) as f64 * m / n as f64).collect()
                 }
             }
             CommPrim::AllReduce => {
@@ -160,12 +171,15 @@ impl LinkModel {
         self.alpha * (n - 1) as f64 + bytes as f64 * self.beta
     }
 
-    /// Pairwise-exchange all-to-all of `bytes` per worker.
+    /// Chunk-peeling ring all-to-all of `bytes` per worker: N-1 hops,
+    /// hop `h` moving `(N-h)·M/N` — the packet sheds one delivered chunk
+    /// per hop, so the bandwidth term sums to `M·(N-1)/2` (the honest
+    /// neighbor-relay cost: Σ_{h=1}^{N-1} (N-h)·M/N = M·(N-1)/2).
     pub fn all_to_all(&self, bytes: u64, n: usize) -> f64 {
         if n <= 1 {
             return 0.0;
         }
-        (n - 1) as f64 * (self.alpha + bytes as f64 / n as f64 * self.beta)
+        (n - 1) as f64 * self.alpha + bytes as f64 * self.beta * (n - 1) as f64 / 2.0
     }
 
     /// Dispatch by primitive. `bytes` is the full-message convention above.

@@ -1,14 +1,15 @@
 //! The rank-local ring fabric: per-rank `RingPort` endpoints over
-//! per-worker mailboxes.
+//! per-worker mailboxes, shared between OS threads.
 //!
 //! This is the substrate the paper's §3.3 rotation primitive and §3.4.3
 //! overlap analysis actually live on: communication happens one ring hop
 //! at a time, and every transfer is something a single rank does —
 //! `port.send(peer, msg)` / `port.recv(peer)` — never a god-view mutation
-//! of all ranks' buffers at once. The chunked ring collectives in
-//! [`crate::comm`] and the engines' rotation loops are built exclusively
-//! from these two calls, so the hop structure (who moves what, when) is
-//! explicit in every schedule the engines produce.
+//! of all ranks' buffers at once. The collectives in [`crate::comm`] and
+//! the engines' rotation loops are built exclusively from these two calls,
+//! each rank driving only its OWN port (true SPMD), so the hop structure
+//! (who moves what, when) is explicit in every schedule the engines
+//! produce.
 //!
 //! Topology rules:
 //! - The fabric is a ring: a rank may only address its clockwise neighbor
@@ -16,31 +17,74 @@
 //!   panics — multi-hop transfers must be written as relays, which is
 //!   exactly what keeps the per-hop cost model honest.
 //! - Each directed link is a FIFO mailbox owned by the *receiving* worker.
-//!   A hop is "everyone sends, then everyone receives"; the mailbox slot is
-//!   the in-flight double buffer of the out-of-place rotation.
-//! - `recv` on an empty mailbox panics: in the single-process SPMD
-//!   simulation that is a protocol bug (the distributed equivalent would
-//!   deadlock), so it should fail loudly.
+//!   The mailbox slot is the in-flight double buffer of the out-of-place
+//!   rotation.
 //!
-//! Payloads are type-erased (`Box<dyn Any>`): the same fabric carries
-//! `Vec<f32>` collective chunks, whole shard structs during RTP rotation,
-//! and bare shard ids in virtual mode — the schedule is identical whether
-//! or not real data rides along (the repo's real/virtual design invariant).
+//! Execution model: rank bodies run as one closure per rank inside a
+//! *round* ([`RingFabric::run_round`]), under one of two policies:
 //!
-//! Handles are `Rc<RefCell<..>>` clones: the simulation is single-threaded
-//! by design (ranks are stepped in program order), and the interior
-//! mutability is what lets a rank send from `&self` contexts such as
-//! `Engine::gather_params`. Putting ranks on real threads means swapping
-//! this inner cell for channels — the port API is already shaped for it.
+//! - [`LaunchPolicy::Lockstep`] — the deterministic scheduler. Rank
+//!   bodies execute one at a time (threads used as coroutines), in
+//!   round-robin order: a rank runs until its `recv` finds an empty
+//!   mailbox, then yields to the next runnable rank. The schedule depends
+//!   only on program structure, never on OS timing, so traces, tracker
+//!   interleavings and panics are exactly reproducible. If every live
+//!   rank is parked on an empty mailbox the round panics immediately —
+//!   the single-process equivalent of a distributed deadlock.
+//! - [`LaunchPolicy::Threaded`] — real concurrency. All rank threads run
+//!   freely; `recv` blocks on a condvar until the message arrives, with a
+//!   watchdog timeout (`RTP_FABRIC_TIMEOUT_SECS`, default 20) so protocol
+//!   bugs fail fast instead of hanging the test runner.
+//!
+//! Outside any round, `recv` on an empty mailbox panics immediately (a
+//! single-threaded driver that receives before the matching send is a
+//! protocol bug). A panicking rank *poisons* the fabric: every peer
+//! blocked in the round is woken and panics too, so a round never hangs
+//! on a dead participant.
+//!
+//! Payloads are type-erased (`Box<dyn Any + Send>`): the same fabric
+//! carries `Vec<f32>` collective chunks, whole shard structs during RTP
+//! rotation, and bare shard ids in virtual mode — the schedule is
+//! identical whether or not real data rides along (the repo's
+//! real/virtual design invariant).
 
 use std::any::Any;
-use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::fmt;
-use std::rc::Rc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
 
 /// One directed-link mailbox: FIFO of in-flight messages.
-type Mailbox = VecDeque<Box<dyn Any>>;
+type Mailbox = VecDeque<Box<dyn Any + Send>>;
+
+/// How a round's rank bodies are scheduled. See the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchPolicy {
+    /// Deterministic round-robin, one rank at a time (threads as
+    /// coroutines; yields only at empty-mailbox `recv`).
+    Lockstep,
+    /// One free-running OS thread per rank; `recv` blocks until the
+    /// message arrives.
+    Threaded,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RankState {
+    /// May be scheduled.
+    Ready,
+    /// Parked in `recv`, waiting for a message from `peer`.
+    Waiting(usize),
+    /// Rank body returned (or panicked).
+    Done,
+}
+
+/// Lockstep-round scheduler state.
+#[derive(Debug)]
+struct Sched {
+    /// The rank currently allowed to run.
+    turn: usize,
+    state: Vec<RankState>,
+}
 
 struct FabricInner {
     n: usize,
@@ -51,32 +95,80 @@ struct FabricInner {
     sent: u64,
     /// Messages delivered to their destination rank.
     delivered: u64,
+    /// Present while a lockstep round is running.
+    sched: Option<Sched>,
+    /// True while a threaded round is running (recv blocks).
+    threaded: bool,
+    /// Watchdog for threaded recv.
+    recv_timeout: Duration,
+    /// A rank panicked mid-round: wake and fail everyone.
+    poisoned: bool,
+    /// Why the round was poisoned (surfaced in every peer's panic).
+    poison_msg: String,
+}
+
+struct FabricShared {
+    m: Mutex<FabricInner>,
+    cv: Condvar,
 }
 
 /// The shared ring interconnect of one worker set. Create one per
 /// [`crate::cluster::Cluster`]; hand each rank its [`RingPort`].
 #[derive(Clone)]
 pub struct RingFabric {
-    inner: Rc<RefCell<FabricInner>>,
+    shared: Arc<FabricShared>,
+}
+
+fn lock_inner(shared: &FabricShared) -> MutexGuard<'_, FabricInner> {
+    // a poisoned mutex only means a peer panicked while holding it; the
+    // fabric has its own `poisoned` flag for orderly teardown
+    shared.m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn poison(g: &mut FabricInner, msg: &str) {
+    if !g.poisoned {
+        g.poisoned = true;
+        g.poison_msg = msg.to_string();
+    }
+}
+
+fn recv_timeout_from_env() -> Duration {
+    let secs = std::env::var("RTP_FABRIC_TIMEOUT_SECS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(20);
+    Duration::from_secs(secs.max(1))
 }
 
 impl RingFabric {
     pub fn new(n: usize) -> RingFabric {
         assert!(n >= 1, "ring fabric needs at least one rank");
         RingFabric {
-            inner: Rc::new(RefCell::new(FabricInner {
-                n,
-                mailboxes: (0..n)
-                    .map(|_| (0..n).map(|_| VecDeque::new()).collect())
-                    .collect(),
-                sent: 0,
-                delivered: 0,
-            })),
+            shared: Arc::new(FabricShared {
+                m: Mutex::new(FabricInner {
+                    n,
+                    mailboxes: (0..n)
+                        .map(|_| (0..n).map(|_| VecDeque::new()).collect())
+                        .collect(),
+                    sent: 0,
+                    delivered: 0,
+                    sched: None,
+                    threaded: false,
+                    recv_timeout: Duration::from_secs(20),
+                    poisoned: false,
+                    poison_msg: String::new(),
+                }),
+                cv: Condvar::new(),
+            }),
         }
     }
 
+    fn lock(&self) -> MutexGuard<'_, FabricInner> {
+        lock_inner(&self.shared)
+    }
+
     pub fn n(&self) -> usize {
-        self.inner.borrow().n
+        self.lock().n
     }
 
     /// Rank `rank`'s endpoint. Ports are cheap handle clones; a rank may
@@ -84,29 +176,263 @@ impl RingFabric {
     pub fn port(&self, rank: usize) -> RingPort {
         let n = self.n();
         assert!(rank < n, "rank {rank} out of range for {n}-rank fabric");
-        RingPort { rank, n, inner: Rc::clone(&self.inner) }
+        RingPort { rank, n, shared: Arc::clone(&self.shared) }
     }
 
-    /// One port per rank, in rank order — the SPMD driver's view.
+    /// One port per rank, in rank order (handed out at cluster
+    /// construction; each rank keeps only its own).
     pub fn ports(&self) -> Vec<RingPort> {
         (0..self.n()).map(|r| self.port(r)).collect()
     }
 
     /// Total messages handed to the fabric so far.
     pub fn messages_sent(&self) -> u64 {
-        self.inner.borrow().sent
+        self.lock().sent
     }
 
     /// Total messages delivered to their destination rank so far.
     pub fn messages_delivered(&self) -> u64 {
-        self.inner.borrow().delivered
+        self.lock().delivered
     }
 
     /// Messages currently sitting in mailboxes. A completed collective or
     /// rotation schedule must leave this at 0 — the engines assert it at
     /// every step boundary.
     pub fn in_flight(&self) -> usize {
-        (self.messages_sent() - self.messages_delivered()) as usize
+        let g = self.lock();
+        (g.sent - g.delivered) as usize
+    }
+
+    /// Poison the active round with an ORDERLY abort (a rank body is
+    /// returning an error, e.g. a simulated OOM): every peer blocked on
+    /// the fabric is woken and panics with `msg`, so the round unwinds
+    /// instead of hanging on the aborting rank's never-sent messages. The
+    /// caller of [`RingFabric::try_round`] decides how to surface it.
+    pub fn abort_round(&self, msg: &str) {
+        let mut g = self.lock();
+        poison(&mut g, msg);
+        drop(g);
+        self.shared.cv.notify_all();
+    }
+
+    /// Run one closure per rank to completion under `policy`, returning
+    /// the per-rank results in rank order. This is the ONLY way rank
+    /// bodies that block in `recv` may execute; a panic in any rank
+    /// poisons the round (all peers fail) and is re-raised here.
+    pub fn run_round<'env, T: Send>(
+        &self,
+        policy: LaunchPolicy,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
+    ) -> Vec<T> {
+        let n_tasks = tasks.len();
+        let results = self.try_round(policy, tasks);
+        let mut out = Vec::with_capacity(n_tasks);
+        let mut first_panic = None;
+        for r in results {
+            match r {
+                Ok(v) => out.push(v),
+                Err(p) => {
+                    first_panic.get_or_insert(p);
+                }
+            }
+        }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
+        out
+    }
+
+    /// [`RingFabric::run_round`] without the panic re-raise: per-rank
+    /// results come back as `thread::Result`s so the caller can prefer an
+    /// orderly error over the secondary poisoned-round panics it caused
+    /// in blocked peers.
+    pub fn try_round<'env, T: Send>(
+        &self,
+        policy: LaunchPolicy,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
+    ) -> Vec<std::thread::Result<T>> {
+        let n_tasks = tasks.len();
+        assert_eq!(
+            n_tasks,
+            self.n(),
+            "run_round wants exactly one task per fabric rank"
+        );
+        {
+            let mut g = self.lock();
+            assert!(
+                g.sched.is_none() && !g.threaded,
+                "nested fabric rounds are not allowed"
+            );
+            g.poisoned = false;
+            g.poison_msg.clear();
+            match policy {
+                LaunchPolicy::Lockstep => {
+                    g.sched = Some(Sched {
+                        turn: 0,
+                        state: vec![RankState::Ready; n_tasks],
+                    });
+                }
+                LaunchPolicy::Threaded => {
+                    g.threaded = true;
+                    g.recv_timeout = recv_timeout_from_env();
+                }
+            }
+        }
+        let results: Vec<std::thread::Result<T>> = std::thread::scope(|s| {
+            let handles: Vec<_> = tasks
+                .into_iter()
+                .enumerate()
+                .map(|(rank, task)| {
+                    s.spawn(move || {
+                        if policy == LaunchPolicy::Lockstep {
+                            self.lockstep_enter(rank);
+                        }
+                        let mut guard = RoundGuard {
+                            fab: self,
+                            rank,
+                            lockstep: policy == LaunchPolicy::Lockstep,
+                            completed: false,
+                        };
+                        let out = task();
+                        guard.completed = true;
+                        drop(guard);
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+        {
+            let mut g = self.lock();
+            g.sched = None;
+            g.threaded = false;
+            if g.poisoned {
+                // an aborted round can leave messages mid-collective in
+                // the mailboxes; flush them so the fabric is reusable
+                for row in &mut g.mailboxes {
+                    for link in row {
+                        link.clear();
+                    }
+                }
+                g.delivered = g.sent;
+            }
+            g.poisoned = false;
+            g.poison_msg.clear();
+        }
+        results
+    }
+
+    /// Block until it is `rank`'s turn in the active lockstep round.
+    fn lockstep_enter(&self, rank: usize) {
+        let mut g = self.lock();
+        loop {
+            if g.poisoned {
+                let why = g.poison_msg.clone();
+                drop(g);
+                panic!("rank {rank}: fabric round poisoned ({why})");
+            }
+            match g.sched.as_ref() {
+                Some(s) if s.turn == rank => return,
+                Some(_) => {
+                    g = self.shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+                None => panic!("rank {rank}: no lockstep round active"),
+            }
+        }
+    }
+
+    /// Mark `rank`'s body finished (normally or by panic) and hand the
+    /// turn on. Called from a drop guard — must never panic.
+    fn lockstep_done(&self, rank: usize, panicked: bool) {
+        let mut g = self.lock();
+        if let Some(s) = g.sched.as_mut() {
+            s.state[rank] = RankState::Done;
+        }
+        if panicked {
+            poison(&mut g, "a peer rank's body panicked");
+        } else if g.sched.is_some() && advance_turn(&mut g) {
+            // remaining ranks all wait on messages that can never come
+            poison(
+                &mut g,
+                "ring deadlock: a finished rank left every live peer waiting",
+            );
+        }
+        drop(g);
+        self.shared.cv.notify_all();
+    }
+}
+
+/// Move the lockstep turn to the next runnable rank (round-robin from the
+/// current turn). Returns true if no rank is runnable but some are still
+/// live — a deadlock.
+fn advance_turn(g: &mut FabricInner) -> bool {
+    let n_ranks = match g.sched.as_ref() {
+        Some(s) => s.state.len(),
+        None => return false,
+    };
+    let from = g.sched.as_ref().unwrap().turn;
+    for step in 1..=n_ranks {
+        let r = (from + step) % n_ranks;
+        match g.sched.as_ref().unwrap().state[r] {
+            RankState::Done => continue,
+            RankState::Ready => {
+                g.sched.as_mut().unwrap().turn = r;
+                return false;
+            }
+            RankState::Waiting(peer) => {
+                if !g.mailboxes[r][peer].is_empty() {
+                    let s = g.sched.as_mut().unwrap();
+                    s.state[r] = RankState::Ready;
+                    s.turn = r;
+                    return false;
+                }
+            }
+        }
+    }
+    g.sched
+        .as_ref()
+        .unwrap()
+        .state
+        .iter()
+        .any(|s| !matches!(s, RankState::Done))
+}
+
+/// Who waits on whom — the deadlock diagnostic.
+fn wait_graph(g: &FabricInner) -> String {
+    match g.sched.as_ref() {
+        Some(s) => s
+            .state
+            .iter()
+            .enumerate()
+            .filter_map(|(r, st)| match st {
+                RankState::Waiting(p) => Some(format!("r{r}<-r{p}")),
+                _ => None,
+            })
+            .collect::<Vec<_>>()
+            .join(" "),
+        None => String::new(),
+    }
+}
+
+/// Panic-safe round teardown for one rank body.
+struct RoundGuard<'a> {
+    fab: &'a RingFabric,
+    rank: usize,
+    lockstep: bool,
+    completed: bool,
+}
+
+impl Drop for RoundGuard<'_> {
+    fn drop(&mut self) {
+        let panicked = !self.completed;
+        if self.lockstep {
+            self.fab.lockstep_done(self.rank, panicked);
+        } else if panicked {
+            let mut g = self.fab.lock();
+            poison(&mut g, "a peer rank's body panicked");
+            drop(g);
+            self.fab.shared.cv.notify_all();
+        }
     }
 }
 
@@ -122,12 +448,14 @@ impl fmt::Debug for RingFabric {
 }
 
 /// Rank `rank`'s endpoint on the ring fabric. All engine communication
-/// goes through `send`/`recv` on these.
+/// goes through `send`/`recv` on these; each rank drives only its own
+/// port. Ports are `Send` — the `Threaded` launch policy runs one rank
+/// per OS thread over the same fabric.
 #[derive(Clone)]
 pub struct RingPort {
     rank: usize,
     n: usize,
-    inner: Rc<RefCell<FabricInner>>,
+    shared: Arc<FabricShared>,
 }
 
 impl RingPort {
@@ -160,42 +488,143 @@ impl RingPort {
         );
     }
 
-    /// Enqueue `msg` on the directed link to neighbor `peer`. One ring hop
-    /// is "every rank sends, then every rank receives".
-    pub fn send<T: Any>(&self, peer: usize, msg: T) {
+    fn lock(&self) -> MutexGuard<'_, FabricInner> {
+        lock_inner(&self.shared)
+    }
+
+    /// Enqueue `msg` on the directed link to neighbor `peer`. Never
+    /// blocks (the mailbox is unbounded — the schedule, not backpressure,
+    /// bounds in-flight messages).
+    pub fn send<T: Any + Send>(&self, peer: usize, msg: T) {
         self.assert_neighbor(peer);
-        let mut inner = self.inner.borrow_mut();
-        inner.mailboxes[peer][self.rank].push_back(Box::new(msg));
-        inner.sent += 1;
+        let mut g = self.lock();
+        if g.poisoned {
+            let why = g.poison_msg.clone();
+            drop(g);
+            panic!("rank {}: fabric round poisoned ({why})", self.rank);
+        }
+        g.mailboxes[peer][self.rank].push_back(Box::new(msg));
+        g.sent += 1;
+        drop(g);
+        self.shared.cv.notify_all();
     }
 
     /// Dequeue the oldest message neighbor `peer` sent to this rank.
-    /// Panics if the mailbox is empty (protocol bug — the distributed
-    /// equivalent would deadlock) or if the payload type does not match.
+    ///
+    /// Blocking behavior depends on the active round policy (module
+    /// docs): lockstep yields the turn until the message arrives (ring
+    /// deadlock panics), threaded blocks on the condvar (watchdog
+    /// timeout panics), and outside any round an empty mailbox panics
+    /// immediately (protocol bug). Panics on payload type mismatch.
     pub fn recv<T: Any>(&self, peer: usize) -> T {
         self.assert_neighbor(peer);
-        let mut inner = self.inner.borrow_mut();
-        let msg = inner.mailboxes[self.rank][peer].pop_front().unwrap_or_else(|| {
-            panic!(
-                "rank {} recv from {peer}: mailbox empty (ring protocol bug)",
+        let mut g = self.lock();
+        loop {
+            if g.poisoned {
+                let why = g.poison_msg.clone();
+                drop(g);
+                panic!("rank {}: fabric round poisoned ({why})", self.rank);
+            }
+            if let Some(msg) = g.mailboxes[self.rank][peer].pop_front() {
+                g.delivered += 1;
+                drop(g);
+                return *msg.downcast::<T>().unwrap_or_else(|_| {
+                    panic!(
+                        "rank {} recv from {peer}: payload type mismatch (expected {})",
+                        self.rank,
+                        std::any::type_name::<T>()
+                    )
+                });
+            }
+            if g.sched.is_some() {
+                g = self.lockstep_yield(g, peer);
+            } else if g.threaded {
+                g = self.threaded_wait(g, peer);
+            } else {
+                panic!(
+                    "rank {} recv from {peer}: mailbox empty (ring protocol bug)",
+                    self.rank
+                );
+            }
+        }
+    }
+
+    /// Lockstep: park this rank as waiting-on-`peer`, hand the turn on,
+    /// and block until the scheduler hands it back (which it only does
+    /// once the message is there).
+    fn lockstep_yield<'g>(
+        &self,
+        mut g: MutexGuard<'g, FabricInner>,
+        peer: usize,
+    ) -> MutexGuard<'g, FabricInner> {
+        {
+            let s = g.sched.as_mut().expect("lockstep round active");
+            debug_assert_eq!(s.turn, self.rank, "only the turn holder may run");
+            s.state[self.rank] = RankState::Waiting(peer);
+        }
+        if advance_turn(&mut g) {
+            let diag = wait_graph(&g);
+            let msg =
+                format!("ring deadlock: every live rank is waiting on an empty mailbox ({diag})");
+            poison(&mut g, &msg);
+            drop(g);
+            self.shared.cv.notify_all();
+            panic!("{msg}");
+        }
+        self.shared.cv.notify_all();
+        loop {
+            if g.poisoned {
+                let why = g.poison_msg.clone();
+                drop(g);
+                panic!("rank {}: fabric round poisoned ({why})", self.rank);
+            }
+            match g.sched.as_ref() {
+                Some(s) if s.turn == self.rank => return g,
+                Some(_) => {
+                    g = self.shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+                // round torn down under us — can only follow a poison
+                None => {
+                    drop(g);
+                    panic!("rank {}: lockstep round ended mid-recv", self.rank);
+                }
+            }
+        }
+    }
+
+    /// Threaded: block until a message (or the watchdog fires).
+    fn threaded_wait<'g>(
+        &self,
+        g: MutexGuard<'g, FabricInner>,
+        peer: usize,
+    ) -> MutexGuard<'g, FabricInner> {
+        let timeout = g.recv_timeout;
+        let (mut g, res) = self
+            .shared
+            .cv
+            .wait_timeout(g, timeout)
+            .unwrap_or_else(|e| e.into_inner());
+        if res.timed_out()
+            && !g.poisoned
+            && g.mailboxes[self.rank][peer].is_empty()
+        {
+            let msg = format!(
+                "rank {} recv from {peer}: no message after {timeout:?} — \
+                 ring deadlock (threaded round watchdog)",
                 self.rank
-            )
-        });
-        inner.delivered += 1;
-        drop(inner);
-        *msg.downcast::<T>().unwrap_or_else(|_| {
-            panic!(
-                "rank {} recv from {peer}: payload type mismatch (expected {})",
-                self.rank,
-                std::any::type_name::<T>()
-            )
-        })
+            );
+            poison(&mut g, &msg);
+            drop(g);
+            self.shared.cv.notify_all();
+            panic!("{msg}");
+        }
+        g
     }
 
     /// Messages waiting in this rank's mailbox from neighbor `peer`.
     pub fn pending_from(&self, peer: usize) -> usize {
         self.assert_neighbor(peer);
-        self.inner.borrow().mailboxes[self.rank][peer].len()
+        self.lock().mailboxes[self.rank][peer].len()
     }
 }
 
@@ -263,7 +692,7 @@ mod tests {
 
     #[test]
     #[should_panic(expected = "mailbox empty")]
-    fn recv_on_empty_mailbox_panics() {
+    fn recv_on_empty_mailbox_panics_outside_rounds() {
         let fab = RingFabric::new(2);
         fab.port(0).recv::<usize>(1);
     }
@@ -285,5 +714,130 @@ mod tests {
         assert_eq!(p.prev(), 0);
         p.send(0, 5usize);
         assert_eq!(p.recv::<usize>(0), 5);
+    }
+
+    /// One neighbor exchange per rank, written rank-locally.
+    fn exchange_round(policy: LaunchPolicy, n: usize) -> Vec<usize> {
+        let fab = RingFabric::new(n);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..n)
+            .map(|r| {
+                let port = fab.port(r);
+                Box::new(move || {
+                    port.send(port.next(), r * 10);
+                    port.recv::<usize>(port.prev())
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let out = fab.run_round(policy, tasks);
+        assert_eq!(fab.in_flight(), 0);
+        out
+    }
+
+    #[test]
+    fn lockstep_round_exchanges_blockingly() {
+        for n in [1usize, 2, 3, 4, 8] {
+            let got = exchange_round(LaunchPolicy::Lockstep, n);
+            let want: Vec<usize> = (0..n).map(|r| ((r + n - 1) % n) * 10).collect();
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn threaded_round_exchanges_blockingly() {
+        for n in [1usize, 2, 4, 8] {
+            let got = exchange_round(LaunchPolicy::Threaded, n);
+            let want: Vec<usize> = (0..n).map(|r| ((r + n - 1) % n) * 10).collect();
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn lockstep_order_is_deterministic_round_robin() {
+        // ranks record the global order in which their bodies ran to
+        // completion; with no blocking recv the order is exactly 0..n
+        let n = 5;
+        let fab = RingFabric::new(n);
+        let order = Mutex::new(Vec::new());
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+            .map(|r| {
+                let order = &order;
+                Box::new(move || {
+                    order.lock().unwrap().push(r);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        fab.run_round(LaunchPolicy::Lockstep, tasks);
+        assert_eq!(*order.lock().unwrap(), (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "ring deadlock")]
+    fn lockstep_detects_deadlock() {
+        let fab = RingFabric::new(2);
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+            .map(|r| {
+                let port = fab.port(r);
+                // everyone receives first — nobody ever sends
+                Box::new(move || {
+                    let _: usize = port.recv(port.prev());
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        fab.run_round(LaunchPolicy::Lockstep, tasks);
+    }
+
+    #[test]
+    fn rank_panic_poisons_the_round() {
+        let fab = RingFabric::new(2);
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+            .map(|r| {
+                let port = fab.port(r);
+                Box::new(move || {
+                    if r == 0 {
+                        panic!("rank 0 exploded");
+                    }
+                    // rank 1 would otherwise wait forever
+                    let _: usize = port.recv(port.prev());
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fab.run_round(LaunchPolicy::Lockstep, tasks);
+        }));
+        assert!(caught.is_err());
+        // the fabric is reusable after the failed round
+        let p = fab.port(0);
+        p.send(1, 3usize);
+        assert_eq!(fab.port(1).recv::<usize>(0), 3);
+    }
+
+    #[test]
+    fn threaded_round_survives_heavy_bidirectional_traffic() {
+        // concurrent sends in both directions on every link must neither
+        // deadlock nor drop or reorder messages (per-link FIFO)
+        let n = 4;
+        let k = 200usize;
+        let fab = RingFabric::new(n);
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..n)
+            .map(|r| {
+                let port = fab.port(r);
+                Box::new(move || {
+                    for i in 0..k {
+                        port.send(port.next(), (r, i));
+                        port.send(port.prev(), (r, i + 1000));
+                    }
+                    for i in 0..k {
+                        let (src, seq): (usize, usize) = port.recv(port.prev());
+                        assert_eq!((src, seq), (port.prev(), i));
+                        let (src, seq): (usize, usize) = port.recv(port.next());
+                        assert_eq!((src, seq), (port.next(), i + 1000));
+                    }
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        fab.run_round(LaunchPolicy::Threaded, tasks);
+        assert_eq!(fab.in_flight(), 0);
+        assert_eq!(fab.messages_sent(), (2 * n * k) as u64);
+        assert_eq!(fab.messages_delivered(), (2 * n * k) as u64);
     }
 }

@@ -5,15 +5,21 @@
 //! Architecture (this is the substrate of the paper's two contributions):
 //!
 //! - [`fabric`] — `RingFabric` / `RingPort`: per-rank endpoints over
-//!   per-worker mailboxes. A rank can only talk to its ring neighbors, one
-//!   hop at a time; every engine transfer goes through `port.send` /
-//!   `port.recv`.
-//! - this module — the collectives, decomposed into their ring-hop
-//!   schedules: all-reduce is reduce-scatter + all-gather in `2(N-1)`
-//!   hops of `M/N` bytes; all-gather / reduce-scatter are `N-1` hops;
+//!   per-worker mailboxes, shared across OS threads. A rank can only talk
+//!   to its ring neighbors, one hop at a time; every engine transfer goes
+//!   through `port.send` / `port.recv`. Rank bodies run inside fabric
+//!   *rounds* under a [`fabric::LaunchPolicy`]: `Lockstep` (deterministic
+//!   round-robin coroutines) or `Threaded` (one OS thread per rank).
+//! - this module — the collectives, written RANK-LOCALLY: each function
+//!   takes ONE port (this rank's) and this rank's buffer, and performs
+//!   this rank's side of the hop schedule. All-reduce is reduce-scatter +
+//!   all-gather in `2(N-1)` hops of `M/N`; all-gather / reduce-scatter
+//!   are `N-1` hops; all-to-all is an `N-1`-hop chunk-peeling relay;
 //!   rotation ([`rotate_ring`]) is ONE hop of the full shard — the §3.4.2
-//!   identity "(N-1) rotations ≡ one allgather" is now structural, not a
-//!   formula.
+//!   identity "(N-1) rotations ≡ one allgather" is structural, not a
+//!   formula. A collective only completes when every rank runs it — call
+//!   them from rank bodies inside a fabric round (or use [`spmd`] /
+//!   [`spmd_with`] to drive all ranks from a single test call site).
 //! - [`rotation`] — the schedule math (`RotationDir`, `shard_at`): which
 //!   shard sits on which rank after `t` hops.
 //! - [`cost`] — the α-β model. `CommPrim::hop_schedule` exposes each
@@ -28,10 +34,10 @@
 //! only charge the cost model — the *schedule* is identical because both
 //! modes run the same engine code.
 //!
-//! All collectives here take the full rank set's ports (symmetric SPMD:
-//! the single-process simulation steps every rank through the same
-//! schedule in program order). Each function documents its hop count; a
-//! completed collective always leaves the fabric drained.
+//! Every function documents its hop count; a completed collective always
+//! leaves the fabric drained. Because each directed link is FIFO and each
+//! rank issues its port operations in a fixed program order, results are
+//! bit-identical under the lockstep and threaded launch policies.
 
 pub mod cost;
 pub mod fabric;
@@ -39,9 +45,10 @@ pub mod reference;
 pub mod rotation;
 
 use std::any::Any;
+use std::collections::VecDeque;
 
 pub use cost::{CommPrim, LinkModel};
-pub use fabric::{RingFabric, RingPort};
+pub use fabric::{LaunchPolicy, RingFabric, RingPort};
 pub use rotation::{shard_at, RotationDir};
 
 /// Split `len` elements into `n` contiguous chunks whose sizes differ by
@@ -60,250 +67,228 @@ fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
     bounds
 }
 
-/// Ring all-reduce (sum) in `2(N-1)` hops: a reduce-scatter pass (each
-/// rank ends owning the fully-reduced chunk matching its rank) followed by
-/// an all-gather pass. Every hop moves ~`len/N` elements per rank to its
-/// clockwise neighbor. DDP's gradient reduction; also the replicated-grad
-/// reduction in every multi-worker engine.
+/// Drive one rank-local closure per rank through `fabric` on the
+/// deterministic lockstep scheduler and return the per-rank results —
+/// the single-call-site entry point tests, benches and oracles use to
+/// exercise the SPMD collectives below.
+pub fn spmd<T, F>(fabric: &RingFabric, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(RingPort) -> T + Sync,
+{
+    spmd_with(fabric, LaunchPolicy::Lockstep, f)
+}
+
+/// [`spmd`] under an explicit launch policy.
+pub fn spmd_with<T, F>(fabric: &RingFabric, policy: LaunchPolicy, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(RingPort) -> T + Sync,
+{
+    let f = &f;
+    let tasks: Vec<Box<dyn FnOnce() -> T + Send + '_>> = (0..fabric.n())
+        .map(|r| {
+            let port = fabric.port(r);
+            Box::new(move || f(port)) as Box<dyn FnOnce() -> T + Send + '_>
+        })
+        .collect();
+    fabric.run_round(policy, tasks)
+}
+
+/// This rank's side of a ring all-reduce (sum) in `2(N-1)` hops: a
+/// reduce-scatter pass (this rank ends owning the fully-reduced chunk
+/// matching its rank) followed by an all-gather pass. Every hop moves
+/// ~`len/N` elements to the clockwise neighbor. DDP's gradient reduction;
+/// also the replicated-grad reduction in every multi-worker engine.
 ///
-/// Works for any buffer length (chunks may be uneven or empty).
-pub fn allreduce_sum(ports: &[RingPort], bufs: &mut [Vec<f32>]) {
-    let n = bufs.len();
+/// Works for any buffer length (chunks may be uneven or empty); all
+/// ranks must pass same-length buffers.
+pub fn allreduce_sum(port: &RingPort, buf: &mut [f32]) {
+    let n = port.n();
     if n <= 1 {
         return;
     }
-    assert_eq!(ports.len(), n, "allreduce port/buffer arity");
-    let len = bufs[0].len();
-    assert!(
-        bufs.iter().all(|b| b.len() == len),
-        "allreduce buffers must be same-length"
-    );
-    let ch = chunk_bounds(len, n);
+    let w = port.rank();
+    let ch = chunk_bounds(buf.len(), n);
 
-    // reduce-scatter pass: after hop s, chunk (w - s - 1) mod n on rank w
-    // has accumulated s + 2 contributions; after n-1 hops rank w owns the
-    // complete chunk w.
+    // reduce-scatter pass: after hop s, chunk (w - s - 1) mod n on this
+    // rank has accumulated s + 2 contributions; after n-1 hops rank w
+    // owns the complete chunk w.
     for s in 0..n - 1 {
-        for (w, port) in ports.iter().enumerate() {
-            let (a, b) = ch[(w + n - s - 1) % n];
-            port.send(port.next(), bufs[w][a..b].to_vec());
-        }
-        for (w, port) in ports.iter().enumerate() {
-            let (a, b) = ch[(w + 2 * n - s - 2) % n];
-            let msg: Vec<f32> = port.recv(port.prev());
-            for (dst, v) in bufs[w][a..b].iter_mut().zip(&msg) {
-                *dst += v;
-            }
+        let (a, b) = ch[(w + n - s - 1) % n];
+        port.send(port.next(), buf[a..b].to_vec());
+        let (a, b) = ch[(w + 2 * n - s - 2) % n];
+        let msg: Vec<f32> = port.recv(port.prev());
+        debug_assert_eq!(msg.len(), b - a, "allreduce peers disagree on length");
+        for (dst, v) in buf[a..b].iter_mut().zip(&msg) {
+            *dst += v;
         }
     }
     // all-gather pass: complete chunks circulate until every rank has all.
     for s in 0..n - 1 {
-        for (w, port) in ports.iter().enumerate() {
-            let (a, b) = ch[(w + n - s) % n];
-            port.send(port.next(), bufs[w][a..b].to_vec());
-        }
-        for (w, port) in ports.iter().enumerate() {
-            let (a, b) = ch[(w + 2 * n - s - 1) % n];
-            let msg: Vec<f32> = port.recv(port.prev());
-            bufs[w][a..b].copy_from_slice(&msg);
-        }
+        let (a, b) = ch[(w + n - s) % n];
+        port.send(port.next(), buf[a..b].to_vec());
+        let (a, b) = ch[(w + 2 * n - s - 1) % n];
+        let msg: Vec<f32> = port.recv(port.prev());
+        debug_assert_eq!(msg.len(), b - a, "allreduce peers disagree on length");
+        buf[a..b].copy_from_slice(&msg);
     }
 }
 
-/// Ring all-gather in `N-1` hops, returning each rank's view of all N
-/// shard payloads (unconcatenated, in rank order). Shards may have
-/// different lengths. This is the primitive; [`allgather`] concatenates.
-pub fn allgather_parts(ports: &[RingPort], shards: &[Vec<f32>]) -> Vec<Vec<Vec<f32>>> {
-    let n = shards.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    assert_eq!(ports.len(), n, "allgather port/shard arity");
+/// This rank's side of a ring all-gather in `N-1` hops, returning its
+/// view of all N shard payloads (unconcatenated, in shard order). Shards
+/// may have different lengths. This is the primitive; [`allgather`]
+/// concatenates.
+pub fn allgather_parts(port: &RingPort, mine: &[f32]) -> Vec<Vec<f32>> {
+    let n = port.n();
+    let w = port.rank();
     if n == 1 {
-        return vec![vec![shards[0].clone()]];
+        return vec![mine.to_vec()];
     }
-    // hold[w][c] = shard c's payload once it has reached rank w
-    let mut hold: Vec<Vec<Option<Vec<f32>>>> = (0..n)
-        .map(|w| {
-            (0..n)
-                .map(|c| if c == w { Some(shards[w].clone()) } else { None })
-                .collect()
-        })
-        .collect();
+    // hold[c] = shard c's payload once it has reached this rank
+    let mut hold: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+    hold[w] = Some(mine.to_vec());
     for s in 0..n - 1 {
-        for (w, port) in ports.iter().enumerate() {
-            let c = (w + n - s) % n;
-            let payload = hold[w][c].clone().expect("allgather schedule hole");
-            port.send(port.next(), payload);
-        }
-        for (w, port) in ports.iter().enumerate() {
-            let c = (w + 2 * n - s - 1) % n;
-            hold[w][c] = Some(port.recv(port.prev()));
-        }
+        let c_send = (w + n - s) % n;
+        let payload = hold[c_send].clone().expect("allgather schedule hole");
+        port.send(port.next(), payload);
+        let c_recv = (w + 2 * n - s - 1) % n;
+        hold[c_recv] = Some(port.recv(port.prev()));
     }
     hold.into_iter()
-        .map(|row| row.into_iter().map(|o| o.expect("allgather incomplete")).collect())
+        .map(|o| o.expect("allgather incomplete"))
         .collect()
 }
 
-/// Ring all-gather in `N-1` hops: every rank ends with the concatenation
-/// `[shard_0 | shard_1 | ... | shard_{N-1}]`. FSDP's parameter
-/// reconstruction. Returns one full buffer per rank (all equal).
-pub fn allgather(ports: &[RingPort], shards: &[Vec<f32>]) -> Vec<Vec<f32>> {
-    allgather_parts(ports, shards)
-        .into_iter()
-        .map(|parts| {
-            let mut full = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
-            for p in parts {
-                full.extend_from_slice(&p);
-            }
-            full
-        })
-        .collect()
-}
-
-/// Ring reduce-scatter (sum) in `N-1` hops: input is one full-length
-/// buffer per rank; rank `w` ends with the sum of everyone's shard `w`.
-/// FSDP's gradient reduction. All inputs must be equal length and
-/// divisible by N. Empty input returns empty (the seed panicked here).
-pub fn reduce_scatter(ports: &[RingPort], fulls: &[Vec<f32>]) -> Vec<Vec<f32>> {
-    let n = fulls.len();
-    if n == 0 {
-        return Vec::new();
+/// This rank's side of a ring all-gather in `N-1` hops: returns the
+/// concatenation `[shard_0 | shard_1 | ... | shard_{N-1}]`. FSDP's
+/// parameter reconstruction.
+pub fn allgather(port: &RingPort, mine: &[f32]) -> Vec<f32> {
+    let parts = allgather_parts(port, mine);
+    let mut full = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+    for p in parts {
+        full.extend_from_slice(&p);
     }
-    assert_eq!(ports.len(), n, "reduce_scatter port/buffer arity");
-    let len = fulls[0].len();
-    assert!(
-        fulls.iter().all(|f| f.len() == len),
-        "reduce_scatter buffers must be same-length"
-    );
+    full
+}
+
+/// This rank's side of a ring reduce-scatter (sum) in `N-1` hops: input
+/// is this rank's full-length buffer; rank `w` ends with the sum of
+/// everyone's shard `w`. FSDP's gradient reduction. All inputs must be
+/// equal length and divisible by N. Empty input returns empty.
+pub fn reduce_scatter(port: &RingPort, full: &[f32]) -> Vec<f32> {
+    let n = port.n();
+    let w = port.rank();
+    let len = full.len();
     assert_eq!(len % n, 0, "reduce_scatter length {len} not divisible by {n}");
     if n == 1 {
-        return vec![fulls[0].clone()];
+        return full.to_vec();
     }
     let shard = len / n;
-    let mut acc: Vec<Vec<f32>> = fulls.to_vec();
+    let mut acc = full.to_vec();
     for s in 0..n - 1 {
-        for (w, port) in ports.iter().enumerate() {
-            let c = (w + n - s - 1) % n;
-            port.send(port.next(), acc[w][c * shard..(c + 1) * shard].to_vec());
-        }
-        for (w, port) in ports.iter().enumerate() {
-            let c = (w + 2 * n - s - 2) % n;
-            let msg: Vec<f32> = port.recv(port.prev());
-            for (dst, v) in acc[w][c * shard..(c + 1) * shard].iter_mut().zip(&msg) {
-                *dst += v;
-            }
+        let c = (w + n - s - 1) % n;
+        port.send(port.next(), acc[c * shard..(c + 1) * shard].to_vec());
+        let c = (w + 2 * n - s - 2) % n;
+        let msg: Vec<f32> = port.recv(port.prev());
+        debug_assert_eq!(msg.len(), shard, "reduce_scatter peers disagree on length");
+        for (dst, v) in acc[c * shard..(c + 1) * shard].iter_mut().zip(&msg) {
+            *dst += v;
         }
     }
-    acc.iter()
-        .enumerate()
-        .map(|(w, a)| a[w * shard..(w + 1) * shard].to_vec())
-        .collect()
+    acc[w * shard..(w + 1) * shard].to_vec()
 }
 
-/// Pipelined ring broadcast from `root`: the payload is split into N-1
-/// chunks that stream clockwise down the ring, so each LINK forwards
-/// exactly `M` bytes over N-1 chunk-sized stages — matching the
-/// `α(N-1) + Mβ` closed form and the `hop_schedule` of N-1 hops of
-/// `M/(N-1)` (the bottleneck link's stages; the pipeline keeps up to
-/// N-1 links busy in the same stage). `(N-1)²` chunk messages total.
-pub fn broadcast(ports: &[RingPort], bufs: &mut [Vec<f32>], root: usize) {
-    let n = bufs.len();
+/// This rank's side of a pipelined ring broadcast from `root`: the
+/// payload is split into N-1 chunks that stream clockwise down the ring.
+/// The root sends every chunk once; each non-terminal relay forwards each
+/// chunk once — `(N-1)²` chunk messages total, and the bottleneck link
+/// carries `M` bytes over its N-1 chunk stages, matching the
+/// `α(N-1) + Mβ` closed form.
+pub fn broadcast(port: &RingPort, buf: &mut [f32], root: usize) {
+    let n = port.n();
     if n <= 1 {
         return;
     }
-    assert_eq!(ports.len(), n, "broadcast port/buffer arity");
-    let len = bufs[root].len();
-    assert!(
-        bufs.iter().all(|b| b.len() == len),
-        "broadcast length mismatch"
-    );
-    let ch = chunk_bounds(len, n - 1);
-    // pipeline stage t: the link (root+j) -> (root+j+1) carries chunk
-    // t-j when 0 <= t-j < n-1; link j forwards a chunk the stage after
-    // receiving it, so every send payload is already resident.
-    for t in 0..2 * n - 3 {
-        let active: Vec<usize> =
-            (0..n - 1).filter(|&j| t >= j && t - j < n - 1).collect();
-        for &j in &active {
-            let src = (root + j) % n;
-            let (a, b) = ch[t - j];
-            ports[src].send((src + 1) % n, bufs[src][a..b].to_vec());
+    let w = port.rank();
+    // position along the pipeline: 0 = root, n-1 = last receiver
+    let j = (w + n - root) % n;
+    let ch = chunk_bounds(buf.len(), n - 1);
+    if j == 0 {
+        for &(a, b) in &ch {
+            port.send(port.next(), buf[a..b].to_vec());
         }
-        for &j in &active {
-            let src = (root + j) % n;
-            let dst = (src + 1) % n;
-            let (a, b) = ch[t - j];
-            let msg: Vec<f32> = ports[dst].recv(src);
-            bufs[dst][a..b].copy_from_slice(&msg);
+    } else {
+        for &(a, b) in &ch {
+            let msg: Vec<f32> = port.recv(port.prev());
+            debug_assert_eq!(msg.len(), b - a, "broadcast peers disagree on length");
+            buf[a..b].copy_from_slice(&msg);
+            if j < n - 1 {
+                port.send(port.next(), msg);
+            }
         }
     }
 }
 
-/// Ring all-to-all in `N-1` hops: `bufs[w]` is rank w's send buffer split
-/// into N equal chunks; chunk `d` goes to rank `d`. Rank w ends with
-/// `[chunk_w_of_0 | chunk_w_of_1 | ...]` — the MoE baselines' token
-/// shuffle. Implemented as a relay: each source buffer travels the ring
-/// and every rank extracts its chunk as the buffer passes through (the
-/// same schedule RTP's Expert-Partition rotation uses).
-pub fn all_to_all(ports: &[RingPort], bufs: &[Vec<f32>]) -> Vec<Vec<f32>> {
-    let n = bufs.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    assert_eq!(ports.len(), n, "all_to_all port/buffer arity");
-    let len = bufs[0].len();
-    assert!(bufs.iter().all(|b| b.len() == len));
+/// This rank's side of a ring all-to-all in `N-1` hops: `mine` is this
+/// rank's send buffer split into N equal chunks; chunk `d` goes to rank
+/// `d`. Returns `[chunk_w_of_0 | chunk_w_of_1 | ...]` — the MoE
+/// baselines' token shuffle.
+///
+/// Implemented as a CHUNK-PEELING relay: each source's packet travels
+/// clockwise carrying only the chunks not yet delivered, and every rank
+/// peels its own chunk off the front as the packet passes through. Hop
+/// `h` (1-based) therefore moves `(N-h)·M/N` bytes per rank — exactly
+/// the `CommPrim::AllToAll` hop schedule the α-β model charges
+/// (`(N-1)·α + M·β·(N-1)/2` total), byte-for-byte.
+pub fn all_to_all(port: &RingPort, mine: &[f32]) -> Vec<f32> {
+    let n = port.n();
+    let w = port.rank();
+    let len = mine.len();
     assert_eq!(len % n, 0, "all_to_all length {len} not divisible by {n}");
     if n == 1 {
-        return vec![bufs[0].clone()];
+        return mine.to_vec();
     }
     let chunk = len / n;
-    let mut out: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; len]).collect();
+    let mut out = vec![0.0f32; len];
     // own chunk needs no hop
-    for w in 0..n {
-        out[w][w * chunk..(w + 1) * chunk]
-            .copy_from_slice(&bufs[w][w * chunk..(w + 1) * chunk]);
-    }
-    // each source buffer relays clockwise; rank w peels its chunk off as
-    // the buffer visits
-    let mut traveling: Vec<(usize, Vec<f32>)> =
-        (0..n).map(|w| (w, bufs[w].clone())).collect();
+    out[w * chunk..(w + 1) * chunk].copy_from_slice(&mine[w * chunk..(w + 1) * chunk]);
+    // my packet: chunks for the other ranks in ring-visiting order
+    // (front = my clockwise neighbor, who peels first)
+    let mut packet: (usize, VecDeque<Vec<f32>>) = (
+        w,
+        (1..n)
+            .map(|d| {
+                let dst = (w + d) % n;
+                mine[dst * chunk..(dst + 1) * chunk].to_vec()
+            })
+            .collect(),
+    );
     for _hop in 0..n - 1 {
-        for (w, port) in ports.iter().enumerate() {
-            let t = std::mem::replace(&mut traveling[w], (usize::MAX, Vec::new()));
-            port.send(port.next(), t);
-        }
-        for (w, port) in ports.iter().enumerate() {
-            let (src, data): (usize, Vec<f32>) = port.recv(port.prev());
-            out[w][src * chunk..(src + 1) * chunk]
-                .copy_from_slice(&data[w * chunk..(w + 1) * chunk]);
-            traveling[w] = (src, data);
-        }
+        port.send(port.next(), packet);
+        let (src, mut chunks): (usize, VecDeque<Vec<f32>>) = port.recv(port.prev());
+        let my_chunk = chunks.pop_front().expect("peeling relay exhausted early");
+        debug_assert_eq!(my_chunk.len(), chunk, "all_to_all peers disagree on length");
+        out[src * chunk..(src + 1) * chunk].copy_from_slice(&my_chunk);
+        packet = (src, chunks);
     }
+    debug_assert!(packet.1.is_empty(), "undelivered chunks left in relay");
     out
 }
 
-/// One ring rotation hop (the paper's §3.3 primitive): every rank sends
-/// its element to `dir.send_peer` and receives from `dir.recv_peer`
-/// through the fabric, so after the exchange rank `w` holds what its
-/// upstream neighbor held. Generic over the payload: the engines rotate
-/// shard structs in real mode and bare shard ids in virtual mode —
-/// identical schedule either way.
-pub fn rotate_ring<T: Any>(ports: &[RingPort], bufs: &mut Vec<T>, dir: RotationDir) {
-    let n = bufs.len();
+/// One ring rotation hop (the paper's §3.3 primitive): this rank sends
+/// `item` to `dir.send_peer` and receives its upstream neighbor's from
+/// `dir.recv_peer`. Generic over the payload: the engines rotate shard
+/// structs in real mode and bare shard ids in virtual mode — identical
+/// schedule either way.
+pub fn rotate_ring<T: Any + Send>(port: &RingPort, item: T, dir: RotationDir) -> T {
+    let n = port.n();
     if n <= 1 {
-        return;
+        return item;
     }
-    assert_eq!(ports.len(), n, "rotate port/buffer arity");
-    let old = std::mem::take(bufs);
-    for (w, item) in old.into_iter().enumerate() {
-        ports[w].send(dir.send_peer(w, n), item);
-    }
-    *bufs = (0..n)
-        .map(|w| ports[w].recv::<T>(dir.recv_peer(w, n)))
-        .collect();
+    let w = port.rank();
+    port.send(dir.send_peer(w, n), item);
+    port.recv(dir.recv_peer(w, n))
 }
 
 #[cfg(test)]
@@ -316,12 +301,6 @@ mod tests {
         (0..n)
             .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
             .collect()
-    }
-
-    fn ports_of(n: usize) -> (RingFabric, Vec<RingPort>) {
-        let fab = RingFabric::new(n.max(1));
-        let ports = fab.ports();
-        (fab, ports)
     }
 
     #[test]
@@ -352,32 +331,41 @@ mod tests {
 
     #[test]
     fn ring_allreduce_is_sum() {
-        let (fab, ports) = ports_of(3);
-        let mut bufs = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
-        allreduce_sum(&ports, &mut bufs);
-        for b in &bufs {
+        let bufs = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        let fab = RingFabric::new(3);
+        let got = spmd(&fab, |port| {
+            let mut b = bufs[port.rank()].clone();
+            allreduce_sum(&port, &mut b);
+            b
+        });
+        for b in &got {
             assert_eq!(b, &vec![111.0, 222.0]);
         }
         assert_eq!(fab.in_flight(), 0);
     }
 
     #[test]
-    fn ring_allreduce_matches_reference() {
-        prop::check("ring ar == ref ar", 60, |rng| {
+    fn ring_allreduce_matches_reference_under_both_policies() {
+        prop::check("ring ar == ref ar", 40, |rng| {
             let n = 1 + rng.below(8);
             let len = rng.below(30); // any length, incl. 0 and < n
             let mut r = Rng::new(rng.next_u64());
             let bufs = rand_bufs(&mut r, n, len);
             let mut want = bufs.clone();
             reference::allreduce_sum(&mut want);
-            let (fab, ports) = ports_of(n);
-            let mut got = bufs;
-            allreduce_sum(&ports, &mut got);
-            for (g, w) in got.iter().zip(&want) {
-                prop::close(g, w, 1e-4)?;
-            }
-            if fab.in_flight() != 0 {
-                return Err("fabric not drained".into());
+            for policy in [LaunchPolicy::Lockstep, LaunchPolicy::Threaded] {
+                let fab = RingFabric::new(n);
+                let got = spmd_with(&fab, policy, |port| {
+                    let mut b = bufs[port.rank()].clone();
+                    allreduce_sum(&port, &mut b);
+                    b
+                });
+                for (g, w) in got.iter().zip(&want) {
+                    prop::close(g, w, 1e-4)?;
+                }
+                if fab.in_flight() != 0 {
+                    return Err("fabric not drained".into());
+                }
             }
             Ok(())
         });
@@ -387,9 +375,11 @@ mod tests {
     fn ring_allreduce_performs_2n_minus_2_hops() {
         // 2(N-1) hops × N rank-messages per hop
         for n in [2usize, 4, 8] {
-            let (fab, ports) = ports_of(n);
-            let mut bufs = vec![vec![1.0f32; 4 * n]; n];
-            allreduce_sum(&ports, &mut bufs);
+            let fab = RingFabric::new(n);
+            spmd(&fab, |port| {
+                let mut b = vec![1.0f32; 4 * n];
+                allreduce_sum(&port, &mut b);
+            });
             assert_eq!(fab.messages_sent(), (2 * (n - 1) * n) as u64, "n={n}");
             assert_eq!(fab.in_flight(), 0);
         }
@@ -397,9 +387,9 @@ mod tests {
 
     #[test]
     fn ring_allgather_concatenates_in_rank_order() {
-        let (_fab, ports) = ports_of(3);
         let shards = vec![vec![1.0], vec![2.0], vec![3.0]];
-        for full in allgather(&ports, &shards) {
+        let fab = RingFabric::new(3);
+        for full in spmd(&fab, |port| allgather(&port, &shards[port.rank()])) {
             assert_eq!(full, vec![1.0, 2.0, 3.0]);
         }
     }
@@ -417,8 +407,8 @@ mod tests {
                 })
                 .collect();
             let want = reference::allgather(&shards);
-            let (fab, ports) = ports_of(n);
-            for full in allgather(&ports, &shards) {
+            let fab = RingFabric::new(n);
+            for full in spmd(&fab, |port| allgather(&port, &shards[port.rank()])) {
                 prop::close(&full, &want, 0.0)?;
             }
             if fab.in_flight() != 0 {
@@ -436,8 +426,8 @@ mod tests {
             let mut r = Rng::new(rng.next_u64());
             let fulls = rand_bufs(&mut r, n, len);
             let want = reference::reduce_scatter(&fulls);
-            let (fab, ports) = ports_of(n);
-            let got = reduce_scatter(&ports, &fulls);
+            let fab = RingFabric::new(n);
+            let got = spmd(&fab, |port| reduce_scatter(&port, &fulls[port.rank()]));
             for (g, w) in got.iter().zip(&want) {
                 prop::close(g, w, 1e-4)?;
             }
@@ -455,12 +445,20 @@ mod tests {
             let len = n * (1 + rng.below(8));
             let mut r = Rng::new(rng.next_u64());
             let bufs = rand_bufs(&mut r, n, len);
-            let (_fab, ports) = ports_of(n);
-            let mut ar = bufs.clone();
-            allreduce_sum(&ports, &mut ar);
-            let shards = reduce_scatter(&ports, &bufs);
-            let fulls = allgather(&ports, &shards);
-            prop::close(&fulls[0], &ar[0], 1e-5)
+            let fab = RingFabric::new(n);
+            let (ar, full0) = {
+                let out = spmd(&fab, |port| {
+                    let w = port.rank();
+                    let mut ar = bufs[w].clone();
+                    allreduce_sum(&port, &mut ar);
+                    let shard = reduce_scatter(&port, &bufs[w]);
+                    let full = allgather(&port, &shard);
+                    (ar, full)
+                });
+                let (a, f) = (&out[0].0, &out[0].1);
+                (a.clone(), f.clone())
+            };
+            prop::close(&full0, &ar, 1e-5)
         });
     }
 
@@ -474,9 +472,12 @@ mod tests {
             let root = rng.below(n);
             let mut want = bufs.clone();
             reference::broadcast(&mut want, root);
-            let (fab, ports) = ports_of(n);
-            let mut got = bufs;
-            broadcast(&ports, &mut got, root);
+            let fab = RingFabric::new(n);
+            let got = spmd(&fab, |port| {
+                let mut b = bufs[port.rank()].clone();
+                broadcast(&port, &mut b, root);
+                b
+            });
             for (g, w) in got.iter().zip(&want) {
                 prop::close(g, w, 0.0)?;
             }
@@ -495,8 +496,8 @@ mod tests {
             let mut r = Rng::new(rng.next_u64());
             let bufs = rand_bufs(&mut r, n, len);
             let want = reference::all_to_all(&bufs);
-            let (fab, ports) = ports_of(n);
-            let got = all_to_all(&ports, &bufs);
+            let fab = RingFabric::new(n);
+            let got = spmd(&fab, |port| all_to_all(&port, &bufs[port.rank()]));
             for (g, w) in got.iter().zip(&want) {
                 prop::close(g, w, 0.0)?;
             }
@@ -514,8 +515,11 @@ mod tests {
             let len = n * (1 + rng.below(4));
             let mut r = Rng::new(rng.next_u64());
             let bufs = rand_bufs(&mut r, n, len);
-            let (_fab, ports) = ports_of(n);
-            let twice = all_to_all(&ports, &all_to_all(&ports, &bufs));
+            let fab = RingFabric::new(n);
+            let twice = spmd(&fab, |port| {
+                let once = all_to_all(&port, &bufs[port.rank()]);
+                all_to_all(&port, &once)
+            });
             for (a, b) in twice.iter().zip(&bufs) {
                 prop::close(a, b, 0.0)?;
             }
@@ -524,14 +528,29 @@ mod tests {
     }
 
     #[test]
+    fn all_to_all_peels_chunks_per_hop() {
+        // the peeling relay sends exactly n(n-1) chunk-carrying messages
+        // and the per-hop payload matches the cost model's shrinking
+        // schedule (checked indirectly: total chunks moved = n(n-1))
+        for n in [2usize, 3, 4, 8] {
+            let fab = RingFabric::new(n);
+            let bufs: Vec<Vec<f32>> =
+                (0..n).map(|w| vec![w as f32; 4 * n]).collect();
+            spmd(&fab, |port| all_to_all(&port, &bufs[port.rank()]));
+            // one packet message per rank per hop
+            assert_eq!(fab.messages_sent(), (n * (n - 1)) as u64, "n={n}");
+            assert_eq!(fab.in_flight(), 0);
+        }
+    }
+
+    #[test]
     fn rotate_ring_matches_reference_rotation() {
         prop::check("ring rotate == ref rotate", 60, |rng| {
             let n = 1 + rng.below(8);
-            let (_fab, ports) = ports_of(n);
+            let fab = RingFabric::new(n);
             for dir in [RotationDir::Clockwise, RotationDir::CounterClockwise] {
-                let mut got: Vec<usize> = (0..n).collect();
+                let got = spmd(&fab, |port| rotate_ring(&port, port.rank(), dir));
                 let mut want: Vec<usize> = (0..n).collect();
-                rotate_ring(&ports, &mut got, dir);
                 match dir {
                     RotationDir::Clockwise => reference::rotate_cw(&mut want),
                     RotationDir::CounterClockwise => reference::rotate_ccw(&mut want),
@@ -546,19 +565,27 @@ mod tests {
 
     #[test]
     fn allreduce_single_worker_noop() {
-        let (_fab, ports) = ports_of(1);
-        let mut bufs = vec![vec![5.0, 6.0]];
-        allreduce_sum(&ports, &mut bufs);
-        assert_eq!(bufs[0], vec![5.0, 6.0]);
+        let fab = RingFabric::new(1);
+        let got = spmd(&fab, |port| {
+            let mut b = vec![5.0f32, 6.0];
+            allreduce_sum(&port, &mut b);
+            b
+        });
+        assert_eq!(got[0], vec![5.0, 6.0]);
     }
 
     #[test]
-    fn empty_rank_sets_do_not_panic() {
-        let (_fab, ports) = ports_of(1);
-        assert!(reduce_scatter(&ports[..0], &[]).is_empty());
-        assert!(allgather(&ports[..0], &[]).is_empty());
-        assert!(all_to_all(&ports[..0], &[]).is_empty());
-        broadcast(&ports[..0], &mut [], 0);
-        allreduce_sum(&ports[..0], &mut []);
+    fn single_rank_collectives_are_local() {
+        let fab = RingFabric::new(1);
+        let got = spmd(&fab, |port| {
+            let rs = reduce_scatter(&port, &[1.0, 2.0]);
+            let ag = allgather(&port, &rs);
+            let a2a = all_to_all(&port, &ag);
+            let mut bc = a2a.clone();
+            broadcast(&port, &mut bc, 0);
+            bc
+        });
+        assert_eq!(got[0], vec![1.0, 2.0]);
+        assert_eq!(fab.messages_sent(), 0);
     }
 }

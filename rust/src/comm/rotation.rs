@@ -56,14 +56,17 @@ mod tests {
     use crate::comm::{reference, rotate_ring};
     use crate::util::prop;
 
-    /// `t` fabric rotation hops over a fresh (0..n) payload vector.
+    /// `t` fabric rotation hops, each rank carrying its own payload
+    /// through its own port (starting from shard id == rank).
     fn rotated(n: usize, t: usize, dir: RotationDir) -> Vec<usize> {
         let fab = RingFabric::new(n.max(1));
-        let ports = fab.ports();
-        let mut v: Vec<usize> = (0..n).collect();
-        for _ in 0..t {
-            rotate_ring(&ports, &mut v, dir);
-        }
+        let v = crate::comm::spmd(&fab, |port| {
+            let mut held = port.rank();
+            for _ in 0..t {
+                held = rotate_ring(&port, held, dir);
+            }
+            held
+        });
         assert_eq!(fab.in_flight(), 0, "rotation left messages in flight");
         v
     }
@@ -97,10 +100,11 @@ mod tests {
     #[test]
     fn cw_then_ccw_cancels() {
         let fab = RingFabric::new(3);
-        let ports = fab.ports();
-        let mut v = vec![10, 20, 30];
-        rotate_ring(&ports, &mut v, RotationDir::Clockwise);
-        rotate_ring(&ports, &mut v, RotationDir::CounterClockwise);
+        let v = crate::comm::spmd(&fab, |port| {
+            let held = 10 * (port.rank() + 1);
+            let held = rotate_ring(&port, held, RotationDir::Clockwise);
+            rotate_ring(&port, held, RotationDir::CounterClockwise)
+        });
         assert_eq!(v, vec![10, 20, 30]);
     }
 
@@ -173,20 +177,21 @@ mod tests {
         // bwd (N-1 ccw hops) it holds shard w again (paper Fig 1).
         for n in 1..=8 {
             let fab = RingFabric::new(n);
-            let ports = fab.ports();
             for w in 0..n {
                 let after_fwd = shard_at(RotationDir::Clockwise, w, n - 1, n);
                 assert_eq!(after_fwd, (w + 1) % n);
             }
-            // bwd starts from the post-forward assignment
-            let mut v: Vec<usize> = (0..n)
-                .map(|x| shard_at(RotationDir::Clockwise, x, n - 1, n))
-                .collect();
-            for _ in 0..n - 1 {
-                rotate_ring(&ports, &mut v, RotationDir::CounterClockwise);
-            }
-            for w in 0..n {
-                assert_eq!(v[w], w, "n={n} w={w}");
+            // bwd starts from the post-forward assignment, rank-locally
+            let v = crate::comm::spmd(&fab, |port| {
+                let mut held =
+                    shard_at(RotationDir::Clockwise, port.rank(), n - 1, n);
+                for _ in 0..n - 1 {
+                    held = rotate_ring(&port, held, RotationDir::CounterClockwise);
+                }
+                held
+            });
+            for (w, held) in v.iter().enumerate() {
+                assert_eq!(*held, w, "n={n} w={w}");
             }
         }
     }

@@ -110,30 +110,24 @@ impl FlatLayout {
         (0..self.n).map(|w| self.shard(flat, w)).collect()
     }
 
-    /// Ring-allgather the N rank-shards through the fabric: every rank
-    /// ends with its own reconstructed full (padded) flat buffer, after
-    /// N-1 neighbor hops. `shards[w]` must be rank w's shard.
-    pub fn allgather_via(&self, ports: &[RingPort], shards: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        assert_eq!(shards.len(), self.n, "allgather_via shard arity");
-        for s in shards {
-            assert_eq!(s.len(), self.shard_len(), "allgather_via shard length");
-        }
-        comm::allgather(ports, shards)
+    /// This rank's side of the ring-allgather of the N rank-shards:
+    /// reconstructs the full (padded) flat buffer from this rank's shard
+    /// in N-1 neighbor hops through this rank's own port. Every rank of
+    /// the round must call this with its shard.
+    pub fn allgather_via(&self, port: &RingPort, shard: &[f32]) -> Vec<f32> {
+        assert_eq!(port.n(), self.n, "allgather_via rank arity");
+        assert_eq!(shard.len(), self.shard_len(), "allgather_via shard length");
+        comm::allgather(port, shard)
     }
 
-    /// Ring reduce-scatter of per-rank full (padded) buffers back into
-    /// rank shards (sum), after N-1 neighbor hops. `fulls[w]` is rank w's
-    /// staged full gradient.
-    pub fn reduce_scatter_via(
-        &self,
-        ports: &[RingPort],
-        fulls: &[Vec<f32>],
-    ) -> Vec<Vec<f32>> {
-        assert_eq!(fulls.len(), self.n, "reduce_scatter_via buffer arity");
-        for f in fulls {
-            assert_eq!(f.len(), self.padded, "reduce_scatter_via buffer length");
-        }
-        comm::reduce_scatter(ports, fulls)
+    /// This rank's side of the ring reduce-scatter of per-rank full
+    /// (padded) buffers back into rank shards (sum), in N-1 neighbor
+    /// hops. `full` is this rank's staged full gradient; returns this
+    /// rank's reduced shard.
+    pub fn reduce_scatter_via(&self, port: &RingPort, full: &[f32]) -> Vec<f32> {
+        assert_eq!(port.n(), self.n, "reduce_scatter_via rank arity");
+        assert_eq!(full.len(), self.padded, "reduce_scatter_via buffer length");
+        comm::reduce_scatter(port, full)
     }
 }
 
@@ -195,7 +189,10 @@ mod tests {
             let flat: Vec<f32> = (0..l.padded).map(|i| i as f32).collect();
             let shards = l.shards(&flat);
             let fab = crate::comm::RingFabric::new(n);
-            for back in l.allgather_via(&fab.ports(), &shards) {
+            let backs = crate::comm::spmd(&fab, |port| {
+                l.allgather_via(&port, &shards[port.rank()])
+            });
+            for back in backs {
                 prop::close(&back, &flat, 0.0)?;
             }
             if fab.in_flight() != 0 {
@@ -214,7 +211,9 @@ mod tests {
                 .map(|w| (0..l.padded).map(|i| (w * 100 + i) as f32).collect())
                 .collect();
             let fab = crate::comm::RingFabric::new(n);
-            let got = l.reduce_scatter_via(&fab.ports(), &fulls);
+            let got = crate::comm::spmd(&fab, |port| {
+                l.reduce_scatter_via(&port, &fulls[port.rank()])
+            });
             let want = crate::comm::reference::reduce_scatter(&fulls);
             for (g, w) in got.iter().zip(&want) {
                 prop::close(g, w, 1e-5)?;

@@ -20,8 +20,11 @@
 //!   as test oracles
 //! - [`flat_param`] — the paper's FlatParameter pack/shard structure (it
 //!   moves through the fabric: `allgather_via` / `reduce_scatter_via`)
-//! - [`parallel`] — the five engines (single/ddp/fsdp/tp/rtp), all
-//!   communicating exclusively through rank-local fabric ports
+//! - [`parallel`] — the five engines (single/ddp/fsdp/tp/rtp) as SPMD
+//!   per-rank `RankEngine` participants behind a `ClusterEngine` facade,
+//!   all communicating exclusively through rank-local fabric ports and
+//!   executed by a pluggable `Launcher` (deterministic lockstep
+//!   round-robin, or one OS thread per rank)
 //! - [`perfmodel`] — hardware model + two-stream timeline charging
 //!   communication hop by hop
 //! - [`util`] — json / rng / stats / prop substrates (offline substitutes)

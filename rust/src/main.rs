@@ -14,7 +14,7 @@ use anyhow::{anyhow, bail, Result};
 use rtp::bench_util::Table;
 use rtp::cli::Args;
 use rtp::config::{presets, OptimizerKind, Strategy, TrainCfg};
-use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind, Launcher};
 use rtp::perfmodel::{by_name, simulate, SimSpec};
 use rtp::train::{train, MarkovCorpus, Optimizer};
 use rtp::util::bytes::human;
@@ -31,6 +31,7 @@ SUBCOMMANDS
             --engine single|ddp|fsdp|tp|rtp-inplace|rtp-outofplace
             --workers N  --global-batch B  --steps K  --lr F
             --optimizer sgd|momentum|adam  --exec pjrt|pallas|oracle
+            --launcher lockstep|thread  (or RTP_LAUNCHER env)
             --seed S  --quiet
   simulate  model one step at paper scale (virtual mode)
             --preset gpt2-500m|...  --engine ...  --workers N
@@ -59,6 +60,15 @@ fn strategy(args: &Args) -> Result<Strategy> {
     Strategy::parse(name).ok_or_else(|| anyhow!("unknown --engine {name:?}"))
 }
 
+fn launcher(args: &Args) -> Result<Launcher> {
+    Ok(match args.get("launcher") {
+        None => Launcher::from_env(),
+        Some("lockstep") => Launcher::Lockstep,
+        Some("thread") | Some("threads") | Some("threaded") => Launcher::Thread,
+        Some(other) => bail!("unknown --launcher {other:?} (lockstep|thread)"),
+    })
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let preset = args.get_or("preset", "tiny");
     let strategy = strategy(args)?;
@@ -74,6 +84,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let opts = EngineOpts::new(preset, strategy, workers, global_batch)
         .exec(exec_kind(args)?)
+        .launcher(launcher(args)?)
         .seed(tcfg.seed);
     let cfg = opts.cfg()?;
     let mut engine = build_engine(&opts)?;

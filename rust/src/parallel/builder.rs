@@ -1,20 +1,25 @@
-//! Engine construction: one entry point that wires config + executor +
-//! cluster + timeline into any of the five engines.
+//! Engine construction: one entry point that wires config + executors +
+//! cluster + launcher into any of the five engines — N per-rank
+//! participants behind one [`ClusterEngine`] facade.
+
+use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, TraceLog};
 use crate::config::{presets, ModelCfg, ParallelCfg, Strategy};
 use crate::perfmodel::{Hardware, Timeline};
 use crate::runtime::{artifacts_root, Exec, PjrtRuntime};
 
-use super::common::Ctx;
-use super::ddp::DdpEngine;
-use super::fsdp::{FsdpEngine, Granularity};
-use super::rtp::{RtpEngine, RtpVariant};
-use super::single::SingleEngine;
-use super::tp::TpEngine;
-use super::Engine;
+use super::cluster_engine::ClusterEngine;
+use super::common::{Ctx, RankCtx};
+use super::ddp::DdpRank;
+use super::fsdp::{FsdpRank, Granularity};
+use super::launcher::Launcher;
+use super::rtp::{RtpRank, RtpVariant};
+use super::single::SingleRank;
+use super::tp::TpRank;
+use super::{Engine, RankEngine};
 
 /// Which compute backend to construct.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,6 +52,8 @@ pub struct EngineOpts {
     pub fsdp_granularity: Granularity,
     /// RTP out-of-place §3.4.4 buffer recycling.
     pub rtp_recycle: bool,
+    /// How the rank bodies execute (defaults to `RTP_LAUNCHER` env).
+    pub launcher: Launcher,
 }
 
 impl EngineOpts {
@@ -63,6 +70,7 @@ impl EngineOpts {
             seed: 42,
             fsdp_granularity: Granularity::Layer,
             rtp_recycle: true,
+            launcher: Launcher::from_env(),
         }
     }
 
@@ -94,11 +102,48 @@ impl EngineOpts {
         self.rtp_recycle = r;
         self
     }
+    pub fn launcher(mut self, l: Launcher) -> Self {
+        self.launcher = l;
+        self
+    }
 
     pub fn cfg(&self) -> Result<ModelCfg> {
         presets::get(&self.preset)
             .ok_or_else(|| anyhow!("unknown preset {:?}", self.preset))
     }
+
+    fn engine_name(&self) -> String {
+        match self.strategy {
+            Strategy::Single => "single".to_string(),
+            Strategy::Ddp => "ddp".to_string(),
+            Strategy::Fsdp => match self.fsdp_granularity {
+                Granularity::Layer => "fsdp".to_string(),
+                Granularity::Model => "fsdp-model-unit".to_string(),
+            },
+            Strategy::MegatronTp => "megatron-tp".to_string(),
+            Strategy::RtpInplace => "rtp-inplace".to_string(),
+            Strategy::RtpOutOfPlace => {
+                if self.rtp_recycle {
+                    "rtp-outofplace".to_string()
+                } else {
+                    "rtp-outofplace-norecycle".to_string()
+                }
+            }
+        }
+    }
+}
+
+fn make_exec(kind: ExecKind, preset: &str) -> Result<Exec> {
+    Ok(match kind {
+        ExecKind::Oracle => Exec::Oracle,
+        ExecKind::Virtual => Exec::Virtual,
+        ExecKind::Pjrt => {
+            Exec::Pjrt(Box::new(PjrtRuntime::new(&artifacts_root(), preset)?))
+        }
+        ExecKind::PjrtPallas => {
+            Exec::PjrtPallas(Box::new(PjrtRuntime::new(&artifacts_root(), preset)?))
+        }
+    })
 }
 
 pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
@@ -109,41 +154,65 @@ pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
         workers,
         global_batch: opts.global_batch,
     };
-    let exec = match opts.exec {
-        ExecKind::Oracle => Exec::Oracle,
-        ExecKind::Virtual => Exec::Virtual,
-        ExecKind::Pjrt => Exec::Pjrt(Box::new(PjrtRuntime::new(
-            &artifacts_root(),
-            &opts.preset,
-        )?)),
-        ExecKind::PjrtPallas => Exec::PjrtPallas(Box::new(PjrtRuntime::new(
-            &artifacts_root(),
-            &opts.preset,
-        )?)),
-    };
     let mut cluster = Cluster::new(workers, opts.capacity);
     if opts.trace {
-        cluster.trace = crate::cluster::TraceLog::enabled();
+        cluster.trace = TraceLog::enabled();
     }
     let timeline = opts.hardware.clone().map(|hw| Timeline::new(hw, workers));
-    let ctx = Ctx { cfg, par, exec, cluster, timeline };
 
-    Ok(match opts.strategy {
-        Strategy::Single => Box::new(SingleEngine::new(ctx, opts.seed)?),
-        Strategy::Ddp => Box::new(DdpEngine::new(ctx, opts.seed)?),
-        Strategy::Fsdp => {
-            Box::new(FsdpEngine::new(ctx, opts.seed, opts.fsdp_granularity)?)
-        }
-        Strategy::MegatronTp => Box::new(TpEngine::new(ctx, opts.seed)?),
-        Strategy::RtpInplace => {
-            Box::new(RtpEngine::new(ctx, opts.seed, RtpVariant::InPlace)?)
-        }
-        Strategy::RtpOutOfPlace => Box::new(RtpEngine::new(
-            ctx,
-            opts.seed,
-            RtpVariant::OutOfPlace { recycle: opts.rtp_recycle },
-        )?),
-    })
+    // one executor per simulated device (true SPMD; PJRT loads its
+    // artifact set once per rank, exactly as one process per GPU would)
+    let mut execs: Vec<Exec> = (0..workers)
+        .map(|_| make_exec(opts.exec, &opts.preset))
+        .collect::<Result<_>>()?;
+
+    // construct the per-rank participants serially (no comm at init:
+    // every rank derives the same full model from the same seed and
+    // keeps only its slice)
+    let trace = Mutex::new(std::mem::take(&mut cluster.trace));
+    let mut ranks: Vec<Box<dyn RankEngine>> = Vec::with_capacity(workers);
+    for r in 0..workers {
+        let port = cluster.workers[r].port.clone();
+        let mut rctx = RankCtx {
+            rank: r,
+            cfg: &cfg,
+            par: &par,
+            exec: &mut execs[r],
+            tracker: &mut cluster.workers[r].tracker,
+            port,
+            timeline: None,
+            trace_log: &trace,
+            trace_on: false,
+        };
+        let rank: Box<dyn RankEngine> = match opts.strategy {
+            Strategy::Single => Box::new(SingleRank::new(&mut rctx, opts.seed)?),
+            Strategy::Ddp => Box::new(DdpRank::new(&mut rctx, opts.seed)?),
+            Strategy::Fsdp => {
+                Box::new(FsdpRank::new(&mut rctx, opts.seed, opts.fsdp_granularity)?)
+            }
+            Strategy::MegatronTp => Box::new(TpRank::new(&mut rctx, opts.seed)?),
+            Strategy::RtpInplace => {
+                Box::new(RtpRank::new(&mut rctx, opts.seed, RtpVariant::InPlace)?)
+            }
+            Strategy::RtpOutOfPlace => Box::new(RtpRank::new(
+                &mut rctx,
+                opts.seed,
+                RtpVariant::OutOfPlace { recycle: opts.rtp_recycle },
+            )?),
+        };
+        ranks.push(rank);
+    }
+    cluster.trace = trace.into_inner().unwrap();
+
+    let exec0 = execs.remove(0);
+    let ctx = Ctx { cfg, par, exec: exec0, cluster, timeline };
+    Ok(Box::new(ClusterEngine::new(
+        ctx,
+        execs,
+        ranks,
+        opts.launcher,
+        opts.engine_name(),
+    )))
 }
 
 #[cfg(test)]
@@ -156,6 +225,17 @@ mod tests {
             let opts = EngineOpts::new("tiny", strategy, 4, 4).exec(ExecKind::Virtual);
             let e = build_engine(&opts).unwrap();
             assert!(!e.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn builds_under_both_launchers() {
+        for launcher in [Launcher::Lockstep, Launcher::Thread] {
+            let opts = EngineOpts::new("tiny", Strategy::RtpInplace, 2, 4)
+                .exec(ExecKind::Virtual)
+                .launcher(launcher);
+            let e = build_engine(&opts).unwrap();
+            assert_eq!(e.name(), "rtp-inplace");
         }
     }
 

@@ -1,0 +1,223 @@
+//! The cluster-level facade: one [`Engine`] object over N per-rank
+//! [`RankEngine`] participants and a [`Launcher`].
+//!
+//! `ClusterEngine` owns the facade [`Ctx`] (per-worker trackers, trace,
+//! timeline, rank 0's executor) and, for each `step`, carves it into
+//! per-rank [`RankCtx`] views: rank `w` gets ITS tracker, ITS executor
+//! and ITS fabric port; rank 0 additionally gets the timeline and the
+//! lead role for once-per-collective trace events. The launcher then runs
+//! all rank bodies to completion — serialized round-robin (`Lockstep`) or
+//! one OS thread per rank (`Thread`) — and the facade reassembles the
+//! cluster view (trace back in place, fabric drained, mean loss).
+//!
+//! Existing callers (trainer, optimizer, benches, examples, tests) keep
+//! driving the old `Engine` trait unchanged; the SPMD decomposition is
+//! invisible from the outside except that it now actually exists.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::memory::tracker::MemTracker;
+use crate::model::ModelParams;
+use crate::runtime::Exec;
+use crate::tensor::HostTensor;
+
+use super::common::{Batch, Ctx, RankCtx};
+use super::launcher::Launcher;
+use super::{Engine, RankEngine};
+
+pub struct ClusterEngine {
+    ctx: Ctx,
+    /// Executors for ranks 1..n (rank 0 borrows `ctx.exec`).
+    extra_execs: Vec<Exec>,
+    ranks: Vec<Box<dyn RankEngine>>,
+    pub launcher: Launcher,
+    name: String,
+}
+
+impl ClusterEngine {
+    pub fn new(
+        ctx: Ctx,
+        extra_execs: Vec<Exec>,
+        ranks: Vec<Box<dyn RankEngine>>,
+        launcher: Launcher,
+        name: String,
+    ) -> Self {
+        assert_eq!(ranks.len(), ctx.par.workers, "one rank engine per worker");
+        assert_eq!(
+            extra_execs.len(),
+            ranks.len() - 1,
+            "one executor per rank (rank 0 uses ctx.exec)"
+        );
+        ClusterEngine { ctx, extra_execs, ranks, launcher, name }
+    }
+
+    /// Per-rank engine access (launcher-equivalence tests).
+    pub fn rank_engines(&self) -> &[Box<dyn RankEngine>] {
+        &self.ranks
+    }
+}
+
+impl Engine for ClusterEngine {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let n = self.ctx.par.workers;
+        if let Some(tl) = self.ctx.timeline.as_mut() {
+            tl.reset();
+        }
+        let fabric = self.ctx.cluster.fabric().clone();
+        // the trace moves into a mutex for the round (rank bodies on
+        // threads share it), then back into the cluster
+        let trace = Mutex::new(std::mem::take(&mut self.ctx.cluster.trace));
+        let trace_on = trace.lock().unwrap().enabled;
+
+        let results: Vec<std::thread::Result<Result<f32>>> = {
+            let cfg = &self.ctx.cfg;
+            let par = &self.ctx.par;
+            let ports: Vec<_> = self
+                .ctx
+                .cluster
+                .workers
+                .iter()
+                .map(|w| w.port.clone())
+                .collect();
+            // split the facade into disjoint per-rank mutable views
+            let mut exec_refs: Vec<&mut Exec> = Vec::with_capacity(n);
+            exec_refs.push(&mut self.ctx.exec);
+            for e in self.extra_execs.iter_mut() {
+                exec_refs.push(e);
+            }
+            let tracker_refs: Vec<&mut MemTracker> = self
+                .ctx
+                .cluster
+                .workers
+                .iter_mut()
+                .map(|w| &mut w.tracker)
+                .collect();
+            let mut timeline = self.ctx.timeline.as_mut();
+            let mut ctxs: Vec<RankCtx> = Vec::with_capacity(n);
+            for (rank, (exec, tracker)) in
+                exec_refs.into_iter().zip(tracker_refs).enumerate()
+            {
+                ctxs.push(RankCtx {
+                    rank,
+                    cfg,
+                    par,
+                    exec,
+                    tracker,
+                    port: ports[rank].clone(),
+                    timeline: if rank == 0 { timeline.take() } else { None },
+                    trace_log: &trace,
+                    trace_on,
+                });
+            }
+            let tasks: Vec<Box<dyn FnOnce() -> Result<f32> + Send + '_>> = self
+                .ranks
+                .iter_mut()
+                .zip(ctxs)
+                .map(|(r, mut c)| {
+                    let fab = fabric.clone();
+                    Box::new(move || {
+                        let out = r.step_local(&mut c, batch);
+                        if let Err(e) = &out {
+                            // orderly abort (e.g. simulated OOM): wake
+                            // peers blocked on this rank's messages so
+                            // the round unwinds instead of hanging
+                            fab.abort_round(&format!(
+                                "rank {} aborted its step: {e:#}",
+                                r.rank()
+                            ));
+                        }
+                        out
+                    }) as Box<dyn FnOnce() -> Result<f32> + Send + '_>
+                })
+                .collect();
+            self.launcher.try_run(&fabric, tasks)
+        };
+        self.ctx.cluster.trace = trace.into_inner().unwrap();
+
+        // prefer a rank's orderly Err (OOM & co.) over the secondary
+        // poisoned-round panics it caused in peers blocked on the fabric
+        let mut loss_sum = 0.0;
+        let mut first_err = None;
+        let mut first_panic = None;
+        for res in results {
+            match res {
+                Ok(Ok(loss)) => loss_sum += loss,
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(p) => {
+                    first_panic.get_or_insert(p);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
+        debug_assert_eq!(
+            fabric.in_flight(),
+            0,
+            "step left ring-fabric messages in flight"
+        );
+        Ok(loss_sum / n as f32)
+    }
+
+    fn gather_params(&self) -> ModelParams {
+        let fabric = self.ctx.cluster.fabric().clone();
+        let tasks: Vec<Box<dyn FnOnce() -> ModelParams + Send + '_>> = self
+            .ranks
+            .iter()
+            .map(|r| {
+                let port = self.ctx.cluster.workers[r.rank()].port.clone();
+                Box::new(move || r.gather_params_local(&port))
+                    as Box<dyn FnOnce() -> ModelParams + Send + '_>
+            })
+            .collect();
+        let mut outs = self.launcher.run(&fabric, tasks);
+        debug_assert_eq!(fabric.in_flight(), 0);
+        outs.swap_remove(0)
+    }
+
+    fn gather_grads(&self) -> ModelParams {
+        let fabric = self.ctx.cluster.fabric().clone();
+        let tasks: Vec<Box<dyn FnOnce() -> ModelParams + Send + '_>> = self
+            .ranks
+            .iter()
+            .map(|r| {
+                let port = self.ctx.cluster.workers[r.rank()].port.clone();
+                Box::new(move || r.gather_grads_local(&port))
+                    as Box<dyn FnOnce() -> ModelParams + Send + '_>
+            })
+            .collect();
+        let mut outs = self.launcher.run(&fabric, tasks);
+        debug_assert_eq!(fabric.in_flight(), 0);
+        outs.swap_remove(0)
+    }
+
+    fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
+        for r in &mut self.ranks {
+            r.visit_owned(f);
+        }
+    }
+
+    fn zero_grads(&mut self) {
+        for r in &mut self.ranks {
+            r.zero_grads();
+        }
+    }
+
+    fn ctx(&self) -> &Ctx {
+        &self.ctx
+    }
+    fn ctx_mut(&mut self) -> &mut Ctx {
+        &mut self.ctx
+    }
+}

@@ -1,17 +1,27 @@
-//! Shared engine infrastructure: the execution context (executor + cluster
-//! + timeline + trace), tracked buffers, the generic op-call helper every
-//! engine computes through, and batch handling.
+//! Shared engine infrastructure: the per-rank execution context (the view
+//! one SPMD participant computes against), the cluster-level facade
+//! context, tracked buffers, the generic op-call helper every engine
+//! computes through, and batch handling.
 //!
-//! Design invariant (DESIGN.md §4): real and virtual mode run the SAME
-//! engine code. `call_op` charges the memory tracker and the timeline
-//! identically in both; only the presence of data differs.
+//! Design invariants:
+//! - (DESIGN.md §4) real and virtual mode run the SAME engine code.
+//!   `call_op` charges the memory tracker and the timeline identically in
+//!   both; only the presence of data differs.
+//! - (SPMD) a [`RankEngine`](super::RankEngine) sees ONLY its own rank's
+//!   resources through [`RankCtx`]: its memory tracker, its fabric port,
+//!   its executor. Cross-rank data moves exclusively through the port.
+//!   Rank 0 is the *modeled* rank: it alone holds the timeline and emits
+//!   the once-per-collective trace events (the schedule is symmetric, so
+//!   modeling one rank models all).
+
+use std::sync::Mutex;
 
 use anyhow::Result;
 
-use crate::cluster::{Cluster, TraceEvent};
+use crate::cluster::{Cluster, TraceEvent, TraceLog};
 use crate::comm::{CommPrim, RingPort};
 use crate::config::{ModelCfg, ParallelCfg};
-use crate::memory::tracker::{AllocId, MemCategory};
+use crate::memory::tracker::{AllocId, MemCategory, MemTracker};
 use crate::model::ops::{self, Op};
 use crate::perfmodel::{Timeline, Token};
 use crate::runtime::{ArgRef, Buf, Exec};
@@ -71,14 +81,20 @@ impl Batch {
     }
 }
 
-/// Everything an engine computes against.
+/// The cluster-level facade context: what the trainer, benches and tests
+/// read between steps (per-worker trackers, the trace, the timeline).
+/// During a step the [`ClusterEngine`](super::ClusterEngine) facade
+/// carves this into per-rank [`RankCtx`] views.
 pub struct Ctx {
     pub cfg: ModelCfg,
     pub par: ParallelCfg,
+    /// Rank 0's executor (ranks 1.. hold their own instances in the
+    /// facade — one executor per simulated device, true SPMD).
     pub exec: Exec,
     pub cluster: Cluster,
-    /// Present when modeling step time (virtual-mode sweeps). Charged for
-    /// worker 0 only — the schedule is symmetric SPMD.
+    /// Present when modeling step time (virtual-mode sweeps). Lent to
+    /// rank 0 for the duration of each step — the schedule is symmetric
+    /// SPMD, so one modeled rank models all.
     pub timeline: Option<Timeline>,
 }
 
@@ -90,9 +106,42 @@ impl Ctx {
     pub fn virtual_mode(&self) -> bool {
         self.exec.is_virtual()
     }
+}
 
-    /// Allocate a tracked buffer on worker `w`.
-    pub fn alloc(&mut self, w: usize, cat: MemCategory, buf: Buf) -> Result<TBuf> {
+/// Everything ONE rank computes against during a step: its own tracker,
+/// its own executor, its own fabric port — plus, on rank 0 only, the
+/// timeline and the (shared, mutex-guarded) trace log.
+pub struct RankCtx<'a> {
+    pub rank: usize,
+    pub cfg: &'a ModelCfg,
+    pub par: &'a ParallelCfg,
+    pub exec: &'a mut Exec,
+    pub tracker: &'a mut MemTracker,
+    pub port: RingPort,
+    /// Rank 0 only (symmetric SPMD: one modeled rank).
+    pub timeline: Option<&'a mut Timeline>,
+    /// Shared trace sink; locked only when tracing is on.
+    pub trace_log: &'a Mutex<TraceLog>,
+    /// Cached `trace_log.enabled` (skip the lock on the hot path).
+    pub trace_on: bool,
+}
+
+impl<'a> RankCtx<'a> {
+    pub fn n(&self) -> usize {
+        self.par.workers
+    }
+
+    pub fn virtual_mode(&self) -> bool {
+        self.exec.is_virtual()
+    }
+
+    /// Is this the modeled rank (timeline + once-per-collective traces)?
+    pub fn lead(&self) -> bool {
+        self.rank == 0
+    }
+
+    /// Allocate a tracked buffer on this rank.
+    pub fn alloc(&mut self, cat: MemCategory, buf: Buf) -> Result<TBuf> {
         let bytes = buf.bytes();
         if cat == MemCategory::CommBuf {
             // comm-buffer churn against a near-capacity working set is
@@ -100,78 +149,74 @@ impl Ctx {
             // full-batch cliff). The step's WORKING SET (peak so far), not
             // the instantaneous live, is what the allocator cache holds —
             // see Timeline::alloc_event.
-            if let (0, Some(tl)) = (w, self.timeline.as_mut()) {
-                let t = &self.cluster.workers[w].tracker;
-                tl.alloc_event(t.peak().max(t.live()), bytes);
+            let (peak, live) = (self.tracker.peak(), self.tracker.live());
+            if let Some(tl) = self.timeline.as_deref_mut() {
+                tl.alloc_event(peak.max(live), bytes);
             }
         }
-        let id = self.cluster.tracker(w).alloc(cat, bytes)?;
-        Ok(TBuf { buf, id, worker: w })
+        let id = self.tracker.alloc(cat, bytes)?;
+        Ok(TBuf { buf, id, worker: self.rank })
     }
 
     pub fn free(&mut self, t: TBuf) {
-        self.cluster.tracker(t.worker).free(t.id);
+        debug_assert_eq!(t.worker, self.rank, "freeing another rank's buffer");
+        self.tracker.free(t.id);
     }
 
     /// §3.4.4 buffer recycling: retag a dead comm buffer as activations.
     pub fn recycle(&mut self, t: &TBuf, to: MemCategory) {
-        self.cluster.workers[t.worker].tracker.recycle(t.id, to);
+        self.tracker.recycle(t.id, to);
     }
 
-    /// The universal op call: charges the timeline (worker 0), runs the
-    /// executor, and registers every output with worker `w`'s tracker
-    /// under the caller's categories.
+    /// The universal op call: charges the timeline (modeled rank), runs
+    /// this rank's executor, and registers every output with this rank's
+    /// tracker under the caller's categories.
     pub fn call_op(
         &mut self,
-        w: usize,
         op: Op,
         b: usize,
         p: usize,
         args: &[ArgRef],
         out_cats: &[MemCategory],
     ) -> Result<Vec<TBuf>> {
-        if w == 0 {
-            if let Some(tl) = self.timeline.as_mut() {
-                tl.compute(op.key_name(), &ops::op_cost(op, &self.cfg, b, p));
-            }
+        if let Some(tl) = self.timeline.as_deref_mut() {
+            tl.compute(op.key_name(), &ops::op_cost(op, self.cfg, b, p));
         }
-        let outs = self.exec.call(op, &self.cfg, b, p, args)?;
+        let outs = self.exec.call(op, self.cfg, b, p, args)?;
         debug_assert_eq!(outs.len(), out_cats.len(), "{op}: out_cats arity");
         outs.into_iter()
             .zip(out_cats)
-            .map(|(buf, &cat)| self.alloc(w, cat, buf))
+            .map(|(buf, &cat)| self.alloc(cat, buf))
             .collect()
     }
 
-    /// Trace helper (no-op unless tracing is on).
+    /// Trace helper (no-op unless tracing is on). Every rank pushes its
+    /// own compute events; collective-level events go through
+    /// [`RankCtx::phase`] / [`RankCtx::charge_comm`] (lead rank only).
     pub fn trace(&mut self, e: TraceEvent) {
-        self.cluster.trace.push(e);
+        if self.trace_on {
+            self.trace_log.lock().unwrap().push(e);
+        }
     }
 
-    // -- rank-local ring fabric ------------------------------------------
-
-    /// Every rank's fabric port, in rank order (built once at cluster
-    /// construction) — what the SPMD collective drivers in
-    /// [`crate::comm`] consume.
-    pub fn ports(&self) -> &[RingPort] {
-        self.cluster.ports()
+    /// Phase marker — lead rank only (one marker per cluster-wide phase).
+    pub fn phase(&mut self, name: &str) {
+        if self.lead() && self.trace_on {
+            self.trace_log.lock().unwrap().phase(name);
+        }
     }
 
-    /// Worker `w`'s own fabric endpoint.
-    pub fn port(&self, w: usize) -> RingPort {
-        self.cluster.workers[w].port.clone()
-    }
-
-    /// Trace the per-hop schedule of one collective (no-op unless tracing
-    /// is on). Symmetric SPMD: one event per hop, not per worker.
+    /// Trace the per-hop schedule of one collective (lead rank only:
+    /// symmetric SPMD — one event per hop, not per rank).
     fn trace_hops(&mut self, prim: CommPrim, bytes: u64) {
-        if !self.cluster.trace.enabled {
+        if !self.lead() || !self.trace_on {
             return;
         }
         let hops = prim.hop_schedule(bytes, self.n());
         let of = hops.len();
+        let mut log = self.trace_log.lock().unwrap();
         for (hop, hop_bytes) in hops.into_iter().enumerate() {
-            self.cluster.trace.push(TraceEvent::Hop {
+            log.push(TraceEvent::Hop {
                 prim,
                 hop,
                 of,
@@ -181,17 +226,17 @@ impl Ctx {
     }
 
     /// Charge one BLOCKING ring collective: per-hop spans on the modeled
-    /// worker's timeline plus per-hop trace events. Call once per
-    /// collective (the schedule is symmetric SPMD), not once per worker.
+    /// rank's timeline plus per-hop trace events. Every rank calls this
+    /// at its own collective call site; only the lead rank records.
     pub fn charge_comm(&mut self, label: &str, prim: CommPrim, bytes: u64) {
         self.trace_hops(prim, bytes);
-        if let Some(tl) = self.timeline.as_mut() {
+        if let Some(tl) = self.timeline.as_deref_mut() {
             tl.comm_blocking(label, prim, bytes);
         }
     }
 
     /// Charge an ASYNC ring collective issued after the compute enqueued
-    /// so far; returns the completion token when a timeline is attached.
+    /// so far; returns the completion token on the modeled rank.
     pub fn charge_comm_async(
         &mut self,
         label: &str,
@@ -199,7 +244,9 @@ impl Ctx {
         bytes: u64,
     ) -> Option<Token> {
         self.trace_hops(prim, bytes);
-        self.timeline.as_mut().map(|tl| tl.comm_async(label, prim, bytes))
+        self.timeline
+            .as_deref_mut()
+            .map(|tl| tl.comm_async(label, prim, bytes))
     }
 
     /// Charge an ASYNC ring collective whose payload is already in hand
@@ -212,13 +259,13 @@ impl Ctx {
     ) -> Option<Token> {
         self.trace_hops(prim, bytes);
         self.timeline
-            .as_mut()
+            .as_deref_mut()
             .map(|tl| tl.comm_async_eager(label, prim, bytes))
     }
 
     /// Block the modeled compute stream on an async collective's token.
     pub fn charge_wait(&mut self, tok: Option<Token>) {
-        if let (Some(tl), Some(t)) = (self.timeline.as_mut(), tok) {
+        if let (Some(tl), Some(t)) = (self.timeline.as_deref_mut(), tok) {
             tl.wait(t);
         }
     }
@@ -254,7 +301,6 @@ impl Ctx {
     /// Read a column slice as a new tracked buffer (concat-merge backward).
     pub fn col_slice(
         &mut self,
-        w: usize,
         src: &TBuf,
         start: usize,
         len: usize,
@@ -268,7 +314,7 @@ impl Ctx {
                 Buf::Virt(shape)
             }
         };
-        self.alloc(w, cat, buf)
+        self.alloc(cat, buf)
     }
 
     /// Mean loss from a scalar xent output (0.0 in virtual mode).
@@ -278,6 +324,17 @@ impl Ctx {
             _ => 0.0,
         }
     }
+}
+
+/// Ring-allgather one rank's shard tensor through its port: every rank
+/// ends with all N shards in rank order, reshaped to the (common) shard
+/// shape. The gather/checkpoint path of the sharded engines — every rank
+/// must call it inside a fabric round.
+pub fn allgather_tensor(port: &RingPort, t: &HostTensor) -> Vec<HostTensor> {
+    crate::comm::allgather_parts(port, &t.data)
+        .into_iter()
+        .map(|d| HostTensor::from_vec(&t.shape, d))
+        .collect()
 }
 
 /// The replicated (non-sharded) parameters TP/RTP keep per worker: LN
@@ -457,17 +514,47 @@ mod tests {
     use super::*;
     use crate::config::{presets, Strategy};
 
-    fn ctx(n: usize) -> Ctx {
-        Ctx {
-            cfg: presets::get("tiny").unwrap(),
-            par: ParallelCfg {
-                strategy: Strategy::RtpInplace,
-                workers: n,
-                global_batch: 4,
-            },
-            exec: Exec::Virtual,
-            cluster: Cluster::new(n, None),
-            timeline: None,
+    /// One-rank harness: owned resources + a RankCtx view over them.
+    struct RankHarness {
+        cfg: ModelCfg,
+        par: ParallelCfg,
+        exec: Exec,
+        tracker: MemTracker,
+        fabric: crate::comm::RingFabric,
+        timeline: Option<Timeline>,
+        trace: Mutex<TraceLog>,
+    }
+
+    impl RankHarness {
+        fn new(n: usize) -> RankHarness {
+            RankHarness {
+                cfg: presets::get("tiny").unwrap(),
+                par: ParallelCfg {
+                    strategy: Strategy::RtpInplace,
+                    workers: n,
+                    global_batch: 4,
+                },
+                exec: Exec::Virtual,
+                tracker: MemTracker::new(0, None),
+                fabric: crate::comm::RingFabric::new(n),
+                timeline: None,
+                trace: Mutex::new(TraceLog::default()),
+            }
+        }
+
+        fn ctx(&mut self) -> RankCtx<'_> {
+            let trace_on = self.trace.lock().unwrap().enabled;
+            RankCtx {
+                rank: 0,
+                cfg: &self.cfg,
+                par: &self.par,
+                exec: &mut self.exec,
+                tracker: &mut self.tracker,
+                port: self.fabric.port(0),
+                timeline: self.timeline.as_mut(),
+                trace_log: &self.trace,
+                trace_on,
+            }
         }
     }
 
@@ -487,55 +574,54 @@ mod tests {
 
     #[test]
     fn call_op_tracks_outputs() {
-        let mut c = ctx(2);
+        let mut h = RankHarness::new(2);
+        let mut c = h.ctx();
         let outs = c
-            .call_op(
-                1,
-                Op::LnFwd,
-                2,
-                1,
-                &[],
-                &[MemCategory::Activations],
-            )
+            .call_op(Op::LnFwd, 2, 1, &[], &[MemCategory::Activations])
             .unwrap();
         assert_eq!(outs.len(), 1);
-        assert_eq!(
-            c.cluster.workers[1].tracker.live(),
-            outs[0].buf.bytes()
-        );
+        assert_eq!(c.tracker.live(), outs[0].buf.bytes());
         for o in outs {
             c.free(o);
         }
-        assert_eq!(c.cluster.workers[1].tracker.live(), 0);
+        assert_eq!(c.tracker.live(), 0);
     }
 
     #[test]
     fn charge_comm_traces_and_times_per_hop() {
-        let mut c = ctx(4);
-        c.cluster.trace = crate::cluster::TraceLog::enabled();
-        c.timeline = Some(crate::perfmodel::Timeline::new(
-            crate::perfmodel::a100_nvlink(),
-            4,
-        ));
+        let mut h = RankHarness::new(4);
+        h.trace = Mutex::new(TraceLog::enabled());
+        h.timeline = Some(Timeline::new(crate::perfmodel::a100_nvlink(), 4));
+        let mut c = h.ctx();
         c.charge_comm("ar", crate::comm::CommPrim::AllReduce, 4 << 20);
         // 2(N-1) = 6 hop events traced and 6 hops on the timeline
-        assert_eq!(c.cluster.trace.fabric_hops(), 6);
         assert_eq!(c.timeline.as_ref().unwrap().hop_count, 6);
-        let tok = c.charge_comm_async("rs", crate::comm::CommPrim::ReduceScatter, 4 << 20);
+        let tok =
+            c.charge_comm_async("rs", crate::comm::CommPrim::ReduceScatter, 4 << 20);
         assert!(tok.is_some());
         c.charge_wait(tok);
-        assert_eq!(c.cluster.trace.fabric_hops(), 9);
+        assert_eq!(h.trace.lock().unwrap().fabric_hops(), 9);
     }
 
     #[test]
-    fn ports_are_rank_ordered_endpoints() {
-        let c = ctx(3);
-        let ports = c.ports();
-        assert_eq!(ports.len(), 3);
-        for (w, p) in ports.iter().enumerate() {
-            assert_eq!(p.rank(), w);
-        }
-        assert_eq!(c.port(2).rank(), 2);
+    fn non_lead_ranks_do_not_trace_hops() {
+        let mut h = RankHarness::new(4);
+        h.trace = Mutex::new(TraceLog::enabled());
+        let trace_on = true;
+        let mut c = RankCtx {
+            rank: 2,
+            cfg: &h.cfg,
+            par: &h.par,
+            exec: &mut h.exec,
+            tracker: &mut h.tracker,
+            port: h.fabric.port(2),
+            timeline: None,
+            trace_log: &h.trace,
+            trace_on,
+        };
+        c.charge_comm("ar", crate::comm::CommPrim::AllReduce, 4 << 20);
+        c.phase("forward");
+        assert_eq!(h.trace.lock().unwrap().events.len(), 0);
     }
 
     #[test]
@@ -560,7 +646,10 @@ mod tests {
         assert_eq!(gates[0].data, vec![0.0, 0.7]);
         assert_eq!(gates[2].data, vec![0.0, 0.0]);
         // each token routed exactly once
-        let total: f32 = gates.iter().map(|g| g.data.iter().filter(|&&v| v > 0.0).count() as f32).sum();
+        let total: f32 = gates
+            .iter()
+            .map(|g| g.data.iter().filter(|&&v| v > 0.0).count() as f32)
+            .sum();
         assert_eq!(total, 2.0);
     }
 

@@ -2,13 +2,14 @@
 //! activations, bucketed gradient allreduce (paper Table 1 row 3 —
 //! (W+G)·(N-1) duplication).
 //!
-//! The allreduce is issued per layer-bucket DURING the backward walk
-//! (PyTorch-DDP style overlap): each `unit_end(Bwd)` fires an async
-//! allreduce of that unit's grads on the timeline; `step` waits for all of
-//! them at the end. Real-mode reduction averages the replicas through the
-//! chunked ring allreduce on the rank-local fabric — 2(N-1) neighbor hops
-//! per bucket, every rank touching only its own port — so every replica
-//! holds the same mean gradient (allreduce-mean).
+//! Each rank is an independent [`RankEngine`] holding ONE replica and its
+//! gradients. The allreduce is issued per layer-bucket DURING the
+//! backward walk (PyTorch-DDP style overlap): each `unit_end(Bwd)` fires
+//! an async allreduce of that unit's grads on the modeled rank's
+//! timeline; `step_local` waits for all of them at the end. Real-mode
+//! reduction averages the replicas through the chunked ring allreduce —
+//! each rank runs ITS side of the 2(N-1) neighbor hops through its own
+//! port — so every replica holds the same mean gradient (allreduce-mean).
 
 use anyhow::Result;
 
@@ -19,38 +20,37 @@ use crate::perfmodel::Token;
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
-use super::common::{Batch, Ctx, TBuf};
+use super::common::{Batch, RankCtx, TBuf};
 use super::dense::{dense_step, DenseHooks, Phase, Slot, Unit};
 use super::single::grad_into;
-use super::Engine;
+use super::RankEngine;
 
-pub struct DdpEngine {
-    pub ctx: Ctx,
+/// One DDP rank: a full replica + its local gradient accumulator.
+pub struct DdpRank {
+    rank: usize,
     hooks: DdpHooks,
     pending: Vec<Token>,
-    last_loss: f32,
 }
 
 struct DdpHooks {
-    /// One full replica per worker (empty in virtual mode).
-    replicas: Vec<ModelParams>,
-    grads: Vec<ModelParams>,
-    /// Which worker the walk is currently running for.
-    active: usize,
+    /// This rank's full replica (None in virtual mode).
+    replica: Option<ModelParams>,
+    grads: Option<ModelParams>,
     /// Unit grad bytes (for the per-bucket allreduce charge).
     unit_bytes: Vec<(Unit, u64)>,
     pending: Vec<Token>,
 }
 
 impl DenseHooks for DdpHooks {
-    fn unit_begin(&mut self, _: &mut Ctx, _: usize, _: Unit, _: Phase) -> Result<()> {
+    fn unit_begin(&mut self, _: &mut RankCtx, _: Unit, _: Phase) -> Result<()> {
         Ok(())
     }
 
-    fn unit_end(&mut self, ctx: &mut Ctx, w: usize, unit: Unit, phase: Phase) -> Result<()> {
+    fn unit_end(&mut self, ctx: &mut RankCtx, unit: Unit, phase: Phase) -> Result<()> {
         // bucketed allreduce overlap: fire this unit's grad reduction as
-        // soon as its backward completes (worker 0 = the modeled worker)
-        if phase == Phase::Bwd && w == 0 && ctx.n() > 1 {
+        // soon as its backward completes (modeled on the lead rank's
+        // timeline; charge_comm_async is a no-op elsewhere)
+        if phase == Phase::Bwd && ctx.n() > 1 {
             let bytes = self
                 .unit_bytes
                 .iter()
@@ -65,59 +65,47 @@ impl DenseHooks for DdpHooks {
         Ok(())
     }
 
-    fn params(&self, w: usize) -> Option<&ModelParams> {
-        self.replicas.get(w)
+    fn params(&self) -> Option<&ModelParams> {
+        self.replica.as_ref()
     }
 
-    fn grad(&mut self, ctx: &mut Ctx, w: usize, slot: Slot, src: TBuf) -> Result<()> {
-        debug_assert_eq!(w, self.active);
-        if let (Some(g), false) = (self.grads.get_mut(w), src.is_virtual()) {
+    fn grad(&mut self, ctx: &mut RankCtx, slot: Slot, src: TBuf) -> Result<()> {
+        if let (Some(g), false) = (self.grads.as_mut(), src.is_virtual()) {
             grad_into(g, slot, &src);
         }
         ctx.free(src);
         Ok(())
     }
 
-    fn moe_exchange(&mut self, ctx: &mut Ctx, w: usize, bytes: u64) -> Result<()> {
+    fn moe_exchange(&mut self, ctx: &mut RankCtx, bytes: u64) -> Result<()> {
         // expert-parallel DP shuffles tokens to/from the expert owners
-        if w == 0 && ctx.n() > 1 {
+        if ctx.n() > 1 {
             ctx.charge_comm("all-to-all", CommPrim::AllToAll, bytes);
         }
         Ok(())
     }
 }
 
-impl DdpEngine {
-    pub fn new(mut ctx: Ctx, seed: u64) -> Result<Self> {
-        let n = ctx.n();
+impl DdpRank {
+    pub fn new(ctx: &mut RankCtx, seed: u64) -> Result<Self> {
         let virt = ctx.virtual_mode();
-        let (replicas, grads) = if virt {
-            (Vec::new(), Vec::new())
+        let (replica, grads) = if virt {
+            (None, None)
         } else {
             // every replica starts from the SAME seed (DDP broadcast-at-init)
-            let reps: Vec<ModelParams> = (0..n)
-                .map(|_| ModelParams::init(&ctx.cfg, &mut Rng::new(seed)))
-                .collect();
-            let grads = (0..n).map(|_| ModelParams::zeros_like(&ctx.cfg)).collect();
-            (reps, grads)
+            (
+                Some(ModelParams::init(ctx.cfg, &mut Rng::new(seed))),
+                Some(ModelParams::zeros_like(ctx.cfg)),
+            )
         };
         let wbytes = ctx.cfg.weight_bytes();
-        for w in 0..n {
-            ctx.cluster.tracker(w).alloc(MemCategory::Weights, wbytes)?;
-            ctx.cluster.tracker(w).alloc(MemCategory::Grads, wbytes)?;
-        }
-        let unit_bytes = unit_grad_bytes(&ctx.cfg);
-        Ok(DdpEngine {
-            ctx,
-            hooks: DdpHooks {
-                replicas,
-                grads,
-                active: 0,
-                unit_bytes,
-                pending: Vec::new(),
-            },
+        ctx.tracker.alloc(MemCategory::Weights, wbytes)?;
+        ctx.tracker.alloc(MemCategory::Grads, wbytes)?;
+        let unit_bytes = unit_grad_bytes(ctx.cfg);
+        Ok(DdpRank {
+            rank: ctx.rank,
+            hooks: DdpHooks { replica, grads, unit_bytes, pending: Vec::new() },
             pending: Vec::new(),
-            last_loss: 0.0,
         })
     }
 }
@@ -143,97 +131,72 @@ pub fn unit_grad_bytes(cfg: &crate::config::ModelCfg) -> Vec<(Unit, u64)> {
     v
 }
 
-impl Engine for DdpEngine {
-    fn name(&self) -> String {
-        "ddp".to_string()
+/// This rank's side of the allreduce-mean of its full gradient set
+/// (flat-pack, chunked ring allreduce through this rank's port,
+/// unpack + 1/N).
+pub fn allreduce_mean_params(port: &RingPort, grads: &mut ModelParams) {
+    let n = port.n();
+    if n <= 1 {
+        return;
+    }
+    let mut buf = Vec::new();
+    grads.visit(&mut |_, t| buf.extend_from_slice(&t.data));
+    comm::allreduce_sum(port, &mut buf);
+    let scale = 1.0 / n as f32;
+    let mut off = 0;
+    grads.visit_mut(&mut |_, t| {
+        let l = t.data.len();
+        t.data.copy_from_slice(&buf[off..off + l]);
+        t.scale(scale);
+        off += l;
+    });
+}
+
+impl RankEngine for DdpRank {
+    fn rank(&self) -> usize {
+        self.rank
     }
 
-    fn step(&mut self, batch: &Batch) -> Result<f32> {
-        let n = self.ctx.n();
-        if let Some(tl) = self.ctx.timeline.as_mut() {
-            tl.reset();
-        }
-        let mut loss_sum = 0.0;
-        for w in 0..n {
-            self.hooks.active = w;
-            let shard = batch.shard(w, n);
-            loss_sum += dense_step(&mut self.ctx, &mut self.hooks, w, &shard)?;
-        }
+    fn step_local(&mut self, ctx: &mut RankCtx, batch: &Batch) -> Result<f32> {
+        let n = ctx.n();
+        let shard = batch.shard(self.rank, n);
+        let loss = dense_step(ctx, &mut self.hooks, &shard)?;
         self.pending.append(&mut self.hooks.pending);
 
         // real-mode allreduce-mean of every grad tensor across replicas,
-        // through each rank's own fabric port
-        if !self.ctx.virtual_mode() && n > 1 {
-            allreduce_mean_params(self.ctx.ports(), &mut self.hooks.grads);
+        // through this rank's own fabric port
+        if !ctx.virtual_mode() && n > 1 {
+            allreduce_mean_params(&ctx.port, self.hooks.grads.as_mut().unwrap());
         }
-        if let Some(tl) = self.ctx.timeline.as_mut() {
+        if let Some(tl) = ctx.timeline.as_deref_mut() {
             for tok in self.pending.drain(..) {
                 tl.wait(tok);
             }
             tl.barrier();
         }
-        debug_assert_eq!(
-            self.ctx.cluster.fabric().in_flight(),
-            0,
-            "ddp step left ring-fabric messages in flight"
-        );
-        self.last_loss = loss_sum / n as f32;
-        Ok(self.last_loss)
+        self.pending.clear();
+        Ok(loss)
     }
 
-    fn gather_params(&self) -> ModelParams {
-        self.hooks.replicas.first().cloned().expect("virtual mode")
+    fn gather_params_local(&self, _port: &RingPort) -> ModelParams {
+        // replicas are identical by construction + allreduce-mean
+        self.hooks.replica.clone().expect("virtual mode")
     }
 
-    fn gather_grads(&self) -> ModelParams {
-        self.hooks.grads.first().cloned().expect("virtual mode")
+    fn gather_grads_local(&self, _port: &RingPort) -> ModelParams {
+        self.hooks.grads.clone().expect("virtual mode")
     }
 
     fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
-        for (p, g) in self.hooks.replicas.iter_mut().zip(&self.hooks.grads) {
+        if let (Some(p), Some(g)) = (self.hooks.replica.as_mut(), self.hooks.grads.as_ref())
+        {
             p.zip_mut(g, &mut |_, t, gt| f(t, gt));
         }
     }
 
     fn zero_grads(&mut self) {
-        for g in &mut self.hooks.grads {
+        if let Some(g) = self.hooks.grads.as_mut() {
             g.visit_mut(&mut |_, t| t.data.fill(0.0));
         }
-    }
-
-    fn ctx(&self) -> &Ctx {
-        &self.ctx
-    }
-    fn ctx_mut(&mut self) -> &mut Ctx {
-        &mut self.ctx
-    }
-}
-
-/// Allreduce-mean every parameter across the per-worker grad sets
-/// (flat-pack, chunked ring allreduce over the rank-local ports,
-/// unpack + 1/N).
-pub fn allreduce_mean_params(ports: &[RingPort], grads: &mut [ModelParams]) {
-    let n = grads.len();
-    if n <= 1 {
-        return;
-    }
-    let mut bufs: Vec<Vec<f32>> = grads
-        .iter()
-        .map(|g| {
-            let mut v = Vec::new();
-            g.visit(&mut |_, t| v.extend_from_slice(&t.data));
-            v
-        })
-        .collect();
-    comm::allreduce_sum(ports, &mut bufs);
-    let scale = 1.0 / n as f32;
-    for (g, b) in grads.iter_mut().zip(&bufs) {
-        let mut off = 0;
-        g.visit_mut(&mut |_, t| {
-            let l = t.data.len();
-            t.data.copy_from_slice(&b[off..off + l]);
-            t.scale(scale);
-            off += l;
-        });
     }
 }

@@ -17,7 +17,7 @@ use crate::model::{MlpParams, ModelParams};
 use crate::runtime::{arg_of, Buf};
 use crate::tensor::HostTensor;
 
-use super::common::{scatter_dgates, top1_gates, Batch, Ctx, TBuf};
+use super::common::{scatter_dgates, top1_gates, Batch, RankCtx, TBuf};
 
 /// FSDP-style unit granularity over the dense model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,23 +76,27 @@ impl Slot {
     }
 }
 
-/// What the dense walk needs from an engine.
+/// What the dense walk needs from one RANK's engine. The walk is fully
+/// rank-local: hooks see only this rank's context, and any cross-rank
+/// traffic (FSDP's unit allgather / reduce-scatter) goes through the
+/// rank's own fabric port inside the hook.
 pub trait DenseHooks {
-    /// Make `unit`'s full weights resident on worker `w` (FSDP: allgather).
-    fn unit_begin(&mut self, ctx: &mut Ctx, w: usize, unit: Unit, phase: Phase) -> Result<()>;
-    /// Done with `unit` on worker `w` in this phase (FSDP: free + in Bwd
-    /// reduce-scatter the unit's grads).
-    fn unit_end(&mut self, ctx: &mut Ctx, w: usize, unit: Unit, phase: Phase) -> Result<()>;
-    /// The currently-resident full params for worker `w` (None in virtual
-    /// mode — the walk then passes virtual args).
-    fn params(&self, w: usize) -> Option<&ModelParams>;
+    /// Make `unit`'s full weights resident on this rank (FSDP: this
+    /// rank's side of the unit ring allgather).
+    fn unit_begin(&mut self, ctx: &mut RankCtx, unit: Unit, phase: Phase) -> Result<()>;
+    /// Done with `unit` in this phase (FSDP: free + in Bwd this rank's
+    /// side of the unit reduce-scatter).
+    fn unit_end(&mut self, ctx: &mut RankCtx, unit: Unit, phase: Phase) -> Result<()>;
+    /// The currently-resident full params (None in virtual mode — the
+    /// walk then passes virtual args).
+    fn params(&self) -> Option<&ModelParams>;
     /// Consume one weight-grad buffer for `slot` (accumulate + free).
-    fn grad(&mut self, ctx: &mut Ctx, w: usize, slot: Slot, src: TBuf) -> Result<()>;
+    fn grad(&mut self, ctx: &mut RankCtx, slot: Slot, src: TBuf) -> Result<()>;
 
     /// Charged before AND after each MoE expert block: the token
     /// all-to-all an expert-parallel DP/FSDP system pays (paper §4 "MOE
     /// Block"). Default: nothing (single device has no exchange).
-    fn moe_exchange(&mut self, _ctx: &mut Ctx, _w: usize, _bytes: u64) -> Result<()> {
+    fn moe_exchange(&mut self, _ctx: &mut RankCtx, _bytes: u64) -> Result<()> {
         Ok(())
     }
 }
@@ -110,20 +114,19 @@ struct SavedLayer {
 }
 
 /// Sum-over-leading-axes bias gradient as a tracked buffer.
-fn bias_grad(ctx: &mut Ctx, w: usize, dy: &TBuf, dim: usize) -> Result<TBuf> {
+fn bias_grad(ctx: &mut RankCtx, dy: &TBuf, dim: usize) -> Result<TBuf> {
     let buf = match &dy.buf {
         Buf::Real(t) => Buf::Real(t.sum_leading()),
         _ => Buf::Virt(vec![dim]),
     };
-    ctx.alloc(w, MemCategory::Grads, buf)
+    ctx.alloc(MemCategory::Grads, buf)
 }
 
-/// One full forward+backward on worker `w` over its batch shard.
-/// Returns the worker's mean loss.
+/// One full forward+backward on this rank over its batch shard.
+/// Returns this rank's mean loss.
 pub fn dense_step(
-    ctx: &mut Ctx,
+    ctx: &mut RankCtx,
     hooks: &mut dyn DenseHooks,
-    w: usize,
     batch: &Batch,
 ) -> Result<f32> {
     let cfg = ctx.cfg.clone();
@@ -133,23 +136,20 @@ pub fn dense_step(
     let acts = MemCategory::Activations;
 
     let ids = ctx.alloc(
-        w,
         acts,
         if virt { Buf::Virt(vec![b, cfg.seq]) } else { Buf::Ids(batch.ids.clone()) },
     )?;
     let targets = ctx.alloc(
-        w,
         acts,
         if virt { Buf::Virt(vec![b, cfg.seq]) } else { Buf::Ids(batch.targets.clone()) },
     )?;
 
     // ---------------- forward ----------------
-    hooks.unit_begin(ctx, w, Unit::Emb, Phase::Fwd)?;
+    hooks.unit_begin(ctx, Unit::Emb, Phase::Fwd)?;
     let mut x = {
-        let p = hooks.params(w);
+        let p = hooks.params();
         let (wte, wpe) = (p.map(|p| &p.wte), p.map(|p| &p.wpe));
         let mut outs = ctx.call_op(
-            w,
             Op::EmbFwd,
             b,
             1,
@@ -158,16 +158,15 @@ pub fn dense_step(
         )?;
         outs.pop().unwrap()
     };
-    hooks.unit_end(ctx, w, Unit::Emb, Phase::Fwd)?;
+    hooks.unit_end(ctx, Unit::Emb, Phase::Fwd)?;
 
     let mut saved: Vec<SavedLayer> = Vec::with_capacity(cfg.layers);
     for l in 0..cfg.layers {
-        hooks.unit_begin(ctx, w, Unit::Layer(l), Phase::Fwd)?;
+        hooks.unit_begin(ctx, Unit::Layer(l), Phase::Fwd)?;
         // ln1 -> attention (+bo) -> residual
         let a = {
-            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let lp = hooks.params().map(|p| &p.layers[l]);
             let mut outs = ctx.call_op(
-                w,
                 Op::LnFwd,
                 b,
                 1,
@@ -177,9 +176,8 @@ pub fn dense_step(
             outs.pop().unwrap()
         };
         let mut part = {
-            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let lp = hooks.params().map(|p| &p.layers[l]);
             let mut outs = ctx.call_op(
-                w,
                 Op::AttnFwd,
                 b,
                 1,
@@ -193,15 +191,14 @@ pub fn dense_step(
             )?;
             outs.pop().unwrap()
         };
-        let bo = hooks.params(w).map(|p| p.layers[l].bo.clone());
+        let bo = hooks.params().map(|p| p.layers[l].bo.clone());
         ctx.add_bias(&mut part, bo.as_ref());
         ctx.residual(&mut part, &x);
         let x_mid = part; // new residual stream
         // ln2 -> mlp/moe (+b2) -> residual
         let m = {
-            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let lp = hooks.params().map(|p| &p.layers[l]);
             let mut outs = ctx.call_op(
-                w,
                 Op::LnFwd,
                 b,
                 1,
@@ -217,13 +214,12 @@ pub fn dense_step(
 
         let is_moe = cfg.is_moe();
         let (mut part2, probs, gates) = if !is_moe {
-            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let lp = hooks.params().map(|p| &p.layers[l]);
             let dense = lp.map(|l| match &l.mlp {
                 MlpParams::Dense { w1, b1, w2, .. } => (w1, b1, w2),
                 _ => unreachable!("dense cfg with moe params"),
             });
             let mut outs = ctx.call_op(
-                w,
                 Op::MlpFwd,
                 b,
                 1,
@@ -239,13 +235,12 @@ pub fn dense_step(
         } else {
             // router -> top-1 gates -> every expert (dense-masked)
             let probs = {
-                let lp = hooks.params(w).map(|p| &p.layers[l]);
+                let lp = hooks.params().map(|p| &p.layers[l]);
                 let wr = lp.map(|l| match &l.mlp {
                     MlpParams::Moe { wr, .. } => wr,
                     _ => unreachable!(),
                 });
                 let mut outs = ctx.call_op(
-                    w,
                     Op::RouterFwd,
                     b,
                     1,
@@ -255,7 +250,7 @@ pub fn dense_step(
                 outs.pop().unwrap()
             };
             let a2a = (b * cfg.seq * h * 4) as u64;
-            hooks.moe_exchange(ctx, w, a2a)?;
+            hooks.moe_exchange(ctx, a2a)?;
             let gate_tensors: Vec<Buf> = if virt {
                 (0..cfg.experts).map(|_| Buf::Virt(vec![b, cfg.seq])).collect()
             } else {
@@ -263,18 +258,17 @@ pub fn dense_step(
             };
             let mut gates = Vec::with_capacity(cfg.experts);
             for g in gate_tensors {
-                gates.push(ctx.alloc(w, acts, g)?);
+                gates.push(ctx.alloc(acts, g)?);
             }
             let mut acc: Option<TBuf> = None;
             for e in 0..cfg.experts {
                 let part = {
-                    let lp = hooks.params(w).map(|p| &p.layers[l]);
+                    let lp = hooks.params().map(|p| &p.layers[l]);
                     let ex = lp.map(|l| match &l.mlp {
                         MlpParams::Moe { experts, .. } => &experts[e],
                         _ => unreachable!(),
                     });
                     let mut outs = ctx.call_op(
-                        w,
                         Op::MoeFwd,
                         b,
                         1,
@@ -297,27 +291,26 @@ pub fn dense_step(
                     }
                 }
             }
-            hooks.moe_exchange(ctx, w, (b * cfg.seq * h * 4) as u64)?;
+            hooks.moe_exchange(ctx, (b * cfg.seq * h * 4) as u64)?;
             (acc.unwrap(), Some(probs), gates)
         };
-        let b2 = hooks.params(w).map(|p| match &p.layers[l].mlp {
+        let b2 = hooks.params().map(|p| match &p.layers[l].mlp {
             MlpParams::Dense { b2, .. } => b2.clone(),
             MlpParams::Moe { b2, .. } => b2.clone(),
         });
         ctx.add_bias(&mut part2, b2.as_ref());
         ctx.residual(&mut part2, &x_mid);
-        hooks.unit_end(ctx, w, Unit::Layer(l), Phase::Fwd)?;
+        hooks.unit_end(ctx, Unit::Layer(l), Phase::Fwd)?;
 
         saved.push(SavedLayer { x_in: x, a, x_mid, m, probs, gates });
         x = part2;
     }
 
     // final LN + LM head + loss
-    hooks.unit_begin(ctx, w, Unit::Final, Phase::Fwd)?;
+    hooks.unit_begin(ctx, Unit::Final, Phase::Fwd)?;
     let xf = {
-        let p = hooks.params(w);
+        let p = hooks.params();
         let mut outs = ctx.call_op(
-            w,
             Op::LnFwd,
             b,
             1,
@@ -327,9 +320,8 @@ pub fn dense_step(
         outs.pop().unwrap()
     };
     let logits = {
-        let p = hooks.params(w);
+        let p = hooks.params();
         let mut outs = ctx.call_op(
-            w,
             Op::LmheadFwd,
             b,
             1,
@@ -339,7 +331,6 @@ pub fn dense_step(
         outs.pop().unwrap()
     };
     let mut xent = ctx.call_op(
-        w,
         Op::Xent,
         b,
         1,
@@ -357,11 +348,10 @@ pub fn dense_step(
     // The Final unit stayed resident through the loss (its forward
     // unit_end is deliberately absent); unit_begin(Bwd) is what arms the
     // gradient staging (FSDP) and the backward prefetch chain.
-    hooks.unit_begin(ctx, w, Unit::Final, Phase::Bwd)?;
+    hooks.unit_begin(ctx, Unit::Final, Phase::Bwd)?;
     let (mut dx, dwlm) = {
-        let p = hooks.params(w);
+        let p = hooks.params();
         let mut outs = ctx.call_op(
-            w,
             Op::LmheadBwd,
             b,
             1,
@@ -371,14 +361,13 @@ pub fn dense_step(
         let dwlm = outs.pop().unwrap();
         (outs.pop().unwrap(), dwlm)
     };
-    hooks.grad(ctx, w, Slot::global("wlm"), dwlm)?;
+    hooks.grad(ctx, Slot::global("wlm"), dwlm)?;
     ctx.free(dlogits);
 
     {
         // grad through lnf: consume xf, x (the lnf input)
-        let p = hooks.params(w);
+        let p = hooks.params();
         let mut outs = ctx.call_op(
-            w,
             Op::LnBwd,
             b,
             1,
@@ -392,33 +381,32 @@ pub fn dense_step(
         let db = outs.pop().unwrap();
         let dg = outs.pop().unwrap();
         let new_dx = outs.pop().unwrap();
-        hooks.grad(ctx, w, Slot::global("lnf_b"), db)?;
-        hooks.grad(ctx, w, Slot::global("lnf_g"), dg)?;
+        hooks.grad(ctx, Slot::global("lnf_b"), db)?;
+        hooks.grad(ctx, Slot::global("lnf_g"), dg)?;
         ctx.free(dx);
         dx = new_dx;
     }
     ctx.free(xf);
     ctx.free(x);
-    hooks.unit_end(ctx, w, Unit::Final, Phase::Bwd)?;
+    hooks.unit_end(ctx, Unit::Final, Phase::Bwd)?;
 
     // layers in reverse
     for l in (0..cfg.layers).rev() {
-        hooks.unit_begin(ctx, w, Unit::Layer(l), Phase::Bwd)?;
+        hooks.unit_begin(ctx, Unit::Layer(l), Phase::Bwd)?;
         let SavedLayer { x_in, a, x_mid, m, probs, gates } = saved.pop().unwrap();
 
         // dx = grad wrt layer output (x_mid + mlp_part + b2)
-        let db2 = bias_grad(ctx, w, &dx, h)?;
-        hooks.grad(ctx, w, Slot::layer(l, "b2"), db2)?;
+        let db2 = bias_grad(ctx, &dx, h)?;
+        hooks.grad(ctx, Slot::layer(l, "b2"), db2)?;
 
         let is_moe = cfg.is_moe();
         let dm_total = if !is_moe {
-            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let lp = hooks.params().map(|p| &p.layers[l]);
             let dense = lp.map(|lr| match &lr.mlp {
                 MlpParams::Dense { w1, b1, w2, .. } => (w1, b1, w2),
                 _ => unreachable!(),
             });
             let mut outs = ctx.call_op(
-                w,
                 Op::MlpBwd,
                 b,
                 1,
@@ -435,25 +423,24 @@ pub fn dense_step(
             let db1 = outs.pop().unwrap();
             let dw1 = outs.pop().unwrap();
             let dm = outs.pop().unwrap();
-            hooks.grad(ctx, w, Slot::layer(l, "mlp.w2"), dw2)?;
-            hooks.grad(ctx, w, Slot::layer(l, "mlp.b1"), db1)?;
-            hooks.grad(ctx, w, Slot::layer(l, "mlp.w1"), dw1)?;
+            hooks.grad(ctx, Slot::layer(l, "mlp.w2"), dw2)?;
+            hooks.grad(ctx, Slot::layer(l, "mlp.b1"), db1)?;
+            hooks.grad(ctx, Slot::layer(l, "mlp.w1"), dw1)?;
             dm
         } else {
             // MoE backward: every expert, then router
-            hooks.moe_exchange(ctx, w, (b * cfg.seq * h * 4) as u64)?;
+            hooks.moe_exchange(ctx, (b * cfg.seq * h * 4) as u64)?;
             let probs = probs.expect("moe saved probs");
             let mut dm_acc: Option<TBuf> = None;
             let mut dgates: Vec<(usize, HostTensor)> = Vec::new();
             for e in 0..cfg.experts {
                 let mut outs = {
-                    let lp = hooks.params(w).map(|p| &p.layers[l]);
+                    let lp = hooks.params().map(|p| &p.layers[l]);
                     let ex = lp.map(|lr| match &lr.mlp {
                         MlpParams::Moe { experts, .. } => &experts[e],
                         _ => unreachable!(),
                     });
                     ctx.call_op(
-                        w,
                         Op::MoeBwd,
                         b,
                         1,
@@ -479,9 +466,9 @@ pub fn dense_step(
                 let dw1 = outs.pop().unwrap();
                 let dgate = outs.pop().unwrap();
                 let dm_e = outs.pop().unwrap();
-                hooks.grad(ctx, w, Slot::expert(l, e, "w2"), dw2)?;
-                hooks.grad(ctx, w, Slot::expert(l, e, "b1"), db1)?;
-                hooks.grad(ctx, w, Slot::expert(l, e, "w1"), dw1)?;
+                hooks.grad(ctx, Slot::expert(l, e, "w2"), dw2)?;
+                hooks.grad(ctx, Slot::expert(l, e, "b1"), db1)?;
+                hooks.grad(ctx, Slot::expert(l, e, "w1"), dw1)?;
                 if !virt {
                     dgates.push((e, dgate.f().clone()));
                 }
@@ -500,15 +487,14 @@ pub fn dense_step(
             } else {
                 Buf::Real(scatter_dgates(&dgates, probs.f()))
             };
-            let dprobs = ctx.alloc(w, acts, dprobs_buf)?;
+            let dprobs = ctx.alloc(acts, dprobs_buf)?;
             let mut outs = {
-                let lp = hooks.params(w).map(|p| &p.layers[l]);
+                let lp = hooks.params().map(|p| &p.layers[l]);
                 let wr = lp.map(|lr| match &lr.mlp {
                     MlpParams::Moe { wr, .. } => wr,
                     _ => unreachable!(),
                 });
                 ctx.call_op(
-                    w,
                     Op::RouterBwd,
                     b,
                     1,
@@ -518,13 +504,13 @@ pub fn dense_step(
             };
             let dwr = outs.pop().unwrap();
             let dm_r = outs.pop().unwrap();
-            hooks.grad(ctx, w, Slot::layer(l, "mlp.wr"), dwr)?;
+            hooks.grad(ctx, Slot::layer(l, "mlp.wr"), dwr)?;
             ctx.free(dprobs);
             ctx.free(probs);
             let mut dm = dm_acc.unwrap();
             ctx.accumulate(&mut dm, &dm_r);
             ctx.free(dm_r);
-            hooks.moe_exchange(ctx, w, (b * cfg.seq * h * 4) as u64)?;
+            hooks.moe_exchange(ctx, (b * cfg.seq * h * 4) as u64)?;
             dm
         };
         for g in gates {
@@ -534,9 +520,8 @@ pub fn dense_step(
 
         // ln2 backward; dx gains the ln2-input grad (residual stream)
         {
-            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let lp = hooks.params().map(|p| &p.layers[l]);
             let mut outs = ctx.call_op(
-                w,
                 Op::LnBwd,
                 b,
                 1,
@@ -550,8 +535,8 @@ pub fn dense_step(
             let db = outs.pop().unwrap();
             let dg = outs.pop().unwrap();
             let dx_ln = outs.pop().unwrap();
-            hooks.grad(ctx, w, Slot::layer(l, "ln2_b"), db)?;
-            hooks.grad(ctx, w, Slot::layer(l, "ln2_g"), dg)?;
+            hooks.grad(ctx, Slot::layer(l, "ln2_b"), db)?;
+            hooks.grad(ctx, Slot::layer(l, "ln2_g"), dg)?;
             ctx.accumulate(&mut dx, &dx_ln);
             ctx.free(dx_ln);
         }
@@ -559,13 +544,12 @@ pub fn dense_step(
         ctx.free(x_mid);
 
         // dx is now grad wrt x_mid = x_in + attn_part + bo
-        let dbo = bias_grad(ctx, w, &dx, h)?;
-        hooks.grad(ctx, w, Slot::layer(l, "bo"), dbo)?;
+        let dbo = bias_grad(ctx, &dx, h)?;
+        hooks.grad(ctx, Slot::layer(l, "bo"), dbo)?;
 
         let da = {
-            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let lp = hooks.params().map(|p| &p.layers[l]);
             let mut outs = ctx.call_op(
-                w,
                 Op::AttnBwd,
                 b,
                 1,
@@ -582,18 +566,17 @@ pub fn dense_step(
             let dbqkv = outs.pop().unwrap();
             let dwqkv = outs.pop().unwrap();
             let da = outs.pop().unwrap();
-            hooks.grad(ctx, w, Slot::layer(l, "wo"), dwo)?;
-            hooks.grad(ctx, w, Slot::layer(l, "bqkv"), dbqkv)?;
-            hooks.grad(ctx, w, Slot::layer(l, "wqkv"), dwqkv)?;
+            hooks.grad(ctx, Slot::layer(l, "wo"), dwo)?;
+            hooks.grad(ctx, Slot::layer(l, "bqkv"), dbqkv)?;
+            hooks.grad(ctx, Slot::layer(l, "wqkv"), dwqkv)?;
             da
         };
         ctx.free(a);
 
         // ln1 backward
         {
-            let lp = hooks.params(w).map(|p| &p.layers[l]);
+            let lp = hooks.params().map(|p| &p.layers[l]);
             let mut outs = ctx.call_op(
-                w,
                 Op::LnBwd,
                 b,
                 1,
@@ -607,21 +590,20 @@ pub fn dense_step(
             let db = outs.pop().unwrap();
             let dg = outs.pop().unwrap();
             let dx_ln = outs.pop().unwrap();
-            hooks.grad(ctx, w, Slot::layer(l, "ln1_b"), db)?;
-            hooks.grad(ctx, w, Slot::layer(l, "ln1_g"), dg)?;
+            hooks.grad(ctx, Slot::layer(l, "ln1_b"), db)?;
+            hooks.grad(ctx, Slot::layer(l, "ln1_g"), dg)?;
             ctx.accumulate(&mut dx, &dx_ln);
             ctx.free(dx_ln);
         }
         ctx.free(da);
         ctx.free(x_in);
-        hooks.unit_end(ctx, w, Unit::Layer(l), Phase::Bwd)?;
+        hooks.unit_end(ctx, Unit::Layer(l), Phase::Bwd)?;
     }
 
     // embedding backward
-    hooks.unit_begin(ctx, w, Unit::Emb, Phase::Bwd)?;
+    hooks.unit_begin(ctx, Unit::Emb, Phase::Bwd)?;
     {
         let mut outs = ctx.call_op(
-            w,
             Op::EmbBwd,
             b,
             1,
@@ -630,10 +612,10 @@ pub fn dense_step(
         )?;
         let dwpe = outs.pop().unwrap();
         let dwte = outs.pop().unwrap();
-        hooks.grad(ctx, w, Slot::global("wpe"), dwpe)?;
-        hooks.grad(ctx, w, Slot::global("wte"), dwte)?;
+        hooks.grad(ctx, Slot::global("wpe"), dwpe)?;
+        hooks.grad(ctx, Slot::global("wte"), dwte)?;
     }
-    hooks.unit_end(ctx, w, Unit::Emb, Phase::Bwd)?;
+    hooks.unit_end(ctx, Unit::Emb, Phase::Bwd)?;
     ctx.free(dx);
     ctx.free(ids);
 

@@ -1,23 +1,28 @@
 //! Fully-Sharded Data Parallel (Zhao et al. 2023) — the paper's primary
 //! memory baseline (Table 1 row 5: `max(W,G)·(N-1)` duplication).
 //!
-//! Every unit's parameters live as a FlatParameter sharded across workers.
-//! `unit_begin` allgathers the full unit (blocking for the first unit —
-//! the startup penalty the paper contrasts RTP against in §3.4.3 — then
-//! eagerly prefetched one unit ahead); `unit_end` reshards. In backward,
-//! a full-unit gradient staging buffer is reduce-scattered so each worker
-//! retains only its grad shard.
+//! Every unit's parameters live as a FlatParameter sharded across ranks;
+//! each rank is an independent [`RankEngine`] holding ONE shard per unit.
+//! `unit_begin` runs this rank's side of the unit ring-allgather
+//! (blocking for the first unit — the startup penalty the paper
+//! contrasts RTP against in §3.4.3 — then eagerly prefetched one unit
+//! ahead); `unit_end` reshards. In backward, a full-unit gradient staging
+//! buffer is reduce-scattered so each rank retains only its grad shard.
+//!
+//! Under the old god-view engine every worker re-ran the WHOLE ring
+//! allgather once per worker (correct but N× redundant). With per-rank
+//! engines each rank runs its own side of ONE allgather per unit — the
+//! redundancy collapsed structurally, exactly as a real N-process FSDP
+//! launch behaves.
 //!
 //! `Granularity::Model` treats the whole model as ONE unit — the paper's
 //! Table-1 worst case, used by the `table1_memory` bench; `Layer` is the
 //! realistic per-layer wrapping used everywhere else (the delta between
 //! the two is an ablation in EXPERIMENTS.md).
 
-use std::collections::HashMap;
-
 use anyhow::Result;
 
-use crate::comm::CommPrim;
+use crate::comm::{CommPrim, RingPort};
 use crate::config::ModelCfg;
 use crate::flat_param::FlatLayout;
 use crate::memory::tracker::MemCategory;
@@ -27,10 +32,10 @@ use crate::runtime::Buf;
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
-use super::common::{Batch, Ctx, TBuf};
+use super::common::{Batch, RankCtx, TBuf};
 use super::dense::{dense_step, DenseHooks, Phase, Slot, Unit};
 use super::single::resolve_mut;
-use super::Engine;
+use super::RankEngine;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Granularity {
@@ -96,7 +101,7 @@ fn unit_index(unit: Unit) -> usize {
     match unit {
         Unit::Emb => 0,
         Unit::Layer(l) => l + 1,
-        Unit::Final => usize::MAX, // remapped by UnitTable
+        Unit::Final => usize::MAX, // remapped by state_idx
     }
 }
 
@@ -115,31 +120,32 @@ fn successor(unit: Unit, phase: Phase, layers: usize) -> Option<Unit> {
     }
 }
 
+/// One unit's per-rank state: this rank's shard + transient residency.
 struct UnitState {
     layout: FlatLayout,
     slots: Vec<Slot>,
-    /// Per-worker parameter shards (1-D) — None in virtual mode.
-    param_shards: Option<Vec<HostTensor>>,
-    /// Per-worker gradient shards (1-D) — None in virtual mode.
-    grad_shards: Option<Vec<HostTensor>>,
-    /// Residency: (worker -> full-weights comm buffer).
-    resident: HashMap<usize, TBuf>,
-    /// Backward grad staging buffers: worker -> (tracker buf).
-    staging: HashMap<usize, TBuf>,
-    /// Host-side staged full grads per worker (kept past the tracked
-    /// buffer's life because workers run sequentially in this process;
-    /// the DEVICE buffer is freed at unit_end like real FSDP).
-    staged_grads: HashMap<usize, Vec<f32>>,
+    /// This rank's parameter shard (1-D) — None in virtual mode.
+    param_shard: Option<HostTensor>,
+    /// This rank's gradient shard (1-D) — None in virtual mode.
+    grad_shard: Option<HostTensor>,
+    /// Residency: the full-weights comm buffer while the unit is live.
+    resident: Option<TBuf>,
+    /// Backward grad staging buffer (tracker registration).
+    staging: Option<TBuf>,
+    /// Host-side staged full grads (alive between backward compute and
+    /// the end-of-step reduce-scatter; the DEVICE buffer is freed at
+    /// unit_end like real FSDP).
+    staged_grads: Option<Vec<f32>>,
 }
 
 struct FsdpHooks {
-    units: Vec<Unit>,
     states: Vec<UnitState>,
-    /// Full-weight scratch the walk reads (real mode): one per worker.
-    scratch: Vec<ModelParams>,
+    /// Full-weight scratch the walk reads (real mode).
+    scratch: ModelParams,
+    virt: bool,
     granularity: Granularity,
     layers: usize,
-    /// In-flight prefetch: (unit, token).
+    /// In-flight prefetch: (unit, token) — modeled rank only.
     prefetch: Option<(Unit, Token)>,
     /// In-flight reduce-scatters (waited at the step barrier — they
     /// overlap the next unit's backward compute, as real FSDP does).
@@ -157,52 +163,48 @@ impl FsdpHooks {
         }
     }
 
-    /// Allgather + materialize one unit's full weights on worker `w`.
-    /// Real mode runs the chunked ring allgather through every rank's own
-    /// fabric port (symmetric SPMD — all ranks step the same N-1 hop
-    /// schedule) and keeps rank `w`'s reconstruction.
-    fn gather_unit(&mut self, ctx: &mut Ctx, w: usize, sidx: usize) -> Result<()> {
+    /// This rank's side of one unit allgather + materialization: the
+    /// chunked ring allgather runs ONCE across the rank set (each rank
+    /// stepping its own N-1 hops), and this rank unpacks the
+    /// reconstruction into its scratch view.
+    fn gather_unit(&mut self, ctx: &mut RankCtx, sidx: usize) -> Result<()> {
         let full_bytes = self.states[sidx].layout.full_bytes();
-        let tb = ctx.alloc(w, MemCategory::CommBuf, Buf::Virt(vec![full_bytes as usize / 4]))?;
-        // real mode: reconstruct + unpack into the walk's scratch view
-        if self.states[sidx].param_shards.is_some() {
-            let ports = ctx.ports();
+        let tb = ctx.alloc(MemCategory::CommBuf, Buf::Virt(vec![full_bytes as usize / 4]))?;
+        if let Some(shard) = self.states[sidx].param_shard.as_ref() {
             let st = &self.states[sidx];
-            let shards = st.param_shards.as_ref().unwrap();
-            let flats: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
-            let fulls = st.layout.allgather_via(ports, &flats);
-            let tensors = st.layout.unpack(&fulls[w]);
+            let full = st.layout.allgather_via(&ctx.port, &shard.data);
+            let tensors = st.layout.unpack(&full);
             for (slot, t) in st.slots.clone().into_iter().zip(tensors) {
-                *resolve_mut(&mut self.scratch[w], slot) = t;
+                *resolve_mut(&mut self.scratch, slot) = t;
             }
         }
-        self.states[sidx].resident.insert(w, tb);
+        self.states[sidx].resident = Some(tb);
         Ok(())
     }
 }
 
 impl DenseHooks for FsdpHooks {
-    fn unit_begin(&mut self, ctx: &mut Ctx, w: usize, unit: Unit, phase: Phase) -> Result<()> {
+    fn unit_begin(&mut self, ctx: &mut RankCtx, unit: Unit, phase: Phase) -> Result<()> {
         let sidx = self.state_idx(unit);
-        if !self.states[sidx].resident.contains_key(&w) {
+        if self.states[sidx].resident.is_none() {
             // timeline: consume a matching prefetch or block on allgather
-            if w == 0 {
-                let full_bytes = self.states[sidx].layout.full_bytes();
-                let hit = matches!(self.prefetch, Some((u, _)) if u == unit);
-                if hit {
-                    let (_, tok) = self.prefetch.take().unwrap();
-                    ctx.charge_wait(Some(tok));
-                } else {
-                    ctx.charge_comm("allgather", CommPrim::AllGather, full_bytes);
-                }
+            // (modeled rank only; the data-path allgather runs on every
+            // rank regardless)
+            let full_bytes = self.states[sidx].layout.full_bytes();
+            let hit = matches!(self.prefetch, Some((u, _)) if u == unit);
+            if hit {
+                let (_, tok) = self.prefetch.take().unwrap();
+                ctx.charge_wait(Some(tok));
+            } else {
+                ctx.charge_comm("allgather", CommPrim::AllGather, full_bytes);
             }
-            self.gather_unit(ctx, w, sidx)?;
+            self.gather_unit(ctx, sidx)?;
         }
         // issue the next unit's prefetch (layer granularity only)
-        if w == 0 && self.granularity == Granularity::Layer {
+        if self.granularity == Granularity::Layer {
             if let Some(next) = successor(unit, phase, self.layers) {
                 let nidx = self.state_idx(next);
-                let already = self.states[nidx].resident.contains_key(&0)
+                let already = self.states[nidx].resident.is_some()
                     || matches!(self.prefetch, Some((u, _)) if u == next);
                 if !already {
                     if let Some(tok) = ctx.charge_comm_async_eager(
@@ -216,65 +218,67 @@ impl DenseHooks for FsdpHooks {
             }
         }
         // backward: allocate the full-unit gradient staging buffer
-        if phase == Phase::Bwd && !self.states[sidx].staging.contains_key(&w) {
+        if phase == Phase::Bwd && self.states[sidx].staging.is_none() {
             let elems = self.states[sidx].layout.padded;
-            let tb = ctx.alloc(w, MemCategory::CommBuf, Buf::Virt(vec![elems]))?;
-            self.states[sidx].staging.insert(w, tb);
-            if self.states[sidx].param_shards.is_some() {
-                self.states[sidx].staged_grads.insert(w, vec![0.0; elems]);
+            let tb = ctx.alloc(MemCategory::CommBuf, Buf::Virt(vec![elems]))?;
+            self.states[sidx].staging = Some(tb);
+            if !self.virt {
+                self.states[sidx].staged_grads = Some(vec![0.0; elems]);
             }
         }
         Ok(())
     }
 
-    fn unit_end(&mut self, ctx: &mut Ctx, w: usize, unit: Unit, phase: Phase) -> Result<()> {
+    fn unit_end(&mut self, ctx: &mut RankCtx, unit: Unit, phase: Phase) -> Result<()> {
         if self.granularity == Granularity::Model {
             // whole-model unit stays resident for the entire step
             return Ok(());
         }
         let sidx = self.state_idx(unit);
         // reshard: free the full weights
-        if let Some(tb) = self.states[sidx].resident.remove(&w) {
+        if let Some(tb) = self.states[sidx].resident.take() {
             ctx.free(tb);
         }
         if phase == Phase::Bwd {
             // reduce-scatter the staged grads asynchronously — it overlaps
             // the next unit's backward compute (real FSDP's behavior); the
             // step barrier waits on all of them.
-            if w == 0 {
-                if let Some(tok) = ctx.charge_comm_async(
-                    "reduce-scatter",
-                    CommPrim::ReduceScatter,
-                    self.states[sidx].layout.full_bytes(),
-                ) {
-                    self.pending_rs.push(tok);
-                }
+            if let Some(tok) = ctx.charge_comm_async(
+                "reduce-scatter",
+                CommPrim::ReduceScatter,
+                self.states[sidx].layout.full_bytes(),
+            ) {
+                self.pending_rs.push(tok);
             }
-            if let Some(tb) = self.states[sidx].staging.remove(&w) {
+            if let Some(tb) = self.states[sidx].staging.take() {
                 ctx.free(tb);
             }
         }
         Ok(())
     }
 
-    fn params(&self, w: usize) -> Option<&ModelParams> {
-        self.scratch.get(w)
+    fn params(&self) -> Option<&ModelParams> {
+        if self.virt {
+            None
+        } else {
+            Some(&self.scratch)
+        }
     }
 
-    fn moe_exchange(&mut self, ctx: &mut Ctx, w: usize, bytes: u64) -> Result<()> {
-        if w == 0 && ctx.n() > 1 {
+    fn moe_exchange(&mut self, ctx: &mut RankCtx, bytes: u64) -> Result<()> {
+        if ctx.n() > 1 {
             ctx.charge_comm("all-to-all", CommPrim::AllToAll, bytes);
         }
         Ok(())
     }
 
-    fn grad(&mut self, ctx: &mut Ctx, w: usize, slot: Slot, src: TBuf) -> Result<()> {
+    fn grad(&mut self, ctx: &mut RankCtx, slot: Slot, src: TBuf) -> Result<()> {
         let sidx = self.state_idx(slot.unit());
         if !src.is_virtual() {
             let st = &mut self.states[sidx];
             let k = st.slots.iter().position(|s| *s == slot).expect("slot in unit");
             let spec = &st.layout.specs[k];
-            if let Some(stage) = st.staged_grads.get_mut(&w) {
+            if let Some(stage) = st.staged_grads.as_mut() {
                 for (d, v) in stage[spec.offset..spec.offset + spec.len()]
                     .iter_mut()
                     .zip(&src.f().data)
@@ -288,23 +292,22 @@ impl DenseHooks for FsdpHooks {
     }
 }
 
-pub struct FsdpEngine {
-    pub ctx: Ctx,
+/// One FSDP rank: per-unit flat shards + the transient full-unit views.
+pub struct FsdpRank {
+    rank: usize,
     hooks: FsdpHooks,
-    last_loss: f32,
+    cfg: ModelCfg,
 }
 
-impl FsdpEngine {
-    pub fn new(mut ctx: Ctx, seed: u64, granularity: Granularity) -> Result<Self> {
+impl FsdpRank {
+    pub fn new(ctx: &mut RankCtx, seed: u64, granularity: Granularity) -> Result<Self> {
         let n = ctx.n();
+        let rank = ctx.rank;
         let cfg = ctx.cfg.clone();
         let virt = ctx.virtual_mode();
-        let units = match granularity {
-            Granularity::Layer => Unit::all(cfg.layers),
-            Granularity::Model => Unit::all(cfg.layers), // one merged layout below
-        };
+        let units = Unit::all(cfg.layers);
 
-        // build unit states
+        // build unit states (this rank's shards only)
         let mut states = Vec::new();
         match granularity {
             Granularity::Layer => {
@@ -313,11 +316,11 @@ impl FsdpEngine {
                     states.push(UnitState {
                         layout,
                         slots,
-                        param_shards: None,
-                        grad_shards: None,
-                        resident: HashMap::new(),
-                        staging: HashMap::new(),
-                        staged_grads: HashMap::new(),
+                        param_shard: None,
+                        grad_shard: None,
+                        resident: None,
+                        staging: None,
+                        staged_grads: None,
                     });
                 }
             }
@@ -332,19 +335,21 @@ impl FsdpEngine {
                 states.push(UnitState {
                     layout: FlatLayout::new(&named, n),
                     slots: all.into_iter().map(|(s, _)| s).collect(),
-                    param_shards: None,
-                    grad_shards: None,
-                    resident: HashMap::new(),
-                    staging: HashMap::new(),
-                    staged_grads: HashMap::new(),
+                    param_shard: None,
+                    grad_shard: None,
+                    resident: None,
+                    staging: None,
+                    staged_grads: None,
                 });
             }
         }
 
-        // initialize shards from a full seed model (real mode)
+        // initialize this rank's shards from a full seed model (real
+        // mode): every rank derives the same full model from the same
+        // seed and keeps only its shard — broadcast-at-init without the
+        // broadcast.
         if !virt {
-            let full = ModelParams::init(&cfg, &mut Rng::new(seed));
-            let mut fullp = full;
+            let mut fullp = ModelParams::init(&cfg, &mut Rng::new(seed));
             for st in &mut states {
                 let tensors: Vec<&HostTensor> = st
                     .slots
@@ -357,136 +362,97 @@ impl FsdpEngine {
                     .map(|p| unsafe { &*p })
                     .collect();
                 let flat = st.layout.pack(&tensors);
-                st.param_shards = Some(
-                    st.layout
-                        .shards(&flat)
-                        .into_iter()
-                        .map(|v| HostTensor::from_vec(&[v.len()], v))
-                        .collect(),
-                );
-                st.grad_shards = Some(
-                    (0..n)
-                        .map(|_| HostTensor::zeros(&[st.layout.shard_len()]))
-                        .collect(),
-                );
+                let shard = st.layout.shard(&flat, rank);
+                st.param_shard = Some(HostTensor::from_vec(&[shard.len()], shard));
+                st.grad_shard = Some(HostTensor::zeros(&[st.layout.shard_len()]));
             }
         }
 
-        // persistent residency: shard weights + shard grads per worker
+        // persistent residency: shard weights + shard grads
         let shard_bytes: u64 = states.iter().map(|s| s.layout.shard_bytes()).sum();
-        for w in 0..n {
-            ctx.cluster.tracker(w).alloc(MemCategory::Weights, shard_bytes)?;
-            ctx.cluster.tracker(w).alloc(MemCategory::Grads, shard_bytes)?;
-        }
+        ctx.tracker.alloc(MemCategory::Weights, shard_bytes)?;
+        ctx.tracker.alloc(MemCategory::Grads, shard_bytes)?;
 
-        let scratch = if virt {
-            Vec::new()
-        } else {
-            (0..n).map(|_| ModelParams::zeros_like(&cfg)).collect()
-        };
-        Ok(FsdpEngine {
-            ctx,
+        let scratch = ModelParams::zeros_like(&cfg);
+        Ok(FsdpRank {
+            rank,
             hooks: FsdpHooks {
-                units,
                 states,
                 scratch,
+                virt,
                 granularity,
                 layers: cfg.layers,
                 prefetch: None,
                 pending_rs: Vec::new(),
             },
-            last_loss: 0.0,
+            cfg,
         })
     }
 
-    /// Post-step: mean-reduce staged full grads into the shard grads
-    /// (chunked ring reduce-scatter over the rank-local ports) and release
-    /// whole-model residency (Model granularity).
-    fn finish_step(&mut self) -> Result<()> {
-        let n = self.ctx.n();
-        // owned copy: the loop below also needs `self.ctx` mutably
-        let ports: Vec<crate::comm::RingPort> = self.ctx.ports().to_vec();
+    pub fn granularity(&self) -> Granularity {
+        self.hooks.granularity
+    }
+
+    /// Post-step: mean-reduce staged full grads into this rank's shard
+    /// grads (chunked ring reduce-scatter through this rank's port) and
+    /// release whole-model residency (Model granularity).
+    fn finish_step(&mut self, ctx: &mut RankCtx) -> Result<()> {
+        let n = ctx.n();
         for st in &mut self.hooks.states {
-            if st.param_shards.is_some() && !st.staged_grads.is_empty() {
-                let fulls: Vec<Vec<f32>> = (0..n)
-                    .map(|w| st.staged_grads.remove(&w).expect("staged grads"))
-                    .collect();
-                let shards = st.layout.reduce_scatter_via(&ports, &fulls);
-                let gs = st.grad_shards.as_mut().unwrap();
-                for (g, s) in gs.iter_mut().zip(shards) {
-                    for (a, b) in g.data.iter_mut().zip(s) {
-                        *a += b / n as f32;
-                    }
+            if let (Some(full), Some(gs)) =
+                (st.staged_grads.take(), st.grad_shard.as_mut())
+            {
+                let shard = st.layout.reduce_scatter_via(&ctx.port, &full);
+                for (a, b) in gs.data.iter_mut().zip(shard) {
+                    *a += b / n as f32;
                 }
             }
-            st.staged_grads.clear();
+            st.staged_grads = None;
             // Model granularity: release residency + staging now
-            let workers: Vec<usize> = st.resident.keys().copied().collect();
-            for w in workers {
-                let tb = st.resident.remove(&w).unwrap();
-                self.ctx.free(tb);
+            if let Some(tb) = st.resident.take() {
+                ctx.free(tb);
             }
-            let workers: Vec<usize> = st.staging.keys().copied().collect();
-            for w in workers {
-                let tb = st.staging.remove(&w).unwrap();
-                if w == 0 {
-                    self.ctx.charge_comm(
-                        "reduce-scatter",
-                        CommPrim::ReduceScatter,
-                        st.layout.full_bytes(),
-                    );
-                }
-                self.ctx.free(tb);
+            if let Some(tb) = st.staging.take() {
+                ctx.charge_comm(
+                    "reduce-scatter",
+                    CommPrim::ReduceScatter,
+                    st.layout.full_bytes(),
+                );
+                ctx.free(tb);
             }
         }
         self.hooks.prefetch = None;
-        if let Some(tl) = self.ctx.timeline.as_mut() {
+        if let Some(tl) = ctx.timeline.as_deref_mut() {
             for tok in self.hooks.pending_rs.drain(..) {
                 tl.wait(tok);
             }
         }
+        self.hooks.pending_rs.clear();
         Ok(())
     }
 }
 
-impl Engine for FsdpEngine {
-    fn name(&self) -> String {
-        match self.hooks.granularity {
-            Granularity::Layer => "fsdp".to_string(),
-            Granularity::Model => "fsdp-model-unit".to_string(),
-        }
+impl RankEngine for FsdpRank {
+    fn rank(&self) -> usize {
+        self.rank
     }
 
-    fn step(&mut self, batch: &Batch) -> Result<f32> {
-        let n = self.ctx.n();
-        if let Some(tl) = self.ctx.timeline.as_mut() {
-            tl.reset();
-        }
-        let mut loss_sum = 0.0;
-        for w in 0..n {
-            let shard = batch.shard(w, n);
-            loss_sum += dense_step(&mut self.ctx, &mut self.hooks, w, &shard)?;
-        }
-        self.finish_step()?;
-        if let Some(tl) = self.ctx.timeline.as_mut() {
+    fn step_local(&mut self, ctx: &mut RankCtx, batch: &Batch) -> Result<f32> {
+        let n = ctx.n();
+        let shard = batch.shard(self.rank, n);
+        let loss = dense_step(ctx, &mut self.hooks, &shard)?;
+        self.finish_step(ctx)?;
+        if let Some(tl) = ctx.timeline.as_deref_mut() {
             tl.barrier();
         }
-        debug_assert_eq!(
-            self.ctx.cluster.fabric().in_flight(),
-            0,
-            "fsdp step left ring-fabric messages in flight"
-        );
-        self.last_loss = loss_sum / n as f32;
-        Ok(self.last_loss)
+        Ok(loss)
     }
 
-    fn gather_params(&self) -> ModelParams {
-        let ports = self.ctx.ports();
-        let mut out = ModelParams::zeros_like(&self.ctx.cfg);
+    fn gather_params_local(&self, port: &RingPort) -> ModelParams {
+        let mut out = ModelParams::zeros_like(&self.cfg);
         for st in &self.hooks.states {
-            let shards = st.param_shards.as_ref().expect("virtual mode");
-            let flats: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
-            let full = st.layout.allgather_via(ports, &flats).swap_remove(0);
+            let shard = st.param_shard.as_ref().expect("virtual mode");
+            let full = st.layout.allgather_via(port, &shard.data);
             for (slot, t) in st.slots.iter().zip(st.layout.unpack(&full)) {
                 *resolve_mut(&mut out, *slot) = t;
             }
@@ -494,13 +460,11 @@ impl Engine for FsdpEngine {
         out
     }
 
-    fn gather_grads(&self) -> ModelParams {
-        let ports = self.ctx.ports();
-        let mut out = ModelParams::zeros_like(&self.ctx.cfg);
+    fn gather_grads_local(&self, port: &RingPort) -> ModelParams {
+        let mut out = ModelParams::zeros_like(&self.cfg);
         for st in &self.hooks.states {
-            let shards = st.grad_shards.as_ref().expect("virtual mode");
-            let flats: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
-            let full = st.layout.allgather_via(ports, &flats).swap_remove(0);
+            let shard = st.grad_shard.as_ref().expect("virtual mode");
+            let full = st.layout.allgather_via(port, &shard.data);
             for (slot, t) in st.slots.iter().zip(st.layout.unpack(&full)) {
                 *resolve_mut(&mut out, *slot) = t;
             }
@@ -510,30 +474,19 @@ impl Engine for FsdpEngine {
 
     fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
         for st in &mut self.hooks.states {
-            let (Some(ps), Some(gs)) = (st.param_shards.as_mut(), st.grad_shards.as_ref())
+            let (Some(p), Some(g)) = (st.param_shard.as_mut(), st.grad_shard.as_ref())
             else {
                 return;
             };
-            for (p, g) in ps.iter_mut().zip(gs) {
-                f(p, g);
-            }
+            f(p, g);
         }
     }
 
     fn zero_grads(&mut self) {
         for st in &mut self.hooks.states {
-            if let Some(gs) = st.grad_shards.as_mut() {
-                for g in gs {
-                    g.data.fill(0.0);
-                }
+            if let Some(g) = st.grad_shard.as_mut() {
+                g.data.fill(0.0);
             }
         }
-    }
-
-    fn ctx(&self) -> &Ctx {
-        &self.ctx
-    }
-    fn ctx_mut(&mut self) -> &mut Ctx {
-        &mut self.ctx
     }
 }

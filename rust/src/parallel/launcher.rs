@@ -1,0 +1,116 @@
+//! Pluggable rank-body launchers: HOW the N `RankEngine` participants of
+//! a [`ClusterEngine`](super::ClusterEngine) execute.
+//!
+//! - [`Launcher::Lockstep`] — the deterministic scheduler: rank bodies
+//!   run one at a time in round-robin order, yielding only when a `recv`
+//!   finds an empty mailbox (threads used as coroutines — stable Rust has
+//!   no native coroutines). Execution order depends only on program
+//!   structure, so traces, tracker interleavings and failures reproduce
+//!   exactly, and a ring deadlock is detected the moment every live rank
+//!   is parked. This is the default and what the test suite runs.
+//! - [`Launcher::Thread`] — real concurrency: one free-running OS thread
+//!   per rank over the `Send` fabric, with an implicit barrier when the
+//!   round ends (all threads joined). This is what makes wall-clock
+//!   compute/comm overlap measurable instead of modeled.
+//!
+//! Both launchers produce BIT-IDENTICAL results for every engine: each
+//! directed fabric link is FIFO and each rank's program order is fixed,
+//! so the data flow — including float reduction order — is independent of
+//! scheduling. The `launcher_equivalence` integration suite asserts this
+//! for all five engines.
+//!
+//! Select globally with `RTP_LAUNCHER=thread` (CI runs the suite under
+//! both), or per engine via `EngineOpts::launcher`.
+
+use crate::comm::{LaunchPolicy, RingFabric};
+
+/// Which backend runs the rank bodies. See the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Launcher {
+    /// Deterministic round-robin, one rank at a time ("LockstepLauncher").
+    Lockstep,
+    /// One OS thread per rank, free-running ("ThreadLauncher").
+    Thread,
+}
+
+impl Launcher {
+    /// The process-wide default: `RTP_LAUNCHER=thread|threads|threaded`
+    /// selects [`Launcher::Thread`]; anything else (or unset) is
+    /// [`Launcher::Lockstep`].
+    pub fn from_env() -> Launcher {
+        match std::env::var("RTP_LAUNCHER").as_deref() {
+            Ok("thread") | Ok("threads") | Ok("threaded") => Launcher::Thread,
+            _ => Launcher::Lockstep,
+        }
+    }
+
+    pub fn policy(&self) -> LaunchPolicy {
+        match self {
+            Launcher::Lockstep => LaunchPolicy::Lockstep,
+            Launcher::Thread => LaunchPolicy::Threaded,
+        }
+    }
+
+    /// Run one closure per rank to completion under this launcher's
+    /// scheduling policy; returns per-rank results in rank order. Panics
+    /// in any rank body poison the round and re-raise here.
+    pub fn run<'env, T: Send>(
+        &self,
+        fabric: &RingFabric,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
+    ) -> Vec<T> {
+        fabric.run_round(self.policy(), tasks)
+    }
+
+    /// [`Launcher::run`] without the panic re-raise: the caller inspects
+    /// per-rank `thread::Result`s (used by the step path to prefer a
+    /// rank's orderly `Err` — e.g. a simulated OOM — over the secondary
+    /// poisoned-round panics it caused in blocked peers).
+    pub fn try_run<'env, T: Send>(
+        &self,
+        fabric: &RingFabric,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
+    ) -> Vec<std::thread::Result<T>> {
+        fabric.try_round(self.policy(), tasks)
+    }
+}
+
+impl std::fmt::Display for Launcher {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Launcher::Lockstep => "lockstep",
+            Launcher::Thread => "thread",
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_launchers_run_rank_bodies_to_completion() {
+        for launcher in [Launcher::Lockstep, Launcher::Thread] {
+            let fab = RingFabric::new(3);
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..3)
+                .map(|r| {
+                    let port = fab.port(r);
+                    Box::new(move || {
+                        port.send(port.next(), r + 100);
+                        port.recv::<usize>(port.prev())
+                    }) as Box<dyn FnOnce() -> usize + Send>
+                })
+                .collect();
+            let got = launcher.run(&fab, tasks);
+            assert_eq!(got, vec![102, 100, 101], "{launcher}");
+        }
+    }
+
+    #[test]
+    fn env_default_is_lockstep() {
+        // RTP_LAUNCHER is not set in the test env
+        if std::env::var("RTP_LAUNCHER").is_err() {
+            assert_eq!(Launcher::from_env(), Launcher::Lockstep);
+        }
+    }
+}

@@ -9,24 +9,55 @@
 //! | `megatron_tp` | static weight shard| FULL batch  | activation allreduce/allgather |
 //! | `rtp`         | rotating shard     | batch shard | grads rotate home (no allreduce) |
 //!
+//! ## SPMD architecture
+//!
+//! Every engine is N independent [`RankEngine`] participants — one per
+//! simulated device — each owning ONLY its rank's state (its shard or
+//! replica, its gradients, its memory tracker, its executor, its
+//! [`RingPort`](crate::comm::RingPort)). A rank's `step_local` runs the
+//! full forward+backward for its batch shard and performs its OWN side of
+//! every collective through its port; cross-rank data moves exclusively
+//! through the ring fabric. This is the same program shape a real
+//! torchrun-style launch has: the paper's §3.4 overlap of per-rank
+//! compute with neighbor-only weight rotation is expressible per rank,
+//! not just modeled.
+//!
+//! How the N rank bodies execute is the [`Launcher`]'s choice:
+//! - `Launcher::Lockstep` — deterministic single-threaded-equivalent
+//!   round-robin (threads as coroutines, one rank at a time, yields only
+//!   at empty-mailbox recv). Reproducible traces, exact deadlock
+//!   detection. The default.
+//! - `Launcher::Thread` — one free-running OS thread per rank over the
+//!   `Send` fabric, barrier at step end: real concurrent overlap.
+//!
+//! Results are bit-identical under both launchers: each directed fabric
+//! link is FIFO and each rank's program order is fixed, so reduction
+//! order never depends on scheduling.
+//!
+//! The cluster-level [`Engine`] trait survives as a thin facade
+//! ([`ClusterEngine`] = [`Launcher`] + `Vec<Box<dyn RankEngine>>`): the
+//! trainer, optimizer, benches and examples keep driving one object.
+//!
 //! All engines run in real mode (PJRT artifacts or the rust oracle — exact
 //! numerics, gradient-equivalence tested) and virtual mode (shape stubs —
 //! paper-scale memory/throughput accounting), through the same code.
 //!
 //! Communication discipline: every inter-worker transfer goes through the
-//! rank-local ring fabric (`comm::RingPort`) — engines never mutate
-//! another rank's buffers directly. Collectives are the chunked ring
-//! algorithms of [`crate::comm`] (allreduce = 2(N-1) hops, allgather /
-//! reduce-scatter = N-1 hops, rotation = 1 hop), charged per hop on the
-//! timeline via `Ctx::charge_comm*` and traced per hop, so every engine's
-//! schedule exposes the real hop structure the paper's §3.4 analysis is
-//! about. A finished `step` always leaves the fabric drained (asserted).
+//! rank-local ring fabric — engines never touch another rank's buffers.
+//! Collectives are the chunked ring algorithms of [`crate::comm`]
+//! (allreduce = 2(N-1) hops, allgather / reduce-scatter = N-1 hops,
+//! rotation = 1 hop), charged per hop on the timeline via
+//! `RankCtx::charge_comm*` and traced per hop, so every engine's schedule
+//! exposes the real hop structure the paper's §3.4 analysis is about. A
+//! finished `step` always leaves the fabric drained (asserted).
 
 pub mod builder;
+pub mod cluster_engine;
 pub mod common;
 pub mod ddp;
 pub mod dense;
 pub mod fsdp;
+pub mod launcher;
 pub mod rtp;
 pub mod single;
 pub mod tp;
@@ -34,12 +65,46 @@ pub mod tp;
 use anyhow::Result;
 
 pub use builder::{build_engine, EngineOpts, ExecKind};
-pub use common::{Batch, Ctx};
+pub use cluster_engine::ClusterEngine;
+pub use common::{Batch, Ctx, RankCtx};
+pub use launcher::Launcher;
 
 use crate::model::ModelParams;
 use crate::tensor::HostTensor;
 
-/// One parallel training engine.
+/// One rank's participant in a parallel training engine: the SPMD unit.
+/// Owns only this rank's model state; all cluster-level resources arrive
+/// through the [`RankCtx`] view, and all cross-rank data moves through
+/// the fabric port.
+pub trait RankEngine: Send + Sync {
+    fn rank(&self) -> usize;
+
+    /// One forward+backward pass over this rank's view of the GLOBAL
+    /// batch (the engine shards it internally), including this rank's
+    /// side of every collective. Returns this rank's mean loss (0.0 in
+    /// virtual mode). Grads ACCUMULATE until `zero_grads`. Must be called
+    /// from inside a fabric round with every other rank stepping too.
+    fn step_local(&mut self, ctx: &mut RankCtx, batch: &Batch) -> Result<f32>;
+
+    /// Reconstruct the FULL model parameters through the fabric (real
+    /// mode only — test/checkpoint path). Every rank participates; every
+    /// rank returns the same assembled model. Must run inside a fabric
+    /// round. Panics in virtual mode.
+    fn gather_params_local(&self, port: &crate::comm::RingPort) -> ModelParams;
+
+    /// Reconstruct the full, fully-reduced gradients (real mode only).
+    fn gather_grads_local(&self, port: &crate::comm::RingPort) -> ModelParams;
+
+    /// Visit every (param, grad) pair this rank OWNS (its shard layout) —
+    /// the optimizer update path. Deterministic order. Real mode only.
+    fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor));
+
+    fn zero_grads(&mut self);
+}
+
+/// One parallel training engine, cluster view — the facade the trainer,
+/// benches and tests drive. Implemented by [`ClusterEngine`] over N
+/// [`RankEngine`]s and a [`Launcher`].
 pub trait Engine {
     fn name(&self) -> String;
 

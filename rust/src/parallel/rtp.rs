@@ -8,16 +8,19 @@
 //! shard is back home and its gradient has accumulated every worker's
 //! batch contribution — replacing DDP's allreduce entirely.
 //!
-//! Every rotation hop is a true neighbor exchange on the rank-local ring
-//! fabric: worker `w` pushes its shard out of its own `RingPort` and pulls
-//! its upstream neighbor's in — no worker ever reaches into another
-//! worker's buffers. Shard ids ride the fabric in virtual mode, so the
-//! per-hop schedule (and its trace) is mode-independent.
+//! Each rank is an independent [`RankEngine`]: it holds exactly ONE shard
+//! of every unit (the one currently visiting), pushes it out of its own
+//! `RingPort` at each rotation boundary and pulls its upstream neighbor's
+//! in — the paper's §3.4 per-rank overlap of partition compute with
+//! neighbor-only weight movement, expressed as a per-rank program rather
+//! than modeled from a god-view loop. Shard ids ride the fabric in
+//! virtual mode, so the per-hop schedule (and its trace) is
+//! mode-independent.
 //!
 //! Variants (paper §3):
 //! - **In-place**: rotation is blocking and reuses the live shard buffer —
 //!   zero extra memory (Table 1 row `RTP Inplace`), serialized comm.
-//! - **Out-of-place**: a persistent per-worker rotation buffer
+//! - **Out-of-place**: a persistent per-rank rotation buffer
 //!   (`max(W,G)/N` — Table 1 row `RTP`) double-buffers the in-flight
 //!   shard so rotation overlaps compute on a second stream; with
 //!   `recycle` (§3.4.4) the buffer's bytes are repurposed for the
@@ -28,21 +31,26 @@
 //! Megatron-pair MLP (merge = add), Expert-Partition (MoE — rotation
 //! replaces the all-to-all).
 
+use std::any::Any;
+
 use anyhow::Result;
 
 use crate::cluster::TraceEvent;
-use crate::comm::{rotation::shard_at, CommPrim, RingPort, RotationDir};
+use crate::comm::{self, CommPrim, RingPort, RotationDir};
 use crate::config::ModelCfg;
 use crate::memory::tracker::MemCategory;
-use crate::model::partition::{self, AttnShard, MlpShard};
 use crate::model::ops::Op;
+use crate::model::partition::{self, AttnShard, MlpShard};
 use crate::model::{ExpertParams, MlpParams, ModelParams};
 use crate::runtime::{arg_of, Buf};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
-use super::common::{replicated_elems, scatter_dgates, top1_gates, Batch, Ctx, RepParams, TBuf};
-use super::Engine;
+use super::common::{
+    allgather_tensor, replicated_elems, scatter_dgates, top1_gates, Batch, RankCtx,
+    RepParams, TBuf,
+};
+use super::RankEngine;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RtpVariant {
@@ -57,64 +65,44 @@ impl RtpVariant {
 }
 
 // ---------------------------------------------------------------------------
-// rotating rings
+// this rank's slot on a rotating ring
 // ---------------------------------------------------------------------------
 
-/// A ring of rotating shard payloads: `ids[w]` names the shard currently
-/// held by worker `w`; `data` carries the real tensors (None in virtual
-/// mode). Rotation is a true neighbor exchange through the rank-local
-/// fabric: every worker sends its payload out of its own port and receives
-/// its upstream neighbor's — ids and data ride the same hop, so the
-/// schedule is identical in virtual mode (ids only) and real mode.
+/// The shard currently visiting THIS rank on one unit's rotation ring:
+/// `id` names the shard, `data` carries its tensors (None in virtual
+/// mode). A rotation hop pushes `(id, data)` out of this rank's port and
+/// pulls the upstream neighbor's in — ids and data ride the same
+/// message, so the schedule is identical in both modes.
 #[derive(Debug)]
-struct Ring<T> {
-    ids: Vec<usize>,
-    data: Option<Vec<T>>,
+struct RingSlot<T> {
+    id: usize,
+    data: Option<T>,
 }
 
-impl<T: 'static> Ring<T> {
-    fn home(n: usize, data: Option<Vec<T>>) -> Self {
-        if let Some(d) = &data {
-            assert_eq!(d.len(), n);
-        }
-        Ring { ids: (0..n).collect(), data }
+impl<T: Any + Send> RingSlot<T> {
+    fn home(rank: usize, data: Option<T>) -> Self {
+        RingSlot { id: rank, data }
     }
 
-    /// One rotation hop through the fabric in direction `dir`. Real mode
-    /// sends ONE `(id, payload)` message per rank so the fabric's hop and
-    /// message accounting is identical to virtual mode (ids only).
-    fn rotate(&mut self, ports: &[RingPort], dir: RotationDir) {
-        let n = self.ids.len();
+    /// One rotation hop through this rank's port in direction `dir`.
+    fn rotate(&mut self, port: &RingPort, dir: RotationDir) {
+        let n = port.n();
         if n <= 1 {
             return;
         }
-        match self.data.as_mut() {
-            None => crate::comm::rotate_ring(ports, &mut self.ids, dir),
+        let w = port.rank();
+        match self.data.take() {
+            None => {
+                port.send(dir.send_peer(w, n), self.id);
+                self.id = port.recv(dir.recv_peer(w, n));
+            }
             Some(d) => {
-                let ids = std::mem::take(&mut self.ids);
-                let data = std::mem::take(d);
-                for (w, msg) in ids.into_iter().zip(data).enumerate() {
-                    ports[w].send(dir.send_peer(w, n), msg);
-                }
-                for (w, port) in ports.iter().enumerate() {
-                    let (id, payload): (usize, T) = port.recv(dir.recv_peer(w, n));
-                    self.ids.push(id);
-                    d.push(payload);
-                }
+                port.send(dir.send_peer(w, n), (self.id, d));
+                let (id, d2): (usize, T) = port.recv(dir.recv_peer(w, n));
+                self.id = id;
+                self.data = Some(d2);
             }
         }
-    }
-
-    fn id(&self, w: usize) -> usize {
-        self.ids[w]
-    }
-
-    fn get(&self, w: usize) -> Option<&T> {
-        self.data.as_ref().map(|d| &d[w])
-    }
-
-    fn get_mut(&mut self, w: usize) -> Option<&mut T> {
-        self.data.as_mut().map(|d| &mut d[w])
     }
 }
 
@@ -132,19 +120,19 @@ enum MlpShardV {
 }
 
 struct Rings {
-    emb: Ring<EmbShard>,
-    attn: Vec<Ring<AttnShard>>,
-    mlp: Vec<Ring<MlpShardV>>,
-    lm: Ring<HostTensor>,
+    emb: RingSlot<EmbShard>,
+    attn: Vec<RingSlot<AttnShard>>,
+    mlp: Vec<RingSlot<MlpShardV>>,
+    lm: RingSlot<HostTensor>,
 }
 
-/// Home gradient storage, indexed by SHARD ID (not worker — though after
-/// a full step they coincide).
+/// Home gradient storage for THIS rank's own shard (shard id == rank —
+/// where every traveling gradient lands after its N-1 backward hops).
 struct HomeGrads {
-    emb: Option<Vec<EmbShard>>,
-    attn: Option<Vec<Vec<AttnShard>>>,
-    mlp: Option<Vec<Vec<MlpShardV>>>,
-    lm: Option<Vec<HostTensor>>,
+    emb: Option<EmbShard>,
+    attn: Option<Vec<AttnShard>>,
+    mlp: Option<Vec<MlpShardV>>,
+    lm: Option<HostTensor>,
 }
 
 /// Per-unit rotation message sizes (the FlatParameter the ring moves).
@@ -208,26 +196,34 @@ fn zero_like_mlp(s: &MlpShardV) -> MlpShardV {
     }
 }
 
+fn zero_like_emb(e: &EmbShard) -> EmbShard {
+    EmbShard {
+        wte: HostTensor::zeros(&e.wte.shape),
+        wpe: HostTensor::zeros(&e.wpe.shape),
+    }
+}
+
 // ---------------------------------------------------------------------------
-// the engine
+// the rank engine
 // ---------------------------------------------------------------------------
 
-pub struct RtpEngine {
-    pub ctx: Ctx,
+pub struct RtpRank {
+    rank: usize,
+    cfg: ModelCfg,
     pub variant: RtpVariant,
     rings: Rings,
     grads: HomeGrads,
-    rep: Option<Vec<RepParams>>,
-    g_rep: Option<Vec<RepParams>>,
-    /// Out-of-place: the persistent rotation buffer, one per worker.
-    comm_bufs: Vec<TBuf>,
+    rep: Option<RepParams>,
+    g_rep: Option<RepParams>,
+    /// Out-of-place: the persistent rotation buffer.
+    comm_buf: Option<TBuf>,
     bytes: ShardBytes,
-    last_loss: f32,
 }
 
-impl RtpEngine {
-    pub fn new(mut ctx: Ctx, seed: u64, variant: RtpVariant) -> Result<Self> {
+impl RtpRank {
+    pub fn new(ctx: &mut RankCtx, seed: u64, variant: RtpVariant) -> Result<Self> {
         let n = ctx.n();
+        let rank = ctx.rank;
         let cfg = ctx.cfg.clone();
         let virt = ctx.virtual_mode();
         if cfg.is_moe() {
@@ -238,100 +234,67 @@ impl RtpEngine {
         let (rings, grads, rep, g_rep) = if virt {
             (
                 Rings {
-                    emb: Ring::home(n, None),
-                    attn: (0..cfg.layers).map(|_| Ring::home(n, None)).collect(),
-                    mlp: (0..cfg.layers).map(|_| Ring::home(n, None)).collect(),
-                    lm: Ring::home(n, None),
+                    emb: RingSlot::home(rank, None),
+                    attn: (0..cfg.layers).map(|_| RingSlot::home(rank, None)).collect(),
+                    mlp: (0..cfg.layers).map(|_| RingSlot::home(rank, None)).collect(),
+                    lm: RingSlot::home(rank, None),
                 },
                 HomeGrads { emb: None, attn: None, mlp: None, lm: None },
                 None,
                 None,
             )
         } else {
+            // every rank derives the same full model from the same seed
+            // and keeps only its home shard
             let full = ModelParams::init(&cfg, &mut Rng::new(seed));
             let heads = cfg.heads;
             let hd = cfg.head_dim();
-            let emb_shards: Vec<EmbShard> = (0..n)
-                .map(|s| EmbShard {
-                    wte: partition::shard_cols(&full.wte, s, n),
-                    wpe: partition::shard_cols(&full.wpe, s, n),
-                })
-                .collect();
-            let attn_rings: Vec<Ring<AttnShard>> = full
-                .layers
-                .iter()
-                .map(|lp| {
-                    Ring::home(
-                        n,
-                        Some(
-                            (0..n)
-                                .map(|s| {
-                                    partition::attn_shard(
-                                        &lp.wqkv, &lp.bqkv, &lp.wo, s, n, heads, hd,
-                                    )
-                                })
-                                .collect(),
-                        ),
-                    )
-                })
-                .collect();
-            let mlp_rings: Vec<Ring<MlpShardV>> = full
-                .layers
-                .iter()
-                .map(|lp| {
-                    Ring::home(
-                        n,
-                        Some(
-                            (0..n)
-                                .map(|s| match &lp.mlp {
-                                    MlpParams::Dense { w1, b1, w2, .. } => MlpShardV::Dense(
-                                        partition::mlp_shard(w1, b1, w2, s, n),
-                                    ),
-                                    MlpParams::Moe { experts, .. } => MlpShardV::Experts(
-                                        partition::expert_range(s, n, cfg.experts)
-                                            .map(|e| experts[e].clone())
-                                            .collect(),
-                                    ),
-                                })
-                                .collect(),
-                        ),
-                    )
-                })
-                .collect();
-            let lm_shards: Vec<HostTensor> =
-                (0..n).map(|s| partition::shard_cols(&full.wlm, s, n)).collect();
-            let grads = HomeGrads {
-                emb: Some(
-                    emb_shards
-                        .iter()
-                        .map(|e| EmbShard {
-                            wte: HostTensor::zeros(&e.wte.shape),
-                            wpe: HostTensor::zeros(&e.wpe.shape),
-                        })
-                        .collect(),
-                ),
-                attn: Some(
-                    attn_rings
-                        .iter()
-                        .map(|r| r.data.as_ref().unwrap().iter().map(zero_like_attn).collect())
-                        .collect(),
-                ),
-                mlp: Some(
-                    mlp_rings
-                        .iter()
-                        .map(|r| r.data.as_ref().unwrap().iter().map(zero_like_mlp).collect())
-                        .collect(),
-                ),
-                lm: Some(lm_shards.iter().map(|t| HostTensor::zeros(&t.shape)).collect()),
+            let emb = EmbShard {
+                wte: partition::shard_cols(&full.wte, rank, n),
+                wpe: partition::shard_cols(&full.wpe, rank, n),
             };
-            let rep = vec![RepParams::from_full(&full); n];
-            let g_rep = rep.iter().map(|r| r.zeros_like()).collect();
+            let attn: Vec<AttnShard> = full
+                .layers
+                .iter()
+                .map(|lp| {
+                    partition::attn_shard(&lp.wqkv, &lp.bqkv, &lp.wo, rank, n, heads, hd)
+                })
+                .collect();
+            let mlp: Vec<MlpShardV> = full
+                .layers
+                .iter()
+                .map(|lp| match &lp.mlp {
+                    MlpParams::Dense { w1, b1, w2, .. } => {
+                        MlpShardV::Dense(partition::mlp_shard(w1, b1, w2, rank, n))
+                    }
+                    MlpParams::Moe { experts, .. } => MlpShardV::Experts(
+                        partition::expert_range(rank, n, cfg.experts)
+                            .map(|e| experts[e].clone())
+                            .collect(),
+                    ),
+                })
+                .collect();
+            let lm = partition::shard_cols(&full.wlm, rank, n);
+            let grads = HomeGrads {
+                emb: Some(zero_like_emb(&emb)),
+                attn: Some(attn.iter().map(zero_like_attn).collect()),
+                mlp: Some(mlp.iter().map(zero_like_mlp).collect()),
+                lm: Some(HostTensor::zeros(&lm.shape)),
+            };
+            let rep = RepParams::from_full(&full);
+            let g_rep = rep.zeros_like();
             (
                 Rings {
-                    emb: Ring::home(n, Some(emb_shards)),
-                    attn: attn_rings,
-                    mlp: mlp_rings,
-                    lm: Ring::home(n, Some(lm_shards)),
+                    emb: RingSlot::home(rank, Some(emb)),
+                    attn: attn
+                        .into_iter()
+                        .map(|a| RingSlot::home(rank, Some(a)))
+                        .collect(),
+                    mlp: mlp
+                        .into_iter()
+                        .map(|m| RingSlot::home(rank, Some(m)))
+                        .collect(),
+                    lm: RingSlot::home(rank, Some(lm)),
                 },
                 grads,
                 Some(rep),
@@ -342,52 +305,43 @@ impl RtpEngine {
         // persistent residency: weight shard + grad shard + replicated ×2
         let sharded = bytes.total(cfg.layers);
         let rep_bytes = (replicated_elems(&cfg) * 4) as u64;
-        for w in 0..n {
-            ctx.cluster.tracker(w).alloc(MemCategory::Weights, sharded + rep_bytes)?;
-            ctx.cluster.tracker(w).alloc(MemCategory::Grads, sharded + rep_bytes)?;
-        }
-        // out-of-place: one persistent rotation buffer per worker,
-        // sized for the largest in-flight message: max(W,G)/N per Table 1
-        // (weights and grads are equal-sized here, and backward moves both
-        // => the buffer holds one unit's weight+grad shard pair).
-        let mut comm_bufs = Vec::new();
+        ctx.tracker.alloc(MemCategory::Weights, sharded + rep_bytes)?;
+        ctx.tracker.alloc(MemCategory::Grads, sharded + rep_bytes)?;
+        // out-of-place: one persistent rotation buffer, sized for the
+        // largest in-flight message: max(W,G)/N per Table 1 (weights and
+        // grads are equal-sized here, and backward moves both => the
+        // buffer holds one unit's weight+grad shard pair).
+        let mut comm_buf = None;
         if variant.overlapped() {
-            let unit_max = bytes
-                .emb
-                .max(bytes.attn)
-                .max(bytes.mlp)
-                .max(bytes.lm);
-            for w in 0..n {
-                comm_bufs.push(ctx.alloc(
-                    w,
-                    MemCategory::CommBuf,
-                    Buf::Virt(vec![(2 * unit_max / 4) as usize]),
-                )?);
-            }
+            let unit_max = bytes.emb.max(bytes.attn).max(bytes.mlp).max(bytes.lm);
+            comm_buf = Some(ctx.alloc(
+                MemCategory::CommBuf,
+                Buf::Virt(vec![(2 * unit_max / 4) as usize]),
+            )?);
         }
 
-        Ok(RtpEngine {
-            ctx,
+        Ok(RtpRank {
+            rank,
+            cfg,
             variant,
             rings,
             grads,
             rep,
             g_rep,
-            comm_bufs,
+            comm_buf,
             bytes,
-            last_loss: 0.0,
         })
     }
 
-    /// Charge one rotation boundary on the timeline and step the ring one
-    /// hop through the fabric. `fwd` chooses direction; `bytes` is the
-    /// per-worker message size (backward doubles it: weights + traveling
-    /// grads).
-    fn rotate<T: 'static>(
-        ctx: &mut Ctx,
+    /// Charge one rotation boundary on the (lead rank's) timeline, emit
+    /// the trace event, and step this rank's slot(s) one hop through its
+    /// port. `fwd` chooses direction; `bytes` is the per-rank message
+    /// size (backward doubles it: weights + traveling grads).
+    fn rotate_unit<T: Any + Send>(
+        ctx: &mut RankCtx,
         variant: RtpVariant,
-        ring: &mut Ring<T>,
-        gring: Option<&mut Ring<T>>,
+        ring: &mut RingSlot<T>,
+        gring: Option<&mut RingSlot<T>>,
         bytes: u64,
         fwd: bool,
         step: usize,
@@ -395,32 +349,33 @@ impl RtpEngine {
         let msg = if fwd { bytes } else { 2 * bytes };
         match variant {
             RtpVariant::InPlace => {
-                if let Some(tl) = ctx.timeline.as_mut() {
+                if let Some(tl) = ctx.timeline.as_deref_mut() {
                     tl.comm_blocking("rotate", CommPrim::Rotation, msg);
                 }
             }
             RtpVariant::OutOfPlace { .. } => {
                 // overlap was charged eagerly before the step's compute
-                // (see step()); nothing blocking here.
+                // (see step_local()); nothing blocking here.
             }
         }
         let dir = if fwd { RotationDir::Clockwise } else { RotationDir::CounterClockwise };
-        let ports = ctx.ports();
-        ring.rotate(ports, dir);
+        ring.rotate(&ctx.port, dir);
         if let Some(g) = gring {
-            g.rotate(ports, dir);
+            g.rotate(&ctx.port, dir);
         }
-        ctx.trace(TraceEvent::Rotate {
-            dir: if fwd { "cw" } else { "ccw" },
-            bytes_per_worker: msg,
-            step,
-        });
+        if ctx.lead() {
+            ctx.trace(TraceEvent::Rotate {
+                dir: if fwd { "cw" } else { "ccw" },
+                bytes_per_worker: msg,
+                step,
+            });
+        }
     }
 
     /// Out-of-place: charge the eager async rotation that overlaps this
     /// step's compute; returns the token to wait on at the boundary.
     fn oop_prefetch(
-        ctx: &mut Ctx,
+        ctx: &mut RankCtx,
         variant: RtpVariant,
         bytes: u64,
         fwd: bool,
@@ -430,12 +385,12 @@ impl RtpEngine {
         }
         let msg = if fwd { bytes } else { 2 * bytes };
         ctx.timeline
-            .as_mut()
+            .as_deref_mut()
             .map(|tl| tl.comm_async_eager("rotate", CommPrim::Rotation, msg))
     }
 
-    fn oop_wait(ctx: &mut Ctx, tok: Option<crate::perfmodel::Token>) {
-        if let (Some(tl), Some(tok)) = (ctx.timeline.as_mut(), tok) {
+    fn oop_wait(ctx: &mut RankCtx, tok: Option<crate::perfmodel::Token>) {
+        if let (Some(tl), Some(tok)) = (ctx.timeline.as_deref_mut(), tok) {
             tl.wait(tok);
         }
     }
@@ -446,133 +401,111 @@ fn land_scale(n: usize) -> f32 {
     1.0 / n as f32
 }
 
-impl Engine for RtpEngine {
-    fn name(&self) -> String {
-        match self.variant {
-            RtpVariant::InPlace => "rtp-inplace".to_string(),
-            RtpVariant::OutOfPlace { recycle: true } => "rtp-outofplace".to_string(),
-            RtpVariant::OutOfPlace { recycle: false } => {
-                "rtp-outofplace-norecycle".to_string()
-            }
-        }
+impl RankEngine for RtpRank {
+    fn rank(&self) -> usize {
+        self.rank
     }
 
-    fn step(&mut self, batch: &Batch) -> Result<f32> {
-        let n = self.ctx.n();
-        let cfg = self.ctx.cfg.clone();
+    fn step_local(&mut self, ctx: &mut RankCtx, batch: &Batch) -> Result<f32> {
+        let n = ctx.n();
+        let w = self.rank;
+        let cfg = self.cfg.clone();
         let b = batch.ids.shape[0] / n; // local batch
         let (h, v) = (cfg.hidden, cfg.vocab);
         let (hp, vp) = (h / n, v / n);
-        let virt = self.ctx.virtual_mode();
+        let virt = ctx.virtual_mode();
         let acts = MemCategory::Activations;
         let variant = self.variant;
-        if let Some(tl) = self.ctx.timeline.as_mut() {
-            tl.reset();
-        }
-        self.ctx.cluster.trace.phase("forward");
+        ctx.phase("forward");
 
-        // worker-local batch shards
-        let mut ids = Vec::with_capacity(n);
-        let mut tgts = Vec::with_capacity(n);
-        for w in 0..n {
-            let shard = batch.shard(w, n);
-            let mk = |t: &crate::tensor::IntTensor| {
-                if virt { Buf::Virt(vec![b, cfg.seq]) } else { Buf::Ids(t.clone()) }
-            };
-            ids.push(self.ctx.alloc(w, acts, mk(&shard.ids))?);
-            tgts.push(self.ctx.alloc(w, acts, mk(&shard.targets))?);
-        }
+        // this rank's batch shard
+        let shard = batch.shard(w, n);
+        let mk = |t: &crate::tensor::IntTensor| {
+            if virt { Buf::Virt(vec![b, cfg.seq]) } else { Buf::Ids(t.clone()) }
+        };
+        let ids = ctx.alloc(acts, mk(&shard.ids))?;
+        let tgts = ctx.alloc(acts, mk(&shard.targets))?;
 
         // ---------------- forward ----------------
-        // embedding: Output-Partition, each worker assembles the FULL
+        // embedding: Output-Partition, this rank assembles the FULL
         // hidden locally across the N rotation steps (no activation comm!)
-        let mut x: Vec<TBuf> = Vec::with_capacity(n);
-        for w in 0..n {
-            x.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?);
-        }
+        let mut x = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
         for t in 0..n {
             let tok = if t + 1 < n {
-                Self::oop_prefetch(&mut self.ctx, variant, self.bytes.emb, true)
+                Self::oop_prefetch(ctx, variant, self.bytes.emb, true)
             } else {
                 None
             };
-            for w in 0..n {
-                let sid = self.rings.emb.id(w);
-                let sh = self.rings.emb.get(w);
-                let mut outs = self.ctx.call_op(
-                    w,
+            let sid = self.rings.emb.id;
+            {
+                let sh = self.rings.emb.data.as_ref();
+                let mut outs = ctx.call_op(
                     Op::EmbFwd,
                     b,
                     n,
-                    &[ids[w].buf.arg(), arg_of(sh.map(|s| &s.wte)), arg_of(sh.map(|s| &s.wpe))],
+                    &[ids.buf.arg(), arg_of(sh.map(|s| &s.wte)), arg_of(sh.map(|s| &s.wpe))],
                     &[acts],
                 )?;
                 let part = outs.pop().unwrap();
-                self.ctx.write_col_slice(&mut x[w], sid * hp, &part);
-                self.ctx.free(part);
-                self.ctx.trace(TraceEvent::Compute {
-                    worker: w,
-                    unit: "emb".to_string(),
-                    shard: sid,
-                    step: t,
-                });
+                ctx.write_col_slice(&mut x, sid * hp, &part);
+                ctx.free(part);
             }
+            ctx.trace(TraceEvent::Compute {
+                worker: w,
+                unit: "emb".to_string(),
+                shard: sid,
+                step: t,
+            });
             if t + 1 < n {
-                Self::oop_wait(&mut self.ctx, tok);
-                Self::rotate(&mut self.ctx, variant, &mut self.rings.emb, None, self.bytes.emb, true, t);
+                Self::oop_wait(ctx, tok);
+                Self::rotate_unit(ctx, variant, &mut self.rings.emb, None, self.bytes.emb, true, t);
             }
         }
 
         struct SavedRtp {
-            x_in: Vec<TBuf>,
-            a: Vec<TBuf>,
-            x_mid: Vec<TBuf>,
-            m: Vec<TBuf>,
-            probs: Vec<TBuf>,
-            gates: Vec<Vec<TBuf>>, // [worker][expert]
+            x_in: TBuf,
+            a: TBuf,
+            x_mid: TBuf,
+            m: TBuf,
+            probs: Option<TBuf>,
+            gates: Vec<TBuf>, // [expert]
         }
         let mut saved: Vec<SavedRtp> = Vec::new();
 
         for l in 0..cfg.layers {
             // ln1 (replicated)
-            let mut a = Vec::with_capacity(n);
-            for w in 0..n {
-                let rep = self.rep.as_ref().map(|r| &r[w].layers[l]);
-                let mut outs = self.ctx.call_op(
-                    w,
+            let a = {
+                let rep = self.rep.as_ref().map(|r| &r.layers[l]);
+                let mut outs = ctx.call_op(
                     Op::LnFwd,
                     b,
                     n,
                     &[
-                        x[w].buf.arg(),
+                        x.buf.arg(),
                         arg_of(rep.map(|r| &r.ln1_g)),
                         arg_of(rep.map(|r| &r.ln1_b)),
                     ],
                     &[acts],
                 )?;
-                a.push(outs.pop().unwrap());
-            }
+                outs.pop().unwrap()
+            };
             // attention: rotation loop, sum-merge
-            let mut acc: Vec<TBuf> = Vec::with_capacity(n);
-            for w in 0..n {
-                acc.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?);
-            }
+            let mut acc = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
             for t in 0..n {
                 let tok = if t + 1 < n {
-                    Self::oop_prefetch(&mut self.ctx, variant, self.bytes.attn, true)
+                    Self::oop_prefetch(ctx, variant, self.bytes.attn, true)
                 } else {
                     None
                 };
-                for w in 0..n {
-                    let sid = self.rings.attn[l].id(w);
-                    let sh = self.rings.attn[l].get(w);
-                    let mut outs = self.ctx.call_op(
-                        w,
+                let sid = self.rings.attn[l].id;
+                {
+                    let sh = self.rings.attn[l].data.as_ref();
+                    let mut outs = ctx.call_op(
                         Op::AttnFwd,
                         b,
                         n,
                         &[
-                            a[w].buf.arg(),
+                            a.buf.arg(),
                             arg_of(sh.map(|s| &s.wqkv)),
                             arg_of(sh.map(|s| &s.bqkv)),
                             arg_of(sh.map(|s| &s.wo)),
@@ -580,19 +513,19 @@ impl Engine for RtpEngine {
                         &[acts],
                     )?;
                     let part = outs.pop().unwrap();
-                    self.ctx.accumulate(&mut acc[w], &part);
-                    self.ctx.free(part);
-                    self.ctx.trace(TraceEvent::Compute {
-                        worker: w,
-                        unit: format!("attn.l{l}"),
-                        shard: sid,
-                        step: t,
-                    });
+                    ctx.accumulate(&mut acc, &part);
+                    ctx.free(part);
                 }
+                ctx.trace(TraceEvent::Compute {
+                    worker: w,
+                    unit: format!("attn.l{l}"),
+                    shard: sid,
+                    step: t,
+                });
                 if t + 1 < n {
-                    Self::oop_wait(&mut self.ctx, tok);
-                    Self::rotate(
-                        &mut self.ctx,
+                    Self::oop_wait(ctx, tok);
+                    Self::rotate_unit(
+                        ctx,
                         variant,
                         &mut self.rings.attn[l],
                         None,
@@ -602,133 +535,119 @@ impl Engine for RtpEngine {
                     );
                 }
             }
-            let mut x_mid = Vec::with_capacity(n);
-            for (w, mut part) in acc.into_iter().enumerate() {
-                let bo = self.rep.as_ref().map(|r| r[w].layers[l].bo.clone());
-                self.ctx.add_bias(&mut part, bo.as_ref());
-                self.ctx.residual(&mut part, &x[w]);
-                x_mid.push(part);
-            }
+            let x_mid = {
+                let mut part = acc;
+                let bo = self.rep.as_ref().map(|r| r.layers[l].bo.clone());
+                ctx.add_bias(&mut part, bo.as_ref());
+                ctx.residual(&mut part, &x);
+                part
+            };
             // ln2
-            let mut m = Vec::with_capacity(n);
-            for w in 0..n {
-                let rep = self.rep.as_ref().map(|r| &r[w].layers[l]);
-                let mut outs = self.ctx.call_op(
-                    w,
+            let m = {
+                let rep = self.rep.as_ref().map(|r| &r.layers[l]);
+                let mut outs = ctx.call_op(
                     Op::LnFwd,
                     b,
                     n,
                     &[
-                        x_mid[w].buf.arg(),
+                        x_mid.buf.arg(),
                         arg_of(rep.map(|r| &r.ln2_g)),
                         arg_of(rep.map(|r| &r.ln2_b)),
                     ],
                     &[acts],
                 )?;
-                m.push(outs.pop().unwrap());
-            }
+                outs.pop().unwrap()
+            };
             // mlp / moe: rotation loop, sum-merge
-            let mut probs: Vec<TBuf> = Vec::new();
-            let mut gates: Vec<Vec<TBuf>> = Vec::new();
+            let mut probs: Option<TBuf> = None;
+            let mut gates: Vec<TBuf> = Vec::new();
             if cfg.is_moe() {
-                // replicated router runs once per worker
-                for w in 0..n {
-                    let rep = self.rep.as_ref().map(|r| &r[w].layers[l]);
-                    let wr = rep.and_then(|r| r.wr.as_ref());
-                    let mut outs = self.ctx.call_op(
-                        w,
-                        Op::RouterFwd,
-                        b,
-                        n,
-                        &[m[w].buf.arg(), arg_of(wr)],
-                        &[acts],
-                    )?;
-                    let p = outs.pop().unwrap();
-                    let gate_bufs: Vec<Buf> = if virt {
-                        (0..cfg.experts).map(|_| Buf::Virt(vec![b, cfg.seq])).collect()
-                    } else {
-                        top1_gates(p.f(), cfg.experts).into_iter().map(Buf::Real).collect()
-                    };
-                    let mut gw = Vec::with_capacity(cfg.experts);
-                    for g in gate_bufs {
-                        gw.push(self.ctx.alloc(w, acts, g)?);
-                    }
-                    probs.push(p);
-                    gates.push(gw);
+                // replicated router runs once on this rank
+                let rep = self.rep.as_ref().map(|r| &r.layers[l]);
+                let wr = rep.and_then(|r| r.wr.as_ref());
+                let mut outs = ctx.call_op(
+                    Op::RouterFwd,
+                    b,
+                    n,
+                    &[m.buf.arg(), arg_of(wr)],
+                    &[acts],
+                )?;
+                let p = outs.pop().unwrap();
+                let gate_bufs: Vec<Buf> = if virt {
+                    (0..cfg.experts).map(|_| Buf::Virt(vec![b, cfg.seq])).collect()
+                } else {
+                    top1_gates(p.f(), cfg.experts).into_iter().map(Buf::Real).collect()
+                };
+                for g in gate_bufs {
+                    gates.push(ctx.alloc(acts, g)?);
                 }
+                probs = Some(p);
             }
-            let mut acc: Vec<TBuf> = Vec::with_capacity(n);
-            for w in 0..n {
-                acc.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?);
-            }
+            let mut acc = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
             for t in 0..n {
                 let tok = if t + 1 < n {
-                    Self::oop_prefetch(&mut self.ctx, variant, self.bytes.mlp, true)
+                    Self::oop_prefetch(ctx, variant, self.bytes.mlp, true)
                 } else {
                     None
                 };
-                for w in 0..n {
-                    let sid = self.rings.mlp[l].id(w);
-                    if !cfg.is_moe() {
-                        let sh = self.rings.mlp[l].get(w).map(|s| match s {
-                            MlpShardV::Dense(d) => d,
+                let sid = self.rings.mlp[l].id;
+                if !cfg.is_moe() {
+                    let sh = self.rings.mlp[l].data.as_ref().map(|s| match s {
+                        MlpShardV::Dense(d) => d,
+                        _ => unreachable!(),
+                    });
+                    let mut outs = ctx.call_op(
+                        Op::MlpFwd,
+                        b,
+                        n,
+                        &[
+                            m.buf.arg(),
+                            arg_of(sh.map(|s| &s.w1)),
+                            arg_of(sh.map(|s| &s.b1)),
+                            arg_of(sh.map(|s| &s.w2)),
+                        ],
+                        &[acts],
+                    )?;
+                    let part = outs.pop().unwrap();
+                    ctx.accumulate(&mut acc, &part);
+                    ctx.free(part);
+                } else {
+                    // every expert in the held group visits this rank
+                    let per = cfg.experts / n;
+                    for k in 0..per {
+                        let e_global = sid * per + k;
+                        let ex = self.rings.mlp[l].data.as_ref().map(|s| match s {
+                            MlpShardV::Experts(ex) => &ex[k],
                             _ => unreachable!(),
                         });
-                        let mut outs = self.ctx.call_op(
-                            w,
-                            Op::MlpFwd,
+                        let mut outs = ctx.call_op(
+                            Op::MoeFwd,
                             b,
                             n,
                             &[
-                                m[w].buf.arg(),
-                                arg_of(sh.map(|s| &s.w1)),
-                                arg_of(sh.map(|s| &s.b1)),
-                                arg_of(sh.map(|s| &s.w2)),
+                                m.buf.arg(),
+                                gates[e_global].buf.arg(),
+                                arg_of(ex.map(|x| &x.w1)),
+                                arg_of(ex.map(|x| &x.b1)),
+                                arg_of(ex.map(|x| &x.w2)),
                             ],
                             &[acts],
                         )?;
                         let part = outs.pop().unwrap();
-                        self.ctx.accumulate(&mut acc[w], &part);
-                        self.ctx.free(part);
-                    } else {
-                        // every expert in the held group visits this worker
-                        let per = cfg.experts / n;
-                        for k in 0..per {
-                            let e_global = sid * per + k;
-                            let ex = self.rings.mlp[l].get(w).map(|s| match s {
-                                MlpShardV::Experts(ex) => &ex[k],
-                                _ => unreachable!(),
-                            });
-                            let mut outs = self.ctx.call_op(
-                                w,
-                                Op::MoeFwd,
-                                b,
-                                n,
-                                &[
-                                    m[w].buf.arg(),
-                                    gates[w][e_global].buf.arg(),
-                                    arg_of(ex.map(|x| &x.w1)),
-                                    arg_of(ex.map(|x| &x.b1)),
-                                    arg_of(ex.map(|x| &x.w2)),
-                                ],
-                                &[acts],
-                            )?;
-                            let part = outs.pop().unwrap();
-                            self.ctx.accumulate(&mut acc[w], &part);
-                            self.ctx.free(part);
-                        }
+                        ctx.accumulate(&mut acc, &part);
+                        ctx.free(part);
                     }
-                    self.ctx.trace(TraceEvent::Compute {
-                        worker: w,
-                        unit: format!("mlp.l{l}"),
-                        shard: sid,
-                        step: t,
-                    });
                 }
+                ctx.trace(TraceEvent::Compute {
+                    worker: w,
+                    unit: format!("mlp.l{l}"),
+                    shard: sid,
+                    step: t,
+                });
                 if t + 1 < n {
-                    Self::oop_wait(&mut self.ctx, tok);
-                    Self::rotate(
-                        &mut self.ctx,
+                    Self::oop_wait(ctx, tok);
+                    Self::rotate_unit(
+                        ctx,
                         variant,
                         &mut self.rings.mlp[l],
                         None,
@@ -738,72 +657,66 @@ impl Engine for RtpEngine {
                     );
                 }
             }
-            let mut x_new = Vec::with_capacity(n);
-            for (w, mut part) in acc.into_iter().enumerate() {
-                let b2 = self.rep.as_ref().map(|r| r[w].layers[l].b2.clone());
-                self.ctx.add_bias(&mut part, b2.as_ref());
-                self.ctx.residual(&mut part, &x_mid[w]);
-                x_new.push(part);
-            }
+            let x_new = {
+                let mut part = acc;
+                let b2 = self.rep.as_ref().map(|r| r.layers[l].b2.clone());
+                ctx.add_bias(&mut part, b2.as_ref());
+                ctx.residual(&mut part, &x_mid);
+                part
+            };
             saved.push(SavedRtp { x_in: x, a, x_mid, m, probs, gates });
             x = x_new;
         }
 
         // final LN
-        let mut xf = Vec::with_capacity(n);
-        for w in 0..n {
-            let rep = self.rep.as_ref().map(|r| &r[w]);
-            let mut outs = self.ctx.call_op(
-                w,
+        let xf = {
+            let rep = self.rep.as_ref();
+            let mut outs = ctx.call_op(
                 Op::LnFwd,
                 b,
                 n,
                 &[
-                    x[w].buf.arg(),
+                    x.buf.arg(),
                     arg_of(rep.map(|r| &r.lnf_g)),
                     arg_of(rep.map(|r| &r.lnf_b)),
                 ],
                 &[acts],
             )?;
-            xf.push(outs.pop().unwrap());
-        }
+            outs.pop().unwrap()
+        };
 
         // LM head: Output-Partition; full local logits assembled over the
         // rotation steps
-        let mut logits = Vec::with_capacity(n);
-        for w in 0..n {
-            logits.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, v]))?);
-        }
+        let mut logits = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, v]))?;
         for t in 0..n {
             let tok = if t + 1 < n {
-                Self::oop_prefetch(&mut self.ctx, variant, self.bytes.lm, true)
+                Self::oop_prefetch(ctx, variant, self.bytes.lm, true)
             } else {
                 None
             };
-            for w in 0..n {
-                let sid = self.rings.lm.id(w);
-                let sh = self.rings.lm.get(w);
-                let mut outs = self.ctx.call_op(
-                    w,
+            let sid = self.rings.lm.id;
+            {
+                let sh = self.rings.lm.data.as_ref();
+                let mut outs = ctx.call_op(
                     Op::LmheadFwd,
                     b,
                     n,
-                    &[xf[w].buf.arg(), arg_of(sh)],
+                    &[xf.buf.arg(), arg_of(sh)],
                     &[acts],
                 )?;
                 let part = outs.pop().unwrap();
-                self.ctx.write_col_slice(&mut logits[w], sid * vp, &part);
-                self.ctx.free(part);
-                self.ctx.trace(TraceEvent::Compute {
-                    worker: w,
-                    unit: "lmhead".to_string(),
-                    shard: sid,
-                    step: t,
-                });
+                ctx.write_col_slice(&mut logits, sid * vp, &part);
+                ctx.free(part);
             }
+            ctx.trace(TraceEvent::Compute {
+                worker: w,
+                unit: "lmhead".to_string(),
+                shard: sid,
+                step: t,
+            });
             if t + 1 < n {
-                Self::oop_wait(&mut self.ctx, tok);
-                Self::rotate(&mut self.ctx, variant, &mut self.rings.lm, None, self.bytes.lm, true, t);
+                Self::oop_wait(ctx, tok);
+                Self::rotate_unit(ctx, variant, &mut self.rings.lm, None, self.bytes.lm, true, t);
             }
         }
 
@@ -811,97 +724,89 @@ impl Engine for RtpEngine {
         // last LM-head rotation; its bytes serve the loss activations.
         let recycle = matches!(variant, RtpVariant::OutOfPlace { recycle: true });
         if recycle {
-            for tb in &self.comm_bufs {
-                self.ctx.recycle(tb, MemCategory::Activations);
+            if let Some(tb) = self.comm_buf.as_ref() {
+                ctx.recycle(tb, MemCategory::Activations);
             }
         }
 
         // loss
-        self.ctx.cluster.trace.phase("loss");
-        let mut loss_sum = 0.0;
-        let mut dlogits = Vec::with_capacity(n);
-        for w in 0..n {
-            let mut outs = self.ctx.call_op(
-                w,
+        ctx.phase("loss");
+        let (loss, dlogits) = {
+            let mut outs = ctx.call_op(
                 Op::Xent,
                 b,
                 n,
-                &[logits[w].buf.arg(), tgts[w].buf.arg()],
+                &[logits.buf.arg(), tgts.buf.arg()],
                 &[acts, acts],
             )?;
             let dl = outs.pop().unwrap();
             let lb = outs.pop().unwrap();
-            loss_sum += self.ctx.loss_of(&lb);
-            self.ctx.free(lb);
-            dlogits.push(dl);
-        }
-        for t in logits {
-            self.ctx.free(t);
-        }
-        for t in tgts {
-            self.ctx.free(t);
-        }
+            let loss = ctx.loss_of(&lb);
+            ctx.free(lb);
+            (loss, dl)
+        };
+        ctx.free(logits);
+        ctx.free(tgts);
         if recycle {
             // backward rotations need the buffer again
-            for tb in &self.comm_bufs {
-                self.ctx.recycle(tb, MemCategory::CommBuf);
+            if let Some(tb) = self.comm_buf.as_ref() {
+                ctx.recycle(tb, MemCategory::CommBuf);
             }
         }
 
         // ---------------- backward ----------------
-        self.ctx.cluster.trace.phase("backward");
+        ctx.phase("backward");
         let scale = land_scale(n);
 
         // LM head backward: ccw rotation with traveling grads
-        let mut dxf: Vec<TBuf> = Vec::with_capacity(n);
-        for w in 0..n {
-            dxf.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?);
-        }
+        let mut dxf = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
         {
-            let mut gring: Ring<HostTensor> = Ring {
-                ids: self.rings.lm.ids.clone(),
-                data: self.rings.lm.data.as_ref().map(|d| {
-                    d.iter().map(|t| HostTensor::zeros(&t.shape)).collect()
-                }),
+            let mut gring: RingSlot<HostTensor> = RingSlot {
+                id: self.rings.lm.id,
+                data: self
+                    .rings
+                    .lm
+                    .data
+                    .as_ref()
+                    .map(|t| HostTensor::zeros(&t.shape)),
             };
             for t in 0..n {
                 let tok = if t + 1 < n {
-                    Self::oop_prefetch(&mut self.ctx, variant, self.bytes.lm, false)
+                    Self::oop_prefetch(ctx, variant, self.bytes.lm, false)
                 } else {
                     None
                 };
-                for w in 0..n {
-                    let sid = self.rings.lm.id(w);
-                    let dl_w = self.ctx.col_slice(w, &dlogits[w], sid * vp, vp, acts)?;
-                    let sh = self.rings.lm.get(w);
-                    let mut outs = self.ctx.call_op(
-                        w,
+                let sid = self.rings.lm.id;
+                {
+                    let dl_w = ctx.col_slice(&dlogits, sid * vp, vp, acts)?;
+                    let sh = self.rings.lm.data.as_ref();
+                    let mut outs = ctx.call_op(
                         Op::LmheadBwd,
                         b,
                         n,
-                        &[xf[w].buf.arg(), arg_of(sh), dl_w.buf.arg()],
+                        &[xf.buf.arg(), arg_of(sh), dl_w.buf.arg()],
                         &[acts, MemCategory::Grads],
                     )?;
                     let dwlm = outs.pop().unwrap();
                     let dx = outs.pop().unwrap();
-                    if let Some(g) = gring.get_mut(w) {
+                    if let Some(g) = gring.data.as_mut() {
                         g.add_assign(dwlm.f());
                     }
-                    self.ctx.accumulate(&mut dxf[w], &dx);
-                    self.ctx.free(dx);
-                    self.ctx.free(dwlm);
-                    self.ctx.free(dl_w);
-                    self.ctx.trace(TraceEvent::Compute {
-                        worker: w,
-                        unit: "lmhead.bwd".to_string(),
-                        shard: sid,
-                        step: t,
-                    });
+                    ctx.accumulate(&mut dxf, &dx);
+                    ctx.free(dx);
+                    ctx.free(dwlm);
+                    ctx.free(dl_w);
                 }
+                ctx.trace(TraceEvent::Compute {
+                    worker: w,
+                    unit: "lmhead.bwd".to_string(),
+                    shard: sid,
+                    step: t,
+                });
                 if t + 1 < n {
-                    Self::oop_wait(&mut self.ctx, tok);
-                    Self::rotate(
-                        &mut self.ctx,
+                    Self::oop_wait(ctx, tok);
+                    Self::rotate_unit(
+                        ctx,
                         variant,
                         &mut self.rings.lm,
                         Some(&mut gring),
@@ -911,106 +816,122 @@ impl Engine for RtpEngine {
                     );
                 }
             }
-            // land home (ids[w] == w now)
-            debug_assert_eq!(gring.ids, (0..n).collect::<Vec<_>>());
-            if let (Some(home), Some(data)) = (self.grads.lm.as_mut(), gring.data) {
-                for (w, g) in data.into_iter().enumerate() {
-                    home[w].axpy(scale, &g);
-                }
+            // land home (id == rank now)
+            debug_assert_eq!(gring.id, w, "lm gring not home");
+            if let (Some(home), Some(g)) = (self.grads.lm.as_mut(), gring.data) {
+                home.axpy(scale, &g);
             }
         }
-        for t in dlogits {
-            self.ctx.free(t);
-        }
+        ctx.free(dlogits);
 
         // final LN backward
-        let mut dx = Vec::with_capacity(n);
-        for w in 0..n {
-            let rep = self.rep.as_ref().map(|r| &r[w]);
+        let mut dx = {
+            let rep = self.rep.as_ref();
             let g = rep.map(|r| r.lnf_g.clone());
-            let mut outs = self.ctx.call_op(
-                w,
+            let mut outs = ctx.call_op(
                 Op::LnBwd,
                 b,
                 n,
-                &[
-                    x[w].buf.arg(),
-                    arg_of(g.as_ref()),
-                    dxf[w].buf.arg(),
-                ],
+                &[x.buf.arg(), arg_of(g.as_ref()), dxf.buf.arg()],
                 &[acts, MemCategory::Grads, MemCategory::Grads],
             )?;
             let db = outs.pop().unwrap();
             let dg = outs.pop().unwrap();
             let d = outs.pop().unwrap();
             if let Some(gr) = self.g_rep.as_mut() {
-                gr[w].lnf_g.add_assign(dg.f());
-                gr[w].lnf_b.add_assign(db.f());
+                gr.lnf_g.add_assign(dg.f());
+                gr.lnf_b.add_assign(db.f());
             }
-            self.ctx.free(db);
-            self.ctx.free(dg);
-            dx.push(d);
-        }
-        for t in dxf {
-            self.ctx.free(t);
-        }
-        for t in xf {
-            self.ctx.free(t);
-        }
-        for t in x {
-            self.ctx.free(t);
-        }
+            ctx.free(db);
+            ctx.free(dg);
+            d
+        };
+        ctx.free(dxf);
+        ctx.free(xf);
+        ctx.free(x);
 
         for l in (0..cfg.layers).rev() {
             let SavedRtp { x_in, a, x_mid, m, probs, gates } = saved.pop().unwrap();
 
             // b2 grads (replicated)
             if let Some(gr) = self.g_rep.as_mut() {
-                for w in 0..n {
-                    gr[w].layers[l].b2.add_assign(&dx[w].f().sum_leading());
-                }
+                gr.layers[l].b2.add_assign(&dx.f().sum_leading());
             }
 
             // mlp/moe backward rotation
-            let mut dm: Vec<TBuf> = Vec::with_capacity(n);
-            for w in 0..n {
-                dm.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?);
-            }
-            let mut dgates: Vec<Vec<(usize, HostTensor)>> = (0..n).map(|_| Vec::new()).collect();
+            let mut dm = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
+            let mut dgates: Vec<(usize, HostTensor)> = Vec::new();
             {
-                let mut gring: Ring<MlpShardV> = Ring {
-                    ids: self.rings.mlp[l].ids.clone(),
-                    data: self.rings.mlp[l]
-                        .data
-                        .as_ref()
-                        .map(|d| d.iter().map(zero_like_mlp).collect()),
+                let mut gring: RingSlot<MlpShardV> = RingSlot {
+                    id: self.rings.mlp[l].id,
+                    data: self.rings.mlp[l].data.as_ref().map(zero_like_mlp),
                 };
                 for t in 0..n {
                     let tok = if t + 1 < n {
-                        Self::oop_prefetch(&mut self.ctx, variant, self.bytes.mlp, false)
+                        Self::oop_prefetch(ctx, variant, self.bytes.mlp, false)
                     } else {
                         None
                     };
-                    for w in 0..n {
-                        let sid = self.rings.mlp[l].id(w);
-                        if !cfg.is_moe() {
-                            let sh = self.rings.mlp[l].get(w).map(|s| match s {
-                                MlpShardV::Dense(d) => d,
+                    let sid = self.rings.mlp[l].id;
+                    if !cfg.is_moe() {
+                        let sh = self.rings.mlp[l].data.as_ref().map(|s| match s {
+                            MlpShardV::Dense(d) => d,
+                            _ => unreachable!(),
+                        });
+                        let mut outs = ctx.call_op(
+                            Op::MlpBwd,
+                            b,
+                            n,
+                            &[
+                                m.buf.arg(),
+                                arg_of(sh.map(|s| &s.w1)),
+                                arg_of(sh.map(|s| &s.b1)),
+                                arg_of(sh.map(|s| &s.w2)),
+                                dx.buf.arg(),
+                            ],
+                            &[
+                                acts,
+                                MemCategory::Grads,
+                                MemCategory::Grads,
+                                MemCategory::Grads,
+                            ],
+                        )?;
+                        let dw2 = outs.pop().unwrap();
+                        let db1 = outs.pop().unwrap();
+                        let dw1 = outs.pop().unwrap();
+                        let d = outs.pop().unwrap();
+                        if let Some(MlpShardV::Dense(g)) = gring.data.as_mut() {
+                            g.w2.add_assign(dw2.f());
+                            g.b1.add_assign(db1.f());
+                            g.w1.add_assign(dw1.f());
+                        }
+                        ctx.accumulate(&mut dm, &d);
+                        ctx.free(d);
+                        ctx.free(dw2);
+                        ctx.free(db1);
+                        ctx.free(dw1);
+                    } else {
+                        let per = cfg.experts / n;
+                        for k in 0..per {
+                            let e_global = sid * per + k;
+                            let ex = self.rings.mlp[l].data.as_ref().map(|s| match s {
+                                MlpShardV::Experts(ex) => &ex[k],
                                 _ => unreachable!(),
                             });
-                            let mut outs = self.ctx.call_op(
-                                w,
-                                Op::MlpBwd,
+                            let mut outs = ctx.call_op(
+                                Op::MoeBwd,
                                 b,
                                 n,
                                 &[
-                                    m[w].buf.arg(),
-                                    arg_of(sh.map(|s| &s.w1)),
-                                    arg_of(sh.map(|s| &s.b1)),
-                                    arg_of(sh.map(|s| &s.w2)),
-                                    dx[w].buf.arg(),
+                                    m.buf.arg(),
+                                    gates[e_global].buf.arg(),
+                                    arg_of(ex.map(|x| &x.w1)),
+                                    arg_of(ex.map(|x| &x.b1)),
+                                    arg_of(ex.map(|x| &x.w2)),
+                                    dx.buf.arg(),
                                 ],
                                 &[
+                                    acts,
                                     acts,
                                     MemCategory::Grads,
                                     MemCategory::Grads,
@@ -1020,78 +941,34 @@ impl Engine for RtpEngine {
                             let dw2 = outs.pop().unwrap();
                             let db1 = outs.pop().unwrap();
                             let dw1 = outs.pop().unwrap();
+                            let dgate = outs.pop().unwrap();
                             let d = outs.pop().unwrap();
-                            if let Some(MlpShardV::Dense(g)) = gring.get_mut(w) {
-                                g.w2.add_assign(dw2.f());
-                                g.b1.add_assign(db1.f());
-                                g.w1.add_assign(dw1.f());
+                            if let Some(MlpShardV::Experts(g)) = gring.data.as_mut() {
+                                g[k].w2.add_assign(dw2.f());
+                                g[k].b1.add_assign(db1.f());
+                                g[k].w1.add_assign(dw1.f());
                             }
-                            self.ctx.accumulate(&mut dm[w], &d);
-                            self.ctx.free(d);
-                            self.ctx.free(dw2);
-                            self.ctx.free(db1);
-                            self.ctx.free(dw1);
-                        } else {
-                            let per = cfg.experts / n;
-                            for k in 0..per {
-                                let e_global = sid * per + k;
-                                let ex = self.rings.mlp[l].get(w).map(|s| match s {
-                                    MlpShardV::Experts(ex) => &ex[k],
-                                    _ => unreachable!(),
-                                });
-                                let mut outs = self.ctx.call_op(
-                                    w,
-                                    Op::MoeBwd,
-                                    b,
-                                    n,
-                                    &[
-                                        m[w].buf.arg(),
-                                        gates[w][e_global].buf.arg(),
-                                        arg_of(ex.map(|x| &x.w1)),
-                                        arg_of(ex.map(|x| &x.b1)),
-                                        arg_of(ex.map(|x| &x.w2)),
-                                        dx[w].buf.arg(),
-                                    ],
-                                    &[
-                                        acts,
-                                        acts,
-                                        MemCategory::Grads,
-                                        MemCategory::Grads,
-                                        MemCategory::Grads,
-                                    ],
-                                )?;
-                                let dw2 = outs.pop().unwrap();
-                                let db1 = outs.pop().unwrap();
-                                let dw1 = outs.pop().unwrap();
-                                let dgate = outs.pop().unwrap();
-                                let d = outs.pop().unwrap();
-                                if let Some(MlpShardV::Experts(g)) = gring.get_mut(w) {
-                                    g[k].w2.add_assign(dw2.f());
-                                    g[k].b1.add_assign(db1.f());
-                                    g[k].w1.add_assign(dw1.f());
-                                }
-                                if !virt {
-                                    dgates[w].push((e_global, dgate.f().clone()));
-                                }
-                                self.ctx.accumulate(&mut dm[w], &d);
-                                self.ctx.free(d);
-                                self.ctx.free(dgate);
-                                self.ctx.free(dw2);
-                                self.ctx.free(db1);
-                                self.ctx.free(dw1);
+                            if !virt {
+                                dgates.push((e_global, dgate.f().clone()));
                             }
+                            ctx.accumulate(&mut dm, &d);
+                            ctx.free(d);
+                            ctx.free(dgate);
+                            ctx.free(dw2);
+                            ctx.free(db1);
+                            ctx.free(dw1);
                         }
-                        self.ctx.trace(TraceEvent::Compute {
-                            worker: w,
-                            unit: format!("mlp.l{l}.bwd"),
-                            shard: sid,
-                            step: t,
-                        });
                     }
+                    ctx.trace(TraceEvent::Compute {
+                        worker: w,
+                        unit: format!("mlp.l{l}.bwd"),
+                        shard: sid,
+                        step: t,
+                    });
                     if t + 1 < n {
-                        Self::oop_wait(&mut self.ctx, tok);
-                        Self::rotate(
-                            &mut self.ctx,
+                        Self::oop_wait(ctx, tok);
+                        Self::rotate_unit(
+                            ctx,
                             variant,
                             &mut self.rings.mlp[l],
                             Some(&mut gring),
@@ -1101,146 +978,120 @@ impl Engine for RtpEngine {
                         );
                     }
                 }
-                if let (Some(home), Some(data)) =
-                    (self.grads.mlp.as_mut(), gring.data)
-                {
-                    for (w, g) in data.into_iter().enumerate() {
-                        match (&mut home[l][w], g) {
-                            (MlpShardV::Dense(hd), MlpShardV::Dense(gd)) => {
-                                hd.w1.axpy(scale, &gd.w1);
-                                hd.b1.axpy(scale, &gd.b1);
-                                hd.w2.axpy(scale, &gd.w2);
-                            }
-                            (MlpShardV::Experts(hx), MlpShardV::Experts(gx)) => {
-                                for (hk, gk) in hx.iter_mut().zip(gx) {
-                                    hk.w1.axpy(scale, &gk.w1);
-                                    hk.b1.axpy(scale, &gk.b1);
-                                    hk.w2.axpy(scale, &gk.w2);
-                                }
-                            }
-                            _ => unreachable!(),
+                debug_assert_eq!(gring.id, w, "mlp gring {l} not home");
+                if let (Some(home), Some(g)) = (self.grads.mlp.as_mut(), gring.data) {
+                    match (&mut home[l], g) {
+                        (MlpShardV::Dense(hd), MlpShardV::Dense(gd)) => {
+                            hd.w1.axpy(scale, &gd.w1);
+                            hd.b1.axpy(scale, &gd.b1);
+                            hd.w2.axpy(scale, &gd.w2);
                         }
+                        (MlpShardV::Experts(hx), MlpShardV::Experts(gx)) => {
+                            for (hk, gk) in hx.iter_mut().zip(gx) {
+                                hk.w1.axpy(scale, &gk.w1);
+                                hk.b1.axpy(scale, &gk.b1);
+                                hk.w2.axpy(scale, &gk.w2);
+                            }
+                        }
+                        _ => unreachable!(),
                     }
                 }
             }
 
             // MoE router backward (replicated)
             if cfg.is_moe() {
-                for w in 0..n {
-                    let dprobs_buf = if virt {
-                        Buf::Virt(vec![b, cfg.seq, cfg.experts])
-                    } else {
-                        Buf::Real(scatter_dgates(&dgates[w], probs[w].f()))
-                    };
-                    let dprobs = self.ctx.alloc(w, acts, dprobs_buf)?;
-                    let rep = self.rep.as_ref().map(|r| &r[w].layers[l]);
-                    let wr = rep.and_then(|r| r.wr.clone());
-                    let mut outs = self.ctx.call_op(
-                        w,
-                        Op::RouterBwd,
-                        b,
-                        n,
-                        &[m[w].buf.arg(), arg_of(wr.as_ref()), dprobs.buf.arg()],
-                        &[acts, MemCategory::Grads],
-                    )?;
-                    let dwr = outs.pop().unwrap();
-                    let d = outs.pop().unwrap();
-                    if let Some(gr) = self.g_rep.as_mut() {
-                        if let Some(gwr) = gr[w].layers[l].wr.as_mut() {
-                            gwr.add_assign(dwr.f());
-                        }
+                let probs_buf = probs.as_ref().expect("moe saved probs");
+                let dprobs_buf = if virt {
+                    Buf::Virt(vec![b, cfg.seq, cfg.experts])
+                } else {
+                    Buf::Real(scatter_dgates(&dgates, probs_buf.f()))
+                };
+                let dprobs = ctx.alloc(acts, dprobs_buf)?;
+                let rep = self.rep.as_ref().map(|r| &r.layers[l]);
+                let wr = rep.and_then(|r| r.wr.clone());
+                let mut outs = ctx.call_op(
+                    Op::RouterBwd,
+                    b,
+                    n,
+                    &[m.buf.arg(), arg_of(wr.as_ref()), dprobs.buf.arg()],
+                    &[acts, MemCategory::Grads],
+                )?;
+                let dwr = outs.pop().unwrap();
+                let d = outs.pop().unwrap();
+                if let Some(gr) = self.g_rep.as_mut() {
+                    if let Some(gwr) = gr.layers[l].wr.as_mut() {
+                        gwr.add_assign(dwr.f());
                     }
-                    self.ctx.accumulate(&mut dm[w], &d);
-                    self.ctx.free(d);
-                    self.ctx.free(dwr);
-                    self.ctx.free(dprobs);
                 }
+                ctx.accumulate(&mut dm, &d);
+                ctx.free(d);
+                ctx.free(dwr);
+                ctx.free(dprobs);
             }
-            for p in probs {
-                self.ctx.free(p);
+            if let Some(p) = probs {
+                ctx.free(p);
             }
-            for gw in gates {
-                for g in gw {
-                    self.ctx.free(g);
-                }
+            for g in gates {
+                ctx.free(g);
             }
+            dgates.clear();
 
             // ln2 backward + residual
-            for w in 0..n {
-                let rep = self.rep.as_ref().map(|r| &r[w].layers[l]);
+            {
+                let rep = self.rep.as_ref().map(|r| &r.layers[l]);
                 let g = rep.map(|r| r.ln2_g.clone());
-                let mut outs = self.ctx.call_op(
-                    w,
+                let mut outs = ctx.call_op(
                     Op::LnBwd,
                     b,
                     n,
-                    &[
-                        x_mid[w].buf.arg(),
-                        arg_of(g.as_ref()),
-                        dm[w].buf.arg(),
-                    ],
+                    &[x_mid.buf.arg(), arg_of(g.as_ref()), dm.buf.arg()],
                     &[acts, MemCategory::Grads, MemCategory::Grads],
                 )?;
                 let db = outs.pop().unwrap();
                 let dg = outs.pop().unwrap();
                 let dxl = outs.pop().unwrap();
                 if let Some(gr) = self.g_rep.as_mut() {
-                    gr[w].layers[l].ln2_g.add_assign(dg.f());
-                    gr[w].layers[l].ln2_b.add_assign(db.f());
+                    gr.layers[l].ln2_g.add_assign(dg.f());
+                    gr.layers[l].ln2_b.add_assign(db.f());
                 }
-                self.ctx.free(db);
-                self.ctx.free(dg);
-                self.ctx.accumulate(&mut dx[w], &dxl);
-                self.ctx.free(dxl);
+                ctx.free(db);
+                ctx.free(dg);
+                ctx.accumulate(&mut dx, &dxl);
+                ctx.free(dxl);
             }
-            for t in dm {
-                self.ctx.free(t);
-            }
-            for t in m {
-                self.ctx.free(t);
-            }
-            for t in x_mid {
-                self.ctx.free(t);
-            }
+            ctx.free(dm);
+            ctx.free(m);
+            ctx.free(x_mid);
 
             // bo grads + attention backward rotation
             if let Some(gr) = self.g_rep.as_mut() {
-                for w in 0..n {
-                    gr[w].layers[l].bo.add_assign(&dx[w].f().sum_leading());
-                }
+                gr.layers[l].bo.add_assign(&dx.f().sum_leading());
             }
-            let mut da: Vec<TBuf> = Vec::with_capacity(n);
-            for w in 0..n {
-                da.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?);
-            }
+            let mut da = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
             {
-                let mut gring: Ring<AttnShard> = Ring {
-                    ids: self.rings.attn[l].ids.clone(),
-                    data: self.rings.attn[l]
-                        .data
-                        .as_ref()
-                        .map(|d| d.iter().map(zero_like_attn).collect()),
+                let mut gring: RingSlot<AttnShard> = RingSlot {
+                    id: self.rings.attn[l].id,
+                    data: self.rings.attn[l].data.as_ref().map(zero_like_attn),
                 };
                 for t in 0..n {
                     let tok = if t + 1 < n {
-                        Self::oop_prefetch(&mut self.ctx, variant, self.bytes.attn, false)
+                        Self::oop_prefetch(ctx, variant, self.bytes.attn, false)
                     } else {
                         None
                     };
-                    for w in 0..n {
-                        let sid = self.rings.attn[l].id(w);
-                        let sh = self.rings.attn[l].get(w);
-                        let mut outs = self.ctx.call_op(
-                            w,
+                    let sid = self.rings.attn[l].id;
+                    {
+                        let sh = self.rings.attn[l].data.as_ref();
+                        let mut outs = ctx.call_op(
                             Op::AttnBwd,
                             b,
                             n,
                             &[
-                                a[w].buf.arg(),
+                                a.buf.arg(),
                                 arg_of(sh.map(|s| &s.wqkv)),
                                 arg_of(sh.map(|s| &s.bqkv)),
                                 arg_of(sh.map(|s| &s.wo)),
-                                dx[w].buf.arg(),
+                                dx.buf.arg(),
                             ],
                             &[
                                 acts,
@@ -1253,27 +1104,27 @@ impl Engine for RtpEngine {
                         let dbq = outs.pop().unwrap();
                         let dwq = outs.pop().unwrap();
                         let d = outs.pop().unwrap();
-                        if let Some(g) = gring.get_mut(w) {
+                        if let Some(g) = gring.data.as_mut() {
                             g.wo.add_assign(dwo.f());
                             g.bqkv.add_assign(dbq.f());
                             g.wqkv.add_assign(dwq.f());
                         }
-                        self.ctx.accumulate(&mut da[w], &d);
-                        self.ctx.free(d);
-                        self.ctx.free(dwo);
-                        self.ctx.free(dbq);
-                        self.ctx.free(dwq);
-                        self.ctx.trace(TraceEvent::Compute {
-                            worker: w,
-                            unit: format!("attn.l{l}.bwd"),
-                            shard: sid,
-                            step: t,
-                        });
+                        ctx.accumulate(&mut da, &d);
+                        ctx.free(d);
+                        ctx.free(dwo);
+                        ctx.free(dbq);
+                        ctx.free(dwq);
                     }
+                    ctx.trace(TraceEvent::Compute {
+                        worker: w,
+                        unit: format!("attn.l{l}.bwd"),
+                        shard: sid,
+                        step: t,
+                    });
                     if t + 1 < n {
-                        Self::oop_wait(&mut self.ctx, tok);
-                        Self::rotate(
-                            &mut self.ctx,
+                        Self::oop_wait(ctx, tok);
+                        Self::rotate_unit(
+                            ctx,
                             variant,
                             &mut self.rings.attn[l],
                             Some(&mut gring),
@@ -1283,105 +1134,85 @@ impl Engine for RtpEngine {
                         );
                     }
                 }
-                if let (Some(home), Some(data)) = (self.grads.attn.as_mut(), gring.data) {
-                    for (w, g) in data.into_iter().enumerate() {
-                        home[l][w].wqkv.axpy(scale, &g.wqkv);
-                        home[l][w].bqkv.axpy(scale, &g.bqkv);
-                        home[l][w].wo.axpy(scale, &g.wo);
-                    }
+                debug_assert_eq!(gring.id, w, "attn gring {l} not home");
+                if let (Some(home), Some(g)) = (self.grads.attn.as_mut(), gring.data) {
+                    home[l].wqkv.axpy(scale, &g.wqkv);
+                    home[l].bqkv.axpy(scale, &g.bqkv);
+                    home[l].wo.axpy(scale, &g.wo);
                 }
             }
 
             // ln1 backward
-            for w in 0..n {
-                let rep = self.rep.as_ref().map(|r| &r[w].layers[l]);
+            {
+                let rep = self.rep.as_ref().map(|r| &r.layers[l]);
                 let g = rep.map(|r| r.ln1_g.clone());
-                let mut outs = self.ctx.call_op(
-                    w,
+                let mut outs = ctx.call_op(
                     Op::LnBwd,
                     b,
                     n,
-                    &[
-                        x_in[w].buf.arg(),
-                        arg_of(g.as_ref()),
-                        da[w].buf.arg(),
-                    ],
+                    &[x_in.buf.arg(), arg_of(g.as_ref()), da.buf.arg()],
                     &[acts, MemCategory::Grads, MemCategory::Grads],
                 )?;
                 let db = outs.pop().unwrap();
                 let dg = outs.pop().unwrap();
                 let dxl = outs.pop().unwrap();
                 if let Some(gr) = self.g_rep.as_mut() {
-                    gr[w].layers[l].ln1_g.add_assign(dg.f());
-                    gr[w].layers[l].ln1_b.add_assign(db.f());
+                    gr.layers[l].ln1_g.add_assign(dg.f());
+                    gr.layers[l].ln1_b.add_assign(db.f());
                 }
-                self.ctx.free(db);
-                self.ctx.free(dg);
-                self.ctx.accumulate(&mut dx[w], &dxl);
-                self.ctx.free(dxl);
+                ctx.free(db);
+                ctx.free(dg);
+                ctx.accumulate(&mut dx, &dxl);
+                ctx.free(dxl);
             }
-            for t in da {
-                self.ctx.free(t);
-            }
-            for t in a {
-                self.ctx.free(t);
-            }
-            for t in x_in {
-                self.ctx.free(t);
-            }
+            ctx.free(da);
+            ctx.free(a);
+            ctx.free(x_in);
         }
 
         // embedding backward rotation (ring is at its post-forward
         // position, counter-rotates home)
         {
-            let mut gring: Ring<EmbShard> = Ring {
-                ids: self.rings.emb.ids.clone(),
-                data: self.rings.emb.data.as_ref().map(|d| {
-                    d.iter()
-                        .map(|e| EmbShard {
-                            wte: HostTensor::zeros(&e.wte.shape),
-                            wpe: HostTensor::zeros(&e.wpe.shape),
-                        })
-                        .collect()
-                }),
+            let mut gring: RingSlot<EmbShard> = RingSlot {
+                id: self.rings.emb.id,
+                data: self.rings.emb.data.as_ref().map(zero_like_emb),
             };
             for t in 0..n {
                 let tok = if t + 1 < n {
-                    Self::oop_prefetch(&mut self.ctx, variant, self.bytes.emb, false)
+                    Self::oop_prefetch(ctx, variant, self.bytes.emb, false)
                 } else {
                     None
                 };
-                for w in 0..n {
-                    let sid = self.rings.emb.id(w);
-                    let dx_w = self.ctx.col_slice(w, &dx[w], sid * hp, hp, acts)?;
-                    let mut outs = self.ctx.call_op(
-                        w,
+                let sid = self.rings.emb.id;
+                {
+                    let dx_w = ctx.col_slice(&dx, sid * hp, hp, acts)?;
+                    let mut outs = ctx.call_op(
                         Op::EmbBwd,
                         b,
                         n,
-                        &[ids[w].buf.arg(), dx_w.buf.arg()],
+                        &[ids.buf.arg(), dx_w.buf.arg()],
                         &[MemCategory::Grads, MemCategory::Grads],
                     )?;
                     let dwpe = outs.pop().unwrap();
                     let dwte = outs.pop().unwrap();
-                    if let Some(g) = gring.get_mut(w) {
+                    if let Some(g) = gring.data.as_mut() {
                         g.wte.add_assign(dwte.f());
                         g.wpe.add_assign(dwpe.f());
                     }
-                    self.ctx.free(dwte);
-                    self.ctx.free(dwpe);
-                    self.ctx.free(dx_w);
-                    self.ctx.trace(TraceEvent::Compute {
-                        worker: w,
-                        unit: "emb.bwd".to_string(),
-                        shard: sid,
-                        step: t,
-                    });
+                    ctx.free(dwte);
+                    ctx.free(dwpe);
+                    ctx.free(dx_w);
                 }
+                ctx.trace(TraceEvent::Compute {
+                    worker: w,
+                    unit: "emb.bwd".to_string(),
+                    shard: sid,
+                    step: t,
+                });
                 if t + 1 < n {
-                    Self::oop_wait(&mut self.ctx, tok);
-                    Self::rotate(
-                        &mut self.ctx,
+                    Self::oop_wait(ctx, tok);
+                    Self::rotate_unit(
+                        ctx,
                         variant,
                         &mut self.rings.emb,
                         Some(&mut gring),
@@ -1391,369 +1222,264 @@ impl Engine for RtpEngine {
                     );
                 }
             }
-            if let (Some(home), Some(data)) = (self.grads.emb.as_mut(), gring.data) {
-                for (w, g) in data.into_iter().enumerate() {
-                    home[w].wte.axpy(scale, &g.wte);
-                    home[w].wpe.axpy(scale, &g.wpe);
-                }
+            debug_assert_eq!(gring.id, w, "emb gring not home");
+            if let (Some(home), Some(g)) = (self.grads.emb.as_mut(), gring.data) {
+                home.wte.axpy(scale, &g.wte);
+                home.wpe.axpy(scale, &g.wpe);
             }
         }
-        for t in dx {
-            self.ctx.free(t);
-        }
-        for t in ids {
-            self.ctx.free(t);
-        }
+        ctx.free(dx);
+        ctx.free(ids);
 
         // replicated grads: one small allreduce replaces nothing the paper
         // counts (LNs + biases + router), but we charge it honestly —
-        // 2(N-1) ring hops through the rank-local ports
+        // 2(N-1) ring hops through this rank's own port
         if n > 1 {
             let rep_bytes = (replicated_elems(&cfg) * 4) as u64;
-            self.ctx
-                .charge_comm("ar-replicated", CommPrim::AllReduce, rep_bytes);
+            ctx.charge_comm("ar-replicated", CommPrim::AllReduce, rep_bytes);
             if let Some(gr) = self.g_rep.as_mut() {
                 // allreduce-MEAN: idempotent on values that earlier steps
                 // already reduced, so grads accumulate correctly across
                 // steps without zeroing.
-                let ports = self.ctx.cluster.ports();
-                let mut flats: Vec<Vec<f32>> = gr.iter().map(|r| r.pack()).collect();
-                crate::comm::allreduce_sum(ports, &mut flats);
-                for (r, f) in gr.iter_mut().zip(&flats) {
-                    r.unpack(f);
-                    r.visit_mut(&mut |t| t.scale(scale));
-                }
+                let mut flat = gr.pack();
+                comm::allreduce_sum(&ctx.port, &mut flat);
+                gr.unpack(&flat);
+                gr.visit_mut(&mut |t| t.scale(scale));
             }
         }
-        if let Some(tl) = self.ctx.timeline.as_mut() {
+        if let Some(tl) = ctx.timeline.as_deref_mut() {
             tl.barrier();
         }
-        debug_assert_eq!(
-            self.ctx.cluster.fabric().in_flight(),
-            0,
-            "rtp step left ring-fabric messages in flight"
-        );
 
         // every ring must be home again — the paper's Fig-1 invariant
+        debug_assert_eq!(self.rings.emb.id, w, "emb ring not home");
         for (l, r) in self.rings.attn.iter().enumerate() {
-            debug_assert_eq!(r.ids, (0..n).collect::<Vec<_>>(), "attn ring {l} not home");
+            debug_assert_eq!(r.id, w, "attn ring {l} not home");
         }
-        debug_assert_eq!(self.rings.emb.ids, (0..n).collect::<Vec<_>>());
-        debug_assert_eq!(self.rings.lm.ids, (0..n).collect::<Vec<_>>());
+        for (l, r) in self.rings.mlp.iter().enumerate() {
+            debug_assert_eq!(r.id, w, "mlp ring {l} not home");
+        }
+        debug_assert_eq!(self.rings.lm.id, w, "lm ring not home");
 
-        self.last_loss = loss_sum / n as f32;
-        Ok(self.last_loss)
+        Ok(loss)
     }
 
-    fn gather_params(&self) -> ModelParams {
-        let cfg = &self.ctx.cfg;
-        let _n = self.ctx.n();
+    fn gather_params_local(&self, port: &RingPort) -> ModelParams {
+        let cfg = &self.cfg;
         let heads = cfg.heads;
         let hd = cfg.head_dim();
+        let rep = self.rep.as_ref().expect("virtual mode");
+        let emb = self.rings.emb.data.as_ref().expect("virtual mode");
+        debug_assert_eq!(self.rings.emb.id, self.rank, "rings must be home to gather");
         let mut out = ModelParams::zeros_like(cfg);
-        // rings are home after a step (ids[w] == w)
-        let by_id = |ring: &Ring<EmbShard>| -> Vec<EmbShard> {
-            let mut v: Vec<(usize, EmbShard)> = ring
-                .ids
-                .iter()
-                .zip(ring.data.as_ref().expect("virtual mode"))
-                .map(|(&i, d)| (i, d.clone()))
-                .collect();
-            v.sort_by_key(|(i, _)| *i);
-            v.into_iter().map(|(_, d)| d).collect()
-        };
-        let emb = by_id(&self.rings.emb);
-        out.wte = partition::unshard_cols(&emb.iter().map(|e| e.wte.clone()).collect::<Vec<_>>());
-        out.wpe = partition::unshard_cols(&emb.iter().map(|e| e.wpe.clone()).collect::<Vec<_>>());
+        out.wte = partition::unshard_cols(&allgather_tensor(port, &emb.wte));
+        out.wpe = partition::unshard_cols(&allgather_tensor(port, &emb.wpe));
         for (l, lp) in out.layers.iter_mut().enumerate() {
-            let ring = &self.rings.attn[l];
-            let mut shards: Vec<(usize, AttnShard)> = ring
-                .ids
-                .iter()
-                .zip(ring.data.as_ref().expect("virtual mode"))
-                .map(|(&i, d)| (i, d.clone()))
-                .collect();
-            shards.sort_by_key(|(i, _)| *i);
-            let attn: Vec<AttnShard> = shards.into_iter().map(|(_, d)| d).collect();
+            let attn = self.rings.attn[l].data.as_ref().expect("virtual mode");
             lp.wqkv = partition::unshard_qkv_cols(
-                &attn.iter().map(|a| a.wqkv.clone()).collect::<Vec<_>>(),
+                &allgather_tensor(port, &attn.wqkv),
                 heads,
                 hd,
             );
             lp.bqkv = partition::unshard_qkv_cols(
-                &attn.iter().map(|a| a.bqkv.clone()).collect::<Vec<_>>(),
+                &allgather_tensor(port, &attn.bqkv),
                 heads,
                 hd,
             );
-            lp.wo = partition::unshard_rows(
-                &attn.iter().map(|a| a.wo.clone()).collect::<Vec<_>>(),
-            );
-            let mring = &self.rings.mlp[l];
-            let mut mshards: Vec<(usize, MlpShardV)> = mring
-                .ids
-                .iter()
-                .zip(mring.data.as_ref().expect("virtual mode"))
-                .map(|(&i, d)| (i, d.clone()))
-                .collect();
-            mshards.sort_by_key(|(i, _)| *i);
-            let rep = &self.rep.as_ref().expect("virtual mode")[0].layers[l];
-            lp.mlp = match &mshards[0].1 {
-                MlpShardV::Dense(_) => {
-                    let ms: Vec<MlpShard> = mshards
-                        .into_iter()
-                        .map(|(_, v)| match v {
-                            MlpShardV::Dense(d) => d,
-                            _ => unreachable!(),
-                        })
-                        .collect();
-                    MlpParams::Dense {
-                        w1: partition::unshard_cols(
-                            &ms.iter().map(|m| m.w1.clone()).collect::<Vec<_>>(),
-                        ),
-                        b1: partition::unshard_cols(
-                            &ms.iter().map(|m| m.b1.clone()).collect::<Vec<_>>(),
-                        ),
-                        w2: partition::unshard_rows(
-                            &ms.iter().map(|m| m.w2.clone()).collect::<Vec<_>>(),
-                        ),
-                        b2: rep.b2.clone(),
-                    }
-                }
-                MlpShardV::Experts(_) => {
-                    let mut experts = Vec::new();
-                    for (_, v) in mshards {
-                        match v {
-                            MlpShardV::Experts(ex) => experts.extend(ex),
-                            _ => unreachable!(),
-                        }
-                    }
-                    MlpParams::Moe {
-                        wr: rep.wr.clone().expect("moe router"),
-                        experts,
-                        b2: rep.b2.clone(),
-                    }
-                }
-            };
-            lp.ln1_g = rep.ln1_g.clone();
-            lp.ln1_b = rep.ln1_b.clone();
-            lp.bo = rep.bo.clone();
-            lp.ln2_g = rep.ln2_g.clone();
-            lp.ln2_b = rep.ln2_b.clone();
+            lp.wo = partition::unshard_rows(&allgather_tensor(port, &attn.wo));
+            let mlp = self.rings.mlp[l].data.as_ref().expect("virtual mode");
+            let rl = &rep.layers[l];
+            lp.mlp = assemble_mlp(port, mlp, rl, cfg);
+            lp.ln1_g = rl.ln1_g.clone();
+            lp.ln1_b = rl.ln1_b.clone();
+            lp.bo = rl.bo.clone();
+            lp.ln2_g = rl.ln2_g.clone();
+            lp.ln2_b = rl.ln2_b.clone();
         }
-        let rep = &self.rep.as_ref().expect("virtual mode")[0];
         out.lnf_g = rep.lnf_g.clone();
         out.lnf_b = rep.lnf_b.clone();
-        let mut lm: Vec<(usize, HostTensor)> = self
-            .rings
-            .lm
-            .ids
-            .iter()
-            .zip(self.rings.lm.data.as_ref().expect("virtual mode"))
-            .map(|(&i, d)| (i, d.clone()))
-            .collect();
-        lm.sort_by_key(|(i, _)| *i);
-        out.wlm =
-            partition::unshard_cols(&lm.into_iter().map(|(_, d)| d).collect::<Vec<_>>());
+        let lm = self.rings.lm.data.as_ref().expect("virtual mode");
+        out.wlm = partition::unshard_cols(&allgather_tensor(port, lm));
         out
     }
 
-    fn gather_grads(&self) -> ModelParams {
-        let cfg = &self.ctx.cfg;
+    fn gather_grads_local(&self, port: &RingPort) -> ModelParams {
+        let cfg = &self.cfg;
         let heads = cfg.heads;
         let hd = cfg.head_dim();
-        let mut out = ModelParams::zeros_like(cfg);
+        let grep = self.g_rep.as_ref().expect("virtual mode");
         let emb = self.grads.emb.as_ref().expect("virtual mode");
-        out.wte = partition::unshard_cols(&emb.iter().map(|e| e.wte.clone()).collect::<Vec<_>>());
-        out.wpe = partition::unshard_cols(&emb.iter().map(|e| e.wpe.clone()).collect::<Vec<_>>());
+        let mut out = ModelParams::zeros_like(cfg);
+        out.wte = partition::unshard_cols(&allgather_tensor(port, &emb.wte));
+        out.wpe = partition::unshard_cols(&allgather_tensor(port, &emb.wpe));
         let gattn = self.grads.attn.as_ref().expect("virtual mode");
         let gmlp = self.grads.mlp.as_ref().expect("virtual mode");
-        let grep = self.g_rep.as_ref().expect("virtual mode");
         for (l, lp) in out.layers.iter_mut().enumerate() {
             lp.wqkv = partition::unshard_qkv_cols(
-                &gattn[l].iter().map(|a| a.wqkv.clone()).collect::<Vec<_>>(),
+                &allgather_tensor(port, &gattn[l].wqkv),
                 heads,
                 hd,
             );
             lp.bqkv = partition::unshard_qkv_cols(
-                &gattn[l].iter().map(|a| a.bqkv.clone()).collect::<Vec<_>>(),
+                &allgather_tensor(port, &gattn[l].bqkv),
                 heads,
                 hd,
             );
-            lp.wo = partition::unshard_rows(
-                &gattn[l].iter().map(|a| a.wo.clone()).collect::<Vec<_>>(),
-            );
-            let rep = &grep[0].layers[l];
-            lp.mlp = match &gmlp[l][0] {
-                MlpShardV::Dense(_) => {
-                    let ms: Vec<&MlpShard> = gmlp[l]
-                        .iter()
-                        .map(|v| match v {
-                            MlpShardV::Dense(d) => d,
-                            _ => unreachable!(),
-                        })
-                        .collect();
-                    MlpParams::Dense {
-                        w1: partition::unshard_cols(
-                            &ms.iter().map(|m| m.w1.clone()).collect::<Vec<_>>(),
-                        ),
-                        b1: partition::unshard_cols(
-                            &ms.iter().map(|m| m.b1.clone()).collect::<Vec<_>>(),
-                        ),
-                        w2: partition::unshard_rows(
-                            &ms.iter().map(|m| m.w2.clone()).collect::<Vec<_>>(),
-                        ),
-                        b2: rep.b2.clone(),
-                    }
-                }
-                MlpShardV::Experts(_) => {
-                    let mut experts = Vec::new();
-                    for v in &gmlp[l] {
-                        match v {
-                            MlpShardV::Experts(ex) => experts.extend(ex.clone()),
-                            _ => unreachable!(),
-                        }
-                    }
-                    MlpParams::Moe {
-                        wr: rep.wr.clone().expect("moe router"),
-                        experts,
-                        b2: rep.b2.clone(),
-                    }
-                }
-            };
-            lp.ln1_g = rep.ln1_g.clone();
-            lp.ln1_b = rep.ln1_b.clone();
-            lp.bo = rep.bo.clone();
-            lp.ln2_g = rep.ln2_g.clone();
-            lp.ln2_b = rep.ln2_b.clone();
+            lp.wo = partition::unshard_rows(&allgather_tensor(port, &gattn[l].wo));
+            let rl = &grep.layers[l];
+            lp.mlp = assemble_mlp(port, &gmlp[l], rl, cfg);
+            lp.ln1_g = rl.ln1_g.clone();
+            lp.ln1_b = rl.ln1_b.clone();
+            lp.bo = rl.bo.clone();
+            lp.ln2_g = rl.ln2_g.clone();
+            lp.ln2_b = rl.ln2_b.clone();
         }
-        out.lnf_g = grep[0].lnf_g.clone();
-        out.lnf_b = grep[0].lnf_b.clone();
-        out.wlm = partition::unshard_cols(self.grads.lm.as_ref().expect("virtual mode"));
+        out.lnf_g = grep.lnf_g.clone();
+        out.lnf_b = grep.lnf_b.clone();
+        let lm = self.grads.lm.as_ref().expect("virtual mode");
+        out.wlm = partition::unshard_cols(&allgather_tensor(port, lm));
         out
     }
 
     fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
-        // weights are home after a full step: ring slot w holds shard w
+        // weights are home after a full step: this slot holds shard `rank`
         let (Some(wd), Some(gd)) = (self.rings.emb.data.as_mut(), self.grads.emb.as_ref())
         else {
             return;
         };
-        for (p, g) in wd.iter_mut().zip(gd) {
-            f(&mut p.wte, &g.wte);
-            f(&mut p.wpe, &g.wpe);
-        }
-        for (l, ring) in self.rings.attn.iter_mut().enumerate() {
-            let gl = &self.grads.attn.as_ref().unwrap()[l];
-            for (p, g) in ring.data.as_mut().unwrap().iter_mut().zip(gl) {
-                f(&mut p.wqkv, &g.wqkv);
-                f(&mut p.bqkv, &g.bqkv);
-                f(&mut p.wo, &g.wo);
-            }
-        }
-        for (l, ring) in self.rings.mlp.iter_mut().enumerate() {
-            let gl = &self.grads.mlp.as_ref().unwrap()[l];
-            for (p, g) in ring.data.as_mut().unwrap().iter_mut().zip(gl) {
-                match (p, g) {
-                    (MlpShardV::Dense(pd), MlpShardV::Dense(gd)) => {
-                        f(&mut pd.w1, &gd.w1);
-                        f(&mut pd.b1, &gd.b1);
-                        f(&mut pd.w2, &gd.w2);
-                    }
-                    (MlpShardV::Experts(px), MlpShardV::Experts(gx)) => {
-                        for (pe, ge) in px.iter_mut().zip(gx) {
-                            f(&mut pe.w1, &ge.w1);
-                            f(&mut pe.b1, &ge.b1);
-                            f(&mut pe.w2, &ge.w2);
-                        }
-                    }
-                    _ => unreachable!(),
-                }
-            }
-        }
-        for (p, g) in self
+        f(&mut wd.wte, &gd.wte);
+        f(&mut wd.wpe, &gd.wpe);
+        for (ring, g) in self
             .rings
-            .lm
-            .data
-            .as_mut()
-            .unwrap()
+            .attn
             .iter_mut()
-            .zip(self.grads.lm.as_ref().unwrap())
+            .zip(self.grads.attn.as_ref().unwrap())
         {
-            f(p, g);
+            let p = ring.data.as_mut().unwrap();
+            f(&mut p.wqkv, &g.wqkv);
+            f(&mut p.bqkv, &g.bqkv);
+            f(&mut p.wo, &g.wo);
         }
-        // replicated params: identical update on every worker's copy
+        for (ring, g) in self
+            .rings
+            .mlp
+            .iter_mut()
+            .zip(self.grads.mlp.as_ref().unwrap())
+        {
+            match (ring.data.as_mut().unwrap(), g) {
+                (MlpShardV::Dense(pd), MlpShardV::Dense(gd)) => {
+                    f(&mut pd.w1, &gd.w1);
+                    f(&mut pd.b1, &gd.b1);
+                    f(&mut pd.w2, &gd.w2);
+                }
+                (MlpShardV::Experts(px), MlpShardV::Experts(gx)) => {
+                    for (pe, ge) in px.iter_mut().zip(gx) {
+                        f(&mut pe.w1, &ge.w1);
+                        f(&mut pe.b1, &ge.b1);
+                        f(&mut pe.w2, &ge.w2);
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        f(
+            self.rings.lm.data.as_mut().unwrap(),
+            self.grads.lm.as_ref().unwrap(),
+        );
+        // replicated params: identical update on every rank's copy
         let grep = self.g_rep.as_ref().unwrap();
-        for (p, g) in self.rep.as_mut().unwrap().iter_mut().zip(grep) {
-            let mut gs: Vec<*const HostTensor> = Vec::new();
-            g.visit(&mut |t| gs.push(t));
-            let mut i = 0;
-            p.visit_mut(&mut |t| {
-                // SAFETY: parallel traversal of structurally-equal trees
-                f(t, unsafe { &*gs[i] });
-                i += 1;
-            });
-        }
+        let mut gs: Vec<*const HostTensor> = Vec::new();
+        grep.visit(&mut |t| gs.push(t));
+        let mut i = 0;
+        self.rep.as_mut().unwrap().visit_mut(&mut |t| {
+            // SAFETY: parallel traversal of structurally-equal trees
+            f(t, unsafe { &*gs[i] });
+            i += 1;
+        });
     }
 
     fn zero_grads(&mut self) {
         if let Some(e) = self.grads.emb.as_mut() {
-            for g in e {
-                g.wte.data.fill(0.0);
-                g.wpe.data.fill(0.0);
-            }
+            e.wte.data.fill(0.0);
+            e.wpe.data.fill(0.0);
         }
         if let Some(a) = self.grads.attn.as_mut() {
-            for gl in a {
-                for g in gl {
-                    g.wqkv.data.fill(0.0);
-                    g.bqkv.data.fill(0.0);
-                    g.wo.data.fill(0.0);
-                }
+            for g in a {
+                g.wqkv.data.fill(0.0);
+                g.bqkv.data.fill(0.0);
+                g.wo.data.fill(0.0);
             }
         }
         if let Some(ms) = self.grads.mlp.as_mut() {
-            for gl in ms {
-                for g in gl {
-                    match g {
-                        MlpShardV::Dense(d) => {
-                            d.w1.data.fill(0.0);
-                            d.b1.data.fill(0.0);
-                            d.w2.data.fill(0.0);
-                        }
-                        MlpShardV::Experts(ex) => {
-                            for e in ex {
-                                e.w1.data.fill(0.0);
-                                e.b1.data.fill(0.0);
-                                e.w2.data.fill(0.0);
-                            }
+            for g in ms {
+                match g {
+                    MlpShardV::Dense(d) => {
+                        d.w1.data.fill(0.0);
+                        d.b1.data.fill(0.0);
+                        d.w2.data.fill(0.0);
+                    }
+                    MlpShardV::Experts(ex) => {
+                        for e in ex {
+                            e.w1.data.fill(0.0);
+                            e.b1.data.fill(0.0);
+                            e.w2.data.fill(0.0);
                         }
                     }
                 }
             }
         }
         if let Some(lm) = self.grads.lm.as_mut() {
-            for g in lm {
-                g.data.fill(0.0);
-            }
+            lm.data.fill(0.0);
         }
         if let Some(gr) = self.g_rep.as_mut() {
-            for g in gr {
-                g.visit_mut(&mut |t| t.data.fill(0.0));
-            }
+            gr.visit_mut(&mut |t| t.data.fill(0.0));
         }
-    }
-
-    fn ctx(&self) -> &Ctx {
-        &self.ctx
-    }
-    fn ctx_mut(&mut self) -> &mut Ctx {
-        &mut self.ctx
     }
 }
 
-// keep `shard_at` linked for the schedule tests even though the rings
+/// Reassemble one layer's MLP (dense shards or expert groups) from this
+/// rank's shard by allgathering each tensor through `port`.
+fn assemble_mlp(
+    port: &RingPort,
+    mine: &MlpShardV,
+    rl: &super::common::RepLayer,
+    cfg: &ModelCfg,
+) -> MlpParams {
+    match mine {
+        MlpShardV::Dense(d) => MlpParams::Dense {
+            w1: partition::unshard_cols(&allgather_tensor(port, &d.w1)),
+            b1: partition::unshard_cols(&allgather_tensor(port, &d.b1)),
+            w2: partition::unshard_rows(&allgather_tensor(port, &d.w2)),
+            b2: rl.b2.clone(),
+        },
+        MlpShardV::Experts(mine_ex) => {
+            let n = port.n();
+            let per = cfg.experts / n;
+            // experts[s*per + k] = rank s's k-th expert
+            let mut experts: Vec<Option<ExpertParams>> =
+                (0..cfg.experts).map(|_| None).collect();
+            for (k, ex) in mine_ex.iter().enumerate() {
+                let w1s = allgather_tensor(port, &ex.w1);
+                let b1s = allgather_tensor(port, &ex.b1);
+                let w2s = allgather_tensor(port, &ex.w2);
+                for (s, ((w1, b1), w2)) in
+                    w1s.into_iter().zip(b1s).zip(w2s).enumerate()
+                {
+                    experts[s * per + k] = Some(ExpertParams { w1, b1, w2 });
+                }
+            }
+            MlpParams::Moe {
+                wr: rl.wr.clone().expect("moe router"),
+                experts: experts.into_iter().map(|e| e.expect("expert hole")).collect(),
+                b2: rl.b2.clone(),
+            }
+        }
+    }
+}
+
+// keep `shard_at` linked for the schedule tests even though the slots
 // track positions directly
 #[allow(dead_code)]
 fn schedule_check(n: usize) -> bool {
-    (0..n).all(|w| shard_at(RotationDir::Clockwise, w, 0, n) == w)
+    (0..n).all(|w| comm::shard_at(RotationDir::Clockwise, w, 0, n) == w)
 }

@@ -5,19 +5,19 @@
 
 use anyhow::Result;
 
+use crate::comm::RingPort;
 use crate::memory::tracker::MemCategory;
 use crate::model::ModelParams;
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
-use super::common::{Batch, Ctx, TBuf};
+use super::common::{Batch, RankCtx, TBuf};
 use super::dense::{dense_step, DenseHooks, Phase, Slot, Unit};
-use super::Engine;
+use super::RankEngine;
 
-pub struct SingleEngine {
-    pub ctx: Ctx,
+/// The single-device participant (the ring has exactly one rank).
+pub struct SingleRank {
     hooks: SingleHooks,
-    last_loss: f32,
 }
 
 struct SingleHooks {
@@ -94,16 +94,16 @@ pub(crate) fn resolve_mut(p: &mut ModelParams, slot: Slot) -> &mut HostTensor {
 }
 
 impl DenseHooks for SingleHooks {
-    fn unit_begin(&mut self, _: &mut Ctx, _: usize, _: Unit, _: Phase) -> Result<()> {
+    fn unit_begin(&mut self, _: &mut RankCtx, _: Unit, _: Phase) -> Result<()> {
         Ok(())
     }
-    fn unit_end(&mut self, _: &mut Ctx, _: usize, _: Unit, _: Phase) -> Result<()> {
+    fn unit_end(&mut self, _: &mut RankCtx, _: Unit, _: Phase) -> Result<()> {
         Ok(())
     }
-    fn params(&self, _w: usize) -> Option<&ModelParams> {
+    fn params(&self) -> Option<&ModelParams> {
         self.params.as_ref()
     }
-    fn grad(&mut self, ctx: &mut Ctx, _w: usize, slot: Slot, src: TBuf) -> Result<()> {
+    fn grad(&mut self, ctx: &mut RankCtx, slot: Slot, src: TBuf) -> Result<()> {
         if let (Some(g), false) = (self.grads.as_mut(), src.is_virtual()) {
             grad_into(g, slot, &src);
         }
@@ -112,60 +112,45 @@ impl DenseHooks for SingleHooks {
     }
 }
 
-impl SingleEngine {
-    pub fn new(mut ctx: Ctx, seed: u64) -> Result<Self> {
-        assert_eq!(ctx.par.workers, 1, "single engine is one worker");
+impl SingleRank {
+    pub fn new(ctx: &mut RankCtx, seed: u64) -> Result<Self> {
+        assert_eq!(ctx.n(), 1, "single engine is one worker");
         let virt = ctx.virtual_mode();
         let (params, grads) = if virt {
             (None, None)
         } else {
             let mut rng = Rng::new(seed);
             (
-                Some(ModelParams::init(&ctx.cfg, &mut rng)),
-                Some(ModelParams::zeros_like(&ctx.cfg)),
+                Some(ModelParams::init(ctx.cfg, &mut rng)),
+                Some(ModelParams::zeros_like(ctx.cfg)),
             )
         };
         // persistent weight + grad residency
         let wbytes = ctx.cfg.weight_bytes();
-        ctx.cluster.tracker(0).alloc(MemCategory::Weights, wbytes)?;
-        ctx.cluster.tracker(0).alloc(MemCategory::Grads, wbytes)?;
-        Ok(SingleEngine {
-            ctx,
-            hooks: SingleHooks { params, grads },
-            last_loss: 0.0,
-        })
+        ctx.tracker.alloc(MemCategory::Weights, wbytes)?;
+        ctx.tracker.alloc(MemCategory::Grads, wbytes)?;
+        Ok(SingleRank { hooks: SingleHooks { params, grads } })
     }
 }
 
-impl Engine for SingleEngine {
-    fn name(&self) -> String {
-        "single".to_string()
+impl RankEngine for SingleRank {
+    fn rank(&self) -> usize {
+        0
     }
 
-    fn step(&mut self, batch: &Batch) -> Result<f32> {
-        if let Some(tl) = self.ctx.timeline.as_mut() {
-            tl.reset();
-        }
-        let loss = dense_step(&mut self.ctx, &mut self.hooks, 0, batch)?;
-        if let Some(tl) = self.ctx.timeline.as_mut() {
+    fn step_local(&mut self, ctx: &mut RankCtx, batch: &Batch) -> Result<f32> {
+        let loss = dense_step(ctx, &mut self.hooks, batch)?;
+        if let Some(tl) = ctx.timeline.as_deref_mut() {
             tl.barrier();
         }
-        // one worker, zero hops — but the invariant is the same as every
-        // other engine's: a finished step leaves the fabric drained
-        debug_assert_eq!(
-            self.ctx.cluster.fabric().in_flight(),
-            0,
-            "single step left ring-fabric messages in flight"
-        );
-        self.last_loss = loss;
         Ok(loss)
     }
 
-    fn gather_params(&self) -> ModelParams {
+    fn gather_params_local(&self, _port: &RingPort) -> ModelParams {
         self.hooks.params.clone().expect("no params in virtual mode")
     }
 
-    fn gather_grads(&self) -> ModelParams {
+    fn gather_grads_local(&self, _port: &RingPort) -> ModelParams {
         self.hooks.grads.clone().expect("no grads in virtual mode")
     }
 
@@ -181,12 +166,5 @@ impl Engine for SingleEngine {
         if let Some(g) = self.hooks.grads.as_mut() {
             g.visit_mut(&mut |_, t| t.data.fill(0.0));
         }
-    }
-
-    fn ctx(&self) -> &Ctx {
-        &self.ctx
-    }
-    fn ctx_mut(&mut self) -> &mut Ctx {
-        &mut self.ctx
     }
 }

@@ -5,13 +5,16 @@
 //! boundaries (allreduce for the row-parallel merges, allgather for the
 //! output-partition concats).
 //!
-//! The walk is lockstep: every worker computes each op on the full batch
-//! before the merge collective runs — unlike the batch-sharded engines,
-//! workers here are not independent between collectives.
+//! Each rank is an independent [`RankEngine`] holding its static shard.
+//! The walk is lockstep: every rank computes each op on the full batch,
+//! then runs ITS side of the merge collective through its own port —
+//! unlike the batch-sharded engines, ranks here are not independent
+//! between collectives.
 
 use anyhow::{bail, Result};
 
-use crate::comm::{self, CommPrim};
+use crate::comm::{self, CommPrim, RingPort};
+use crate::config::ModelCfg;
 use crate::memory::tracker::MemCategory;
 use crate::model::ops::Op;
 use crate::model::partition::{self, AttnShard, MlpShard};
@@ -20,55 +23,56 @@ use crate::runtime::{arg_of, Buf};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
-use super::common::{replicated_elems, Batch, Ctx, RepParams, TBuf};
-use super::Engine;
+use super::common::{allgather_tensor, replicated_elems, Batch, RankCtx, RepParams, TBuf};
+use super::RankEngine;
 
-/// Static per-worker shards of one layer.
-struct LayerShards {
-    attn: Vec<AttnShard>,
-    mlp: Vec<MlpShard>,
+/// This rank's static shards of one layer.
+struct LayerShard {
+    attn: AttnShard,
+    mlp: MlpShard,
 }
 
+/// This rank's slice of the model (real mode only).
 struct TpState {
-    emb: Vec<(HostTensor, HostTensor)>, // (wte_s, wpe_s) per worker
-    layers: Vec<LayerShards>,
-    lm: Vec<HostTensor>, // wlm column shard per worker
-    rep: Vec<RepParams>,
+    wte: HostTensor,
+    wpe: HostTensor,
+    layers: Vec<LayerShard>,
+    lm: HostTensor, // wlm column shard
+    rep: RepParams,
     // gradients, same layout
-    g_emb: Vec<(HostTensor, HostTensor)>,
-    g_layers: Vec<LayerShards>,
-    g_lm: Vec<HostTensor>,
-    g_rep: Vec<RepParams>,
+    g_wte: HostTensor,
+    g_wpe: HostTensor,
+    g_layers: Vec<LayerShard>,
+    g_lm: HostTensor,
+    g_rep: RepParams,
 }
 
-pub struct TpEngine {
-    pub ctx: Ctx,
+pub struct TpRank {
+    rank: usize,
+    cfg: ModelCfg,
     state: Option<TpState>, // None in virtual mode
-    last_loss: f32,
 }
 
-/// Sum per-worker partial activation buffers (the Megatron g-operator):
-/// charge the 2(N-1)-hop ring allreduce and, in real mode, move the data
-/// through each rank's own fabric port.
-fn allreduce_partials(ctx: &mut Ctx, bufs: &mut [TBuf]) {
-    ctx.charge_comm("ar-act", CommPrim::AllReduce, bufs[0].buf.bytes());
-    if bufs[0].is_virtual() || bufs.len() <= 1 {
+/// Sum this rank's partial activation buffer with every peer's (the
+/// Megatron g-operator): charge the 2(N-1)-hop ring allreduce and, in
+/// real mode, move the data through this rank's own fabric port.
+fn allreduce_partial(ctx: &mut RankCtx, buf: &mut TBuf) {
+    ctx.charge_comm("ar-act", CommPrim::AllReduce, buf.buf.bytes());
+    if buf.is_virtual() || ctx.n() <= 1 {
         return;
     }
-    let ports = ctx.ports();
-    let mut flats: Vec<Vec<f32>> = bufs.iter().map(|b| b.f().data.clone()).collect();
-    comm::allreduce_sum(ports, &mut flats);
-    for (b, f) in bufs.iter_mut().zip(flats) {
-        b.f_mut().data = f;
-    }
+    let mut flat = std::mem::take(&mut buf.f_mut().data);
+    comm::allreduce_sum(&ctx.port, &mut flat);
+    buf.f_mut().data = flat;
 }
 
-impl TpEngine {
-    pub fn new(mut ctx: Ctx, seed: u64) -> Result<Self> {
+impl TpRank {
+    pub fn new(ctx: &mut RankCtx, seed: u64) -> Result<Self> {
         if ctx.cfg.is_moe() {
             bail!("megatron-tp engine does not support MoE models (the paper evaluates MoE on DP/FSDP/RTP only)");
         }
         let n = ctx.n();
+        let rank = ctx.rank;
         let cfg = ctx.cfg.clone();
         let virt = ctx.virtual_mode();
 
@@ -78,15 +82,7 @@ impl TpEngine {
             let full = ModelParams::init(&cfg, &mut Rng::new(seed));
             let heads = cfg.heads;
             let hd = cfg.head_dim();
-            let emb: Vec<(HostTensor, HostTensor)> = (0..n)
-                .map(|s| {
-                    (
-                        partition::shard_cols(&full.wte, s, n),
-                        partition::shard_cols(&full.wpe, s, n),
-                    )
-                })
-                .collect();
-            let layers: Vec<LayerShards> = full
+            let layers: Vec<LayerShard> = full
                 .layers
                 .iter()
                 .map(|lp| {
@@ -94,48 +90,41 @@ impl TpEngine {
                         MlpParams::Dense { w1, b1, w2, .. } => (w1, b1, w2),
                         _ => unreachable!(),
                     };
-                    LayerShards {
-                        attn: (0..n)
-                            .map(|s| {
-                                partition::attn_shard(&lp.wqkv, &lp.bqkv, &lp.wo, s, n, heads, hd)
-                            })
-                            .collect(),
-                        mlp: (0..n).map(|s| partition::mlp_shard(w1, b1, w2, s, n)).collect(),
+                    LayerShard {
+                        attn: partition::attn_shard(
+                            &lp.wqkv, &lp.bqkv, &lp.wo, rank, n, heads, hd,
+                        ),
+                        mlp: partition::mlp_shard(w1, b1, w2, rank, n),
                     }
                 })
                 .collect();
-            let lm: Vec<HostTensor> =
-                (0..n).map(|s| partition::shard_cols(&full.wlm, s, n)).collect();
-            let rep = vec![RepParams::from_full(&full); n];
             let zero = |t: &HostTensor| HostTensor::zeros(&t.shape);
+            let wte = partition::shard_cols(&full.wte, rank, n);
+            let wpe = partition::shard_cols(&full.wpe, rank, n);
+            let lm = partition::shard_cols(&full.wlm, rank, n);
+            let rep = RepParams::from_full(&full);
             Some(TpState {
-                g_emb: emb.iter().map(|(a, b)| (zero(a), zero(b))).collect(),
+                g_wte: zero(&wte),
+                g_wpe: zero(&wpe),
                 g_layers: layers
                     .iter()
-                    .map(|l| LayerShards {
-                        attn: l
-                            .attn
-                            .iter()
-                            .map(|a| AttnShard {
-                                wqkv: zero(&a.wqkv),
-                                bqkv: zero(&a.bqkv),
-                                wo: zero(&a.wo),
-                            })
-                            .collect(),
-                        mlp: l
-                            .mlp
-                            .iter()
-                            .map(|m| MlpShard {
-                                w1: zero(&m.w1),
-                                b1: zero(&m.b1),
-                                w2: zero(&m.w2),
-                            })
-                            .collect(),
+                    .map(|l| LayerShard {
+                        attn: AttnShard {
+                            wqkv: zero(&l.attn.wqkv),
+                            bqkv: zero(&l.attn.bqkv),
+                            wo: zero(&l.attn.wo),
+                        },
+                        mlp: MlpShard {
+                            w1: zero(&l.mlp.w1),
+                            b1: zero(&l.mlp.b1),
+                            w2: zero(&l.mlp.w2),
+                        },
                     })
                     .collect(),
-                g_lm: lm.iter().map(zero).collect(),
-                g_rep: rep.iter().map(|r| r.zeros_like()).collect(),
-                emb,
+                g_lm: zero(&lm),
+                g_rep: rep.zeros_like(),
+                wte,
+                wpe,
                 layers,
                 lm,
                 rep,
@@ -145,360 +134,268 @@ impl TpEngine {
         // persistent residency: weight shard + grad shard + replicated×2
         let sharded = (cfg.params_total() - replicated_elems(&cfg)) / n;
         let per_worker = ((sharded + replicated_elems(&cfg)) * 4) as u64;
-        for w in 0..n {
-            ctx.cluster.tracker(w).alloc(MemCategory::Weights, per_worker)?;
-            ctx.cluster.tracker(w).alloc(MemCategory::Grads, per_worker)?;
-        }
-        Ok(TpEngine { ctx, state, last_loss: 0.0 })
+        ctx.tracker.alloc(MemCategory::Weights, per_worker)?;
+        ctx.tracker.alloc(MemCategory::Grads, per_worker)?;
+        Ok(TpRank { rank, cfg, state })
     }
 
     /// Clone a replicated tensor out of the state so the borrow on
-    /// `self` ends before `self.ctx` is mutably borrowed by `call_op`.
+    /// `self` ends before `ctx` is mutably borrowed by `call_op`.
     /// These are tiny ([H]-sized) tensors; the clone is negligible.
-    fn rep_tensor(&self, w: usize, get: impl Fn(&RepParams) -> &HostTensor)
-        -> Option<HostTensor>
-    {
-        self.state.as_ref().map(|s| get(&s.rep[w]).clone())
+    fn rep_tensor(&self, get: impl Fn(&RepParams) -> &HostTensor) -> Option<HostTensor> {
+        self.state.as_ref().map(|s| get(&s.rep).clone())
     }
 }
 
-impl Engine for TpEngine {
-    fn name(&self) -> String {
-        "megatron-tp".to_string()
+impl RankEngine for TpRank {
+    fn rank(&self) -> usize {
+        self.rank
     }
 
-    fn step(&mut self, batch: &Batch) -> Result<f32> {
-        let n = self.ctx.n();
-        let cfg = self.ctx.cfg.clone();
-        let b = batch.ids.shape[0]; // FULL batch on every worker
+    fn step_local(&mut self, ctx: &mut RankCtx, batch: &Batch) -> Result<f32> {
+        let n = ctx.n();
+        let cfg = self.cfg.clone();
+        let b = batch.ids.shape[0]; // FULL batch on every rank
         let (h, v) = (cfg.hidden, cfg.vocab);
         let (hp, vp) = (h / n, v / n);
-        let virt = self.ctx.virtual_mode();
+        let virt = ctx.virtual_mode();
         let acts = MemCategory::Activations;
-        if let Some(tl) = self.ctx.timeline.as_mut() {
-            tl.reset();
-        }
+        let w = self.rank;
 
-        // per-worker replicated inputs
-        let mut ids = Vec::with_capacity(n);
-        let mut tgts = Vec::with_capacity(n);
-        for w in 0..n {
-            let mk = |t: &crate::tensor::IntTensor| {
-                if virt { Buf::Virt(vec![b, cfg.seq]) } else { Buf::Ids(t.clone()) }
-            };
-            ids.push(self.ctx.alloc(w, acts, mk(&batch.ids))?);
-            tgts.push(self.ctx.alloc(w, acts, mk(&batch.targets))?);
-        }
+        // replicated inputs
+        let mk = |t: &crate::tensor::IntTensor| {
+            if virt { Buf::Virt(vec![b, cfg.seq]) } else { Buf::Ids(t.clone()) }
+        };
+        let ids = ctx.alloc(acts, mk(&batch.ids))?;
+        let tgts = ctx.alloc(acts, mk(&batch.targets))?;
 
         // ---------------- forward ----------------
-        // embedding: each worker computes its hidden slice, allgather
-        let mut x: Vec<TBuf> = Vec::with_capacity(n);
-        for w in 0..n {
-            x.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?);
-        }
+        // embedding: compute my hidden slice, allgather the full hidden
+        let mut x = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
         {
-            let mut parts = Vec::with_capacity(n);
-            for w in 0..n {
-                let (wte, wpe) = match &self.state {
-                    Some(s) => (Some(&s.emb[w].0), Some(&s.emb[w].1)),
-                    None => (None, None),
-                };
-                let mut outs = self.ctx.call_op(
-                    w,
-                    Op::EmbFwd,
-                    b,
-                    n,
-                    &[ids[w].buf.arg(), arg_of(wte), arg_of(wpe)],
-                    &[acts],
-                )?;
-                parts.push(outs.pop().unwrap());
-            }
-            self.ctx
-                .charge_comm("ag-emb", CommPrim::AllGather, x[0].buf.bytes());
-            // ring-allgather the hidden slices: every worker receives the
-            // other shards hop by hop through its own port, then assembles
-            // the full hidden locally
+            let (wte, wpe) = match &self.state {
+                Some(s) => (Some(&s.wte), Some(&s.wpe)),
+                None => (None, None),
+            };
+            let mut outs = ctx.call_op(
+                Op::EmbFwd,
+                b,
+                n,
+                &[ids.buf.arg(), arg_of(wte), arg_of(wpe)],
+                &[acts],
+            )?;
+            let part = outs.pop().unwrap();
+            ctx.charge_comm("ag-emb", CommPrim::AllGather, x.buf.bytes());
             if !virt {
-                let ports = self.ctx.ports();
-                let slices: Vec<Vec<f32>> =
-                    parts.iter().map(|p| p.f().data.clone()).collect();
-                let gathered = comm::allgather_parts(ports, &slices);
-                for (w, pieces) in gathered.into_iter().enumerate() {
-                    if let Buf::Real(full) = &mut x[w].buf {
-                        for (s, piece) in pieces.into_iter().enumerate() {
-                            let t = HostTensor::from_vec(&[b, cfg.seq, hp], piece);
-                            full.write_slice_last(s * hp, &t);
-                        }
+                let pieces = allgather_tensor(&ctx.port, part.f());
+                if let Buf::Real(full) = &mut x.buf {
+                    for (s, piece) in pieces.into_iter().enumerate() {
+                        full.write_slice_last(s * hp, &piece);
                     }
                 }
             }
-            for p in parts {
-                self.ctx.free(p);
-            }
+            ctx.free(part);
         }
 
         struct SavedTp {
-            x_in: Vec<TBuf>,
-            a: Vec<TBuf>,
-            x_mid: Vec<TBuf>,
-            m: Vec<TBuf>,
+            x_in: TBuf,
+            a: TBuf,
+            x_mid: TBuf,
+            m: TBuf,
         }
         let mut saved: Vec<SavedTp> = Vec::new();
 
         for l in 0..cfg.layers {
             // ln1 (replicated)
-            let mut a = Vec::with_capacity(n);
-            for w in 0..n {
-                let g = self.rep_tensor(w, |r| &r.layers[l].ln1_g);
-                let bb = self.rep_tensor(w, |r| &r.layers[l].ln1_b);
-                let mut outs = self.ctx.call_op(
-                    w,
+            let a = {
+                let g = self.rep_tensor(|r| &r.layers[l].ln1_g);
+                let bb = self.rep_tensor(|r| &r.layers[l].ln1_b);
+                let mut outs = ctx.call_op(
                     Op::LnFwd,
                     b,
                     n,
-                    &[x[w].buf.arg(), arg_of(g.as_ref()), arg_of(bb.as_ref())],
+                    &[x.buf.arg(), arg_of(g.as_ref()), arg_of(bb.as_ref())],
                     &[acts],
                 )?;
-                a.push(outs.pop().unwrap());
-            }
-            // attention partials + allreduce
-            let mut parts = Vec::with_capacity(n);
-            for w in 0..n {
-                let sh = self.state.as_ref().map(|s| &s.layers[l].attn[w]);
-                let mut outs = self.ctx.call_op(
-                    w,
+                outs.pop().unwrap()
+            };
+            // attention partial + allreduce
+            let mut part = {
+                let sh = self.state.as_ref().map(|s| &s.layers[l].attn);
+                let mut outs = ctx.call_op(
                     Op::AttnFwd,
                     b,
                     n,
                     &[
-                        a[w].buf.arg(),
+                        a.buf.arg(),
                         arg_of(sh.map(|s| &s.wqkv)),
                         arg_of(sh.map(|s| &s.bqkv)),
                         arg_of(sh.map(|s| &s.wo)),
                     ],
                     &[acts],
                 )?;
-                parts.push(outs.pop().unwrap());
-            }
-            allreduce_partials(&mut self.ctx, &mut parts);
-            let mut x_mid = Vec::with_capacity(n);
-            for (w, mut part) in parts.into_iter().enumerate() {
-                let bo = self.rep_tensor(w, |r| &r.layers[l].bo);
-                self.ctx.add_bias(&mut part, bo.as_ref());
-                self.ctx.residual(&mut part, &x[w]);
-                x_mid.push(part);
-            }
-            // ln2 + mlp partials + allreduce
-            let mut m = Vec::with_capacity(n);
-            for w in 0..n {
-                let g = self.rep_tensor(w, |r| &r.layers[l].ln2_g);
-                let bb = self.rep_tensor(w, |r| &r.layers[l].ln2_b);
-                let mut outs = self.ctx.call_op(
-                    w,
+                outs.pop().unwrap()
+            };
+            allreduce_partial(ctx, &mut part);
+            let bo = self.rep_tensor(|r| &r.layers[l].bo);
+            ctx.add_bias(&mut part, bo.as_ref());
+            ctx.residual(&mut part, &x);
+            let x_mid = part;
+            // ln2 + mlp partial + allreduce
+            let m = {
+                let g = self.rep_tensor(|r| &r.layers[l].ln2_g);
+                let bb = self.rep_tensor(|r| &r.layers[l].ln2_b);
+                let mut outs = ctx.call_op(
                     Op::LnFwd,
                     b,
                     n,
-                    &[x_mid[w].buf.arg(), arg_of(g.as_ref()), arg_of(bb.as_ref())],
+                    &[x_mid.buf.arg(), arg_of(g.as_ref()), arg_of(bb.as_ref())],
                     &[acts],
                 )?;
-                m.push(outs.pop().unwrap());
-            }
-            let mut parts = Vec::with_capacity(n);
-            for w in 0..n {
-                let sh = self.state.as_ref().map(|s| &s.layers[l].mlp[w]);
-                let mut outs = self.ctx.call_op(
-                    w,
+                outs.pop().unwrap()
+            };
+            let mut part = {
+                let sh = self.state.as_ref().map(|s| &s.layers[l].mlp);
+                let mut outs = ctx.call_op(
                     Op::MlpFwd,
                     b,
                     n,
                     &[
-                        m[w].buf.arg(),
+                        m.buf.arg(),
                         arg_of(sh.map(|s| &s.w1)),
                         arg_of(sh.map(|s| &s.b1)),
                         arg_of(sh.map(|s| &s.w2)),
                     ],
                     &[acts],
                 )?;
-                parts.push(outs.pop().unwrap());
-            }
-            allreduce_partials(&mut self.ctx, &mut parts);
-            let mut x_new = Vec::with_capacity(n);
-            for (w, mut part) in parts.into_iter().enumerate() {
-                let b2 = self.rep_tensor(w, |r| &r.layers[l].b2);
-                self.ctx.add_bias(&mut part, b2.as_ref());
-                self.ctx.residual(&mut part, &x_mid[w]);
-                x_new.push(part);
-            }
+                outs.pop().unwrap()
+            };
+            allreduce_partial(ctx, &mut part);
+            let b2 = self.rep_tensor(|r| &r.layers[l].b2);
+            ctx.add_bias(&mut part, b2.as_ref());
+            ctx.residual(&mut part, &x_mid);
             saved.push(SavedTp { x_in: x, a, x_mid, m });
-            x = x_new;
+            x = part;
         }
 
         // final LN + LM head (allgather logits) + loss
-        let mut xf = Vec::with_capacity(n);
-        for w in 0..n {
-            let g = self.rep_tensor(w, |r| &r.lnf_g);
-            let bb = self.rep_tensor(w, |r| &r.lnf_b);
-            let mut outs = self.ctx.call_op(
-                w,
+        let xf = {
+            let g = self.rep_tensor(|r| &r.lnf_g);
+            let bb = self.rep_tensor(|r| &r.lnf_b);
+            let mut outs = ctx.call_op(
                 Op::LnFwd,
                 b,
                 n,
-                &[x[w].buf.arg(), arg_of(g.as_ref()), arg_of(bb.as_ref())],
+                &[x.buf.arg(), arg_of(g.as_ref()), arg_of(bb.as_ref())],
                 &[acts],
             )?;
-            xf.push(outs.pop().unwrap());
-        }
-        let mut logit_parts = Vec::with_capacity(n);
-        for w in 0..n {
-            let wlm = self.state.as_ref().map(|s| &s.lm[w]);
-            let mut outs = self.ctx.call_op(
-                w,
+            outs.pop().unwrap()
+        };
+        let logit_part = {
+            let wlm = self.state.as_ref().map(|s| &s.lm);
+            let mut outs = ctx.call_op(
                 Op::LmheadFwd,
                 b,
                 n,
-                &[xf[w].buf.arg(), arg_of(wlm)],
+                &[xf.buf.arg(), arg_of(wlm)],
                 &[acts],
             )?;
-            logit_parts.push(outs.pop().unwrap());
-        }
-        let mut logits = Vec::with_capacity(n);
-        for w in 0..n {
-            logits.push(self.ctx.alloc(w, acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, v]))?);
-        }
-        self.ctx
-            .charge_comm("ag-logits", CommPrim::AllGather, logits[0].buf.bytes());
+            outs.pop().unwrap()
+        };
+        let mut logits = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, v]))?;
+        ctx.charge_comm("ag-logits", CommPrim::AllGather, logits.buf.bytes());
         if !virt {
-            let ports = self.ctx.ports();
-            let slices: Vec<Vec<f32>> =
-                logit_parts.iter().map(|p| p.f().data.clone()).collect();
-            let gathered = comm::allgather_parts(ports, &slices);
-            for (w, pieces) in gathered.into_iter().enumerate() {
-                if let Buf::Real(full) = &mut logits[w].buf {
-                    for (s, piece) in pieces.into_iter().enumerate() {
-                        let t = HostTensor::from_vec(&[b, cfg.seq, vp], piece);
-                        full.write_slice_last(s * vp, &t);
-                    }
+            let pieces = allgather_tensor(&ctx.port, logit_part.f());
+            if let Buf::Real(full) = &mut logits.buf {
+                for (s, piece) in pieces.into_iter().enumerate() {
+                    full.write_slice_last(s * vp, &piece);
                 }
             }
         }
-        for p in logit_parts {
-            self.ctx.free(p);
-        }
+        ctx.free(logit_part);
 
-        let mut loss = 0.0;
-        let mut dlogits = Vec::with_capacity(n);
-        for w in 0..n {
-            let mut outs = self.ctx.call_op(
-                w,
-                Op::Xent,
-                b,
-                n,
-                &[logits[w].buf.arg(), tgts[w].buf.arg()],
-                &[acts, acts],
-            )?;
-            let dl = outs.pop().unwrap();
-            let lbuf = outs.pop().unwrap();
-            if w == 0 {
-                loss = self.ctx.loss_of(&lbuf);
-            }
-            self.ctx.free(lbuf);
-            dlogits.push(dl);
-        }
-        for l in logits {
-            self.ctx.free(l);
-        }
-        for t in tgts {
-            self.ctx.free(t);
-        }
+        let mut outs = ctx.call_op(
+            Op::Xent,
+            b,
+            n,
+            &[logits.buf.arg(), tgts.buf.arg()],
+            &[acts, acts],
+        )?;
+        let dlogits = outs.pop().unwrap();
+        let lbuf = outs.pop().unwrap();
+        let loss = ctx.loss_of(&lbuf);
+        ctx.free(lbuf);
+        ctx.free(logits);
+        ctx.free(tgts);
 
         // ---------------- backward ----------------
-        // LM head: per-worker vocab slice of dlogits -> dx partials
-        let mut dxf = Vec::with_capacity(n);
-        for w in 0..n {
-            let dl_w = self.ctx.col_slice(w, &dlogits[w], w * vp, vp, acts)?;
-            let wlm = self.state.as_ref().map(|s| &s.lm[w]);
-            let mut outs = self.ctx.call_op(
-                w,
+        // LM head: my vocab slice of dlogits -> dx partial
+        let mut dxf = {
+            let dl_w = ctx.col_slice(&dlogits, w * vp, vp, acts)?;
+            let wlm = self.state.as_ref().map(|s| &s.lm);
+            let mut outs = ctx.call_op(
                 Op::LmheadBwd,
                 b,
                 n,
-                &[xf[w].buf.arg(), arg_of(wlm), dl_w.buf.arg()],
+                &[xf.buf.arg(), arg_of(wlm), dl_w.buf.arg()],
                 &[acts, MemCategory::Grads],
             )?;
             let dwlm = outs.pop().unwrap();
             let dx = outs.pop().unwrap();
             if let Some(st) = self.state.as_mut() {
-                st.g_lm[w].add_assign(dwlm.f());
+                st.g_lm.add_assign(dwlm.f());
             }
-            self.ctx.free(dwlm);
-            self.ctx.free(dl_w);
-            dxf.push(dx);
-        }
-        for d in dlogits {
-            self.ctx.free(d);
-        }
-        allreduce_partials(&mut self.ctx, &mut dxf);
+            ctx.free(dwlm);
+            ctx.free(dl_w);
+            dx
+        };
+        ctx.free(dlogits);
+        allreduce_partial(ctx, &mut dxf);
 
         // final LN backward (replicated grads, no comm)
-        let mut dx = Vec::with_capacity(n);
-        for w in 0..n {
-            let g = self.rep_tensor(w, |r| &r.lnf_g);
-            let mut outs = self.ctx.call_op(
-                w,
+        let mut dx = {
+            let g = self.rep_tensor(|r| &r.lnf_g);
+            let mut outs = ctx.call_op(
                 Op::LnBwd,
                 b,
                 n,
-                &[
-                    x[w].buf.arg(),
-                    arg_of(g.as_ref()),
-                    dxf[w].buf.arg(),
-                ],
+                &[x.buf.arg(), arg_of(g.as_ref()), dxf.buf.arg()],
                 &[acts, MemCategory::Grads, MemCategory::Grads],
             )?;
             let db = outs.pop().unwrap();
             let dg = outs.pop().unwrap();
             let d = outs.pop().unwrap();
             if let Some(st) = self.state.as_mut() {
-                st.g_rep[w].lnf_g.add_assign(dg.f());
-                st.g_rep[w].lnf_b.add_assign(db.f());
+                st.g_rep.lnf_g.add_assign(dg.f());
+                st.g_rep.lnf_b.add_assign(db.f());
             }
-            self.ctx.free(db);
-            self.ctx.free(dg);
-            dx.push(d);
-        }
-        for d in dxf {
-            self.ctx.free(d);
-        }
-        for t in xf {
-            self.ctx.free(t);
-        }
-        for t in x {
-            self.ctx.free(t);
-        }
+            ctx.free(db);
+            ctx.free(dg);
+            d
+        };
+        ctx.free(dxf);
+        ctx.free(xf);
+        ctx.free(x);
 
         for l in (0..cfg.layers).rev() {
             let SavedTp { x_in, a, x_mid, m } = saved.pop().unwrap();
             // b2 grads (replicated)
-            for w in 0..n {
-                if let Some(st) = self.state.as_mut() {
-                    st.g_rep[w].layers[l].b2.add_assign(&dx[w].f().sum_leading());
-                }
+            if let Some(st) = self.state.as_mut() {
+                st.g_rep.layers[l].b2.add_assign(&dx.f().sum_leading());
             }
-            // mlp backward -> dm partials (allreduce)
-            let mut dm = Vec::with_capacity(n);
-            for w in 0..n {
-                let sh = self.state.as_ref().map(|s| &s.layers[l].mlp[w]);
-                let mut outs = self.ctx.call_op(
-                    w,
+            // mlp backward -> dm partial (allreduce)
+            let mut dm = {
+                let sh = self.state.as_ref().map(|s| &s.layers[l].mlp);
+                let mut outs = ctx.call_op(
                     Op::MlpBwd,
                     b,
                     n,
                     &[
-                        m[w].buf.arg(),
+                        m.buf.arg(),
                         arg_of(sh.map(|s| &s.w1)),
                         arg_of(sh.map(|s| &s.b1)),
                         arg_of(sh.map(|s| &s.w2)),
-                        dx[w].buf.arg(),
+                        dx.buf.arg(),
                     ],
                     &[acts, MemCategory::Grads, MemCategory::Grads, MemCategory::Grads],
                 )?;
@@ -507,73 +404,58 @@ impl Engine for TpEngine {
                 let dw1 = outs.pop().unwrap();
                 let d = outs.pop().unwrap();
                 if let Some(st) = self.state.as_mut() {
-                    let g = &mut st.g_layers[l].mlp[w];
+                    let g = &mut st.g_layers[l].mlp;
                     g.w2.add_assign(dw2.f());
                     g.b1.add_assign(db1.f());
                     g.w1.add_assign(dw1.f());
                 }
-                self.ctx.free(dw2);
-                self.ctx.free(db1);
-                self.ctx.free(dw1);
-                dm.push(d);
-            }
-            allreduce_partials(&mut self.ctx, &mut dm);
+                ctx.free(dw2);
+                ctx.free(db1);
+                ctx.free(dw1);
+                d
+            };
+            allreduce_partial(ctx, &mut dm);
             // ln2 backward + residual accumulate
-            for w in 0..n {
-                let g = self.rep_tensor(w, |r| &r.layers[l].ln2_g);
-                let mut outs = self.ctx.call_op(
-                    w,
+            {
+                let g = self.rep_tensor(|r| &r.layers[l].ln2_g);
+                let mut outs = ctx.call_op(
                     Op::LnBwd,
                     b,
                     n,
-                    &[
-                        x_mid[w].buf.arg(),
-                        arg_of(g.as_ref()),
-                        dm[w].buf.arg(),
-                    ],
+                    &[x_mid.buf.arg(), arg_of(g.as_ref()), dm.buf.arg()],
                     &[acts, MemCategory::Grads, MemCategory::Grads],
                 )?;
                 let db = outs.pop().unwrap();
                 let dg = outs.pop().unwrap();
                 let dxl = outs.pop().unwrap();
                 if let Some(st) = self.state.as_mut() {
-                    st.g_rep[w].layers[l].ln2_g.add_assign(dg.f());
-                    st.g_rep[w].layers[l].ln2_b.add_assign(db.f());
+                    st.g_rep.layers[l].ln2_g.add_assign(dg.f());
+                    st.g_rep.layers[l].ln2_b.add_assign(db.f());
                 }
-                self.ctx.free(db);
-                self.ctx.free(dg);
-                self.ctx.accumulate(&mut dx[w], &dxl);
-                self.ctx.free(dxl);
+                ctx.free(db);
+                ctx.free(dg);
+                ctx.accumulate(&mut dx, &dxl);
+                ctx.free(dxl);
             }
-            for t in dm {
-                self.ctx.free(t);
-            }
-            for t in m {
-                self.ctx.free(t);
-            }
-            for t in x_mid {
-                self.ctx.free(t);
-            }
+            ctx.free(dm);
+            ctx.free(m);
+            ctx.free(x_mid);
             // bo grads + attention backward
-            for w in 0..n {
-                if let Some(st) = self.state.as_mut() {
-                    st.g_rep[w].layers[l].bo.add_assign(&dx[w].f().sum_leading());
-                }
+            if let Some(st) = self.state.as_mut() {
+                st.g_rep.layers[l].bo.add_assign(&dx.f().sum_leading());
             }
-            let mut da = Vec::with_capacity(n);
-            for w in 0..n {
-                let sh = self.state.as_ref().map(|s| &s.layers[l].attn[w]);
-                let mut outs = self.ctx.call_op(
-                    w,
+            let mut da = {
+                let sh = self.state.as_ref().map(|s| &s.layers[l].attn);
+                let mut outs = ctx.call_op(
                     Op::AttnBwd,
                     b,
                     n,
                     &[
-                        a[w].buf.arg(),
+                        a.buf.arg(),
                         arg_of(sh.map(|s| &s.wqkv)),
                         arg_of(sh.map(|s| &s.bqkv)),
                         arg_of(sh.map(|s| &s.wo)),
-                        dx[w].buf.arg(),
+                        dx.buf.arg(),
                     ],
                     &[acts, MemCategory::Grads, MemCategory::Grads, MemCategory::Grads],
                 )?;
@@ -582,202 +464,115 @@ impl Engine for TpEngine {
                 let dwq = outs.pop().unwrap();
                 let d = outs.pop().unwrap();
                 if let Some(st) = self.state.as_mut() {
-                    let g = &mut st.g_layers[l].attn[w];
+                    let g = &mut st.g_layers[l].attn;
                     g.wo.add_assign(dwo.f());
                     g.bqkv.add_assign(dbq.f());
                     g.wqkv.add_assign(dwq.f());
                 }
-                self.ctx.free(dwo);
-                self.ctx.free(dbq);
-                self.ctx.free(dwq);
-                da.push(d);
-            }
-            allreduce_partials(&mut self.ctx, &mut da);
-            for w in 0..n {
-                let g = self.rep_tensor(w, |r| &r.layers[l].ln1_g);
-                let mut outs = self.ctx.call_op(
-                    w,
+                ctx.free(dwo);
+                ctx.free(dbq);
+                ctx.free(dwq);
+                d
+            };
+            allreduce_partial(ctx, &mut da);
+            {
+                let g = self.rep_tensor(|r| &r.layers[l].ln1_g);
+                let mut outs = ctx.call_op(
                     Op::LnBwd,
                     b,
                     n,
-                    &[
-                        x_in[w].buf.arg(),
-                        arg_of(g.as_ref()),
-                        da[w].buf.arg(),
-                    ],
+                    &[x_in.buf.arg(), arg_of(g.as_ref()), da.buf.arg()],
                     &[acts, MemCategory::Grads, MemCategory::Grads],
                 )?;
                 let db = outs.pop().unwrap();
                 let dg = outs.pop().unwrap();
                 let dxl = outs.pop().unwrap();
                 if let Some(st) = self.state.as_mut() {
-                    st.g_rep[w].layers[l].ln1_g.add_assign(dg.f());
-                    st.g_rep[w].layers[l].ln1_b.add_assign(db.f());
+                    st.g_rep.layers[l].ln1_g.add_assign(dg.f());
+                    st.g_rep.layers[l].ln1_b.add_assign(db.f());
                 }
-                self.ctx.free(db);
-                self.ctx.free(dg);
-                self.ctx.accumulate(&mut dx[w], &dxl);
-                self.ctx.free(dxl);
+                ctx.free(db);
+                ctx.free(dg);
+                ctx.accumulate(&mut dx, &dxl);
+                ctx.free(dxl);
             }
-            for t in da {
-                self.ctx.free(t);
-            }
-            for t in a {
-                self.ctx.free(t);
-            }
-            for t in x_in {
-                self.ctx.free(t);
-            }
+            ctx.free(da);
+            ctx.free(a);
+            ctx.free(x_in);
         }
 
-        // embedding backward: each worker takes its hidden slice
-        for w in 0..n {
-            let dx_w = self.ctx.col_slice(w, &dx[w], w * hp, hp, acts)?;
-            let mut outs = self.ctx.call_op(
-                w,
+        // embedding backward: my hidden slice
+        {
+            let dx_w = ctx.col_slice(&dx, w * hp, hp, acts)?;
+            let mut outs = ctx.call_op(
                 Op::EmbBwd,
                 b,
                 n,
-                &[ids[w].buf.arg(), dx_w.buf.arg()],
+                &[ids.buf.arg(), dx_w.buf.arg()],
                 &[MemCategory::Grads, MemCategory::Grads],
             )?;
             let dwpe = outs.pop().unwrap();
             let dwte = outs.pop().unwrap();
             if let Some(st) = self.state.as_mut() {
-                st.g_emb[w].0.add_assign(dwte.f());
-                st.g_emb[w].1.add_assign(dwpe.f());
+                st.g_wte.add_assign(dwte.f());
+                st.g_wpe.add_assign(dwpe.f());
             }
-            self.ctx.free(dwte);
-            self.ctx.free(dwpe);
-            self.ctx.free(dx_w);
+            ctx.free(dwte);
+            ctx.free(dwpe);
+            ctx.free(dx_w);
         }
-        for t in dx {
-            self.ctx.free(t);
-        }
-        for t in ids {
-            self.ctx.free(t);
-        }
-        if let Some(tl) = self.ctx.timeline.as_mut() {
+        ctx.free(dx);
+        ctx.free(ids);
+        if let Some(tl) = ctx.timeline.as_deref_mut() {
             tl.barrier();
         }
-        debug_assert_eq!(
-            self.ctx.cluster.fabric().in_flight(),
-            0,
-            "tp step left ring-fabric messages in flight"
-        );
-        self.last_loss = loss;
         Ok(loss)
     }
 
-    fn gather_params(&self) -> ModelParams {
+    fn gather_params_local(&self, port: &RingPort) -> ModelParams {
         let st = self.state.as_ref().expect("virtual mode");
-        let cfg = &self.ctx.cfg;
-        let mut out = ModelParams::zeros_like(cfg);
-        out.wte = partition::unshard_cols(
-            &st.emb.iter().map(|(a, _)| a.clone()).collect::<Vec<_>>(),
-        );
-        out.wpe = partition::unshard_cols(
-            &st.emb.iter().map(|(_, b)| b.clone()).collect::<Vec<_>>(),
-        );
-        for (l, lp) in out.layers.iter_mut().enumerate() {
-            let heads = cfg.heads;
-            let hd = cfg.head_dim();
-            lp.wqkv = partition::unshard_qkv_cols(
-                &st.layers[l].attn.iter().map(|a| a.wqkv.clone()).collect::<Vec<_>>(),
-                heads,
-                hd,
-            );
-            lp.bqkv = partition::unshard_qkv_cols(
-                &st.layers[l].attn.iter().map(|a| a.bqkv.clone()).collect::<Vec<_>>(),
-                heads,
-                hd,
-            );
-            lp.wo = partition::unshard_rows(
-                &st.layers[l].attn.iter().map(|a| a.wo.clone()).collect::<Vec<_>>(),
-            );
-            let rep = &st.rep[0].layers[l];
-            lp.ln1_g = rep.ln1_g.clone();
-            lp.ln1_b = rep.ln1_b.clone();
-            lp.bo = rep.bo.clone();
-            lp.ln2_g = rep.ln2_g.clone();
-            lp.ln2_b = rep.ln2_b.clone();
-            lp.mlp = MlpParams::Dense {
-                w1: partition::unshard_cols(
-                    &st.layers[l].mlp.iter().map(|m| m.w1.clone()).collect::<Vec<_>>(),
-                ),
-                b1: partition::unshard_cols(
-                    &st.layers[l].mlp.iter().map(|m| m.b1.clone()).collect::<Vec<_>>(),
-                ),
-                w2: partition::unshard_rows(
-                    &st.layers[l].mlp.iter().map(|m| m.w2.clone()).collect::<Vec<_>>(),
-                ),
-                b2: rep.b2.clone(),
-            };
-        }
-        out.lnf_g = st.rep[0].lnf_g.clone();
-        out.lnf_b = st.rep[0].lnf_b.clone();
-        out.wlm = partition::unshard_cols(&st.lm);
-        out
+        assemble(
+            &self.cfg,
+            port,
+            &st.wte,
+            &st.wpe,
+            &st.layers,
+            &st.lm,
+            &st.rep,
+        )
     }
 
-    fn gather_grads(&self) -> ModelParams {
-        // identical reconstruction over the gradient shards
+    fn gather_grads_local(&self, port: &RingPort) -> ModelParams {
         let st = self.state.as_ref().expect("virtual mode");
-        let mut tmp = TpEngine {
-            ctx: Ctx {
-                cfg: self.ctx.cfg.clone(),
-                par: self.ctx.par.clone(),
-                exec: crate::runtime::Exec::Oracle,
-                cluster: crate::cluster::Cluster::new(self.ctx.n(), None),
-                timeline: None,
-            },
-            state: Some(TpState {
-                emb: st.g_emb.clone(),
-                layers: st
-                    .g_layers
-                    .iter()
-                    .map(|l| LayerShards { attn: l.attn.clone(), mlp: l.mlp.clone() })
-                    .collect(),
-                lm: st.g_lm.clone(),
-                rep: st.g_rep.clone(),
-                g_emb: st.g_emb.clone(),
-                g_layers: Vec::new(),
-                g_lm: Vec::new(),
-                g_rep: st.g_rep.clone(),
-            }),
-            last_loss: 0.0,
-        };
-        // keep the grad-rep values in the "param" slots for reconstruction
-        tmp.state.as_mut().unwrap().g_layers = Vec::new();
-        tmp.gather_params()
+        assemble(
+            &self.cfg,
+            port,
+            &st.g_wte,
+            &st.g_wpe,
+            &st.g_layers,
+            &st.g_lm,
+            &st.g_rep,
+        )
     }
 
     fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
         let Some(st) = self.state.as_mut() else { return };
-        for (p, g) in st.emb.iter_mut().zip(&st.g_emb) {
-            f(&mut p.0, &g.0);
-            f(&mut p.1, &g.1);
-        }
+        f(&mut st.wte, &st.g_wte);
+        f(&mut st.wpe, &st.g_wpe);
         for (pl, gl) in st.layers.iter_mut().zip(&st.g_layers) {
-            for (p, g) in pl.attn.iter_mut().zip(&gl.attn) {
-                f(&mut p.wqkv, &g.wqkv);
-                f(&mut p.bqkv, &g.bqkv);
-                f(&mut p.wo, &g.wo);
-            }
-            for (p, g) in pl.mlp.iter_mut().zip(&gl.mlp) {
-                f(&mut p.w1, &g.w1);
-                f(&mut p.b1, &g.b1);
-                f(&mut p.w2, &g.w2);
-            }
+            f(&mut pl.attn.wqkv, &gl.attn.wqkv);
+            f(&mut pl.attn.bqkv, &gl.attn.bqkv);
+            f(&mut pl.attn.wo, &gl.attn.wo);
+            f(&mut pl.mlp.w1, &gl.mlp.w1);
+            f(&mut pl.mlp.b1, &gl.mlp.b1);
+            f(&mut pl.mlp.w2, &gl.mlp.w2);
         }
-        for (p, g) in st.lm.iter_mut().zip(&st.g_lm) {
-            f(p, g);
-        }
-        for (p, g) in st.rep.iter_mut().zip(&st.g_rep) {
+        f(&mut st.lm, &st.g_lm);
+        {
             let mut gs: Vec<*const HostTensor> = Vec::new();
-            g.visit(&mut |t| gs.push(t));
+            st.g_rep.visit(&mut |t| gs.push(t));
             let mut i = 0;
-            p.visit_mut(&mut |t| {
+            st.rep.visit_mut(&mut |t| {
                 // SAFETY: parallel traversal of structurally-equal trees
                 f(t, unsafe { &*gs[i] });
                 i += 1;
@@ -787,34 +582,65 @@ impl Engine for TpEngine {
 
     fn zero_grads(&mut self) {
         let Some(st) = self.state.as_mut() else { return };
-        for g in &mut st.g_emb {
-            g.0.data.fill(0.0);
-            g.1.data.fill(0.0);
-        }
+        st.g_wte.data.fill(0.0);
+        st.g_wpe.data.fill(0.0);
         for gl in &mut st.g_layers {
-            for g in &mut gl.attn {
-                g.wqkv.data.fill(0.0);
-                g.bqkv.data.fill(0.0);
-                g.wo.data.fill(0.0);
-            }
-            for g in &mut gl.mlp {
-                g.w1.data.fill(0.0);
-                g.b1.data.fill(0.0);
-                g.w2.data.fill(0.0);
-            }
+            gl.attn.wqkv.data.fill(0.0);
+            gl.attn.bqkv.data.fill(0.0);
+            gl.attn.wo.data.fill(0.0);
+            gl.mlp.w1.data.fill(0.0);
+            gl.mlp.b1.data.fill(0.0);
+            gl.mlp.w2.data.fill(0.0);
         }
-        for g in &mut st.g_lm {
-            g.data.fill(0.0);
-        }
-        for g in &mut st.g_rep {
-            g.visit_mut(&mut |t| t.data.fill(0.0));
-        }
+        st.g_lm.data.fill(0.0);
+        st.g_rep.visit_mut(&mut |t| t.data.fill(0.0));
     }
+}
 
-    fn ctx(&self) -> &Ctx {
-        &self.ctx
+/// Reconstruct the full model from this rank's shards by ring-allgathering
+/// every sharded tensor through `port` (all ranks must call in step).
+fn assemble(
+    cfg: &ModelCfg,
+    port: &RingPort,
+    wte: &HostTensor,
+    wpe: &HostTensor,
+    layers: &[LayerShard],
+    lm: &HostTensor,
+    rep: &RepParams,
+) -> ModelParams {
+    let heads = cfg.heads;
+    let hd = cfg.head_dim();
+    let mut out = ModelParams::zeros_like(cfg);
+    out.wte = partition::unshard_cols(&allgather_tensor(port, wte));
+    out.wpe = partition::unshard_cols(&allgather_tensor(port, wpe));
+    for (l, lp) in out.layers.iter_mut().enumerate() {
+        let sh = &layers[l];
+        lp.wqkv = partition::unshard_qkv_cols(
+            &allgather_tensor(port, &sh.attn.wqkv),
+            heads,
+            hd,
+        );
+        lp.bqkv = partition::unshard_qkv_cols(
+            &allgather_tensor(port, &sh.attn.bqkv),
+            heads,
+            hd,
+        );
+        lp.wo = partition::unshard_rows(&allgather_tensor(port, &sh.attn.wo));
+        let rl = &rep.layers[l];
+        lp.ln1_g = rl.ln1_g.clone();
+        lp.ln1_b = rl.ln1_b.clone();
+        lp.bo = rl.bo.clone();
+        lp.ln2_g = rl.ln2_g.clone();
+        lp.ln2_b = rl.ln2_b.clone();
+        lp.mlp = MlpParams::Dense {
+            w1: partition::unshard_cols(&allgather_tensor(port, &sh.mlp.w1)),
+            b1: partition::unshard_cols(&allgather_tensor(port, &sh.mlp.b1)),
+            w2: partition::unshard_rows(&allgather_tensor(port, &sh.mlp.w2)),
+            b2: rl.b2.clone(),
+        };
     }
-    fn ctx_mut(&mut self) -> &mut Ctx {
-        &mut self.ctx
-    }
+    out.lnf_g = rep.lnf_g.clone();
+    out.lnf_b = rep.lnf_b.clone();
+    out.wlm = partition::unshard_cols(&allgather_tensor(port, lm));
+    out
 }

@@ -5,15 +5,18 @@
 //! /opt/xla-example/README.md for why serialized protos are rejected.
 //! Executables are compiled lazily on first use and cached for the life of
 //! the runtime, so the training hot loop never recompiles.
+//!
+//! The `xla` crate is an OPTIONAL dependency gated behind the `xla` cargo
+//! feature: containers without the xla_extension toolchain still build
+//! and run the full oracle/virtual stack. Without the feature,
+//! `PjrtRuntime::new` returns a clear error and everything else (tests,
+//! benches, the CLI) skips the PJRT path exactly as it already does when
+//! AOT artifacts are absent. Enabling `--features xla` requires adding
+//! the `xla` crate (xla_extension 0.5.1) to the build environment.
 
-use std::collections::HashMap;
-use std::path::Path;
-
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::Result;
 
 use crate::tensor::{HostTensor, IntTensor};
-
-use super::manifest::{Entry, Manifest};
 
 /// Counters for the §Perf pass.
 #[derive(Debug, Default, Clone)]
@@ -26,13 +29,6 @@ pub struct RuntimeStats {
     pub convert_seconds: f64,
 }
 
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub stats: RuntimeStats,
-}
-
 /// A borrowed runtime argument.
 #[derive(Debug, Clone, Copy)]
 pub enum RtArg<'a> {
@@ -40,6 +36,7 @@ pub enum RtArg<'a> {
     I(&'a IntTensor),
 }
 
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 impl<'a> RtArg<'a> {
     fn shape(&self) -> &[usize] {
         match self {
@@ -54,148 +51,223 @@ impl<'a> RtArg<'a> {
             RtArg::I(_) => "i32",
         }
     }
-
-    /// Upload straight to a device buffer (§Perf L3 opt #1): skips the
-    /// Literal intermediate entirely — one copy instead of two — and,
-    /// critically, avoids `PjRtLoadedExecutable::execute(Literal...)`,
-    /// whose C-side literal transfer LEAKS ~6 KB + output-size per call
-    /// in xla_extension 0.5.1 (measured in EXPERIMENTS.md §Perf; the
-    /// `execute_b` device-buffer path is leak-free).
-    fn to_device(self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
-        match self {
-            RtArg::F(t) => client
-                .buffer_from_host_buffer(&t.data, &t.shape, None)
-                .map_err(|e| anyhow!("host->device upload failed: {e}")),
-            RtArg::I(t) => client
-                .buffer_from_host_buffer(&t.data, &t.shape, None)
-                .map_err(|e| anyhow!("host->device upload failed: {e}")),
-        }
-    }
 }
 
-impl PjrtRuntime {
-    pub fn new(root: &Path, preset: &str) -> Result<Self> {
-        let manifest = Manifest::load(root, preset)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client init failed: {e}"))?;
-        Ok(PjrtRuntime {
-            client,
-            manifest,
-            compiled: HashMap::new(),
-            stats: RuntimeStats::default(),
-        })
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
+fn validate(entry: &super::manifest::Entry, args: &[RtArg]) -> Result<()> {
+    use anyhow::bail;
+    if entry.inputs.len() != args.len() {
+        bail!(
+            "{}: expected {} args, got {}",
+            entry.key,
+            entry.inputs.len(),
+            args.len()
+        );
     }
-
-    /// Compile (or fetch the cached executable for) one artifact key.
-    pub fn ensure_compiled(&mut self, key: &str) -> Result<()> {
-        if self.compiled.contains_key(key) {
-            return Ok(());
-        }
-        let entry = self.manifest.entry(key)?;
-        let path = self.manifest.hlo_path(entry);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {key}: {e}"))?;
-        self.compiled.insert(key.to_string(), exe);
-        self.stats.compilations += 1;
-        Ok(())
-    }
-
-    fn validate(entry: &Entry, args: &[RtArg]) -> Result<()> {
-        if entry.inputs.len() != args.len() {
+    for (i, (sig, arg)) in entry.inputs.iter().zip(args).enumerate() {
+        if sig.dtype != arg.dtype() || sig.shape != arg.shape() {
             bail!(
-                "{}: expected {} args, got {}",
+                "{} arg {i}: expected {} {:?}, got {} {:?}",
                 entry.key,
-                entry.inputs.len(),
-                args.len()
+                sig.dtype,
+                sig.shape,
+                arg.dtype(),
+                arg.shape()
             );
         }
-        for (i, (sig, arg)) in entry.inputs.iter().zip(args).enumerate() {
-            if sig.dtype != arg.dtype() || sig.shape != arg.shape() {
-                bail!(
-                    "{} arg {i}: expected {} {:?}, got {} {:?}",
-                    entry.key,
-                    sig.dtype,
-                    sig.shape,
-                    arg.dtype(),
-                    arg.shape()
-                );
+    }
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+mod real {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use anyhow::{anyhow, bail, Context, Result};
+
+    use super::super::manifest::Manifest;
+    use super::{validate, RtArg, RuntimeStats};
+    use crate::tensor::HostTensor;
+
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+        pub stats: RuntimeStats,
+    }
+
+    impl<'a> RtArg<'a> {
+        /// Upload straight to a device buffer (§Perf L3 opt #1): skips the
+        /// Literal intermediate entirely — one copy instead of two — and,
+        /// critically, avoids `PjRtLoadedExecutable::execute(Literal...)`,
+        /// whose C-side literal transfer LEAKS ~6 KB + output-size per call
+        /// in xla_extension 0.5.1 (measured in EXPERIMENTS.md §Perf; the
+        /// `execute_b` device-buffer path is leak-free).
+        fn to_device(self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+            match self {
+                RtArg::F(t) => client
+                    .buffer_from_host_buffer(&t.data, &t.shape, None)
+                    .map_err(|e| anyhow!("host->device upload failed: {e}")),
+                RtArg::I(t) => client
+                    .buffer_from_host_buffer(&t.data, &t.shape, None)
+                    .map_err(|e| anyhow!("host->device upload failed: {e}")),
             }
         }
-        Ok(())
     }
 
-    /// Execute one artifact. Outputs come back as f32 host tensors shaped
-    /// per the manifest (the AOT path lowers with `return_tuple=True`, so
-    /// the single PJRT output is a tuple we decompose).
-    pub fn run(&mut self, key: &str, args: &[RtArg]) -> Result<Vec<HostTensor>> {
-        self.ensure_compiled(key)?;
-        // borrow (not clone) the entry; stats deltas are applied at the
-        // end so no &mut self is needed mid-flight (§Perf L3 opt #2)
-        let entry = self.manifest.entry(key)?;
-        Self::validate(entry, args)?;
-
-        let t0 = std::time::Instant::now();
-        let bufs: Vec<xla::PjRtBuffer> = args
-            .iter()
-            .map(|a| a.to_device(&self.client))
-            .collect::<Result<_>>()
-            .with_context(|| format!("uploading args for {key}"))?;
-        let mut convert_s = t0.elapsed().as_secs_f64();
-
-        let exe = self.compiled.get(key).expect("just compiled");
-        let t1 = std::time::Instant::now();
-        let result = exe
-            .execute_b::<xla::PjRtBuffer>(&bufs)
-            .map_err(|e| anyhow!("executing {key}: {e}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {key} result: {e}"))?;
-        let exec_s = t1.elapsed().as_secs_f64();
-
-        let t2 = std::time::Instant::now();
-        let parts = tuple
-            .to_tuple()
-            .map_err(|e| anyhow!("decomposing {key} tuple: {e}"))?;
-        if parts.len() != entry.outputs.len() {
-            bail!(
-                "{key}: manifest promises {} outputs, executable returned {}",
-                entry.outputs.len(),
-                parts.len()
-            );
-        }
-        let outs = parts
-            .into_iter()
-            .zip(&entry.outputs)
-            .map(|(lit, sig)| {
-                let data = lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("reading {key} output: {e}"))?;
-                if data.len() != sig.numel() {
-                    bail!("{key}: output has {} elems, expected {}", data.len(), sig.numel());
-                }
-                Ok(HostTensor::from_vec(&sig.shape, data))
+    impl PjrtRuntime {
+        pub fn new(root: &Path, preset: &str) -> Result<Self> {
+            let manifest = Manifest::load(root, preset)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PJRT CPU client init failed: {e}"))?;
+            Ok(PjrtRuntime {
+                client,
+                manifest,
+                compiled: HashMap::new(),
+                stats: RuntimeStats::default(),
             })
-            .collect::<Result<Vec<_>>>()?;
-        convert_s += t2.elapsed().as_secs_f64();
-        self.stats.convert_seconds += convert_s;
-        self.stats.exec_seconds += exec_s;
-        self.stats.executions += 1;
-        Ok(outs)
-    }
+        }
 
-    pub fn compiled_count(&self) -> usize {
-        self.compiled.len()
+        /// Compile (or fetch the cached executable for) one artifact key.
+        pub fn ensure_compiled(&mut self, key: &str) -> Result<()> {
+            if self.compiled.contains_key(key) {
+                return Ok(());
+            }
+            let entry = self.manifest.entry(key)?;
+            let path = self.manifest.hlo_path(entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {key}: {e}"))?;
+            self.compiled.insert(key.to_string(), exe);
+            self.stats.compilations += 1;
+            Ok(())
+        }
+
+        /// Execute one artifact. Outputs come back as f32 host tensors shaped
+        /// per the manifest (the AOT path lowers with `return_tuple=True`, so
+        /// the single PJRT output is a tuple we decompose).
+        pub fn run(&mut self, key: &str, args: &[RtArg]) -> Result<Vec<HostTensor>> {
+            self.ensure_compiled(key)?;
+            // borrow (not clone) the entry; stats deltas are applied at the
+            // end so no &mut self is needed mid-flight (§Perf L3 opt #2)
+            let entry = self.manifest.entry(key)?;
+            validate(entry, args)?;
+
+            let t0 = std::time::Instant::now();
+            let bufs: Vec<xla::PjRtBuffer> = args
+                .iter()
+                .map(|a| a.to_device(&self.client))
+                .collect::<Result<_>>()
+                .with_context(|| format!("uploading args for {key}"))?;
+            let mut convert_s = t0.elapsed().as_secs_f64();
+
+            let exe = self.compiled.get(key).expect("just compiled");
+            let t1 = std::time::Instant::now();
+            let result = exe
+                .execute_b::<xla::PjRtBuffer>(&bufs)
+                .map_err(|e| anyhow!("executing {key}: {e}"))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching {key} result: {e}"))?;
+            let exec_s = t1.elapsed().as_secs_f64();
+
+            let t2 = std::time::Instant::now();
+            let parts = tuple
+                .to_tuple()
+                .map_err(|e| anyhow!("decomposing {key} tuple: {e}"))?;
+            if parts.len() != entry.outputs.len() {
+                bail!(
+                    "{key}: manifest promises {} outputs, executable returned {}",
+                    entry.outputs.len(),
+                    parts.len()
+                );
+            }
+            let outs = parts
+                .into_iter()
+                .zip(&entry.outputs)
+                .map(|(lit, sig)| {
+                    let data = lit
+                        .to_vec::<f32>()
+                        .map_err(|e| anyhow!("reading {key} output: {e}"))?;
+                    if data.len() != sig.numel() {
+                        bail!(
+                            "{key}: output has {} elems, expected {}",
+                            data.len(),
+                            sig.numel()
+                        );
+                    }
+                    Ok(HostTensor::from_vec(&sig.shape, data))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            convert_s += t2.elapsed().as_secs_f64();
+            self.stats.convert_seconds += convert_s;
+            self.stats.exec_seconds += exec_s;
+            self.stats.executions += 1;
+            Ok(outs)
+        }
+
+        pub fn compiled_count(&self) -> usize {
+            self.compiled.len()
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::super::manifest::Manifest;
+    use super::{RtArg, RuntimeStats};
+    use crate::tensor::HostTensor;
+
+    /// Feature-gated stand-in: the build has no xla_extension, so the
+    /// PJRT path reports itself unavailable at construction. The rest of
+    /// the stack (oracle, virtual, benches, CLI) behaves exactly as it
+    /// does when AOT artifacts are absent.
+    pub struct PjrtRuntime {
+        pub manifest: Manifest,
+        pub stats: RuntimeStats,
+    }
+
+    impl PjrtRuntime {
+        pub fn new(_root: &Path, _preset: &str) -> Result<Self> {
+            bail!(
+                "PJRT backend unavailable: this build has no `xla` feature \
+                 (xla_extension not present). Use the oracle or virtual \
+                 executor; enabling the feature also requires adding the \
+                 `xla` crate (xla_extension 0.5.1) to [dependencies]."
+            )
+        }
+
+        pub fn ensure_compiled(&mut self, _key: &str) -> Result<()> {
+            bail!("PJRT backend unavailable (built without the `xla` feature)")
+        }
+
+        pub fn run(&mut self, _key: &str, _args: &[RtArg]) -> Result<Vec<HostTensor>> {
+            bail!("PJRT backend unavailable (built without the `xla` feature)")
+        }
+
+        pub fn compiled_count(&self) -> usize {
+            0
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use real::PjrtRuntime;
+#[cfg(not(feature = "xla"))]
+pub use stub::PjrtRuntime;
+
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
     use crate::runtime::manifest::artifacts_root;
@@ -252,5 +324,17 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("expected"), "{err}");
+    }
+}
+
+#[cfg(all(test, not(feature = "xla")))]
+mod stub_tests {
+    use super::*;
+    use crate::runtime::manifest::artifacts_root;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = PjrtRuntime::new(&artifacts_root(), "tiny").unwrap_err().to_string();
+        assert!(err.contains("xla"), "{err}");
     }
 }

@@ -1,0 +1,157 @@
+//! The launcher contract: `Launcher::Lockstep` (deterministic
+//! round-robin coroutines) and `Launcher::Thread` (one free-running OS
+//! thread per rank) must produce BIT-IDENTICAL results for every engine —
+//! each directed fabric link is FIFO and each rank's program order is
+//! fixed, so data flow (including float reduction order) never depends on
+//! scheduling. Plus fabric stress: concurrent sends in flight on every
+//! link must neither deadlock nor drop messages.
+
+use rtp::comm::{LaunchPolicy, RingFabric};
+use rtp::config::Strategy;
+use rtp::model::ModelParams;
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind, Launcher};
+use rtp::util::rng::Rng;
+
+/// Run `steps` real-mode (oracle) steps under `launcher`; return per-step
+/// losses + gathered params + gathered grads.
+fn run(
+    preset: &str,
+    strategy: Strategy,
+    n: usize,
+    launcher: Launcher,
+    steps: usize,
+) -> (Vec<f32>, ModelParams, ModelParams) {
+    let opts = EngineOpts::new(preset, strategy, n, n.max(2))
+        .exec(ExecKind::Oracle)
+        .launcher(launcher);
+    let cfg = opts.cfg().unwrap();
+    let mut e = build_engine(&opts).unwrap();
+    let mut rng = Rng::new(7);
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        let batch = Batch::synth(&cfg, n.max(2), &mut rng);
+        losses.push(e.step(&batch).unwrap());
+    }
+    (losses, e.gather_params(), e.gather_grads())
+}
+
+/// Bitwise comparison via the full-precision tensor tree (ModelParams
+/// derives PartialEq over exact f32s — no tolerance).
+fn assert_bit_identical(strategy: Strategy, n: usize) {
+    let (l_loss, l_p, l_g) = run("tiny", strategy, n, Launcher::Lockstep, 2);
+    let (t_loss, t_p, t_g) = run("tiny", strategy, n, Launcher::Thread, 2);
+    assert_eq!(l_loss, t_loss, "{strategy} N={n}: losses diverge");
+    assert_eq!(l_p, t_p, "{strategy} N={n}: gathered params diverge");
+    assert_eq!(l_g, t_g, "{strategy} N={n}: gathered grads diverge");
+}
+
+#[test]
+fn single_is_launcher_invariant() {
+    assert_bit_identical(Strategy::Single, 1);
+}
+
+#[test]
+fn ddp_is_launcher_invariant() {
+    for n in [2, 4, 8] {
+        assert_bit_identical(Strategy::Ddp, n);
+    }
+}
+
+#[test]
+fn fsdp_is_launcher_invariant() {
+    for n in [2, 4, 8] {
+        assert_bit_identical(Strategy::Fsdp, n);
+    }
+}
+
+#[test]
+fn tp_is_launcher_invariant() {
+    // tiny has 4 heads: TP shards attention by head, so N ≤ 4
+    for n in [2, 4] {
+        assert_bit_identical(Strategy::MegatronTp, n);
+    }
+}
+
+#[test]
+fn rtp_inplace_is_launcher_invariant() {
+    for n in [2, 4] {
+        assert_bit_identical(Strategy::RtpInplace, n);
+    }
+}
+
+#[test]
+fn rtp_outofplace_is_launcher_invariant() {
+    for n in [2, 4] {
+        assert_bit_identical(Strategy::RtpOutOfPlace, n);
+    }
+}
+
+#[test]
+fn rtp_moe_is_launcher_invariant() {
+    let (l_loss, l_p, l_g) = run("tiny-moe", Strategy::RtpInplace, 2, Launcher::Lockstep, 2);
+    let (t_loss, t_p, t_g) = run("tiny-moe", Strategy::RtpInplace, 2, Launcher::Thread, 2);
+    assert_eq!(l_loss, t_loss);
+    assert_eq!(l_p, t_p);
+    assert_eq!(l_g, t_g);
+}
+
+#[test]
+fn virtual_mode_peaks_are_launcher_invariant() {
+    // memory accounting is per-rank state — scheduling must not move peaks
+    for strategy in [Strategy::Fsdp, Strategy::RtpInplace, Strategy::RtpOutOfPlace] {
+        let peak = |launcher: Launcher| {
+            let opts = EngineOpts::new("gpt2-117m", strategy, 4, 8)
+                .exec(ExecKind::Virtual)
+                .launcher(launcher);
+            let cfg = opts.cfg().unwrap();
+            let mut e = build_engine(&opts).unwrap();
+            let b = Batch {
+                ids: rtp::tensor::IntTensor::zeros(&[8, cfg.seq]),
+                targets: rtp::tensor::IntTensor::zeros(&[8, cfg.seq]),
+            };
+            e.step(&b).unwrap();
+            (e.ctx().cluster.max_peak(), e.ctx().cluster.total_peak())
+        };
+        assert_eq!(
+            peak(Launcher::Lockstep),
+            peak(Launcher::Thread),
+            "{strategy}: peaks diverge across launchers"
+        );
+    }
+}
+
+#[test]
+fn fabric_concurrent_sends_no_deadlock_no_loss() {
+    // every rank floods both links, then drains — under both policies
+    for policy in [LaunchPolicy::Lockstep, LaunchPolicy::Threaded] {
+        let n = 8;
+        let k = 500usize;
+        let fab = RingFabric::new(n);
+        let tasks: Vec<Box<dyn FnOnce() -> u64 + Send>> = (0..n)
+            .map(|r| {
+                let port = fab.port(r);
+                Box::new(move || {
+                    let mut checksum = 0u64;
+                    for i in 0..k {
+                        port.send(port.next(), (r, i));
+                        port.send(port.prev(), (r, i));
+                    }
+                    for i in 0..k {
+                        let (src, seq): (usize, usize) = port.recv(port.prev());
+                        assert_eq!((src, seq), (port.prev(), i), "cw link reordered");
+                        checksum += (src + seq) as u64;
+                        let (src, seq): (usize, usize) = port.recv(port.next());
+                        assert_eq!((src, seq), (port.next(), i), "ccw link reordered");
+                        checksum += (src + seq) as u64;
+                    }
+                    checksum
+                }) as Box<dyn FnOnce() -> u64 + Send>
+            })
+            .collect();
+        let sums = fab.run_round(policy, tasks);
+        assert_eq!(sums.len(), n);
+        assert_eq!(fab.in_flight(), 0, "{policy:?}: messages left in flight");
+        assert_eq!(fab.messages_sent(), (2 * n * k) as u64);
+        assert_eq!(fab.messages_delivered(), (2 * n * k) as u64);
+    }
+}

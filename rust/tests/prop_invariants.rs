@@ -123,21 +123,23 @@ fn prop_collectives_algebra() {
             .map(|_| (0..len).map(|_| r.normal() as f32).collect())
             .collect();
         let fab = RingFabric::new(n);
-        let ports = fab.ports();
-        // allreduce == allgather(reduce_scatter), all through the fabric
-        let mut ar = bufs.clone();
-        comm::allreduce_sum(&ports, &mut ar);
-        let rs = comm::reduce_scatter(&ports, &bufs);
-        let ag = comm::allgather(&ports, &rs);
-        for full in &ag {
-            prop::close(full, &ar[0], 1e-4)?;
-        }
-        // broadcast copies root everywhere
-        let mut bc = bufs.clone();
         let root = rng.below(n);
-        comm::broadcast(&ports, &mut bc, root);
-        for b in &bc {
-            prop::close(b, &bufs[root], 0.0)?;
+        // every rank runs its own side: allreduce == allgather(reduce_
+        // scatter), broadcast copies root everywhere
+        let out = comm::spmd(&fab, |port| {
+            let w = port.rank();
+            let mut ar = bufs[w].clone();
+            comm::allreduce_sum(&port, &mut ar);
+            let rs = comm::reduce_scatter(&port, &bufs[w]);
+            let ag = comm::allgather(&port, &rs);
+            let mut bc = bufs[w].clone();
+            comm::broadcast(&port, &mut bc, root);
+            (ar, ag, bc)
+        });
+        let ar0 = &out[0].0;
+        for (_, ag, bc) in &out {
+            prop::close(ag, ar0, 1e-4)?;
+            prop::close(bc, &bufs[root], 0.0)?;
         }
         if fab.in_flight() != 0 {
             return Err("fabric not drained after collectives".into());
@@ -155,37 +157,17 @@ fn prop_ring_collectives_match_god_view_references() {
         let n = 1 + rng.below(8);
         let mut r = Rng::new(rng.next_u64());
         let fab = RingFabric::new(n);
-        let ports = fab.ports();
 
         // allreduce: any length, including 0 and < n
         let len = rng.below(40);
         let bufs: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..len).map(|_| r.normal() as f32).collect())
             .collect();
-        let mut want = bufs.clone();
-        reference::allreduce_sum(&mut want);
-        let mut got = bufs.clone();
-        comm::allreduce_sum(&ports, &mut got);
-        for (g, w) in got.iter().zip(&want) {
-            prop::close(g, w, 1e-4)?;
-        }
-
         // reduce-scatter + all-to-all need divisible lengths
         let dlen = n * rng.below(6);
         let dbufs: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..dlen).map(|_| r.normal() as f32).collect())
             .collect();
-        let want_rs = reference::reduce_scatter(&dbufs);
-        let got_rs = comm::reduce_scatter(&ports, &dbufs);
-        for (g, w) in got_rs.iter().zip(&want_rs) {
-            prop::close(g, w, 1e-4)?;
-        }
-        let want_a2a = reference::all_to_all(&dbufs);
-        let got_a2a = comm::all_to_all(&ports, &dbufs);
-        for (g, w) in got_a2a.iter().zip(&want_a2a) {
-            prop::close(g, w, 0.0)?;
-        }
-
         // allgather tolerates ragged shards
         let shards: Vec<Vec<f32>> = (0..n)
             .map(|_| {
@@ -193,9 +175,27 @@ fn prop_ring_collectives_match_god_view_references() {
                 (0..l).map(|_| r.normal() as f32).collect()
             })
             .collect();
+
+        let mut want = bufs.clone();
+        reference::allreduce_sum(&mut want);
+        let want_rs = reference::reduce_scatter(&dbufs);
+        let want_a2a = reference::all_to_all(&dbufs);
         let want_ag = reference::allgather(&shards);
-        for full in comm::allgather(&ports, &shards) {
-            prop::close(&full, &want_ag, 0.0)?;
+
+        let out = comm::spmd(&fab, |port| {
+            let w = port.rank();
+            let mut ar = bufs[w].clone();
+            comm::allreduce_sum(&port, &mut ar);
+            let rs = comm::reduce_scatter(&port, &dbufs[w]);
+            let a2a = comm::all_to_all(&port, &dbufs[w]);
+            let ag = comm::allgather(&port, &shards[w]);
+            (ar, rs, a2a, ag)
+        });
+        for (w, (ar, rs, a2a, ag)) in out.iter().enumerate() {
+            prop::close(ar, &want[w], 1e-4)?;
+            prop::close(rs, &want_rs[w], 1e-4)?;
+            prop::close(a2a, &want_a2a[w], 0.0)?;
+            prop::close(ag, &want_ag, 0.0)?;
         }
 
         if fab.in_flight() != 0 {
@@ -214,31 +214,35 @@ fn prop_fabric_rotation_round_trips_and_tracks_shard_at() {
     prop::check("rotation round trip", 80, |rng| {
         let n = 1 + rng.below(8);
         let fab = RingFabric::new(n);
-        let ports = fab.ports();
         for dir in [RotationDir::Clockwise, RotationDir::CounterClockwise] {
-            let mut v: Vec<usize> = (0..n).collect();
-            for t in 1..n {
-                comm::rotate_ring(&ports, &mut v, dir);
-                for w in 0..n {
+            // each rank tracks the shard id it holds through its own port
+            let results = comm::spmd(&fab, |port| {
+                let w = port.rank();
+                let mut held = w;
+                for t in 1..n {
+                    held = comm::rotate_ring(&port, held, dir);
                     let want = comm::shard_at(dir, w, t, n);
-                    if v[w] != want {
+                    if held != want {
                         return Err(format!(
-                            "{dir:?} n={n} t={t} w={w}: got {} want {want}",
-                            v[w]
+                            "{dir:?} n={n} t={t} w={w}: got {held} want {want}"
                         ));
                     }
                 }
-            }
-            // N-1 hops back in the mirror direction must return home
-            let back = match dir {
-                RotationDir::Clockwise => RotationDir::CounterClockwise,
-                RotationDir::CounterClockwise => RotationDir::Clockwise,
-            };
-            for _ in 1..n {
-                comm::rotate_ring(&ports, &mut v, back);
-            }
-            if v != (0..n).collect::<Vec<_>>() {
-                return Err(format!("{dir:?} n={n}: round trip broken: {v:?}"));
+                // N-1 hops back in the mirror direction must return home
+                let back = match dir {
+                    RotationDir::Clockwise => RotationDir::CounterClockwise,
+                    RotationDir::CounterClockwise => RotationDir::Clockwise,
+                };
+                for _ in 1..n {
+                    held = comm::rotate_ring(&port, held, back);
+                }
+                if held != w {
+                    return Err(format!("{dir:?} n={n} w={w}: round trip broken: {held}"));
+                }
+                Ok(())
+            });
+            for r in results {
+                r?;
             }
         }
         if fab.in_flight() != 0 {
@@ -256,11 +260,14 @@ fn prop_fabric_message_conservation() {
         let n = 2 + rng.below(7);
         let len = n * (1 + rng.below(4));
         let mut r = Rng::new(rng.next_u64());
-        let mut bufs: Vec<Vec<f32>> = (0..n)
+        let bufs: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..len).map(|_| r.normal() as f32).collect())
             .collect();
         let fab = RingFabric::new(n);
-        comm::allreduce_sum(&fab.ports(), &mut bufs);
+        comm::spmd(&fab, |port| {
+            let mut b = bufs[port.rank()].clone();
+            comm::allreduce_sum(&port, &mut b);
+        });
         let want = (2 * (n - 1) * n) as u64;
         if fab.messages_sent() != want {
             return Err(format!(
@@ -305,7 +312,11 @@ fn prop_flat_param_roundtrip_any_layout() {
         }
         // shard + fabric-gather + unpack is the identity, on every rank
         let fab = RingFabric::new(n);
-        for full in layout.allgather_via(&fab.ports(), &layout.shards(&flat)) {
+        let shards = layout.shards(&flat);
+        let fulls = comm::spmd(&fab, |port| {
+            layout.allgather_via(&port, &shards[port.rank()])
+        });
+        for full in fulls {
             let back = layout.unpack(&full);
             for (a, b) in back.iter().zip(&tensors) {
                 if a != b {
