@@ -11,11 +11,15 @@
 //!    fabric, timed with the mini-harness.
 
 use rtp::bench_util::{bench, Table};
-use rtp::comm::{self, reference, CommPrim, LinkModel, RingFabric, RotationDir};
+use rtp::comm::{self, reference, CommPrim, LaunchPolicy, LinkModel, RingFabric, RotationDir};
 use rtp::perfmodel::{a100_nvlink, v100_pcie};
 use rtp::util::rng::Rng;
 
 const N: usize = 8;
+
+fn quick() -> bool {
+    std::env::var("RTP_BENCH_QUICK").is_ok()
+}
 
 fn model_table(link: &LinkModel) {
     let mut t = Table::new(
@@ -81,9 +85,10 @@ fn host_table() {
         &["N", "elems/worker", "op", "reference", "ring fabric"],
     );
     let mut rng = Rng::new(9);
+    let sizes: &[usize] = if quick() { &[1 << 12, 1 << 16] } else { &[1 << 12, 1 << 16, 1 << 19] };
     for n in [2usize, 4, 8, 16] {
         let fab = RingFabric::new(n);
-        for elems in [1usize << 12, 1 << 16, 1 << 19] {
+        for &elems in sizes {
             let len = (elems / n) * n; // divisible for reduce_scatter
             let bufs: Vec<Vec<f32>> = (0..n)
                 .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
@@ -172,10 +177,59 @@ fn host_table() {
     t.write_csv("comm_microbench_host").unwrap();
 }
 
+/// Pooled (`send_vec` lane path) vs boxed (`dyn Any`) rotation on the
+/// host fabric: per-hop latency and fabric allocations per hop, under
+/// both launch policies. The pooled path must show zero steady-state
+/// allocations — the lock-sharded lane + buffer-pool contract.
+fn pooled_rotation_table() {
+    let mut t = Table::new(
+        "pooled vs boxed rotation (host fabric, per hop)",
+        &["policy", "elems", "boxed ns/hop", "pooled ns/hop", "pooled allocs/hop"],
+    );
+    let (reps, iters) = if quick() { (200usize, 4usize) } else { (1000, 8) };
+    for policy in [LaunchPolicy::Lockstep, LaunchPolicy::Threaded] {
+        for elems in [1usize << 10, 1 << 14, 1 << 17] {
+            let fab = RingFabric::new(4);
+            let run = |pooled: bool| {
+                comm::spmd_with(&fab, policy, |port| {
+                    let mut buf = vec![port.rank() as f32; elems];
+                    for _ in 0..reps {
+                        buf = if pooled {
+                            comm::rotate_ring_vec(&port, buf, RotationDir::Clockwise)
+                        } else {
+                            comm::rotate_ring(&port, buf, RotationDir::Clockwise)
+                        };
+                    }
+                    buf.len()
+                });
+            };
+            run(true); // prime pools / queues
+            let boxed = bench(1, iters, || run(false));
+            let c0 = fab.counters();
+            let pooled = bench(1, iters, || run(true));
+            let c1 = fab.counters();
+            // bench runs the closure 1 (warmup) + iters times between the
+            // two counter snapshots
+            let pooled_hops = ((iters + 1) * 4 * reps) as f64;
+            t.row(vec![
+                format!("{policy:?}"),
+                elems.to_string(),
+                format!("{:.0}", boxed.median / reps as f64 * 1e9),
+                format!("{:.0}", pooled.median / reps as f64 * 1e9),
+                format!("{:.4}", (c1.msg_allocs - c0.msg_allocs) as f64 / pooled_hops),
+            ]);
+            assert_eq!(fab.in_flight(), 0);
+        }
+    }
+    t.print();
+    t.write_csv("comm_microbench_pooled").unwrap();
+}
+
 fn main() {
     model_table(&a100_nvlink().link);
     model_table(&v100_pcie().link);
     hop_decomposition_table(&a100_nvlink().link);
     hop_decomposition_table(&v100_pcie().link);
+    pooled_rotation_table();
     host_table();
 }

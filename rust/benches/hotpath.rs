@@ -2,17 +2,37 @@
 //! executor, with the PJRT runtime's internal breakdown (execute vs
 //! host<->literal conversion vs compile) — the numbers the EXPERIMENTS.md
 //! §Perf iteration log tracks.
+//!
+//! Since the true-async-rotation PR this bench also measures the Thread
+//! launcher's REAL compute/comm overlap: `RtpOutOfPlace` with eager comm
+//! streams vs the synchronous-boundary baseline, fabric allocations per
+//! step, and pooled ns/hop — and writes `figures/BENCH_overlap.json`
+//! (modeled vs measured overlap, ns/hop, allocs/step) so CI's bench-smoke
+//! job tracks the perf trajectory across PRs. `RTP_BENCH_QUICK=1` trims
+//! iteration counts for CI.
 
-use rtp::bench_util::{bench, Table};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use rtp::bench_util::{bench, figures_dir, Table};
+use rtp::comm::{self, LaunchPolicy, RingFabric, RotationDir};
 use rtp::config::Strategy;
-use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind, Launcher};
+use rtp::perfmodel::a100_nvlink;
 use rtp::runtime::Exec;
+use rtp::tensor::IntTensor;
+use rtp::util::json::Json;
 use rtp::util::rng::Rng;
+
+fn quick() -> bool {
+    std::env::var("RTP_BENCH_QUICK").is_ok()
+}
 
 fn main() {
     let preset = "tiny";
     let cfg = rtp::config::presets::get(preset).unwrap();
     let batch = Batch::synth(&cfg, 4, &mut Rng::new(1));
+    let iters = if quick() { 4 } else { 8 };
 
     let mut t = Table::new(
         "hot path — real-mode step wall-clock (tiny, global batch 4)",
@@ -37,7 +57,7 @@ fn main() {
                     .unwrap();
             // warm the executable cache before timing
             e.step(&batch).unwrap();
-            let s = bench(1, 8, || {
+            let s = bench(1, iters, || {
                 e.zero_grads();
                 e.step(&batch).unwrap();
             });
@@ -52,6 +72,8 @@ fn main() {
     }
     t.print();
     t.write_csv("hotpath").unwrap();
+
+    async_rotation_profile(preset, &batch);
 
     // PJRT runtime breakdown on an RTP step
     if rtp::runtime::artifacts_root().join("tiny/manifest.json").exists() {
@@ -90,4 +112,142 @@ fn main() {
             b.write_csv("hotpath_pjrt_breakdown").unwrap();
         }
     }
+}
+
+/// One Thread-launcher `RtpOutOfPlace` configuration: warm, measure
+/// per-step fabric counters, then time steps. Returns (median step
+/// seconds, fabric msg-allocs per step).
+fn rtp_thread_step(preset: &str, batch: &Batch, n: usize, async_rot: bool) -> (f64, f64) {
+    let mut e = build_engine(
+        &EngineOpts::new(preset, Strategy::RtpOutOfPlace, n, n)
+            .exec(ExecKind::Oracle)
+            .launcher(Launcher::Thread)
+            .async_rotation(async_rot),
+    )
+    .unwrap();
+    e.step(batch).unwrap(); // warm (primes lane pools)
+    let fab = e.ctx().cluster.fabric().clone();
+    let c0 = fab.counters();
+    e.zero_grads();
+    e.step(batch).unwrap();
+    let c1 = fab.counters();
+    let allocs = (c1.msg_allocs - c0.msg_allocs) as f64;
+    let iters = if quick() { 6 } else { 16 };
+    let s = bench(1, iters, || {
+        e.zero_grads();
+        e.step(batch).unwrap();
+    });
+    (s.median, allocs)
+}
+
+/// Pooled rotation latency: K hops of a 64 KiB shard per rank under the
+/// Thread policy; wall-clock / K is the per-hop cost including the lane
+/// machinery the engines actually pay.
+fn measure_ns_per_hop() -> f64 {
+    let n = 4;
+    let k = if quick() { 2_000usize } else { 20_000 };
+    let elems = 16 * 1024; // 64 KiB of f32
+    let fab = RingFabric::new(n);
+    let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..n)
+        .map(|r| {
+            let port = fab.port(r);
+            Box::new(move || {
+                let mut buf = vec![r as f32; elems];
+                for _ in 0..k {
+                    buf = comm::rotate_ring_vec(&port, buf, RotationDir::Clockwise);
+                }
+                buf.len()
+            }) as Box<dyn FnOnce() -> usize + Send>
+        })
+        .collect();
+    let t0 = Instant::now();
+    fab.run_round(LaunchPolicy::Threaded, tasks);
+    assert_eq!(fab.in_flight(), 0);
+    t0.elapsed().as_secs_f64() / k as f64 * 1e9
+}
+
+/// Modeled (α-β timeline) overlap fraction of one `RtpOutOfPlace` step.
+fn modeled_overlap(preset: &str, n: usize) -> f64 {
+    let opts = EngineOpts::new(preset, Strategy::RtpOutOfPlace, n, n)
+        .exec(ExecKind::Virtual)
+        .hardware(a100_nvlink());
+    let cfg = opts.cfg().unwrap();
+    let mut e = build_engine(&opts).unwrap();
+    let b = Batch {
+        ids: IntTensor::zeros(&[n, cfg.seq]),
+        targets: IntTensor::zeros(&[n, cfg.seq]),
+    };
+    e.step(&b).unwrap();
+    e.ctx().timeline.as_ref().unwrap().overlap_fraction()
+}
+
+/// The §3.4 acceptance measurement: under the Thread launcher, real
+/// background rotation must beat the synchronous-boundary baseline, and
+/// the measured overlap is compared against the modeled one. Emits
+/// `figures/BENCH_overlap.json`.
+fn async_rotation_profile(preset: &str, batch: &Batch) {
+    let n = 4;
+    let (sync_med, sync_allocs) = rtp_thread_step(preset, batch, n, false);
+    let (async_med, async_allocs) = rtp_thread_step(preset, batch, n, true);
+    let measured_overlap = (1.0 - async_med / sync_med).max(0.0);
+    let modeled = modeled_overlap(preset, n);
+    let ns_hop = measure_ns_per_hop();
+
+    let mut t = Table::new(
+        &format!(
+            "true async rotation — ThreadLauncher, {preset}, oracle, N={n} \
+             (sync boundary vs eager comm-stream)"
+        ),
+        &["rotation", "median step", "fabric allocs/step", "overlap vs sync"],
+    );
+    t.row(vec![
+        "synchronous".into(),
+        format!("{:.2} ms", sync_med * 1e3),
+        format!("{sync_allocs:.0}"),
+        "—".into(),
+    ]);
+    t.row(vec![
+        "async (comm stream)".into(),
+        format!("{:.2} ms", async_med * 1e3),
+        format!("{async_allocs:.0}"),
+        format!("{:.1}%", 100.0 * measured_overlap),
+    ]);
+    t.print();
+    t.write_csv("hotpath_async_rotation").unwrap();
+    println!(
+        "modeled overlap (α-β timeline): {:.1}%  measured/modeled ratio: {:.2}  \
+         pooled rotation: {:.0} ns/hop",
+        100.0 * modeled,
+        if modeled > 0.0 { measured_overlap / modeled } else { 0.0 },
+        ns_hop
+    );
+    if async_med >= sync_med {
+        println!(
+            "WARNING: async rotation did not beat the synchronous baseline \
+             ({:.3} ms >= {:.3} ms) — overlap regression?",
+            async_med * 1e3,
+            sync_med * 1e3
+        );
+    }
+
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("preset".into(), Json::Str(preset.to_string()));
+    obj.insert("workers".into(), Json::Num(n as f64));
+    obj.insert("launcher".into(), Json::Str("thread".into()));
+    obj.insert("sync_step_ms".into(), Json::Num(sync_med * 1e3));
+    obj.insert("async_step_ms".into(), Json::Num(async_med * 1e3));
+    obj.insert("measured_overlap_fraction".into(), Json::Num(measured_overlap));
+    obj.insert("modeled_overlap_fraction".into(), Json::Num(modeled));
+    obj.insert(
+        "measured_over_modeled_ratio".into(),
+        Json::Num(if modeled > 0.0 { measured_overlap / modeled } else { 0.0 }),
+    );
+    obj.insert("ns_per_hop_pooled_64KiB".into(), Json::Num(ns_hop));
+    obj.insert("fabric_allocs_per_step_sync".into(), Json::Num(sync_allocs));
+    obj.insert("fabric_allocs_per_step_async".into(), Json::Num(async_allocs));
+    obj.insert("quick_mode".into(), Json::Bool(quick()));
+    let path = figures_dir().join("BENCH_overlap.json");
+    std::fs::create_dir_all(figures_dir()).unwrap();
+    std::fs::write(&path, format!("{}\n", Json::Obj(obj))).unwrap();
+    println!("wrote {}", path.display());
 }

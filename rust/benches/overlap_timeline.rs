@@ -1,13 +1,21 @@
 //! Paper Figs 3-5 — overlap timelines: ASCII Gantt charts of one step of
-//! FSDP (Fig 3), RTP-inplace (Fig 4) and RTP-outofplace (Fig 5) on a
-//! GPT2 (117M) layer stack at N=4. Shows FSDP's blocking first allgather,
-//! in-place RTP's serialized rotations, and out-of-place RTP's
-//! comm-hidden-under-compute (the "expedited startup time", §3.4.3).
+//! FSDP (Fig 3), RTP-inplace (Fig 4) and RTP-outofplace (Fig 5) at N=4,
+//! rendered for every preset the calibration tracks. Shows FSDP's
+//! blocking first allgather, in-place RTP's serialized rotations, and
+//! out-of-place RTP's comm-hidden-under-compute (the "expedited startup
+//! time", §3.4.3).
 //!
 //! Since the ring-fabric refactor every comm span is ONE RING HOP: an
 //! FSDP allgather renders as its N-1 chunk hops and the footer reports
 //! the step's total hop count, so the charts show the real hop schedule
 //! rather than opaque per-collective blocks.
+//!
+//! Next to each modeled Gantt this bench reports the MEASURED Thread
+//! launcher overlap (lockstep vs threaded wall-clock, and — for
+//! out-of-place RTP — synchronous-boundary vs eager comm-stream
+//! rotation), closing the ROADMAP's "calibrated model-vs-measured"
+//! item: the final table puts the modeled overlap fraction, the measured
+//! one, and their ratio side by side (also written as CSV).
 
 use rtp::bench_util::{bench, Table};
 use rtp::config::Strategy;
@@ -17,10 +25,18 @@ use rtp::tensor::IntTensor;
 use rtp::util::rng::Rng;
 
 const N: usize = 4;
-const PRESET: &str = "gpt2-117m";
+/// Presets the modeled Gantt + calibration run over. `tiny` is the one
+/// the measured (oracle, wall-clock) side can afford; the GPT-2 stack is
+/// the paper's Figs 3-5 shape.
+const PRESETS: &[&str] = &["tiny", "gpt2-117m"];
 
-fn gantt(strategy: Strategy) -> (String, f64, u64) {
-    let opts = EngineOpts::new(PRESET, strategy, N, N)
+fn quick() -> bool {
+    std::env::var("RTP_BENCH_QUICK").is_ok()
+}
+
+/// One modeled step: returns (gantt, step time, hop count, overlap frac).
+fn gantt(preset: &str, strategy: Strategy) -> (String, f64, u64, f64) {
+    let opts = EngineOpts::new(preset, strategy, N, N)
         .exec(ExecKind::Virtual)
         .hardware(a100_nvlink());
     let cfg = opts.cfg().unwrap();
@@ -35,35 +51,44 @@ fn gantt(strategy: Strategy) -> (String, f64, u64) {
     };
     e.step(&b).unwrap();
     let tl = e.ctx().timeline.as_ref().unwrap();
-    (tl.render_gantt(100), tl.time(), tl.hop_count)
+    (tl.render_gantt(100), tl.time(), tl.hop_count, tl.overlap_fraction())
 }
 
 fn main() {
-    let mut times = Vec::new();
-    for (fig, strategy) in [
-        ("Fig 3 — FSDP", Strategy::Fsdp),
-        ("Fig 4 — RTP in-place", Strategy::RtpInplace),
-        ("Fig 5 — RTP out-of-place", Strategy::RtpOutOfPlace),
-    ] {
-        let (g, t, hops) = gantt(strategy);
-        println!("== {fig} ({PRESET}, N={N}, local batch 1) ==");
-        println!("{g}");
-        println!("ring hops this step: {hops}");
-        println!();
-        times.push((fig, t));
+    let mut modeled_overlap_tiny = 0.0;
+    for preset in PRESETS {
+        let mut times = Vec::new();
+        for (fig, strategy) in [
+            ("Fig 3 — FSDP", Strategy::Fsdp),
+            ("Fig 4 — RTP in-place", Strategy::RtpInplace),
+            ("Fig 5 — RTP out-of-place", Strategy::RtpOutOfPlace),
+        ] {
+            let (g, t, hops, ov) = gantt(preset, strategy);
+            println!("== {fig} ({preset}, N={N}, local batch 1) ==");
+            println!("{g}");
+            println!(
+                "ring hops this step: {hops}   modeled overlap: {:.0}%",
+                100.0 * ov
+            );
+            println!();
+            times.push((fig, t, ov));
+        }
+        println!("step latencies ({preset}):");
+        for (fig, t, _) in &times {
+            println!("  {fig}: {:.3} ms", t * 1e3);
+        }
+        // §3.4.3 claim: overlap buys out-of-place a faster step than in-place
+        assert!(times[2].1 < times[1].1, "out-of-place must beat in-place");
+        println!(
+            "\nout-of-place hides {:.0}% of in-place's rotation wall-clock\n",
+            100.0 * (1.0 - times[2].1 / times[1].1)
+        );
+        if *preset == "tiny" {
+            modeled_overlap_tiny = times[2].2;
+        }
     }
-    println!("step latencies: ");
-    for (fig, t) in &times {
-        println!("  {fig}: {:.3} ms", t * 1e3);
-    }
-    // §3.4.3 claim: overlap buys out-of-place a faster step than in-place
-    assert!(times[2].1 < times[1].1, "out-of-place must beat in-place");
-    println!(
-        "\nout-of-place hides {:.0}% of in-place's rotation wall-clock",
-        100.0 * (1.0 - times[2].1 / times[1].1)
-    );
 
-    measured_overlap();
+    measured_overlap(modeled_overlap_tiny);
 }
 
 /// MEASURED (not modeled) compute/comm overlap: real-mode (oracle) steps
@@ -72,33 +97,37 @@ fn main() {
 /// once under the ThreadLauncher (one OS thread per rank over the `Send`
 /// fabric). The thread/lockstep wall-clock ratio is the realized overlap:
 /// how much of the N ranks' compute the threads actually ran
-/// concurrently, machine-measured rather than α-β-modeled.
-fn measured_overlap() {
+/// concurrently, machine-measured rather than α-β-modeled. For
+/// out-of-place RTP a third column isolates the TRUE async rotation win:
+/// Thread launcher with eager comm streams vs synchronous boundary hops.
+fn measured_overlap(modeled_overlap_tiny: f64) {
     let preset = "tiny";
     let cfg = rtp::config::presets::get(preset).unwrap();
     let n = 4;
     let batch = Batch::synth(&cfg, n, &mut Rng::new(2));
+    let iters = if quick() { 4 } else { 8 };
+    let step_time = |strategy: Strategy, launcher: Launcher, async_rot: bool| {
+        let mut e = build_engine(
+            &EngineOpts::new(preset, strategy, n, n)
+                .exec(ExecKind::Oracle)
+                .launcher(launcher)
+                .async_rotation(async_rot),
+        )
+        .unwrap();
+        e.step(&batch).unwrap(); // warm
+        bench(1, iters, || {
+            e.zero_grads();
+            e.step(&batch).unwrap();
+        })
+        .median
+    };
     let mut t = Table::new(
         "measured wall-clock overlap under ThreadLauncher (tiny, oracle, N=4)",
         &["engine", "lockstep", "threaded", "speedup", "parallel efficiency"],
     );
     for strategy in [Strategy::Fsdp, Strategy::RtpInplace, Strategy::RtpOutOfPlace] {
-        let step_time = |launcher: Launcher| {
-            let mut e = build_engine(
-                &EngineOpts::new(preset, strategy, n, n)
-                    .exec(ExecKind::Oracle)
-                    .launcher(launcher),
-            )
-            .unwrap();
-            e.step(&batch).unwrap(); // warm
-            bench(1, 8, || {
-                e.zero_grads();
-                e.step(&batch).unwrap();
-            })
-            .median
-        };
-        let lockstep = step_time(Launcher::Lockstep);
-        let threaded = step_time(Launcher::Thread);
+        let lockstep = step_time(strategy, Launcher::Lockstep, true);
+        let threaded = step_time(strategy, Launcher::Thread, true);
         let speedup = lockstep / threaded;
         t.row(vec![
             format!("{strategy}"),
@@ -114,4 +143,38 @@ fn measured_overlap() {
         "(speedup > 1 means the ThreadLauncher overlapped rank compute that the \
          lockstep schedule serializes; {n}× is the ideal for compute-bound steps)"
     );
+
+    // calibration: modeled vs measured ASYNC-ROTATION overlap
+    let sync_rot = step_time(Strategy::RtpOutOfPlace, Launcher::Thread, false);
+    let async_rot = step_time(Strategy::RtpOutOfPlace, Launcher::Thread, true);
+    let measured = (1.0 - async_rot / sync_rot).max(0.0);
+    let mut c = Table::new(
+        "model-vs-measured rotation overlap (rtp-outofplace, tiny, N=4)",
+        &["metric", "value"],
+    );
+    c.row(vec![
+        "sync-rotation step (thread)".into(),
+        format!("{:.2} ms", sync_rot * 1e3),
+    ]);
+    c.row(vec![
+        "async-rotation step (thread)".into(),
+        format!("{:.2} ms", async_rot * 1e3),
+    ]);
+    c.row(vec![
+        "measured overlap fraction".into(),
+        format!("{:.1}%", 100.0 * measured),
+    ]);
+    c.row(vec![
+        "modeled overlap fraction".into(),
+        format!("{:.1}%", 100.0 * modeled_overlap_tiny),
+    ]);
+    c.row(vec![
+        "measured / modeled".into(),
+        format!(
+            "{:.2}",
+            if modeled_overlap_tiny > 0.0 { measured / modeled_overlap_tiny } else { 0.0 }
+        ),
+    ]);
+    c.print();
+    c.write_csv("overlap_model_vs_measured").unwrap();
 }

@@ -5,11 +5,20 @@
 //! Architecture (this is the substrate of the paper's two contributions):
 //!
 //! - [`fabric`] — `RingFabric` / `RingPort`: per-rank endpoints over
-//!   per-worker mailboxes, shared across OS threads. A rank can only talk
-//!   to its ring neighbors, one hop at a time; every engine transfer goes
-//!   through `port.send` / `port.recv`. Rank bodies run inside fabric
-//!   *rounds* under a [`fabric::LaunchPolicy`]: `Lockstep` (deterministic
-//!   round-robin coroutines) or `Threaded` (one OS thread per rank).
+//!   lock-sharded per-link lanes (each directed link has its own
+//!   mutex+condvar+FIFO+buffer pool), shared across OS threads. A rank
+//!   can only talk to its ring neighbors, one hop at a time; every engine
+//!   transfer goes through `port.send` / `port.recv`, and bulk `Vec<f32>`
+//!   traffic rides the pooled `send_vec` / `recv_vec` / `lease` /
+//!   `release` path, which performs zero heap allocations in steady
+//!   state. Rank bodies run inside fabric *rounds* under a
+//!   [`fabric::LaunchPolicy`]: `Lockstep` (deterministic round-robin
+//!   coroutines) or `Threaded` (one OS thread per rank).
+//! - [`stream`] — `CommStream`: a rank's handle for TRUE async rotation —
+//!   under the Thread launcher the outgoing shard is enqueued before the
+//!   step's compute runs (in flight while computing, §3.4.3); under
+//!   Lockstep the same API degrades to the synchronous boundary hop, so
+//!   both launchers stay bit-identical.
 //! - this module — the collectives, written RANK-LOCALLY: each function
 //!   takes ONE port (this rank's) and this rank's buffer, and performs
 //!   this rank's side of the hop schedule. All-reduce is reduce-scatter +
@@ -43,13 +52,15 @@ pub mod cost;
 pub mod fabric;
 pub mod reference;
 pub mod rotation;
+pub mod stream;
 
 use std::any::Any;
 use std::collections::VecDeque;
 
 pub use cost::{CommPrim, LinkModel};
-pub use fabric::{LaunchPolicy, RingFabric, RingPort};
+pub use fabric::{FabricCounters, LaunchPolicy, RingFabric, RingPort};
 pub use rotation::{shard_at, RotationDir};
+pub use stream::{CommStream, InFlight};
 
 /// Split `len` elements into `n` contiguous chunks whose sizes differ by
 /// at most one (the first `len % n` chunks are one longer). Returns
@@ -113,25 +124,33 @@ pub fn allreduce_sum(port: &RingPort, buf: &mut [f32]) {
 
     // reduce-scatter pass: after hop s, chunk (w - s - 1) mod n on this
     // rank has accumulated s + 2 contributions; after n-1 hops rank w
-    // owns the complete chunk w.
+    // owns the complete chunk w. Per-hop scratch is leased from the
+    // outgoing lane's pool and released to the incoming lane's — in
+    // steady state the same buffers cycle the ring, zero allocations.
     for s in 0..n - 1 {
         let (a, b) = ch[(w + n - s - 1) % n];
-        port.send(port.next(), buf[a..b].to_vec());
+        let mut out = port.lease(port.next(), b - a);
+        out.extend_from_slice(&buf[a..b]);
+        port.send_vec(port.next(), out);
         let (a, b) = ch[(w + 2 * n - s - 2) % n];
-        let msg: Vec<f32> = port.recv(port.prev());
+        let msg = port.recv_vec(port.prev());
         debug_assert_eq!(msg.len(), b - a, "allreduce peers disagree on length");
         for (dst, v) in buf[a..b].iter_mut().zip(&msg) {
             *dst += v;
         }
+        port.release(port.prev(), msg);
     }
     // all-gather pass: complete chunks circulate until every rank has all.
     for s in 0..n - 1 {
         let (a, b) = ch[(w + n - s) % n];
-        port.send(port.next(), buf[a..b].to_vec());
+        let mut out = port.lease(port.next(), b - a);
+        out.extend_from_slice(&buf[a..b]);
+        port.send_vec(port.next(), out);
         let (a, b) = ch[(w + 2 * n - s - 1) % n];
-        let msg: Vec<f32> = port.recv(port.prev());
+        let msg = port.recv_vec(port.prev());
         debug_assert_eq!(msg.len(), b - a, "allreduce peers disagree on length");
         buf[a..b].copy_from_slice(&msg);
+        port.release(port.prev(), msg);
     }
 }
 
@@ -145,15 +164,19 @@ pub fn allgather_parts(port: &RingPort, mine: &[f32]) -> Vec<Vec<f32>> {
     if n == 1 {
         return vec![mine.to_vec()];
     }
-    // hold[c] = shard c's payload once it has reached this rank
+    // hold[c] = shard c's payload once it has reached this rank. The
+    // received shards ARE the result, so they are not released back to
+    // the lane pools; forwarding copies still lease their scratch.
     let mut hold: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
     hold[w] = Some(mine.to_vec());
     for s in 0..n - 1 {
         let c_send = (w + n - s) % n;
-        let payload = hold[c_send].clone().expect("allgather schedule hole");
-        port.send(port.next(), payload);
+        let src = hold[c_send].as_ref().expect("allgather schedule hole");
+        let mut payload = port.lease(port.next(), src.len());
+        payload.extend_from_slice(src);
+        port.send_vec(port.next(), payload);
         let c_recv = (w + 2 * n - s - 1) % n;
-        hold[c_recv] = Some(port.recv(port.prev()));
+        hold[c_recv] = Some(port.recv_vec(port.prev()));
     }
     hold.into_iter()
         .map(|o| o.expect("allgather incomplete"))
@@ -188,13 +211,16 @@ pub fn reduce_scatter(port: &RingPort, full: &[f32]) -> Vec<f32> {
     let mut acc = full.to_vec();
     for s in 0..n - 1 {
         let c = (w + n - s - 1) % n;
-        port.send(port.next(), acc[c * shard..(c + 1) * shard].to_vec());
+        let mut out = port.lease(port.next(), shard);
+        out.extend_from_slice(&acc[c * shard..(c + 1) * shard]);
+        port.send_vec(port.next(), out);
         let c = (w + 2 * n - s - 2) % n;
-        let msg: Vec<f32> = port.recv(port.prev());
+        let msg = port.recv_vec(port.prev());
         debug_assert_eq!(msg.len(), shard, "reduce_scatter peers disagree on length");
         for (dst, v) in acc[c * shard..(c + 1) * shard].iter_mut().zip(&msg) {
             *dst += v;
         }
+        port.release(port.prev(), msg);
     }
     acc[w * shard..(w + 1) * shard].to_vec()
 }
@@ -216,15 +242,21 @@ pub fn broadcast(port: &RingPort, buf: &mut [f32], root: usize) {
     let ch = chunk_bounds(buf.len(), n - 1);
     if j == 0 {
         for &(a, b) in &ch {
-            port.send(port.next(), buf[a..b].to_vec());
+            let mut out = port.lease(port.next(), b - a);
+            out.extend_from_slice(&buf[a..b]);
+            port.send_vec(port.next(), out);
         }
     } else {
         for &(a, b) in &ch {
-            let msg: Vec<f32> = port.recv(port.prev());
+            let msg = port.recv_vec(port.prev());
             debug_assert_eq!(msg.len(), b - a, "broadcast peers disagree on length");
             buf[a..b].copy_from_slice(&msg);
             if j < n - 1 {
-                port.send(port.next(), msg);
+                // relays forward the SAME buffer onward — zero copies,
+                // zero allocations on the pipeline's interior
+                port.send_vec(port.next(), msg);
+            } else {
+                port.release(port.prev(), msg);
             }
         }
     }
@@ -289,6 +321,21 @@ pub fn rotate_ring<T: Any + Send>(port: &RingPort, item: T, dir: RotationDir) ->
     let w = port.rank();
     port.send(dir.send_peer(w, n), item);
     port.recv(dir.recv_peer(w, n))
+}
+
+/// [`rotate_ring`] on the pooled typed path: the buffer itself travels
+/// the ring unboxed (no allocation at all — the ownership of the `Vec`
+/// moves through the lane), and this rank returns owning its upstream
+/// neighbor's buffer. The zero-steady-state-allocation rotation primitive
+/// asserted by `tests/fabric_hotpath.rs`.
+pub fn rotate_ring_vec(port: &RingPort, buf: Vec<f32>, dir: RotationDir) -> Vec<f32> {
+    let n = port.n();
+    if n <= 1 {
+        return buf;
+    }
+    let w = port.rank();
+    port.send_vec(dir.send_peer(w, n), buf);
+    port.recv_vec(dir.recv_peer(w, n))
 }
 
 #[cfg(test)]
@@ -557,6 +604,35 @@ mod tests {
                 }
                 if got != want {
                     return Err(format!("{dir:?}: {got:?} != {want:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rotate_ring_vec_matches_boxed_rotation() {
+        prop::check("pooled rotate == boxed rotate", 40, |rng| {
+            let n = 1 + rng.below(8);
+            let len = rng.below(10);
+            let mut r = Rng::new(rng.next_u64());
+            let bufs = rand_bufs(&mut r, n, len);
+            for dir in [RotationDir::Clockwise, RotationDir::CounterClockwise] {
+                for policy in [LaunchPolicy::Lockstep, LaunchPolicy::Threaded] {
+                    let fab = RingFabric::new(n);
+                    let pooled = spmd_with(&fab, policy, |port| {
+                        rotate_ring_vec(&port, bufs[port.rank()].clone(), dir)
+                    });
+                    let fab2 = RingFabric::new(n);
+                    let boxed = spmd(&fab2, |port| {
+                        rotate_ring(&port, bufs[port.rank()].clone(), dir)
+                    });
+                    for (p, b) in pooled.iter().zip(&boxed) {
+                        prop::close(p, b, 0.0)?;
+                    }
+                    if fab.in_flight() != 0 {
+                        return Err("pooled rotation left messages in flight".into());
+                    }
                 }
             }
             Ok(())

@@ -9,9 +9,13 @@
 //! This module is the schedule MATH only: which neighbor a rank talks to
 //! ([`RotationDir::send_peer`] / [`RotationDir::recv_peer`]) and which
 //! shard sits where after `t` hops ([`shard_at`]). The data movement
-//! itself is [`crate::comm::rotate_ring`] — one true neighbor
-//! send/recv per rank through the ring fabric; the old whole-array
-//! `rotate_right(1)` shortcut survives only in [`crate::comm::reference`].
+//! itself is [`crate::comm::rotate_ring`] (type-erased) or
+//! [`crate::comm::rotate_ring_vec`] (the pooled zero-allocation lane
+//! path) — one true neighbor send/recv per rank through the ring fabric —
+//! and, when the hop should overlap compute, a
+//! [`crate::comm::CommStream`] issuing the same exchange eagerly. The old
+//! whole-array `rotate_right(1)` shortcut survives only in
+//! [`crate::comm::reference`].
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RotationDir {

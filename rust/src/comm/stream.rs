@@ -1,0 +1,193 @@
+//! Per-rank comm streams: TRUE async rotation (§3.4.3).
+//!
+//! A [`CommStream`] is one rank's handle for overlapping a rotation hop
+//! with the compute that uses the shard being rotated. The paper's claim
+//! is that out-of-place RTP *starts computation and communication
+//! simultaneously*: the shard a rank computes with this step is, at the
+//! same time, already in flight to its clockwise neighbor. On this
+//! fabric that is exactly what [`CommStream::begin`] does in async mode —
+//! the outgoing payload is enqueued on the neighbor lane BEFORE the
+//! compute closure runs, so by the time every rank reaches its step
+//! boundary the incoming shard is already sitting in its lane and
+//! [`CommStream::wait`] completes without blocking on the upstream
+//! neighbor's compute. The lane queue slot is the double-buffered
+//! in-flight shard — the `max(W,G)/N` rotation buffer `RtpOutOfPlace`
+//! models (and in real mode the payload is an `Arc`, so the in-flight
+//! copy DEDUPLICATES against the live shard instead of duplicating it).
+//!
+//! Under the deterministic `Lockstep` launcher the same API degrades to
+//! the classic synchronous boundary hop: `begin` defers the send and
+//! `wait` performs send-then-recv exactly where the pre-stream engines
+//! did. Because each rank's per-link send order is identical in both
+//! modes and every lane is FIFO, the two schedules are BIT-IDENTICAL —
+//! asserted for every engine by `tests/launcher_equivalence.rs`.
+//!
+//! A rank blocked in [`CommStream::wait`] sits in the fabric's threaded
+//! `recv`, so it inherits the `RTP_FABRIC_TIMEOUT_SECS` watchdog and a
+//! stall is reported with the exact link (rank, edge, ring direction)
+//! that never delivered.
+
+use std::any::Any;
+
+use super::fabric::RingPort;
+use super::rotation::RotationDir;
+
+/// One rank's rotation stream. Cheap to construct (clones a port handle);
+/// `async_mode` decides eager-in-flight vs deferred-synchronous hops.
+#[derive(Clone)]
+pub struct CommStream {
+    port: RingPort,
+    async_mode: bool,
+}
+
+/// An issued rotation hop, waiting to be joined. Must be `wait`ed before
+/// the rotated-in payload is consumed (and before the fabric drain
+/// assertion at the step boundary).
+#[must_use = "an in-flight rotation must be waited before its shard is consumed"]
+pub struct InFlight<T: Any + Send> {
+    dir: RotationDir,
+    /// Sync mode: the payload still to send at `wait` time. Async mode:
+    /// `None` — already on the wire.
+    deferred: Option<T>,
+}
+
+impl CommStream {
+    pub fn new(port: RingPort, async_mode: bool) -> CommStream {
+        CommStream { port, async_mode }
+    }
+
+    /// Is this stream overlapping hops for real (Thread launcher) rather
+    /// than degrading to synchronous boundary hops (Lockstep)?
+    pub fn is_async(&self) -> bool {
+        self.async_mode
+    }
+
+    pub fn port(&self) -> &RingPort {
+        &self.port
+    }
+
+    /// Issue one rotation hop carrying `item` in direction `dir`.
+    ///
+    /// Async mode: `item` is enqueued to the downstream neighbor NOW and
+    /// travels while the caller computes. Sync mode (and single-rank
+    /// rings): the send is deferred to [`CommStream::wait`], reproducing
+    /// the deterministic boundary schedule.
+    pub fn begin<T: Any + Send>(&self, item: T, dir: RotationDir) -> InFlight<T> {
+        let n = self.port.n();
+        if self.async_mode && n > 1 {
+            let w = self.port.rank();
+            self.port.send(dir.send_peer(w, n), item);
+            InFlight { dir, deferred: None }
+        } else {
+            InFlight { dir, deferred: Some(item) }
+        }
+    }
+
+    /// Join an issued hop: completes the exchange and returns the payload
+    /// arriving from the upstream neighbor. On a single-rank ring this is
+    /// the identity.
+    pub fn wait<T: Any + Send>(&self, inflight: InFlight<T>) -> T {
+        let n = self.port.n();
+        let w = self.port.rank();
+        let InFlight { dir, deferred } = inflight;
+        match deferred {
+            Some(item) if n <= 1 => item,
+            Some(item) => {
+                self.port.send(dir.send_peer(w, n), item);
+                self.port.recv(dir.recv_peer(w, n))
+            }
+            None => self.port.recv(dir.recv_peer(w, n)),
+        }
+    }
+}
+
+impl std::fmt::Debug for CommStream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CommStream(rank {}/{}, {})",
+            self.port.rank(),
+            self.port.n(),
+            if self.async_mode { "async" } else { "sync" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::fabric::{LaunchPolicy, RingFabric};
+
+    /// Drive one rotation "step" per rank: begin before (fake) compute,
+    /// wait at the boundary. Returns each rank's final held value.
+    fn rotate_with_stream(policy: LaunchPolicy, async_mode: bool, n: usize, hops: usize) -> Vec<usize> {
+        let fab = RingFabric::new(n);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..n)
+            .map(|r| {
+                let stream = CommStream::new(fab.port(r), async_mode);
+                Box::new(move || {
+                    let mut held = r;
+                    for _ in 0..hops {
+                        let pending = stream.begin(held, RotationDir::Clockwise);
+                        // (compute with `held` would run here)
+                        held = stream.wait(pending);
+                    }
+                    held
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let out = fab.run_round(policy, tasks);
+        assert_eq!(fab.in_flight(), 0, "stream left messages in flight");
+        out
+    }
+
+    #[test]
+    fn sync_and_async_streams_agree() {
+        for n in [1usize, 2, 3, 4, 8] {
+            for hops in [1usize, 2, n] {
+                let sync = rotate_with_stream(LaunchPolicy::Lockstep, false, n, hops);
+                let asy = rotate_with_stream(LaunchPolicy::Threaded, true, n, hops);
+                assert_eq!(sync, asy, "n={n} hops={hops}");
+                // and matches the schedule math
+                for (w, held) in sync.iter().enumerate() {
+                    assert_eq!(
+                        *held,
+                        crate::comm::shard_at(RotationDir::Clockwise, w, hops, n),
+                        "n={n} hops={hops} w={w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn async_begin_puts_payload_in_flight_immediately() {
+        let fab = RingFabric::new(2);
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+            .map(|r| {
+                let stream = CommStream::new(fab.port(r), true);
+                let fabc = fab.clone();
+                Box::new(move || {
+                    let pending = stream.begin(r, RotationDir::Clockwise);
+                    if r == 0 {
+                        // own send is on the wire before wait() — the
+                        // overlap window the modeled timeline charges
+                        assert!(fabc.messages_sent() >= 1);
+                    }
+                    let got = stream.wait(pending);
+                    assert_eq!(got, 1 - r);
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        fab.run_round(LaunchPolicy::Threaded, tasks);
+    }
+
+    #[test]
+    fn single_rank_stream_is_identity() {
+        let fab = RingFabric::new(1);
+        let stream = CommStream::new(fab.port(0), true);
+        let p = stream.begin(41usize, RotationDir::CounterClockwise);
+        assert_eq!(stream.wait(p), 41);
+        assert_eq!(fab.messages_sent(), 0);
+    }
+}

@@ -44,6 +44,10 @@ pub fn table2() -> Vec<ModelCfg> {
 pub fn get(name: &str) -> Option<ModelCfg> {
     let runtime = match name {
         "tiny" => Some(cfg("tiny", 128, 32, 4, 2, 16, 128)),
+        // `tiny` with 8 heads (head_dim 4): every dimension divides 8, so
+        // the head-sharded engines (TP/RTP) run at N=8 in fast tests —
+        // the launcher-equivalence matrix uses it.
+        "tiny-wide" => Some(cfg("tiny-wide", 128, 32, 8, 2, 16, 128)),
         "tiny-moe" => {
             let mut m = cfg("tiny-moe", 128, 32, 4, 2, 16, 128);
             m.experts = 4;
@@ -72,6 +76,7 @@ pub fn all_names() -> Vec<String> {
     let mut v: Vec<String> = table2().into_iter().map(|m| m.name).collect();
     for n in [
         "tiny",
+        "tiny-wide",
         "tiny-moe",
         "e2e-small",
         "e2e-100m",
@@ -114,7 +119,7 @@ mod tests {
 
     #[test]
     fn tiny_dims_divide_cleanly() {
-        for name in ["tiny", "tiny-moe", "e2e-small", "e2e-100m"] {
+        for name in ["tiny", "tiny-wide", "tiny-moe", "e2e-small", "e2e-100m"] {
             let m = get(name).unwrap();
             for n in [2usize, 4] {
                 if name.starts_with("tiny") {
@@ -125,6 +130,11 @@ mod tests {
                 }
             }
             assert_eq!(m.hidden % m.heads, 0);
+        }
+        // tiny-wide exists so the head-sharded engines run at N=8
+        let w = get("tiny-wide").unwrap();
+        for d in [w.hidden, w.heads, w.ffn, w.vocab] {
+            assert_eq!(d % 8, 0, "tiny-wide must divide cleanly at N=8");
         }
     }
 

@@ -54,6 +54,12 @@ pub struct EngineOpts {
     pub rtp_recycle: bool,
     /// How the rank bodies execute (defaults to `RTP_LAUNCHER` env).
     pub launcher: Launcher,
+    /// TRUE async rotation: under the Thread launcher, out-of-place RTP
+    /// issues each rotation hop eagerly on the rank's comm stream so the
+    /// shard travels while the step computes. Disable to get the
+    /// synchronous-boundary baseline the overlap benches compare against.
+    /// No effect under Lockstep (always synchronous, for determinism).
+    pub async_rotation: bool,
 }
 
 impl EngineOpts {
@@ -71,6 +77,7 @@ impl EngineOpts {
             fsdp_granularity: Granularity::Layer,
             rtp_recycle: true,
             launcher: Launcher::from_env(),
+            async_rotation: true,
         }
     }
 
@@ -104,6 +111,10 @@ impl EngineOpts {
     }
     pub fn launcher(mut self, l: Launcher) -> Self {
         self.launcher = l;
+        self
+    }
+    pub fn async_rotation(mut self, a: bool) -> Self {
+        self.async_rotation = a;
         self
     }
 
@@ -183,6 +194,7 @@ pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
             timeline: None,
             trace_log: &trace,
             trace_on: false,
+            async_comm: false,
         };
         let rank: Box<dyn RankEngine> = match opts.strategy {
             Strategy::Single => Box::new(SingleRank::new(&mut rctx, opts.seed)?),
@@ -211,6 +223,7 @@ pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
         execs,
         ranks,
         opts.launcher,
+        opts.async_rotation,
         opts.engine_name(),
     )))
 }

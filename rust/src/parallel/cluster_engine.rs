@@ -33,6 +33,9 @@ pub struct ClusterEngine {
     extra_execs: Vec<Exec>,
     ranks: Vec<Box<dyn RankEngine>>,
     pub launcher: Launcher,
+    /// Engine-level wish for true async comm streams; effective only when
+    /// the launcher actually overlaps (`launcher.overlaps_comm()`).
+    pub async_rotation: bool,
     name: String,
 }
 
@@ -42,6 +45,7 @@ impl ClusterEngine {
         extra_execs: Vec<Exec>,
         ranks: Vec<Box<dyn RankEngine>>,
         launcher: Launcher,
+        async_rotation: bool,
         name: String,
     ) -> Self {
         assert_eq!(ranks.len(), ctx.par.workers, "one rank engine per worker");
@@ -50,7 +54,7 @@ impl ClusterEngine {
             ranks.len() - 1,
             "one executor per rank (rank 0 uses ctx.exec)"
         );
-        ClusterEngine { ctx, extra_execs, ranks, launcher, name }
+        ClusterEngine { ctx, extra_execs, ranks, launcher, async_rotation, name }
     }
 
     /// Per-rank engine access (launcher-equivalence tests).
@@ -74,6 +78,10 @@ impl Engine for ClusterEngine {
         // threads share it), then back into the cluster
         let trace = Mutex::new(std::mem::take(&mut self.ctx.cluster.trace));
         let trace_on = trace.lock().unwrap().enabled;
+        // true async comm streams only when rank bodies actually run
+        // concurrently; under Lockstep the streams degrade to the
+        // deterministic synchronous hops
+        let async_comm = self.async_rotation && self.launcher.overlaps_comm();
 
         let results: Vec<std::thread::Result<Result<f32>>> = {
             let cfg = &self.ctx.cfg;
@@ -113,6 +121,7 @@ impl Engine for ClusterEngine {
                     timeline: if rank == 0 { timeline.take() } else { None },
                     trace_log: &trace,
                     trace_on,
+                    async_comm,
                 });
             }
             let tasks: Vec<Box<dyn FnOnce() -> Result<f32> + Send + '_>> = self

@@ -19,7 +19,7 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use crate::cluster::{Cluster, TraceEvent, TraceLog};
-use crate::comm::{CommPrim, RingPort};
+use crate::comm::{CommPrim, CommStream, RingPort};
 use crate::config::{ModelCfg, ParallelCfg};
 use crate::memory::tracker::{AllocId, MemCategory, MemTracker};
 use crate::model::ops::{self, Op};
@@ -124,6 +124,11 @@ pub struct RankCtx<'a> {
     pub trace_log: &'a Mutex<TraceLog>,
     /// Cached `trace_log.enabled` (skip the lock on the hot path).
     pub trace_on: bool,
+    /// True when this rank's comm streams may overlap hops for real
+    /// (Thread launcher with async rotation enabled). Under Lockstep this
+    /// is always false, so streams degrade to the deterministic
+    /// synchronous boundary schedule.
+    pub async_comm: bool,
 }
 
 impl<'a> RankCtx<'a> {
@@ -138,6 +143,14 @@ impl<'a> RankCtx<'a> {
     /// Is this the modeled rank (timeline + once-per-collective traces)?
     pub fn lead(&self) -> bool {
         self.rank == 0
+    }
+
+    /// This rank's comm stream for an engine path that wants overlap.
+    /// `overlapped` is the ENGINE's wish (e.g. RTP out-of-place); the hop
+    /// only actually runs in the background when the launcher provides
+    /// real concurrency too (`async_comm`).
+    pub fn comm_stream(&self, overlapped: bool) -> CommStream {
+        CommStream::new(self.port.clone(), overlapped && self.async_comm)
     }
 
     /// Allocate a tracked buffer on this rank.
@@ -435,9 +448,18 @@ impl RepParams {
 
     /// Flatten to one message (for the replicated-grad allreduce).
     pub fn pack(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.numel());
-        self.visit(&mut |t| out.extend_from_slice(&t.data));
+        let mut out = Vec::new();
+        self.pack_into(&mut out);
         out
+    }
+
+    /// [`RepParams::pack`] into a caller-owned scratch buffer, so the
+    /// per-step replicated-grad allreduce reuses one allocation for the
+    /// life of the rank engine.
+    pub fn pack_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.numel());
+        self.visit(&mut |t| out.extend_from_slice(&t.data));
     }
 
     pub fn unpack(&mut self, flat: &[f32]) {
@@ -554,6 +576,7 @@ mod tests {
                 timeline: self.timeline.as_mut(),
                 trace_log: &self.trace,
                 trace_on,
+                async_comm: false,
             }
         }
     }
@@ -618,6 +641,7 @@ mod tests {
             timeline: None,
             trace_log: &h.trace,
             trace_on,
+            async_comm: false,
         };
         c.charge_comm("ar", crate::comm::CommPrim::AllReduce, 4 << 20);
         c.phase("forward");

@@ -30,6 +30,8 @@ pub struct DdpRank {
     rank: usize,
     hooks: DdpHooks,
     pending: Vec<Token>,
+    /// Reused flat-pack scratch for the per-step gradient allreduce.
+    flat_scratch: Vec<f32>,
 }
 
 struct DdpHooks {
@@ -106,6 +108,7 @@ impl DdpRank {
             rank: ctx.rank,
             hooks: DdpHooks { replica, grads, unit_bytes, pending: Vec::new() },
             pending: Vec::new(),
+            flat_scratch: Vec::new(),
         })
     }
 }
@@ -135,13 +138,24 @@ pub fn unit_grad_bytes(cfg: &crate::config::ModelCfg) -> Vec<(Unit, u64)> {
 /// (flat-pack, chunked ring allreduce through this rank's port,
 /// unpack + 1/N).
 pub fn allreduce_mean_params(port: &RingPort, grads: &mut ModelParams) {
+    allreduce_mean_params_with(port, grads, &mut Vec::new());
+}
+
+/// [`allreduce_mean_params`] with a caller-owned flat-pack scratch, so a
+/// persistent rank reuses one full-model buffer across steps instead of
+/// allocating W bytes per step.
+pub fn allreduce_mean_params_with(
+    port: &RingPort,
+    grads: &mut ModelParams,
+    buf: &mut Vec<f32>,
+) {
     let n = port.n();
     if n <= 1 {
         return;
     }
-    let mut buf = Vec::new();
+    buf.clear();
     grads.visit(&mut |_, t| buf.extend_from_slice(&t.data));
-    comm::allreduce_sum(port, &mut buf);
+    comm::allreduce_sum(port, buf);
     let scale = 1.0 / n as f32;
     let mut off = 0;
     grads.visit_mut(&mut |_, t| {
@@ -166,7 +180,11 @@ impl RankEngine for DdpRank {
         // real-mode allreduce-mean of every grad tensor across replicas,
         // through this rank's own fabric port
         if !ctx.virtual_mode() && n > 1 {
-            allreduce_mean_params(&ctx.port, self.hooks.grads.as_mut().unwrap());
+            allreduce_mean_params_with(
+                &ctx.port,
+                self.hooks.grads.as_mut().unwrap(),
+                &mut self.flat_scratch,
+            );
         }
         if let Some(tl) = ctx.timeline.as_deref_mut() {
             for tok in self.pending.drain(..) {

@@ -136,6 +136,9 @@ struct UnitState {
     /// the end-of-step reduce-scatter; the DEVICE buffer is freed at
     /// unit_end like real FSDP).
     staged_grads: Option<Vec<f32>>,
+    /// Retired staging buffer, reused next step so the backward staging
+    /// path performs zero steady-state allocations.
+    staged_scratch: Option<Vec<f32>>,
 }
 
 struct FsdpHooks {
@@ -223,7 +226,13 @@ impl DenseHooks for FsdpHooks {
             let tb = ctx.alloc(MemCategory::CommBuf, Buf::Virt(vec![elems]))?;
             self.states[sidx].staging = Some(tb);
             if !self.virt {
-                self.states[sidx].staged_grads = Some(vec![0.0; elems]);
+                // reuse last step's staging buffer (zero steady-state
+                // allocations on the backward staging path)
+                let st = &mut self.states[sidx];
+                let mut v = st.staged_scratch.take().unwrap_or_default();
+                v.clear();
+                v.resize(elems, 0.0);
+                st.staged_grads = Some(v);
             }
         }
         Ok(())
@@ -321,6 +330,7 @@ impl FsdpRank {
                         resident: None,
                         staging: None,
                         staged_grads: None,
+                        staged_scratch: None,
                     });
                 }
             }
@@ -340,6 +350,7 @@ impl FsdpRank {
                     resident: None,
                     staging: None,
                     staged_grads: None,
+                    staged_scratch: None,
                 });
             }
         }
@@ -406,6 +417,7 @@ impl FsdpRank {
                 for (a, b) in gs.data.iter_mut().zip(shard) {
                     *a += b / n as f32;
                 }
+                st.staged_scratch = Some(full);
             }
             st.staged_grads = None;
             // Model granularity: release residency + staging now

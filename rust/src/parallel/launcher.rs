@@ -16,8 +16,12 @@
 //! Both launchers produce BIT-IDENTICAL results for every engine: each
 //! directed fabric link is FIFO and each rank's program order is fixed,
 //! so the data flow — including float reduction order — is independent of
-//! scheduling. The `launcher_equivalence` integration suite asserts this
-//! for all five engines.
+//! scheduling. This holds even for RTP's TRUE async rotation (the Thread
+//! launcher eagerly enqueues each outgoing shard before the step's
+//! compute): eager vs boundary sends change message TIMING, never a
+//! link's send order, so every lane's FIFO delivers the same values. The
+//! `launcher_equivalence` integration suite asserts this for all five
+//! engines, including async-vs-sync rotation under the Thread launcher.
 //!
 //! Select globally with `RTP_LAUNCHER=thread` (CI runs the suite under
 //! both), or per engine via `EngineOpts::launcher`.
@@ -49,6 +53,16 @@ impl Launcher {
             Launcher::Lockstep => LaunchPolicy::Lockstep,
             Launcher::Thread => LaunchPolicy::Threaded,
         }
+    }
+
+    /// Does this launcher run rank bodies concurrently, so a
+    /// [`CommStream`](crate::comm::CommStream) hop issued before a
+    /// compute closure genuinely travels WHILE the compute runs? Lockstep
+    /// serializes ranks, so overlap there is modeled-only and streams
+    /// degrade to synchronous boundary hops (preserving determinism and
+    /// launcher bit-identity).
+    pub fn overlaps_comm(&self) -> bool {
+        matches!(self, Launcher::Thread)
     }
 
     /// Run one closure per rank to completion under this launcher's

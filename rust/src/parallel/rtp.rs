@@ -26,22 +26,39 @@
 //!   `recycle` (§3.4.4) the buffer's bytes are repurposed for the
 //!   logits/loss activations between its forward TTL and the backward.
 //!
+//! Out-of-place rotation is TRULY asynchronous under the Thread launcher:
+//! at the top of each partition-compute step the rank's
+//! [`CommStream`](crate::comm::CommStream) eagerly enqueues the held
+//! shard to the downstream neighbor (the weight payload is an `Arc`, so
+//! the in-flight copy deduplicates against the tensors the compute is
+//! reading — "computation and communication start simultaneously",
+//! §3.4.3), and `rotate_finish` joins the hop at the boundary, where the
+//! incoming shard is normally already waiting. Under Lockstep the same
+//! calls degrade to the synchronous boundary hop, so both launchers stay
+//! bit-identical. The traveling gradient of the backward pass is
+//! accumulated DURING the step, so it always moves at the boundary (its
+//! payload does not exist before the compute finishes) — the eager half
+//! of a backward hop is the weight shard only, exactly the `max(W,G)/N`
+//! in-flight budget the comm buffer models.
+//!
 //! Partition strategies (§3.2): Output-Partition (embedding, LM head —
 //! merge = concat), Number-of-head-Partition (attention — merge = add),
 //! Megatron-pair MLP (merge = add), Expert-Partition (MoE — rotation
 //! replaces the all-to-all).
 
 use std::any::Any;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::cluster::TraceEvent;
-use crate::comm::{self, CommPrim, RingPort, RotationDir};
+use crate::comm::{self, CommPrim, InFlight, RingPort, RotationDir};
 use crate::config::ModelCfg;
 use crate::memory::tracker::MemCategory;
 use crate::model::ops::Op;
 use crate::model::partition::{self, AttnShard, MlpShard};
 use crate::model::{ExpertParams, MlpParams, ModelParams};
+use crate::perfmodel::Token;
 use crate::runtime::{arg_of, Buf};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
@@ -68,23 +85,37 @@ impl RtpVariant {
 // this rank's slot on a rotating ring
 // ---------------------------------------------------------------------------
 
-/// The shard currently visiting THIS rank on one unit's rotation ring:
-/// `id` names the shard, `data` carries its tensors (None in virtual
-/// mode). A rotation hop pushes `(id, data)` out of this rank's port and
-/// pulls the upstream neighbor's in — ids and data ride the same
-/// message, so the schedule is identical in both modes.
+/// The weight shard currently visiting THIS rank on one unit's rotation
+/// ring: `id` names the shard, `data` carries its tensors (None in
+/// virtual mode). The payload is an `Arc` so an eagerly-issued rotation
+/// hop and the compute that still reads the shard alias ONE copy of the
+/// tensors — the in-flight message is the double buffer, with zero
+/// duplication. Between steps every slot's `Arc` is unique again (the
+/// upstream sender drops its handle when it installs its own incoming
+/// shard), so the optimizer mutates in place via [`Arc::get_mut`].
 #[derive(Debug)]
 struct RingSlot<T> {
+    id: usize,
+    data: Option<Arc<T>>,
+}
+
+impl<T: Any + Send + Sync> RingSlot<T> {
+    fn home(rank: usize, data: Option<T>) -> Self {
+        RingSlot { id: rank, data: data.map(Arc::new) }
+    }
+}
+
+/// A traveling gradient slot (backward pass): owned payload, accumulated
+/// into DURING the step's compute, moved at the boundary — never eager,
+/// because the message does not exist until the accumulation is done.
+#[derive(Debug)]
+struct GradSlot<T> {
     id: usize,
     data: Option<T>,
 }
 
-impl<T: Any + Send> RingSlot<T> {
-    fn home(rank: usize, data: Option<T>) -> Self {
-        RingSlot { id: rank, data }
-    }
-
-    /// One rotation hop through this rank's port in direction `dir`.
+impl<T: Any + Send> GradSlot<T> {
+    /// One synchronous rotation hop through this rank's port.
     fn rotate(&mut self, port: &RingPort, dir: RotationDir) {
         let n = port.n();
         if n <= 1 {
@@ -104,6 +135,21 @@ impl<T: Any + Send> RingSlot<T> {
             }
         }
     }
+}
+
+/// The wire form of one weight-shard rotation hop: bare shard id in
+/// virtual mode, `(id, Arc<shard>)` in real mode — ids and data ride the
+/// same message, so the schedule is identical in both modes.
+enum RotMsg<T: Any + Send + Sync> {
+    Virt(InFlight<usize>),
+    Real(InFlight<(usize, Arc<T>)>),
+}
+
+/// An issued (possibly in-flight) rotation hop plus its modeled-timeline
+/// token, joined by [`RtpRank::rotate_finish`] at the step boundary.
+struct PendingRot<T: Any + Send + Sync> {
+    tok: Option<Token>,
+    msg: RotMsg<T>,
 }
 
 #[derive(Debug, Clone)]
@@ -218,6 +264,9 @@ pub struct RtpRank {
     /// Out-of-place: the persistent rotation buffer.
     comm_buf: Option<TBuf>,
     bytes: ShardBytes,
+    /// Reused flattening scratch for the per-step replicated-grad
+    /// allreduce (zero steady-state allocations on that path too).
+    rep_scratch: Vec<f32>,
 }
 
 impl RtpRank {
@@ -330,66 +379,95 @@ impl RtpRank {
             g_rep,
             comm_buf,
             bytes,
+            rep_scratch: Vec::new(),
         })
     }
 
-    /// Charge one rotation boundary on the (lead rank's) timeline, emit
-    /// the trace event, and step this rank's slot(s) one hop through its
-    /// port. `fwd` chooses direction; `bytes` is the per-rank message
-    /// size (backward doubles it: weights + traveling grads).
-    fn rotate_unit<T: Any + Send>(
+    /// Issue one weight-shard rotation hop at the TOP of a partition
+    /// compute step. Out-of-place: charges the modeled eager async
+    /// rotation AND, on the rank's comm stream, puts the held shard on
+    /// the wire (a real background hop under the Thread launcher; a
+    /// deferred synchronous hop under Lockstep). In-place: everything is
+    /// deferred to [`RtpRank::rotate_finish`] (blocking boundary hop).
+    /// `fwd` chooses direction; `bytes` is the per-rank message size
+    /// (backward doubles it: weights + traveling grads).
+    fn rotate_begin<T: Any + Send + Sync>(
+        ctx: &mut RankCtx,
+        variant: RtpVariant,
+        ring: &RingSlot<T>,
+        bytes: u64,
+        fwd: bool,
+    ) -> PendingRot<T> {
+        let msg_bytes = if fwd { bytes } else { 2 * bytes };
+        let tok = if variant.overlapped() {
+            ctx.timeline
+                .as_deref_mut()
+                .map(|tl| tl.comm_async_eager("rotate", CommPrim::Rotation, msg_bytes))
+        } else {
+            None
+        };
+        let stream = ctx.comm_stream(variant.overlapped());
+        let dir = if fwd { RotationDir::Clockwise } else { RotationDir::CounterClockwise };
+        let msg = match ring.data.as_ref() {
+            None => RotMsg::Virt(stream.begin(ring.id, dir)),
+            Some(arc) => RotMsg::Real(stream.begin((ring.id, Arc::clone(arc)), dir)),
+        };
+        PendingRot { tok, msg }
+    }
+
+    /// Join a rotation hop at the step boundary: charge the blocking
+    /// (in-place) or wait on the modeled async (out-of-place) timeline
+    /// span, complete the wire exchange, install the incoming shard, and
+    /// move the traveling gradient (backward) one hop.
+    #[allow(clippy::too_many_arguments)]
+    fn rotate_finish<T: Any + Send + Sync>(
         ctx: &mut RankCtx,
         variant: RtpVariant,
         ring: &mut RingSlot<T>,
-        gring: Option<&mut RingSlot<T>>,
+        gring: Option<&mut GradSlot<T>>,
+        pending: PendingRot<T>,
         bytes: u64,
         fwd: bool,
         step: usize,
     ) {
-        let msg = if fwd { bytes } else { 2 * bytes };
+        let msg_bytes = if fwd { bytes } else { 2 * bytes };
         match variant {
             RtpVariant::InPlace => {
                 if let Some(tl) = ctx.timeline.as_deref_mut() {
-                    tl.comm_blocking("rotate", CommPrim::Rotation, msg);
+                    tl.comm_blocking("rotate", CommPrim::Rotation, msg_bytes);
                 }
             }
             RtpVariant::OutOfPlace { .. } => {
-                // overlap was charged eagerly before the step's compute
-                // (see step_local()); nothing blocking here.
+                Self::oop_wait(ctx, pending.tok);
+            }
+        }
+        let stream = ctx.comm_stream(variant.overlapped());
+        match pending.msg {
+            RotMsg::Virt(inflight) => {
+                ring.id = stream.wait(inflight);
+            }
+            RotMsg::Real(inflight) => {
+                let (id, data) = stream.wait(inflight);
+                ring.id = id;
+                // the old Arc drops here: its only live handle is now the
+                // one in flight to (or already at) the downstream rank
+                ring.data = Some(data);
             }
         }
         let dir = if fwd { RotationDir::Clockwise } else { RotationDir::CounterClockwise };
-        ring.rotate(&ctx.port, dir);
         if let Some(g) = gring {
             g.rotate(&ctx.port, dir);
         }
         if ctx.lead() {
             ctx.trace(TraceEvent::Rotate {
                 dir: if fwd { "cw" } else { "ccw" },
-                bytes_per_worker: msg,
+                bytes_per_worker: msg_bytes,
                 step,
             });
         }
     }
 
-    /// Out-of-place: charge the eager async rotation that overlaps this
-    /// step's compute; returns the token to wait on at the boundary.
-    fn oop_prefetch(
-        ctx: &mut RankCtx,
-        variant: RtpVariant,
-        bytes: u64,
-        fwd: bool,
-    ) -> Option<crate::perfmodel::Token> {
-        if !variant.overlapped() {
-            return None;
-        }
-        let msg = if fwd { bytes } else { 2 * bytes };
-        ctx.timeline
-            .as_deref_mut()
-            .map(|tl| tl.comm_async_eager("rotate", CommPrim::Rotation, msg))
-    }
-
-    fn oop_wait(ctx: &mut RankCtx, tok: Option<crate::perfmodel::Token>) {
+    fn oop_wait(ctx: &mut RankCtx, tok: Option<Token>) {
         if let (Some(tl), Some(tok)) = (ctx.timeline.as_deref_mut(), tok) {
             tl.wait(tok);
         }
@@ -431,8 +509,8 @@ impl RankEngine for RtpRank {
         // hidden locally across the N rotation steps (no activation comm!)
         let mut x = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
         for t in 0..n {
-            let tok = if t + 1 < n {
-                Self::oop_prefetch(ctx, variant, self.bytes.emb, true)
+            let pending = if t + 1 < n {
+                Some(Self::rotate_begin(ctx, variant, &self.rings.emb, self.bytes.emb, true))
             } else {
                 None
             };
@@ -456,9 +534,8 @@ impl RankEngine for RtpRank {
                 shard: sid,
                 step: t,
             });
-            if t + 1 < n {
-                Self::oop_wait(ctx, tok);
-                Self::rotate_unit(ctx, variant, &mut self.rings.emb, None, self.bytes.emb, true, t);
+            if let Some(p) = pending {
+                Self::rotate_finish(ctx, variant, &mut self.rings.emb, None, p, self.bytes.emb, true, t);
             }
         }
 
@@ -492,8 +569,14 @@ impl RankEngine for RtpRank {
             // attention: rotation loop, sum-merge
             let mut acc = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
             for t in 0..n {
-                let tok = if t + 1 < n {
-                    Self::oop_prefetch(ctx, variant, self.bytes.attn, true)
+                let pending = if t + 1 < n {
+                    Some(Self::rotate_begin(
+                        ctx,
+                        variant,
+                        &self.rings.attn[l],
+                        self.bytes.attn,
+                        true,
+                    ))
                 } else {
                     None
                 };
@@ -522,13 +605,13 @@ impl RankEngine for RtpRank {
                     shard: sid,
                     step: t,
                 });
-                if t + 1 < n {
-                    Self::oop_wait(ctx, tok);
-                    Self::rotate_unit(
+                if let Some(p) = pending {
+                    Self::rotate_finish(
                         ctx,
                         variant,
                         &mut self.rings.attn[l],
                         None,
+                        p,
                         self.bytes.attn,
                         true,
                         t,
@@ -585,14 +668,20 @@ impl RankEngine for RtpRank {
             }
             let mut acc = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
             for t in 0..n {
-                let tok = if t + 1 < n {
-                    Self::oop_prefetch(ctx, variant, self.bytes.mlp, true)
+                let pending = if t + 1 < n {
+                    Some(Self::rotate_begin(
+                        ctx,
+                        variant,
+                        &self.rings.mlp[l],
+                        self.bytes.mlp,
+                        true,
+                    ))
                 } else {
                     None
                 };
                 let sid = self.rings.mlp[l].id;
                 if !cfg.is_moe() {
-                    let sh = self.rings.mlp[l].data.as_ref().map(|s| match s {
+                    let sh = self.rings.mlp[l].data.as_ref().map(|s| match &**s {
                         MlpShardV::Dense(d) => d,
                         _ => unreachable!(),
                     });
@@ -616,7 +705,7 @@ impl RankEngine for RtpRank {
                     let per = cfg.experts / n;
                     for k in 0..per {
                         let e_global = sid * per + k;
-                        let ex = self.rings.mlp[l].data.as_ref().map(|s| match s {
+                        let ex = self.rings.mlp[l].data.as_ref().map(|s| match &**s {
                             MlpShardV::Experts(ex) => &ex[k],
                             _ => unreachable!(),
                         });
@@ -644,13 +733,13 @@ impl RankEngine for RtpRank {
                     shard: sid,
                     step: t,
                 });
-                if t + 1 < n {
-                    Self::oop_wait(ctx, tok);
-                    Self::rotate_unit(
+                if let Some(p) = pending {
+                    Self::rotate_finish(
                         ctx,
                         variant,
                         &mut self.rings.mlp[l],
                         None,
+                        p,
                         self.bytes.mlp,
                         true,
                         t,
@@ -689,8 +778,8 @@ impl RankEngine for RtpRank {
         // rotation steps
         let mut logits = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, v]))?;
         for t in 0..n {
-            let tok = if t + 1 < n {
-                Self::oop_prefetch(ctx, variant, self.bytes.lm, true)
+            let pending = if t + 1 < n {
+                Some(Self::rotate_begin(ctx, variant, &self.rings.lm, self.bytes.lm, true))
             } else {
                 None
             };
@@ -701,7 +790,7 @@ impl RankEngine for RtpRank {
                     Op::LmheadFwd,
                     b,
                     n,
-                    &[xf.buf.arg(), arg_of(sh)],
+                    &[xf.buf.arg(), arg_of(sh.map(|s| &**s))],
                     &[acts],
                 )?;
                 let part = outs.pop().unwrap();
@@ -714,9 +803,8 @@ impl RankEngine for RtpRank {
                 shard: sid,
                 step: t,
             });
-            if t + 1 < n {
-                Self::oop_wait(ctx, tok);
-                Self::rotate_unit(ctx, variant, &mut self.rings.lm, None, self.bytes.lm, true, t);
+            if let Some(p) = pending {
+                Self::rotate_finish(ctx, variant, &mut self.rings.lm, None, p, self.bytes.lm, true, t);
             }
         }
 
@@ -761,7 +849,7 @@ impl RankEngine for RtpRank {
         // LM head backward: ccw rotation with traveling grads
         let mut dxf = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
         {
-            let mut gring: RingSlot<HostTensor> = RingSlot {
+            let mut gring: GradSlot<HostTensor> = GradSlot {
                 id: self.rings.lm.id,
                 data: self
                     .rings
@@ -771,8 +859,8 @@ impl RankEngine for RtpRank {
                     .map(|t| HostTensor::zeros(&t.shape)),
             };
             for t in 0..n {
-                let tok = if t + 1 < n {
-                    Self::oop_prefetch(ctx, variant, self.bytes.lm, false)
+                let pending = if t + 1 < n {
+                    Some(Self::rotate_begin(ctx, variant, &self.rings.lm, self.bytes.lm, false))
                 } else {
                     None
                 };
@@ -784,7 +872,7 @@ impl RankEngine for RtpRank {
                         Op::LmheadBwd,
                         b,
                         n,
-                        &[xf.buf.arg(), arg_of(sh), dl_w.buf.arg()],
+                        &[xf.buf.arg(), arg_of(sh.map(|s| &**s)), dl_w.buf.arg()],
                         &[acts, MemCategory::Grads],
                     )?;
                     let dwlm = outs.pop().unwrap();
@@ -803,13 +891,13 @@ impl RankEngine for RtpRank {
                     shard: sid,
                     step: t,
                 });
-                if t + 1 < n {
-                    Self::oop_wait(ctx, tok);
-                    Self::rotate_unit(
+                if let Some(p) = pending {
+                    Self::rotate_finish(
                         ctx,
                         variant,
                         &mut self.rings.lm,
                         Some(&mut gring),
+                        p,
                         self.bytes.lm,
                         false,
                         t,
@@ -862,19 +950,25 @@ impl RankEngine for RtpRank {
             let mut dm = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
             let mut dgates: Vec<(usize, HostTensor)> = Vec::new();
             {
-                let mut gring: RingSlot<MlpShardV> = RingSlot {
+                let mut gring: GradSlot<MlpShardV> = GradSlot {
                     id: self.rings.mlp[l].id,
-                    data: self.rings.mlp[l].data.as_ref().map(zero_like_mlp),
+                    data: self.rings.mlp[l].data.as_ref().map(|s| zero_like_mlp(s)),
                 };
                 for t in 0..n {
-                    let tok = if t + 1 < n {
-                        Self::oop_prefetch(ctx, variant, self.bytes.mlp, false)
+                    let pending = if t + 1 < n {
+                        Some(Self::rotate_begin(
+                            ctx,
+                            variant,
+                            &self.rings.mlp[l],
+                            self.bytes.mlp,
+                            false,
+                        ))
                     } else {
                         None
                     };
                     let sid = self.rings.mlp[l].id;
                     if !cfg.is_moe() {
-                        let sh = self.rings.mlp[l].data.as_ref().map(|s| match s {
+                        let sh = self.rings.mlp[l].data.as_ref().map(|s| match &**s {
                             MlpShardV::Dense(d) => d,
                             _ => unreachable!(),
                         });
@@ -914,7 +1008,7 @@ impl RankEngine for RtpRank {
                         let per = cfg.experts / n;
                         for k in 0..per {
                             let e_global = sid * per + k;
-                            let ex = self.rings.mlp[l].data.as_ref().map(|s| match s {
+                            let ex = self.rings.mlp[l].data.as_ref().map(|s| match &**s {
                                 MlpShardV::Experts(ex) => &ex[k],
                                 _ => unreachable!(),
                             });
@@ -965,13 +1059,13 @@ impl RankEngine for RtpRank {
                         shard: sid,
                         step: t,
                     });
-                    if t + 1 < n {
-                        Self::oop_wait(ctx, tok);
-                        Self::rotate_unit(
+                    if let Some(p) = pending {
+                        Self::rotate_finish(
                             ctx,
                             variant,
                             &mut self.rings.mlp[l],
                             Some(&mut gring),
+                            p,
                             self.bytes.mlp,
                             false,
                             t,
@@ -1069,13 +1163,19 @@ impl RankEngine for RtpRank {
             }
             let mut da = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
             {
-                let mut gring: RingSlot<AttnShard> = RingSlot {
+                let mut gring: GradSlot<AttnShard> = GradSlot {
                     id: self.rings.attn[l].id,
-                    data: self.rings.attn[l].data.as_ref().map(zero_like_attn),
+                    data: self.rings.attn[l].data.as_ref().map(|s| zero_like_attn(s)),
                 };
                 for t in 0..n {
-                    let tok = if t + 1 < n {
-                        Self::oop_prefetch(ctx, variant, self.bytes.attn, false)
+                    let pending = if t + 1 < n {
+                        Some(Self::rotate_begin(
+                            ctx,
+                            variant,
+                            &self.rings.attn[l],
+                            self.bytes.attn,
+                            false,
+                        ))
                     } else {
                         None
                     };
@@ -1121,13 +1221,13 @@ impl RankEngine for RtpRank {
                         shard: sid,
                         step: t,
                     });
-                    if t + 1 < n {
-                        Self::oop_wait(ctx, tok);
-                        Self::rotate_unit(
+                    if let Some(p) = pending {
+                        Self::rotate_finish(
                             ctx,
                             variant,
                             &mut self.rings.attn[l],
                             Some(&mut gring),
+                            p,
                             self.bytes.attn,
                             false,
                             t,
@@ -1173,13 +1273,13 @@ impl RankEngine for RtpRank {
         // embedding backward rotation (ring is at its post-forward
         // position, counter-rotates home)
         {
-            let mut gring: RingSlot<EmbShard> = RingSlot {
+            let mut gring: GradSlot<EmbShard> = GradSlot {
                 id: self.rings.emb.id,
-                data: self.rings.emb.data.as_ref().map(zero_like_emb),
+                data: self.rings.emb.data.as_ref().map(|e| zero_like_emb(e)),
             };
             for t in 0..n {
-                let tok = if t + 1 < n {
-                    Self::oop_prefetch(ctx, variant, self.bytes.emb, false)
+                let pending = if t + 1 < n {
+                    Some(Self::rotate_begin(ctx, variant, &self.rings.emb, self.bytes.emb, false))
                 } else {
                     None
                 };
@@ -1209,13 +1309,13 @@ impl RankEngine for RtpRank {
                     shard: sid,
                     step: t,
                 });
-                if t + 1 < n {
-                    Self::oop_wait(ctx, tok);
-                    Self::rotate_unit(
+                if let Some(p) = pending {
+                    Self::rotate_finish(
                         ctx,
                         variant,
                         &mut self.rings.emb,
                         Some(&mut gring),
+                        p,
                         self.bytes.emb,
                         false,
                         t,
@@ -1240,11 +1340,14 @@ impl RankEngine for RtpRank {
             if let Some(gr) = self.g_rep.as_mut() {
                 // allreduce-MEAN: idempotent on values that earlier steps
                 // already reduced, so grads accumulate correctly across
-                // steps without zeroing.
-                let mut flat = gr.pack();
+                // steps without zeroing. The flattening scratch persists
+                // on the rank, so this path allocates nothing per step.
+                let mut flat = std::mem::take(&mut self.rep_scratch);
+                gr.pack_into(&mut flat);
                 comm::allreduce_sum(&ctx.port, &mut flat);
                 gr.unpack(&flat);
                 gr.visit_mut(&mut |t| t.scale(scale));
+                self.rep_scratch = flat;
             }
         }
         if let Some(tl) = ctx.timeline.as_deref_mut() {
@@ -1342,11 +1445,15 @@ impl RankEngine for RtpRank {
     }
 
     fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
-        // weights are home after a full step: this slot holds shard `rank`
+        // weights are home after a full step: this slot holds shard
+        // `rank`, and its Arc is unique again (no rotation in flight), so
+        // the optimizer mutates the tensors in place
         let (Some(wd), Some(gd)) = (self.rings.emb.data.as_mut(), self.grads.emb.as_ref())
         else {
             return;
         };
+        let wd = Arc::get_mut(wd)
+            .unwrap_or_else(|| panic!("emb shard aliased: rotation still in flight"));
         f(&mut wd.wte, &gd.wte);
         f(&mut wd.wpe, &gd.wpe);
         for (ring, g) in self
@@ -1355,7 +1462,8 @@ impl RankEngine for RtpRank {
             .iter_mut()
             .zip(self.grads.attn.as_ref().unwrap())
         {
-            let p = ring.data.as_mut().unwrap();
+            let p = Arc::get_mut(ring.data.as_mut().unwrap())
+                .unwrap_or_else(|| panic!("attn shard aliased: rotation still in flight"));
             f(&mut p.wqkv, &g.wqkv);
             f(&mut p.bqkv, &g.bqkv);
             f(&mut p.wo, &g.wo);
@@ -1366,7 +1474,9 @@ impl RankEngine for RtpRank {
             .iter_mut()
             .zip(self.grads.mlp.as_ref().unwrap())
         {
-            match (ring.data.as_mut().unwrap(), g) {
+            let p = Arc::get_mut(ring.data.as_mut().unwrap())
+                .unwrap_or_else(|| panic!("mlp shard aliased: rotation still in flight"));
+            match (p, g) {
                 (MlpShardV::Dense(pd), MlpShardV::Dense(gd)) => {
                     f(&mut pd.w1, &gd.w1);
                     f(&mut pd.b1, &gd.b1);
@@ -1383,7 +1493,8 @@ impl RankEngine for RtpRank {
             }
         }
         f(
-            self.rings.lm.data.as_mut().unwrap(),
+            Arc::get_mut(self.rings.lm.data.as_mut().unwrap())
+                .unwrap_or_else(|| panic!("lm shard aliased: rotation still in flight")),
             self.grads.lm.as_ref().unwrap(),
         );
         // replicated params: identical update on every rank's copy

@@ -10,6 +10,12 @@
 //! then runs ITS side of the merge collective through its own port —
 //! unlike the batch-sharded engines, ranks here are not independent
 //! between collectives.
+//!
+//! The activation allreduces ride the fabric's pooled `Vec<f32>` lanes
+//! (`comm::allreduce_sum` leases its per-hop scratch from the per-link
+//! buffer pools), so TP's layer-boundary collectives perform zero
+//! steady-state heap allocations in the fabric — the same hot-path
+//! contract `tests/fabric_hotpath.rs` asserts for RTP's rotation.
 
 use anyhow::{bail, Result};
 

@@ -186,6 +186,21 @@ impl Timeline {
         self.compute_t.max(self.comm_t)
     }
 
+    /// Modeled overlap fraction: how much of this step's comm-stream busy
+    /// time ran UNDER compute rather than extending the step (0 = fully
+    /// exposed / serialized, 1 = fully hidden). The calibration metric
+    /// the overlap benches compare against the Thread launcher's measured
+    /// wall-clock overlap.
+    pub fn overlap_fraction(&self) -> f64 {
+        if self.comm_busy <= 0.0 {
+            return 0.0;
+        }
+        // wall-clock not accounted to compute work or alloc stalls is
+        // exposed communication (waits + blocking collectives)
+        let exposed = (self.time() - self.compute_busy - self.stall_s).max(0.0);
+        ((self.comm_busy - exposed) / self.comm_busy).clamp(0.0, 1.0)
+    }
+
     /// Reset clocks (keep hardware + recording config) for the next step.
     pub fn reset(&mut self) {
         self.compute_t = 0.0;
@@ -286,6 +301,28 @@ mod tests {
         // starts after it.
         t.compute("c2", &tiny);
         assert!(t.time() > comm_end);
+    }
+
+    #[test]
+    fn overlap_fraction_tracks_hiding() {
+        let hw = a100_nvlink();
+        let big = cost([4096, 4096, 4096]);
+        let msg = 1 << 20;
+        // fully hidden comm
+        let mut a = Timeline::new(hw.clone(), 8);
+        let tok = a.comm_async_eager("r", CommPrim::Rotation, msg);
+        a.compute("c", &big);
+        a.wait(tok);
+        assert!(a.overlap_fraction() > 0.99, "{}", a.overlap_fraction());
+        // fully exposed comm
+        let mut b = Timeline::new(hw.clone(), 8);
+        b.comm_blocking("r", CommPrim::Rotation, msg);
+        b.compute("c", &big);
+        assert!(b.overlap_fraction() < 1e-9, "{}", b.overlap_fraction());
+        // no comm at all: defined as 0
+        let mut c0 = Timeline::new(hw, 8);
+        c0.compute("c", &big);
+        assert_eq!(c0.overlap_fraction(), 0.0);
     }
 
     #[test]

@@ -3,8 +3,15 @@
 //! thread per rank) must produce BIT-IDENTICAL results for every engine —
 //! each directed fabric link is FIFO and each rank's program order is
 //! fixed, so data flow (including float reduction order) never depends on
-//! scheduling. Plus fabric stress: concurrent sends in flight on every
-//! link must neither deadlock nor drop messages.
+//! scheduling. This includes RTP's TRUE async rotation: the Thread
+//! launcher puts each outgoing shard on the wire before the step's
+//! compute (eager comm streams), which shifts message TIMING but never a
+//! link's send order, so it must stay bit-identical to the Lockstep
+//! synchronous schedule — asserted here for N ∈ {2, 4, 8} (N=8 via the
+//! `tiny-wide` preset, whose 8 heads divide cleanly). Plus fabric stress:
+//! concurrent sends in flight on every link must neither deadlock nor
+//! drop messages, and a simulated OOM must abort a round cleanly even
+//! with a comm-stream rotation in flight.
 
 use rtp::comm::{LaunchPolicy, RingFabric};
 use rtp::config::Strategy;
@@ -37,12 +44,16 @@ fn run(
 
 /// Bitwise comparison via the full-precision tensor tree (ModelParams
 /// derives PartialEq over exact f32s — no tolerance).
-fn assert_bit_identical(strategy: Strategy, n: usize) {
-    let (l_loss, l_p, l_g) = run("tiny", strategy, n, Launcher::Lockstep, 2);
-    let (t_loss, t_p, t_g) = run("tiny", strategy, n, Launcher::Thread, 2);
+fn assert_bit_identical_on(preset: &str, strategy: Strategy, n: usize) {
+    let (l_loss, l_p, l_g) = run(preset, strategy, n, Launcher::Lockstep, 2);
+    let (t_loss, t_p, t_g) = run(preset, strategy, n, Launcher::Thread, 2);
     assert_eq!(l_loss, t_loss, "{strategy} N={n}: losses diverge");
     assert_eq!(l_p, t_p, "{strategy} N={n}: gathered params diverge");
     assert_eq!(l_g, t_g, "{strategy} N={n}: gathered grads diverge");
+}
+
+fn assert_bit_identical(strategy: Strategy, n: usize) {
+    assert_bit_identical_on("tiny", strategy, n);
 }
 
 #[test]
@@ -81,8 +92,76 @@ fn rtp_inplace_is_launcher_invariant() {
 
 #[test]
 fn rtp_outofplace_is_launcher_invariant() {
+    // the Thread side runs REAL background rotation (async comm streams,
+    // the default) against Lockstep's synchronous schedule
     for n in [2, 4] {
         assert_bit_identical(Strategy::RtpOutOfPlace, n);
+    }
+    // N=8 needs 8 shardable heads: tiny-wide
+    assert_bit_identical_on("tiny-wide", Strategy::RtpOutOfPlace, 8);
+}
+
+#[test]
+fn rtp_async_rotation_matches_sync_under_thread_launcher() {
+    // isolate the comm stream itself: Thread launcher with eager
+    // background hops vs Thread launcher with synchronous boundary hops
+    for (preset, n) in [("tiny", 2), ("tiny", 4), ("tiny-wide", 8)] {
+        let run_async = |async_rot: bool| {
+            let opts = EngineOpts::new(preset, Strategy::RtpOutOfPlace, n, n.max(2))
+                .exec(ExecKind::Oracle)
+                .launcher(Launcher::Thread)
+                .async_rotation(async_rot);
+            let cfg = opts.cfg().unwrap();
+            let mut e = build_engine(&opts).unwrap();
+            let mut rng = Rng::new(11);
+            let mut losses = Vec::new();
+            for _ in 0..2 {
+                let batch = Batch::synth(&cfg, n.max(2), &mut rng);
+                losses.push(e.step(&batch).unwrap());
+            }
+            (losses, e.gather_params(), e.gather_grads())
+        };
+        let (s_loss, s_p, s_g) = run_async(false);
+        let (a_loss, a_p, a_g) = run_async(true);
+        assert_eq!(s_loss, a_loss, "{preset} N={n}: async rotation changed losses");
+        assert_eq!(s_p, a_p, "{preset} N={n}: async rotation changed params");
+        assert_eq!(s_g, a_g, "{preset} N={n}: async rotation changed grads");
+    }
+}
+
+#[test]
+fn oom_abort_does_not_deadlock_inflight_comm_streams() {
+    // find the step peak, then cap just below it: some rank OOMs mid-step
+    // with an eager rotation already on the wire; the round must unwind
+    // into an orderly Err (no hang, no poisoned-fabric leak)
+    let n = 4;
+    let probe = EngineOpts::new("tiny", Strategy::RtpOutOfPlace, n, n)
+        .exec(ExecKind::Virtual)
+        .launcher(Launcher::Thread);
+    let cfg = probe.cfg().unwrap();
+    let mk_batch = || Batch {
+        ids: rtp::tensor::IntTensor::zeros(&[n, cfg.seq]),
+        targets: rtp::tensor::IntTensor::zeros(&[n, cfg.seq]),
+    };
+    let peak = {
+        let mut e = build_engine(&probe).unwrap();
+        e.step(&mk_batch()).unwrap();
+        e.ctx().cluster.max_peak()
+    };
+    for launcher in [Launcher::Thread, Launcher::Lockstep] {
+        let opts = EngineOpts::new("tiny", Strategy::RtpOutOfPlace, n, n)
+            .exec(ExecKind::Virtual)
+            .launcher(launcher)
+            .capacity(Some(peak - 1));
+        let mut e = build_engine(&opts).unwrap();
+        let err = e.step(&mk_batch()).unwrap_err().to_string();
+        assert!(err.contains("OOM"), "{launcher}: {err}");
+        // fabric drained: the aborted round flushed the in-flight shard
+        assert_eq!(
+            e.ctx().cluster.fabric().in_flight(),
+            0,
+            "{launcher}: abort left messages in flight"
+        );
     }
 }
 
