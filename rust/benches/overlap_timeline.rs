@@ -56,6 +56,7 @@ fn gantt(preset: &str, strategy: Strategy) -> (String, f64, u64, f64) {
 
 fn main() {
     let mut modeled_overlap_tiny = 0.0;
+    let mut modeled_fsdp_tiny = 0.0;
     for preset in PRESETS {
         let mut times = Vec::new();
         for (fig, strategy) in [
@@ -85,10 +86,11 @@ fn main() {
         );
         if *preset == "tiny" {
             modeled_overlap_tiny = times[2].2;
+            modeled_fsdp_tiny = times[0].2;
         }
     }
 
-    measured_overlap(modeled_overlap_tiny);
+    measured_overlap(modeled_overlap_tiny, modeled_fsdp_tiny);
 }
 
 /// MEASURED (not modeled) compute/comm overlap: real-mode (oracle) steps
@@ -100,7 +102,10 @@ fn main() {
 /// concurrently, machine-measured rather than α-β-modeled. For
 /// out-of-place RTP a third column isolates the TRUE async rotation win:
 /// Thread launcher with eager comm streams vs synchronous boundary hops.
-fn measured_overlap(modeled_overlap_tiny: f64) {
+/// For FSDP the same toggle isolates the BACKGROUND COLLECTIVE ENGINE:
+/// per-rank comm threads running the prefetch allgather + backward
+/// reduce-scatter vs execute-at-join streams.
+fn measured_overlap(modeled_overlap_tiny: f64, modeled_fsdp_tiny: f64) {
     let preset = "tiny";
     let cfg = rtp::config::presets::get(preset).unwrap();
     let n = 4;
@@ -177,4 +182,40 @@ fn measured_overlap(modeled_overlap_tiny: f64) {
     ]);
     c.print();
     c.write_csv("overlap_model_vs_measured").unwrap();
+
+    // calibration: modeled vs measured FSDP background-collective overlap
+    // (prefetch allgather + backward reduce-scatter on per-rank comm
+    // threads vs execute-at-join streams, both under the Thread launcher)
+    let fsdp_sync = step_time(Strategy::Fsdp, Launcher::Thread, false);
+    let fsdp_async = step_time(Strategy::Fsdp, Launcher::Thread, true);
+    let fsdp_measured = (1.0 - fsdp_async / fsdp_sync).max(0.0);
+    let mut f = Table::new(
+        "model-vs-measured FSDP background collectives (fsdp, tiny, N=4)",
+        &["metric", "value"],
+    );
+    f.row(vec![
+        "execute-at-join step (thread)".into(),
+        format!("{:.2} ms", fsdp_sync * 1e3),
+    ]);
+    f.row(vec![
+        "background-engine step (thread)".into(),
+        format!("{:.2} ms", fsdp_async * 1e3),
+    ]);
+    f.row(vec![
+        "measured overlap fraction".into(),
+        format!("{:.1}%", 100.0 * fsdp_measured),
+    ]);
+    f.row(vec![
+        "modeled overlap fraction".into(),
+        format!("{:.1}%", 100.0 * modeled_fsdp_tiny),
+    ]);
+    f.row(vec![
+        "measured / modeled".into(),
+        format!(
+            "{:.2}",
+            if modeled_fsdp_tiny > 0.0 { fsdp_measured / modeled_fsdp_tiny } else { 0.0 }
+        ),
+    ]);
+    f.print();
+    f.write_csv("overlap_fsdp_model_vs_measured").unwrap();
 }

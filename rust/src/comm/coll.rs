@@ -1,0 +1,384 @@
+//! Resumable per-hop state machines for the ring collectives — the form
+//! a background comm thread can drive incrementally.
+//!
+//! Each stepper holds ONLY schedule state (which hop comes next); the
+//! payload buffer is passed into every [`step`] call, so the same machine
+//! works over a borrowed slice (the blocking drivers in [`crate::comm`])
+//! or an owned `Vec<f32>` (a queued [`Collective`] on a comm thread). One
+//! `step` performs exactly one ring hop — a pooled lease/`send_vec` to
+//! the clockwise neighbor and a `recv_vec`/`release` from the
+//! counter-clockwise one — so an in-flight collective can be suspended
+//! between hops and interleaved with other work. In steady state every
+//! hop buffer comes from and returns to the lane pools: ZERO heap
+//! allocations on the fabric path (asserted by `tests/fabric_hotpath.rs`
+//! for the comm-thread allgather).
+//!
+//! The hop schedules are byte-for-byte the ones the blocking collectives
+//! in [`crate::comm`] always used (those are now thin drivers over these
+//! machines), so values are bit-identical whether a collective runs
+//! inline, at a sync-stream join, or on a background comm thread.
+//!
+//! [`step`]: AllGatherStep::step
+
+use super::fabric::RingPort;
+
+/// Split `len` elements into `n` contiguous chunks whose sizes differ by
+/// at most one (the first `len % n` chunks are one longer).
+pub(super) fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = len / n;
+    let rem = len % n;
+    let mut bounds = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let size = base + usize::from(i < rem);
+        bounds.push((start, start + size));
+        start += size;
+    }
+    bounds
+}
+
+/// This rank's side of an EQUAL-SHARD ring all-gather over a full-size
+/// buffer: `buf` is `n * shard_len` long with this rank's shard already
+/// in chunk `rank`; after `n-1` hops every chunk is filled. Received hop
+/// buffers are copied out and released back to the lane pools.
+#[derive(Debug)]
+pub struct AllGatherStep {
+    w: usize,
+    n: usize,
+    shard_len: usize,
+    hop: usize,
+}
+
+impl AllGatherStep {
+    pub fn new(port: &RingPort, shard_len: usize) -> AllGatherStep {
+        AllGatherStep { w: port.rank(), n: port.n(), shard_len, hop: 0 }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.hop + 1 >= self.n
+    }
+
+    /// One ring hop; returns true when the all-gather is complete. A call
+    /// on a completed (or single-rank) machine is a no-op returning true.
+    pub fn step(&mut self, port: &RingPort, buf: &mut [f32]) -> bool {
+        if self.is_done() {
+            return true;
+        }
+        let (n, w, s, l) = (self.n, self.w, self.hop, self.shard_len);
+        debug_assert_eq!(buf.len(), n * l, "allgather buffer arity");
+        let c_send = (w + n - s) % n;
+        let mut out = port.lease(port.next(), l);
+        out.extend_from_slice(&buf[c_send * l..(c_send + 1) * l]);
+        port.send_vec(port.next(), out);
+        let c_recv = (w + 2 * n - s - 1) % n;
+        let msg = port.recv_vec(port.prev());
+        debug_assert_eq!(msg.len(), l, "allgather peers disagree on length");
+        buf[c_recv * l..(c_recv + 1) * l].copy_from_slice(&msg);
+        port.release(port.prev(), msg);
+        self.hop += 1;
+        self.is_done()
+    }
+}
+
+/// This rank's side of a ring reduce-scatter (sum) over a full-length
+/// buffer (`len` divisible by N): after `n-1` hops chunk `rank` of `buf`
+/// holds the sum of every rank's chunk `rank`. Other chunks hold partial
+/// sums and are garbage to the caller.
+#[derive(Debug)]
+pub struct ReduceScatterStep {
+    w: usize,
+    n: usize,
+    shard_len: usize,
+    hop: usize,
+}
+
+impl ReduceScatterStep {
+    pub fn new(port: &RingPort, len: usize) -> ReduceScatterStep {
+        let n = port.n();
+        assert_eq!(len % n, 0, "reduce_scatter length {len} not divisible by {n}");
+        ReduceScatterStep { w: port.rank(), n, shard_len: len / n, hop: 0 }
+    }
+
+    /// Element range of this rank's reduced chunk inside the buffer.
+    pub fn shard_range(&self) -> std::ops::Range<usize> {
+        self.w * self.shard_len..(self.w + 1) * self.shard_len
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.hop + 1 >= self.n
+    }
+
+    /// One ring hop; returns true when the reduce-scatter is complete.
+    pub fn step(&mut self, port: &RingPort, buf: &mut [f32]) -> bool {
+        if self.is_done() {
+            return true;
+        }
+        let (n, w, s, l) = (self.n, self.w, self.hop, self.shard_len);
+        debug_assert_eq!(buf.len(), n * l, "reduce_scatter buffer arity");
+        let c = (w + n - s - 1) % n;
+        let mut out = port.lease(port.next(), l);
+        out.extend_from_slice(&buf[c * l..(c + 1) * l]);
+        port.send_vec(port.next(), out);
+        let c = (w + 2 * n - s - 2) % n;
+        let msg = port.recv_vec(port.prev());
+        debug_assert_eq!(msg.len(), l, "reduce_scatter peers disagree on length");
+        for (dst, v) in buf[c * l..(c + 1) * l].iter_mut().zip(&msg) {
+            *dst += v;
+        }
+        port.release(port.prev(), msg);
+        self.hop += 1;
+        self.is_done()
+    }
+}
+
+/// This rank's side of a ring all-reduce (sum) over a buffer of any
+/// length: a reduce-scatter pass then an all-gather pass, `2(n-1)` hops
+/// of ~`len/n` each (chunks may be uneven or empty).
+#[derive(Debug)]
+pub struct AllReduceStep {
+    w: usize,
+    n: usize,
+    bounds: Vec<(usize, usize)>,
+    hop: usize,
+}
+
+impl AllReduceStep {
+    pub fn new(port: &RingPort, len: usize) -> AllReduceStep {
+        let n = port.n();
+        AllReduceStep { w: port.rank(), n, bounds: chunk_bounds(len, n), hop: 0 }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.hop + 2 >= 2 * self.n
+    }
+
+    /// One ring hop; returns true when the all-reduce is complete.
+    pub fn step(&mut self, port: &RingPort, buf: &mut [f32]) -> bool {
+        if self.is_done() {
+            return true;
+        }
+        let (n, w, ch) = (self.n, self.w, &self.bounds);
+        if self.hop < n - 1 {
+            // reduce-scatter pass: after hop s, chunk (w - s - 1) mod n on
+            // this rank has accumulated s + 2 contributions
+            let s = self.hop;
+            let (a, b) = ch[(w + n - s - 1) % n];
+            let mut out = port.lease(port.next(), b - a);
+            out.extend_from_slice(&buf[a..b]);
+            port.send_vec(port.next(), out);
+            let (a, b) = ch[(w + 2 * n - s - 2) % n];
+            let msg = port.recv_vec(port.prev());
+            debug_assert_eq!(msg.len(), b - a, "allreduce peers disagree on length");
+            for (dst, v) in buf[a..b].iter_mut().zip(&msg) {
+                *dst += v;
+            }
+            port.release(port.prev(), msg);
+        } else {
+            // all-gather pass: complete chunks circulate until every rank
+            // has all of them
+            let s = self.hop - (n - 1);
+            let (a, b) = ch[(w + n - s) % n];
+            let mut out = port.lease(port.next(), b - a);
+            out.extend_from_slice(&buf[a..b]);
+            port.send_vec(port.next(), out);
+            let (a, b) = ch[(w + 2 * n - s - 1) % n];
+            let msg = port.recv_vec(port.prev());
+            debug_assert_eq!(msg.len(), b - a, "allreduce peers disagree on length");
+            buf[a..b].copy_from_slice(&msg);
+            port.release(port.prev(), msg);
+        }
+        self.hop += 1;
+        self.is_done()
+    }
+}
+
+enum StepKind {
+    AllGather(AllGatherStep),
+    ReduceScatter(ReduceScatterStep),
+    AllReduce(AllReduceStep),
+}
+
+/// One QUEUED collective: a stepper plus the owned payload buffer it
+/// operates on — the unit of work a background comm thread executes. The
+/// buffer is caller-provided and returned at completion, so a persistent
+/// rank engine cycles one buffer per collective site across steps (zero
+/// steady-state allocations end to end).
+pub struct Collective {
+    kind: StepKind,
+    buf: Vec<f32>,
+}
+
+impl Collective {
+    /// An all-gather of `shard` into a reconstructed full buffer. `buf` is
+    /// recycled storage (its capacity is reused; contents are replaced);
+    /// the completed collective's buffer is the `n * shard.len()`
+    /// concatenation in rank order.
+    pub fn allgather(port: &RingPort, shard: &[f32], mut buf: Vec<f32>) -> Collective {
+        let (n, w, l) = (port.n(), port.rank(), shard.len());
+        buf.clear();
+        buf.resize(n * l, 0.0);
+        buf[w * l..(w + 1) * l].copy_from_slice(shard);
+        Collective { kind: StepKind::AllGather(AllGatherStep::new(port, l)), buf }
+    }
+
+    /// A reduce-scatter of this rank's full-length buffer `full` (length
+    /// divisible by N). The completed collective's buffer holds the
+    /// reduced chunk at `shard_range`; other chunks are partial-sum
+    /// garbage.
+    pub fn reduce_scatter(port: &RingPort, full: Vec<f32>) -> Collective {
+        Collective {
+            kind: StepKind::ReduceScatter(ReduceScatterStep::new(port, full.len())),
+            buf: full,
+        }
+    }
+
+    /// An all-reduce (sum) of this rank's buffer against every peer's.
+    pub fn allreduce(port: &RingPort, buf: Vec<f32>) -> Collective {
+        Collective { kind: StepKind::AllReduce(AllReduceStep::new(port, buf.len())), buf }
+    }
+
+    /// One ring hop; returns true when the collective is complete.
+    pub fn step(&mut self, port: &RingPort) -> bool {
+        match &mut self.kind {
+            StepKind::AllGather(s) => s.step(port, &mut self.buf),
+            StepKind::ReduceScatter(s) => s.step(port, &mut self.buf),
+            StepKind::AllReduce(s) => s.step(port, &mut self.buf),
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        match &self.kind {
+            StepKind::AllGather(s) => s.is_done(),
+            StepKind::ReduceScatter(s) => s.is_done(),
+            StepKind::AllReduce(s) => s.is_done(),
+        }
+    }
+
+    /// Take the completed payload buffer.
+    pub fn into_buf(self) -> Vec<f32> {
+        debug_assert!(self.is_done(), "collective consumed before completion");
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{reference, spmd, RingFabric};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn allgather_step_matches_reference() {
+        prop::check("ag stepper == ref", 40, |rng| {
+            let n = 1 + rng.below(8);
+            let l = rng.below(6);
+            let mut r = Rng::new(rng.next_u64());
+            let shards: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..l).map(|_| r.normal() as f32).collect())
+                .collect();
+            let want = reference::allgather(&shards);
+            let fab = RingFabric::new(n);
+            let got = spmd(&fab, |port| {
+                let mut c =
+                    Collective::allgather(&port, &shards[port.rank()], Vec::new());
+                while !c.step(&port) {}
+                c.into_buf()
+            });
+            for g in &got {
+                prop::close(g, &want, 0.0)?;
+            }
+            if fab.in_flight() != 0 {
+                return Err("fabric not drained".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reduce_scatter_step_matches_reference() {
+        prop::check("rs stepper == ref", 40, |rng| {
+            let n = 1 + rng.below(8);
+            let len = n * rng.below(6);
+            let mut r = Rng::new(rng.next_u64());
+            let fulls: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| r.normal() as f32).collect())
+                .collect();
+            let want = reference::reduce_scatter(&fulls);
+            let fab = RingFabric::new(n);
+            let got = spmd(&fab, |port| {
+                let mut c =
+                    Collective::reduce_scatter(&port, fulls[port.rank()].clone());
+                let range = port.rank() * len / n..(port.rank() + 1) * len / n;
+                while !c.step(&port) {}
+                c.into_buf()[range].to_vec()
+            });
+            for (g, w) in got.iter().zip(&want) {
+                prop::close(g, w, 1e-4)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allreduce_step_matches_reference() {
+        prop::check("ar stepper == ref", 40, |rng| {
+            let n = 1 + rng.below(8);
+            let len = rng.below(20); // any length, incl. 0 and < n
+            let mut r = Rng::new(rng.next_u64());
+            let bufs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| r.normal() as f32).collect())
+                .collect();
+            let mut want = bufs.clone();
+            reference::allreduce_sum(&mut want);
+            let fab = RingFabric::new(n);
+            let got = spmd(&fab, |port| {
+                let mut c = Collective::allreduce(&port, bufs[port.rank()].clone());
+                while !c.step(&port) {}
+                c.into_buf()
+            });
+            for (g, w) in got.iter().zip(&want) {
+                prop::close(g, w, 1e-4)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn steppers_are_resumable_between_hops() {
+        // driving hop-by-hop with other traffic interleaved between hops
+        // yields the same result as driving to completion
+        let n = 4;
+        let fab = RingFabric::new(n);
+        let got = spmd(&fab, |port| {
+            let mut c = Collective::allreduce(&port, vec![port.rank() as f32; 8]);
+            let mut hops = 0;
+            while !c.step(&port) {
+                hops += 1;
+                // unrelated traffic on the same (main) lanes between hops
+                port.send(port.next(), hops);
+                let _: usize = port.recv(port.prev());
+            }
+            c.into_buf()
+        });
+        let want = vec![(0..n).map(|r| r as f32).sum::<f32>(); 8];
+        for g in &got {
+            assert_eq!(g, &want);
+        }
+        assert_eq!(fab.in_flight(), 0);
+    }
+
+    #[test]
+    fn single_rank_collectives_complete_without_hops() {
+        let fab = RingFabric::new(1);
+        let port = fab.port(0);
+        let mut c = Collective::allgather(&port, &[1.0, 2.0], Vec::new());
+        assert!(c.is_done());
+        assert!(c.step(&port));
+        assert_eq!(c.into_buf(), vec![1.0, 2.0]);
+        let mut c = Collective::allreduce(&port, vec![3.0]);
+        assert!(c.step(&port));
+        assert_eq!(c.into_buf(), vec![3.0]);
+        assert_eq!(fab.messages_sent(), 0);
+    }
+}

@@ -52,6 +52,16 @@
 //!   lane queue slot is the in-flight double buffer of the out-of-place
 //!   rotation ([`crate::comm::CommStream`] keeps at most one eager shard
 //!   per link in flight).
+//! - Every directed link exists TWICE: once in the MAIN lane namespace
+//!   (rank-body traffic: rotation hops, blocking collectives) and once in
+//!   the BACKGROUND lane namespace ([`RingPort::background`]), which the
+//!   per-rank comm threads of [`crate::comm::CollectiveStream`] drive.
+//!   The two namespaces never share a FIFO, so a background multi-hop
+//!   collective can be in flight on a link while the main thread rotates
+//!   a shard over the same edge — each class keeps its own deterministic
+//!   per-link order, which is what keeps the Lockstep and Thread
+//!   launchers bit-identical even with collectives running concurrently
+//!   with rotation.
 //!
 //! Execution model: rank bodies run as one closure per rank inside a
 //! *round* ([`RingFabric::run_round`]), under one of two policies:
@@ -97,6 +107,14 @@ const POOL_CAP: usize = 8;
 /// path; this is the lost-wakeup backstop, not the wakeup mechanism).
 const PARK_SLICE: Duration = Duration::from_millis(25);
 
+/// Lane namespace of the rank bodies: rotation hops + blocking collectives.
+const CH_MAIN: usize = 0;
+/// Lane namespace of the background comm threads
+/// ([`crate::comm::CollectiveStream`]): queued multi-hop collectives.
+const CH_BG: usize = 1;
+/// How many independent lane namespaces each directed link carries.
+const CHANNELS: usize = 2;
+
 /// How a round's rank bodies are scheduled. See the module docs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LaunchPolicy {
@@ -112,8 +130,9 @@ pub enum LaunchPolicy {
 enum RankState {
     /// May be scheduled.
     Ready,
-    /// Parked in `recv`, waiting for a message from `peer`.
-    Waiting(usize),
+    /// Parked in `recv`, waiting for a message from `peer` on lane
+    /// namespace `ch`.
+    Waiting { peer: usize, ch: usize },
     /// Rank body returned (or panicked).
     Done,
 }
@@ -187,6 +206,17 @@ pub struct FabricCounters {
     /// Condvar notifications issued (targeted `notify_one` wakeups plus
     /// round-teardown / poison broadcasts).
     pub wakeups: u64,
+    /// Collectives issued to the background engine
+    /// ([`crate::comm::CollectiveStream`]), both modes.
+    pub bg_collectives: u64,
+    /// Nanoseconds the background engine spent EXECUTING collective hops
+    /// (on the comm thread in background mode; inline at join in sync
+    /// mode).
+    pub bg_busy_ns: u64,
+    /// Nanoseconds rank bodies spent BLOCKED in
+    /// `CollectiveStream::join`. `1 - bg_wait_ns / bg_busy_ns` is the
+    /// measured fraction of collective time hidden behind compute.
+    pub bg_wait_ns: u64,
 }
 
 #[derive(Default)]
@@ -195,6 +225,9 @@ struct CounterCells {
     pool_hits: AtomicU64,
     lock_acquisitions: AtomicU64,
     wakeups: AtomicU64,
+    bg_collectives: AtomicU64,
+    bg_busy_ns: AtomicU64,
+    bg_wait_ns: AtomicU64,
 }
 
 /// Global (non-hot-path) round state: the lockstep scheduler and the
@@ -212,7 +245,8 @@ const MODE_THREADED: u8 = 2;
 
 struct FabricShared {
     n: usize,
-    /// `lanes[dst * n + src]` — only the neighbor links are ever used.
+    /// `lanes[(ch * n + dst) * n + src]` — one lane per directed link per
+    /// channel; only the neighbor links are ever used.
     lanes: Vec<Lane>,
     ctl: Mutex<Ctl>,
     /// Lockstep ranks park here waiting for the turn.
@@ -231,8 +265,8 @@ struct FabricShared {
 }
 
 impl FabricShared {
-    fn lane(&self, dst: usize, src: usize) -> &Lane {
-        &self.lanes[dst * self.n + src]
+    fn lane(&self, ch: usize, dst: usize, src: usize) -> &Lane {
+        &self.lanes[(ch * self.n + dst) * self.n + src]
     }
 
     fn lock_ctl(&self) -> MutexGuard<'_, Ctl> {
@@ -279,8 +313,8 @@ impl FabricShared {
                     ctl.sched.as_mut().unwrap().turn = r;
                     return false;
                 }
-                RankState::Waiting(peer) => {
-                    if self.lane(r, peer).pending.load(Ordering::SeqCst) > 0 {
+                RankState::Waiting { peer, ch } => {
+                    if self.lane(ch, r, peer).pending.load(Ordering::SeqCst) > 0 {
                         let s = ctl.sched.as_mut().unwrap();
                         s.state[r] = RankState::Ready;
                         s.turn = r;
@@ -319,7 +353,7 @@ impl RingFabric {
         RingFabric {
             shared: Arc::new(FabricShared {
                 n,
-                lanes: (0..n * n).map(|_| Lane::new()).collect(),
+                lanes: (0..CHANNELS * n * n).map(|_| Lane::new()).collect(),
                 ctl: Mutex::new(Ctl { sched: None, poison_msg: String::new() }),
                 ctl_cv: Condvar::new(),
                 mode: AtomicU8::new(MODE_NONE),
@@ -337,12 +371,19 @@ impl RingFabric {
         self.shared.n
     }
 
-    /// Rank `rank`'s endpoint. Ports are cheap handle clones; a rank may
-    /// hold any number of clones of its own port.
+    /// Rank `rank`'s endpoint on the MAIN lane namespace. Ports are cheap
+    /// handle clones; a rank may hold any number of clones of its own
+    /// port.
     pub fn port(&self, rank: usize) -> RingPort {
         let n = self.n();
         assert!(rank < n, "rank {rank} out of range for {n}-rank fabric");
-        RingPort { rank, n, shared: Arc::clone(&self.shared) }
+        RingPort { rank, n, ch: CH_MAIN, shared: Arc::clone(&self.shared) }
+    }
+
+    /// Rank `rank`'s endpoint on the BACKGROUND lane namespace — what a
+    /// per-rank comm thread drives. Same edges, independent FIFOs.
+    pub fn bg_port(&self, rank: usize) -> RingPort {
+        self.port(rank).background()
     }
 
     /// One port per rank, in rank order (handed out at cluster
@@ -383,6 +424,9 @@ impl RingFabric {
             pool_hits: s.counters.pool_hits.load(Ordering::SeqCst),
             lock_acquisitions: s.counters.lock_acquisitions.load(Ordering::SeqCst),
             wakeups: s.counters.wakeups.load(Ordering::SeqCst),
+            bg_collectives: s.counters.bg_collectives.load(Ordering::SeqCst),
+            bg_busy_ns: s.counters.bg_busy_ns.load(Ordering::SeqCst),
+            bg_wait_ns: s.counters.bg_wait_ns.load(Ordering::SeqCst),
         }
     }
 
@@ -394,6 +438,9 @@ impl RingFabric {
         c.pool_hits.store(0, Ordering::SeqCst);
         c.lock_acquisitions.store(0, Ordering::SeqCst);
         c.wakeups.store(0, Ordering::SeqCst);
+        c.bg_collectives.store(0, Ordering::SeqCst);
+        c.bg_busy_ns.store(0, Ordering::SeqCst);
+        c.bg_wait_ns.store(0, Ordering::SeqCst);
     }
 
     /// Override the threaded-recv watchdog for subsequent rounds on this
@@ -577,7 +624,10 @@ fn wait_graph(ctl: &Ctl) -> String {
             .iter()
             .enumerate()
             .filter_map(|(r, st)| match st {
-                RankState::Waiting(p) => Some(format!("r{r}<-r{p}")),
+                RankState::Waiting { peer, ch } => Some(format!(
+                    "r{r}<-r{peer}{}",
+                    if *ch == CH_BG { "(bg)" } else { "" }
+                )),
                 _ => None,
             })
             .collect::<Vec<_>>()
@@ -620,11 +670,15 @@ impl fmt::Debug for RingFabric {
 /// goes through `send`/`recv` (and the pooled `send_vec`/`recv_vec`) on
 /// these; each rank drives only its own port. Ports are `Send` — the
 /// `Threaded` launch policy runs one rank per OS thread over the same
-/// fabric.
+/// fabric. A port is bound to ONE lane namespace: the main one
+/// ([`RingFabric::port`]) or the background one ([`RingPort::background`],
+/// driven by the per-rank comm threads).
 #[derive(Clone)]
 pub struct RingPort {
     rank: usize,
     n: usize,
+    /// Lane namespace this port sends and receives on (CH_MAIN / CH_BG).
+    ch: usize,
     shared: Arc<FabricShared>,
 }
 
@@ -635,6 +689,55 @@ impl RingPort {
 
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// This rank's endpoint on the BACKGROUND lane namespace: the same
+    /// ring edges, but an independent set of FIFO lanes that never
+    /// interleaves with main-thread traffic. Idempotent.
+    pub fn background(&self) -> RingPort {
+        RingPort {
+            rank: self.rank,
+            n: self.n,
+            ch: CH_BG,
+            shared: Arc::clone(&self.shared),
+        }
+    }
+
+    /// Is this port bound to the background lane namespace?
+    pub fn is_background(&self) -> bool {
+        self.ch == CH_BG
+    }
+
+    /// Background-engine accounting: one collective issued.
+    pub(crate) fn note_bg_collective(&self) {
+        self.shared.counters.bg_collectives.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Background-engine accounting: time spent executing collective hops.
+    pub(crate) fn note_bg_busy(&self, d: Duration) {
+        self.shared
+            .counters
+            .bg_busy_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Background-engine accounting: time a rank body spent blocked in a
+    /// collective join.
+    pub(crate) fn note_bg_wait(&self, d: Duration) {
+        self.shared
+            .counters
+            .bg_wait_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// The active poison reason, or `fallback` when none was recorded
+    /// (diagnostics for a dead background comm thread).
+    pub(crate) fn poison_reason_or(&self, fallback: &str) -> String {
+        if self.shared.poisoned.load(Ordering::SeqCst) {
+            self.shared.poison_reason()
+        } else {
+            fallback.to_string()
+        }
     }
 
     /// Clockwise neighbor (the rank this port sends to in a cw rotation).
@@ -688,7 +791,7 @@ impl RingPort {
         self.assert_neighbor(peer);
         self.check_poison();
         let sh = &self.shared;
-        let lane = sh.lane(peer, self.rank);
+        let lane = sh.lane(self.ch, peer, self.rank);
         let mut b = lane.lock(&sh.counters);
         b.q.push_back(msg);
         lane.pending.fetch_add(1, Ordering::SeqCst);
@@ -706,7 +809,7 @@ impl RingPort {
     fn recv_msg(&self, peer: usize) -> Msg {
         self.assert_neighbor(peer);
         let sh = &self.shared;
-        let lane = sh.lane(self.rank, peer);
+        let lane = sh.lane(self.ch, self.rank, peer);
         let mut deadline: Option<Instant> = None;
         loop {
             self.check_poison();
@@ -774,7 +877,7 @@ impl RingPort {
     pub fn lease(&self, peer: usize, len: usize) -> Vec<f32> {
         self.assert_neighbor(peer);
         let sh = &self.shared;
-        let lane = sh.lane(peer, self.rank);
+        let lane = sh.lane(self.ch, peer, self.rank);
         let got = {
             let mut b = lane.lock(&sh.counters);
             b.pool.pop()
@@ -826,7 +929,7 @@ impl RingPort {
     pub fn release(&self, peer: usize, mut v: Vec<f32>) {
         self.assert_neighbor(peer);
         let sh = &self.shared;
-        let lane = sh.lane(self.rank, peer);
+        let lane = sh.lane(self.ch, self.rank, peer);
         let mut b = lane.lock(&sh.counters);
         if b.pool.len() < POOL_CAP {
             v.clear();
@@ -847,13 +950,13 @@ impl RingPort {
         // a message may have landed between the lane check and taking the
         // ctl lock (it cannot under pure lockstep, but abort paths may
         // interleave) — just retry the pop
-        if sh.lane(self.rank, peer).pending.load(Ordering::SeqCst) > 0 {
+        if sh.lane(self.ch, self.rank, peer).pending.load(Ordering::SeqCst) > 0 {
             return;
         }
         {
             let s = ctl.sched.as_mut().expect("lockstep round active");
             debug_assert_eq!(s.turn, self.rank, "only the turn holder may run");
-            s.state[self.rank] = RankState::Waiting(peer);
+            s.state[self.rank] = RankState::Waiting { peer, ch: self.ch };
         }
         if sh.advance_turn(&mut ctl) {
             let diag = wait_graph(&ctl);
@@ -920,10 +1023,11 @@ impl RingPort {
             }
             let msg = format!(
                 "rank {} recv from {peer}: no message after {timeout:?} on link \
-                 r{peer}->r{} ({} ring direction) — stalled link \
+                 r{peer}->r{}{} ({} ring direction) — stalled link \
                  (threaded round watchdog)",
                 self.rank,
                 self.rank,
+                if self.ch == CH_BG { " [bg lane]" } else { "" },
                 self.link_direction(peer)
             );
             sh.poison(&msg);
@@ -931,16 +1035,26 @@ impl RingPort {
         }
     }
 
-    /// Messages waiting in this rank's mailbox from neighbor `peer`.
+    /// Messages waiting in this rank's mailbox from neighbor `peer` (this
+    /// port's lane namespace only).
     pub fn pending_from(&self, peer: usize) -> usize {
         self.assert_neighbor(peer);
-        self.shared.lane(self.rank, peer).pending.load(Ordering::SeqCst)
+        self.shared
+            .lane(self.ch, self.rank, peer)
+            .pending
+            .load(Ordering::SeqCst)
     }
 }
 
 impl fmt::Debug for RingPort {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "RingPort(rank {}/{})", self.rank, self.n)
+        write!(
+            f,
+            "RingPort(rank {}/{}{})",
+            self.rank,
+            self.n,
+            if self.ch == CH_BG { ", bg" } else { "" }
+        )
     }
 }
 
@@ -1021,6 +1135,51 @@ mod tests {
         // and vice versa: boxed Vec<f32> picked up by recv_vec
         ports[0].send(1, vec![6.0f32]);
         assert_eq!(ports[1].recv_vec(0), vec![6.0]);
+    }
+
+    #[test]
+    fn background_lanes_are_independent_of_main_lanes() {
+        // the same directed edge carries two independent FIFOs: main
+        // traffic and background (comm-thread) traffic never interleave
+        let fab = RingFabric::new(2);
+        let main0 = fab.port(0);
+        let bg0 = fab.bg_port(0);
+        let main1 = fab.port(1);
+        let bg1 = main1.background();
+        assert!(bg0.is_background() && !main0.is_background());
+        main0.send(1, 1usize);
+        bg0.send(1, 2usize);
+        main0.send(1, 3usize);
+        // bg receiver sees ONLY the bg message, regardless of send order
+        assert_eq!(bg1.pending_from(0), 1);
+        assert_eq!(main1.pending_from(0), 2);
+        assert_eq!(bg1.recv::<usize>(0), 2);
+        assert_eq!(main1.recv::<usize>(0), 1);
+        assert_eq!(main1.recv::<usize>(0), 3);
+        assert_eq!(fab.in_flight(), 0);
+    }
+
+    #[test]
+    fn background_pools_are_separate() {
+        // pooled buffers released on a bg lane do not feed the main lane
+        let fab = RingFabric::new(2);
+        let bg0 = fab.bg_port(0);
+        let bg1 = fab.bg_port(1);
+        let mut v = bg0.lease(1, 2);
+        v.extend_from_slice(&[1.0, 2.0]);
+        bg0.send_vec(1, v);
+        let got = bg1.recv_vec(0);
+        assert_eq!(got, vec![1.0, 2.0]);
+        bg1.release(0, got);
+        // steady state on the bg lane: lease hits the bg pool
+        let c0 = fab.counters();
+        let mut v = bg0.lease(1, 2);
+        v.extend_from_slice(&[3.0, 4.0]);
+        bg0.send_vec(1, v);
+        bg1.release(0, bg1.recv_vec(0));
+        let c1 = fab.counters();
+        assert_eq!(c1.msg_allocs, c0.msg_allocs, "bg pool missed");
+        assert_eq!(c1.pool_hits - c0.pool_hits, 1);
     }
 
     #[test]

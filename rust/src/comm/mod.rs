@@ -18,7 +18,17 @@
 //!   under the Thread launcher the outgoing shard is enqueued before the
 //!   step's compute runs (in flight while computing, §3.4.3); under
 //!   Lockstep the same API degrades to the synchronous boundary hop, so
-//!   both launchers stay bit-identical.
+//!   both launchers stay bit-identical. Also `CollectiveStream`: the
+//!   BACKGROUND COLLECTIVE ENGINE — each rank queues multi-hop
+//!   collectives (`issue_allgather` / `issue_reduce_scatter` /
+//!   `issue_allreduce`) that a dedicated per-rank comm thread executes
+//!   over the fabric's background lane namespace while the rank body
+//!   computes (FSDP's prefetch allgather and backward reduce-scatter,
+//!   DDP/RTP's gradient allreduce), degrading to deterministic
+//!   execute-at-join under Lockstep.
+//! - [`coll`] — the resumable per-hop state machines
+//!   (`AllGatherStep`/`ReduceScatterStep`/`AllReduceStep`) both the
+//!   blocking collectives below and the comm threads drive.
 //! - this module — the collectives, written RANK-LOCALLY: each function
 //!   takes ONE port (this rank's) and this rank's buffer, and performs
 //!   this rank's side of the hop schedule. All-reduce is reduce-scatter +
@@ -48,6 +58,7 @@
 //! rank issues its port operations in a fixed program order, results are
 //! bit-identical under the lockstep and threaded launch policies.
 
+pub mod coll;
 pub mod cost;
 pub mod fabric;
 pub mod reference;
@@ -57,26 +68,13 @@ pub mod stream;
 use std::any::Any;
 use std::collections::VecDeque;
 
+pub use coll::{AllGatherStep, AllReduceStep, Collective, ReduceScatterStep};
 pub use cost::{CommPrim, LinkModel};
 pub use fabric::{FabricCounters, LaunchPolicy, RingFabric, RingPort};
 pub use rotation::{shard_at, RotationDir};
-pub use stream::{CommStream, InFlight};
+pub use stream::{CollHandle, CollectiveStream, CommStream, InFlight};
 
-/// Split `len` elements into `n` contiguous chunks whose sizes differ by
-/// at most one (the first `len % n` chunks are one longer). Returns
-/// `(start, end)` bounds; chunks may be empty when `len < n`.
-fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
-    let base = len / n;
-    let rem = len % n;
-    let mut bounds = Vec::with_capacity(n);
-    let mut start = 0;
-    for i in 0..n {
-        let size = base + usize::from(i < rem);
-        bounds.push((start, start + size));
-        start += size;
-    }
-    bounds
-}
+use coll::chunk_bounds;
 
 /// Drive one rank-local closure per rank through `fabric` on the
 /// deterministic lockstep scheduler and return the per-rank results —
@@ -115,43 +113,15 @@ where
 /// Works for any buffer length (chunks may be uneven or empty); all
 /// ranks must pass same-length buffers.
 pub fn allreduce_sum(port: &RingPort, buf: &mut [f32]) {
-    let n = port.n();
-    if n <= 1 {
+    if port.n() <= 1 {
         return;
     }
-    let w = port.rank();
-    let ch = chunk_bounds(buf.len(), n);
-
-    // reduce-scatter pass: after hop s, chunk (w - s - 1) mod n on this
-    // rank has accumulated s + 2 contributions; after n-1 hops rank w
-    // owns the complete chunk w. Per-hop scratch is leased from the
-    // outgoing lane's pool and released to the incoming lane's — in
-    // steady state the same buffers cycle the ring, zero allocations.
-    for s in 0..n - 1 {
-        let (a, b) = ch[(w + n - s - 1) % n];
-        let mut out = port.lease(port.next(), b - a);
-        out.extend_from_slice(&buf[a..b]);
-        port.send_vec(port.next(), out);
-        let (a, b) = ch[(w + 2 * n - s - 2) % n];
-        let msg = port.recv_vec(port.prev());
-        debug_assert_eq!(msg.len(), b - a, "allreduce peers disagree on length");
-        for (dst, v) in buf[a..b].iter_mut().zip(&msg) {
-            *dst += v;
-        }
-        port.release(port.prev(), msg);
-    }
-    // all-gather pass: complete chunks circulate until every rank has all.
-    for s in 0..n - 1 {
-        let (a, b) = ch[(w + n - s) % n];
-        let mut out = port.lease(port.next(), b - a);
-        out.extend_from_slice(&buf[a..b]);
-        port.send_vec(port.next(), out);
-        let (a, b) = ch[(w + 2 * n - s - 1) % n];
-        let msg = port.recv_vec(port.prev());
-        debug_assert_eq!(msg.len(), b - a, "allreduce peers disagree on length");
-        buf[a..b].copy_from_slice(&msg);
-        port.release(port.prev(), msg);
-    }
+    // drive the resumable hop machine to completion (per-hop scratch is
+    // leased from the outgoing lane's pool and released to the incoming
+    // lane's — in steady state the same buffers cycle the ring, zero
+    // allocations)
+    let mut st = AllReduceStep::new(port, buf.len());
+    while !st.step(port, buf) {}
 }
 
 /// This rank's side of a ring all-gather in `N-1` hops, returning its
@@ -195,34 +165,35 @@ pub fn allgather(port: &RingPort, mine: &[f32]) -> Vec<f32> {
     full
 }
 
+/// [`allgather`] for EQUAL-LENGTH shards, writing the concatenation into
+/// a caller-owned buffer (capacity reused across calls) and recycling
+/// every received hop buffer back to the lane pools — the
+/// zero-steady-state-allocation path the background collective engine
+/// drives ([`Collective::allgather`] is the queued form of the same hop
+/// machine).
+pub fn allgather_into(port: &RingPort, mine: &[f32], out: &mut Vec<f32>) {
+    let (n, w, l) = (port.n(), port.rank(), mine.len());
+    out.clear();
+    out.resize(n * l, 0.0);
+    out[w * l..(w + 1) * l].copy_from_slice(mine);
+    let mut st = AllGatherStep::new(port, l);
+    while !st.step(port, out) {}
+}
+
 /// This rank's side of a ring reduce-scatter (sum) in `N-1` hops: input
 /// is this rank's full-length buffer; rank `w` ends with the sum of
 /// everyone's shard `w`. FSDP's gradient reduction. All inputs must be
 /// equal length and divisible by N. Empty input returns empty.
 pub fn reduce_scatter(port: &RingPort, full: &[f32]) -> Vec<f32> {
     let n = port.n();
-    let w = port.rank();
-    let len = full.len();
-    assert_eq!(len % n, 0, "reduce_scatter length {len} not divisible by {n}");
     if n == 1 {
         return full.to_vec();
     }
-    let shard = len / n;
     let mut acc = full.to_vec();
-    for s in 0..n - 1 {
-        let c = (w + n - s - 1) % n;
-        let mut out = port.lease(port.next(), shard);
-        out.extend_from_slice(&acc[c * shard..(c + 1) * shard]);
-        port.send_vec(port.next(), out);
-        let c = (w + 2 * n - s - 2) % n;
-        let msg = port.recv_vec(port.prev());
-        debug_assert_eq!(msg.len(), shard, "reduce_scatter peers disagree on length");
-        for (dst, v) in acc[c * shard..(c + 1) * shard].iter_mut().zip(&msg) {
-            *dst += v;
-        }
-        port.release(port.prev(), msg);
-    }
-    acc[w * shard..(w + 1) * shard].to_vec()
+    let mut st = ReduceScatterStep::new(port, full.len());
+    let range = st.shard_range();
+    while !st.step(port, &mut acc) {}
+    acc[range].to_vec()
 }
 
 /// This rank's side of a pipelined ring broadcast from `root`: the
@@ -457,6 +428,32 @@ mod tests {
             let fab = RingFabric::new(n);
             for full in spmd(&fab, |port| allgather(&port, &shards[port.rank()])) {
                 prop::close(&full, &want, 0.0)?;
+            }
+            if fab.in_flight() != 0 {
+                return Err("fabric not drained".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allgather_into_matches_reference() {
+        prop::check("ag into == ref ag", 40, |rng| {
+            let n = 1 + rng.below(8);
+            let l = rng.below(6); // equal-length shards, incl. empty
+            let mut r = Rng::new(rng.next_u64());
+            let shards: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..l).map(|_| r.normal() as f32).collect())
+                .collect();
+            let want = reference::allgather(&shards);
+            let fab = RingFabric::new(n);
+            let got = spmd(&fab, |port| {
+                let mut out = Vec::new();
+                allgather_into(&port, &shards[port.rank()], &mut out);
+                out
+            });
+            for g in &got {
+                prop::close(g, &want, 0.0)?;
             }
             if fab.in_flight() != 0 {
                 return Err("fabric not drained".into());

@@ -26,9 +26,55 @@
 //! `recv`, so it inherits the `RTP_FABRIC_TIMEOUT_SECS` watchdog and a
 //! stall is reported with the exact link (rank, edge, ring direction)
 //! that never delivered.
+//!
+//! ## The background collective engine ([`CollectiveStream`])
+//!
+//! Rotation is a single hop, so eager enqueue suffices; FSDP's prefetch
+//! allgather and backward reduce-scatter are MULTI-HOP — hiding them
+//! requires someone to keep stepping the hop machine while the rank body
+//! computes. A [`CollectiveStream`] is that someone: each rank queues
+//! collectives (`issue_allgather` / `issue_reduce_scatter` /
+//! `issue_allreduce`, returning joinable [`CollHandle`]s) and, under the
+//! Thread launcher, a DEDICATED PER-RANK COMM THREAD executes them in
+//! issue order over the rank's [`RingPort::background`] port — the
+//! background lane namespace, so collective hops never interleave with
+//! the main thread's rotation traffic on a link. Under Lockstep the same
+//! API degrades to deterministic execute-at-join on the caller's thread
+//! (draining earlier queued collectives first, so the background lanes
+//! see the exact same message order in both modes — the launcher
+//! bit-identity argument extends unchanged).
+//!
+//! Discipline: all ranks must issue the SAME collectives in the SAME
+//! order on their streams (symmetric SPMD), and every issued handle must
+//! be joined before the step boundary — a joined stream leaves the comm
+//! thread idle and the fabric drained. Payload buffers are caller-owned
+//! and returned at join, so a persistent rank engine cycles one buffer
+//! per collective site across steps: together with the lane pools the
+//! whole path performs zero steady-state heap allocations (asserted by
+//! `tests/fabric_hotpath.rs`).
+//!
+//! A comm thread blocked on a stalled link inherits the fabric watchdog;
+//! its panic poisons the round, and the rank body blocked in
+//! [`CollectiveStream::join`] observes the dead thread and panics with
+//! the recorded poison reason instead of hanging.
+//!
+//! After an ABORTED round (poison / OOM / panic) a stream is dead: its
+//! comm thread has unwound (or may still be unwinding while the round
+//! teardown flushes the lanes), so the stream — and the rank engine that
+//! owns it — must be discarded, not reused for another step. The FABRIC
+//! stays reusable (teardown drains it); a fresh engine owns fresh
+//! streams. Every in-tree caller already builds a fresh engine after a
+//! failed step; this is the contract that keeps that safe.
 
 use std::any::Any;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+use std::time::Instant;
 
+use super::coll::Collective;
 use super::fabric::RingPort;
 use super::rotation::RotationDir;
 
@@ -113,6 +159,258 @@ impl std::fmt::Debug for CommStream {
     }
 }
 
+/// An issued background collective, waiting to be joined. Handles are
+/// joined on the stream that issued them; every handle must be joined
+/// before the step boundary.
+#[must_use = "an issued collective must be joined before the step boundary"]
+#[derive(Debug)]
+pub struct CollHandle {
+    seq: u64,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A queued job for the comm thread.
+enum Job {
+    Run(u64, Collective),
+    Shutdown,
+}
+
+/// Sync (Lockstep) state: queued-but-unexecuted collectives plus results
+/// of collectives drained ahead of their join.
+struct SyncQueue {
+    next_seq: u64,
+    pending: VecDeque<(u64, Collective)>,
+    done: HashMap<u64, Vec<f32>>,
+}
+
+/// Background (Thread launcher) state: the comm-thread channels.
+struct Bg {
+    jobs: Mutex<Sender<Job>>,
+    results: Mutex<Receiver<(u64, Vec<f32>)>>,
+    /// Results received while joining a different handle.
+    done: Mutex<HashMap<u64, Vec<f32>>>,
+    next_seq: AtomicU64,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+enum Inner {
+    Sync(Mutex<SyncQueue>),
+    Bg(Bg),
+}
+
+/// One rank's BACKGROUND COLLECTIVE ENGINE handle (module docs). Create
+/// via [`crate::parallel::RankCtx::collectives`] (engines) or
+/// [`CollectiveStream::new`] (tests); drop joins the comm thread.
+pub struct CollectiveStream {
+    /// This rank's background-lane port (the comm thread holds a clone).
+    port: RingPort,
+    inner: Inner,
+}
+
+impl CollectiveStream {
+    /// `background = true` (and N > 1) spawns the dedicated comm thread —
+    /// only meaningful when rank bodies run concurrently (Thread
+    /// launcher). Otherwise collectives execute at join on the caller's
+    /// thread, in issue order. Either way all traffic rides the
+    /// background lane namespace of `port`'s fabric.
+    pub fn new(port: RingPort, background: bool) -> CollectiveStream {
+        let port = port.background();
+        if background && port.n() > 1 {
+            let (jtx, jrx) = channel::<Job>();
+            let (rtx, rrx) = channel::<(u64, Vec<f32>)>();
+            let tport = port.clone();
+            let thread = std::thread::Builder::new()
+                .name(format!("rtp-comm-r{}", port.rank()))
+                .spawn(move || comm_thread_main(tport, jrx, rtx))
+                .expect("failed to spawn background comm thread");
+            CollectiveStream {
+                port,
+                inner: Inner::Bg(Bg {
+                    jobs: Mutex::new(jtx),
+                    results: Mutex::new(rrx),
+                    done: Mutex::new(HashMap::new()),
+                    next_seq: AtomicU64::new(0),
+                    thread: Mutex::new(Some(thread)),
+                }),
+            }
+        } else {
+            CollectiveStream {
+                port,
+                inner: Inner::Sync(Mutex::new(SyncQueue {
+                    next_seq: 0,
+                    pending: VecDeque::new(),
+                    done: HashMap::new(),
+                })),
+            }
+        }
+    }
+
+    /// Is a dedicated comm thread driving the queue (true overlap), as
+    /// opposed to deterministic execute-at-join?
+    pub fn is_background(&self) -> bool {
+        matches!(self.inner, Inner::Bg(_))
+    }
+
+    pub fn port(&self) -> &RingPort {
+        &self.port
+    }
+
+    /// Queue this rank's side of an equal-shard ring allgather of
+    /// `shard`. `buf` is recycled storage for the reconstructed full
+    /// buffer (join returns it, `n * shard.len()` long, in rank order).
+    pub fn issue_allgather(&self, shard: &[f32], buf: Vec<f32>) -> CollHandle {
+        self.issue(Collective::allgather(&self.port, shard, buf))
+    }
+
+    /// Queue this rank's side of a ring reduce-scatter of `full` (length
+    /// divisible by N). Join returns the buffer with the reduced chunk at
+    /// `rank * len/N ..`; other chunks are partial-sum garbage.
+    pub fn issue_reduce_scatter(&self, full: Vec<f32>) -> CollHandle {
+        self.issue(Collective::reduce_scatter(&self.port, full))
+    }
+
+    /// Queue this rank's side of a ring allreduce (sum) of `buf`.
+    pub fn issue_allreduce(&self, buf: Vec<f32>) -> CollHandle {
+        self.issue(Collective::allreduce(&self.port, buf))
+    }
+
+    fn issue(&self, coll: Collective) -> CollHandle {
+        self.port.note_bg_collective();
+        match &self.inner {
+            Inner::Sync(q) => {
+                let mut q = lock(q);
+                let seq = q.next_seq;
+                q.next_seq += 1;
+                q.pending.push_back((seq, coll));
+                CollHandle { seq }
+            }
+            Inner::Bg(bg) => {
+                let seq = bg.next_seq.fetch_add(1, Ordering::Relaxed);
+                if lock(&bg.jobs).send(Job::Run(seq, coll)).is_err() {
+                    self.comm_thread_died();
+                }
+                CollHandle { seq }
+            }
+        }
+    }
+
+    /// Join an issued collective: blocks until its hops have completed
+    /// and returns its payload buffer. Sync mode executes the queue (in
+    /// issue order, up to and including this handle) on the calling
+    /// thread; background mode waits for the comm thread, which may have
+    /// finished long ago — that difference is the measured overlap
+    /// (`FabricCounters::{bg_busy_ns, bg_wait_ns}`).
+    pub fn join(&self, handle: CollHandle) -> Vec<f32> {
+        match &self.inner {
+            Inner::Sync(q) => {
+                let mut q = lock(q);
+                if let Some(buf) = q.done.remove(&handle.seq) {
+                    return buf;
+                }
+                let t0 = Instant::now();
+                loop {
+                    let (seq, mut coll) = q
+                        .pending
+                        .pop_front()
+                        .expect("join of an unknown collective handle");
+                    while !coll.step(&self.port) {}
+                    let buf = coll.into_buf();
+                    if seq == handle.seq {
+                        let d = t0.elapsed();
+                        self.port.note_bg_busy(d);
+                        self.port.note_bg_wait(d);
+                        return buf;
+                    }
+                    q.done.insert(seq, buf);
+                }
+            }
+            Inner::Bg(bg) => {
+                if let Some(buf) = lock(&bg.done).remove(&handle.seq) {
+                    return buf;
+                }
+                let rx = lock(&bg.results);
+                loop {
+                    let t0 = Instant::now();
+                    match rx.recv() {
+                        Ok((seq, buf)) => {
+                            self.port.note_bg_wait(t0.elapsed());
+                            if seq == handle.seq {
+                                return buf;
+                            }
+                            lock(&bg.done).insert(seq, buf);
+                        }
+                        Err(_) => self.comm_thread_died(),
+                    }
+                }
+            }
+        }
+    }
+
+    /// The comm thread is gone: surface WHY instead of hanging (it dies
+    /// by panicking out of a poisoned fabric recv — watchdogged stalled
+    /// link, peer panic, orderly abort).
+    fn comm_thread_died(&self) -> ! {
+        let why = self
+            .port
+            .poison_reason_or("comm thread terminated unexpectedly");
+        panic!(
+            "rank {}: background comm thread died ({why})",
+            self.port.rank()
+        );
+    }
+}
+
+impl Drop for CollectiveStream {
+    fn drop(&mut self) {
+        if let Inner::Bg(bg) = &self.inner {
+            // best effort: the thread may already be dead (poisoned round)
+            let _ = lock(&bg.jobs).send(Job::Shutdown);
+            if let Some(t) = lock(&bg.thread).take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for CollectiveStream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CollectiveStream(rank {}/{}, {})",
+            self.port.rank(),
+            self.port.n(),
+            if self.is_background() { "background" } else { "sync" }
+        )
+    }
+}
+
+/// The per-rank comm thread: executes queued collectives in issue order
+/// over this rank's background-lane port. Exits on `Shutdown`, a dropped
+/// job channel, or (by unwinding) a poisoned fabric recv — dropping its
+/// result sender either way, which is what a joining rank body observes.
+fn comm_thread_main(
+    port: RingPort,
+    jobs: Receiver<Job>,
+    results: Sender<(u64, Vec<f32>)>,
+) {
+    while let Ok(job) = jobs.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::Run(seq, mut coll) => {
+                let t0 = Instant::now();
+                while !coll.step(&port) {}
+                port.note_bg_busy(t0.elapsed());
+                if results.send((seq, coll.into_buf())).is_err() {
+                    break; // stream dropped mid-join: nothing to report to
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +487,113 @@ mod tests {
         let p = stream.begin(41usize, RotationDir::CounterClockwise);
         assert_eq!(stream.wait(p), 41);
         assert_eq!(fab.messages_sent(), 0);
+    }
+
+    /// (allgather result, reduce-scatter shard, allreduce result).
+    type Triple = (Vec<f32>, Vec<f32>, Vec<f32>);
+
+    /// One rank body: queue an allgather + a reduce-scatter + an
+    /// allreduce, join in a scrambled order, return the three results.
+    fn drive_collectives(stream: &CollectiveStream, r: usize, n: usize) -> Triple {
+        let shard = vec![r as f32 + 1.0; 3];
+        let full: Vec<f32> = (0..2 * n).map(|i| (r * 100 + i) as f32).collect();
+        let arbuf = vec![r as f32; 5];
+        let h_ag = stream.issue_allgather(&shard, Vec::new());
+        let h_rs = stream.issue_reduce_scatter(full);
+        let h_ar = stream.issue_allreduce(arbuf);
+        // join out of issue order: results must still match
+        let ar = stream.join(h_ar);
+        let ag = stream.join(h_ag);
+        let rs_full = stream.join(h_rs);
+        let rs = rs_full[r * 2..(r + 1) * 2].to_vec();
+        (ag, rs, ar)
+    }
+
+    fn run_collective_streams(
+        policy: LaunchPolicy,
+        background: bool,
+        n: usize,
+    ) -> Vec<Triple> {
+        let fab = RingFabric::new(n);
+        let tasks: Vec<Box<dyn FnOnce() -> Triple + Send>> = (0..n)
+            .map(|r| {
+                let stream = CollectiveStream::new(fab.port(r), background);
+                Box::new(move || drive_collectives(&stream, r, n))
+                    as Box<dyn FnOnce() -> Triple + Send>
+            })
+            .collect();
+        let out = fab.run_round(policy, tasks);
+        assert_eq!(fab.in_flight(), 0, "stream left messages in flight");
+        out
+    }
+
+    #[test]
+    fn background_and_sync_collective_streams_agree() {
+        for n in [1usize, 2, 4] {
+            let sync = run_collective_streams(LaunchPolicy::Lockstep, false, n);
+            let bg = run_collective_streams(LaunchPolicy::Threaded, true, n);
+            assert_eq!(sync, bg, "n={n}");
+            // spot-check against the math
+            let want_ag: Vec<f32> = (0..n)
+                .flat_map(|r| vec![r as f32 + 1.0; 3])
+                .collect();
+            let want_ar = vec![(0..n).map(|r| r as f32).sum::<f32>(); 5];
+            for (r, (ag, rs, ar)) in sync.iter().enumerate() {
+                assert_eq!(ag, &want_ag, "n={n} r={r}");
+                assert_eq!(ar, &want_ar, "n={n} r={r}");
+                let want_rs: Vec<f32> = (0..2)
+                    .map(|i| {
+                        (0..n).map(|s| (s * 100 + r * 2 + i) as f32).sum::<f32>()
+                    })
+                    .collect();
+                assert_eq!(rs, &want_rs, "n={n} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn background_stream_counts_busy_and_wait() {
+        let n = 2;
+        let fab = RingFabric::new(n);
+        fab.reset_counters();
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..n)
+            .map(|r| {
+                let stream = CollectiveStream::new(fab.port(r), true);
+                Box::new(move || {
+                    assert!(stream.is_background());
+                    let h = stream.issue_allreduce(vec![r as f32; 64]);
+                    let _ = stream.join(h);
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        fab.run_round(LaunchPolicy::Threaded, tasks);
+        let c = fab.counters();
+        assert_eq!(c.bg_collectives, n as u64);
+        assert!(c.bg_busy_ns > 0, "{c:?}");
+    }
+
+    #[test]
+    fn sync_stream_executes_in_issue_order_at_join() {
+        // the bg lanes must carry collectives in ISSUE order even when
+        // joins are scrambled — the cross-mode bit-identity requirement
+        let fab = RingFabric::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<f32> + Send>> = (0..2)
+            .map(|r| {
+                let stream = CollectiveStream::new(fab.port(r), false);
+                Box::new(move || {
+                    let h1 = stream.issue_allreduce(vec![1.0 + r as f32]);
+                    let h2 = stream.issue_allreduce(vec![10.0 + r as f32]);
+                    // joining h2 first must drain h1 first internally
+                    let b = stream.join(h2);
+                    let a = stream.join(h1);
+                    vec![a[0], b[0]]
+                }) as Box<dyn FnOnce() -> Vec<f32> + Send>
+            })
+            .collect();
+        let out = fab.run_round(LaunchPolicy::Lockstep, tasks);
+        for o in out {
+            assert_eq!(o, vec![3.0, 21.0]);
+        }
+        assert_eq!(fab.in_flight(), 0);
     }
 }

@@ -14,10 +14,13 @@
 //! - [`memory`] — per-worker allocation tracker + analytic Table-1 model
 //! - [`cluster`] — the simulated worker ring: per-worker memory tracker +
 //!   `RingPort` fabric endpoint + event trace
-//! - [`comm`] — the rank-local ring fabric (`RingFabric`/`RingPort`),
-//!   chunked ring collectives and the rotation schedule built on it, the
-//!   per-hop α-β cost model, and god-view reference collectives kept only
-//!   as test oracles
+//! - [`comm`] — the rank-local ring fabric (`RingFabric`/`RingPort`,
+//!   with a separate background lane namespace per link), chunked ring
+//!   collectives as resumable per-hop state machines, the BACKGROUND
+//!   COLLECTIVE ENGINE (`CollectiveStream`: per-rank comm threads
+//!   overlapping multi-hop collectives with compute), the rotation
+//!   schedule, the per-hop α-β cost model, and god-view reference
+//!   collectives kept only as test oracles
 //! - [`flat_param`] — the paper's FlatParameter pack/shard structure (it
 //!   moves through the fabric: `allgather_via` / `reduce_scatter_via`)
 //! - [`parallel`] — the five engines (single/ddp/fsdp/tp/rtp) as SPMD

@@ -54,11 +54,15 @@ pub struct EngineOpts {
     pub rtp_recycle: bool,
     /// How the rank bodies execute (defaults to `RTP_LAUNCHER` env).
     pub launcher: Launcher,
-    /// TRUE async rotation: under the Thread launcher, out-of-place RTP
+    /// TRUE async comm: under the Thread launcher, out-of-place RTP
     /// issues each rotation hop eagerly on the rank's comm stream so the
-    /// shard travels while the step computes. Disable to get the
-    /// synchronous-boundary baseline the overlap benches compare against.
-    /// No effect under Lockstep (always synchronous, for determinism).
+    /// shard travels while the step computes, and every engine's
+    /// [`CollectiveStream`](crate::comm::CollectiveStream) runs its
+    /// queued multi-hop collectives (FSDP prefetch allgather + backward
+    /// reduce-scatter, DDP/RTP grad allreduce) on a dedicated per-rank
+    /// comm thread. Disable to get the synchronous / execute-at-join
+    /// baseline the overlap benches compare against. No effect under
+    /// Lockstep (always synchronous, for determinism).
     pub async_rotation: bool,
 }
 

@@ -19,7 +19,7 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use crate::cluster::{Cluster, TraceEvent, TraceLog};
-use crate::comm::{CommPrim, CommStream, RingPort};
+use crate::comm::{CollectiveStream, CommPrim, CommStream, RingPort};
 use crate::config::{ModelCfg, ParallelCfg};
 use crate::memory::tracker::{AllocId, MemCategory, MemTracker};
 use crate::model::ops::{self, Op};
@@ -151,6 +151,18 @@ impl<'a> RankCtx<'a> {
     /// real concurrency too (`async_comm`).
     pub fn comm_stream(&self, overlapped: bool) -> CommStream {
         CommStream::new(self.port.clone(), overlapped && self.async_comm)
+    }
+
+    /// This rank's BACKGROUND COLLECTIVE ENGINE: queued multi-hop
+    /// collectives (allgather / reduce-scatter / allreduce) execute on a
+    /// dedicated per-rank comm thread over the fabric's background lane
+    /// namespace when the launcher provides real concurrency
+    /// (`async_comm`), and degrade to deterministic execute-at-join under
+    /// Lockstep — bit-identical either way. Engines create one per rank
+    /// lazily at the first step (construction-time contexts predate the
+    /// launcher decision) and keep it for the rank's lifetime.
+    pub fn collectives(&self) -> CollectiveStream {
+        CollectiveStream::new(self.port.clone(), self.async_comm)
     }
 
     /// Allocate a tracked buffer on this rank.

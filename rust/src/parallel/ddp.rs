@@ -13,7 +13,7 @@
 
 use anyhow::Result;
 
-use crate::comm::{self, CommPrim, RingPort};
+use crate::comm::{CollectiveStream, CommPrim, RingPort};
 use crate::memory::tracker::MemCategory;
 use crate::model::ModelParams;
 use crate::perfmodel::Token;
@@ -32,6 +32,9 @@ pub struct DdpRank {
     pending: Vec<Token>,
     /// Reused flat-pack scratch for the per-step gradient allreduce.
     flat_scratch: Vec<f32>,
+    /// Background collective engine: the full-grad allreduce rides the
+    /// per-rank comm thread under the Thread launcher.
+    coll: Option<CollectiveStream>,
 }
 
 struct DdpHooks {
@@ -109,6 +112,7 @@ impl DdpRank {
             hooks: DdpHooks { replica, grads, unit_bytes, pending: Vec::new() },
             pending: Vec::new(),
             flat_scratch: Vec::new(),
+            coll: None,
         })
     }
 }
@@ -134,29 +138,15 @@ pub fn unit_grad_bytes(cfg: &crate::config::ModelCfg) -> Vec<(Unit, u64)> {
     v
 }
 
-/// This rank's side of the allreduce-mean of its full gradient set
-/// (flat-pack, chunked ring allreduce through this rank's port,
-/// unpack + 1/N).
-pub fn allreduce_mean_params(port: &RingPort, grads: &mut ModelParams) {
-    allreduce_mean_params_with(port, grads, &mut Vec::new());
-}
-
-/// [`allreduce_mean_params`] with a caller-owned flat-pack scratch, so a
-/// persistent rank reuses one full-model buffer across steps instead of
-/// allocating W bytes per step.
-pub fn allreduce_mean_params_with(
-    port: &RingPort,
-    grads: &mut ModelParams,
-    buf: &mut Vec<f32>,
-) {
-    let n = port.n();
-    if n <= 1 {
-        return;
-    }
+/// Flatten every grad tensor into `buf` (cleared first, capacity reused).
+pub(crate) fn pack_params(grads: &ModelParams, buf: &mut Vec<f32>) {
     buf.clear();
     grads.visit(&mut |_, t| buf.extend_from_slice(&t.data));
-    comm::allreduce_sum(port, buf);
-    let scale = 1.0 / n as f32;
+}
+
+/// Write the reduced flat buffer back into the grad tensors, scaling by
+/// `scale` (the 1/N of allreduce-mean).
+pub(crate) fn unpack_params_scaled(grads: &mut ModelParams, buf: &[f32], scale: f32) {
     let mut off = 0;
     grads.visit_mut(&mut |_, t| {
         let l = t.data.len();
@@ -178,13 +168,20 @@ impl RankEngine for DdpRank {
         self.pending.append(&mut self.hooks.pending);
 
         // real-mode allreduce-mean of every grad tensor across replicas,
-        // through this rank's own fabric port
+        // riding the background collective engine (the comm thread does
+        // the ring hops under the Thread launcher; bit-identical values
+        // either way — same chunked ring allreduce)
         if !ctx.virtual_mode() && n > 1 {
-            allreduce_mean_params_with(
-                &ctx.port,
-                self.hooks.grads.as_mut().unwrap(),
-                &mut self.flat_scratch,
-            );
+            if self.coll.is_none() {
+                self.coll = Some(ctx.collectives());
+            }
+            let stream = self.coll.as_ref().unwrap();
+            let mut flat = std::mem::take(&mut self.flat_scratch);
+            let grads = self.hooks.grads.as_mut().unwrap();
+            pack_params(grads, &mut flat);
+            let flat = stream.join(stream.issue_allreduce(flat));
+            unpack_params_scaled(grads, &flat, 1.0 / n as f32);
+            self.flat_scratch = flat;
         }
         if let Some(tl) = ctx.timeline.as_deref_mut() {
             for tok in self.pending.drain(..) {

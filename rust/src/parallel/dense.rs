@@ -46,7 +46,7 @@ pub enum Phase {
 }
 
 /// A weight-grad destination slot (parameter identity).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Slot {
     pub layer: Option<usize>,
     pub expert: Option<usize>,

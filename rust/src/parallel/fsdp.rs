@@ -9,6 +9,20 @@
 //! ahead); `unit_end` reshards. In backward, a full-unit gradient staging
 //! buffer is reduce-scattered so each rank retains only its grad shard.
 //!
+//! Since the background-collective-engine PR the prefetch and the
+//! backward reduce-scatter are REAL on the data path, not just modeled:
+//! each rank owns a [`CollectiveStream`] whose dedicated comm thread
+//! (Thread launcher) executes the queued allgathers/reduce-scatters over
+//! the fabric's background lanes while the rank body computes — the
+//! prefetched unit's weights are already reconstructed when `unit_begin`
+//! joins the handle, and the per-unit grad reduce-scatters issued at
+//! `unit_end(Bwd)` are joined at the step barrier. Under Lockstep the
+//! same stream degrades to deterministic execute-at-join, keeping both
+//! launchers bit-identical (asserted by `tests/launcher_equivalence.rs`).
+//! All buffers (full-weight reconstruction, grad staging) are recycled
+//! across steps, so the whole path performs zero steady-state heap
+//! allocations.
+//!
 //! Under the old god-view engine every worker re-ran the WHOLE ring
 //! allgather once per worker (correct but N× redundant). With per-rank
 //! engines each rank runs its own side of ONE allgather per unit — the
@@ -20,9 +34,11 @@
 //! realistic per-layer wrapping used everywhere else (the delta between
 //! the two is an ablation in EXPERIMENTS.md).
 
+use std::collections::HashMap;
+
 use anyhow::Result;
 
-use crate::comm::{CommPrim, RingPort};
+use crate::comm::{CollHandle, CollectiveStream, CommPrim, RingPort};
 use crate::config::ModelCfg;
 use crate::flat_param::FlatLayout;
 use crate::memory::tracker::MemCategory;
@@ -97,6 +113,19 @@ fn layout_of(cfg: &ModelCfg, unit: Unit, n: usize) -> (FlatLayout, Vec<Slot>) {
     )
 }
 
+/// Fold a completed reduce-scatter buffer back into its unit state: add
+/// this rank's reduced chunk into the grad shard (mean over N) and
+/// retire the buffer into the staging scratch for next step.
+fn fold_reduced(st: &mut UnitState, full: Vec<f32>, w: usize, n: usize) {
+    let s = st.layout.shard_len();
+    if let Some(gs) = st.grad_shard.as_mut() {
+        for (a, b) in gs.data.iter_mut().zip(&full[w * s..(w + 1) * s]) {
+            *a += b / n as f32;
+        }
+    }
+    st.staged_scratch = Some(full);
+}
+
 fn unit_index(unit: Unit) -> usize {
     match unit {
         Unit::Emb => 0,
@@ -139,6 +168,19 @@ struct UnitState {
     /// Retired staging buffer, reused next step so the backward staging
     /// path performs zero steady-state allocations.
     staged_scratch: Option<Vec<f32>>,
+    /// Recycled full-weight reconstruction buffer: moved into the
+    /// background allgather at issue, returned at join.
+    full_scratch: Option<Vec<f32>>,
+}
+
+/// An in-flight unit prefetch: the modeled token (lead rank) plus the
+/// real background allgather handle (real mode) — consumed together at
+/// the next `unit_begin`.
+struct Prefetch {
+    unit: Unit,
+    sidx: usize,
+    tok: Option<Token>,
+    gather: Option<CollHandle>,
 }
 
 struct FsdpHooks {
@@ -148,11 +190,21 @@ struct FsdpHooks {
     virt: bool,
     granularity: Granularity,
     layers: usize,
-    /// In-flight prefetch: (unit, token) — modeled rank only.
-    prefetch: Option<(Unit, Token)>,
-    /// In-flight reduce-scatters (waited at the step barrier — they
-    /// overlap the next unit's backward compute, as real FSDP does).
+    /// In-flight prefetch (modeled token + background data-path gather).
+    prefetch: Option<Prefetch>,
+    /// In-flight reduce-scatters, modeled side (waited at the step
+    /// barrier — they overlap the next unit's backward compute, as real
+    /// FSDP does).
     pending_rs: Vec<Token>,
+    /// In-flight reduce-scatters, data path: (state idx, handle), joined
+    /// at the step barrier in issue order.
+    pending_rs_data: Vec<(usize, CollHandle)>,
+    /// slot -> (state idx, spec idx): the grad hook runs once per
+    /// parameter per step, so the lookup is precomputed at init.
+    slot_index: HashMap<Slot, (usize, usize)>,
+    /// This rank's background collective engine (created at the first
+    /// step, when the launcher's concurrency mode is known).
+    coll: Option<CollectiveStream>,
 }
 
 impl FsdpHooks {
@@ -166,56 +218,93 @@ impl FsdpHooks {
         }
     }
 
-    /// This rank's side of one unit allgather + materialization: the
-    /// chunked ring allgather runs ONCE across the rank set (each rank
-    /// stepping its own N-1 hops), and this rank unpacks the
-    /// reconstruction into its scratch view.
-    fn gather_unit(&mut self, ctx: &mut RankCtx, sidx: usize) -> Result<()> {
+    /// Make unit `sidx`'s full weights resident: join `pending` (an
+    /// in-flight background prefetch — already reconstructed if the comm
+    /// thread kept up) or issue-and-join the allgather now (the blocking
+    /// first-unit path), then unpack the reconstruction into this rank's
+    /// scratch view. The full buffer is recycled into the state for the
+    /// next issue.
+    fn gather_unit(
+        &mut self,
+        ctx: &mut RankCtx,
+        sidx: usize,
+        pending: Option<CollHandle>,
+    ) -> Result<()> {
         let full_bytes = self.states[sidx].layout.full_bytes();
         let tb = ctx.alloc(MemCategory::CommBuf, Buf::Virt(vec![full_bytes as usize / 4]))?;
-        if let Some(shard) = self.states[sidx].param_shard.as_ref() {
+        let handle = match pending {
+            Some(h) => Some(h),
+            None => self.issue_gather(sidx),
+        };
+        if let Some(h) = handle {
+            let full = self.coll.as_ref().expect("stream initialized").join(h);
             let st = &self.states[sidx];
-            let full = st.layout.allgather_via(&ctx.port, &shard.data);
             let tensors = st.layout.unpack(&full);
             for (slot, t) in st.slots.clone().into_iter().zip(tensors) {
                 *resolve_mut(&mut self.scratch, slot) = t;
             }
+            self.states[sidx].full_scratch = Some(full);
         }
         self.states[sidx].resident = Some(tb);
         Ok(())
+    }
+
+    /// Issue this rank's side of unit `sidx`'s allgather on the
+    /// background engine (real mode only — returns None in virtual mode).
+    /// Every rank issues at the same program point, so the comm threads
+    /// run the collective together while the rank bodies compute.
+    fn issue_gather(&mut self, sidx: usize) -> Option<CollHandle> {
+        let st = &mut self.states[sidx];
+        let shard = st.param_shard.as_ref()?;
+        let buf = st.full_scratch.take().unwrap_or_default();
+        let stream = self.coll.as_ref().expect("stream initialized");
+        Some(stream.issue_allgather(&shard.data, buf))
     }
 }
 
 impl DenseHooks for FsdpHooks {
     fn unit_begin(&mut self, ctx: &mut RankCtx, unit: Unit, phase: Phase) -> Result<()> {
+        if self.coll.is_none() && !self.virt {
+            // first touch: the launcher's concurrency mode is now known.
+            // Virtual mode never moves data, so it never needs the stream
+            // (or its comm thread).
+            self.coll = Some(ctx.collectives());
+        }
         let sidx = self.state_idx(unit);
         if self.states[sidx].resident.is_none() {
-            // timeline: consume a matching prefetch or block on allgather
-            // (modeled rank only; the data-path allgather runs on every
-            // rank regardless)
+            // consume a matching prefetch (modeled: wait on its token;
+            // data path: join the background allgather) or block on a
+            // fresh allgather — the startup penalty of §3.4.3
             let full_bytes = self.states[sidx].layout.full_bytes();
-            let hit = matches!(self.prefetch, Some((u, _)) if u == unit);
-            if hit {
-                let (_, tok) = self.prefetch.take().unwrap();
-                ctx.charge_wait(Some(tok));
+            let hit = matches!(&self.prefetch, Some(p) if p.unit == unit);
+            let pending = if hit {
+                let p = self.prefetch.take().unwrap();
+                ctx.charge_wait(p.tok);
+                p.gather
             } else {
                 ctx.charge_comm("allgather", CommPrim::AllGather, full_bytes);
-            }
-            self.gather_unit(ctx, sidx)?;
+                None
+            };
+            self.gather_unit(ctx, sidx, pending)?;
         }
-        // issue the next unit's prefetch (layer granularity only)
+        // issue the next unit's prefetch (layer granularity only): the
+        // modeled token and, in real mode, the actual background
+        // allgather the comm thread overlaps with this unit's compute
         if self.granularity == Granularity::Layer {
             if let Some(next) = successor(unit, phase, self.layers) {
                 let nidx = self.state_idx(next);
                 let already = self.states[nidx].resident.is_some()
-                    || matches!(self.prefetch, Some((u, _)) if u == next);
+                    || matches!(&self.prefetch, Some(p) if p.unit == next);
                 if !already {
-                    if let Some(tok) = ctx.charge_comm_async_eager(
+                    let tok = ctx.charge_comm_async_eager(
                         "prefetch-allgather",
                         CommPrim::AllGather,
                         self.states[nidx].layout.full_bytes(),
-                    ) {
-                        self.prefetch = Some((next, tok));
+                    );
+                    let gather = self.issue_gather(nidx);
+                    if tok.is_some() || gather.is_some() {
+                        self.prefetch =
+                            Some(Prefetch { unit: next, sidx: nidx, tok, gather });
                     }
                 }
             }
@@ -251,13 +340,20 @@ impl DenseHooks for FsdpHooks {
         if phase == Phase::Bwd {
             // reduce-scatter the staged grads asynchronously — it overlaps
             // the next unit's backward compute (real FSDP's behavior); the
-            // step barrier waits on all of them.
+            // step barrier waits on all of them. Modeled token on the lead
+            // rank; the DATA PATH is issued on the background engine here
+            // and joined at the barrier.
             if let Some(tok) = ctx.charge_comm_async(
                 "reduce-scatter",
                 CommPrim::ReduceScatter,
                 self.states[sidx].layout.full_bytes(),
             ) {
                 self.pending_rs.push(tok);
+            }
+            if let Some(full) = self.states[sidx].staged_grads.take() {
+                let stream = self.coll.as_ref().expect("stream initialized");
+                self.pending_rs_data
+                    .push((sidx, stream.issue_reduce_scatter(full)));
             }
             if let Some(tb) = self.states[sidx].staging.take() {
                 ctx.free(tb);
@@ -282,10 +378,11 @@ impl DenseHooks for FsdpHooks {
     }
 
     fn grad(&mut self, ctx: &mut RankCtx, slot: Slot, src: TBuf) -> Result<()> {
-        let sidx = self.state_idx(slot.unit());
         if !src.is_virtual() {
+            // precomputed slot -> (state, spec) index: this hook runs once
+            // per parameter per step, so no O(#slots) scan here
+            let &(sidx, k) = self.slot_index.get(&slot).expect("slot in unit index");
             let st = &mut self.states[sidx];
-            let k = st.slots.iter().position(|s| *s == slot).expect("slot in unit");
             let spec = &st.layout.specs[k];
             if let Some(stage) = st.staged_grads.as_mut() {
                 for (d, v) in stage[spec.offset..spec.offset + spec.len()]
@@ -331,6 +428,7 @@ impl FsdpRank {
                         staging: None,
                         staged_grads: None,
                         staged_scratch: None,
+                        full_scratch: None,
                     });
                 }
             }
@@ -351,6 +449,7 @@ impl FsdpRank {
                     staging: None,
                     staged_grads: None,
                     staged_scratch: None,
+                    full_scratch: None,
                 });
             }
         }
@@ -384,6 +483,14 @@ impl FsdpRank {
         ctx.tracker.alloc(MemCategory::Weights, shard_bytes)?;
         ctx.tracker.alloc(MemCategory::Grads, shard_bytes)?;
 
+        // slot -> (state, spec) lookup for the per-parameter grad hook
+        let mut slot_index = HashMap::new();
+        for (sidx, st) in states.iter().enumerate() {
+            for (k, slot) in st.slots.iter().enumerate() {
+                slot_index.insert(*slot, (sidx, k));
+            }
+        }
+
         let scratch = ModelParams::zeros_like(&cfg);
         Ok(FsdpRank {
             rank,
@@ -395,6 +502,9 @@ impl FsdpRank {
                 layers: cfg.layers,
                 prefetch: None,
                 pending_rs: Vec::new(),
+                pending_rs_data: Vec::new(),
+                slot_index,
+                coll: None,
             },
             cfg,
         })
@@ -404,22 +514,40 @@ impl FsdpRank {
         self.hooks.granularity
     }
 
-    /// Post-step: mean-reduce staged full grads into this rank's shard
-    /// grads (chunked ring reduce-scatter through this rank's port) and
-    /// release whole-model residency (Model granularity).
+    /// The step barrier: join the background reduce-scatters issued
+    /// during backward (they overlapped the remaining backward compute),
+    /// fold each reduced chunk into this rank's grad shard (mean), run
+    /// the whole-model unit's reduce-scatter (Model granularity), and
+    /// release whole-model residency.
     fn finish_step(&mut self, ctx: &mut RankCtx) -> Result<()> {
         let n = ctx.n();
-        for st in &mut self.hooks.states {
-            if let (Some(full), Some(gs)) =
-                (st.staged_grads.take(), st.grad_shard.as_mut())
-            {
-                let shard = st.layout.reduce_scatter_via(&ctx.port, &full);
-                for (a, b) in gs.data.iter_mut().zip(shard) {
-                    *a += b / n as f32;
-                }
-                st.staged_scratch = Some(full);
+        let w = self.rank;
+        let h = &mut self.hooks;
+        // a prefetch issued but never consumed must still be joined so
+        // the comm thread and the fabric are quiescent at the barrier
+        if let Some(p) = h.prefetch.take() {
+            if let Some(g) = p.gather {
+                let full = h.coll.as_ref().expect("stream initialized").join(g);
+                h.states[p.sidx].full_scratch = Some(full);
             }
-            st.staged_grads = None;
+        }
+        // join the backward reduce-scatters in issue order; each buffer
+        // comes back with this rank's reduced chunk in place and retires
+        // into the state's staging scratch for next step
+        let pending: Vec<(usize, CollHandle)> = h.pending_rs_data.drain(..).collect();
+        for (sidx, handle) in pending {
+            let full = h.coll.as_ref().expect("stream initialized").join(handle);
+            fold_reduced(&mut h.states[sidx], full, w, n);
+        }
+        for st in h.states.iter_mut() {
+            // Model granularity: the whole-model unit was not resharded
+            // during the walk — reduce-scatter it blocking at the barrier
+            // (still riding the background engine's lanes)
+            if let Some(full) = st.staged_grads.take() {
+                let stream = h.coll.as_ref().expect("stream initialized");
+                let full = stream.join(stream.issue_reduce_scatter(full));
+                fold_reduced(st, full, w, n);
+            }
             // Model granularity: release residency + staging now
             if let Some(tb) = st.resident.take() {
                 ctx.free(tb);
@@ -433,13 +561,12 @@ impl FsdpRank {
                 ctx.free(tb);
             }
         }
-        self.hooks.prefetch = None;
         if let Some(tl) = ctx.timeline.as_deref_mut() {
-            for tok in self.hooks.pending_rs.drain(..) {
+            for tok in h.pending_rs.drain(..) {
                 tl.wait(tok);
             }
         }
-        self.hooks.pending_rs.clear();
+        h.pending_rs.clear();
         Ok(())
     }
 }
@@ -486,9 +613,11 @@ impl RankEngine for FsdpRank {
 
     fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
         for st in &mut self.hooks.states {
+            // a unit without shards (virtual mode) skips — it must not
+            // abort visiting the remaining units
             let (Some(p), Some(g)) = (st.param_shard.as_mut(), st.grad_shard.as_ref())
             else {
-                return;
+                continue;
             };
             f(p, g);
         }

@@ -52,7 +52,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::cluster::TraceEvent;
-use crate::comm::{self, CommPrim, InFlight, RingPort, RotationDir};
+use crate::comm::{self, CollectiveStream, CommPrim, InFlight, RingPort, RotationDir};
 use crate::config::ModelCfg;
 use crate::memory::tracker::MemCategory;
 use crate::model::ops::Op;
@@ -267,6 +267,9 @@ pub struct RtpRank {
     /// Reused flattening scratch for the per-step replicated-grad
     /// allreduce (zero steady-state allocations on that path too).
     rep_scratch: Vec<f32>,
+    /// Background collective engine: the replicated-grad allreduce rides
+    /// the per-rank comm thread under the Thread launcher.
+    coll: Option<CollectiveStream>,
 }
 
 impl RtpRank {
@@ -380,6 +383,7 @@ impl RtpRank {
             comm_buf,
             bytes,
             rep_scratch: Vec::new(),
+            coll: None,
         })
     }
 
@@ -1341,10 +1345,16 @@ impl RankEngine for RtpRank {
                 // allreduce-MEAN: idempotent on values that earlier steps
                 // already reduced, so grads accumulate correctly across
                 // steps without zeroing. The flattening scratch persists
-                // on the rank, so this path allocates nothing per step.
+                // on the rank, so this path allocates nothing per step;
+                // the ring hops ride the background collective engine
+                // (identical chunk schedule, bit-identical values).
+                if self.coll.is_none() {
+                    self.coll = Some(ctx.collectives());
+                }
+                let stream = self.coll.as_ref().unwrap();
                 let mut flat = std::mem::take(&mut self.rep_scratch);
                 gr.pack_into(&mut flat);
-                comm::allreduce_sum(&ctx.port, &mut flat);
+                let flat = stream.join(stream.issue_allreduce(flat));
                 gr.unpack(&flat);
                 gr.visit_mut(&mut |t| t.scale(scale));
                 self.rep_scratch = flat;

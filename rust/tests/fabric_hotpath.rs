@@ -1,8 +1,10 @@
 //! The fabric hot-path contract: the lock-sharded lane + buffer-pool
 //! fabric performs ZERO steady-state heap allocations on the pooled
-//! rotation and collective paths, its counters (allocations, lock
-//! acquisitions, wakeups) account honestly, and a stalled threaded recv
-//! names the exact link that never delivered.
+//! rotation and collective paths — including the BACKGROUND collective
+//! engine's comm-thread allgather — its counters (allocations, lock
+//! acquisitions, wakeups, background busy/wait) account honestly, the
+//! main and background lane namespaces never interleave, and a stalled
+//! threaded recv names the exact link that never delivered.
 
 use std::time::Duration;
 
@@ -100,6 +102,106 @@ fn pooled_reduce_scatter_steady_state() {
         c1.msg_allocs, c0.msg_allocs,
         "pooled reduce-scatter allocated in steady state ({c0:?} -> {c1:?})"
     );
+}
+
+#[test]
+fn comm_thread_allgather_is_allocation_free_in_steady_state() {
+    // the background collective engine's hot path: per-rank comm threads
+    // drive queued allgathers over the background lanes, recycling both
+    // the caller's full buffer and every per-hop lane buffer. After
+    // priming, the fabric performs ZERO heap allocations per collective
+    // (the per-collective control message to the comm thread is not a
+    // fabric allocation and is O(1) per collective, not per hop).
+    use rtp::comm::CollectiveStream;
+    let n = 4;
+    let elems = 1024usize;
+    let fab = RingFabric::new(n);
+    let run = |fab: &RingFabric, bufs: Vec<Vec<f32>>| -> Vec<Vec<f32>> {
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<f32> + Send>> = bufs
+            .into_iter()
+            .enumerate()
+            .map(|(r, buf)| {
+                let stream = CollectiveStream::new(fab.port(r), true);
+                Box::new(move || {
+                    assert!(stream.is_background());
+                    let shard = vec![r as f32; elems];
+                    let h = stream.issue_allgather(&shard, buf);
+                    let full = stream.join(h);
+                    assert_eq!(full.len(), n * elems);
+                    assert_eq!(full[r * elems], r as f32);
+                    full
+                }) as Box<dyn FnOnce() -> Vec<f32> + Send>
+            })
+            .collect();
+        fab.run_round(LaunchPolicy::Threaded, tasks)
+    };
+    // prime each clockwise BG lane pool to capacity (8): free-running
+    // comm threads can skew up to n-1 hops apart, so the pool must hold
+    // enough buffers for the worst-case skew DETERMINISTICALLY — warm
+    // rounds alone would make the steady-state assertion timing-dependent
+    for r in 0..n {
+        let tx = fab.bg_port(r);
+        let rx = fab.bg_port((r + 1) % n);
+        let mut held = Vec::new();
+        for _ in 0..8 {
+            let mut v = tx.lease((r + 1) % n, elems);
+            v.resize(elems, 0.0);
+            tx.send_vec((r + 1) % n, v);
+            held.push(rx.recv_vec(r));
+        }
+        for v in held {
+            rx.release(r, v);
+        }
+    }
+    // two warm rounds settle the caller-side full buffers' capacity
+    let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| Vec::new()).collect();
+    for _ in 0..2 {
+        bufs = run(&fab, bufs);
+    }
+    let c0 = fab.counters();
+    for _ in 0..5 {
+        bufs = run(&fab, bufs);
+    }
+    let c1 = fab.counters();
+    assert_eq!(
+        c1.msg_allocs, c0.msg_allocs,
+        "comm-thread allgather allocated in steady state ({c0:?} -> {c1:?})"
+    );
+    assert_eq!(c1.bg_collectives - c0.bg_collectives, (5 * n) as u64);
+    assert!(c1.pool_hits > c0.pool_hits, "bg lane pools never hit");
+    assert_eq!(fab.in_flight(), 0);
+}
+
+#[test]
+fn background_collectives_and_main_rotation_share_links_without_crosstalk() {
+    // a background allgather in flight on a link must not interleave with
+    // the main thread's rotation traffic on the same edge: the two lane
+    // namespaces are independent FIFOs
+    use rtp::comm::CollectiveStream;
+    let n = 4;
+    let hops = 6usize;
+    let fab = RingFabric::new(n);
+    let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..n)
+        .map(|r| {
+            let port = fab.port(r);
+            let stream = CollectiveStream::new(fab.port(r), true);
+            Box::new(move || {
+                // issue a background collective, then rotate on the main
+                // lanes while it runs
+                let h = stream.issue_allreduce(vec![r as f32; 256]);
+                let mut held = vec![r as f32; 64];
+                for _ in 0..hops {
+                    held = comm::rotate_ring_vec(&port, held, RotationDir::Clockwise);
+                }
+                let reduced = stream.join(h);
+                let want = (0..n).map(|x| x as f32).sum::<f32>();
+                assert!(reduced.iter().all(|&v| v == want));
+                assert_eq!(held[0], ((r + n - (hops % n)) % n) as f32);
+            }) as Box<dyn FnOnce() + Send>
+        })
+        .collect();
+    fab.run_round(LaunchPolicy::Threaded, tasks);
+    assert_eq!(fab.in_flight(), 0);
 }
 
 #[test]

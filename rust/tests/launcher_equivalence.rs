@@ -16,6 +16,7 @@
 use rtp::comm::{LaunchPolicy, RingFabric};
 use rtp::config::Strategy;
 use rtp::model::ModelParams;
+use rtp::parallel::fsdp::Granularity;
 use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind, Launcher};
 use rtp::util::rng::Rng;
 
@@ -70,8 +71,79 @@ fn ddp_is_launcher_invariant() {
 
 #[test]
 fn fsdp_is_launcher_invariant() {
+    // under the Thread launcher FSDP now runs REAL background collectives
+    // (per-rank comm threads: prefetch allgather + backward
+    // reduce-scatter) against Lockstep's execute-at-join schedule
     for n in [2, 4, 8] {
         assert_bit_identical(Strategy::Fsdp, n);
+    }
+}
+
+#[test]
+fn fsdp_model_granularity_is_launcher_invariant() {
+    for n in [2, 4, 8] {
+        let build = |launcher: Launcher| {
+            let opts = EngineOpts::new("tiny", Strategy::Fsdp, n, n.max(2))
+                .exec(ExecKind::Oracle)
+                .fsdp_granularity(Granularity::Model)
+                .launcher(launcher);
+            let cfg = opts.cfg().unwrap();
+            let mut e = build_engine(&opts).unwrap();
+            let mut rng = Rng::new(7);
+            let mut losses = Vec::new();
+            for _ in 0..2 {
+                let batch = Batch::synth(&cfg, n.max(2), &mut rng);
+                losses.push(e.step(&batch).unwrap());
+            }
+            (losses, e.gather_params(), e.gather_grads())
+        };
+        let (l_loss, l_p, l_g) = build(Launcher::Lockstep);
+        let (t_loss, t_p, t_g) = build(Launcher::Thread);
+        assert_eq!(l_loss, t_loss, "fsdp-model N={n}: losses diverge");
+        assert_eq!(l_p, t_p, "fsdp-model N={n}: params diverge");
+        assert_eq!(l_g, t_g, "fsdp-model N={n}: grads diverge");
+    }
+}
+
+#[test]
+fn fsdp_background_collectives_match_sync_under_thread_launcher() {
+    // isolate the background collective engine itself: Thread launcher
+    // with per-rank comm threads vs Thread launcher with execute-at-join
+    // streams — the data path must be bit-identical (same ring chunk
+    // schedules, same issue order on the background lanes)
+    for granularity in [Granularity::Layer, Granularity::Model] {
+        for n in [2usize, 4, 8] {
+            let run_bg = |background: bool| {
+                let opts = EngineOpts::new("tiny", Strategy::Fsdp, n, n.max(2))
+                    .exec(ExecKind::Oracle)
+                    .fsdp_granularity(granularity)
+                    .launcher(Launcher::Thread)
+                    .async_rotation(background);
+                let cfg = opts.cfg().unwrap();
+                let mut e = build_engine(&opts).unwrap();
+                let mut rng = Rng::new(11);
+                let mut losses = Vec::new();
+                for _ in 0..2 {
+                    let batch = Batch::synth(&cfg, n.max(2), &mut rng);
+                    losses.push(e.step(&batch).unwrap());
+                }
+                (losses, e.gather_params(), e.gather_grads())
+            };
+            let (s_loss, s_p, s_g) = run_bg(false);
+            let (b_loss, b_p, b_g) = run_bg(true);
+            assert_eq!(
+                s_loss, b_loss,
+                "{granularity:?} N={n}: background collectives changed losses"
+            );
+            assert_eq!(
+                s_p, b_p,
+                "{granularity:?} N={n}: background collectives changed params"
+            );
+            assert_eq!(
+                s_g, b_g,
+                "{granularity:?} N={n}: background collectives changed grads"
+            );
+        }
     }
 }
 

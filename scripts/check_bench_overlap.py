@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Diff a fresh figures/BENCH_overlap.json against the committed
+repo-root baseline and fail on perf regressions.
+
+Rules (see BENCH_overlap.json's "note" field):
+  * keys ending in ``_overlap_fraction`` tracked in the baseline fail on a
+    relative regression of more than 10% (fresh < 0.9 * baseline);
+  * keys containing ``allocs`` tracked in the baseline fail on ANY
+    increase (the steady-state hot paths are allocation-free by
+    construction; the baseline values are explicit headroom);
+  * ``fsdp_measured_overlap_fraction`` must be strictly positive — the
+    background collective engine's acceptance bar: prefetch allgather and
+    backward reduce-scatter genuinely overlap compute on the data path;
+  * a baseline value of null means "informational only, not tracked".
+
+Usage: check_bench_overlap.py BASELINE FRESH
+"""
+
+import json
+import sys
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        base = json.load(f)
+    with open(sys.argv[2]) as f:
+        fresh = json.load(f)
+
+    failures = []
+    checked = 0
+
+    for key, bval in sorted(base.items()):
+        if not is_num(bval):
+            continue
+        fval = fresh.get(key)
+        if not is_num(fval):
+            if key.endswith("_overlap_fraction") or "allocs" in key:
+                failures.append(f"{key}: tracked in baseline but missing from fresh run")
+            continue
+        if key.endswith("_overlap_fraction"):
+            checked += 1
+            if fval < 0.9 * bval:
+                failures.append(
+                    f"{key}: overlap regressed >10% ({fval:.4f} < 0.9 * {bval:.4f})"
+                )
+            else:
+                print(f"ok  {key}: {fval:.4f} (baseline {bval:.4f})")
+        elif "allocs" in key:
+            checked += 1
+            if fval > bval:
+                failures.append(
+                    f"{key}: steady-state allocations increased ({fval:.0f} > {bval:.0f})"
+                )
+            else:
+                print(f"ok  {key}: {fval:.0f} (baseline headroom {bval:.0f})")
+
+    # acceptance bar: the background collective engine must measurably
+    # hide FSDP's collectives behind compute
+    fsdp = fresh.get("fsdp_measured_overlap_fraction")
+    if not is_num(fsdp):
+        failures.append("fsdp_measured_overlap_fraction: missing from fresh run")
+    elif fsdp <= 0.0:
+        failures.append(
+            f"fsdp_measured_overlap_fraction: not strictly positive ({fsdp})"
+        )
+    else:
+        print(f"ok  fsdp_measured_overlap_fraction strictly positive: {fsdp:.4f}")
+
+    if failures:
+        print("\nFAIL: BENCH_overlap regression vs committed baseline:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print(f"\nPASS: {checked} tracked metrics within baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
