@@ -198,6 +198,16 @@ enum StepKind {
     AllReduce(AllReduceStep),
 }
 
+/// The kind of a queued [`Collective`] — what the hop scheduler's
+/// `Priority` policy dispatches on (allgathers are latency-critical
+/// prefetches; reduce-scatters/allreduces are bandwidth buckets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollKind {
+    AllGather,
+    ReduceScatter,
+    AllReduce,
+}
+
 /// One QUEUED collective: a stepper plus the owned payload buffer it
 /// operates on — the unit of work a background comm thread executes. The
 /// buffer is caller-provided and returned at completion, so a persistent
@@ -235,6 +245,16 @@ impl Collective {
     /// An all-reduce (sum) of this rank's buffer against every peer's.
     pub fn allreduce(port: &RingPort, buf: Vec<f32>) -> Collective {
         Collective { kind: StepKind::AllReduce(AllReduceStep::new(port, buf.len())), buf }
+    }
+
+    /// Which collective this is — the hop scheduler's `Priority` policy
+    /// ranks prefetch allgathers above bucket reductions.
+    pub fn kind(&self) -> CollKind {
+        match &self.kind {
+            StepKind::AllGather(_) => CollKind::AllGather,
+            StepKind::ReduceScatter(_) => CollKind::ReduceScatter,
+            StepKind::AllReduce(_) => CollKind::AllReduce,
+        }
     }
 
     /// One ring hop; returns true when the collective is complete.

@@ -196,6 +196,51 @@ impl LinkModel {
     }
 }
 
+/// Completion time of each of several collectives run as a CONVOY on one
+/// serialized wire: collective `i+1`'s first hop starts only after
+/// collective `i`'s last hop — the FIFO background comm thread's
+/// schedule. `hop_scheds[i]` is collective `i`'s per-hop byte list
+/// ([`CommPrim::hop_schedule`]).
+pub fn convoy_completion_times(link: &LinkModel, hop_scheds: &[Vec<f64>]) -> Vec<f64> {
+    let mut t = 0.0;
+    hop_scheds
+        .iter()
+        .map(|hops| {
+            t += hops.iter().map(|&b| link.hop_time_f(b)).sum::<f64>();
+            t
+        })
+        .collect()
+}
+
+/// Completion time of the same collectives with their hops ROUND-ROBIN
+/// interleaved on the serialized wire — the hop-level scheduler's
+/// schedule. Total wire time is identical to the convoy (same hops, same
+/// wire), but short collectives stop queueing behind long ones: a
+/// latency-critical prefetch finishes after ~its own hops × the number
+/// of in-flight peers, not after the whole convoy ahead of it.
+pub fn interleaved_completion_times(
+    link: &LinkModel,
+    hop_scheds: &[Vec<f64>],
+) -> Vec<f64> {
+    let mut done = vec![0.0; hop_scheds.len()];
+    let mut next_hop = vec![0usize; hop_scheds.len()];
+    let mut remaining = hop_scheds.iter().filter(|h| !h.is_empty()).count();
+    let mut t = 0.0;
+    while remaining > 0 {
+        for (i, hops) in hop_scheds.iter().enumerate() {
+            if next_hop[i] < hops.len() {
+                t += link.hop_time_f(hops[next_hop[i]]);
+                next_hop[i] += 1;
+                if next_hop[i] == hops.len() {
+                    done[i] = t;
+                    remaining -= 1;
+                }
+            }
+        }
+    }
+    done
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,6 +330,41 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn interleaving_preserves_total_but_frees_short_collectives() {
+        // one big bucketed allreduce convoying ahead of a small prefetch
+        // allgather: interleaving must not change the total wire time,
+        // but the allgather's completion must drop well below its convoy
+        // position at the back of the queue
+        let l = link();
+        let n = 8;
+        let scheds = vec![
+            CommPrim::AllReduce.hop_schedule(64 << 20, n),
+            CommPrim::AllGather.hop_schedule(256 << 10, n),
+        ];
+        let convoy = convoy_completion_times(&l, &scheds);
+        let inter = interleaved_completion_times(&l, &scheds);
+        let total_c = convoy.iter().cloned().fold(0.0, f64::max);
+        let total_i = inter.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            (total_c - total_i).abs() / total_c < 1e-9,
+            "same hops, same wire: {total_c} vs {total_i}"
+        );
+        // round-robin bound: the 7-hop allgather completes after 7
+        // rounds of (one AR hop + one AG hop) ≈ half the 14-AR-hop
+        // convoy, instead of waiting out the whole allreduce first
+        assert!(
+            inter[1] < 0.6 * convoy[1],
+            "allgather should escape the convoy: {} vs {}",
+            inter[1],
+            convoy[1]
+        );
+        // empty schedules (n = 1) complete at time 0 under both
+        let empty = vec![CommPrim::AllGather.hop_schedule(1 << 20, 1)];
+        assert_eq!(convoy_completion_times(&l, &empty), vec![0.0]);
+        assert_eq!(interleaved_completion_times(&l, &empty), vec![0.0]);
     }
 
     #[test]

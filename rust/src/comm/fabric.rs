@@ -109,11 +109,20 @@ const PARK_SLICE: Duration = Duration::from_millis(25);
 
 /// Lane namespace of the rank bodies: rotation hops + blocking collectives.
 const CH_MAIN: usize = 0;
-/// Lane namespace of the background comm threads
+/// First background lane namespace
 /// ([`crate::comm::CollectiveStream`]): queued multi-hop collectives.
+/// Channels `CH_BG..CH_BG + BG_SUBCHANNELS` are all background.
 const CH_BG: usize = 1;
+/// Independent background sub-channels per directed link. The hop-level
+/// comm scheduler maps collective seq `s` onto sub-channel
+/// `s % BG_SUBCHANNELS` on EVERY rank, so hops of collectives on
+/// different sub-channels may interleave in any order (their FIFOs never
+/// mix) while each sub-channel individually keeps strict issue order —
+/// that is what makes scheduling-policy choices timing-independent and
+/// bit-identical by construction.
+pub(crate) const BG_SUBCHANNELS: usize = 4;
 /// How many independent lane namespaces each directed link carries.
-const CHANNELS: usize = 2;
+const CHANNELS: usize = CH_BG + BG_SUBCHANNELS;
 
 /// How a round's rank bodies are scheduled. See the module docs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -217,6 +226,17 @@ pub struct FabricCounters {
     /// `CollectiveStream::join`. `1 - bg_wait_ns / bg_busy_ns` is the
     /// measured fraction of collective time hidden behind compute.
     pub bg_wait_ns: u64,
+    /// Single collective hops stepped by the background comm threads'
+    /// hop-level scheduler.
+    pub sched_hops: u64,
+    /// Scheduler hops that switched to a DIFFERENT in-flight collective
+    /// than the previous hop (interleaving actually happening).
+    pub sched_switches: u64,
+    /// Longest run of consecutive hops a comm thread spent on ONE
+    /// collective while at least one other collective was runnable — the
+    /// hop-starvation witness. `RoundRobin` bounds this at 1 by
+    /// construction; `Fifo` lets it grow to a full collective's hop count.
+    pub sched_max_streak: u64,
 }
 
 #[derive(Default)]
@@ -228,6 +248,9 @@ struct CounterCells {
     bg_collectives: AtomicU64,
     bg_busy_ns: AtomicU64,
     bg_wait_ns: AtomicU64,
+    sched_hops: AtomicU64,
+    sched_switches: AtomicU64,
+    sched_max_streak: AtomicU64,
 }
 
 /// Global (non-hot-path) round state: the lockstep scheduler and the
@@ -427,6 +450,9 @@ impl RingFabric {
             bg_collectives: s.counters.bg_collectives.load(Ordering::SeqCst),
             bg_busy_ns: s.counters.bg_busy_ns.load(Ordering::SeqCst),
             bg_wait_ns: s.counters.bg_wait_ns.load(Ordering::SeqCst),
+            sched_hops: s.counters.sched_hops.load(Ordering::SeqCst),
+            sched_switches: s.counters.sched_switches.load(Ordering::SeqCst),
+            sched_max_streak: s.counters.sched_max_streak.load(Ordering::SeqCst),
         }
     }
 
@@ -441,6 +467,9 @@ impl RingFabric {
         c.bg_collectives.store(0, Ordering::SeqCst);
         c.bg_busy_ns.store(0, Ordering::SeqCst);
         c.bg_wait_ns.store(0, Ordering::SeqCst);
+        c.sched_hops.store(0, Ordering::SeqCst);
+        c.sched_switches.store(0, Ordering::SeqCst);
+        c.sched_max_streak.store(0, Ordering::SeqCst);
     }
 
     /// Override the threaded-recv watchdog for subsequent rounds on this
@@ -626,7 +655,7 @@ fn wait_graph(ctl: &Ctl) -> String {
             .filter_map(|(r, st)| match st {
                 RankState::Waiting { peer, ch } => Some(format!(
                     "r{r}<-r{peer}{}",
-                    if *ch == CH_BG { "(bg)" } else { "" }
+                    if *ch >= CH_BG { "(bg)" } else { "" }
                 )),
                 _ => None,
             })
@@ -691,21 +720,32 @@ impl RingPort {
         self.n
     }
 
-    /// This rank's endpoint on the BACKGROUND lane namespace: the same
-    /// ring edges, but an independent set of FIFO lanes that never
-    /// interleaves with main-thread traffic. Idempotent.
+    /// This rank's endpoint on the first BACKGROUND lane namespace: the
+    /// same ring edges, but an independent set of FIFO lanes that never
+    /// interleaves with main-thread traffic. Idempotent. Equivalent to
+    /// `bg_subchannel(0)`.
     pub fn background(&self) -> RingPort {
+        self.bg_subchannel(0)
+    }
+
+    /// This rank's endpoint on background sub-channel `i` (of
+    /// [`BG_SUBCHANNELS`]). The hop scheduler keys each collective's
+    /// traffic to ONE sub-channel on every rank, so collectives on
+    /// different sub-channels can interleave hop-by-hop without their
+    /// link FIFOs ever mixing.
+    pub(crate) fn bg_subchannel(&self, i: usize) -> RingPort {
+        assert!(i < BG_SUBCHANNELS, "bg sub-channel {i} out of range");
         RingPort {
             rank: self.rank,
             n: self.n,
-            ch: CH_BG,
+            ch: CH_BG + i,
             shared: Arc::clone(&self.shared),
         }
     }
 
-    /// Is this port bound to the background lane namespace?
+    /// Is this port bound to a background lane namespace?
     pub fn is_background(&self) -> bool {
-        self.ch == CH_BG
+        self.ch >= CH_BG
     }
 
     /// Background-engine accounting: one collective issued.
@@ -728,6 +768,25 @@ impl RingPort {
             .counters
             .bg_wait_ns
             .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Scheduler accounting: one hop stepped by the comm thread's
+    /// hop-level scheduler. `switched` = a different collective than the
+    /// previous hop on this thread.
+    pub(crate) fn note_sched_hop(&self, switched: bool) {
+        self.shared.counters.sched_hops.fetch_add(1, Ordering::Relaxed);
+        if switched {
+            self.shared.counters.sched_switches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Scheduler accounting: fold one comm thread's longest
+    /// same-collective-while-contested hop streak into the global max.
+    pub(crate) fn note_sched_streak(&self, streak: u64) {
+        self.shared
+            .counters
+            .sched_max_streak
+            .fetch_max(streak, Ordering::Relaxed);
     }
 
     /// The active poison reason, or `fallback` when none was recorded
@@ -1027,7 +1086,7 @@ impl RingPort {
                  (threaded round watchdog)",
                 self.rank,
                 self.rank,
-                if self.ch == CH_BG { " [bg lane]" } else { "" },
+                if self.ch >= CH_BG { " [bg lane]" } else { "" },
                 self.link_direction(peer)
             );
             sh.poison(&msg);
@@ -1053,7 +1112,7 @@ impl fmt::Debug for RingPort {
             "RingPort(rank {}/{}{})",
             self.rank,
             self.n,
-            if self.ch == CH_BG { ", bg" } else { "" }
+            if self.ch >= CH_BG { ", bg" } else { "" }
         )
     }
 }

@@ -68,11 +68,11 @@ pub mod stream;
 use std::any::Any;
 use std::collections::VecDeque;
 
-pub use coll::{AllGatherStep, AllReduceStep, Collective, ReduceScatterStep};
+pub use coll::{AllGatherStep, AllReduceStep, CollKind, Collective, ReduceScatterStep};
 pub use cost::{CommPrim, LinkModel};
 pub use fabric::{FabricCounters, LaunchPolicy, RingFabric, RingPort};
 pub use rotation::{shard_at, RotationDir};
-pub use stream::{CollHandle, CollectiveStream, CommStream, InFlight};
+pub use stream::{CollHandle, CollectiveStream, CommStream, InFlight, SchedPolicy};
 
 use coll::chunk_bounds;
 

@@ -35,14 +35,34 @@
 //! computes. A [`CollectiveStream`] is that someone: each rank queues
 //! collectives (`issue_allgather` / `issue_reduce_scatter` /
 //! `issue_allreduce`, returning joinable [`CollHandle`]s) and, under the
-//! Thread launcher, a DEDICATED PER-RANK COMM THREAD executes them in
-//! issue order over the rank's [`RingPort::background`] port — the
-//! background lane namespace, so collective hops never interleave with
-//! the main thread's rotation traffic on a link. Under Lockstep the same
-//! API degrades to deterministic execute-at-join on the caller's thread
-//! (draining earlier queued collectives first, so the background lanes
-//! see the exact same message order in both modes — the launcher
-//! bit-identity argument extends unchanged).
+//! Thread launcher, a DEDICATED PER-RANK COMM THREAD executes them over
+//! the rank's background lane namespace, so collective hops never
+//! interleave with the main thread's rotation traffic on a link. Under
+//! Lockstep the same API degrades to deterministic execute-at-join on
+//! the caller's thread (draining earlier queued collectives first, so
+//! the background lanes see the exact same message order in both modes —
+//! the launcher bit-identity argument extends unchanged).
+//!
+//! ### The hop-level scheduler
+//!
+//! The comm thread is not a serial pipe: it keeps a SET of in-flight
+//! collectives (the `comm/coll.rs` steppers are resumable) and schedules
+//! SINGLE HOPS across them under a pluggable [`SchedPolicy`] — `Fifo`
+//! reproduces the old convoy exactly, `RoundRobin` rotates across the
+//! in-flight set, `Priority` steps latency-critical prefetch allgathers
+//! ahead of bandwidth buckets (reduce-scatters / bucketed allreduces).
+//! Why any interleaving is safe: collective seq `s` rides background
+//! sub-channel `s % BG_SUBCHANNELS` on EVERY rank (the issue discipline
+//! below makes seq assignment identical across ranks), a rank steps the
+//! collectives of one sub-channel strictly in seq order, and different
+//! sub-channels use disjoint link FIFOs — so no rank can ever mis-match
+//! a peer's message to the wrong collective, regardless of how policies
+//! or timing interleave hops. Results are therefore BIT-IDENTICAL across
+//! all policies and both launchers by construction. To stay deadlock-free
+//! the scheduler only picks freely among heads whose next incoming
+//! message is already waiting (`pending_from`); when nothing is ready it
+//! blocks on the OLDEST in-flight collective, which every peer is
+//! guaranteed to drive (the convoy order), never on a younger one.
 //!
 //! Discipline: all ranks must issue the SAME collectives in the SAME
 //! order on their streams (symmetric SPMD), and every issued handle must
@@ -69,14 +89,66 @@
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Mutex;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::coll::Collective;
-use super::fabric::RingPort;
+use super::coll::{CollKind, Collective};
+use super::fabric::{RingPort, BG_SUBCHANNELS};
 use super::rotation::RotationDir;
+
+/// Which in-flight collective the background comm thread steps next.
+/// Selected per engine via `EngineOpts::sched_policy` or globally via
+/// `RTP_SCHED_POLICY` (`fifo` | `round-robin` | `priority`). Results are
+/// bit-identical across policies (module docs); only the hop
+/// interleaving — and with it how much communication hides behind
+/// compute — changes. Under Lockstep every policy degrades to the
+/// deterministic execute-at-join order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Run each collective to completion in issue order (the convoy —
+    /// today's historical behavior, and the baseline the bench compares
+    /// against).
+    #[default]
+    Fifo,
+    /// Rotate single hops across the in-flight collectives: every
+    /// runnable collective advances before any advances twice.
+    RoundRobin,
+    /// Prefetch allgathers outrank bucket reductions; ties (and
+    /// non-allgathers among themselves) fall back to issue order.
+    Priority,
+}
+
+impl SchedPolicy {
+    /// Read `RTP_SCHED_POLICY`; absent/empty means `Fifo`.
+    pub fn from_env() -> SchedPolicy {
+        match std::env::var("RTP_SCHED_POLICY").ok().as_deref() {
+            None | Some("") | Some("fifo") => SchedPolicy::Fifo,
+            Some("round-robin") | Some("roundrobin") | Some("rr") => {
+                SchedPolicy::RoundRobin
+            }
+            Some("priority") | Some("prio") => SchedPolicy::Priority,
+            Some(other) => panic!(
+                "RTP_SCHED_POLICY={other:?}: unknown policy \
+                 (fifo | round-robin | priority)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::RoundRobin => "round-robin",
+            SchedPolicy::Priority => "priority",
+        }
+    }
+}
+
+/// The background sub-channel collective seq `s` rides on every rank.
+fn subchannel_of(seq: u64) -> usize {
+    (seq % BG_SUBCHANNELS as u64) as usize
+}
 
 /// One rank's rotation stream. Cheap to construct (clones a port handle);
 /// `async_mode` decides eager-in-flight vs deferred-synchronous hops.
@@ -205,8 +277,10 @@ enum Inner {
 /// via [`crate::parallel::RankCtx::collectives`] (engines) or
 /// [`CollectiveStream::new`] (tests); drop joins the comm thread.
 pub struct CollectiveStream {
-    /// This rank's background-lane port (the comm thread holds a clone).
+    /// This rank's background-lane port (sub-channel 0; the comm thread
+    /// holds one clone per sub-channel).
     port: RingPort,
+    policy: SchedPolicy,
     inner: Inner,
 }
 
@@ -215,8 +289,19 @@ impl CollectiveStream {
     /// only meaningful when rank bodies run concurrently (Thread
     /// launcher). Otherwise collectives execute at join on the caller's
     /// thread, in issue order. Either way all traffic rides the
-    /// background lane namespace of `port`'s fabric.
+    /// background lane namespaces of `port`'s fabric. The hop scheduler
+    /// runs under the `RTP_SCHED_POLICY` policy; engines plumb an
+    /// explicit choice through [`CollectiveStream::with_policy`].
     pub fn new(port: RingPort, background: bool) -> CollectiveStream {
+        CollectiveStream::with_policy(port, background, SchedPolicy::from_env())
+    }
+
+    /// [`CollectiveStream::new`] with an explicit hop-scheduling policy.
+    pub fn with_policy(
+        port: RingPort,
+        background: bool,
+        policy: SchedPolicy,
+    ) -> CollectiveStream {
         let port = port.background();
         if background && port.n() > 1 {
             let (jtx, jrx) = channel::<Job>();
@@ -224,10 +309,11 @@ impl CollectiveStream {
             let tport = port.clone();
             let thread = std::thread::Builder::new()
                 .name(format!("rtp-comm-r{}", port.rank()))
-                .spawn(move || comm_thread_main(tport, jrx, rtx))
+                .spawn(move || comm_thread_main(tport, policy, jrx, rtx))
                 .expect("failed to spawn background comm thread");
             CollectiveStream {
                 port,
+                policy,
                 inner: Inner::Bg(Bg {
                     jobs: Mutex::new(jtx),
                     results: Mutex::new(rrx),
@@ -239,6 +325,7 @@ impl CollectiveStream {
         } else {
             CollectiveStream {
                 port,
+                policy,
                 inner: Inner::Sync(Mutex::new(SyncQueue {
                     next_seq: 0,
                     pending: VecDeque::new(),
@@ -246,6 +333,13 @@ impl CollectiveStream {
                 })),
             }
         }
+    }
+
+    /// The hop-scheduling policy this stream's comm thread runs under
+    /// (informational in sync mode, where execute-at-join is always the
+    /// deterministic FIFO order).
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
     }
 
     /// Is a dedicated comm thread driving the queue (true overlap), as
@@ -316,7 +410,11 @@ impl CollectiveStream {
                         .pending
                         .pop_front()
                         .expect("join of an unknown collective handle");
-                    while !coll.step(&self.port) {}
+                    // same seq -> sub-channel mapping as the comm thread,
+                    // so both modes put identical message sequences on
+                    // identical lanes
+                    let sp = self.port.bg_subchannel(subchannel_of(seq));
+                    while !coll.step(&sp) {}
                     let buf = coll.into_buf();
                     if seq == handle.seq {
                         let d = t0.elapsed();
@@ -365,11 +463,31 @@ impl CollectiveStream {
 
 impl Drop for CollectiveStream {
     fn drop(&mut self) {
-        if let Inner::Bg(bg) = &self.inner {
-            // best effort: the thread may already be dead (poisoned round)
-            let _ = lock(&bg.jobs).send(Job::Shutdown);
-            if let Some(t) = lock(&bg.thread).take() {
-                let _ = t.join();
+        match &self.inner {
+            Inner::Bg(bg) => {
+                // best effort: the thread may already be dead (poisoned
+                // round)
+                let _ = lock(&bg.jobs).send(Job::Shutdown);
+                if let Some(t) = lock(&bg.thread).take() {
+                    let _ = t.join();
+                }
+            }
+            Inner::Sync(q) => {
+                // an entry in `done` is a collective drained ahead of an
+                // out-of-order join whose own handle was then never
+                // joined — a silent leak of the issue-all/join-all
+                // discipline. (Skipped while unwinding: abort paths drop
+                // streams with work legitimately outstanding.)
+                if !std::thread::panicking() {
+                    let q = lock(q);
+                    debug_assert!(
+                        q.done.is_empty(),
+                        "rank {}: CollectiveStream dropped with {} early \
+                         result(s) never claimed by a join",
+                        self.port.rank(),
+                        q.done.len()
+                    );
+                }
             }
         }
     }
@@ -387,27 +505,145 @@ impl std::fmt::Debug for CollectiveStream {
     }
 }
 
-/// The per-rank comm thread: executes queued collectives in issue order
-/// over this rank's background-lane port. Exits on `Shutdown`, a dropped
-/// job channel, or (by unwinding) a poisoned fabric recv — dropping its
-/// result sender either way, which is what a joining rank body observes.
+/// The per-rank comm thread: the HOP-LEVEL SCHEDULER (module docs).
+/// Maintains the set of in-flight collectives, admits newly issued work
+/// between hops without blocking, and steps ONE hop of one collective at
+/// a time, chosen by `policy`. Exits once `Shutdown` has been seen and
+/// the in-flight set has drained, on a dropped job channel, or (by
+/// unwinding) a poisoned fabric recv — dropping its result sender either
+/// way, which is what a joining rank body observes.
 fn comm_thread_main(
     port: RingPort,
+    policy: SchedPolicy,
     jobs: Receiver<Job>,
     results: Sender<(u64, Vec<f32>)>,
 ) {
-    while let Ok(job) = jobs.recv() {
-        match job {
-            Job::Shutdown => break,
-            Job::Run(seq, mut coll) => {
-                let t0 = Instant::now();
-                while !coll.step(&port) {}
-                port.note_bg_busy(t0.elapsed());
-                if results.send((seq, coll.into_buf())).is_err() {
-                    break; // stream dropped mid-join: nothing to report to
+    let subports: Vec<RingPort> =
+        (0..BG_SUBCHANNELS).map(|i| port.bg_subchannel(i)).collect();
+    // kept sorted by seq: jobs arrive in issue order
+    let mut inflight: VecDeque<(u64, Collective)> = VecDeque::new();
+    let mut shutdown = false;
+    // fairness accounting: consecutive contested hops on one collective
+    let mut last_seq: Option<u64> = None;
+    let mut streak: u64 = 0;
+    loop {
+        if inflight.is_empty() {
+            if shutdown {
+                return;
+            }
+            // idle: block for the next job
+            match jobs.recv() {
+                Ok(Job::Run(seq, coll)) => inflight.push_back((seq, coll)),
+                Ok(Job::Shutdown) | Err(_) => return,
+            }
+        }
+        // admit everything already issued, without blocking
+        loop {
+            match jobs.try_recv() {
+                Ok(Job::Run(seq, coll)) => inflight.push_back((seq, coll)),
+                Ok(Job::Shutdown) | Err(TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(TryRecvError::Empty) => break,
+            }
+        }
+
+        // per-sub-channel heads: only the OLDEST in-flight collective of
+        // each sub-channel may move (strict seq order within a
+        // sub-channel is the cross-rank matching invariant)
+        let mut head_idx = [usize::MAX; BG_SUBCHANNELS];
+        let mut heads = 0usize;
+        for (i, (seq, _)) in inflight.iter().enumerate() {
+            let sc = subchannel_of(*seq);
+            if head_idx[sc] == usize::MAX {
+                head_idx[sc] = i;
+                heads += 1;
+                if heads == BG_SUBCHANNELS {
+                    break;
                 }
             }
         }
+        let pick = pick_head(policy, &inflight, &head_idx, &subports, last_seq);
+        let contested = heads > 1;
+
+        let (seq, coll) = &mut inflight[pick];
+        let seq = *seq;
+        let t0 = Instant::now();
+        let done = coll.step(&subports[subchannel_of(seq)]);
+        port.note_bg_busy(t0.elapsed());
+
+        let switched = last_seq != Some(seq);
+        port.note_sched_hop(switched);
+        if switched {
+            streak = 0;
+        } else if contested {
+            streak += 1;
+            port.note_sched_streak(streak);
+        }
+        last_seq = Some(seq);
+
+        if done {
+            let (s, coll) = inflight.remove(pick).expect("picked head exists");
+            if results.send((s, coll.into_buf())).is_err() {
+                return; // stream dropped mid-join: nothing to report to
+            }
+        }
+    }
+}
+
+/// Choose which head collective steps its next hop. `Fifo` always
+/// advances the oldest (the exact historical convoy). The interleaving
+/// policies prefer heads whose next incoming message is ALREADY waiting
+/// (their hop completes without blocking); when none is ready they fall
+/// back to the oldest in-flight collective — the one choice every peer
+/// is guaranteed to drive, which keeps blocking deadlock-free.
+fn pick_head(
+    policy: SchedPolicy,
+    inflight: &VecDeque<(u64, Collective)>,
+    head_idx: &[usize; BG_SUBCHANNELS],
+    subports: &[RingPort],
+    last_seq: Option<u64>,
+) -> usize {
+    if policy == SchedPolicy::Fifo || inflight.len() == 1 {
+        return 0;
+    }
+    let mut ready = [0usize; BG_SUBCHANNELS];
+    let mut nready = 0usize;
+    for (sc, &i) in head_idx.iter().enumerate() {
+        if i != usize::MAX {
+            let p = &subports[sc];
+            if p.pending_from(p.prev()) > 0 {
+                ready[nready] = i;
+                nready += 1;
+            }
+        }
+    }
+    if nready == 0 {
+        return 0;
+    }
+    let ready = &mut ready[..nready];
+    // ready was collected in sub-channel order; policies rank by seq
+    ready.sort_unstable_by_key(|&i| inflight[i].0);
+    match policy {
+        SchedPolicy::Fifo => unreachable!("handled above"),
+        // round-robin by seq: the first ready head past the one stepped
+        // last, wrapping — with several ready heads the scheduler never
+        // steps the same collective twice in a row
+        SchedPolicy::RoundRobin => {
+            let after = last_seq.unwrap_or(0);
+            ready
+                .iter()
+                .copied()
+                .find(|&i| inflight[i].0 > after)
+                .unwrap_or(ready[0])
+        }
+        // allgathers (prefetches) outrank everything; ties in seq order
+        SchedPolicy::Priority => ready
+            .iter()
+            .copied()
+            .find(|&i| inflight[i].1.kind() == CollKind::AllGather)
+            .unwrap_or(ready[0]),
     }
 }
 
@@ -595,5 +831,38 @@ mod tests {
             assert_eq!(o, vec![3.0, 21.0]);
         }
         assert_eq!(fab.in_flight(), 0);
+    }
+
+    #[test]
+    fn sync_stream_out_of_order_joins_drain_cleanly() {
+        // regression for the early-results leak check: scrambled joins
+        // that DO claim every handle must leave `done` empty, so the
+        // drop-time assertion stays silent. n=1 keeps it hermetic (no
+        // round needed — single-rank collectives complete locally).
+        let fab = RingFabric::new(1);
+        let stream = CollectiveStream::new(fab.port(0), false);
+        let h1 = stream.issue_allreduce(vec![1.0]);
+        let h2 = stream.issue_allreduce(vec![2.0]);
+        let h3 = stream.issue_allreduce(vec![3.0]);
+        assert_eq!(stream.join(h3), vec![3.0]);
+        assert_eq!(stream.join(h1), vec![1.0]);
+        assert_eq!(stream.join(h2), vec![2.0]);
+        drop(stream); // must not trip the early-results assertion
+        assert_eq!(fab.in_flight(), 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "never claimed by a join")]
+    fn sync_stream_drop_flags_unclaimed_early_results() {
+        // joining h2 drains h1 into `done` (issue-order execution); never
+        // claiming h1 afterwards is the leak the drop assertion exists to
+        // catch
+        let fab = RingFabric::new(1);
+        let stream = CollectiveStream::new(fab.port(0), false);
+        let _leaked = stream.issue_allreduce(vec![1.0]);
+        let h2 = stream.issue_allreduce(vec![2.0]);
+        let _ = stream.join(h2);
+        drop(stream);
     }
 }

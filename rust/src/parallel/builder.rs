@@ -7,6 +7,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, Result};
 
 use crate::cluster::{Cluster, TraceLog};
+use crate::comm::SchedPolicy;
 use crate::config::{presets, ModelCfg, ParallelCfg, Strategy};
 use crate::perfmodel::{Hardware, Timeline};
 use crate::runtime::{artifacts_root, Exec, PjrtRuntime};
@@ -64,6 +65,35 @@ pub struct EngineOpts {
     /// baseline the overlap benches compare against. No effect under
     /// Lockstep (always synchronous, for determinism).
     pub async_rotation: bool,
+    /// Hop-level scheduling policy for the background collective engine
+    /// (defaults to `RTP_SCHED_POLICY` env; [`SchedPolicy::Fifo`] when
+    /// unset). Under Lockstep every policy degrades to deterministic
+    /// FIFO, so results stay bit-identical across policies.
+    pub sched_policy: SchedPolicy,
+    /// Size target (bytes) for gradient bucketing in DDP/RTP backward:
+    /// the flat grad vector is split into contiguous buckets of roughly
+    /// this many bytes and each bucket's allreduce is issued as its own
+    /// in-flight collective, giving the hop scheduler several
+    /// collectives to interleave. `None` (default, or `RTP_BUCKET_BYTES`
+    /// unset/0) keeps today's single monolithic allreduce. NOTE:
+    /// bucketing changes ring-chunk boundaries and therefore float
+    /// summation order — results are bit-identical across policies and
+    /// launchers *given the same bucket size*, but not between bucketed
+    /// and monolithic runs.
+    pub bucket_bytes: Option<u64>,
+}
+
+/// `RTP_BUCKET_BYTES` env knob: unset, empty or `0` = monolithic.
+fn bucket_bytes_from_env() -> Option<u64> {
+    match std::env::var("RTP_BUCKET_BYTES") {
+        Ok(s) if s.trim().is_empty() => None,
+        Ok(s) => match s.trim().parse::<u64>() {
+            Ok(0) => None,
+            Ok(b) => Some(b),
+            Err(_) => panic!("RTP_BUCKET_BYTES={s:?}: expected a byte count"),
+        },
+        Err(_) => None,
+    }
 }
 
 impl EngineOpts {
@@ -82,6 +112,8 @@ impl EngineOpts {
             rtp_recycle: true,
             launcher: Launcher::from_env(),
             async_rotation: true,
+            sched_policy: SchedPolicy::from_env(),
+            bucket_bytes: bucket_bytes_from_env(),
         }
     }
 
@@ -119,6 +151,14 @@ impl EngineOpts {
     }
     pub fn async_rotation(mut self, a: bool) -> Self {
         self.async_rotation = a;
+        self
+    }
+    pub fn sched_policy(mut self, p: SchedPolicy) -> Self {
+        self.sched_policy = p;
+        self
+    }
+    pub fn bucket_bytes(mut self, b: Option<u64>) -> Self {
+        self.bucket_bytes = b;
         self
     }
 
@@ -199,6 +239,8 @@ pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
             trace_log: &trace,
             trace_on: false,
             async_comm: false,
+            sched_policy: opts.sched_policy,
+            bucket_bytes: opts.bucket_bytes,
         };
         let rank: Box<dyn RankEngine> = match opts.strategy {
             Strategy::Single => Box::new(SingleRank::new(&mut rctx, opts.seed)?),
@@ -228,6 +270,8 @@ pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
         ranks,
         opts.launcher,
         opts.async_rotation,
+        opts.sched_policy,
+        opts.bucket_bytes,
         opts.engine_name(),
     )))
 }

@@ -18,6 +18,7 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+use crate::comm::SchedPolicy;
 use crate::memory::tracker::MemTracker;
 use crate::model::ModelParams;
 use crate::runtime::Exec;
@@ -36,16 +37,23 @@ pub struct ClusterEngine {
     /// Engine-level wish for true async comm streams; effective only when
     /// the launcher actually overlaps (`launcher.overlaps_comm()`).
     pub async_rotation: bool,
+    /// Hop-level scheduling policy for the background collective engine.
+    pub sched_policy: SchedPolicy,
+    /// Gradient-bucketing size target (`None` = monolithic).
+    pub bucket_bytes: Option<u64>,
     name: String,
 }
 
 impl ClusterEngine {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         ctx: Ctx,
         extra_execs: Vec<Exec>,
         ranks: Vec<Box<dyn RankEngine>>,
         launcher: Launcher,
         async_rotation: bool,
+        sched_policy: SchedPolicy,
+        bucket_bytes: Option<u64>,
         name: String,
     ) -> Self {
         assert_eq!(ranks.len(), ctx.par.workers, "one rank engine per worker");
@@ -54,7 +62,16 @@ impl ClusterEngine {
             ranks.len() - 1,
             "one executor per rank (rank 0 uses ctx.exec)"
         );
-        ClusterEngine { ctx, extra_execs, ranks, launcher, async_rotation, name }
+        ClusterEngine {
+            ctx,
+            extra_execs,
+            ranks,
+            launcher,
+            async_rotation,
+            sched_policy,
+            bucket_bytes,
+            name,
+        }
     }
 
     /// Per-rank engine access (launcher-equivalence tests).
@@ -122,6 +139,8 @@ impl Engine for ClusterEngine {
                     trace_log: &trace,
                     trace_on,
                     async_comm,
+                    sched_policy: self.sched_policy,
+                    bucket_bytes: self.bucket_bytes,
                 });
             }
             let tasks: Vec<Box<dyn FnOnce() -> Result<f32> + Send + '_>> = self

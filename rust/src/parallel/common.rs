@@ -19,7 +19,7 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use crate::cluster::{Cluster, TraceEvent, TraceLog};
-use crate::comm::{CollectiveStream, CommPrim, CommStream, RingPort};
+use crate::comm::{CollectiveStream, CommPrim, CommStream, RingPort, SchedPolicy};
 use crate::config::{ModelCfg, ParallelCfg};
 use crate::memory::tracker::{AllocId, MemCategory, MemTracker};
 use crate::model::ops::{self, Op};
@@ -129,6 +129,12 @@ pub struct RankCtx<'a> {
     /// is always false, so streams degrade to the deterministic
     /// synchronous boundary schedule.
     pub async_comm: bool,
+    /// Hop-level scheduling policy for this rank's background collective
+    /// engine (identical on every rank; results are policy-invariant).
+    pub sched_policy: SchedPolicy,
+    /// Size target for gradient bucketing (`None` = one monolithic
+    /// bucket, the historical behavior). Identical on every rank.
+    pub bucket_bytes: Option<u64>,
 }
 
 impl<'a> RankCtx<'a> {
@@ -162,7 +168,12 @@ impl<'a> RankCtx<'a> {
     /// lazily at the first step (construction-time contexts predate the
     /// launcher decision) and keep it for the rank's lifetime.
     pub fn collectives(&self) -> CollectiveStream {
-        CollectiveStream::new(self.port.clone(), self.async_comm)
+        CollectiveStream::with_policy(self.port.clone(), self.async_comm, self.sched_policy)
+    }
+
+    /// Gradient-bucket size target in ELEMENTS (`None` = unbucketed).
+    pub fn bucket_elems(&self) -> Option<usize> {
+        self.bucket_bytes.map(|b| ((b / 4) as usize).max(1))
     }
 
     /// Allocate a tracked buffer on this rank.
@@ -589,6 +600,8 @@ mod tests {
                 trace_log: &self.trace,
                 trace_on,
                 async_comm: false,
+                sched_policy: SchedPolicy::Fifo,
+                bucket_bytes: None,
             }
         }
     }
@@ -654,6 +667,8 @@ mod tests {
             trace_log: &h.trace,
             trace_on,
             async_comm: false,
+            sched_policy: SchedPolicy::Fifo,
+            bucket_bytes: None,
         };
         c.charge_comm("ar", crate::comm::CommPrim::AllReduce, 4 << 20);
         c.phase("forward");

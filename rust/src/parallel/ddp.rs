@@ -20,6 +20,7 @@ use crate::perfmodel::Token;
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
+use super::bucket::GradBuckets;
 use super::common::{Batch, RankCtx, TBuf};
 use super::dense::{dense_step, DenseHooks, Phase, Slot, Unit};
 use super::single::grad_into;
@@ -35,6 +36,9 @@ pub struct DdpRank {
     /// Background collective engine: the full-grad allreduce rides the
     /// per-rank comm thread under the Thread launcher.
     coll: Option<CollectiveStream>,
+    /// Persistent per-bucket scratch for the size-targeted bucketed
+    /// allreduce (`RankCtx::bucket_elems`; unused when monolithic).
+    buckets: GradBuckets,
 }
 
 struct DdpHooks {
@@ -113,6 +117,7 @@ impl DdpRank {
             pending: Vec::new(),
             flat_scratch: Vec::new(),
             coll: None,
+            buckets: GradBuckets::new(),
         })
     }
 }
@@ -179,7 +184,15 @@ impl RankEngine for DdpRank {
             let mut flat = std::mem::take(&mut self.flat_scratch);
             let grads = self.hooks.grads.as_mut().unwrap();
             pack_params(grads, &mut flat);
-            let flat = stream.join(stream.issue_allreduce(flat));
+            match ctx.bucket_elems() {
+                // size-targeted buckets: every bucket's allreduce is in
+                // flight at once, giving the hop scheduler a set of
+                // collectives to interleave
+                Some(target) => {
+                    self.buckets.allreduce_flat(stream, &mut flat, target);
+                }
+                None => flat = stream.join(stream.issue_allreduce(flat)),
+            }
             unpack_params_scaled(grads, &flat, 1.0 / n as f32);
             self.flat_scratch = flat;
         }

@@ -23,6 +23,15 @@
 //! across steps, so the whole path performs zero steady-state heap
 //! allocations.
 //!
+//! During backward the stream routinely holds a latency-critical
+//! prefetch allgather AND several pending grad reduce-scatters at once —
+//! exactly the multi-collective set the comm thread's hop-level
+//! scheduler ([`SchedPolicy`](crate::comm::SchedPolicy), plumbed through
+//! `EngineOpts::sched_policy`) interleaves: under `RoundRobin`/`Priority`
+//! the prefetch stops convoying behind the reduce-scatter queue, without
+//! any change to this engine's code or its results (bit-identical across
+//! policies by the sub-channel construction in `comm/stream.rs`).
+//!
 //! Under the old god-view engine every worker re-ran the WHOLE ring
 //! allgather once per worker (correct but N× redundant). With per-rank
 //! engines each rank runs its own side of ONE allgather per unit — the

@@ -51,6 +51,7 @@
 //! exposes the real hop structure the paper's §3.4 analysis is about. A
 //! finished `step` always leaves the fabric drained (asserted).
 
+pub mod bucket;
 pub mod builder;
 pub mod cluster_engine;
 pub mod common;

@@ -63,6 +63,7 @@ use crate::runtime::{arg_of, Buf};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
+use super::bucket::GradBuckets;
 use super::common::{
     allgather_tensor, replicated_elems, scatter_dgates, top1_gates, Batch, RankCtx,
     RepParams, TBuf,
@@ -270,6 +271,9 @@ pub struct RtpRank {
     /// Background collective engine: the replicated-grad allreduce rides
     /// the per-rank comm thread under the Thread launcher.
     coll: Option<CollectiveStream>,
+    /// Persistent per-bucket scratch for the size-targeted bucketed
+    /// allreduce (`RankCtx::bucket_elems`; unused when monolithic).
+    rep_buckets: GradBuckets,
 }
 
 impl RtpRank {
@@ -384,6 +388,7 @@ impl RtpRank {
             bytes,
             rep_scratch: Vec::new(),
             coll: None,
+            rep_buckets: GradBuckets::new(),
         })
     }
 
@@ -1354,7 +1359,14 @@ impl RankEngine for RtpRank {
                 let stream = self.coll.as_ref().unwrap();
                 let mut flat = std::mem::take(&mut self.rep_scratch);
                 gr.pack_into(&mut flat);
-                let flat = stream.join(stream.issue_allreduce(flat));
+                match ctx.bucket_elems() {
+                    // size-targeted buckets: all in flight at once for
+                    // the hop scheduler to interleave
+                    Some(target) => {
+                        self.rep_buckets.allreduce_flat(stream, &mut flat, target);
+                    }
+                    None => flat = stream.join(stream.issue_allreduce(flat)),
+                }
                 gr.unpack(&flat);
                 gr.visit_mut(&mut |t| t.scale(scale));
                 self.rep_scratch = flat;

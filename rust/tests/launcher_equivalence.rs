@@ -13,7 +13,7 @@
 //! drop messages, and a simulated OOM must abort a round cleanly even
 //! with a comm-stream rotation in flight.
 
-use rtp::comm::{LaunchPolicy, RingFabric};
+use rtp::comm::{CollectiveStream, LaunchPolicy, RingFabric, SchedPolicy};
 use rtp::config::Strategy;
 use rtp::model::ModelParams;
 use rtp::parallel::fsdp::Granularity;
@@ -142,6 +142,229 @@ fn fsdp_background_collectives_match_sync_under_thread_launcher() {
             assert_eq!(
                 s_g, b_g,
                 "{granularity:?} N={n}: background collectives changed grads"
+            );
+        }
+    }
+}
+
+/// Like [`run`] but with an explicit hop-scheduling policy and gradient
+/// bucket size.
+fn run_sched(
+    preset: &str,
+    strategy: Strategy,
+    n: usize,
+    launcher: Launcher,
+    policy: SchedPolicy,
+    bucket_bytes: Option<u64>,
+) -> (Vec<f32>, ModelParams, ModelParams) {
+    let opts = EngineOpts::new(preset, strategy, n, n.max(2))
+        .exec(ExecKind::Oracle)
+        .launcher(launcher)
+        .sched_policy(policy)
+        .bucket_bytes(bucket_bytes);
+    let cfg = opts.cfg().unwrap();
+    let mut e = build_engine(&opts).unwrap();
+    let mut rng = Rng::new(7);
+    let mut losses = Vec::new();
+    for _ in 0..2 {
+        let batch = Batch::synth(&cfg, n.max(2), &mut rng);
+        losses.push(e.step(&batch).unwrap());
+    }
+    (losses, e.gather_params(), e.gather_grads())
+}
+
+const POLICIES: [SchedPolicy; 3] =
+    [SchedPolicy::Fifo, SchedPolicy::RoundRobin, SchedPolicy::Priority];
+
+#[test]
+fn sched_policies_are_bit_identical_for_fsdp() {
+    // the scheduler changes WHEN hops run, never WHAT they carry: the
+    // sub-channel construction (comm/stream.rs module docs) makes every
+    // policy bit-identical to the Lockstep/Fifo reference. FSDP is the
+    // engine whose stream genuinely holds several collectives at once
+    // (prefetch allgather + pending reduce-scatters).
+    for n in [2usize, 4, 8] {
+        let (r_loss, r_p, r_g) = run_sched(
+            "tiny",
+            Strategy::Fsdp,
+            n,
+            Launcher::Lockstep,
+            SchedPolicy::Fifo,
+            None,
+        );
+        // Lockstep ignores the policy (deterministic execute-at-join)...
+        let (l_loss, l_p, l_g) = run_sched(
+            "tiny",
+            Strategy::Fsdp,
+            n,
+            Launcher::Lockstep,
+            SchedPolicy::RoundRobin,
+            None,
+        );
+        assert_eq!(r_loss, l_loss, "N={n}: lockstep must ignore the policy");
+        assert_eq!(r_p, l_p, "N={n}: lockstep must ignore the policy");
+        assert_eq!(r_g, l_g, "N={n}: lockstep must ignore the policy");
+        // ...and every Thread-launcher policy matches the reference
+        for policy in POLICIES {
+            let (t_loss, t_p, t_g) =
+                run_sched("tiny", Strategy::Fsdp, n, Launcher::Thread, policy, None);
+            let pname = policy.name();
+            assert_eq!(r_loss, t_loss, "{pname} N={n}: losses diverge");
+            assert_eq!(r_p, t_p, "{pname} N={n}: params diverge");
+            assert_eq!(r_g, t_g, "{pname} N={n}: grads diverge");
+        }
+    }
+}
+
+#[test]
+fn bucketed_allreduce_is_policy_and_launcher_invariant() {
+    // gradient bucketing changes ring-chunk boundaries (and so float
+    // summation order) vs the monolithic allreduce — but GIVEN one bucket
+    // size, results must stay bit-identical across policies and
+    // launchers. 16 KiB on tiny's ~150 KB flat grads yields ~10 buckets,
+    // so DDP's backward really does put multiple allreduces in flight.
+    let bucket = Some(16u64 << 10);
+    for n in [2usize, 4, 8] {
+        let (r_loss, r_p, r_g) = run_sched(
+            "tiny",
+            Strategy::Ddp,
+            n,
+            Launcher::Lockstep,
+            SchedPolicy::Fifo,
+            bucket,
+        );
+        for policy in POLICIES {
+            let (t_loss, t_p, t_g) =
+                run_sched("tiny", Strategy::Ddp, n, Launcher::Thread, policy, bucket);
+            let pname = policy.name();
+            assert_eq!(r_loss, t_loss, "{pname} N={n}: bucketed losses diverge");
+            assert_eq!(r_p, t_p, "{pname} N={n}: bucketed params diverge");
+            assert_eq!(r_g, t_g, "{pname} N={n}: bucketed grads diverge");
+        }
+    }
+    // RTP's replicated-grad allreduce rides the same GradBuckets helper —
+    // pin that path too (tiny's 4 heads divide N ∈ {2, 4}; a 1 KiB
+    // target keeps even the small replicated grads multi-bucket)
+    let rep_bucket = Some(1u64 << 10);
+    for n in [2usize, 4] {
+        let (r_loss, r_p, r_g) = run_sched(
+            "tiny",
+            Strategy::RtpOutOfPlace,
+            n,
+            Launcher::Lockstep,
+            SchedPolicy::Fifo,
+            rep_bucket,
+        );
+        for policy in POLICIES {
+            let (t_loss, t_p, t_g) = run_sched(
+                "tiny",
+                Strategy::RtpOutOfPlace,
+                n,
+                Launcher::Thread,
+                policy,
+                rep_bucket,
+            );
+            let pname = policy.name();
+            assert_eq!(r_loss, t_loss, "rtp {pname} N={n}: losses diverge");
+            assert_eq!(r_p, t_p, "rtp {pname} N={n}: params diverge");
+            assert_eq!(r_g, t_g, "rtp {pname} N={n}: grads diverge");
+        }
+    }
+}
+
+#[test]
+fn multi_collective_stress_interleaves_without_crosstalk() {
+    // fabric-level stress for the hop scheduler: four mixed-kind,
+    // mixed-size collectives in flight per rank on the background lanes
+    // WHILE the rank body hammers the main lanes — values must match the
+    // closed forms, the main-lane traffic must arrive in order (no
+    // bg/main crosstalk), and the fairness counters must stay in bounds.
+    for policy in [SchedPolicy::RoundRobin, SchedPolicy::Priority] {
+        for n in [2usize, 4, 8] {
+            let fab = RingFabric::new(n);
+            fab.reset_counters();
+            let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..n)
+                .map(|r| {
+                    let port = fab.port(r);
+                    Box::new(move || {
+                        let stream =
+                            CollectiveStream::with_policy(port.clone(), true, policy);
+                        assert!(stream.is_background());
+                        // integer payloads: sums are exact under any
+                        // summation order
+                        let big: Vec<f32> =
+                            (0..4096).map(|i| ((r + i) % 17) as f32).collect();
+                        let rs_full: Vec<f32> =
+                            (0..8 * n).map(|i| (r * 100 + i) as f32).collect();
+                        let shard = vec![r as f32 + 1.0; 16];
+                        let small = vec![r as f32; 32];
+                        let h_big = stream.issue_allreduce(big);
+                        let h_rs = stream.issue_reduce_scatter(rs_full);
+                        let h_ag = stream.issue_allgather(&shard, Vec::new());
+                        let h_small = stream.issue_allreduce(small);
+                        // concurrent MAIN-lane traffic while all four
+                        // collectives are in flight on the bg lanes
+                        for i in 0..50usize {
+                            port.send(port.next(), (r, i));
+                            let (src, seq): (usize, usize) = port.recv(port.prev());
+                            assert_eq!(
+                                (src, seq),
+                                (port.prev(), i),
+                                "main lane reordered under bg load"
+                            );
+                        }
+                        // scrambled joins
+                        let ag = stream.join(h_ag);
+                        let small = stream.join(h_small);
+                        let big_out = stream.join(h_big);
+                        let rs = stream.join(h_rs);
+                        let want_ag: Vec<f32> = (0..n)
+                            .flat_map(|s| vec![s as f32 + 1.0; 16])
+                            .collect();
+                        assert_eq!(ag, want_ag, "{policy:?} n={n}");
+                        let want_small =
+                            vec![(0..n).map(|s| s as f32).sum::<f32>(); 32];
+                        assert_eq!(small, want_small, "{policy:?} n={n}");
+                        for (i, v) in big_out.iter().enumerate() {
+                            let want: f32 =
+                                (0..n).map(|s| ((s + i) % 17) as f32).sum();
+                            assert_eq!(*v, want, "{policy:?} n={n} i={i}");
+                        }
+                        let mine = &rs[r * 8..(r + 1) * 8];
+                        for (i, v) in mine.iter().enumerate() {
+                            let want: f32 = (0..n)
+                                .map(|s| (s * 100 + r * 8 + i) as f32)
+                                .sum();
+                            assert_eq!(*v, want, "{policy:?} n={n} i={i}");
+                        }
+                    }) as Box<dyn FnOnce() + Send>
+                })
+                .collect();
+            fab.run_round(LaunchPolicy::Threaded, tasks);
+            assert_eq!(fab.in_flight(), 0, "{policy:?} n={n}");
+            let c = fab.counters();
+            // every rank's comm thread steps exactly its collectives'
+            // hops: 2 allreduces (2(n-1) each) + allgather (n-1) +
+            // reduce-scatter (n-1) = 6(n-1) per rank
+            assert_eq!(
+                c.sched_hops,
+                (6 * n * (n - 1)) as u64,
+                "{policy:?} n={n}: unexpected scheduled hop count"
+            );
+            // fairness: no collective may monopolize the thread longer
+            // than its own hop budget while others are runnable
+            assert!(
+                c.sched_max_streak <= (2 * (n - 1)) as u64,
+                "{policy:?} n={n}: contested streak {} exceeds one \
+                 collective's hop budget",
+                c.sched_max_streak
+            );
+            // each thread switches collectives at least once per
+            // collective it retires (first hops are switches)
+            assert!(
+                c.sched_switches >= (4 * n) as u64,
+                "{policy:?} n={n}: only {} switches",
+                c.sched_switches
             );
         }
     }

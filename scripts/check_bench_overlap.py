@@ -5,6 +5,11 @@ repo-root baseline and fail on perf regressions.
 Rules (see BENCH_overlap.json's "note" field):
   * keys ending in ``_overlap_fraction`` tracked in the baseline fail on a
     relative regression of more than 10% (fresh < 0.9 * baseline);
+  * keys ending in ``_step_ratio`` tracked in the baseline fail on a
+    relative regression of more than 10% (fresh > 1.1 * baseline; lower is
+    better — e.g. the hop scheduler's scheduled/convoy step-time ratio,
+    where a baseline of 1.0 means "scheduled must never cost more than
+    ~10% over the FIFO convoy");
   * keys containing ``allocs`` tracked in the baseline fail on ANY
     increase (the steady-state hot paths are allocation-free by
     construction; the baseline values are explicit headroom);
@@ -41,7 +46,11 @@ def main():
             continue
         fval = fresh.get(key)
         if not is_num(fval):
-            if key.endswith("_overlap_fraction") or "allocs" in key:
+            if (
+                key.endswith("_overlap_fraction")
+                or key.endswith("_step_ratio")
+                or "allocs" in key
+            ):
                 failures.append(f"{key}: tracked in baseline but missing from fresh run")
             continue
         if key.endswith("_overlap_fraction"):
@@ -49,6 +58,15 @@ def main():
             if fval < 0.9 * bval:
                 failures.append(
                     f"{key}: overlap regressed >10% ({fval:.4f} < 0.9 * {bval:.4f})"
+                )
+            else:
+                print(f"ok  {key}: {fval:.4f} (baseline {bval:.4f})")
+        elif key.endswith("_step_ratio"):
+            checked += 1
+            if fval > 1.1 * bval:
+                failures.append(
+                    f"{key}: step-time ratio regressed >10% "
+                    f"({fval:.4f} > 1.1 * {bval:.4f})"
                 )
             else:
                 print(f"ok  {key}: {fval:.4f} (baseline {bval:.4f})")
