@@ -8,6 +8,7 @@
 use rtp::config::{presets, OptimizerKind, Strategy, TrainCfg};
 use rtp::model::oracle;
 use rtp::parallel::{build_engine, EngineOpts, ExecKind};
+use rtp::serve::{build_serve_engine_with_params, GenRequest, ServeOpts};
 use rtp::tensor::IntTensor;
 use rtp::train::{load_params, save_params, train, MarkovCorpus, Optimizer};
 
@@ -31,15 +32,32 @@ fn main() -> anyhow::Result<()> {
     let params = load_params(&cfg, &path)?;
     println!("checkpoint round trip via {} ✓", path.display());
 
-    // 3. greedy decoding with the oracle forward (full-sequence forward,
-    //    take the argmax at the last filled position)
+    // 3. incremental greedy decoding through the serving engine: one
+    //    KV-cached decode step per token instead of the old O(seq²)
+    //    full re-forward per token
     let prompt_len = 4;
     let gen_len = cfg.seq - prompt_len;
     let seed_batch = corpus.next_batch(1);
-    let mut ids = vec![0i32; cfg.seq];
-    ids[..prompt_len].copy_from_slice(&seed_batch.ids.data[..prompt_len]);
+    let prompt: Vec<i32> = seed_batch.ids.data[..prompt_len].to_vec();
 
-    let mut hits = 0;
+    let sopts = ServeOpts::new("tiny")
+        .strategy(Strategy::Single)
+        .workers(1)
+        .max_batch(1)
+        .page_tokens(4);
+    let mut serve = build_serve_engine_with_params(&sopts, &params)?;
+    serve.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new: gen_len });
+    serve.drain()?;
+    let generated = serve.report().finished[0].tokens.clone();
+    anyhow::ensure!(generated.len() == gen_len);
+
+    // oracle cross-check: the full-sequence re-forward argmax stream
+    // (the path this example used to decode with) must match the
+    // incremental stream token for token — the decode kernels replay
+    // the full kernels' float order bit-exactly
+    let mut ids = vec![0i32; cfg.seq];
+    ids[..prompt_len].copy_from_slice(&prompt);
+    let mut reference = Vec::with_capacity(gen_len);
     for pos in prompt_len..prompt_len + gen_len {
         let x = forward_logits(&params, &cfg, &ids);
         // logits at position pos-1 predict token pos
@@ -51,11 +69,23 @@ fn main() -> anyhow::Result<()> {
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| i)
             .unwrap();
-        // compare against the chain's dominant successor
-        if next == corpus.dominant_successor(ids[pos - 1] as usize) {
+        reference.push(next as i32);
+        ids[pos] = next as i32;
+    }
+    anyhow::ensure!(
+        generated == reference,
+        "incremental KV decode diverged from the full-forward argmax stream\n  \
+         kv:   {generated:?}\n  full: {reference:?}"
+    );
+    println!("incremental KV decode == full-forward argmax stream ({gen_len} tokens) ✓");
+
+    // compare against the chain's dominant successor
+    let mut hits = 0;
+    for (i, &tok) in generated.iter().enumerate() {
+        let prev = if i == 0 { prompt[prompt_len - 1] } else { generated[i - 1] };
+        if tok as usize == corpus.dominant_successor(prev as usize) {
             hits += 1;
         }
-        ids[pos] = next as i32;
     }
     let acc = hits as f64 / gen_len as f64;
     println!(

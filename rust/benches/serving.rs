@@ -1,0 +1,122 @@
+//! Serving-path bench: continuous-batching throughput and per-token
+//! latency over a Poisson arrival trace, per sharding strategy.
+//!
+//! Each scenario replays the SAME deterministic step-indexed trace
+//! (repo `Rng`, seeded) through a fresh serving engine and reports
+//! tokens/s, TPOT p50/p99, KV-page allocations per generated token and
+//! per-rank peak KV bytes. The alloc and peak numbers are properties of
+//! the allocation *schedule*, not the host, so CI gates them hard; the
+//! latency numbers vary with hardware, so CI only gates p99 TPOT
+//! against a generous guard-rail baseline (>10% over fails).
+//!
+//! Run: `cargo bench --bench serving` — prints the table and writes
+//! `figures/BENCH_serving.json`, which CI's bench-smoke job diffs
+//! against the repo-root `BENCH_serving.json` baseline via
+//! scripts/check_bench_overlap.py. `RTP_BENCH_QUICK=1` trims the trace
+//! for CI.
+
+use std::collections::BTreeMap;
+
+use rtp::bench_util::{figures_dir, Table};
+use rtp::config::Strategy;
+use rtp::serve::{build_serve_engine, poisson_trace, ServeOpts, ServeReport};
+use rtp::util::json::Json;
+
+const PRESET: &str = "tiny";
+const PROMPT_LEN: usize = 4;
+const MAX_NEW: usize = 12;
+const PAGE_TOKENS: usize = 8;
+const MAX_BATCH: usize = 4;
+const RATE_PER_STEP: f64 = 0.7;
+const TRACE_SEED: u64 = 42;
+
+fn quick() -> bool {
+    std::env::var("RTP_BENCH_QUICK").is_ok()
+}
+
+fn run_scenario(strategy: Strategy, workers: usize, n_req: usize) -> ServeReport {
+    let opts = ServeOpts::new(PRESET)
+        .strategy(strategy)
+        .workers(workers)
+        .max_batch(MAX_BATCH)
+        .page_tokens(PAGE_TOKENS)
+        .seed(7);
+    let cfg = opts.cfg().unwrap();
+    let trace =
+        poisson_trace(&cfg, n_req, RATE_PER_STEP, PROMPT_LEN, MAX_NEW, TRACE_SEED);
+    let mut eng = build_serve_engine(&opts).unwrap();
+    eng.run_trace(&trace).unwrap();
+    let rep = eng.report();
+    assert_eq!(rep.finished.len(), n_req, "{strategy}: trace did not drain");
+    assert!(rep.rejected.is_empty());
+    eng.shutdown();
+    rep
+}
+
+fn main() {
+    let n_req = if quick() { 6 } else { 24 };
+    let scenarios: [(&str, Strategy, usize); 4] = [
+        ("single", Strategy::Single, 1),
+        ("megatron_tp", Strategy::MegatronTp, 4),
+        ("rtp_inplace", Strategy::RtpInplace, 4),
+        ("rtp_outofplace", Strategy::RtpOutOfPlace, 4),
+    ];
+
+    let mut t = Table::new(
+        &format!(
+            "serving — continuous batching over a Poisson trace ({PRESET}, \
+             {n_req} requests, rate {RATE_PER_STEP}/step, prompt {PROMPT_LEN}, \
+             max_new {MAX_NEW}, batch {MAX_BATCH}, page {PAGE_TOKENS})"
+        ),
+        &[
+            "scenario",
+            "tokens/s",
+            "TPOT p50",
+            "TPOT p99",
+            "KV allocs/token",
+            "KV peak/rank",
+        ],
+    );
+    let mut obj = BTreeMap::new();
+    for (name, strategy, workers) in scenarios {
+        let rep = run_scenario(strategy, workers, n_req);
+        t.row(vec![
+            format!("{name}/N={workers}"),
+            format!("{:.0}", rep.tokens_per_s),
+            format!("{:.3} ms", rep.tpot_p50_ms),
+            format!("{:.3} ms", rep.tpot_p99_ms),
+            format!("{:.4}", rep.kv_allocs_per_token),
+            format!("{} B", rep.kv_peak_bytes_per_rank),
+        ]);
+        obj.insert(format!("{name}_tokens_per_s"), Json::Num(rep.tokens_per_s));
+        obj.insert(format!("{name}_p50_tpot_ms"), Json::Num(rep.tpot_p50_ms));
+        obj.insert(format!("{name}_p99_tpot_ms"), Json::Num(rep.tpot_p99_ms));
+        obj.insert(
+            format!("{name}_kv_allocs_per_token"),
+            Json::Num(rep.kv_allocs_per_token),
+        );
+        obj.insert(
+            format!("{name}_kv_peak_bytes_per_rank"),
+            Json::Num(rep.kv_peak_bytes_per_rank as f64),
+        );
+    }
+    t.print();
+    t.write_csv("serving").unwrap();
+
+    obj.insert("preset".into(), Json::Str(PRESET.into()));
+    obj.insert("requests".into(), Json::Num(n_req as f64));
+    obj.insert("prompt_len".into(), Json::Num(PROMPT_LEN as f64));
+    obj.insert("max_new".into(), Json::Num(MAX_NEW as f64));
+    obj.insert("page_tokens".into(), Json::Num(PAGE_TOKENS as f64));
+    obj.insert("max_batch".into(), Json::Num(MAX_BATCH as f64));
+    obj.insert("quick_mode".into(), Json::Bool(quick()));
+    let path = figures_dir().join("BENCH_serving.json");
+    std::fs::create_dir_all(figures_dir()).unwrap();
+    std::fs::write(&path, format!("{}\n", Json::Obj(obj))).unwrap();
+    println!("wrote {}", path.display());
+    println!(
+        "(kv_allocs_per_token is deterministic — layers × pages-per-request ÷ \
+         tokens-per-request — and CI fails on ANY increase; p99 TPOT is gated \
+         at +10% over the baseline guard-rail)"
+    );
+}

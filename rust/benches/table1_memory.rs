@@ -8,11 +8,14 @@
 
 use rtp::bench_util::Table;
 use rtp::config::{presets, Strategy};
-use rtp::memory::analytic::{pipeline_row, table1_row};
+use rtp::memory::analytic::{kv_cache_bytes_per_rank, pipeline_row, table1_row};
+use rtp::memory::MemCategory;
 use rtp::parallel::fsdp::Granularity;
 use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind};
+use rtp::serve::{build_serve_engine, GenRequest, ServeOpts};
 use rtp::tensor::IntTensor;
 use rtp::util::bytes::human;
+use rtp::util::rng::Rng;
 
 const PRESET: &str = "gpt2-500m";
 const N: usize = 8;
@@ -88,5 +91,80 @@ fn main() {
     println!(
         "RTP duplication is {:.1}% of FSDP's (paper claims <25%)\n",
         100.0 * rtp as f64 / fsdp as f64
+    );
+
+    serving_kv_table();
+}
+
+/// The serving sibling of Table 1: per-rank KV-cache bytes per strategy,
+/// analytic closed form vs the bytes the MemTracker actually recorded
+/// under `MemCategory::KvCache` while serving one request to completion
+/// on the tiny preset. Head-sharded strategies (TP and both RTP
+/// variants) hold `hidden/N` of every cached position per rank, so the
+/// cache that binds serving memory dedupes N-ways — the paper's
+/// deduplication story applied at inference. Also prints the analytic
+/// projection for the Table-1 GPT-2 preset at N=8 (too large to decode
+/// in a bench, but the closed form is tracker-exact by the tiny rows).
+fn serving_kv_table() {
+    let cfg = presets::get("tiny").unwrap();
+    let (prompt_len, max_new, page_tokens) = (4usize, 8usize, 8usize);
+    let total_positions = prompt_len + max_new - 1;
+
+    let mut t = Table::new(
+        &format!(
+            "serving KV-cache per rank (tiny, 1 request, {total_positions} \
+             positions, pages of {page_tokens})"
+        ),
+        &["technique", "workers", "analytic", "tracked peak", "match"],
+    );
+    for (strategy, n) in [
+        (Strategy::Single, 1usize),
+        (Strategy::MegatronTp, 4),
+        (Strategy::RtpInplace, 4),
+        (Strategy::RtpOutOfPlace, 4),
+    ] {
+        let opts = ServeOpts::new("tiny")
+            .strategy(strategy)
+            .workers(n)
+            .max_batch(1)
+            .page_tokens(page_tokens);
+        let mut eng = build_serve_engine(&opts).unwrap();
+        let mut rng = Rng::new(4);
+        let prompt = (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+        eng.submit(GenRequest { id: 0, prompt, max_new });
+        eng.drain().unwrap();
+        let tracked =
+            eng.cluster().workers[0].tracker.peak_of(MemCategory::KvCache);
+        let analytic = kv_cache_bytes_per_rank(
+            strategy,
+            &cfg,
+            total_positions,
+            page_tokens,
+            n as u64,
+        );
+        assert_eq!(tracked, analytic, "{strategy}: tracked KV peak != analytic");
+        t.row(vec![
+            format!("{strategy}"),
+            n.to_string(),
+            human(analytic),
+            human(tracked),
+            "✓".into(),
+        ]);
+        eng.shutdown();
+    }
+    t.print();
+    t.write_csv("table1_serving_kv").unwrap();
+
+    // the same closed form at the paper's scale (analytic only)
+    let big = presets::get(PRESET).unwrap();
+    let positions = big.seq;
+    let full = kv_cache_bytes_per_rank(Strategy::Single, &big, positions, 16, 1);
+    let shard =
+        kv_cache_bytes_per_rank(Strategy::RtpInplace, &big, positions, 16, N as u64);
+    println!(
+        "at {PRESET} scale, one full-context sequence caches {} of KV — \
+         head-sharded over N={N} ranks that is {} per rank\n",
+        human(full),
+        human(shard)
     );
 }

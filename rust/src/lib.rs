@@ -28,6 +28,10 @@
 //!   all communicating exclusively through rank-local fabric ports and
 //!   executed by a pluggable `Launcher` (deterministic lockstep
 //!   round-robin, or one OS thread per rank)
+//! - [`serve`] — continuous-batching generation engine: request queue
+//!   with KV-budget admission control, paged head-sharded KV-cache that
+//!   rotates with the RTP weight shards, incremental decode steps over
+//!   the same launcher/fabric stack
 //! - [`perfmodel`] — hardware model + two-stream timeline charging
 //!   communication hop by hop
 //! - [`util`] — json / rng / stats / prop substrates (offline substitutes)
@@ -43,6 +47,7 @@ pub mod model;
 pub mod parallel;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod tensor;
 pub mod util;

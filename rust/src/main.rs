@@ -16,6 +16,7 @@ use rtp::cli::Args;
 use rtp::config::{presets, OptimizerKind, Strategy, TrainCfg};
 use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind, Launcher};
 use rtp::perfmodel::{by_name, simulate, SimSpec};
+use rtp::serve::{build_serve_engine, poisson_trace, ServeOpts};
 use rtp::train::{train, MarkovCorpus, Optimizer};
 use rtp::util::bytes::human;
 use rtp::util::rng::Rng;
@@ -36,6 +37,12 @@ SUBCOMMANDS
   simulate  model one step at paper scale (virtual mode)
             --preset gpt2-500m|...  --engine ...  --workers N
             --batch B  --hw a100|v100  --no-capacity  --no-recycle
+  serve     continuous-batching generation over a Poisson arrival trace
+            --preset tiny|...  --engine single|tp|rtp-inplace|rtp-outofplace
+            --workers N  --requests R  --rate F (arrivals/step)
+            --prompt-len P  --max-new T  --max-batch B  --page-tokens K
+            --capacity-mb M (KV admission budget; default unlimited)
+            --launcher lockstep|thread  --seed S
   trace     print the rotation schedule (paper Figs 1-2)
             --workers N  --preset tiny
   inspect   --presets (Table 2) | --preset <name> (config + memory model)
@@ -158,6 +165,64 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "tiny");
+    let strategy = strategy(args)?;
+    let workers = args.usize_or("workers", 2)?;
+    let capacity = args
+        .get("capacity-mb")
+        .map(|v| {
+            v.parse::<u64>()
+                .map(|mb| mb * 1024 * 1024)
+                .map_err(|_| anyhow!("--capacity-mb expects an integer, got {v:?}"))
+        })
+        .transpose()?;
+    let opts = ServeOpts::new(preset)
+        .strategy(strategy)
+        .workers(workers)
+        .max_batch(args.usize_or("max-batch", 4)?)
+        .page_tokens(args.usize_or("page-tokens", 8)?)
+        .capacity(capacity)
+        .seed(args.u64_or("seed", 42)?)
+        .launcher(launcher(args)?);
+    let cfg = opts.cfg()?;
+    let mut engine = build_serve_engine(&opts)?;
+    let trace = poisson_trace(
+        &cfg,
+        args.usize_or("requests", 16)?,
+        args.f32_or("rate", 0.5)? as f64,
+        args.usize_or("prompt-len", 4)?,
+        args.usize_or("max-new", 8)?,
+        opts.seed.wrapping_add(1),
+    );
+    println!(
+        "serving {} requests on {preset} / {strategy} / N={} ({}), kv budget {}",
+        trace.len(),
+        engine.n(),
+        opts.launcher,
+        if engine.kv_budget() == u64::MAX {
+            "unlimited".to_string()
+        } else {
+            human(engine.kv_budget())
+        },
+    );
+    engine.run_trace(&trace)?;
+    let r = engine.report();
+    let mut t = Table::new("serving report", &["metric", "value"]);
+    t.row(vec!["finished".into(), r.finished.len().to_string()]);
+    t.row(vec!["rejected".into(), r.rejected.len().to_string()]);
+    t.row(vec!["scheduler steps".into(), r.steps.to_string()]);
+    t.row(vec!["decode steps".into(), r.decode_steps.to_string()]);
+    t.row(vec!["tokens".into(), r.tokens.to_string()]);
+    t.row(vec!["tokens/s".into(), format!("{:.0}", r.tokens_per_s)]);
+    t.row(vec!["TPOT p50".into(), format!("{:.3} ms", r.tpot_p50_ms)]);
+    t.row(vec!["TPOT p99".into(), format!("{:.3} ms", r.tpot_p99_ms)]);
+    t.row(vec!["KV pages/token".into(), format!("{:.4}", r.kv_allocs_per_token)]);
+    t.row(vec!["KV peak/rank".into(), human(r.kv_peak_bytes_per_rank)]);
+    t.print();
+    Ok(())
+}
+
 fn cmd_trace(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 4)?;
     let preset = args.get_or("preset", "tiny");
@@ -231,6 +296,7 @@ fn main() {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     let result = match sub.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "trace" => cmd_trace(&args),
         "inspect" => cmd_inspect(&args),

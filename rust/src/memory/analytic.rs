@@ -16,7 +16,7 @@
 //! | RTP              | A           | W+G+max(W,G)                | max(W,G)           |
 //! | RTP Inplace      | A           | W+G                         | 0                  |
 
-use crate::config::Strategy;
+use crate::config::{ModelCfg, Strategy};
 
 /// One Table-1 row (all byte counts are SYSTEM totals across N workers).
 #[derive(Debug, Clone, PartialEq)]
@@ -88,6 +88,53 @@ pub fn per_worker_expected(
         // RTP in-place: pure shards.
         Strategy::RtpInplace => a / n + wg / n,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Serving-time KV-cache (not a Table-1 training category — the tensor
+// that binds at inference; tracked under `MemCategory::KvCache`)
+// ---------------------------------------------------------------------------
+
+/// How much of the KV-cache one rank holds under a strategy, as a
+/// divisor of the full cache: head-sharded strategies (TP and both RTP
+/// variants) keep `hidden/N` of every cached position per rank; the
+/// replica strategies (single / DDP / FSDP serving a full replica) keep
+/// it all.
+pub fn kv_shard_divisor(strategy: Strategy, n: u64) -> u64 {
+    match strategy {
+        Strategy::MegatronTp | Strategy::RtpInplace | Strategy::RtpOutOfPlace => n,
+        Strategy::Single | Strategy::Ddp | Strategy::Fsdp => 1,
+    }
+}
+
+/// Analytic per-rank KV-cache bytes for `positions` cached tokens of ONE
+/// sequence: K and V, every layer, `hidden` f32 lanes per position,
+/// rounded up to whole pages of `page_tokens` positions (the serve
+/// engine allocates page-granular, so the tracker must match this
+/// closed form exactly — asserted in `tests/serving.rs`).
+pub fn kv_cache_bytes_per_rank(
+    strategy: Strategy,
+    cfg: &ModelCfg,
+    positions: usize,
+    page_tokens: usize,
+    n: u64,
+) -> u64 {
+    let pages = positions.div_ceil(page_tokens) as u64;
+    let per_pos = (cfg.hidden as u64 / kv_shard_divisor(strategy, n)) * 4;
+    2 * cfg.layers as u64 * pages * page_tokens as u64 * per_pos
+}
+
+/// Projected per-rank KV bytes for a request that will cache up to
+/// `max_positions` tokens — the admission-control bound the serve
+/// engine's queue checks against the `MemTracker` budget.
+pub fn kv_projected_bytes(
+    strategy: Strategy,
+    cfg: &ModelCfg,
+    max_positions: usize,
+    page_tokens: usize,
+    n: u64,
+) -> u64 {
+    kv_cache_bytes_per_rank(strategy, cfg, max_positions, page_tokens, n)
 }
 
 #[cfg(test)]

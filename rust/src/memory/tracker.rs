@@ -22,15 +22,20 @@ pub enum MemCategory {
     /// Rotation / allgather communication buffers — the duplication the
     /// paper is about.
     CommBuf,
+    /// Serving-time KV-cache pages (per-rank head shard; see
+    /// [`crate::serve`]). Not a training category — absent from Table 1,
+    /// but first-class at inference where it is the binding tensor.
+    KvCache,
 }
 
 impl MemCategory {
-    pub const ALL: [MemCategory; 5] = [
+    pub const ALL: [MemCategory; 6] = [
         MemCategory::Weights,
         MemCategory::Grads,
         MemCategory::OptState,
         MemCategory::Activations,
         MemCategory::CommBuf,
+        MemCategory::KvCache,
     ];
 }
 
@@ -42,6 +47,7 @@ impl fmt::Display for MemCategory {
             MemCategory::OptState => "opt-state",
             MemCategory::Activations => "activations",
             MemCategory::CommBuf => "comm-buf",
+            MemCategory::KvCache => "kv-cache",
         };
         f.write_str(s)
     }

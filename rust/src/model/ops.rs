@@ -345,6 +345,62 @@ pub fn output_elems(op: Op, cfg: &ModelCfg, b: usize, p: usize) -> usize {
         .sum()
 }
 
+// ---------------------------------------------------------------------------
+// Incremental decode step (serving path)
+//
+// The serving engine ([`crate::serve`]) never re-runs a full-sequence
+// forward: each generated token is ONE position pushed through the
+// layers, attending over the cached K/V of every earlier position
+// (kernels in `oracle::{qkv_decode_append, attn_decode_fwd, ...}`).
+// These are not catalog `Op`s — their cost depends on the cache length,
+// which the fixed `{op}__b{b}__p{p}` artifact keys cannot express — so
+// the decode cost model lives here as a standalone closed form.
+// ---------------------------------------------------------------------------
+
+/// Cost of decoding ONE position for `b` active sequences on one of `p`
+/// head-sharded ranks, with `cache_len` positions already cached
+/// (the new position included — attention spans `cache_len` keys).
+/// Sums all layers plus embedding, final LN and the rank's LM-head
+/// shard; activation collectives (allreduce/allgather) are comm, not
+/// compute, and are charged separately by the serve engine.
+pub fn decode_step_cost(cfg: &ModelCfg, b: usize, p: usize, cache_len: usize) -> OpCost {
+    let (v, h, f) = (cfg.vocab, cfg.hidden, cfg.ffn);
+    let (hp, fp, vp) = (h / p, f / p, v / p);
+    let l = cfg.layers;
+    let mut c = OpCost::default();
+    // embedding gather + add on this rank's hidden-column shard
+    c.ew_flops += (b * hp) as f64;
+    for _ in 0..l {
+        // ln1 + ln2 (full hidden rows, replicated params)
+        c.ew_flops += 2.0 * 8.0 * (b * h) as f64;
+        // qkv projection for this rank's head group, one position
+        c.gemms.push([b, h, 3 * hp]);
+        // attention over the cache: per head, q·Kᵀ + softmax + probs·V
+        c.ew_flops += (b * (2 * cache_len * hp + 5 * cache_len)) as f64;
+        // output projection partial
+        c.gemms.push([b, hp, h]);
+        // mlp shard
+        c.gemms.push([b, h, fp]);
+        c.gemms.push([b, fp, h]);
+        c.ew_flops += 9.0 * (b * fp) as f64;
+    }
+    // final ln + LM-head vocab shard
+    c.ew_flops += 8.0 * (b * h) as f64;
+    c.gemms.push([b, h, vp]);
+    // bytes: weights shard touched once + KV cache read/append + small acts
+    let weight_shard = cfg.weight_bytes() as f64 / p as f64;
+    let kv_touched = (2 * l * cache_len * hp * 4) as f64 * b as f64;
+    c.bytes = weight_shard + kv_touched + (b * (4 * h + 3 * hp + vp) * 4 * l) as f64;
+    c
+}
+
+/// KV bytes APPENDED per decoded position per rank: K and V rows of the
+/// rank's head shard, every layer (the steady-state growth rate the
+/// admission controller projects forward).
+pub fn decode_kv_bytes_per_token(cfg: &ModelCfg, p: usize) -> u64 {
+    2 * cfg.layers as u64 * (cfg.hidden as u64 / p as u64) * 4
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -426,6 +482,42 @@ mod tests {
         assert_eq!(c.gemm_flops(), 48.0);
         assert_eq!(c.total_flops(), 58.0);
         assert_eq!(c.kernels(), 2);
+    }
+
+    #[test]
+    fn decode_step_is_far_cheaper_than_full_forward() {
+        // the whole point of the serving path: one decoded token costs
+        // ~1/seq of re-running the full-sequence forward
+        let cfg = tiny();
+        let full: f64 = [Op::EmbFwd, Op::LnFwd, Op::AttnFwd, Op::MlpFwd, Op::LmheadFwd]
+            .iter()
+            .map(|&op| op_cost(op, &cfg, 1, 1).total_flops())
+            .sum();
+        let decode = decode_step_cost(&cfg, 1, 1, cfg.seq).total_flops();
+        assert!(
+            decode * 2.0 < full,
+            "decode step {decode} should be well under full forward {full}"
+        );
+    }
+
+    #[test]
+    fn decode_cost_scales_with_cache_len_and_shards() {
+        let cfg = tiny();
+        let short = decode_step_cost(&cfg, 2, 1, 4).total_flops();
+        let long = decode_step_cost(&cfg, 2, 1, 16).total_flops();
+        assert!(long > short);
+        let full = decode_step_cost(&cfg, 2, 1, 8).gemm_flops();
+        let shard = decode_step_cost(&cfg, 2, 4, 8).gemm_flops();
+        let ratio = full / shard;
+        assert!((2.0..5.0).contains(&ratio), "full/shard = {ratio}");
+    }
+
+    #[test]
+    fn decode_kv_growth_rate_hand_value() {
+        let cfg = tiny(); // 2 layers × 32 hidden
+        // 2 (K+V) × 2 layers × 32 lanes × 4 B = 512 B/token unsharded
+        assert_eq!(decode_kv_bytes_per_token(&cfg, 1), 512);
+        assert_eq!(decode_kv_bytes_per_token(&cfg, 4), 128);
     }
 
     #[test]

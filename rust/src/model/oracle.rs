@@ -24,7 +24,18 @@ use super::ops::Op;
 
 /// c[m,n] = a[m,k] @ b[k,n]
 fn mm(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
-    let mut c = vec![0.0f32; m * n];
+    let mut c = Vec::new();
+    mm_into(a, m, k, b, n, &mut c);
+    c
+}
+
+/// `mm` into a caller-owned buffer (cleared + zero-filled first) — the
+/// serving decode path reuses scratch across steps so the hot loop does
+/// no allocation once buffers reach capacity. Accumulation order is the
+/// contract: kk ascending, zero `a` entries skipped, j ascending.
+pub fn mm_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut Vec<f32>) {
+    c.clear();
+    c.resize(m * n, 0.0);
     for i in 0..m {
         for kk in 0..k {
             let av = a[i * k + kk];
@@ -38,7 +49,6 @@ fn mm(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
             }
         }
     }
-    c
 }
 
 /// c[m,n] = a[m,k] @ b[n,k]ᵀ
@@ -703,6 +713,138 @@ pub fn run(op: Op, cfg: &ModelCfg, p: usize, args: &[Arg]) -> Vec<HostTensor> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// incremental decode-step kernels (serving hot path; see crate::serve)
+// ---------------------------------------------------------------------------
+//
+// Bitwise-parity contract: every helper below replays the EXACT float
+// accumulation order of the full-sequence kernels above — `mm`'s
+// kk-ascending skip-zero loop, `head_attention`'s j-ascending running
+// max / exp / normalize, `ln_fwd`'s per-row mu/var/inv, the fused
+// `gelu(v + b)` of `mlp_fwd`. A token decoded incrementally from the
+// KV-cache is therefore bit-identical to the same position of a full
+// forward (asserted in the tests below and in tests/serving.rs).
+// All helpers write into caller-owned scratch: zero allocation at
+// steady state on the decode hot path.
+
+/// One embedding row per plan entry, `emb_fwd`'s `*d = a + p`, over a
+/// hidden-column shard of `wte`/`wpe` (full tables when unsharded).
+pub fn emb_decode_rows(
+    ids: &[i32],
+    positions: &[usize],
+    wte_s: &HostTensor,
+    wpe_s: &HostTensor,
+    out: &mut Vec<f32>,
+) {
+    let lanes = wte_s.last_dim();
+    out.clear();
+    out.resize(ids.len() * lanes, 0.0);
+    for (e, (&id, &pos)) in ids.iter().zip(positions).enumerate() {
+        let dst = &mut out[e * lanes..(e + 1) * lanes];
+        let wte_row = &wte_s.data[id as usize * lanes..(id as usize + 1) * lanes];
+        let wpe_row = &wpe_s.data[pos * lanes..(pos + 1) * lanes];
+        for ((d, a), p) in dst.iter_mut().zip(wte_row).zip(wpe_row) {
+            *d = a + p;
+        }
+    }
+}
+
+/// Row-wise layernorm into caller scratch — `ln_fwd`'s exact order.
+pub fn ln_rows_into(x: &[f32], g: &HostTensor, b: &HostTensor, out: &mut Vec<f32>) {
+    let h = g.data.len();
+    out.clear();
+    out.extend_from_slice(x);
+    for row in out.chunks_mut(h) {
+        let mu = row.iter().sum::<f32>() / h as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / h as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mu) * inv * g.data[j] + b.data[j];
+        }
+    }
+}
+
+/// `attn_fwd`'s post-matmul bias add: row-wise `*v += bb`.
+pub fn add_bias_rows(buf: &mut [f32], bias: &[f32]) {
+    for row in buf.chunks_mut(bias.len()) {
+        for (v, bb) in row.iter_mut().zip(bias) {
+            *v += bb;
+        }
+    }
+}
+
+/// `mlp_fwd`'s fused bias + activation: row-wise `*v = gelu(*v + bb)`.
+pub fn bias_gelu_rows(buf: &mut [f32], bias: &[f32]) {
+    for row in buf.chunks_mut(bias.len()) {
+        for (v, bb) in row.iter_mut().zip(bias) {
+            *v = gelu(*v + *bb);
+        }
+    }
+}
+
+/// Causal scores of ONE new query row against `rows` cached K rows
+/// laid out `stride` lanes apart with this head at `head_off`:
+/// scores[j] = (q·k_j)·scale, j ascending — `head_attention`'s inner
+/// loop. Returns the running max folded from `seed` (pass `f32::MIN`
+/// for the first page, the previous return for later pages: max is an
+/// associative fold, so paging preserves the single-pass result).
+pub fn attn_decode_scores(
+    q_head: &[f32],
+    k_rows: &[f32],
+    rows: usize,
+    stride: usize,
+    head_off: usize,
+    scale: f32,
+    seed: f32,
+    scores: &mut [f32],
+) -> f32 {
+    let hd = q_head.len();
+    let mut max = seed;
+    for (j, sc) in scores.iter_mut().enumerate().take(rows) {
+        let kj = &k_rows[j * stride + head_off..j * stride + head_off + hd];
+        let l: f32 = q_head.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+        *sc = l;
+        max = max.max(l);
+    }
+    max
+}
+
+/// `head_attention`'s exp / sum / normalize over one score row, given
+/// the running max: e_j ascending, summed ascending, then divided.
+pub fn softmax_decode(scores: &mut [f32], max: f32) {
+    let mut sum = 0.0f32;
+    for v in scores.iter_mut() {
+        let e = (*v - max).exp();
+        *v = e;
+        sum += e;
+    }
+    for v in scores.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// The `o = mm(probs, v)` row of `head_attention`: j ascending,
+/// exact-zero probabilities skipped (as `mm` skips them), accumulated
+/// into `out_head` (caller zeroes it before the first page).
+pub fn attn_decode_weighted_sum(
+    probs: &[f32],
+    v_rows: &[f32],
+    stride: usize,
+    head_off: usize,
+    out_head: &mut [f32],
+) {
+    let hd = out_head.len();
+    for (j, &p) in probs.iter().enumerate() {
+        if p == 0.0 {
+            continue;
+        }
+        let vj = &v_rows[j * stride + head_off..j * stride + head_off + hd];
+        for (o, vv) in out_head.iter_mut().zip(vj) {
+            *o += p * vv;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -960,5 +1102,73 @@ mod tests {
             .collect();
         let cat = partition::unshard_cols(&parts);
         assert!(cat.allclose(&full, 1e-5));
+    }
+
+    // -- decode-kernel bitwise parity ---------------------------------------
+
+    #[test]
+    fn mm_into_matches_mm_bitwise() {
+        let mut rng = Rng::new(30);
+        let (m, k, n) = (3, 5, 4);
+        let mut a = HostTensor::randn(&[m, k], 1.0, &mut rng);
+        a.data[2] = 0.0; // exercise the skip-zero branch
+        let b = HostTensor::randn(&[k, n], 1.0, &mut rng);
+        let full = mm(&a.data, m, k, &b.data, n);
+        let mut c = Vec::new();
+        mm_into(&a.data, m, k, &b.data, n, &mut c);
+        assert_eq!(full, c);
+    }
+
+    #[test]
+    fn ln_rows_into_matches_ln_fwd_bitwise() {
+        let mut rng = Rng::new(31);
+        let h = 6;
+        let x = HostTensor::randn(&[2, 3, h], 0.9, &mut rng);
+        let g = HostTensor::randn(&[h], 0.2, &mut rng);
+        let b = HostTensor::randn(&[h], 0.2, &mut rng);
+        let full = ln_fwd(&x, &g, &b);
+        let mut out = Vec::new();
+        ln_rows_into(&x.data, &g, &b, &mut out);
+        assert_eq!(full.data, out);
+    }
+
+    /// Every row of a cached incremental attention pass is bit-identical
+    /// to the same row of `head_attention` — the decode/full parity the
+    /// serving path rests on.
+    #[test]
+    fn decode_attention_matches_head_attention_bitwise() {
+        let mut rng = Rng::new(32);
+        let (s, hd) = (7, 4);
+        let q = HostTensor::randn(&[s, hd], 0.7, &mut rng);
+        let k = HostTensor::randn(&[s, hd], 0.7, &mut rng);
+        let v = HostTensor::randn(&[s, hd], 0.7, &mut rng);
+        let (_, full_o) = head_attention(&q.data, &k.data, &v.data, s, hd);
+        let scale = 1.0 / (hd as f32).sqrt();
+        // replay incrementally, splitting the cache into 3-row "pages"
+        let pt = 3;
+        let mut scores = vec![0.0f32; s];
+        for i in 0..s {
+            let len = i + 1;
+            let qi = &q.data[i * hd..(i + 1) * hd];
+            let mut max = f32::MIN;
+            for pg in 0..len.div_ceil(pt) {
+                let rows = pt.min(len - pg * pt);
+                let krows = &k.data[pg * pt * hd..];
+                max = attn_decode_scores(
+                    qi, krows, rows, hd, 0, scale, max,
+                    &mut scores[pg * pt..pg * pt + rows],
+                );
+            }
+            softmax_decode(&mut scores[..len], max);
+            let mut o = vec![0.0f32; hd];
+            for pg in 0..len.div_ceil(pt) {
+                let rows = pt.min(len - pg * pt);
+                let vrows = &v.data[pg * pt * hd..];
+                attn_decode_weighted_sum(
+                    &scores[pg * pt..pg * pt + rows], vrows, hd, 0, &mut o,
+                );
+            }
+            assert_eq!(&full_o[i * hd..(i + 1) * hd], &o[..], "row {i}");
+        }
     }
 }

@@ -1,0 +1,468 @@
+//! The per-rank incremental decode engine.
+//!
+//! One `DecodeRank` is the serving analogue of a training `RankEngine`:
+//! it holds this rank's weight shards (tracked under
+//! `MemCategory::Weights`), its [`KvCache`] shard, and persistent
+//! scratch (tracked once under `MemCategory::Activations`), and executes
+//! one batched decode step per scheduler round. The batch is replicated
+//! across ranks; weights are head/column-sharded; per layer the partial
+//! attention/MLP outputs meet in an `allreduce_sum`, and the final
+//! vocab-sharded logits meet in an `allgather` before a replicated
+//! argmax — so every rank computes the same token ids (the facade takes
+//! rank 0's, debug-asserting agreement).
+//!
+//! Under the RTP strategies the weight shards AND the KV page contents
+//! hop one rank clockwise per step, exactly like training-time rotation:
+//! the out-of-place variant ships the payload on the background lane
+//! namespace through a [`CommStream`] begun right after the shard's last
+//! use (the LM-head matmul) and joined after the argmax, overlapping the
+//! hop with the logits allgather when the launcher runs ranks
+//! concurrently; in-place / Lockstep degrades to the deterministic
+//! boundary exchange. Either way the device allocations never move —
+//! the page/shard structure is rank-symmetric, so rotation is
+//! tracker-silent (the paper's memory-deduplication point, now at
+//! serving time).
+//!
+//! Numerics: every kernel call below is one of the decode helpers in
+//! [`crate::model::oracle`], which replay the full-sequence kernels'
+//! float accumulation order bit-exactly — the basis for the
+//! decode-vs-full-forward argmax-stream equality asserted in
+//! tests/serving.rs and examples/generate.rs.
+
+use crate::comm::{allgather_into, allreduce_sum, CommStream, RingPort, RotationDir};
+use crate::config::ModelCfg;
+use crate::memory::{AllocId, MemCategory, MemTracker, OomError};
+use crate::model::oracle;
+use crate::model::partition::{attn_shard, mlp_shard, shard_cols, AttnShard, MlpShard};
+use crate::model::{MlpParams, ModelParams};
+use crate::tensor::HostTensor;
+
+use super::kv::KvCache;
+
+/// One batch row of a decode step: feed `token` at position `pos` of
+/// the sequence in `slot`; emit an output token when `need_logits`
+/// (false while a joining request is still streaming prompt tokens in).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanEntry {
+    pub slot: usize,
+    pub token: i32,
+    pub pos: usize,
+    pub need_logits: bool,
+}
+
+/// The scheduler's per-step batch plan, entries sorted by slot. Shared
+/// verbatim by every rank — batch composition is part of the SPMD
+/// program, which is what makes the token streams launcher-invariant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodePlan {
+    pub entries: Vec<PlanEntry>,
+}
+
+/// Replicated (unsharded) per-layer parameters.
+struct RepLayer {
+    ln1_g: HostTensor,
+    ln1_b: HostTensor,
+    bo: HostTensor,
+    ln2_g: HostTensor,
+    ln2_b: HostTensor,
+    b2: HostTensor,
+}
+
+/// The sharded pair that travels on rotation.
+struct LayerShards {
+    attn: AttnShard,
+    mlp: MlpShard,
+}
+
+/// Everything that hops one rank clockwise on an RTP rotation: the
+/// weight shards plus the KV page contents that belong to their head
+/// group. Buffers stay home; only values travel.
+struct RotPayload {
+    shards: Vec<LayerShards>,
+    wte_s: HostTensor,
+    wpe_s: HostTensor,
+    wlm_s: HostTensor,
+    kv: Vec<Vec<f32>>,
+}
+
+fn take_tensor(t: &mut HostTensor) -> HostTensor {
+    std::mem::replace(t, HostTensor::zeros(&[1]))
+}
+
+pub struct DecodeRank {
+    rank: usize,
+    n: usize,
+    cfg: ModelCfg,
+    rotate: bool,
+    /// Rotation transport on the background lane namespace (None when
+    /// not rotating). Async only when the launcher really overlaps.
+    stream: Option<CommStream>,
+    /// Completed clockwise hops; the shard currently held is
+    /// `(rank + n - rot) % n`, shard `s` lives on rank `(s + rot) % n`.
+    rot: usize,
+
+    rep: Vec<RepLayer>,
+    shards: Vec<LayerShards>,
+    wte_s: HostTensor,
+    wpe_s: HostTensor,
+    wlm_s: HostTensor,
+    lnf_g: HostTensor,
+    lnf_b: HostTensor,
+
+    pub kv: KvCache,
+    weights_id: Option<AllocId>,
+    scratch_id: Option<AllocId>,
+
+    // persistent scratch — steady-state zero-alloc decode loop
+    xloc: Vec<f32>,
+    x: Vec<f32>,
+    a: Vec<f32>,
+    qkv: Vec<f32>,
+    attn_o: Vec<f32>,
+    part: Vec<f32>,
+    mid: Vec<f32>,
+    sub: Vec<f32>,
+    logits_loc: Vec<f32>,
+    gather: Vec<f32>,
+    scores: Vec<f32>,
+    logit_rows: Vec<usize>,
+}
+
+impl DecodeRank {
+    /// Build rank `rank`'s shard set from the replicated `params`
+    /// (serving-side Flyweight: every rank slices the same master copy;
+    /// only the shards are tracked as device weights).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rank: usize,
+        n: usize,
+        cfg: &ModelCfg,
+        params: &ModelParams,
+        rotate: bool,
+        stream: Option<CommStream>,
+        max_slots: usize,
+        page_tokens: usize,
+        tracker: &mut MemTracker,
+    ) -> Result<DecodeRank, OomError> {
+        assert!(n >= 1 && rank < n);
+        let (h, f, v) = (cfg.hidden, cfg.ffn, cfg.vocab);
+        let (heads, hd) = (cfg.heads, cfg.head_dim());
+        let shard_id = rank; // rot = 0
+        let mut rep = Vec::with_capacity(cfg.layers);
+        let mut shards = Vec::with_capacity(cfg.layers);
+        for lp in &params.layers {
+            let (w1, b1, w2, b2) = match &lp.mlp {
+                MlpParams::Dense { w1, b1, w2, b2 } => (w1, b1, w2, b2),
+                MlpParams::Moe { .. } => {
+                    panic!("serve: MoE layers are not supported (dense presets only)")
+                }
+            };
+            rep.push(RepLayer {
+                ln1_g: lp.ln1_g.clone(),
+                ln1_b: lp.ln1_b.clone(),
+                bo: lp.bo.clone(),
+                ln2_g: lp.ln2_g.clone(),
+                ln2_b: lp.ln2_b.clone(),
+                b2: b2.clone(),
+            });
+            shards.push(LayerShards {
+                attn: attn_shard(&lp.wqkv, &lp.bqkv, &lp.wo, shard_id, n, heads, hd),
+                mlp: mlp_shard(w1, b1, w2, shard_id, n),
+            });
+        }
+        let wte_s = shard_cols(&params.wte, shard_id, n);
+        let wpe_s = shard_cols(&params.wpe, shard_id, n);
+        let wlm_s = shard_cols(&params.wlm, shard_id, n);
+        let lnf_g = params.lnf_g.clone();
+        let lnf_b = params.lnf_b.clone();
+
+        let mut weight_bytes: u64 = wte_s.bytes() + wpe_s.bytes() + wlm_s.bytes()
+            + lnf_g.bytes() + lnf_b.bytes();
+        for (r, s) in rep.iter().zip(&shards) {
+            weight_bytes += r.ln1_g.bytes() + r.ln1_b.bytes() + r.bo.bytes()
+                + r.ln2_g.bytes() + r.ln2_b.bytes() + r.b2.bytes();
+            weight_bytes += s.attn.wqkv.bytes() + s.attn.bqkv.bytes() + s.attn.wo.bytes();
+            weight_bytes += s.mlp.w1.bytes() + s.mlp.b1.bytes() + s.mlp.w2.bytes();
+        }
+        let weights_id = Some(tracker.alloc(MemCategory::Weights, weight_bytes)?);
+
+        let (hp, fp, vp) = (h / n, f / n, v / n);
+        let b = max_slots;
+        let scratch_elems = b * hp           // xloc
+            + 2 * b * h                      // x, a
+            + b * 3 * hp                     // qkv
+            + b * hp                         // attn_o
+            + b * h                          // part
+            + b * fp                         // mid
+            + b * h                          // sub
+            + b * vp                         // logits_loc
+            + n * b * hp.max(vp)             // gather
+            + cfg.seq;                       // scores
+        let scratch_id = match tracker.alloc(MemCategory::Activations, (scratch_elems * 4) as u64) {
+            Ok(id) => Some(id),
+            Err(e) => {
+                tracker.free(weights_id.unwrap());
+                return Err(e);
+            }
+        };
+
+        let lanes = h / n;
+        Ok(DecodeRank {
+            rank,
+            n,
+            cfg: cfg.clone(),
+            rotate: rotate && n > 1,
+            stream,
+            rot: 0,
+            rep,
+            shards,
+            wte_s,
+            wpe_s,
+            wlm_s,
+            lnf_g,
+            lnf_b,
+            kv: KvCache::new(max_slots, cfg.layers, lanes, page_tokens),
+            weights_id,
+            scratch_id,
+            xloc: Vec::with_capacity(b * hp),
+            x: Vec::with_capacity(b * h),
+            a: Vec::with_capacity(b * h),
+            qkv: Vec::with_capacity(b * 3 * hp),
+            attn_o: Vec::with_capacity(b * hp),
+            part: Vec::with_capacity(b * h),
+            mid: Vec::with_capacity(b * fp),
+            sub: Vec::with_capacity(b * h),
+            logits_loc: Vec::with_capacity(b * vp),
+            gather: Vec::with_capacity(n * b * hp.max(vp)),
+            scores: vec![0.0; cfg.seq],
+            logit_rows: Vec::with_capacity(b),
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The shard id this rank currently holds.
+    pub fn current_shard(&self) -> usize {
+        (self.rank + self.n - self.rot % self.n) % self.n
+    }
+
+    fn install(&mut self, p: RotPayload) {
+        self.shards = p.shards;
+        self.wte_s = p.wte_s;
+        self.wpe_s = p.wpe_s;
+        self.wlm_s = p.wlm_s;
+        self.kv.import_data(p.kv);
+    }
+
+    /// Free every tracked buffer this rank holds (engine shutdown; the
+    /// accounting tests assert `tracker.outstanding() == 0` after).
+    pub fn free_all(&mut self, tracker: &mut MemTracker) {
+        self.kv.release_all(tracker);
+        if let Some(id) = self.weights_id.take() {
+            tracker.free(id);
+        }
+        if let Some(id) = self.scratch_id.take() {
+            tracker.free(id);
+        }
+    }
+
+    /// Execute one batched decode step: feed every plan entry's token at
+    /// its position, return the argmax token per `need_logits` entry (in
+    /// plan order). Identical on every rank.
+    pub fn decode_step(
+        &mut self,
+        tracker: &mut MemTracker,
+        port: &RingPort,
+        plan: &DecodePlan,
+    ) -> Result<Vec<i32>, OomError> {
+        let n = self.n;
+        let (h, f, v) = (self.cfg.hidden, self.cfg.ffn, self.cfg.vocab);
+        let (hp, fp, vp) = (h / n, f / n, v / n);
+        let nh_p = self.cfg.heads / n;
+        let hd = self.cfg.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let (pt, lanes) = (self.kv.page_tokens(), self.kv.lanes());
+        let b = plan.entries.len();
+        assert!(b >= 1, "decode_step needs a non-empty plan");
+
+        // grow KV capacity first (admission control has already bounded
+        // this, so an OomError here means a scheduler bug — it still
+        // unwinds orderly through the engine)
+        for e in &plan.entries {
+            self.kv.ensure(e.slot, e.pos + 1, tracker)?;
+        }
+
+        // -- embedding: this rank's hidden-column shard, gathered -------
+        let ids: Vec<i32> = plan.entries.iter().map(|e| e.token).collect();
+        let positions: Vec<usize> = plan.entries.iter().map(|e| e.pos).collect();
+        if n == 1 {
+            oracle::emb_decode_rows(&ids, &positions, &self.wte_s, &self.wpe_s, &mut self.x);
+        } else {
+            oracle::emb_decode_rows(&ids, &positions, &self.wte_s, &self.wpe_s, &mut self.xloc);
+            allgather_into(port, &self.xloc, &mut self.gather);
+            self.x.clear();
+            self.x.resize(b * h, 0.0);
+            for s in 0..n {
+                let src = (s + self.rot) % n;
+                for bi in 0..b {
+                    let from = &self.gather[(src * b + bi) * hp..(src * b + bi + 1) * hp];
+                    self.x[bi * h + s * hp..bi * h + (s + 1) * hp].copy_from_slice(from);
+                }
+            }
+        }
+
+        // -- transformer layers ----------------------------------------
+        for li in 0..self.cfg.layers {
+            // attention
+            oracle::ln_rows_into(&self.x, &self.rep[li].ln1_g, &self.rep[li].ln1_b, &mut self.a);
+            oracle::mm_into(&self.a, b, h, &self.shards[li].attn.wqkv.data, 3 * hp, &mut self.qkv);
+            oracle::add_bias_rows(&mut self.qkv, &self.shards[li].attn.bqkv.data);
+            self.attn_o.clear();
+            self.attn_o.resize(b * hp, 0.0);
+            for (bi, e) in plan.entries.iter().enumerate() {
+                let len = e.pos + 1;
+                let npg = len.div_ceil(pt);
+                let row = &self.qkv[bi * 3 * hp..(bi + 1) * 3 * hp];
+                self.kv.append(e.slot, li, e.pos, &row[hp..2 * hp], &row[2 * hp..3 * hp]);
+                for head in 0..nh_p {
+                    let q_head = &row[head * hd..(head + 1) * hd];
+                    let mut max = f32::MIN;
+                    for pg in 0..npg {
+                        let rows = pt.min(len - pg * pt);
+                        let page = self.kv.page(e.slot, li, pg);
+                        max = oracle::attn_decode_scores(
+                            q_head,
+                            &page.data,
+                            rows,
+                            lanes,
+                            head * hd,
+                            scale,
+                            max,
+                            &mut self.scores[pg * pt..pg * pt + rows],
+                        );
+                    }
+                    oracle::softmax_decode(&mut self.scores[..len], max);
+                    let out_head =
+                        &mut self.attn_o[bi * hp + head * hd..bi * hp + (head + 1) * hd];
+                    for pg in 0..npg {
+                        let rows = pt.min(len - pg * pt);
+                        let page = self.kv.page(e.slot, li, pg);
+                        oracle::attn_decode_weighted_sum(
+                            &self.scores[pg * pt..pg * pt + rows],
+                            &page.data[pt * lanes..],
+                            lanes,
+                            head * hd,
+                            out_head,
+                        );
+                    }
+                }
+            }
+            oracle::mm_into(&self.attn_o, b, hp, &self.shards[li].attn.wo.data, h, &mut self.part);
+            if n > 1 {
+                allreduce_sum(port, &mut self.part);
+            }
+            oracle::add_bias_rows(&mut self.part, &self.rep[li].bo.data);
+            for (xv, pv) in self.x.iter_mut().zip(self.part.iter()) {
+                *xv += *pv;
+            }
+
+            // MLP
+            oracle::ln_rows_into(&self.x, &self.rep[li].ln2_g, &self.rep[li].ln2_b, &mut self.a);
+            oracle::mm_into(&self.a, b, h, &self.shards[li].mlp.w1.data, fp, &mut self.mid);
+            oracle::bias_gelu_rows(&mut self.mid, &self.shards[li].mlp.b1.data);
+            oracle::mm_into(&self.mid, b, fp, &self.shards[li].mlp.w2.data, h, &mut self.part);
+            if n > 1 {
+                allreduce_sum(port, &mut self.part);
+            }
+            oracle::add_bias_rows(&mut self.part, &self.rep[li].b2.data);
+            for (xv, pv) in self.x.iter_mut().zip(self.part.iter()) {
+                *xv += *pv;
+            }
+        }
+
+        // -- final LN + LM head over rows that need a token -------------
+        oracle::ln_rows_into(&self.x, &self.lnf_g, &self.lnf_b, &mut self.a);
+        self.logit_rows.clear();
+        for (bi, e) in plan.entries.iter().enumerate() {
+            if e.need_logits {
+                self.logit_rows.push(bi);
+            }
+        }
+        let bl = self.logit_rows.len();
+        if bl > 0 {
+            self.sub.clear();
+            for &bi in &self.logit_rows {
+                self.sub.extend_from_slice(&self.a[bi * h..(bi + 1) * h]);
+            }
+            oracle::mm_into(&self.sub, bl, h, &self.wlm_s.data, vp, &mut self.logits_loc);
+        }
+
+        // weights had their last use in the LM-head matmul: begin the
+        // rotation hop now so (in async mode) it rides under the logits
+        // allgather + argmax
+        let inflight = if self.rotate {
+            let payload = RotPayload {
+                shards: std::mem::take(&mut self.shards),
+                wte_s: take_tensor(&mut self.wte_s),
+                wpe_s: take_tensor(&mut self.wpe_s),
+                wlm_s: take_tensor(&mut self.wlm_s),
+                kv: self.kv.export_data(),
+            };
+            let stream = self.stream.as_ref().expect("rotating rank without a stream");
+            Some(stream.begin(payload, RotationDir::Clockwise))
+        } else {
+            None
+        };
+
+        let mut out = Vec::with_capacity(bl);
+        if bl > 0 {
+            if n > 1 {
+                allgather_into(port, &self.logits_loc, &mut self.gather);
+                for ri in 0..bl {
+                    let mut best = f32::MIN;
+                    let mut arg = 0usize;
+                    for s in 0..n {
+                        let src = (s + self.rot) % n;
+                        let base = (src * bl + ri) * vp;
+                        for j in 0..vp {
+                            let val = self.gather[base + j];
+                            if val >= best {
+                                best = val;
+                                arg = s * vp + j;
+                            }
+                        }
+                    }
+                    out.push(arg as i32);
+                }
+            } else {
+                for ri in 0..bl {
+                    let rowv = &self.logits_loc[ri * vp..(ri + 1) * vp];
+                    let mut best = f32::MIN;
+                    let mut arg = 0usize;
+                    for (j, &val) in rowv.iter().enumerate() {
+                        if val >= best {
+                            best = val;
+                            arg = j;
+                        }
+                    }
+                    out.push(arg as i32);
+                }
+            }
+        }
+
+        for e in &plan.entries {
+            self.kv.advance(e.slot);
+        }
+
+        if let Some(inf) = inflight {
+            let stream = self.stream.as_ref().expect("rotating rank without a stream");
+            let p = stream.wait(inf);
+            self.install(p);
+            self.rot = (self.rot + 1) % n;
+        }
+
+        Ok(out)
+    }
+}

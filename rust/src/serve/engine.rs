@@ -1,0 +1,531 @@
+//! The serving facade: request queue, admission control, and the
+//! continuous-batching scheduler over the SPMD rank set.
+//!
+//! Scheduling is indexed by decode step, not wall clock: requests join
+//! the running batch at the first step boundary where a slot is free
+//! and their projected KV bytes fit the tracker budget, and leave at
+//! the boundary after their last token. The per-step batch plan is
+//! therefore a pure function of (trace, config) — the same plan runs on
+//! every rank under either launcher, which is what makes the emitted
+//! token streams bit-identical between `Launcher::Lockstep` (the
+//! determinism oracle) and `Launcher::Thread` (asserted in
+//! tests/serving.rs). Wall time is only *recorded* (TPOT metrics),
+//! never consulted.
+//!
+//! Admission control is two-level, all in projected bytes from
+//! [`crate::memory::analytic::kv_projected_bytes`]:
+//! * `submit` rejects a request that could never fit the KV budget even
+//!   alone — a pure facade decision, no SPMD involvement, so running
+//!   peers are untouched;
+//! * the scheduler admits the queue head only while admitted
+//!   projections fit the budget, so `KvCache::ensure` on the hot path
+//!   can never OOM by construction.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::Cluster;
+use crate::comm::CommStream;
+use crate::config::{presets, ModelCfg, Strategy};
+use crate::memory::analytic::kv_projected_bytes;
+use crate::memory::{MemCategory, OomError};
+use crate::model::ModelParams;
+use crate::parallel::Launcher;
+use crate::util::rng::Rng;
+
+use super::decode::{DecodePlan, DecodeRank, PlanEntry};
+use super::request::{Admission, FinishedRequest, GenRequest, ServeReport};
+
+/// Builder-style serving options (the serving sibling of `EngineOpts`).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    pub preset: String,
+    pub strategy: Strategy,
+    pub workers: usize,
+    /// Concurrent decode slots (max running batch).
+    pub max_batch: usize,
+    /// Positions per KV page.
+    pub page_tokens: usize,
+    /// Per-device capacity in bytes (None = unlimited, analysis mode).
+    pub capacity: Option<u64>,
+    /// Seed for `ModelParams::init` when no params are supplied.
+    pub seed: u64,
+    pub launcher: Launcher,
+}
+
+impl ServeOpts {
+    pub fn new(preset: &str) -> ServeOpts {
+        ServeOpts {
+            preset: preset.to_string(),
+            strategy: Strategy::Single,
+            workers: 1,
+            max_batch: 4,
+            page_tokens: 8,
+            capacity: None,
+            seed: 0,
+            launcher: Launcher::from_env(),
+        }
+    }
+    pub fn strategy(mut self, s: Strategy) -> Self {
+        self.strategy = s;
+        self
+    }
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+    pub fn max_batch(mut self, b: usize) -> Self {
+        self.max_batch = b;
+        self
+    }
+    pub fn page_tokens(mut self, p: usize) -> Self {
+        self.page_tokens = p;
+        self
+    }
+    pub fn capacity(mut self, c: Option<u64>) -> Self {
+        self.capacity = c;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+    pub fn launcher(mut self, l: Launcher) -> Self {
+        self.launcher = l;
+        self
+    }
+
+    pub fn cfg(&self) -> Result<ModelCfg> {
+        presets::get(&self.preset)
+            .ok_or_else(|| anyhow!("unknown preset {:?}", self.preset))
+    }
+}
+
+struct RunningReq {
+    req: GenRequest,
+    slot: usize,
+    /// Positions fed so far (== the position of the next token to feed).
+    fed: usize,
+    generated: Vec<i32>,
+    joined_step: u64,
+    token_ms: Vec<f64>,
+    projected: u64,
+}
+
+pub struct ServeEngine {
+    cfg: ModelCfg,
+    strategy: Strategy,
+    n: usize,
+    launcher: Launcher,
+    max_batch: usize,
+    page_tokens: usize,
+
+    cluster: Cluster,
+    ranks: Vec<DecodeRank>,
+
+    queue: VecDeque<GenRequest>,
+    running: Vec<RunningReq>,
+    finished: Vec<FinishedRequest>,
+    rejected: Vec<(u64, String)>,
+
+    /// Per-rank KV byte budget (capacity minus weights+scratch).
+    kv_budget: u64,
+    /// Projected KV bytes of everything admitted and not yet retired.
+    kv_projected: u64,
+
+    step_idx: u64,
+    decode_steps: u64,
+    wall_ms: f64,
+}
+
+/// Build a serving engine with freshly initialized parameters
+/// (`ModelParams::init` from `opts.seed`).
+pub fn build_serve_engine(opts: &ServeOpts) -> Result<ServeEngine> {
+    let cfg = opts.cfg()?;
+    let params = ModelParams::init(&cfg, &mut Rng::new(opts.seed));
+    build_serve_engine_with_params(opts, &params)
+}
+
+/// Build a serving engine around existing (e.g. checkpointed) params.
+pub fn build_serve_engine_with_params(
+    opts: &ServeOpts,
+    params: &ModelParams,
+) -> Result<ServeEngine> {
+    let cfg = opts.cfg()?;
+    let n = opts.workers;
+    if cfg.is_moe() {
+        bail!("serve supports dense presets only (got MoE preset {:?})", cfg.name);
+    }
+    if opts.max_batch < 1 || opts.page_tokens < 1 {
+        bail!("serve needs max_batch >= 1 and page_tokens >= 1");
+    }
+    match opts.strategy {
+        Strategy::Single => {
+            if n != 1 {
+                bail!("strategy single serves on exactly 1 worker (got {n})");
+            }
+        }
+        Strategy::MegatronTp | Strategy::RtpInplace | Strategy::RtpOutOfPlace => {
+            if n < 1 {
+                bail!("need at least one worker");
+            }
+            for (dim, name) in [
+                (cfg.heads, "heads"),
+                (cfg.hidden, "hidden"),
+                (cfg.ffn, "ffn"),
+                (cfg.vocab, "vocab"),
+            ] {
+                if dim % n != 0 {
+                    bail!("{name} {dim} not divisible by {n} workers");
+                }
+            }
+        }
+        Strategy::Ddp | Strategy::Fsdp => {
+            bail!(
+                "{} is a training strategy; serve shards over heads \
+                 (single / megatron-tp / rtp-inplace / rtp-outofplace)",
+                opts.strategy
+            )
+        }
+    }
+
+    let rotate = matches!(opts.strategy, Strategy::RtpInplace | Strategy::RtpOutOfPlace);
+    let async_rot =
+        matches!(opts.strategy, Strategy::RtpOutOfPlace) && opts.launcher.overlaps_comm();
+
+    let mut cluster = Cluster::new(n, opts.capacity);
+    let fabric = cluster.fabric().clone();
+    let mut ranks = Vec::with_capacity(n);
+    for rank in 0..n {
+        let stream = if rotate && n > 1 {
+            Some(CommStream::new(fabric.bg_port(rank), async_rot))
+        } else {
+            None
+        };
+        let dr = DecodeRank::new(
+            rank,
+            n,
+            &cfg,
+            params,
+            rotate,
+            stream,
+            opts.max_batch,
+            opts.page_tokens,
+            &mut cluster.workers[rank].tracker,
+        )
+        .map_err(anyhow::Error::new)?;
+        ranks.push(dr);
+    }
+
+    let live = cluster.workers[0].tracker.live();
+    let kv_budget = match opts.capacity {
+        Some(cap) => cap.saturating_sub(live),
+        None => u64::MAX,
+    };
+
+    Ok(ServeEngine {
+        cfg,
+        strategy: opts.strategy,
+        n,
+        launcher: opts.launcher,
+        max_batch: opts.max_batch,
+        page_tokens: opts.page_tokens,
+        cluster,
+        ranks,
+        queue: VecDeque::new(),
+        running: Vec::new(),
+        finished: Vec::new(),
+        rejected: Vec::new(),
+        kv_budget,
+        kv_projected: 0,
+        step_idx: 0,
+        decode_steps: 0,
+        wall_ms: 0.0,
+    })
+}
+
+impl ServeEngine {
+    pub fn cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn kv_budget(&self) -> u64 {
+        self.kv_budget
+    }
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+    pub fn step_idx(&self) -> u64 {
+        self.step_idx
+    }
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+    pub fn queued_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Projected per-rank KV bytes for `req` under this engine's
+    /// strategy/page geometry.
+    pub fn projected_bytes(&self, req: &GenRequest) -> u64 {
+        kv_projected_bytes(
+            self.strategy,
+            &self.cfg,
+            req.total_positions(),
+            self.page_tokens,
+            self.n as u64,
+        )
+    }
+
+    /// Submit a request. Statically unservable requests are rejected
+    /// here (facade-side — running peers never see them); everything
+    /// else queues for the scheduler.
+    pub fn submit(&mut self, req: GenRequest) -> Admission {
+        if req.prompt.is_empty() || req.max_new == 0 {
+            return self.reject(req, "empty prompt or zero max_new".into());
+        }
+        if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= self.cfg.vocab)
+        {
+            return self.reject(req, format!("prompt token {t} outside vocab"));
+        }
+        if req.total_positions() > self.cfg.seq {
+            let why = format!(
+                "needs {} positions, model seq is {}",
+                req.total_positions(),
+                self.cfg.seq
+            );
+            return self.reject(req, why);
+        }
+        let proj = self.projected_bytes(&req);
+        if proj > self.kv_budget {
+            return self.reject(
+                req,
+                format!("projected KV {proj} B exceeds budget {} B", self.kv_budget),
+            );
+        }
+        self.queue.push_back(req);
+        Admission::Queued
+    }
+
+    fn reject(&mut self, req: GenRequest, why: String) -> Admission {
+        self.rejected.push((req.id, why.clone()));
+        Admission::Rejected(why)
+    }
+
+    /// Admit queue-head requests while a slot and KV budget are free —
+    /// the join half of continuous batching, always at a step boundary.
+    fn admit(&mut self) {
+        while self.running.len() < self.max_batch {
+            let Some(front) = self.queue.front() else { break };
+            let proj = self.projected_bytes(front);
+            if self.kv_projected + proj > self.kv_budget {
+                break; // FIFO head-of-line: deterministic, no starvation
+            }
+            let req = self.queue.pop_front().unwrap();
+            let mut used: Vec<usize> = self.running.iter().map(|r| r.slot).collect();
+            used.sort_unstable();
+            let mut slot = 0;
+            for u in used {
+                if u == slot {
+                    slot += 1;
+                }
+            }
+            for rank in self.ranks.iter_mut() {
+                rank.kv.occupy(slot);
+            }
+            self.kv_projected += proj;
+            self.running.push(RunningReq {
+                req,
+                slot,
+                fed: 0,
+                generated: Vec::new(),
+                joined_step: self.step_idx,
+                token_ms: Vec::new(),
+                projected: proj,
+            });
+            self.running.sort_by_key(|r| r.slot);
+        }
+    }
+
+    /// One scheduler step: admit → batched decode round → consume
+    /// tokens → retire finished requests. Returns false on an idle tick
+    /// (nothing running or admittable).
+    pub fn step(&mut self) -> Result<bool> {
+        self.step_idx += 1;
+        self.admit();
+        if self.running.is_empty() {
+            return Ok(false);
+        }
+
+        let plan = DecodePlan {
+            entries: self
+                .running
+                .iter()
+                .map(|r| PlanEntry {
+                    slot: r.slot,
+                    token: if r.fed < r.req.prompt.len() {
+                        r.req.prompt[r.fed]
+                    } else {
+                        r.generated[r.fed - r.req.prompt.len()]
+                    },
+                    pos: r.fed,
+                    need_logits: r.fed + 1 >= r.req.prompt.len(),
+                })
+                .collect(),
+        };
+
+        let fabric = self.cluster.fabric().clone();
+        let t0 = Instant::now();
+        let results: Vec<std::thread::Result<Result<Vec<i32>, OomError>>> = {
+            let plan_ref = &plan;
+            let tasks: Vec<Box<dyn FnOnce() -> Result<Vec<i32>, OomError> + Send + '_>> =
+                self.ranks
+                    .iter_mut()
+                    .zip(self.cluster.workers.iter_mut())
+                    .map(|(rank, worker)| {
+                        let fab = fabric.clone();
+                        let port = worker.port.clone();
+                        let tracker = &mut worker.tracker;
+                        Box::new(move || {
+                            let out = rank.decode_step(tracker, &port, plan_ref);
+                            if let Err(e) = &out {
+                                // orderly abort: wake peers blocked on
+                                // this rank so the round unwinds
+                                fab.abort_round(&format!(
+                                    "rank {} aborted decode: {e}",
+                                    rank.rank()
+                                ));
+                            }
+                            out
+                        })
+                            as Box<dyn FnOnce() -> Result<Vec<i32>, OomError> + Send + '_>
+                    })
+                    .collect();
+            self.launcher.try_run(&fabric, tasks)
+        };
+        let dt_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // prefer a rank's orderly Err over the secondary poisoned-round
+        // panics it caused in peers (same policy as ClusterEngine::step)
+        let mut outs: Vec<Vec<i32>> = Vec::with_capacity(self.n);
+        let mut first_err: Option<OomError> = None;
+        let mut first_panic = None;
+        for res in results {
+            match res {
+                Ok(Ok(tokens)) => outs.push(tokens),
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(p) => {
+                    first_panic.get_or_insert(p);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(anyhow::Error::new(e));
+        }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
+        debug_assert!(
+            outs.iter().all(|o| *o == outs[0]),
+            "ranks disagree on decoded tokens"
+        );
+        let tokens = outs.swap_remove(0);
+
+        let mut ti = 0;
+        for r in self.running.iter_mut() {
+            let need = r.fed + 1 >= r.req.prompt.len();
+            r.fed += 1;
+            if need {
+                r.generated.push(tokens[ti]);
+                ti += 1;
+                r.token_ms.push(dt_ms);
+            }
+        }
+        debug_assert_eq!(ti, tokens.len());
+        self.decode_steps += 1;
+        self.wall_ms += dt_ms;
+
+        // the leave half of continuous batching: retire at the boundary
+        let mut still = Vec::with_capacity(self.running.len());
+        for r in std::mem::take(&mut self.running) {
+            if r.generated.len() >= r.req.max_new {
+                for (rank, worker) in
+                    self.ranks.iter_mut().zip(self.cluster.workers.iter_mut())
+                {
+                    rank.kv.release(r.slot, &mut worker.tracker);
+                }
+                self.kv_projected -= r.projected;
+                self.finished.push(FinishedRequest {
+                    id: r.req.id,
+                    prompt_len: r.req.prompt.len(),
+                    tokens: r.generated,
+                    joined_step: r.joined_step,
+                    finish_step: self.step_idx,
+                    token_ms: r.token_ms,
+                });
+            } else {
+                still.push(r);
+            }
+        }
+        self.running = still;
+        Ok(true)
+    }
+
+    /// Run every queued/running request to completion.
+    pub fn drain(&mut self) -> Result<()> {
+        while !(self.queue.is_empty() && self.running.is_empty()) {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Replay a step-indexed arrival trace (as from
+    /// [`super::request::poisson_trace`]) to completion.
+    pub fn run_trace(&mut self, trace: &[(u64, GenRequest)]) -> Result<()> {
+        let mut ti = 0;
+        loop {
+            while ti < trace.len() && trace[ti].0 <= self.step_idx {
+                self.submit(trace[ti].1.clone());
+                ti += 1;
+            }
+            if self.queue.is_empty() && self.running.is_empty() {
+                if ti >= trace.len() {
+                    break;
+                }
+                self.step_idx += 1; // idle tick toward the next arrival
+                continue;
+            }
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Aggregate metrics so far (finished requests only).
+    pub fn report(&self) -> ServeReport {
+        ServeReport::from_finished(
+            self.finished.clone(),
+            self.rejected.clone(),
+            self.step_idx,
+            self.decode_steps,
+            self.wall_ms,
+            self.ranks[0].kv.pages_allocated(),
+            self.cluster.workers[0].tracker.peak_of(MemCategory::KvCache),
+        )
+    }
+
+    /// Free every tracked buffer (weights, scratch, leftover KV) — after
+    /// this the trackers must show zero outstanding allocations.
+    pub fn shutdown(&mut self) {
+        self.queue.clear();
+        self.running.clear();
+        for (rank, worker) in self.ranks.iter_mut().zip(self.cluster.workers.iter_mut()) {
+            rank.free_all(&mut worker.tracker);
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! The per-rank KV-cache: the tensor that binds at serving time.
+//!
+//! One `KvCache` lives on each rank. It is head-sharded exactly like the
+//! rank's attention weights — `lanes = hidden/N` f32 per cached position
+//! (the rank's head group), full `hidden` when unsharded — and paged:
+//! capacity grows in fixed blocks of `page_tokens` positions so a
+//! sequence's footprint is `ceil(len/page_tokens)` pages per layer, with
+//! K and V packed in the same page. Every page is allocated through the
+//! rank's [`MemTracker`] under [`MemCategory::KvCache`], so admission
+//! control and the Table-1-style accounting see serving memory the same
+//! way they see training memory (the closed form is
+//! [`crate::memory::analytic::kv_cache_bytes_per_rank`]; equality is
+//! asserted in tests/serving.rs).
+//!
+//! Under RTP the cache *rotates with the weights*: a rank must attend
+//! with the head group of the weight shard it currently holds, so on
+//! each hop the page *contents* travel one rank clockwise while the
+//! device allocations stay put — the slot/page structure is symmetric
+//! across ranks, so this is the paper's in-place exchange: no tracker
+//! traffic, no duplication. [`KvCache::export_data`] /
+//! [`KvCache::import_data`] implement the two ends of the hop in a
+//! deterministic slot→layer→page order.
+
+use crate::memory::{AllocId, MemCategory, MemTracker, OomError};
+
+/// One page: `page_tokens` K rows then `page_tokens` V rows, `lanes`
+/// f32 each, in a single tracked buffer.
+#[derive(Debug)]
+pub struct KvPage {
+    pub data: Vec<f32>,
+    id: AllocId,
+}
+
+/// Pages of one occupied decode slot, `pages[layer][page]`.
+#[derive(Debug)]
+struct SlotKv {
+    pages: Vec<Vec<KvPage>>,
+    len: usize,
+}
+
+#[derive(Debug)]
+pub struct KvCache {
+    layers: usize,
+    lanes: usize,
+    page_tokens: usize,
+    slots: Vec<Option<SlotKv>>,
+    /// Monotonic count of pages ever allocated (the per-token KV
+    /// allocation-churn metric of BENCH_serving.json).
+    pages_allocated: u64,
+}
+
+impl KvCache {
+    pub fn new(max_slots: usize, layers: usize, lanes: usize, page_tokens: usize) -> Self {
+        assert!(page_tokens >= 1 && lanes >= 1 && layers >= 1);
+        KvCache {
+            layers,
+            lanes,
+            page_tokens,
+            slots: (0..max_slots).map(|_| None).collect(),
+            pages_allocated: 0,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+    pub fn max_slots(&self) -> usize {
+        self.slots.len()
+    }
+    pub fn pages_allocated(&self) -> u64 {
+        self.pages_allocated
+    }
+
+    /// Tracked bytes of one page: K + V blocks of `page_tokens` rows.
+    pub fn page_bytes(&self) -> u64 {
+        (2 * self.page_tokens * self.lanes * 4) as u64
+    }
+
+    /// Claim a free slot for a joining request (pages arrive lazily via
+    /// [`KvCache::ensure`] as the sequence grows).
+    pub fn occupy(&mut self, slot: usize) {
+        assert!(self.slots[slot].is_none(), "slot {slot} already occupied");
+        self.slots[slot] = Some(SlotKv {
+            pages: (0..self.layers).map(|_| Vec::new()).collect(),
+            len: 0,
+        });
+    }
+
+    /// Release a finished/evicted slot, freeing every page back to the
+    /// tracker.
+    pub fn release(&mut self, slot: usize, tracker: &mut MemTracker) {
+        let sk = self.slots[slot].take().expect("release of empty slot");
+        for layer in sk.pages {
+            for page in layer {
+                tracker.free(page.id);
+            }
+        }
+    }
+
+    /// Release every occupied slot (engine shutdown / accounting tests).
+    pub fn release_all(&mut self, tracker: &mut MemTracker) {
+        for slot in 0..self.slots.len() {
+            if self.slots[slot].is_some() {
+                self.release(slot, tracker);
+            }
+        }
+    }
+
+    /// Grow `slot` to hold `new_len` positions in every layer —
+    /// page-granular, every new page tracker-allocated (layer-ascending
+    /// order, so the accounting trace is deterministic).
+    pub fn ensure(
+        &mut self,
+        slot: usize,
+        new_len: usize,
+        tracker: &mut MemTracker,
+    ) -> Result<(), OomError> {
+        let (pt, lanes) = (self.page_tokens, self.lanes);
+        let bytes = self.page_bytes();
+        let need = new_len.div_ceil(pt);
+        let sk = self.slots[slot].as_mut().expect("ensure on empty slot");
+        for layer in sk.pages.iter_mut() {
+            while layer.len() < need {
+                let id = tracker.alloc(MemCategory::KvCache, bytes)?;
+                layer.push(KvPage { data: vec![0.0; 2 * pt * lanes], id });
+                self.pages_allocated += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write the cached K/V rows for `pos` of `slot`/`layer` (the
+    /// post-bias k/v slices of the fused qkv row — exactly what the
+    /// full-sequence forward would have computed for that position).
+    pub fn append(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let (pt, lanes) = (self.page_tokens, self.lanes);
+        debug_assert_eq!(k.len(), lanes);
+        debug_assert_eq!(v.len(), lanes);
+        let sk = self.slots[slot].as_mut().expect("append on empty slot");
+        let page = &mut sk.pages[layer][pos / pt];
+        let r = pos % pt;
+        page.data[r * lanes..(r + 1) * lanes].copy_from_slice(k);
+        let vbase = (pt + r) * lanes;
+        page.data[vbase..vbase + lanes].copy_from_slice(v);
+    }
+
+    /// Mark one more position cached (call once per slot per decode step,
+    /// after every layer appended).
+    pub fn advance(&mut self, slot: usize) {
+        self.slots[slot].as_mut().expect("advance on empty slot").len += 1;
+    }
+
+    pub fn slot_len(&self, slot: usize) -> usize {
+        self.slots[slot].as_ref().map_or(0, |s| s.len)
+    }
+
+    pub fn is_occupied(&self, slot: usize) -> bool {
+        self.slots[slot].is_some()
+    }
+
+    /// Page `pg` of `slot`/`layer`; `KvPage::data[..pt*lanes]` are the K
+    /// rows, the rest the V rows.
+    pub fn page(&self, slot: usize, layer: usize, pg: usize) -> &KvPage {
+        &self.slots[slot].as_ref().expect("page of empty slot").pages[layer][pg]
+    }
+
+    /// Take every occupied page's contents (slot→layer→page order) for a
+    /// rotation hop. Allocations stay: only data travels.
+    pub fn export_data(&mut self) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        for slot in self.slots.iter_mut().flatten() {
+            for layer in slot.pages.iter_mut() {
+                for page in layer.iter_mut() {
+                    out.push(std::mem::take(&mut page.data));
+                }
+            }
+        }
+        out
+    }
+
+    /// Install page contents received from the counter-clockwise
+    /// neighbor — same traversal order as [`KvCache::export_data`]; the
+    /// slot/page structure is identical on every rank (the scheduler is
+    /// SPMD), so the shapes line up by construction.
+    pub fn import_data(&mut self, data: Vec<Vec<f32>>) {
+        let mut it = data.into_iter();
+        for slot in self.slots.iter_mut().flatten() {
+            for layer in slot.pages.iter_mut() {
+                for page in layer.iter_mut() {
+                    let d = it.next().expect("rotation payload has too few pages");
+                    debug_assert_eq!(d.len(), page.data.len());
+                    page.data = d;
+                }
+            }
+        }
+        assert!(it.next().is_none(), "rotation payload has extra pages");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_are_tracked_and_freed() {
+        let mut t = MemTracker::new(0, None);
+        let mut kv = KvCache::new(2, 3, 8, 4);
+        kv.occupy(0);
+        kv.ensure(0, 1, &mut t).unwrap(); // 1 page x 3 layers
+        assert_eq!(t.live_of(MemCategory::KvCache), 3 * kv.page_bytes());
+        kv.ensure(0, 4, &mut t).unwrap(); // still 1 page
+        assert_eq!(kv.pages_allocated(), 3);
+        kv.ensure(0, 5, &mut t).unwrap(); // second page per layer
+        assert_eq!(t.live_of(MemCategory::KvCache), 6 * kv.page_bytes());
+        kv.release(0, &mut t);
+        assert_eq!(t.live_of(MemCategory::KvCache), 0);
+        assert_eq!(t.outstanding(), 0);
+    }
+
+    #[test]
+    fn append_lands_in_k_and_v_blocks() {
+        let mut t = MemTracker::new(0, None);
+        let mut kv = KvCache::new(1, 1, 2, 2);
+        kv.occupy(0);
+        kv.ensure(0, 3, &mut t).unwrap();
+        kv.append(0, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        kv.append(0, 0, 2, &[5.0, 6.0], &[7.0, 8.0]); // second page, row 0
+        let p0 = kv.page(0, 0, 0);
+        assert_eq!(&p0.data[..2], &[1.0, 2.0]);
+        assert_eq!(&p0.data[4..6], &[3.0, 4.0]);
+        let p1 = kv.page(0, 0, 1);
+        assert_eq!(&p1.data[..2], &[5.0, 6.0]);
+        assert_eq!(&p1.data[4..6], &[7.0, 8.0]);
+        kv.release(0, &mut t);
+    }
+
+    #[test]
+    fn export_import_round_trips() {
+        let mut t = MemTracker::new(0, None);
+        let mut kv = KvCache::new(2, 2, 2, 2);
+        kv.occupy(1);
+        kv.ensure(1, 2, &mut t).unwrap();
+        kv.append(1, 0, 0, &[1.0, 1.0], &[2.0, 2.0]);
+        let data = kv.export_data();
+        assert_eq!(data.len(), 2); // one page per layer
+        kv.import_data(data);
+        assert_eq!(&kv.page(1, 0, 0).data[..2], &[1.0, 1.0]);
+        kv.release(1, &mut t);
+        assert_eq!(t.outstanding(), 0);
+    }
+}

@@ -1,0 +1,35 @@
+//! Continuous-batching generation engine over the RTP SPMD stack.
+//!
+//! The paper's memory-deduplication story, applied at inference: RTP's
+//! sharded weights leave device memory for the tensor that actually
+//! binds serving — the KV-cache. This module serves generation requests
+//! on the same simulated cluster the training engines run on:
+//!
+//! * [`request`] — request/trace/report types; arrivals are indexed by
+//!   decode step so scheduling is deterministic per trace.
+//! * [`kv`] — the paged, head-sharded, `MemTracker`-accounted per-rank
+//!   KV-cache ([`MemCategory::KvCache`]); under RTP its page contents
+//!   rotate with the weight shards.
+//! * [`decode`] — the per-rank incremental decode step (attend over
+//!   cached K/V, append one position), built from the bit-parity decode
+//!   kernels in [`crate::model::oracle`].
+//! * [`engine`] — the facade: admission control against the KV budget,
+//!   the continuous-batching scheduler (join/leave at token
+//!   boundaries), and the launcher-driven decode rounds.
+//!
+//! Determinism contract: the emitted token streams are bit-identical
+//! under `Launcher::Lockstep` and `Launcher::Thread`, and — via the
+//! kernel parity contract — an incrementally decoded stream equals the
+//! full-forward argmax stream position for position.
+//!
+//! [`MemCategory::KvCache`]: crate::memory::MemCategory
+
+pub mod decode;
+pub mod engine;
+pub mod kv;
+pub mod request;
+
+pub use decode::{DecodePlan, DecodeRank, PlanEntry};
+pub use engine::{build_serve_engine, build_serve_engine_with_params, ServeEngine, ServeOpts};
+pub use kv::KvCache;
+pub use request::{poisson_trace, Admission, FinishedRequest, GenRequest, ServeReport};

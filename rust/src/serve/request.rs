@@ -1,0 +1,178 @@
+//! Request / trace / report types for the serving engine.
+//!
+//! Arrivals are indexed by *decode step*, never by wall clock: the batch
+//! composition at every step is a pure function of the trace, which is
+//! what makes the scheduler's token streams bit-identical under the
+//! Lockstep and Thread launchers (wall time only feeds the latency
+//! metrics, which are reported, not consumed).
+
+use crate::config::ModelCfg;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+
+/// One generation request: greedy-decode `max_new` tokens after
+/// `prompt`.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+impl GenRequest {
+    /// Positions this request will cache at its peak: the prompt plus
+    /// every generated token except the last (which is emitted, never
+    /// fed back). Admission control projects KV bytes from this.
+    pub fn total_positions(&self) -> usize {
+        self.prompt.len() + self.max_new - 1
+    }
+}
+
+/// Verdict of [`crate::serve::ServeEngine::submit`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Admission {
+    /// Accepted into the arrival queue (joins the batch when a slot and
+    /// KV budget free up).
+    Queued,
+    /// Statically unservable — would exceed the KV budget even alone, or
+    /// malformed. The rejection never involves the SPMD ranks, so peers
+    /// in the running batch are unaffected.
+    Rejected(String),
+}
+
+/// A completed request with its measured per-token latencies.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Step index at which the request joined the running batch.
+    pub joined_step: u64,
+    /// Step index at which its last token was produced.
+    pub finish_step: u64,
+    /// Wall-clock ms of the decode step that produced each token
+    /// (time-per-output-token samples).
+    pub token_ms: Vec<f64>,
+}
+
+/// Aggregate serving metrics over one trace run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub finished: Vec<FinishedRequest>,
+    pub rejected: Vec<(u64, String)>,
+    /// Scheduler steps taken (including idle ticks waiting on arrivals).
+    pub steps: u64,
+    /// Steps that actually ran a decode round.
+    pub decode_steps: u64,
+    pub tokens: u64,
+    pub wall_ms: f64,
+    pub tokens_per_s: f64,
+    pub tpot_p50_ms: f64,
+    pub tpot_p99_ms: f64,
+    /// KV pages tracker-allocated per generated token (deterministic:
+    /// a property of the allocation schedule, not the host).
+    pub kv_allocs_per_token: f64,
+    /// Peak tracked KvCache bytes on rank 0 (ranks are symmetric).
+    pub kv_peak_bytes_per_rank: u64,
+}
+
+impl ServeReport {
+    /// Build the aggregate from per-request results. `kv_pages` is the
+    /// monotonic page-allocation count, `kv_peak` the tracker's
+    /// KvCache-category peak.
+    pub fn from_finished(
+        finished: Vec<FinishedRequest>,
+        rejected: Vec<(u64, String)>,
+        steps: u64,
+        decode_steps: u64,
+        wall_ms: f64,
+        kv_pages: u64,
+        kv_peak: u64,
+    ) -> ServeReport {
+        let tokens: u64 = finished.iter().map(|f| f.tokens.len() as u64).sum();
+        let mut tpot: Vec<f64> =
+            finished.iter().flat_map(|f| f.token_ms.iter().copied()).collect();
+        tpot.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (p50, p99) = if tpot.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile_sorted(&tpot, 50.0), percentile_sorted(&tpot, 99.0))
+        };
+        ServeReport {
+            finished,
+            rejected,
+            steps,
+            decode_steps,
+            tokens,
+            wall_ms,
+            tokens_per_s: if wall_ms > 0.0 { tokens as f64 / (wall_ms / 1e3) } else { 0.0 },
+            tpot_p50_ms: p50,
+            tpot_p99_ms: p99,
+            kv_allocs_per_token: if tokens > 0 { kv_pages as f64 / tokens as f64 } else { 0.0 },
+            kv_peak_bytes_per_rank: kv_peak,
+        }
+    }
+}
+
+/// A Poisson arrival trace: requests with exp(rate)-distributed
+/// inter-arrival gaps measured in decode steps, uniform-random prompts.
+/// Deterministic in `seed` (repo [`Rng`]), so the same trace replays
+/// bit-identically under every launcher.
+pub fn poisson_trace(
+    cfg: &ModelCfg,
+    n_req: usize,
+    rate_per_step: f64,
+    prompt_len: usize,
+    max_new: usize,
+    seed: u64,
+) -> Vec<(u64, GenRequest)> {
+    assert!(rate_per_step > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n_req)
+        .map(|i| {
+            let u = rng.uniform().max(1e-12);
+            t += -u.ln() / rate_per_step;
+            let prompt =
+                (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+            (t.floor() as u64, GenRequest { id: i as u64, prompt, max_new })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn poisson_trace_is_deterministic_and_monotone() {
+        let cfg = presets::get("tiny").unwrap();
+        let a = poisson_trace(&cfg, 10, 0.5, 3, 4, 7);
+        let b = poisson_trace(&cfg, 10, 0.5, 3, 4, 7);
+        assert_eq!(a.len(), 10);
+        for ((sa, ra), (sb, rb)) in a.iter().zip(&b) {
+            assert_eq!(sa, sb);
+            assert_eq!(ra.prompt, rb.prompt);
+        }
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert!(a.iter().all(|(_, r)| r.prompt.iter().all(|&t| (t as usize) < cfg.vocab)));
+    }
+
+    #[test]
+    fn report_percentiles() {
+        let f = FinishedRequest {
+            id: 0,
+            prompt_len: 1,
+            tokens: vec![1, 2, 3, 4],
+            joined_step: 0,
+            finish_step: 3,
+            token_ms: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let r = ServeReport::from_finished(vec![f], vec![], 4, 4, 10.0, 8, 128);
+        assert_eq!(r.tokens, 4);
+        assert_eq!(r.kv_allocs_per_token, 2.0);
+        assert!(r.tpot_p50_ms >= 1.0 && r.tpot_p99_ms <= 4.0);
+        assert!((r.tokens_per_s - 400.0).abs() < 1e-9);
+    }
+}

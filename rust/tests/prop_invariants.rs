@@ -337,7 +337,7 @@ fn prop_tracker_live_never_exceeds_peak_and_frees_balance() {
         for _ in 0..rng.below(60) {
             if live_ids.is_empty() || rng.below(3) < 2 {
                 let bytes = 1 + rng.below(1000) as u64;
-                let cat = MemCategory::ALL[rng.below(5)];
+                let cat = MemCategory::ALL[rng.below(MemCategory::ALL.len())];
                 live_ids.push((t.alloc(cat, bytes).unwrap(), bytes));
                 expected_live += bytes;
             } else {

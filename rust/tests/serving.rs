@@ -1,0 +1,298 @@
+//! Serving-path integration tests: launcher-invariant token streams
+//! with continuous-batching join/leave, decode-vs-full-forward parity,
+//! and KV-cache accounting / admission control.
+
+use rtp::config::{presets, ModelCfg, Strategy};
+use rtp::memory::analytic::kv_cache_bytes_per_rank;
+use rtp::memory::MemCategory;
+use rtp::model::{oracle, MlpParams, ModelParams};
+use rtp::parallel::Launcher;
+use rtp::serve::{
+    build_serve_engine, build_serve_engine_with_params, Admission, GenRequest, ServeOpts,
+};
+use rtp::tensor::IntTensor;
+use rtp::util::rng::Rng;
+
+/// Staggered arrivals with mixed lengths: requests join while others
+/// are mid-decode and leave at different steps — the continuous-batching
+/// churn the equivalence matrix must survive.
+fn staggered_trace(cfg: &ModelCfg) -> Vec<(u64, GenRequest)> {
+    let mut rng = Rng::new(123);
+    let spec: [(u64, usize, usize); 6] =
+        [(0, 3, 6), (1, 2, 9), (2, 4, 3), (5, 3, 7), (6, 2, 2), (9, 5, 4)];
+    spec.iter()
+        .enumerate()
+        .map(|(i, &(step, prompt_len, max_new))| {
+            let prompt = (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+            (step, GenRequest { id: i as u64, prompt, max_new })
+        })
+        .collect()
+}
+
+fn run_stream(strategy: Strategy, n: usize, launcher: Launcher) -> Vec<(u64, Vec<i32>)> {
+    let cfg = presets::get("tiny").unwrap();
+    let opts = ServeOpts::new("tiny")
+        .strategy(strategy)
+        .workers(n)
+        .max_batch(3)
+        .page_tokens(4)
+        .seed(9)
+        .launcher(launcher);
+    let mut eng = build_serve_engine(&opts).unwrap();
+    eng.run_trace(&staggered_trace(&cfg)).unwrap();
+    let rep = eng.report();
+    assert_eq!(rep.finished.len(), 6);
+    assert!(rep.rejected.is_empty());
+    let mut out: Vec<(u64, Vec<i32>)> =
+        rep.finished.iter().map(|f| (f.id, f.tokens.clone())).collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+/// The determinism contract of the tentpole: bit-identical token
+/// streams under the Lockstep oracle and the threaded launcher, for
+/// every sharded strategy at N ∈ {2, 4}, with join/leave churn.
+#[test]
+fn token_streams_launcher_invariant() {
+    for strategy in
+        [Strategy::MegatronTp, Strategy::RtpInplace, Strategy::RtpOutOfPlace]
+    {
+        for n in [2usize, 4] {
+            let lock = run_stream(strategy, n, Launcher::Lockstep);
+            let thr = run_stream(strategy, n, Launcher::Thread);
+            assert_eq!(
+                lock, thr,
+                "{strategy} N={n}: Lockstep and Thread token streams diverged"
+            );
+            for (_, tokens) in &lock {
+                assert!(!tokens.is_empty());
+            }
+        }
+    }
+}
+
+/// Full-sequence oracle forward to logits (the reference path).
+fn forward_logits(params: &ModelParams, cfg: &ModelCfg, ids: &[i32]) -> Vec<f32> {
+    let idt = IntTensor::from_vec(&[1, cfg.seq], ids.to_vec());
+    let mut x = oracle::emb_fwd(&idt, &params.wte, &params.wpe);
+    for lp in &params.layers {
+        let a = oracle::ln_fwd(&x, &lp.ln1_g, &lp.ln1_b);
+        let mut part = oracle::attn_fwd(&a, &lp.wqkv, &lp.bqkv, &lp.wo, cfg.heads);
+        part.add_row_broadcast(&lp.bo);
+        part.add_assign(&x);
+        let m = oracle::ln_fwd(&part, &lp.ln2_g, &lp.ln2_b);
+        let (w1, b1, w2, b2) = match &lp.mlp {
+            MlpParams::Dense { w1, b1, w2, b2 } => (w1, b1, w2, b2),
+            _ => panic!("dense preset expected"),
+        };
+        let mut mo = oracle::mlp_fwd(&m, w1, b1, w2);
+        mo.add_row_broadcast(b2);
+        mo.add_assign(&part);
+        x = mo;
+    }
+    let xf = oracle::ln_fwd(&x, &params.lnf_g, &params.lnf_b);
+    oracle::lmhead_fwd(&xf, &params.wlm).data
+}
+
+/// Satellite 1's core claim, in tier-1: the incremental KV-cache decode
+/// emits the exact argmax stream of the O(seq²) full re-forward.
+#[test]
+fn incremental_decode_matches_full_forward_argmax_stream() {
+    let cfg = presets::get("tiny").unwrap();
+    let params = ModelParams::init(&cfg, &mut Rng::new(5));
+    let prompt_len = 4;
+    let gen_len = cfg.seq - prompt_len;
+    let mut rng = Rng::new(77);
+    let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+    let opts = ServeOpts::new("tiny")
+        .strategy(Strategy::Single)
+        .workers(1)
+        .max_batch(1)
+        .page_tokens(3); // deliberately not a divisor of seq
+    let mut eng = build_serve_engine_with_params(&opts, &params).unwrap();
+    assert_eq!(
+        eng.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new: gen_len }),
+        Admission::Queued
+    );
+    eng.drain().unwrap();
+    let fast = eng.report().finished[0].tokens.clone();
+    assert_eq!(fast.len(), gen_len);
+
+    let mut ids = vec![0i32; cfg.seq];
+    ids[..prompt_len].copy_from_slice(&prompt);
+    let mut reference = Vec::with_capacity(gen_len);
+    for pos in prompt_len..prompt_len + gen_len {
+        let logits = forward_logits(&params, &cfg, &ids);
+        let row = &logits[(pos - 1) * cfg.vocab..pos * cfg.vocab];
+        let next = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        reference.push(next as i32);
+        ids[pos] = next as i32;
+    }
+    assert_eq!(fast, reference);
+}
+
+/// Continuous batching demonstrably joins and leaves at token
+/// boundaries: a short late request is served entirely inside a long
+/// request's lifetime, and a queued request joins only when a slot
+/// frees.
+#[test]
+fn requests_join_and_leave_mid_batch() {
+    let cfg = presets::get("tiny").unwrap();
+    let mut rng = Rng::new(3);
+    let mut prompt = |len: usize| -> Vec<i32> {
+        (0..len).map(|_| rng.below(cfg.vocab) as i32).collect()
+    };
+    let trace = vec![
+        (0u64, GenRequest { id: 0, prompt: prompt(2), max_new: 12 }),
+        (3, GenRequest { id: 1, prompt: prompt(2), max_new: 2 }),
+    ];
+    let opts = ServeOpts::new("tiny")
+        .strategy(Strategy::RtpInplace)
+        .workers(2)
+        .max_batch(2)
+        .page_tokens(4);
+    let mut eng = build_serve_engine(&opts).unwrap();
+    eng.run_trace(&trace).unwrap();
+    let rep = eng.report();
+    assert_eq!(rep.finished.len(), 2);
+    let long = rep.finished.iter().find(|f| f.id == 0).unwrap();
+    let short = rep.finished.iter().find(|f| f.id == 1).unwrap();
+    // the short request's whole life is strictly inside the long one's
+    assert!(long.joined_step < short.joined_step);
+    assert!(short.finish_step < long.finish_step);
+    assert_eq!(short.tokens.len(), 2);
+    assert_eq!(long.tokens.len(), 12);
+}
+
+/// Tracked KV bytes match the analytic closed form at every growth
+/// stage, and everything is freed on retirement/shutdown.
+#[test]
+fn kv_accounting_matches_analytic() {
+    for (strategy, n) in [(Strategy::Single, 1usize), (Strategy::MegatronTp, 2), (Strategy::RtpInplace, 2)]
+    {
+        let cfg = presets::get("tiny").unwrap();
+        let page_tokens = 2;
+        let opts = ServeOpts::new("tiny")
+            .strategy(strategy)
+            .workers(n)
+            .max_batch(2)
+            .page_tokens(page_tokens);
+        let mut eng = build_serve_engine(&opts).unwrap();
+        let (prompt_len, max_new) = (3usize, 4usize);
+        let total_positions = prompt_len + max_new - 1;
+        let mut rng = Rng::new(11);
+        let prompt: Vec<i32> =
+            (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+        eng.submit(GenRequest { id: 0, prompt, max_new });
+
+        for k in 1..=3u64 {
+            assert!(eng.step().unwrap());
+            // k positions cached after k steps (one token fed per step)
+            let want =
+                kv_cache_bytes_per_rank(strategy, &cfg, k as usize, page_tokens, n as u64);
+            for w in &eng.cluster().workers {
+                assert_eq!(
+                    w.tracker.live_of(MemCategory::KvCache),
+                    want,
+                    "{strategy} N={n} step {k}: tracked KV != analytic"
+                );
+            }
+        }
+        eng.drain().unwrap();
+        let peak_want =
+            kv_cache_bytes_per_rank(strategy, &cfg, total_positions, page_tokens, n as u64);
+        for w in &eng.cluster().workers {
+            assert_eq!(w.tracker.live_of(MemCategory::KvCache), 0);
+            assert_eq!(w.tracker.peak_of(MemCategory::KvCache), peak_want);
+        }
+        eng.shutdown();
+        for w in &eng.cluster().workers {
+            assert_eq!(w.tracker.outstanding(), 0);
+        }
+    }
+}
+
+/// Admission control: an over-budget request is rejected at submit —
+/// facade-side, without aborting the running batch — while requests
+/// that fit keep flowing through the same budget.
+#[test]
+fn admission_rejects_over_budget_without_aborting_peers() {
+    let cfg = presets::get("tiny").unwrap();
+    let (strategy, n, page_tokens) = (Strategy::MegatronTp, 2usize, 2usize);
+    // probe run to learn the fixed (weights + scratch) footprint
+    let mk_opts = |capacity: Option<u64>| {
+        ServeOpts::new("tiny")
+            .strategy(strategy)
+            .workers(n)
+            .max_batch(2)
+            .page_tokens(page_tokens)
+            .capacity(capacity)
+    };
+    let probe = build_serve_engine(&mk_opts(None)).unwrap();
+    let base = probe.cluster().workers[0].tracker.live();
+
+    // budget fits exactly one small request (3 positions)
+    let small_bytes = kv_cache_bytes_per_rank(strategy, &cfg, 3, page_tokens, n as u64);
+    let mut eng = build_serve_engine(&mk_opts(Some(base + small_bytes))).unwrap();
+    assert_eq!(eng.kv_budget(), small_bytes);
+
+    let mut rng = Rng::new(21);
+    let mut prompt = |len: usize| -> Vec<i32> {
+        (0..len).map(|_| rng.below(cfg.vocab) as i32).collect()
+    };
+    let small = GenRequest { id: 0, prompt: prompt(2), max_new: 2 };
+    assert_eq!(eng.submit(small), Admission::Queued);
+    assert!(eng.step().unwrap()); // small is now running
+
+    // a request that could never fit alone: rejected immediately, and
+    // the running peer is untouched
+    let big = GenRequest { id: 1, prompt: prompt(4), max_new: 8 };
+    assert!(matches!(eng.submit(big), Admission::Rejected(_)));
+    assert_eq!(eng.running_len(), 1);
+
+    // a second small request fits the budget but must wait for the
+    // first to retire (head-of-line admission is budget-serialized)
+    let small2 = GenRequest { id: 2, prompt: prompt(2), max_new: 2 };
+    assert_eq!(eng.submit(small2), Admission::Queued);
+    eng.drain().unwrap();
+    let rep = eng.report();
+    assert_eq!(rep.finished.len(), 2);
+    assert_eq!(rep.rejected.len(), 1);
+    assert_eq!(rep.rejected[0].0, 1);
+    for f in &rep.finished {
+        assert_eq!(f.tokens.len(), 2);
+    }
+}
+
+/// KV allocation churn is exactly the page schedule: per finished
+/// request, `layers * ceil(total_positions / page_tokens)` tracker
+/// allocations — nothing extra on the hot path.
+#[test]
+fn kv_allocs_per_token_is_page_schedule() {
+    let cfg = presets::get("tiny").unwrap();
+    let (prompt_len, max_new, page_tokens) = (4usize, 6usize, 4usize);
+    let opts = ServeOpts::new("tiny")
+        .strategy(Strategy::RtpInplace)
+        .workers(2)
+        .max_batch(2)
+        .page_tokens(page_tokens);
+    let mut eng = build_serve_engine(&opts).unwrap();
+    let mut rng = Rng::new(8);
+    for id in 0..3u64 {
+        let prompt = (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+        eng.submit(GenRequest { id, prompt, max_new });
+    }
+    eng.drain().unwrap();
+    let rep = eng.report();
+    let total_positions = prompt_len + max_new - 1;
+    let pages_per_req = cfg.layers * total_positions.div_ceil(page_tokens);
+    let want = (3 * pages_per_req) as f64 / (3 * max_new) as f64;
+    assert_eq!(rep.kv_allocs_per_token, want);
+    assert_eq!(rep.tokens, 3 * max_new as u64);
+}

@@ -1,8 +1,10 @@
 #!/usr/bin/env python3
-"""Diff a fresh figures/BENCH_overlap.json against the committed
-repo-root baseline and fail on perf regressions.
+"""Diff a fresh bench JSON against its committed repo-root baseline and
+fail on perf regressions. General over bench files: CI runs it once per
+(baseline, fresh) pair — BENCH_overlap.json for the training hot path,
+BENCH_serving.json for the serving path.
 
-Rules (see BENCH_overlap.json's "note" field):
+Rules, keyed by name pattern (see each baseline's "note" field):
   * keys ending in ``_overlap_fraction`` tracked in the baseline fail on a
     relative regression of more than 10% (fresh < 0.9 * baseline);
   * keys ending in ``_step_ratio`` tracked in the baseline fail on a
@@ -10,12 +12,17 @@ Rules (see BENCH_overlap.json's "note" field):
     better — e.g. the hop scheduler's scheduled/convoy step-time ratio,
     where a baseline of 1.0 means "scheduled must never cost more than
     ~10% over the FIFO convoy");
+  * keys ending in ``_p99_tpot_ms`` tracked in the baseline fail when the
+    fresh p99 time-per-output-token exceeds the baseline guard-rail by
+    more than 10% (fresh > 1.1 * baseline; lower is better);
   * keys containing ``allocs`` tracked in the baseline fail on ANY
     increase (the steady-state hot paths are allocation-free by
-    construction; the baseline values are explicit headroom);
-  * ``fsdp_measured_overlap_fraction`` must be strictly positive — the
-    background collective engine's acceptance bar: prefetch allgather and
-    backward reduce-scatter genuinely overlap compute on the data path;
+    construction, and the serving KV page schedule is deterministic; the
+    baseline values are explicit headroom);
+  * ``fsdp_measured_overlap_fraction``, when tracked in the baseline,
+    must be strictly positive in the fresh run — the background
+    collective engine's acceptance bar: prefetch allgather and backward
+    reduce-scatter genuinely overlap compute on the data path;
   * a baseline value of null means "informational only, not tracked".
 
 Usage: check_bench_overlap.py BASELINE FRESH
@@ -27,6 +34,9 @@ import sys
 
 def is_num(v):
     return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+TRACKED_SUFFIXES = ("_overlap_fraction", "_step_ratio", "_p99_tpot_ms")
 
 
 def main():
@@ -46,11 +56,7 @@ def main():
             continue
         fval = fresh.get(key)
         if not is_num(fval):
-            if (
-                key.endswith("_overlap_fraction")
-                or key.endswith("_step_ratio")
-                or "allocs" in key
-            ):
+            if key.endswith(TRACKED_SUFFIXES) or "allocs" in key:
                 failures.append(f"{key}: tracked in baseline but missing from fresh run")
             continue
         if key.endswith("_overlap_fraction"):
@@ -70,29 +76,40 @@ def main():
                 )
             else:
                 print(f"ok  {key}: {fval:.4f} (baseline {bval:.4f})")
+        elif key.endswith("_p99_tpot_ms"):
+            checked += 1
+            if fval > 1.1 * bval:
+                failures.append(
+                    f"{key}: p99 TPOT regressed >10% over the guard-rail "
+                    f"({fval:.4f} ms > 1.1 * {bval:.4f} ms)"
+                )
+            else:
+                print(f"ok  {key}: {fval:.4f} ms (guard-rail {bval:.4f} ms)")
         elif "allocs" in key:
             checked += 1
             if fval > bval:
                 failures.append(
-                    f"{key}: steady-state allocations increased ({fval:.0f} > {bval:.0f})"
+                    f"{key}: steady-state allocations increased "
+                    f"({fval:.4f} > {bval:.4f})"
                 )
             else:
-                print(f"ok  {key}: {fval:.0f} (baseline headroom {bval:.0f})")
+                print(f"ok  {key}: {fval:.4f} (baseline headroom {bval:.4f})")
 
-    # acceptance bar: the background collective engine must measurably
-    # hide FSDP's collectives behind compute
-    fsdp = fresh.get("fsdp_measured_overlap_fraction")
-    if not is_num(fsdp):
-        failures.append("fsdp_measured_overlap_fraction: missing from fresh run")
-    elif fsdp <= 0.0:
-        failures.append(
-            f"fsdp_measured_overlap_fraction: not strictly positive ({fsdp})"
-        )
-    else:
-        print(f"ok  fsdp_measured_overlap_fraction strictly positive: {fsdp:.4f}")
+    # acceptance bar (overlap baseline only): the background collective
+    # engine must measurably hide FSDP's collectives behind compute
+    if "fsdp_measured_overlap_fraction" in base:
+        fsdp = fresh.get("fsdp_measured_overlap_fraction")
+        if not is_num(fsdp):
+            failures.append("fsdp_measured_overlap_fraction: missing from fresh run")
+        elif fsdp <= 0.0:
+            failures.append(
+                f"fsdp_measured_overlap_fraction: not strictly positive ({fsdp})"
+            )
+        else:
+            print(f"ok  fsdp_measured_overlap_fraction strictly positive: {fsdp:.4f}")
 
     if failures:
-        print("\nFAIL: BENCH_overlap regression vs committed baseline:")
+        print("\nFAIL: bench regression vs committed baseline:")
         for f_ in failures:
             print(f"  - {f_}")
         return 1

@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Promote measured bench values from a CI artifact into a committed
+repo-root baseline.
+
+The repo-root baselines (BENCH_overlap.json, BENCH_serving.json) gate CI
+via scripts/check_bench_overlap.py. Where no local toolchain run exists,
+tracked keys hold conservative contract bounds rather than measurements;
+this tool replaces them with real measured values once a trustworthy run
+is available — download the `bench-baselines` artifact from a green CI
+run of this commit, then:
+
+    python3 scripts/promote_bench_baseline.py BENCH_overlap.json fresh/BENCH_overlap.json
+    python3 scripts/promote_bench_baseline.py BENCH_serving.json fresh/BENCH_serving.json
+
+For every key that is TRACKED in the baseline (non-null and matched by a
+gate rule), the measured value is written back with gate-aware headroom
+so normal runner jitter cannot trip the diff:
+  * ``*_overlap_fraction``  -> 0.8 * measured (gate fails < 0.9 * base)
+  * ``*_step_ratio``        -> 1.2 * measured (gate fails > 1.1 * base)
+  * ``*_p99_tpot_ms``       -> 2.0 * measured (generous guard-rail)
+  * ``*allocs*``            -> exact measured value (deterministic
+                               schedules; any increase is a real bug)
+Null (informational) keys are never touched. The file is rewritten in
+place with the same key order; review the diff before committing.
+"""
+
+import json
+import sys
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def promoted(key, bval, mval):
+    if not (is_num(bval) and is_num(mval)):
+        return None
+    if key.endswith("_overlap_fraction"):
+        return round(0.8 * mval, 6)
+    if key.endswith("_step_ratio"):
+        return round(1.2 * mval, 6)
+    if key.endswith("_p99_tpot_ms"):
+        return round(2.0 * mval, 4)
+    if "allocs" in key:
+        return mval
+    return None
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    baseline_path, fresh_path = sys.argv[1], sys.argv[2]
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    changed = 0
+    for key, bval in base.items():
+        p = promoted(key, bval, fresh.get(key))
+        if p is not None and p != bval:
+            print(f"  {key}: {bval} -> {p} (measured {fresh[key]})")
+            base[key] = p
+            changed += 1
+
+    if not changed:
+        print("nothing to promote (no tracked keys changed)")
+        return 0
+    with open(baseline_path, "w") as f:
+        json.dump(base, f, indent=2)
+        f.write("\n")
+    print(f"rewrote {baseline_path} with {changed} promoted value(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
