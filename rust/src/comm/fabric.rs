@@ -96,6 +96,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
+use crate::runtime::fault::{FailureKind, RankDeath, RankFailure};
+
 /// Max recycled buffers kept per lane pool (a rotation/collective keeps
 /// at most a couple of buffers in flight per link; beyond that the pool
 /// would just hoard memory).
@@ -237,6 +239,12 @@ pub struct FabricCounters {
     /// hop-starvation witness. `RoundRobin` bounds this at 1 by
     /// construction; `Fifo` lets it grow to a full collective's hop count.
     pub sched_max_streak: u64,
+    /// Messages drained out of the lanes at poisoned-round teardown.
+    /// Pooled `Vec<f32>` payloads among them are RETURNED to their lane
+    /// pool (up to the pool cap), so an aborted round leaks neither
+    /// messages nor buffers — `tests/fault_tolerance.rs` asserts both
+    /// this counter and `in_flight() == 0` after every injected death.
+    pub poison_drained: u64,
 }
 
 #[derive(Default)]
@@ -251,6 +259,7 @@ struct CounterCells {
     sched_hops: AtomicU64,
     sched_switches: AtomicU64,
     sched_max_streak: AtomicU64,
+    poison_drained: AtomicU64,
 }
 
 /// Global (non-hot-path) round state: the lockstep scheduler and the
@@ -260,6 +269,11 @@ struct Ctl {
     sched: Option<Sched>,
     /// Why the round was poisoned (surfaced in every peer's panic).
     poison_msg: String,
+    /// The typed identity of the rank whose death poisoned the round
+    /// (first detector wins; secondary stalls never overwrite the root
+    /// cause). Survives round teardown so the engine facade can surface
+    /// it as an error instead of a panic; cleared at the next round start.
+    failure: Option<RankFailure>,
 }
 
 const MODE_NONE: u8 = 0;
@@ -284,6 +298,12 @@ struct FabricShared {
     recv_timeout_ms: AtomicU64,
     /// Test override for the watchdog (0 = use RTP_FABRIC_TIMEOUT_SECS).
     timeout_override_ms: AtomicU64,
+    /// Active retry budget: how many EXTRA watchdog windows a threaded
+    /// receiver burns before declaring the peer dead.
+    recv_retries: AtomicU64,
+    /// Test override for the retry budget, stored as value+1 (0 = use
+    /// RTP_FABRIC_RETRIES).
+    retries_override: AtomicU64,
     counters: CounterCells,
 }
 
@@ -317,6 +337,16 @@ impl FabricShared {
 
     fn poison_reason(&self) -> String {
         self.lock_ctl().poison_msg.clone()
+    }
+
+    /// Record the typed identity of a failed rank (first detector wins).
+    /// Call BEFORE the matching `poison` so a survivor that observes the
+    /// poison flag can already see the root cause.
+    fn record_failure(&self, f: RankFailure) {
+        let mut ctl = self.lock_ctl();
+        if ctl.failure.is_none() {
+            ctl.failure = Some(f);
+        }
     }
 
     /// Move the lockstep turn to the next runnable rank (round-robin from
@@ -370,6 +400,16 @@ fn recv_timeout_from_env() -> Duration {
     Duration::from_secs(secs.max(1))
 }
 
+/// Extra watchdog windows a threaded receiver waits before declaring the
+/// peer dead (total patience = timeout × (1 + retries)). Default 0 keeps
+/// historical detection latency.
+fn recv_retries_from_env() -> u32 {
+    std::env::var("RTP_FABRIC_RETRIES")
+        .ok()
+        .and_then(|v| v.parse::<u32>().ok())
+        .unwrap_or(0)
+}
+
 impl RingFabric {
     pub fn new(n: usize) -> RingFabric {
         assert!(n >= 1, "ring fabric needs at least one rank");
@@ -377,7 +417,11 @@ impl RingFabric {
             shared: Arc::new(FabricShared {
                 n,
                 lanes: (0..CHANNELS * n * n).map(|_| Lane::new()).collect(),
-                ctl: Mutex::new(Ctl { sched: None, poison_msg: String::new() }),
+                ctl: Mutex::new(Ctl {
+                    sched: None,
+                    poison_msg: String::new(),
+                    failure: None,
+                }),
                 ctl_cv: Condvar::new(),
                 mode: AtomicU8::new(MODE_NONE),
                 poisoned: AtomicBool::new(false),
@@ -385,6 +429,8 @@ impl RingFabric {
                 delivered: AtomicU64::new(0),
                 recv_timeout_ms: AtomicU64::new(20_000),
                 timeout_override_ms: AtomicU64::new(0),
+                recv_retries: AtomicU64::new(0),
+                retries_override: AtomicU64::new(0),
                 counters: CounterCells::default(),
             }),
         }
@@ -453,6 +499,7 @@ impl RingFabric {
             sched_hops: s.counters.sched_hops.load(Ordering::SeqCst),
             sched_switches: s.counters.sched_switches.load(Ordering::SeqCst),
             sched_max_streak: s.counters.sched_max_streak.load(Ordering::SeqCst),
+            poison_drained: s.counters.poison_drained.load(Ordering::SeqCst),
         }
     }
 
@@ -470,6 +517,7 @@ impl RingFabric {
         c.sched_hops.store(0, Ordering::SeqCst);
         c.sched_switches.store(0, Ordering::SeqCst);
         c.sched_max_streak.store(0, Ordering::SeqCst);
+        c.poison_drained.store(0, Ordering::SeqCst);
     }
 
     /// Override the threaded-recv watchdog for subsequent rounds on this
@@ -478,6 +526,23 @@ impl RingFabric {
     pub fn set_recv_timeout(&self, d: Option<Duration>) {
         let ms = d.map(|d| (d.as_millis() as u64).max(1)).unwrap_or(0);
         self.shared.timeout_override_ms.store(ms, Ordering::SeqCst);
+    }
+
+    /// Override the threaded-recv retry budget for subsequent rounds on
+    /// this fabric (`None` = back to `RTP_FABRIC_RETRIES`). Test hook.
+    pub fn set_recv_retries(&self, r: Option<u32>) {
+        let v = r.map(|r| r as u64 + 1).unwrap_or(0);
+        self.shared.retries_override.store(v, Ordering::SeqCst);
+    }
+
+    /// The typed identity of the rank whose death poisoned the current or
+    /// most recent round (injected kill, watchdog timeout, comm-thread
+    /// death), if any detector recorded one. Survives round teardown —
+    /// the engine facade reads it to surface a `RankFailure` error to the
+    /// caller instead of re-raising the poison panic. Cleared when the
+    /// next round starts.
+    pub fn rank_failure(&self) -> Option<RankFailure> {
+        self.shared.lock_ctl().failure.clone()
     }
 
     /// Poison the active round with an ORDERLY abort (a rank body is
@@ -538,6 +603,7 @@ impl RingFabric {
             );
             sh.poisoned.store(false, Ordering::SeqCst);
             ctl.poison_msg.clear();
+            ctl.failure = None;
             match policy {
                 LaunchPolicy::Lockstep => {
                     ctl.sched = Some(Sched { turn: 0, state: vec![RankState::Ready; n_tasks] });
@@ -552,6 +618,13 @@ impl RingFabric {
                     };
                     sh.recv_timeout_ms
                         .store((t.as_millis() as u64).max(1), Ordering::SeqCst);
+                    let rov = sh.retries_override.load(Ordering::SeqCst);
+                    let retries = if rov > 0 {
+                        rov - 1
+                    } else {
+                        recv_retries_from_env() as u64
+                    };
+                    sh.recv_retries.store(retries, Ordering::SeqCst);
                     sh.mode.store(MODE_THREADED, Ordering::SeqCst);
                 }
             }
@@ -571,10 +644,31 @@ impl RingFabric {
                             lockstep: policy == LaunchPolicy::Lockstep,
                             completed: false,
                         };
-                        let out = task();
-                        guard.completed = true;
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+                        if let Err(p) = &out {
+                            // an injected rank death: record the typed
+                            // root cause (and poison with it) before the
+                            // guard's generic peer-panicked poison
+                            if let Some(d) = p.downcast_ref::<RankDeath>() {
+                                let f = RankFailure {
+                                    failed_rank: d.rank,
+                                    kind: FailureKind::Injected { phase: d.phase },
+                                    detail: format!(
+                                        "injected kill of rank {} at step {} ({} fault point)",
+                                        d.rank, d.step, d.phase
+                                    ),
+                                };
+                                let msg = f.to_string();
+                                self.shared.record_failure(f);
+                                self.shared.poison(&msg);
+                            }
+                        }
+                        guard.completed = out.is_ok();
                         drop(guard);
-                        out
+                        match out {
+                            Ok(v) => v,
+                            Err(p) => std::panic::resume_unwind(p),
+                        }
                     })
                 })
                 .collect();
@@ -586,10 +680,20 @@ impl RingFabric {
             sh.mode.store(MODE_NONE, Ordering::SeqCst);
             if sh.poisoned.load(Ordering::SeqCst) {
                 // an aborted round can leave messages mid-collective in
-                // the lanes; flush them so the fabric is reusable
+                // the lanes; drain them so the fabric is reusable,
+                // returning pooled payloads to their lane pool so a dead
+                // rank leaks neither messages nor buffers
                 for lane in &sh.lanes {
                     let mut b = lane.lock(&sh.counters);
-                    b.q.clear();
+                    while let Some(m) = b.q.pop_front() {
+                        sh.counters.poison_drained.fetch_add(1, Ordering::Relaxed);
+                        if let Msg::F32(mut v) = m {
+                            if b.pool.len() < POOL_CAP {
+                                v.clear();
+                                b.pool.push(v);
+                            }
+                        }
+                    }
                     lane.pending.store(0, Ordering::SeqCst);
                 }
                 sh.delivered
@@ -682,6 +786,14 @@ impl Drop for RoundGuard<'_> {
             self.fab.shared.poison("a peer rank's body panicked");
         }
     }
+}
+
+/// Per-recv watchdog state of a threaded receiver: the active deadline
+/// plus how many timeout windows it has already burned from the retry
+/// budget. Reset for every `recv_msg` call.
+struct ThreadedWatch {
+    deadline: Option<Instant>,
+    retries_used: u32,
 }
 
 impl fmt::Debug for RingFabric {
@@ -799,6 +911,20 @@ impl RingPort {
         }
     }
 
+    /// Record a typed rank failure (first detector wins) and poison the
+    /// round with it — how a background comm thread that watched its rank
+    /// die surfaces the death to every peer.
+    pub(crate) fn fail_round(&self, f: RankFailure) {
+        let msg = f.to_string();
+        self.shared.record_failure(f);
+        self.shared.poison(&msg);
+    }
+
+    /// Is the active round poisoned?
+    pub(crate) fn is_poisoned(&self) -> bool {
+        self.shared.poisoned.load(Ordering::SeqCst)
+    }
+
     /// Clockwise neighbor (the rank this port sends to in a cw rotation).
     pub fn next(&self) -> usize {
         (self.rank + 1) % self.n
@@ -869,7 +995,7 @@ impl RingPort {
         self.assert_neighbor(peer);
         let sh = &self.shared;
         let lane = sh.lane(self.ch, self.rank, peer);
-        let mut deadline: Option<Instant> = None;
+        let mut watch = ThreadedWatch { deadline: None, retries_used: 0 };
         loop {
             self.check_poison();
             {
@@ -882,7 +1008,7 @@ impl RingPort {
             }
             match sh.mode.load(Ordering::SeqCst) {
                 MODE_LOCKSTEP => self.lockstep_yield(peer),
-                MODE_THREADED => self.threaded_wait(lane, peer, &mut deadline),
+                MODE_THREADED => self.threaded_wait(lane, peer, &mut watch),
                 _ => panic!(
                     "rank {} recv from {peer}: mailbox empty (ring protocol bug)",
                     self.rank
@@ -1050,12 +1176,16 @@ impl RingPort {
     /// Threaded: park on this lane's condvar until a message (or the
     /// watchdog fires, poisoning the round with the stalled link's
     /// identity). Parks in short slices so poison raised concurrently is
-    /// observed promptly even without a notification.
-    fn threaded_wait(&self, lane: &Lane, peer: usize, deadline: &mut Option<Instant>) {
+    /// observed promptly even without a notification. Each expired
+    /// watchdog window burns one unit of the round's retry budget
+    /// (`RTP_FABRIC_RETRIES` / [`RingFabric::set_recv_retries`]) before
+    /// the peer is declared dead; the final expiry records a typed
+    /// [`RankFailure`] naming the stalled link's upstream rank.
+    fn threaded_wait(&self, lane: &Lane, peer: usize, watch: &mut ThreadedWatch) {
         let sh = &self.shared;
         let timeout =
             Duration::from_millis(sh.recv_timeout_ms.load(Ordering::SeqCst).max(1));
-        let dl = *deadline.get_or_insert_with(|| Instant::now() + timeout);
+        let dl = *watch.deadline.get_or_insert_with(|| Instant::now() + timeout);
         {
             let mut b = lane.lock(&sh.counters);
             if !b.q.is_empty() || sh.poisoned.load(Ordering::SeqCst) {
@@ -1080,6 +1210,12 @@ impl RingPort {
             if !lane.lock(&sh.counters).q.is_empty() {
                 return;
             }
+            let budget = sh.recv_retries.load(Ordering::SeqCst) as u32;
+            if watch.retries_used < budget {
+                watch.retries_used += 1;
+                watch.deadline = Some(Instant::now() + timeout);
+                return;
+            }
             let msg = format!(
                 "rank {} recv from {peer}: no message after {timeout:?} on link \
                  r{peer}->r{}{} ({} ring direction) — stalled link \
@@ -1089,6 +1225,11 @@ impl RingPort {
                 if self.ch >= CH_BG { " [bg lane]" } else { "" },
                 self.link_direction(peer)
             );
+            sh.record_failure(RankFailure {
+                failed_rank: peer,
+                kind: FailureKind::RecvTimeout { retries: watch.retries_used },
+                detail: msg.clone(),
+            });
             sh.poison(&msg);
             panic!("{msg}");
         }
@@ -1423,6 +1564,151 @@ mod tests {
         let p = fab.port(0);
         p.send(1, 3usize);
         assert_eq!(fab.port(1).recv::<usize>(0), 3);
+    }
+
+    #[test]
+    fn watchdog_records_typed_rank_failure() {
+        let fab = RingFabric::new(2);
+        fab.set_recv_timeout(Some(Duration::from_millis(150)));
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+            .map(|r| {
+                let port = fab.port(r);
+                Box::new(move || {
+                    if r == 0 {
+                        let _: usize = port.recv(1);
+                    }
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fab.run_round(LaunchPolicy::Threaded, tasks);
+        }));
+        assert!(caught.is_err());
+        fab.set_recv_timeout(None);
+        let f = fab.rank_failure().expect("watchdog must record the failed rank");
+        assert_eq!(f.failed_rank, 1, "{f}");
+        assert!(matches!(f.kind, FailureKind::RecvTimeout { retries: 0 }), "{f}");
+        assert!(f.detail.contains("link r1->r0"), "{f}");
+        // a later healthy round clears the record
+        let tasks: Vec<Box<dyn FnOnce() + Send>> =
+            (0..2).map(|_| Box::new(|| {}) as Box<dyn FnOnce() + Send>).collect();
+        fab.run_round(LaunchPolicy::Threaded, tasks);
+        assert!(fab.rank_failure().is_none());
+    }
+
+    #[test]
+    fn recv_retry_budget_extends_the_watchdog() {
+        // one 120ms window would declare the sender dead; 4 extra retry
+        // windows cover its 250ms stall
+        let fab = RingFabric::new(2);
+        fab.set_recv_timeout(Some(Duration::from_millis(120)));
+        fab.set_recv_retries(Some(4));
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+            .map(|r| {
+                let port = fab.port(r);
+                Box::new(move || {
+                    if r == 0 {
+                        assert_eq!(port.recv::<usize>(1), 42);
+                    } else {
+                        std::thread::sleep(Duration::from_millis(250));
+                        port.send(0, 42usize);
+                    }
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        fab.run_round(LaunchPolicy::Threaded, tasks);
+        assert!(fab.rank_failure().is_none());
+        // exhausted budget still records the burned retries
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+            .map(|r| {
+                let port = fab.port(r);
+                Box::new(move || {
+                    if r == 0 {
+                        let _: usize = port.recv(1);
+                    }
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        fab.set_recv_retries(Some(1));
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fab.run_round(LaunchPolicy::Threaded, tasks);
+        }));
+        assert!(caught.is_err());
+        let f = fab.rank_failure().expect("typed failure after budget exhaustion");
+        assert!(matches!(f.kind, FailureKind::RecvTimeout { retries: 1 }), "{f}");
+        fab.set_recv_timeout(None);
+        fab.set_recv_retries(None);
+    }
+
+    #[test]
+    fn injected_rank_death_is_recorded_as_typed_failure() {
+        use crate::runtime::fault::FaultPhase;
+        for policy in [LaunchPolicy::Lockstep, LaunchPolicy::Threaded] {
+            let fab = RingFabric::new(2);
+            fab.set_recv_timeout(Some(Duration::from_secs(5)));
+            let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+                .map(|r| {
+                    let port = fab.port(r);
+                    Box::new(move || {
+                        if r == 1 {
+                            std::panic::panic_any(RankDeath {
+                                rank: 1,
+                                step: 7,
+                                phase: FaultPhase::Forward,
+                            });
+                        }
+                        let _: usize = port.recv(1);
+                    }) as Box<dyn FnOnce() + Send>
+                })
+                .collect();
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                fab.run_round(policy, tasks);
+            }));
+            assert!(caught.is_err());
+            let f = fab.rank_failure().expect("injected death must be typed");
+            assert_eq!(f.failed_rank, 1, "{policy:?}: {f}");
+            assert!(
+                matches!(f.kind, FailureKind::Injected { phase: FaultPhase::Forward }),
+                "{policy:?}: {f}"
+            );
+            assert_eq!(fab.in_flight(), 0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn poison_teardown_returns_pooled_buffers() {
+        let fab = RingFabric::new(2);
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+            .map(|r| {
+                let port = fab.port(r);
+                Box::new(move || {
+                    if r == 0 {
+                        // leave a pooled payload in flight, then die
+                        let mut v = port.lease(1, 4);
+                        v.extend_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+                        port.send_vec(1, v);
+                        panic!("rank 0 died with a message in flight");
+                    }
+                    let _: usize = port.recv(0);
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        let c0 = fab.counters();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fab.run_round(LaunchPolicy::Lockstep, tasks);
+        }));
+        assert!(caught.is_err());
+        let c1 = fab.counters();
+        assert_eq!(c1.poison_drained - c0.poison_drained, 1, "in-flight message drained");
+        assert_eq!(fab.in_flight(), 0);
+        // the drained payload went back to the lane pool: the next lease
+        // on the same link is a pool hit, not an allocation
+        let c2 = fab.counters();
+        let v = fab.port(0).lease(1, 4);
+        let c3 = fab.counters();
+        assert!(v.capacity() >= 4);
+        assert_eq!(c3.pool_hits - c2.pool_hits, 1, "drained buffer not pooled");
+        assert_eq!(c3.msg_allocs, c2.msg_allocs);
     }
 
     #[test]

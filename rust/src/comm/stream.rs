@@ -90,13 +90,14 @@ use std::any::Any;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::coll::{CollKind, Collective};
 use super::fabric::{RingPort, BG_SUBCHANNELS};
 use super::rotation::RotationDir;
+use crate::runtime::fault::{FailureKind, FaultInjector, FaultPhase, RankDeath, RankFailure};
 
 /// Which in-flight collective the background comm thread steps next.
 /// Selected per engine via `EngineOpts::sched_policy` or globally via
@@ -281,6 +282,11 @@ pub struct CollectiveStream {
     /// holds one clone per sub-channel).
     port: RingPort,
     policy: SchedPolicy,
+    /// Deterministic fault-injection hook: checked before every collective
+    /// hop (on the comm thread in background mode, at execute-at-join in
+    /// sync mode), so a planned `CollectiveHop` kill dies exactly where a
+    /// real comm-thread death would.
+    fault: Option<Arc<FaultInjector>>,
     inner: Inner,
 }
 
@@ -302,18 +308,66 @@ impl CollectiveStream {
         background: bool,
         policy: SchedPolicy,
     ) -> CollectiveStream {
+        CollectiveStream::with_policy_fault(port, background, policy, None)
+    }
+
+    /// [`CollectiveStream::with_policy`] plus a fault-injection hook. The
+    /// injector rides to the comm thread, so a planned `CollectiveHop`
+    /// kill fires THERE under the Thread launcher (the hardest death to
+    /// propagate: the rank body is still healthy, blocked in `join`) and
+    /// at the deterministic execute-at-join point under Lockstep.
+    pub fn with_policy_fault(
+        port: RingPort,
+        background: bool,
+        policy: SchedPolicy,
+        fault: Option<Arc<FaultInjector>>,
+    ) -> CollectiveStream {
         let port = port.background();
         if background && port.n() > 1 {
             let (jtx, jrx) = channel::<Job>();
             let (rtx, rrx) = channel::<(u64, Vec<f32>)>();
             let tport = port.clone();
+            let gport = port.clone();
+            let tfault = fault.clone();
+            let rank = port.rank();
             let thread = std::thread::Builder::new()
                 .name(format!("rtp-comm-r{}", port.rank()))
-                .spawn(move || comm_thread_main(tport, policy, jrx, rtx))
+                .spawn(move || {
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        move || comm_thread_main(tport, policy, tfault, jrx, rtx),
+                    ));
+                    if let Err(p) = out {
+                        // the comm thread died: record the typed root
+                        // cause for every peer (first detector wins). A
+                        // thread that unwound OUT of an already-poisoned
+                        // recv is a casualty, not a cause — don't let it
+                        // overwrite or fabricate a failure record.
+                        if let Some(d) = p.downcast_ref::<RankDeath>() {
+                            gport.fail_round(RankFailure {
+                                failed_rank: d.rank,
+                                kind: FailureKind::Injected { phase: d.phase },
+                                detail: format!(
+                                    "injected kill of rank {}'s comm thread at step {} \
+                                     ({} fault point)",
+                                    d.rank, d.step, d.phase
+                                ),
+                            });
+                        } else if !gport.is_poisoned() {
+                            gport.fail_round(RankFailure {
+                                failed_rank: rank,
+                                kind: FailureKind::CommThread,
+                                detail: format!(
+                                    "rank {rank}: background comm thread panicked"
+                                ),
+                            });
+                        }
+                    }
+                })
                 .expect("failed to spawn background comm thread");
             CollectiveStream {
                 port,
                 policy,
+                fault,
                 inner: Inner::Bg(Bg {
                     jobs: Mutex::new(jtx),
                     results: Mutex::new(rrx),
@@ -326,6 +380,7 @@ impl CollectiveStream {
             CollectiveStream {
                 port,
                 policy,
+                fault,
                 inner: Inner::Sync(Mutex::new(SyncQueue {
                     next_seq: 0,
                     pending: VecDeque::new(),
@@ -414,7 +469,14 @@ impl CollectiveStream {
                     // so both modes put identical message sequences on
                     // identical lanes
                     let sp = self.port.bg_subchannel(subchannel_of(seq));
-                    while !coll.step(&sp) {}
+                    loop {
+                        if let Some(f) = &self.fault {
+                            f.fault_point(self.port.rank(), FaultPhase::CollectiveHop);
+                        }
+                        if coll.step(&sp) {
+                            break;
+                        }
+                    }
                     let buf = coll.into_buf();
                     if seq == handle.seq {
                         let d = t0.elapsed();
@@ -515,6 +577,7 @@ impl std::fmt::Debug for CollectiveStream {
 fn comm_thread_main(
     port: RingPort,
     policy: SchedPolicy,
+    fault: Option<Arc<FaultInjector>>,
     jobs: Receiver<Job>,
     results: Sender<(u64, Vec<f32>)>,
 ) {
@@ -569,6 +632,12 @@ fn comm_thread_main(
 
         let (seq, coll) = &mut inflight[pick];
         let seq = *seq;
+        if let Some(f) = &fault {
+            // the planned CollectiveHop kill dies HERE, on the comm
+            // thread — the panic is caught by the spawn wrapper, which
+            // records the typed failure and poisons the round
+            f.fault_point(port.rank(), FaultPhase::CollectiveHop);
+        }
         let t0 = Instant::now();
         let done = coll.step(&subports[subchannel_of(seq)]);
         port.note_bg_busy(t0.elapsed());

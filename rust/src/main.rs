@@ -16,8 +16,12 @@ use rtp::cli::Args;
 use rtp::config::{presets, OptimizerKind, Strategy, TrainCfg};
 use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind, Launcher};
 use rtp::perfmodel::{by_name, simulate, SimSpec};
+use rtp::runtime::FaultPlan;
 use rtp::serve::{build_serve_engine, poisson_trace, ServeOpts};
-use rtp::train::{train, MarkovCorpus, Optimizer};
+use rtp::train::{
+    capture_train_state, load_train_state, restore_train_state, save_train_state, train,
+    MarkovCorpus, Optimizer,
+};
 use rtp::util::bytes::human;
 use rtp::util::rng::Rng;
 
@@ -33,6 +37,11 @@ SUBCOMMANDS
             --workers N  --global-batch B  --steps K  --lr F
             --optimizer sgd|momentum|adam  --exec pjrt|pallas|oracle
             --launcher lockstep|thread  (or RTP_LAUNCHER env)
+            --save PATH (write an RTPC2 checkpoint after the run)
+            --resume PATH (restore an RTPC2 checkpoint before the run;
+              the world size may differ from the one that saved it)
+            --fault-plan rank=R,step=S,phase=forward|backward|rotation|collective
+              (deterministically kill rank R at step S; or RTP_FAULT_PLAN env)
             --seed S  --quiet
   simulate  model one step at paper scale (virtual mode)
             --preset gpt2-500m|...  --engine ...  --workers N
@@ -89,10 +98,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 42)?,
         log_every: args.usize_or("log-every", 10)?,
     };
-    let opts = EngineOpts::new(preset, strategy, workers, global_batch)
+    let mut opts = EngineOpts::new(preset, strategy, workers, global_batch)
         .exec(exec_kind(args)?)
         .launcher(launcher(args)?)
         .seed(tcfg.seed);
+    if let Some(spec) = args.get("fault-plan") {
+        opts = opts.fault_plan(Some(FaultPlan::parse(spec)?));
+    }
     let cfg = opts.cfg()?;
     let mut engine = build_engine(&opts)?;
     println!(
@@ -104,6 +116,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let mut corpus = MarkovCorpus::new(&cfg, tcfg.seed);
     let mut opt = Optimizer::new(tcfg.optimizer, tcfg.lr);
+    let mut base_step: u64 = 0;
+    if let Some(path) = args.get("resume") {
+        let state = load_train_state(&cfg, std::path::Path::new(path))?;
+        base_step = state.step;
+        corpus = restore_train_state(&mut *engine, &mut opt, &cfg, &state)?;
+        println!(
+            "resumed from {path} (saved at step {base_step} on {} workers)",
+            state.world_size
+        );
+    }
     let report = train(
         &mut *engine,
         &mut opt,
@@ -120,6 +142,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.tokens_per_s,
         human(report.peak_bytes_per_worker)
     );
+    if let Some(path) = args.get("save") {
+        let state = capture_train_state(
+            &mut *engine,
+            &opt,
+            &corpus,
+            base_step + report.steps as u64,
+        )?;
+        save_train_state(&state, std::path::Path::new(path))?;
+        println!("saved RTPC2 checkpoint to {path} (step {})", state.step);
+    }
     Ok(())
 }
 

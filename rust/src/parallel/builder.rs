@@ -10,6 +10,7 @@ use crate::cluster::{Cluster, TraceLog};
 use crate::comm::SchedPolicy;
 use crate::config::{presets, ModelCfg, ParallelCfg, Strategy};
 use crate::perfmodel::{Hardware, Timeline};
+use crate::runtime::fault::{FaultInjector, FaultPlan};
 use crate::runtime::{artifacts_root, Exec, PjrtRuntime};
 
 use super::cluster_engine::ClusterEngine;
@@ -81,6 +82,11 @@ pub struct EngineOpts {
     /// launchers *given the same bucket size*, but not between bucketed
     /// and monolithic runs.
     pub bucket_bytes: Option<u64>,
+    /// Deterministic fault injection: kill `plan.rank` at `plan.step` /
+    /// `plan.phase` (defaults to `RTP_FAULT_PLAN` env; `None` = no
+    /// injection). A plan whose coordinates never match leaves the run
+    /// bit-identical to no plan at all.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 /// `RTP_BUCKET_BYTES` env knob: unset, empty or `0` = monolithic.
@@ -114,6 +120,7 @@ impl EngineOpts {
             async_rotation: true,
             sched_policy: SchedPolicy::from_env(),
             bucket_bytes: bucket_bytes_from_env(),
+            fault_plan: FaultPlan::from_env(),
         }
     }
 
@@ -159,6 +166,10 @@ impl EngineOpts {
     }
     pub fn bucket_bytes(mut self, b: Option<u64>) -> Self {
         self.bucket_bytes = b;
+        self
+    }
+    pub fn fault_plan(mut self, p: Option<FaultPlan>) -> Self {
+        self.fault_plan = p;
         self
     }
 
@@ -241,6 +252,10 @@ pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
             async_comm: false,
             sched_policy: opts.sched_policy,
             bucket_bytes: opts.bucket_bytes,
+            // never inject during construction (step counter is unset
+            // there anyway; the facade hands each step's ctxs the live
+            // injector)
+            fault: None,
         };
         let rank: Box<dyn RankEngine> = match opts.strategy {
             Strategy::Single => Box::new(SingleRank::new(&mut rctx, opts.seed)?),
@@ -264,6 +279,7 @@ pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
 
     let exec0 = execs.remove(0);
     let ctx = Ctx { cfg, par, exec: exec0, cluster, timeline };
+    let fault = opts.fault_plan.map(FaultInjector::new);
     Ok(Box::new(ClusterEngine::new(
         ctx,
         execs,
@@ -272,6 +288,7 @@ pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
         opts.async_rotation,
         opts.sched_policy,
         opts.bucket_bytes,
+        fault,
         opts.engine_name(),
     )))
 }

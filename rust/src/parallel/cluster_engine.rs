@@ -14,13 +14,14 @@
 //! driving the old `Engine` trait unchanged; the SPMD decomposition is
 //! invisible from the outside except that it now actually exists.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::comm::SchedPolicy;
 use crate::memory::tracker::MemTracker;
 use crate::model::ModelParams;
+use crate::runtime::fault::FaultInjector;
 use crate::runtime::Exec;
 use crate::tensor::HostTensor;
 
@@ -41,6 +42,11 @@ pub struct ClusterEngine {
     pub sched_policy: SchedPolicy,
     /// Gradient-bucketing size target (`None` = monolithic).
     pub bucket_bytes: Option<u64>,
+    /// Deterministic fault-injection harness (`None` = no plan).
+    fault: Option<Arc<FaultInjector>>,
+    /// Steps run through this facade so far — the step index fault plans
+    /// are matched against (0-based).
+    steps_done: u64,
     name: String,
 }
 
@@ -54,6 +60,7 @@ impl ClusterEngine {
         async_rotation: bool,
         sched_policy: SchedPolicy,
         bucket_bytes: Option<u64>,
+        fault: Option<Arc<FaultInjector>>,
         name: String,
     ) -> Self {
         assert_eq!(ranks.len(), ctx.par.workers, "one rank engine per worker");
@@ -70,6 +77,8 @@ impl ClusterEngine {
             async_rotation,
             sched_policy,
             bucket_bytes,
+            fault,
+            steps_done: 0,
             name,
         }
     }
@@ -87,6 +96,10 @@ impl Engine for ClusterEngine {
 
     fn step(&mut self, batch: &Batch) -> Result<f32> {
         let n = self.ctx.par.workers;
+        if let Some(f) = &self.fault {
+            f.begin_step(self.steps_done);
+        }
+        self.steps_done += 1;
         if let Some(tl) = self.ctx.timeline.as_mut() {
             tl.reset();
         }
@@ -141,6 +154,7 @@ impl Engine for ClusterEngine {
                     async_comm,
                     sched_policy: self.sched_policy,
                     bucket_bytes: self.bucket_bytes,
+                    fault: self.fault.clone(),
                 });
             }
             let tasks: Vec<Box<dyn FnOnce() -> Result<f32> + Send + '_>> = self
@@ -188,6 +202,14 @@ impl Engine for ClusterEngine {
             return Err(e);
         }
         if let Some(p) = first_panic {
+            // a typed rank death (injected kill, watchdog timeout, comm
+            // thread death) was recorded in the round control block by
+            // whichever detector saw it first: surface it as ONE typed
+            // error instead of resuming the secondary poisoned-round
+            // panics it caused in peers
+            if let Some(f) = fabric.rank_failure() {
+                return Err(anyhow::Error::new(f));
+            }
             std::panic::resume_unwind(p);
         }
         debug_assert_eq!(
@@ -240,6 +262,15 @@ impl Engine for ClusterEngine {
         for r in &mut self.ranks {
             r.zero_grads();
         }
+    }
+
+    fn load_full(&mut self, full: &ModelParams) -> Result<()> {
+        // comm-free: each rank replays its constructor's sharding math
+        // locally, so no fabric round (and no launcher) is needed
+        for r in &mut self.ranks {
+            r.load_full(full)?;
+        }
+        Ok(())
     }
 
     fn ctx(&self) -> &Ctx {

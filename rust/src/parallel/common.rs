@@ -14,7 +14,7 @@
 //!   the once-per-collective trace events (the schedule is symmetric, so
 //!   modeling one rank models all).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -24,6 +24,7 @@ use crate::config::{ModelCfg, ParallelCfg};
 use crate::memory::tracker::{AllocId, MemCategory, MemTracker};
 use crate::model::ops::{self, Op};
 use crate::perfmodel::{Timeline, Token};
+use crate::runtime::fault::{FaultInjector, FaultPhase};
 use crate::runtime::{ArgRef, Buf, Exec};
 use crate::tensor::{HostTensor, IntTensor};
 use crate::util::rng::Rng;
@@ -135,6 +136,10 @@ pub struct RankCtx<'a> {
     /// Size target for gradient bucketing (`None` = one monolithic
     /// bucket, the historical behavior). Identical on every rank.
     pub bucket_bytes: Option<u64>,
+    /// Deterministic fault-injection harness (`None` = no plan). Shared
+    /// by every rank of the engine; each fault point is a pure comparison
+    /// against the plan, so an unmatched plan is a bit-identical no-op.
+    pub fault: Option<Arc<FaultInjector>>,
 }
 
 impl<'a> RankCtx<'a> {
@@ -168,7 +173,21 @@ impl<'a> RankCtx<'a> {
     /// lazily at the first step (construction-time contexts predate the
     /// launcher decision) and keep it for the rank's lifetime.
     pub fn collectives(&self) -> CollectiveStream {
-        CollectiveStream::with_policy(self.port.clone(), self.async_comm, self.sched_policy)
+        CollectiveStream::with_policy_fault(
+            self.port.clone(),
+            self.async_comm,
+            self.sched_policy,
+            self.fault.clone(),
+        )
+    }
+
+    /// An instrumented fault point: dies here iff the engine's
+    /// [`FaultPlan`](crate::runtime::fault::FaultPlan) names this rank,
+    /// the current step, and `phase`. No-op (and bit-identical) otherwise.
+    pub fn fault_point(&self, phase: FaultPhase) {
+        if let Some(f) = &self.fault {
+            f.fault_point(self.rank, phase);
+        }
     }
 
     /// Gradient-bucket size target in ELEMENTS (`None` = unbucketed).
@@ -602,6 +621,7 @@ mod tests {
                 async_comm: false,
                 sched_policy: SchedPolicy::Fifo,
                 bucket_bytes: None,
+                fault: None,
             }
         }
     }
@@ -669,6 +689,7 @@ mod tests {
             async_comm: false,
             sched_policy: SchedPolicy::Fifo,
             bucket_bytes: None,
+            fault: None,
         };
         c.charge_comm("ar", crate::comm::CommPrim::AllReduce, 4 << 20);
         c.phase("forward");

@@ -227,4 +227,13 @@ impl RankEngine for DdpRank {
             g.visit_mut(&mut |_, t| t.data.fill(0.0));
         }
     }
+
+    fn load_full(&mut self, full: &ModelParams) -> Result<()> {
+        let Some(p) = self.hooks.replica.as_mut() else {
+            anyhow::bail!("load_full: no replica in virtual mode");
+        };
+        // DDP init broadcasts one full replica everywhere; resume does too
+        *p = full.clone();
+        Ok(())
+    }
 }

@@ -14,6 +14,7 @@ use anyhow::Result;
 use crate::memory::tracker::MemCategory;
 use crate::model::ops::Op;
 use crate::model::{MlpParams, ModelParams};
+use crate::runtime::fault::FaultPhase;
 use crate::runtime::{arg_of, Buf};
 use crate::tensor::HostTensor;
 
@@ -145,6 +146,7 @@ pub fn dense_step(
     )?;
 
     // ---------------- forward ----------------
+    ctx.fault_point(FaultPhase::Forward);
     hooks.unit_begin(ctx, Unit::Emb, Phase::Fwd)?;
     let mut x = {
         let p = hooks.params();
@@ -348,6 +350,7 @@ pub fn dense_step(
     // The Final unit stayed resident through the loss (its forward
     // unit_end is deliberately absent); unit_begin(Bwd) is what arms the
     // gradient staging (FSDP) and the backward prefetch chain.
+    ctx.fault_point(FaultPhase::Backward);
     hooks.unit_begin(ctx, Unit::Final, Phase::Bwd)?;
     let (mut dx, dwlm) = {
         let p = hooks.params();

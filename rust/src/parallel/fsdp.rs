@@ -407,6 +407,31 @@ impl DenseHooks for FsdpHooks {
     }
 }
 
+/// Re-derive this rank's per-unit param shards from a FULL model — the
+/// constructor's sharding math (pack to canonical flat order, keep this
+/// rank's padded chunk), shared with the elastic-resume `load_full` path.
+/// Grad shards are created zeroed if absent and left untouched otherwise.
+fn shard_params_from_full(states: &mut [UnitState], fullp: &mut ModelParams, rank: usize) {
+    for st in states.iter_mut() {
+        let tensors: Vec<&HostTensor> = st
+            .slots
+            .iter()
+            .map(|&s| &*resolve_mut(fullp, s) as *const HostTensor)
+            .collect::<Vec<_>>()
+            .into_iter()
+            // SAFETY: resolve_mut only borrows disjoint fields; we
+            // immediately downgrade to shared refs.
+            .map(|p| unsafe { &*p })
+            .collect();
+        let flat = st.layout.pack(&tensors);
+        let shard = st.layout.shard(&flat, rank);
+        st.param_shard = Some(HostTensor::from_vec(&[shard.len()], shard));
+        if st.grad_shard.is_none() {
+            st.grad_shard = Some(HostTensor::zeros(&[st.layout.shard_len()]));
+        }
+    }
+}
+
 /// One FSDP rank: per-unit flat shards + the transient full-unit views.
 pub struct FsdpRank {
     rank: usize,
@@ -469,22 +494,7 @@ impl FsdpRank {
         // broadcast.
         if !virt {
             let mut fullp = ModelParams::init(&cfg, &mut Rng::new(seed));
-            for st in &mut states {
-                let tensors: Vec<&HostTensor> = st
-                    .slots
-                    .iter()
-                    .map(|&s| &*resolve_mut(&mut fullp, s) as *const HostTensor)
-                    .collect::<Vec<_>>()
-                    .into_iter()
-                    // SAFETY: resolve_mut only borrows disjoint fields; we
-                    // immediately downgrade to shared refs.
-                    .map(|p| unsafe { &*p })
-                    .collect();
-                let flat = st.layout.pack(&tensors);
-                let shard = st.layout.shard(&flat, rank);
-                st.param_shard = Some(HostTensor::from_vec(&[shard.len()], shard));
-                st.grad_shard = Some(HostTensor::zeros(&[st.layout.shard_len()]));
-            }
+            shard_params_from_full(&mut states, &mut fullp, rank);
         }
 
         // persistent residency: shard weights + shard grads
@@ -638,5 +648,18 @@ impl RankEngine for FsdpRank {
                 g.data.fill(0.0);
             }
         }
+    }
+
+    fn load_full(&mut self, full: &ModelParams) -> Result<()> {
+        if self.hooks.virt {
+            anyhow::bail!("load_full: no shards in virtual mode");
+        }
+        // replay the constructor's sharding math against THIS world size:
+        // a checkpoint taken at any N restores into any N' because the
+        // flat pad stays zero through training (pad grads are zero, so
+        // pad moments are too)
+        let mut fullp = full.clone();
+        shard_params_from_full(&mut self.hooks.states, &mut fullp, self.rank);
+        Ok(())
     }
 }

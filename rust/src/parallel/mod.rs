@@ -101,6 +101,13 @@ pub trait RankEngine: Send + Sync {
     fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor));
 
     fn zero_grads(&mut self);
+
+    /// Replace this rank's OWNED parameter state from a FULL model,
+    /// replaying the constructor's sharding math locally — comm-free, so
+    /// it needs no fabric round. The elastic-resume path: a checkpoint
+    /// taken at any world size restores into an engine at any other.
+    /// Real mode only (errors in virtual mode).
+    fn load_full(&mut self, full: &ModelParams) -> Result<()>;
 }
 
 /// One parallel training engine, cluster view — the facade the trainer,
@@ -126,6 +133,11 @@ pub trait Engine {
     fn visit_owned(&mut self, f: &mut dyn FnMut(&mut HostTensor, &HostTensor));
 
     fn zero_grads(&mut self);
+
+    /// Replace the engine's parameter state from a FULL model, re-sharded
+    /// to the engine's own layout and world size (real mode only). The
+    /// elastic-resume path — see [`RankEngine::load_full`].
+    fn load_full(&mut self, full: &ModelParams) -> Result<()>;
 
     fn ctx(&self) -> &Ctx;
     fn ctx_mut(&mut self) -> &mut Ctx;

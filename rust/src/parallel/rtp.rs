@@ -59,6 +59,7 @@ use crate::model::ops::Op;
 use crate::model::partition::{self, AttnShard, MlpShard};
 use crate::model::{ExpertParams, MlpParams, ModelParams};
 use crate::perfmodel::Token;
+use crate::runtime::fault::FaultPhase;
 use crate::runtime::{arg_of, Buf};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
@@ -256,6 +257,7 @@ fn zero_like_emb(e: &EmbShard) -> EmbShard {
 
 pub struct RtpRank {
     rank: usize,
+    n: usize,
     cfg: ModelCfg,
     pub variant: RtpVariant,
     rings: Rings,
@@ -378,6 +380,7 @@ impl RtpRank {
 
         Ok(RtpRank {
             rank,
+            n,
             cfg,
             variant,
             rings,
@@ -407,6 +410,7 @@ impl RtpRank {
         bytes: u64,
         fwd: bool,
     ) -> PendingRot<T> {
+        ctx.fault_point(FaultPhase::RotationHop);
         let msg_bytes = if fwd { bytes } else { 2 * bytes };
         let tok = if variant.overlapped() {
             ctx.timeline
@@ -514,6 +518,7 @@ impl RankEngine for RtpRank {
         let tgts = ctx.alloc(acts, mk(&shard.targets))?;
 
         // ---------------- forward ----------------
+        ctx.fault_point(FaultPhase::Forward);
         // embedding: Output-Partition, this rank assembles the FULL
         // hidden locally across the N rotation steps (no activation comm!)
         let mut x = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
@@ -853,6 +858,7 @@ impl RankEngine for RtpRank {
 
         // ---------------- backward ----------------
         ctx.phase("backward");
+        ctx.fault_point(FaultPhase::Backward);
         let scale = land_scale(n);
 
         // LM head backward: ccw rotation with traveling grads
@@ -1567,6 +1573,65 @@ impl RankEngine for RtpRank {
         if let Some(gr) = self.g_rep.as_mut() {
             gr.visit_mut(&mut |t| t.data.fill(0.0));
         }
+    }
+
+    fn load_full(&mut self, full: &ModelParams) -> Result<()> {
+        if self.rep.is_none() {
+            anyhow::bail!("load_full: no shards in virtual mode");
+        }
+        let (rank, n) = (self.rank, self.n);
+        let cfg = self.cfg.clone();
+        // rings are home at every step boundary (the Fig-1 invariant,
+        // asserted at the end of each step), so rotation offset is always
+        // 0 here — resuming never has to undo a partial rotation
+        debug_assert_eq!(self.rings.emb.id, rank, "emb ring must be home to load");
+        debug_assert_eq!(self.rings.lm.id, rank, "lm ring must be home to load");
+        let heads = cfg.heads;
+        let hd = cfg.head_dim();
+        // replay the constructor's partitioning: each rank keeps its home
+        // shard of every unit (grad shapes are unchanged — same n)
+        self.rings.emb = RingSlot::home(
+            rank,
+            Some(EmbShard {
+                wte: partition::shard_cols(&full.wte, rank, n),
+                wpe: partition::shard_cols(&full.wpe, rank, n),
+            }),
+        );
+        self.rings.attn = full
+            .layers
+            .iter()
+            .map(|lp| {
+                RingSlot::home(
+                    rank,
+                    Some(partition::attn_shard(
+                        &lp.wqkv, &lp.bqkv, &lp.wo, rank, n, heads, hd,
+                    )),
+                )
+            })
+            .collect();
+        self.rings.mlp = full
+            .layers
+            .iter()
+            .map(|lp| {
+                RingSlot::home(
+                    rank,
+                    Some(match &lp.mlp {
+                        MlpParams::Dense { w1, b1, w2, .. } => {
+                            MlpShardV::Dense(partition::mlp_shard(w1, b1, w2, rank, n))
+                        }
+                        MlpParams::Moe { experts, .. } => MlpShardV::Experts(
+                            partition::expert_range(rank, n, cfg.experts)
+                                .map(|e| experts[e].clone())
+                                .collect(),
+                        ),
+                    }),
+                )
+            })
+            .collect();
+        self.rings.lm =
+            RingSlot::home(rank, Some(partition::shard_cols(&full.wlm, rank, n)));
+        self.rep = Some(RepParams::from_full(full));
+        Ok(())
     }
 }
 

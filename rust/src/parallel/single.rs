@@ -167,4 +167,12 @@ impl RankEngine for SingleRank {
             g.visit_mut(&mut |_, t| t.data.fill(0.0));
         }
     }
+
+    fn load_full(&mut self, full: &ModelParams) -> Result<()> {
+        let Some(p) = self.hooks.params.as_mut() else {
+            anyhow::bail!("load_full: no params in virtual mode");
+        };
+        *p = full.clone();
+        Ok(())
+    }
 }

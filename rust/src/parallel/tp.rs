@@ -25,6 +25,7 @@ use crate::memory::tracker::MemCategory;
 use crate::model::ops::Op;
 use crate::model::partition::{self, AttnShard, MlpShard};
 use crate::model::{MlpParams, ModelParams};
+use crate::runtime::fault::FaultPhase;
 use crate::runtime::{arg_of, Buf};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
@@ -55,6 +56,7 @@ struct TpState {
 
 pub struct TpRank {
     rank: usize,
+    n: usize,
     cfg: ModelCfg,
     state: Option<TpState>, // None in virtual mode
 }
@@ -142,7 +144,7 @@ impl TpRank {
         let per_worker = ((sharded + replicated_elems(&cfg)) * 4) as u64;
         ctx.tracker.alloc(MemCategory::Weights, per_worker)?;
         ctx.tracker.alloc(MemCategory::Grads, per_worker)?;
-        Ok(TpRank { rank, cfg, state })
+        Ok(TpRank { rank, n, cfg, state })
     }
 
     /// Clone a replicated tensor out of the state so the borrow on
@@ -176,6 +178,7 @@ impl RankEngine for TpRank {
         let tgts = ctx.alloc(acts, mk(&batch.targets))?;
 
         // ---------------- forward ----------------
+        ctx.fault_point(FaultPhase::Forward);
         // embedding: compute my hidden slice, allgather the full hidden
         let mut x = ctx.alloc(acts, Buf::zeros_like_mode(virt, &[b, cfg.seq, h]))?;
         {
@@ -335,6 +338,7 @@ impl RankEngine for TpRank {
         ctx.free(tgts);
 
         // ---------------- backward ----------------
+        ctx.fault_point(FaultPhase::Backward);
         // LM head: my vocab slice of dlogits -> dx partial
         let mut dxf = {
             let dl_w = ctx.col_slice(&dlogits, w * vp, vp, acts)?;
@@ -600,6 +604,38 @@ impl RankEngine for TpRank {
         }
         st.g_lm.data.fill(0.0);
         st.g_rep.visit_mut(&mut |t| t.data.fill(0.0));
+    }
+
+    fn load_full(&mut self, full: &ModelParams) -> Result<()> {
+        let (rank, n) = (self.rank, self.n);
+        let heads = self.cfg.heads;
+        let hd = self.cfg.head_dim();
+        let Some(st) = self.state.as_mut() else {
+            bail!("load_full: no shards in virtual mode");
+        };
+        // replay the constructor's static partitioning against THIS
+        // rank/world size (grad shards keep their shapes: same n)
+        st.wte = partition::shard_cols(&full.wte, rank, n);
+        st.wpe = partition::shard_cols(&full.wpe, rank, n);
+        st.lm = partition::shard_cols(&full.wlm, rank, n);
+        st.layers = full
+            .layers
+            .iter()
+            .map(|lp| {
+                let (w1, b1, w2) = match &lp.mlp {
+                    MlpParams::Dense { w1, b1, w2, .. } => (w1, b1, w2),
+                    _ => unreachable!(),
+                };
+                LayerShard {
+                    attn: partition::attn_shard(
+                        &lp.wqkv, &lp.bqkv, &lp.wo, rank, n, heads, hd,
+                    ),
+                    mlp: partition::mlp_shard(w1, b1, w2, rank, n),
+                }
+            })
+            .collect();
+        st.rep = RepParams::from_full(full);
+        Ok(())
     }
 }
 

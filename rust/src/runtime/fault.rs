@@ -1,0 +1,318 @@
+//! Deterministic fault injection: kill a chosen rank at a chosen step and
+//! phase, and the typed failure every survivor observes.
+//!
+//! The harness simulates the production failure mode — a rank process
+//! dying mid-step — without any of the orderly-abort courtesy of the
+//! `Result` path: the injected death is a panic with a [`RankDeath`]
+//! payload, thrown at one of the instrumented *fault points* (forward,
+//! backward, a rotation hop, a collective hop — including on the
+//! background comm thread, or a serving decode step). The fabric's round
+//! wrapper recognizes the payload, records a typed [`RankFailure`] in the
+//! round control block and poisons the round, so every surviving rank
+//! unwinds to the step barrier where the facade surfaces ONE typed error
+//! instead of a watchdog panic or a hang.
+//!
+//! Determinism contract: a fault point is a pure comparison against the
+//! plan — it touches no RNG and no data — so a [`FaultPlan`] that never
+//! matches (or no plan at all) leaves every trajectory bit-identical to
+//! an uninjected run. Asserted in `tests/fault_tolerance.rs`.
+//!
+//! Select a plan per engine via `EngineOpts::fault_plan` /
+//! `ServeOpts::fault_plan`, or process-wide via the `RTP_FAULT_PLAN`
+//! environment variable (`rank=1,step=3,phase=backward`).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Where in a step the injected death fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPhase {
+    /// At the top of the rank's forward pass.
+    Forward,
+    /// At the top of the rank's backward pass.
+    Backward,
+    /// Right before an RTP weight-rotation hop.
+    RotationHop,
+    /// Right before a background-engine collective hop: on the dedicated
+    /// comm thread under `Launcher::Thread`, at the deterministic
+    /// execute-at-issue point under `Launcher::Lockstep`.
+    CollectiveHop,
+    /// At the top of a serving decode step.
+    Decode,
+}
+
+impl FaultPhase {
+    pub fn parse(s: &str) -> Option<FaultPhase> {
+        Some(match s {
+            "forward" => FaultPhase::Forward,
+            "backward" => FaultPhase::Backward,
+            "rotation" => FaultPhase::RotationHop,
+            "collective" => FaultPhase::CollectiveHop,
+            "decode" => FaultPhase::Decode,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultPhase::Forward => "forward",
+            FaultPhase::Backward => "backward",
+            FaultPhase::RotationHop => "rotation",
+            FaultPhase::CollectiveHop => "collective",
+            FaultPhase::Decode => "decode",
+        }
+    }
+}
+
+impl std::fmt::Display for FaultPhase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Kill rank `rank` the first time it reaches a `phase` fault point
+/// during step `step` (0-based, counted by the engine facade).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub rank: usize,
+    pub step: u64,
+    pub phase: FaultPhase,
+}
+
+impl FaultPlan {
+    /// Parse `"rank=1,step=3,phase=backward"` (fields in any order).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let (mut rank, mut step, mut phase) = (None, None, None);
+        for field in spec.split(',') {
+            let field = field.trim();
+            if field.is_empty() {
+                continue;
+            }
+            let (k, v) = field
+                .split_once('=')
+                .ok_or_else(|| anyhow!("fault plan field {field:?}: expected key=value"))?;
+            match k.trim() {
+                "rank" => {
+                    rank = Some(v.trim().parse::<usize>().map_err(|_| {
+                        anyhow!("fault plan rank {v:?}: expected an integer")
+                    })?)
+                }
+                "step" => {
+                    step = Some(v.trim().parse::<u64>().map_err(|_| {
+                        anyhow!("fault plan step {v:?}: expected an integer")
+                    })?)
+                }
+                "phase" => {
+                    phase = Some(FaultPhase::parse(v.trim()).ok_or_else(|| {
+                        anyhow!(
+                            "fault plan phase {v:?}: expected \
+                             forward|backward|rotation|collective|decode"
+                        )
+                    })?)
+                }
+                other => bail!("fault plan field {other:?}: expected rank|step|phase"),
+            }
+        }
+        match (rank, step, phase) {
+            (Some(rank), Some(step), Some(phase)) => Ok(FaultPlan { rank, step, phase }),
+            _ => bail!("fault plan {spec:?}: needs rank=, step= and phase="),
+        }
+    }
+
+    /// The process-wide plan from `RTP_FAULT_PLAN` (None when unset;
+    /// panics on a malformed value so typos do not silently disable the
+    /// injection a test asked for).
+    pub fn from_env() -> Option<FaultPlan> {
+        match std::env::var("RTP_FAULT_PLAN") {
+            Ok(s) if s.trim().is_empty() => None,
+            Ok(s) => Some(Self::parse(&s).unwrap_or_else(|e| panic!("RTP_FAULT_PLAN: {e}"))),
+            Err(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank={},step={},phase={}", self.rank, self.step, self.phase)
+    }
+}
+
+/// The panic payload of an injected kill. Deliberately NOT an error type:
+/// the simulated process death takes no orderly-abort path — the fabric's
+/// round wrapper is what notices it, exactly as peers of a dead process
+/// would.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankDeath {
+    pub rank: usize,
+    pub step: u64,
+    pub phase: FaultPhase,
+}
+
+/// One engine's shared injection state: the plan plus the facade-owned
+/// step counter the fault points compare against. Cloned (`Arc`) into
+/// every rank body and every background comm thread.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    /// Current step index, stored by the facade at the top of each step.
+    /// Starts at a sentinel that matches no plan, so construction-time
+    /// fault points (engine init) can never fire.
+    step: AtomicU64,
+    fired: AtomicBool,
+}
+
+const STEP_UNSET: u64 = u64::MAX;
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector {
+            plan,
+            step: AtomicU64::new(STEP_UNSET),
+            fired: AtomicBool::new(false),
+        })
+    }
+
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+
+    /// Facade hook: the 0-based index of the step about to run.
+    pub fn begin_step(&self, step: u64) {
+        self.step.store(step, Ordering::SeqCst);
+    }
+
+    /// Has the planned death already been injected?
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    /// A fault point: dies (panics with a [`RankDeath`] payload) iff this
+    /// (rank, phase, current step) is the planned kill and it has not
+    /// fired yet. Pure comparison otherwise — bit-identical no-op.
+    pub fn fault_point(&self, rank: usize, phase: FaultPhase) {
+        if rank != self.plan.rank || phase != self.plan.phase {
+            return;
+        }
+        let step = self.step.load(Ordering::SeqCst);
+        if step != self.plan.step || step == STEP_UNSET {
+            return;
+        }
+        if self.fired.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        std::panic::panic_any(RankDeath { rank, step, phase });
+    }
+}
+
+/// What killed a rank, as recorded by whichever detector saw it first.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FailureKind {
+    /// A deterministic injected death ([`FaultInjector`]).
+    Injected { phase: FaultPhase },
+    /// A peer declared dead by the threaded recv watchdog after the
+    /// timeout/retry budget expired (`RTP_FABRIC_TIMEOUT_SECS` ×
+    /// (1 + `RTP_FABRIC_RETRIES`)).
+    RecvTimeout { retries: u32 },
+    /// The rank's background comm thread died.
+    CommThread,
+}
+
+impl std::fmt::Display for FailureKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FailureKind::Injected { phase } => write!(f, "injected at {phase}"),
+            FailureKind::RecvTimeout { retries } => {
+                write!(f, "recv timeout after {retries} retries")
+            }
+            FailureKind::CommThread => f.write_str("comm thread death"),
+        }
+    }
+}
+
+/// The typed rank-death error every SURVIVING rank observes at the step
+/// barrier (and the facade returns from `step()`): which rank died, how
+/// the death was detected, and the detector's full diagnostic. Recorded
+/// first-writer-wins in the fabric's round control block, so secondary
+/// stalls caused by the same death never overwrite the root cause.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankFailure {
+    /// The dead rank (for a watchdog detection: the stalled link's
+    /// upstream peer — the best identification a survivor has).
+    pub failed_rank: usize,
+    pub kind: FailureKind,
+    /// Detector diagnostic (stalled link, injection plan, ...).
+    pub detail: String,
+}
+
+impl std::fmt::Display for RankFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rank {} failed ({}): {}",
+            self.failed_rank, self.kind, self.detail
+        )
+    }
+}
+
+impl std::error::Error for RankFailure {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_fields_in_any_order() {
+        let p = FaultPlan::parse("phase=rotation, rank=2 ,step=7").unwrap();
+        assert_eq!(
+            p,
+            FaultPlan { rank: 2, step: 7, phase: FaultPhase::RotationHop }
+        );
+        assert_eq!(p.to_string(), "rank=2,step=7,phase=rotation");
+    }
+
+    #[test]
+    fn plan_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("rank=1,step=2").is_err()); // missing phase
+        assert!(FaultPlan::parse("rank=x,step=2,phase=forward").is_err());
+        assert!(FaultPlan::parse("rank=1,step=2,phase=sideways").is_err());
+        assert!(FaultPlan::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn fault_point_fires_once_at_the_planned_coordinates() {
+        let plan = FaultPlan { rank: 1, step: 3, phase: FaultPhase::Backward };
+        let inj = FaultInjector::new(plan);
+        // before begin_step nothing fires
+        inj.fault_point(1, FaultPhase::Backward);
+        inj.begin_step(2);
+        inj.fault_point(1, FaultPhase::Backward); // wrong step
+        inj.begin_step(3);
+        inj.fault_point(0, FaultPhase::Backward); // wrong rank
+        inj.fault_point(1, FaultPhase::Forward); // wrong phase
+        assert!(!inj.fired());
+        let inj2 = inj.clone();
+        let death = std::panic::catch_unwind(move || {
+            inj2.fault_point(1, FaultPhase::Backward)
+        })
+        .expect_err("planned fault point must fire");
+        let d = death.downcast_ref::<RankDeath>().expect("RankDeath payload");
+        assert_eq!((d.rank, d.step, d.phase), (1, 3, FaultPhase::Backward));
+        assert!(inj.fired());
+        // at most once
+        inj.fault_point(1, FaultPhase::Backward);
+    }
+
+    #[test]
+    fn failure_displays_cause() {
+        let f = RankFailure {
+            failed_rank: 2,
+            kind: FailureKind::Injected { phase: FaultPhase::RotationHop },
+            detail: "rank=2,step=1,phase=rotation".into(),
+        };
+        let s = f.to_string();
+        assert!(s.contains("rank 2 failed"));
+        assert!(s.contains("injected at rotation"));
+    }
+}

@@ -1,13 +1,18 @@
-//! Runtime: AOT artifact loading + PJRT execution + executor dispatch.
+//! Runtime: AOT artifact loading + PJRT execution + executor dispatch +
+//! fault injection.
 //!
 //! `manifest` parses the compile-path contract, `client` wraps the PJRT
 //! CPU client with an executable cache, `exec` is the three-way dispatch
-//! (pjrt / oracle / virtual) every engine computes through.
+//! (pjrt / oracle / virtual) every engine computes through, and `fault`
+//! is the deterministic rank-death harness (plans, injectors, and the
+//! typed `RankFailure` surviving ranks observe).
 
 pub mod client;
 pub mod exec;
+pub mod fault;
 pub mod manifest;
 
 pub use client::{PjrtRuntime, RtArg, RuntimeStats};
 pub use exec::{arg_of, ArgRef, Buf, Exec};
+pub use fault::{FailureKind, FaultInjector, FaultPhase, FaultPlan, RankDeath, RankFailure};
 pub use manifest::{artifacts_root, Manifest};

@@ -22,6 +22,7 @@
 //!   can never OOM by construction.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -33,6 +34,7 @@ use crate::memory::analytic::kv_projected_bytes;
 use crate::memory::{MemCategory, OomError};
 use crate::model::ModelParams;
 use crate::parallel::Launcher;
+use crate::runtime::fault::{FaultInjector, FaultPhase, FaultPlan, RankFailure};
 use crate::util::rng::Rng;
 
 use super::decode::{DecodePlan, DecodeRank, PlanEntry};
@@ -53,6 +55,10 @@ pub struct ServeOpts {
     /// Seed for `ModelParams::init` when no params are supplied.
     pub seed: u64,
     pub launcher: Launcher,
+    /// Deterministic fault injection (`FaultPhase::Decode` fires before
+    /// the chosen rank's decode step). Defaults to `RTP_FAULT_PLAN`; a
+    /// plan that never matches is a bit-identical no-op.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl ServeOpts {
@@ -66,6 +72,7 @@ impl ServeOpts {
             capacity: None,
             seed: 0,
             launcher: Launcher::from_env(),
+            fault_plan: FaultPlan::from_env(),
         }
     }
     pub fn strategy(mut self, s: Strategy) -> Self {
@@ -94,6 +101,10 @@ impl ServeOpts {
     }
     pub fn launcher(mut self, l: Launcher) -> Self {
         self.launcher = l;
+        self
+    }
+    pub fn fault_plan(mut self, p: Option<FaultPlan>) -> Self {
+        self.fault_plan = p;
         self
     }
 
@@ -138,6 +149,8 @@ pub struct ServeEngine {
     step_idx: u64,
     decode_steps: u64,
     wall_ms: f64,
+
+    fault: Option<Arc<FaultInjector>>,
 }
 
 /// Build a serving engine with freshly initialized parameters
@@ -243,6 +256,7 @@ pub fn build_serve_engine_with_params(
         step_idx: 0,
         decode_steps: 0,
         wall_ms: 0.0,
+        fault: opts.fault_plan.map(FaultInjector::new),
     })
 }
 
@@ -355,6 +369,10 @@ impl ServeEngine {
     /// tokens → retire finished requests. Returns false on an idle tick
     /// (nothing running or admittable).
     pub fn step(&mut self) -> Result<bool> {
+        if let Some(f) = &self.fault {
+            // the fault plan's `step` is the 0-based scheduler step
+            f.begin_step(self.step_idx);
+        }
         self.step_idx += 1;
         self.admit();
         if self.running.is_empty() {
@@ -379,6 +397,7 @@ impl ServeEngine {
         };
 
         let fabric = self.cluster.fabric().clone();
+        let fault = self.fault.clone();
         let t0 = Instant::now();
         let results: Vec<std::thread::Result<Result<Vec<i32>, OomError>>> = {
             let plan_ref = &plan;
@@ -388,9 +407,13 @@ impl ServeEngine {
                     .zip(self.cluster.workers.iter_mut())
                     .map(|(rank, worker)| {
                         let fab = fabric.clone();
+                        let fault = fault.clone();
                         let port = worker.port.clone();
                         let tracker = &mut worker.tracker;
                         Box::new(move || {
+                            if let Some(f) = &fault {
+                                f.fault_point(rank.rank(), FaultPhase::Decode);
+                            }
                             let out = rank.decode_step(tracker, &port, plan_ref);
                             if let Err(e) = &out {
                                 // orderly abort: wake peers blocked on
@@ -429,6 +452,14 @@ impl ServeEngine {
             return Err(anyhow::Error::new(e));
         }
         if let Some(p) = first_panic {
+            // a rank DIED (injected kill / stalled link): fail the whole
+            // running batch with the typed root cause instead of
+            // re-raising the poison panic, releasing every KV page so
+            // nothing leaks
+            if let Some(f) = fabric.rank_failure() {
+                self.fail_batch(&f);
+                return Err(anyhow::Error::new(f));
+            }
             std::panic::resume_unwind(p);
         }
         debug_assert!(
@@ -475,6 +506,23 @@ impl ServeEngine {
         }
         self.running = still;
         Ok(true)
+    }
+
+    /// Retire the whole running batch after a rank death: release every
+    /// slot's KV pages on every rank (allocations the dead rank made
+    /// before dying included — `KvCache::release` frees whatever pages a
+    /// slot holds) and record each request as rejected with the typed
+    /// root cause. Queued requests stay queued; the caller decides
+    /// whether to resubmit against a rebuilt engine.
+    fn fail_batch(&mut self, f: &RankFailure) {
+        for r in std::mem::take(&mut self.running) {
+            for (rank, worker) in self.ranks.iter_mut().zip(self.cluster.workers.iter_mut())
+            {
+                rank.kv.release(r.slot, &mut worker.tracker);
+            }
+            self.kv_projected -= r.projected;
+            self.rejected.push((r.req.id, format!("batch failed: {f}")));
+        }
     }
 
     /// Run every queued/running request to completion.

@@ -1,33 +1,106 @@
-//! Checkpointing: a simple self-describing binary format for model
-//! parameters (`RTPC` magic + named f32 tensors). Any engine can
-//! checkpoint via `gather_params()`; loading reconstructs a full
-//! `ModelParams` that seeds a fresh engine or the `generate` example.
+//! Checkpointing: self-describing binary formats for model parameters and
+//! full training state.
 //!
-//! Format (little-endian):
-//!   magic "RTPC1\0"  | u32 tensor count
+//! Two formats share one hardened tensor-table codec (bounded lengths,
+//! truncation-aware reads, no unsafe byte reinterpretation):
+//!
+//! `RTPC1` — bare parameters (little-endian):
+//!   magic "RTPC1\0" | u32 tensor count
 //!   per tensor: u32 name_len | name bytes | u32 ndim | u64 dims... |
 //!               f32 data...
+//!
+//! `RTPC2` — elastic training state. Everything is stored at FULL
+//! (world-size-independent) shape: params plus each optimizer moment as a
+//! complete `ModelParams`-shaped tensor table, so a run killed at world
+//! size N resumes at any N' via each engine's `load_full` re-sharding.
+//!   magic "RTPC2\0" | u32 world_size | u64 step | u32 rotation_offset |
+//!   u8 opt_kind | u64 opt_step | f32 lr |
+//!   u64 corpus_seed | 4 x u64 corpus_rng | u64 corpus_state |
+//!   u32 moment_count | params table | moment tables...
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::ModelCfg;
+use crate::config::{ModelCfg, OptimizerKind};
 use crate::model::ModelParams;
+use crate::parallel::Engine;
 use crate::tensor::HostTensor;
 
-const MAGIC: &[u8; 6] = b"RTPC1\0";
+use super::corpus::{CorpusState, MarkovCorpus};
+use super::optimizer::Optimizer;
 
-pub fn save_params(params: &ModelParams, path: &Path) -> Result<()> {
+const MAGIC_V1: &[u8; 6] = b"RTPC1\0";
+const MAGIC_V2: &[u8; 6] = b"RTPC2\0";
+
+/// Sanity bounds on deserialized lengths: a corrupt or truncated header
+/// must produce a readable error, never a multi-gigabyte allocation.
+const MAX_NAME_LEN: usize = 4096;
+const MAX_NDIM: usize = 8;
+const MAX_NUMEL: usize = 1 << 28;
+const MAX_TENSORS: usize = 1 << 20;
+const MAX_MOMENTS: usize = 8;
+
+// ---------------------------------------------------------------------
+// primitive reads/writes (safe, little-endian, truncation-aware)
+// ---------------------------------------------------------------------
+
+fn read_u32(f: &mut impl Read, what: &str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b).with_context(|| format!("truncated checkpoint: reading {what}"))?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read, what: &str) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b).with_context(|| format!("truncated checkpoint: reading {what}"))?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32(f: &mut impl Read, what: &str) -> Result<f32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b).with_context(|| format!("truncated checkpoint: reading {what}"))?;
+    Ok(f32::from_le_bytes(b))
+}
+
+fn write_f32s(f: &mut impl Write, data: &[f32]) -> Result<()> {
+    // chunked to keep the staging buffer small on big tensors
+    let mut buf = Vec::with_capacity(4 * data.len().min(1 << 16));
+    for chunk in data.chunks(1 << 16) {
+        buf.clear();
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn read_f32s(f: &mut impl Read, n: usize, what: &str) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = vec![0u8; 4 * n.min(1 << 16)];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(1 << 16);
+        let bytes = &mut buf[..4 * take];
+        f.read_exact(bytes)
+            .with_context(|| format!("truncated checkpoint: reading {what}"))?;
+        out.extend(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+        left -= take;
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// tensor-table codec (shared by RTPC1 and RTPC2)
+// ---------------------------------------------------------------------
+
+fn write_tensor_table(f: &mut impl Write, params: &ModelParams) -> Result<()> {
     let mut entries: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::new();
     params.visit(&mut |name, t| {
         entries.push((name.to_string(), t.shape.clone(), t.data.clone()));
     });
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    f.write_all(MAGIC)?;
     f.write_all(&(entries.len() as u32).to_le_bytes())?;
     for (name, shape, data) in entries {
         f.write_all(&(name.len() as u32).to_le_bytes())?;
@@ -36,51 +109,46 @@ pub fn save_params(params: &ModelParams, path: &Path) -> Result<()> {
         for d in &shape {
             f.write_all(&(*d as u64).to_le_bytes())?;
         }
-        // SAFETY: f32 slice reinterpreted as bytes for the write
-        let bytes = unsafe {
-            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-        };
-        f.write_all(bytes)?;
+        write_f32s(f, &data)?;
     }
     Ok(())
 }
 
-pub fn load_params(cfg: &ModelCfg, path: &Path) -> Result<ModelParams> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-    );
-    let mut magic = [0u8; 6];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{}: not an RTP checkpoint", path.display());
+/// Read one tensor table and pour it into a cfg-shaped `ModelParams`,
+/// validating coverage and shapes. `label` names the table in errors
+/// ("params", "moment 1", ...).
+fn read_tensor_table(f: &mut impl Read, cfg: &ModelCfg, label: &str) -> Result<ModelParams> {
+    let count = read_u32(f, "tensor count")? as usize;
+    if count > MAX_TENSORS {
+        bail!("corrupt checkpoint: {label} claims {count} tensors");
     }
-    let mut u32buf = [0u8; 4];
-    let mut u64buf = [0u8; 8];
-    f.read_exact(&mut u32buf)?;
-    let count = u32::from_le_bytes(u32buf) as usize;
     let mut tensors: std::collections::BTreeMap<String, HostTensor> = Default::default();
-    for _ in 0..count {
-        f.read_exact(&mut u32buf)?;
-        let mut name = vec![0u8; u32::from_le_bytes(u32buf) as usize];
-        f.read_exact(&mut name)?;
-        let name = String::from_utf8(name).context("tensor name not utf8")?;
-        f.read_exact(&mut u32buf)?;
-        let ndim = u32::from_le_bytes(u32buf) as usize;
-        let mut shape = Vec::with_capacity(ndim);
-        for _ in 0..ndim {
-            f.read_exact(&mut u64buf)?;
-            shape.push(u64::from_le_bytes(u64buf) as usize);
+    for i in 0..count {
+        let name_len = read_u32(f, "tensor name length")? as usize;
+        if name_len > MAX_NAME_LEN {
+            bail!("corrupt checkpoint: {label} tensor {i} name length {name_len}");
         }
-        let numel: usize = shape.iter().product();
-        let mut data = vec![0f32; numel];
-        // SAFETY: fill the f32 buffer through its byte view
-        let bytes = unsafe {
-            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
-        };
-        f.read_exact(bytes)?;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)
+            .with_context(|| format!("truncated checkpoint: {label} tensor {i} name"))?;
+        let name = String::from_utf8(name).context("tensor name not utf8")?;
+        let ndim = read_u32(f, "tensor rank")? as usize;
+        if ndim > MAX_NDIM {
+            bail!("corrupt checkpoint: tensor {name:?} claims rank {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut numel = 1usize;
+        for _ in 0..ndim {
+            let d = read_u64(f, "tensor dim")? as usize;
+            numel = numel.saturating_mul(d);
+            shape.push(d);
+        }
+        if numel > MAX_NUMEL {
+            bail!("corrupt checkpoint: tensor {name:?} claims shape {shape:?}");
+        }
+        let data = read_f32s(f, numel, "tensor data")?;
         tensors.insert(name, HostTensor::from_vec(&shape, data));
     }
-    // pour into a cfg-shaped ModelParams, validating coverage and shapes
     let mut out = ModelParams::zeros_like(cfg);
     let mut missing = Vec::new();
     out.visit_mut(&mut |name, t| match tensors.remove(name) {
@@ -92,11 +160,11 @@ pub fn load_params(cfg: &ModelCfg, path: &Path) -> Result<ModelParams> {
         None => missing.push(format!("{name}: absent")),
     });
     if !missing.is_empty() {
-        bail!("checkpoint does not match config: {}", missing.join("; "));
+        bail!("checkpoint {label} does not match config: {}", missing.join("; "));
     }
     if !tensors.is_empty() {
         bail!(
-            "checkpoint has {} extra tensors (e.g. {:?})",
+            "checkpoint {label} has {} extra tensors (e.g. {:?})",
             tensors.len(),
             tensors.keys().next()
         );
@@ -104,10 +172,231 @@ pub fn load_params(cfg: &ModelCfg, path: &Path) -> Result<ModelParams> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------
+// RTPC1: bare parameters
+// ---------------------------------------------------------------------
+
+pub fn save_params(params: &ModelParams, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC_V1)?;
+    write_tensor_table(&mut f, params)?;
+    Ok(())
+}
+
+pub fn load_params(cfg: &ModelCfg, path: &Path) -> Result<ModelParams> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)
+        .with_context(|| format!("{}: truncated checkpoint header", path.display()))?;
+    if &magic != MAGIC_V1 {
+        bail!("{}: not an RTP checkpoint", path.display());
+    }
+    read_tensor_table(&mut f, cfg, "params")
+        .with_context(|| format!("loading {}", path.display()))
+}
+
+// ---------------------------------------------------------------------
+// RTPC2: elastic training state
+// ---------------------------------------------------------------------
+
+/// Full training state at FULL (world-size-independent) shape. A
+/// checkpoint taken at any world size resumes at any other: params and
+/// per-moment optimizer state re-shard through `Engine::load_full`,
+/// and the corpus cursor + optimizer step counter make the continuation
+/// bit-identical to an uninterrupted run at the new world size.
+pub struct TrainState {
+    /// World size of the run that SAVED the state (informational — the
+    /// state itself is world-size independent).
+    pub world_size: usize,
+    /// Training steps completed before the save.
+    pub step: u64,
+    /// RTP ring-rotation offset at the save point. Engines always finish
+    /// a step with rings rotated home, so this is 0 at every step
+    /// boundary; it rides the format so a mid-step save is detectable.
+    pub rotation_offset: u32,
+    pub opt_kind: OptimizerKind,
+    pub opt_step: u64,
+    pub lr: f32,
+    pub corpus: CorpusState,
+    pub params: ModelParams,
+    /// One FULL `ModelParams`-shaped table per optimizer moment
+    /// (momentum: 1; Adam: m then v).
+    pub moments: Vec<ModelParams>,
+}
+
+fn kind_byte(k: OptimizerKind) -> u8 {
+    match k {
+        OptimizerKind::Sgd => 0,
+        OptimizerKind::Momentum => 1,
+        OptimizerKind::Adam => 2,
+    }
+}
+
+fn kind_from_byte(b: u8) -> Result<OptimizerKind> {
+    Ok(match b {
+        0 => OptimizerKind::Sgd,
+        1 => OptimizerKind::Momentum,
+        2 => OptimizerKind::Adam,
+        _ => bail!("corrupt checkpoint: unknown optimizer kind {b}"),
+    })
+}
+
+pub fn save_train_state(state: &TrainState, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC_V2)?;
+    f.write_all(&(state.world_size as u32).to_le_bytes())?;
+    f.write_all(&state.step.to_le_bytes())?;
+    f.write_all(&state.rotation_offset.to_le_bytes())?;
+    f.write_all(&[kind_byte(state.opt_kind)])?;
+    f.write_all(&state.opt_step.to_le_bytes())?;
+    f.write_all(&state.lr.to_le_bytes())?;
+    f.write_all(&state.corpus.seed.to_le_bytes())?;
+    for s in state.corpus.rng {
+        f.write_all(&s.to_le_bytes())?;
+    }
+    f.write_all(&state.corpus.state.to_le_bytes())?;
+    f.write_all(&(state.moments.len() as u32).to_le_bytes())?;
+    write_tensor_table(&mut f, &state.params)?;
+    for m in &state.moments {
+        write_tensor_table(&mut f, m)?;
+    }
+    Ok(())
+}
+
+pub fn load_train_state(cfg: &ModelCfg, path: &Path) -> Result<TrainState> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)
+        .with_context(|| format!("{}: truncated checkpoint header", path.display()))?;
+    if &magic != MAGIC_V2 {
+        bail!("{}: not an RTPC2 training checkpoint", path.display());
+    }
+    let inner = (|| -> Result<TrainState> {
+        let world_size = read_u32(&mut f, "world size")? as usize;
+        let step = read_u64(&mut f, "step")?;
+        let rotation_offset = read_u32(&mut f, "rotation offset")?;
+        if rotation_offset != 0 {
+            bail!(
+                "checkpoint taken mid-step (rotation offset {rotation_offset}); \
+                 only step-boundary checkpoints are resumable"
+            );
+        }
+        let mut kb = [0u8; 1];
+        f.read_exact(&mut kb).context("truncated checkpoint: reading optimizer kind")?;
+        let opt_kind = kind_from_byte(kb[0])?;
+        let opt_step = read_u64(&mut f, "optimizer step")?;
+        let lr = read_f32(&mut f, "lr")?;
+        let corpus = CorpusState {
+            seed: read_u64(&mut f, "corpus seed")?,
+            rng: [
+                read_u64(&mut f, "corpus rng")?,
+                read_u64(&mut f, "corpus rng")?,
+                read_u64(&mut f, "corpus rng")?,
+                read_u64(&mut f, "corpus rng")?,
+            ],
+            state: read_u64(&mut f, "corpus state")?,
+        };
+        let n_moments = read_u32(&mut f, "moment count")? as usize;
+        if n_moments > MAX_MOMENTS {
+            bail!("corrupt checkpoint: claims {n_moments} optimizer moments");
+        }
+        if n_moments != opt_kind.state_factor() {
+            bail!(
+                "corrupt checkpoint: {opt_kind:?} optimizer with {n_moments} moments"
+            );
+        }
+        let params = read_tensor_table(&mut f, cfg, "params")?;
+        let mut moments = Vec::with_capacity(n_moments);
+        for k in 0..n_moments {
+            moments.push(read_tensor_table(&mut f, cfg, &format!("moment {k}"))?);
+        }
+        Ok(TrainState {
+            world_size,
+            step,
+            rotation_offset,
+            opt_kind,
+            opt_step,
+            lr,
+            corpus,
+            params,
+            moments,
+        })
+    })();
+    inner.with_context(|| format!("loading {}", path.display()))
+}
+
+/// Assemble the full training state from a live engine + optimizer +
+/// corpus. Uses the engine's own `gather_params` to reassemble each
+/// optimizer moment (staged into the param tensors, then restored), so
+/// the result is identical from every engine and world size.
+pub fn capture_train_state(
+    engine: &mut dyn Engine,
+    opt: &Optimizer,
+    corpus: &MarkovCorpus,
+    step: u64,
+) -> Result<TrainState> {
+    let params = engine.gather_params();
+    let mut moments = Vec::with_capacity(opt.moment_count());
+    for k in 0..opt.moment_count() {
+        opt.stage_moment_into_params(&mut *engine, k);
+        moments.push(engine.gather_params());
+    }
+    if !moments.is_empty() {
+        // staging overwrote the live weights; put them back
+        engine.load_full(&params)?;
+    }
+    Ok(TrainState {
+        world_size: engine.ctx().cluster.n(),
+        step,
+        rotation_offset: 0,
+        opt_kind: opt.kind,
+        opt_step: opt.step_count(),
+        lr: opt.lr,
+        corpus: corpus.snapshot(),
+        params,
+        moments,
+    })
+}
+
+/// Hydrate an engine + fresh optimizer from a [`TrainState`] — possibly
+/// at a different world size than the save — and rebuild the corpus
+/// cursor. Returns the restored corpus.
+pub fn restore_train_state(
+    engine: &mut dyn Engine,
+    opt: &mut Optimizer,
+    cfg: &ModelCfg,
+    state: &TrainState,
+) -> Result<MarkovCorpus> {
+    if opt.kind != state.opt_kind {
+        bail!(
+            "optimizer kind mismatch: checkpoint has {:?}, engine run uses {:?}",
+            state.opt_kind,
+            opt.kind
+        );
+    }
+    for (k, moment) in state.moments.iter().enumerate() {
+        engine.load_full(moment)?;
+        opt.load_moment_from_params(&mut *engine, k);
+    }
+    opt.set_step_count(state.opt_step);
+    opt.lr = state.lr;
+    engine.load_full(&state.params)?;
+    Ok(MarkovCorpus::restore(cfg, state.corpus))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::presets;
+    use crate::config::{presets, Strategy};
+    use crate::parallel::{build_engine, EngineOpts, ExecKind};
     use crate::util::rng::Rng;
 
     fn tmp(name: &str) -> std::path::PathBuf {
@@ -153,6 +442,121 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint").unwrap();
         let cfg = presets::get("tiny").unwrap();
         assert!(load_params(&cfg, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncated_file_rejected_with_context() {
+        let cfg = presets::get("tiny").unwrap();
+        let p = ModelParams::init(&cfg, &mut Rng::new(6));
+        let path = tmp("truncated");
+        save_params(&p, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for frac in [full.len() / 2, full.len() - 3, 7] {
+            std::fs::write(&path, &full[..frac]).unwrap();
+            let err = load_params(&cfg, &path).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("truncated"),
+                "frac {frac}: error lacks truncation context: {err:#}"
+            );
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn absurd_lengths_rejected_not_allocated() {
+        let cfg = presets::get("tiny").unwrap();
+        // valid magic, then a name length claiming 4 GB — must error,
+        // not attempt the allocation
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // insane name_len
+        let path = tmp("absurd");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_params(&cfg, &path).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn absurd_tensor_shape_rejected() {
+        let cfg = presets::get("tiny").unwrap();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // name_len 3
+        bytes.extend_from_slice(b"wte");
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // ndim 2
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        let path = tmp("absurd-shape");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_params(&cfg, &path).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v1_magic_rejected_as_train_state() {
+        let cfg = presets::get("tiny").unwrap();
+        let p = ModelParams::init(&cfg, &mut Rng::new(8));
+        let path = tmp("v1-as-v2");
+        save_params(&p, &path).unwrap();
+        assert!(load_train_state(&cfg, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn train_state_roundtrip_bitwise() {
+        let cfg = presets::get("tiny").unwrap();
+        let mut eng =
+            build_engine(&EngineOpts::new("tiny", Strategy::Ddp, 2, 4).exec(ExecKind::Oracle))
+                .unwrap();
+        let mut opt = Optimizer::new(OptimizerKind::Adam, 1e-2);
+        let mut corpus = MarkovCorpus::new(&cfg, 11);
+        for _ in 0..3 {
+            let b = corpus.next_batch(4);
+            eng.zero_grads();
+            eng.step(&b).unwrap();
+            opt.step(&mut *eng);
+        }
+        let before = eng.gather_params();
+        let state = capture_train_state(&mut *eng, &opt, &corpus, 3).unwrap();
+        // capture must leave the live weights untouched
+        assert_eq!(before.max_abs_diff(&eng.gather_params()), 0.0);
+        let path = tmp("trainstate");
+        save_train_state(&state, &path).unwrap();
+        let loaded = load_train_state(&cfg, &path).unwrap();
+        assert_eq!(loaded.world_size, 2);
+        assert_eq!(loaded.step, 3);
+        assert_eq!(loaded.opt_kind, OptimizerKind::Adam);
+        assert_eq!(loaded.opt_step, 3);
+        assert_eq!(loaded.lr, 1e-2);
+        assert_eq!(loaded.corpus, corpus.snapshot());
+        assert_eq!(loaded.params.max_abs_diff(&state.params), 0.0);
+        assert_eq!(loaded.moments.len(), 2);
+        for (a, b) in loaded.moments.iter().zip(&state.moments) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncated_train_state_rejected() {
+        let cfg = presets::get("tiny").unwrap();
+        let mut eng =
+            build_engine(&EngineOpts::new("tiny", Strategy::Single, 1, 4).exec(ExecKind::Oracle))
+                .unwrap();
+        let opt = Optimizer::new(OptimizerKind::Sgd, 1e-2);
+        let corpus = MarkovCorpus::new(&cfg, 12);
+        let state = capture_train_state(&mut *eng, &opt, &corpus, 0).unwrap();
+        let path = tmp("trainstate-trunc");
+        save_train_state(&state, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 3]).unwrap();
+        let err = load_train_state(&cfg, &path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
         std::fs::remove_file(path).ok();
     }
 }

@@ -17,10 +17,24 @@ const P_HEAD: f64 = 0.7;
 pub struct MarkovCorpus {
     vocab: usize,
     seq: usize,
+    /// The construction seed (rides checkpoints so the successor table —
+    /// a pure function of it — can be re-derived at resume).
+    seed: u64,
     /// successors[t] = the FANOUT candidate next-tokens of t.
     successors: Vec<[usize; FANOUT]>,
     rng: Rng,
     state: usize,
+}
+
+/// The corpus's checkpointable sampling cursor: the successor table is a
+/// pure function of `seed`, so only the live RNG state and chain position
+/// ride the checkpoint. Restoring continues the exact batch sequence an
+/// uninterrupted run would have produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CorpusState {
+    pub seed: u64,
+    pub rng: [u64; 4],
+    pub state: u64,
 }
 
 impl MarkovCorpus {
@@ -35,7 +49,24 @@ impl MarkovCorpus {
                 s
             })
             .collect();
-        MarkovCorpus { vocab: cfg.vocab, seq: cfg.seq, successors, rng, state: 0 }
+        MarkovCorpus { vocab: cfg.vocab, seq: cfg.seq, seed, successors, rng, state: 0 }
+    }
+
+    /// The checkpointable cursor (see [`CorpusState`]).
+    pub fn snapshot(&self) -> CorpusState {
+        CorpusState {
+            seed: self.seed,
+            rng: self.rng.state(),
+            state: self.state as u64,
+        }
+    }
+
+    /// Rebuild the corpus mid-stream from a [`MarkovCorpus::snapshot`].
+    pub fn restore(cfg: &ModelCfg, s: CorpusState) -> Self {
+        let mut c = MarkovCorpus::new(cfg, s.seed);
+        c.rng = Rng::from_state(s.rng);
+        c.state = s.state as usize;
+        c
     }
 
     fn next_token(&mut self) -> usize {

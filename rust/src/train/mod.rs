@@ -7,8 +7,11 @@ pub mod optimizer;
 pub mod schedule;
 pub mod trainer;
 
-pub use checkpoint::{load_params, save_params};
-pub use corpus::MarkovCorpus;
+pub use checkpoint::{
+    capture_train_state, load_params, load_train_state, restore_train_state, save_params,
+    save_train_state, TrainState,
+};
+pub use corpus::{CorpusState, MarkovCorpus};
 pub use optimizer::Optimizer;
 pub use schedule::{grad_norm, LrSchedule};
 pub use trainer::{train, TrainReport};

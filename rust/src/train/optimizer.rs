@@ -54,6 +54,77 @@ impl Optimizer {
         Ok(())
     }
 
+    /// The number of updates applied so far (Adam's bias-correction `t`).
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Restore the update counter from a checkpoint so Adam's bias
+    /// correction continues exactly where the interrupted run left off.
+    pub fn set_step_count(&mut self, t: u64) {
+        self.step = t;
+    }
+
+    /// How many per-parameter moment vectors this kind keeps (SGD 0,
+    /// momentum 1, Adam 2 — the same multiplier as `state_factor`).
+    pub fn moment_count(&self) -> usize {
+        self.kind.state_factor()
+    }
+
+    /// Checkpoint staging: overwrite the engine's OWNED param tensors
+    /// with moment `k`'s values (zeros where no state exists yet, e.g. an
+    /// optimizer that never stepped). The engine's own `gather_params`
+    /// then reassembles the FULL moment across any sharding layout —
+    /// moments shard exactly like the params they track. The caller must
+    /// restore the live weights afterwards via `Engine::load_full`.
+    pub fn stage_moment_into_params(&self, engine: &mut dyn Engine, k: usize) {
+        let state = &self.state;
+        let mut i = 0;
+        engine.visit_owned(&mut |p, _| {
+            let src: Option<&[f32]> = match state.get(i) {
+                Some(Slot::Momentum(m)) if k == 0 => Some(m),
+                Some(Slot::Adam { m, .. }) if k == 0 => Some(m),
+                Some(Slot::Adam { v, .. }) if k == 1 => Some(v),
+                _ => None,
+            };
+            match src {
+                Some(s) => p.data.copy_from_slice(s),
+                None => p.data.fill(0.0),
+            }
+            i += 1;
+        });
+    }
+
+    /// Checkpoint restore, the inverse of `stage_moment_into_params`:
+    /// after the full moment was re-sharded into the engine's params via
+    /// `Engine::load_full`, copy each owned shard into moment `k`.
+    /// Creates state slots on first touch so a fresh optimizer hydrates
+    /// at any world size.
+    pub fn load_moment_from_params(&mut self, engine: &mut dyn Engine, k: usize) {
+        let kind = self.kind;
+        let state = &mut self.state;
+        let mut i = 0;
+        engine.visit_owned(&mut |p, _| {
+            if state.len() == i {
+                state.push(match kind {
+                    OptimizerKind::Sgd => Slot::Sgd,
+                    OptimizerKind::Momentum => Slot::Momentum(vec![0.0; p.data.len()]),
+                    OptimizerKind::Adam => Slot::Adam {
+                        m: vec![0.0; p.data.len()],
+                        v: vec![0.0; p.data.len()],
+                    },
+                });
+            }
+            match &mut state[i] {
+                Slot::Momentum(m) if k == 0 => m.copy_from_slice(&p.data),
+                Slot::Adam { m, .. } if k == 0 => m.copy_from_slice(&p.data),
+                Slot::Adam { v, .. } if k == 1 => v.copy_from_slice(&p.data),
+                _ => {}
+            }
+            i += 1;
+        });
+    }
+
     /// `step` with global-norm clipping: the clip factor folds into the
     /// lr for this update (mathematically identical to scaling the grads,
     /// for SGD; for Adam it is the standard lr-scaling approximation).

@@ -22,6 +22,17 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// The raw xoshiro state — checkpointable (see [`Rng::from_state`]).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild from a [`Rng::state`] snapshot: continues the exact
+    /// sequence the snapshotted generator would have produced.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
             .wrapping_mul(5)

@@ -1,0 +1,338 @@
+//! Elastic fault tolerance, end to end: deterministic fault injection
+//! across {engine} x {phase} x {launcher}, orderly typed failure
+//! propagation (no hangs, no leaked fabric messages), and re-sharded
+//! resume — a run killed at world size N continues at a new world size
+//! N' bit-identically to an uninterrupted run at N'.
+
+use rtp::config::{presets, OptimizerKind, Strategy};
+use rtp::parallel::{build_engine, Engine, EngineOpts, ExecKind, Launcher};
+use rtp::runtime::{FailureKind, FaultPhase, FaultPlan, RankFailure};
+use rtp::train::{
+    capture_train_state, load_train_state, restore_train_state, save_train_state,
+    MarkovCorpus, Optimizer,
+};
+
+fn mk(
+    preset: &str,
+    strategy: Strategy,
+    n: usize,
+    gb: usize,
+    launcher: Launcher,
+    plan: Option<FaultPlan>,
+) -> Box<dyn Engine> {
+    build_engine(
+        &EngineOpts::new(preset, strategy, n, gb)
+            .exec(ExecKind::Oracle)
+            .launcher(launcher)
+            .fault_plan(plan),
+    )
+    .unwrap()
+}
+
+/// `steps` training steps; returns the per-step losses (bit-comparable).
+fn train(
+    eng: &mut dyn Engine,
+    opt: &mut Optimizer,
+    corpus: &mut MarkovCorpus,
+    gb: usize,
+    steps: usize,
+) -> Vec<f32> {
+    (0..steps)
+        .map(|_| {
+            let b = corpus.next_batch(gb);
+            eng.zero_grads();
+            let loss = eng.step(&b).unwrap();
+            opt.step(&mut *eng);
+            loss
+        })
+        .collect()
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("rtp-ft-{name}-{}", std::process::id()))
+}
+
+// ---------------------------------------------------------------------
+// injection matrix: every phase on every engine under both launchers
+// surfaces as ONE typed RankFailure at the step barrier — never a
+// watchdog panic, never a hang, never a leaked in-flight message.
+// ---------------------------------------------------------------------
+
+fn matrix() -> Vec<(Strategy, Vec<FaultPhase>)> {
+    use FaultPhase::*;
+    vec![
+        (Strategy::Single, vec![Forward, Backward]),
+        (Strategy::Ddp, vec![Forward, Backward, CollectiveHop]),
+        (Strategy::Fsdp, vec![Forward, Backward, CollectiveHop]),
+        (Strategy::MegatronTp, vec![Forward, Backward]),
+        (Strategy::RtpInplace, vec![Forward, Backward, RotationHop, CollectiveHop]),
+        (Strategy::RtpOutOfPlace, vec![Forward, Backward, RotationHop, CollectiveHop]),
+    ]
+}
+
+fn assert_injection(strategy: Strategy, phase: FaultPhase, launcher: Launcher) {
+    let n = if strategy == Strategy::Single { 1 } else { 2 };
+    let victim = n - 1;
+    let plan = FaultPlan { rank: victim, step: 1, phase };
+    let mut eng = mk("tiny", strategy, n, 4, launcher, Some(plan));
+    let cfg = presets::get("tiny").unwrap();
+    let mut corpus = MarkovCorpus::new(&cfg, 7);
+
+    // step 0 is healthy — the kill hits a warmed-up engine
+    let b = corpus.next_batch(4);
+    eng.zero_grads();
+    eng.step(&b).unwrap();
+
+    let b = corpus.next_batch(4);
+    eng.zero_grads();
+    let err = eng
+        .step(&b)
+        .expect_err(&format!("{strategy}/{phase}/{launcher}: injected death must fail the step"));
+    let f = err
+        .downcast_ref::<RankFailure>()
+        .unwrap_or_else(|| panic!("{strategy}/{phase}/{launcher}: untyped error: {err:#}"));
+    assert_eq!(f.failed_rank, victim, "{strategy}/{phase}/{launcher}");
+    assert_eq!(
+        f.kind,
+        FailureKind::Injected { phase },
+        "{strategy}/{phase}/{launcher}: wrong failure kind: {f}"
+    );
+    // orderly teardown: the poisoned round drained every lane
+    assert_eq!(
+        eng.ctx().cluster.fabric().in_flight(),
+        0,
+        "{strategy}/{phase}/{launcher}: leaked in-flight messages"
+    );
+}
+
+#[test]
+fn injected_death_is_typed_under_lockstep() {
+    for (strategy, phases) in matrix() {
+        for phase in phases {
+            assert_injection(strategy, phase, Launcher::Lockstep);
+        }
+    }
+}
+
+#[test]
+fn injected_death_is_typed_under_thread_launcher() {
+    for (strategy, phases) in matrix() {
+        for phase in phases {
+            assert_injection(strategy, phase, Launcher::Thread);
+        }
+    }
+}
+
+/// The determinism half of the harness contract: a plan whose
+/// coordinates never match is indistinguishable — bitwise — from no
+/// plan at all.
+#[test]
+fn unmatched_fault_plan_is_bit_identical_to_no_plan() {
+    for strategy in [Strategy::Ddp, Strategy::RtpInplace] {
+        let run = |plan: Option<FaultPlan>| {
+            let mut eng = mk("tiny", strategy, 2, 4, Launcher::Lockstep, plan);
+            let cfg = presets::get("tiny").unwrap();
+            let mut corpus = MarkovCorpus::new(&cfg, 5);
+            let mut opt = Optimizer::new(OptimizerKind::Adam, 1e-2);
+            let losses = train(&mut *eng, &mut opt, &mut corpus, 4, 3);
+            (losses, eng.gather_params())
+        };
+        let (la, pa) = run(None);
+        let never = FaultPlan { rank: 0, step: u64::MAX - 1, phase: FaultPhase::Forward };
+        let (lb, pb) = run(Some(never));
+        assert_eq!(la, lb, "{strategy}: losses diverged under an unmatched plan");
+        assert_eq!(pa.max_abs_diff(&pb), 0.0, "{strategy}: params diverged");
+    }
+}
+
+// ---------------------------------------------------------------------
+// resume: same world size, bit-identical continuation
+// ---------------------------------------------------------------------
+
+fn assert_same_n_resume(strategy: Strategy, launcher: Launcher, tag: &str) {
+    let (n, gb) = if strategy == Strategy::Single { (1, 4) } else { (2, 4) };
+    let cfg = presets::get("tiny").unwrap();
+    let fresh = || mk("tiny", strategy, n, gb, launcher, None);
+
+    // uninterrupted 6-step reference
+    let mut eng_a = fresh();
+    let mut opt_a = Optimizer::new(OptimizerKind::Adam, 1e-2);
+    let mut corpus_a = MarkovCorpus::new(&cfg, 7);
+    let losses_a = train(&mut *eng_a, &mut opt_a, &mut corpus_a, gb, 6);
+
+    // 3 steps, checkpoint through disk, resume into a FRESH engine
+    let mut eng_b = fresh();
+    let mut opt_b = Optimizer::new(OptimizerKind::Adam, 1e-2);
+    let mut corpus_b = MarkovCorpus::new(&cfg, 7);
+    train(&mut *eng_b, &mut opt_b, &mut corpus_b, gb, 3);
+    let state = capture_train_state(&mut *eng_b, &opt_b, &corpus_b, 3).unwrap();
+    let path = tmp(&format!("same-n-{strategy}-{tag}"));
+    save_train_state(&state, &path).unwrap();
+    let loaded = load_train_state(&cfg, &path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.step, 3);
+
+    let mut eng_c = fresh();
+    let mut opt_c = Optimizer::new(OptimizerKind::Adam, 999.0); // restore overwrites lr
+    let mut corpus_c = restore_train_state(&mut *eng_c, &mut opt_c, &cfg, &loaded).unwrap();
+    assert_eq!(opt_c.lr, 1e-2);
+    let losses_c = train(&mut *eng_c, &mut opt_c, &mut corpus_c, gb, 3);
+
+    assert_eq!(
+        &losses_a[3..],
+        &losses_c[..],
+        "{strategy}/{launcher}: resumed losses diverged from uninterrupted run"
+    );
+    assert_eq!(
+        eng_a.gather_params().max_abs_diff(&eng_c.gather_params()),
+        0.0,
+        "{strategy}/{launcher}: resumed params diverged"
+    );
+}
+
+#[test]
+fn same_world_size_resume_is_bitwise_for_every_engine() {
+    for strategy in [
+        Strategy::Single,
+        Strategy::Ddp,
+        Strategy::Fsdp,
+        Strategy::MegatronTp,
+        Strategy::RtpInplace,
+        Strategy::RtpOutOfPlace,
+    ] {
+        assert_same_n_resume(strategy, Launcher::Lockstep, "lock");
+    }
+}
+
+#[test]
+fn same_world_size_resume_is_bitwise_under_thread_launcher() {
+    for strategy in [Strategy::Ddp, Strategy::RtpOutOfPlace] {
+        assert_same_n_resume(strategy, Launcher::Thread, "thr");
+    }
+}
+
+// ---------------------------------------------------------------------
+// resume: NEW world size. The state is world-size independent, so
+// re-sharding through each engine's own `load_full` must be lossless:
+// capture at N' returns the exact bytes captured at N.
+// ---------------------------------------------------------------------
+
+#[test]
+fn cross_world_size_reshard_roundtrips_params_and_moments_exactly() {
+    // (strategy, preset, n_from, n_to, global_batch)
+    let cases = [
+        (Strategy::Ddp, "tiny", 4usize, 3usize, 12usize),
+        (Strategy::Fsdp, "tiny", 4, 2, 8),
+        (Strategy::MegatronTp, "tiny-wide", 4, 8, 8),
+        (Strategy::RtpInplace, "tiny-moe", 2, 4, 8),
+        (Strategy::RtpOutOfPlace, "tiny-wide", 2, 4, 8),
+    ];
+    for (strategy, preset, n_from, n_to, gb) in cases {
+        let cfg = presets::get(preset).unwrap();
+        let mut eng = mk(preset, strategy, n_from, gb, Launcher::Lockstep, None);
+        let mut opt = Optimizer::new(OptimizerKind::Adam, 1e-2);
+        let mut corpus = MarkovCorpus::new(&cfg, 13);
+        train(&mut *eng, &mut opt, &mut corpus, gb, 3);
+        let state = capture_train_state(&mut *eng, &opt, &corpus, 3).unwrap();
+
+        let mut eng2 = mk(preset, strategy, n_to, gb, Launcher::Lockstep, None);
+        let mut opt2 = Optimizer::new(OptimizerKind::Adam, 1.0);
+        let corpus2 = restore_train_state(&mut *eng2, &mut opt2, &cfg, &state).unwrap();
+        assert_eq!(opt2.step_count(), 3, "{strategy} {preset}");
+        let state2 = capture_train_state(&mut *eng2, &opt2, &corpus2, state.step).unwrap();
+
+        let tag = format!("{strategy} {preset} N={n_from}->{n_to}");
+        assert_eq!(
+            state.params.max_abs_diff(&state2.params),
+            0.0,
+            "{tag}: params not bit-exact through re-shard"
+        );
+        assert_eq!(state.moments.len(), state2.moments.len(), "{tag}");
+        for (k, (a, b)) in state.moments.iter().zip(&state2.moments).enumerate() {
+            assert_eq!(
+                a.max_abs_diff(b),
+                0.0,
+                "{tag}: optimizer moment {k} not bit-exact through re-shard"
+            );
+        }
+        assert_eq!(state.corpus, state2.corpus, "{tag}: corpus cursor drifted");
+    }
+}
+
+// ---------------------------------------------------------------------
+// the full elastic story: train at N, get killed by an injected rank
+// death, rebuild at N' from the last checkpoint — the recovered run is
+// bit-identical to a never-faulted run resumed at N' from the same
+// checkpoint.
+// ---------------------------------------------------------------------
+
+#[test]
+fn killed_at_n_resumes_at_new_world_size_bit_identically() {
+    // (strategy, preset, n_from, n_to, global_batch) — gb divides both N
+    let cases = [
+        (Strategy::Ddp, "tiny", 4usize, 3usize, 12usize),
+        (Strategy::Fsdp, "tiny", 4, 8, 8),
+        (Strategy::MegatronTp, "tiny-wide", 4, 8, 8),
+        (Strategy::RtpInplace, "tiny-wide", 4, 2, 8),
+        (Strategy::RtpOutOfPlace, "tiny-wide", 4, 2, 8),
+    ];
+    for (strategy, preset, n_from, n_to, gb) in cases {
+        let cfg = presets::get(preset).unwrap();
+        let tag = format!("{strategy} {preset} N={n_from}->{n_to}");
+
+        // phase 1: train at N and checkpoint to disk
+        let mut eng0 = mk(preset, strategy, n_from, gb, Launcher::Lockstep, None);
+        let mut opt0 = Optimizer::new(OptimizerKind::Adam, 1e-2);
+        let mut corpus0 = MarkovCorpus::new(&cfg, 17);
+        train(&mut *eng0, &mut opt0, &mut corpus0, gb, 3);
+        let state = capture_train_state(&mut *eng0, &opt0, &corpus0, 3).unwrap();
+        let path = tmp(&format!("elastic-{strategy}-{preset}-{n_from}-{n_to}"));
+        save_train_state(&state, &path).unwrap();
+
+        // reference: never-faulted resume at N'
+        let loaded = load_train_state(&cfg, &path).unwrap();
+        let mut eng_r = mk(preset, strategy, n_to, gb, Launcher::Lockstep, None);
+        let mut opt_r = Optimizer::new(OptimizerKind::Adam, 1.0);
+        let mut corpus_r =
+            restore_train_state(&mut *eng_r, &mut opt_r, &cfg, &loaded).unwrap();
+        let losses_r = train(&mut *eng_r, &mut opt_r, &mut corpus_r, gb, 3);
+
+        // faulted: resume at N, die on the second post-resume step
+        let plan = FaultPlan { rank: 1, step: 1, phase: FaultPhase::Backward };
+        let mut eng_f = mk(preset, strategy, n_from, gb, Launcher::Lockstep, Some(plan));
+        let mut opt_f = Optimizer::new(OptimizerKind::Adam, 1.0);
+        let mut corpus_f =
+            restore_train_state(&mut *eng_f, &mut opt_f, &cfg, &loaded).unwrap();
+        let b = corpus_f.next_batch(gb);
+        eng_f.zero_grads();
+        eng_f.step(&b).unwrap();
+        opt_f.step(&mut *eng_f);
+        let b = corpus_f.next_batch(gb);
+        eng_f.zero_grads();
+        let err = eng_f.step(&b).expect_err("planned death must fail the step");
+        let f = err
+            .downcast_ref::<RankFailure>()
+            .unwrap_or_else(|| panic!("{tag}: untyped failure: {err:#}"));
+        assert_eq!(f.failed_rank, 1, "{tag}");
+        assert_eq!(eng_f.ctx().cluster.fabric().in_flight(), 0, "{tag}");
+
+        // recovery: rebuild at N' from the SAME checkpoint file
+        let loaded2 = load_train_state(&cfg, &path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let mut eng2 = mk(preset, strategy, n_to, gb, Launcher::Lockstep, None);
+        let mut opt2 = Optimizer::new(OptimizerKind::Adam, 1.0);
+        let mut corpus2 =
+            restore_train_state(&mut *eng2, &mut opt2, &cfg, &loaded2).unwrap();
+        let losses2 = train(&mut *eng2, &mut opt2, &mut corpus2, gb, 3);
+
+        assert_eq!(
+            losses_r, losses2,
+            "{tag}: recovered loss trajectory diverged from never-faulted resume"
+        );
+        assert_eq!(
+            eng_r.gather_params().max_abs_diff(&eng2.gather_params()),
+            0.0,
+            "{tag}: recovered params diverged from never-faulted resume"
+        );
+    }
+}

@@ -7,6 +7,7 @@ use rtp::memory::analytic::kv_cache_bytes_per_rank;
 use rtp::memory::MemCategory;
 use rtp::model::{oracle, MlpParams, ModelParams};
 use rtp::parallel::Launcher;
+use rtp::runtime::{FailureKind, FaultPhase, FaultPlan, RankFailure};
 use rtp::serve::{
     build_serve_engine, build_serve_engine_with_params, Admission, GenRequest, ServeOpts,
 };
@@ -267,6 +268,61 @@ fn admission_rejects_over_budget_without_aborting_peers() {
     assert_eq!(rep.rejected[0].0, 1);
     for f in &rep.finished {
         assert_eq!(f.tokens.len(), 2);
+    }
+}
+
+/// Serving robustness: a rank dying mid-decode fails the running batch
+/// with a typed `RankFailure` — not a hang, not a bare panic — and
+/// releases every KV page on every rank, so nothing leaks and the
+/// trackers stay clean through shutdown.
+#[test]
+fn rank_death_mid_decode_fails_batch_without_leaking_kv() {
+    for launcher in [Launcher::Lockstep, Launcher::Thread] {
+        let cfg = presets::get("tiny").unwrap();
+        let plan = FaultPlan { rank: 1, step: 2, phase: FaultPhase::Decode };
+        let opts = ServeOpts::new("tiny")
+            .strategy(Strategy::MegatronTp)
+            .workers(2)
+            .max_batch(2)
+            .page_tokens(4)
+            .launcher(launcher)
+            .fault_plan(Some(plan));
+        let mut eng = build_serve_engine(&opts).unwrap();
+        let mut rng = Rng::new(17);
+        for id in 0..2u64 {
+            let prompt = (0..3).map(|_| rng.below(cfg.vocab) as i32).collect();
+            assert_eq!(
+                eng.submit(GenRequest { id, prompt, max_new: 6 }),
+                Admission::Queued
+            );
+        }
+        assert!(eng.step().unwrap()); // scheduler step 0
+        assert!(eng.step().unwrap()); // scheduler step 1
+        let err = eng.step().expect_err("planned decode death must fail the step");
+        let f = err
+            .downcast_ref::<RankFailure>()
+            .unwrap_or_else(|| panic!("{launcher}: untyped serving failure: {err:#}"));
+        assert_eq!(f.failed_rank, 1, "{launcher}");
+        assert_eq!(
+            f.kind,
+            FailureKind::Injected { phase: FaultPhase::Decode },
+            "{launcher}"
+        );
+        // the whole batch is retired with the root cause, zero KV leaked
+        assert_eq!(eng.running_len(), 0, "{launcher}");
+        for w in &eng.cluster().workers {
+            assert_eq!(
+                w.tracker.live_of(MemCategory::KvCache),
+                0,
+                "{launcher}: leaked KV pages after rank death"
+            );
+        }
+        assert_eq!(eng.cluster().fabric().in_flight(), 0, "{launcher}");
+        assert_eq!(eng.report().rejected.len(), 2, "{launcher}");
+        eng.shutdown();
+        for w in &eng.cluster().workers {
+            assert_eq!(w.tracker.outstanding(), 0, "{launcher}");
+        }
     }
 }
 
