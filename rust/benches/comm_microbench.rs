@@ -10,9 +10,15 @@
 //!    vs the chunked ring implementations stepping messages through the
 //!    fabric, timed with the mini-harness.
 
-use rtp::bench_util::{bench, Table};
-use rtp::comm::{self, reference, CommPrim, LaunchPolicy, LinkModel, RingFabric, RotationDir};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use rtp::bench_util::{bench, merge_overlap_json, Table};
+use rtp::comm::{
+    self, reference, CommPrim, LaunchPolicy, LinkModel, RingFabric, RotationDir, TransportKind,
+};
 use rtp::perfmodel::{a100_nvlink, v100_pcie};
+use rtp::util::json::Json;
 use rtp::util::rng::Rng;
 
 const N: usize = 8;
@@ -225,11 +231,82 @@ fn pooled_rotation_table() {
     t.write_csv("comm_microbench_pooled").unwrap();
 }
 
+/// Transport ablation (process-grade transport PR): the SAME pooled
+/// rotation hop on each byte transport that can back a fabric link —
+/// in-process lanes (`inproc`, the historical oracle), the
+/// shared-memory SPSC ring (`shm`, what `Launcher::Process` runs on)
+/// and the Unix-socket portable reference (`uds`) — at N ∈ {2,4,8},
+/// 16 KiB payloads, Threaded policy. Reports per-hop latency, aggregate
+/// ring bandwidth, and fabric allocations per hop from the
+/// `msg_allocs` counter. The N=4 rows land as `transport_*` keys in
+/// `figures/BENCH_overlap.json`; scripts/check_bench_overlap.py pins
+/// the shm steady-state allocation count at ZERO — the zero-copy
+/// contract the Process-launcher overlap numbers rest on.
+fn transport_table() {
+    let elems = 4096usize; // 16 KiB of f32 per hop
+    let hops = if quick() { 512usize } else { 8192 };
+    let mut t = Table::new(
+        "transport ablation — pooled rotation hop, 16 KiB payload, Thread policy",
+        &["transport", "N", "ns/hop", "GB/s aggregate", "allocs/hop"],
+    );
+    let mut json = BTreeMap::new();
+    for kind in [TransportKind::Inproc, TransportKind::Shm, TransportKind::Uds] {
+        for n in [2usize, 4, 8] {
+            let fab = RingFabric::with_transport(n, kind);
+            let run = |k: usize| {
+                let out = comm::spmd_with(&fab, LaunchPolicy::Threaded, |port| {
+                    let mut buf = vec![port.rank() as f32; elems];
+                    for _ in 0..k {
+                        buf = comm::rotate_ring_vec(&port, buf, RotationDir::Clockwise);
+                    }
+                    buf.len()
+                });
+                std::hint::black_box(&out);
+            };
+            run(64); // prime lane pools / rings / socket buffers
+            fab.reset_counters();
+            let t0 = Instant::now();
+            run(hops);
+            let dt = t0.elapsed().as_secs_f64();
+            assert_eq!(fab.in_flight(), 0, "transport bench left messages in flight");
+            let allocs = fab.counters().msg_allocs as f64 / (hops * n) as f64;
+            let ns_hop = dt / hops as f64 * 1e9;
+            let gbs = (hops * n * elems * 4) as f64 / dt / 1e9;
+            t.row(vec![
+                kind.name().into(),
+                n.to_string(),
+                format!("{ns_hop:.0}"),
+                format!("{gbs:.2}"),
+                format!("{allocs:.4}"),
+            ]);
+            if n == 4 {
+                json.insert(
+                    format!("transport_{}_ns_per_hop_16k", kind.name()),
+                    Json::Num(ns_hop),
+                );
+                json.insert(
+                    format!("transport_{}_gb_per_s_16k", kind.name()),
+                    Json::Num(gbs),
+                );
+                json.insert(
+                    format!("transport_{}_allocs_per_hop", kind.name()),
+                    Json::Num(allocs),
+                );
+            }
+        }
+    }
+    t.print();
+    t.write_csv("comm_microbench_transport").unwrap();
+    let path = merge_overlap_json(json).unwrap();
+    println!("merged transport_* keys into {}", path.display());
+}
+
 fn main() {
     model_table(&a100_nvlink().link);
     model_table(&v100_pcie().link);
     hop_decomposition_table(&a100_nvlink().link);
     hop_decomposition_table(&v100_pcie().link);
     pooled_rotation_table();
+    transport_table();
     host_table();
 }

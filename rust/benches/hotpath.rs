@@ -24,7 +24,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use rtp::bench_util::{bench, figures_dir, Table};
+use rtp::bench_util::{bench, Table};
 use rtp::comm::{self, CollectiveStream, LaunchPolicy, RingFabric, RotationDir, SchedPolicy};
 use rtp::config::Strategy;
 use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind, Launcher};
@@ -89,9 +89,10 @@ fn main() {
     multi_collective_profile(&mut overlap);
     scheduler_ablation();
     overlap.insert("quick_mode".into(), Json::Bool(quick()));
-    let path = figures_dir().join("BENCH_overlap.json");
-    std::fs::create_dir_all(figures_dir()).unwrap();
-    std::fs::write(&path, format!("{}\n", Json::Obj(overlap))).unwrap();
+    // read-merge-write: comm_microbench owns the transport_* keys in the
+    // same artifact; running the two targets in either order must not
+    // clobber either contribution
+    let path = rtp::bench_util::merge_overlap_json(overlap).unwrap();
     println!("wrote {}", path.display());
 
     // PJRT runtime breakdown on an RTP step

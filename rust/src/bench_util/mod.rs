@@ -3,10 +3,12 @@
 //! the paper's rows/series as ASCII and writes a CSV next to it under
 //! `figures/`.
 
+use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Time `f` with warmup; returns per-iteration stats in seconds.
@@ -101,6 +103,28 @@ pub fn figures_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("figures")
 }
 
+/// Read-merge-write `figures/BENCH_overlap.json`. Several bench targets
+/// contribute keys to the one gated overlap artifact (`hotpath` writes
+/// the overlap/scheduler keys, `comm_microbench` the `transport_*`
+/// ablation keys); each merges only its own keys so the targets can run
+/// in either order — or alone — without clobbering the other's numbers.
+/// An unreadable or non-object existing file is replaced, not appended.
+pub fn merge_overlap_json(updates: BTreeMap<String, Json>) -> std::io::Result<PathBuf> {
+    let dir = figures_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_overlap.json");
+    let mut obj = match std::fs::read_to_string(&path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        },
+        Err(_) => BTreeMap::new(),
+    };
+    obj.extend(updates);
+    std::fs::write(&path, format!("{}\n", Json::Obj(obj)))?;
+    Ok(path)
+}
+
 /// ASCII horizontal bar chart — the figure renderer (one bar per row).
 pub fn bar_chart(title: &str, rows: &[(String, f64)], unit: &str, width: usize) -> String {
     let max = rows.iter().map(|(_, v)| *v).fold(0.0, f64::max).max(1e-12);
@@ -168,6 +192,20 @@ mod tests {
         let p = t.write_csv("unit_test_table").unwrap();
         let text = std::fs::read_to_string(p).unwrap();
         assert_eq!(text, "a\n1\n");
+
+        // merge_overlap_json preserves foreign keys across two writers
+        // (same env-var window as the csv check to keep RTP_FIGURES races
+        // between parallel tests out of the picture)
+        let mut first = BTreeMap::new();
+        first.insert("alpha".to_string(), Json::Num(1.0));
+        let path = merge_overlap_json(first).unwrap();
+        let mut second = BTreeMap::new();
+        second.insert("beta".to_string(), Json::Num(2.0));
+        merge_overlap_json(second).unwrap();
+        let merged = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(merged.get("alpha").as_f64(), Some(1.0));
+        assert_eq!(merged.get("beta").as_f64(), Some(2.0));
+        std::fs::remove_file(&path).unwrap();
         std::env::remove_var("RTP_FIGURES");
     }
 }

@@ -12,7 +12,7 @@
 
 pub mod trace;
 
-use crate::comm::{RingFabric, RingPort};
+use crate::comm::{RingFabric, RingPort, TransportKind};
 use crate::memory::tracker::MemTracker;
 
 pub use trace::{TraceEvent, TraceLog};
@@ -41,8 +41,18 @@ impl Cluster {
     /// `capacity` = per-device memory cap in bytes (None = unlimited,
     /// analysis mode).
     pub fn new(n: usize, capacity: Option<u64>) -> Self {
+        Self::new_with_transport(n, capacity, TransportKind::from_env())
+    }
+
+    /// [`Cluster::new`] over an explicit data-plane transport backend
+    /// instead of the `RTP_TRANSPORT` env default.
+    pub fn new_with_transport(
+        n: usize,
+        capacity: Option<u64>,
+        transport: TransportKind,
+    ) -> Self {
         assert!(n >= 1, "cluster needs at least one worker");
-        let fabric = RingFabric::new(n);
+        let fabric = RingFabric::with_transport(n, transport);
         Cluster {
             workers: (0..n)
                 .map(|rank| Worker {

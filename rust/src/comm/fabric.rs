@@ -90,12 +90,19 @@
 //! on a dead participant.
 
 use std::any::Any;
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::fmt;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
+use super::transport::{
+    f32s_as_bytes, f32s_from_bytes, shm_base_dir, shm_ring_bytes_from_env, shm_ring_path,
+    uds_sock_path, unique_endpoint_dir, ShmRing, Transport, TransportKind, UdsLink,
+};
+use super::wire;
 use crate::runtime::fault::{FailureKind, RankDeath, RankFailure};
 
 /// Max recycled buffers kept per lane pool (a rotation/collective keeps
@@ -162,6 +169,14 @@ struct Sched {
 enum Msg {
     Any(Box<dyn Any + Send>),
     F32(Vec<f32>),
+    /// The payload bytes crossed the link's byte [`Transport`]; this
+    /// marker holds the lane's place in the FIFO (cross-type ordering,
+    /// blocking, watchdog and poison semantics all unchanged) and carries
+    /// the element count so the receiver can size its pooled buffer. Only
+    /// `Vec<f32>` traffic rides the byte transport in process — exactly
+    /// the traffic whose cost a transport ablation needs to be honest
+    /// about; `Msg::Any` control payloads stay in-FIFO.
+    Via(usize),
 }
 
 struct LaneBox {
@@ -285,6 +300,27 @@ struct FabricShared {
     /// `lanes[(ch * n + dst) * n + src]` — one lane per directed link per
     /// channel; only the neighbor links are ever used.
     lanes: Vec<Lane>,
+    /// Which byte transport backs the links (lane FIFOs only when
+    /// `Inproc`).
+    transport_kind: TransportKind,
+    /// Byte transports, indexed exactly like `lanes`. `Some` only for
+    /// neighbor links when `transport_kind != Inproc`. An in-process
+    /// fabric stores the full link object at `(ch, dst, src)` (both
+    /// sides use it); a remote fabric holds only its own rank's halves —
+    /// tx at `(ch, peer, local)`, rx at `(ch, local, peer)`.
+    transports: Vec<Option<Arc<dyn Transport>>>,
+    /// Directory holding this fabric's shm ring files, when THIS fabric
+    /// owns it (in-process shm; removed on drop). A remote fabric's rings
+    /// live in the launcher-owned endpoint dir instead.
+    shm_dir: Option<PathBuf>,
+    /// `Some(local_rank)` when this fabric is ONE rank's endpoint of a
+    /// cross-process ring (`Launcher::Process` worker): all traffic goes
+    /// through the byte transports, lanes are unused.
+    remote_rank: Option<usize>,
+    /// The launcher's rendezvous dir (remote fabrics): polled for
+    /// `dead-<rank>` marker files so a SIGKILLed peer surfaces promptly
+    /// even on transports with no EOF (shm).
+    endpoint_dir: Option<PathBuf>,
     ctl: Mutex<Ctl>,
     /// Lockstep ranks park here waiting for the turn.
     ctl_cv: Condvar,
@@ -310,6 +346,15 @@ struct FabricShared {
 impl FabricShared {
     fn lane(&self, ch: usize, dst: usize, src: usize) -> &Lane {
         &self.lanes[(ch * self.n + dst) * self.n + src]
+    }
+
+    /// The byte transport of directed link `src -> dst` on `ch`, if one
+    /// backs it (None = in-FIFO lane traffic).
+    fn transport(&self, ch: usize, dst: usize, src: usize) -> Option<&Arc<dyn Transport>> {
+        if self.transports.is_empty() {
+            return None;
+        }
+        self.transports[(ch * self.n + dst) * self.n + src].as_ref()
     }
 
     fn lock_ctl(&self) -> MutexGuard<'_, Ctl> {
@@ -385,6 +430,18 @@ impl FabricShared {
     }
 }
 
+impl Drop for FabricShared {
+    fn drop(&mut self) {
+        // an in-process shm fabric owns its ring files: drop the
+        // transports (closing their file handles) and remove the dir so
+        // repeated fabric construction cannot leak /dev/shm segments
+        if let Some(dir) = self.shm_dir.take() {
+            self.transports.clear();
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}
+
 /// The shared ring interconnect of one worker set. Create one per
 /// [`crate::cluster::Cluster`]; hand each rank its [`RingPort`].
 #[derive(Clone)]
@@ -410,13 +467,73 @@ fn recv_retries_from_env() -> u32 {
         .unwrap_or(0)
 }
 
+/// The unique neighbor links of an `n`-ring: every directed pair
+/// `(src, dst)` with `dst` adjacent to `src` (each appears once; for
+/// n == 2 the cw and ccw edges coincide).
+fn neighbor_links(n: usize) -> Vec<(usize, usize)> {
+    let mut links = Vec::new();
+    for src in 0..n {
+        for dst in [(src + 1) % n, (src + n - 1) % n] {
+            if dst != src && !links.contains(&(src, dst)) {
+                links.push((src, dst));
+            }
+        }
+    }
+    links
+}
+
 impl RingFabric {
+    /// A fabric on the transport selected by `RTP_TRANSPORT` (in-process
+    /// lanes by default) — so the whole suite exercises the shm/uds
+    /// backends when the env knob is set.
     pub fn new(n: usize) -> RingFabric {
+        RingFabric::with_transport(n, TransportKind::from_env())
+    }
+
+    /// A fabric whose `Vec<f32>` data plane rides `kind`. All ranks stay
+    /// in this process (lanes still carry ordering and control payloads);
+    /// `Inproc` is the historical pure-lane fabric.
+    pub fn with_transport(n: usize, kind: TransportKind) -> RingFabric {
         assert!(n >= 1, "ring fabric needs at least one rank");
+        let mut transports: Vec<Option<Arc<dyn Transport>>> = Vec::new();
+        let mut shm_dir = None;
+        if kind != TransportKind::Inproc && n > 1 {
+            transports = (0..CHANNELS * n * n).map(|_| None).collect();
+            let dir = match kind {
+                TransportKind::Shm => {
+                    let d = unique_endpoint_dir(&shm_base_dir(), "fab");
+                    std::fs::create_dir_all(&d).expect("create shm fabric dir");
+                    shm_dir = Some(d.clone());
+                    Some(d)
+                }
+                _ => None,
+            };
+            let cap = shm_ring_bytes_from_env();
+            for ch in 0..CHANNELS {
+                for &(src, dst) in &neighbor_links(n) {
+                    let t: Arc<dyn Transport> = match kind {
+                        TransportKind::Shm => {
+                            let p = shm_ring_path(dir.as_ref().unwrap(), ch, src, dst);
+                            Arc::new(ShmRing::open(&p, cap).expect("open shm ring"))
+                        }
+                        TransportKind::Uds => {
+                            Arc::new(UdsLink::pair().expect("uds socketpair"))
+                        }
+                        TransportKind::Inproc => unreachable!(),
+                    };
+                    transports[(ch * n + dst) * n + src] = Some(t);
+                }
+            }
+        }
         RingFabric {
             shared: Arc::new(FabricShared {
                 n,
                 lanes: (0..CHANNELS * n * n).map(|_| Lane::new()).collect(),
+                transport_kind: kind,
+                transports,
+                shm_dir,
+                remote_rank: None,
+                endpoint_dir: None,
                 ctl: Mutex::new(Ctl {
                     sched: None,
                     poison_msg: String::new(),
@@ -434,6 +551,135 @@ impl RingFabric {
                 counters: CounterCells::default(),
             }),
         }
+    }
+
+    /// Rank `local_rank`'s endpoint of a CROSS-PROCESS ring: this process
+    /// holds only its own rank; all traffic (data AND control payloads,
+    /// wire-encoded) crosses `kind` through per-link endpoints named
+    /// under `dir` (the `Launcher::Process` rendezvous dir). The uds
+    /// backend rendezvouses here: bind every incoming link's listener
+    /// first, then connect every outgoing link (retrying until the peer
+    /// has bound), then accept.
+    pub fn new_remote(
+        n: usize,
+        local_rank: usize,
+        kind: TransportKind,
+        dir: &Path,
+    ) -> std::io::Result<RingFabric> {
+        assert!(n >= 2, "a cross-process ring needs at least two ranks");
+        assert!(local_rank < n, "rank {local_rank} out of range for {n}-rank fabric");
+        assert!(
+            kind != TransportKind::Inproc,
+            "Launcher::Process needs a byte transport (shm or uds), not inproc"
+        );
+        let mut transports: Vec<Option<Arc<dyn Transport>>> =
+            (0..CHANNELS * n * n).map(|_| None).collect();
+        let next = (local_rank + 1) % n;
+        let prev = (local_rank + n - 1) % n;
+        let peers: Vec<usize> =
+            if next == prev { vec![next] } else { vec![next, prev] };
+        match kind {
+            TransportKind::Shm => {
+                let cap = shm_ring_bytes_from_env();
+                for ch in 0..CHANNELS {
+                    for &peer in &peers {
+                        let tx = ShmRing::open(&shm_ring_path(dir, ch, local_rank, peer), cap)?;
+                        transports[(ch * n + peer) * n + local_rank] = Some(Arc::new(tx));
+                        let rx = ShmRing::open(&shm_ring_path(dir, ch, peer, local_rank), cap)?;
+                        transports[(ch * n + local_rank) * n + peer] = Some(Arc::new(rx));
+                    }
+                }
+            }
+            TransportKind::Uds => {
+                use std::os::unix::net::{UnixListener, UnixStream};
+                let deadline = Instant::now() + Duration::from_secs(10);
+                // phase 1: bind all incoming-link listeners
+                let mut listeners = Vec::new();
+                for ch in 0..CHANNELS {
+                    for &peer in &peers {
+                        let p = uds_sock_path(dir, ch, peer, local_rank);
+                        listeners.push((ch, peer, UnixListener::bind(&p)?));
+                    }
+                }
+                // phase 2: connect all outgoing links (peers bind before
+                // they connect, so retry-until-deadline converges)
+                for ch in 0..CHANNELS {
+                    for &peer in &peers {
+                        let p = uds_sock_path(dir, ch, local_rank, peer);
+                        let s = loop {
+                            match UnixStream::connect(&p) {
+                                Ok(s) => break s,
+                                Err(e) => {
+                                    if Instant::now() >= deadline {
+                                        return Err(e);
+                                    }
+                                    std::thread::sleep(Duration::from_millis(5));
+                                }
+                            }
+                        };
+                        transports[(ch * n + peer) * n + local_rank] =
+                            Some(Arc::new(UdsLink::from_tx(s)?));
+                    }
+                }
+                // phase 3: accept the incoming connections (already in
+                // each listener's backlog once the peers pass phase 2)
+                for (ch, peer, l) in listeners {
+                    l.set_nonblocking(true)?;
+                    let s = loop {
+                        match l.accept() {
+                            Ok((s, _)) => break s,
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                if Instant::now() >= deadline {
+                                    return Err(e);
+                                }
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    };
+                    transports[(ch * n + local_rank) * n + peer] =
+                        Some(Arc::new(UdsLink::from_rx(s)?));
+                }
+            }
+            TransportKind::Inproc => unreachable!(),
+        }
+        Ok(RingFabric {
+            shared: Arc::new(FabricShared {
+                n,
+                lanes: (0..CHANNELS * n * n).map(|_| Lane::new()).collect(),
+                transport_kind: kind,
+                transports,
+                shm_dir: None,
+                remote_rank: Some(local_rank),
+                endpoint_dir: Some(dir.to_path_buf()),
+                ctl: Mutex::new(Ctl {
+                    sched: None,
+                    poison_msg: String::new(),
+                    failure: None,
+                }),
+                ctl_cv: Condvar::new(),
+                mode: AtomicU8::new(MODE_NONE),
+                poisoned: AtomicBool::new(false),
+                sent: AtomicU64::new(0),
+                delivered: AtomicU64::new(0),
+                recv_timeout_ms: AtomicU64::new(20_000),
+                timeout_override_ms: AtomicU64::new(0),
+                recv_retries: AtomicU64::new(0),
+                retries_override: AtomicU64::new(0),
+                counters: CounterCells::default(),
+            }),
+        })
+    }
+
+    /// The transport backend backing this fabric's links.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.shared.transport_kind
+    }
+
+    /// Directory holding this fabric's shm ring files, when this fabric
+    /// owns one (test hook: cleanup-on-drop assertions).
+    pub fn shm_dir(&self) -> Option<PathBuf> {
+        self.shared.shm_dir.clone()
     }
 
     pub fn n(&self) -> usize {
@@ -696,6 +942,12 @@ impl RingFabric {
                     }
                     lane.pending.store(0, Ordering::SeqCst);
                 }
+                // stale frames on the byte transports would desync the
+                // marker/frame alignment of the next round — drop them
+                // with the lane messages
+                for t in sh.transports.iter().flatten() {
+                    t.reset();
+                }
                 sh.delivered
                     .store(sh.sent.load(Ordering::SeqCst), Ordering::SeqCst);
             }
@@ -746,6 +998,79 @@ impl RingFabric {
         }
         sh.counters.wakeups.fetch_add(1, Ordering::Relaxed);
         sh.ctl_cv.notify_all();
+    }
+
+    /// Run THIS process's one rank body of a cross-process round — the
+    /// remote counterpart of [`RingFabric::try_round`]. Arms the
+    /// threaded-mode watchdog from the same overrides/env knobs, catches
+    /// the body's panic, maps an injected [`RankDeath`] to its typed
+    /// failure exactly as the in-process launcher does, and tears the
+    /// round down with the transports drained so the fabric is reusable
+    /// after a poisoned round.
+    pub fn run_remote_round<T>(&self, task: impl FnOnce() -> T) -> std::thread::Result<T> {
+        let sh = &self.shared;
+        assert!(
+            sh.remote_rank.is_some(),
+            "run_remote_round needs a remote (per-process) fabric"
+        );
+        {
+            let mut ctl = sh.lock_ctl();
+            assert!(
+                sh.mode.load(Ordering::SeqCst) == MODE_NONE,
+                "nested fabric rounds are not allowed"
+            );
+            sh.poisoned.store(false, Ordering::SeqCst);
+            ctl.poison_msg.clear();
+            ctl.failure = None;
+            let ov = sh.timeout_override_ms.load(Ordering::SeqCst);
+            let t = if ov > 0 {
+                Duration::from_millis(ov)
+            } else {
+                recv_timeout_from_env()
+            };
+            sh.recv_timeout_ms
+                .store((t.as_millis() as u64).max(1), Ordering::SeqCst);
+            let rov = sh.retries_override.load(Ordering::SeqCst);
+            let retries = if rov > 0 {
+                rov - 1
+            } else {
+                recv_retries_from_env() as u64
+            };
+            sh.recv_retries.store(retries, Ordering::SeqCst);
+            sh.mode.store(MODE_THREADED, Ordering::SeqCst);
+        }
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+        if let Err(p) = &out {
+            if let Some(d) = p.downcast_ref::<RankDeath>() {
+                let f = RankFailure {
+                    failed_rank: d.rank,
+                    kind: FailureKind::Injected { phase: d.phase },
+                    detail: format!(
+                        "injected kill of rank {} at step {} ({} fault point)",
+                        d.rank, d.step, d.phase
+                    ),
+                };
+                let msg = f.to_string();
+                sh.record_failure(f);
+                sh.poison(&msg);
+            } else if !sh.poisoned.load(Ordering::SeqCst) {
+                sh.poison("this rank's body panicked");
+            }
+        }
+        {
+            let mut ctl = sh.lock_ctl();
+            sh.mode.store(MODE_NONE, Ordering::SeqCst);
+            if sh.poisoned.load(Ordering::SeqCst) {
+                for t in sh.transports.iter().flatten() {
+                    t.reset();
+                }
+                sh.delivered
+                    .store(sh.sent.load(Ordering::SeqCst), Ordering::SeqCst);
+            }
+            sh.poisoned.store(false, Ordering::SeqCst);
+            ctl.poison_msg.clear();
+        }
+        out
     }
 }
 
@@ -1019,8 +1344,15 @@ impl RingPort {
 
     /// Enqueue `msg` on the directed link to neighbor `peer` (type-erased
     /// path: one boxing allocation per message; bulk `Vec<f32>` traffic
-    /// should use [`RingPort::send_vec`]).
+    /// should use [`RingPort::send_vec`]). On a cross-process fabric the
+    /// payload is wire-encoded ([`crate::comm::wire`]) and crosses the
+    /// byte transport; a payload type outside the wire inventory panics
+    /// at the send site.
     pub fn send<T: Any + Send>(&self, peer: usize, msg: T) {
+        if self.shared.remote_rank.is_some() {
+            self.remote_send_any(peer, &msg);
+            return;
+        }
         self.shared.counters.msg_allocs.fetch_add(1, Ordering::Relaxed);
         self.push_msg(peer, Msg::Any(Box::new(msg)));
     }
@@ -1040,6 +1372,9 @@ impl RingPort {
                 std::any::type_name::<T>()
             )
         }
+        if self.shared.remote_rank.is_some() {
+            return self.remote_recv_any::<T>(peer);
+        }
         match self.recv_msg(peer) {
             Msg::Any(b) => *b
                 .downcast::<T>()
@@ -1047,6 +1382,14 @@ impl RingPort {
             Msg::F32(v) => {
                 // cross-typed pickup of a pooled message: re-box (one
                 // allocation) — off the pooled hot path by construction
+                self.shared.counters.msg_allocs.fetch_add(1, Ordering::Relaxed);
+                let b: Box<dyn Any> = Box::new(v);
+                *b.downcast::<T>()
+                    .unwrap_or_else(|_| mismatch::<T>(self.rank, peer))
+            }
+            Msg::Via(len) => {
+                // cross-typed pickup of a transport frame: decode + re-box
+                let v = self.take_frame(peer, len);
                 self.shared.counters.msg_allocs.fetch_add(1, Ordering::Relaxed);
                 let b: Box<dyn Any> = Box::new(v);
                 *b.downcast::<T>()
@@ -1087,8 +1430,34 @@ impl RingPort {
     }
 
     /// Enqueue a bare `Vec<f32>` payload on the link to `peer` — the
-    /// pooled typed hot path: no boxing, no allocation.
+    /// pooled typed hot path: no boxing, no allocation. When a byte
+    /// transport backs the link, the payload BYTES cross it (written in
+    /// place for shm) and a [`Msg::Via`] marker holds the lane's FIFO
+    /// slot; the `Vec` is recycled straight back into the pool it was
+    /// leased from, so the path stays zero-allocation in steady state.
     pub fn send_vec(&self, peer: usize, v: Vec<f32>) {
+        if self.shared.remote_rank.is_some() {
+            self.remote_send_f32(peer, v);
+            return;
+        }
+        let sh = &self.shared;
+        if let Some(t) = sh.transport(self.ch, peer, self.rank) {
+            self.assert_neighbor(peer);
+            self.check_poison();
+            t.send_frame_parts(f32s_as_bytes(&v), &[]);
+            let len = v.len();
+            {
+                let lane = sh.lane(self.ch, peer, self.rank);
+                let mut b = lane.lock(&sh.counters);
+                if b.pool.len() < POOL_CAP {
+                    let mut v = v;
+                    v.clear();
+                    b.pool.push(v);
+                }
+            }
+            self.push_msg(peer, Msg::Via(len));
+            return;
+        }
         self.push_msg(peer, Msg::F32(v));
     }
 
@@ -1097,14 +1466,76 @@ impl RingPort {
     /// the generic path. Once consumed, hand the buffer back with
     /// [`RingPort::release`] to keep the link pool primed.
     pub fn recv_vec(&self, peer: usize) -> Vec<f32> {
+        if self.shared.remote_rank.is_some() {
+            return self.remote_recv_vec(peer);
+        }
         match self.recv_msg(peer) {
             Msg::F32(v) => v,
+            Msg::Via(len) => self.take_frame(peer, len),
             Msg::Any(b) => *b.downcast::<Vec<f32>>().unwrap_or_else(|_| {
                 panic!(
                     "rank {} recv from {peer}: payload type mismatch (expected Vec<f32>)",
                     self.rank
                 )
             }),
+        }
+    }
+
+    /// Pop the byte-transport frame matching a [`Msg::Via`] marker into a
+    /// buffer leased from the arrival lane's pool. The marker was
+    /// enqueued AFTER the frame was written, so the frame is already in
+    /// the channel or in the sender's spill (which the receiver pumps) —
+    /// the wait below is bounded bookkeeping, not a blocking recv.
+    fn take_frame(&self, peer: usize, len: usize) -> Vec<f32> {
+        let sh = &self.shared;
+        let t = sh
+            .transport(self.ch, self.rank, peer)
+            .expect("Msg::Via marker without a transport on its link");
+        let mut v = self.lease_incoming(peer, len);
+        let start = Instant::now();
+        while !t.try_recv_f32_frame(&mut v) {
+            t.pump();
+            if start.elapsed() > Duration::from_secs(10) {
+                panic!(
+                    "rank {} recv from {peer}: lane marker arrived but its {} \
+                     transport frame never did (transport protocol bug)",
+                    self.rank, sh.transport_kind
+                );
+            }
+            std::hint::spin_loop();
+        }
+        assert_eq!(
+            v.len(),
+            len,
+            "rank {} recv from {peer}: transport frame length disagrees with its \
+             lane marker",
+            self.rank
+        );
+        v
+    }
+
+    /// Lease a receive buffer from the ARRIVAL lane's pool (`peer ->
+    /// self`) — the pool [`RingPort::release`] refills, so transport
+    /// receives recycle buffers exactly like the in-FIFO pooled path.
+    fn lease_incoming(&self, peer: usize, len: usize) -> Vec<f32> {
+        let sh = &self.shared;
+        let lane = sh.lane(self.ch, self.rank, peer);
+        let got = { lane.lock(&sh.counters).pool.pop() };
+        match got {
+            Some(mut v) => {
+                v.clear();
+                if v.capacity() < len {
+                    sh.counters.msg_allocs.fetch_add(1, Ordering::Relaxed);
+                    v.reserve(len);
+                } else {
+                    sh.counters.pool_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                v
+            }
+            None => {
+                sh.counters.msg_allocs.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(len)
+            }
         }
     }
 
@@ -1218,12 +1649,13 @@ impl RingPort {
             }
             let msg = format!(
                 "rank {} recv from {peer}: no message after {timeout:?} on link \
-                 r{peer}->r{}{} ({} ring direction) — stalled link \
+                 r{peer}->r{}{} ({} ring direction) via {} transport — stalled link \
                  (threaded round watchdog)",
                 self.rank,
                 self.rank,
                 if self.ch >= CH_BG { " [bg lane]" } else { "" },
-                self.link_direction(peer)
+                self.link_direction(peer),
+                sh.transport_kind
             );
             sh.record_failure(RankFailure {
                 failed_rank: peer,
@@ -1236,14 +1668,223 @@ impl RingPort {
     }
 
     /// Messages waiting in this rank's mailbox from neighbor `peer` (this
-    /// port's lane namespace only).
+    /// port's lane namespace only). On a cross-process fabric there is no
+    /// lane: readiness is whether the link's transport has a complete
+    /// frame — which keeps the hop scheduler's readiness poll working
+    /// identically under `Launcher::Process`.
     pub fn pending_from(&self, peer: usize) -> usize {
         self.assert_neighbor(peer);
+        if self.shared.remote_rank.is_some() {
+            return self
+                .shared
+                .transport(self.ch, self.rank, peer)
+                .map(|t| t.frame_ready() as usize)
+                .unwrap_or(0);
+        }
         self.shared
             .lane(self.ch, self.rank, peer)
             .pending
             .load(Ordering::SeqCst)
     }
+
+    // --- cross-process (Launcher::Process) data path ----------------------
+
+    fn remote_tx(&self, peer: usize) -> &Arc<dyn Transport> {
+        self.shared
+            .transport(self.ch, peer, self.rank)
+            .expect("remote fabric missing its tx transport")
+    }
+
+    fn remote_rx(&self, peer: usize) -> &Arc<dyn Transport> {
+        self.shared
+            .transport(self.ch, self.rank, peer)
+            .expect("remote fabric missing its rx transport")
+    }
+
+    /// Has the launcher marked `peer`'s process dead (its `dead-<rank>`
+    /// marker file exists in the rendezvous dir)? The parent writes these
+    /// the moment `waitpid` reports a child gone, so shm links — which
+    /// have no EOF — still surface a SIGKILLed peer promptly.
+    fn peer_dead_marker(&self, peer: usize) -> bool {
+        match &self.shared.endpoint_dir {
+            Some(d) => d.join(format!("dead-{peer}")).exists(),
+            None => false,
+        }
+    }
+
+    fn remote_send_any(&self, peer: usize, msg: &(dyn Any + Send)) {
+        self.assert_neighbor(peer);
+        self.check_poison();
+        let sh = &self.shared;
+        sh.counters.msg_allocs.fetch_add(1, Ordering::Relaxed);
+        WIRE_BUF.with(|b| {
+            let mut buf = b.borrow_mut();
+            buf.clear();
+            buf.push(wire::FORM_ANY);
+            if let Err(ty) = wire::encode_any(msg, &mut buf) {
+                panic!(
+                    "rank {}: payload type {ty} cannot cross a process boundary (no \
+                     wire codec) — Launcher::Process supports the training data \
+                     path only",
+                    self.rank
+                );
+            }
+            self.remote_tx(peer).send_frame_parts(&buf, &[]);
+        });
+        sh.sent.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn remote_send_f32(&self, peer: usize, v: Vec<f32>) {
+        self.assert_neighbor(peer);
+        self.check_poison();
+        let sh = &self.shared;
+        self.remote_tx(peer)
+            .send_frame_parts(&[wire::FORM_F32], f32s_as_bytes(&v));
+        sh.sent.fetch_add(1, Ordering::SeqCst);
+        // the bytes crossed the boundary; the Vec recycles locally into
+        // the pool lease() serves this link from
+        let lane = sh.lane(self.ch, peer, self.rank);
+        let mut b = lane.lock(&sh.counters);
+        if b.pool.len() < POOL_CAP {
+            let mut v = v;
+            v.clear();
+            b.pool.push(v);
+        }
+    }
+
+    /// Blocking cross-process frame receive, with the SAME watchdog
+    /// semantics (and overrides) as the in-process threaded wait, plus
+    /// peer-death detection: transport EOF or the launcher's dead-rank
+    /// marker surfaces as a typed [`FailureKind::PeerExit`].
+    fn remote_recv_frame(&self, peer: usize, out: &mut Vec<u8>) {
+        self.assert_neighbor(peer);
+        let sh = &self.shared;
+        let t = self.remote_rx(peer);
+        let timeout =
+            Duration::from_millis(sh.recv_timeout_ms.load(Ordering::SeqCst).max(1));
+        let budget = sh.recv_retries.load(Ordering::SeqCst) as u32;
+        let mut retries_used = 0u32;
+        let mut deadline = Instant::now() + timeout;
+        let mut polls: u32 = 0;
+        loop {
+            self.check_poison();
+            if t.try_recv_frame(out) {
+                sh.delivered.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
+            // our own spilled sends may be exactly what the peer is
+            // blocked on — flush them while we wait
+            for tx in sh.transports.iter().flatten() {
+                tx.pump();
+            }
+            if t.peer_gone() || (polls % 16 == 0 && self.peer_dead_marker(peer)) {
+                let f = RankFailure {
+                    failed_rank: peer,
+                    kind: FailureKind::PeerExit,
+                    detail: format!(
+                        "rank {} recv from {peer}: peer process exited mid-round on \
+                         link r{peer}->r{} via {} transport",
+                        self.rank, self.rank, sh.transport_kind
+                    ),
+                };
+                let msg = f.to_string();
+                sh.record_failure(f);
+                sh.poison(&msg);
+                panic!("{msg}");
+            }
+            polls = polls.wrapping_add(1);
+            if Instant::now() >= deadline {
+                if retries_used < budget {
+                    retries_used += 1;
+                    deadline = Instant::now() + timeout;
+                    continue;
+                }
+                let msg = format!(
+                    "rank {} recv from {peer}: no message after {timeout:?} on link \
+                     r{peer}->r{}{} ({} ring direction) via {} transport — stalled \
+                     link (threaded round watchdog)",
+                    self.rank,
+                    self.rank,
+                    if self.ch >= CH_BG { " [bg lane]" } else { "" },
+                    self.link_direction(peer),
+                    sh.transport_kind
+                );
+                sh.record_failure(RankFailure {
+                    failed_rank: peer,
+                    kind: FailureKind::RecvTimeout { retries: retries_used },
+                    detail: msg.clone(),
+                });
+                sh.poison(&msg);
+                panic!("{msg}");
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    fn remote_recv_any<T: Any>(&self, peer: usize) -> T {
+        let sh = &self.shared;
+        WIRE_BUF.with(|b| {
+            let mut buf = b.borrow_mut();
+            self.remote_recv_frame(peer, &mut buf);
+            assert!(!buf.is_empty(), "empty transport frame");
+            let payload = &buf[1..];
+            let boxed: Box<dyn Any> = match buf[0] {
+                wire::FORM_ANY => {
+                    sh.counters.msg_allocs.fetch_add(1, Ordering::Relaxed);
+                    wire::decode_any(payload)
+                }
+                wire::FORM_F32 => {
+                    // cross-typed pickup of a pooled frame
+                    sh.counters.msg_allocs.fetch_add(1, Ordering::Relaxed);
+                    let mut v = Vec::new();
+                    f32s_from_bytes(payload, &mut v);
+                    Box::new(v)
+                }
+                f => panic!("rank {}: unknown frame form byte {f}", self.rank),
+            };
+            *boxed.downcast::<T>().unwrap_or_else(|_| {
+                panic!(
+                    "rank {} recv from {peer}: payload type mismatch (expected {})",
+                    self.rank,
+                    std::any::type_name::<T>()
+                )
+            })
+        })
+    }
+
+    fn remote_recv_vec(&self, peer: usize) -> Vec<f32> {
+        let sh = &self.shared;
+        WIRE_BUF.with(|b| {
+            let mut buf = b.borrow_mut();
+            self.remote_recv_frame(peer, &mut buf);
+            assert!(!buf.is_empty(), "empty transport frame");
+            match buf[0] {
+                wire::FORM_F32 => {
+                    let mut v = self.lease_incoming(peer, (buf.len() - 1) / 4);
+                    f32s_from_bytes(&buf[1..], &mut v);
+                    v
+                }
+                wire::FORM_ANY => {
+                    sh.counters.msg_allocs.fetch_add(1, Ordering::Relaxed);
+                    let boxed = wire::decode_any(&buf[1..]);
+                    *boxed.downcast::<Vec<f32>>().unwrap_or_else(|_| {
+                        panic!(
+                            "rank {} recv from {peer}: payload type mismatch \
+                             (expected Vec<f32>)",
+                            self.rank
+                        )
+                    })
+                }
+                f => panic!("rank {}: unknown frame form byte {f}", self.rank),
+            }
+        })
+    }
+}
+
+thread_local! {
+    /// Reused wire-encode/-decode scratch of this thread's remote sends
+    /// and receives (zero steady-state allocations once warmed).
+    static WIRE_BUF: RefCell<Vec<u8>> = RefCell::new(Vec::new());
 }
 
 impl fmt::Debug for RingPort {

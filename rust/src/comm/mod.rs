@@ -64,6 +64,8 @@ pub mod fabric;
 pub mod reference;
 pub mod rotation;
 pub mod stream;
+pub mod transport;
+pub(crate) mod wire;
 
 use std::any::Any;
 use std::collections::VecDeque;
@@ -72,6 +74,7 @@ pub use coll::{AllGatherStep, AllReduceStep, CollKind, Collective, ReduceScatter
 pub use cost::{CommPrim, LinkModel};
 pub use fabric::{FabricCounters, LaunchPolicy, RingFabric, RingPort};
 pub use rotation::{shard_at, RotationDir};
+pub use transport::{Transport, TransportKind};
 pub use stream::{CollHandle, CollectiveStream, CommStream, InFlight, SchedPolicy};
 
 use coll::chunk_bounds;

@@ -1,0 +1,934 @@
+//! Pluggable byte transports for the ring fabric's directed links.
+//!
+//! Every directed link × lane namespace of the [`crate::comm::RingFabric`]
+//! can route its payload bytes through a [`Transport`] backend:
+//!
+//! - [`TransportKind::Inproc`] — no byte transport at all: payloads stay
+//!   in the in-process lane FIFO (`Vec<f32>` moves under a mutex). The
+//!   historical behavior and the bit-identity oracle. Fast, but every
+//!   published number measured over it is an in-process artifact: no
+//!   serialization, no copy across an OS boundary.
+//! - [`TransportKind::Shm`] — a shared-memory SPSC byte ring per directed
+//!   link ([`ShmRing`]): a file on `/dev/shm` holding a sender-owned tail
+//!   cursor, a receiver-owned head cursor, and a power-of-two data region.
+//!   A hop writes the payload in place (one copy into the page cache) and
+//!   performs ZERO steady-state heap allocations — the perf hot path, and
+//!   the backend `Launcher::Process` workers in different address spaces
+//!   meet on.
+//! - [`TransportKind::Uds`] — a Unix-domain-socket stream per directed
+//!   link ([`UdsLink`]): the portable, deliberately boring reference. Its
+//!   length-prefixed framing is exactly what a future TCP backend reuses.
+//!
+//! ## Framing
+//!
+//! A frame is `[len: u32 le][len bytes]`. What the bytes mean is the
+//! fabric's business: the in-process transport bypass carries raw
+//! little-endian `f32` payloads (a lane marker preserves ordering), the
+//! cross-process mode carries [`crate::comm::wire`]-encoded messages.
+//!
+//! ## The never-blocking-send contract
+//!
+//! Fabric lanes are unbounded: a sender NEVER blocks (the schedule, not
+//! backpressure, bounds in-flight data — Lockstep determinism depends on
+//! it). Byte transports are bounded, so each backend keeps a sender-side
+//! spill: frames that do not fit right now queue in memory and are flushed
+//! by [`Transport::pump`] — called by the sender on its next operation and
+//! by any receiver polling the link (in process, the receiver can flush
+//! the sender's spill directly; across processes each side pumps its own).
+//! Frames larger than half the shm ring take the jumbo side-file path, so
+//! no payload can jam the ring permanently.
+
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::os::unix::fs::FileExt;
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Which byte transport backs the fabric's directed links.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process lane FIFOs only (no byte transport). The default.
+    Inproc,
+    /// Shared-memory SPSC ring per directed link (zero-alloc hot path).
+    Shm,
+    /// Unix-domain-socket stream per directed link (portable reference).
+    Uds,
+}
+
+impl TransportKind {
+    /// `RTP_TRANSPORT` env knob: `inproc` (default) | `shm` | `uds`.
+    pub fn from_env() -> TransportKind {
+        match std::env::var("RTP_TRANSPORT") {
+            Ok(v) => match v.trim() {
+                "" | "inproc" => TransportKind::Inproc,
+                "shm" => TransportKind::Shm,
+                "uds" | "unix" => TransportKind::Uds,
+                other => panic!(
+                    "RTP_TRANSPORT={other:?}: expected one of inproc|shm|uds"
+                ),
+            },
+            Err(_) => TransportKind::Inproc,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        Some(match s {
+            "inproc" => TransportKind::Inproc,
+            "shm" => TransportKind::Shm,
+            "uds" | "unix" => TransportKind::Uds,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Inproc => "inproc",
+            TransportKind::Shm => "shm",
+            TransportKind::Uds => "uds",
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One directed byte link. Implementations are internally synchronized
+/// (one sender thread and one receiver thread may use the same object).
+pub trait Transport: Send + Sync {
+    fn kind(&self) -> TransportKind;
+
+    /// Append one frame whose payload is `head` followed by `body`.
+    /// NEVER blocks: a frame that does not fit is spilled sender-side.
+    fn send_frame_parts(&self, head: &[u8], body: &[u8]);
+
+    /// Pop the oldest complete frame into `out` (cleared first). Returns
+    /// false when no complete frame is available right now.
+    fn try_recv_frame(&self, out: &mut Vec<u8>) -> bool;
+
+    /// Pop the oldest complete frame, interpreting its payload as raw
+    /// little-endian `f32`s (the in-process pooled hot path).
+    fn try_recv_f32_frame(&self, out: &mut Vec<f32>) -> bool;
+
+    /// Is a complete frame ready to pop without blocking? (Readiness
+    /// heuristic for the hop scheduler — never consumes.)
+    fn frame_ready(&self) -> bool;
+
+    /// Flush sender-side spilled bytes into the underlying channel as far
+    /// as it will accept them. Safe to call from either side in process;
+    /// across processes each side pumps its own endpoint.
+    fn pump(&self);
+
+    /// Discard everything in flight (poisoned-round teardown, after all
+    /// rank threads have quiesced) so the next round starts clean.
+    fn reset(&self);
+
+    /// Has the remote endpoint gone away (EOF on the stream)? Always
+    /// false for backends that cannot tell (shm).
+    fn peer_gone(&self) -> bool {
+        false
+    }
+}
+
+/// Append one frame composed only of `data` (no head part).
+pub fn send_frame(t: &dyn Transport, data: &[u8]) {
+    t.send_frame_parts(data, &[]);
+}
+
+/// View a `&[f32]` as its raw bytes. On the little-endian targets this
+/// crate runs on, this is exactly the le-bytes wire form, with no
+/// per-element conversion copy — the "payload written in place" half of
+/// the shm hot path.
+pub(crate) fn f32s_as_bytes(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no invalid bit patterns, alignment of u8 (1) is
+    // always satisfied, and the length in bytes cannot overflow isize for
+    // an existing allocation.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4) }
+}
+
+/// Decode raw little-endian `f32` bytes into `out` (cleared first).
+pub(crate) fn f32s_from_bytes(b: &[u8], out: &mut Vec<f32>) {
+    assert_eq!(b.len() % 4, 0, "f32 frame length {} not a multiple of 4", b.len());
+    out.clear();
+    out.extend(
+        b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Endpoint naming
+// ---------------------------------------------------------------------------
+
+/// Base directory for shm ring files: `/dev/shm` (tmpfs — page-cache
+/// backed, never touches disk) when present, the system temp dir
+/// otherwise.
+pub fn shm_base_dir() -> PathBuf {
+    let p = Path::new("/dev/shm");
+    if p.is_dir() {
+        p.to_path_buf()
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+/// A process-unique endpoint directory name (`rtp-<tag>-<pid>-<seq>`).
+pub fn unique_endpoint_dir(base: &Path, tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    base.join(format!("rtp-{tag}-{}-{seq}", std::process::id()))
+}
+
+/// Ring file for directed link `src -> dst` on lane namespace `ch`.
+pub fn shm_ring_path(dir: &Path, ch: usize, src: usize, dst: usize) -> PathBuf {
+    dir.join(format!("c{ch}-s{src}-d{dst}.ring"))
+}
+
+/// Socket path for directed link `src -> dst` on lane namespace `ch`.
+pub fn uds_sock_path(dir: &Path, ch: usize, src: usize, dst: usize) -> PathBuf {
+    dir.join(format!("c{ch}-s{src}-d{dst}.sock"))
+}
+
+/// `RTP_SHM_RING_BYTES` env knob (default 1 MiB, rounded up to a multiple
+/// of 8). Ring files are sparse: untouched capacity costs nothing.
+pub fn shm_ring_bytes_from_env() -> u64 {
+    let v = std::env::var("RTP_SHM_RING_BYTES")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(1 << 20);
+    (v.max(64) + 7) & !7
+}
+
+// ---------------------------------------------------------------------------
+// Shared-memory SPSC ring
+// ---------------------------------------------------------------------------
+
+/// File layout: `[tail: u64 le][head: u64 le][pad to 64][data: cap bytes]`.
+/// `tail` (bytes ever written) is sender-owned; `head` (bytes ever
+/// consumed) is receiver-owned — each side writes only its own cursor, so
+/// no cross-side lock exists. Records are 8-byte aligned; a record is
+/// `[len: u32][payload][pad]`, with two reserved `len` tags for ring-end
+/// skip markers and jumbo side-file frames.
+const TAIL_OFF: u64 = 0;
+const HEAD_OFF: u64 = 8;
+const DATA_OFF: u64 = 64;
+/// Record tag: rest of the ring (to the wrap point) is dead space.
+const TAG_SKIP: u32 = u32::MAX;
+/// Record tag: payload is in the side file `<ring>.jumbo-<seq>`.
+const TAG_JUMBO: u32 = u32::MAX - 1;
+/// Largest payload carried inline (larger frames take the side file).
+const MAX_INLINE: u32 = u32::MAX - 2;
+
+struct ShmTx {
+    /// Sender-owned tail cursor (mirrors the file's).
+    tail: u64,
+    /// Last head value read back from the receiver.
+    head_seen: u64,
+    /// Frames that did not fit, in order (flushed by `pump`).
+    spill: VecDeque<Vec<u8>>,
+    /// Monotonic id for jumbo side files.
+    jumbo_seq: u64,
+}
+
+struct ShmRx {
+    /// Receiver-owned head cursor (mirrors the file's).
+    head: u64,
+    /// Last tail value read from the sender.
+    tail_seen: u64,
+    /// Reused byte scratch for f32 frame decodes.
+    scratch: Vec<u8>,
+}
+
+/// The shm backend: one SPSC byte ring in a (tmpfs) file. Used from both
+/// ends of a link in process, or one end per process across a
+/// `Launcher::Process` boundary (same path, page-cache coherent).
+pub struct ShmRing {
+    file: File,
+    path: PathBuf,
+    cap: u64,
+    tx: Mutex<ShmTx>,
+    rx: Mutex<ShmRx>,
+}
+
+impl ShmRing {
+    /// Open (creating and sizing if needed) the ring file at `path` with
+    /// `cap` data bytes. Both endpoints of a link open the same path with
+    /// the same `cap`; creation is idempotent.
+    pub fn open(path: &Path, cap: u64) -> std::io::Result<ShmRing> {
+        assert!(cap >= 64 && cap % 8 == 0, "ring capacity must be >= 64 and 8-aligned");
+        let file = OpenOptions::new().read(true).write(true).create(true).open(path)?;
+        let need = DATA_OFF + cap;
+        if file.metadata()?.len() < need {
+            file.set_len(need)?;
+        }
+        Ok(ShmRing {
+            file,
+            path: path.to_path_buf(),
+            cap,
+            tx: Mutex::new(ShmTx {
+                tail: 0,
+                head_seen: 0,
+                spill: VecDeque::new(),
+                jumbo_seq: 0,
+            }),
+            rx: Mutex::new(ShmRx { head: 0, tail_seen: 0, scratch: Vec::new() }),
+        })
+    }
+
+    fn read_u32(&self, off: u64) -> u32 {
+        let mut b = [0u8; 4];
+        self.file.read_exact_at(&mut b, off).expect("shm ring read");
+        u32::from_le_bytes(b)
+    }
+
+    fn read_u64(&self, off: u64) -> u64 {
+        let mut b = [0u8; 8];
+        self.file.read_exact_at(&mut b, off).expect("shm ring read");
+        u64::from_le_bytes(b)
+    }
+
+    fn write_u32(&self, off: u64, v: u32) {
+        self.file.write_all_at(&v.to_le_bytes(), off).expect("shm ring write");
+    }
+
+    fn write_u64(&self, off: u64, v: u64) {
+        self.file.write_all_at(&v.to_le_bytes(), off).expect("shm ring write");
+    }
+
+    fn jumbo_path(&self, seq: u64) -> PathBuf {
+        let mut s = self.path.as_os_str().to_os_string();
+        s.push(format!(".jumbo-{seq}"));
+        PathBuf::from(s)
+    }
+
+    /// Try to place one frame; false = no space (caller spills).
+    fn tx_try_write(&self, tx: &mut ShmTx, head: &[u8], body: &[u8]) -> bool {
+        let len = (head.len() + body.len()) as u64;
+        if len > (self.cap / 2).min(MAX_INLINE as u64) {
+            return self.tx_write_jumbo(tx, head, body);
+        }
+        let rec = (4 + len + 7) & !7;
+        loop {
+            let pos = tx.tail % self.cap;
+            let to_end = self.cap - pos;
+            // worst case we burn the run to the wrap point AND the record
+            let need = if to_end < rec { to_end + rec } else { rec };
+            if self.cap - (tx.tail - tx.head_seen) < need {
+                tx.head_seen = self.read_u64(HEAD_OFF);
+                if self.cap - (tx.tail - tx.head_seen) < need {
+                    return false;
+                }
+            }
+            if to_end < rec {
+                self.write_u32(DATA_OFF + pos, TAG_SKIP);
+                tx.tail += to_end;
+                continue;
+            }
+            self.write_u32(DATA_OFF + pos, len as u32);
+            let mut off = DATA_OFF + pos + 4;
+            if !head.is_empty() {
+                self.file.write_all_at(head, off).expect("shm ring write");
+                off += head.len() as u64;
+            }
+            if !body.is_empty() {
+                self.file.write_all_at(body, off).expect("shm ring write");
+            }
+            tx.tail += rec;
+            // publish AFTER the payload: a reader that sees the new tail
+            // sees the record bytes
+            self.write_u64(TAIL_OFF, tx.tail);
+            return true;
+        }
+    }
+
+    /// Oversized frame: payload goes to a side file, the ring carries a
+    /// fixed-size pointer record (so ordering is preserved and no frame
+    /// can exceed the ring).
+    fn tx_write_jumbo(&self, tx: &mut ShmTx, head: &[u8], body: &[u8]) -> bool {
+        let rec: u64 = 24; // [tag u32][seq u64][len u64][pad]
+        let pos = tx.tail % self.cap;
+        let to_end = self.cap - pos;
+        let need = if to_end < rec { to_end + rec } else { rec };
+        if self.cap - (tx.tail - tx.head_seen) < need {
+            tx.head_seen = self.read_u64(HEAD_OFF);
+            if self.cap - (tx.tail - tx.head_seen) < need {
+                return false;
+            }
+        }
+        let seq = tx.jumbo_seq;
+        tx.jumbo_seq += 1;
+        let jp = self.jumbo_path(seq);
+        let mut f = File::create(&jp).expect("jumbo side file create");
+        f.write_all(head).expect("jumbo write");
+        f.write_all(body).expect("jumbo write");
+        drop(f);
+        let mut pos = pos;
+        if to_end < rec {
+            self.write_u32(DATA_OFF + pos, TAG_SKIP);
+            tx.tail += to_end;
+            pos = 0;
+        }
+        self.write_u32(DATA_OFF + pos, TAG_JUMBO);
+        self.write_u64(DATA_OFF + pos + 4, seq);
+        self.write_u64(DATA_OFF + pos + 12, (head.len() + body.len()) as u64);
+        tx.tail += rec;
+        self.write_u64(TAIL_OFF, tx.tail);
+        true
+    }
+
+    fn pump_locked(&self, tx: &mut ShmTx) {
+        while let Some(f) = tx.spill.front() {
+            // split back into (head, body)? spilled frames are stored
+            // pre-joined, so head = frame, body = empty
+            if self.tx_try_write_spilled(tx, f.clone()) {
+                tx.spill.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn tx_try_write_spilled(&self, tx: &mut ShmTx, frame: Vec<u8>) -> bool {
+        self.tx_try_write(tx, &frame, &[])
+    }
+
+    /// Pop the next frame's raw bytes into `out`. Assumes `rx` is locked.
+    fn rx_try_read(&self, rx: &mut ShmRx, out: &mut Vec<u8>) -> bool {
+        loop {
+            if rx.head == rx.tail_seen {
+                rx.tail_seen = self.read_u64(TAIL_OFF);
+                if rx.head == rx.tail_seen {
+                    return false;
+                }
+            }
+            let pos = rx.head % self.cap;
+            let tag = self.read_u32(DATA_OFF + pos);
+            match tag {
+                TAG_SKIP => {
+                    rx.head += self.cap - pos;
+                    self.write_u64(HEAD_OFF, rx.head);
+                }
+                TAG_JUMBO => {
+                    let seq = self.read_u64(DATA_OFF + pos + 4);
+                    let len = self.read_u64(DATA_OFF + pos + 12) as usize;
+                    let jp = self.jumbo_path(seq);
+                    out.clear();
+                    out.resize(len, 0);
+                    let f = File::open(&jp).expect("jumbo side file open");
+                    f.read_exact_at(out, 0).expect("jumbo side file read");
+                    drop(f);
+                    let _ = std::fs::remove_file(&jp);
+                    rx.head += 24;
+                    self.write_u64(HEAD_OFF, rx.head);
+                    return true;
+                }
+                len => {
+                    let len = len as usize;
+                    out.clear();
+                    out.resize(len, 0);
+                    self.file
+                        .read_exact_at(out, DATA_OFF + pos + 4)
+                        .expect("shm ring read");
+                    rx.head += (4 + len as u64 + 7) & !7;
+                    self.write_u64(HEAD_OFF, rx.head);
+                    return true;
+                }
+            }
+        }
+    }
+
+    fn lock_tx(&self) -> std::sync::MutexGuard<'_, ShmTx> {
+        self.tx.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_rx(&self) -> std::sync::MutexGuard<'_, ShmRx> {
+        self.rx.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl Transport for ShmRing {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Shm
+    }
+
+    fn send_frame_parts(&self, head: &[u8], body: &[u8]) {
+        let mut tx = self.lock_tx();
+        if !tx.spill.is_empty() {
+            self.pump_locked(&mut tx);
+        }
+        if tx.spill.is_empty() && self.tx_try_write(&mut tx, head, body) {
+            return;
+        }
+        // keep order: once anything is spilled, everything later spills
+        // until the spill drains
+        let mut f = Vec::with_capacity(head.len() + body.len());
+        f.extend_from_slice(head);
+        f.extend_from_slice(body);
+        tx.spill.push_back(f);
+    }
+
+    fn try_recv_frame(&self, out: &mut Vec<u8>) -> bool {
+        let got = {
+            let mut rx = self.lock_rx();
+            self.rx_try_read(&mut rx, out)
+        };
+        if got {
+            return true;
+        }
+        // in process, the receiver can flush the sender's spill itself
+        self.pump();
+        let mut rx = self.lock_rx();
+        self.rx_try_read(&mut rx, out)
+    }
+
+    fn try_recv_f32_frame(&self, out: &mut Vec<f32>) -> bool {
+        let mut rx = self.lock_rx();
+        let mut scratch = std::mem::take(&mut rx.scratch);
+        let mut got = self.rx_try_read(&mut rx, &mut scratch);
+        if !got {
+            drop(rx);
+            self.pump();
+            rx = self.lock_rx();
+            got = self.rx_try_read(&mut rx, &mut scratch);
+        }
+        if got {
+            f32s_from_bytes(&scratch, out);
+        }
+        rx.scratch = scratch;
+        got
+    }
+
+    fn frame_ready(&self) -> bool {
+        let mut rx = self.lock_rx();
+        if rx.head == rx.tail_seen {
+            rx.tail_seen = self.read_u64(TAIL_OFF);
+        }
+        rx.head != rx.tail_seen
+    }
+
+    fn pump(&self) {
+        let mut tx = self.lock_tx();
+        if !tx.spill.is_empty() {
+            self.pump_locked(&mut tx);
+        }
+    }
+
+    fn reset(&self) {
+        let mut tx = self.lock_tx();
+        let mut rx = self.lock_rx();
+        tx.spill.clear();
+        // drop everything unread: head catches up to tail (jumbo side
+        // files of dropped frames are removed by path scan)
+        let tail = self.read_u64(TAIL_OFF);
+        rx.head = tail;
+        rx.tail_seen = tail;
+        tx.head_seen = tail;
+        self.write_u64(HEAD_OFF, tail);
+        for seq in 0..tx.jumbo_seq {
+            let _ = std::fs::remove_file(self.jumbo_path(seq));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unix-domain-socket link
+// ---------------------------------------------------------------------------
+
+struct UdsTx {
+    s: UnixStream,
+    /// Bytes accepted by `send_frame_parts` but not yet by the socket.
+    spill: VecDeque<u8>,
+}
+
+struct UdsRx {
+    s: UnixStream,
+    /// Raw received bytes; `pos..` is unparsed.
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+/// The uds backend: one nonblocking stream per directed link. In process
+/// both halves of a `UnixStream::pair` live in one object; across a
+/// process boundary each endpoint holds only its half.
+pub struct UdsLink {
+    tx: Option<Mutex<UdsTx>>,
+    rx: Option<Mutex<UdsRx>>,
+    gone: AtomicBool,
+}
+
+impl UdsLink {
+    /// In-process link: a socketpair with both ends attached.
+    pub fn pair() -> std::io::Result<UdsLink> {
+        let (a, b) = UnixStream::pair()?;
+        a.set_nonblocking(true)?;
+        b.set_nonblocking(true)?;
+        Ok(UdsLink {
+            tx: Some(Mutex::new(UdsTx { s: a, spill: VecDeque::new() })),
+            rx: Some(Mutex::new(UdsRx { s: b, buf: Vec::new(), pos: 0 })),
+            gone: AtomicBool::new(false),
+        })
+    }
+
+    /// Sender endpoint over an established stream (cross-process).
+    pub fn from_tx(s: UnixStream) -> std::io::Result<UdsLink> {
+        s.set_nonblocking(true)?;
+        Ok(UdsLink {
+            tx: Some(Mutex::new(UdsTx { s, spill: VecDeque::new() })),
+            rx: None,
+            gone: AtomicBool::new(false),
+        })
+    }
+
+    /// Receiver endpoint over an established stream (cross-process).
+    pub fn from_rx(s: UnixStream) -> std::io::Result<UdsLink> {
+        s.set_nonblocking(true)?;
+        Ok(UdsLink {
+            tx: None,
+            rx: Some(Mutex::new(UdsRx { s, buf: Vec::new(), pos: 0 })),
+            gone: AtomicBool::new(false),
+        })
+    }
+
+    /// Write as much of `b` as the socket accepts; spill the rest.
+    fn write_or_spill(&self, tx: &mut UdsTx, b: &[u8]) {
+        let mut off = 0;
+        if tx.spill.is_empty() {
+            while off < b.len() {
+                match tx.s.write(&b[off..]) {
+                    Ok(0) => {
+                        self.gone.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                    Ok(k) => off += k,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.gone.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                }
+            }
+        }
+        if off < b.len() {
+            tx.spill.extend(&b[off..]);
+        }
+    }
+
+    fn pump_locked(&self, tx: &mut UdsTx) {
+        while !tx.spill.is_empty() {
+            let (a, _) = tx.spill.as_slices();
+            let n = match tx.s.write(a) {
+                Ok(0) => {
+                    self.gone.store(true, Ordering::SeqCst);
+                    return;
+                }
+                Ok(k) => k,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.gone.store(true, Ordering::SeqCst);
+                    return;
+                }
+            };
+            tx.spill.drain(..n);
+        }
+    }
+
+    /// Pull everything currently readable into `rx.buf`.
+    fn fill(&self, rx: &mut UdsRx) {
+        loop {
+            let start = rx.buf.len();
+            rx.buf.resize(start + 64 * 1024, 0);
+            match rx.s.read(&mut rx.buf[start..]) {
+                Ok(0) => {
+                    rx.buf.truncate(start);
+                    self.gone.store(true, Ordering::SeqCst);
+                    return;
+                }
+                Ok(k) => rx.buf.truncate(start + k),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    rx.buf.truncate(start);
+                    return;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                    rx.buf.truncate(start);
+                }
+                Err(_) => {
+                    rx.buf.truncate(start);
+                    self.gone.store(true, Ordering::SeqCst);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Return the (start, end) byte range of the next complete frame's
+    /// payload, if present.
+    fn peek_frame(rx: &UdsRx) -> Option<(usize, usize)> {
+        let avail = &rx.buf[rx.pos..];
+        if avail.len() < 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]) as usize;
+        if avail.len() < 4 + len {
+            return None;
+        }
+        Some((rx.pos + 4, rx.pos + 4 + len))
+    }
+
+    fn consume(rx: &mut UdsRx, end: usize) {
+        rx.pos = end;
+        if rx.pos == rx.buf.len() {
+            rx.buf.clear();
+            rx.pos = 0;
+        } else if rx.pos > 64 * 1024 {
+            rx.buf.copy_within(rx.pos.., 0);
+            rx.buf.truncate(rx.buf.len() - rx.pos);
+            rx.pos = 0;
+        }
+    }
+
+    fn lock_rx(&self) -> Option<std::sync::MutexGuard<'_, UdsRx>> {
+        self.rx.as_ref().map(|m| m.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl Transport for UdsLink {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Uds
+    }
+
+    fn send_frame_parts(&self, head: &[u8], body: &[u8]) {
+        let tx = self.tx.as_ref().expect("uds link has no sender half");
+        let mut tx = tx.lock().unwrap_or_else(|e| e.into_inner());
+        if !tx.spill.is_empty() {
+            self.pump_locked(&mut tx);
+        }
+        let len = ((head.len() + body.len()) as u32).to_le_bytes();
+        self.write_or_spill(&mut tx, &len);
+        self.write_or_spill(&mut tx, head);
+        self.write_or_spill(&mut tx, body);
+    }
+
+    fn try_recv_frame(&self, out: &mut Vec<u8>) -> bool {
+        self.pump();
+        let mut rx = match self.lock_rx() {
+            Some(g) => g,
+            None => return false,
+        };
+        if Self::peek_frame(&rx).is_none() {
+            self.fill(&mut rx);
+        }
+        match Self::peek_frame(&rx) {
+            Some((s, e)) => {
+                out.clear();
+                out.extend_from_slice(&rx.buf[s..e]);
+                Self::consume(&mut rx, e);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn try_recv_f32_frame(&self, out: &mut Vec<f32>) -> bool {
+        self.pump();
+        let mut rx = match self.lock_rx() {
+            Some(g) => g,
+            None => return false,
+        };
+        if Self::peek_frame(&rx).is_none() {
+            self.fill(&mut rx);
+        }
+        match Self::peek_frame(&rx) {
+            Some((s, e)) => {
+                f32s_from_bytes(&rx.buf[s..e], out);
+                Self::consume(&mut rx, e);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn frame_ready(&self) -> bool {
+        self.pump();
+        let mut rx = match self.lock_rx() {
+            Some(g) => g,
+            None => return false,
+        };
+        if Self::peek_frame(&rx).is_some() {
+            return true;
+        }
+        self.fill(&mut rx);
+        Self::peek_frame(&rx).is_some()
+    }
+
+    fn pump(&self) {
+        if let Some(tx) = self.tx.as_ref() {
+            let mut tx = tx.lock().unwrap_or_else(|e| e.into_inner());
+            if !tx.spill.is_empty() {
+                self.pump_locked(&mut tx);
+            }
+        }
+    }
+
+    fn reset(&self) {
+        if let Some(tx) = self.tx.as_ref() {
+            tx.lock().unwrap_or_else(|e| e.into_inner()).spill.clear();
+        }
+        if let Some(mut rx) = self.lock_rx() {
+            // drain whatever the socket still buffers, then drop it all
+            self.fill(&mut rx);
+            rx.buf.clear();
+            rx.pos = 0;
+        }
+    }
+
+    fn peer_gone(&self) -> bool {
+        self.gone.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_ring(cap: u64) -> (ShmRing, PathBuf) {
+        let dir = unique_endpoint_dir(&std::env::temp_dir(), "ringtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = shm_ring_path(&dir, 0, 0, 1);
+        (ShmRing::open(&path, cap).unwrap(), dir)
+    }
+
+    #[test]
+    fn shm_roundtrip_in_order() {
+        let (r, dir) = tmp_ring(4096);
+        send_frame(&r, b"hello");
+        r.send_frame_parts(b"wor", b"ld");
+        let mut out = Vec::new();
+        assert!(r.try_recv_frame(&mut out));
+        assert_eq!(out, b"hello");
+        assert!(r.try_recv_frame(&mut out));
+        assert_eq!(out, b"world");
+        assert!(!r.try_recv_frame(&mut out));
+        drop(r);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn shm_wraps_and_skips() {
+        let (r, dir) = tmp_ring(128);
+        let mut out = Vec::new();
+        // records of 40 bytes force wrap-point skip markers quickly
+        for i in 0..50u8 {
+            send_frame(&r, &[i; 33]);
+            assert!(r.try_recv_frame(&mut out), "frame {i}");
+            assert_eq!(out, vec![i; 33]);
+        }
+        drop(r);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn shm_spills_when_full_and_pumps() {
+        let (r, dir) = tmp_ring(128);
+        // each is a 24-byte record: 5 fit (120 <= 128), rest spill
+        for i in 0..8u8 {
+            send_frame(&r, &[i; 17]);
+        }
+        let mut out = Vec::new();
+        for i in 0..8u8 {
+            assert!(r.try_recv_frame(&mut out), "frame {i} (spill must pump)");
+            assert_eq!(out, vec![i; 17]);
+        }
+        assert!(!r.try_recv_frame(&mut out));
+        drop(r);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn shm_jumbo_side_file() {
+        let (r, dir) = tmp_ring(128);
+        let big = vec![7u8; 4096];
+        send_frame(&r, b"pre");
+        send_frame(&r, &big);
+        send_frame(&r, b"post");
+        let mut out = Vec::new();
+        assert!(r.try_recv_frame(&mut out));
+        assert_eq!(out, b"pre");
+        assert!(r.try_recv_frame(&mut out));
+        assert_eq!(out, big);
+        assert!(r.try_recv_frame(&mut out));
+        assert_eq!(out, b"post");
+        drop(r);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn shm_f32_frames() {
+        let (r, dir) = tmp_ring(4096);
+        let payload: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        r.send_frame_parts(&[], f32s_as_bytes(&payload));
+        let mut out = Vec::new();
+        assert!(r.try_recv_f32_frame(&mut out));
+        assert_eq!(out, payload);
+        drop(r);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn uds_roundtrip_and_spill() {
+        let l = UdsLink::pair().unwrap();
+        let payload: Vec<f32> = (0..50_000).map(|i| i as f32).collect();
+        // well past the socket buffer: must spill, then pump through
+        for _ in 0..4 {
+            l.send_frame_parts(&[], f32s_as_bytes(&payload));
+        }
+        let mut out = Vec::new();
+        for i in 0..4 {
+            let mut spins = 0;
+            while !l.try_recv_f32_frame(&mut out) {
+                spins += 1;
+                assert!(spins < 1_000_000, "frame {i} never arrived");
+            }
+            assert_eq!(out, payload);
+        }
+        assert!(!l.try_recv_f32_frame(&mut out));
+    }
+
+    #[test]
+    fn uds_peer_gone_on_eof() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let l = UdsLink::from_rx(a).unwrap();
+        drop(b);
+        let mut out = Vec::new();
+        assert!(!l.try_recv_frame(&mut out));
+        assert!(l.peer_gone());
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(TransportKind::parse("shm"), Some(TransportKind::Shm));
+        assert_eq!(TransportKind::parse("uds"), Some(TransportKind::Uds));
+        assert_eq!(TransportKind::parse("inproc"), Some(TransportKind::Inproc));
+        assert_eq!(TransportKind::parse("tcp"), None);
+        assert_eq!(TransportKind::Shm.name(), "shm");
+    }
+
+    #[test]
+    fn reset_discards_in_flight() {
+        let (r, dir) = tmp_ring(4096);
+        send_frame(&r, b"stale");
+        r.reset();
+        let mut out = Vec::new();
+        assert!(!r.try_recv_frame(&mut out));
+        send_frame(&r, b"fresh");
+        assert!(r.try_recv_frame(&mut out));
+        assert_eq!(out, b"fresh");
+        drop(r);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

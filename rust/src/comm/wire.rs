@@ -1,0 +1,360 @@
+//! Wire codec for fabric payloads crossing a process boundary.
+//!
+//! In-process launchers move `Box<dyn Any>` payloads through lane FIFOs
+//! by ownership transfer — nothing is ever serialized. Under
+//! `Launcher::Process` every hop crosses an address-space boundary, so
+//! the concrete payload types that actually travel the training data
+//! path get an explicit little-endian encoding here. The inventory is
+//! closed on purpose: a fixed tag table over the production payloads
+//! (rotation ids and shard structs, collective chunk vectors, all-to-all
+//! relay packets) rather than a general serializer. An unknown payload
+//! type is a loud panic at the send site, not silent corruption.
+//!
+//! Frame form byte (prefixed by the fabric's remote send path, before
+//! the tag): [`FORM_F32`] frames carry raw `f32` payload bytes for the
+//! pooled `send_vec`/`recv_vec` hot path; [`FORM_ANY`] frames carry
+//! `[tag: u16 le][tag-specific payload]` as encoded by [`encode_any`].
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::model::params::ExpertParams;
+use crate::model::partition::{AttnShard, MlpShard};
+use crate::parallel::rtp::{EmbShard, MlpShardV};
+use crate::tensor::HostTensor;
+
+/// Frame form: raw little-endian `f32` payload (pooled hot path).
+pub(crate) const FORM_F32: u8 = 0;
+/// Frame form: tagged [`encode_any`] payload.
+pub(crate) const FORM_ANY: u8 = 1;
+
+const TAG_USIZE: u16 = 1;
+const TAG_USIZE2: u16 = 2;
+const TAG_F32: u16 = 3;
+const TAG_VEC_F32: u16 = 4;
+const TAG_RELAY: u16 = 5; // (usize, VecDeque<Vec<f32>>) — all_to_all packet
+const TAG_TENSOR: u16 = 6;
+const TAG_ID_TENSOR: u16 = 7;
+const TAG_ID_TENSOR_ARC: u16 = 8;
+const TAG_ID_EMB: u16 = 9;
+const TAG_ID_EMB_ARC: u16 = 10;
+const TAG_ID_ATTN: u16 = 11;
+const TAG_ID_ATTN_ARC: u16 = 12;
+const TAG_ID_MLPV: u16 = 13;
+const TAG_ID_MLPV_ARC: u16 = 14;
+
+// --------------------------------------------------------------------------
+// primitive writers
+// --------------------------------------------------------------------------
+
+fn w_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    w_u64(buf, v.len() as u64);
+    buf.extend_from_slice(super::transport::f32s_as_bytes(v));
+}
+
+fn w_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
+    w_u64(buf, t.shape.len() as u64);
+    for &d in &t.shape {
+        w_u64(buf, d as u64);
+    }
+    w_f32s(buf, &t.data);
+}
+
+fn w_mlp_shard(buf: &mut Vec<u8>, m: &MlpShard) {
+    w_tensor(buf, &m.w1);
+    w_tensor(buf, &m.b1);
+    w_tensor(buf, &m.w2);
+}
+
+fn w_mlpv(buf: &mut Vec<u8>, m: &MlpShardV) {
+    match m {
+        MlpShardV::Dense(d) => {
+            buf.push(0);
+            w_mlp_shard(buf, d);
+        }
+        MlpShardV::Experts(es) => {
+            buf.push(1);
+            w_u64(buf, es.len() as u64);
+            for e in es {
+                w_tensor(buf, &e.w1);
+                w_tensor(buf, &e.b1);
+                w_tensor(buf, &e.w2);
+            }
+        }
+    }
+}
+
+fn w_emb(buf: &mut Vec<u8>, e: &EmbShard) {
+    w_tensor(buf, &e.wte);
+    w_tensor(buf, &e.wpe);
+}
+
+fn w_attn(buf: &mut Vec<u8>, a: &AttnShard) {
+    w_tensor(buf, &a.wqkv);
+    w_tensor(buf, &a.bqkv);
+    w_tensor(buf, &a.wo);
+}
+
+// --------------------------------------------------------------------------
+// primitive readers
+// --------------------------------------------------------------------------
+
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> &'a [u8] {
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+
+    fn u64(&mut self) -> u64 {
+        let s = self.take(8);
+        u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]])
+    }
+
+    fn u8(&mut self) -> u8 {
+        self.take(1)[0]
+    }
+
+    fn f32s(&mut self) -> Vec<f32> {
+        let n = self.u64() as usize;
+        let raw = self.take(n * 4);
+        let mut v = Vec::with_capacity(n);
+        v.extend(
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        v
+    }
+
+    fn tensor(&mut self) -> HostTensor {
+        let nd = self.u64() as usize;
+        let shape: Vec<usize> = (0..nd).map(|_| self.u64() as usize).collect();
+        let data = self.f32s();
+        HostTensor { shape, data }
+    }
+
+    fn mlp_shard(&mut self) -> MlpShard {
+        MlpShard { w1: self.tensor(), b1: self.tensor(), w2: self.tensor() }
+    }
+
+    fn mlpv(&mut self) -> MlpShardV {
+        match self.u8() {
+            0 => MlpShardV::Dense(self.mlp_shard()),
+            1 => {
+                let n = self.u64() as usize;
+                MlpShardV::Experts(
+                    (0..n)
+                        .map(|_| ExpertParams {
+                            w1: self.tensor(),
+                            b1: self.tensor(),
+                            w2: self.tensor(),
+                        })
+                        .collect(),
+                )
+            }
+            v => panic!("wire: bad MlpShardV variant byte {v}"),
+        }
+    }
+
+    fn emb(&mut self) -> EmbShard {
+        EmbShard { wte: self.tensor(), wpe: self.tensor() }
+    }
+
+    fn attn(&mut self) -> AttnShard {
+        AttnShard { wqkv: self.tensor(), bqkv: self.tensor(), wo: self.tensor() }
+    }
+}
+
+// --------------------------------------------------------------------------
+// encode / decode
+// --------------------------------------------------------------------------
+
+/// Encode one `Msg::Any` payload into `buf` (appended; caller owns any
+/// frame prefix). `Err` carries the payload's concrete type name for
+/// the panic message at the send site.
+pub(crate) fn encode_any(msg: &(dyn Any + Send), buf: &mut Vec<u8>) -> Result<(), &'static str> {
+    if let Some(v) = msg.downcast_ref::<usize>() {
+        w_u16(buf, TAG_USIZE);
+        w_u64(buf, *v as u64);
+    } else if let Some((a, b)) = msg.downcast_ref::<(usize, usize)>() {
+        w_u16(buf, TAG_USIZE2);
+        w_u64(buf, *a as u64);
+        w_u64(buf, *b as u64);
+    } else if let Some(v) = msg.downcast_ref::<f32>() {
+        w_u16(buf, TAG_F32);
+        buf.extend_from_slice(&v.to_le_bytes());
+    } else if let Some(v) = msg.downcast_ref::<Vec<f32>>() {
+        w_u16(buf, TAG_VEC_F32);
+        w_f32s(buf, v);
+    } else if let Some((src, chunks)) = msg.downcast_ref::<(usize, VecDeque<Vec<f32>>)>() {
+        w_u16(buf, TAG_RELAY);
+        w_u64(buf, *src as u64);
+        w_u64(buf, chunks.len() as u64);
+        for c in chunks {
+            w_f32s(buf, c);
+        }
+    } else if let Some(t) = msg.downcast_ref::<HostTensor>() {
+        w_u16(buf, TAG_TENSOR);
+        w_tensor(buf, t);
+    } else if let Some((id, t)) = msg.downcast_ref::<(usize, HostTensor)>() {
+        w_u16(buf, TAG_ID_TENSOR);
+        w_u64(buf, *id as u64);
+        w_tensor(buf, t);
+    } else if let Some((id, t)) = msg.downcast_ref::<(usize, Arc<HostTensor>)>() {
+        w_u16(buf, TAG_ID_TENSOR_ARC);
+        w_u64(buf, *id as u64);
+        w_tensor(buf, t);
+    } else if let Some((id, e)) = msg.downcast_ref::<(usize, EmbShard)>() {
+        w_u16(buf, TAG_ID_EMB);
+        w_u64(buf, *id as u64);
+        w_emb(buf, e);
+    } else if let Some((id, e)) = msg.downcast_ref::<(usize, Arc<EmbShard>)>() {
+        w_u16(buf, TAG_ID_EMB_ARC);
+        w_u64(buf, *id as u64);
+        w_emb(buf, e);
+    } else if let Some((id, a)) = msg.downcast_ref::<(usize, AttnShard)>() {
+        w_u16(buf, TAG_ID_ATTN);
+        w_u64(buf, *id as u64);
+        w_attn(buf, a);
+    } else if let Some((id, a)) = msg.downcast_ref::<(usize, Arc<AttnShard>)>() {
+        w_u16(buf, TAG_ID_ATTN_ARC);
+        w_u64(buf, *id as u64);
+        w_attn(buf, a);
+    } else if let Some((id, m)) = msg.downcast_ref::<(usize, MlpShardV)>() {
+        w_u16(buf, TAG_ID_MLPV);
+        w_u64(buf, *id as u64);
+        w_mlpv(buf, m);
+    } else if let Some((id, m)) = msg.downcast_ref::<(usize, Arc<MlpShardV>)>() {
+        w_u16(buf, TAG_ID_MLPV_ARC);
+        w_u64(buf, *id as u64);
+        w_mlpv(buf, m);
+    } else {
+        return Err(std::any::type_name_of_val(msg));
+    }
+    Ok(())
+}
+
+/// Decode a [`FORM_ANY`] frame payload (the bytes after the form byte)
+/// back into the exact boxed type [`encode_any`] saw, so the receiving
+/// `RingPort::recv::<T>` downcast sees the same concrete type as it
+/// would in process.
+pub(crate) fn decode_any(b: &[u8]) -> Box<dyn Any + Send> {
+    let tag = u16::from_le_bytes([b[0], b[1]]);
+    let mut r = Rd { b, pos: 2 };
+    match tag {
+        TAG_USIZE => Box::new(r.u64() as usize),
+        TAG_USIZE2 => Box::new((r.u64() as usize, r.u64() as usize)),
+        TAG_F32 => {
+            let s = r.take(4);
+            Box::new(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        }
+        TAG_VEC_F32 => Box::new(r.f32s()),
+        TAG_RELAY => {
+            let src = r.u64() as usize;
+            let n = r.u64() as usize;
+            let chunks: VecDeque<Vec<f32>> = (0..n).map(|_| r.f32s()).collect();
+            Box::new((src, chunks))
+        }
+        TAG_TENSOR => Box::new(r.tensor()),
+        TAG_ID_TENSOR => Box::new((r.u64() as usize, r.tensor())),
+        TAG_ID_TENSOR_ARC => Box::new((r.u64() as usize, Arc::new(r.tensor()))),
+        TAG_ID_EMB => Box::new((r.u64() as usize, r.emb())),
+        TAG_ID_EMB_ARC => Box::new((r.u64() as usize, Arc::new(r.emb()))),
+        TAG_ID_ATTN => Box::new((r.u64() as usize, r.attn())),
+        TAG_ID_ATTN_ARC => Box::new((r.u64() as usize, Arc::new(r.attn()))),
+        TAG_ID_MLPV => Box::new((r.u64() as usize, r.mlpv())),
+        TAG_ID_MLPV_ARC => Box::new((r.u64() as usize, Arc::new(r.mlpv()))),
+        t => panic!("wire: unknown payload tag {t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Box<dyn Any + Send>) -> Box<dyn Any + Send> {
+        let mut buf = Vec::new();
+        encode_any(&*msg, &mut buf).expect("encodable");
+        decode_any(&buf)
+    }
+
+    fn t(shape: &[usize]) -> HostTensor {
+        let len: usize = shape.iter().product();
+        HostTensor {
+            shape: shape.to_vec(),
+            data: (0..len).map(|i| i as f32 * 0.25 - 1.0).collect(),
+        }
+    }
+
+    #[test]
+    fn scalars_and_vecs() {
+        assert_eq!(*roundtrip(Box::new(42usize)).downcast::<usize>().unwrap(), 42);
+        assert_eq!(
+            *roundtrip(Box::new((3usize, 9usize))).downcast::<(usize, usize)>().unwrap(),
+            (3, 9)
+        );
+        assert_eq!(*roundtrip(Box::new(1.5f32)).downcast::<f32>().unwrap(), 1.5);
+        let v = vec![1.0f32, -2.0, 3.5];
+        assert_eq!(*roundtrip(Box::new(v.clone())).downcast::<Vec<f32>>().unwrap(), v);
+    }
+
+    #[test]
+    fn relay_packet() {
+        let pkt: (usize, VecDeque<Vec<f32>>) =
+            (2, VecDeque::from(vec![vec![1.0, 2.0], vec![3.0]]));
+        let got = roundtrip(Box::new(pkt.clone()))
+            .downcast::<(usize, VecDeque<Vec<f32>>)>()
+            .unwrap();
+        assert_eq!(*got, pkt);
+    }
+
+    #[test]
+    fn tensors_and_shards() {
+        let ht = t(&[2, 3]);
+        assert_eq!(*roundtrip(Box::new(ht.clone())).downcast::<HostTensor>().unwrap(), ht);
+
+        let got = roundtrip(Box::new((7usize, Arc::new(t(&[4])))))
+            .downcast::<(usize, Arc<HostTensor>)>()
+            .unwrap();
+        assert_eq!(got.0, 7);
+        assert_eq!(*got.1, t(&[4]));
+
+        let attn = AttnShard { wqkv: t(&[2, 6]), bqkv: t(&[6]), wo: t(&[2, 2]) };
+        let got = roundtrip(Box::new((1usize, attn.clone())))
+            .downcast::<(usize, AttnShard)>()
+            .unwrap();
+        assert_eq!(got.1, attn);
+
+        let mlpv = MlpShardV::Experts(vec![
+            ExpertParams { w1: t(&[2, 4]), b1: t(&[4]), w2: t(&[4, 2]) },
+            ExpertParams { w1: t(&[2, 4]), b1: t(&[4]), w2: t(&[4, 2]) },
+        ]);
+        let got = roundtrip(Box::new((0usize, Arc::new(mlpv))))
+            .downcast::<(usize, Arc<MlpShardV>)>()
+            .unwrap();
+        match &*got.1 {
+            MlpShardV::Experts(es) => assert_eq!(es.len(), 2),
+            _ => panic!("variant lost in roundtrip"),
+        }
+    }
+
+    #[test]
+    fn unknown_type_is_an_error() {
+        let msg: Box<dyn Any + Send> = Box::new("not a fabric payload");
+        let mut buf = Vec::new();
+        assert!(encode_any(&*msg, &mut buf).is_err());
+    }
+}

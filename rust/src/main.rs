@@ -59,6 +59,11 @@ SUBCOMMANDS
 
 Figures/benches: `cargo bench` regenerates every paper table and figure
 into figures/ (see DESIGN.md §5 for the index).
+
+Transports: RTP_TRANSPORT=inproc|shm|uds selects the fabric's data-plane
+byte transport (default inproc). Launcher::Process (--launcher process,
+step/gather paths only) spawns one `rtp worker` OS process per rank over
+shm or uds.
 ";
 
 fn exec_kind(args: &Args) -> Result<ExecKind> {
@@ -81,7 +86,8 @@ fn launcher(args: &Args) -> Result<Launcher> {
         None => Launcher::from_env(),
         Some("lockstep") => Launcher::Lockstep,
         Some("thread") | Some("threads") | Some("threaded") => Launcher::Thread,
-        Some(other) => bail!("unknown --launcher {other:?} (lockstep|thread)"),
+        Some("process") | Some("processes") => Launcher::Process,
+        Some(other) => bail!("unknown --launcher {other:?} (lockstep|thread|process)"),
     })
 }
 
@@ -98,9 +104,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 42)?,
         log_every: args.usize_or("log-every", 10)?,
     };
+    let picked_launcher = launcher(args)?;
+    if picked_launcher == Launcher::Process {
+        bail!(
+            "rtp train cannot use --launcher process: the optimizer walks \
+             engine-owned params in memory (visit_owned), which cannot cross \
+             a process boundary. Use lockstep or thread; Launcher::Process \
+             drives step/gather paths (benches, equivalence and fault suites)."
+        );
+    }
     let mut opts = EngineOpts::new(preset, strategy, workers, global_batch)
         .exec(exec_kind(args)?)
-        .launcher(launcher(args)?)
+        .launcher(picked_launcher)
         .seed(tcfg.seed);
     if let Some(spec) = args.get("fault-plan") {
         opts = opts.fault_plan(Some(FaultPlan::parse(spec)?));
@@ -328,6 +343,9 @@ fn main() {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     let result = match sub.as_str() {
         "train" => cmd_train(&args),
+        // re-entrant child mode of Launcher::Process — not in USAGE on
+        // purpose (spawned by the parent, not typed by hand)
+        "worker" => rtp::runtime::worker_main(&args),
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "trace" => cmd_trace(&args),

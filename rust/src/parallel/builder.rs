@@ -7,8 +7,9 @@ use std::sync::Mutex;
 use anyhow::{anyhow, Result};
 
 use crate::cluster::{Cluster, TraceLog};
-use crate::comm::SchedPolicy;
+use crate::comm::{RingPort, SchedPolicy, TransportKind};
 use crate::config::{presets, ModelCfg, ParallelCfg, Strategy};
+use crate::memory::tracker::MemTracker;
 use crate::perfmodel::{Hardware, Timeline};
 use crate::runtime::fault::{FaultInjector, FaultPlan};
 use crate::runtime::{artifacts_root, Exec, PjrtRuntime};
@@ -56,6 +57,11 @@ pub struct EngineOpts {
     pub rtp_recycle: bool,
     /// How the rank bodies execute (defaults to `RTP_LAUNCHER` env).
     pub launcher: Launcher,
+    /// Which byte transport carries the fabric's f32 data plane (defaults
+    /// to `RTP_TRANSPORT` env; [`TransportKind::Inproc`] when unset).
+    /// [`Launcher::Process`] requires a process-capable backend (`shm` or
+    /// `uds`).
+    pub transport: TransportKind,
     /// TRUE async comm: under the Thread launcher, out-of-place RTP
     /// issues each rotation hop eagerly on the rank's comm stream so the
     /// shard travels while the step computes, and every engine's
@@ -117,6 +123,7 @@ impl EngineOpts {
             fsdp_granularity: Granularity::Layer,
             rtp_recycle: true,
             launcher: Launcher::from_env(),
+            transport: TransportKind::from_env(),
             async_rotation: true,
             sched_policy: SchedPolicy::from_env(),
             bucket_bytes: bucket_bytes_from_env(),
@@ -156,6 +163,10 @@ impl EngineOpts {
         self.launcher = l;
         self
     }
+    pub fn transport(mut self, t: TransportKind) -> Self {
+        self.transport = t;
+        self
+    }
     pub fn async_rotation(mut self, a: bool) -> Self {
         self.async_rotation = a;
         self
@@ -178,7 +189,7 @@ impl EngineOpts {
             .ok_or_else(|| anyhow!("unknown preset {:?}", self.preset))
     }
 
-    fn engine_name(&self) -> String {
+    pub(crate) fn engine_name(&self) -> String {
         match self.strategy {
             Strategy::Single => "single".to_string(),
             Strategy::Ddp => "ddp".to_string(),
@@ -199,7 +210,7 @@ impl EngineOpts {
     }
 }
 
-fn make_exec(kind: ExecKind, preset: &str) -> Result<Exec> {
+pub(crate) fn make_exec(kind: ExecKind, preset: &str) -> Result<Exec> {
     Ok(match kind {
         ExecKind::Oracle => Exec::Oracle,
         ExecKind::Virtual => Exec::Virtual,
@@ -212,7 +223,62 @@ fn make_exec(kind: ExecKind, preset: &str) -> Result<Exec> {
     })
 }
 
+/// Construct ONE rank's participant — the per-rank body shared by the
+/// in-process facade (below) and the `rtp worker` child process
+/// (`runtime::proc::worker_main`), so a process-launched rank is built by
+/// exactly the same code path as a thread-launched one.
+pub(crate) fn build_rank_engine(
+    opts: &EngineOpts,
+    cfg: &ModelCfg,
+    par: &ParallelCfg,
+    rank: usize,
+    exec: &mut Exec,
+    tracker: &mut MemTracker,
+    port: RingPort,
+    trace: &Mutex<TraceLog>,
+) -> Result<Box<dyn RankEngine>> {
+    let mut rctx = RankCtx {
+        rank,
+        cfg,
+        par,
+        exec,
+        tracker,
+        port,
+        timeline: None,
+        trace_log: trace,
+        trace_on: false,
+        async_comm: false,
+        sched_policy: opts.sched_policy,
+        bucket_bytes: opts.bucket_bytes,
+        // never inject during construction (step counter is unset
+        // there anyway; the facade hands each step's ctxs the live
+        // injector)
+        fault: None,
+    };
+    Ok(match opts.strategy {
+        Strategy::Single => Box::new(SingleRank::new(&mut rctx, opts.seed)?),
+        Strategy::Ddp => Box::new(DdpRank::new(&mut rctx, opts.seed)?),
+        Strategy::Fsdp => {
+            Box::new(FsdpRank::new(&mut rctx, opts.seed, opts.fsdp_granularity)?)
+        }
+        Strategy::MegatronTp => Box::new(TpRank::new(&mut rctx, opts.seed)?),
+        Strategy::RtpInplace => {
+            Box::new(RtpRank::new(&mut rctx, opts.seed, RtpVariant::InPlace)?)
+        }
+        Strategy::RtpOutOfPlace => Box::new(RtpRank::new(
+            &mut rctx,
+            opts.seed,
+            RtpVariant::OutOfPlace { recycle: opts.rtp_recycle },
+        )?),
+    })
+}
+
 pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
+    if opts.launcher == Launcher::Process {
+        return Ok(Box::new(
+            crate::runtime::proc::ProcessClusterEngine::build(opts)?,
+        ));
+    }
     let cfg = opts.cfg()?;
     let workers = if opts.strategy == Strategy::Single { 1 } else { opts.workers };
     let par = ParallelCfg {
@@ -220,7 +286,7 @@ pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
         workers,
         global_batch: opts.global_batch,
     };
-    let mut cluster = Cluster::new(workers, opts.capacity);
+    let mut cluster = Cluster::new_with_transport(workers, opts.capacity, opts.transport);
     if opts.trace {
         cluster.trace = TraceLog::enabled();
     }
@@ -239,40 +305,16 @@ pub fn build_engine(opts: &EngineOpts) -> Result<Box<dyn Engine>> {
     let mut ranks: Vec<Box<dyn RankEngine>> = Vec::with_capacity(workers);
     for r in 0..workers {
         let port = cluster.workers[r].port.clone();
-        let mut rctx = RankCtx {
-            rank: r,
-            cfg: &cfg,
-            par: &par,
-            exec: &mut execs[r],
-            tracker: &mut cluster.workers[r].tracker,
+        let rank = build_rank_engine(
+            opts,
+            &cfg,
+            &par,
+            r,
+            &mut execs[r],
+            &mut cluster.workers[r].tracker,
             port,
-            timeline: None,
-            trace_log: &trace,
-            trace_on: false,
-            async_comm: false,
-            sched_policy: opts.sched_policy,
-            bucket_bytes: opts.bucket_bytes,
-            // never inject during construction (step counter is unset
-            // there anyway; the facade hands each step's ctxs the live
-            // injector)
-            fault: None,
-        };
-        let rank: Box<dyn RankEngine> = match opts.strategy {
-            Strategy::Single => Box::new(SingleRank::new(&mut rctx, opts.seed)?),
-            Strategy::Ddp => Box::new(DdpRank::new(&mut rctx, opts.seed)?),
-            Strategy::Fsdp => {
-                Box::new(FsdpRank::new(&mut rctx, opts.seed, opts.fsdp_granularity)?)
-            }
-            Strategy::MegatronTp => Box::new(TpRank::new(&mut rctx, opts.seed)?),
-            Strategy::RtpInplace => {
-                Box::new(RtpRank::new(&mut rctx, opts.seed, RtpVariant::InPlace)?)
-            }
-            Strategy::RtpOutOfPlace => Box::new(RtpRank::new(
-                &mut rctx,
-                opts.seed,
-                RtpVariant::OutOfPlace { recycle: opts.rtp_recycle },
-            )?),
-        };
+            &trace,
+        )?;
         ranks.push(rank);
     }
     cluster.trace = trace.into_inner().unwrap();

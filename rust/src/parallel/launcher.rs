@@ -35,6 +35,14 @@ pub enum Launcher {
     Lockstep,
     /// One OS thread per rank, free-running ("ThreadLauncher").
     Thread,
+    /// One OS PROCESS per rank ("ProcessLauncher"): ranks are spawned as
+    /// `rtp worker` child processes talking over a byte transport (shm
+    /// ring or Unix socket — [`TransportKind`](crate::comm::TransportKind)
+    /// must not be `Inproc`). Address spaces are genuinely separate, so
+    /// overlap and dedup numbers stop sharing an allocator with their
+    /// peers. Built by `runtime::proc::ProcessClusterEngine`, not by the
+    /// in-process round scheduler — [`Launcher::policy`] panics.
+    Process,
 }
 
 impl Launcher {
@@ -44,6 +52,7 @@ impl Launcher {
     pub fn from_env() -> Launcher {
         match std::env::var("RTP_LAUNCHER").as_deref() {
             Ok("thread") | Ok("threads") | Ok("threaded") => Launcher::Thread,
+            Ok("process") | Ok("processes") => Launcher::Process,
             _ => Launcher::Lockstep,
         }
     }
@@ -52,6 +61,10 @@ impl Launcher {
         match self {
             Launcher::Lockstep => LaunchPolicy::Lockstep,
             Launcher::Thread => LaunchPolicy::Threaded,
+            Launcher::Process => panic!(
+                "Launcher::Process has no in-process round policy: rank \
+                 bodies run in child processes (runtime::proc)"
+            ),
         }
     }
 
@@ -62,7 +75,7 @@ impl Launcher {
     /// degrade to synchronous boundary hops (preserving determinism and
     /// launcher bit-identity).
     pub fn overlaps_comm(&self) -> bool {
-        matches!(self, Launcher::Thread)
+        matches!(self, Launcher::Thread | Launcher::Process)
     }
 
     /// Run one closure per rank to completion under this launcher's
@@ -94,6 +107,7 @@ impl std::fmt::Display for Launcher {
         f.write_str(match self {
             Launcher::Lockstep => "lockstep",
             Launcher::Thread => "thread",
+            Launcher::Process => "process",
         })
     }
 }

@@ -155,13 +155,13 @@ struct PendingRot<T: Any + Send + Sync> {
 }
 
 #[derive(Debug, Clone)]
-struct EmbShard {
-    wte: HostTensor,
-    wpe: HostTensor,
+pub(crate) struct EmbShard {
+    pub(crate) wte: HostTensor,
+    pub(crate) wpe: HostTensor,
 }
 
 #[derive(Debug, Clone)]
-enum MlpShardV {
+pub(crate) enum MlpShardV {
     Dense(MlpShard),
     /// Expert-Partition: a contiguous group of E/N whole experts.
     Experts(Vec<ExpertParams>),

@@ -217,6 +217,11 @@ pub enum FailureKind {
     RecvTimeout { retries: u32 },
     /// The rank's background comm thread died.
     CommThread,
+    /// The peer's OS PROCESS exited (`Launcher::Process`): detected by
+    /// the parent's waitpid (dead-rank marker file) or by EOF on the
+    /// link's byte transport — the real-cluster analogue of an injected
+    /// kill.
+    PeerExit,
 }
 
 impl std::fmt::Display for FailureKind {
@@ -227,6 +232,7 @@ impl std::fmt::Display for FailureKind {
                 write!(f, "recv timeout after {retries} retries")
             }
             FailureKind::CommThread => f.write_str("comm thread death"),
+            FailureKind::PeerExit => f.write_str("peer process exited"),
         }
     }
 }

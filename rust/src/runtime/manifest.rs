@@ -177,6 +177,124 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Run manifest (Launcher::Process)
+// ---------------------------------------------------------------------------
+
+/// The serialized engine configuration `Launcher::Process` hands each
+/// worker: everything a re-entrant `rtp worker` process needs to rebuild
+/// its OWN `RankEngine` bit-identically to the in-process launchers —
+/// preset, strategy, world size, determinism seed, and the engine knobs
+/// that change the float schedule. Written as `manifest.json` into the
+/// run's rendezvous dir by the parent, loaded by every worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunManifest {
+    pub preset: String,
+    /// `Strategy` display token (round-trips through `Strategy::parse`).
+    pub strategy: String,
+    pub workers: usize,
+    pub global_batch: usize,
+    /// `ExecKind` token (`oracle` | `virtual` | `pjrt` | `pallas`).
+    pub exec: String,
+    pub seed: u64,
+    /// `"layer"` | `"model"` (FSDP unit granularity).
+    pub fsdp_granularity: String,
+    pub rtp_recycle: bool,
+    pub async_rotation: bool,
+    /// `"fifo"` | `"round-robin"` | `"priority"`.
+    pub sched_policy: String,
+    /// Gradient bucket size target in bytes; 0 = monolithic.
+    pub bucket_bytes: u64,
+    /// Transport backend token (`shm` | `uds`).
+    pub transport: String,
+    /// Recv-watchdog override in ms; 0 = workers read
+    /// `RTP_FABRIC_TIMEOUT_SECS` from their (inherited) env.
+    pub fabric_timeout_ms: u64,
+    /// Recv-retry override stored as value+1; 0 = `RTP_FABRIC_RETRIES`.
+    pub fabric_retries_plus1: u64,
+}
+
+impl RunManifest {
+    pub fn to_json(&self) -> String {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("preset".to_string(), Json::Str(self.preset.clone()));
+        m.insert("strategy".to_string(), Json::Str(self.strategy.clone()));
+        m.insert("workers".to_string(), Json::Num(self.workers as f64));
+        m.insert("global_batch".to_string(), Json::Num(self.global_batch as f64));
+        m.insert("exec".to_string(), Json::Str(self.exec.clone()));
+        // seed rides as a string: the hand-rolled parser keeps numbers as
+        // f64, which cannot hold every u64 exactly
+        m.insert("seed".to_string(), Json::Str(self.seed.to_string()));
+        m.insert(
+            "fsdp_granularity".to_string(),
+            Json::Str(self.fsdp_granularity.clone()),
+        );
+        m.insert("rtp_recycle".to_string(), Json::Bool(self.rtp_recycle));
+        m.insert("async_rotation".to_string(), Json::Bool(self.async_rotation));
+        m.insert("sched_policy".to_string(), Json::Str(self.sched_policy.clone()));
+        m.insert("bucket_bytes".to_string(), Json::Num(self.bucket_bytes as f64));
+        m.insert("transport".to_string(), Json::Str(self.transport.clone()));
+        m.insert(
+            "fabric_timeout_ms".to_string(),
+            Json::Num(self.fabric_timeout_ms as f64),
+        );
+        m.insert(
+            "fabric_retries_plus1".to_string(),
+            Json::Num(self.fabric_retries_plus1 as f64),
+        );
+        format!("{}", Json::Obj(m))
+    }
+
+    pub fn from_json(text: &str) -> Result<RunManifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("run manifest: {e}"))?;
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .as_str()
+                .ok_or_else(|| anyhow!("run manifest missing {k}"))?
+                .to_string())
+        };
+        let n = |k: &str| -> Result<u64> {
+            Ok(j.get(k)
+                .as_f64()
+                .ok_or_else(|| anyhow!("run manifest missing {k}"))? as u64)
+        };
+        let b = |k: &str| -> Result<bool> {
+            j.get(k)
+                .as_bool()
+                .ok_or_else(|| anyhow!("run manifest missing {k}"))
+        };
+        Ok(RunManifest {
+            preset: s("preset")?,
+            strategy: s("strategy")?,
+            workers: n("workers")? as usize,
+            global_batch: n("global_batch")? as usize,
+            exec: s("exec")?,
+            seed: s("seed")?
+                .parse::<u64>()
+                .map_err(|_| anyhow!("run manifest seed not a u64"))?,
+            fsdp_granularity: s("fsdp_granularity")?,
+            rtp_recycle: b("rtp_recycle")?,
+            async_rotation: b("async_rotation")?,
+            sched_policy: s("sched_policy")?,
+            bucket_bytes: n("bucket_bytes")?,
+            transport: s("transport")?,
+            fabric_timeout_ms: n("fabric_timeout_ms")?,
+            fabric_retries_plus1: n("fabric_retries_plus1")?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing run manifest {}", path.display()))
+    }
+
+    pub fn load_run(path: &Path) -> Result<RunManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading run manifest {}", path.display()))?;
+        Self::from_json(&text)
+    }
+}
+
 /// Default artifacts root: `$RTP_ARTIFACTS` or `./artifacts` (falling back
 /// over the crate root for tests run from other directories).
 pub fn artifacts_root() -> PathBuf {
@@ -243,6 +361,28 @@ mod tests {
                 assert_eq!(ws, &have.shape, "{} outputs", e.key);
             }
         }
+    }
+
+    #[test]
+    fn run_manifest_roundtrip() {
+        let m = RunManifest {
+            preset: "tiny".into(),
+            strategy: "rtp-outofplace".into(),
+            workers: 4,
+            global_batch: 8,
+            exec: "oracle".into(),
+            seed: u64::MAX - 3, // would lose precision as an f64
+            fsdp_granularity: "layer".into(),
+            rtp_recycle: true,
+            async_rotation: false,
+            sched_policy: "priority".into(),
+            bucket_bytes: 1 << 16,
+            transport: "shm".into(),
+            fabric_timeout_ms: 2000,
+            fabric_retries_plus1: 0,
+        };
+        let back = RunManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
     }
 
     #[test]

@@ -11,8 +11,10 @@ pub mod client;
 pub mod exec;
 pub mod fault;
 pub mod manifest;
+pub mod proc;
 
 pub use client::{PjrtRuntime, RtArg, RuntimeStats};
 pub use exec::{arg_of, ArgRef, Buf, Exec};
 pub use fault::{FailureKind, FaultInjector, FaultPhase, FaultPlan, RankDeath, RankFailure};
-pub use manifest::{artifacts_root, Manifest};
+pub use manifest::{artifacts_root, Manifest, RunManifest};
+pub use proc::{worker_main, ProcessClusterEngine};

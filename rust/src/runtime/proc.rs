@@ -1,0 +1,1016 @@
+//! `Launcher::Process`: one OS process per rank, talking through a byte
+//! transport (shm ring or Unix socket) — the launcher that makes overlap
+//! and dedup numbers real, because ranks stop sharing an allocator, a
+//! page cache, or a panic domain.
+//!
+//! Topology: the parent (this module's [`ProcessClusterEngine`]) is a
+//! pure control plane — it never touches the training data path. It
+//! writes a [`RunManifest`] into a fresh rendezvous dir, spawns one
+//! re-entrant `rtp worker --manifest M --rank R` child per rank, and
+//! drives them over a per-worker Unix control socket with a tiny framed
+//! protocol (step / zero-grads / gather / shutdown). The data plane —
+//! every rotation hop and collective — runs rank-to-rank over the
+//! transport endpoints in the same dir ([`RingFabric::new_remote`]),
+//! exactly the lanes the in-process launchers use, minus the shared
+//! address space.
+//!
+//! Failure model: the parent reaps children every poll sweep; a dead
+//! child gets a `dead-<rank>` marker file in the rendezvous dir (workers
+//! poll it inside blocked recvs) and the step surfaces ONE typed
+//! [`RankFailure`] with [`FailureKind::PeerExit`] — the same shape the
+//! in-process fault injection produces, so callers handle a real SIGKILL
+//! and a simulated one identically. Workers that survive a peer death
+//! stay up (they reply with their own typed view) until the parent drops,
+//! which shuts down, reaps, and removes the rendezvous dir — transport
+//! segments included.
+//!
+//! Scope: the training data path only. `visit_owned` (the optimizer's
+//! in-memory param walk) cannot cross a process boundary and panics;
+//! checkpoints move through `gather_params` files instead.
+
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::os::unix::process::ExitStatusExt;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cli::Args;
+use crate::cluster::{Cluster, TraceLog};
+use crate::comm::transport::{shm_base_dir, unique_endpoint_dir};
+use crate::comm::{RingFabric, SchedPolicy, TransportKind};
+use crate::config::{ParallelCfg, Strategy};
+use crate::memory::tracker::MemTracker;
+use crate::model::ModelParams;
+use crate::parallel::builder::{build_rank_engine, make_exec};
+use crate::parallel::fsdp::Granularity;
+use crate::parallel::{Batch, Ctx, Engine, EngineOpts, ExecKind, Launcher, RankCtx};
+use crate::runtime::fault::{FailureKind, FaultInjector, RankDeath, RankFailure};
+use crate::runtime::manifest::RunManifest;
+use crate::runtime::Exec;
+use crate::tensor::{HostTensor, IntTensor};
+use crate::train::{load_params, save_params};
+
+// ---------------------------------------------------------------------------
+// Control protocol: [op u8][len u32 le][payload]
+// ---------------------------------------------------------------------------
+
+const OP_STEP: u8 = 1;
+const OP_ZERO: u8 = 2;
+const OP_GATHER_P: u8 = 3;
+const OP_GATHER_G: u8 = 4;
+const OP_SHUTDOWN: u8 = 5;
+const OP_OK: u8 = 0x80;
+const OP_ERR: u8 = 0x81;
+
+/// `write_all` that rides out `WouldBlock` (the parent's control sockets
+/// are nonblocking for the reply poll loop; frames are small).
+fn send_all(s: &mut UnixStream, mut buf: &[u8]) -> std::io::Result<()> {
+    while !buf.is_empty() {
+        match s.write(buf) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "control socket closed",
+                ))
+            }
+            Ok(k) => buf = &buf[k..],
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+fn send_frame(s: &mut UnixStream, op: u8, payload: &[u8]) -> std::io::Result<()> {
+    let mut hdr = [0u8; 5];
+    hdr[0] = op;
+    hdr[1..5].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    send_all(s, &hdr)?;
+    send_all(s, payload)
+}
+
+/// Blocking frame read (worker side — the worker has nothing to do but
+/// wait for the next command).
+fn read_frame(s: &mut UnixStream) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut hdr = [0u8; 5];
+    s.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes([hdr[1], hdr[2], hdr[3], hdr[4]]) as usize;
+    let mut payload = vec![0u8; len];
+    s.read_exact(&mut payload)?;
+    Ok((hdr[0], payload))
+}
+
+/// One worker's control connection on the parent side: a nonblocking
+/// socket plus a reassembly buffer for the poll loop.
+struct CtlConn {
+    s: UnixStream,
+    buf: Vec<u8>,
+}
+
+impl CtlConn {
+    /// Drain whatever is readable and return one complete frame if the
+    /// buffer holds one. `Err(UnexpectedEof)` once the worker hung up
+    /// with no complete frame pending.
+    fn poll_frame(&mut self) -> std::io::Result<Option<(u8, Vec<u8>)>> {
+        let mut eof = false;
+        let mut tmp = [0u8; 4096];
+        loop {
+            match self.s.read(&mut tmp) {
+                Ok(0) => {
+                    eof = true;
+                    break;
+                }
+                Ok(k) => self.buf.extend_from_slice(&tmp[..k]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if self.buf.len() >= 5 {
+            let len = u32::from_le_bytes([
+                self.buf[1],
+                self.buf[2],
+                self.buf[3],
+                self.buf[4],
+            ]) as usize;
+            if self.buf.len() >= 5 + len {
+                let op = self.buf[0];
+                let payload = self.buf[5..5 + len].to_vec();
+                self.buf.drain(..5 + len);
+                return Ok(Some((op, payload)));
+            }
+        }
+        if eof {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "worker control socket EOF",
+            ));
+        }
+        Ok(None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch codec (control plane only; the data plane has its own wire format)
+// ---------------------------------------------------------------------------
+
+fn enc_u64(v: u64, out: &mut Vec<u8>) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn enc_int_tensor(t: &IntTensor, out: &mut Vec<u8>) {
+    enc_u64(t.shape.len() as u64, out);
+    for &d in &t.shape {
+        enc_u64(d as u64, out);
+    }
+    enc_u64(t.data.len() as u64, out);
+    for &x in &t.data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn enc_batch(b: &Batch, out: &mut Vec<u8>) {
+    enc_int_tensor(&b.ids, out);
+    enc_int_tensor(&b.targets, out);
+}
+
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn u64(&mut self) -> Result<u64> {
+        let end = self.pos + 8;
+        if end > self.b.len() {
+            bail!("truncated control payload");
+        }
+        let mut a = [0u8; 8];
+        a.copy_from_slice(&self.b[self.pos..end]);
+        self.pos = end;
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn int_tensor(&mut self) -> Result<IntTensor> {
+        let ndim = self.u64()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.u64()? as usize);
+        }
+        let len = self.u64()? as usize;
+        let end = self.pos + len * 4;
+        if end > self.b.len() {
+            bail!("truncated control payload");
+        }
+        let mut data = Vec::with_capacity(len);
+        for c in self.b[self.pos..end].chunks_exact(4) {
+            data.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        self.pos = end;
+        Ok(IntTensor::from_vec(&shape, data))
+    }
+}
+
+fn dec_batch(payload: &[u8]) -> Result<Batch> {
+    let mut rd = Rd { b: payload, pos: 0 };
+    Ok(Batch { ids: rd.int_tensor()?, targets: rd.int_tensor()? })
+}
+
+// ---------------------------------------------------------------------------
+// Manifest <-> EngineOpts
+// ---------------------------------------------------------------------------
+
+fn exec_token(e: ExecKind) -> &'static str {
+    match e {
+        ExecKind::Oracle => "oracle",
+        ExecKind::Virtual => "virtual",
+        ExecKind::Pjrt => "pjrt",
+        ExecKind::PjrtPallas => "pallas",
+    }
+}
+
+fn manifest_of(
+    opts: &EngineOpts,
+    workers: usize,
+    transport: TransportKind,
+    fabric_timeout_ms: u64,
+    fabric_retries_plus1: u64,
+) -> RunManifest {
+    RunManifest {
+        preset: opts.preset.clone(),
+        strategy: opts.strategy.to_string(),
+        workers,
+        global_batch: opts.global_batch,
+        exec: exec_token(opts.exec).to_string(),
+        seed: opts.seed,
+        fsdp_granularity: match opts.fsdp_granularity {
+            Granularity::Layer => "layer".to_string(),
+            Granularity::Model => "model".to_string(),
+        },
+        rtp_recycle: opts.rtp_recycle,
+        async_rotation: opts.async_rotation,
+        sched_policy: opts.sched_policy.name().to_string(),
+        bucket_bytes: opts.bucket_bytes.unwrap_or(0),
+        transport: transport.name().to_string(),
+        fabric_timeout_ms,
+        fabric_retries_plus1,
+    }
+}
+
+fn opts_of(m: &RunManifest) -> Result<EngineOpts> {
+    let strategy = Strategy::parse(&m.strategy)
+        .ok_or_else(|| anyhow!("run manifest: unknown strategy {:?}", m.strategy))?;
+    let exec = match m.exec.as_str() {
+        "oracle" => ExecKind::Oracle,
+        "virtual" => ExecKind::Virtual,
+        "pjrt" => ExecKind::Pjrt,
+        "pallas" => ExecKind::PjrtPallas,
+        other => bail!("run manifest: unknown exec {other:?}"),
+    };
+    let gran = match m.fsdp_granularity.as_str() {
+        "layer" => Granularity::Layer,
+        "model" => Granularity::Model,
+        other => bail!("run manifest: unknown fsdp granularity {other:?}"),
+    };
+    let sched = match m.sched_policy.as_str() {
+        "fifo" => SchedPolicy::Fifo,
+        "round-robin" => SchedPolicy::RoundRobin,
+        "priority" => SchedPolicy::Priority,
+        other => bail!("run manifest: unknown sched policy {other:?}"),
+    };
+    let transport = TransportKind::parse(&m.transport)
+        .ok_or_else(|| anyhow!("run manifest: unknown transport {:?}", m.transport))?;
+    Ok(EngineOpts::new(&m.preset, strategy, m.workers, m.global_batch)
+        .exec(exec)
+        .seed(m.seed)
+        .fsdp_granularity(gran)
+        .rtp_recycle(m.rtp_recycle)
+        .async_rotation(m.async_rotation)
+        .sched_policy(sched)
+        .bucket_bytes(if m.bucket_bytes == 0 { None } else { Some(m.bucket_bytes) })
+        // worker-local field only; rank construction never consults it
+        .launcher(Launcher::Lockstep)
+        .transport(transport))
+}
+
+// ---------------------------------------------------------------------------
+// Parent: the Engine facade over N child processes
+// ---------------------------------------------------------------------------
+
+/// The mutable control-plane state, behind one lock so the `&self`
+/// gathers of the [`Engine`] trait stay sound.
+struct ProcState {
+    children: Vec<Option<Child>>,
+    ctl: Vec<Option<CtlConn>>,
+    /// Parent-detected process deaths, first detector wins.
+    dead: Vec<Option<RankFailure>>,
+    gather_seq: u64,
+}
+
+pub struct ProcessClusterEngine {
+    /// Facade bookkeeping only (config, world size). The real per-rank
+    /// trackers and fabric live in the children.
+    ctx: Ctx,
+    name: String,
+    n: usize,
+    dir: PathBuf,
+    st: Mutex<ProcState>,
+    /// How long a step may go without every reply before the control
+    /// plane itself gives up (a generous multiple of the data-plane
+    /// watchdog, which should always fire first).
+    reply_budget: Duration,
+}
+
+fn worker_exe() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("RTP_WORKER_EXE") {
+        if !p.trim().is_empty() {
+            return Ok(PathBuf::from(p));
+        }
+    }
+    std::env::current_exe().context("resolving the rtp worker executable")
+}
+
+fn env_timeout_ms() -> u64 {
+    std::env::var("RTP_FABRIC_TIMEOUT_SECS")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .map(|s| s * 1000)
+        .unwrap_or(20_000)
+}
+
+fn env_retries() -> u64 {
+    std::env::var("RTP_FABRIC_RETRIES")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .unwrap_or(0)
+}
+
+/// Reap dead children: record the typed failure and write the
+/// `dead-<rank>` marker the data-plane recv loops poll, so blocked peers
+/// unwind with [`FailureKind::PeerExit`] instead of waiting out their
+/// watchdog.
+fn reap_children(st: &mut ProcState, dir: &Path) {
+    for r in 0..st.children.len() {
+        if st.dead[r].is_some() {
+            continue;
+        }
+        let status = match st.children[r].as_mut() {
+            Some(c) => match c.try_wait() {
+                Ok(Some(s)) => s,
+                _ => continue,
+            },
+            None => continue,
+        };
+        let how = match status.signal() {
+            Some(sig) => format!("killed by signal {sig}"),
+            None => format!("exited with status {}", status.code().unwrap_or(-1)),
+        };
+        let _ = std::fs::write(dir.join(format!("dead-{r}")), how.as_bytes());
+        st.dead[r] = Some(RankFailure {
+            failed_rank: r,
+            kind: FailureKind::PeerExit,
+            detail: format!("rank {r} worker process {how} mid-run (Launcher::Process)"),
+        });
+    }
+}
+
+fn first_death(st: &ProcState) -> Option<RankFailure> {
+    st.dead.iter().flatten().next().cloned()
+}
+
+/// Send `op` to every live worker. A broken control pipe is left for the
+/// reply sweep to classify.
+fn broadcast(st: &mut ProcState, dir: &Path, op: u8, payload: &[u8]) -> Result<()> {
+    reap_children(st, dir);
+    if let Some(f) = first_death(st) {
+        return Err(anyhow::Error::new(f));
+    }
+    for r in 0..st.ctl.len() {
+        if st.dead[r].is_some() {
+            continue;
+        }
+        if let Some(c) = st.ctl[r].as_mut() {
+            let _ = send_frame(&mut c.s, op, payload);
+        }
+    }
+    Ok(())
+}
+
+/// Collect one reply frame from every rank not known dead. Returns
+/// per-rank OK payloads; a parent-detected process death beats any
+/// secondary error a surviving worker reported.
+fn collect_replies(
+    st: &mut ProcState,
+    dir: &Path,
+    budget: Duration,
+) -> Result<Vec<Option<Vec<u8>>>> {
+    let n = st.ctl.len();
+    let mut out: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+    let mut errs: Vec<(usize, String)> = Vec::new();
+    let mut pending: Vec<usize> = (0..n).filter(|&r| st.dead[r].is_none()).collect();
+    let deadline = Instant::now() + budget;
+    while !pending.is_empty() {
+        reap_children(st, dir);
+        pending.retain(|&r| st.dead[r].is_none());
+        let mut progressed = false;
+        let sweep: Vec<usize> = pending.clone();
+        for r in sweep {
+            let res = match st.ctl[r].as_mut() {
+                Some(c) => c.poll_frame(),
+                None => continue,
+            };
+            match res {
+                Ok(Some((op, payload))) => {
+                    progressed = true;
+                    pending.retain(|&p| p != r);
+                    if op == OP_OK {
+                        out[r] = Some(payload);
+                    } else {
+                        errs.push((r, String::from_utf8_lossy(&payload).into_owned()));
+                    }
+                }
+                Ok(None) => {}
+                Err(_) => {
+                    // EOF without a frame: the process is gone (or going);
+                    // reap it so the marker file is written
+                    progressed = true;
+                    pending.retain(|&p| p != r);
+                    reap_children(st, dir);
+                    if st.dead[r].is_none() {
+                        // hung up but not yet waitable — classify as a
+                        // peer exit anyway
+                        let _ = std::fs::write(
+                            dir.join(format!("dead-{r}")),
+                            b"control EOF",
+                        );
+                        st.dead[r] = Some(RankFailure {
+                            failed_rank: r,
+                            kind: FailureKind::PeerExit,
+                            detail: format!(
+                                "rank {r} worker closed its control socket \
+                                 mid-run (Launcher::Process)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        if !progressed {
+            if Instant::now() > deadline {
+                bail!(
+                    "Launcher::Process control protocol stalled: ranks {pending:?} \
+                     never replied within {budget:?}"
+                );
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    if let Some(f) = first_death(st) {
+        return Err(anyhow::Error::new(f));
+    }
+    if let Some((r, msg)) = errs.into_iter().next() {
+        bail!("rank {r}: {msg}");
+    }
+    Ok(out)
+}
+
+impl ProcessClusterEngine {
+    /// Build with the ambient watchdog budget (`RTP_FABRIC_TIMEOUT_SECS`
+    /// / `RTP_FABRIC_RETRIES` in the workers' inherited env).
+    pub fn build(opts: &EngineOpts) -> Result<ProcessClusterEngine> {
+        Self::build_with(opts, 0, 0)
+    }
+
+    /// Build with an explicit per-worker recv watchdog: `fabric_timeout_ms`
+    /// (0 = env default) and `fabric_retries_plus1` (0 = env default,
+    /// `v` = v-1 retries) ride to every worker in the run manifest. Test
+    /// hook — the fault suite shortens the watchdog without mutating
+    /// process-global env.
+    pub fn build_with(
+        opts: &EngineOpts,
+        fabric_timeout_ms: u64,
+        fabric_retries_plus1: u64,
+    ) -> Result<ProcessClusterEngine> {
+        let cfg = opts.cfg()?;
+        if opts.strategy == Strategy::Single {
+            bail!(
+                "Launcher::Process needs at least 2 ranks; the single \
+                 engine is one rank by definition"
+            );
+        }
+        let workers = opts.workers;
+        if workers < 2 {
+            bail!("Launcher::Process needs at least 2 workers, got {workers}");
+        }
+        // the process launcher NEEDS a byte transport; default the
+        // in-process kind up to shm rather than failing
+        let transport = match opts.transport {
+            TransportKind::Inproc => TransportKind::Shm,
+            t => t,
+        };
+
+        let dir = unique_endpoint_dir(&shm_base_dir(), "run");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating run dir {}", dir.display()))?;
+        let manifest = manifest_of(
+            opts,
+            workers,
+            transport,
+            fabric_timeout_ms,
+            fabric_retries_plus1,
+        );
+        let manifest_path = dir.join("manifest.json");
+        manifest.save(&manifest_path)?;
+
+        let listener = UnixListener::bind(dir.join("ctl.sock"))
+            .with_context(|| format!("binding control socket in {}", dir.display()))?;
+        listener.set_nonblocking(true)?;
+
+        let exe = worker_exe()?;
+        let mut children: Vec<Option<Child>> = Vec::with_capacity(workers);
+        for r in 0..workers {
+            let child = Command::new(&exe)
+                .arg("worker")
+                .arg("--manifest")
+                .arg(&manifest_path)
+                .arg("--rank")
+                .arg(r.to_string())
+                .spawn()
+                .with_context(|| format!("spawning worker {r} via {}", exe.display()))?;
+            children.push(Some(child));
+        }
+
+        let engine = ProcessClusterEngine {
+            ctx: Ctx {
+                cfg,
+                par: ParallelCfg {
+                    strategy: opts.strategy,
+                    workers,
+                    global_batch: opts.global_batch,
+                },
+                exec: Exec::Virtual,
+                cluster: Cluster::new_with_transport(workers, None, TransportKind::Inproc),
+                timeline: None,
+            },
+            name: opts.engine_name(),
+            n: workers,
+            dir,
+            st: Mutex::new(ProcState {
+                children,
+                ctl: (0..workers).map(|_| None).collect(),
+                dead: (0..workers).map(|_| None).collect(),
+                gather_seq: 0,
+            }),
+            reply_budget: {
+                let t = if fabric_timeout_ms > 0 {
+                    fabric_timeout_ms
+                } else {
+                    env_timeout_ms()
+                };
+                let retries = if fabric_retries_plus1 > 0 {
+                    fabric_retries_plus1 - 1
+                } else {
+                    env_retries()
+                };
+                Duration::from_millis(t * (retries + 1) + 30_000)
+            },
+        };
+
+        {
+            let st = &mut *engine.st.lock().unwrap();
+            accept_workers(st, &engine.dir, &listener, workers)?;
+            // every worker sends one READY (OP_OK) frame once its fabric
+            // has rendezvoused and its rank engine is constructed
+            collect_replies(st, &engine.dir, Duration::from_secs(300))
+                .context("waiting for workers to construct their rank engines")?;
+        }
+        Ok(engine)
+    }
+
+    fn roundtrip(&self, op: u8, payload: &[u8]) -> Result<Vec<Option<Vec<u8>>>> {
+        let st = &mut *self.st.lock().unwrap();
+        broadcast(st, &self.dir, op, payload)?;
+        collect_replies(st, &self.dir, self.reply_budget)
+    }
+
+    fn gather(&self, op: u8) -> ModelParams {
+        let path = {
+            let st = &mut *self.st.lock().unwrap();
+            st.gather_seq += 1;
+            self.dir.join(format!("gather-{}.ckpt", st.gather_seq))
+        };
+        let what = if op == OP_GATHER_P { "params" } else { "grads" };
+        self.roundtrip(op, path.to_string_lossy().as_bytes())
+            .unwrap_or_else(|e| panic!("process gather_{what} failed: {e:#}"));
+        let full = load_params(&self.ctx.cfg, &path)
+            .unwrap_or_else(|e| panic!("process gather_{what} failed: {e:#}"));
+        let _ = std::fs::remove_file(&path);
+        full
+    }
+
+    /// The rendezvous dir (manifest, control socket, transport endpoints,
+    /// dead-rank markers). Test hook.
+    pub fn endpoint_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// OS pid of rank `r`'s worker process. Test hook.
+    pub fn worker_pid(&self, r: usize) -> Option<u32> {
+        self.st.lock().unwrap().children[r].as_ref().map(|c| c.id())
+    }
+
+    /// SIGKILL rank `r`'s worker — the real-cluster fault the in-process
+    /// injection harness simulates. Test hook. The death is NOT recorded
+    /// eagerly: the next step discovers it exactly as it would discover
+    /// an external kill (waitpid + dead-rank marker + typed PeerExit).
+    pub fn kill_worker(&self, r: usize) {
+        let st = &mut *self.st.lock().unwrap();
+        if let Some(c) = st.children[r].as_mut() {
+            let _ = c.kill();
+        }
+    }
+}
+
+fn accept_workers(
+    st: &mut ProcState,
+    dir: &Path,
+    listener: &UnixListener,
+    n: usize,
+) -> Result<()> {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut connected = 0;
+    while connected < n {
+        match listener.accept() {
+            Ok((mut s, _)) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(Duration::from_secs(10)))?;
+                let mut rank_buf = [0u8; 4];
+                s.read_exact(&mut rank_buf)
+                    .context("reading worker rank handshake")?;
+                let rank = u32::from_le_bytes(rank_buf) as usize;
+                if rank >= n || st.ctl[rank].is_some() {
+                    bail!("bogus worker handshake for rank {rank}");
+                }
+                s.set_read_timeout(None)?;
+                s.set_nonblocking(true)?;
+                st.ctl[rank] = Some(CtlConn { s, buf: Vec::new() });
+                connected += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // a worker that died before connecting will never show up
+                reap_children(st, dir);
+                if let Some(r) =
+                    (0..n).find(|&r| st.dead[r].is_some() && st.ctl[r].is_none())
+                {
+                    bail!(
+                        "worker {r} died during startup: {}",
+                        st.dead[r].as_ref().unwrap()
+                    );
+                }
+                if Instant::now() > deadline {
+                    bail!("workers did not rendezvous within 60s");
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+impl Engine for ProcessClusterEngine {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let mut payload = Vec::new();
+        enc_batch(batch, &mut payload);
+        let replies = self.roundtrip(OP_STEP, &payload)?;
+        let mut loss_sum = 0.0f32;
+        for (r, reply) in replies.iter().enumerate() {
+            let p = reply
+                .as_ref()
+                .ok_or_else(|| anyhow!("rank {r} sent no step reply"))?;
+            if p.len() != 4 {
+                bail!("rank {r} step reply malformed ({} bytes)", p.len());
+            }
+            loss_sum += f32::from_le_bytes([p[0], p[1], p[2], p[3]]);
+        }
+        Ok(loss_sum / self.n as f32)
+    }
+
+    fn gather_params(&self) -> ModelParams {
+        self.gather(OP_GATHER_P)
+    }
+
+    fn gather_grads(&self) -> ModelParams {
+        self.gather(OP_GATHER_G)
+    }
+
+    fn visit_owned(&mut self, _f: &mut dyn FnMut(&mut HostTensor, &HostTensor)) {
+        panic!(
+            "Launcher::Process: visit_owned cannot cross a process boundary. \
+             Train under lockstep/thread, or move state through \
+             gather_params checkpoints."
+        );
+    }
+
+    fn zero_grads(&mut self) {
+        self.roundtrip(OP_ZERO, &[])
+            .unwrap_or_else(|e| panic!("process zero_grads failed: {e:#}"));
+    }
+
+    fn load_full(&mut self, _full: &ModelParams) -> Result<()> {
+        bail!(
+            "Launcher::Process: load_full is not supported — restore \
+             checkpoints under an in-process launcher"
+        )
+    }
+
+    fn ctx(&self) -> &Ctx {
+        &self.ctx
+    }
+
+    fn ctx_mut(&mut self) -> &mut Ctx {
+        &mut self.ctx
+    }
+}
+
+impl Drop for ProcessClusterEngine {
+    fn drop(&mut self) {
+        let st = &mut *self.st.lock().unwrap();
+        for r in 0..self.n {
+            if st.dead[r].is_none() {
+                if let Some(c) = st.ctl[r].as_mut() {
+                    let _ = send_frame(&mut c.s, OP_SHUTDOWN, &[]);
+                }
+            }
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        for child in st.children.iter_mut().flatten() {
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10))
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+        // transport endpoints (shm rings, sockets), manifest, markers —
+        // all gone; the fault suite asserts no leaked segments
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker: the `rtp worker` re-entrant mode
+// ---------------------------------------------------------------------------
+
+fn connect_ctl(dir: &Path) -> Result<UnixStream> {
+    let path = dir.join("ctl.sock");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match UnixStream::connect(&path) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() > deadline {
+                    return Err(e)
+                        .with_context(|| format!("connecting to {}", path.display()));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "rank body panicked".to_string()
+    }
+}
+
+/// Entry point of `rtp worker --manifest M --rank R`: build this rank's
+/// engine from the run manifest, rendezvous the per-process fabric, and
+/// serve control commands until shutdown (or parent EOF).
+pub fn worker_main(args: &Args) -> Result<()> {
+    let mpath = PathBuf::from(
+        args.get("manifest")
+            .ok_or_else(|| anyhow!("rtp worker needs --manifest"))?,
+    );
+    let rank: usize = args
+        .get("rank")
+        .ok_or_else(|| anyhow!("rtp worker needs --rank"))?
+        .parse()
+        .map_err(|_| anyhow!("--rank expects an integer"))?;
+    let m = RunManifest::load_run(&mpath)?;
+    let dir = mpath
+        .parent()
+        .ok_or_else(|| anyhow!("manifest path has no parent dir"))?
+        .to_path_buf();
+    // handshake first, so the parent can tell "slow build" from "dead"
+    let mut ctl = connect_ctl(&dir)?;
+    ctl.write_all(&(rank as u32).to_le_bytes())?;
+    if let Err(e) = worker_run(&m, rank, &dir, &mut ctl) {
+        let _ = send_frame(&mut ctl, OP_ERR, format!("{e:#}").as_bytes());
+        std::process::exit(101);
+    }
+    Ok(())
+}
+
+fn worker_run(
+    m: &RunManifest,
+    rank: usize,
+    dir: &Path,
+    ctl: &mut UnixStream,
+) -> Result<()> {
+    let opts = opts_of(m)?;
+    let cfg = opts.cfg()?;
+    let par = ParallelCfg {
+        strategy: opts.strategy,
+        workers: m.workers,
+        global_batch: m.global_batch,
+    };
+    let kind = TransportKind::parse(&m.transport)
+        .ok_or_else(|| anyhow!("unknown transport {:?}", m.transport))?;
+    let fabric = RingFabric::new_remote(m.workers, rank, kind, dir)
+        .context("per-process fabric rendezvous")?;
+    if m.fabric_timeout_ms > 0 {
+        fabric.set_recv_timeout(Some(Duration::from_millis(m.fabric_timeout_ms)));
+    }
+    if m.fabric_retries_plus1 > 0 {
+        fabric.set_recv_retries(Some((m.fabric_retries_plus1 - 1) as u32));
+    }
+    let port = fabric.port(rank);
+    let mut exec = make_exec(opts.exec, &opts.preset)?;
+    let mut tracker = MemTracker::new(rank, None);
+    let trace = Mutex::new(TraceLog::default());
+    let mut engine = build_rank_engine(
+        &opts,
+        &cfg,
+        &par,
+        rank,
+        &mut exec,
+        &mut tracker,
+        port.clone(),
+        &trace,
+    )?;
+    let injector = opts.fault_plan.map(FaultInjector::new);
+    // process ranks are free-running OS processes: comm streams overlap
+    // for real whenever the engine asks for async rotation
+    let async_comm = m.async_rotation;
+
+    send_frame(ctl, OP_OK, &[])?; // READY
+    let mut steps_done: u64 = 0;
+    loop {
+        let (op, payload) = match read_frame(ctl) {
+            Ok(f) => f,
+            // parent gone (dropped, crashed, ^C): exit quietly
+            Err(_) => return Ok(()),
+        };
+        match op {
+            OP_STEP => {
+                let batch = dec_batch(&payload)?;
+                if let Some(f) = &injector {
+                    f.begin_step(steps_done);
+                }
+                steps_done += 1;
+                let res = fabric.run_remote_round(|| {
+                    let mut rctx = RankCtx {
+                        rank,
+                        cfg: &cfg,
+                        par: &par,
+                        exec: &mut exec,
+                        tracker: &mut tracker,
+                        port: port.clone(),
+                        timeline: None,
+                        trace_log: &trace,
+                        trace_on: false,
+                        async_comm,
+                        sched_policy: opts.sched_policy,
+                        bucket_bytes: opts.bucket_bytes,
+                        fault: injector.clone(),
+                    };
+                    engine.step_local(&mut rctx, &batch)
+                });
+                match res {
+                    Ok(Ok(loss)) => send_frame(ctl, OP_OK, &loss.to_le_bytes())?,
+                    Ok(Err(e)) => send_frame(ctl, OP_ERR, format!("{e:#}").as_bytes())?,
+                    Err(p) => {
+                        if p.downcast_ref::<RankDeath>().is_some() {
+                            // this rank IS the planned casualty: die like
+                            // the real process the plan simulates — no
+                            // reply, nonzero exit, peers see PeerExit
+                            std::process::exit(101);
+                        }
+                        let msg = fabric
+                            .rank_failure()
+                            .map(|f| f.to_string())
+                            .unwrap_or_else(|| panic_msg(p.as_ref()));
+                        send_frame(ctl, OP_ERR, msg.as_bytes())?;
+                    }
+                }
+            }
+            OP_ZERO => {
+                engine.zero_grads();
+                send_frame(ctl, OP_OK, &[])?;
+            }
+            OP_GATHER_P | OP_GATHER_G => {
+                let path =
+                    PathBuf::from(String::from_utf8_lossy(&payload).into_owned());
+                let res = fabric.run_remote_round(|| {
+                    if op == OP_GATHER_P {
+                        engine.gather_params_local(&port)
+                    } else {
+                        engine.gather_grads_local(&port)
+                    }
+                });
+                match res {
+                    Ok(full) => {
+                        if rank == 0 {
+                            save_params(&full, &path)?;
+                        }
+                        send_frame(ctl, OP_OK, &[])?;
+                    }
+                    Err(p) => {
+                        let msg = fabric
+                            .rank_failure()
+                            .map(|f| f.to_string())
+                            .unwrap_or_else(|| panic_msg(p.as_ref()));
+                        send_frame(ctl, OP_ERR, msg.as_bytes())?;
+                    }
+                }
+            }
+            OP_SHUTDOWN => {
+                let _ = send_frame(ctl, OP_OK, &[]);
+                return Ok(());
+            }
+            other => bail!("unknown control op {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_codec_roundtrips() {
+        let b = Batch {
+            ids: IntTensor::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]),
+            targets: IntTensor::from_vec(&[2, 3], vec![6, 5, 4, 3, 2, 1]),
+        };
+        let mut buf = Vec::new();
+        enc_batch(&b, &mut buf);
+        let back = dec_batch(&buf).unwrap();
+        assert_eq!(back.ids.shape, b.ids.shape);
+        assert_eq!(back.ids.data, b.ids.data);
+        assert_eq!(back.targets.data, b.targets.data);
+    }
+
+    #[test]
+    fn manifest_opts_roundtrip() {
+        let opts = EngineOpts::new("tiny", Strategy::RtpOutOfPlace, 4, 8)
+            .seed(7)
+            .rtp_recycle(false)
+            .async_rotation(false)
+            .bucket_bytes(Some(1 << 16))
+            .transport(TransportKind::Uds);
+        let m = manifest_of(&opts, 4, TransportKind::Uds, 1500, 3);
+        let back = opts_of(&m).unwrap();
+        assert_eq!(back.preset, "tiny");
+        assert_eq!(back.strategy, Strategy::RtpOutOfPlace);
+        assert_eq!(back.workers, 4);
+        assert_eq!(back.seed, 7);
+        assert!(!back.rtp_recycle);
+        assert!(!back.async_rotation);
+        assert_eq!(back.bucket_bytes, Some(1 << 16));
+        assert_eq!(back.transport, TransportKind::Uds);
+        assert_eq!(m.fabric_timeout_ms, 1500);
+        assert_eq!(m.fabric_retries_plus1, 3);
+    }
+
+    #[test]
+    fn process_engine_rejects_single() {
+        let opts =
+            EngineOpts::new("tiny", Strategy::Single, 2, 4).launcher(Launcher::Process);
+        assert!(ProcessClusterEngine::build(&opts).is_err());
+    }
+}

@@ -168,6 +168,13 @@ pub fn build_serve_engine_with_params(
 ) -> Result<ServeEngine> {
     let cfg = opts.cfg()?;
     let n = opts.workers;
+    if opts.launcher == Launcher::Process {
+        bail!(
+            "serve does not support Launcher::Process: the decode engine \
+             streams KV state through engine-owned memory (use lockstep or \
+             thread)"
+        );
+    }
     if cfg.is_moe() {
         bail!("serve supports dense presets only (got MoE preset {:?})", cfg.name);
     }

@@ -4,9 +4,10 @@
 //! resume — a run killed at world size N continues at a new world size
 //! N' bit-identically to an uninterrupted run at N'.
 
+use rtp::comm::TransportKind;
 use rtp::config::{presets, OptimizerKind, Strategy};
 use rtp::parallel::{build_engine, Engine, EngineOpts, ExecKind, Launcher};
-use rtp::runtime::{FailureKind, FaultPhase, FaultPlan, RankFailure};
+use rtp::runtime::{FailureKind, FaultPhase, FaultPlan, ProcessClusterEngine, RankFailure};
 use rtp::train::{
     capture_train_state, load_train_state, restore_train_state, save_train_state,
     MarkovCorpus, Optimizer,
@@ -335,4 +336,81 @@ fn killed_at_n_resumes_at_new_world_size_bit_identically() {
             "{tag}: recovered params diverged from never-faulted resume"
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// Launcher::Process: the REAL fault the in-process injection harness
+// simulates — a worker OS process SIGKILLed out from under the run.
+// The parent must surface it as the same typed RankFailure the
+// injection matrix produces (kind PeerExit, correct rank), promptly
+// (no watchdog-length hang), and tear the run down without leaking the
+// rendezvous dir and its shm ring segments.
+// ---------------------------------------------------------------------
+
+#[test]
+fn process_sigkill_is_typed_peer_exit_with_no_leaked_segments() {
+    std::env::set_var("RTP_WORKER_EXE", env!("CARGO_BIN_EXE_rtp"));
+    let opts = EngineOpts::new("tiny", Strategy::Ddp, 4, 4)
+        .exec(ExecKind::Oracle)
+        .launcher(Launcher::Process)
+        .transport(TransportKind::Shm);
+    // short per-worker recv watchdog via the manifest (not process env):
+    // survivors blocked on the dead peer must fail fast
+    let mut eng = ProcessClusterEngine::build_with(&opts, 2_000, 1).unwrap();
+    let dir = eng.endpoint_dir().to_path_buf();
+    let cfg = presets::get("tiny").unwrap();
+    let mut corpus = MarkovCorpus::new(&cfg, 7);
+
+    // step 0 is healthy — the kill hits a warmed-up run
+    let b = corpus.next_batch(4);
+    eng.step(&b).unwrap();
+
+    // SIGKILL rank 2's process from a side thread while the main thread
+    // keeps stepping: the signal lands either mid-step (survivors poll
+    // the dead-rank marker out of their fabric recv, the parent reaps
+    // the corpse mid-collect) or between steps (reaped at the next
+    // broadcast) — both paths must surface the SAME typed failure
+    let victim_pid = eng.worker_pid(2).expect("rank 2 has a live worker");
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        std::process::Command::new("kill")
+            .args(["-KILL", &victim_pid.to_string()])
+            .status()
+            .expect("spawn kill(1)");
+    });
+    let t0 = std::time::Instant::now();
+    let mut failure = None;
+    for _ in 0..1000 {
+        let b = corpus.next_batch(4);
+        match eng.step(&b) {
+            Ok(_) => continue,
+            Err(e) => {
+                failure = Some(e);
+                break;
+            }
+        }
+    }
+    killer.join().unwrap();
+    let err = failure.expect("SIGKILLed worker never failed a step");
+    let f = err
+        .downcast_ref::<RankFailure>()
+        .unwrap_or_else(|| panic!("untyped failure from SIGKILL: {err:#}"));
+    assert_eq!(f.failed_rank, 2, "wrong rank blamed: {f}");
+    assert_eq!(f.kind, FailureKind::PeerExit, "wrong failure kind: {f}");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(60),
+        "death took {:?} to surface — hang?",
+        t0.elapsed()
+    );
+
+    // teardown reclaims the rendezvous dir — manifest, control socket,
+    // AND every shm ring segment lives under it, so existence is the
+    // leak check
+    assert!(dir.exists(), "endpoint dir vanished while the engine was live");
+    drop(eng);
+    assert!(
+        !dir.exists(),
+        "leaked rendezvous dir (shm segments): {}",
+        dir.display()
+    );
 }

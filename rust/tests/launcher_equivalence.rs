@@ -13,7 +13,7 @@
 //! drop messages, and a simulated OOM must abort a round cleanly even
 //! with a comm-stream rotation in flight.
 
-use rtp::comm::{CollectiveStream, LaunchPolicy, RingFabric, SchedPolicy};
+use rtp::comm::{CollectiveStream, LaunchPolicy, RingFabric, SchedPolicy, TransportKind};
 use rtp::config::Strategy;
 use rtp::model::ModelParams;
 use rtp::parallel::fsdp::Granularity;
@@ -492,6 +492,117 @@ fn virtual_mode_peaks_are_launcher_invariant() {
             "{strategy}: peaks diverge across launchers"
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// Launcher::Process: the SAME bit-identity contract, but the ranks are
+// real OS processes (re-entrant `rtp worker` mode) and every data-plane
+// hop crosses a byte transport (shm ring / unix socket). The parent
+// drives steps and gathers over the control socket; results must match
+// the in-process Lockstep oracle exactly — same build path, same global
+// batch, same rank-order loss reduction, binary-exact param roundtrip.
+// ---------------------------------------------------------------------
+
+/// Explicit in-process reference: Lockstep launcher on pure lanes,
+/// regardless of what `RTP_TRANSPORT`/`RTP_LAUNCHER` the ambient CI
+/// matrix leg sets.
+fn run_reference(
+    preset: &str,
+    strategy: Strategy,
+    n: usize,
+    steps: usize,
+) -> (Vec<f32>, ModelParams, ModelParams) {
+    let opts = EngineOpts::new(preset, strategy, n, n.max(2))
+        .exec(ExecKind::Oracle)
+        .launcher(Launcher::Lockstep)
+        .transport(TransportKind::Inproc);
+    let cfg = opts.cfg().unwrap();
+    let mut e = build_engine(&opts).unwrap();
+    let mut rng = Rng::new(7);
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        let batch = Batch::synth(&cfg, n.max(2), &mut rng);
+        losses.push(e.step(&batch).unwrap());
+    }
+    (losses, e.gather_params(), e.gather_grads())
+}
+
+/// Like [`run`] but through real worker processes on `transport`.
+fn run_process(
+    preset: &str,
+    strategy: Strategy,
+    n: usize,
+    transport: TransportKind,
+    steps: usize,
+) -> (Vec<f32>, ModelParams, ModelParams) {
+    // the workers must run THIS build's binary, not whatever `rtp` is on
+    // PATH (idempotent across parallel tests — same value everywhere)
+    std::env::set_var("RTP_WORKER_EXE", env!("CARGO_BIN_EXE_rtp"));
+    let opts = EngineOpts::new(preset, strategy, n, n.max(2))
+        .exec(ExecKind::Oracle)
+        .launcher(Launcher::Process)
+        .transport(transport);
+    let cfg = opts.cfg().unwrap();
+    let mut e = build_engine(&opts).unwrap();
+    let mut rng = Rng::new(7);
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        let batch = Batch::synth(&cfg, n.max(2), &mut rng);
+        losses.push(e.step(&batch).unwrap());
+    }
+    (losses, e.gather_params(), e.gather_grads())
+}
+
+fn assert_process_bit_identical(strategy: Strategy, n: usize, transport: TransportKind) {
+    let (l_loss, l_p, l_g) = run_reference("tiny", strategy, n, 2);
+    let (p_loss, p_p, p_g) = run_process("tiny", strategy, n, transport, 2);
+    let t = transport.name();
+    assert_eq!(l_loss, p_loss, "{strategy} N={n} via {t}: losses diverge");
+    assert_eq!(l_p, p_p, "{strategy} N={n} via {t}: gathered params diverge");
+    assert_eq!(l_g, p_g, "{strategy} N={n} via {t}: gathered grads diverge");
+}
+
+#[test]
+fn process_launcher_ddp_is_bit_identical() {
+    for n in [2, 4] {
+        assert_process_bit_identical(Strategy::Ddp, n, TransportKind::Shm);
+    }
+}
+
+#[test]
+fn process_launcher_fsdp_is_bit_identical() {
+    for n in [2, 4] {
+        assert_process_bit_identical(Strategy::Fsdp, n, TransportKind::Shm);
+    }
+}
+
+#[test]
+fn process_launcher_tp_is_bit_identical() {
+    for n in [2, 4] {
+        assert_process_bit_identical(Strategy::MegatronTp, n, TransportKind::Shm);
+    }
+}
+
+#[test]
+fn process_launcher_rtp_inplace_is_bit_identical() {
+    for n in [2, 4] {
+        assert_process_bit_identical(Strategy::RtpInplace, n, TransportKind::Shm);
+    }
+}
+
+#[test]
+fn process_launcher_rtp_outofplace_is_bit_identical() {
+    for n in [2, 4] {
+        assert_process_bit_identical(Strategy::RtpOutOfPlace, n, TransportKind::Shm);
+    }
+}
+
+#[test]
+fn process_launcher_uds_smoke_is_bit_identical() {
+    // the portable Unix-socket reference backend, one engine per ring
+    // size — the full five-engine matrix above runs on shm
+    assert_process_bit_identical(Strategy::Ddp, 2, TransportKind::Uds);
+    assert_process_bit_identical(Strategy::RtpOutOfPlace, 4, TransportKind::Uds);
 }
 
 #[test]

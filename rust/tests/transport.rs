@@ -1,0 +1,193 @@
+//! The pluggable-transport contract across every backend that can carry
+//! a fabric link — in-process lanes (`inproc`), the shared-memory SPSC
+//! ring (`shm`) and the Unix-socket reference (`uds`):
+//!
+//! * the data plane is BIT-IDENTICAL: the same engine on the same seed
+//!   produces the same losses/params/grads whichever bytes carry the
+//!   hops (the transport moves payloads, the lanes keep FIFO order);
+//! * watchdog diagnostics are uniform: a stalled link panics with the
+//!   link identity AND the backend name, and the
+//!   `set_recv_timeout`/`set_recv_retries` overrides are honored the
+//!   same way on every backend;
+//! * shm hygiene: a fabric that owns ring segments removes them (and
+//!   their directory) on drop — no `/dev/shm` litter per run.
+
+use std::time::{Duration, Instant};
+
+use rtp::comm::{self, LaunchPolicy, RingFabric, RotationDir, TransportKind};
+use rtp::config::Strategy;
+use rtp::model::ModelParams;
+use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind, Launcher};
+use rtp::util::rng::Rng;
+
+const KINDS: [TransportKind; 3] =
+    [TransportKind::Inproc, TransportKind::Shm, TransportKind::Uds];
+
+#[test]
+fn rotation_roundtrips_exactly_on_every_backend() {
+    // n full ring revolutions return every buffer to its owner bit-exact.
+    // 4096-elem frames x enough hops to wrap the shm ring several times
+    // (default ring 1 MiB, 16 KiB frames), so the ring's head/tail
+    // arithmetic is exercised past the wraparound boundary.
+    for kind in KINDS {
+        for n in [2usize, 4, 8] {
+            let fab = RingFabric::with_transport(n, kind);
+            let revs = 100usize;
+            let out = comm::spmd_with(&fab, LaunchPolicy::Threaded, |port| {
+                let r = port.rank();
+                let mut buf: Vec<f32> =
+                    (0..4096).map(|i| (r * 100_000 + i) as f32).collect();
+                for _ in 0..revs * n {
+                    buf = comm::rotate_ring_vec(&port, buf, RotationDir::Clockwise);
+                }
+                buf
+            });
+            for (r, buf) in out.iter().enumerate() {
+                let want: Vec<f32> =
+                    (0..4096).map(|i| (r * 100_000 + i) as f32).collect();
+                assert_eq!(buf, &want, "{kind:?} n={n}: rotation corrupted rank {r}");
+            }
+            assert_eq!(fab.in_flight(), 0, "{kind:?} n={n}: messages left in flight");
+        }
+    }
+}
+
+#[test]
+fn oversized_frames_roundtrip_on_every_backend() {
+    // a frame larger than half the shm ring takes the jumbo side-file
+    // path; the same payload must survive every backend byte-exact
+    for kind in KINDS {
+        let n = 2usize;
+        let fab = RingFabric::with_transport(n, kind);
+        let elems = 160_000usize; // 640 KB of f32 > half the 1 MiB ring
+        let out = comm::spmd_with(&fab, LaunchPolicy::Threaded, |port| {
+            let r = port.rank();
+            let mut buf: Vec<f32> = (0..elems).map(|i| (r + i) as f32).collect();
+            for _ in 0..n {
+                buf = comm::rotate_ring_vec(&port, buf, RotationDir::Clockwise);
+            }
+            buf
+        });
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf.len(), elems, "{kind:?}: jumbo frame truncated");
+            for (i, v) in buf.iter().enumerate() {
+                assert_eq!(*v, (r + i) as f32, "{kind:?} rank {r} elem {i}");
+            }
+        }
+        assert_eq!(fab.in_flight(), 0, "{kind:?}: messages left in flight");
+    }
+}
+
+fn run_engine(
+    strategy: Strategy,
+    n: usize,
+    launcher: Launcher,
+    kind: TransportKind,
+) -> (Vec<f32>, ModelParams, ModelParams) {
+    let opts = EngineOpts::new("tiny", strategy, n, n.max(2))
+        .exec(ExecKind::Oracle)
+        .launcher(launcher)
+        .transport(kind);
+    let cfg = opts.cfg().unwrap();
+    let mut e = build_engine(&opts).unwrap();
+    let mut rng = Rng::new(7);
+    let mut losses = Vec::new();
+    for _ in 0..2 {
+        let batch = Batch::synth(&cfg, n.max(2), &mut rng);
+        losses.push(e.step(&batch).unwrap());
+    }
+    (losses, e.gather_params(), e.gather_grads())
+}
+
+#[test]
+fn engines_are_bit_identical_across_backends() {
+    // the acceptance engine (out-of-place RTP: rotation + collectives +
+    // background comm streams) under the Thread launcher on each byte
+    // transport vs the in-process Lockstep oracle
+    let (r_loss, r_p, r_g) =
+        run_engine(Strategy::RtpOutOfPlace, 4, Launcher::Lockstep, TransportKind::Inproc);
+    for kind in KINDS {
+        let (t_loss, t_p, t_g) =
+            run_engine(Strategy::RtpOutOfPlace, 4, Launcher::Thread, kind);
+        assert_eq!(r_loss, t_loss, "{kind:?}: losses diverge");
+        assert_eq!(r_p, t_p, "{kind:?}: params diverge");
+        assert_eq!(r_g, t_g, "{kind:?}: grads diverge");
+    }
+}
+
+#[test]
+fn watchdog_names_backend_and_honors_overrides_on_every_backend() {
+    // rank 2 waits on a link whose upstream never sends: the stall must
+    // panic (not hang) naming the link AND the backend, after exactly
+    // the overridden timeout x (1 + retries) — the same knobs, the same
+    // semantics, whichever bytes carry the link
+    for kind in KINDS {
+        let fab = RingFabric::with_transport(3, kind);
+        fab.set_recv_timeout(Some(Duration::from_millis(120)));
+        fab.set_recv_retries(Some(2));
+        let t0 = Instant::now();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..3)
+                .map(|r| {
+                    let port = fab.port(r);
+                    Box::new(move || {
+                        if r == 2 {
+                            let _ = comm::rotate_ring_vec(
+                                &port,
+                                vec![0.0f32; 16],
+                                RotationDir::Clockwise,
+                            );
+                        }
+                    }) as Box<dyn FnOnce() + Send>
+                })
+                .collect();
+            fab.run_round(LaunchPolicy::Threaded, tasks);
+        }));
+        let payload = caught.expect_err("watchdog must fire");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        let name = kind.name();
+        assert!(msg.contains(&format!("via {name} transport")), "{kind:?}: {msg}");
+        assert!(msg.contains("link r1->r2"), "{kind:?}: {msg}");
+        assert!(msg.contains("threaded round watchdog"), "{kind:?}: {msg}");
+        // retry budget honored: 1 initial window + 2 retries >= 360 ms
+        assert!(
+            t0.elapsed() >= Duration::from_millis(360),
+            "{kind:?}: watchdog fired after {:?} — retry override ignored",
+            t0.elapsed()
+        );
+        let failure = fab.rank_failure().expect("typed failure recorded");
+        assert_eq!(failure.failed_rank, 1, "{kind:?}: wrong upstream blamed");
+        fab.set_recv_timeout(None);
+        fab.set_recv_retries(None);
+    }
+}
+
+#[test]
+fn shm_fabric_removes_its_ring_segments_on_drop() {
+    let fab = RingFabric::with_transport(4, TransportKind::Shm);
+    let dir = fab.shm_dir().expect("shm fabric owns a ring dir");
+    assert!(dir.exists(), "ring dir missing while fabric is live");
+    let rings = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().map_or(false, |x| x == "ring"))
+        .count();
+    assert!(rings > 0, "shm fabric created no ring files in {}", dir.display());
+    // exercise the rings so the drop tears down a USED fabric
+    let out = comm::spmd_with(&fab, LaunchPolicy::Threaded, |port| {
+        comm::rotate_ring_vec(&port, vec![port.rank() as f32; 64], RotationDir::Clockwise)
+    });
+    assert_eq!(out.len(), 4);
+    drop(fab);
+    assert!(!dir.exists(), "leaked shm ring dir {}", dir.display());
+}
+
+#[test]
+fn inproc_and_uds_fabrics_own_no_shm_dir() {
+    assert!(RingFabric::with_transport(2, TransportKind::Inproc).shm_dir().is_none());
+    assert!(RingFabric::with_transport(2, TransportKind::Uds).shm_dir().is_none());
+}
