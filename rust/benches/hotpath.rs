@@ -14,15 +14,21 @@
 //! also runs the multi-collective preset (bucketed allreduces + a
 //! latency-critical prefetch allgather in flight at once, fifo vs
 //! round-robin vs priority → the `multi_*` JSON keys) and a DDP
-//! policy × bucket-size ablation. Everything lands in
+//! policy × bucket-size ablation. Since the elastic-supervisor PR it
+//! also profiles recovery itself: a supervised run with an injected
+//! rank death reports the detect→quiesce→rebuild→restore wall-clock
+//! (`elastic_recovery_ms`) and the async checkpointer's per-submit
+//! stall on the step path (`ckpt_async_stall_ns` — the off-thread
+//! writer's acceptance bar: handing a snapshot over must never wait on
+//! disk). Everything lands in
 //! `figures/BENCH_overlap.json`, which CI's bench-smoke job diffs
 //! against the repo-root `BENCH_overlap.json` baseline
-//! (scripts/check_bench_overlap.py: overlap regressions > 10% or any
-//! steady-state alloc increase fail the job). `RTP_BENCH_QUICK=1` trims
-//! iteration counts for CI.
+//! (scripts/check_bench_overlap.py: overlap regressions > 10%, any
+//! steady-state alloc increase, or a recovery/stall bound blown fail
+//! the job). `RTP_BENCH_QUICK=1` trims iteration counts for CI.
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use rtp::bench_util::{bench, Table};
 use rtp::comm::{self, CollectiveStream, LaunchPolicy, RingFabric, RotationDir, SchedPolicy};
@@ -87,6 +93,7 @@ fn main() {
     async_rotation_profile(preset, &batch, &mut overlap);
     fsdp_profile(preset, &batch, &mut overlap);
     multi_collective_profile(&mut overlap);
+    elastic_profile(preset, &mut overlap);
     scheduler_ablation();
     overlap.insert("quick_mode".into(), Json::Bool(quick()));
     // read-merge-write: comm_microbench owns the transport_* keys in the
@@ -435,6 +442,105 @@ fn multi_collective_profile(obj: &mut BTreeMap<String, Json>) {
         Json::Num(rr.switches_per_step),
     );
     obj.insert("multi_rr_max_streak".into(), Json::Num(rr.max_streak as f64));
+}
+
+/// The elastic-supervisor acceptance measurement: a supervised DDP run
+/// under the Thread launcher with one injected rank death mid-run. The
+/// detect→quiesce→rebuild→restore wall-clock from the `RecoveryEvent`
+/// (less the policy-configured backoff sleep) is the
+/// `elastic_recovery_ms` gate — recovery must be bounded, not just
+/// eventual — and the async checkpointer's mean per-submit stall is the
+/// `ckpt_async_stall_ns` gate: the step thread hands snapshots to the
+/// off-thread writer without ever waiting on disk. Best of `reps` runs:
+/// both metrics are latency bounds, so the minimum is the
+/// machine-noise-resistant estimator; checkpoint counters aggregate
+/// over all reps.
+fn elastic_profile(preset: &str, obj: &mut BTreeMap<String, Json>) {
+    use rtp::config::OptimizerKind;
+    use rtp::runtime::{FaultPhase, FaultPlan, RecoveryMode, RecoveryPolicy, Supervisor};
+
+    let n = 4;
+    let steps: u64 = if quick() { 8 } else { 24 };
+    let reps = if quick() { 1 } else { 3 };
+    let ckpt = std::env::temp_dir()
+        .join(format!("rtp-bench-elastic-{}.ckpt", std::process::id()));
+    let policy = RecoveryPolicy {
+        mode: RecoveryMode::Shrink,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(1),
+        ..RecoveryPolicy::default()
+    };
+    let mut total_ms = f64::INFINITY;
+    let (mut rebuild_ms, mut restore_ms) = (0.0f64, 0.0f64);
+    let (mut from, mut to) = (n, n);
+    let (mut stall_ns, mut submitted, mut written, mut skipped) = (0u64, 0u64, 0u64, 0u64);
+    for _ in 0..reps {
+        // global batch 12 divides both the original and the shrunk world
+        // (4 → 3), so the shrink target is one rank below
+        let plan = FaultPlan { rank: 1, step: steps / 2, phase: FaultPhase::Backward };
+        let opts = EngineOpts::new(preset, Strategy::Ddp, n, 12)
+            .exec(ExecKind::Oracle)
+            .launcher(Launcher::Thread)
+            .seed(7)
+            .fault_plan(Some(plan));
+        let report = Supervisor::new(opts, OptimizerKind::Adam, 1e-2)
+            .policy(policy.clone())
+            .ckpt_every(2)
+            .ckpt_path(Some(ckpt.clone()))
+            .quiet(true)
+            .run(steps)
+            .unwrap();
+        assert_eq!(report.recoveries.len(), 1, "expected exactly one recovery");
+        let ev = &report.recoveries[0];
+        let tot = ev.total.saturating_sub(ev.backoff).as_secs_f64() * 1e3;
+        if tot < total_ms {
+            total_ms = tot;
+            rebuild_ms = ev.rebuild.as_secs_f64() * 1e3;
+            restore_ms = ev.restore.as_secs_f64() * 1e3;
+            from = ev.from_workers;
+            to = ev.to_workers;
+        }
+        stall_ns += report.ckpt.submit_stall_ns;
+        submitted += report.ckpt.submitted;
+        written += report.ckpt.written;
+        skipped += report.ckpt.skipped;
+    }
+    std::fs::remove_file(&ckpt).ok();
+    let stall_per_submit = stall_ns as f64 / submitted.max(1) as f64;
+
+    let mut t = Table::new(
+        &format!(
+            "elastic recovery — supervised DDP, {preset}, Thread launcher, N={n}, \
+             one injected rank death (best of {reps})"
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec![
+        "recovery total (less backoff)".into(),
+        format!("{total_ms:.2} ms"),
+    ]);
+    t.row(vec!["  rebuild at N'".into(), format!("{rebuild_ms:.2} ms")]);
+    t.row(vec![
+        "  restore from snapshot".into(),
+        format!("{restore_ms:.2} ms"),
+    ]);
+    t.row(vec!["world size".into(), format!("{from} -> {to}")]);
+    t.row(vec![
+        "ckpt submit stall / snapshot".into(),
+        format!(
+            "{stall_per_submit:.0} ns ({submitted} submitted, {written} written, \
+             {skipped} skipped)"
+        ),
+    ]);
+    t.print();
+    t.write_csv("hotpath_elastic").unwrap();
+
+    obj.insert("elastic_recovery_ms".into(), Json::Num(total_ms));
+    obj.insert("elastic_rebuild_ms".into(), Json::Num(rebuild_ms));
+    obj.insert("elastic_restore_ms".into(), Json::Num(restore_ms));
+    obj.insert("ckpt_async_stall_ns".into(), Json::Num(stall_per_submit));
+    obj.insert("ckpt_written".into(), Json::Num(written as f64));
+    obj.insert("ckpt_skipped".into(), Json::Num(skipped as f64));
 }
 
 /// §Perf ablation: policy × gradient-bucket size at the engine level

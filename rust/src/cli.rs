@@ -17,6 +17,7 @@ pub struct Args {
 /// Switch names (no value) recognized by the parser.
 const SWITCHES: &[&str] = &[
     "help", "quiet", "trace", "presets", "no-recycle", "no-capacity", "pallas",
+    "elastic",
 ];
 
 impl Args {

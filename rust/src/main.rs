@@ -16,7 +16,7 @@ use rtp::cli::Args;
 use rtp::config::{presets, OptimizerKind, Strategy, TrainCfg};
 use rtp::parallel::{build_engine, Batch, EngineOpts, ExecKind, Launcher};
 use rtp::perfmodel::{by_name, simulate, SimSpec};
-use rtp::runtime::FaultPlan;
+use rtp::runtime::{FaultPlan, RecoveryPolicy, Supervisor};
 use rtp::serve::{build_serve_engine, poisson_trace, ServeOpts};
 use rtp::train::{
     capture_train_state, load_train_state, restore_train_state, save_train_state, train,
@@ -42,6 +42,12 @@ SUBCOMMANDS
               the world size may differ from the one that saved it)
             --fault-plan rank=R,step=S,phase=forward|backward|rotation|collective
               (deterministically kill rank R at step S; or RTP_FAULT_PLAN env)
+            --elastic (supervise the run: recover in-process from rank
+              failures by shrinking to N' or respawning, resuming from the
+              latest async snapshot)
+            --ckpt-every K (elastic snapshot cadence in steps; default 10)
+            --recovery mode=shrink|respawn,max=3,backoff_ms=10,...
+              (elastic retry/backoff policy; or RTP_RECOVERY env)
             --seed S  --quiet
   simulate  model one step at paper scale (virtual mode)
             --preset gpt2-500m|...  --engine ...  --workers N
@@ -82,13 +88,11 @@ fn strategy(args: &Args) -> Result<Strategy> {
 }
 
 fn launcher(args: &Args) -> Result<Launcher> {
-    Ok(match args.get("launcher") {
-        None => Launcher::from_env(),
-        Some("lockstep") => Launcher::Lockstep,
-        Some("thread") | Some("threads") | Some("threaded") => Launcher::Thread,
-        Some("process") | Some("processes") => Launcher::Process,
-        Some(other) => bail!("unknown --launcher {other:?} (lockstep|thread|process)"),
-    })
+    match args.get("launcher") {
+        None => Ok(Launcher::from_env()),
+        Some(name) => Launcher::parse(name)
+            .ok_or_else(|| anyhow!("unknown --launcher {name:?} (lockstep|thread|process)")),
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -119,6 +123,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         .seed(tcfg.seed);
     if let Some(spec) = args.get("fault-plan") {
         opts = opts.fault_plan(Some(FaultPlan::parse(spec)?));
+    }
+    if let Some(spec) = args.get("recovery") {
+        opts = opts.recovery(Some(RecoveryPolicy::parse(spec)?));
+    }
+    if args.switch("elastic") {
+        return cmd_train_elastic(args, opts, &tcfg);
     }
     let cfg = opts.cfg()?;
     let mut engine = build_engine(&opts)?;
@@ -166,6 +176,66 @@ fn cmd_train(args: &Args) -> Result<()> {
         )?;
         save_train_state(&state, std::path::Path::new(path))?;
         println!("saved RTPC2 checkpoint to {path} (step {})", state.step);
+    }
+    Ok(())
+}
+
+/// `rtp train --elastic`: the supervised run — async off-thread
+/// snapshots every `--ckpt-every` steps (written crash-atomically to
+/// `--save` when given) and in-process recovery from rank failures per
+/// the `--recovery` / `RTP_RECOVERY` policy.
+fn cmd_train_elastic(args: &Args, opts: EngineOpts, tcfg: &TrainCfg) -> Result<()> {
+    if args.get("resume").is_some() {
+        bail!(
+            "--elastic does not combine with --resume: the supervisor seeds \
+             recovery from its own step-0 snapshot"
+        );
+    }
+    let cfg = opts.cfg()?;
+    println!(
+        "elastic training {} ({} params) with {} on {} workers, global batch {}",
+        opts.preset,
+        cfg.params_total(),
+        opts.strategy,
+        opts.workers,
+        opts.global_batch,
+    );
+    let mut sup = Supervisor::new(opts, tcfg.optimizer, tcfg.lr)
+        .ckpt_every(args.u64_or("ckpt-every", 10)?)
+        .ckpt_path(args.get("save").map(std::path::PathBuf::from))
+        .quiet(args.switch("quiet"));
+    let report = sup.run(tcfg.steps as u64)?;
+    let n = report.losses.len();
+    let (head, tail) = (
+        report.losses.iter().take(5).sum::<f32>() / 5f32.min(n as f32).max(1.0),
+        report.losses.iter().rev().take(5).sum::<f32>() / 5f32.min(n as f32).max(1.0),
+    );
+    println!(
+        "done: {} steps, {} recoveries, final world size {}, loss {head:.4} -> {tail:.4}",
+        report.steps,
+        report.recoveries.len(),
+        report.final_workers,
+    );
+    for ev in &report.recoveries {
+        println!(
+            "  step {}: rank {} failed; {} -> {} workers, resumed from step {} \
+             (backoff {:?}, rebuild {:?}, restore {:?}, total {:?})",
+            ev.at_step,
+            ev.failed_rank,
+            ev.from_workers,
+            ev.to_workers,
+            ev.resumed_from_step,
+            ev.backoff,
+            ev.rebuild,
+            ev.restore,
+            ev.total,
+        );
+    }
+    if let Some(path) = args.get("save") {
+        println!(
+            "async RTPC2 checkpoints to {path}: {} submitted, {} written, {} skipped",
+            report.ckpt.submitted, report.ckpt.written, report.ckpt.skipped
+        );
     }
     Ok(())
 }

@@ -12,6 +12,7 @@ use crate::config::{presets, ModelCfg, ParallelCfg, Strategy};
 use crate::memory::tracker::MemTracker;
 use crate::perfmodel::{Hardware, Timeline};
 use crate::runtime::fault::{FaultInjector, FaultPlan};
+use crate::runtime::supervisor::RecoveryPolicy;
 use crate::runtime::{artifacts_root, Exec, PjrtRuntime};
 
 use super::cluster_engine::ClusterEngine;
@@ -93,6 +94,12 @@ pub struct EngineOpts {
     /// injection). A plan whose coordinates never match leaves the run
     /// bit-identical to no plan at all.
     pub fault_plan: Option<FaultPlan>,
+    /// Elastic recovery policy for the supervisor (`rtp train --elastic`
+    /// / [`Supervisor`](crate::runtime::supervisor::Supervisor)):
+    /// shrink-vs-respawn preference, retry budget, backoff schedule.
+    /// `None` = the `RTP_RECOVERY` env (or defaults) at supervisor
+    /// construction.
+    pub recovery: Option<RecoveryPolicy>,
 }
 
 /// `RTP_BUCKET_BYTES` env knob: unset, empty or `0` = monolithic.
@@ -128,6 +135,7 @@ impl EngineOpts {
             sched_policy: SchedPolicy::from_env(),
             bucket_bytes: bucket_bytes_from_env(),
             fault_plan: FaultPlan::from_env(),
+            recovery: None,
         }
     }
 
@@ -181,6 +189,10 @@ impl EngineOpts {
     }
     pub fn fault_plan(mut self, p: Option<FaultPlan>) -> Self {
         self.fault_plan = p;
+        self
+    }
+    pub fn recovery(mut self, r: Option<RecoveryPolicy>) -> Self {
+        self.recovery = r;
         self
     }
 

@@ -87,6 +87,12 @@ impl ClusterEngine {
     pub fn rank_engines(&self) -> &[Box<dyn RankEngine>] {
         &self.ranks
     }
+
+    /// Steps run through this facade so far (global coordinates after a
+    /// [`set_step_base`](Engine::set_step_base) rebase).
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
+    }
 }
 
 impl Engine for ClusterEngine {
@@ -271,6 +277,13 @@ impl Engine for ClusterEngine {
             r.load_full(full)?;
         }
         Ok(())
+    }
+
+    fn set_step_base(&mut self, base: u64) {
+        // a rebuilt cluster resumes at the run's GLOBAL step index, so
+        // fault-plan step coordinates keep meaning "training step s"
+        // across elastic recoveries
+        self.steps_done = base;
     }
 
     fn ctx(&self) -> &Ctx {

@@ -50,10 +50,20 @@ impl Launcher {
     /// selects [`Launcher::Thread`]; anything else (or unset) is
     /// [`Launcher::Lockstep`].
     pub fn from_env() -> Launcher {
-        match std::env::var("RTP_LAUNCHER").as_deref() {
-            Ok("thread") | Ok("threads") | Ok("threaded") => Launcher::Thread,
-            Ok("process") | Ok("processes") => Launcher::Process,
-            _ => Launcher::Lockstep,
+        std::env::var("RTP_LAUNCHER")
+            .ok()
+            .and_then(|s| Launcher::parse(&s))
+            .unwrap_or(Launcher::Lockstep)
+    }
+
+    /// Parse a launcher name (the `RTP_LAUNCHER` / `--launcher`
+    /// vocabulary). `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Launcher> {
+        match s {
+            "lockstep" => Some(Launcher::Lockstep),
+            "thread" | "threads" | "threaded" => Some(Launcher::Thread),
+            "process" | "processes" => Some(Launcher::Process),
+            _ => None,
         }
     }
 

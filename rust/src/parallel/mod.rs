@@ -139,6 +139,13 @@ pub trait Engine {
     /// elastic-resume path — see [`RankEngine::load_full`].
     fn load_full(&mut self, full: &ModelParams) -> Result<()>;
 
+    /// Rebase the engine's step counter to GLOBAL coordinates. A cluster
+    /// rebuilt mid-run (elastic recovery, `--resume`) starts its internal
+    /// counter at 0; rebasing keeps fault-plan step matching and
+    /// step-indexed accounting aligned with the run's true step number.
+    /// Default: no-op (engines without a step counter).
+    fn set_step_base(&mut self, _base: u64) {}
+
     fn ctx(&self) -> &Ctx;
     fn ctx_mut(&mut self) -> &mut Ctx;
 }

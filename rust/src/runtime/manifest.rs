@@ -212,6 +212,13 @@ pub struct RunManifest {
     pub fabric_timeout_ms: u64,
     /// Recv-retry override stored as value+1; 0 = `RTP_FABRIC_RETRIES`.
     pub fabric_retries_plus1: u64,
+    /// Fabric epoch for elastic recovery: epoch 0 rendezvouses in the run
+    /// dir itself, epoch e > 0 in `ep<e>/` under it. Read tolerantly
+    /// (missing = 0) so pre-elastic manifests stay loadable.
+    pub epoch: u64,
+    /// Checkpoint file a (re)joining worker loads its shard from before
+    /// reporting READY; empty = fresh init. Read tolerantly (missing = "").
+    pub init_params: String,
 }
 
 impl RunManifest {
@@ -242,6 +249,8 @@ impl RunManifest {
             "fabric_retries_plus1".to_string(),
             Json::Num(self.fabric_retries_plus1 as f64),
         );
+        m.insert("epoch".to_string(), Json::Num(self.epoch as f64));
+        m.insert("init_params".to_string(), Json::Str(self.init_params.clone()));
         format!("{}", Json::Obj(m))
     }
 
@@ -280,6 +289,9 @@ impl RunManifest {
             transport: s("transport")?,
             fabric_timeout_ms: n("fabric_timeout_ms")?,
             fabric_retries_plus1: n("fabric_retries_plus1")?,
+            // elastic fields are tolerant: pre-elastic manifests lack them
+            epoch: j.get("epoch").as_f64().unwrap_or(0.0) as u64,
+            init_params: j.get("init_params").as_str().unwrap_or("").to_string(),
         })
     }
 
@@ -380,9 +392,29 @@ mod tests {
             transport: "shm".into(),
             fabric_timeout_ms: 2000,
             fabric_retries_plus1: 0,
+            epoch: 3,
+            init_params: "/tmp/ckpt-ep3.ckpt".into(),
         };
         let back = RunManifest::from_json(&m.to_json()).unwrap();
         assert_eq!(back, m);
+    }
+
+    #[test]
+    fn run_manifest_tolerates_missing_elastic_fields() {
+        // a pre-elastic manifest (no epoch/init_params keys) must load
+        // with epoch 0 and no init checkpoint
+        let text = concat!(
+            "{\"preset\":\"tiny\",\"strategy\":\"ddp\",\"workers\":2,",
+            "\"global_batch\":4,\"exec\":\"oracle\",\"seed\":\"1\",",
+            "\"fsdp_granularity\":\"layer\",\"rtp_recycle\":true,",
+            "\"async_rotation\":true,\"sched_policy\":\"fifo\",",
+            "\"bucket_bytes\":0,\"transport\":\"shm\",",
+            "\"fabric_timeout_ms\":0,\"fabric_retries_plus1\":0}"
+        );
+        let back = RunManifest::from_json(text).unwrap();
+        assert_eq!(back.epoch, 0);
+        assert_eq!(back.init_params, "");
+        assert_eq!(back.workers, 2);
     }
 
     #[test]

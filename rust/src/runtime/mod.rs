@@ -1,20 +1,25 @@
 //! Runtime: AOT artifact loading + PJRT execution + executor dispatch +
-//! fault injection.
+//! fault injection + elastic recovery.
 //!
 //! `manifest` parses the compile-path contract, `client` wraps the PJRT
 //! CPU client with an executable cache, `exec` is the three-way dispatch
-//! (pjrt / oracle / virtual) every engine computes through, and `fault`
+//! (pjrt / oracle / virtual) every engine computes through, `fault`
 //! is the deterministic rank-death harness (plans, injectors, and the
-//! typed `RankFailure` surviving ranks observe).
+//! typed `RankFailure` surviving ranks observe), and `supervisor` is the
+//! elastic driver that recovers a run in-process from those failures.
 
 pub mod client;
 pub mod exec;
 pub mod fault;
 pub mod manifest;
 pub mod proc;
+pub mod supervisor;
 
 pub use client::{PjrtRuntime, RtArg, RuntimeStats};
 pub use exec::{arg_of, ArgRef, Buf, Exec};
 pub use fault::{FailureKind, FaultInjector, FaultPhase, FaultPlan, RankDeath, RankFailure};
 pub use manifest::{artifacts_root, Manifest, RunManifest};
 pub use proc::{worker_main, ProcessClusterEngine};
+pub use supervisor::{
+    world_size_ok, RecoveryEvent, RecoveryMode, RecoveryPolicy, Supervisor, SupervisorReport,
+};

@@ -63,8 +63,53 @@ const OP_ZERO: u8 = 2;
 const OP_GATHER_P: u8 = 3;
 const OP_GATHER_G: u8 = 4;
 const OP_SHUTDOWN: u8 = 5;
+/// Elastic recovery: `[new_rank u32 le][utf8 path of the epoch manifest]`.
+/// The worker drops its (possibly poisoned) fabric and rank engine,
+/// reloads the manifest, re-rendezvouses in the new epoch's fabric dir,
+/// restores from `init_params`, and sends a fresh READY.
+const OP_REBUILD: u8 = 6;
 const OP_OK: u8 = 0x80;
 const OP_ERR: u8 = 0x81;
+
+/// Bounded exponential backoff for rendezvous/connect polling: sleeps
+/// 1ms, 2ms, 4ms, ... capped at 50ms, until the budget is spent. The
+/// caller turns exhaustion (`wait() == false`) into its own timeout
+/// error naming what never showed up.
+struct Backoff {
+    deadline: Instant,
+    cur: Duration,
+}
+
+impl Backoff {
+    fn new(budget: Duration) -> Backoff {
+        Backoff {
+            deadline: Instant::now() + budget,
+            cur: Duration::from_millis(1),
+        }
+    }
+
+    /// Sleep one interval and double it; `false` once the budget is gone.
+    fn wait(&mut self) -> bool {
+        if Instant::now() >= self.deadline {
+            return false;
+        }
+        std::thread::sleep(self.cur);
+        self.cur = (self.cur * 2).min(Duration::from_millis(50));
+        true
+    }
+}
+
+/// Where epoch `e`'s fabric rendezvouses: the run dir itself for the
+/// initial epoch, `ep<e>/` under it after an elastic rebuild. Dead-rank
+/// markers must land in the CURRENT epoch's dir — that is what live
+/// recv loops poll.
+fn fab_dir(dir: &Path, epoch: u64) -> PathBuf {
+    if epoch == 0 {
+        dir.to_path_buf()
+    } else {
+        dir.join(format!("ep{epoch}"))
+    }
+}
 
 /// `write_all` that rides out `WouldBlock` (the parent's control sockets
 /// are nonblocking for the reply poll loop; frames are small).
@@ -261,6 +306,8 @@ fn manifest_of(
         transport: transport.name().to_string(),
         fabric_timeout_ms,
         fabric_retries_plus1,
+        epoch: 0,
+        init_params: String::new(),
     }
 }
 
@@ -312,6 +359,13 @@ struct ProcState {
     /// Parent-detected process deaths, first detector wins.
     dead: Vec<Option<RankFailure>>,
     gather_seq: u64,
+    /// The parent's listening control socket, kept alive across elastic
+    /// rebuilds so respawned workers handshake into the SAME run.
+    listener: UnixListener,
+    /// The current epoch's fabric rendezvous dir — where `dead-<rank>`
+    /// markers go so blocked recv loops actually see them.
+    fab_dir: PathBuf,
+    epoch: u64,
 }
 
 pub struct ProcessClusterEngine {
@@ -321,6 +375,9 @@ pub struct ProcessClusterEngine {
     name: String,
     n: usize,
     dir: PathBuf,
+    /// The epoch-0 manifest; elastic rebuilds clone it with a new world
+    /// size / epoch / init checkpoint.
+    base_manifest: RunManifest,
     st: Mutex<ProcState>,
     /// How long a step may go without every reply before the control
     /// plane itself gives up (a generous multiple of the data-plane
@@ -356,7 +413,7 @@ fn env_retries() -> u64 {
 /// `dead-<rank>` marker the data-plane recv loops poll, so blocked peers
 /// unwind with [`FailureKind::PeerExit`] instead of waiting out their
 /// watchdog.
-fn reap_children(st: &mut ProcState, dir: &Path) {
+fn reap_children(st: &mut ProcState) {
     for r in 0..st.children.len() {
         if st.dead[r].is_some() {
             continue;
@@ -372,7 +429,7 @@ fn reap_children(st: &mut ProcState, dir: &Path) {
             Some(sig) => format!("killed by signal {sig}"),
             None => format!("exited with status {}", status.code().unwrap_or(-1)),
         };
-        let _ = std::fs::write(dir.join(format!("dead-{r}")), how.as_bytes());
+        let _ = std::fs::write(st.fab_dir.join(format!("dead-{r}")), how.as_bytes());
         st.dead[r] = Some(RankFailure {
             failed_rank: r,
             kind: FailureKind::PeerExit,
@@ -387,8 +444,8 @@ fn first_death(st: &ProcState) -> Option<RankFailure> {
 
 /// Send `op` to every live worker. A broken control pipe is left for the
 /// reply sweep to classify.
-fn broadcast(st: &mut ProcState, dir: &Path, op: u8, payload: &[u8]) -> Result<()> {
-    reap_children(st, dir);
+fn broadcast(st: &mut ProcState, op: u8, payload: &[u8]) -> Result<()> {
+    reap_children(st);
     if let Some(f) = first_death(st) {
         return Err(anyhow::Error::new(f));
     }
@@ -408,7 +465,6 @@ fn broadcast(st: &mut ProcState, dir: &Path, op: u8, payload: &[u8]) -> Result<(
 /// secondary error a surviving worker reported.
 fn collect_replies(
     st: &mut ProcState,
-    dir: &Path,
     budget: Duration,
 ) -> Result<Vec<Option<Vec<u8>>>> {
     let n = st.ctl.len();
@@ -417,7 +473,7 @@ fn collect_replies(
     let mut pending: Vec<usize> = (0..n).filter(|&r| st.dead[r].is_none()).collect();
     let deadline = Instant::now() + budget;
     while !pending.is_empty() {
-        reap_children(st, dir);
+        reap_children(st);
         pending.retain(|&r| st.dead[r].is_none());
         let mut progressed = false;
         let sweep: Vec<usize> = pending.clone();
@@ -442,12 +498,12 @@ fn collect_replies(
                     // reap it so the marker file is written
                     progressed = true;
                     pending.retain(|&p| p != r);
-                    reap_children(st, dir);
+                    reap_children(st);
                     if st.dead[r].is_none() {
                         // hung up but not yet waitable — classify as a
                         // peer exit anyway
                         let _ = std::fs::write(
-                            dir.join(format!("dead-{r}")),
+                            st.fab_dir.join(format!("dead-{r}")),
                             b"control EOF",
                         );
                         st.dead[r] = Some(RankFailure {
@@ -561,13 +617,18 @@ impl ProcessClusterEngine {
             },
             name: opts.engine_name(),
             n: workers,
-            dir,
+            base_manifest: manifest,
             st: Mutex::new(ProcState {
                 children,
                 ctl: (0..workers).map(|_| None).collect(),
                 dead: (0..workers).map(|_| None).collect(),
                 gather_seq: 0,
+                listener,
+                // epoch 0 rendezvouses in the run dir itself
+                fab_dir: dir.clone(),
+                epoch: 0,
             }),
+            dir,
             reply_budget: {
                 let t = if fabric_timeout_ms > 0 {
                     fabric_timeout_ms
@@ -585,10 +646,10 @@ impl ProcessClusterEngine {
 
         {
             let st = &mut *engine.st.lock().unwrap();
-            accept_workers(st, &engine.dir, &listener, workers)?;
+            accept_workers(st, &engine.dir, workers, Duration::from_secs(60))?;
             // every worker sends one READY (OP_OK) frame once its fabric
             // has rendezvoused and its rank engine is constructed
-            collect_replies(st, &engine.dir, Duration::from_secs(300))
+            collect_replies(st, Duration::from_secs(300))
                 .context("waiting for workers to construct their rank engines")?;
         }
         Ok(engine)
@@ -596,8 +657,8 @@ impl ProcessClusterEngine {
 
     fn roundtrip(&self, op: u8, payload: &[u8]) -> Result<Vec<Option<Vec<u8>>>> {
         let st = &mut *self.st.lock().unwrap();
-        broadcast(st, &self.dir, op, payload)?;
-        collect_replies(st, &self.dir, self.reply_budget)
+        broadcast(st, op, payload)?;
+        collect_replies(st, self.reply_budget)
     }
 
     fn gather(&self, op: u8) -> ModelParams {
@@ -636,18 +697,177 @@ impl ProcessClusterEngine {
             let _ = c.kill();
         }
     }
+
+    /// Where the CURRENT epoch's fabric rendezvouses (== `endpoint_dir`
+    /// until the first elastic rebuild). Test hook.
+    pub fn current_fabric_dir(&self) -> PathBuf {
+        self.st.lock().unwrap().fab_dir.clone()
+    }
+
+    /// Elastic recovery epoch (0 until the first rebuild). Test hook.
+    pub fn epoch(&self) -> u64 {
+        self.st.lock().unwrap().epoch
+    }
+
+    /// Current world size (shrinks across elastic rebuilds).
+    pub fn world_size(&self) -> usize {
+        self.n
+    }
+
+    /// Elastic in-run recovery after a [`RankFailure`]: rebuild the run
+    /// at world size `new_n`, restarting every surviving worker's rank
+    /// engine from the full-params checkpoint at `params` and respawning
+    /// fresh `rtp worker` processes for the remaining slots — into the
+    /// SAME rendezvous dir, over the SAME control listener.
+    ///
+    /// Survivors keep their relative order but are compacted to ranks
+    /// `0..k`; respawned workers take ranks `k..new_n`. Which OS process
+    /// hosts which rank does not matter for bit-identity: every worker
+    /// (survivor or fresh) rebuilds its rank engine from the manifest and
+    /// restores its shard from `params` via `load_full`, so the
+    /// post-recovery trajectory matches a fresh run at `new_n` resumed
+    /// from the same checkpoint.
+    ///
+    /// `new_n` may shrink to the survivor count (or below, if world-size
+    /// validity demands it — surplus survivors are shut down) or stay at
+    /// the original N (dead ranks respawned). Growing past the original
+    /// world size is not supported.
+    pub fn rebuild(&mut self, new_n: usize, params: &Path) -> Result<()> {
+        if new_n < 2 {
+            bail!("Launcher::Process needs at least 2 workers, got {new_n}");
+        }
+        let st = &mut *self.st.lock().unwrap();
+        let old_n = st.children.len();
+        if new_n > old_n {
+            bail!(
+                "elastic rebuild cannot grow past the original world size \
+                 ({old_n}), got {new_n}"
+            );
+        }
+        reap_children(st);
+        let survivors: Vec<usize> =
+            (0..old_n).filter(|&r| st.dead[r].is_none()).collect();
+        if survivors.is_empty() {
+            bail!("elastic rebuild: no surviving workers");
+        }
+        let keep: Vec<usize> = survivors.iter().copied().take(new_n).collect();
+        // surplus survivors (shrink below the survivor count): orderly
+        // shutdown, bounded wait, then force
+        for &r in survivors.iter().skip(new_n) {
+            if let Some(c) = st.ctl[r].as_mut() {
+                let _ = send_frame(&mut c.s, OP_SHUTDOWN, &[]);
+            }
+            st.ctl[r] = None;
+            if let Some(mut child) = st.children[r].take() {
+                wait_child(&mut child, Duration::from_secs(5));
+            }
+        }
+
+        let epoch = st.epoch + 1;
+        let fdir = fab_dir(&self.dir, epoch);
+        std::fs::create_dir_all(&fdir)
+            .with_context(|| format!("creating epoch fabric dir {}", fdir.display()))?;
+        let mut m = self.base_manifest.clone();
+        m.workers = new_n;
+        m.epoch = epoch;
+        m.init_params = params.to_string_lossy().into_owned();
+        let mpath = self.dir.join(format!("manifest-ep{epoch}.json"));
+        m.save(&mpath)?;
+
+        // reindex: kept survivors occupy ranks 0..keep.len() (their old
+        // Child + control conn move with them), fresh spawns fill the rest
+        let mut children: Vec<Option<Child>> = Vec::with_capacity(new_n);
+        let mut ctl: Vec<Option<CtlConn>> = Vec::with_capacity(new_n);
+        for &old_r in &keep {
+            children.push(st.children[old_r].take());
+            ctl.push(st.ctl[old_r].take());
+        }
+        let exe = worker_exe()?;
+        for new_r in keep.len()..new_n {
+            let child = Command::new(&exe)
+                .arg("worker")
+                .arg("--manifest")
+                .arg(&mpath)
+                .arg("--rank")
+                .arg(new_r.to_string())
+                .spawn()
+                .with_context(|| {
+                    format!("respawning worker {new_r} via {}", exe.display())
+                })?;
+            children.push(Some(child));
+            ctl.push(None);
+        }
+        st.children = children;
+        st.ctl = ctl;
+        st.dead = (0..new_n).map(|_| None).collect();
+        st.epoch = epoch;
+        st.fab_dir = fdir;
+
+        // survivors learn their new rank + manifest, drop the poisoned
+        // fabric, and re-rendezvous in the epoch dir
+        let mut payload = Vec::new();
+        for new_r in 0..keep.len() {
+            payload.clear();
+            payload.extend_from_slice(&(new_r as u32).to_le_bytes());
+            payload.extend_from_slice(mpath.to_string_lossy().as_bytes());
+            if let Some(c) = st.ctl[new_r].as_mut() {
+                send_frame(&mut c.s, OP_REBUILD, &payload)
+                    .with_context(|| format!("sending rebuild to rank {new_r}"))?;
+            }
+        }
+        accept_workers(st, &self.dir, new_n, Duration::from_secs(60))?;
+        // one READY per rank: survivors after their in-place rebuild,
+        // respawned workers after construction + restore
+        collect_replies(st, Duration::from_secs(300))
+            .context("waiting for rebuilt workers to reconstruct their rank engines")?;
+
+        // facade bookkeeping follows the new world size
+        self.n = new_n;
+        self.ctx.par.workers = new_n;
+        self.ctx.cluster =
+            Cluster::new_with_transport(new_n, None, TransportKind::Inproc);
+        Ok(())
+    }
 }
 
+/// Bounded child reap: `try_wait` poll with backoff, SIGKILL + blocking
+/// wait once the budget is gone (never leaves a zombie).
+fn wait_child(child: &mut Child, budget: Duration) {
+    let mut backoff = Backoff::new(budget);
+    loop {
+        match child.try_wait() {
+            Ok(Some(_)) => return,
+            _ => {
+                if !backoff.wait() {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Accept control-socket handshakes until every rank in `0..n` has a
+/// connection (ranks that already hold one — elastic survivors — count
+/// as present). Polls with bounded exponential backoff; on timeout the
+/// error names exactly which ranks never arrived and where they were
+/// expected to rendezvous.
 fn accept_workers(
     st: &mut ProcState,
     dir: &Path,
-    listener: &UnixListener,
     n: usize,
+    budget: Duration,
 ) -> Result<()> {
-    let deadline = Instant::now() + Duration::from_secs(60);
-    let mut connected = 0;
-    while connected < n {
-        match listener.accept() {
+    let mut backoff = Backoff::new(budget);
+    loop {
+        let missing: Vec<usize> = (0..n)
+            .filter(|&r| st.ctl[r].is_none() && st.dead[r].is_none())
+            .collect();
+        if missing.is_empty() {
+            return Ok(());
+        }
+        match st.listener.accept() {
             Ok((mut s, _)) => {
                 s.set_nonblocking(false)?;
                 s.set_read_timeout(Some(Duration::from_secs(10)))?;
@@ -661,11 +881,10 @@ fn accept_workers(
                 s.set_read_timeout(None)?;
                 s.set_nonblocking(true)?;
                 st.ctl[rank] = Some(CtlConn { s, buf: Vec::new() });
-                connected += 1;
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 // a worker that died before connecting will never show up
-                reap_children(st, dir);
+                reap_children(st);
                 if let Some(r) =
                     (0..n).find(|&r| st.dead[r].is_some() && st.ctl[r].is_none())
                 {
@@ -674,15 +893,17 @@ fn accept_workers(
                         st.dead[r].as_ref().unwrap()
                     );
                 }
-                if Instant::now() > deadline {
-                    bail!("workers did not rendezvous within 60s");
+                if !backoff.wait() {
+                    bail!(
+                        "worker rank(s) {missing:?} never connected to the \
+                         control socket in rendezvous dir {} within {budget:?}",
+                        dir.display()
+                    );
                 }
-                std::thread::sleep(Duration::from_millis(5));
             }
             Err(e) => return Err(e.into()),
         }
     }
-    Ok(())
 }
 
 impl Engine for ProcessClusterEngine {
@@ -782,16 +1003,21 @@ impl Drop for ProcessClusterEngine {
 
 fn connect_ctl(dir: &Path) -> Result<UnixStream> {
     let path = dir.join("ctl.sock");
-    let deadline = Instant::now() + Duration::from_secs(10);
+    let budget = Duration::from_secs(10);
+    let mut backoff = Backoff::new(budget);
     loop {
         match UnixStream::connect(&path) {
             Ok(s) => return Ok(s),
             Err(e) => {
-                if Instant::now() > deadline {
-                    return Err(e)
-                        .with_context(|| format!("connecting to {}", path.display()));
+                if !backoff.wait() {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "worker could not reach the parent control socket \
+                             {} within {budget:?}",
+                            path.display()
+                        )
+                    });
                 }
-                std::thread::sleep(Duration::from_millis(5));
             }
         }
     }
@@ -807,20 +1033,31 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Why one [`worker_serve`] incarnation ended: orderly shutdown, or an
+/// elastic rebuild that drops the fabric + engine on scope exit and
+/// loops back with a new manifest + rank.
+enum ServeExit {
+    Shutdown,
+    Rebuild { manifest: PathBuf, rank: usize },
+}
+
 /// Entry point of `rtp worker --manifest M --rank R`: build this rank's
 /// engine from the run manifest, rendezvous the per-process fabric, and
-/// serve control commands until shutdown (or parent EOF).
+/// serve control commands until shutdown (or parent EOF). `OP_REBUILD`
+/// loops: the serve incarnation's whole state — fabric, engine, executor,
+/// tracker — drops, and the next incarnation rebuilds from the epoch
+/// manifest under a (possibly) new rank.
 pub fn worker_main(args: &Args) -> Result<()> {
     let mpath = PathBuf::from(
         args.get("manifest")
             .ok_or_else(|| anyhow!("rtp worker needs --manifest"))?,
     );
-    let rank: usize = args
+    let mut rank: usize = args
         .get("rank")
         .ok_or_else(|| anyhow!("rtp worker needs --rank"))?
         .parse()
         .map_err(|_| anyhow!("--rank expects an integer"))?;
-    let m = RunManifest::load_run(&mpath)?;
+    let mut m = RunManifest::load_run(&mpath)?;
     let dir = mpath
         .parent()
         .ok_or_else(|| anyhow!("manifest path has no parent dir"))?
@@ -828,19 +1065,35 @@ pub fn worker_main(args: &Args) -> Result<()> {
     // handshake first, so the parent can tell "slow build" from "dead"
     let mut ctl = connect_ctl(&dir)?;
     ctl.write_all(&(rank as u32).to_le_bytes())?;
-    if let Err(e) = worker_run(&m, rank, &dir, &mut ctl) {
-        let _ = send_frame(&mut ctl, OP_ERR, format!("{e:#}").as_bytes());
-        std::process::exit(101);
+    loop {
+        let next = worker_serve(&m, rank, &dir, &mut ctl).and_then(|exit| {
+            Ok(match exit {
+                ServeExit::Shutdown => None,
+                ServeExit::Rebuild { manifest, rank } => {
+                    Some((RunManifest::load_run(&manifest)?, rank))
+                }
+            })
+        });
+        match next {
+            Ok(None) => return Ok(()),
+            Ok(Some((next_m, next_rank))) => {
+                m = next_m;
+                rank = next_rank;
+            }
+            Err(e) => {
+                let _ = send_frame(&mut ctl, OP_ERR, format!("{e:#}").as_bytes());
+                std::process::exit(101);
+            }
+        }
     }
-    Ok(())
 }
 
-fn worker_run(
+fn worker_serve(
     m: &RunManifest,
     rank: usize,
     dir: &Path,
     ctl: &mut UnixStream,
-) -> Result<()> {
+) -> Result<ServeExit> {
     let opts = opts_of(m)?;
     let cfg = opts.cfg()?;
     let par = ParallelCfg {
@@ -850,7 +1103,8 @@ fn worker_run(
     };
     let kind = TransportKind::parse(&m.transport)
         .ok_or_else(|| anyhow!("unknown transport {:?}", m.transport))?;
-    let fabric = RingFabric::new_remote(m.workers, rank, kind, dir)
+    let fdir = fab_dir(dir, m.epoch);
+    let fabric = RingFabric::new_remote(m.workers, rank, kind, &fdir)
         .context("per-process fabric rendezvous")?;
     if m.fabric_timeout_ms > 0 {
         fabric.set_recv_timeout(Some(Duration::from_millis(m.fabric_timeout_ms)));
@@ -872,10 +1126,22 @@ fn worker_run(
         port.clone(),
         &trace,
     )?;
-    let injector = opts.fault_plan.map(FaultInjector::new);
+    // fault plans target the FIRST incarnation only: a rebuilt epoch
+    // re-arming the same env plan would fault itself forever
+    let injector = if m.epoch == 0 {
+        opts.fault_plan.map(FaultInjector::new)
+    } else {
+        None
+    };
     // process ranks are free-running OS processes: comm streams overlap
     // for real whenever the engine asks for async rotation
     let async_comm = m.async_rotation;
+    if !m.init_params.is_empty() {
+        let full = load_params(&cfg, Path::new(&m.init_params)).with_context(|| {
+            format!("loading elastic init checkpoint {}", m.init_params)
+        })?;
+        engine.load_full(&full)?;
+    }
 
     send_frame(ctl, OP_OK, &[])?; // READY
     let mut steps_done: u64 = 0;
@@ -883,7 +1149,7 @@ fn worker_run(
         let (op, payload) = match read_frame(ctl) {
             Ok(f) => f,
             // parent gone (dropped, crashed, ^C): exit quietly
-            Err(_) => return Ok(()),
+            Err(_) => return Ok(ServeExit::Shutdown),
         };
         match op {
             OP_STEP => {
@@ -958,9 +1224,23 @@ fn worker_run(
                     }
                 }
             }
+            OP_REBUILD => {
+                if payload.len() < 4 {
+                    bail!("malformed rebuild payload ({} bytes)", payload.len());
+                }
+                let new_rank = u32::from_le_bytes([
+                    payload[0], payload[1], payload[2], payload[3],
+                ]) as usize;
+                let manifest = PathBuf::from(
+                    String::from_utf8_lossy(&payload[4..]).into_owned(),
+                );
+                // returning drops the (possibly poisoned) fabric and this
+                // incarnation's engine; the caller rebuilds and READYs
+                return Ok(ServeExit::Rebuild { manifest, rank: new_rank });
+            }
             OP_SHUTDOWN => {
                 let _ = send_frame(ctl, OP_OK, &[]);
-                return Ok(());
+                return Ok(ServeExit::Shutdown);
             }
             other => bail!("unknown control op {other}"),
         }

@@ -135,6 +135,10 @@ pub struct ServeEngine {
 
     cluster: Cluster,
     ranks: Vec<DecodeRank>,
+    /// The serving weights, retained so [`ServeEngine::recover`] can
+    /// rebuild the decode ranks after a rank death.
+    params: ModelParams,
+    capacity: Option<u64>,
 
     queue: VecDeque<GenRequest>,
     running: Vec<RunningReq>,
@@ -254,6 +258,8 @@ pub fn build_serve_engine_with_params(
         page_tokens: opts.page_tokens,
         cluster,
         ranks,
+        params: params.clone(),
+        capacity: opts.capacity,
         queue: VecDeque::new(),
         running: Vec::new(),
         finished: Vec::new(),
@@ -515,21 +521,83 @@ impl ServeEngine {
         Ok(true)
     }
 
-    /// Retire the whole running batch after a rank death: release every
-    /// slot's KV pages on every rank (allocations the dead rank made
-    /// before dying included — `KvCache::release` frees whatever pages a
-    /// slot holds) and record each request as rejected with the typed
-    /// root cause. Queued requests stay queued; the caller decides
-    /// whether to resubmit against a rebuilt engine.
-    fn fail_batch(&mut self, f: &RankFailure) {
-        for r in std::mem::take(&mut self.running) {
+    /// Unwind the running batch after a rank death: release every slot's
+    /// KV pages on every rank (allocations the dead rank made before
+    /// dying included — `KvCache::release` frees whatever pages a slot
+    /// holds) and REQUEUE each interrupted request at the queue front, in
+    /// its original admission order, with its decode progress reset.
+    /// After [`ServeEngine::recover`] the scheduler decodes them from
+    /// scratch — deterministically, so the tokens match an unfaulted run.
+    /// Queued requests are untouched; nothing is rejected (`_f` names the
+    /// root cause only for the step's returned error).
+    fn fail_batch(&mut self, _f: &RankFailure) {
+        let mut interrupted = std::mem::take(&mut self.running);
+        // admission order: join step, then slot (admit assigns ascending
+        // free slots within one boundary)
+        interrupted.sort_by_key(|r| (r.joined_step, r.slot));
+        for r in interrupted.into_iter().rev() {
             for (rank, worker) in self.ranks.iter_mut().zip(self.cluster.workers.iter_mut())
             {
                 rank.kv.release(r.slot, &mut worker.tracker);
             }
             self.kv_projected -= r.projected;
-            self.rejected.push((r.req.id, format!("batch failed: {f}")));
+            self.queue.push_front(r.req);
         }
+    }
+
+    /// Rebuild the SPMD decode set after a rank death: fresh cluster
+    /// (the old fabric is poisoned by the failed round), fresh
+    /// [`DecodeRank`]s from the retained weights, empty KV. The request
+    /// state machine — queue (including the batch
+    /// [`fail_batch`](Self::fail_batch) requeued), finished, rejected,
+    /// step counter — carries over, so a drain after recovery completes
+    /// every admitted request. A fault plan that already fired does not
+    /// re-arm.
+    pub fn recover(&mut self) -> Result<()> {
+        // return the poisoned incarnation's buffers (weights, scratch,
+        // leftover KV) before rebuilding — trackers must balance
+        for (rank, worker) in self.ranks.iter_mut().zip(self.cluster.workers.iter_mut()) {
+            rank.free_all(&mut worker.tracker);
+        }
+        debug_assert_eq!(self.kv_projected, 0, "recover with live admissions");
+        let rotate =
+            matches!(self.strategy, Strategy::RtpInplace | Strategy::RtpOutOfPlace);
+        let async_rot = matches!(self.strategy, Strategy::RtpOutOfPlace)
+            && self.launcher.overlaps_comm();
+        let mut cluster = Cluster::new(self.n, self.capacity);
+        let fabric = cluster.fabric().clone();
+        let mut ranks = Vec::with_capacity(self.n);
+        for rank in 0..self.n {
+            let stream = if rotate && self.n > 1 {
+                Some(CommStream::new(fabric.bg_port(rank), async_rot))
+            } else {
+                None
+            };
+            let dr = DecodeRank::new(
+                rank,
+                self.n,
+                &self.cfg,
+                &self.params,
+                rotate,
+                stream,
+                self.max_batch,
+                self.page_tokens,
+                &mut cluster.workers[rank].tracker,
+            )
+            .map_err(anyhow::Error::new)?;
+            ranks.push(dr);
+        }
+        let live = cluster.workers[0].tracker.live();
+        self.kv_budget = match self.capacity {
+            Some(cap) => cap.saturating_sub(live),
+            None => u64::MAX,
+        };
+        self.cluster = cluster;
+        self.ranks = ranks;
+        // one recovery disarms injection: the rebuilt engine must not
+        // re-fire the plan that killed its predecessor
+        self.fault = None;
+        Ok(())
     }
 
     /// Run every queued/running request to completion.

@@ -19,7 +19,11 @@
 //!   u32 moment_count | params table | moment tables...
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -90,6 +94,54 @@ fn read_f32s(f: &mut impl Read, n: usize, what: &str) -> Result<Vec<f32>> {
         left -= take;
     }
     Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// crash-atomic file writes (shared by RTPC1 and RTPC2)
+// ---------------------------------------------------------------------
+
+/// The staging sibling a crash-atomic write streams into before the
+/// rename: `<path>.tmp`.
+pub fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Crash-atomic write: stream into `<path>.tmp`, flush + fsync, then
+/// rename over `path` (and best-effort fsync the parent directory so the
+/// rename itself is durable). A writer killed at ANY point leaves either
+/// the previous complete file or the new complete file at `path` — never
+/// a torn one. The readers' corruption/truncation bails stay as the
+/// second line of defense.
+fn write_atomic(
+    path: &Path,
+    write: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
+) -> Result<()> {
+    let tmp = tmp_sibling(path);
+    let file = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    let mut f = std::io::BufWriter::new(file);
+    let streamed = write(&mut f).and_then(|()| {
+        f.flush()?;
+        f.get_ref().sync_all()?;
+        Ok(())
+    });
+    if let Err(e) = streamed {
+        drop(f);
+        std::fs::remove_file(&tmp).ok();
+        return Err(e).with_context(|| format!("writing {}", tmp.display()));
+    }
+    drop(f);
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming {} -> {}", tmp.display(), path.display())
+    })?;
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = std::fs::File::open(dir) {
+            d.sync_all().ok();
+        }
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -177,12 +229,10 @@ fn read_tensor_table(f: &mut impl Read, cfg: &ModelCfg, label: &str) -> Result<M
 // ---------------------------------------------------------------------
 
 pub fn save_params(params: &ModelParams, path: &Path) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    f.write_all(MAGIC_V1)?;
-    write_tensor_table(&mut f, params)?;
-    Ok(())
+    write_atomic(path, |f| {
+        f.write_all(MAGIC_V1)?;
+        write_tensor_table(f, params)
+    })
 }
 
 pub fn load_params(cfg: &ModelCfg, path: &Path) -> Result<ModelParams> {
@@ -246,27 +296,26 @@ fn kind_from_byte(b: u8) -> Result<OptimizerKind> {
 }
 
 pub fn save_train_state(state: &TrainState, path: &Path) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    f.write_all(MAGIC_V2)?;
-    f.write_all(&(state.world_size as u32).to_le_bytes())?;
-    f.write_all(&state.step.to_le_bytes())?;
-    f.write_all(&state.rotation_offset.to_le_bytes())?;
-    f.write_all(&[kind_byte(state.opt_kind)])?;
-    f.write_all(&state.opt_step.to_le_bytes())?;
-    f.write_all(&state.lr.to_le_bytes())?;
-    f.write_all(&state.corpus.seed.to_le_bytes())?;
-    for s in state.corpus.rng {
-        f.write_all(&s.to_le_bytes())?;
-    }
-    f.write_all(&state.corpus.state.to_le_bytes())?;
-    f.write_all(&(state.moments.len() as u32).to_le_bytes())?;
-    write_tensor_table(&mut f, &state.params)?;
-    for m in &state.moments {
-        write_tensor_table(&mut f, m)?;
-    }
-    Ok(())
+    write_atomic(path, |f| {
+        f.write_all(MAGIC_V2)?;
+        f.write_all(&(state.world_size as u32).to_le_bytes())?;
+        f.write_all(&state.step.to_le_bytes())?;
+        f.write_all(&state.rotation_offset.to_le_bytes())?;
+        f.write_all(&[kind_byte(state.opt_kind)])?;
+        f.write_all(&state.opt_step.to_le_bytes())?;
+        f.write_all(&state.lr.to_le_bytes())?;
+        f.write_all(&state.corpus.seed.to_le_bytes())?;
+        for s in state.corpus.rng {
+            f.write_all(&s.to_le_bytes())?;
+        }
+        f.write_all(&state.corpus.state.to_le_bytes())?;
+        f.write_all(&(state.moments.len() as u32).to_le_bytes())?;
+        write_tensor_table(f, &state.params)?;
+        for m in &state.moments {
+            write_tensor_table(f, m)?;
+        }
+        Ok(())
+    })
 }
 
 pub fn load_train_state(cfg: &ModelCfg, path: &Path) -> Result<TrainState> {
@@ -390,6 +439,126 @@ pub fn restore_train_state(
     opt.lr = state.lr;
     engine.load_full(&state.params)?;
     Ok(MarkovCorpus::restore(cfg, state.corpus))
+}
+
+// ---------------------------------------------------------------------
+// async off-thread checkpointing
+// ---------------------------------------------------------------------
+
+/// Counters from an [`AsyncCheckpointer`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CkptStats {
+    /// Snapshots offered to the writer (`submit` calls).
+    pub submitted: u64,
+    /// Snapshots fully written (fsynced + renamed) to disk.
+    pub written: u64,
+    /// Snapshots dropped because the double buffer was full — the writer
+    /// was still flushing the previous one. Dropping (instead of
+    /// blocking) is the contract: the step path never waits on disk.
+    pub skipped: u64,
+    /// Total nanoseconds the submitting thread spent inside `submit`
+    /// (the channel hand-off only — gated as `ckpt_async_stall_ns`).
+    pub submit_stall_ns: u64,
+}
+
+/// Periodic checkpointing off the training thread: a dedicated writer
+/// thread drains a bounded(1) channel of [`TrainState`] snapshots and
+/// streams each through the crash-atomic [`save_train_state`] path. The
+/// bounded channel is the double buffer — at most one snapshot queued
+/// while one is being written; `submit` uses `try_send` and NEVER blocks
+/// the step path (a full buffer drops the snapshot and counts it in
+/// [`CkptStats::skipped`]).
+pub struct AsyncCheckpointer {
+    tx: Option<SyncSender<Arc<TrainState>>>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    written: Arc<AtomicU64>,
+    stats: CkptStats,
+    path: PathBuf,
+}
+
+impl AsyncCheckpointer {
+    pub fn new(path: &Path) -> AsyncCheckpointer {
+        let (tx, rx) = sync_channel::<Arc<TrainState>>(1);
+        let written = Arc::new(AtomicU64::new(0));
+        let w = Arc::clone(&written);
+        let p = path.to_path_buf();
+        let handle = std::thread::Builder::new()
+            .name("rtp-ckpt-writer".to_string())
+            .spawn(move || -> Result<()> {
+                while let Ok(state) = rx.recv() {
+                    save_train_state(&state, &p)?;
+                    w.fetch_add(1, Ordering::Release);
+                }
+                Ok(())
+            })
+            .expect("spawning checkpoint writer thread");
+        AsyncCheckpointer {
+            tx: Some(tx),
+            handle: Some(handle),
+            written,
+            stats: CkptStats::default(),
+            path: path.to_path_buf(),
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Hand a snapshot to the writer. Non-blocking: a busy writer means
+    /// the snapshot is dropped (counted as skipped), a dead writer means
+    /// the same (its error surfaces from [`finish`](Self::finish)).
+    pub fn submit(&mut self, state: Arc<TrainState>) {
+        let t0 = Instant::now();
+        self.stats.submitted += 1;
+        match self.tx.as_ref().expect("checkpointer already finished").try_send(state) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.stats.skipped += 1;
+            }
+        }
+        self.stats.submit_stall_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    /// Like [`submit`](Self::submit), but waits for buffer space instead
+    /// of dropping. End-of-run use only: the LAST snapshot of a run must
+    /// reach disk (it is the state a `--resume` continues from), so the
+    /// caller trades one bounded wait for durability. The step path never
+    /// calls this.
+    pub fn submit_final(&mut self, state: Arc<TrainState>) {
+        self.stats.submitted += 1;
+        // a dead writer is not a drop: its error surfaces from finish().
+        // Deliberately NOT counted in submit_stall_ns — that counter gates
+        // the STEP path's stall, and this wait happens after the last step.
+        let _ = self.tx.as_ref().expect("checkpointer already finished").send(state);
+    }
+
+    /// Stats so far; `written` reflects completed (renamed) saves only.
+    pub fn stats(&self) -> CkptStats {
+        CkptStats { written: self.written.load(Ordering::Acquire), ..self.stats }
+    }
+
+    /// Drain the queue, join the writer, and surface any write error.
+    pub fn finish(mut self) -> Result<CkptStats> {
+        drop(self.tx.take());
+        let joined = self
+            .handle
+            .take()
+            .expect("checkpointer already finished")
+            .join()
+            .map_err(|_| anyhow::anyhow!("checkpoint writer thread panicked"))?;
+        joined.with_context(|| format!("async checkpoint write to {}", self.path.display()))?;
+        Ok(self.stats())
+    }
+}
+
+impl Drop for AsyncCheckpointer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -540,6 +709,66 @@ mod tests {
             assert_eq!(a.max_abs_diff(b), 0.0);
         }
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn atomic_save_leaves_no_tmp_and_stale_tmp_is_harmless() {
+        let cfg = presets::get("tiny").unwrap();
+        let p = ModelParams::init(&cfg, &mut Rng::new(9));
+        let path = tmp("atomic");
+        save_params(&p, &path).unwrap();
+        assert!(!tmp_sibling(&path).exists(), "atomic save must clean up its .tmp");
+        // a torn .tmp left by a writer killed mid-save must not affect
+        // loading the real path, and the next save must still land
+        std::fs::write(tmp_sibling(&path), b"torn partial write").unwrap();
+        let q = load_params(&cfg, &path).unwrap();
+        assert_eq!(p.max_abs_diff(&q), 0.0);
+        save_params(&p, &path).unwrap();
+        assert!(!tmp_sibling(&path).exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn atomic_save_never_truncates_destination_before_rename() {
+        // simulate a writer killed BEFORE the rename: the destination
+        // must still hold the previous complete checkpoint
+        let cfg = presets::get("tiny").unwrap();
+        let old = ModelParams::init(&cfg, &mut Rng::new(10));
+        let path = tmp("atomic-prev");
+        save_params(&old, &path).unwrap();
+        std::fs::write(tmp_sibling(&path), b"RTPC1\0 half-written garbage").unwrap();
+        let q = load_params(&cfg, &path).unwrap();
+        assert_eq!(old.max_abs_diff(&q), 0.0);
+        std::fs::remove_file(tmp_sibling(&path)).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn async_checkpointer_writes_loadable_state_and_counts_drops() {
+        let cfg = presets::get("tiny").unwrap();
+        let mut eng =
+            build_engine(&EngineOpts::new("tiny", Strategy::Ddp, 2, 4).exec(ExecKind::Oracle))
+                .unwrap();
+        let mut opt = Optimizer::new(OptimizerKind::Adam, 1e-2);
+        let mut corpus = MarkovCorpus::new(&cfg, 13);
+        let path = tmp("async");
+        let mut ckpt = AsyncCheckpointer::new(&path);
+        for s in 1..=4u64 {
+            let b = corpus.next_batch(4);
+            eng.zero_grads();
+            eng.step(&b).unwrap();
+            opt.step(&mut *eng);
+            let state = capture_train_state(&mut *eng, &opt, &corpus, s).unwrap();
+            ckpt.submit(Arc::new(state));
+        }
+        let stats = ckpt.finish().unwrap();
+        assert_eq!(stats.submitted, 4);
+        assert_eq!(stats.written + stats.skipped, 4);
+        assert!(stats.written >= 1, "{stats:?}");
+        let loaded = load_train_state(&cfg, &path).unwrap();
+        assert!(loaded.step >= 1 && loaded.step <= 4, "{}", loaded.step);
+        assert!(!tmp_sibling(&path).exists());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

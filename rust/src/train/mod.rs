@@ -9,9 +9,9 @@ pub mod trainer;
 
 pub use checkpoint::{
     capture_train_state, load_params, load_train_state, restore_train_state, save_params,
-    save_train_state, TrainState,
+    save_train_state, AsyncCheckpointer, CkptStats, TrainState,
 };
 pub use corpus::{CorpusState, MarkovCorpus};
 pub use optimizer::Optimizer;
 pub use schedule::{grad_norm, LrSchedule};
-pub use trainer::{train, TrainReport};
+pub use trainer::{train, train_with, TrainReport};

@@ -39,6 +39,27 @@ pub fn train(
     global_batch: usize,
     quiet: bool,
 ) -> Result<TrainReport> {
+    train_with(engine, opt, corpus, tcfg, global_batch, quiet, &mut |_, _, _, _| Ok(()))
+}
+
+/// [`train`] with a per-step hook, called after the optimizer step with
+/// `(completed_steps, engine, opt, corpus)` — the seam `rtp train
+/// --elastic` uses to capture periodic async-checkpoint snapshots
+/// without the loop itself knowing about checkpointing.
+pub fn train_with(
+    engine: &mut dyn Engine,
+    opt: &mut Optimizer,
+    corpus: &mut MarkovCorpus,
+    tcfg: &TrainCfg,
+    global_batch: usize,
+    quiet: bool,
+    after_step: &mut dyn FnMut(
+        usize,
+        &mut dyn Engine,
+        &mut Optimizer,
+        &MarkovCorpus,
+    ) -> Result<()>,
+) -> Result<TrainReport> {
     opt.attach(engine)?;
     let seq = engine.ctx().cfg.seq;
     let start = std::time::Instant::now();
@@ -49,6 +70,7 @@ pub fn train(
         let loss = engine.step(&batch)?;
         opt.step(engine);
         losses.push(loss);
+        after_step(step + 1, engine, opt, corpus)?;
         if !quiet && (step % tcfg.log_every == 0 || step + 1 == tcfg.steps) {
             let elapsed = start.elapsed().as_secs_f64();
             let wps = ((step + 1) * global_batch * seq) as f64 / elapsed;

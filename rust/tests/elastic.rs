@@ -1,0 +1,595 @@
+//! The elastic supervisor, end to end: a supervised run that loses a
+//! rank mid-training must quiesce, rebuild at N′ (shrink or respawn),
+//! restore the latest async snapshot, and continue BIT-IDENTICALLY to a
+//! never-faulted run resumed at N′ from the same snapshot — across every
+//! parallel engine, under both in-process launchers, through double
+//! faults, and with a bounded typed error (never a hang) once the
+//! recovery budget is spent. Plus `Launcher::Process` recovery: a worker
+//! OS process SIGKILLed out from under the run is replaced (or the run
+//! shrinks to the survivors) via `ProcessClusterEngine::rebuild`, into
+//! the SAME rendezvous dir over the SAME control listener, and the next
+//! step matches the in-process oracle exactly.
+
+use std::time::Duration;
+
+use rtp::comm::TransportKind;
+use rtp::config::{presets, OptimizerKind, Strategy};
+use rtp::parallel::{build_engine, Batch, Engine, EngineOpts, ExecKind, Launcher};
+use rtp::runtime::{
+    FailureKind, FaultPhase, FaultPlan, ProcessClusterEngine, RankFailure, RecoveryMode,
+    RecoveryPolicy, Supervisor, SupervisorReport,
+};
+use rtp::train::{
+    capture_train_state, load_params, restore_train_state, save_params, MarkovCorpus,
+    Optimizer, TrainState,
+};
+use rtp::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("rtp-el-{name}-{}", std::process::id()))
+}
+
+fn opts_for(
+    preset: &str,
+    strategy: Strategy,
+    n: usize,
+    gb: usize,
+    launcher: Launcher,
+) -> EngineOpts {
+    EngineOpts::new(preset, strategy, n, gb)
+        .exec(ExecKind::Oracle)
+        .launcher(launcher)
+        .seed(7)
+}
+
+/// Tight test policy: real backoff schedule, milliseconds not seconds.
+fn policy(mode: RecoveryMode) -> RecoveryPolicy {
+    RecoveryPolicy {
+        mode,
+        max_recoveries: 3,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(4),
+        rebuild_budget: Duration::from_secs(60),
+    }
+}
+
+/// `steps` training steps; returns the per-step losses (bit-comparable).
+fn train_steps(
+    eng: &mut dyn Engine,
+    opt: &mut Optimizer,
+    corpus: &mut MarkovCorpus,
+    gb: usize,
+    steps: usize,
+) -> Vec<f32> {
+    (0..steps)
+        .map(|_| {
+            let b = corpus.next_batch(gb);
+            eng.zero_grads();
+            let loss = eng.step(&b).unwrap();
+            opt.step(&mut *eng);
+            loss
+        })
+        .collect()
+}
+
+/// Run the supervisor with incarnation-indexed fault plans and a
+/// snapshot cadence of 2; return (report, final state read back from the
+/// crash-atomic checkpoint).
+fn supervised(
+    opts: EngineOpts,
+    mode: RecoveryMode,
+    plans: Vec<Option<FaultPlan>>,
+    steps: u64,
+    tag: &str,
+) -> (SupervisorReport, TrainState) {
+    let path = tmp(tag);
+    let mut sup = Supervisor::new(opts, OptimizerKind::Adam, 1e-2)
+        .policy(policy(mode))
+        .ckpt_every(2)
+        .ckpt_path(Some(path.clone()))
+        .fault_plans(plans);
+    let out = sup
+        .run_capturing(steps)
+        .unwrap_or_else(|e| panic!("{tag}: supervised run failed: {e:#}"));
+    std::fs::remove_file(&path).ok();
+    out
+}
+
+/// The never-faulted oracle the supervisor must reproduce: run at `n0`,
+/// and at each `(snapshot_step, n_next)` leg capture, rebuild a FRESH
+/// engine at `n_next`, and restore through the world-size-independent
+/// RTPC2 path — exactly what one recovery does. Returns the full loss
+/// curve and the final capture at `steps`.
+fn reference(
+    preset: &str,
+    strategy: Strategy,
+    gb: usize,
+    launcher: Launcher,
+    n0: usize,
+    legs: &[(u64, usize)],
+    steps: u64,
+) -> (Vec<f32>, TrainState) {
+    let cfg = presets::get(preset).unwrap();
+    let mk = |n: usize| build_engine(&opts_for(preset, strategy, n, gb, launcher)).unwrap();
+    let mut eng = mk(n0);
+    let mut opt = Optimizer::new(OptimizerKind::Adam, 1e-2);
+    let mut corpus = MarkovCorpus::new(&cfg, 7);
+    let mut losses: Vec<f32> = Vec::new();
+    let mut done: u64 = 0;
+    for &(snap_at, n_next) in legs {
+        losses.extend(train_steps(
+            &mut *eng,
+            &mut opt,
+            &mut corpus,
+            gb,
+            (snap_at - done) as usize,
+        ));
+        done = snap_at;
+        let snap = capture_train_state(&mut *eng, &opt, &corpus, done).unwrap();
+        eng = mk(n_next);
+        opt = Optimizer::new(OptimizerKind::Adam, 1.0); // restore overwrites lr
+        corpus = restore_train_state(&mut *eng, &mut opt, &cfg, &snap).unwrap();
+    }
+    losses.extend(train_steps(
+        &mut *eng,
+        &mut opt,
+        &mut corpus,
+        gb,
+        (steps - done) as usize,
+    ));
+    let fin = capture_train_state(&mut *eng, &opt, &corpus, steps).unwrap();
+    (losses, fin)
+}
+
+fn assert_states_bitwise(a: &TrainState, b: &TrainState, tag: &str) {
+    assert_eq!(a.step, b.step, "{tag}: snapshot step");
+    assert_eq!(a.params.max_abs_diff(&b.params), 0.0, "{tag}: params diverged");
+    assert_eq!(a.moments.len(), b.moments.len(), "{tag}: moment count");
+    for (k, (m, n)) in a.moments.iter().zip(&b.moments).enumerate() {
+        assert_eq!(m.max_abs_diff(n), 0.0, "{tag}: optimizer moment {k} diverged");
+    }
+    assert_eq!(a.corpus, b.corpus, "{tag}: corpus cursor diverged");
+}
+
+// ---------------------------------------------------------------------
+// supervisor without faults: a supervised run IS a plain run (the
+// snapshot machinery must not perturb the trajectory), and every
+// submitted snapshot is accounted written-or-skipped with the final one
+// guaranteed durable.
+// ---------------------------------------------------------------------
+
+#[test]
+fn supervised_run_without_faults_is_bitwise_plain_training() {
+    let opts = opts_for("tiny", Strategy::RtpOutOfPlace, 2, 4, Launcher::Lockstep);
+    let (report, state) =
+        supervised(opts, RecoveryMode::Shrink, vec![], 5, "nofault");
+    assert!(report.recoveries.is_empty());
+    assert_eq!(report.final_workers, 2);
+    assert_eq!(state.step, 5);
+
+    let cfg = presets::get("tiny").unwrap();
+    let mut eng =
+        build_engine(&opts_for("tiny", Strategy::RtpOutOfPlace, 2, 4, Launcher::Lockstep))
+            .unwrap();
+    let mut opt = Optimizer::new(OptimizerKind::Adam, 1e-2);
+    let mut corpus = MarkovCorpus::new(&cfg, 7);
+    let losses = train_steps(&mut *eng, &mut opt, &mut corpus, 4, 5);
+    assert_eq!(report.losses, losses, "supervision changed the trajectory");
+    let fin = capture_train_state(&mut *eng, &opt, &corpus, 5).unwrap();
+    assert_states_bitwise(&state, &fin, "nofault");
+
+    // seed (step 0) + periodic (2, 4) + final (5) — and the final submit
+    // is the blocking variant, so at least it is always written
+    assert_eq!(report.ckpt.submitted, 4, "snapshot cadence drifted");
+    assert!(report.ckpt.written >= 1, "final snapshot never reached disk");
+    assert_eq!(
+        report.ckpt.written + report.ckpt.skipped,
+        report.ckpt.submitted,
+        "snapshots unaccounted for"
+    );
+}
+
+// ---------------------------------------------------------------------
+// one rank death, every engine: the recovered trajectory is bit-identical
+// to a never-faulted run restored at N′ from the same snapshot.
+// ---------------------------------------------------------------------
+
+/// Fault at engine step 3 (snapshot exists at step 2), 6 steps total.
+fn assert_recovers_bitwise(
+    preset: &str,
+    strategy: Strategy,
+    n_from: usize,
+    n_to: usize,
+    gb: usize,
+    launcher: Launcher,
+    mode: RecoveryMode,
+) {
+    let tag = format!("{strategy}-{preset}-{n_from}to{n_to}-{mode}-{launcher}");
+    let plan = FaultPlan { rank: 1, step: 3, phase: FaultPhase::Backward };
+    let opts = opts_for(preset, strategy, n_from, gb, launcher);
+    let (report, state) = supervised(opts, mode, vec![Some(plan)], 6, &tag);
+
+    assert_eq!(report.recoveries.len(), 1, "{tag}: expected exactly one recovery");
+    let ev = &report.recoveries[0];
+    assert_eq!(ev.at_step, 3, "{tag}");
+    assert_eq!(ev.failed_rank, 1, "{tag}");
+    assert_eq!(ev.from_workers, n_from, "{tag}");
+    assert_eq!(ev.to_workers, n_to, "{tag}");
+    assert_eq!(ev.resumed_from_step, 2, "{tag}: wrong snapshot chosen");
+    assert_eq!(report.final_workers, n_to, "{tag}");
+    assert_eq!(report.losses.len(), 6, "{tag}");
+    assert_eq!(state.step, 6, "{tag}");
+
+    let (ref_losses, ref_state) =
+        reference(preset, strategy, gb, launcher, n_from, &[(2, n_to)], 6);
+    assert_eq!(
+        report.losses, ref_losses,
+        "{tag}: recovered loss trajectory diverged from a fresh resume at N'"
+    );
+    assert_states_bitwise(&state, &ref_state, &tag);
+}
+
+#[test]
+fn shrink_recovery_is_bitwise_for_every_engine_under_lockstep() {
+    // (strategy, preset, n_from, n_to, global_batch) — n_to is the
+    // LARGEST valid world size below n_from (shrink_target's pick)
+    let cases = [
+        (Strategy::Ddp, "tiny", 4usize, 3usize, 12usize),
+        (Strategy::Fsdp, "tiny", 4, 2, 8),
+        (Strategy::MegatronTp, "tiny-wide", 4, 2, 8),
+        (Strategy::RtpInplace, "tiny-wide", 4, 2, 8),
+        (Strategy::RtpOutOfPlace, "tiny-wide", 4, 2, 8),
+    ];
+    for (strategy, preset, n_from, n_to, gb) in cases {
+        assert_recovers_bitwise(
+            preset,
+            strategy,
+            n_from,
+            n_to,
+            gb,
+            Launcher::Lockstep,
+            RecoveryMode::Shrink,
+        );
+    }
+}
+
+#[test]
+fn respawn_recovery_is_bitwise_under_lockstep() {
+    for (strategy, preset, gb) in [
+        (Strategy::Ddp, "tiny", 8usize),
+        (Strategy::RtpOutOfPlace, "tiny-wide", 8),
+    ] {
+        assert_recovers_bitwise(
+            preset,
+            strategy,
+            4,
+            4,
+            gb,
+            Launcher::Lockstep,
+            RecoveryMode::Respawn,
+        );
+    }
+}
+
+#[test]
+fn elastic_recovery_is_bitwise_under_thread_launcher() {
+    assert_recovers_bitwise(
+        "tiny",
+        Strategy::Ddp,
+        4,
+        3,
+        12,
+        Launcher::Thread,
+        RecoveryMode::Shrink,
+    );
+    assert_recovers_bitwise(
+        "tiny",
+        Strategy::RtpInplace,
+        4,
+        4,
+        8,
+        Launcher::Thread,
+        RecoveryMode::Respawn,
+    );
+}
+
+// ---------------------------------------------------------------------
+// double fault: a SECOND rank dies on the rebuilt cluster. Within budget
+// the run recovers twice (4 -> 3 -> 2 workers) and stays bit-identical
+// to the two-leg reference; past the budget it surfaces the typed
+// failure — bounded, never a hang.
+// ---------------------------------------------------------------------
+
+fn double_fault_plans() -> Vec<Option<FaultPlan>> {
+    vec![
+        // incarnation 0 dies at step 3 (snapshot at 2)...
+        Some(FaultPlan { rank: 1, step: 3, phase: FaultPhase::Backward }),
+        // ...and the REBUILT cluster dies at step 5 (snapshot at 4)
+        Some(FaultPlan { rank: 0, step: 5, phase: FaultPhase::Forward }),
+    ]
+}
+
+#[test]
+fn second_death_during_recovered_run_recovers_again_bitwise() {
+    let opts = opts_for("tiny", Strategy::Ddp, 4, 12, Launcher::Lockstep);
+    let (report, state) =
+        supervised(opts, RecoveryMode::Shrink, double_fault_plans(), 8, "double");
+
+    assert_eq!(report.recoveries.len(), 2, "expected two recoveries");
+    assert_eq!(report.recoveries[0].from_workers, 4);
+    assert_eq!(report.recoveries[0].to_workers, 3);
+    assert_eq!(report.recoveries[0].resumed_from_step, 2);
+    assert_eq!(report.recoveries[1].from_workers, 3);
+    assert_eq!(report.recoveries[1].to_workers, 2);
+    assert_eq!(report.recoveries[1].at_step, 5);
+    assert_eq!(report.recoveries[1].resumed_from_step, 4);
+    assert_eq!(report.final_workers, 2);
+    assert_eq!(report.losses.len(), 8);
+
+    let (ref_losses, ref_state) = reference(
+        "tiny",
+        Strategy::Ddp,
+        12,
+        Launcher::Lockstep,
+        4,
+        &[(2, 3), (4, 2)],
+        8,
+    );
+    assert_eq!(report.losses, ref_losses, "double-fault trajectory diverged");
+    assert_states_bitwise(&state, &ref_state, "double");
+}
+
+#[test]
+fn exhausted_recovery_budget_surfaces_typed_error_without_hanging() {
+    let opts = opts_for("tiny", Strategy::Ddp, 4, 12, Launcher::Lockstep);
+    let mut sup = Supervisor::new(opts, OptimizerKind::Adam, 1e-2)
+        .policy(RecoveryPolicy { max_recoveries: 1, ..policy(RecoveryMode::Shrink) })
+        .ckpt_every(2)
+        .fault_plans(double_fault_plans());
+    let t0 = std::time::Instant::now();
+    let err = sup.run(8).expect_err("second death must exhaust max_recoveries=1");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "budget exhaustion took {:?} — hang?",
+        t0.elapsed()
+    );
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("recovery budget exhausted"),
+        "error does not name the budget: {msg}"
+    );
+    // the underlying typed failure rides the error chain
+    let f = err
+        .downcast_ref::<RankFailure>()
+        .unwrap_or_else(|| panic!("untyped budget error: {msg}"));
+    assert_eq!(f.failed_rank, 0, "wrong rank blamed for the second death");
+}
+
+// ---------------------------------------------------------------------
+// Launcher::Process recovery: ProcessClusterEngine::rebuild respawns (or
+// sheds) real worker OS processes into the SAME rendezvous dir and the
+// post-recovery step matches the in-process Lockstep oracle bit-exactly.
+// ---------------------------------------------------------------------
+
+fn proc_engine(preset: &str, strategy: Strategy, n: usize, gb: usize) -> ProcessClusterEngine {
+    // the workers must run THIS build's binary, not whatever `rtp` is on
+    // PATH (idempotent across parallel tests — same value everywhere)
+    std::env::set_var("RTP_WORKER_EXE", env!("CARGO_BIN_EXE_rtp"));
+    let opts = EngineOpts::new(preset, strategy, n, gb)
+        .exec(ExecKind::Oracle)
+        .launcher(Launcher::Process)
+        .transport(TransportKind::Shm)
+        .seed(7);
+    // short per-worker recv watchdog: survivors blocked on a dead peer
+    // fail fast instead of waiting out the 20 s default
+    ProcessClusterEngine::build_with(&opts, 2_000, 1).unwrap()
+}
+
+/// Step until the injected/real death surfaces; returns the error.
+fn step_until_failure(
+    eng: &mut ProcessClusterEngine,
+    cfg: &rtp::config::ModelCfg,
+    gb: usize,
+    rng: &mut Rng,
+) -> anyhow::Error {
+    for _ in 0..1000 {
+        let b = Batch::synth(cfg, gb, rng);
+        if let Err(e) = eng.step(&b) {
+            return e;
+        }
+    }
+    panic!("killed worker never failed a step");
+}
+
+/// In-process Lockstep oracle at world size `n`, restored from the same
+/// full-params checkpoint: one step on `batch` → (loss, grads).
+fn oracle_step(
+    preset: &str,
+    strategy: Strategy,
+    n: usize,
+    gb: usize,
+    ckpt: &std::path::Path,
+    batch: &Batch,
+) -> (f32, rtp::model::ModelParams) {
+    let opts = opts_for(preset, strategy, n, gb, Launcher::Lockstep)
+        .transport(TransportKind::Inproc);
+    let cfg = opts.cfg().unwrap();
+    let mut eng = build_engine(&opts).unwrap();
+    eng.load_full(&load_params(&cfg, ckpt).unwrap()).unwrap();
+    eng.zero_grads();
+    let loss = eng.step(batch).unwrap();
+    (loss, eng.gather_grads())
+}
+
+#[test]
+fn process_rebuild_shrinks_to_survivors_bit_identically() {
+    let (preset, gb) = ("tiny", 12usize);
+    let cfg = presets::get(preset).unwrap();
+    let mut eng = proc_engine(preset, Strategy::Ddp, 4, gb);
+    let dir = eng.endpoint_dir().to_path_buf();
+    let mut rng = Rng::new(7);
+
+    // one healthy step, then checkpoint the full params
+    let b = Batch::synth(&cfg, gb, &mut rng);
+    eng.step(&b).unwrap();
+    let params = eng.gather_params();
+    let ckpt = tmp("proc-shrink");
+    save_params(&params, &ckpt).unwrap();
+
+    eng.kill_worker(3);
+    let err = step_until_failure(&mut eng, &cfg, gb, &mut rng);
+    let f = err
+        .downcast_ref::<RankFailure>()
+        .unwrap_or_else(|| panic!("untyped failure: {err:#}"));
+    assert_eq!(f.failed_rank, 3);
+    assert_eq!(f.kind, FailureKind::PeerExit);
+
+    let t0 = std::time::Instant::now();
+    eng.rebuild(3, &ckpt).unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "rebuild took {:?} — hang?",
+        t0.elapsed()
+    );
+    assert_eq!(eng.world_size(), 3);
+    assert_eq!(eng.epoch(), 1);
+    // the new epoch rendezvouses in a sub-dir of the SAME run dir
+    let fdir = eng.current_fabric_dir();
+    assert_ne!(fdir, dir, "epoch 1 must not reuse the poisoned epoch-0 dir");
+    assert!(fdir.starts_with(&dir), "epoch dir escaped the run dir");
+
+    // the restore is the checkpoint, bit-exact
+    assert_eq!(
+        eng.gather_params().max_abs_diff(&params),
+        0.0,
+        "rebuilt workers did not restore the init checkpoint"
+    );
+
+    // one post-recovery step must match the in-process oracle at N'=3
+    let bx = Batch::synth(&cfg, gb, &mut Rng::new(99));
+    eng.zero_grads();
+    let loss_p = eng.step(&bx).unwrap();
+    let grads_p = eng.gather_grads();
+    let (loss_r, grads_r) = oracle_step(preset, Strategy::Ddp, 3, gb, &ckpt, &bx);
+    assert_eq!(loss_p, loss_r, "post-rebuild loss diverged from the oracle");
+    assert_eq!(grads_p.max_abs_diff(&grads_r), 0.0, "post-rebuild grads diverged");
+
+    std::fs::remove_file(&ckpt).ok();
+    drop(eng);
+    assert!(!dir.exists(), "leaked rendezvous dir: {}", dir.display());
+}
+
+#[test]
+fn process_rebuild_respawns_dead_rank_bit_identically() {
+    let (preset, gb) = ("tiny", 4usize);
+    let cfg = presets::get(preset).unwrap();
+    let mut eng = proc_engine(preset, Strategy::RtpOutOfPlace, 4, gb);
+    let mut rng = Rng::new(7);
+
+    let b = Batch::synth(&cfg, gb, &mut rng);
+    eng.step(&b).unwrap();
+    let params = eng.gather_params();
+    let ckpt = tmp("proc-respawn");
+    save_params(&params, &ckpt).unwrap();
+    let old_pids: Vec<u32> = (0..4).map(|r| eng.worker_pid(r).unwrap()).collect();
+
+    eng.kill_worker(1);
+    let err = step_until_failure(&mut eng, &cfg, gb, &mut rng);
+    assert!(err.downcast_ref::<RankFailure>().is_some(), "untyped failure: {err:#}");
+
+    eng.rebuild(4, &ckpt).unwrap();
+    assert_eq!(eng.world_size(), 4);
+    assert_eq!(eng.epoch(), 1);
+
+    // survivors compact to ranks 0..3 in old-rank order (their OS
+    // processes move with them); the respawn fills rank 3 with a NEW pid
+    assert_eq!(eng.worker_pid(0), Some(old_pids[0]));
+    assert_eq!(eng.worker_pid(1), Some(old_pids[2]));
+    assert_eq!(eng.worker_pid(2), Some(old_pids[3]));
+    let fresh = eng.worker_pid(3).expect("respawned rank has no worker");
+    assert!(!old_pids.contains(&fresh), "rank 3 was not respawned");
+
+    assert_eq!(eng.gather_params().max_abs_diff(&params), 0.0);
+    let bx = Batch::synth(&cfg, gb, &mut Rng::new(99));
+    eng.zero_grads();
+    let loss_p = eng.step(&bx).unwrap();
+    let grads_p = eng.gather_grads();
+    let (loss_r, grads_r) = oracle_step(preset, Strategy::RtpOutOfPlace, 4, gb, &ckpt, &bx);
+    assert_eq!(loss_p, loss_r, "post-respawn loss diverged from the oracle");
+    assert_eq!(grads_p.max_abs_diff(&grads_r), 0.0, "post-respawn grads diverged");
+
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn process_rebuild_survives_two_simultaneous_deaths() {
+    let (preset, gb) = ("tiny", 8usize);
+    let cfg = presets::get(preset).unwrap();
+    let mut eng = proc_engine(preset, Strategy::Fsdp, 4, gb);
+    let mut rng = Rng::new(7);
+
+    let b = Batch::synth(&cfg, gb, &mut rng);
+    eng.step(&b).unwrap();
+    let params = eng.gather_params();
+    let ckpt = tmp("proc-double");
+    save_params(&params, &ckpt).unwrap();
+
+    eng.kill_worker(1);
+    eng.kill_worker(2);
+    // let both SIGKILLs land so the rebuild reaps BOTH corpses
+    std::thread::sleep(Duration::from_millis(100));
+    let err = step_until_failure(&mut eng, &cfg, gb, &mut rng);
+    let f = err
+        .downcast_ref::<RankFailure>()
+        .unwrap_or_else(|| panic!("untyped failure: {err:#}"));
+    assert!([1, 2].contains(&f.failed_rank), "wrong rank blamed: {f}");
+
+    // respawn BOTH dead ranks: survivors 0,3 compact to 0,1
+    eng.rebuild(4, &ckpt).unwrap();
+    assert_eq!(eng.world_size(), 4);
+    assert_eq!(eng.gather_params().max_abs_diff(&params), 0.0);
+
+    let bx = Batch::synth(&cfg, gb, &mut Rng::new(99));
+    eng.zero_grads();
+    let loss_p = eng.step(&bx).unwrap();
+    let (loss_r, grads_r) = oracle_step(preset, Strategy::Fsdp, 4, gb, &ckpt, &bx);
+    assert_eq!(loss_p, loss_r, "double-death recovery diverged from the oracle");
+    assert_eq!(eng.gather_grads().max_abs_diff(&grads_r), 0.0);
+
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn process_rebuild_with_no_survivors_is_a_typed_bounded_error() {
+    let (preset, gb) = ("tiny", 8usize);
+    let cfg = presets::get(preset).unwrap();
+    let mut eng = proc_engine(preset, Strategy::Ddp, 4, gb);
+    let dir = eng.endpoint_dir().to_path_buf();
+    let mut rng = Rng::new(7);
+
+    let b = Batch::synth(&cfg, gb, &mut rng);
+    eng.step(&b).unwrap();
+    let params = eng.gather_params();
+    let ckpt = tmp("proc-wipeout");
+    save_params(&params, &ckpt).unwrap();
+
+    for r in 0..4 {
+        eng.kill_worker(r);
+    }
+    std::thread::sleep(Duration::from_millis(150));
+    let err = step_until_failure(&mut eng, &cfg, gb, &mut rng);
+    assert!(err.downcast_ref::<RankFailure>().is_some(), "untyped failure: {err:#}");
+
+    let t0 = std::time::Instant::now();
+    let msg = format!("{:#}", eng.rebuild(2, &ckpt).expect_err("nobody left to rebuild"));
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "wipeout rebuild took {:?} — hang?",
+        t0.elapsed()
+    );
+    assert!(msg.contains("no surviving workers"), "wrong error: {msg}");
+
+    std::fs::remove_file(&ckpt).ok();
+    drop(eng);
+    assert!(!dir.exists(), "leaked rendezvous dir: {}", dir.display());
+}

@@ -339,6 +339,74 @@ fn killed_at_n_resumes_at_new_world_size_bit_identically() {
 }
 
 // ---------------------------------------------------------------------
+// crash-atomic checkpointing: SIGKILL a trainer that is writing async
+// snapshots as fast as it can — whatever instant the signal lands, the
+// checkpoint at the target path is a COMPLETE previous write (the
+// in-flight bytes only ever touch the tmp sibling, which rename swaps
+// in whole). The previous checkpoint must load; a torn file must not
+// exist.
+// ---------------------------------------------------------------------
+
+#[test]
+fn sigkill_mid_async_checkpoint_leaves_previous_checkpoint_loadable() {
+    let path = tmp("sigkill-ckpt");
+    std::fs::remove_file(&path).ok();
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_rtp"))
+        .args([
+            "train",
+            "--elastic",
+            "--preset",
+            "tiny",
+            "--engine",
+            "ddp",
+            "--workers",
+            "2",
+            "--global-batch",
+            "4",
+            "--steps",
+            "200000",
+            "--ckpt-every",
+            "1",
+            "--quiet",
+            "--save",
+        ])
+        .arg(&path)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawning elastic trainer");
+
+    // wait for the first COMPLETED (renamed) checkpoint
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    while !path.exists() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "trainer produced no checkpoint within 60s"
+        );
+        if let Ok(Some(status)) = child.try_wait() {
+            panic!("trainer exited before writing a checkpoint: {status}");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    // let more writes race the step loop, then SIGKILL mid-stream
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    child.kill().expect("SIGKILL trainer");
+    child.wait().unwrap();
+
+    let cfg = presets::get("tiny").unwrap();
+    let state = load_train_state(&cfg, &path)
+        .expect("checkpoint torn by SIGKILL — write_atomic contract broken");
+    assert!(state.step >= 1, "loaded checkpoint has no completed steps");
+    assert_eq!(state.world_size, 2);
+
+    std::fs::remove_file(&path).ok();
+    // the kill may strand the writer's tmp sibling — tolerated, cleaned
+    let mut tmp_sibling = path.clone().into_os_string();
+    tmp_sibling.push(".tmp");
+    std::fs::remove_file(std::path::PathBuf::from(tmp_sibling)).ok();
+}
+
+// ---------------------------------------------------------------------
 // Launcher::Process: the REAL fault the in-process injection harness
 // simulates — a worker OS process SIGKILLed out from under the run.
 // The parent must surface it as the same typed RankFailure the

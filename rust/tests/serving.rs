@@ -272,11 +272,12 @@ fn admission_rejects_over_budget_without_aborting_peers() {
 }
 
 /// Serving robustness: a rank dying mid-decode fails the running batch
-/// with a typed `RankFailure` — not a hang, not a bare panic — and
-/// releases every KV page on every rank, so nothing leaks and the
-/// trackers stay clean through shutdown.
+/// with a typed `RankFailure` — not a hang, not a bare panic — releases
+/// every KV page on every rank, and REQUEUES the interrupted requests
+/// (admission order, queue front) instead of rejecting them, so a
+/// recovered engine can finish them.
 #[test]
-fn rank_death_mid_decode_fails_batch_without_leaking_kv() {
+fn rank_death_mid_decode_requeues_batch_without_leaking_kv() {
     for launcher in [Launcher::Lockstep, Launcher::Thread] {
         let cfg = presets::get("tiny").unwrap();
         let plan = FaultPlan { rank: 1, step: 2, phase: FaultPhase::Decode };
@@ -308,8 +309,9 @@ fn rank_death_mid_decode_fails_batch_without_leaking_kv() {
             FailureKind::Injected { phase: FaultPhase::Decode },
             "{launcher}"
         );
-        // the whole batch is retired with the root cause, zero KV leaked
+        // the whole batch is unwound into the queue, zero KV leaked
         assert_eq!(eng.running_len(), 0, "{launcher}");
+        assert_eq!(eng.queued_len(), 2, "{launcher}: interrupted requests requeue");
         for w in &eng.cluster().workers {
             assert_eq!(
                 w.tracker.live_of(MemCategory::KvCache),
@@ -318,11 +320,75 @@ fn rank_death_mid_decode_fails_batch_without_leaking_kv() {
             );
         }
         assert_eq!(eng.cluster().fabric().in_flight(), 0, "{launcher}");
-        assert_eq!(eng.report().rejected.len(), 2, "{launcher}");
+        assert!(eng.report().rejected.is_empty(), "{launcher}");
         eng.shutdown();
         for w in &eng.cluster().workers {
             assert_eq!(w.tracker.outstanding(), 0, "{launcher}");
         }
+    }
+}
+
+/// Elastic serving: after the typed failure, `recover()` rebuilds the
+/// decode ranks from the retained weights and a plain `drain` finishes
+/// every request — with token streams bit-identical to a run that never
+/// faulted.
+#[test]
+fn serve_recovers_after_rank_death_with_identical_tokens() {
+    let cfg = presets::get("tiny").unwrap();
+    let mk_reqs = |cfg: &ModelCfg| -> Vec<GenRequest> {
+        let mut rng = Rng::new(17);
+        (0..3u64)
+            .map(|id| GenRequest {
+                id,
+                prompt: (0..3).map(|_| rng.below(cfg.vocab) as i32).collect(),
+                max_new: 5,
+            })
+            .collect()
+    };
+
+    // reference: the same workload with no fault
+    let ref_opts = ServeOpts::new("tiny")
+        .strategy(Strategy::RtpInplace)
+        .workers(2)
+        .max_batch(2)
+        .page_tokens(4)
+        .seed(9)
+        .fault_plan(None);
+    let mut reference = build_serve_engine(&ref_opts).unwrap();
+    for req in mk_reqs(&cfg) {
+        assert_eq!(reference.submit(req), Admission::Queued);
+    }
+    reference.drain().unwrap();
+    let mut want: Vec<(u64, Vec<i32>)> = reference
+        .report()
+        .finished
+        .iter()
+        .map(|f| (f.id, f.tokens.clone()))
+        .collect();
+    want.sort_by_key(|(id, _)| *id);
+
+    // faulted run: rank 1 dies at scheduler step 2, engine recovers
+    let opts = ref_opts
+        .clone()
+        .fault_plan(Some(FaultPlan { rank: 1, step: 2, phase: FaultPhase::Decode }));
+    let mut eng = build_serve_engine(&opts).unwrap();
+    for req in mk_reqs(&cfg) {
+        assert_eq!(eng.submit(req), Admission::Queued);
+    }
+    let err = eng.drain().expect_err("planned decode death must surface");
+    assert!(err.downcast_ref::<RankFailure>().is_some(), "untyped: {err:#}");
+    eng.recover().unwrap();
+    eng.drain().unwrap();
+    let rep = eng.report();
+    assert_eq!(rep.finished.len(), 3);
+    assert!(rep.rejected.is_empty());
+    let mut got: Vec<(u64, Vec<i32>)> =
+        rep.finished.iter().map(|f| (f.id, f.tokens.clone())).collect();
+    got.sort_by_key(|(id, _)| *id);
+    assert_eq!(got, want, "recovered token streams must match the unfaulted run");
+    eng.shutdown();
+    for w in &eng.cluster().workers {
+        assert_eq!(w.tracker.outstanding(), 0);
     }
 }
 

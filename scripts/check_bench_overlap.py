@@ -19,6 +19,12 @@ Rules, keyed by name pattern (see each baseline's "note" field):
     increase (the steady-state hot paths are allocation-free by
     construction, and the serving KV page schedule is deterministic; the
     baseline values are explicit headroom);
+  * keys ending in ``_recovery_ms`` or ``_stall_ns`` tracked in the
+    baseline are ABSOLUTE bounds, not regression ratios: the fresh value
+    must not exceed the baseline (elastic recovery must stay bounded,
+    and the async checkpointer's step-path submit stall must stay
+    off-disk-scale — a blocking writer blows the ns bound by orders of
+    magnitude, so no relative tolerance is needed);
   * ``fsdp_measured_overlap_fraction``, when tracked in the baseline,
     must be strictly positive in the fresh run — the background
     collective engine's acceptance bar: prefetch allgather and backward
@@ -36,7 +42,13 @@ def is_num(v):
     return isinstance(v, (int, float)) and not isinstance(v, bool)
 
 
-TRACKED_SUFFIXES = ("_overlap_fraction", "_step_ratio", "_p99_tpot_ms")
+TRACKED_SUFFIXES = (
+    "_overlap_fraction",
+    "_step_ratio",
+    "_p99_tpot_ms",
+    "_recovery_ms",
+    "_stall_ns",
+)
 
 
 def main():
@@ -85,6 +97,16 @@ def main():
                 )
             else:
                 print(f"ok  {key}: {fval:.4f} ms (guard-rail {bval:.4f} ms)")
+        elif key.endswith(("_recovery_ms", "_stall_ns")):
+            checked += 1
+            unit = "ms" if key.endswith("_recovery_ms") else "ns"
+            if fval > bval:
+                failures.append(
+                    f"{key}: absolute bound exceeded "
+                    f"({fval:.1f} {unit} > bound {bval:.1f} {unit})"
+                )
+            else:
+                print(f"ok  {key}: {fval:.1f} {unit} (bound {bval:.1f} {unit})")
         elif "allocs" in key:
             checked += 1
             if fval > bval:

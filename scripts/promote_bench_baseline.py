@@ -18,6 +18,11 @@ so normal runner jitter cannot trip the diff:
   * ``*_overlap_fraction``  -> 0.8 * measured (gate fails < 0.9 * base)
   * ``*_step_ratio``        -> 1.2 * measured (gate fails > 1.1 * base)
   * ``*_p99_tpot_ms``       -> 2.0 * measured (generous guard-rail)
+  * ``*_recovery_ms``       -> 10.0 * measured (absolute bound; recovery
+                               latency varies widely across runners)
+  * ``*_stall_ns``          -> 10.0 * measured (absolute bound on the
+                               step-path checkpoint handoff; a blocking
+                               writer overshoots any sane multiple)
   * ``*allocs*``            -> exact measured value (deterministic
                                schedules; any increase is a real bug)
 Null (informational) keys are never touched. The file is rewritten in
@@ -41,6 +46,8 @@ def promoted(key, bval, mval):
         return round(1.2 * mval, 6)
     if key.endswith("_p99_tpot_ms"):
         return round(2.0 * mval, 4)
+    if key.endswith(("_recovery_ms", "_stall_ns")):
+        return round(10.0 * mval, 1)
     if "allocs" in key:
         return mval
     return None
